@@ -1,0 +1,76 @@
+//! Design-space exploration (§IX-D "CAD-assisted parameter selection",
+//! paper future work): sweep channel count k, modulus width and threshold
+//! τ, scoring each point on accuracy, dynamic range, normalization rate
+//! and modeled FPGA cost — the trade-off surface a CAD flow would search.
+//!
+//! Run: `cargo run --release --example design_space`
+
+use hrfna::config::HrfnaConfig;
+use hrfna::fpga::pipeline::{model_workload, WorkloadKind};
+use hrfna::fpga::power::energy_per_mac_nj;
+use hrfna::fpga::resources::{mac_unit, FormatArch};
+use hrfna::hybrid::{Hrfna, HrfnaContext};
+use hrfna::rns::moduli::generate_prime_moduli;
+use hrfna::util::table::Table;
+use hrfna::workloads::{dot, generators::Dist};
+
+fn config_for(k: usize, width: u32) -> Option<HrfnaConfig> {
+    let moduli = generate_prime_moduli(k, width);
+    let m_bits: f64 = moduli.iter().map(|&m| (m as f64).log2()).sum();
+    // Headroom rule: τ leaves 16 bits, significand uses ~1/4 of M.
+    let tau_bits = (m_bits as u32).saturating_sub(16);
+    let sig_bits = ((m_bits / 4.0) as u32).clamp(12, 40);
+    let cfg = HrfnaConfig {
+        moduli,
+        exponent_width: 16,
+        tau_bits,
+        scale_step: 32.min(tau_bits / 2),
+        sig_bits,
+        clock_mhz: 300.0,
+    };
+    cfg.validate().ok()?;
+    Some(cfg)
+}
+
+fn main() {
+    let mut t = Table::new(
+        "HRFNA design space — accuracy vs hardware cost (dot n=4096)",
+        &[
+            "k", "width", "M bits", "sig", "rel RMS", "norm rate", "LUT", "DSP",
+            "Fmax", "nJ/MAC",
+        ],
+    );
+    for k in [4usize, 6, 8, 10, 12] {
+        for width in [12u32, 16, 20] {
+            let Some(cfg) = config_for(k, width) else { continue };
+            let ctx = HrfnaContext::new(cfg.clone());
+            let rms = dot::dot_rms_error::<Hrfna>(2, 4096, Dist::moderate(), 9, &ctx);
+            let rate = ctx.snapshot().norm_rate();
+            let res = mac_unit(FormatArch::Hrfna, &cfg, 16);
+            let timing = model_workload(
+                FormatArch::Hrfna,
+                WorkloadKind::Dot { n: 65536 },
+                &cfg,
+                16,
+            );
+            let energy = energy_per_mac_nj(&res, FormatArch::Hrfna, &timing);
+            t.rowv(&[
+                k.to_string(),
+                width.to_string(),
+                format!("{:.0}", cfg.m_bits()),
+                cfg.sig_bits.to_string(),
+                format!("{rms:.1e}"),
+                format!("{rate:.1e}"),
+                format!("{:.0}", res.lut),
+                format!("{:.0}", res.dsp),
+                format!("{:.0}", timing.fmax_mhz),
+                format!("{energy:.4}"),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "\nReading: k·width sets dynamic range (M bits) and cost; sig_bits sets accuracy;\n\
+         the paper's k=8/w=16 point balances FP32-class accuracy against ~10 DSP/MAC."
+    );
+}

@@ -1,0 +1,48 @@
+//! Dot-product accuracy across formats and vector lengths — the §VII-B
+//! experiment as a runnable example: HRFNA tracks FP32-or-better accuracy
+//! with error flat in N, while BFP error grows and fixed-point saturates.
+//!
+//! Run: `cargo run --release --example dot_accuracy [--max-n 65536]`
+
+use hrfna::baselines::{Bfp, BfpConfig, Fixed, FixedConfig};
+use hrfna::hybrid::{Hrfna, HrfnaContext};
+use hrfna::util::cli::Args;
+use hrfna::util::table::Table;
+use hrfna::workloads::{dot, generators::Dist};
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let max_n = args.parse_or("max-n", 65536usize);
+    let trials = args.parse_or("trials", 3usize);
+
+    for (dist_name, dist) in [
+        ("moderate", Dist::moderate()),
+        ("high-dynamic-range", Dist::high_dynamic_range()),
+    ] {
+        let mut t = Table::new(
+            &format!("Relative RMS error vs f64 — {dist_name} operands ({trials} trials)"),
+            &["n", "HRFNA", "FP32", "BFP", "Fixed Q16.16", "HRFNA norm rate"],
+        );
+        let mut n = 1024;
+        while n <= max_n {
+            let hctx = HrfnaContext::paper_default();
+            let h = dot::dot_rms_error::<Hrfna>(trials, n, dist, 42, &hctx);
+            let rate = hctx.snapshot().norm_rate();
+            let f = dot::dot_rms_error::<f32>(trials, n, dist, 42, &());
+            let b = dot::dot_rms_error::<Bfp>(trials, n, dist, 42, &BfpConfig::default());
+            let fx = dot::dot_rms_error::<Fixed>(trials, n, dist, 42, &FixedConfig::q16_16());
+            t.rowv(&[
+                n.to_string(),
+                format!("{h:.2e}"),
+                format!("{f:.2e}"),
+                format!("{b:.2e}"),
+                format!("{fx:.2e}"),
+                format!("{rate:.2e}"),
+            ]);
+            n *= 4;
+        }
+        t.print();
+        println!();
+    }
+    println!("Paper §VII-B: HRFNA RMS < 1e-6 at all lengths, no growth with N; BFP grows.");
+}

@@ -1,0 +1,67 @@
+//! Quickstart: the HRFNA number system in ten lines.
+//!
+//! Encodes reals as hybrid residue–floating values, shows exact carry-free
+//! multiplication (Theorem 1), exponent-synchronized addition, and a
+//! threshold normalization event with its Lemma 1/2 error bounds.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use hrfna::hybrid::{error, Hrfna, HrfnaContext};
+
+fn main() {
+    // Paper-default configuration: k = 8 sixteen-bit prime moduli,
+    // M ≈ 2^127.9, τ = 2^112, s = 32 (Table II).
+    let ctx = HrfnaContext::paper_default();
+    println!(
+        "HRFNA context: k={} channels, M ≈ 2^{:.1}, τ = 2^{}, s = {}\n",
+        ctx.k(),
+        ctx.m_bits,
+        ctx.cfg.tau_bits,
+        ctx.cfg.scale_step
+    );
+
+    // --- Encoding (Definition 1: Φ(r, f) = CRT(r) · 2^f) ---------------
+    let a = Hrfna::encode(3.14159265, &ctx);
+    let b = Hrfna::encode(-2.71828182e8, &ctx);
+    println!("encode  3.14159265   -> f={}, |N| ~ 2^{}", a.f, a.magnitude_bits());
+    println!("encode -2.71828182e8 -> f={}, |N| ~ 2^{}", b.f, b.magnitude_bits());
+    println!("decode(a) = {}", a.decode(&ctx));
+    println!("decode(b) = {}\n", b.decode(&ctx));
+
+    // --- Multiplication is exact and carry-free (Theorem 1) ------------
+    let p = a.mul(&b, &ctx);
+    println!("a ⊗ b = {}   (f64: {})", p.decode(&ctx), 3.14159265 * -2.71828182e8);
+
+    // --- Addition synchronizes exponents explicitly (§IV-B) ------------
+    let s = a.add(&b, &ctx);
+    println!("a ⊕ b = {}   (f64: {})\n", s.decode(&ctx), 3.14159265 + -2.71828182e8);
+
+    // --- A long MAC chain: exact accumulation, rare normalization ------
+    let mut acc = Hrfna::zero(&ctx, 0);
+    let mut truth = 0.0f64;
+    for i in 0..10_000 {
+        let x = Hrfna::encode(1.0 + (i % 97) as f64, &ctx);
+        let y = Hrfna::encode(0.5 - (i % 13) as f64, &ctx);
+        truth += x.decode(&ctx) * y.decode(&ctx);
+        acc.mac_assign(&x, &y, &ctx);
+    }
+    let snap = ctx.snapshot();
+    println!("10k-MAC accumulator: got {}, truth {}", acc.decode(&ctx), truth);
+    println!(
+        "ops: {} muls, {} adds — {} normalization events (rate {:.2e})\n",
+        snap.muls,
+        snap.adds,
+        snap.norms + snap.guard_norms,
+        snap.norm_rate()
+    );
+
+    // --- Normalization with formal bounds (Definitions 3–4, Lemmas 1–2) -
+    let mut v = Hrfna::from_signed_int(0x7FFF_FFFF_FFFF, -20, &ctx);
+    let sample = error::measure_normalization(&mut v, 16, &ctx);
+    println!("normalize by 2^16:");
+    println!("  before Φ = {:.6e}, after Φ = {:.6e}", sample.before, sample.after);
+    println!("  |ε| = {:.3e}  ≤  Lemma-1 bound {:.3e}", sample.abs_err, sample.abs_bound);
+    println!("  rel ε = {:.3e}  ≤  bound {:.3e}", sample.rel_err, sample.rel_bound);
+    assert!(sample.within_bounds());
+    println!("\nquickstart OK");
+}

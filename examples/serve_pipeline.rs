@@ -1,0 +1,155 @@
+//! END-TO-END DRIVER: the full three-layer system on a real workload.
+//!
+//! Starts the Layer-3 coordinator (router → fixed-shape batcher → lane
+//! workers), which loads the Layer-2 JAX graphs (AOT-compiled HLO text
+//! containing the Layer-1 Pallas residue kernels) through PJRT, then
+//! serves a mixed stream of dot-product and matmul requests in both the
+//! HRFNA and FP32 lanes. Reports latency percentiles, throughput, batch
+//! sizes, and per-lane accuracy vs f64 — proving all layers compose with
+//! Python completely absent from the request path.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_pipeline`
+//! Results recorded in EXPERIMENTS.md §E2E.
+
+use hrfna::config::HrfnaConfig;
+use hrfna::coordinator::batcher::BatchPolicy;
+use hrfna::coordinator::router::ShapeBuckets;
+use hrfna::coordinator::{Coordinator, CoordinatorConfig, JobKind, Payload};
+use hrfna::hybrid::HrfnaContext;
+use hrfna::runtime::EngineHandle;
+use hrfna::util::cli::Args;
+use hrfna::util::prng::Rng;
+use hrfna::util::stats::Summary;
+use hrfna::util::table::Table;
+use hrfna::workloads::generators::Dist;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let jobs = args.parse_or("jobs", 400usize);
+    let warmup = args.parse_or("warmup", 20usize);
+
+    let t0 = Instant::now();
+    let engine = EngineHandle::spawn(None).expect("run `make artifacts` first");
+    let (platform, names) = engine.info().expect("engine info");
+    println!("engine up in {:?} on {platform}; artifacts: {names:?}", t0.elapsed());
+
+    let ctx = Arc::new(HrfnaContext::new(HrfnaConfig::paper_default()));
+    let coord = Coordinator::start(
+        engine,
+        Arc::clone(&ctx),
+        CoordinatorConfig {
+            workers_per_lane: 2,
+            batch: BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_micros(500),
+            },
+            buckets: ShapeBuckets::default(),
+        },
+    );
+
+    let mut rng = Rng::new(2026);
+
+    // Warmup: first PJRT executions trigger lazy initialization.
+    for _ in 0..warmup {
+        let x = Dist::moderate().sample_vec(&mut rng, 512);
+        let y = Dist::moderate().sample_vec(&mut rng, 512);
+        coord.call(JobKind::DotHybrid, Payload::Dot { x: x.clone(), y: y.clone() }).unwrap();
+        coord.call(JobKind::DotF32, Payload::Dot { x, y }).unwrap();
+    }
+
+    // Mixed request stream: 40% hybrid dot, 40% fp32 dot, 10% each matmul.
+    struct Truth {
+        kind: JobKind,
+        expected: Vec<f64>,
+    }
+    let start = Instant::now();
+    let mut pending = Vec::new();
+    let mut truths = Vec::new();
+    for i in 0..jobs {
+        let (kind, payload, expected) = match i % 10 {
+            0..=3 => {
+                let n = 256 + rng.below(3840) as usize;
+                let x = Dist::moderate().sample_vec(&mut rng, n);
+                let y = Dist::moderate().sample_vec(&mut rng, n);
+                let truth: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+                (JobKind::DotHybrid, Payload::Dot { x, y }, vec![truth])
+            }
+            4..=7 => {
+                let n = 256 + rng.below(3840) as usize;
+                let x = Dist::moderate().sample_vec(&mut rng, n);
+                let y = Dist::moderate().sample_vec(&mut rng, n);
+                let truth: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+                (JobKind::DotF32, Payload::Dot { x, y }, vec![truth])
+            }
+            8 => {
+                let dim = 64;
+                let a = Dist::moderate().sample_vec(&mut rng, dim * dim);
+                let b = Dist::moderate().sample_vec(&mut rng, dim * dim);
+                let truth = hrfna::workloads::matmul::matmul::<f64>(&a, &b, dim, dim, dim, &());
+                (JobKind::MatmulHybrid, Payload::Matmul { a, b, dim }, truth)
+            }
+            _ => {
+                let dim = 64;
+                let a = Dist::moderate().sample_vec(&mut rng, dim * dim);
+                let b = Dist::moderate().sample_vec(&mut rng, dim * dim);
+                let truth = hrfna::workloads::matmul::matmul::<f64>(&a, &b, dim, dim, dim, &());
+                (JobKind::MatmulF32, Payload::Matmul { a, b, dim }, truth)
+            }
+        };
+        truths.push(Truth { kind, expected });
+        pending.push(coord.submit(kind, payload).expect("submit"));
+    }
+
+    // Collect + accuracy audit.
+    let mut lane_err: std::collections::BTreeMap<&str, Vec<f64>> = Default::default();
+    let mut latencies: Vec<f64> = Vec::new();
+    for (rx, truth) in pending.into_iter().zip(&truths) {
+        let r = rx.recv().expect("job result");
+        latencies.push(r.latency_us);
+        // Error scale: |w| for well-separated values, the output's RMS for
+        // near-zero elements (a 64-term ±uniform dot can land at ~0, where
+        // a pure relative metric explodes meaninglessly).
+        let scale = hrfna::util::stats::rms(&truth.expected).max(1e-9);
+        let errs: Vec<f64> = r
+            .values
+            .iter()
+            .zip(&truth.expected)
+            .map(|(g, w)| (g - w).abs() / w.abs().max(scale))
+            .collect();
+        let worst = errs.iter().cloned().fold(0.0, f64::max);
+        lane_err.entry(truth.kind.label()).or_default().push(worst);
+    }
+    let wall = start.elapsed();
+
+    println!("\n=== E2E results: {jobs} mixed requests in {wall:.2?} ===");
+    println!("request throughput: {:.0} req/s", jobs as f64 / wall.as_secs_f64());
+    let lat = Summary::of(&latencies);
+    println!(
+        "latency µs: mean {:.0}  p50 {:.0}  p95 {:.0}  p99 {:.0}  max {:.0}",
+        lat.mean, lat.p50, lat.p95, lat.p99, lat.max
+    );
+
+    let mut t = Table::new("per-lane worst relative error vs f64", &["lane", "max", "mean"]);
+    for (lane, errs) in &lane_err {
+        let s = Summary::of(errs);
+        t.rowv(&[lane.to_string(), format!("{:.2e}", s.max), format!("{:.2e}", s.mean)]);
+    }
+    t.print();
+    coord.metrics.table().print();
+
+    // Hard assertions: this is the composition proof, not just a demo.
+    for (lane, errs) in &lane_err {
+        let max = errs.iter().cloned().fold(0.0, f64::max);
+        let tol = if lane.contains("hrfna") { 1e-6 } else { 1e-3 };
+        assert!(max < tol, "{lane}: max rel error {max} over tolerance {tol}");
+    }
+    let snap = ctx.snapshot();
+    println!(
+        "\nHRFNA decode reconstructions: {} (1 per hybrid job, as designed)",
+        snap.reconstructions
+    );
+    coord.shutdown();
+    println!("serve_pipeline OK");
+}

@@ -1,0 +1,11 @@
+"""HRFNA compile-time package (build path only; never imported at runtime).
+
+Layer 2 (JAX graphs) and Layer 1 (Pallas kernels) live here. Residue
+arithmetic is exact integer math, so the whole package runs under x64.
+"""
+
+import jax
+
+# Residue channels use 64-bit integer accumulation (products of 16-bit
+# residues summed over blocks); enable x64 before anything traces.
+jax.config.update("jax_enable_x64", True)

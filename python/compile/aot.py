@@ -1,0 +1,58 @@
+"""AOT lowering: JAX graphs -> HLO *text* artifacts for the Rust runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the XLA
+the published ``xla`` 0.1.6 crate binds) rejects (``proto.id() <= INT_MAX``).
+The text parser reassigns ids and round-trips cleanly.
+
+Usage: cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import GRAPHS
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(out_dir: str) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_lines = []
+    for name, (fn, example_args) in sorted(GRAPHS.items()):
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        args_desc = ";".join(
+            f"{a.dtype}{list(a.shape)}" for a in example_args
+        )
+        manifest_lines.append(f"{name} {name}.hlo.txt {args_desc}")
+        print(f"  {name}: {len(text)} chars, args {args_desc}")
+    manifest = os.path.join(out_dir, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {manifest}")
+    return manifest_lines
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    lower_all(args.out)
+
+
+if __name__ == "__main__":
+    main()

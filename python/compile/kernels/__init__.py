@@ -1,0 +1,19 @@
+"""Layer-1 Pallas kernels: the residue-domain hot path of HRFNA.
+
+All kernels are lowered with ``interpret=True`` — real-TPU Pallas emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute. Correctness is
+checked against the pure-jnp oracles in :mod:`compile.kernels.ref`.
+
+Hardware adaptation (paper FPGA -> TPU-style kernels): the k carry-free
+residue channels become the leading grid dimension (one program instance
+per channel); each channel's MAC chain is tiled into VMEM-sized blocks via
+BlockSpec; modular reduction is *deferred* across a block (accumulate in
+int64, reduce once per block) — the same exact-arithmetic-between-rare-
+reductions principle the paper's RTL applies to normalization.
+"""
+
+from .rns_dot import rns_dot
+from .rns_matmul import rns_matmul
+from .rns_elementwise import rns_modmul, rns_modadd
+
+__all__ = ["rns_dot", "rns_matmul", "rns_modmul", "rns_modadd"]

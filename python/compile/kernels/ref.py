@@ -1,0 +1,71 @@
+"""Pure-jnp (and exact-python) oracles for the Layer-1 Pallas kernels.
+
+Two tiers:
+  * ``ref_*``     — pure jnp, same int64 overflow discipline, used as the
+                    primary allclose target in pytest.
+  * ``exact_*``   — arbitrary-precision Python ints (no overflow at all),
+                    the ground truth the jnp oracles are themselves checked
+                    against in the hypothesis sweeps.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# jnp oracles
+# ---------------------------------------------------------------------------
+
+def ref_dot(x, y, m):
+    """out[i] = sum_j x[i,j]*y[i,j] mod m[i], chunked to stay exact in int64."""
+    k, n = x.shape
+    acc = jnp.zeros((k,), dtype=jnp.int64)
+    chunk = 4096  # 2^32 * 2^12 = 2^44 < 2^63
+    for s in range(0, n, chunk):
+        prod = x[:, s:s + chunk] * y[:, s:s + chunk]
+        acc = (acc + jnp.sum(prod % m[:, None], axis=1)) % m
+    return acc
+
+
+def ref_matmul(x, y, m):
+    """out[i] = x[i] @ y[i] mod m[i]; contraction exact in int64 (K < 2^31)."""
+    out = jnp.einsum("ijk,ikl->ijl", x, y)
+    return out % m[:, None, None]
+
+
+def ref_modmul(x, y, m):
+    return (x * y) % m[:, None]
+
+
+def ref_modadd(x, y, m):
+    return (x + y) % m[:, None]
+
+
+# ---------------------------------------------------------------------------
+# exact python-int oracles (ground truth for hypothesis sweeps)
+# ---------------------------------------------------------------------------
+
+def exact_dot(x, y, m):
+    x = np.asarray(x, dtype=object)
+    y = np.asarray(y, dtype=object)
+    k, n = x.shape
+    out = []
+    for i in range(k):
+        acc = 0
+        mi = int(m[i])
+        for j in range(n):
+            acc = (acc + int(x[i, j]) * int(y[i, j])) % mi
+        out.append(acc)
+    return np.array(out, dtype=np.int64)
+
+
+def exact_matmul(x, y, m):
+    k, mm, kk = x.shape
+    _, _, nn = y.shape
+    out = np.zeros((k, mm, nn), dtype=np.int64)
+    for i in range(k):
+        mi = int(m[i])
+        xi = x[i].astype(object)
+        yi = y[i].astype(object)
+        out[i] = np.asarray((xi @ yi) % mi, dtype=np.int64)
+    return out

@@ -1,0 +1,75 @@
+"""Pallas kernel: per-channel modular dot product (HRFNA Hybrid Dot Product
+inner loop, paper Alg. 1 step 2, residue part).
+
+Given residue-encoded operand matrices ``x, y`` of shape ``(k, n)`` (one row
+per residue channel) and the modulus vector ``m`` of shape ``(k,)``, compute
+
+    out[i] = sum_j (x[i, j] * y[i, j])  mod m[i]
+
+Overflow discipline (mirrors the paper's deferred-normalization idea at the
+block level): residues are < 2^16, so per-element products are < 2^32. A
+block of ``block_n`` products sums to < 2^32 * block_n, which stays inside
+int64 for block_n up to 2^31. The running accumulator is reduced mod m once
+per block, so the carried value re-enters the next block below 2^16.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Perf (§Perf L1 iteration 1): 512 -> 4096. The deferred-mod overflow
+# budget allows blocks up to 2^31 elements; larger blocks shrink the
+# sequential grid (interpret-mode while-loop iterations on CPU, HBM->VMEM
+# block count on TPU). One 4096-wide int64 block is 32 KiB per operand —
+# comfortably VMEM-resident. Measured: 4.6ms -> 1.45ms per 8x4096 dot in
+# jitted interpret mode; 2.51ms -> see EXPERIMENTS.md via the PJRT path.
+DEFAULT_BLOCK_N = 4096
+
+
+def _dot_kernel(x_ref, y_ref, m_ref, o_ref):
+    """One (channel, block) grid step: block-local MAC + one deferred mod."""
+    j = pl.program_id(1)
+    m = m_ref[0]
+
+    # Exact block-local multiply-accumulate in int64 (carry-free channel).
+    prod = x_ref[0, :] * y_ref[0, :]
+    block_sum = jnp.sum(prod) % m
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[0] = jnp.zeros((), dtype=o_ref.dtype)
+
+    # One modular reduction per block — the "rare reduction" schedule.
+    o_ref[0] = (o_ref[0] + block_sum) % m
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def rns_dot(x, y, m, *, block_n: int = DEFAULT_BLOCK_N):
+    """Residue-domain dot product over k parallel channels.
+
+    Args:
+      x, y: int64[k, n] residue matrices, entries in [0, m[i]).
+      m:    int64[k] pairwise-coprime moduli (< 2^16 each).
+      block_n: tile width along n; n must be a multiple of block_n.
+
+    Returns:
+      int64[k]: per-channel dot product residues.
+    """
+    k, n = x.shape
+    if n % block_n != 0:
+        raise ValueError(f"n={n} must be a multiple of block_n={block_n}")
+    grid = (k, n // block_n)
+    return pl.pallas_call(
+        _dot_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((k,), jnp.int64),
+        interpret=True,
+    )(x, y, m)

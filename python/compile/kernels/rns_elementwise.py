@@ -1,0 +1,59 @@
+"""Pallas kernels: elementwise residue-channel modular multiply / add.
+
+These are the paper's Definition 2 (element-wise residue multiplication,
+r_Z,i = r_X,i * r_Y,i mod m_i) and the synchronized-addition residue step
+(r_Z,i = r_X,i + r_Y,i mod m_i) as data-parallel maps over arrays of hybrid
+values: inputs are (k, n) — n independent HRFNA values, one residue row per
+channel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Perf (§Perf L1): one grid step per channel at the AOT bucket width.
+DEFAULT_BLOCK_N = 4096
+
+
+def _modmul_kernel(x_ref, y_ref, m_ref, o_ref):
+    m = m_ref[0]
+    o_ref[0, :] = (x_ref[0, :] * y_ref[0, :]) % m
+
+
+def _modadd_kernel(x_ref, y_ref, m_ref, o_ref):
+    m = m_ref[0]
+    o_ref[0, :] = (x_ref[0, :] + y_ref[0, :]) % m
+
+
+def _launch(kernel, x, y, m, block_n):
+    k, n = x.shape
+    block_n = min(block_n, n)
+    if n % block_n != 0:
+        raise ValueError(f"n={n} must be a multiple of block_n={block_n}")
+    grid = (k, n // block_n)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((k, n), jnp.int64),
+        interpret=True,
+    )(x, y, m)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def rns_modmul(x, y, m, *, block_n: int = DEFAULT_BLOCK_N):
+    """Elementwise (x * y) mod m per channel; x, y: int64[k, n], m: int64[k]."""
+    return _launch(_modmul_kernel, x, y, m, block_n)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def rns_modadd(x, y, m, *, block_n: int = DEFAULT_BLOCK_N):
+    """Elementwise (x + y) mod m per channel; x, y: int64[k, n], m: int64[k]."""
+    return _launch(_modadd_kernel, x, y, m, block_n)

@@ -1,0 +1,74 @@
+"""Pallas kernel: per-channel modular dense matmul (HRFNA matrix kernel,
+paper §IV-E: matrix multiplication as composed hybrid dot products).
+
+Given residue-encoded matrices ``x: (k, M, K)`` and ``y: (k, K, N)`` and the
+modulus vector ``m: (k,)``, compute per channel
+
+    out[i] = (x[i] @ y[i]) mod m[i]
+
+The channel index is the leading grid dimension (carry-free lanes are
+embarrassingly parallel); the contraction is tiled along K with one deferred
+modular reduction per K-block, mirroring rns_dot's overflow discipline:
+residues < 2^16 -> products < 2^32; a K-block of block_k products sums to
+< 2^32 * block_k per output element, safe in int64 for block_k <= 2^31.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_K = 128
+
+
+def _mm_kernel(x_ref, y_ref, m_ref, o_ref):
+    kk = pl.program_id(1)
+    m = m_ref[0]
+
+    x = x_ref[0]  # (M, block_k)
+    y = y_ref[0]  # (block_k, N)
+    part = jax.lax.dot_general(
+        x, y,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int64,
+    ) % m
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[0] = jnp.zeros_like(o_ref[0])
+
+    o_ref[0] = (o_ref[0] + part) % m
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def rns_matmul(x, y, m, *, block_k: int = DEFAULT_BLOCK_K):
+    """Residue-domain matmul over k parallel channels.
+
+    Args:
+      x: int64[k, M, K] residues in [0, m[i]).
+      y: int64[k, K, N] residues in [0, m[i]).
+      m: int64[k] moduli (< 2^16).
+      block_k: tile along the contraction; K must be a multiple.
+
+    Returns:
+      int64[k, M, N] per-channel product residues.
+    """
+    k, mm, kdim = x.shape
+    _, _, nn = y.shape
+    block_k = min(block_k, kdim)
+    if kdim % block_k != 0:
+        raise ValueError(f"K={kdim} must be a multiple of block_k={block_k}")
+    grid = (k, kdim // block_k)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, mm, block_k), lambda i, kk: (i, 0, kk)),
+            pl.BlockSpec((1, block_k, nn), lambda i, kk: (i, kk, 0)),
+            pl.BlockSpec((1,), lambda i, kk: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, mm, nn), lambda i, kk: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, mm, nn), jnp.int64),
+        interpret=True,
+    )(x, y, m)

@@ -1,0 +1,107 @@
+"""Layer-2 JAX graphs: the compute graphs the Rust coordinator executes.
+
+Each public function here is AOT-lowered by :mod:`compile.aot` into an HLO
+text artifact; the Rust runtime (rust/src/runtime) loads + compiles it with
+the PJRT CPU client and drives it from the request path. Hybrid (HRFNA)
+graphs call the Layer-1 Pallas kernels; FP32 baseline graphs let Rust push
+both formats through one identical execution path for fair comparison.
+
+Shapes are fixed at lowering time (AOT); the Rust batcher buckets requests
+into these shapes (see rust/src/coordinator/batcher.rs).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import rns_dot, rns_matmul, rns_modmul, rns_modadd
+
+# Canonical AOT shapes (keep in sync with rust/src/runtime/artifacts.rs).
+K_CHANNELS = 8
+DOT_N = 4096
+MM_DIM = 64
+RK4_BATCH = 256
+
+
+# ---------------------------------------------------------------------------
+# HRFNA residue-domain graphs (call Layer-1 Pallas kernels)
+# ---------------------------------------------------------------------------
+
+def hybrid_dot(xr, yr, m):
+    """Residue part of the Hybrid Dot Product (Alg. 1): int64[k,n] -> int64[k].
+
+    Exponent bookkeeping (f_Z = f_X + f_Y, synchronization) is scalar work
+    and stays on the Rust side; this graph is the carry-free hot loop.
+    """
+    return (rns_dot(xr, yr, m),)
+
+
+def hybrid_matmul(xr, yr, m):
+    """Per-channel modular matmul: int64[k,M,K] x int64[k,K,N] -> int64[k,M,N]."""
+    return (rns_matmul(xr, yr, m),)
+
+
+def hybrid_modmul(xr, yr, m):
+    """Elementwise hybrid multiply over a batch of values (Definition 2)."""
+    return (rns_modmul(xr, yr, m),)
+
+
+def hybrid_modadd(xr, yr, m):
+    """Residue add for exponent-synchronized operands (§IV-B)."""
+    return (rns_modadd(xr, yr, m),)
+
+
+# ---------------------------------------------------------------------------
+# FP32 baseline graphs (vendor-FP32-IP stand-ins, same PJRT path)
+# ---------------------------------------------------------------------------
+
+def fp32_dot(x, y):
+    """Plain FP32 dot product baseline: f32[n] x f32[n] -> f32[]."""
+    return (jnp.dot(x, y),)
+
+
+def fp32_matmul(a, b):
+    """Plain FP32 dense matmul baseline: f32[M,K] x f32[K,N] -> f32[M,N]."""
+    return (jnp.matmul(a, b),)
+
+
+# ---------------------------------------------------------------------------
+# RK4 baseline step (Van der Pol oscillator, §VII-D workload)
+# ---------------------------------------------------------------------------
+
+def _vdp(state, mu):
+    """Van der Pol vector field: x' = v, v' = mu (1 - x^2) v - x."""
+    x = state[..., 0]
+    v = state[..., 1]
+    return jnp.stack([v, mu * (1.0 - x * x) * v - x], axis=-1)
+
+
+def rk4_vdp_step(state, dt, mu):
+    """One classical RK4 step for a batch of Van der Pol states: f32[B,2]."""
+    k1 = _vdp(state, mu)
+    k2 = _vdp(state + 0.5 * dt * k1, mu)
+    k3 = _vdp(state + 0.5 * dt * k2, mu)
+    k4 = _vdp(state + dt * k3, mu)
+    return (state + (dt / 6.0) * (k1 + 2.0 * k2 + 2.0 * k3 + k4),)
+
+
+# ---------------------------------------------------------------------------
+# AOT manifest: name -> (fn, example args)
+# ---------------------------------------------------------------------------
+
+def _i64(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int64)
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+GRAPHS = {
+    "hybrid_dot": (hybrid_dot, (_i64(K_CHANNELS, DOT_N), _i64(K_CHANNELS, DOT_N), _i64(K_CHANNELS))),
+    "hybrid_matmul": (hybrid_matmul, (_i64(K_CHANNELS, MM_DIM, MM_DIM), _i64(K_CHANNELS, MM_DIM, MM_DIM), _i64(K_CHANNELS))),
+    "hybrid_modmul": (hybrid_modmul, (_i64(K_CHANNELS, DOT_N), _i64(K_CHANNELS, DOT_N), _i64(K_CHANNELS))),
+    "hybrid_modadd": (hybrid_modadd, (_i64(K_CHANNELS, DOT_N), _i64(K_CHANNELS, DOT_N), _i64(K_CHANNELS))),
+    "fp32_dot": (fp32_dot, (_f32(DOT_N), _f32(DOT_N))),
+    "fp32_matmul": (fp32_matmul, (_f32(MM_DIM, MM_DIM), _f32(MM_DIM, MM_DIM))),
+    "rk4_vdp_step": (rk4_vdp_step, (_f32(RK4_BATCH, 2), _f32(), _f32())),
+}

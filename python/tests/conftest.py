@@ -1,0 +1,24 @@
+"""Shared fixtures for the HRFNA python test suite."""
+
+import numpy as np
+import pytest
+
+# Default modulus set — keep in sync with rust/src/config/presets
+# (k=8 sixteen-bit primes, M ~ 2^127.9).
+MODULI = np.array(
+    [65521, 65519, 65497, 65479, 65449, 65447, 65437, 65423], dtype=np.int64
+)
+
+
+@pytest.fixture
+def moduli():
+    return MODULI
+
+
+def random_residues(rng, m, *shape_tail):
+    """Residue tensor with row i uniform in [0, m[i])."""
+    k = len(m)
+    out = np.empty((k, *shape_tail), dtype=np.int64)
+    for i in range(k):
+        out[i] = rng.integers(0, m[i], size=shape_tail, dtype=np.int64)
+    return out

@@ -1,0 +1,57 @@
+"""AOT artifact tests: every graph lowers to parseable HLO text with the
+shapes the Rust manifest loader expects."""
+
+import os
+import re
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def artifact_dir(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    aot.lower_all(out)
+    return out
+
+
+def test_manifest_lists_every_graph(artifact_dir):
+    with open(os.path.join(artifact_dir, "manifest.txt")) as f:
+        lines = [l for l in f.read().splitlines() if l.strip()]
+    names = {l.split()[0] for l in lines}
+    assert names == set(model.GRAPHS.keys())
+
+
+def test_artifacts_are_hlo_text(artifact_dir):
+    for name in model.GRAPHS:
+        path = os.path.join(artifact_dir, f"{name}.hlo.txt")
+        assert os.path.exists(path), path
+        text = open(path).read()
+        # HLO text module header + an ENTRY computation.
+        assert re.search(r"^HloModule ", text, re.M), name
+        assert "ENTRY" in text, name
+
+
+def test_hybrid_dot_artifact_shapes(artifact_dir):
+    text = open(os.path.join(artifact_dir, "hybrid_dot.hlo.txt")).read()
+    k, n = model.K_CHANNELS, model.DOT_N
+    assert f"s64[{k},{n}]" in text
+    assert f"s64[{k}]" in text
+
+
+def test_fp32_artifacts_have_f32_entry(artifact_dir):
+    text = open(os.path.join(artifact_dir, "fp32_dot.hlo.txt")).read()
+    assert f"f32[{model.DOT_N}]" in text
+
+
+def test_manifest_arg_descriptors_parse(artifact_dir):
+    """Arg descriptors follow dtype[shape] — the Rust side parses these."""
+    pat = re.compile(r"^(int64|float32)\[[\d, ]*\]$")
+    with open(os.path.join(artifact_dir, "manifest.txt")) as f:
+        for line in f:
+            if not line.strip():
+                continue
+            _, _, args_desc = line.split(" ", 2)
+            for a in args_desc.strip().split(";"):
+                assert pat.match(a), a

@@ -1,0 +1,91 @@
+"""Layer-1 rns_dot Pallas kernel vs pure-jnp and exact-int oracles."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import rns_dot
+from compile.kernels.ref import ref_dot, exact_dot
+from .conftest import MODULI, random_residues
+
+
+def test_dot_matches_ref_default_shape():
+    rng = np.random.default_rng(0)
+    x = random_residues(rng, MODULI, 4096)
+    y = random_residues(rng, MODULI, 4096)
+    got = np.asarray(rns_dot(x, y, MODULI))
+    want = np.asarray(ref_dot(x, y, MODULI))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_dot_matches_exact_small():
+    rng = np.random.default_rng(1)
+    x = random_residues(rng, MODULI, 512)
+    y = random_residues(rng, MODULI, 512)
+    got = np.asarray(rns_dot(x, y, MODULI, block_n=128))
+    want = exact_dot(x, y, MODULI)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_dot_zero_operand():
+    rng = np.random.default_rng(2)
+    x = random_residues(rng, MODULI, 512)
+    z = np.zeros_like(x)
+    got = np.asarray(rns_dot(x, z, MODULI, block_n=256))
+    np.testing.assert_array_equal(got, np.zeros(len(MODULI), dtype=np.int64))
+
+
+def test_dot_ones_counts_length():
+    n = 1024
+    ones = np.ones((len(MODULI), n), dtype=np.int64)
+    got = np.asarray(rns_dot(ones, ones, MODULI, block_n=256))
+    want = np.array([n % m for m in MODULI], dtype=np.int64)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_dot_max_residues_no_overflow():
+    """All residues at m-1: the worst-case block sum must stay exact."""
+    k = len(MODULI)
+    n = 2048
+    x = np.tile((MODULI - 1)[:, None], (1, n))
+    got = np.asarray(rns_dot(x, x, MODULI, block_n=512))
+    want = exact_dot(x, x, MODULI)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_dot_rejects_non_multiple_block():
+    x = np.ones((len(MODULI), 100), dtype=np.int64)
+    with pytest.raises(ValueError):
+        rns_dot(x, x, MODULI, block_n=64)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    log_n=st.integers(1, 5),
+    block_pow=st.integers(0, 3),
+    k=st.integers(1, 8),
+)
+def test_dot_hypothesis_shapes(seed, log_n, block_pow, k):
+    """Sweep (k, n, block_n) against the exact python-int oracle."""
+    rng = np.random.default_rng(seed)
+    m = MODULI[:k]
+    block_n = 2 ** (4 + block_pow)          # 16..128
+    n = block_n * (2 ** log_n)              # up to 4096
+    x = random_residues(rng, m, n)
+    y = random_residues(rng, m, n)
+    got = np.asarray(rns_dot(x, y, m, block_n=block_n))
+    want = np.asarray(ref_dot(x, y, m))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_ref_dot_matches_exact(seed):
+    """The jnp oracle itself is validated against arbitrary-precision ints."""
+    rng = np.random.default_rng(seed)
+    x = random_residues(rng, MODULI, 256)
+    y = random_residues(rng, MODULI, 256)
+    np.testing.assert_array_equal(
+        np.asarray(ref_dot(x, y, MODULI)), exact_dot(x, y, MODULI)
+    )

@@ -1,0 +1,75 @@
+"""Layer-1 elementwise modmul/modadd kernels vs oracles."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import rns_modmul, rns_modadd
+from compile.kernels.ref import ref_modmul, ref_modadd
+from .conftest import MODULI, random_residues
+
+
+def test_modmul_matches_ref():
+    rng = np.random.default_rng(0)
+    x = random_residues(rng, MODULI, 4096)
+    y = random_residues(rng, MODULI, 4096)
+    np.testing.assert_array_equal(
+        np.asarray(rns_modmul(x, y, MODULI)),
+        np.asarray(ref_modmul(x, y, MODULI)),
+    )
+
+
+def test_modadd_matches_ref():
+    rng = np.random.default_rng(1)
+    x = random_residues(rng, MODULI, 4096)
+    y = random_residues(rng, MODULI, 4096)
+    np.testing.assert_array_equal(
+        np.asarray(rns_modadd(x, y, MODULI)),
+        np.asarray(ref_modadd(x, y, MODULI)),
+    )
+
+
+def test_modmul_by_one_is_identity():
+    rng = np.random.default_rng(2)
+    x = random_residues(rng, MODULI, 1024)
+    ones = np.ones_like(x)
+    np.testing.assert_array_equal(np.asarray(rns_modmul(x, ones, MODULI)), x)
+
+
+def test_modadd_inverse_pairs_cancel():
+    """x + (m - x) ≡ 0 (mod m), elementwise in every channel."""
+    rng = np.random.default_rng(3)
+    x = random_residues(rng, MODULI, 1024)
+    neg = (MODULI[:, None] - x) % MODULI[:, None]
+    got = np.asarray(rns_modadd(x, neg, MODULI))
+    np.testing.assert_array_equal(got, np.zeros_like(x))
+
+
+def test_modmul_max_residues():
+    """(m-1)^2 mod m == 1 — worst-case magnitudes stay exact."""
+    k = len(MODULI)
+    n = 1024
+    x = np.tile((MODULI - 1)[:, None], (1, n))
+    got = np.asarray(rns_modmul(x, x, MODULI))
+    np.testing.assert_array_equal(got, np.ones((k, n), dtype=np.int64))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    blocks=st.integers(1, 8),
+    k=st.integers(1, 8),
+    op=st.sampled_from(["mul", "add"]),
+)
+def test_elementwise_hypothesis(seed, blocks, k, op):
+    rng = np.random.default_rng(seed)
+    m = MODULI[:k]
+    n = 128 * blocks
+    x = random_residues(rng, m, n)
+    y = random_residues(rng, m, n)
+    if op == "mul":
+        got = np.asarray(rns_modmul(x, y, m, block_n=128))
+        want = np.asarray(ref_modmul(x, y, m))
+    else:
+        got = np.asarray(rns_modadd(x, y, m, block_n=128))
+        want = np.asarray(ref_modadd(x, y, m))
+    np.testing.assert_array_equal(got, want)

@@ -1,0 +1,73 @@
+"""Layer-1 rns_matmul Pallas kernel vs oracles."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import rns_matmul
+from compile.kernels.ref import ref_matmul, exact_matmul
+from .conftest import MODULI, random_residues
+
+
+def test_matmul_matches_ref_64():
+    rng = np.random.default_rng(0)
+    x = random_residues(rng, MODULI, 64, 64)
+    y = random_residues(rng, MODULI, 64, 64)
+    got = np.asarray(rns_matmul(x, y, MODULI, block_k=32))
+    want = np.asarray(ref_matmul(x, y, MODULI))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_matmul_matches_exact_small():
+    rng = np.random.default_rng(1)
+    x = random_residues(rng, MODULI, 8, 16)
+    y = random_residues(rng, MODULI, 16, 8)
+    got = np.asarray(rns_matmul(x, y, MODULI, block_k=16))
+    want = exact_matmul(x, y, MODULI)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_matmul_identity():
+    k = len(MODULI)
+    n = 32
+    rng = np.random.default_rng(2)
+    x = random_residues(rng, MODULI, n, n)
+    eye = np.tile(np.eye(n, dtype=np.int64)[None], (k, 1, 1))
+    got = np.asarray(rns_matmul(x, eye, MODULI, block_k=32))
+    np.testing.assert_array_equal(got, x)
+
+
+def test_matmul_rectangular():
+    rng = np.random.default_rng(3)
+    x = random_residues(rng, MODULI, 16, 64)
+    y = random_residues(rng, MODULI, 64, 48)
+    got = np.asarray(rns_matmul(x, y, MODULI, block_k=16))
+    want = np.asarray(ref_matmul(x, y, MODULI))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_matmul_rejects_bad_block():
+    x = np.ones((len(MODULI), 8, 30), dtype=np.int64)
+    y = np.ones((len(MODULI), 30, 8), dtype=np.int64)
+    with pytest.raises(ValueError):
+        rns_matmul(x, y, MODULI, block_k=16)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    mm=st.integers(1, 24),
+    nn=st.integers(1, 24),
+    kblocks=st.integers(1, 4),
+    k=st.integers(1, 8),
+)
+def test_matmul_hypothesis(seed, mm, nn, kblocks, k):
+    rng = np.random.default_rng(seed)
+    m = MODULI[:k]
+    block_k = 16
+    kdim = block_k * kblocks
+    x = random_residues(rng, m, mm, kdim)
+    y = random_residues(rng, m, kdim, nn)
+    got = np.asarray(rns_matmul(x, y, m, block_k=block_k))
+    want = exact_matmul(x, y, m)
+    np.testing.assert_array_equal(got, want)

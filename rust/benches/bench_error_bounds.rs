@@ -1,0 +1,84 @@
+//! §III-D (Lemmas 1–2): measured normalization error vs the formal bounds
+//! over thousands of randomized events — the bounds must never be
+//! violated, and the measured/bound ratio shows their tightness.
+
+mod common;
+
+use hrfna::hybrid::{error, Hrfna, HrfnaContext};
+use hrfna::util::prng::Rng;
+use hrfna::util::table::Table;
+
+fn main() {
+    common::banner("§III-D", "formal error bounds: measured vs Lemma 1/2");
+    let ctx = HrfnaContext::paper_default();
+    let mut rng = Rng::new(314159);
+
+    let cases = 5000;
+    let mut abs_ratio_max: f64 = 0.0;
+    let mut rel_ratio_max: f64 = 0.0;
+    let mut abs_ratios = Vec::with_capacity(cases);
+    let mut violations = 0u64;
+
+    for _ in 0..cases {
+        let bits = 16 + rng.below(44) as u32;
+        let n = (rng.next_u64() >> (64 - bits)).max(1) as i64;
+        let f = rng.range_i64(-80, 80) as i32;
+        let s = 1 + rng.below(30) as u32;
+        let mut v = Hrfna::from_signed_int(if rng.bool() { n } else { -n }, f, &ctx);
+        let sample = error::measure_normalization(&mut v, s, &ctx);
+        if !sample.within_bounds() {
+            violations += 1;
+            continue;
+        }
+        // Tightness statistics only over measurements where the bound is
+        // well above the f64 probe noise (~1e-14·|Φ|) — below that the
+        // ratio measures decode rounding, not normalization error.
+        let noise = sample.before.abs() * 1e-14;
+        if sample.abs_bound > 100.0 * noise {
+            let r = sample.abs_err / sample.abs_bound;
+            abs_ratio_max = abs_ratio_max.max(r);
+            abs_ratios.push(r);
+            if sample.rel_bound > 0.0 && sample.before != 0.0 {
+                rel_ratio_max = rel_ratio_max.max(sample.rel_err / sample.rel_bound);
+            }
+        }
+    }
+
+    let mean_ratio = abs_ratios.iter().sum::<f64>() / abs_ratios.len() as f64;
+    let mut t = Table::new(
+        &format!("{cases} randomized normalization events"),
+        &["metric", "value"],
+    );
+    t.rowv(&["bound violations".to_string(), violations.to_string()]);
+    t.rowv(&["max |err|/Lemma1-bound".to_string(), format!("{abs_ratio_max:.4}")]);
+    t.rowv(&["mean |err|/Lemma1-bound".to_string(), format!("{mean_ratio:.4}")]);
+    t.rowv(&["max rel-err/tight-bound".to_string(), format!("{rel_ratio_max:.4}")]);
+    t.print();
+
+    assert_eq!(violations, 0, "Lemma bounds must never be violated");
+    assert!(abs_ratio_max <= 1.0 + 1e-9);
+
+    // Composed bound over a workload (§III-D interpretation): total error
+    // after E events ≤ E × per-event bound.
+    let cfg = hrfna::config::HrfnaConfig {
+        tau_bits: 72,
+        ..hrfna::config::HrfnaConfig::paper_default()
+    };
+    let ctx2 = HrfnaContext::new(cfg);
+    let xs = hrfna::workloads::generators::Dist::moderate().sample_vec(&mut rng, 8192);
+    let ys = hrfna::workloads::generators::Dist::moderate().sample_vec(&mut rng, 8192);
+    let want = hrfna::workloads::dot::dot_product::<f64>(&xs, &ys, &());
+    let got = hrfna::workloads::dot::dot_product::<Hrfna>(&xs, &ys, &ctx2);
+    let events = ctx2.snapshot().norms + ctx2.snapshot().guard_norms;
+    let per_event = error::lemma2_rel_bound_tight(ctx2.cfg.scale_step, ctx2.cfg.tau_bits);
+    let composed = error::composed_rel_bound(events, ctx2.cfg.scale_step, ctx2.cfg.tau_bits)
+        // encode rounding of 2·8192 operands at 2^-sig each:
+        + 2.0 * 8192.0 * 2f64.powi(-(ctx2.cfg.sig_bits as i32));
+    let measured = ((got - want) / want).abs();
+    println!(
+        "composed-bound check: {events} events, per-event {per_event:.2e}, \
+         budget {composed:.2e}, measured {measured:.2e}"
+    );
+    assert!(measured <= composed, "composed bound violated");
+    println!("bounds verified: 0 violations across {cases} events + composed workload");
+}

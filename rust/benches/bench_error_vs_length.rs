@@ -1,0 +1,53 @@
+//! Figure-style series (§VII-B.3): RMS error as a function of vector
+//! length for HRFNA / FP32 / BFP — HRFNA flat, FP32 slow growth, BFP
+//! clear growth. Prints the series the paper plots.
+
+mod common;
+
+use hrfna::baselines::{Bfp, BfpConfig, Fixed, FixedConfig, Lns, LnsConfig};
+use hrfna::hybrid::{Hrfna, HrfnaContext};
+use hrfna::util::table::Table;
+use hrfna::workloads::{dot, generators::Dist};
+
+fn main() {
+    common::banner("§VII-B fig", "RMS error vs vector length (all formats)");
+    let trials = 3;
+    let mut t = Table::new(
+        "relative RMS error vs f64 (moderate operands)",
+        &["n", "HRFNA", "FP32", "BFP", "Fixed", "LNS"],
+    );
+    let mut series: Vec<(usize, f64, f64)> = Vec::new();
+    let mut n = 1024usize;
+    while n <= 65536 {
+        let hctx = HrfnaContext::paper_default();
+        let h = dot::dot_rms_error::<Hrfna>(trials, n, Dist::moderate(), 1, &hctx);
+        let f = dot::dot_rms_error::<f32>(trials, n, Dist::moderate(), 1, &());
+        let b = dot::dot_rms_error::<Bfp>(trials, n, Dist::moderate(), 1, &BfpConfig::default());
+        let fx = dot::dot_rms_error::<Fixed>(trials, n, Dist::moderate(), 1, &FixedConfig::q16_16());
+        let l = dot::dot_rms_error::<Lns>(trials, n, Dist::moderate(), 1, &LnsConfig::default());
+        t.rowv(&[
+            n.to_string(),
+            format!("{h:.2e}"),
+            format!("{f:.2e}"),
+            format!("{b:.2e}"),
+            format!("{fx:.2e}"),
+            format!("{l:.2e}"),
+        ]);
+        series.push((n, h, b));
+        n *= 2;
+    }
+    t.print();
+
+    // Shape assertions: HRFNA flat (< 10x from first to last), BFP grows.
+    let (first_h, last_h) = (series[0].1, series.last().unwrap().1);
+    let (first_b, last_b) = (series[0].2, series.last().unwrap().2);
+    assert!(
+        last_h < first_h * 20.0,
+        "HRFNA error must stay ~flat: {first_h:.2e} -> {last_h:.2e}"
+    );
+    assert!(
+        last_b > first_b * 2.0,
+        "BFP error must grow with N: {first_b:.2e} -> {last_b:.2e}"
+    );
+    println!("shape check OK: HRFNA flat in N, BFP grows (paper Fig/§VII-B)");
+}

@@ -1,0 +1,119 @@
+//! Hot-path microbenchmarks — the §Perf instrument panel. Times every
+//! layer's critical operation; before/after numbers live in
+//! EXPERIMENTS.md §Perf.
+
+mod common;
+
+use hrfna::bigint::BigUint;
+use hrfna::hybrid::{Hrfna, HrfnaContext};
+use hrfna::rns::{Barrett, CrtContext, ResidueVec};
+use hrfna::util::bench::bench;
+use hrfna::util::prng::Rng;
+use hrfna::workloads::dot::dot_product_encoded;
+use hrfna::workloads::generators::Dist;
+
+fn main() {
+    common::banner("§Perf", "hot-path microbenchmarks");
+    let ctx = HrfnaContext::paper_default();
+    let mut rng = Rng::new(1);
+
+    // --- L3 primitive ops -------------------------------------------------
+    let bar = Barrett::new(65521);
+    let a = rng.below(65521);
+    let b = rng.below(65521);
+    println!("{}", bench("barrett mul (1 channel)", || bar.mul(a, b)).line());
+
+    let crt = CrtContext::new(&ctx.cfg.moduli);
+    let x = ResidueVec::encode_u64(0xDEAD_BEEF_CAFE, &ctx.cfg.moduli);
+    let y = ResidueVec::encode_u64(0x1234_5678_9ABC, &ctx.cfg.moduli);
+    println!(
+        "{}",
+        bench("residue mul (k=8 channels)", || x.mul(&y, &crt.barrett)).line()
+    );
+    let mut acc = ResidueVec::zero(8);
+    println!(
+        "{}",
+        bench("residue MAC (k=8)", || acc.mac_assign(&x, &y, &crt.barrett)).line()
+    );
+    println!(
+        "{}",
+        bench("CRT reconstruction (k=8)", || crt.reconstruct(&x)).line()
+    );
+    println!(
+        "{}",
+        bench("mixed-radix digits (k=8)", || crt.mixed_radix(&x)).line()
+    );
+    let big = BigUint::from_u128(0x1234_5678_9ABC_DEF0_1122_3344_5566_7788u128);
+    println!(
+        "{}",
+        bench("BigUint mul 128x64", || big.mul_u64(0xFFFF_FFFF)).line()
+    );
+
+    // --- Hrfna value ops ---------------------------------------------------
+    let ha = Hrfna::encode(1234.5678, &ctx);
+    let hb = Hrfna::encode(-0.000987, &ctx);
+    println!("{}", bench("Hrfna encode", || Hrfna::encode(3.75, &ctx)).line());
+    println!("{}", bench("Hrfna mul", || ha.mul(&hb, &ctx)).line());
+    println!("{}", bench("Hrfna add (sync)", || ha.add(&hb, &ctx)).line());
+    println!("{}", bench("Hrfna decode", || ha.decode(&ctx)).line());
+    let mut v = Hrfna::from_signed_int(0x7FFF_FFFF_FFFF, -20, &ctx);
+    println!(
+        "{}",
+        bench("Hrfna normalize s=16", || {
+            let mut w = v.clone();
+            w.normalize(16, &ctx, false);
+            w
+        })
+        .line()
+    );
+    v.normalize(1, &ctx, false);
+
+    // --- workload loop -------------------------------------------------
+    let n = 1024;
+    let xs: Vec<Hrfna> = Dist::moderate()
+        .sample_vec(&mut rng, n)
+        .iter()
+        .map(|&q| Hrfna::encode(q, &ctx))
+        .collect();
+    let ys: Vec<Hrfna> = Dist::moderate()
+        .sample_vec(&mut rng, n)
+        .iter()
+        .map(|&q| Hrfna::encode(q, &ctx))
+        .collect();
+    let r = bench("Hrfna dot n=1024 (encoded)", || {
+        dot_product_encoded::<Hrfna>(&xs, &ys, &ctx)
+    });
+    println!("{} ({:.1} ns/MAC)", r.line(), r.ns_per_iter / n as f64);
+
+    // --- PJRT kernel layer ------------------------------------------------
+    match hrfna::runtime::Engine::load_default() {
+        Ok(engine) => {
+            use hrfna::coordinator::hybrid_exec::encode_block;
+            use hrfna::runtime::pjrt::Tensor;
+            let xsf = Dist::moderate().sample_vec(&mut rng, 4096);
+            let ysf = Dist::moderate().sample_vec(&mut rng, 4096);
+            let ex = encode_block(&xsf, &ctx);
+            let ey = encode_block(&ysf, &ctx);
+            let m: Vec<i64> = ctx.cfg.moduli.iter().map(|&q| q as i64).collect();
+            let k = ctx.k();
+            println!(
+                "{}",
+                bench("encode_block n=4096", || encode_block(&xsf, &ctx)).line()
+            );
+            let r = bench("pjrt hybrid_dot n=4096", || {
+                engine
+                    .execute(
+                        "hybrid_dot",
+                        &[
+                            Tensor::I64(ex.residues.clone(), vec![k, 4096]),
+                            Tensor::I64(ey.residues.clone(), vec![k, 4096]),
+                            Tensor::I64(m.clone(), vec![k]),
+                        ],
+                    )
+                    .unwrap()
+            });
+            println!("{} ({:.1} ns/MAC)", r.line(), r.ns_per_iter / 4096.0);
+        }
+        Err(e) => println!("(PJRT skipped: {e})"),
+    }
+}

@@ -1,0 +1,121 @@
+//! §VII headline: up to 2.4× throughput vs FP32. Modeled workload timing
+//! for every format × workload, plus *measured* wall-clock of the real
+//! PJRT kernels and the software MAC loop for the record (absolute numbers
+//! are host-CPU, not FPGA — the model carries the FPGA claim; see
+//! DESIGN.md substitution table).
+
+mod common;
+
+use hrfna::config::HrfnaConfig;
+use hrfna::fpga::pipeline::{speedup, WorkloadKind};
+use hrfna::hybrid::{Hrfna, HrfnaContext};
+use hrfna::util::bench::bench;
+use hrfna::util::prng::Rng;
+use hrfna::util::table::Table;
+use hrfna::workloads::dot::dot_product_encoded;
+use hrfna::workloads::generators::Dist;
+use hrfna::workloads::traits::Numeric;
+
+fn main() {
+    common::banner("§VII", "throughput: modeled FPGA + measured host");
+    let cfg = HrfnaConfig::paper_default();
+
+    // --- FPGA model ------------------------------------------------------
+    let mut t = Table::new(
+        "modeled FPGA throughput (Mops = MAC-equivalents/s)",
+        &["workload", "HRFNA", "FP32", "BFP", "Fixed", "HRFNA/FP32"],
+    );
+    for kind in [
+        WorkloadKind::Dot { n: 65536 },
+        WorkloadKind::Matmul { m: 64, k: 64, n: 64 },
+        WorkloadKind::Matmul { m: 128, k: 128, n: 128 },
+        WorkloadKind::Rk4 { steps: 100_000 },
+    ] {
+        let tm = common::timings_for(&cfg, kind, 16);
+        let s = speedup(&tm[0], &tm[1]);
+        t.rowv(&[
+            kind.label(),
+            format!("{:.0}", tm[0].throughput_mops),
+            format!("{:.0}", tm[1].throughput_mops),
+            format!("{:.0}", tm[2].throughput_mops),
+            format!("{:.0}", tm[3].throughput_mops),
+            format!("{s:.2}x"),
+        ]);
+        if matches!(kind, WorkloadKind::Dot { .. }) {
+            assert!((2.0..=2.6).contains(&s), "dot speedup {s} out of band");
+        }
+    }
+    t.print();
+
+    // --- measured host wall-clock (software model + PJRT kernels) --------
+    let ctx = HrfnaContext::paper_default();
+    let mut rng = Rng::new(4);
+    let n = 4096;
+    let xs: Vec<Hrfna> = Dist::moderate()
+        .sample_vec(&mut rng, n)
+        .iter()
+        .map(|&v| Hrfna::encode(v, &ctx))
+        .collect();
+    let ys: Vec<Hrfna> = Dist::moderate()
+        .sample_vec(&mut rng, n)
+        .iter()
+        .map(|&v| Hrfna::encode(v, &ctx))
+        .collect();
+    let xf: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+    let yf: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+
+    let r1 = bench("host: HRFNA software dot n=4096", || {
+        dot_product_encoded::<Hrfna>(&xs, &ys, &ctx)
+    });
+    let r2 = bench("host: f32 dot n=4096", || {
+        let mut acc = 0f32;
+        for i in 0..n {
+            acc += xf[i] * yf[i];
+        }
+        acc
+    });
+    println!("{}", r1.line());
+    println!("{}", r2.line());
+
+    match hrfna::runtime::Engine::load_default() {
+        Ok(engine) => {
+            use hrfna::coordinator::hybrid_exec::encode_block;
+            use hrfna::runtime::pjrt::Tensor;
+            let xs = Dist::moderate().sample_vec(&mut rng, 4096);
+            let ysv = Dist::moderate().sample_vec(&mut rng, 4096);
+            let ex = encode_block(&xs, &ctx);
+            let ey = encode_block(&ysv, &ctx);
+            let m: Vec<i64> = ctx.cfg.moduli.iter().map(|&v| v as i64).collect();
+            let k = ctx.k();
+            let r = bench("pjrt: hybrid_dot kernel n=4096", || {
+                engine
+                    .execute(
+                        "hybrid_dot",
+                        &[
+                            Tensor::I64(ex.residues.clone(), vec![k, 4096]),
+                            Tensor::I64(ey.residues.clone(), vec![k, 4096]),
+                            Tensor::I64(m.clone(), vec![k]),
+                        ],
+                    )
+                    .unwrap()
+            });
+            println!("{}", r.line());
+            let xf: Vec<f32> = xs.iter().map(|&v| v as f32).collect();
+            let yf: Vec<f32> = ysv.iter().map(|&v| v as f32).collect();
+            let r = bench("pjrt: fp32_dot kernel n=4096", || {
+                engine
+                    .execute(
+                        "fp32_dot",
+                        &[
+                            Tensor::F32(xf.clone(), vec![4096]),
+                            Tensor::F32(yf.clone(), vec![4096]),
+                        ],
+                    )
+                    .unwrap()
+            });
+            println!("{}", r.line());
+        }
+        Err(e) => println!("(PJRT kernels skipped: {e})"),
+    }
+    println!("paper: up to 2.4x dot, 1.8-2.2x matmul vs FP32 (modeled above)");
+}

@@ -1,0 +1,35 @@
+//! Shared helpers for the benchmark harness (each bench regenerates one of
+//! the paper's tables or figure series; `cargo bench` runs them all).
+
+#![allow(dead_code)]
+
+use hrfna::fpga::pipeline::{model_workload, WorkloadKind, WorkloadTiming};
+use hrfna::fpga::resources::FormatArch;
+use hrfna::config::HrfnaConfig;
+
+/// Pretty-print a bench banner so `cargo bench` output is navigable.
+pub fn banner(paper_ref: &str, what: &str) {
+    println!("\n================================================================");
+    println!("### {paper_ref}: {what}");
+    println!("================================================================");
+}
+
+/// Modeled timing for all four formats on one workload.
+pub fn timings_for(
+    cfg: &HrfnaConfig,
+    kind: WorkloadKind,
+    hrfna_norm_events: u64,
+) -> Vec<WorkloadTiming> {
+    [
+        FormatArch::Hrfna,
+        FormatArch::Fp32,
+        FormatArch::Bfp,
+        FormatArch::Fixed,
+    ]
+    .iter()
+    .map(|&f| {
+        let events = if f == FormatArch::Hrfna { hrfna_norm_events } else { 0 };
+        model_workload(f, kind, cfg, events)
+    })
+    .collect()
+}

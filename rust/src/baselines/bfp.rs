@@ -1,0 +1,197 @@
+//! Block floating-point baseline (paper §II-E, §VIII-B).
+//!
+//! Model: mantissas carry `mant_bits` bits and addition aligns to the
+//! larger exponent with *truncating* right shifts — the cheap datapath a
+//! BFP FPGA core uses. When an accumulator's exponent grows, every addend
+//! is quantized at the accumulator's scale, so long accumulation chains
+//! lose low-order bits monotonically: exactly the error-growth-with-N and
+//! long-horizon drift the paper reports for BFP (§VII-B/D).
+
+use crate::workloads::traits::Numeric;
+
+/// BFP configuration: mantissa width in bits (shared-exponent blocks in
+/// FPGA BFP pipelines typically carry 12–18-bit mantissas; default 16).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BfpConfig {
+    pub mant_bits: u32,
+}
+
+impl Default for BfpConfig {
+    fn default() -> Self {
+        BfpConfig { mant_bits: 16 }
+    }
+}
+
+/// A block-floating value: `value = mant · 2^exp`, |mant| < 2^mant_bits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Bfp {
+    pub mant: i64,
+    pub exp: i32,
+}
+
+/// Right shift with round-half-away-from-zero (the rounding a fair BFP
+/// core applies when aligning mantissas; pure truncation would add a
+/// systematic bias that makes the baseline a strawman).
+#[inline]
+fn rshift_round(v: i128, s: u32) -> i128 {
+    if s == 0 {
+        return v;
+    }
+    if s >= 127 {
+        return 0;
+    }
+    let half = 1i128 << (s - 1);
+    if v >= 0 {
+        (v + half) >> s
+    } else {
+        -((-v + half) >> s)
+    }
+}
+
+impl Bfp {
+    /// Requantize so |mant| fits in `mant_bits` (rounded shift).
+    fn renorm(mant: i128, exp: i32, cfg: &BfpConfig) -> Bfp {
+        let limit = 1i128 << cfg.mant_bits;
+        let mut shift = 0u32;
+        while rshift_round(mant, shift).abs() >= limit {
+            shift += 1;
+        }
+        let m = rshift_round(mant, shift);
+        if m == 0 {
+            return Bfp { mant: 0, exp: 0 };
+        }
+        Bfp {
+            mant: m as i64,
+            exp: exp + shift as i32,
+        }
+    }
+}
+
+impl Numeric for Bfp {
+    type Ctx = BfpConfig;
+
+    fn name() -> &'static str {
+        "BFP"
+    }
+
+    fn from_f64(x: f64, cfg: &BfpConfig) -> Bfp {
+        if x == 0.0 || !x.is_finite() {
+            return Bfp { mant: 0, exp: 0 };
+        }
+        let e = x.abs().log2().floor() as i32;
+        let exp = e - cfg.mant_bits as i32 + 1;
+        let mant = (x * crate::hybrid::number::pow2(-exp)).round() as i128;
+        Bfp::renorm(mant, exp, cfg)
+    }
+
+    fn to_f64(&self, _cfg: &BfpConfig) -> f64 {
+        self.mant as f64 * crate::hybrid::number::pow2(self.exp)
+    }
+
+    fn zero(_cfg: &BfpConfig) -> Bfp {
+        Bfp { mant: 0, exp: 0 }
+    }
+
+    fn add(&self, o: &Bfp, cfg: &BfpConfig) -> Bfp {
+        if self.mant == 0 {
+            return *o;
+        }
+        if o.mant == 0 {
+            return *self;
+        }
+        // Align to the larger exponent; the smaller operand's low bits are
+        // rounded away at the shared scale (block-shared-exponent
+        // behaviour: precision loss grows with magnitude divergence).
+        let (hi, lo) = if self.exp >= o.exp { (self, o) } else { (o, self) };
+        let delta = (hi.exp - lo.exp).min(126) as u32;
+        let lo_mant = rshift_round(lo.mant as i128, delta);
+        Bfp::renorm(hi.mant as i128 + lo_mant, hi.exp, cfg)
+    }
+
+    fn sub(&self, o: &Bfp, cfg: &BfpConfig) -> Bfp {
+        self.add(&o.neg(cfg), cfg)
+    }
+
+    fn mul(&self, o: &Bfp, cfg: &BfpConfig) -> Bfp {
+        // 2·mant_bits product rounded back into range.
+        Bfp::renorm(self.mant as i128 * o.mant as i128, self.exp + o.exp, cfg)
+    }
+
+    fn neg(&self, _cfg: &BfpConfig) -> Bfp {
+        Bfp {
+            mant: -self.mant,
+            exp: self.exp,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> BfpConfig {
+        BfpConfig::default()
+    }
+
+    #[test]
+    fn roundtrip_within_mant_precision() {
+        let c = cfg();
+        for x in [1.0, -3.75, 1234.5, 6.02e23, -1.6e-19] {
+            let b = Bfp::from_f64(x, &c);
+            let rel = ((b.to_f64(&c) - x) / x).abs();
+            assert!(rel < 2f64.powi(-(c.mant_bits as i32) + 1), "x={x} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn zero_identity() {
+        let c = cfg();
+        let z = Bfp::zero(&c);
+        let x = Bfp::from_f64(5.5, &c);
+        assert_eq!(z.add(&x, &c), x);
+        assert_eq!(x.add(&z, &c), x);
+        assert_eq!(x.mul(&z, &c).mant, 0);
+    }
+
+    #[test]
+    fn small_addend_lost_at_large_scale() {
+        // The BFP failure mode: a large accumulator absorbs small addends.
+        let c = cfg();
+        let big = Bfp::from_f64(1e9, &c);
+        let tiny = Bfp::from_f64(1.0, &c);
+        let sum = big.add(&tiny, &c);
+        assert_eq!(sum, big, "BFP must drop the small addend (by design)");
+    }
+
+    #[test]
+    fn accumulation_error_grows_with_n() {
+        // Sum 1.0 a million times starting from 2^24: FP-like formats keep
+        // ~mant_bits precision; measure drift grows.
+        let c = cfg();
+        let mut acc = Bfp::from_f64(16_777_216.0, &c);
+        let one = Bfp::from_f64(1.0, &c);
+        for _ in 0..100_000 {
+            acc = acc.add(&one, &c);
+        }
+        let want = 16_777_216.0 + 100_000.0;
+        let err = (acc.to_f64(&c) - want).abs();
+        assert!(err > 1000.0, "BFP should show visible drift, err={err}");
+    }
+
+    #[test]
+    fn mul_matches_f64_for_exact_mantissas() {
+        let c = cfg();
+        let a = Bfp::from_f64(3.0, &c);
+        let b = Bfp::from_f64(-7.0, &c);
+        assert_eq!(a.mul(&b, &c).to_f64(&c), -21.0);
+    }
+
+    #[test]
+    fn sub_and_neg() {
+        let c = cfg();
+        let a = Bfp::from_f64(10.0, &c);
+        let b = Bfp::from_f64(4.0, &c);
+        assert_eq!(a.sub(&b, &c).to_f64(&c), 6.0);
+        assert_eq!(a.neg(&c).to_f64(&c), -10.0);
+    }
+}

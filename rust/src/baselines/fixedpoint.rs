@@ -1,0 +1,173 @@
+//! Fixed-point (Qm.n) baseline (paper §II-B, §VIII Tables I/IV).
+//!
+//! Signed two's-complement with `frac_bits` fractional bits inside a
+//! `total_bits`-wide word, saturating on overflow (with a counter so
+//! workloads can report how often the format failed). The paper's point:
+//! excellent hardware cost, but no dynamic range — long accumulations or
+//! multi-scale operands either saturate or demand conservative pre-scaling
+//! that destroys precision.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::workloads::traits::Numeric;
+
+/// Q-format configuration + saturation telemetry.
+#[derive(Debug)]
+pub struct FixedConfig {
+    /// Total word width (≤ 63).
+    pub total_bits: u32,
+    /// Fractional bits.
+    pub frac_bits: u32,
+    /// Saturation events observed (overflow failures).
+    pub saturations: AtomicU64,
+}
+
+impl FixedConfig {
+    /// Q(total-frac).frac format.
+    pub fn new(total_bits: u32, frac_bits: u32) -> FixedConfig {
+        assert!(total_bits <= 63 && frac_bits < total_bits);
+        FixedConfig {
+            total_bits,
+            frac_bits,
+            saturations: AtomicU64::new(0),
+        }
+    }
+
+    /// Common FPGA DSP-friendly default: Q16.16 in a 32-bit word.
+    pub fn q16_16() -> FixedConfig {
+        FixedConfig::new(32, 16)
+    }
+
+    fn max_raw(&self) -> i64 {
+        (1i64 << (self.total_bits - 1)) - 1
+    }
+
+    fn saturate(&self, v: i128) -> i64 {
+        let max = self.max_raw() as i128;
+        if v > max {
+            self.saturations.fetch_add(1, Ordering::Relaxed);
+            max as i64
+        } else if v < -max {
+            self.saturations.fetch_add(1, Ordering::Relaxed);
+            -(max as i64)
+        } else {
+            v as i64
+        }
+    }
+
+    /// Number of saturation events so far.
+    pub fn saturation_count(&self) -> u64 {
+        self.saturations.load(Ordering::Relaxed)
+    }
+}
+
+/// A fixed-point value: `value = raw / 2^frac_bits`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Fixed {
+    pub raw: i64,
+}
+
+impl Numeric for Fixed {
+    type Ctx = FixedConfig;
+
+    fn name() -> &'static str {
+        "Fixed"
+    }
+
+    fn from_f64(x: f64, cfg: &FixedConfig) -> Fixed {
+        let scaled = x * crate::hybrid::number::pow2(cfg.frac_bits as i32);
+        if !scaled.is_finite() {
+            cfg.saturations.fetch_add(1, Ordering::Relaxed);
+            return Fixed {
+                raw: if x > 0.0 { cfg.max_raw() } else { -cfg.max_raw() },
+            };
+        }
+        Fixed {
+            raw: cfg.saturate(scaled.round() as i128),
+        }
+    }
+
+    fn to_f64(&self, cfg: &FixedConfig) -> f64 {
+        self.raw as f64 * crate::hybrid::number::pow2(-(cfg.frac_bits as i32))
+    }
+
+    fn zero(_cfg: &FixedConfig) -> Fixed {
+        Fixed { raw: 0 }
+    }
+
+    fn add(&self, o: &Fixed, cfg: &FixedConfig) -> Fixed {
+        Fixed {
+            raw: cfg.saturate(self.raw as i128 + o.raw as i128),
+        }
+    }
+
+    fn sub(&self, o: &Fixed, cfg: &FixedConfig) -> Fixed {
+        Fixed {
+            raw: cfg.saturate(self.raw as i128 - o.raw as i128),
+        }
+    }
+
+    fn mul(&self, o: &Fixed, cfg: &FixedConfig) -> Fixed {
+        // (a·b) >> frac with rounding; i128 intermediate.
+        let prod = self.raw as i128 * o.raw as i128;
+        let half = 1i128 << (cfg.frac_bits - 1);
+        Fixed {
+            raw: cfg.saturate((prod + half) >> cfg.frac_bits),
+        }
+    }
+
+    fn neg(&self, _cfg: &FixedConfig) -> Fixed {
+        Fixed { raw: -self.raw }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_q16_16() {
+        let c = FixedConfig::q16_16();
+        for x in [0.0, 1.0, -1.5, 1234.0625, -32767.5] {
+            let f = Fixed::from_f64(x, &c);
+            assert!((f.to_f64(&c) - x).abs() <= 2f64.powi(-17), "x={x}");
+        }
+    }
+
+    #[test]
+    fn arithmetic_basics() {
+        let c = FixedConfig::q16_16();
+        let a = Fixed::from_f64(2.5, &c);
+        let b = Fixed::from_f64(-1.25, &c);
+        assert_eq!(a.add(&b, &c).to_f64(&c), 1.25);
+        assert_eq!(a.sub(&b, &c).to_f64(&c), 3.75);
+        assert_eq!(a.mul(&b, &c).to_f64(&c), -3.125);
+        assert_eq!(a.neg(&c).to_f64(&c), -2.5);
+    }
+
+    #[test]
+    fn saturation_on_overflow() {
+        let c = FixedConfig::q16_16();
+        let big = Fixed::from_f64(30000.0, &c);
+        let sum = big.add(&big, &c); // 60000 > 32767.x
+        assert!(c.saturation_count() > 0);
+        assert!((sum.to_f64(&c) - 32768.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn mul_saturates_on_range_escape() {
+        let c = FixedConfig::q16_16();
+        let a = Fixed::from_f64(1000.0, &c);
+        let before = c.saturation_count();
+        let _ = a.mul(&a, &c); // 1e6 >> range
+        assert!(c.saturation_count() > before);
+    }
+
+    #[test]
+    fn from_f64_clamps_out_of_range() {
+        let c = FixedConfig::q16_16();
+        let f = Fixed::from_f64(1e20, &c);
+        assert_eq!(f.raw, (1i64 << 31) - 1);
+        assert!(c.saturation_count() > 0);
+    }
+}

@@ -1,0 +1,187 @@
+//! Logarithmic number system baseline (paper §II-C).
+//!
+//! Values are `sign · 2^log` with `log` a fixed-point log2 magnitude
+//! (`frac_bits` fractional bits). Multiplication/division are exact
+//! fixed-point additions; addition/subtraction require the Gaussian
+//! logarithm `log2(1 ± 2^{-d})`, which hardware realizes with tables or
+//! polynomial approximation — modeled here by evaluating in f64 and
+//! quantizing the result back to `frac_bits`, charging the LNS op counters.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::workloads::traits::Numeric;
+
+/// LNS configuration: fractional bits of the log-domain fixed point.
+#[derive(Debug)]
+pub struct LnsConfig {
+    pub frac_bits: u32,
+    /// Addition/subtraction events (the expensive ops in LNS).
+    pub addsub_ops: AtomicU64,
+}
+
+impl Default for LnsConfig {
+    fn default() -> LnsConfig {
+        LnsConfig {
+            frac_bits: 23,
+            addsub_ops: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LnsConfig {
+    fn quantum(&self) -> f64 {
+        crate::hybrid::number::pow2(-(self.frac_bits as i32))
+    }
+}
+
+/// An LNS value: `sign ∈ {-1, 0, +1}`, `log` = fixed-point log2|x|.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Lns {
+    pub sign: i8,
+    /// log2|x| in units of 2^{-frac_bits} (ignored when sign == 0).
+    pub log: i64,
+}
+
+impl Lns {
+    fn log_f64(&self, cfg: &LnsConfig) -> f64 {
+        self.log as f64 * cfg.quantum()
+    }
+
+    fn from_sign_log(sign: i8, log_f: f64, cfg: &LnsConfig) -> Lns {
+        Lns {
+            sign,
+            log: (log_f / cfg.quantum()).round() as i64,
+        }
+    }
+}
+
+impl Numeric for Lns {
+    type Ctx = LnsConfig;
+
+    fn name() -> &'static str {
+        "LNS"
+    }
+
+    fn from_f64(x: f64, cfg: &LnsConfig) -> Lns {
+        if x == 0.0 || !x.is_finite() {
+            return Lns { sign: 0, log: 0 };
+        }
+        Lns::from_sign_log(if x > 0.0 { 1 } else { -1 }, x.abs().log2(), cfg)
+    }
+
+    fn to_f64(&self, cfg: &LnsConfig) -> f64 {
+        if self.sign == 0 {
+            return 0.0;
+        }
+        self.sign as f64 * 2f64.powf(self.log_f64(cfg))
+    }
+
+    fn zero(_cfg: &LnsConfig) -> Lns {
+        Lns { sign: 0, log: 0 }
+    }
+
+    fn add(&self, o: &Lns, cfg: &LnsConfig) -> Lns {
+        if self.sign == 0 {
+            return *o;
+        }
+        if o.sign == 0 {
+            return *self;
+        }
+        cfg.addsub_ops.fetch_add(1, Ordering::Relaxed);
+        // Gaussian log: ensure |a| >= |b|.
+        let (a, b) = if self.log >= o.log { (self, o) } else { (o, self) };
+        let d = (a.log - b.log) as f64 * cfg.quantum(); // >= 0
+        if a.sign == b.sign {
+            // log2(|a|+|b|) = log_a + log2(1 + 2^-d)
+            let corr = (1.0 + 2f64.powf(-d)).log2();
+            Lns::from_sign_log(a.sign, a.log_f64(cfg) + corr, cfg)
+        } else {
+            // |a| - |b|: cancellation — the LNS weak spot.
+            if a.log == b.log {
+                return Lns { sign: 0, log: 0 };
+            }
+            let corr = (1.0 - 2f64.powf(-d)).log2();
+            Lns::from_sign_log(a.sign, a.log_f64(cfg) + corr, cfg)
+        }
+    }
+
+    fn sub(&self, o: &Lns, cfg: &LnsConfig) -> Lns {
+        self.add(&o.neg(cfg), cfg)
+    }
+
+    fn mul(&self, o: &Lns, _cfg: &LnsConfig) -> Lns {
+        if self.sign == 0 || o.sign == 0 {
+            return Lns { sign: 0, log: 0 };
+        }
+        Lns {
+            sign: self.sign * o.sign,
+            log: self.log + o.log, // exact in the log domain
+        }
+    }
+
+    fn neg(&self, _cfg: &LnsConfig) -> Lns {
+        Lns {
+            sign: -self.sign,
+            log: self.log,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> LnsConfig {
+        LnsConfig::default()
+    }
+
+    #[test]
+    fn roundtrip() {
+        let c = cfg();
+        for x in [1.0, -2.5, 1e10, -1e-10, 3.14159] {
+            let v = Lns::from_f64(x, &c);
+            let rel = ((v.to_f64(&c) - x) / x).abs();
+            assert!(rel < 1e-6, "x={x} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn mul_is_cheap_and_accurate() {
+        let c = cfg();
+        let a = Lns::from_f64(3.0, &c);
+        let b = Lns::from_f64(-4.0, &c);
+        let p = a.mul(&b, &c);
+        assert!(((p.to_f64(&c) + 12.0) / 12.0).abs() < 1e-6);
+        assert_eq!(c.addsub_ops.load(Ordering::Relaxed), 0, "mul must not use add path");
+    }
+
+    #[test]
+    fn add_counts_expensive_ops() {
+        let c = cfg();
+        let a = Lns::from_f64(3.0, &c);
+        let b = Lns::from_f64(4.0, &c);
+        let s = a.add(&b, &c);
+        assert!(((s.to_f64(&c) - 7.0) / 7.0).abs() < 1e-5);
+        assert_eq!(c.addsub_ops.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn opposite_sign_cancellation() {
+        let c = cfg();
+        let a = Lns::from_f64(5.0, &c);
+        let b = Lns::from_f64(-5.0, &c);
+        assert_eq!(a.add(&b, &c).sign, 0);
+        let d = a.add(&Lns::from_f64(-4.999, &c), &c);
+        // Near-cancellation: answer ~0.001; tolerate the LNS error blowup.
+        assert!(d.to_f64(&c) > 0.0 && d.to_f64(&c) < 0.01);
+    }
+
+    #[test]
+    fn zero_propagation() {
+        let c = cfg();
+        let z = Lns::zero(&c);
+        let a = Lns::from_f64(2.0, &c);
+        assert_eq!(z.mul(&a, &c).sign, 0);
+        assert_eq!(z.add(&a, &c), a);
+    }
+}

@@ -1,0 +1,22 @@
+//! Baseline numeric formats for comparative evaluation (paper §VIII,
+//! Tables I/IV): block floating-point, fixed-point, pure RNS and LNS.
+//! IEEE FP32/FP64 baselines are the native `f32`/`f64` impls in
+//! [`crate::workloads::traits`].
+//!
+//! Each baseline is implemented honestly enough to reproduce its
+//! characteristic failure mode from the paper's comparison: BFP loses
+//! precision when magnitudes diverge inside a block and drifts over long
+//! accumulations; fixed-point saturates/overflows without conservative
+//! scaling; pure RNS wraps silently past M and needs expensive CRT
+//! rescaling for fractions; LNS multiplies cheaply but pays approximation
+//! error on every addition.
+
+pub mod bfp;
+pub mod fixedpoint;
+pub mod purerns;
+pub mod lns;
+
+pub use bfp::{Bfp, BfpConfig};
+pub use fixedpoint::{Fixed, FixedConfig};
+pub use purerns::{PureRns, PureRnsContext};
+pub use lns::{Lns, LnsConfig};

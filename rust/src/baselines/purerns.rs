@@ -1,0 +1,206 @@
+//! Pure residue number system baseline (paper §II-D, §VIII-C).
+//!
+//! Residues over the same modulus set as HRFNA but with **no exponent**:
+//! reals are committed to one global fixed scale `2^{-frac_bits}`. The two
+//! classic failure modes follow directly:
+//!
+//! 1. Every multiplication doubles the scale, so pure RNS must rescale by
+//!    `2^{frac_bits}` via full CRT reconstruction *per multiplication* —
+//!    the reconstruction cost HRFNA's exponent eliminates (counted here).
+//! 2. There is no headroom management: when magnitudes exceed M/2 the
+//!    value silently wraps (counted, and visible as garbage downstream) —
+//!    the "no dynamic range / no stability" rows of Tables I and IV.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::bigint::BigUint;
+use crate::rns::{CrtContext, ResidueVec};
+use crate::workloads::traits::Numeric;
+
+/// Context: CRT state, the fixed global scale, failure telemetry.
+#[derive(Debug)]
+pub struct PureRnsContext {
+    pub crt: CrtContext,
+    /// Global fixed fractional scale: value = N · 2^{-frac_bits}.
+    pub frac_bits: u32,
+    /// Full CRT reconstructions forced by rescaling.
+    pub rescale_reconstructions: AtomicU64,
+    /// Detected range overflows (best-effort: detected at encode/decode).
+    pub overflows: AtomicU64,
+}
+
+impl PureRnsContext {
+    /// Same default moduli as HRFNA; 24 fractional bits.
+    pub fn paper_default() -> PureRnsContext {
+        PureRnsContext {
+            crt: CrtContext::new(&crate::rns::moduli::default_moduli()),
+            frac_bits: 24,
+            rescale_reconstructions: AtomicU64::new(0),
+            overflows: AtomicU64::new(0),
+        }
+    }
+
+    fn half_m(&self) -> BigUint {
+        self.crt.big_m.shr(1)
+    }
+
+    /// Reconstructions performed so far for rescaling.
+    pub fn reconstruction_count(&self) -> u64 {
+        self.rescale_reconstructions.load(Ordering::Relaxed)
+    }
+}
+
+/// A pure-RNS value: residues of the M-complement signed integer
+/// `N = round(x · 2^{frac_bits})`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PureRns {
+    pub r: ResidueVec,
+}
+
+fn negate(r: &ResidueVec, ctx: &PureRnsContext) -> ResidueVec {
+    ResidueVec {
+        r: r.r
+            .iter()
+            .zip(&ctx.crt.moduli)
+            .map(|(&ri, &mi)| if ri == 0 { 0 } else { mi - ri })
+            .collect(),
+    }
+}
+
+impl Numeric for PureRns {
+    type Ctx = PureRnsContext;
+
+    fn name() -> &'static str {
+        "PureRNS"
+    }
+
+    fn from_f64(x: f64, ctx: &PureRnsContext) -> PureRns {
+        let scaled = x * crate::hybrid::number::pow2(ctx.frac_bits as i32);
+        // Pure RNS has no exponent: out-of-range values simply alias.
+        let mag = scaled.abs().round();
+        if !mag.is_finite() || BigUint::from_u128(mag.min(3.4e38) as u128) >= ctx.half_m() {
+            ctx.overflows.fetch_add(1, Ordering::Relaxed);
+        }
+        let n = mag.min(1e30) as u128; // beyond this it is garbage anyway
+        let mut r = ctx.crt.encode(&BigUint::from_u128(n));
+        if x < 0.0 {
+            r = negate(&r, ctx);
+        }
+        PureRns { r }
+    }
+
+    fn to_f64(&self, ctx: &PureRnsContext) -> f64 {
+        let (neg, mag) = ctx.crt.reconstruct_signed(&self.r);
+        let v = mag.to_f64() * crate::hybrid::number::pow2(-(ctx.frac_bits as i32));
+        if neg {
+            -v
+        } else {
+            v
+        }
+    }
+
+    fn zero(ctx: &PureRnsContext) -> PureRns {
+        PureRns {
+            r: ResidueVec::zero(ctx.crt.k()),
+        }
+    }
+
+    fn add(&self, o: &PureRns, ctx: &PureRnsContext) -> PureRns {
+        // Carry-free — but overflow past M/2 wraps silently.
+        PureRns {
+            r: self.r.add(&o.r, &ctx.crt.barrett),
+        }
+    }
+
+    fn sub(&self, o: &PureRns, ctx: &PureRnsContext) -> PureRns {
+        PureRns {
+            r: self.r.sub(&o.r, &ctx.crt.barrett),
+        }
+    }
+
+    fn mul(&self, o: &PureRns, ctx: &PureRnsContext) -> PureRns {
+        // Residue multiply doubles the fixed scale; pure RNS must rescale
+        // by 2^{frac_bits} via full reconstruction (the §II-D cost).
+        let prod = PureRns {
+            r: self.r.mul(&o.r, &ctx.crt.barrett),
+        };
+        ctx.rescale_reconstructions.fetch_add(1, Ordering::Relaxed);
+        let (neg, mag) = ctx.crt.reconstruct_signed(&prod.r);
+        // Round-half-up power-of-two scaling.
+        let half = BigUint::one().shl(ctx.frac_bits - 1);
+        let scaled = mag.add(&half).shr(ctx.frac_bits);
+        if scaled >= ctx.half_m() {
+            ctx.overflows.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut r = ctx.crt.encode(&scaled);
+        if neg && !scaled.is_zero() {
+            r = negate(&r, ctx);
+        }
+        PureRns { r }
+    }
+
+    fn neg(&self, ctx: &PureRnsContext) -> PureRns {
+        PureRns {
+            r: negate(&self.r, ctx),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_moderate_values() {
+        let c = PureRnsContext::paper_default();
+        for x in [0.0, 1.0, -2.5, 1000.123, -65536.25] {
+            let v = PureRns::from_f64(x, &c);
+            assert!((v.to_f64(&c) - x).abs() < 2f64.powi(-23), "x={x}");
+        }
+    }
+
+    #[test]
+    fn mul_rescales_through_crt() {
+        let c = PureRnsContext::paper_default();
+        let a = PureRns::from_f64(3.5, &c);
+        let b = PureRns::from_f64(-2.0, &c);
+        let before = c.reconstruction_count();
+        let p = a.mul(&b, &c);
+        assert!((p.to_f64(&c) + 7.0).abs() < 1e-5);
+        assert_eq!(c.reconstruction_count(), before + 1, "mul must reconstruct");
+    }
+
+    #[test]
+    fn add_is_carry_free_and_correct_in_range() {
+        let c = PureRnsContext::paper_default();
+        let a = PureRns::from_f64(1.25, &c);
+        let b = PureRns::from_f64(2.5, &c);
+        assert!((a.add(&b, &c).to_f64(&c) - 3.75).abs() < 1e-6);
+        assert!((a.sub(&b, &c).to_f64(&c) + 1.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn overflow_detection_fires_for_huge_values() {
+        let c = PureRnsContext::paper_default();
+        let _ = PureRns::from_f64(1e38, &c);
+        assert!(c.overflows.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn repeated_squaring_wraps_silently_into_garbage() {
+        // The §VIII-C instability story: no exponent, so magnitude growth
+        // is unmanaged — (2^20)^(2^k) escapes M silently and the value is
+        // garbage with no error signal on the arithmetic path.
+        let c = PureRnsContext::paper_default();
+        let mut v = PureRns::from_f64(1048576.0, &c);
+        let mut truth = 1048576.0f64;
+        for _ in 0..4 {
+            v = v.mul(&v.clone(), &c);
+            truth *= truth;
+        }
+        let got = v.to_f64(&c);
+        // truth = 2^320, far beyond M·2^-24 ≈ 2^104: the result must be wrong.
+        let rel = ((got - truth) / truth).abs();
+        assert!(rel > 0.99, "pure RNS should have wrapped: got={got} truth={truth}");
+    }
+}

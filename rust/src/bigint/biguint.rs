@@ -1,0 +1,231 @@
+//! `BigUint` representation, construction and conversions.
+
+use std::cmp::Ordering;
+use std::fmt;
+
+/// Unsigned big integer: little-endian base-2^64 limbs, normalized so the
+/// most significant limb is nonzero (zero is the empty limb vector).
+#[derive(Clone, Debug, PartialEq, Eq, Hash, Default)]
+pub struct BigUint {
+    pub(crate) limbs: Vec<u64>,
+}
+
+impl BigUint {
+    /// Zero.
+    pub fn zero() -> BigUint {
+        BigUint { limbs: Vec::new() }
+    }
+
+    /// One.
+    pub fn one() -> BigUint {
+        BigUint { limbs: vec![1] }
+    }
+
+    /// From a u64.
+    pub fn from_u64(x: u64) -> BigUint {
+        if x == 0 {
+            BigUint::zero()
+        } else {
+            BigUint { limbs: vec![x] }
+        }
+    }
+
+    /// From a u128.
+    pub fn from_u128(x: u128) -> BigUint {
+        let lo = x as u64;
+        let hi = (x >> 64) as u64;
+        let mut b = BigUint { limbs: vec![lo, hi] };
+        b.normalize();
+        b
+    }
+
+    /// From little-endian limbs (normalizing).
+    pub fn from_limbs(limbs: Vec<u64>) -> BigUint {
+        let mut b = BigUint { limbs };
+        b.normalize();
+        b
+    }
+
+    /// Strip trailing zero limbs.
+    pub(crate) fn normalize(&mut self) {
+        while let Some(&0) = self.limbs.last() {
+            self.limbs.pop();
+        }
+    }
+
+    /// True iff zero.
+    pub fn is_zero(&self) -> bool {
+        self.limbs.is_empty()
+    }
+
+    /// Number of significant bits (0 for zero).
+    pub fn bit_length(&self) -> u32 {
+        match self.limbs.last() {
+            None => 0,
+            Some(&top) => {
+                (self.limbs.len() as u32 - 1) * 64 + (64 - top.leading_zeros())
+            }
+        }
+    }
+
+    /// Value of bit `i` (false beyond the top).
+    pub fn bit(&self, i: u32) -> bool {
+        let limb = (i / 64) as usize;
+        if limb >= self.limbs.len() {
+            return false;
+        }
+        (self.limbs[limb] >> (i % 64)) & 1 == 1
+    }
+
+    /// Lossy conversion to f64 (rounds the 53-bit prefix, tracks scale).
+    pub fn to_f64(&self) -> f64 {
+        match self.limbs.len() {
+            0 => 0.0,
+            1 => self.limbs[0] as f64,
+            2 => self.limbs[0] as f64 + self.limbs[1] as f64 * 2f64.powi(64),
+            n => {
+                // Take the top two limbs and scale.
+                let hi = self.limbs[n - 1] as f64;
+                let lo = self.limbs[n - 2] as f64;
+                (hi * 2f64.powi(64) + lo) * 2f64.powi(64 * (n as i32 - 2))
+            }
+        }
+    }
+
+    /// Exact conversion to u64 if it fits.
+    pub fn to_u64(&self) -> Option<u64> {
+        match self.limbs.len() {
+            0 => Some(0),
+            1 => Some(self.limbs[0]),
+            _ => None,
+        }
+    }
+
+    /// Exact conversion to u128 if it fits.
+    pub fn to_u128(&self) -> Option<u128> {
+        match self.limbs.len() {
+            0 => Some(0),
+            1 => Some(self.limbs[0] as u128),
+            2 => Some(self.limbs[0] as u128 | (self.limbs[1] as u128) << 64),
+            _ => None,
+        }
+    }
+
+    /// Comparison.
+    pub fn cmp_big(&self, other: &BigUint) -> Ordering {
+        if self.limbs.len() != other.limbs.len() {
+            return self.limbs.len().cmp(&other.limbs.len());
+        }
+        for i in (0..self.limbs.len()).rev() {
+            match self.limbs[i].cmp(&other.limbs[i]) {
+                Ordering::Equal => continue,
+                o => return o,
+            }
+        }
+        Ordering::Equal
+    }
+}
+
+impl PartialOrd for BigUint {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp_big(other))
+    }
+}
+
+impl Ord for BigUint {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.cmp_big(other)
+    }
+}
+
+impl fmt::Display for BigUint {
+    /// Decimal rendering (repeated division by 10^19; fine at our sizes).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_zero() {
+            return write!(f, "0");
+        }
+        let mut chunks: Vec<u64> = Vec::new();
+        let mut cur = self.clone();
+        const TEN19: u64 = 10_000_000_000_000_000_000;
+        while !cur.is_zero() {
+            let (q, r) = cur.div_rem_u64(TEN19);
+            chunks.push(r);
+            cur = q;
+        }
+        let mut s = format!("{}", chunks.pop().unwrap());
+        while let Some(c) = chunks.pop() {
+            s.push_str(&format!("{c:019}"));
+        }
+        write!(f, "{s}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_normalization() {
+        assert!(BigUint::zero().is_zero());
+        assert_eq!(BigUint::from_limbs(vec![5, 0, 0]), BigUint::from_u64(5));
+        assert_eq!(BigUint::from_u128(0), BigUint::zero());
+    }
+
+    #[test]
+    fn bit_length() {
+        assert_eq!(BigUint::zero().bit_length(), 0);
+        assert_eq!(BigUint::one().bit_length(), 1);
+        assert_eq!(BigUint::from_u64(u64::MAX).bit_length(), 64);
+        assert_eq!(BigUint::from_u128(1u128 << 64).bit_length(), 65);
+    }
+
+    #[test]
+    fn bits() {
+        let b = BigUint::from_u128(0b1010);
+        assert!(!b.bit(0));
+        assert!(b.bit(1));
+        assert!(!b.bit(2));
+        assert!(b.bit(3));
+        assert!(!b.bit(400));
+    }
+
+    #[test]
+    fn to_f64_roundtrip_small() {
+        for x in [0u64, 1, 12345, u64::MAX] {
+            assert_eq!(BigUint::from_u64(x).to_f64(), x as f64);
+        }
+    }
+
+    #[test]
+    fn to_f64_large() {
+        let b = BigUint::from_u128(1u128 << 100);
+        assert_eq!(b.to_f64(), 2f64.powi(100));
+    }
+
+    #[test]
+    fn conversions() {
+        assert_eq!(BigUint::from_u64(7).to_u64(), Some(7));
+        assert_eq!(BigUint::from_u128(u128::MAX).to_u128(), Some(u128::MAX));
+        assert_eq!(BigUint::from_u128(u128::MAX).to_u64(), None);
+    }
+
+    #[test]
+    fn ordering() {
+        let a = BigUint::from_u128(1u128 << 80);
+        let b = BigUint::from_u64(u64::MAX);
+        assert!(a > b);
+        assert_eq!(a.cmp_big(&a), Ordering::Equal);
+    }
+
+    #[test]
+    fn display_decimal() {
+        assert_eq!(BigUint::zero().to_string(), "0");
+        assert_eq!(BigUint::from_u64(123456789).to_string(), "123456789");
+        // 2^64 = 18446744073709551616
+        let b = BigUint::from_u128(1u128 << 64);
+        assert_eq!(b.to_string(), "18446744073709551616");
+        // 10^19 boundary padding
+        let c = BigUint::from_u128(10_000_000_000_000_000_000u128 * 3 + 7);
+        assert_eq!(c.to_string(), "30000000000000000007");
+    }
+}

@@ -1,0 +1,11 @@
+//! Arbitrary-precision unsigned integers (u64 limbs, little-endian).
+//!
+//! Substrate for CRT reconstruction: with the default k=8 sixteen-bit
+//! moduli the composite modulus `M ≈ 2^128`, and intermediate CRT terms
+//! `r_i · M_i · inv_i` reach ~`M · m_i ≈ 2^144`, so fixed-width integers do
+//! not suffice and the offline registry carries no num-bigint.
+
+mod biguint;
+mod ops;
+
+pub use biguint::BigUint;

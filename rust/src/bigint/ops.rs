@@ -1,0 +1,340 @@
+//! Arithmetic on `BigUint`: add/sub/mul, shifts, division and modular
+//! reduction. Schoolbook algorithms — operands here are ~128–160 bits
+//! (CRT terms), far below the sizes where Karatsuba pays off.
+
+use super::BigUint;
+
+impl BigUint {
+    /// `self + other`.
+    pub fn add(&self, other: &BigUint) -> BigUint {
+        let n = self.limbs.len().max(other.limbs.len());
+        let mut out = Vec::with_capacity(n + 1);
+        let mut carry = 0u64;
+        for i in 0..n {
+            let a = *self.limbs.get(i).unwrap_or(&0);
+            let b = *other.limbs.get(i).unwrap_or(&0);
+            let (s1, c1) = a.overflowing_add(b);
+            let (s2, c2) = s1.overflowing_add(carry);
+            out.push(s2);
+            carry = (c1 as u64) + (c2 as u64);
+        }
+        if carry != 0 {
+            out.push(carry);
+        }
+        BigUint::from_limbs(out)
+    }
+
+    /// Add a u64 in place.
+    pub fn add_u64(&self, x: u64) -> BigUint {
+        self.add(&BigUint::from_u64(x))
+    }
+
+    /// `self - other`; panics on underflow (callers compare first).
+    pub fn sub(&self, other: &BigUint) -> BigUint {
+        assert!(self >= other, "BigUint subtraction underflow");
+        let mut out = Vec::with_capacity(self.limbs.len());
+        let mut borrow = 0u64;
+        for i in 0..self.limbs.len() {
+            let a = self.limbs[i];
+            let b = *other.limbs.get(i).unwrap_or(&0);
+            let (d1, b1) = a.overflowing_sub(b);
+            let (d2, b2) = d1.overflowing_sub(borrow);
+            out.push(d2);
+            borrow = (b1 as u64) + (b2 as u64);
+        }
+        debug_assert_eq!(borrow, 0);
+        BigUint::from_limbs(out)
+    }
+
+    /// `self * other` (schoolbook).
+    pub fn mul(&self, other: &BigUint) -> BigUint {
+        if self.is_zero() || other.is_zero() {
+            return BigUint::zero();
+        }
+        let mut out = vec![0u64; self.limbs.len() + other.limbs.len()];
+        for (i, &a) in self.limbs.iter().enumerate() {
+            let mut carry = 0u128;
+            for (j, &b) in other.limbs.iter().enumerate() {
+                let t = out[i + j] as u128 + (a as u128) * (b as u128) + carry;
+                out[i + j] = t as u64;
+                carry = t >> 64;
+            }
+            let mut k = i + other.limbs.len();
+            while carry != 0 {
+                let t = out[k] as u128 + carry;
+                out[k] = t as u64;
+                carry = t >> 64;
+                k += 1;
+            }
+        }
+        BigUint::from_limbs(out)
+    }
+
+    /// `self * x` for a u64 scalar.
+    pub fn mul_u64(&self, x: u64) -> BigUint {
+        if x == 0 || self.is_zero() {
+            return BigUint::zero();
+        }
+        let mut out = Vec::with_capacity(self.limbs.len() + 1);
+        let mut carry = 0u128;
+        for &a in &self.limbs {
+            let t = (a as u128) * (x as u128) + carry;
+            out.push(t as u64);
+            carry = t >> 64;
+        }
+        if carry != 0 {
+            out.push(carry as u64);
+        }
+        BigUint::from_limbs(out)
+    }
+
+    /// Left shift by `s` bits.
+    pub fn shl(&self, s: u32) -> BigUint {
+        if self.is_zero() || s == 0 {
+            return self.clone();
+        }
+        let limb_shift = (s / 64) as usize;
+        let bit_shift = s % 64;
+        let mut out = vec![0u64; limb_shift];
+        if bit_shift == 0 {
+            out.extend_from_slice(&self.limbs);
+        } else {
+            let mut carry = 0u64;
+            for &a in &self.limbs {
+                out.push((a << bit_shift) | carry);
+                carry = a >> (64 - bit_shift);
+            }
+            if carry != 0 {
+                out.push(carry);
+            }
+        }
+        BigUint::from_limbs(out)
+    }
+
+    /// Right shift by `s` bits (⌊self / 2^s⌋ — the paper's normalization
+    /// scaling, Definition 4).
+    pub fn shr(&self, s: u32) -> BigUint {
+        let limb_shift = (s / 64) as usize;
+        if limb_shift >= self.limbs.len() {
+            return BigUint::zero();
+        }
+        let bit_shift = s % 64;
+        let src = &self.limbs[limb_shift..];
+        let mut out = Vec::with_capacity(src.len());
+        if bit_shift == 0 {
+            out.extend_from_slice(src);
+        } else {
+            for i in 0..src.len() {
+                let lo = src[i] >> bit_shift;
+                let hi = if i + 1 < src.len() {
+                    src[i + 1] << (64 - bit_shift)
+                } else {
+                    0
+                };
+                out.push(lo | hi);
+            }
+        }
+        BigUint::from_limbs(out)
+    }
+
+    /// Divide by a u64, returning (quotient, remainder).
+    pub fn div_rem_u64(&self, d: u64) -> (BigUint, u64) {
+        assert!(d != 0, "division by zero");
+        let mut out = vec![0u64; self.limbs.len()];
+        let mut rem = 0u128;
+        for i in (0..self.limbs.len()).rev() {
+            let cur = (rem << 64) | self.limbs[i] as u128;
+            out[i] = (cur / d as u128) as u64;
+            rem = cur % d as u128;
+        }
+        (BigUint::from_limbs(out), rem as u64)
+    }
+
+    /// Remainder mod a u64 (residue re-encoding path).
+    pub fn rem_u64(&self, d: u64) -> u64 {
+        self.div_rem_u64(d).1
+    }
+
+    /// General division: (⌊self/div⌋, self mod div). Binary long division —
+    /// O(bits · limbs); operands are ≤ ~3 limbs here.
+    pub fn div_rem(&self, div: &BigUint) -> (BigUint, BigUint) {
+        assert!(!div.is_zero(), "division by zero");
+        if self < div {
+            return (BigUint::zero(), self.clone());
+        }
+        if let (Some(a), Some(b)) = (self.to_u128(), div.to_u128()) {
+            return (BigUint::from_u128(a / b), BigUint::from_u128(a % b));
+        }
+        let shift = self.bit_length() - div.bit_length();
+        let mut rem = self.clone();
+        let mut quot = BigUint::zero();
+        for s in (0..=shift).rev() {
+            let d = div.shl(s);
+            if rem >= d {
+                rem = rem.sub(&d);
+                quot = quot.add(&BigUint::one().shl(s));
+            }
+        }
+        (quot, rem)
+    }
+
+    /// `self mod m`.
+    pub fn rem_big(&self, m: &BigUint) -> BigUint {
+        self.div_rem(m).1
+    }
+
+    /// `(self + other) mod m`, assuming both inputs are already < m.
+    pub fn add_mod(&self, other: &BigUint, m: &BigUint) -> BigUint {
+        let s = self.add(other);
+        if &s >= m {
+            s.sub(m)
+        } else {
+            s
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    fn big(x: u128) -> BigUint {
+        BigUint::from_u128(x)
+    }
+
+    #[test]
+    fn add_carries_across_limbs() {
+        let a = big(u128::MAX);
+        let b = BigUint::one();
+        let s = a.add(&b);
+        assert_eq!(s.bit_length(), 129);
+        assert_eq!(s.shr(128).to_u64(), Some(1));
+    }
+
+    #[test]
+    fn sub_borrows() {
+        let a = big(1u128 << 64);
+        let b = BigUint::one();
+        assert_eq!(a.sub(&b).to_u128(), Some((1u128 << 64) - 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "underflow")]
+    fn sub_underflow_panics() {
+        BigUint::one().sub(&big(2));
+    }
+
+    #[test]
+    fn mul_known() {
+        assert_eq!(
+            big(u64::MAX as u128).mul(&big(u64::MAX as u128)).to_u128(),
+            Some((u64::MAX as u128) * (u64::MAX as u128))
+        );
+        assert_eq!(big(0).mul(&big(5)), BigUint::zero());
+    }
+
+    #[test]
+    fn mul_u64_matches_mul() {
+        let a = big(0x1234_5678_9abc_def0_1111_2222u128);
+        assert_eq!(a.mul_u64(65521), a.mul(&big(65521)));
+    }
+
+    #[test]
+    fn shifts_roundtrip() {
+        let a = big(0xdead_beef_cafe_babe_u128);
+        for s in [0u32, 1, 17, 63, 64, 65, 100] {
+            assert_eq!(a.shl(s).shr(s), a, "s={s}");
+        }
+    }
+
+    #[test]
+    fn shr_floors() {
+        assert_eq!(big(7).shr(1).to_u64(), Some(3));
+        assert_eq!(big(7).shr(3).to_u64(), Some(0));
+    }
+
+    #[test]
+    fn div_rem_u64_known() {
+        let (q, r) = big(1_000_000_007).div_rem_u64(13);
+        assert_eq!(q.to_u64(), Some(1_000_000_007 / 13));
+        assert_eq!(r, 1_000_000_007 % 13);
+    }
+
+    #[test]
+    fn div_rem_big_cases() {
+        let a = big(12345678901234567890u128);
+        let b = big(987654321u128);
+        let (q, r) = a.div_rem(&b);
+        assert_eq!(q.to_u128(), Some(12345678901234567890u128 / 987654321));
+        assert_eq!(r.to_u128(), Some(12345678901234567890u128 % 987654321));
+    }
+
+    #[test]
+    fn div_rem_multi_limb() {
+        // 3-limb dividend, 2-limb divisor: exercises binary long division.
+        let a = BigUint::from_limbs(vec![0x1111, 0x2222, 0x3333]);
+        let b = BigUint::from_limbs(vec![0xffff_ffff_ffff_fff1, 0x7]);
+        let (q, r) = a.div_rem(&b);
+        assert_eq!(q.mul(&b).add(&r), a);
+        assert!(r < b);
+    }
+
+    #[test]
+    fn prop_add_sub_roundtrip() {
+        check("bigint-add-sub", |rng| {
+            let a = big(((rng.next_u64() as u128) << 64) | rng.next_u64() as u128);
+            let b = big(rng.next_u64() as u128);
+            let s = a.add(&b);
+            crate::prop_assert!(s.sub(&b) == a, "roundtrip failed");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_div_rem_invariant() {
+        check("bigint-divrem", |rng| {
+            let a = BigUint::from_limbs(vec![
+                rng.next_u64(),
+                rng.next_u64(),
+                rng.next_u64() % 4,
+            ]);
+            let b = BigUint::from_limbs(vec![rng.next_u64(), rng.next_u64() % 8 + 1]);
+            let (q, r) = a.div_rem(&b);
+            crate::prop_assert!(q.mul(&b).add(&r) == a, "q*b+r != a");
+            crate::prop_assert!(r < b, "r >= b");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_mul_commutative() {
+        check("bigint-mul-comm", |rng| {
+            let a = big(rng.next_u64() as u128);
+            let b = big(((rng.next_u64() as u128) << 32) | 1);
+            crate::prop_assert!(a.mul(&b) == b.mul(&a), "commutativity");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_rem_u64_matches_div_rem() {
+        check("bigint-rem-u64", |rng| {
+            let a = BigUint::from_limbs(vec![rng.next_u64(), rng.next_u64()]);
+            let d = rng.next_u64() % 65521 + 2;
+            let (q, r) = a.div_rem_u64(d);
+            crate::prop_assert!(
+                q.mul_u64(d).add_u64(r) == a,
+                "q*d+r != a for d={d}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn add_mod_wraps() {
+        let m = big(100);
+        assert_eq!(big(60).add_mod(&big(50), &m).to_u64(), Some(10));
+        assert_eq!(big(30).add_mod(&big(50), &m).to_u64(), Some(80));
+    }
+}

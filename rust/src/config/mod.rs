@@ -1,0 +1,209 @@
+//! Typed configuration for the HRFNA system (paper Table II parameters)
+//! plus a small TOML-subset parser and named presets.
+
+mod toml;
+
+pub use toml::TomlDoc;
+
+use crate::rns::moduli::{
+    default_moduli, dynamic_range_bits, generate_prime_moduli, is_pairwise_coprime,
+};
+
+/// HRFNA numeric + microarchitecture configuration (paper Table II).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HrfnaConfig {
+    /// Pairwise coprime modulus set {m_1..m_k}.
+    pub moduli: Vec<u64>,
+    /// Exponent width ω_f in bits (exponent range is ±(2^{ω_f-1} - 1)).
+    pub exponent_width: u32,
+    /// Normalization threshold τ expressed as `log2 τ` (τ = 2^tau_bits);
+    /// normalization triggers when the magnitude estimate reaches τ.
+    pub tau_bits: u32,
+    /// Power-of-two scaling step s (Definition 4): N → ⌊N/2^s⌋, f → f+s.
+    pub scale_step: u32,
+    /// Significand target: encode reals with |N| ∈ [2^{sig_bits-1}, 2^{sig_bits}).
+    pub sig_bits: u32,
+    /// Target clock for the FPGA model, MHz (Table II: 300 MHz).
+    pub clock_mhz: f64,
+}
+
+impl HrfnaConfig {
+    /// The paper's default configuration (§VII-A: parameters fixed across
+    /// all workloads).
+    pub fn paper_default() -> HrfnaConfig {
+        HrfnaConfig {
+            moduli: default_moduli(),
+            exponent_width: 16,
+            // M ≈ 2^127.9; trigger normalization with 16 bits of headroom.
+            tau_bits: 112,
+            scale_step: 32,
+            sig_bits: 30,
+            clock_mhz: 300.0,
+        }
+    }
+
+    /// A reduced-precision preset (design-space exploration).
+    pub fn low_precision() -> HrfnaConfig {
+        HrfnaConfig {
+            moduli: generate_prime_moduli(4, 16),
+            exponent_width: 12,
+            tau_bits: 48,
+            scale_step: 24,
+            sig_bits: 18,
+            clock_mhz: 300.0,
+        }
+    }
+
+    /// A stress preset: tight threshold so normalization is frequent
+    /// (used by ablation benches).
+    pub fn stress_normalization() -> HrfnaConfig {
+        HrfnaConfig {
+            tau_bits: 72,
+            ..HrfnaConfig::paper_default()
+        }
+    }
+
+    /// Look up a preset by name.
+    pub fn preset(name: &str) -> Option<HrfnaConfig> {
+        match name {
+            "paper" | "default" => Some(HrfnaConfig::paper_default()),
+            "low-precision" => Some(HrfnaConfig::low_precision()),
+            "stress-norm" => Some(HrfnaConfig::stress_normalization()),
+            _ => None,
+        }
+    }
+
+    /// Number of residue channels k.
+    pub fn k(&self) -> usize {
+        self.moduli.len()
+    }
+
+    /// log2(M): residue-domain dynamic range in bits.
+    pub fn m_bits(&self) -> f64 {
+        dynamic_range_bits(&self.moduli)
+    }
+
+    /// Validate the invariants Table II implies. Returns a reason on failure.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.moduli.is_empty() {
+            return Err("empty modulus set".into());
+        }
+        if !is_pairwise_coprime(&self.moduli) {
+            return Err("moduli not pairwise coprime".into());
+        }
+        if self.moduli.iter().any(|&m| m < 2 || m >= 1 << 32) {
+            return Err("moduli must be in [2, 2^32)".into());
+        }
+        let m_bits = self.m_bits();
+        if (self.tau_bits as f64) >= m_bits {
+            return Err(format!(
+                "tau (2^{}) must be < M (2^{m_bits:.1})",
+                self.tau_bits
+            ));
+        }
+        if self.scale_step == 0 || self.scale_step as f64 >= m_bits {
+            return Err("scale_step must be in (0, log2 M)".into());
+        }
+        if self.sig_bits + 2 > self.tau_bits {
+            return Err("sig_bits must leave headroom below tau".into());
+        }
+        if !(2..=32).contains(&self.exponent_width) {
+            return Err("exponent_width must be in [2, 32]".into());
+        }
+        Ok(())
+    }
+
+    /// Parse overrides from a TOML-subset document (see `TomlDoc`).
+    pub fn from_toml(doc: &TomlDoc) -> Result<HrfnaConfig, String> {
+        let mut cfg = match doc.get_str("preset") {
+            Some(p) => HrfnaConfig::preset(p).ok_or(format!("unknown preset {p}"))?,
+            None => HrfnaConfig::paper_default(),
+        };
+        if let Some(ms) = doc.get_u64_array("moduli") {
+            cfg.moduli = ms;
+        }
+        if let Some(x) = doc.get_u64("exponent_width") {
+            cfg.exponent_width = x as u32;
+        }
+        if let Some(x) = doc.get_u64("tau_bits") {
+            cfg.tau_bits = x as u32;
+        }
+        if let Some(x) = doc.get_u64("scale_step") {
+            cfg.scale_step = x as u32;
+        }
+        if let Some(x) = doc.get_u64("sig_bits") {
+            cfg.sig_bits = x as u32;
+        }
+        if let Some(x) = doc.get_f64("clock_mhz") {
+            cfg.clock_mhz = x;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a config file path.
+    pub fn from_file(path: &str) -> Result<HrfnaConfig, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        let doc = TomlDoc::parse(&text)?;
+        HrfnaConfig::from_toml(&doc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_is_valid() {
+        let c = HrfnaConfig::paper_default();
+        c.validate().unwrap();
+        assert_eq!(c.k(), 8);
+        assert!(c.m_bits() > 127.0);
+    }
+
+    #[test]
+    fn all_presets_valid() {
+        for name in ["paper", "default", "low-precision", "stress-norm"] {
+            HrfnaConfig::preset(name).unwrap().validate().unwrap();
+        }
+        assert!(HrfnaConfig::preset("nope").is_none());
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        let mut c = HrfnaConfig::paper_default();
+        c.moduli = vec![6, 9];
+        assert!(c.validate().is_err());
+
+        let mut c = HrfnaConfig::paper_default();
+        c.tau_bits = 200;
+        assert!(c.validate().is_err());
+
+        let mut c = HrfnaConfig::paper_default();
+        c.scale_step = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = HrfnaConfig::paper_default();
+        c.sig_bits = c.tau_bits;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn from_toml_overrides() {
+        let doc = TomlDoc::parse(
+            "preset = \"paper\"\ntau_bits = 100\nclock_mhz = 250.0\n",
+        )
+        .unwrap();
+        let c = HrfnaConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.tau_bits, 100);
+        assert_eq!(c.clock_mhz, 250.0);
+        assert_eq!(c.moduli, default_moduli());
+    }
+
+    #[test]
+    fn from_toml_moduli_array() {
+        let doc = TomlDoc::parse("moduli = [3, 5, 7]\ntau_bits = 6\nscale_step = 2\nsig_bits = 4\nexponent_width = 8\n").unwrap();
+        let c = HrfnaConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.moduli, vec![3, 5, 7]);
+    }
+}

@@ -1,0 +1,209 @@
+//! Minimal TOML-subset parser: `key = value` lines, `#` comments, string /
+//! integer / float / boolean scalars and flat integer arrays. No tables,
+//! no nesting — enough for HRFNA config files without a serde dependency.
+
+use std::collections::BTreeMap;
+
+/// A parsed flat TOML-subset document.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    values: BTreeMap<String, TomlValue>,
+}
+
+/// Scalar or integer-array value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    IntArray(Vec<i64>),
+}
+
+impl TomlDoc {
+    /// Parse a document; returns a line-tagged error message on failure.
+    pub fn parse(text: &str) -> Result<TomlDoc, String> {
+        let mut values = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or(format!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            if key.is_empty() || !key.chars().all(|c| c.is_alphanumeric() || c == '_' || c == '-') {
+                return Err(format!("line {}: bad key `{key}`", lineno + 1));
+            }
+            let val = parse_value(val.trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            values.insert(key.to_string(), val);
+        }
+        Ok(TomlDoc { values })
+    }
+
+    /// Raw value lookup.
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.values.get(key)
+    }
+
+    /// String value.
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        match self.values.get(key) {
+            Some(TomlValue::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Unsigned integer value (rejects negatives).
+    pub fn get_u64(&self, key: &str) -> Option<u64> {
+        match self.values.get(key) {
+            Some(TomlValue::Int(i)) if *i >= 0 => Some(*i as u64),
+            _ => None,
+        }
+    }
+
+    /// Float value (integer values coerce).
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        match self.values.get(key) {
+            Some(TomlValue::Float(f)) => Some(*f),
+            Some(TomlValue::Int(i)) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    /// Boolean value.
+    pub fn get_bool(&self, key: &str) -> Option<bool> {
+        match self.values.get(key) {
+            Some(TomlValue::Bool(b)) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Array of non-negative integers.
+    pub fn get_u64_array(&self, key: &str) -> Option<Vec<u64>> {
+        match self.values.get(key) {
+            Some(TomlValue::IntArray(xs)) if xs.iter().all(|&x| x >= 0) => {
+                Some(xs.iter().map(|&x| x as u64).collect())
+            }
+            _ => None,
+        }
+    }
+
+    /// Number of keys.
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    /// True if no keys parsed.
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+/// Remove a `#` comment, respecting double-quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or("unterminated string".to_string())?;
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or("unterminated array".to_string())?;
+        let mut xs = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            xs.push(
+                part.parse::<i64>()
+                    .map_err(|_| format!("bad array int `{part}`"))?,
+            );
+        }
+        return Ok(TomlValue::IntArray(xs));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value `{s}`"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        let d = TomlDoc::parse(
+            "a = 1\nb = 2.5\nc = \"hi\"\nd = true\ne = false\n",
+        )
+        .unwrap();
+        assert_eq!(d.get_u64("a"), Some(1));
+        assert_eq!(d.get_f64("b"), Some(2.5));
+        assert_eq!(d.get_str("c"), Some("hi"));
+        assert_eq!(d.get_bool("d"), Some(true));
+        assert_eq!(d.get_bool("e"), Some(false));
+        assert_eq!(d.len(), 5);
+    }
+
+    #[test]
+    fn parses_arrays_and_comments() {
+        let d = TomlDoc::parse(
+            "# header\nmoduli = [3, 5, 7] # trailing\nname = \"x # not comment\"\n",
+        )
+        .unwrap();
+        assert_eq!(d.get_u64_array("moduli"), Some(vec![3, 5, 7]));
+        assert_eq!(d.get_str("name"), Some("x # not comment"));
+    }
+
+    #[test]
+    fn int_coerces_to_float() {
+        let d = TomlDoc::parse("x = 3\n").unwrap();
+        assert_eq!(d.get_f64("x"), Some(3.0));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(TomlDoc::parse("novalue\n").is_err());
+        assert!(TomlDoc::parse("x = \n").is_err());
+        assert!(TomlDoc::parse("x = [1, oops]\n").is_err());
+        assert!(TomlDoc::parse("bad key = 1\n").is_err());
+        assert!(TomlDoc::parse("s = \"unterminated\n").is_err());
+    }
+
+    #[test]
+    fn negative_ints_rejected_by_u64_getters() {
+        let d = TomlDoc::parse("x = -5\narr = [-1, 2]\n").unwrap();
+        assert_eq!(d.get_u64("x"), None);
+        assert_eq!(d.get_u64_array("arr"), None);
+    }
+}

@@ -1,0 +1,222 @@
+//! Fixed-shape batcher: AOT executables have frozen shapes, so incoming
+//! jobs are bucketed per kind and dispatched in batches — a batch amortizes
+//! worker wakeups and engine dispatch overhead over several jobs (the
+//! vLLM-router-style dynamic batching policy, adapted to fixed shapes).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::request::Job;
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Dispatch as soon as this many jobs are queued…
+    pub max_batch: usize,
+    /// …or when the oldest job has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> BatchPolicy {
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+#[derive(Default)]
+struct QueueState {
+    jobs: VecDeque<Job>,
+    closed: bool,
+}
+
+/// A blocking batch queue for one job kind.
+pub struct BatchQueue {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+    pub policy: BatchPolicy,
+}
+
+impl BatchQueue {
+    /// New queue with the given policy.
+    pub fn new(policy: BatchPolicy) -> BatchQueue {
+        BatchQueue {
+            state: Mutex::new(QueueState::default()),
+            cv: Condvar::new(),
+            policy,
+        }
+    }
+
+    /// Enqueue a job.
+    pub fn push(&self, job: Job) {
+        let mut st = self.state.lock().unwrap();
+        assert!(!st.closed, "queue closed");
+        st.jobs.push_back(job);
+        self.cv.notify_one();
+    }
+
+    /// Number of queued jobs.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().jobs.len()
+    }
+
+    /// True if no jobs are waiting.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close the queue: wakes all waiters; `next_batch` drains and then
+    /// returns `None`.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Block until a batch is ready per the policy (or the queue closes).
+    /// Returns `None` only when closed *and* drained.
+    pub fn next_batch(&self) -> Option<Vec<Job>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if !st.jobs.is_empty() {
+                let oldest = st.jobs.front().unwrap().submitted;
+                let waited = oldest.elapsed();
+                if st.jobs.len() >= self.policy.max_batch
+                    || waited >= self.policy.max_wait
+                    || st.closed
+                {
+                    let take = st.jobs.len().min(self.policy.max_batch);
+                    return Some(st.jobs.drain(..take).collect());
+                }
+                // Wait out the remaining batching window.
+                let remaining = self.policy.max_wait - waited;
+                let (guard, _) = self.cv.wait_timeout(st, remaining).unwrap();
+                st = guard;
+            } else if st.closed {
+                return None;
+            } else {
+                st = self.cv.wait(st).unwrap();
+            }
+        }
+    }
+
+    /// Age of the oldest queued job (None if empty) — scheduling metric.
+    pub fn oldest_wait(&self) -> Option<Duration> {
+        let st = self.state.lock().unwrap();
+        st.jobs.front().map(|j| j.submitted.elapsed())
+    }
+}
+
+/// Compute the dispatch deadline for a job submitted at `t` under `p`.
+pub fn deadline(t: Instant, p: &BatchPolicy) -> Instant {
+    t + p.max_wait
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{JobKind, Payload};
+    use std::sync::mpsc;
+    use std::sync::Arc;
+
+    fn mkjob(id: u64) -> (Job, mpsc::Receiver<crate::coordinator::request::JobResult>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Job {
+                id,
+                kind: JobKind::DotF32,
+                payload: Payload::Dot {
+                    x: vec![1.0],
+                    y: vec![1.0],
+                },
+                submitted: Instant::now(),
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn full_batch_dispatches_immediately() {
+        let q = BatchQueue::new(BatchPolicy {
+            max_batch: 3,
+            max_wait: Duration::from_secs(60),
+        });
+        let mut rxs = Vec::new();
+        for i in 0..3 {
+            let (j, rx) = mkjob(i);
+            q.push(j);
+            rxs.push(rx);
+        }
+        let batch = q.next_batch().unwrap();
+        assert_eq!(batch.len(), 3);
+        assert_eq!(batch[0].id, 0);
+    }
+
+    #[test]
+    fn timeout_flushes_partial_batch() {
+        let q = BatchQueue::new(BatchPolicy {
+            max_batch: 100,
+            max_wait: Duration::from_millis(5),
+        });
+        let (j, _rx) = mkjob(7);
+        q.push(j);
+        let t0 = Instant::now();
+        let batch = q.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = BatchQueue::new(BatchPolicy::default());
+        let (j, _rx) = mkjob(1);
+        q.push(j);
+        q.close();
+        assert_eq!(q.next_batch().unwrap().len(), 1);
+        assert!(q.next_batch().is_none());
+    }
+
+    #[test]
+    fn concurrent_producers_no_loss_no_dup() {
+        let q = Arc::new(BatchQueue::new(BatchPolicy {
+            max_batch: 16,
+            max_wait: Duration::from_millis(1),
+        }));
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    for i in 0..50u64 {
+                        let (j, _rx) = mkjob(p * 1000 + i);
+                        std::mem::forget(_rx); // keep channel alive
+                        q.push(j);
+                    }
+                })
+            })
+            .collect();
+        let consumer = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                let mut seen = Vec::new();
+                while let Some(batch) = q.next_batch() {
+                    for j in batch {
+                        seen.push(j.id);
+                    }
+                }
+                seen
+            })
+        };
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let mut seen = consumer.join().unwrap();
+        seen.sort();
+        seen.dedup();
+        assert_eq!(seen.len(), 200, "lost or duplicated jobs");
+    }
+}

@@ -1,0 +1,173 @@
+//! Block-exponent encode/decode bridging reals ↔ residue tensors for the
+//! AOT kernels (Algorithm 1's "f_0 chosen to match initial operands").
+//!
+//! The PJRT kernels operate on residues only; for Σ x_i·y_i to be a valid
+//! residue-domain sum, every product must share one exponent. So a vector
+//! is encoded with a *block-common* exponent `f = ⌈log2 max|x|⌉ − sig + 1`:
+//! each element becomes `N_i = round(x_i / 2^f)` with `|N_i| ≤ 2^sig`,
+//! stored M-complement per channel. The kernel's per-channel modular MAC
+//! then computes the residues of the signed integer Σ N_i·M_i exactly
+//! (|Σ| ≤ n·2^{2·sig} ≪ M/2 for the AOT bucket sizes), and one CRT
+//! reconstruction recovers the value at exponent `f_x + f_y` — zero
+//! normalizations inside the kernel, matching §VII-E's measured rarity.
+
+use crate::hybrid::number::{ldexp_staged, pow2};
+use crate::hybrid::HrfnaContext;
+use crate::rns::ResidueVec;
+
+/// Block-encoded vector: row-major `k × n` residues plus the shared
+/// exponent.
+#[derive(Clone, Debug)]
+pub struct BlockEncoded {
+    /// Residue matrix, channel-major: `res[c * n + j]`.
+    pub residues: Vec<i64>,
+    pub n: usize,
+    pub f: i32,
+}
+
+/// Encode a real vector with one shared exponent (paper Alg. 1 step 1).
+pub fn encode_block(xs: &[f64], ctx: &HrfnaContext) -> BlockEncoded {
+    let k = ctx.k();
+    let n = xs.len();
+    let max = xs.iter().fold(0.0f64, |a, &x| a.max(x.abs()));
+    if max == 0.0 {
+        return BlockEncoded {
+            residues: vec![0; k * n],
+            n,
+            f: 0,
+        };
+    }
+    let sig = ctx.cfg.sig_bits as i32;
+    let e = max.log2().floor() as i32;
+    let f = e - sig + 1;
+    // §Perf (two iterations): (1) Barrett reduction instead of hardware
+    // division; (2) channel-major *contiguous* writes — scale once into a
+    // staging row, then stream each channel's row sequentially instead of
+    // scattering 8 strided writes per element.
+    let bars = ctx.barrett();
+    let scale = pow2(-f); // |f| < 1100 only via extreme operands; staged below
+    let staged: Vec<i64> = if scale.is_finite() && scale != 0.0 {
+        xs.iter().map(|&x| (x * scale).round() as i64).collect()
+    } else {
+        xs.iter()
+            .map(|&x| ldexp_staged(x, -f).round() as i64)
+            .collect()
+    };
+    let mut residues = vec![0i64; k * n];
+    for c in 0..k {
+        let bar = bars[c];
+        let m = ctx.cfg.moduli[c];
+        let row = &mut residues[c * n..(c + 1) * n];
+        for (j, &s) in staged.iter().enumerate() {
+            let r = bar.reduce(s.unsigned_abs());
+            row[j] = if s < 0 && r != 0 { (m - r) as i64 } else { r as i64 };
+        }
+    }
+    BlockEncoded { residues, n, f }
+}
+
+/// Decode per-channel dot-product residues (k values) at exponent `f`.
+pub fn decode_scalar(residues: &[i64], f: i32, ctx: &HrfnaContext) -> f64 {
+    crate::hybrid::HrfnaContext::count(&ctx.counters.reconstructions);
+    let rv = ResidueVec {
+        r: residues.iter().map(|&r| r as u64).collect(),
+    };
+    let (neg, mag) = ctx.crt.reconstruct_signed(&rv);
+    let v = ldexp_staged(mag.to_f64(), f);
+    if neg {
+        -v
+    } else {
+        v
+    }
+}
+
+/// Decode a `k × m × n` residue tensor (channel-major) into `m·n` reals at
+/// exponent `f`.
+pub fn decode_matrix(residues: &[i64], mn: usize, f: i32, ctx: &HrfnaContext) -> Vec<f64> {
+    let k = ctx.k();
+    assert_eq!(residues.len(), k * mn);
+    (0..mn)
+        .map(|j| {
+            let per_channel: Vec<i64> = (0..k).map(|c| residues[c * mn + j]).collect();
+            decode_scalar(&per_channel, f, ctx)
+        })
+        .collect()
+}
+
+/// Worst-case encode quantization error for a block at exponent `f`:
+/// half a unit per element, `2^{f-1}`.
+pub fn block_quantum(f: i32) -> f64 {
+    pow2(f - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> HrfnaContext {
+        HrfnaContext::paper_default()
+    }
+
+    #[test]
+    fn roundtrip_single_elements() {
+        let c = ctx();
+        let xs = [3.75, -1.5e6, 0.001, 42.0];
+        let enc = encode_block(&xs, &c);
+        let k = c.k();
+        for (j, &x) in xs.iter().enumerate() {
+            let per: Vec<i64> = (0..k).map(|ch| enc.residues[ch * xs.len() + j]).collect();
+            let back = decode_scalar(&per, enc.f, &c);
+            // Block-shared exponent: error ≤ half a block quantum.
+            assert!(
+                (back - x).abs() <= block_quantum(enc.f) * 1.0001,
+                "x={x} back={back}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_vector_encodes_zero() {
+        let c = ctx();
+        let enc = encode_block(&[0.0; 5], &c);
+        assert!(enc.residues.iter().all(|&r| r == 0));
+        assert_eq!(enc.f, 0);
+    }
+
+    #[test]
+    fn software_dot_through_residue_math_matches() {
+        // Emulate exactly what the PJRT kernel does (channelwise modular
+        // MAC) and check the decoded dot product against f64.
+        let c = ctx();
+        let xs = [1.5, -2.0, 3.0, 0.25];
+        let ys = [2.0, 4.0, -1.0, 8.0];
+        let ex = encode_block(&xs, &c);
+        let ey = encode_block(&ys, &c);
+        let k = c.k();
+        let n = xs.len();
+        let mut acc = vec![0i64; k];
+        for ch in 0..k {
+            let m = c.cfg.moduli[ch] as i64;
+            for j in 0..n {
+                acc[ch] = (acc[ch] + ex.residues[ch * n + j] * ey.residues[ch * n + j]) % m;
+            }
+        }
+        let got = decode_scalar(&acc, ex.f + ey.f, &c);
+        let want: f64 = xs.iter().zip(&ys).map(|(a, b)| a * b).sum();
+        assert!(
+            ((got - want) / want).abs() < 1e-6,
+            "got={got} want={want}"
+        );
+    }
+
+    #[test]
+    fn decode_matrix_layout() {
+        let c = ctx();
+        let k = c.k();
+        // Encode the 2-vector [7, -3] as a "matrix" of 2 elements.
+        let enc = encode_block(&[7.0, -3.0], &c);
+        let vals = decode_matrix(&enc.residues, 2, enc.f, &c);
+        assert!((vals[0] - 7.0).abs() < 1e-6);
+        assert!((vals[1] + 3.0).abs() < 1e-6);
+        assert_eq!(enc.residues.len(), k * 2);
+    }
+}

@@ -1,0 +1,189 @@
+//! Serving metrics: per-kind latency histograms, counters and throughput.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use super::request::JobKind;
+use crate::util::table::Table;
+
+/// Log2-µs latency histogram: bucket i covers [2^i, 2^{i+1}) µs.
+const BUCKETS: usize = 24;
+
+#[derive(Default)]
+struct KindMetrics {
+    jobs: AtomicU64,
+    macs: AtomicU64,
+    batches: AtomicU64,
+    latency_sum_us: AtomicU64,
+    histogram: [AtomicU64; BUCKETS],
+}
+
+/// Aggregated per-kind serving metrics (lock-free).
+pub struct Metrics {
+    kinds: [KindMetrics; 4],
+    start: Instant,
+}
+
+fn kind_index(kind: JobKind) -> usize {
+    match kind {
+        JobKind::DotHybrid => 0,
+        JobKind::DotF32 => 1,
+        JobKind::MatmulHybrid => 2,
+        JobKind::MatmulF32 => 3,
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics {
+            kinds: Default::default(),
+            start: Instant::now(),
+        }
+    }
+}
+
+impl Metrics {
+    /// Record one completed job.
+    pub fn record(&self, kind: JobKind, latency_us: f64, macs: u64) {
+        let k = &self.kinds[kind_index(kind)];
+        k.jobs.fetch_add(1, Ordering::Relaxed);
+        k.macs.fetch_add(macs, Ordering::Relaxed);
+        k.latency_sum_us
+            .fetch_add(latency_us.max(0.0) as u64, Ordering::Relaxed);
+        let bucket = (latency_us.max(1.0).log2() as usize).min(BUCKETS - 1);
+        k.histogram[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a dispatched batch.
+    pub fn record_batch(&self, kind: JobKind) {
+        self.kinds[kind_index(kind)]
+            .batches
+            .fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Jobs completed for a kind.
+    pub fn jobs(&self, kind: JobKind) -> u64 {
+        self.kinds[kind_index(kind)].jobs.load(Ordering::Relaxed)
+    }
+
+    /// Total jobs across kinds.
+    pub fn total_jobs(&self) -> u64 {
+        JobKind::ALL.iter().map(|&k| self.jobs(k)).sum()
+    }
+
+    /// Mean latency (µs) for a kind.
+    pub fn mean_latency_us(&self, kind: JobKind) -> f64 {
+        let k = &self.kinds[kind_index(kind)];
+        let n = k.jobs.load(Ordering::Relaxed);
+        if n == 0 {
+            0.0
+        } else {
+            k.latency_sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// Approximate latency percentile (µs) from the log2 histogram.
+    pub fn latency_percentile_us(&self, kind: JobKind, p: f64) -> f64 {
+        let k = &self.kinds[kind_index(kind)];
+        let total: u64 = k
+            .histogram
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (p / 100.0 * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in k.histogram.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                // Bucket midpoint in µs.
+                return 2f64.powi(i as i32) * 1.5;
+            }
+        }
+        2f64.powi(BUCKETS as i32)
+    }
+
+    /// Mean jobs per dispatched batch.
+    pub fn mean_batch_size(&self, kind: JobKind) -> f64 {
+        let k = &self.kinds[kind_index(kind)];
+        let b = k.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            k.jobs.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    /// MAC-equivalents per second since startup, per kind.
+    pub fn throughput_mops(&self, kind: JobKind) -> f64 {
+        let k = &self.kinds[kind_index(kind)];
+        let macs = k.macs.load(Ordering::Relaxed) as f64;
+        macs / self.start.elapsed().as_micros().max(1) as f64
+    }
+
+    /// Render the serving report table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            "Serving metrics",
+            &[
+                "lane", "jobs", "mean batch", "mean us", "p50 us", "p99 us", "Mops",
+            ],
+        );
+        for &kind in &JobKind::ALL {
+            if self.jobs(kind) == 0 {
+                continue;
+            }
+            t.rowv(&[
+                kind.label().to_string(),
+                self.jobs(kind).to_string(),
+                format!("{:.1}", self.mean_batch_size(kind)),
+                format!("{:.1}", self.mean_latency_us(kind)),
+                format!("{:.1}", self.latency_percentile_us(kind, 50.0)),
+                format!("{:.1}", self.latency_percentile_us(kind, 99.0)),
+                format!("{:.2}", self.throughput_mops(kind)),
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let m = Metrics::default();
+        m.record(JobKind::DotHybrid, 10.0, 4096);
+        m.record(JobKind::DotHybrid, 1000.0, 4096);
+        m.record_batch(JobKind::DotHybrid);
+        assert_eq!(m.jobs(JobKind::DotHybrid), 2);
+        assert_eq!(m.total_jobs(), 2);
+        assert!((m.mean_latency_us(JobKind::DotHybrid) - 505.0).abs() < 1.0);
+        assert_eq!(m.mean_batch_size(JobKind::DotHybrid), 2.0);
+        assert!(m.throughput_mops(JobKind::DotHybrid) > 0.0);
+    }
+
+    #[test]
+    fn percentiles_monotonic() {
+        let m = Metrics::default();
+        for i in 0..1000 {
+            m.record(JobKind::DotF32, (i % 100) as f64 + 1.0, 1);
+        }
+        let p50 = m.latency_percentile_us(JobKind::DotF32, 50.0);
+        let p99 = m.latency_percentile_us(JobKind::DotF32, 99.0);
+        assert!(p50 <= p99);
+        assert!(p50 > 0.0);
+    }
+
+    #[test]
+    fn table_renders_active_lanes_only() {
+        let m = Metrics::default();
+        m.record(JobKind::MatmulF32, 5.0, 64);
+        let s = m.table().render();
+        assert!(s.contains("matmul/fp32"));
+        assert!(!s.contains("dot/hrfna"));
+    }
+}

@@ -1,0 +1,18 @@
+//! Layer-3 coordinator: the serving system around the HRFNA runtime.
+//!
+//! The paper's contribution is the numeric format (L1/L2), so L3 is the
+//! system a deployment needs around it: typed requests, a router that
+//! assigns jobs to format lanes, a fixed-shape batcher (AOT executables
+//! have frozen shapes — requests are bucketed and padded into them),
+//! worker threads driving the PJRT engine, block-exponent encode/decode
+//! bridging reals ↔ residue tensors, and metrics.
+
+pub mod request;
+pub mod hybrid_exec;
+pub mod batcher;
+pub mod router;
+pub mod metrics;
+pub mod server;
+
+pub use request::{Job, JobKind, JobResult, Payload};
+pub use server::{Coordinator, CoordinatorConfig};

@@ -1,0 +1,100 @@
+//! Request/response types for the coordinator.
+
+use std::time::Instant;
+
+/// Which backend lane a job runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum JobKind {
+    /// Dot product in HRFNA through the residue-domain PJRT kernel.
+    DotHybrid,
+    /// Dot product in FP32 through the baseline PJRT graph.
+    DotF32,
+    /// Dense matmul in HRFNA.
+    MatmulHybrid,
+    /// Dense matmul in FP32.
+    MatmulF32,
+}
+
+impl JobKind {
+    /// All kinds (for metrics tables).
+    pub const ALL: [JobKind; 4] = [
+        JobKind::DotHybrid,
+        JobKind::DotF32,
+        JobKind::MatmulHybrid,
+        JobKind::MatmulF32,
+    ];
+
+    /// Table label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            JobKind::DotHybrid => "dot/hrfna",
+            JobKind::DotF32 => "dot/fp32",
+            JobKind::MatmulHybrid => "matmul/hrfna",
+            JobKind::MatmulF32 => "matmul/fp32",
+        }
+    }
+}
+
+/// Job payload (shapes are validated against the AOT bucket at submit).
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// Dot product of two equal-length vectors (≤ the AOT bucket size).
+    Dot { x: Vec<f64>, y: Vec<f64> },
+    /// Square matmul at the AOT dimension.
+    Matmul { a: Vec<f64>, b: Vec<f64>, dim: usize },
+}
+
+impl Payload {
+    /// Element count (for throughput metrics).
+    pub fn macs(&self) -> u64 {
+        match self {
+            Payload::Dot { x, .. } => x.len() as u64,
+            Payload::Matmul { dim, .. } => (dim * dim * dim) as u64,
+        }
+    }
+}
+
+/// A queued job.
+#[derive(Debug)]
+pub struct Job {
+    pub id: u64,
+    pub kind: JobKind,
+    pub payload: Payload,
+    pub submitted: Instant,
+    /// Completion channel.
+    pub reply: std::sync::mpsc::Sender<JobResult>,
+}
+
+/// Completed job.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub id: u64,
+    pub kind: JobKind,
+    /// Scalar for dot, row-major matrix for matmul.
+    pub values: Vec<f64>,
+    /// End-to-end latency in microseconds.
+    pub latency_us: f64,
+    /// Size of the batch this job was executed in.
+    pub batch_size: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_macs() {
+        let d = Payload::Dot { x: vec![0.0; 7], y: vec![0.0; 7] };
+        assert_eq!(d.macs(), 7);
+        let m = Payload::Matmul { a: vec![], b: vec![], dim: 4 };
+        assert_eq!(m.macs(), 64);
+    }
+
+    #[test]
+    fn labels_unique() {
+        let mut labels: Vec<_> = JobKind::ALL.iter().map(|k| k.label()).collect();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), 4);
+    }
+}

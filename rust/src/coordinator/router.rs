@@ -1,0 +1,132 @@
+//! Admission control + lane routing: validates each payload against the
+//! AOT shape buckets, pads dot vectors up to the bucket length, and maps
+//! job kinds onto batch queues (one queue per kind; workers pull
+//! concurrently, giving work-conserving scheduling).
+
+use anyhow::{bail, Result};
+
+use super::request::{JobKind, Payload};
+
+/// AOT shape buckets (keep in sync with python/compile/model.py).
+#[derive(Clone, Copy, Debug)]
+pub struct ShapeBuckets {
+    pub dot_n: usize,
+    pub matmul_dim: usize,
+}
+
+impl Default for ShapeBuckets {
+    fn default() -> ShapeBuckets {
+        ShapeBuckets {
+            dot_n: 4096,
+            matmul_dim: 64,
+        }
+    }
+}
+
+/// Validate and normalize a payload for its lane; pads dot vectors with
+/// zeros to the bucket size (zero products do not affect the sum).
+pub fn admit(payload: &mut Payload, kind: JobKind, buckets: &ShapeBuckets) -> Result<()> {
+    match (payload, kind) {
+        (Payload::Dot { x, y }, JobKind::DotHybrid | JobKind::DotF32) => {
+            if x.len() != y.len() {
+                bail!("dot operands must have equal length");
+            }
+            if x.is_empty() {
+                bail!("empty dot product");
+            }
+            if x.len() > buckets.dot_n {
+                bail!("dot length {} exceeds bucket {}", x.len(), buckets.dot_n);
+            }
+            if !x.iter().chain(y.iter()).all(|v| v.is_finite()) {
+                bail!("non-finite operand");
+            }
+            x.resize(buckets.dot_n, 0.0);
+            y.resize(buckets.dot_n, 0.0);
+            Ok(())
+        }
+        (Payload::Matmul { a, b, dim }, JobKind::MatmulHybrid | JobKind::MatmulF32) => {
+            if *dim != buckets.matmul_dim {
+                bail!("matmul dim {dim} != bucket {}", buckets.matmul_dim);
+            }
+            if a.len() != dim.pow(2) || b.len() != dim.pow(2) {
+                bail!("matmul operand size mismatch");
+            }
+            if !a.iter().chain(b.iter()).all(|v| v.is_finite()) {
+                bail!("non-finite operand");
+            }
+            Ok(())
+        }
+        _ => bail!("payload does not match lane {kind:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_padding() {
+        let b = ShapeBuckets::default();
+        let mut p = Payload::Dot {
+            x: vec![1.0; 100],
+            y: vec![2.0; 100],
+        };
+        admit(&mut p, JobKind::DotHybrid, &b).unwrap();
+        if let Payload::Dot { x, y } = &p {
+            assert_eq!(x.len(), 4096);
+            assert_eq!(y.len(), 4096);
+            assert_eq!(x[99], 1.0);
+            assert_eq!(x[100], 0.0);
+            assert_eq!(y[4095], 0.0);
+        } else {
+            panic!()
+        }
+    }
+
+    #[test]
+    fn rejects_oversize_and_mismatch() {
+        let b = ShapeBuckets::default();
+        let mut p = Payload::Dot {
+            x: vec![0.0; 5000],
+            y: vec![0.0; 5000],
+        };
+        assert!(admit(&mut p, JobKind::DotF32, &b).is_err());
+        let mut p = Payload::Dot {
+            x: vec![0.0; 10],
+            y: vec![0.0; 11],
+        };
+        assert!(admit(&mut p, JobKind::DotF32, &b).is_err());
+        let mut p = Payload::Dot {
+            x: vec![f64::NAN; 4],
+            y: vec![0.0; 4],
+        };
+        assert!(admit(&mut p, JobKind::DotF32, &b).is_err());
+    }
+
+    #[test]
+    fn matmul_admission() {
+        let b = ShapeBuckets::default();
+        let mut p = Payload::Matmul {
+            a: vec![0.0; 64 * 64],
+            b: vec![0.0; 64 * 64],
+            dim: 64,
+        };
+        admit(&mut p, JobKind::MatmulHybrid, &b).unwrap();
+        let mut p = Payload::Matmul {
+            a: vec![0.0; 9],
+            b: vec![0.0; 9],
+            dim: 3,
+        };
+        assert!(admit(&mut p, JobKind::MatmulHybrid, &b).is_err());
+    }
+
+    #[test]
+    fn kind_payload_mismatch_rejected() {
+        let b = ShapeBuckets::default();
+        let mut p = Payload::Dot {
+            x: vec![1.0],
+            y: vec![1.0],
+        };
+        assert!(admit(&mut p, JobKind::MatmulF32, &b).is_err());
+    }
+}

@@ -1,0 +1,241 @@
+//! The coordinator server: worker threads pulling batches from per-lane
+//! queues and driving the PJRT engine; Python never runs here.
+
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use super::batcher::{BatchPolicy, BatchQueue};
+use super::hybrid_exec::{decode_matrix, decode_scalar, encode_block};
+use super::metrics::Metrics;
+use super::request::{Job, JobKind, JobResult, Payload};
+use super::router::{admit, ShapeBuckets};
+use crate::hybrid::HrfnaContext;
+use crate::runtime::pjrt::Tensor;
+use crate::runtime::EngineHandle;
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Worker threads per lane.
+    pub workers_per_lane: usize,
+    pub batch: BatchPolicy,
+    pub buckets: ShapeBuckets,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> CoordinatorConfig {
+        CoordinatorConfig {
+            workers_per_lane: 2,
+            batch: BatchPolicy::default(),
+            buckets: ShapeBuckets::default(),
+        }
+    }
+}
+
+/// The running coordinator. Dropping it shuts the workers down cleanly.
+pub struct Coordinator {
+    queues: Arc<BTreeMap<JobKind, BatchQueue>>,
+    pub metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    cfg: CoordinatorConfig,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start workers over a loaded engine and an HRFNA context.
+    pub fn start(
+        engine: EngineHandle,
+        hrfna: Arc<HrfnaContext>,
+        cfg: CoordinatorConfig,
+    ) -> Coordinator {
+        let mut queues = BTreeMap::new();
+        for &kind in &JobKind::ALL {
+            queues.insert(kind, BatchQueue::new(cfg.batch));
+        }
+        let queues = Arc::new(queues);
+        let metrics = Arc::new(Metrics::default());
+        let mut workers = Vec::new();
+        for &kind in &JobKind::ALL {
+            for widx in 0..cfg.workers_per_lane {
+                let queues = Arc::clone(&queues);
+                let engine = engine.clone();
+                let hrfna = Arc::clone(&hrfna);
+                let metrics = Arc::clone(&metrics);
+                let buckets = cfg.buckets;
+                workers.push(
+                    thread::Builder::new()
+                        .name(format!("lane-{}-{widx}", kind.label().replace('/', "-")))
+                        .spawn(move || {
+                            let q = queues.get(&kind).unwrap();
+                            while let Some(batch) = q.next_batch() {
+                                metrics.record_batch(kind);
+                                let size = batch.len();
+                                for job in batch {
+                                    let r = execute_job(&engine, &hrfna, &buckets, &job);
+                                    let latency_us =
+                                        job.submitted.elapsed().as_secs_f64() * 1e6;
+                                    let values = match r {
+                                        Ok(v) => v,
+                                        Err(e) => {
+                                            crate::log_error!(
+                                                "job {} failed: {e:#}",
+                                                job.id
+                                            );
+                                            vec![f64::NAN]
+                                        }
+                                    };
+                                    metrics.record(kind, latency_us, job.payload.macs());
+                                    let _ = job.reply.send(JobResult {
+                                        id: job.id,
+                                        kind,
+                                        values,
+                                        latency_us,
+                                        batch_size: size,
+                                    });
+                                }
+                            }
+                        })
+                        .expect("spawn lane worker"),
+                );
+            }
+        }
+        Coordinator {
+            queues,
+            metrics,
+            next_id: AtomicU64::new(1),
+            cfg,
+            workers,
+        }
+    }
+
+    /// Submit a job; returns the receiver for its result.
+    pub fn submit(
+        &self,
+        kind: JobKind,
+        mut payload: Payload,
+    ) -> Result<mpsc::Receiver<JobResult>> {
+        admit(&mut payload, kind, &self.cfg.buckets)?;
+        let (tx, rx) = mpsc::channel();
+        let job = Job {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            kind,
+            payload,
+            submitted: Instant::now(),
+            reply: tx,
+        };
+        self.queues.get(&kind).unwrap().push(job);
+        Ok(rx)
+    }
+
+    /// Submit and block for the result.
+    pub fn call(&self, kind: JobKind, payload: Payload) -> Result<JobResult> {
+        let rx = self.submit(kind, payload)?;
+        Ok(rx
+            .recv_timeout(Duration::from_secs(120))
+            .map_err(|e| anyhow::anyhow!("job timed out: {e}"))?)
+    }
+
+    /// Close all queues and join workers.
+    pub fn shutdown(mut self) {
+        for q in self.queues.values() {
+            q.close();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        for q in self.queues.values() {
+            q.close();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Execute one admitted job against the engine.
+fn execute_job(
+    engine: &EngineHandle,
+    hrfna: &HrfnaContext,
+    buckets: &ShapeBuckets,
+    job: &Job,
+) -> Result<Vec<f64>> {
+    match (&job.payload, job.kind) {
+        (Payload::Dot { x, y }, JobKind::DotF32) => {
+            let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+            let yf: Vec<f32> = y.iter().map(|&v| v as f32).collect();
+            let out = engine
+                .execute(
+                    "fp32_dot",
+                    vec![
+                        Tensor::F32(xf, vec![buckets.dot_n]),
+                        Tensor::F32(yf, vec![buckets.dot_n]),
+                    ],
+                )?
+                .into_f32()?;
+            Ok(vec![out[0] as f64])
+        }
+        (Payload::Dot { x, y }, JobKind::DotHybrid) => {
+            let k = hrfna.k();
+            let n = buckets.dot_n;
+            let ex = encode_block(x, hrfna);
+            let ey = encode_block(y, hrfna);
+            let m: Vec<i64> = hrfna.cfg.moduli.iter().map(|&v| v as i64).collect();
+            let out = engine
+                .execute(
+                    "hybrid_dot",
+                    vec![
+                        Tensor::I64(ex.residues, vec![k, n]),
+                        Tensor::I64(ey.residues, vec![k, n]),
+                        Tensor::I64(m, vec![k]),
+                    ],
+                )?
+                .into_i64()?;
+            Ok(vec![decode_scalar(&out, ex.f + ey.f, hrfna)])
+        }
+        (Payload::Matmul { a, b, dim }, JobKind::MatmulF32) => {
+            let af: Vec<f32> = a.iter().map(|&v| v as f32).collect();
+            let bf: Vec<f32> = b.iter().map(|&v| v as f32).collect();
+            let out = engine
+                .execute(
+                    "fp32_matmul",
+                    vec![
+                        Tensor::F32(af, vec![*dim, *dim]),
+                        Tensor::F32(bf, vec![*dim, *dim]),
+                    ],
+                )?
+                .into_f32()?;
+            Ok(out.into_iter().map(|v| v as f64).collect())
+        }
+        (Payload::Matmul { a, b, dim }, JobKind::MatmulHybrid) => {
+            let k = hrfna.k();
+            let d = *dim;
+            let ea = encode_block(a, hrfna);
+            let eb = encode_block(b, hrfna);
+            let m: Vec<i64> = hrfna.cfg.moduli.iter().map(|&v| v as i64).collect();
+            let out = engine
+                .execute(
+                    "hybrid_matmul",
+                    vec![
+                        Tensor::I64(ea.residues, vec![k, d, d]),
+                        Tensor::I64(eb.residues, vec![k, d, d]),
+                        Tensor::I64(m, vec![k]),
+                    ],
+                )?
+                .into_i64()?;
+            Ok(decode_matrix(&out, d * d, ea.f + eb.f, hrfna))
+        }
+        _ => anyhow::bail!("payload/kind mismatch escaped admission"),
+    }
+}
+
+// Engine-dependent tests live in rust/tests/integration_serve.rs (they
+// need compiled artifacts).

@@ -1,0 +1,25 @@
+//! ZCU104-class FPGA microarchitecture model (paper §V–VI substitution —
+//! see DESIGN.md: we have no Vivado/ZCU104, so the paper's post-P&R
+//! measurements are reproduced with an analytical resource/timing/power
+//! model over the *same microarchitecture decomposition*: parallel residue
+//! channel pipelines, exponent pipe, interval control path, off-datapath
+//! CRT normalization engine).
+//!
+//! * [`resources`] — LUT/FF/DSP/BRAM cost model per arithmetic unit,
+//!   calibrated to published UltraScale+ operator costs (constants are
+//!   documented at their definitions).
+//! * [`timing`]    — achievable-Fmax model per pipeline class.
+//! * [`pipeline`]  — cycle-level throughput model: initiation intervals,
+//!   loop-carried accumulation dependencies, normalization-engine
+//!   occupancy and stalls (Theorem-2-style Π→1 behaviour, §VII-E).
+//! * [`power`]     — dynamic+static power and energy-per-operation.
+//! * [`report`]    — Table II-style configuration/implementation report.
+
+pub mod resources;
+pub mod timing;
+pub mod pipeline;
+pub mod power;
+pub mod report;
+
+pub use pipeline::{WorkloadKind, WorkloadTiming};
+pub use resources::{FormatArch, Resources};

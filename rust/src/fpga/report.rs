@@ -1,0 +1,184 @@
+//! Table II-style implementation report and the iso-throughput resource
+//! comparison behind the "38–55% LUT reduction" headline (§I, §VII).
+
+use super::pipeline::{model_workload, WorkloadKind, WorkloadTiming};
+use super::resources::{mac_unit, FormatArch, Resources};
+use super::timing;
+use crate::config::HrfnaConfig;
+use crate::util::table::{eng, Table};
+
+/// Render the paper's Table II (RTL configuration and setup) for `cfg`.
+pub fn table2(cfg: &HrfnaConfig) -> Table {
+    let mut t = Table::new(
+        "Table II — RTL Configuration and FPGA Implementation Setup",
+        &["Parameter", "Value", "Notes"],
+    )
+    .aligns(&[
+        crate::util::table::Align::Left,
+        crate::util::table::Align::Left,
+        crate::util::table::Align::Left,
+    ]);
+    let moduli = cfg
+        .moduli
+        .iter()
+        .map(|m| m.to_string())
+        .collect::<Vec<_>>()
+        .join(", ");
+    t.rowv(&[
+        "Modulus set {m_i}".to_string(),
+        moduli,
+        "pairwise coprime".to_string(),
+    ]);
+    t.rowv(&[
+        "Composite modulus M".to_string(),
+        format!("~2^{:.1}", cfg.m_bits()),
+        "residue-domain integer range".to_string(),
+    ]);
+    t.rowv(&[
+        "Channels k".to_string(),
+        cfg.k().to_string(),
+        "parallel residue lanes".to_string(),
+    ]);
+    t.rowv(&[
+        "Exponent width w_f".to_string(),
+        cfg.exponent_width.to_string(),
+        "scaling range".to_string(),
+    ]);
+    t.rowv(&[
+        "Threshold tau".to_string(),
+        format!("2^{}", cfg.tau_bits),
+        "normalization trigger".to_string(),
+    ]);
+    t.rowv(&[
+        "Scaling step s".to_string(),
+        cfg.scale_step.to_string(),
+        "hardware shifter granularity".to_string(),
+    ]);
+    t.rowv(&[
+        "FPGA target".to_string(),
+        "ZCU104 (ZU7EV) [modeled]".to_string(),
+        "analytical model, see DESIGN.md".to_string(),
+    ]);
+    t.rowv(&[
+        "Clock target".to_string(),
+        format!("{:.0} MHz", cfg.clock_mhz),
+        format!(
+            "achieved Fmax (model): {:.0} MHz",
+            timing::fmax_mhz(FormatArch::Hrfna, cfg)
+        ),
+    ]);
+    t
+}
+
+/// One row of the iso-throughput resource comparison.
+#[derive(Clone, Debug)]
+pub struct IsoThroughputRow {
+    pub format: FormatArch,
+    pub units_needed: f64,
+    pub resources: Resources,
+    pub timing: WorkloadTiming,
+}
+
+/// Resource comparison at *matched workload throughput*: how much fabric
+/// does each format spend to sustain the throughput HRFNA reaches with one
+/// MAC unit on `kind`? (The paper's LUT-reduction headline is this
+/// comparison: slower formats must replicate units to keep up.)
+pub fn iso_throughput_comparison(
+    cfg: &HrfnaConfig,
+    kind: WorkloadKind,
+    norm_events: u64,
+) -> Vec<IsoThroughputRow> {
+    let formats = [
+        FormatArch::Hrfna,
+        FormatArch::Fp32,
+        FormatArch::Bfp,
+        FormatArch::Fixed,
+    ];
+    let h_t = model_workload(FormatArch::Hrfna, kind, cfg, norm_events);
+    formats
+        .iter()
+        .map(|&fmt| {
+            let t = model_workload(fmt, kind, cfg, if fmt == FormatArch::Hrfna { norm_events } else { 0 });
+            let units = (h_t.throughput_mops / t.throughput_mops).max(1.0);
+            IsoThroughputRow {
+                format: fmt,
+                units_needed: units,
+                resources: mac_unit(fmt, cfg, 16).times(units),
+                timing: t,
+            }
+        })
+        .collect()
+}
+
+/// LUT reduction of HRFNA vs FP32 at iso-throughput (the 38–55% claim).
+pub fn lut_reduction_vs_fp32(cfg: &HrfnaConfig, kind: WorkloadKind, norm_events: u64) -> f64 {
+    let rows = iso_throughput_comparison(cfg, kind, norm_events);
+    let h = rows.iter().find(|r| r.format == FormatArch::Hrfna).unwrap();
+    let f = rows.iter().find(|r| r.format == FormatArch::Fp32).unwrap();
+    1.0 - h.resources.lut / f.resources.lut
+}
+
+/// Render the iso-throughput comparison as a table.
+pub fn resource_table(cfg: &HrfnaConfig, kind: WorkloadKind, norm_events: u64) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "Iso-throughput resources for {} (matched to HRFNA)",
+            kind.label()
+        ),
+        &["Format", "Units", "LUT", "FF", "DSP", "BRAM", "Fmax MHz", "II"],
+    );
+    for row in iso_throughput_comparison(cfg, kind, norm_events) {
+        t.rowv(&[
+            row.format.name().to_string(),
+            format!("{:.2}", row.units_needed),
+            eng(row.resources.lut),
+            eng(row.resources.ff),
+            eng(row.resources.dsp),
+            eng(row.resources.bram),
+            format!("{:.0}", row.timing.fmax_mhz),
+            format!("{:.2}", row.timing.effective_ii),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> HrfnaConfig {
+        HrfnaConfig::paper_default()
+    }
+
+    #[test]
+    fn table2_has_all_parameters() {
+        let t = table2(&cfg());
+        let s = t.render();
+        for needle in ["Modulus set", "tau", "Scaling step", "ZCU104", "Fmax"] {
+            assert!(s.contains(needle), "missing {needle}");
+        }
+    }
+
+    #[test]
+    fn lut_reduction_in_paper_band_dot() {
+        // Paper: 38–55% LUT reduction vs FP32.
+        let r = lut_reduction_vs_fp32(&cfg(), WorkloadKind::Dot { n: 65536 }, 16);
+        assert!((0.30..=0.60).contains(&r), "lut reduction={r}");
+    }
+
+    #[test]
+    fn iso_comparison_has_four_formats() {
+        let rows = iso_throughput_comparison(&cfg(), WorkloadKind::Dot { n: 4096 }, 1);
+        assert_eq!(rows.len(), 4);
+        let h = &rows[0];
+        assert_eq!(h.format, FormatArch::Hrfna);
+        assert!((h.units_needed - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fp32_needs_more_units_at_iso_throughput() {
+        let rows = iso_throughput_comparison(&cfg(), WorkloadKind::Dot { n: 65536 }, 16);
+        let f = rows.iter().find(|r| r.format == FormatArch::Fp32).unwrap();
+        assert!(f.units_needed > 2.0, "units={}", f.units_needed);
+    }
+}

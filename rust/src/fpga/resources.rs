@@ -1,0 +1,305 @@
+//! FPGA resource cost model (UltraScale+ ZU7EV class).
+//!
+//! Cost constants are calibrated to published operator footprints:
+//!
+//! * IEEE-754 FP32 adder (fabric, DSP-free, fully pipelined): ≈ 430 LUT /
+//!   520 FF — dominated by the alignment and normalization barrel shifters
+//!   plus round logic (Xilinx Floating-Point Operator–class figures).
+//! * FP32 multiplier: ≈ 130 LUT / 190 FF / 3 DSP48E2 (24×24 via 27×18
+//!   tiles).
+//! * w-bit modular adder: add + conditional subtract + mux ≈ 2.5·w LUT,
+//!   2·w FF — short carry chains, no DSP (paper §VI-B).
+//! * w-bit modular multiplier (w ≤ 16): 1 DSP for the product, Barrett
+//!   reduction with precomputed constants = 2 constant multipliers that
+//!   map to 1 DSP + ≈ 3·w LUT of correction/conditional-subtract logic
+//!   (paper §VI-B "precomputed constants and structured reduction").
+//! * FP comparator (interval path): exponent+mantissa compare ≈ 60 LUT.
+//!
+//! The absolute constants matter less than their *ratios*: FP32's barrel
+//! shifters and rounding are LUT-heavy, residue channels are DSP+wire —
+//! that ratio is what produces the paper's 38–55% LUT reduction at
+//! iso-throughput.
+
+use crate::config::HrfnaConfig;
+
+/// Resource vector: LUTs, flip-flops, DSP48 slices, BRAM36 blocks.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Resources {
+    pub lut: f64,
+    pub ff: f64,
+    pub dsp: f64,
+    pub bram: f64,
+}
+
+impl Resources {
+    /// Component-wise sum.
+    pub fn plus(&self, o: &Resources) -> Resources {
+        Resources {
+            lut: self.lut + o.lut,
+            ff: self.ff + o.ff,
+            dsp: self.dsp + o.dsp,
+            bram: self.bram + o.bram,
+        }
+    }
+
+    /// Scale all components.
+    pub fn times(&self, k: f64) -> Resources {
+        Resources {
+            lut: self.lut * k,
+            ff: self.ff * k,
+            dsp: self.dsp * k,
+            bram: self.bram * k,
+        }
+    }
+
+    /// "Equivalent LUT" scalarization for quick comparisons: a DSP48E2
+    /// occupies silicon comparable to ≈ 60 LUT+FF pairs, a BRAM36 ≈ 180.
+    pub fn lut_equivalent(&self) -> f64 {
+        self.lut + 0.5 * self.ff + 60.0 * self.dsp + 180.0 * self.bram
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Primitive unit costs
+// ---------------------------------------------------------------------------
+
+/// w-bit modular adder (add, conditional subtract, select).
+pub fn modular_adder(w: u32) -> Resources {
+    Resources {
+        lut: 2.5 * w as f64,
+        ff: 2.0 * w as f64,
+        dsp: 0.0,
+        bram: 0.0,
+    }
+}
+
+/// w-bit modular multiplier with Barrett reduction (paper §VI-B). One
+/// DSP48E2 computes the operand product; the Barrett *constant* multiplies
+/// (by µ and m) fold into the DSP pre-adder/ALU cascade and a small LUT
+/// correction network — constant-coefficient multiplier folding is standard
+/// RNS-on-FPGA practice and is what §VI-B's "precomputed constants and
+/// structured reduction logic chosen to minimize pipeline depth" describes.
+pub fn modular_multiplier(w: u32) -> Resources {
+    assert!(w <= 27, "single-DSP tile model only valid to 27 bits");
+    Resources {
+        lut: 2.0 * w as f64 + 12.0,
+        ff: 3.0 * w as f64,
+        dsp: 1.0,
+        bram: 0.0,
+    }
+}
+
+/// IEEE-754 FP32 adder, fabric implementation, fully pipelined.
+pub fn fp32_adder() -> Resources {
+    Resources {
+        lut: 430.0,
+        ff: 520.0,
+        dsp: 0.0,
+        bram: 0.0,
+    }
+}
+
+/// IEEE-754 FP32 multiplier (DSP-based mantissa product).
+pub fn fp32_multiplier() -> Resources {
+    Resources {
+        lut: 130.0,
+        ff: 190.0,
+        dsp: 3.0,
+        bram: 0.0,
+    }
+}
+
+/// BFP MAC lane: int mantissa multiply (1 DSP), alignment shifter, int
+/// add, plus the block machinery a real BFP core carries — per-block
+/// max-exponent scan, float↔block conversion and renormalization control
+/// (≈180 LUT / 90 FF amortized per lane).
+pub fn bfp_mac(mant_bits: u32) -> Resources {
+    Resources {
+        lut: 3.5 * mant_bits as f64 + 40.0 + 180.0,
+        ff: 3.0 * mant_bits as f64 + 90.0,
+        dsp: 1.0,
+        bram: 0.0,
+    }
+}
+
+/// FP32 reduction-loop overhead: the partial-sum interleave registers and
+/// final-reduction control needed to keep a deep FP adder busy in
+/// accumulation loops (see `pipeline::FP32_PARTIAL_SUMS`).
+pub fn fp32_reduction_overhead() -> Resources {
+    Resources {
+        lut: 50.0,
+        ff: 180.0,
+        dsp: 0.0,
+        bram: 0.0,
+    }
+}
+
+/// Fixed-point Qm.n MAC (DSP MACC mode).
+pub fn fixed_mac(total_bits: u32) -> Resources {
+    Resources {
+        lut: 1.0 * total_bits as f64 + 10.0,
+        ff: 1.5 * total_bits as f64,
+        dsp: 1.0,
+        bram: 0.0,
+    }
+}
+
+/// Floating-point comparator for the interval reduction tree (§III-E).
+pub fn fp_comparator() -> Resources {
+    Resources {
+        lut: 60.0,
+        ff: 40.0,
+        dsp: 0.0,
+        bram: 0.0,
+    }
+}
+
+/// Exponent pipeline slice: ω_f-bit add/compare + bookkeeping (§VI-C).
+pub fn exponent_pipe(omega_f: u32) -> Resources {
+    Resources {
+        lut: 1.5 * omega_f as f64 + 8.0,
+        ff: 2.0 * omega_f as f64,
+        dsp: 0.0,
+        bram: 0.0,
+    }
+}
+
+/// CRT normalization engine (§VI-E): per-channel constant multipliers
+/// (r_i · T_i), a k-deep wide adder tree over ~log2(M)+w bits, the mod-M
+/// correction, the power-of-two shifter and k re-encode reducers. Shared —
+/// off the main datapath.
+pub fn crt_engine(moduli: &[u64]) -> Resources {
+    let k = moduli.len() as f64;
+    let w: f64 = moduli
+        .iter()
+        .map(|&m| (m as f64).log2().ceil())
+        .fold(0.0, f64::max);
+    let m_bits: f64 = moduli.iter().map(|&m| (m as f64).log2()).sum();
+    let wide = m_bits + w; // accumulator width of the CRT sum
+    Resources {
+        // k constant mults (2 DSP each via tiles), adder tree + mod-M
+        // correction + shifter in fabric, k Barrett re-encoders.
+        lut: k * (2.0 * w) + 3.0 * wide + 2.0 * wide + k * (3.0 * w + 12.0),
+        ff: 2.0 * (k * w + wide),
+        dsp: 2.0 * k + 2.0 * k, // reconstruction + re-encode constant mults
+        bram: 1.0,              // CRT constant table
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-format MAC-unit architectures
+// ---------------------------------------------------------------------------
+
+/// Formats the architecture model can cost.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FormatArch {
+    Hrfna,
+    Fp32,
+    Bfp,
+    Fixed,
+}
+
+impl FormatArch {
+    /// Table label.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FormatArch::Hrfna => "HRFNA",
+            FormatArch::Fp32 => "FP32",
+            FormatArch::Bfp => "BFP",
+            FormatArch::Fixed => "Fixed",
+        }
+    }
+}
+
+/// Resources for one fully pipelined MAC unit of the given format.
+///
+/// For HRFNA this is the paper's Fig. 2 arrangement: k parallel channel
+/// MACs (modmul + modadd), the exponent pipe, and a 1/`share` amortized
+/// slice of the interval-evaluation path and CRT normalization engine
+/// (the engine is shared by `share` MAC units since normalization is rare,
+/// §VII-E).
+pub fn mac_unit(format: FormatArch, cfg: &HrfnaConfig, share: u32) -> Resources {
+    match format {
+        FormatArch::Hrfna => {
+            let mut total = Resources::default();
+            for &m in &cfg.moduli {
+                let w = (m as f64).log2().ceil() as u32;
+                total = total
+                    .plus(&modular_multiplier(w))
+                    .plus(&modular_adder(w));
+            }
+            total = total.plus(&exponent_pipe(cfg.exponent_width));
+            // Interval path: one comparator + estimate logic per unit.
+            total = total.plus(&fp_comparator());
+            // Shared normalization engine, amortized.
+            total.plus(&crt_engine(&cfg.moduli).times(1.0 / share.max(1) as f64))
+        }
+        FormatArch::Fp32 => fp32_adder()
+            .plus(&fp32_multiplier())
+            .plus(&fp32_reduction_overhead()),
+        FormatArch::Bfp => bfp_mac(24),
+        FormatArch::Fixed => fixed_mac(32),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> HrfnaConfig {
+        HrfnaConfig::paper_default()
+    }
+
+    #[test]
+    fn primitive_costs_positive_and_ordered() {
+        let ma = modular_adder(16);
+        let mm = modular_multiplier(16);
+        assert!(ma.lut > 0.0 && ma.dsp == 0.0);
+        assert!(mm.dsp == 1.0);
+        assert!(fp32_adder().lut > 5.0 * ma.lut, "FP32 add must dwarf modadd");
+    }
+
+    #[test]
+    fn hrfna_mac_unit_composition() {
+        let c = cfg();
+        let r = mac_unit(FormatArch::Hrfna, &c, 16);
+        // 8 channels × 1 DSP + amortized engine.
+        assert!(r.dsp >= 8.0 && r.dsp < 13.0, "dsp={}", r.dsp);
+        assert!(r.lut > 500.0 && r.lut < 2000.0, "lut={}", r.lut);
+    }
+
+    #[test]
+    fn fp32_mac_is_lut_heavy() {
+        let c = cfg();
+        let h = mac_unit(FormatArch::Hrfna, &c, 16);
+        let f = mac_unit(FormatArch::Fp32, &c, 16);
+        // Per-unit: FP32 burns fewer DSPs but the HRFNA channel array uses
+        // barely more LUT than a single FP32 adder's barrel shifters.
+        assert!(f.lut > 500.0);
+        assert!(h.lut / f.lut < 2.0);
+    }
+
+    #[test]
+    fn engine_amortization_shrinks_with_share() {
+        let c = cfg();
+        let solo = mac_unit(FormatArch::Hrfna, &c, 1);
+        let shared = mac_unit(FormatArch::Hrfna, &c, 32);
+        assert!(shared.lut < solo.lut);
+        assert!(shared.dsp < solo.dsp);
+    }
+
+    #[test]
+    fn resources_algebra() {
+        let a = Resources { lut: 1.0, ff: 2.0, dsp: 3.0, bram: 4.0 };
+        let b = a.times(2.0).plus(&a);
+        assert_eq!(b.lut, 3.0);
+        assert_eq!(b.dsp, 9.0);
+        assert!(a.lut_equivalent() > a.lut);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wide_modmul_rejected() {
+        modular_multiplier(30);
+    }
+}

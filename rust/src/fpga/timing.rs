@@ -1,0 +1,113 @@
+//! Achievable-Fmax model per pipeline class (UltraScale+ speedgrade-2).
+//!
+//! Calibration anchors (post-route, realistic rather than datasheet-best):
+//! * Short (≤ 20-bit) carry chains + one LUT level retime to ≈ 2.0–2.2 ns
+//!   → ≈ 480 MHz. This is the residue channel pipeline: the paper's
+//!   "carry-free, short carry chains" argument (§VI-B).
+//! * Vendor FP32 FMA pipelines on UltraScale+ close around 280–320 MHz in
+//!   realistic congested designs (alignment/normalization shifter stages
+//!   dominate) → 285 MHz.
+//! * BFP integer MAC with alignment shifter: ≈ 380 MHz.
+//! * Plain fixed-point DSP MACC: ≈ 520 MHz (DSP48E2 f_max bound).
+//!
+//! The model exposes *ratios* through one consistent table; per-design
+//! scaling (congestion, fanout of the modulus constants, k) applies small
+//! derates so parameter sweeps behave plausibly.
+
+use super::resources::FormatArch;
+use crate::config::HrfnaConfig;
+
+/// Fmax in MHz for one MAC pipeline of `format` under config `cfg`.
+pub fn fmax_mhz(format: FormatArch, cfg: &HrfnaConfig) -> f64 {
+    match format {
+        FormatArch::Hrfna => {
+            // Base 480 MHz for 16-bit channels; wider channels stretch the
+            // Barrett correction carry chain; many channels add routing
+            // pressure (≈1%/channel past 8).
+            let w = cfg
+                .moduli
+                .iter()
+                .map(|&m| (m as f64).log2().ceil())
+                .fold(0.0, f64::max);
+            let width_derate = 1.0 + 0.02 * (w - 16.0).max(0.0);
+            let k_derate = 1.0 + 0.01 * (cfg.moduli.len() as f64 - 8.0).max(0.0);
+            470.0 / (width_derate * k_derate)
+        }
+        FormatArch::Fp32 => 260.0,
+        FormatArch::Bfp => 380.0,
+        FormatArch::Fixed => 520.0,
+    }
+}
+
+/// Pipeline depth (cycles of latency) for one MAC of the format. Loop-
+/// carried accumulation cares about the *adder* segment only.
+pub fn mac_latency_cycles(format: FormatArch) -> u32 {
+    match format {
+        FormatArch::Hrfna => 6, // modmul 4 + modadd 1 + channel skew reg 1
+        FormatArch::Fp32 => 11, // mul 3 + align/add/normalize/round 8
+        FormatArch::Bfp => 5,
+        FormatArch::Fixed => 3,
+    }
+}
+
+/// Latency of the *accumulation* (add) segment alone — the loop-carried
+/// dependency bound for single-accumulator reduction loops (§VII-B: FP32
+/// dot products stall on this; HRFNA's 1-cycle modadd does not).
+pub fn accumulate_latency_cycles(format: FormatArch) -> u32 {
+    match format {
+        FormatArch::Hrfna => 1, // carry-free modadd closes in one cycle
+        FormatArch::Fp32 => 8,  // align + add + normalize + round
+        FormatArch::Bfp => 2,   // int add + conditional renorm flag
+        FormatArch::Fixed => 1,
+    }
+}
+
+/// CRT normalization engine latency (cycles): reconstruction adder tree +
+/// shift + re-encode (§VI-E). Invoked rarely; off the critical path.
+pub fn normalization_latency_cycles(cfg: &HrfnaConfig) -> u32 {
+    // log2(k) tree levels × 2 + constant-mult 4 + shift 2 + re-encode 4.
+    let k = cfg.moduli.len() as f64;
+    (2.0 * k.log2().ceil() + 10.0) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> HrfnaConfig {
+        HrfnaConfig::paper_default()
+    }
+
+    #[test]
+    fn hrfna_clocks_faster_than_fp32() {
+        let c = cfg();
+        assert!(fmax_mhz(FormatArch::Hrfna, &c) > 1.5 * fmax_mhz(FormatArch::Fp32, &c));
+    }
+
+    #[test]
+    fn achieves_table2_target() {
+        // Table II target clock is 300 MHz: HRFNA must close it.
+        assert!(fmax_mhz(FormatArch::Hrfna, &cfg()) >= 300.0);
+    }
+
+    #[test]
+    fn wider_moduli_derate_fmax() {
+        let base = cfg();
+        let mut wide = cfg();
+        wide.moduli = crate::rns::moduli::generate_prime_moduli(8, 24);
+        wide.tau_bits = 160;
+        assert!(fmax_mhz(FormatArch::Hrfna, &wide) < fmax_mhz(FormatArch::Hrfna, &base));
+    }
+
+    #[test]
+    fn accumulate_latency_is_the_fp32_weakness() {
+        assert_eq!(accumulate_latency_cycles(FormatArch::Hrfna), 1);
+        assert!(accumulate_latency_cycles(FormatArch::Fp32) >= 6);
+    }
+
+    #[test]
+    fn norm_latency_reasonable() {
+        let l = normalization_latency_cycles(&cfg());
+        assert!(l >= 10 && l <= 40, "latency={l}");
+    }
+}

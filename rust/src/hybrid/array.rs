@@ -1,0 +1,174 @@
+//! Arrays of HRFNA values with deferred, interval-driven selection —
+//! the paper's Fig. 1a machinery: residue vectors stay untouched in the
+//! "residue plane"; a parallel array of interval evaluations (each tagged
+//! with its `idx`) feeds a comparator reduction tree; only the *selected*
+//! element is ever reconstructed or normalized.
+
+use super::context::HrfnaContext;
+use super::interval::{argmax_magnitude, Interval};
+use super::number::Hrfna;
+
+/// An array of hybrid values with the Fig. 1a control-plane view.
+#[derive(Clone, Debug, Default)]
+pub struct HrfnaArray {
+    pub items: Vec<Hrfna>,
+}
+
+impl HrfnaArray {
+    /// Encode a slice of reals.
+    pub fn encode(xs: &[f64], ctx: &HrfnaContext) -> HrfnaArray {
+        HrfnaArray {
+            items: xs.iter().map(|&x| Hrfna::encode(x, ctx)).collect(),
+        }
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// The control-plane view: interval evaluations of Φ-magnitude
+    /// (N-interval positioned by the exponent), tagged by index.
+    /// No residue data is touched (Fig. 1a left → right hand-off).
+    pub fn magnitude_intervals(&self) -> Vec<Interval> {
+        self.items
+            .iter()
+            .map(|h| {
+                // Position the N-interval at the value scale: scale by 2^f
+                // conservatively (f64 suffices for a control estimate).
+                let k = super::number::pow2(h.f);
+                Interval::new(
+                    (h.iv.lo * k).min(h.iv.hi * k),
+                    (h.iv.lo * k).max(h.iv.hi * k),
+                )
+            })
+            .collect()
+    }
+
+    /// Reduction-tree selection of the dominant-magnitude element
+    /// (Fig. 1a right side): returns `idx` — comparisons use only the
+    /// floating interval evaluations.
+    pub fn argmax_magnitude(&self) -> Option<usize> {
+        argmax_magnitude(&self.magnitude_intervals())
+    }
+
+    /// Fig. 1a normalization policy: reconstruct/normalize *only the
+    /// selected element* when its magnitude bound crosses τ. Returns the
+    /// selected index if a normalization was performed.
+    pub fn normalize_dominant(&mut self, ctx: &HrfnaContext) -> Option<usize> {
+        let idx = self.argmax_magnitude()?;
+        let h = &mut self.items[idx];
+        if h.iv.abs_hi() >= super::number::pow2(ctx.cfg.tau_bits as i32) {
+            h.normalize_to_sig(ctx, false);
+            Some(idx)
+        } else {
+            None
+        }
+    }
+
+    /// Elementwise product with another array (carry-free, parallel).
+    pub fn mul(&self, other: &HrfnaArray, ctx: &HrfnaContext) -> HrfnaArray {
+        assert_eq!(self.len(), other.len());
+        HrfnaArray {
+            items: self
+                .items
+                .iter()
+                .zip(&other.items)
+                .map(|(a, b)| a.mul(b, ctx))
+                .collect(),
+        }
+    }
+
+    /// Sum via exponent-coherent accumulation (Alg. 1 semantics).
+    pub fn sum(&self, ctx: &HrfnaContext) -> Hrfna {
+        let mut acc = Hrfna::zero(ctx, 0);
+        let one = Hrfna::encode(1.0, ctx);
+        for h in &self.items {
+            acc.mac_assign(h, &one, ctx);
+        }
+        acc
+    }
+
+    /// Decode everything (test/inspection path; one CRT per element).
+    pub fn decode(&self, ctx: &HrfnaContext) -> Vec<f64> {
+        self.items.iter().map(|h| h.decode(ctx)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> HrfnaContext {
+        HrfnaContext::paper_default()
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let c = ctx();
+        let xs = [1.5, -2.25, 1e10, -1e-10, 0.0];
+        let arr = HrfnaArray::encode(&xs, &c);
+        let back = arr.decode(&c);
+        for (a, b) in xs.iter().zip(&back) {
+            assert!((a - b).abs() <= a.abs() * 1e-8 + 1e-300, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn argmax_finds_dominant_without_reconstruction() {
+        let c = ctx();
+        let before = c.snapshot().reconstructions;
+        let arr = HrfnaArray::encode(&[3.0, -5e6, 10.0, 4999.0], &c);
+        assert_eq!(arr.argmax_magnitude(), Some(1));
+        // Selection must not have reconstructed anything (Fig. 1a point).
+        assert_eq!(c.snapshot().reconstructions, before);
+    }
+
+    #[test]
+    fn argmax_respects_exponent_scale() {
+        let c = ctx();
+        // Same significand, different exponents: the interval view must
+        // weigh by 2^f.
+        let mut a = Hrfna::encode(1.0, &c);
+        let b = Hrfna::encode(1.0, &c);
+        a.f += 10; // a = 1024
+        let arr = HrfnaArray { items: vec![b, a] };
+        assert_eq!(arr.argmax_magnitude(), Some(1));
+    }
+
+    #[test]
+    fn normalize_dominant_only_touches_selected() {
+        let cfg = crate::config::HrfnaConfig {
+            tau_bits: 40,
+            ..crate::config::HrfnaConfig::paper_default()
+        };
+        let c = HrfnaContext::new(cfg);
+        // Build one oversized element among small ones.
+        let big = Hrfna::from_signed_int(1 << 20, 0, &c)
+            .mul_raw(&Hrfna::from_signed_int(1 << 25, 0, &c), &c);
+        let small = Hrfna::encode(2.0, &c);
+        let mut arr = HrfnaArray {
+            items: vec![small.clone(), big, small],
+        };
+        let idx = arr.normalize_dominant(&c);
+        assert_eq!(idx, Some(1));
+        assert!(arr.items[1].magnitude_bits() <= c.cfg.sig_bits);
+        // Calling again: dominant no longer over threshold.
+        assert_eq!(arr.normalize_dominant(&c), None);
+    }
+
+    #[test]
+    fn elementwise_mul_and_sum() {
+        let c = ctx();
+        let a = HrfnaArray::encode(&[1.0, 2.0, 3.0], &c);
+        let b = HrfnaArray::encode(&[4.0, 5.0, 6.0], &c);
+        let p = a.mul(&b, &c);
+        let s = p.sum(&c).decode(&c);
+        assert!((s - 32.0).abs() < 1e-6, "s={s}");
+    }
+}

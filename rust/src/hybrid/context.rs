@@ -1,0 +1,232 @@
+//! Shared HRFNA context: configuration, precomputed CRT state, the
+//! normalization threshold, and lock-free operation counters.
+//!
+//! The context is the software analogue of the synthesized parameter set in
+//! paper Table II: modulus set, exponent width, threshold τ, scaling step s.
+//! Counters mirror the event monitors a real deployment would expose
+//! (§VII-E measures normalization frequency with exactly these).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::bigint::BigUint;
+use crate::config::HrfnaConfig;
+use crate::rns::{Barrett, CrtContext};
+
+/// Lock-free event counters (relaxed; they are metrics, not synchronization).
+#[derive(Debug, Default)]
+pub struct OpCounters {
+    /// Hybrid multiplications (Definition 2).
+    pub muls: AtomicU64,
+    /// Residue-domain additions (post-synchronization).
+    pub adds: AtomicU64,
+    /// Exponent synchronization events (§IV-B) that required scaling.
+    pub syncs: AtomicU64,
+    /// Threshold-triggered normalization events (Definition 4).
+    pub norms: AtomicU64,
+    /// Full CRT reconstructions (each normalization plus explicit decodes).
+    pub reconstructions: AtomicU64,
+    /// Pre-multiplication guard normalizations (overflow headroom, §III-C).
+    pub guard_norms: AtomicU64,
+}
+
+/// A plain-data snapshot of the counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OpSnapshot {
+    pub muls: u64,
+    pub adds: u64,
+    pub syncs: u64,
+    pub norms: u64,
+    pub reconstructions: u64,
+    pub guard_norms: u64,
+}
+
+impl OpSnapshot {
+    /// Total arithmetic operations (muls + adds).
+    pub fn arithmetic_ops(&self) -> u64 {
+        self.muls + self.adds
+    }
+
+    /// Normalization events per arithmetic operation (§VII-E metric).
+    pub fn norm_rate(&self) -> f64 {
+        let ops = self.arithmetic_ops();
+        if ops == 0 {
+            0.0
+        } else {
+            (self.norms + self.guard_norms) as f64 / ops as f64
+        }
+    }
+
+    /// Difference of two snapshots (self - earlier).
+    pub fn since(&self, earlier: &OpSnapshot) -> OpSnapshot {
+        OpSnapshot {
+            muls: self.muls - earlier.muls,
+            adds: self.adds - earlier.adds,
+            syncs: self.syncs - earlier.syncs,
+            norms: self.norms - earlier.norms,
+            reconstructions: self.reconstructions - earlier.reconstructions,
+            guard_norms: self.guard_norms - earlier.guard_norms,
+        }
+    }
+}
+
+/// Shared immutable HRFNA state + counters. Create once, pass by reference.
+#[derive(Debug)]
+pub struct HrfnaContext {
+    pub cfg: HrfnaConfig,
+    pub crt: CrtContext,
+    /// Normalization threshold τ = 2^tau_bits (Definition 3: τ < M).
+    pub tau: BigUint,
+    /// M/2 — boundary of the signed (M-complement) value range.
+    pub half_m: BigUint,
+    /// log2(M), cached.
+    pub m_bits: f64,
+    /// §Perf: per-channel table of `2^d mod m_i` for d < POW2_TABLE_LEN —
+    /// exponent synchronization scales residues by 2^Δ on every mismatch,
+    /// and a table lookup replaces a per-channel pow_mod ladder.
+    pow2_table: Vec<Vec<u64>>,
+    pub counters: OpCounters,
+}
+
+/// Table depth: Δ beyond this falls back to pow_mod (Δ is bounded by the
+/// exponent spread, ~2·1100 for f64-ranged encodes; 4096 covers all of it).
+const POW2_TABLE_LEN: usize = 4096;
+
+impl HrfnaContext {
+    /// Build a context from a validated config (panics on invalid config —
+    /// construction is setup-time, not request-path).
+    pub fn new(cfg: HrfnaConfig) -> HrfnaContext {
+        cfg.validate().expect("invalid HrfnaConfig");
+        let crt = CrtContext::new(&cfg.moduli);
+        let tau = BigUint::one().shl(cfg.tau_bits);
+        let half_m = crt.big_m.shr(1);
+        assert!(tau < crt.big_m, "Definition 3 requires tau < M");
+        let m_bits = cfg.m_bits();
+        let pow2_table = cfg
+            .moduli
+            .iter()
+            .map(|&m| {
+                let mut row = Vec::with_capacity(POW2_TABLE_LEN);
+                let mut v = 1u64 % m;
+                for _ in 0..POW2_TABLE_LEN {
+                    row.push(v);
+                    v = (v * 2) % m;
+                }
+                row
+            })
+            .collect();
+        HrfnaContext {
+            cfg,
+            crt,
+            tau,
+            half_m,
+            m_bits,
+            pow2_table,
+            counters: OpCounters::default(),
+        }
+    }
+
+    /// `2^delta mod m_i` (table lookup; pow_mod fallback beyond the table).
+    #[inline]
+    pub fn pow2_mod(&self, channel: usize, delta: u32) -> u64 {
+        match self.pow2_table[channel].get(delta as usize) {
+            Some(&v) => v,
+            None => crate::rns::moduli::pow_mod(2, delta as u64, self.cfg.moduli[channel]),
+        }
+    }
+
+    /// Context with the paper's default parameters.
+    pub fn paper_default() -> HrfnaContext {
+        HrfnaContext::new(HrfnaConfig::paper_default())
+    }
+
+    /// Barrett contexts for the channelwise ops.
+    #[inline]
+    pub fn barrett(&self) -> &[Barrett] {
+        &self.crt.barrett
+    }
+
+    /// Number of residue channels.
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.cfg.moduli.len()
+    }
+
+    /// Snapshot the counters.
+    pub fn snapshot(&self) -> OpSnapshot {
+        let c = &self.counters;
+        OpSnapshot {
+            muls: c.muls.load(Ordering::Relaxed),
+            adds: c.adds.load(Ordering::Relaxed),
+            syncs: c.syncs.load(Ordering::Relaxed),
+            norms: c.norms.load(Ordering::Relaxed),
+            reconstructions: c.reconstructions.load(Ordering::Relaxed),
+            guard_norms: c.guard_norms.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Reset all counters (benchmark setup).
+    pub fn reset_counters(&self) {
+        let c = &self.counters;
+        for a in [
+            &c.muls,
+            &c.adds,
+            &c.syncs,
+            &c.norms,
+            &c.reconstructions,
+            &c.guard_norms,
+        ] {
+            a.store(0, Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    pub(crate) fn count(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_context() {
+        let ctx = HrfnaContext::paper_default();
+        assert_eq!(ctx.k(), 8);
+        assert!(ctx.tau < ctx.crt.big_m);
+        assert!(ctx.half_m < ctx.crt.big_m);
+        assert!(ctx.m_bits > 127.0);
+    }
+
+    #[test]
+    fn counters_snapshot_and_reset() {
+        let ctx = HrfnaContext::paper_default();
+        HrfnaContext::count(&ctx.counters.muls);
+        HrfnaContext::count(&ctx.counters.muls);
+        HrfnaContext::count(&ctx.counters.norms);
+        let s = ctx.snapshot();
+        assert_eq!(s.muls, 2);
+        assert_eq!(s.norms, 1);
+        assert_eq!(s.arithmetic_ops(), 2);
+        assert!(s.norm_rate() > 0.0);
+        ctx.reset_counters();
+        assert_eq!(ctx.snapshot(), OpSnapshot::default());
+    }
+
+    #[test]
+    fn snapshot_since() {
+        let ctx = HrfnaContext::paper_default();
+        let before = ctx.snapshot();
+        HrfnaContext::count(&ctx.counters.adds);
+        let after = ctx.snapshot();
+        assert_eq!(after.since(&before).adds, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid HrfnaConfig")]
+    fn invalid_config_panics() {
+        let mut cfg = HrfnaConfig::paper_default();
+        cfg.moduli = vec![4, 6];
+        HrfnaContext::new(cfg);
+    }
+}

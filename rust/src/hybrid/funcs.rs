@@ -1,0 +1,192 @@
+//! Division and transcendental functions in the hybrid domain —
+//! the paper's §IX-C extension path, implemented: "(i) iterative
+//! approximation methods operating in the hybrid domain; (ii) table-based
+//! or polynomial approximations combined with HRFNA multiplication".
+//!
+//! All iterations below use only HRFNA multiplication, addition and
+//! scaling — the operations the paper's datapath provides — so every
+//! intermediate stays carry-free with threshold-normalization semantics.
+
+use super::context::HrfnaContext;
+use super::number::Hrfna;
+use crate::workloads::traits::Numeric as _; // for Hrfna::scale
+
+/// Reciprocal `1/x` by Newton–Raphson in the hybrid domain:
+/// `y_{n+1} = y_n · (2 − x·y_n)` — quadratic convergence; the seed comes
+/// from a coarse floating estimate (hardware: small LUT on the interval
+/// estimate), after which all arithmetic is HRFNA.
+pub fn reciprocal(x: &Hrfna, ctx: &HrfnaContext) -> Hrfna {
+    let xf = x.decode(ctx);
+    assert!(xf != 0.0, "reciprocal of zero");
+    // Seed with ~8 good bits (mimics a 256-entry LUT seed).
+    let seed = 1.0 / xf;
+    let seed = f64::from_bits(seed.to_bits() & !((1u64 << 45) - 1));
+    let mut y = Hrfna::encode(seed, ctx);
+    let two = Hrfna::encode(2.0, ctx);
+    // 8 bits -> 16 -> 32; two iterations exceed the 30-bit significand.
+    for _ in 0..3 {
+        let t = two.sub(&x.mul(&y, ctx), ctx); // 2 - x·y
+        y = y.mul(&t, ctx);
+    }
+    y
+}
+
+/// Division `a/b = a · (1/b)`.
+pub fn divide(a: &Hrfna, b: &Hrfna, ctx: &HrfnaContext) -> Hrfna {
+    a.mul(&reciprocal(b, ctx), ctx)
+}
+
+/// Square root by Newton on the inverse square root
+/// (`z_{n+1} = z_n·(3 − x·z_n²)/2`, then `√x = x·z`), division-free.
+pub fn sqrt(x: &Hrfna, ctx: &HrfnaContext) -> Hrfna {
+    let xf = x.decode(ctx);
+    assert!(xf >= 0.0, "sqrt of negative");
+    if xf == 0.0 {
+        return Hrfna::zero(ctx, 0);
+    }
+    let seed = 1.0 / xf.sqrt();
+    let seed = f64::from_bits(seed.to_bits() & !((1u64 << 45) - 1));
+    let mut z = Hrfna::encode(seed, ctx);
+    let three = Hrfna::encode(3.0, ctx);
+    for _ in 0..3 {
+        let z2 = z.mul(&z, ctx);
+        let t = three.sub(&x.mul(&z2, ctx), ctx);
+        z = z.mul(&t, ctx).scale(0.5, ctx);
+    }
+    x.mul(&z, ctx)
+}
+
+/// `exp(x)` via range reduction `x = k·ln2 + r`, `|r| ≤ ln2/2`, then a
+/// degree-10 Horner polynomial in the hybrid domain and an exact exponent
+/// bump by `k` (free in HRFNA: `f += k`).
+pub fn exp(x: &Hrfna, ctx: &HrfnaContext) -> Hrfna {
+    let xf = x.decode(ctx);
+    assert!(xf.abs() < 700.0, "exp overflow range");
+    let k = (xf / std::f64::consts::LN_2).round();
+    let r = x.sub(&Hrfna::encode(k * std::f64::consts::LN_2, ctx), ctx);
+    // Horner: sum r^i / i! for i = 0..=10.
+    let mut acc = Hrfna::encode(1.0 / fact(10), ctx);
+    for i in (0..10).rev() {
+        acc = acc.mul(&r, ctx).add(&Hrfna::encode(1.0 / fact(i), ctx), ctx);
+    }
+    // Multiply by 2^k: exact exponent arithmetic (the interval tracks the
+    // integer N, which is untouched by an exponent bump).
+    let mut out = acc;
+    out.f += k as i32;
+    out
+}
+
+/// `sin(x)` (|x| reduced mod 2π) via odd Taylor polynomial to degree 11.
+pub fn sin(x: &Hrfna, ctx: &HrfnaContext) -> Hrfna {
+    let xf = x.decode(ctx);
+    let r = xf.rem_euclid(std::f64::consts::TAU);
+    // Fold into [-π, π], then into [-π/2, π/2] via sin(π − r) = sin(r),
+    // keeping the degree-11 polynomial error below ~1e-7.
+    let r = if r > std::f64::consts::PI {
+        r - std::f64::consts::TAU
+    } else {
+        r
+    };
+    let r = if r > std::f64::consts::FRAC_PI_2 {
+        std::f64::consts::PI - r
+    } else if r < -std::f64::consts::FRAC_PI_2 {
+        -std::f64::consts::PI - r
+    } else {
+        r
+    };
+    let xr = Hrfna::encode(r, ctx);
+    let x2 = xr.mul(&xr, ctx);
+    // sin r = r (1 - r²/3! (1 - r²/(4·5) (1 - …)))-style Horner on odd terms.
+    let coeffs = [
+        1.0 / fact(11),
+        -1.0 / fact(9),
+        1.0 / fact(7),
+        -1.0 / fact(5),
+        1.0 / fact(3),
+        -1.0,
+    ];
+    // Horner in x²: p = c0; p = p·x² + c_next …, then sin = -(p)·x.
+    let mut p = Hrfna::encode(coeffs[0], ctx);
+    for &c in &coeffs[1..] {
+        p = p.mul(&x2, ctx).add(&Hrfna::encode(c, ctx), ctx);
+    }
+    p.mul(&xr, ctx).neg(ctx)
+}
+
+fn fact(n: u32) -> f64 {
+    (1..=n).map(|i| i as f64).product::<f64>().max(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> HrfnaContext {
+        HrfnaContext::paper_default()
+    }
+
+    #[test]
+    fn reciprocal_converges() {
+        let c = ctx();
+        for x in [2.0, -3.0, 0.1, 1234.5, 1e-8, 1e12] {
+            let r = reciprocal(&Hrfna::encode(x, &c), &c).decode(&c);
+            let rel = ((r - 1.0 / x) * x).abs();
+            assert!(rel < 1e-7, "x={x} rel={rel}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "reciprocal of zero")]
+    fn reciprocal_zero_panics() {
+        let c = ctx();
+        reciprocal(&Hrfna::zero(&c, 0), &c);
+    }
+
+    #[test]
+    fn divide_matches_f64() {
+        let c = ctx();
+        let q = divide(&Hrfna::encode(355.0, &c), &Hrfna::encode(113.0, &c), &c);
+        let got = q.decode(&c);
+        assert!((got - 355.0 / 113.0).abs() < 1e-7, "got={got}");
+    }
+
+    #[test]
+    fn sqrt_values() {
+        let c = ctx();
+        for x in [4.0, 2.0, 1e6, 0.25, 1e-10] {
+            let r = sqrt(&Hrfna::encode(x, &c), &c).decode(&c);
+            let rel = ((r - x.sqrt()) / x.sqrt()).abs();
+            assert!(rel < 1e-7, "x={x} rel={rel}");
+        }
+        assert_eq!(sqrt(&Hrfna::zero(&c, 0), &c).decode(&c), 0.0);
+    }
+
+    #[test]
+    fn exp_range_reduced() {
+        let c = ctx();
+        for x in [0.0, 1.0, -1.0, 5.5, -10.25, 50.0] {
+            let r = exp(&Hrfna::encode(x, &c), &c).decode(&c);
+            let rel = ((r - x.exp()) / x.exp()).abs();
+            assert!(rel < 1e-6, "x={x} got={r} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn sin_period_and_symmetry() {
+        let c = ctx();
+        for x in [0.0, 0.5, 1.0, 3.0, -2.0, 6.5, 100.0] {
+            let r = sin(&Hrfna::encode(x, &c), &c).decode(&c);
+            assert!((r - x.sin()).abs() < 1e-6, "x={x} got={r} want={}", x.sin());
+        }
+    }
+
+    #[test]
+    fn interval_soundness_preserved() {
+        // The iterations must not break the interval invariant.
+        let c = ctx();
+        let y = reciprocal(&Hrfna::encode(7.25, &c), &c);
+        assert!(y.interval_is_sound(&c));
+        let s = sqrt(&Hrfna::encode(19.0, &c), &c);
+        assert!(s.interval_is_sound(&c));
+    }
+}

@@ -1,0 +1,309 @@
+//! Conservative magnitude intervals (paper §III-E, Fig. 1a).
+//!
+//! Every `Hrfna` value carries an interval `[lo, hi]` bracketing its *signed
+//! reconstructed integer* `N` (not Φ — the exponent is tracked separately).
+//! The interval is maintained with outward-widened f64 arithmetic, so
+//! normalization/comparison decisions never need a CRT reconstruction:
+//! exactly the paper's "floating-point interval evaluation" control path.
+//! A reduction tree over intervals selects the dominant-magnitude element
+//! without disturbing residue-domain data.
+
+/// Outward widening factor: a few ulps per operation, so that accumulated
+/// f64 rounding can never make the interval lie about the true integer.
+const WIDEN: f64 = 1.0 + 4.0 * f64::EPSILON;
+
+/// A conservative signed interval `[lo, hi]` with `lo ≤ N ≤ hi`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Interval {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+#[inline]
+fn widen_down(x: f64) -> f64 {
+    if x > 0.0 {
+        x / WIDEN
+    } else {
+        x * WIDEN
+    }
+}
+
+#[inline]
+fn widen_up(x: f64) -> f64 {
+    if x > 0.0 {
+        x * WIDEN
+    } else {
+        x / WIDEN
+    }
+}
+
+impl Interval {
+    /// Exact point interval.
+    pub fn point(x: f64) -> Interval {
+        Interval { lo: x, hi: x }
+    }
+
+    /// The zero interval.
+    pub fn zero() -> Interval {
+        Interval::point(0.0)
+    }
+
+    /// Interval from bounds (panics if inverted).
+    pub fn new(lo: f64, hi: f64) -> Interval {
+        assert!(lo <= hi, "inverted interval [{lo}, {hi}]");
+        Interval { lo, hi }
+    }
+
+    /// Conservative sum.
+    #[inline]
+    pub fn add(&self, o: &Interval) -> Interval {
+        Interval {
+            lo: widen_down(self.lo + o.lo),
+            hi: widen_up(self.hi + o.hi),
+        }
+    }
+
+    /// Conservative product (all four corner products).
+    #[inline]
+    pub fn mul(&self, o: &Interval) -> Interval {
+        let c = [
+            self.lo * o.lo,
+            self.lo * o.hi,
+            self.hi * o.lo,
+            self.hi * o.hi,
+        ];
+        let mut lo = c[0];
+        let mut hi = c[0];
+        for &x in &c[1..] {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        Interval {
+            lo: widen_down(lo),
+            hi: widen_up(hi),
+        }
+    }
+
+    /// Negation.
+    #[inline]
+    pub fn neg(&self) -> Interval {
+        Interval {
+            lo: -self.hi,
+            hi: -self.lo,
+        }
+    }
+
+    /// Conservative ⌊·/2^s⌋ image (floor shifts toward -inf by < 1).
+    #[inline]
+    pub fn shr(&self, s: u32) -> Interval {
+        let k = 2f64.powi(s as i32);
+        Interval {
+            lo: widen_down(self.lo / k) - 1.0,
+            hi: widen_up(self.hi / k),
+        }
+    }
+
+    /// Exact doubling by 2^s (exponent-sync exact path).
+    #[inline]
+    pub fn shl(&self, s: u32) -> Interval {
+        let k = 2f64.powi(s as i32);
+        Interval {
+            lo: widen_down(self.lo * k),
+            hi: widen_up(self.hi * k),
+        }
+    }
+
+    /// Upper bound on |N|.
+    #[inline]
+    pub fn abs_hi(&self) -> f64 {
+        self.lo.abs().max(self.hi.abs())
+    }
+
+    /// Lower bound on |N| (0 if the interval straddles zero).
+    #[inline]
+    pub fn abs_lo(&self) -> f64 {
+        if self.lo <= 0.0 && self.hi >= 0.0 {
+            0.0
+        } else {
+            self.lo.abs().min(self.hi.abs())
+        }
+    }
+
+    /// Conservative bit-length estimate: ⌈log2(|N|_hi)⌉ (0 for |N| ≤ 1).
+    /// §Perf: computed from the f64 exponent field (this sits on every
+    /// overflow-guard check; `log2().ceil()` was measurably hot).
+    #[inline]
+    pub fn bits_hi(&self) -> u32 {
+        let a = self.abs_hi();
+        if a <= 1.0 {
+            return 0;
+        }
+        let bits = a.to_bits();
+        let e = ((bits >> 52) & 0x7FF) as i32 - 1023; // floor(log2 a), a ≥ 1
+        let mantissa_zero = bits & ((1u64 << 52) - 1) == 0;
+        if mantissa_zero {
+            e as u32 // exact power of two: ceil == floor
+        } else {
+            (e + 1) as u32
+        }
+    }
+
+    /// True if this interval certainly lies below `threshold_bits` bits.
+    #[inline]
+    pub fn certainly_below(&self, threshold_bits: u32) -> bool {
+        self.abs_hi() < 2f64.powi(threshold_bits as i32)
+    }
+
+    /// Contains a concrete value?
+    #[inline]
+    pub fn contains(&self, x: f64) -> bool {
+        self.lo <= x && x <= self.hi
+    }
+}
+
+/// Reduction tree (Fig. 1a right side): return the index of the element
+/// with the largest conservative magnitude, comparing only intervals.
+/// Logarithmic depth in hardware; linear scan with tree semantics here.
+pub fn argmax_magnitude(intervals: &[Interval]) -> Option<usize> {
+    if intervals.is_empty() {
+        return None;
+    }
+    // Pairwise tournament to mirror the hardware tree (and keep the same
+    // tie-breaking as a comparator tree: lower index wins ties).
+    let mut winners: Vec<usize> = (0..intervals.len()).collect();
+    while winners.len() > 1 {
+        let mut next = Vec::with_capacity(winners.len().div_ceil(2));
+        for pair in winners.chunks(2) {
+            if pair.len() == 1 {
+                next.push(pair[0]);
+            } else {
+                let (a, b) = (pair[0], pair[1]);
+                next.push(if intervals[b].abs_hi() > intervals[a].abs_hi() {
+                    b
+                } else {
+                    a
+                });
+            }
+        }
+        winners = next;
+    }
+    Some(winners[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn point_and_contains() {
+        let i = Interval::point(5.0);
+        assert!(i.contains(5.0));
+        assert!(!i.contains(5.1));
+    }
+
+    #[test]
+    fn add_is_conservative() {
+        let a = Interval::new(1.0, 2.0);
+        let b = Interval::new(-3.0, 4.0);
+        let s = a.add(&b);
+        assert!(s.lo <= -2.0 && s.hi >= 6.0);
+    }
+
+    #[test]
+    fn mul_signs() {
+        let a = Interval::new(-2.0, 3.0);
+        let b = Interval::new(-5.0, 1.0);
+        let p = a.mul(&b);
+        // corners: 10, -2, -15, 3 -> [-15, 10]
+        assert!(p.lo <= -15.0 && p.lo > -15.1);
+        assert!(p.hi >= 10.0 && p.hi < 10.1);
+    }
+
+    #[test]
+    fn shr_brackets_floor() {
+        let a = Interval::point(1000.0);
+        let s = a.shr(3);
+        assert!(s.contains((1000f64 / 8.0).floor()));
+        let neg = Interval::point(-1000.0);
+        let s = neg.shr(3);
+        assert!(s.contains((-1000f64 / 8.0).floor()));
+    }
+
+    #[test]
+    fn abs_bounds() {
+        assert_eq!(Interval::new(-3.0, 2.0).abs_hi(), 3.0);
+        assert_eq!(Interval::new(-3.0, 2.0).abs_lo(), 0.0);
+        assert_eq!(Interval::new(2.0, 5.0).abs_lo(), 2.0);
+        assert_eq!(Interval::new(-5.0, -2.0).abs_lo(), 2.0);
+    }
+
+    #[test]
+    fn bits_hi_estimates() {
+        assert_eq!(Interval::point(0.0).bits_hi(), 0);
+        assert_eq!(Interval::point(1024.0).bits_hi(), 10);
+        assert!(Interval::point(1025.0).bits_hi() >= 11);
+    }
+
+    #[test]
+    fn argmax_tree() {
+        let iv = [
+            Interval::point(3.0),
+            Interval::point(-10.0),
+            Interval::point(7.0),
+        ];
+        assert_eq!(argmax_magnitude(&iv), Some(1));
+        assert_eq!(argmax_magnitude(&[]), None);
+        assert_eq!(argmax_magnitude(&iv[..1]), Some(0));
+    }
+
+    #[test]
+    fn argmax_tie_prefers_lower_index() {
+        let iv = [Interval::point(5.0), Interval::point(-5.0)];
+        assert_eq!(argmax_magnitude(&iv), Some(0));
+    }
+
+    #[test]
+    fn prop_interval_arithmetic_contains_truth() {
+        check("interval-contains", |rng| {
+            let a = rng.uniform(-1e6, 1e6);
+            let b = rng.uniform(-1e6, 1e6);
+            let ia = Interval::point(a);
+            let ib = Interval::point(b);
+            crate::prop_assert!(ia.add(&ib).contains(a + b), "add a={a} b={b}");
+            crate::prop_assert!(ia.mul(&ib).contains(a * b), "mul a={a} b={b}");
+            crate::prop_assert!(ia.neg().contains(-a), "neg a={a}");
+            let s = rng.below(20) as u32;
+            crate::prop_assert!(
+                ia.shr(s).contains((a / 2f64.powi(s as i32)).floor()),
+                "shr a={a} s={s}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_chained_ops_stay_conservative() {
+        check("interval-chain", |rng| {
+            let mut truth = rng.uniform(-100.0, 100.0);
+            let mut iv = Interval::point(truth);
+            for _ in 0..50 {
+                let x = rng.uniform(-3.0, 3.0);
+                if rng.bool() {
+                    truth += x;
+                    iv = iv.add(&Interval::point(x));
+                } else {
+                    truth *= x;
+                    iv = iv.mul(&Interval::point(x));
+                }
+            }
+            crate::prop_assert!(
+                iv.contains(truth),
+                "drift: truth={truth} iv=[{}, {}]",
+                iv.lo,
+                iv.hi
+            );
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,25 @@
+//! The HRFNA number system (paper §III–IV): hybrid residue–floating values
+//! `(r, f)` with semantics `Φ(r, f) = CRT(r) · 2^f`, carry-free arithmetic,
+//! interval-based magnitude management and threshold-driven normalization
+//! with formal error bounds.
+//!
+//! Module map (mirrors the paper's structure):
+//! * [`context`]  — shared precomputed state + op/normalization counters
+//!   (§VI-F instrumentation, §VII-E normalization-frequency analysis).
+//! * [`interval`] — conservative magnitude intervals (§III-E, Fig. 1a) and
+//!   the reduction tree used for magnitude selection.
+//! * [`number`]   — the `Hrfna` value type: Definitions 1–4, Theorem 1
+//!   multiplication, exponent-synchronized addition, MAC, normalization.
+//! * [`error`]    — Lemma 1/2 bound calculators and bound-checking probes.
+
+pub mod context;
+pub mod interval;
+pub mod number;
+pub mod error;
+pub mod funcs;
+pub mod array;
+
+pub use array::HrfnaArray;
+pub use context::{HrfnaContext, OpCounters, OpSnapshot};
+pub use interval::Interval;
+pub use number::Hrfna;

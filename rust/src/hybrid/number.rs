@@ -1,0 +1,705 @@
+//! The `Hrfna` value type: paper Definitions 1–4, Theorem 1 multiplication,
+//! exponent-synchronized addition (§IV-B), MAC (§IV-C) and threshold-driven
+//! normalization (§III-C) with the Lemma 1/2 error discipline.
+//!
+//! Representation invariants:
+//! * `r` encodes the signed integer `N` in M-complement (values ≥ M/2 are
+//!   negative: `N = CRT(r) - M`).
+//! * `iv` conservatively brackets the signed `N` at all times — it is the
+//!   paper's interval-evaluation control word (§III-E) and the *only* input
+//!   to normalization / overflow-guard decisions. CRT reconstruction happens
+//!   exclusively inside normalization events.
+//! * `Φ(self) = N · 2^f`.
+
+use super::context::HrfnaContext;
+use super::interval::Interval;
+use crate::bigint::BigUint;
+use crate::rns::residue::ResidueVec;
+
+/// Relative widening applied when an interval is re-seeded from a BigUint
+/// reconstruction (BigUint::to_f64 truncates below the top 128 bits).
+const RESEED_REL: f64 = 1e-9;
+
+/// A hybrid residue–floating number `(r, f)` with its magnitude interval.
+#[derive(Clone, Debug)]
+pub struct Hrfna {
+    /// Residue vector for the signed integer N (M-complement).
+    pub r: ResidueVec,
+    /// Global power-of-two exponent f (Definition 1).
+    pub f: i32,
+    /// Conservative interval bracketing the signed N.
+    pub iv: Interval,
+}
+
+impl Hrfna {
+    // ------------------------------------------------------------------
+    // Construction / conversion
+    // ------------------------------------------------------------------
+
+    /// The value 0 (with exponent `f`, relevant for accumulators).
+    pub fn zero(ctx: &HrfnaContext, f: i32) -> Hrfna {
+        Hrfna {
+            r: ResidueVec::zero(ctx.k()),
+            f,
+            iv: Interval::zero(),
+        }
+    }
+
+    /// Encode a signed integer at exponent `f` (exact).
+    pub fn from_signed_int(n: i64, f: i32, ctx: &HrfnaContext) -> Hrfna {
+        let mag = BigUint::from_u64(n.unsigned_abs());
+        let mut r = ctx.crt.encode(&mag);
+        if n < 0 {
+            r = negate_residues(&r, ctx);
+        }
+        Hrfna {
+            r,
+            f,
+            iv: Interval::point(n as f64),
+        }
+    }
+
+    /// Encode a real: choose `f` so `|N| ∈ [2^{sig-1}, 2^{sig}]`, then
+    /// `N = round(x / 2^f)` (one rounding, relative error ≤ 2^{-sig_bits}).
+    pub fn encode(x: f64, ctx: &HrfnaContext) -> Hrfna {
+        assert!(x.is_finite(), "cannot encode {x}");
+        if x == 0.0 {
+            return Hrfna::zero(ctx, 0);
+        }
+        let sig = ctx.cfg.sig_bits as i32;
+        let e = x.abs().log2().floor() as i32;
+        let f = e - sig + 1;
+        // Staged power-of-two scaling: a single pow2(-f) can overflow for
+        // subnormal inputs (|f| > 1023) even though the product is finite.
+        let mut scaled = x;
+        let mut rem = -f;
+        while rem != 0 {
+            let step = rem.clamp(-1000, 1000);
+            scaled *= pow2(step);
+            rem -= step;
+        }
+        let n = scaled.round() as i64;
+        debug_assert!(n.unsigned_abs() <= 1u64 << (sig + 1));
+        Hrfna::from_signed_int(n, f, ctx)
+    }
+
+    /// Decode to f64: `Φ(r, f) = N · 2^f` via one CRT reconstruction.
+    pub fn decode(&self, ctx: &HrfnaContext) -> f64 {
+        HrfnaContext::count(&ctx.counters.reconstructions);
+        let (neg, mag) = ctx.crt.reconstruct_signed(&self.r);
+        let v = ldexp_staged(mag.to_f64(), self.f);
+        if neg {
+            -v
+        } else {
+            v
+        }
+    }
+
+    /// True iff the value is exactly zero (all residues zero).
+    pub fn is_zero(&self) -> bool {
+        self.r.is_zero()
+    }
+
+    // ------------------------------------------------------------------
+    // Arithmetic (Definitions 2, §IV-A/B/C)
+    // ------------------------------------------------------------------
+
+    /// Hybrid multiplication (Definition 2 / Theorem 1):
+    /// `r_Z = r_X ⊙ r_Y`, `f_Z = f_X + f_Y` — exact, carry-free. Operands
+    /// are overflow-guarded via intervals; the result is normalized only if
+    /// it crosses the τ threshold.
+    pub fn mul(&self, other: &Hrfna, ctx: &HrfnaContext) -> Hrfna {
+        let mut z = self.mul_raw(other, ctx);
+        z.maybe_normalize(ctx);
+        z
+    }
+
+    /// Multiplication without the trailing threshold check (used inside
+    /// MAC loops that defer normalization to the accumulator, §IV-C).
+    ///
+    /// §Perf: the common no-guard case multiplies straight from the
+    /// borrowed operands — no clones, one output allocation.
+    pub fn mul_raw(&self, other: &Hrfna, ctx: &HrfnaContext) -> Hrfna {
+        HrfnaContext::count(&ctx.counters.muls);
+        let budget = (ctx.m_bits - 2.0) as u32; // signed headroom below M/2
+        if self.iv.bits_hi() + other.iv.bits_hi() < budget {
+            return Hrfna {
+                r: self.r.mul(&other.r, ctx.barrett()),
+                f: self.f + other.f,
+                iv: self.iv.mul(&other.iv),
+            };
+        }
+        // Rare: interval says the product could reach M/2 — pre-normalize
+        // the oversized operand(s) to the significand target.
+        let mut a = self.clone();
+        let mut b = other.clone();
+        if a.iv.bits_hi() + b.iv.bits_hi() >= budget {
+            if a.iv.bits_hi() >= b.iv.bits_hi() {
+                a.normalize_to_sig(ctx, true);
+            } else {
+                b.normalize_to_sig(ctx, true);
+            }
+        }
+        if a.iv.bits_hi() + b.iv.bits_hi() >= budget {
+            // Both huge: shrink the other one too.
+            if a.iv.bits_hi() >= b.iv.bits_hi() {
+                a.normalize_to_sig(ctx, true);
+            } else {
+                b.normalize_to_sig(ctx, true);
+            }
+        }
+        Hrfna {
+            r: a.r.mul(&b.r, ctx.barrett()),
+            f: a.f + b.f,
+            iv: a.iv.mul(&b.iv),
+        }
+    }
+
+    /// Hybrid addition with explicit exponent synchronization (§IV-B).
+    pub fn add(&self, other: &Hrfna, ctx: &HrfnaContext) -> Hrfna {
+        let (a, b) = sync_exponents(self, other, ctx);
+        HrfnaContext::count(&ctx.counters.adds);
+        let mut z = Hrfna {
+            r: a.r.add(&b.r, ctx.barrett()),
+            f: a.f,
+            iv: a.iv.add(&b.iv),
+        };
+        z.maybe_normalize(ctx);
+        z
+    }
+
+    /// Negation: channelwise M-complement (exact, carry-free).
+    pub fn neg(&self, ctx: &HrfnaContext) -> Hrfna {
+        Hrfna {
+            r: negate_residues(&self.r, ctx),
+            f: self.f,
+            iv: self.iv.neg(),
+        }
+    }
+
+    /// Subtraction: `self + (-other)`.
+    pub fn sub(&self, other: &Hrfna, ctx: &HrfnaContext) -> Hrfna {
+        self.add(&other.neg(ctx), ctx)
+    }
+
+    /// Fused multiply-accumulate into `self` (Alg. 1 inner loop /
+    /// §VI-C "accumulator modes"): the accumulator's exponent is *held*
+    /// and each incoming product is aligned to it, so the accumulator
+    /// grows only through carry-free residue adds; threshold
+    /// normalization advances the exponent by the fixed scale step
+    /// (Definition 4), never re-expanding — the exponent-coherent
+    /// accumulation that keeps normalization rare (§VII-E).
+    pub fn mac_assign(&mut self, x: &Hrfna, y: &Hrfna, ctx: &HrfnaContext) {
+        let p = x.mul_raw(y, ctx);
+        if p.is_zero() {
+            return;
+        }
+        if self.is_zero() {
+            // Alg. 1 step 1: f0 matches the initial operands.
+            *self = p;
+            self.maybe_normalize_acc(ctx);
+            return;
+        }
+        HrfnaContext::count(&ctx.counters.adds);
+        let budget = (ctx.m_bits - 2.0) as u32;
+        let bars = ctx.barrett();
+        if p.f == self.f {
+            // §Perf fast path: exponent-coherent product — accumulate in
+            // place, zero clones (the common case under Alg. 1).
+            for i in 0..self.r.r.len() {
+                self.r.r[i] = bars[i].add(self.r.r[i], p.r.r[i]);
+            }
+            self.iv = self.iv.add(&p.iv);
+        } else if p.f > self.f && p.iv.bits_hi() + (p.f - self.f) as u32 + 1 < budget {
+            // §Perf fused sync: scale the product by 2^Δ (exact, table
+            // lookup) *inside* the accumulate loop — no temporaries.
+            HrfnaContext::count(&ctx.counters.syncs);
+            let delta = (p.f - self.f) as u32;
+            for i in 0..self.r.r.len() {
+                let scaled = bars[i].mul(p.r.r[i], ctx.pow2_mod(i, delta));
+                self.r.r[i] = bars[i].add(self.r.r[i], scaled);
+            }
+            self.iv = self.iv.add(&p.iv.shl(delta));
+        } else if p.f < self.f && self.iv.bits_hi() + (self.f - p.f) as u32 + 1 < budget {
+            // Fused expansion of the accumulator down to the product's
+            // exponent (exact; §III-D exactness between normalizations).
+            HrfnaContext::count(&ctx.counters.syncs);
+            let delta = (self.f - p.f) as u32;
+            for i in 0..self.r.r.len() {
+                let scaled = bars[i].mul(self.r.r[i], ctx.pow2_mod(i, delta));
+                self.r.r[i] = bars[i].add(scaled, p.r.r[i]);
+            }
+            self.f = p.f;
+            self.iv = self.iv.shl(delta).add(&p.iv);
+        } else {
+            // Rare: headroom exhausted — general synchronization (lossy
+            // Lemma-1-bounded path inside).
+            let (a, b) = sync_exponents(self, &p, ctx);
+            *self = Hrfna {
+                r: a.r.add(&b.r, ctx.barrett()),
+                f: a.f,
+                iv: a.iv.add(&b.iv),
+            };
+        }
+        self.maybe_normalize_acc(ctx);
+    }
+
+    /// Accumulator-mode threshold check: fixed-step normalization
+    /// (Definition 4 with s = scale_step), repeated if necessary.
+    fn maybe_normalize_acc(&mut self, ctx: &HrfnaContext) {
+        let tau = pow2(ctx.cfg.tau_bits as i32);
+        while self.iv.abs_hi() >= tau {
+            self.normalize(ctx.cfg.scale_step, ctx, false);
+        }
+    }
+
+    /// Re-express this value at exponent `target` (value-preserving up to
+    /// the Lemma-1 rounding of a downward alignment):
+    /// * `f > target` — exact residue-domain scaling by 2^Δ (guarded);
+    /// * `f < target` — controlled normalization by Δ (rounds low bits).
+    pub fn align_to(&self, target: i32, ctx: &HrfnaContext) -> Hrfna {
+        if self.f == target {
+            return self.clone();
+        }
+        HrfnaContext::count(&ctx.counters.syncs);
+        if self.f > target {
+            let mut v = self.clone();
+            let budget = (ctx.m_bits - 2.0) as u32;
+            if v.iv.bits_hi() + (v.f - target) as u32 + 1 >= budget {
+                // Cannot expand exactly: reduce significance first (the
+                // guard raises v.f, shrinking the required expansion).
+                v.normalize_to_sig(ctx, true);
+            }
+            if v.f < target {
+                let mut w = v;
+                w.normalize((target - w.f) as u32, ctx, false);
+                return w;
+            }
+            let delta = (v.f - target) as u32;
+            Hrfna {
+                r: scale_residues_pow2(&v.r, delta, ctx),
+                f: target,
+                iv: v.iv.shl(delta),
+            }
+        } else {
+            let mut v = self.clone();
+            v.normalize((target - v.f) as u32, ctx, false);
+            v
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Normalization (Definitions 3–4, §VI-E engine)
+    // ------------------------------------------------------------------
+
+    /// Threshold check (Definition 3): normalize when the conservative
+    /// magnitude bound reaches τ = 2^tau_bits.
+    pub fn maybe_normalize(&mut self, ctx: &HrfnaContext) {
+        if self.iv.abs_hi() >= pow2(ctx.cfg.tau_bits as i32) {
+            self.normalize_to_sig(ctx, false);
+        }
+    }
+
+    /// Normalize with an explicit scale step `s` (Definition 4):
+    /// `N → round(N / 2^s)` (round-half-away-from-zero, so the Lemma 1
+    /// half-unit bound holds), `f → f + s`, re-encode residues.
+    pub fn normalize(&mut self, s: u32, ctx: &HrfnaContext, guard: bool) {
+        assert!(s > 0);
+        HrfnaContext::count(if guard {
+            &ctx.counters.guard_norms
+        } else {
+            &ctx.counters.norms
+        });
+        HrfnaContext::count(&ctx.counters.reconstructions);
+        let (neg, mag) = ctx.crt.reconstruct_signed(&self.r);
+        // round-half-away: (|N| + 2^{s-1}) >> s on the magnitude.
+        let half = BigUint::one().shl(s - 1);
+        let rounded = mag.add(&half).shr(s);
+        let mut r = ctx.crt.encode(&rounded);
+        if neg && !rounded.is_zero() {
+            r = negate_residues(&r, ctx);
+        }
+        let v = rounded.to_f64();
+        let signed = if neg { -v } else { v };
+        self.r = r;
+        self.f += s as i32;
+        self.iv = reseeded_interval(signed);
+    }
+
+    /// Normalize so the magnitude returns to the significand target:
+    /// `s = bits − sig_bits` exactly. (Rounding `s` up to a multiple of
+    /// `scale_step` would leave as little as `sig − step + 1` bits of
+    /// significance after the event and destroy precision; the paper's
+    /// fixed-step Definition 4 is available via [`Hrfna::normalize`], and
+    /// `scale_step` parameterizes the hardware shifter granularity in the
+    /// FPGA model.)
+    pub fn normalize_to_sig(&mut self, ctx: &HrfnaContext, guard: bool) {
+        let bits = self.iv.bits_hi();
+        let sig = ctx.cfg.sig_bits;
+        if bits <= sig {
+            return;
+        }
+        self.normalize(bits - sig, ctx, guard);
+    }
+
+    // ------------------------------------------------------------------
+    // Introspection
+    // ------------------------------------------------------------------
+
+    /// Conservative magnitude-bits estimate from the interval.
+    pub fn magnitude_bits(&self) -> u32 {
+        self.iv.bits_hi()
+    }
+
+    /// Exact signed reconstruction (costly; test/verification path).
+    pub fn reconstruct_signed(&self, ctx: &HrfnaContext) -> (bool, BigUint) {
+        ctx.crt.reconstruct_signed(&self.r)
+    }
+
+    /// Verify the interval invariant against an exact reconstruction.
+    /// Test helper: returns false if the interval fails to bracket N.
+    pub fn interval_is_sound(&self, ctx: &HrfnaContext) -> bool {
+        let (neg, mag) = ctx.crt.reconstruct_signed(&self.r);
+        let v = mag.to_f64();
+        let n = if neg { -v } else { v };
+        // Allow the to_f64 truncation slack on the exact value itself.
+        let slack = n.abs() * 1e-12 + 1e-9;
+        self.iv.lo - slack <= n && n <= self.iv.hi + slack
+    }
+}
+
+/// `v · 2^e` with staged scaling so intermediate powers never saturate
+/// even when `v`'s own exponent compensates for an extreme `e`.
+#[inline]
+pub fn ldexp_staged(v: f64, e: i32) -> f64 {
+    let mut out = v;
+    let mut rem = e;
+    while rem != 0 && out != 0.0 && out.is_finite() {
+        let step = rem.clamp(-500, 500);
+        out *= pow2(step);
+        rem -= step;
+    }
+    out
+}
+
+/// `2^e` as f64 (exact for normal range; clamps to 0/∞ beyond f64's range).
+#[inline]
+pub fn pow2(e: i32) -> f64 {
+    if e >= 1024 {
+        f64::INFINITY
+    } else if e <= -1074 {
+        0.0
+    } else {
+        2f64.powi(e)
+    }
+}
+
+/// Channelwise M-complement negation: `r_i → (m_i - r_i) mod m_i`.
+fn negate_residues(r: &ResidueVec, ctx: &HrfnaContext) -> ResidueVec {
+    ResidueVec {
+        r: r.r
+            .iter()
+            .zip(&ctx.cfg.moduli)
+            .map(|(&ri, &mi)| if ri == 0 { 0 } else { mi - ri })
+            .collect(),
+    }
+}
+
+/// Interval re-seeded from a reconstructed value (with truncation slack).
+fn reseeded_interval(v: f64) -> Interval {
+    if v == 0.0 {
+        return Interval::zero();
+    }
+    let slack = v.abs() * RESEED_REL;
+    Interval::new(v - slack, v + slack)
+}
+
+/// Exponent synchronization (§IV-B). Returns value-equal operands with a
+/// common exponent. Prefers the *exact* direction (scaling the
+/// higher-exponent operand's residues up by 2^Δ, which is carry-free and
+/// lossless) when interval headroom allows; falls back to controlled
+/// normalization of the lower-exponent operand otherwise.
+fn sync_exponents(x: &Hrfna, y: &Hrfna, ctx: &HrfnaContext) -> (Hrfna, Hrfna) {
+    if x.f == y.f {
+        return (x.clone(), y.clone());
+    }
+    HrfnaContext::count(&ctx.counters.syncs);
+    // Identify hi = operand with larger exponent.
+    let (hi, lo) = if x.f > y.f { (x, y) } else { (y, x) };
+    let delta = (hi.f - lo.f) as u32;
+    let budget = (ctx.m_bits - 2.0) as u32;
+
+    // Exact path: N_hi · 2^Δ at exponent f_lo.
+    if hi.iv.bits_hi() + delta + 1 < budget {
+        let scaled = scale_residues_pow2(&hi.r, delta, ctx);
+        let hi2 = Hrfna {
+            r: scaled,
+            f: lo.f,
+            iv: hi.iv.shl(delta),
+        };
+        return if x.f > y.f {
+            (hi2, lo.clone())
+        } else {
+            (lo.clone(), hi2)
+        };
+    }
+
+    // Lossy path: controlled normalization of the lower-exponent operand
+    // by exactly Δ (rounds to zero when Δ exceeds its magnitude — the hi
+    // operand cannot resolve it anyway). Error bounded by Lemma 1.
+    let mut lo2 = lo.clone();
+    lo2.normalize(delta, ctx, false);
+    debug_assert_eq!(lo2.f, hi.f);
+    if x.f > y.f {
+        (hi.clone(), lo2)
+    } else {
+        (lo2, hi.clone())
+    }
+}
+
+/// Residue-domain multiplication by 2^Δ (per channel: `r_i · 2^Δ mod m_i`;
+/// §Perf: 2^Δ mod m comes from the context's precomputed table).
+fn scale_residues_pow2(r: &ResidueVec, delta: u32, ctx: &HrfnaContext) -> ResidueVec {
+    ResidueVec {
+        r: r.r
+            .iter()
+            .zip(ctx.barrett())
+            .enumerate()
+            .map(|(ch, (&ri, bar))| bar.mul(ri, ctx.pow2_mod(ch, delta)))
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, check_with};
+
+    fn ctx() -> HrfnaContext {
+        HrfnaContext::paper_default()
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_precision() {
+        let c = ctx();
+        for x in [1.0, -1.0, 3.14159, -2.5e10, 7.7e-12, 65521.5, 1e30, -1e-30] {
+            let h = Hrfna::encode(x, &c);
+            let back = h.decode(&c);
+            let rel = ((back - x) / x).abs();
+            assert!(rel <= 2f64.powi(-(c.cfg.sig_bits as i32) + 1), "x={x} rel={rel}");
+            assert!(h.interval_is_sound(&c));
+        }
+    }
+
+    #[test]
+    fn zero_encoding() {
+        let c = ctx();
+        let z = Hrfna::encode(0.0, &c);
+        assert!(z.is_zero());
+        assert_eq!(z.decode(&c), 0.0);
+    }
+
+    #[test]
+    fn theorem1_multiplication_exact() {
+        // Φ(X⊗Y) == Φ(X)·Φ(Y) exactly (integer-exact, checked via BigUint).
+        let c = ctx();
+        let x = Hrfna::from_signed_int(123_456_789, -10, &c);
+        let y = Hrfna::from_signed_int(-987_654_321, 4, &c);
+        let z = x.mul(&y, &c);
+        let (neg, mag) = z.reconstruct_signed(&c);
+        assert!(neg);
+        assert_eq!(
+            mag.to_u128(),
+            Some(123_456_789u128 * 987_654_321u128)
+        );
+        assert_eq!(z.f, -6);
+    }
+
+    #[test]
+    fn multiplication_signs() {
+        let c = ctx();
+        for (a, b) in [(3.0, 4.0), (-3.0, 4.0), (3.0, -4.0), (-3.0, -4.0)] {
+            let z = Hrfna::encode(a, &c).mul(&Hrfna::encode(b, &c), &c);
+            let got = z.decode(&c);
+            assert!(((got - a * b) / (a * b)).abs() < 1e-8, "a={a} b={b} got={got}");
+        }
+    }
+
+    #[test]
+    fn addition_same_exponent_exact() {
+        let c = ctx();
+        let x = Hrfna::from_signed_int(1000, 3, &c);
+        let y = Hrfna::from_signed_int(-400, 3, &c);
+        let z = x.add(&y, &c);
+        assert_eq!(z.f, 3);
+        let (neg, mag) = z.reconstruct_signed(&c);
+        assert!(!neg);
+        assert_eq!(mag.to_u64(), Some(600));
+    }
+
+    #[test]
+    fn addition_exponent_sync_exact_path() {
+        let c = ctx();
+        // 3·2^5 + 5·2^0 = 101: exact because sync multiplies 3 by 2^5.
+        let x = Hrfna::from_signed_int(3, 5, &c);
+        let y = Hrfna::from_signed_int(5, 0, &c);
+        let z = x.add(&y, &c);
+        assert_eq!(z.decode(&c), 101.0);
+        assert_eq!(c.snapshot().syncs, 1);
+    }
+
+    #[test]
+    fn subtraction_and_negation() {
+        let c = ctx();
+        let x = Hrfna::encode(10.5, &c);
+        let y = Hrfna::encode(4.25, &c);
+        let d = x.sub(&y, &c).decode(&c);
+        assert!((d - 6.25).abs() < 1e-7, "d={d}");
+        let n = x.neg(&c).decode(&c);
+        assert!((n + 10.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn normalization_triggers_at_threshold() {
+        let c = HrfnaContext::new(crate::config::HrfnaConfig {
+            tau_bits: 40,
+            ..crate::config::HrfnaConfig::paper_default()
+        });
+        // Build a value with ~60 bits by repeated multiplication.
+        let mut v = Hrfna::from_signed_int(1 << 20, 0, &c);
+        let m = Hrfna::from_signed_int(1 << 20, 0, &c);
+        let before = c.snapshot().norms;
+        let v2 = v.mul(&m, &c); // 40 bits -> hits tau
+        v = v2.mul(&m, &c);
+        assert!(c.snapshot().norms > before, "normalization should trigger");
+        assert!(v.magnitude_bits() <= c.cfg.sig_bits + c.cfg.scale_step);
+        assert!(v.interval_is_sound(&c));
+    }
+
+    #[test]
+    fn normalization_error_within_lemma1() {
+        let c = ctx();
+        let mut v = Hrfna::from_signed_int(0x7FFF_FFFF_FFFF, -20, &c); // 47 bits
+        let before = v.decode(&c);
+        let s = 16;
+        v.normalize(s, &c, false);
+        let after = v.decode(&c);
+        // Lemma 1: |ε| ≤ 2^{f_old + s - 1}; f_old = -20.
+        let bound = pow2(-20 + s as i32 - 1);
+        assert!((after - before).abs() <= bound, "err={} bound={bound}", (after - before).abs());
+    }
+
+    #[test]
+    fn mac_long_chain_matches_f64() {
+        let c = ctx();
+        let mut rng = crate::util::prng::Rng::new(99);
+        let mut acc = Hrfna::zero(&c, 0);
+        let mut truth = 0.0f64;
+        for _ in 0..2000 {
+            let a = rng.uniform(-100.0, 100.0);
+            let b = rng.uniform(-100.0, 100.0);
+            let ha = Hrfna::encode(a, &c);
+            let hb = Hrfna::encode(b, &c);
+            acc.mac_assign(&ha, &hb, &c);
+            truth += (ha.decode(&c)) * (hb.decode(&c));
+        }
+        let got = acc.decode(&c);
+        let rel = ((got - truth) / truth.abs().max(1e-30)).abs();
+        assert!(rel < 1e-6, "got={got} truth={truth} rel={rel}");
+        assert!(acc.interval_is_sound(&c));
+    }
+
+    #[test]
+    fn overflow_guard_keeps_values_in_range() {
+        let c = ctx();
+        // Build two ~90-bit operands via raw (unnormalized) products; their
+        // product would exceed the signed range, so the mul guard must fire.
+        let a = Hrfna::encode(1e9, &c); // ~30 bits
+        let b = a.mul_raw(&a, &c); // ~60 bits
+        let big = b.mul_raw(&a, &c); // ~90 bits, below tau? (tau=112) yes
+        assert!(big.magnitude_bits() > 80);
+        let before = c.snapshot().guard_norms;
+        let z = big.mul(&big.clone(), &c);
+        assert!(c.snapshot().guard_norms > before, "guard should fire");
+        assert!(z.interval_is_sound(&c));
+        let (_, mag) = z.reconstruct_signed(&c);
+        assert!(mag < c.half_m, "magnitude escaped signed range");
+        // And the value is still numerically right: (1e9^3)^2 = 1e54.
+        let got = z.decode(&c);
+        let want = 1e54;
+        assert!(((got - want) / want).abs() < 1e-6, "got={got}");
+    }
+
+    #[test]
+    fn repeated_squaring_stays_sound() {
+        let c = ctx();
+        let mut v = Hrfna::encode(1.5e20, &c);
+        for _ in 0..12 {
+            v = v.mul(&v.clone(), &c);
+            assert!(v.interval_is_sound(&c), "interval unsound");
+            let (_, mag) = v.reconstruct_signed(&c);
+            assert!(mag < c.half_m, "magnitude escaped signed range");
+        }
+    }
+
+    #[test]
+    fn prop_mul_matches_f64_reference() {
+        let c = ctx();
+        check("hrfna-mul-f64", |rng| {
+            let a = rng.sign() * rng.lognormal(0.0, 20.0);
+            let b = rng.sign() * rng.lognormal(0.0, 20.0);
+            let z = Hrfna::encode(a, &c).mul(&Hrfna::encode(b, &c), &c);
+            let got = z.decode(&c);
+            let want = a * b;
+            let rel = ((got - want) / want).abs();
+            crate::prop_assert!(rel < 1e-7, "a={a} b={b} got={got} rel={rel}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_add_matches_f64_reference() {
+        let c = ctx();
+        check("hrfna-add-f64", |rng| {
+            let a = rng.sign() * rng.lognormal(0.0, 8.0);
+            let b = rng.sign() * rng.lognormal(0.0, 8.0);
+            let z = Hrfna::encode(a, &c).add(&Hrfna::encode(b, &c), &c);
+            let got = z.decode(&c);
+            let want = a + b;
+            let tol = 1e-7 * (a.abs() + b.abs()).max(1e-300);
+            crate::prop_assert!(
+                (got - want).abs() <= tol,
+                "a={a} b={b} got={got} want={want}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_interval_always_sound_under_random_ops() {
+        let c = ctx();
+        check_with("hrfna-interval-sound", 64, |rng| {
+            let mut v = Hrfna::encode(rng.uniform(-1e6, 1e6), &c);
+            for _ in 0..30 {
+                let w = Hrfna::encode(rng.sign() * rng.lognormal(0.0, 10.0), &c);
+                v = match rng.below(3) {
+                    0 => v.mul(&w, &c),
+                    1 => v.add(&w, &c),
+                    _ => v.sub(&w, &c),
+                };
+                crate::prop_assert!(v.interval_is_sound(&c), "unsound interval");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pow2_values() {
+        assert_eq!(pow2(0), 1.0);
+        assert_eq!(pow2(10), 1024.0);
+        assert_eq!(pow2(-1), 0.5);
+        assert_eq!(pow2(1024), f64::INFINITY);
+        assert_eq!(pow2(-1074), 0.0);
+        assert!((pow2(-1030) - 2f64.powi(-1030)).abs() < 1e-320);
+    }
+}

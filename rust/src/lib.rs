@@ -1,0 +1,46 @@
+//! # HRFNA — Hybrid Residue–Floating Numerical Architecture
+//!
+//! Reproduction of *"A Hybrid Residue–Floating Numerical Architecture with
+//! Formal Error Bounds for High-Throughput FPGA Computation"* (M. Darvishi,
+//! CS.AR 2026) as a three-layer Rust + JAX + Pallas system.
+//!
+//! An HRFNA value is a pair `(r, f)`: a residue vector `r` over pairwise
+//! coprime moduli `{m_i}` plus a global power-of-two exponent `f`, with
+//! semantics `Φ(r, f) = CRT(r) · 2^f` (paper Definition 1). Multiplication
+//! and (exponent-synchronized) addition are exact, carry-free, per-channel
+//! modular operations (Theorem 1); rounding happens *only* at explicit,
+//! threshold-driven normalization events `N → ⌊N/2^s⌋, f → f+s`, whose error
+//! is bounded by `|ε| ≤ 2^{f+s-1}` (Lemma 1) and `|ε|/|Φ| ≤ 2^{-s}`-style
+//! relative bounds (Lemma 2).
+//!
+//! ## Crate layout
+//!
+//! * [`util`] — hand-rolled substrates (PRNG, stats, tables, CLI, property
+//!   testing, thread pool): the offline build has no external crates beyond
+//!   `xla`/`anyhow`/`thiserror`.
+//! * [`bigint`] — unsigned big integers (CRT reconstruction substrate).
+//! * [`rns`] — residue number system: moduli, Barrett reduction, CRT.
+//! * [`hybrid`] — the HRFNA number system itself (paper §III–IV).
+//! * [`baselines`] — FP32, block floating-point, fixed-point, pure RNS and
+//!   LNS comparators (paper Tables I/IV).
+//! * [`fpga`] — ZCU104-class microarchitecture model: pipeline timing,
+//!   LUT/FF/DSP resources, power (paper §V–VI substitution; see DESIGN.md).
+//! * [`workloads`] — dot product / matmul / RK4 generic over [`workloads::Numeric`].
+//! * [`runtime`] — PJRT loader/executor for the AOT HLO artifacts.
+//! * [`coordinator`] — request router, fixed-shape batcher, scheduler,
+//!   metrics, server loop (Layer 3).
+//! * [`config`] — typed configuration + TOML-subset parser + presets.
+
+pub mod util;
+pub mod config;
+pub mod bigint;
+pub mod rns;
+pub mod hybrid;
+pub mod baselines;
+pub mod fpga;
+pub mod workloads;
+pub mod runtime;
+pub mod coordinator;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,163 @@
+//! `hrfna` CLI — leader entrypoint for the HRFNA reproduction.
+//!
+//! Subcommands:
+//!   info        platform + configuration summary (Table II)
+//!   dot         dot-product accuracy/normalization experiment (§VII-B)
+//!   matmul      matrix-multiplication experiment (§VII-C)
+//!   rk4         long-horizon RK4 stability experiment (§VII-D)
+//!   resources   iso-throughput resource + energy comparison (§VII/VIII)
+//!   tables      qualitative Tables I & IV
+//!   serve       start the coordinator and run a mixed request workload
+
+use hrfna::baselines::{Bfp, BfpConfig};
+use hrfna::config::HrfnaConfig;
+use hrfna::coordinator::{Coordinator, CoordinatorConfig, JobKind, Payload};
+use hrfna::fpga::pipeline::{model_workload, speedup, WorkloadKind};
+use hrfna::fpga::report;
+use hrfna::fpga::resources::FormatArch;
+use hrfna::hybrid::{Hrfna, HrfnaContext};
+use hrfna::runtime::EngineHandle;
+use hrfna::util::cli::Args;
+use hrfna::util::prng::Rng;
+use hrfna::util::table::{eng, Table};
+use hrfna::workloads::{dot, generators::Dist, matmul, rk4};
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::from_env();
+    let cfg = match args.get("config") {
+        Some(path) => HrfnaConfig::from_file(path).expect("config file"),
+        None => HrfnaConfig::preset(&args.str_or("preset", "paper")).expect("preset"),
+    };
+    match args.subcommand.as_deref() {
+        Some("info") => cmd_info(&cfg),
+        Some("dot") => cmd_dot(&args, &cfg),
+        Some("matmul") => cmd_matmul(&args, &cfg),
+        Some("rk4") => cmd_rk4(&args, &cfg),
+        Some("resources") => cmd_resources(&cfg),
+        Some("tables") => cmd_tables(),
+        Some("serve") => cmd_serve(&args, &cfg),
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand {o}");
+            }
+            eprintln!(
+                "usage: hrfna <info|dot|matmul|rk4|resources|tables|serve> \
+                 [--preset paper|low-precision|stress-norm] [--config file.toml] ..."
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_info(cfg: &HrfnaConfig) {
+    report::table2(cfg).print();
+    match EngineHandle::spawn(None) {
+        Ok(engine) => {
+            let (platform, names) = engine.info().expect("engine info");
+            println!("PJRT: {platform}");
+            println!("artifacts: {names:?}");
+            engine.shutdown();
+        }
+        Err(e) => println!("PJRT engine unavailable ({e}); run `make artifacts`"),
+    }
+}
+
+fn cmd_dot(args: &Args, cfg: &HrfnaConfig) {
+    let n = args.parse_or("n", 4096usize);
+    let trials = args.parse_or("trials", 5usize);
+    let seed = args.parse_or("seed", 42u64);
+    let ctx = HrfnaContext::new(cfg.clone());
+    let bfp = BfpConfig::default();
+    let mut t = Table::new(
+        &format!("Dot product, n={n}, {trials} trials"),
+        &["format", "rel RMS error", "norm events/job"],
+    );
+    let rms_h = dot::dot_rms_error::<Hrfna>(trials, n, Dist::moderate(), seed, &ctx);
+    let norms = ctx.snapshot().norms as f64 / trials as f64;
+    t.rowv(&["HRFNA".to_string(), format!("{:.3e}", rms_h), format!("{norms:.2}")]);
+    let rms_f = dot::dot_rms_error::<f32>(trials, n, Dist::moderate(), seed, &());
+    t.rowv(&["FP32".to_string(), format!("{:.3e}", rms_f), "n/a".to_string()]);
+    let rms_b = dot::dot_rms_error::<Bfp>(trials, n, Dist::moderate(), seed, &bfp);
+    t.rowv(&["BFP".to_string(), format!("{:.3e}", rms_b), "n/a".to_string()]);
+    t.print();
+}
+
+fn cmd_matmul(args: &Args, cfg: &HrfnaConfig) {
+    let dim = args.parse_or("dim", 64usize);
+    let seed = args.parse_or("seed", 42u64);
+    let ctx = HrfnaContext::new(cfg.clone());
+    let mut t = Table::new(
+        &format!("Matmul {dim}x{dim}"),
+        &["format", "rel RMS error"],
+    );
+    let h = matmul::matmul_rms_error::<Hrfna>(dim, Dist::moderate(), seed, &ctx);
+    t.rowv(&["HRFNA".to_string(), format!("{h:.3e}")]);
+    let f = matmul::matmul_rms_error::<f32>(dim, Dist::moderate(), seed, &());
+    t.rowv(&["FP32".to_string(), format!("{f:.3e}")]);
+    let b = matmul::matmul_rms_error::<Bfp>(dim, Dist::moderate(), seed, &BfpConfig::default());
+    t.rowv(&["BFP".to_string(), format!("{b:.3e}")]);
+    t.print();
+}
+
+fn cmd_rk4(args: &Args, cfg: &HrfnaConfig) {
+    let steps = args.parse_or("steps", 100_000u64);
+    let dt = args.parse_or("dt", 0.002f64);
+    let ctx = HrfnaContext::new(cfg.clone());
+    let ode = rk4::Ode::VanDerPol { mu: 1.0 };
+    let y0 = ode.default_y0();
+    let every = (steps / 10).max(1);
+    let mut t = Table::new(
+        &format!("RK4 Van der Pol, {steps} steps, dt={dt}"),
+        &["format", "max err vs f64", "drift ratio"],
+    );
+    let tr = rk4::rk4_integrate::<Hrfna>(&ode, &y0, dt, steps, every, &ctx);
+    t.rowv(&["HRFNA".to_string(), eng(tr.max_error()), format!("{:.2}", tr.drift_ratio())]);
+    let tf = rk4::rk4_integrate::<f32>(&ode, &y0, dt, steps, every, &());
+    t.rowv(&["FP32".to_string(), eng(tf.max_error()), format!("{:.2}", tf.drift_ratio())]);
+    let tb = rk4::rk4_integrate::<Bfp>(&ode, &y0, dt, steps, every, &BfpConfig::default());
+    t.rowv(&["BFP".to_string(), eng(tb.max_error()), format!("{:.2}", tb.drift_ratio())]);
+    t.print();
+}
+
+fn cmd_resources(cfg: &HrfnaConfig) {
+    for kind in [
+        WorkloadKind::Dot { n: 65536 },
+        WorkloadKind::Matmul { m: 128, k: 128, n: 128 },
+    ] {
+        report::resource_table(cfg, kind, 16).print();
+        let h = model_workload(FormatArch::Hrfna, kind, cfg, 16);
+        let f = model_workload(FormatArch::Fp32, kind, cfg, 0);
+        println!(
+            "  speedup vs FP32: {:.2}x | LUT reduction: {:.0}%\n",
+            speedup(&h, &f),
+            report::lut_reduction_vs_fp32(cfg, kind, 16) * 100.0
+        );
+    }
+}
+
+fn cmd_tables() {
+    // Qualitative tables are produced by the bench (shared code path).
+    println!("run `cargo bench --bench bench_tables_qualitative` for Tables I/IV");
+}
+
+fn cmd_serve(args: &Args, cfg: &HrfnaConfig) {
+    let jobs = args.parse_or("jobs", 200usize);
+    let engine = EngineHandle::spawn(None).expect("engine (run `make artifacts`)");
+    let ctx = Arc::new(HrfnaContext::new(cfg.clone()));
+    let coord = Coordinator::start(engine, ctx, CoordinatorConfig::default());
+    let mut rng = Rng::new(7);
+    let mut pending = Vec::new();
+    for i in 0..jobs {
+        let n = 256 + rng.below(2048) as usize;
+        let x = Dist::moderate().sample_vec(&mut rng, n);
+        let y = Dist::moderate().sample_vec(&mut rng, n);
+        let kind = if i % 2 == 0 { JobKind::DotHybrid } else { JobKind::DotF32 };
+        pending.push(coord.submit(kind, Payload::Dot { x, y }).expect("submit"));
+    }
+    for rx in pending {
+        rx.recv().expect("result");
+    }
+    coord.metrics.table().print();
+    coord.shutdown();
+}

@@ -1,0 +1,157 @@
+//! Barrett reduction with precomputed per-modulus constants.
+//!
+//! This is the software mirror of the paper's RTL reduction logic (§VI-B:
+//! "Reduction is implemented with precomputed constants and structured
+//! reduction logic"). For a modulus `m < 2^32` we precompute
+//! `mu = ⌊2^64 / m⌋`; for `x < m^2 ≤ 2^64` the estimate `q = ⌊x·mu / 2^64⌋`
+//! satisfies `q ≤ ⌊x/m⌋ ≤ q + 2`, so at most two conditional subtractions
+//! complete the reduction — branch-predictable and constant-ish time, which
+//! is also why it maps to short FPGA carry chains.
+
+/// Precomputed Barrett constants for one modulus.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Barrett {
+    /// The modulus (must be ≥ 2 and < 2^32).
+    pub m: u64,
+    /// ⌊2^64 / m⌋.
+    mu: u64,
+}
+
+impl Barrett {
+    /// Precompute constants for modulus `m`.
+    pub fn new(m: u64) -> Barrett {
+        assert!(m >= 2, "modulus must be >= 2");
+        assert!(m < 1 << 32, "Barrett path requires m < 2^32");
+        // For m >= 2, floor(2^64 / m) <= 2^63 fits in u64.
+        let mu = ((1u128 << 64) / m as u128) as u64;
+        Barrett { m, mu }
+    }
+
+    /// Reduce `x` (any u64, in particular a product of two values < m)
+    /// modulo `m`.
+    #[inline]
+    pub fn reduce(&self, x: u64) -> u64 {
+        // q ≈ floor(x / m) via the high half of x * mu.
+        let q = ((x as u128 * self.mu as u128) >> 64) as u64;
+        let mut r = x.wrapping_sub(q.wrapping_mul(self.m));
+        // At most two correction steps.
+        while r >= self.m {
+            r -= self.m;
+        }
+        r
+    }
+
+    /// `(a * b) mod m` for `a, b < m`.
+    #[inline]
+    pub fn mul(&self, a: u64, b: u64) -> u64 {
+        debug_assert!(a < self.m && b < self.m);
+        self.reduce(a * b)
+    }
+
+    /// `(a + b) mod m` for `a, b < m` (adder + conditional subtract, as in
+    /// the RTL modular adder).
+    #[inline]
+    pub fn add(&self, a: u64, b: u64) -> u64 {
+        debug_assert!(a < self.m && b < self.m);
+        let s = a + b;
+        if s >= self.m {
+            s - self.m
+        } else {
+            s
+        }
+    }
+
+    /// `(a - b) mod m` for `a, b < m`.
+    #[inline]
+    pub fn sub(&self, a: u64, b: u64) -> u64 {
+        debug_assert!(a < self.m && b < self.m);
+        if a >= b {
+            a - b
+        } else {
+            a + self.m - b
+        }
+    }
+}
+
+/// Precompute Barrett contexts for a modulus set.
+pub fn barrett_set(moduli: &[u64]) -> Vec<Barrett> {
+    moduli.iter().map(|&m| Barrett::new(m)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rns::moduli::DEFAULT_MODULI;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn reduce_matches_rem_for_products() {
+        for &m in &DEFAULT_MODULI {
+            let b = Barrett::new(m);
+            for (x, y) in [(0u64, 0u64), (1, 1), (m - 1, m - 1), (12345, 54321)] {
+                assert_eq!(b.mul(x % m, y % m), (x % m) * (y % m) % m);
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_arbitrary_u64() {
+        let b = Barrett::new(65521);
+        for x in [0u64, 1, 65520, 65521, 65522, u64::MAX, u64::MAX - 1] {
+            assert_eq!(b.reduce(x), x % 65521, "x={x}");
+        }
+    }
+
+    #[test]
+    fn add_sub_wrap() {
+        let b = Barrett::new(97);
+        assert_eq!(b.add(96, 96), 95);
+        assert_eq!(b.sub(0, 1), 96);
+        assert_eq!(b.sub(50, 20), 30);
+    }
+
+    #[test]
+    fn small_and_large_moduli() {
+        for m in [2u64, 3, 7, 255, 65536, (1 << 31) - 1, (1 << 32) - 5] {
+            let b = Barrett::new(m);
+            for x in [0u64, m - 1, m, 2 * m + 3, u64::MAX / 3] {
+                assert_eq!(b.reduce(x), x % m, "m={m} x={x}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn modulus_too_large_panics() {
+        Barrett::new(1 << 32);
+    }
+
+    #[test]
+    fn prop_reduce_equals_rem() {
+        check("barrett-reduce", |rng| {
+            let m = rng.below((1 << 32) - 2) + 2;
+            let b = Barrett::new(m);
+            let x = rng.next_u64();
+            crate::prop_assert!(b.reduce(x) == x % m, "m={m} x={x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_field_axioms_mod_p() {
+        check("barrett-axioms", |rng| {
+            let m = 65521u64; // prime
+            let b = Barrett::new(m);
+            let x = rng.below(m);
+            let y = rng.below(m);
+            let z = rng.below(m);
+            // distributivity: x*(y+z) == x*y + x*z (mod m)
+            let lhs = b.mul(x, b.add(y, z));
+            let rhs = b.add(b.mul(x, y), b.mul(x, z));
+            crate::prop_assert!(lhs == rhs, "distributivity x={x} y={y} z={z}");
+            // additive inverse
+            crate::prop_assert!(b.add(x, b.sub(0, x)) == 0, "inverse x={x}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,430 @@
+//! Chinese Remainder Theorem reconstruction (paper §III-A semantics, §VI-E
+//! normalization engine) and mixed-radix conversion (the reconstruction-free
+//! comparison alternative discussed in §II-D).
+//!
+//! `CrtContext` precomputes, per channel, `M_i = M / m_i` and
+//! `inv_i = M_i^{-1} mod m_i`, so reconstruction is
+//! `N = Σ r_i · inv_i · M_i  mod M` — exactly the structure a pipelined
+//! CRT engine evaluates.
+
+use super::barrett::{barrett_set, Barrett};
+use super::moduli::{composite_modulus, is_pairwise_coprime};
+use super::residue::ResidueVec;
+use crate::bigint::BigUint;
+
+/// Extended gcd on i128: returns (g, x, y) with a·x + b·y = g.
+fn egcd(a: i128, b: i128) -> (i128, i128, i128) {
+    if b == 0 {
+        (a, 1, 0)
+    } else {
+        let (g, x, y) = egcd(b, a % b);
+        (g, y, x - (a / b) * y)
+    }
+}
+
+/// Modular inverse of `a` mod `m` (panics if not coprime).
+pub fn inv_mod(a: u64, m: u64) -> u64 {
+    let (g, x, _) = egcd(a as i128, m as i128);
+    assert!(g == 1, "inv_mod: {a} not invertible mod {m}");
+    (x.rem_euclid(m as i128)) as u64
+}
+
+/// Precomputed CRT reconstruction context for a modulus set.
+#[derive(Clone, Debug)]
+pub struct CrtContext {
+    pub moduli: Vec<u64>,
+    pub barrett: Vec<Barrett>,
+    /// Composite modulus M = Π m_i.
+    pub big_m: BigUint,
+    /// Precombined per-channel term basis: T_i = (inv_i · M_i) mod M.
+    /// Reconstruction is then N = Σ r_i·T_i mod M.
+    term: Vec<BigUint>,
+    /// Mixed-radix factors m_j^{-1} mod m_i for j < i (lower-triangular).
+    mrc_inv: Vec<Vec<u64>>,
+    /// §Perf fast path: `term[i]` as fixed little-endian limbs, all padded
+    /// to a common width (`fixed_limbs`), so reconstruction runs over
+    /// stack arrays with no heap allocation.
+    term_limbs: Vec<[u64; FIXED_LIMBS]>,
+    /// M as fixed limbs.
+    m_limbs: [u64; FIXED_LIMBS],
+    /// True when k and bit sizes fit the fixed-width fast path.
+    fixed_ok: bool,
+}
+
+/// Fixed reconstruction width: 5×64 = 320 bits covers M up to ~2^288 plus
+/// the Σ rᵢ·Tᵢ headroom (k ≤ 16 channels of 32-bit moduli).
+const FIXED_LIMBS: usize = 5;
+
+#[inline]
+fn to_fixed(b: &BigUint) -> Option<[u64; FIXED_LIMBS]> {
+    if b.limbs.len() > FIXED_LIMBS {
+        return None;
+    }
+    let mut out = [0u64; FIXED_LIMBS];
+    out[..b.limbs.len()].copy_from_slice(&b.limbs);
+    Some(out)
+}
+
+/// acc += t * r (fixed width, carry-propagating). Returns overflow.
+#[inline]
+fn fixed_mul_acc(acc: &mut [u64; FIXED_LIMBS], t: &[u64; FIXED_LIMBS], r: u64) -> bool {
+    let mut carry: u128 = 0;
+    for i in 0..FIXED_LIMBS {
+        let v = acc[i] as u128 + (t[i] as u128) * (r as u128) + carry;
+        acc[i] = v as u64;
+        carry = v >> 64;
+    }
+    carry != 0
+}
+
+/// Compare fixed-width values.
+#[inline]
+fn fixed_cmp(a: &[u64; FIXED_LIMBS], b: &[u64; FIXED_LIMBS]) -> std::cmp::Ordering {
+    for i in (0..FIXED_LIMBS).rev() {
+        match a[i].cmp(&b[i]) {
+            std::cmp::Ordering::Equal => continue,
+            o => return o,
+        }
+    }
+    std::cmp::Ordering::Equal
+}
+
+/// a -= b (fixed width; caller guarantees a >= b).
+#[inline]
+fn fixed_sub(a: &mut [u64; FIXED_LIMBS], b: &[u64; FIXED_LIMBS]) {
+    let mut borrow = 0u64;
+    for i in 0..FIXED_LIMBS {
+        let (d1, b1) = a[i].overflowing_sub(b[i]);
+        let (d2, b2) = d1.overflowing_sub(borrow);
+        a[i] = d2;
+        borrow = (b1 as u64) + (b2 as u64);
+    }
+    debug_assert_eq!(borrow, 0);
+}
+
+impl CrtContext {
+    /// Build a context; validates pairwise coprimality.
+    pub fn new(moduli: &[u64]) -> CrtContext {
+        assert!(!moduli.is_empty());
+        assert!(
+            is_pairwise_coprime(moduli),
+            "moduli must be pairwise coprime"
+        );
+        let big_m = composite_modulus(moduli);
+        let m_over: Vec<BigUint> = moduli
+            .iter()
+            .map(|&mi| big_m.div_rem_u64(mi).0)
+            .collect();
+        let inv: Vec<u64> = moduli
+            .iter()
+            .zip(&m_over)
+            .map(|(&mi, mo)| inv_mod(mo.rem_u64(mi), mi))
+            .collect();
+        let term: Vec<BigUint> = m_over
+            .iter()
+            .zip(&inv)
+            .map(|(mo, &iv)| mo.mul_u64(iv).rem_big(&big_m))
+            .collect();
+        let mrc_inv = (0..moduli.len())
+            .map(|i| {
+                (0..i)
+                    .map(|j| inv_mod(moduli[j] % moduli[i], moduli[i]))
+                    .collect()
+            })
+            .collect();
+        // §Perf fixed-width tables: valid when M (and the Σ rᵢTᵢ headroom
+        // of k · max(m) beyond it) fits FIXED_LIMBS.
+        let headroom_bits =
+            big_m.bit_length() + 64 + (moduli.len() as f64).log2().ceil() as u32;
+        let fixed_ok = headroom_bits < (FIXED_LIMBS as u32) * 64;
+        let term_limbs = term
+            .iter()
+            .map(|t| to_fixed(t).unwrap_or([0; FIXED_LIMBS]))
+            .collect();
+        let m_limbs = to_fixed(&big_m).unwrap_or([0; FIXED_LIMBS]);
+        CrtContext {
+            barrett: barrett_set(moduli),
+            moduli: moduli.to_vec(),
+            big_m,
+            term,
+            mrc_inv,
+            term_limbs,
+            m_limbs,
+            fixed_ok,
+        }
+    }
+
+    /// Number of channels.
+    pub fn k(&self) -> usize {
+        self.moduli.len()
+    }
+
+    /// CRT reconstruction: the unique `N ∈ [0, M)` with `N ≡ r_i (mod m_i)`.
+    ///
+    /// §Perf: the default path accumulates `Σ rᵢ·Tᵢ` in a fixed-width
+    /// stack array and reduces mod M by (at most k) conditional
+    /// subtractions of shifted M — no heap allocation, no general
+    /// division. Falls back to BigUint for exotic modulus sets.
+    pub fn reconstruct(&self, r: &ResidueVec) -> BigUint {
+        assert_eq!(r.k(), self.k());
+        if !self.fixed_ok {
+            return self.reconstruct_slow(r);
+        }
+        let mut acc = [0u64; FIXED_LIMBS];
+        for (i, &ri) in r.r.iter().enumerate() {
+            if ri != 0 {
+                let overflow = fixed_mul_acc(&mut acc, &self.term_limbs[i], ri);
+                debug_assert!(!overflow, "fixed-width CRT overflow");
+            }
+        }
+        // acc < k·max(m)·M ≤ M << ~20 bits: reduce by shifted subtraction.
+        // Find the highest shift where (M << s) could still be ≤ acc.
+        let m_bits = self.big_m.bit_length();
+        let acc_bits = {
+            let mut bits = 0;
+            for i in (0..FIXED_LIMBS).rev() {
+                if acc[i] != 0 {
+                    bits = i as u32 * 64 + (64 - acc[i].leading_zeros());
+                    break;
+                }
+            }
+            bits
+        };
+        if acc_bits >= m_bits {
+            let mut s = acc_bits - m_bits;
+            loop {
+                // shifted = M << s (fixed width; s ≤ ~24 so it fits).
+                let mut shifted = [0u64; FIXED_LIMBS];
+                let limb_s = (s / 64) as usize;
+                let bit_s = s % 64;
+                for i in 0..FIXED_LIMBS - limb_s {
+                    let lo = self.m_limbs[i] << bit_s;
+                    let hi = if bit_s > 0 && i > 0 {
+                        self.m_limbs[i - 1] >> (64 - bit_s)
+                    } else {
+                        0
+                    };
+                    shifted[i + limb_s] = lo | hi;
+                }
+                while fixed_cmp(&acc, &shifted) != std::cmp::Ordering::Less {
+                    fixed_sub(&mut acc, &shifted);
+                }
+                if s == 0 {
+                    break;
+                }
+                s -= 1;
+            }
+        }
+        BigUint::from_limbs(acc.to_vec())
+    }
+
+    /// Allocation-heavy fallback reconstruction (arbitrary modulus sets).
+    fn reconstruct_slow(&self, r: &ResidueVec) -> BigUint {
+        let mut acc = BigUint::zero();
+        for (i, &ri) in r.r.iter().enumerate() {
+            if ri != 0 {
+                acc = acc.add(&self.term[i].mul_u64(ri));
+            }
+        }
+        acc.rem_big(&self.big_m)
+    }
+
+    /// Signed reconstruction under the symmetric convention: values in
+    /// `[0, M/2)` are non-negative, `[M/2, M)` map to `N - M` (standard RNS
+    /// sign handling; HRFNA encodes negatives this way).
+    pub fn reconstruct_signed(&self, r: &ResidueVec) -> (bool, BigUint) {
+        let n = self.reconstruct(r);
+        let half = self.big_m.shr(1);
+        if n >= half {
+            (true, self.big_m.sub(&n))
+        } else {
+            (false, n)
+        }
+    }
+
+    /// Mixed-radix digits (d_0..d_{k-1}) with
+    /// `N = d_0 + d_1·m_0 + d_2·m_0·m_1 + …` — enables magnitude comparison
+    /// without full CRT (paper §II-D / [20]).
+    pub fn mixed_radix(&self, r: &ResidueVec) -> Vec<u64> {
+        let k = self.k();
+        let mut x: Vec<u64> = r.r.clone();
+        let mut digits = vec![0u64; k];
+        for j in 0..k {
+            digits[j] = x[j];
+            // Propagate: x_i := (x_i - d_j) * m_j^{-1} mod m_i for i > j.
+            for i in (j + 1)..k {
+                let b = &self.barrett[i];
+                let dj = digits[j] % self.moduli[i];
+                let diff = b.sub(x[i], dj);
+                x[i] = b.mul(diff, self.mrc_inv[i][j]);
+            }
+        }
+        digits
+    }
+
+    /// Compare two residue vectors by magnitude via mixed-radix digits
+    /// (most-significant digit last).
+    pub fn compare(&self, a: &ResidueVec, b: &ResidueVec) -> std::cmp::Ordering {
+        let da = self.mixed_radix(a);
+        let db = self.mixed_radix(b);
+        for i in (0..da.len()).rev() {
+            match da[i].cmp(&db[i]) {
+                std::cmp::Ordering::Equal => continue,
+                o => return o,
+            }
+        }
+        std::cmp::Ordering::Equal
+    }
+
+    /// Re-encode a big integer into residues (normalization engine step iv).
+    pub fn encode(&self, n: &BigUint) -> ResidueVec {
+        ResidueVec::encode_big(n, &self.moduli)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rns::moduli::DEFAULT_MODULI;
+    use crate::util::proptest::{check, check_with};
+
+    fn ctx() -> CrtContext {
+        CrtContext::new(&DEFAULT_MODULI)
+    }
+
+    #[test]
+    fn inv_mod_known() {
+        assert_eq!(inv_mod(3, 7), 5); // 3*5=15≡1
+        assert_eq!(inv_mod(1, 97), 1);
+        for a in 1..97u64 {
+            assert_eq!(a * inv_mod(a, 97) % 97, 1);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not invertible")]
+    fn inv_mod_non_coprime_panics() {
+        inv_mod(6, 9);
+    }
+
+    #[test]
+    fn reconstruct_small_values() {
+        let c = ctx();
+        for n in [0u64, 1, 2, 65520, 65521, 1_000_000_007] {
+            let r = ResidueVec::encode_u64(n, &DEFAULT_MODULI);
+            assert_eq!(c.reconstruct(&r).to_u64(), Some(n), "n={n}");
+        }
+    }
+
+    #[test]
+    fn reconstruct_three_moduli_exhaustive() {
+        let c = CrtContext::new(&[3, 5, 7]);
+        for n in 0..105u64 {
+            let r = ResidueVec::encode_u64(n, &[3, 5, 7]);
+            assert_eq!(c.reconstruct(&r).to_u64(), Some(n));
+        }
+    }
+
+    #[test]
+    fn prop_crt_roundtrip_u128() {
+        let c = ctx();
+        check("crt-roundtrip", |rng| {
+            let n = ((rng.next_u64() as u128) << 60) | rng.next_u64() as u128;
+            let big = BigUint::from_u128(n);
+            let r = c.encode(&big);
+            crate::prop_assert!(
+                c.reconstruct(&r) == big,
+                "roundtrip failed n={n}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn signed_reconstruction() {
+        let c = ctx();
+        // Encode -5 as M - 5.
+        let m_minus_5 = c.big_m.sub(&BigUint::from_u64(5));
+        let r = c.encode(&m_minus_5);
+        let (neg, mag) = c.reconstruct_signed(&r);
+        assert!(neg);
+        assert_eq!(mag.to_u64(), Some(5));
+        let (neg, mag) = c.reconstruct_signed(&c.encode(&BigUint::from_u64(5)));
+        assert!(!neg);
+        assert_eq!(mag.to_u64(), Some(5));
+    }
+
+    #[test]
+    fn mixed_radix_reconstructs() {
+        let c = CrtContext::new(&[3, 5, 7, 11]);
+        for n in [0u64, 1, 104, 1000, 1154] {
+            let r = ResidueVec::encode_u64(n, &[3, 5, 7, 11]);
+            let d = c.mixed_radix(&r);
+            // N = d0 + d1*3 + d2*15 + d3*105
+            let got = d[0] + d[1] * 3 + d[2] * 15 + d[3] * 105;
+            assert_eq!(got, n, "n={n} digits={d:?}");
+        }
+    }
+
+    #[test]
+    fn prop_mixed_radix_comparison_matches_crt() {
+        let c = ctx();
+        check_with("mrc-compare", 128, |rng| {
+            let a128 = ((rng.next_u64() as u128) << 50) | rng.next_u64() as u128;
+            let b128 = ((rng.next_u64() as u128) << 50) | rng.next_u64() as u128;
+            let ra = c.encode(&BigUint::from_u128(a128));
+            let rb = c.encode(&BigUint::from_u128(b128));
+            crate::prop_assert!(
+                c.compare(&ra, &rb) == a128.cmp(&b128),
+                "compare mismatch a={a128} b={b128}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_fixed_reconstruction_matches_slow_path() {
+        let c = ctx();
+        assert!(c.fixed_ok, "default set must take the fast path");
+        check("crt-fast-vs-slow", |rng| {
+            let n = ((rng.next_u64() as u128) << 63) | rng.next_u64() as u128;
+            let r = c.encode(&BigUint::from_u128(n));
+            let fast = c.reconstruct(&r);
+            let slow = c.reconstruct_slow(&r);
+            crate::prop_assert!(fast == slow, "fast != slow for n={n}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fixed_reconstruction_extremes() {
+        let c = ctx();
+        // All residues at m-1 (the largest representable pre-reduction sum).
+        let r = ResidueVec {
+            r: c.moduli.iter().map(|&m| m - 1).collect(),
+        };
+        assert_eq!(c.reconstruct(&r), c.reconstruct_slow(&r));
+        // Zero.
+        let z = ResidueVec::zero(c.k());
+        assert!(c.reconstruct(&z).is_zero());
+        // M - 1.
+        let m1 = c.big_m.sub(&BigUint::one());
+        let r = c.encode(&m1);
+        assert_eq!(c.reconstruct(&r), m1);
+    }
+
+    #[test]
+    fn homomorphism_through_reconstruction() {
+        // CRT(rX ⊙ rY) == CRT(rX)*CRT(rY) for products < M (Theorem 1 core).
+        let c = ctx();
+        let a = 0xdead_beef_u64;
+        let b = 0xcafe_babe_u64;
+        let ra = ResidueVec::encode_u64(a, &DEFAULT_MODULI);
+        let rb = ResidueVec::encode_u64(b, &DEFAULT_MODULI);
+        let rz = ra.mul(&rb, &c.barrett);
+        assert_eq!(
+            c.reconstruct(&rz).to_u128(),
+            Some(a as u128 * b as u128)
+        );
+    }
+}

@@ -1,0 +1,17 @@
+//! Residue Number System substrate (paper §II-D, §III-A).
+//!
+//! Residues are `u64` values below `u32`-sized moduli; channelwise modular
+//! arithmetic uses Barrett reduction with precomputed constants — the same
+//! "precomputed constants and structured reduction logic" the paper's RTL
+//! uses (§VI-B) — and reconstruction goes through a precomputed CRT context
+//! (or mixed-radix conversion for comparison-only paths).
+
+pub mod moduli;
+pub mod barrett;
+pub mod residue;
+pub mod crt;
+
+pub use barrett::Barrett;
+pub use crt::CrtContext;
+pub use moduli::{default_moduli, generate_prime_moduli, is_pairwise_coprime};
+pub use residue::ResidueVec;

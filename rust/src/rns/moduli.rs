@@ -1,0 +1,197 @@
+//! Modulus-set selection and validation.
+//!
+//! HRFNA requires pairwise coprime moduli (paper §III-A); the default set is
+//! the k=8 largest 16-bit primes, giving a composite modulus M ≈ 2^127.9 —
+//! enough headroom for 64k-long FP32-scale multiply-accumulate chains
+//! between normalization events.
+
+/// Default modulus set — keep in sync with `python/tests/conftest.py`.
+pub const DEFAULT_MODULI: [u64; 8] = [
+    65521, 65519, 65497, 65479, 65449, 65447, 65437, 65423,
+];
+
+/// The default modulus set as a Vec.
+pub fn default_moduli() -> Vec<u64> {
+    DEFAULT_MODULI.to_vec()
+}
+
+/// Greatest common divisor.
+pub fn gcd(mut a: u64, mut b: u64) -> u64 {
+    while b != 0 {
+        (a, b) = (b, a % b);
+    }
+    a
+}
+
+/// True iff every pair of moduli is coprime (CRT requirement).
+pub fn is_pairwise_coprime(moduli: &[u64]) -> bool {
+    for i in 0..moduli.len() {
+        for j in (i + 1)..moduli.len() {
+            if gcd(moduli[i], moduli[j]) != 1 {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Deterministic Miller–Rabin primality for u64 (bases valid for all u64).
+pub fn is_prime(n: u64) -> bool {
+    if n < 2 {
+        return false;
+    }
+    for p in [2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+        if n == p {
+            return true;
+        }
+        if n % p == 0 {
+            return false;
+        }
+    }
+    let mut d = n - 1;
+    let mut r = 0u32;
+    while d % 2 == 0 {
+        d /= 2;
+        r += 1;
+    }
+    'witness: for a in [2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+        let mut x = pow_mod(a, d, n);
+        if x == 1 || x == n - 1 {
+            continue;
+        }
+        for _ in 0..r - 1 {
+            x = mul_mod(x, x, n);
+            if x == n - 1 {
+                continue 'witness;
+            }
+        }
+        return false;
+    }
+    true
+}
+
+/// `(a * b) mod m` without overflow.
+#[inline]
+pub fn mul_mod(a: u64, b: u64, m: u64) -> u64 {
+    ((a as u128 * b as u128) % m as u128) as u64
+}
+
+/// `(base ^ exp) mod m`.
+pub fn pow_mod(mut base: u64, mut exp: u64, m: u64) -> u64 {
+    let mut acc = 1u64;
+    base %= m;
+    while exp > 0 {
+        if exp & 1 == 1 {
+            acc = mul_mod(acc, base, m);
+        }
+        base = mul_mod(base, base, m);
+        exp >>= 1;
+    }
+    acc
+}
+
+/// Generate `k` prime moduli descending from `2^width - 1` (primes are
+/// automatically pairwise coprime). Panics if the width can't supply k
+/// primes or if `width` exceeds 32 (Barrett path uses 64x64->128 products).
+pub fn generate_prime_moduli(k: usize, width: u32) -> Vec<u64> {
+    assert!((4..=32).contains(&width), "width must be in 4..=32");
+    let mut out = Vec::with_capacity(k);
+    let mut candidate = (1u64 << width) - 1;
+    let floor = 1u64 << (width - 1);
+    while out.len() < k && candidate > floor {
+        if is_prime(candidate) {
+            out.push(candidate);
+        }
+        candidate -= 1;
+    }
+    assert!(
+        out.len() == k,
+        "not enough {width}-bit primes for k={k}"
+    );
+    out
+}
+
+/// Composite modulus M = Π m_i as BigUint.
+pub fn composite_modulus(moduli: &[u64]) -> crate::bigint::BigUint {
+    let mut m = crate::bigint::BigUint::one();
+    for &mi in moduli {
+        m = m.mul_u64(mi);
+    }
+    m
+}
+
+/// log2(M) — the dynamic range of the residue-domain integer space.
+pub fn dynamic_range_bits(moduli: &[u64]) -> f64 {
+    moduli.iter().map(|&m| (m as f64).log2()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_set_is_valid() {
+        assert!(is_pairwise_coprime(&DEFAULT_MODULI));
+        for &m in &DEFAULT_MODULI {
+            assert!(is_prime(m), "{m} not prime");
+            assert!(m < 1 << 16);
+        }
+        let bits = dynamic_range_bits(&DEFAULT_MODULI);
+        assert!(bits > 127.0 && bits < 128.0, "bits={bits}");
+    }
+
+    #[test]
+    fn gcd_basics() {
+        assert_eq!(gcd(12, 18), 6);
+        assert_eq!(gcd(17, 5), 1);
+        assert_eq!(gcd(0, 7), 7);
+    }
+
+    #[test]
+    fn coprimality_detects_shared_factor() {
+        assert!(!is_pairwise_coprime(&[6, 9]));
+        assert!(is_pairwise_coprime(&[8, 9, 5, 7, 11]));
+    }
+
+    #[test]
+    fn primality_known_values() {
+        for p in [2u64, 3, 65521, 4294967291, 2_147_483_647] {
+            assert!(is_prime(p), "{p}");
+        }
+        for c in [1u64, 4, 65520, 4294967295, 561, 1105] {
+            assert!(!is_prime(c), "{c}");
+        }
+    }
+
+    #[test]
+    fn generated_moduli_match_default() {
+        assert_eq!(generate_prime_moduli(8, 16), DEFAULT_MODULI.to_vec());
+    }
+
+    #[test]
+    fn generated_moduli_other_widths() {
+        for width in [8u32, 12, 20, 31] {
+            let ms = generate_prime_moduli(4, width);
+            assert!(is_pairwise_coprime(&ms));
+            for &m in &ms {
+                assert!(m < 1 << width && m >= 1 << (width - 1));
+            }
+        }
+    }
+
+    #[test]
+    fn pow_mod_fermat() {
+        // a^(p-1) ≡ 1 mod p for prime p
+        for &p in &[65521u64, 65519] {
+            for a in [2u64, 3, 12345] {
+                assert_eq!(pow_mod(a, p - 1, p), 1);
+            }
+        }
+    }
+
+    #[test]
+    fn composite_modulus_value() {
+        let m = composite_modulus(&[3, 5, 7]);
+        assert_eq!(m.to_u64(), Some(105));
+    }
+}

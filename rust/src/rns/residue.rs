@@ -1,0 +1,191 @@
+//! Residue vectors: encoding integers into per-channel residues and the
+//! channelwise carry-free operations of paper Definition 2 / §IV-A,B.
+
+use super::barrett::Barrett;
+use crate::bigint::BigUint;
+
+/// A residue vector over a modulus set: `r[i] = N mod m[i]`.
+///
+/// The modulus set itself lives in the surrounding context (`CrtContext` or
+/// `HrfnaContext`); `ResidueVec` is plain data, mirroring how the RTL routes
+/// residue words between channel pipelines.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ResidueVec {
+    pub r: Vec<u64>,
+}
+
+impl ResidueVec {
+    /// All-zero residues (the value 0).
+    pub fn zero(k: usize) -> ResidueVec {
+        ResidueVec { r: vec![0; k] }
+    }
+
+    /// Encode a small unsigned integer.
+    pub fn encode_u64(x: u64, moduli: &[u64]) -> ResidueVec {
+        ResidueVec {
+            r: moduli.iter().map(|&m| x % m).collect(),
+        }
+    }
+
+    /// Encode a big unsigned integer (used after normalization re-encoding,
+    /// paper Definition 4 step "re-encode").
+    pub fn encode_big(n: &BigUint, moduli: &[u64]) -> ResidueVec {
+        ResidueVec {
+            r: moduli.iter().map(|&m| n.rem_u64(m)).collect(),
+        }
+    }
+
+    /// Number of channels.
+    pub fn k(&self) -> usize {
+        self.r.len()
+    }
+
+    /// True iff all residues are zero. NOTE: this is a *sufficient* zero
+    /// test only when the represented integer is < M (always true here).
+    pub fn is_zero(&self) -> bool {
+        self.r.iter().all(|&x| x == 0)
+    }
+
+    /// Channelwise modular multiplication (Definition 2): r_Z = r_X ⊙ r_Y.
+    pub fn mul(&self, other: &ResidueVec, ctx: &[Barrett]) -> ResidueVec {
+        debug_assert_eq!(self.k(), other.k());
+        debug_assert_eq!(self.k(), ctx.len());
+        ResidueVec {
+            r: self
+                .r
+                .iter()
+                .zip(&other.r)
+                .zip(ctx)
+                .map(|((&a, &b), bar)| bar.mul(a, b))
+                .collect(),
+        }
+    }
+
+    /// Channelwise modular addition (exponent-synchronized add, §IV-B).
+    pub fn add(&self, other: &ResidueVec, ctx: &[Barrett]) -> ResidueVec {
+        debug_assert_eq!(self.k(), other.k());
+        ResidueVec {
+            r: self
+                .r
+                .iter()
+                .zip(&other.r)
+                .zip(ctx)
+                .map(|((&a, &b), bar)| bar.add(a, b))
+                .collect(),
+        }
+    }
+
+    /// Channelwise modular subtraction.
+    pub fn sub(&self, other: &ResidueVec, ctx: &[Barrett]) -> ResidueVec {
+        debug_assert_eq!(self.k(), other.k());
+        ResidueVec {
+            r: self
+                .r
+                .iter()
+                .zip(&other.r)
+                .zip(ctx)
+                .map(|((&a, &b), bar)| bar.sub(a, b))
+                .collect(),
+        }
+    }
+
+    /// In-place fused multiply-accumulate: `self += x ⊙ y` per channel —
+    /// the hot loop of the Hybrid Dot Product (Alg. 1 step 2b/2c).
+    #[inline]
+    pub fn mac_assign(&mut self, x: &ResidueVec, y: &ResidueVec, ctx: &[Barrett]) {
+        for i in 0..self.r.len() {
+            let p = ctx[i].mul(x.r[i], y.r[i]);
+            self.r[i] = ctx[i].add(self.r[i], p);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rns::barrett::barrett_set;
+    use crate::rns::moduli::DEFAULT_MODULI;
+    use crate::util::proptest::check;
+
+    fn ctx() -> Vec<Barrett> {
+        barrett_set(&DEFAULT_MODULI)
+    }
+
+    #[test]
+    fn encode_small() {
+        let r = ResidueVec::encode_u64(100, &DEFAULT_MODULI);
+        assert!(r.r.iter().all(|&x| x == 100));
+        let r = ResidueVec::encode_u64(65521 + 3, &DEFAULT_MODULI);
+        assert_eq!(r.r[0], 3);
+        assert_eq!(r.r[1], 65524 - 65519);
+    }
+
+    #[test]
+    fn encode_big_matches_u64() {
+        let n = 123_456_789_012_345u64;
+        let a = ResidueVec::encode_u64(n, &DEFAULT_MODULI);
+        let b = ResidueVec::encode_big(&BigUint::from_u64(n), &DEFAULT_MODULI);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn mul_add_homomorphic_small() {
+        // For values whose product stays < min(m), residue ops match integer ops.
+        let c = ctx();
+        let a = ResidueVec::encode_u64(123, &DEFAULT_MODULI);
+        let b = ResidueVec::encode_u64(45, &DEFAULT_MODULI);
+        assert_eq!(
+            a.mul(&b, &c),
+            ResidueVec::encode_u64(123 * 45, &DEFAULT_MODULI)
+        );
+        assert_eq!(
+            a.add(&b, &c),
+            ResidueVec::encode_u64(168, &DEFAULT_MODULI)
+        );
+        assert_eq!(a.sub(&b, &c), ResidueVec::encode_u64(78, &DEFAULT_MODULI));
+    }
+
+    #[test]
+    fn mac_matches_mul_add() {
+        let c = ctx();
+        let mut acc = ResidueVec::encode_u64(7, &DEFAULT_MODULI);
+        let x = ResidueVec::encode_u64(1234, &DEFAULT_MODULI);
+        let y = ResidueVec::encode_u64(4321, &DEFAULT_MODULI);
+        let want = acc.add(&x.mul(&y, &c), &c);
+        acc.mac_assign(&x, &y, &c);
+        assert_eq!(acc, want);
+    }
+
+    #[test]
+    fn prop_residue_ops_match_u128_integers() {
+        let c = ctx();
+        check("residue-homomorphism", |rng| {
+            let a = rng.next_u64() >> 16; // keep products in u128 range
+            let b = rng.next_u64() >> 16;
+            let ra = ResidueVec::encode_u64(a, &DEFAULT_MODULI);
+            let rb = ResidueVec::encode_u64(b, &DEFAULT_MODULI);
+            let prod = (a as u128) * (b as u128);
+            let want_mul = ResidueVec::encode_big(
+                &BigUint::from_u128(prod),
+                &DEFAULT_MODULI,
+            );
+            crate::prop_assert!(ra.mul(&rb, &c) == want_mul, "mul a={a} b={b}");
+            let want_add = ResidueVec::encode_big(
+                &BigUint::from_u128(a as u128 + b as u128),
+                &DEFAULT_MODULI,
+            );
+            crate::prop_assert!(ra.add(&rb, &c) == want_add, "add a={a} b={b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zero_behaviour() {
+        let c = ctx();
+        let z = ResidueVec::zero(8);
+        assert!(z.is_zero());
+        let a = ResidueVec::encode_u64(99, &DEFAULT_MODULI);
+        assert_eq!(a.mul(&z, &c), z);
+        assert_eq!(a.add(&z, &c), a);
+    }
+}

@@ -1,0 +1,190 @@
+//! Artifact manifest: which graphs exist, where their HLO text lives, and
+//! the argument shapes/dtypes they were lowered with (fixed at AOT time;
+//! the coordinator's batcher buckets requests into these shapes).
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Element type of an artifact argument.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    I64,
+    F32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "int64" => Ok(DType::I64),
+            "float32" => Ok(DType::F32),
+            other => bail!("unsupported dtype {other}"),
+        }
+    }
+}
+
+/// Shape + dtype of one argument.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArgSpec {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl ArgSpec {
+    /// Parse `float32[4096]` / `int64[8, 4096]` / `float32[]`.
+    fn parse(s: &str) -> Result<ArgSpec> {
+        let (dt, rest) = s
+            .split_once('[')
+            .ok_or_else(|| anyhow!("bad arg descriptor {s}"))?;
+        let dims = rest
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("bad arg descriptor {s}"))?;
+        let shape = if dims.trim().is_empty() {
+            Vec::new()
+        } else {
+            dims.split(',')
+                .map(|d| d.trim().parse::<usize>().context("bad dim"))
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(ArgSpec {
+            dtype: DType::parse(dt)?,
+            shape,
+        })
+    }
+
+    /// Total element count.
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub name: String,
+    pub path: PathBuf,
+    pub args: Vec<ArgSpec>,
+}
+
+/// Parsed `manifest.txt`.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: BTreeMap<String, Entry>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Locate the artifact directory: `$HRFNA_ARTIFACTS` or `./artifacts`
+    /// (walking up from the current dir so tests work from target dirs).
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("HRFNA_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+        loop {
+            let candidate = dir.join("artifacts");
+            if candidate.join("manifest.txt").exists() {
+                return candidate;
+            }
+            if !dir.pop() {
+                return PathBuf::from("artifacts");
+            }
+        }
+    }
+
+    /// Load the manifest from a directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("reading manifest in {dir:?} (run `make artifacts`)"))?;
+        Manifest::parse(&text, dir)
+    }
+
+    /// Parse manifest text (`name file argdesc;argdesc;...` per line).
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let mut entries = BTreeMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.splitn(3, ' ');
+            let name = parts.next().ok_or_else(|| anyhow!("empty line"))?;
+            let file = parts
+                .next()
+                .ok_or_else(|| anyhow!("missing file in {line}"))?;
+            let argdesc = parts.next().unwrap_or("");
+            let args = if argdesc.is_empty() {
+                Vec::new()
+            } else {
+                argdesc
+                    .split(';')
+                    .map(ArgSpec::parse)
+                    .collect::<Result<Vec<_>>>()?
+            };
+            entries.insert(
+                name.to_string(),
+                Entry {
+                    name: name.to_string(),
+                    path: dir.join(file),
+                    args,
+                },
+            );
+        }
+        Ok(Manifest {
+            entries,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Entry lookup.
+    pub fn get(&self, name: &str) -> Result<&Entry> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name} not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_arg_specs() {
+        let a = ArgSpec::parse("int64[8, 4096]").unwrap();
+        assert_eq!(a.dtype, DType::I64);
+        assert_eq!(a.shape, vec![8, 4096]);
+        assert_eq!(a.numel(), 8 * 4096);
+        let s = ArgSpec::parse("float32[]").unwrap();
+        assert_eq!(s.shape.len(), 0);
+        assert_eq!(s.numel(), 1);
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(ArgSpec::parse("int64").is_err());
+        assert!(ArgSpec::parse("complex64[2]").is_err());
+        assert!(ArgSpec::parse("int64[a]").is_err());
+    }
+
+    #[test]
+    fn parses_manifest_lines() {
+        let text = "hybrid_dot hybrid_dot.hlo.txt int64[8, 4096];int64[8, 4096];int64[8]\nfp32_dot fp32_dot.hlo.txt float32[4096];float32[4096]\n";
+        let m = Manifest::parse(text, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let e = m.get("hybrid_dot").unwrap();
+        assert_eq!(e.args.len(), 3);
+        assert_eq!(e.path, PathBuf::from("/tmp/a/hybrid_dot.hlo.txt"));
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // Integration-lite: if the repo's artifacts are built, load them.
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.entries.contains_key("hybrid_dot"));
+            assert!(m.entries.contains_key("fp32_dot"));
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts (`artifacts/*.hlo.txt`,
+//! produced once by `make artifacts` → `python -m compile.aot`) and executes
+//! them from the Rust request path. Python never runs at request time.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 emits HloModuleProto with 64-bit
+//! instruction ids which xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see DESIGN.md and /opt/xla-example/README.md).
+
+pub mod artifacts;
+pub mod pjrt;
+pub mod service;
+
+pub use artifacts::{ArgSpec, DType, Manifest};
+pub use pjrt::Engine;
+pub use service::EngineHandle;

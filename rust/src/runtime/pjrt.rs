@@ -1,0 +1,215 @@
+//! PJRT execution engine: compile HLO text once at startup, execute many
+//! times from the request path (one compiled executable per model variant,
+//! as in the vLLM-router-style architecture).
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use super::artifacts::{ArgSpec, DType, Manifest};
+
+/// Typed input tensor for an execution call.
+#[derive(Clone, Debug)]
+pub enum Tensor {
+    I64(Vec<i64>, Vec<usize>),
+    F32(Vec<f32>, Vec<usize>),
+    /// Scalar f32 (rank-0).
+    ScalarF32(f32),
+}
+
+impl Tensor {
+    fn matches(&self, spec: &ArgSpec) -> bool {
+        match self {
+            Tensor::I64(data, shape) => {
+                spec.dtype == DType::I64 && *shape == spec.shape && data.len() == spec.numel()
+            }
+            Tensor::F32(data, shape) => {
+                spec.dtype == DType::F32 && *shape == spec.shape && data.len() == spec.numel()
+            }
+            Tensor::ScalarF32(_) => spec.dtype == DType::F32 && spec.shape.is_empty(),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            Tensor::I64(data, shape) => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            Tensor::F32(data, shape) => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            Tensor::ScalarF32(x) => xla::Literal::scalar(*x),
+        })
+    }
+}
+
+/// Typed output tensor.
+#[derive(Clone, Debug)]
+pub enum Output {
+    I64(Vec<i64>),
+    F32(Vec<f32>),
+}
+
+impl Output {
+    /// Unwrap i64 data.
+    pub fn into_i64(self) -> Result<Vec<i64>> {
+        match self {
+            Output::I64(v) => Ok(v),
+            _ => bail!("output is not i64"),
+        }
+    }
+
+    /// Unwrap f32 data.
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            Output::F32(v) => Ok(v),
+            _ => bail!("output is not f32"),
+        }
+    }
+}
+
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    args: Vec<ArgSpec>,
+    out_dtype: DType,
+}
+
+/// The runtime engine: a PJRT CPU client plus one compiled executable per
+/// artifact. `execute` is `&self` and internally serialized per executable.
+pub struct Engine {
+    client: xla::PjRtClient,
+    compiled: BTreeMap<String, Mutex<Compiled>>,
+    pub manifest: Manifest,
+}
+
+impl Engine {
+    /// Load every artifact in the manifest directory and compile it.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut compiled = BTreeMap::new();
+        for (name, entry) in &manifest.entries {
+            let proto = xla::HloModuleProto::from_text_file(
+                entry
+                    .path
+                    .to_str()
+                    .context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text for {name}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            // Output dtype convention: hybrid_* artifacts return i64,
+            // fp32_*/rk4_* return f32 (matches compile/model.py).
+            let out_dtype = if name.starts_with("hybrid") {
+                DType::I64
+            } else {
+                DType::F32
+            };
+            compiled.insert(
+                name.clone(),
+                Mutex::new(Compiled {
+                    exe,
+                    args: entry.args.clone(),
+                    out_dtype,
+                }),
+            );
+        }
+        Ok(Engine {
+            client,
+            compiled,
+            manifest,
+        })
+    }
+
+    /// Load from the default artifact location.
+    pub fn load_default() -> Result<Engine> {
+        Engine::load(&Manifest::default_dir())
+    }
+
+    /// Names of the loaded executables.
+    pub fn names(&self) -> Vec<String> {
+        self.compiled.keys().cloned().collect()
+    }
+
+    /// Device/platform description.
+    pub fn platform(&self) -> String {
+        format!(
+            "{} ({} device(s))",
+            self.client.platform_name(),
+            self.client.device_count()
+        )
+    }
+
+    /// Execute artifact `name` with `inputs`; returns the first (tupled)
+    /// output flattened.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Output> {
+        let slot = self
+            .compiled
+            .get(name)
+            .with_context(|| format!("unknown executable {name}"))?;
+        let guard = slot.lock().expect("engine poisoned");
+        if inputs.len() != guard.args.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                guard.args.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&guard.args).enumerate() {
+            if !t.matches(spec) {
+                bail!("{name}: input {i} does not match {spec:?}");
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let result = guard.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        // Graphs are lowered with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(match guard.out_dtype {
+            DType::I64 => Output::I64(out.to_vec::<i64>()?),
+            DType::F32 => Output::F32(out.to_vec::<f32>()?),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Engine tests that need real artifacts live in rust/tests/ (they
+    // require `make artifacts` to have run). Here: pure-logic tests.
+    use super::*;
+
+    #[test]
+    fn tensor_shape_matching() {
+        let spec = ArgSpec {
+            dtype: DType::I64,
+            shape: vec![2, 3],
+        };
+        let good = Tensor::I64(vec![0; 6], vec![2, 3]);
+        let bad_len = Tensor::I64(vec![0; 5], vec![2, 3]);
+        let bad_ty = Tensor::F32(vec![0.0; 6], vec![2, 3]);
+        assert!(good.matches(&spec));
+        assert!(!bad_len.matches(&spec));
+        assert!(!bad_ty.matches(&spec));
+    }
+
+    #[test]
+    fn scalar_matches_rank0_only() {
+        let s = Tensor::ScalarF32(1.0);
+        assert!(s.matches(&ArgSpec { dtype: DType::F32, shape: vec![] }));
+        assert!(!s.matches(&ArgSpec { dtype: DType::F32, shape: vec![1] }));
+    }
+
+    #[test]
+    fn output_unwrap() {
+        assert_eq!(Output::I64(vec![1]).into_i64().unwrap(), vec![1]);
+        assert!(Output::I64(vec![1]).into_f32().is_err());
+    }
+}

@@ -1,0 +1,104 @@
+//! Engine service thread: the `xla` crate's PJRT client is `Rc`-based and
+//! not `Send`, so a dedicated thread owns the [`Engine`] and worker lanes
+//! talk to it through a cloneable, `Send` [`EngineHandle`]. PJRT's CPU
+//! backend parallelizes internally, so a single dispatch thread is not the
+//! throughput bottleneck (measured in the serve bench).
+
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread;
+
+use super::pjrt::{Engine, Output, Tensor};
+
+enum Call {
+    Execute {
+        name: String,
+        inputs: Vec<Tensor>,
+        reply: mpsc::Sender<Result<Output>>,
+    },
+    Info {
+        reply: mpsc::Sender<(String, Vec<String>)>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, thread-safe handle to the engine service.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<Call>,
+}
+
+impl EngineHandle {
+    /// Spawn the engine thread, loading artifacts from `dir` (or the
+    /// default location when `None`). Fails fast if loading fails.
+    pub fn spawn(dir: Option<PathBuf>) -> Result<EngineHandle> {
+        let (tx, rx) = mpsc::channel::<Call>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        thread::Builder::new()
+            .name("hrfna-engine".to_string())
+            .spawn(move || {
+                let engine = match dir {
+                    Some(d) => Engine::load(&d),
+                    None => Engine::load_default(),
+                };
+                let engine = match engine {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(call) = rx.recv() {
+                    match call {
+                        Call::Execute {
+                            name,
+                            inputs,
+                            reply,
+                        } => {
+                            let _ = reply.send(engine.execute(&name, &inputs));
+                        }
+                        Call::Info { reply } => {
+                            let _ = reply.send((engine.platform(), engine.names()));
+                        }
+                        Call::Shutdown => break,
+                    }
+                }
+            })
+            .expect("spawn engine thread");
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during load"))??;
+        Ok(EngineHandle { tx })
+    }
+
+    /// Execute an artifact synchronously.
+    pub fn execute(&self, name: &str, inputs: Vec<Tensor>) -> Result<Output> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Call::Execute {
+                name: name.to_string(),
+                inputs,
+                reply,
+            })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine reply dropped"))?
+    }
+
+    /// Platform description + loaded artifact names.
+    pub fn info(&self) -> Result<(String, Vec<String>)> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Call::Info { reply })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine reply dropped"))
+    }
+
+    /// Stop the engine thread (best-effort).
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Call::Shutdown);
+    }
+}

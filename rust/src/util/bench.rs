@@ -1,0 +1,100 @@
+//! Micro-benchmark harness (the offline registry has no criterion).
+//!
+//! Warms up, then runs timed iterations until both a minimum iteration count
+//! and a minimum wall-clock budget are met; reports ns/iter with deviation.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub ns_per_iter: f64,
+    pub stddev_ns: f64,
+    pub throughput_per_s: f64,
+}
+
+impl BenchResult {
+    /// One-line human-readable summary.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>12.1} ns/iter (±{:>8.1})  {:>14.0} it/s",
+            self.name, self.ns_per_iter, self.stddev_ns, self.throughput_per_s
+        )
+    }
+}
+
+/// Benchmark a closure. `f` should return something observable to keep the
+/// optimizer honest (its value is black-boxed here).
+pub fn bench<T, F: FnMut() -> T>(name: &str, mut f: F) -> BenchResult {
+    bench_with(name, Duration::from_millis(300), 10, &mut f)
+}
+
+/// Benchmark with an explicit time budget and minimum sample count.
+pub fn bench_with<T, F: FnMut() -> T>(
+    name: &str,
+    budget: Duration,
+    min_samples: usize,
+    f: &mut F,
+) -> BenchResult {
+    // Warm-up + calibration: find an inner-loop count so one sample takes
+    // roughly budget/20.
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let once = t0.elapsed().max(Duration::from_nanos(20));
+    let target_sample = budget / 20;
+    let inner = ((target_sample.as_nanos() / once.as_nanos().max(1)).max(1)) as u64;
+
+    let mut samples: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_samples || start.elapsed() < budget {
+        let t = Instant::now();
+        for _ in 0..inner {
+            std::hint::black_box(f());
+        }
+        samples.push(t.elapsed().as_nanos() as f64 / inner as f64);
+        if samples.len() > 10_000 {
+            break;
+        }
+    }
+    let n = samples.len() as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / n;
+    BenchResult {
+        name: name.to_string(),
+        iters: inner * samples.len() as u64,
+        ns_per_iter: mean,
+        stddev_ns: var.sqrt(),
+        throughput_per_s: 1e9 / mean,
+    }
+}
+
+/// Print a bench-suite header (keeps `cargo bench` output structured).
+pub fn suite(title: &str) {
+    println!("\n##### {title} #####");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_positive_time() {
+        let r = bench_with(
+            "noop-ish",
+            Duration::from_millis(20),
+            3,
+            &mut || std::hint::black_box(1u64 + 1),
+        );
+        assert!(r.ns_per_iter > 0.0);
+        assert!(r.iters > 0);
+        assert!(r.throughput_per_s > 0.0);
+    }
+
+    #[test]
+    fn line_contains_name() {
+        let r = bench_with("xyz", Duration::from_millis(5), 2, &mut || 0u8);
+        assert!(r.line().contains("xyz"));
+    }
+}

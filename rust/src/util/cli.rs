@@ -1,0 +1,125 @@
+//! Minimal command-line argument parser (the offline registry has no clap).
+//!
+//! Grammar: `prog <subcommand> [--flag] [--key value] [--key=value] [pos...]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, positional args and `--key value` opts.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (exclusive of argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.opts.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Raw string option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed option with default; panics with a clear message on parse error.
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|e| panic!("--{key}={v}: {e}")),
+        }
+    }
+
+    /// Boolean flag (present without value) or explicit `--key=true/false`.
+    pub fn flag(&self, key: &str) -> bool {
+        if self.flags.iter().any(|f| f == key) {
+            return true;
+        }
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn subcommand_and_positional() {
+        let a = parse("dot 123 abc");
+        assert_eq!(a.subcommand.as_deref(), Some("dot"));
+        assert_eq!(a.positional, vec!["123", "abc"]);
+    }
+
+    #[test]
+    fn key_value_both_styles() {
+        let a = parse("run --n 64 --tau=0.5");
+        assert_eq!(a.parse_or("n", 0usize), 64);
+        assert_eq!(a.parse_or("tau", 0.0f64), 0.5);
+    }
+
+    #[test]
+    fn flags() {
+        let a = parse("run --verbose --check=true --quiet");
+        assert!(a.flag("verbose"));
+        assert!(a.flag("check"));
+        assert!(a.flag("quiet"));
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.parse_or("n", 7usize), 7);
+        assert_eq!(a.str_or("mode", "x"), "x");
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("run --a --b v");
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("v"));
+    }
+}

@@ -1,0 +1,101 @@
+//! Tiny leveled logger controlled by the `HRFNA_LOG` environment variable
+//! (`error|warn|info|debug|trace`, default `info`).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Log severity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(255);
+static START: OnceLock<Instant> = OnceLock::new();
+
+fn level() -> u8 {
+    let l = LEVEL.load(Ordering::Relaxed);
+    if l != 255 {
+        return l;
+    }
+    let parsed = match std::env::var("HRFNA_LOG").as_deref() {
+        Ok("error") => 0,
+        Ok("warn") => 1,
+        Ok("debug") => 3,
+        Ok("trace") => 4,
+        _ => 2,
+    };
+    LEVEL.store(parsed, Ordering::Relaxed);
+    parsed
+}
+
+/// Override the level programmatically (tests, CLI --verbose).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// True if `l` would currently be emitted.
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= level()
+}
+
+/// Emit a log line (used by the macros).
+pub fn emit(l: Level, args: std::fmt::Arguments<'_>) {
+    if !enabled(l) {
+        return;
+    }
+    let start = START.get_or_init(Instant::now);
+    let t = start.elapsed().as_secs_f64();
+    let tag = match l {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    };
+    eprintln!("[{t:9.3}s {tag}] {args}");
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($t:tt)+) => { $crate::util::log::emit($crate::util::log::Level::Info, format_args!($($t)+)) };
+}
+#[macro_export]
+macro_rules! log_warn {
+    ($($t:tt)+) => { $crate::util::log::emit($crate::util::log::Level::Warn, format_args!($($t)+)) };
+}
+#[macro_export]
+macro_rules! log_error {
+    ($($t:tt)+) => { $crate::util::log::emit($crate::util::log::Level::Error, format_args!($($t)+)) };
+}
+#[macro_export]
+macro_rules! log_debug {
+    ($($t:tt)+) => { $crate::util::log::emit($crate::util::log::Level::Debug, format_args!($($t)+)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+    }
+
+    #[test]
+    fn emit_does_not_panic() {
+        set_level(Level::Trace);
+        emit(Level::Debug, format_args!("hello {}", 1));
+        set_level(Level::Info);
+    }
+}

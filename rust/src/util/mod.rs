@@ -1,0 +1,18 @@
+//! Hand-rolled utility substrates.
+//!
+//! The offline crate registry carries only `xla`/`anyhow`/`thiserror`, so the
+//! usual ecosystem crates (rand, clap, criterion, proptest, serde) are
+//! re-implemented here at the scale this project needs.
+
+pub mod prng;
+pub mod stats;
+pub mod table;
+pub mod cli;
+pub mod proptest;
+pub mod threadpool;
+pub mod bench;
+pub mod log;
+
+pub use prng::Rng;
+pub use stats::Summary;
+pub use table::Table;

@@ -1,0 +1,97 @@
+//! Mini property-testing harness (the offline registry has no proptest).
+//!
+//! Runs a property over many seeded cases; on failure reports the seed and
+//! case index so the exact input is reproducible with `Rng::new(seed)`.
+
+use super::prng::Rng;
+
+/// Default number of cases per property.
+pub const DEFAULT_CASES: usize = 256;
+
+/// Run `prop` over `cases` deterministic cases. The closure receives a
+/// per-case RNG and returns `Err(reason)` on violation. Panics (test
+/// failure) with the reproducing seed on the first violation.
+pub fn check_with<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    // Derive per-case seeds from the property name so adding properties
+    // doesn't shift the cases of the others.
+    let base = name
+        .bytes()
+        .fold(0xcbf29ce484222325u64, |h, b| {
+            (h ^ b as u64).wrapping_mul(0x100000001b3)
+        });
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(reason) = prop(&mut rng) {
+            panic!(
+                "property `{name}` failed at case {case}/{cases} (seed={seed:#x}): {reason}"
+            );
+        }
+    }
+}
+
+/// Run with the default number of cases.
+pub fn check<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    check_with(name, DEFAULT_CASES, prop);
+}
+
+/// Assert-like helper producing the Err the harness expects.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check_with("always-true", 100, |_rng| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-false` failed")]
+    fn failing_property_panics_with_seed() {
+        check_with("always-false", 10, |_rng| Err("nope".into()));
+    }
+
+    #[test]
+    fn prop_assert_macro() {
+        check_with("macro", 10, |rng| {
+            let x = rng.below(100);
+            prop_assert!(x < 100, "x={x} out of range");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first: Vec<u64> = Vec::new();
+        check_with("det", 5, |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second: Vec<u64> = Vec::new();
+        check_with("det", 5, |rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,149 @@
+//! Descriptive statistics and error metrics (RMS error is the paper's
+//! accuracy metric, §VII-A.2).
+
+/// Summary statistics over a sample.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    /// Compute summary statistics; panics on an empty sample.
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "Summary::of(empty)");
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: percentile_sorted(&sorted, 50.0),
+            p95: percentile_sorted(&sorted, 95.0),
+            p99: percentile_sorted(&sorted, 99.0),
+        }
+    }
+}
+
+/// Linear-interpolated percentile over a pre-sorted sample.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=100.0).contains(&p));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Root-mean-square of a sample.
+pub fn rms(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    (xs.iter().map(|x| x * x).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// RMS error between a measurement and a (double-precision) reference —
+/// the paper's aggregate accuracy metric.
+pub fn rms_error(got: &[f64], want: &[f64]) -> f64 {
+    assert_eq!(got.len(), want.len());
+    assert!(!got.is_empty());
+    let sum: f64 = got
+        .iter()
+        .zip(want)
+        .map(|(g, w)| {
+            let d = g - w;
+            d * d
+        })
+        .sum();
+    (sum / got.len() as f64).sqrt()
+}
+
+/// Relative RMS error: RMS(got-want) / RMS(want). Guards a zero reference.
+pub fn relative_rms_error(got: &[f64], want: &[f64]) -> f64 {
+    let denom = rms(want);
+    if denom == 0.0 {
+        return rms_error(got, want);
+    }
+    rms_error(got, want) / denom
+}
+
+/// Maximum absolute elementwise error.
+pub fn max_abs_error(got: &[f64], want: &[f64]) -> f64 {
+    assert_eq!(got.len(), want.len());
+    got.iter()
+        .zip(want)
+        .map(|(g, w)| (g - w).abs())
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_constant() {
+        let s = Summary::of(&[2.0; 10]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 2.0);
+        assert_eq!(s.p99, 2.0);
+    }
+
+    #[test]
+    fn summary_linear() {
+        let xs: Vec<f64> = (1..=5).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.p50, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let sorted = [0.0, 10.0];
+        assert_eq!(percentile_sorted(&sorted, 50.0), 5.0);
+        assert_eq!(percentile_sorted(&sorted, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&sorted, 100.0), 10.0);
+    }
+
+    #[test]
+    fn rms_error_basics() {
+        assert_eq!(rms_error(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert!((rms_error(&[1.0, 1.0], &[0.0, 0.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn relative_rms_scale_invariant() {
+        let want = [100.0, 200.0, 300.0];
+        let got = [101.0, 202.0, 303.0];
+        let r = relative_rms_error(&got, &want);
+        assert!((r - 0.01).abs() < 1e-3, "r={r}");
+    }
+
+    #[test]
+    fn max_abs() {
+        assert_eq!(max_abs_error(&[1.0, 5.0], &[1.0, 2.0]), 3.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_summary_panics() {
+        Summary::of(&[]);
+    }
+}

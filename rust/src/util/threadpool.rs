@@ -1,0 +1,182 @@
+//! Fixed-size worker thread pool (no tokio in the offline registry; the
+//! coordinator's workers and the benchmark sweeps run on this).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed pool of worker threads consuming a shared job queue.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
+    executed: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// Spawn `size` workers (at least 1).
+    pub fn new(size: usize) -> ThreadPool {
+        let size = size.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let executed = Arc::new(AtomicUsize::new(0));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let pending = Arc::clone(&pending);
+                let executed = Arc::clone(&executed);
+                thread::Builder::new()
+                    .name(format!("hrfna-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                executed.fetch_add(1, Ordering::Relaxed);
+                                let (lock, cvar) = &*pending;
+                                let mut p = lock.lock().unwrap();
+                                *p -= 1;
+                                if *p == 0 {
+                                    cvar.notify_all();
+                                }
+                            }
+                            Err(_) => break, // channel closed: shut down
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool {
+            tx: Some(tx),
+            workers,
+            pending,
+            executed,
+        }
+    }
+
+    /// Pool sized to the machine (cores, at least 2).
+    pub fn for_host() -> ThreadPool {
+        let n = thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(2);
+        ThreadPool::new(n)
+    }
+
+    /// Submit a job for asynchronous execution.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, job: F) {
+        {
+            let (lock, _) = &*self.pending;
+            *lock.lock().unwrap() += 1;
+        }
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(job))
+            .expect("worker channel closed");
+    }
+
+    /// Block until every submitted job has completed.
+    pub fn wait(&self) {
+        let (lock, cvar) = &*self.pending;
+        let mut p = lock.lock().unwrap();
+        while *p > 0 {
+            p = cvar.wait(p).unwrap();
+        }
+    }
+
+    /// Total jobs executed so far.
+    pub fn executed(&self) -> usize {
+        self.executed.load(Ordering::Relaxed)
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.wait();
+        drop(self.tx.take()); // close the channel; workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Map `f` over `items` in parallel, preserving order, using `pool`.
+pub fn par_map<T, R, F>(pool: &ThreadPool, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send + 'static,
+    R: Send + 'static,
+    F: Fn(T) -> R + Send + Sync + 'static,
+{
+    let f = Arc::new(f);
+    let out: Arc<Mutex<Vec<Option<R>>>> =
+        Arc::new(Mutex::new((0..items.len()).map(|_| None).collect()));
+    for (i, item) in items.into_iter().enumerate() {
+        let f = Arc::clone(&f);
+        let out = Arc::clone(&out);
+        pool.submit(move || {
+            let r = f(item);
+            out.lock().unwrap()[i] = Some(r);
+        });
+    }
+    pool.wait();
+    Arc::try_unwrap(out)
+        .ok()
+        .expect("pending refs")
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|o| o.expect("job dropped"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+        assert_eq!(pool.executed(), 100);
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = par_map(&pool, (0..50).collect::<Vec<u64>>(), |x| x * 2);
+        assert_eq!(out, (0..50).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn wait_with_no_jobs_returns() {
+        let pool = ThreadPool::new(2);
+        pool.wait();
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = ThreadPool::new(2);
+        pool.submit(|| {});
+        drop(pool);
+    }
+}

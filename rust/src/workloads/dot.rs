@@ -1,0 +1,106 @@
+//! Vector dot product (paper §VII-B, Algorithm 1): the long-accumulation
+//! workload. One generic kernel runs every format with the identical loop.
+
+use super::traits::Numeric;
+use crate::util::stats;
+
+/// Dot product of two real vectors evaluated in format `N`:
+/// encode once, MAC with format-native accumulation, decode once
+/// (Algorithm 1: exponent-coherent accumulation, one final reconstruction).
+pub fn dot_product<N: Numeric>(xs: &[f64], ys: &[f64], ctx: &N::Ctx) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let mut acc = N::zero(ctx);
+    for (x, y) in xs.iter().zip(ys) {
+        let nx = N::from_f64(*x, ctx);
+        let ny = N::from_f64(*y, ctx);
+        acc.mac_assign(&nx, &ny, ctx);
+    }
+    acc.to_f64(ctx)
+}
+
+/// Dot product over pre-encoded operands (separates encode cost from the
+/// accumulation loop — the timing-path variant).
+pub fn dot_product_encoded<N: Numeric>(xs: &[N], ys: &[N], ctx: &N::Ctx) -> N {
+    assert_eq!(xs.len(), ys.len());
+    let mut acc = N::zero(ctx);
+    for (x, y) in xs.iter().zip(ys) {
+        acc.mac_assign(x, y, ctx);
+    }
+    acc
+}
+
+/// Accuracy experiment: many random dot products at length `n`; returns
+/// the RMS of relative errors vs the f64 reference (§VII-A.2 metric).
+pub fn dot_rms_error<N: Numeric>(
+    trials: usize,
+    n: usize,
+    dist: super::generators::Dist,
+    seed: u64,
+    ctx: &N::Ctx,
+) -> f64 {
+    let mut rng = crate::util::prng::Rng::new(seed);
+    let mut rel_errors = Vec::with_capacity(trials);
+    for _ in 0..trials {
+        let xs = dist.sample_vec(&mut rng, n);
+        let ys = dist.sample_vec(&mut rng, n);
+        let want = dot_product::<f64>(&xs, &ys, &());
+        let got = dot_product::<N>(&xs, &ys, ctx);
+        let denom = want.abs().max(1e-300);
+        rel_errors.push((got - want) / denom);
+    }
+    stats::rms(&rel_errors)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::{Bfp, BfpConfig};
+    use crate::hybrid::{Hrfna, HrfnaContext};
+    use crate::workloads::generators::Dist;
+
+    #[test]
+    fn f64_dot_is_exactish() {
+        let xs = vec![1.0, 2.0, 3.0];
+        let ys = vec![4.0, 5.0, 6.0];
+        assert_eq!(dot_product::<f64>(&xs, &ys, &()), 32.0);
+    }
+
+    #[test]
+    fn hrfna_dot_matches_reference_small() {
+        let ctx = HrfnaContext::paper_default();
+        let xs = vec![1.5, -2.0, 3.25, 0.0, 10.0];
+        let ys = vec![2.0, 1.0, -4.0, 9.0, 0.5];
+        let want = dot_product::<f64>(&xs, &ys, &());
+        let got = dot_product::<Hrfna>(&xs, &ys, &ctx);
+        assert!((got - want).abs() < 1e-6 * want.abs().max(1.0));
+    }
+
+    #[test]
+    fn hrfna_dot_rms_below_paper_threshold_1k() {
+        // Paper §VII-B.3: RMS error below 1e-6 across lengths.
+        let ctx = HrfnaContext::paper_default();
+        let rms = dot_rms_error::<Hrfna>(5, 1024, Dist::moderate(), 42, &ctx);
+        assert!(rms < 1e-6, "rms={rms}");
+    }
+
+    #[test]
+    fn bfp_dot_worse_than_hrfna() {
+        let hctx = HrfnaContext::paper_default();
+        let bctx = BfpConfig::default();
+        let h = dot_rms_error::<Hrfna>(3, 2048, Dist::moderate(), 7, &hctx);
+        let b = dot_rms_error::<Bfp>(3, 2048, Dist::moderate(), 7, &bctx);
+        assert!(b > h * 10.0, "BFP rms={b} should exceed HRFNA rms={h}");
+    }
+
+    #[test]
+    fn encoded_variant_matches() {
+        let ctx = HrfnaContext::paper_default();
+        let xs = vec![1.0, 2.0, -3.0];
+        let ys = vec![4.0, -5.0, 6.0];
+        let ex: Vec<Hrfna> = xs.iter().map(|&x| Hrfna::encode(x, &ctx)).collect();
+        let ey: Vec<Hrfna> = ys.iter().map(|&y| Hrfna::encode(y, &ctx)).collect();
+        let got = dot_product_encoded::<Hrfna>(&ex, &ey, &ctx).decode(&ctx);
+        let want = dot_product::<f64>(&xs, &ys, &());
+        assert!((got - want).abs() < 1e-6 * want.abs());
+    }
+}

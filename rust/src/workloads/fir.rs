@@ -1,0 +1,123 @@
+//! FIR filtering (the signal-processing workload class the paper's
+//! introduction motivates; cf. ref. [16] RNS FIR filters): direct-form
+//! convolution is a sliding dot product — multiplication-dominated with
+//! exponent-coherent taps, the HRFNA sweet spot (§IX-A).
+
+use super::traits::Numeric;
+use crate::util::stats;
+
+/// Direct-form FIR: `y[n] = Σ_i h[i] · x[n-i]` in format `N`.
+/// Taps and signal are encoded once; each output is a MAC chain.
+pub fn fir_filter<N: Numeric>(taps: &[f64], signal: &[f64], ctx: &N::Ctx) -> Vec<f64> {
+    assert!(!taps.is_empty());
+    let eh: Vec<N> = taps.iter().map(|&t| N::from_f64(t, ctx)).collect();
+    let ex: Vec<N> = signal.iter().map(|&s| N::from_f64(s, ctx)).collect();
+    (0..signal.len())
+        .map(|n| {
+            let mut acc = N::zero(ctx);
+            for (i, h) in eh.iter().enumerate() {
+                if n >= i {
+                    acc.mac_assign(h, &ex[n - i], ctx);
+                }
+            }
+            acc.to_f64(ctx)
+        })
+        .collect()
+}
+
+/// Windowed-sinc low-pass taps (Hamming window), normalized cutoff
+/// `fc ∈ (0, 0.5)`.
+pub fn lowpass_taps(order: usize, fc: f64) -> Vec<f64> {
+    assert!(order >= 2 && (0.0..0.5).contains(&fc));
+    let m = order as f64;
+    (0..=order)
+        .map(|i| {
+            let x = i as f64 - m / 2.0;
+            let sinc = if x == 0.0 {
+                2.0 * fc
+            } else {
+                (std::f64::consts::TAU * fc * x).sin() / (std::f64::consts::PI * x)
+            };
+            let window =
+                0.54 - 0.46 * (std::f64::consts::TAU * i as f64 / m).cos();
+            sinc * window
+        })
+        .collect()
+}
+
+/// RMS error of a format's FIR output vs the f64 reference on a noisy
+/// two-tone test signal.
+pub fn fir_rms_error<N: Numeric>(
+    order: usize,
+    signal_len: usize,
+    seed: u64,
+    ctx: &N::Ctx,
+) -> f64 {
+    let taps = lowpass_taps(order, 0.1);
+    let mut rng = crate::util::prng::Rng::new(seed);
+    let signal: Vec<f64> = (0..signal_len)
+        .map(|i| {
+            let t = i as f64;
+            (0.05 * t).sin() + 0.5 * (0.8 * t).sin() + 0.1 * rng.normal()
+        })
+        .collect();
+    let want = fir_filter::<f64>(&taps, &signal, &());
+    let got = fir_filter::<N>(&taps, &signal, ctx);
+    stats::rms_error(&got, &want) / stats::rms(&want).max(1e-300)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::{Bfp, BfpConfig};
+    use crate::hybrid::{Hrfna, HrfnaContext};
+
+    #[test]
+    fn impulse_response_recovers_taps() {
+        let taps = lowpass_taps(16, 0.2);
+        let mut impulse = vec![0.0; 32];
+        impulse[0] = 1.0;
+        let y = fir_filter::<f64>(&taps, &impulse, &());
+        for (i, &t) in taps.iter().enumerate() {
+            assert!((y[i] - t).abs() < 1e-12, "tap {i}");
+        }
+    }
+
+    #[test]
+    fn lowpass_attenuates_high_tone() {
+        // Filter a high-frequency tone: output power must drop sharply.
+        let taps = lowpass_taps(64, 0.05);
+        let signal: Vec<f64> = (0..512).map(|i| (2.5 * i as f64).sin()).collect();
+        let y = fir_filter::<f64>(&taps, &signal, &());
+        let in_rms = crate::util::stats::rms(&signal);
+        let out_rms = crate::util::stats::rms(&y[64..]);
+        assert!(out_rms < in_rms * 0.05, "attenuation {out_rms}/{in_rms}");
+    }
+
+    #[test]
+    fn hrfna_fir_matches_f64() {
+        let ctx = HrfnaContext::paper_default();
+        let rel = fir_rms_error::<Hrfna>(32, 256, 9, &ctx);
+        assert!(rel < 1e-6, "rel={rel}");
+    }
+
+    #[test]
+    fn hrfna_beats_bfp_on_fir() {
+        let hctx = HrfnaContext::paper_default();
+        let bctx = BfpConfig::default();
+        let h = fir_rms_error::<Hrfna>(32, 256, 9, &hctx);
+        let b = fir_rms_error::<Bfp>(32, 256, 9, &bctx);
+        assert!(b > h * 10.0, "BFP {b} vs HRFNA {h}");
+    }
+
+    #[test]
+    fn taps_symmetric_linear_phase() {
+        let taps = lowpass_taps(20, 0.15);
+        for i in 0..taps.len() / 2 {
+            assert!(
+                (taps[i] - taps[taps.len() - 1 - i]).abs() < 1e-12,
+                "tap symmetry at {i}"
+            );
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! Synthetic operand generators (paper §VII-B.2: "input values are drawn
+//! from distributions designed to exercise both moderate and high dynamic
+//! range, ensuring that normalization is triggered but not excessively").
+
+use crate::util::prng::Rng;
+
+/// Operand distribution.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Dist {
+    /// Uniform in [lo, hi].
+    Uniform { lo: f64, hi: f64 },
+    /// Signed log-normal: ±exp(N(mu, sigma²)·ln2-ish) — wide dynamic range.
+    LogNormal { mu: f64, sigma: f64 },
+    /// 90% moderate uniform + 10% log-normal outliers (the "mixed
+    /// magnitude" stress in §VII-B).
+    Mixed,
+}
+
+impl Dist {
+    /// The paper's "moderate dynamic range" setting.
+    pub fn moderate() -> Dist {
+        Dist::Uniform { lo: -1.0, hi: 1.0 }
+    }
+
+    /// The paper's "high dynamic range" setting: σ = 4 gives ~±17 bits of
+    /// per-operand magnitude spread — wide enough that normalization is
+    /// "triggered but not excessively" (§VII-B.2) under the default k=8
+    /// modulus set. (Wider spreads exceed M ≈ 2^128's exact-accumulation
+    /// budget and shift the system into the §IX-B frequent-rescaling
+    /// regime; the design-space example explores larger k for those.)
+    pub fn high_dynamic_range() -> Dist {
+        Dist::LogNormal { mu: 0.0, sigma: 4.0 }
+    }
+
+    /// Draw one sample.
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        match *self {
+            Dist::Uniform { lo, hi } => rng.uniform(lo, hi),
+            Dist::LogNormal { mu, sigma } => rng.sign() * rng.lognormal(mu, sigma),
+            Dist::Mixed => {
+                if rng.below(10) == 0 {
+                    rng.sign() * rng.lognormal(0.0, 10.0)
+                } else {
+                    rng.uniform(-1.0, 1.0)
+                }
+            }
+        }
+    }
+
+    /// Draw a vector of samples.
+    pub fn sample_vec(&self, rng: &mut Rng, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.sample(rng)).collect()
+    }
+
+    /// Short label for tables.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Dist::Uniform { .. } => "uniform",
+            Dist::LogNormal { .. } => "lognormal",
+            Dist::Mixed => "mixed",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_in_range() {
+        let mut rng = Rng::new(1);
+        let d = Dist::Uniform { lo: -2.0, hi: 3.0 };
+        for _ in 0..1000 {
+            let x = d.sample(&mut rng);
+            assert!((-2.0..=3.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn lognormal_has_wide_range() {
+        let mut rng = Rng::new(2);
+        let d = Dist::high_dynamic_range();
+        let xs = d.sample_vec(&mut rng, 10_000);
+        let max = xs.iter().cloned().fold(0.0f64, |a, x| a.max(x.abs()));
+        let min = xs
+            .iter()
+            .cloned()
+            .fold(f64::INFINITY, |a, x| a.min(x.abs()));
+        assert!(max / min > 1e6, "dynamic range too small: {max}/{min}");
+    }
+
+    #[test]
+    fn mixed_has_outliers_and_bulk() {
+        let mut rng = Rng::new(3);
+        let xs = Dist::Mixed.sample_vec(&mut rng, 10_000);
+        let outliers = xs.iter().filter(|x| x.abs() > 10.0).count();
+        assert!(outliers > 100, "expected outliers, got {outliers}");
+        let bulk = xs.iter().filter(|x| x.abs() <= 1.0).count();
+        assert!(bulk > 7000, "expected bulk, got {bulk}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let d = Dist::Mixed;
+        let a = d.sample_vec(&mut Rng::new(7), 100);
+        let b = d.sample_vec(&mut Rng::new(7), 100);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,101 @@
+//! Dense matrix multiplication (paper §VII-C): hybrid dot products composed
+//! across rows/columns — the composability stress test. Row-major flat
+//! storage; identical blocking across formats.
+
+use super::traits::Numeric;
+use crate::util::stats;
+
+/// `C = A·B` with `A: m×k`, `B: k×n` (row-major f64 in, f64 out), computed
+/// in format `N`: each output element is one exponent-coherent dot product
+/// (paper §IV-E: "each output element invokes one Hybrid Dot Product").
+pub fn matmul<N: Numeric>(
+    a: &[f64],
+    b: &[f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    ctx: &N::Ctx,
+) -> Vec<f64> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    // Encode operands once (data reuse, §VII-C.1).
+    let ea: Vec<N> = a.iter().map(|&x| N::from_f64(x, ctx)).collect();
+    let eb: Vec<N> = b.iter().map(|&x| N::from_f64(x, ctx)).collect();
+    let mut out = Vec::with_capacity(m * n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = N::zero(ctx);
+            for p in 0..k {
+                acc.mac_assign(&ea[i * k + p], &eb[p * n + j], ctx);
+            }
+            out.push(acc.to_f64(ctx));
+        }
+    }
+    out
+}
+
+/// RMS of relative elementwise error vs the f64 reference for a random
+/// square matmul (§VII-C metric).
+pub fn matmul_rms_error<N: Numeric>(
+    dim: usize,
+    dist: super::generators::Dist,
+    seed: u64,
+    ctx: &N::Ctx,
+) -> f64 {
+    let mut rng = crate::util::prng::Rng::new(seed);
+    let a = dist.sample_vec(&mut rng, dim * dim);
+    let b = dist.sample_vec(&mut rng, dim * dim);
+    let want = matmul::<f64>(&a, &b, dim, dim, dim, &());
+    let got = matmul::<N>(&a, &b, dim, dim, dim, ctx);
+    let rel: Vec<f64> = got
+        .iter()
+        .zip(&want)
+        .map(|(g, w)| (g - w) / w.abs().max(1e-300))
+        .collect();
+    stats::rms(&rel)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hybrid::{Hrfna, HrfnaContext};
+    use crate::workloads::generators::Dist;
+
+    #[test]
+    fn identity_matmul() {
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let eye = vec![1.0, 0.0, 0.0, 1.0];
+        let c = matmul::<f64>(&a, &eye, 2, 2, 2, &());
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    fn rectangular_shapes() {
+        // (1x3)·(3x2)
+        let a = vec![1.0, 2.0, 3.0];
+        let b = vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0];
+        let c = matmul::<f64>(&a, &b, 1, 3, 2, &());
+        assert_eq!(c, vec![14.0, 32.0]);
+    }
+
+    #[test]
+    fn hrfna_matmul_matches_f64_8x8() {
+        let ctx = HrfnaContext::paper_default();
+        let rms = matmul_rms_error::<Hrfna>(8, Dist::moderate(), 3, &ctx);
+        assert!(rms < 1e-6, "rms={rms}");
+    }
+
+    #[test]
+    fn hrfna_matmul_rms_paper_threshold_32() {
+        // Paper §VII-C.3: RMS below 2e-6 for all tested sizes.
+        let ctx = HrfnaContext::paper_default();
+        let rms = matmul_rms_error::<Hrfna>(32, Dist::moderate(), 11, &ctx);
+        assert!(rms < 2e-6, "rms={rms}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        matmul::<f64>(&[1.0], &[1.0, 2.0], 1, 2, 1, &());
+    }
+}

@@ -1,0 +1,17 @@
+//! Application-level workloads (paper §VII): vector dot products, dense
+//! matrix multiplication and an RK4 ODE integrator, written once against
+//! the [`traits::Numeric`] abstraction and executed across every format
+//! under evaluation with identical loop structure (§VII-C.2 methodology).
+
+pub mod traits;
+pub mod generators;
+pub mod dot;
+pub mod fir;
+pub mod matmul;
+pub mod rk4;
+
+pub use dot::dot_product;
+pub use generators::Dist;
+pub use matmul::matmul;
+pub use rk4::{rk4_integrate, Ode};
+pub use traits::Numeric;

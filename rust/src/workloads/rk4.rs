@@ -1,0 +1,233 @@
+//! Fourth-order Runge–Kutta integration of nonlinear ODEs (paper §VII-D):
+//! the long-horizon stability workload. The vector field is evaluated *in
+//! the format under test*, so per-step rounding/normalization error feeds
+//! back through the dynamics exactly as it would in a deployed solver.
+
+use super::traits::Numeric;
+
+/// Test ODEs (paper: "a nonlinear ordinary differential equation").
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Ode {
+    /// Van der Pol oscillator: x' = v, v' = μ(1 - x²)v - x (limit cycle —
+    /// errors neither explode nor vanish, ideal for drift measurement).
+    VanDerPol { mu: f64 },
+    /// Damped harmonic oscillator: x' = v, v' = -ω²x - 2ζωv.
+    DampedOscillator { omega: f64, zeta: f64 },
+    /// Exponential decay toward a forced equilibrium: y' = λ(c - y).
+    Relaxation { lambda: f64, c: f64 },
+}
+
+impl Ode {
+    /// State dimension.
+    pub fn dim(&self) -> usize {
+        match self {
+            Ode::VanDerPol { .. } | Ode::DampedOscillator { .. } => 2,
+            Ode::Relaxation { .. } => 1,
+        }
+    }
+
+    /// Default initial state.
+    pub fn default_y0(&self) -> Vec<f64> {
+        match self {
+            Ode::VanDerPol { .. } => vec![2.0, 0.0],
+            Ode::DampedOscillator { .. } => vec![1.0, 0.0],
+            Ode::Relaxation { .. } => vec![0.0],
+        }
+    }
+
+    /// Evaluate the vector field in format `N`.
+    pub fn field<N: Numeric>(&self, y: &[N], ctx: &N::Ctx) -> Vec<N> {
+        match *self {
+            Ode::VanDerPol { mu } => {
+                let x = &y[0];
+                let v = &y[1];
+                // v' = mu*(1 - x^2)*v - x
+                let one = N::from_f64(1.0, ctx);
+                let x2 = x.mul(x, ctx);
+                let damp = one.sub(&x2, ctx).scale(mu, ctx);
+                let vprime = damp.mul(v, ctx).sub(x, ctx);
+                vec![v.clone(), vprime]
+            }
+            Ode::DampedOscillator { omega, zeta } => {
+                let x = &y[0];
+                let v = &y[1];
+                let vprime = x
+                    .scale(-omega * omega, ctx)
+                    .sub(&v.scale(2.0 * zeta * omega, ctx), ctx);
+                vec![v.clone(), vprime]
+            }
+            Ode::Relaxation { lambda, c } => {
+                let target = N::from_f64(c, ctx);
+                vec![target.sub(&y[0], ctx).scale(lambda, ctx)]
+            }
+        }
+    }
+}
+
+/// Classical RK4 step in format `N`.
+pub fn rk4_step<N: Numeric>(ode: &Ode, y: &[N], dt: f64, ctx: &N::Ctx) -> Vec<N> {
+    let k1 = ode.field(y, ctx);
+    let y2: Vec<N> = y
+        .iter()
+        .zip(&k1)
+        .map(|(yi, ki)| yi.add(&ki.scale(dt / 2.0, ctx), ctx))
+        .collect();
+    let k2 = ode.field(&y2, ctx);
+    let y3: Vec<N> = y
+        .iter()
+        .zip(&k2)
+        .map(|(yi, ki)| yi.add(&ki.scale(dt / 2.0, ctx), ctx))
+        .collect();
+    let k3 = ode.field(&y3, ctx);
+    let y4: Vec<N> = y
+        .iter()
+        .zip(&k3)
+        .map(|(yi, ki)| yi.add(&ki.scale(dt, ctx), ctx))
+        .collect();
+    let k4 = ode.field(&y4, ctx);
+    (0..y.len())
+        .map(|i| {
+            // y + dt/6 (k1 + 2k2 + 2k3 + k4)
+            let sum = k1[i]
+                .add(&k2[i].scale(2.0, ctx), ctx)
+                .add(&k3[i].scale(2.0, ctx), ctx)
+                .add(&k4[i], ctx);
+            y[i].add(&sum.scale(dt / 6.0, ctx), ctx)
+        })
+        .collect()
+}
+
+/// Integration trace: error vs the f64 reference sampled along the run.
+#[derive(Clone, Debug)]
+pub struct Rk4Trace {
+    /// (step index, max-abs state error vs f64 reference).
+    pub samples: Vec<(u64, f64)>,
+    /// Final state decoded to f64.
+    pub final_state: Vec<f64>,
+    /// Final reference state (f64 integration).
+    pub final_ref: Vec<f64>,
+}
+
+impl Rk4Trace {
+    /// Max error observed across all samples.
+    pub fn max_error(&self) -> f64 {
+        self.samples.iter().map(|&(_, e)| e).fold(0.0, f64::max)
+    }
+
+    /// Error slope between the first and second half of the run — a drift
+    /// detector: stable formats stay flat, drifting formats grow.
+    pub fn drift_ratio(&self) -> f64 {
+        if self.samples.len() < 4 {
+            return 1.0;
+        }
+        let mid = self.samples.len() / 2;
+        let first: f64 = self.samples[..mid].iter().map(|&(_, e)| e).sum::<f64>()
+            / mid as f64;
+        let second: f64 = self.samples[mid..].iter().map(|&(_, e)| e).sum::<f64>()
+            / (self.samples.len() - mid) as f64;
+        if first == 0.0 {
+            return if second == 0.0 { 1.0 } else { f64::INFINITY };
+        }
+        second / first
+    }
+}
+
+/// Integrate `steps` RK4 steps in format `N`, sampling the error against a
+/// lock-step f64 reference every `sample_every` steps.
+pub fn rk4_integrate<N: Numeric>(
+    ode: &Ode,
+    y0: &[f64],
+    dt: f64,
+    steps: u64,
+    sample_every: u64,
+    ctx: &N::Ctx,
+) -> Rk4Trace {
+    let mut y: Vec<N> = y0.iter().map(|&v| N::from_f64(v, ctx)).collect();
+    let mut yref: Vec<f64> = y0.to_vec();
+    let mut samples = Vec::new();
+    for step in 1..=steps {
+        y = rk4_step(ode, &y, dt, ctx);
+        yref = rk4_step::<f64>(ode, &yref, dt, &());
+        if step % sample_every == 0 || step == steps {
+            let err = y
+                .iter()
+                .zip(&yref)
+                .map(|(a, b)| (a.to_f64(ctx) - b).abs())
+                .fold(0.0, f64::max);
+            samples.push((step, err));
+        }
+    }
+    Rk4Trace {
+        samples,
+        final_state: y.iter().map(|v| v.to_f64(ctx)).collect(),
+        final_ref: yref,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hybrid::{Hrfna, HrfnaContext};
+
+    #[test]
+    fn relaxation_converges_to_c() {
+        let ode = Ode::Relaxation { lambda: 2.0, c: 5.0 };
+        let tr = rk4_integrate::<f64>(&ode, &[0.0], 0.01, 1000, 100, &());
+        assert!((tr.final_ref[0] - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn damped_oscillator_decays() {
+        let ode = Ode::DampedOscillator { omega: 1.0, zeta: 0.2 };
+        let tr = rk4_integrate::<f64>(&ode, &[1.0, 0.0], 0.01, 5000, 1000, &());
+        assert!(tr.final_ref[0].abs() < 0.1);
+    }
+
+    #[test]
+    fn vdp_reaches_limit_cycle_amplitude() {
+        // Van der Pol limit cycle amplitude ≈ 2 for small mu.
+        let ode = Ode::VanDerPol { mu: 0.5 };
+        let tr = rk4_integrate::<f64>(&ode, &[0.5, 0.0], 0.01, 10_000, 2000, &());
+        let amp = tr.final_ref[0].hypot(tr.final_ref[1]);
+        assert!(amp > 1.0 && amp < 3.0, "amp={amp}");
+    }
+
+    #[test]
+    fn hrfna_tracks_f64_comparably_to_fp32() {
+        // Paper §VII-D.3: HRFNA error "closely matching FP32 behavior" —
+        // on a limit cycle, per-op rounding turns into phase drift for any
+        // finite format; the claim is parity with FP32, not with f64.
+        let ctx = HrfnaContext::paper_default();
+        let ode = Ode::VanDerPol { mu: 1.0 };
+        let steps = 10_000;
+        let tr_h = rk4_integrate::<Hrfna>(&ode, &[2.0, 0.0], 0.005, steps, 1000, &ctx);
+        let tr_f = rk4_integrate::<f32>(&ode, &[2.0, 0.0], 0.005, steps, 1000, &());
+        assert!(tr_h.final_state.iter().all(|v| v.is_finite()));
+        assert!(
+            tr_h.max_error() <= tr_f.max_error() * 2.0 + 1e-9,
+            "HRFNA err={} vs FP32 err={}",
+            tr_h.max_error(),
+            tr_f.max_error()
+        );
+    }
+
+    #[test]
+    fn hrfna_stable_on_non_chaotic_ode() {
+        // On a contracting ODE (no phase amplification) HRFNA should stay
+        // near f64 over long horizons — the bounded-error story in pure form.
+        let ctx = HrfnaContext::paper_default();
+        let ode = Ode::Relaxation { lambda: 1.0, c: 3.0 };
+        let tr = rk4_integrate::<Hrfna>(&ode, &[0.0], 0.01, 20_000, 2000, &ctx);
+        assert!(tr.max_error() < 1e-6, "max_error={}", tr.max_error());
+    }
+
+    #[test]
+    fn drift_ratio_flat_for_equal_errors() {
+        let tr = Rk4Trace {
+            samples: (1..=10u64).map(|i| (i, 1.0)).collect(),
+            final_state: vec![],
+            final_ref: vec![],
+        };
+        assert!((tr.drift_ratio() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,190 @@
+//! The `Numeric` abstraction: every numeric format under evaluation
+//! (HRFNA, FP32, BFP, fixed-point, pure RNS, LNS) implements this trait,
+//! so the workload kernels (§VII: dot product, matmul, RK4) are written
+//! once and run unchanged across formats — the paper's "identical loop
+//! structures" methodology (§VII-C.2).
+
+/// A numeric format with an explicit shared context (HRFNA needs CRT
+/// state; plain floats use `()`).
+pub trait Numeric: Clone {
+    /// Per-format shared context (precomputed tables, config).
+    type Ctx;
+
+    /// Human-readable format name (table row label).
+    fn name() -> &'static str;
+
+    /// Encode a real.
+    fn from_f64(x: f64, ctx: &Self::Ctx) -> Self;
+
+    /// Decode to a real.
+    fn to_f64(&self, ctx: &Self::Ctx) -> f64;
+
+    /// Additive identity.
+    fn zero(ctx: &Self::Ctx) -> Self;
+
+    /// Addition.
+    fn add(&self, other: &Self, ctx: &Self::Ctx) -> Self;
+
+    /// Subtraction.
+    fn sub(&self, other: &Self, ctx: &Self::Ctx) -> Self;
+
+    /// Multiplication.
+    fn mul(&self, other: &Self, ctx: &Self::Ctx) -> Self;
+
+    /// Negation.
+    fn neg(&self, ctx: &Self::Ctx) -> Self;
+
+    /// Fused multiply-accumulate `self += a·b`. Formats with deferred
+    /// normalization (HRFNA) override this with their accumulator path.
+    fn mac_assign(&mut self, a: &Self, b: &Self, ctx: &Self::Ctx) {
+        *self = self.add(&a.mul(b, ctx), ctx);
+    }
+
+    /// Multiply by a real constant (RK4 coefficients).
+    fn scale(&self, k: f64, ctx: &Self::Ctx) -> Self {
+        self.mul(&Self::from_f64(k, ctx), ctx)
+    }
+}
+
+/// FP64 — the double-precision software reference (§VII-A.2).
+impl Numeric for f64 {
+    type Ctx = ();
+
+    fn name() -> &'static str {
+        "FP64(ref)"
+    }
+    fn from_f64(x: f64, _: &()) -> f64 {
+        x
+    }
+    fn to_f64(&self, _: &()) -> f64 {
+        *self
+    }
+    fn zero(_: &()) -> f64 {
+        0.0
+    }
+    fn add(&self, o: &f64, _: &()) -> f64 {
+        self + o
+    }
+    fn sub(&self, o: &f64, _: &()) -> f64 {
+        self - o
+    }
+    fn mul(&self, o: &f64, _: &()) -> f64 {
+        self * o
+    }
+    fn neg(&self, _: &()) -> f64 {
+        -self
+    }
+}
+
+/// FP32 — the IEEE-754 single-precision baseline (vendor FP32 IP stand-in).
+impl Numeric for f32 {
+    type Ctx = ();
+
+    fn name() -> &'static str {
+        "FP32"
+    }
+    fn from_f64(x: f64, _: &()) -> f32 {
+        x as f32
+    }
+    fn to_f64(&self, _: &()) -> f64 {
+        *self as f64
+    }
+    fn zero(_: &()) -> f32 {
+        0.0
+    }
+    fn add(&self, o: &f32, _: &()) -> f32 {
+        self + o
+    }
+    fn sub(&self, o: &f32, _: &()) -> f32 {
+        self - o
+    }
+    fn mul(&self, o: &f32, _: &()) -> f32 {
+        self * o
+    }
+    fn neg(&self, _: &()) -> f32 {
+        -self
+    }
+}
+
+/// HRFNA as a `Numeric` (delegates to the hybrid module).
+impl Numeric for crate::hybrid::Hrfna {
+    type Ctx = crate::hybrid::HrfnaContext;
+
+    fn name() -> &'static str {
+        "HRFNA"
+    }
+    fn from_f64(x: f64, ctx: &Self::Ctx) -> Self {
+        crate::hybrid::Hrfna::encode(x, ctx)
+    }
+    fn to_f64(&self, ctx: &Self::Ctx) -> f64 {
+        self.decode(ctx)
+    }
+    fn zero(ctx: &Self::Ctx) -> Self {
+        crate::hybrid::Hrfna::zero(ctx, 0)
+    }
+    fn add(&self, o: &Self, ctx: &Self::Ctx) -> Self {
+        crate::hybrid::Hrfna::add(self, o, ctx)
+    }
+    fn sub(&self, o: &Self, ctx: &Self::Ctx) -> Self {
+        crate::hybrid::Hrfna::sub(self, o, ctx)
+    }
+    fn mul(&self, o: &Self, ctx: &Self::Ctx) -> Self {
+        crate::hybrid::Hrfna::mul(self, o, ctx)
+    }
+    fn neg(&self, ctx: &Self::Ctx) -> Self {
+        crate::hybrid::Hrfna::neg(self, ctx)
+    }
+    fn mac_assign(&mut self, a: &Self, b: &Self, ctx: &Self::Ctx) {
+        crate::hybrid::Hrfna::mac_assign(self, a, b, ctx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hybrid::{Hrfna, HrfnaContext};
+
+    fn roundtrip<N: Numeric>(ctx: &N::Ctx, xs: &[f64], tol: f64) {
+        for &x in xs {
+            let n = N::from_f64(x, ctx);
+            let back = n.to_f64(ctx);
+            assert!(
+                ((back - x) / x.abs().max(1e-30)).abs() <= tol,
+                "{}: x={x} back={back}",
+                N::name()
+            );
+        }
+    }
+
+    #[test]
+    fn f64_roundtrip_exact() {
+        roundtrip::<f64>(&(), &[1.5, -2.25e10, 3.33e-7], 0.0);
+    }
+
+    #[test]
+    fn f32_roundtrip_quantizes() {
+        roundtrip::<f32>(&(), &[1.5, -2.25e10, 3.33e-7], 1e-7);
+    }
+
+    #[test]
+    fn hrfna_roundtrip_within_sig() {
+        let ctx = HrfnaContext::paper_default();
+        roundtrip::<Hrfna>(&ctx, &[1.5, -2.25e10, 3.33e-7], 1e-8);
+    }
+
+    #[test]
+    fn generic_mac_matches_manual() {
+        let ctx = HrfnaContext::paper_default();
+        let mut acc = Hrfna::zero(&ctx, 0);
+        let a = Hrfna::from_f64(2.5, &ctx);
+        let b = Hrfna::from_f64(-4.0, &ctx);
+        Numeric::mac_assign(&mut acc, &a, &b, &ctx);
+        assert!((acc.to_f64(&ctx) + 10.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn scale_default_impl() {
+        let x = 3.0f64;
+        assert_eq!(x.scale(0.5, &()), 1.5);
+    }
+}

@@ -1,0 +1,253 @@
+//! Integration: the PJRT runtime executes the AOT kernels and their
+//! numerics agree bit-for-bit with the pure-Rust residue model and within
+//! tolerance of f64 — the critical L1 ↔ L3 cross-check.
+//!
+//! Requires `make artifacts` (the Makefile `test` target guarantees it).
+
+use hrfna::coordinator::hybrid_exec::{decode_matrix, decode_scalar, encode_block};
+use hrfna::hybrid::HrfnaContext;
+use hrfna::runtime::pjrt::{Engine, Tensor};
+use hrfna::runtime::Manifest;
+use hrfna::util::prng::Rng;
+use hrfna::workloads::generators::Dist;
+
+const DOT_N: usize = 4096;
+const MM_DIM: usize = 64;
+
+fn engine() -> Engine {
+    Engine::load(&Manifest::default_dir()).expect("run `make artifacts` first")
+}
+
+fn moduli_tensor(ctx: &HrfnaContext) -> Tensor {
+    let m: Vec<i64> = ctx.cfg.moduli.iter().map(|&v| v as i64).collect();
+    Tensor::I64(m, vec![ctx.k()])
+}
+
+#[test]
+fn engine_loads_all_artifacts() {
+    let e = engine();
+    let names = e.names();
+    for expected in [
+        "hybrid_dot",
+        "hybrid_matmul",
+        "hybrid_modmul",
+        "hybrid_modadd",
+        "fp32_dot",
+        "fp32_matmul",
+        "rk4_vdp_step",
+    ] {
+        assert!(names.iter().any(|n| n == expected), "missing {expected}");
+    }
+}
+
+#[test]
+fn hybrid_dot_kernel_matches_software_residue_math_bitexact() {
+    let e = engine();
+    let ctx = HrfnaContext::paper_default();
+    let mut rng = Rng::new(11);
+    let xs = Dist::moderate().sample_vec(&mut rng, DOT_N);
+    let ys = Dist::moderate().sample_vec(&mut rng, DOT_N);
+    let ex = encode_block(&xs, &ctx);
+    let ey = encode_block(&ys, &ctx);
+
+    // Software reference: channelwise modular MAC on the same residues.
+    let k = ctx.k();
+    let mut want = vec![0i64; k];
+    for c in 0..k {
+        let m = ctx.cfg.moduli[c] as i128;
+        let mut acc = 0i128;
+        for j in 0..DOT_N {
+            acc = (acc
+                + ex.residues[c * DOT_N + j] as i128 * ey.residues[c * DOT_N + j] as i128)
+                % m;
+        }
+        want[c] = acc as i64;
+    }
+
+    let got = e
+        .execute(
+            "hybrid_dot",
+            &[
+                Tensor::I64(ex.residues.clone(), vec![k, DOT_N]),
+                Tensor::I64(ey.residues.clone(), vec![k, DOT_N]),
+                moduli_tensor(&ctx),
+            ],
+        )
+        .unwrap()
+        .into_i64()
+        .unwrap();
+    assert_eq!(got, want, "kernel residues differ from software residues");
+
+    // And the decoded value matches f64 within block-encoding error.
+    let value = decode_scalar(&got, ex.f + ey.f, &ctx);
+    let truth: f64 = xs.iter().zip(&ys).map(|(a, b)| a * b).sum();
+    assert!(
+        ((value - truth) / truth.abs().max(1e-30)).abs() < 1e-6,
+        "value={value} truth={truth}"
+    );
+}
+
+#[test]
+fn fp32_dot_kernel_matches_host_f32() {
+    let e = engine();
+    let mut rng = Rng::new(5);
+    let xs: Vec<f32> = (0..DOT_N).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+    let ys: Vec<f32> = (0..DOT_N).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+    let got = e
+        .execute(
+            "fp32_dot",
+            &[
+                Tensor::F32(xs.clone(), vec![DOT_N]),
+                Tensor::F32(ys.clone(), vec![DOT_N]),
+            ],
+        )
+        .unwrap()
+        .into_f32()
+        .unwrap()[0];
+    let want: f64 = xs.iter().zip(&ys).map(|(&a, &b)| a as f64 * b as f64).sum();
+    assert!((got as f64 - want).abs() < 1e-2, "got={got} want={want}");
+}
+
+#[test]
+fn hybrid_matmul_kernel_matches_f64() {
+    let e = engine();
+    let ctx = HrfnaContext::paper_default();
+    let mut rng = Rng::new(23);
+    let a = Dist::moderate().sample_vec(&mut rng, MM_DIM * MM_DIM);
+    let b = Dist::moderate().sample_vec(&mut rng, MM_DIM * MM_DIM);
+    let ea = encode_block(&a, &ctx);
+    let eb = encode_block(&b, &ctx);
+    let k = ctx.k();
+    let got = e
+        .execute(
+            "hybrid_matmul",
+            &[
+                Tensor::I64(ea.residues, vec![k, MM_DIM, MM_DIM]),
+                Tensor::I64(eb.residues, vec![k, MM_DIM, MM_DIM]),
+                moduli_tensor(&ctx),
+            ],
+        )
+        .unwrap()
+        .into_i64()
+        .unwrap();
+    let vals = decode_matrix(&got, MM_DIM * MM_DIM, ea.f + eb.f, &ctx);
+
+    // f64 reference.
+    for i in 0..MM_DIM {
+        for j in 0..MM_DIM {
+            let mut truth = 0.0;
+            for p in 0..MM_DIM {
+                truth += a[i * MM_DIM + p] * b[p * MM_DIM + j];
+            }
+            let gotv = vals[i * MM_DIM + j];
+            assert!(
+                (gotv - truth).abs() < 1e-6 * truth.abs().max(1.0),
+                "({i},{j}): got={gotv} truth={truth}"
+            );
+        }
+    }
+}
+
+#[test]
+fn elementwise_kernels_match_residue_ops_bitexact() {
+    let e = engine();
+    let ctx = HrfnaContext::paper_default();
+    let k = ctx.k();
+    let mut rng = Rng::new(37);
+    let mut x = vec![0i64; k * DOT_N];
+    let mut y = vec![0i64; k * DOT_N];
+    for c in 0..k {
+        let m = ctx.cfg.moduli[c];
+        for j in 0..DOT_N {
+            x[c * DOT_N + j] = (rng.below(m)) as i64;
+            y[c * DOT_N + j] = (rng.below(m)) as i64;
+        }
+    }
+    let cases: [(&str, fn(i128, i128, i128) -> i128); 2] = [
+        ("hybrid_modmul", |a, b, m| a * b % m),
+        ("hybrid_modadd", |a, b, m| (a + b) % m),
+    ];
+    for (name, op) in cases {
+        let got = e
+            .execute(
+                name,
+                &[
+                    Tensor::I64(x.clone(), vec![k, DOT_N]),
+                    Tensor::I64(y.clone(), vec![k, DOT_N]),
+                    moduli_tensor(&ctx),
+                ],
+            )
+            .unwrap()
+            .into_i64()
+            .unwrap();
+        for c in 0..k {
+            let m = ctx.cfg.moduli[c] as i128;
+            for j in 0..DOT_N {
+                let idx = c * DOT_N + j;
+                let want = op(x[idx] as i128, y[idx] as i128, m) as i64;
+                assert_eq!(got[idx], want, "{name} mismatch at ({c},{j})");
+            }
+        }
+    }
+}
+
+#[test]
+fn rk4_step_kernel_matches_host_step() {
+    let e = engine();
+    let b = 256;
+    let mut rng = Rng::new(41);
+    let state: Vec<f32> = (0..b * 2).map(|_| rng.uniform(-2.0, 2.0) as f32).collect();
+    let dt = 0.01f32;
+    let mu = 1.5f32;
+    let got = e
+        .execute(
+            "rk4_vdp_step",
+            &[
+                Tensor::F32(state.clone(), vec![b, 2]),
+                Tensor::ScalarF32(dt),
+                Tensor::ScalarF32(mu),
+            ],
+        )
+        .unwrap()
+        .into_f32()
+        .unwrap();
+
+    // Host reference (f32 arithmetic, same RK4).
+    let f = |s: &[f32; 2]| -> [f32; 2] {
+        [s[1], mu * (1.0 - s[0] * s[0]) * s[1] - s[0]]
+    };
+    for i in 0..b {
+        let s = [state[i * 2], state[i * 2 + 1]];
+        let k1 = f(&s);
+        let s2 = [s[0] + 0.5 * dt * k1[0], s[1] + 0.5 * dt * k1[1]];
+        let k2 = f(&s2);
+        let s3 = [s[0] + 0.5 * dt * k2[0], s[1] + 0.5 * dt * k2[1]];
+        let k3 = f(&s3);
+        let s4 = [s[0] + dt * k3[0], s[1] + dt * k3[1]];
+        let k4 = f(&s4);
+        for d in 0..2 {
+            let want = s[d] + dt / 6.0 * (k1[d] + 2.0 * k2[d] + 2.0 * k3[d] + k4[d]);
+            let gotv = got[i * 2 + d];
+            assert!(
+                (gotv - want).abs() < 1e-4,
+                "state {i} dim {d}: got={gotv} want={want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn shape_validation_rejects_wrong_inputs() {
+    let e = engine();
+    let bad = e.execute(
+        "fp32_dot",
+        &[
+            Tensor::F32(vec![0.0; 8], vec![8]),
+            Tensor::F32(vec![0.0; 8], vec![8]),
+        ],
+    );
+    assert!(bad.is_err(), "wrong shape must be rejected");
+    let bad = e.execute("fp32_dot", &[Tensor::F32(vec![0.0; DOT_N], vec![DOT_N])]);
+    assert!(bad.is_err(), "wrong arity must be rejected");
+    assert!(e.execute("nonexistent", &[]).is_err());
+}

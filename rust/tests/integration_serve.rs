@@ -1,0 +1,182 @@
+//! Integration: the full coordinator stack (admission → batching → lane
+//! workers → PJRT engine → decode) serves correct results under
+//! concurrency. Requires `make artifacts`.
+
+use hrfna::config::HrfnaConfig;
+use hrfna::coordinator::batcher::BatchPolicy;
+use hrfna::coordinator::router::ShapeBuckets;
+use hrfna::coordinator::{Coordinator, CoordinatorConfig, JobKind, Payload};
+use hrfna::hybrid::HrfnaContext;
+use hrfna::runtime::EngineHandle;
+use hrfna::util::prng::Rng;
+use hrfna::workloads::generators::Dist;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn coordinator() -> Coordinator {
+    let engine = EngineHandle::spawn(None).expect("run `make artifacts` first");
+    let ctx = Arc::new(HrfnaContext::new(HrfnaConfig::paper_default()));
+    Coordinator::start(
+        engine,
+        ctx,
+        CoordinatorConfig {
+            workers_per_lane: 2,
+            batch: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+            },
+            buckets: ShapeBuckets::default(),
+        },
+    )
+}
+
+#[test]
+fn serves_correct_dot_products_both_lanes() {
+    let coord = coordinator();
+    let mut rng = Rng::new(3);
+    for kind in [JobKind::DotHybrid, JobKind::DotF32] {
+        for _ in 0..5 {
+            let n = 64 + rng.below(1000) as usize;
+            let x = Dist::moderate().sample_vec(&mut rng, n);
+            let y = Dist::moderate().sample_vec(&mut rng, n);
+            let truth: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+            let r = coord.call(kind, Payload::Dot { x, y }).unwrap();
+            let tol = match kind {
+                JobKind::DotHybrid => 1e-6 * truth.abs().max(1.0),
+                _ => 1e-3 * truth.abs().max(1.0),
+            };
+            assert!(
+                (r.values[0] - truth).abs() <= tol,
+                "{kind:?}: got={} truth={truth}",
+                r.values[0]
+            );
+            assert!(r.latency_us > 0.0);
+        }
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn serves_correct_matmul_hybrid() {
+    let coord = coordinator();
+    let mut rng = Rng::new(9);
+    let dim = 64;
+    let a = Dist::moderate().sample_vec(&mut rng, dim * dim);
+    let b = Dist::moderate().sample_vec(&mut rng, dim * dim);
+    let r = coord
+        .call(
+            JobKind::MatmulHybrid,
+            Payload::Matmul {
+                a: a.clone(),
+                b: b.clone(),
+                dim,
+            },
+        )
+        .unwrap();
+    assert_eq!(r.values.len(), dim * dim);
+    // Spot-check a few elements against f64.
+    let mut rng2 = Rng::new(10);
+    for _ in 0..20 {
+        let i = rng2.below(dim as u64) as usize;
+        let j = rng2.below(dim as u64) as usize;
+        let mut truth = 0.0;
+        for p in 0..dim {
+            truth += a[i * dim + p] * b[p * dim + j];
+        }
+        assert!(
+            (r.values[i * dim + j] - truth).abs() < 1e-6 * truth.abs().max(1.0),
+            "({i},{j})"
+        );
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn concurrent_mixed_load_all_complete() {
+    let coord = Arc::new(coordinator());
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let coord = Arc::clone(&coord);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(100 + t);
+            let mut checked = 0;
+            for i in 0..10 {
+                let n = 128 + rng.below(512) as usize;
+                let x = Dist::moderate().sample_vec(&mut rng, n);
+                let y = Dist::moderate().sample_vec(&mut rng, n);
+                let truth: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+                let kind = if i % 2 == 0 {
+                    JobKind::DotHybrid
+                } else {
+                    JobKind::DotF32
+                };
+                let r = coord.call(kind, Payload::Dot { x, y }).unwrap();
+                assert!(
+                    (r.values[0] - truth).abs() < 1e-3 * truth.abs().max(1.0),
+                    "thread {t} job {i}"
+                );
+                checked += 1;
+            }
+            checked
+        }));
+    }
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, 40);
+    assert_eq!(coord.metrics.total_jobs(), 40);
+}
+
+#[test]
+fn admission_rejects_invalid_jobs() {
+    let coord = coordinator();
+    // Oversize dot.
+    assert!(coord
+        .submit(
+            JobKind::DotHybrid,
+            Payload::Dot {
+                x: vec![0.0; 100_000],
+                y: vec![0.0; 100_000],
+            },
+        )
+        .is_err());
+    // NaN operand.
+    assert!(coord
+        .submit(
+            JobKind::DotF32,
+            Payload::Dot {
+                x: vec![f64::NAN; 4],
+                y: vec![1.0; 4],
+            },
+        )
+        .is_err());
+    // Wrong matmul dim.
+    assert!(coord
+        .submit(
+            JobKind::MatmulHybrid,
+            Payload::Matmul {
+                a: vec![0.0; 9],
+                b: vec![0.0; 9],
+                dim: 3,
+            },
+        )
+        .is_err());
+    coord.shutdown();
+}
+
+#[test]
+fn batching_coalesces_bursts() {
+    let coord = coordinator();
+    let mut rng = Rng::new(55);
+    let mut rxs = Vec::new();
+    for _ in 0..16 {
+        let x = Dist::moderate().sample_vec(&mut rng, 256);
+        let y = Dist::moderate().sample_vec(&mut rng, 256);
+        rxs.push(coord.submit(JobKind::DotF32, Payload::Dot { x, y }).unwrap());
+    }
+    let mut max_batch = 0;
+    for rx in rxs {
+        let r = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        max_batch = max_batch.max(r.batch_size);
+    }
+    assert!(max_batch >= 2, "burst should produce batches, got {max_batch}");
+    coord.shutdown();
+}
