@@ -1,0 +1,2 @@
+"""Test package marker: makes `from .conftest import ...` resolve when
+pytest imports these modules with `python/` on sys.path."""

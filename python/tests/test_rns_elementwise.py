@@ -1,6 +1,8 @@
 """Layer-1 elementwise modmul/modadd kernels vs oracles."""
 
 import numpy as np
+import pytest
+pytest.importorskip("hypothesis")  # optional dep: skip cleanly when absent
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import rns_modmul, rns_modadd

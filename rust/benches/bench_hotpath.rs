@@ -1,27 +1,31 @@
 //! Hot-path microbenchmarks — the §Perf instrument panel. Times every
 //! layer's critical operation; before/after numbers live in
-//! EXPERIMENTS.md §Perf.
+//! EXPERIMENTS.md §Perf, and the scalar-vs-planar dot comparison is
+//! written to `BENCH_hotpath.json` for perf-trajectory tracking.
 
 mod common;
 
 use hrfna::bigint::BigUint;
-use hrfna::hybrid::{Hrfna, HrfnaContext};
+use hrfna::hybrid::{Hrfna, HrfnaBatch, HrfnaContext};
 use hrfna::rns::{Barrett, CrtContext, ResidueVec};
-use hrfna::util::bench::bench;
+use hrfna::util::bench::{bench, write_json, BenchRecord};
 use hrfna::util::prng::Rng;
-use hrfna::workloads::dot::dot_product_encoded;
+use hrfna::workloads::dot::dot_product_encoded_scalar;
 use hrfna::workloads::generators::Dist;
 
 fn main() {
     common::banner("§Perf", "hot-path microbenchmarks");
     let ctx = HrfnaContext::paper_default();
     let mut rng = Rng::new(1);
+    let mut records: Vec<BenchRecord> = Vec::new();
 
     // --- L3 primitive ops -------------------------------------------------
     let bar = Barrett::new(65521);
     let a = rng.below(65521);
     let b = rng.below(65521);
-    println!("{}", bench("barrett mul (1 channel)", || bar.mul(a, b)).line());
+    let r = bench("barrett mul (1 channel)", || bar.mul(a, b));
+    records.push(BenchRecord::from_result("barrett_mul", 1, &r));
+    println!("{}", r.line());
 
     let crt = CrtContext::new(&ctx.cfg.moduli);
     let x = ResidueVec::encode_u64(0xDEAD_BEEF_CAFE, &ctx.cfg.moduli);
@@ -35,10 +39,9 @@ fn main() {
         "{}",
         bench("residue MAC (k=8)", || acc.mac_assign(&x, &y, &crt.barrett)).line()
     );
-    println!(
-        "{}",
-        bench("CRT reconstruction (k=8)", || crt.reconstruct(&x)).line()
-    );
+    let r = bench("CRT reconstruction (k=8)", || crt.reconstruct(&x));
+    records.push(BenchRecord::from_result("crt_reconstruct", 1, &r));
+    println!("{}", r.line());
     println!(
         "{}",
         bench("mixed-radix digits (k=8)", || crt.mixed_radix(&x)).line()
@@ -68,24 +71,51 @@ fn main() {
     );
     v.normalize(1, &ctx, false);
 
-    // --- workload loop -------------------------------------------------
-    let n = 1024;
-    let xs: Vec<Hrfna> = Dist::moderate()
-        .sample_vec(&mut rng, n)
-        .iter()
-        .map(|&q| Hrfna::encode(q, &ctx))
-        .collect();
-    let ys: Vec<Hrfna> = Dist::moderate()
-        .sample_vec(&mut rng, n)
-        .iter()
-        .map(|&q| Hrfna::encode(q, &ctx))
-        .collect();
-    let r = bench("Hrfna dot n=1024 (encoded)", || {
-        dot_product_encoded::<Hrfna>(&xs, &ys, &ctx)
-    });
-    println!("{} ({:.1} ns/MAC)", r.line(), r.ns_per_iter / n as f64);
+    // --- workload loop: scalar reference vs planar engine ----------------
+    for n in [1024usize, 4096] {
+        let xs: Vec<Hrfna> = Dist::moderate()
+            .sample_vec(&mut rng, n)
+            .iter()
+            .map(|&q| Hrfna::encode(q, &ctx))
+            .collect();
+        let ys: Vec<Hrfna> = Dist::moderate()
+            .sample_vec(&mut rng, n)
+            .iter()
+            .map(|&q| Hrfna::encode(q, &ctx))
+            .collect();
+        let r_scalar = bench(&format!("Hrfna dot n={n} (scalar ref)"), || {
+            dot_product_encoded_scalar::<Hrfna>(&xs, &ys, &ctx)
+        });
+        println!(
+            "{} ({:.1} ns/MAC)",
+            r_scalar.line(),
+            r_scalar.ns_per_iter / n as f64
+        );
+        let bx = HrfnaBatch::from_items(&xs, ctx.k());
+        let by = HrfnaBatch::from_items(&ys, ctx.k());
+        let r_planar = bench(&format!("Hrfna dot n={n} (planar)"), || bx.dot(&by, &ctx));
+        println!(
+            "{} ({:.1} ns/MAC)",
+            r_planar.line(),
+            r_planar.ns_per_iter / n as f64
+        );
+        println!(
+            "  -> planar speedup over scalar at n={n}: {:.2}x",
+            r_scalar.ns_per_iter / r_planar.ns_per_iter
+        );
+        records.push(BenchRecord::from_result(
+            &format!("dot_scalar_n{n}"),
+            n as u64,
+            &r_scalar,
+        ));
+        records.push(BenchRecord::from_result(
+            &format!("dot_planar_n{n}"),
+            n as u64,
+            &r_planar,
+        ));
+    }
 
-    // --- PJRT kernel layer ------------------------------------------------
+    // --- engine layer (PJRT with --features xla; software otherwise) ------
     match hrfna::runtime::Engine::load_default() {
         Ok(engine) => {
             use hrfna::coordinator::hybrid_exec::encode_block;
@@ -96,11 +126,10 @@ fn main() {
             let ey = encode_block(&ysf, &ctx);
             let m: Vec<i64> = ctx.cfg.moduli.iter().map(|&q| q as i64).collect();
             let k = ctx.k();
-            println!(
-                "{}",
-                bench("encode_block n=4096", || encode_block(&xsf, &ctx)).line()
-            );
-            let r = bench("pjrt hybrid_dot n=4096", || {
+            let r = bench("encode_block n=4096", || encode_block(&xsf, &ctx));
+            records.push(BenchRecord::from_result("encode_block_n4096", 4096, &r));
+            println!("{}", r.line());
+            let r = bench("engine hybrid_dot n=4096", || {
                 engine
                     .execute(
                         "hybrid_dot",
@@ -113,7 +142,13 @@ fn main() {
                     .unwrap()
             });
             println!("{} ({:.1} ns/MAC)", r.line(), r.ns_per_iter / 4096.0);
+            records.push(BenchRecord::from_result("engine_hybrid_dot_n4096", 4096, &r));
         }
-        Err(e) => println!("(PJRT skipped: {e})"),
+        Err(e) => println!("(engine skipped: {e})"),
+    }
+
+    match write_json("BENCH_hotpath.json", &records) {
+        Ok(()) => println!("\nwrote BENCH_hotpath.json ({} records)", records.len()),
+        Err(e) => eprintln!("could not write BENCH_hotpath.json: {e}"),
     }
 }

@@ -9,7 +9,9 @@ mod common;
 
 use hrfna::baselines::{Bfp, BfpConfig};
 use hrfna::fpga::pipeline::{speedup, WorkloadKind};
-use hrfna::hybrid::{Hrfna, HrfnaContext};
+use hrfna::hybrid::{Hrfna, HrfnaBatch, HrfnaContext};
+use hrfna::util::bench::{bench, write_json, BenchRecord};
+use hrfna::util::prng::Rng;
 use hrfna::util::table::Table;
 use hrfna::workloads::{dot, generators::Dist};
 
@@ -72,4 +74,52 @@ fn main() {
     }
     t.print();
     println!("paper: HRFNA <1e-6 & stable vs length; BFP degrades; 2.4x throughput");
+
+    // --- measured host wall-clock: scalar reference vs planar engine ------
+    let ctx = HrfnaContext::new(cfg);
+    let mut rng = Rng::new(99);
+    let mut t = Table::new(
+        "measured host dot (pre-encoded operands)",
+        &["n", "scalar ns/MAC", "planar ns/MAC", "speedup"],
+    );
+    let mut records = Vec::new();
+    for n in [1024usize, 4096, 16384] {
+        let xs: Vec<Hrfna> = Dist::moderate()
+            .sample_vec(&mut rng, n)
+            .iter()
+            .map(|&q| Hrfna::encode(q, &ctx))
+            .collect();
+        let ys: Vec<Hrfna> = Dist::moderate()
+            .sample_vec(&mut rng, n)
+            .iter()
+            .map(|&q| Hrfna::encode(q, &ctx))
+            .collect();
+        let r_scalar = bench(&format!("dot scalar n={n}"), || {
+            dot::dot_product_encoded_scalar::<Hrfna>(&xs, &ys, &ctx)
+        });
+        let bx = HrfnaBatch::from_items(&xs, ctx.k());
+        let by = HrfnaBatch::from_items(&ys, ctx.k());
+        let r_planar = bench(&format!("dot planar n={n}"), || bx.dot(&by, &ctx));
+        t.rowv(&[
+            n.to_string(),
+            format!("{:.1}", r_scalar.ns_per_iter / n as f64),
+            format!("{:.1}", r_planar.ns_per_iter / n as f64),
+            format!("{:.2}x", r_scalar.ns_per_iter / r_planar.ns_per_iter),
+        ]);
+        records.push(BenchRecord::from_result(
+            &format!("dot_scalar_n{n}"),
+            n as u64,
+            &r_scalar,
+        ));
+        records.push(BenchRecord::from_result(
+            &format!("dot_planar_n{n}"),
+            n as u64,
+            &r_planar,
+        ));
+    }
+    t.print();
+    match write_json("BENCH_dot.json", &records) {
+        Ok(()) => println!("wrote BENCH_dot.json ({} records)", records.len()),
+        Err(e) => eprintln!("could not write BENCH_dot.json: {e}"),
+    }
 }

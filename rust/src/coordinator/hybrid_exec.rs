@@ -13,6 +13,7 @@
 
 use crate::hybrid::number::{ldexp_staged, pow2};
 use crate::hybrid::HrfnaContext;
+use crate::rns::plane::ResiduePlane;
 use crate::rns::ResidueVec;
 
 /// Block-encoded vector: row-major `k × n` residues plus the shared
@@ -40,11 +41,12 @@ pub fn encode_block(xs: &[f64], ctx: &HrfnaContext) -> BlockEncoded {
     let sig = ctx.cfg.sig_bits as i32;
     let e = max.log2().floor() as i32;
     let f = e - sig + 1;
-    // §Perf (two iterations): (1) Barrett reduction instead of hardware
+    // §Perf (three iterations): (1) Barrett reduction instead of hardware
     // division; (2) channel-major *contiguous* writes — scale once into a
-    // staging row, then stream each channel's row sequentially instead of
-    // scattering 8 strided writes per element.
-    let bars = ctx.barrett();
+    // staging row, then stream each channel's lane sequentially instead of
+    // scattering 8 strided writes per element; (3) the lane loop itself is
+    // the planar engine's `ResiduePlane::encode_signed` kernel, shared
+    // with the batched execution path.
     let scale = pow2(-f); // |f| < 1100 only via extreme operands; staged below
     let staged: Vec<i64> = if scale.is_finite() && scale != 0.0 {
         xs.iter().map(|&x| (x * scale).round() as i64).collect()
@@ -53,16 +55,7 @@ pub fn encode_block(xs: &[f64], ctx: &HrfnaContext) -> BlockEncoded {
             .map(|&x| ldexp_staged(x, -f).round() as i64)
             .collect()
     };
-    let mut residues = vec![0i64; k * n];
-    for c in 0..k {
-        let bar = bars[c];
-        let m = ctx.cfg.moduli[c];
-        let row = &mut residues[c * n..(c + 1) * n];
-        for (j, &s) in staged.iter().enumerate() {
-            let r = bar.reduce(s.unsigned_abs());
-            row[j] = if s < 0 && r != 0 { (m - r) as i64 } else { r as i64 };
-        }
-    }
+    let residues = ResiduePlane::encode_signed_i64(&staged, &ctx.cfg.moduli, ctx.barrett());
     BlockEncoded { residues, n, f }
 }
 

@@ -1,50 +1,70 @@
 //! Arrays of HRFNA values with deferred, interval-driven selection —
-//! the paper's Fig. 1a machinery: residue vectors stay untouched in the
-//! "residue plane"; a parallel array of interval evaluations (each tagged
-//! with its `idx`) feeds a comparator reduction tree; only the *selected*
-//! element is ever reconstructed or normalized.
+//! the paper's Fig. 1a machinery as a *view over the planar engine*:
+//! residue lanes stay untouched in the residue plane ([`HrfnaBatch`]);
+//! the packed interval/exponent arrays feed a comparator reduction tree;
+//! only the *selected* element is ever reconstructed or normalized.
 
+use super::batch::HrfnaBatch;
 use super::context::HrfnaContext;
 use super::interval::{argmax_magnitude, Interval};
 use super::number::Hrfna;
 
-/// An array of hybrid values with the Fig. 1a control-plane view.
-#[derive(Clone, Debug, Default)]
+/// An array of hybrid values backed by the planar batch engine, with the
+/// Fig. 1a control-plane view.
+#[derive(Clone, Debug)]
 pub struct HrfnaArray {
-    pub items: Vec<Hrfna>,
+    batch: HrfnaBatch,
 }
 
 impl HrfnaArray {
     /// Encode a slice of reals.
     pub fn encode(xs: &[f64], ctx: &HrfnaContext) -> HrfnaArray {
         HrfnaArray {
-            items: xs.iter().map(|&x| Hrfna::encode(x, ctx)).collect(),
+            batch: HrfnaBatch::encode(xs, ctx),
         }
+    }
+
+    /// Build from scalar values (packs them into the plane).
+    pub fn from_items(items: Vec<Hrfna>, ctx: &HrfnaContext) -> HrfnaArray {
+        HrfnaArray {
+            batch: HrfnaBatch::from_items(&items, ctx.k()),
+        }
+    }
+
+    /// The underlying planar batch.
+    pub fn batch(&self) -> &HrfnaBatch {
+        &self.batch
+    }
+
+    /// Gather one element as a scalar value.
+    pub fn get(&self, idx: usize) -> Hrfna {
+        self.batch.get(idx)
     }
 
     /// Number of elements.
     pub fn len(&self) -> usize {
-        self.items.len()
+        self.batch.len()
     }
 
     /// True if empty.
     pub fn is_empty(&self) -> bool {
-        self.items.is_empty()
+        self.batch.is_empty()
     }
 
     /// The control-plane view: interval evaluations of Φ-magnitude
-    /// (N-interval positioned by the exponent), tagged by index.
-    /// No residue data is touched (Fig. 1a left → right hand-off).
+    /// (N-interval positioned by the exponent), tagged by index. Reads
+    /// only the packed exponent/interval arrays — no residue lane is
+    /// touched (Fig. 1a left → right hand-off).
     pub fn magnitude_intervals(&self) -> Vec<Interval> {
-        self.items
-            .iter()
-            .map(|h| {
+        (0..self.batch.len())
+            .map(|j| {
                 // Position the N-interval at the value scale: scale by 2^f
                 // conservatively (f64 suffices for a control estimate).
-                let k = super::number::pow2(h.f);
+                let iv = self.batch.interval(j);
+                let k = super::number::pow2(self.batch.exponent(j));
                 Interval::new(
-                    (h.iv.lo * k).min(h.iv.hi * k),
-                    (h.iv.lo * k).max(h.iv.hi * k),
+                    (iv.lo * k).min(iv.hi * k),
+                    (iv.lo * k).max(iv.hi * k),
                 )
             })
             .collect()
@@ -62,41 +82,43 @@ impl HrfnaArray {
     /// selected index if a normalization was performed.
     pub fn normalize_dominant(&mut self, ctx: &HrfnaContext) -> Option<usize> {
         let idx = self.argmax_magnitude()?;
-        let h = &mut self.items[idx];
-        if h.iv.abs_hi() >= super::number::pow2(ctx.cfg.tau_bits as i32) {
+        if self.batch.interval(idx).abs_hi() >= ctx.tau_f64() {
+            let mut h = self.batch.get(idx);
             h.normalize_to_sig(ctx, false);
+            self.batch.set(idx, &h);
             Some(idx)
         } else {
             None
         }
     }
 
-    /// Elementwise product with another array (carry-free, parallel).
+    /// Batched threshold sweep (the bulk form of the Fig. 1a policy):
+    /// normalize every element over τ, touching only flagged residues.
+    pub fn normalize_flagged(&mut self, ctx: &HrfnaContext) -> usize {
+        self.batch.normalize_flagged(ctx)
+    }
+
+    /// Elementwise product with another array (carry-free, lane-parallel).
     pub fn mul(&self, other: &HrfnaArray, ctx: &HrfnaContext) -> HrfnaArray {
         assert_eq!(self.len(), other.len());
         HrfnaArray {
-            items: self
-                .items
-                .iter()
-                .zip(&other.items)
-                .map(|(a, b)| a.mul(b, ctx))
-                .collect(),
+            batch: self.batch.mul(&other.batch, ctx),
         }
     }
 
-    /// Sum via exponent-coherent accumulation (Alg. 1 semantics).
+    /// Sum via the planar dot kernel against a broadcast one (Alg. 1
+    /// semantics: exponent-aligned, carry-free accumulation).
     pub fn sum(&self, ctx: &HrfnaContext) -> Hrfna {
-        let mut acc = Hrfna::zero(ctx, 0);
-        let one = Hrfna::encode(1.0, ctx);
-        for h in &self.items {
-            acc.mac_assign(h, &one, ctx);
+        if self.is_empty() {
+            return Hrfna::zero(ctx, 0);
         }
-        acc
+        let ones = HrfnaBatch::broadcast(&Hrfna::encode(1.0, ctx), self.len());
+        self.batch.dot(&ones, ctx)
     }
 
     /// Decode everything (test/inspection path; one CRT per element).
     pub fn decode(&self, ctx: &HrfnaContext) -> Vec<f64> {
-        self.items.iter().map(|h| h.decode(ctx)).collect()
+        self.batch.decode(ctx)
     }
 }
 
@@ -137,7 +159,7 @@ mod tests {
         let mut a = Hrfna::encode(1.0, &c);
         let b = Hrfna::encode(1.0, &c);
         a.f += 10; // a = 1024
-        let arr = HrfnaArray { items: vec![b, a] };
+        let arr = HrfnaArray::from_items(vec![b, a], &c);
         assert_eq!(arr.argmax_magnitude(), Some(1));
     }
 
@@ -152,14 +174,32 @@ mod tests {
         let big = Hrfna::from_signed_int(1 << 20, 0, &c)
             .mul_raw(&Hrfna::from_signed_int(1 << 25, 0, &c), &c);
         let small = Hrfna::encode(2.0, &c);
-        let mut arr = HrfnaArray {
-            items: vec![small.clone(), big, small],
-        };
+        let mut arr = HrfnaArray::from_items(vec![small.clone(), big, small], &c);
         let idx = arr.normalize_dominant(&c);
         assert_eq!(idx, Some(1));
-        assert!(arr.items[1].magnitude_bits() <= c.cfg.sig_bits);
+        assert!(arr.get(1).magnitude_bits() <= c.cfg.sig_bits);
         // Calling again: dominant no longer over threshold.
         assert_eq!(arr.normalize_dominant(&c), None);
+    }
+
+    #[test]
+    fn normalize_flagged_sweeps_all_oversized() {
+        let cfg = crate::config::HrfnaConfig {
+            tau_bits: 40,
+            ..crate::config::HrfnaConfig::paper_default()
+        };
+        let c = HrfnaContext::new(cfg);
+        let big = Hrfna::from_signed_int(1 << 20, 0, &c)
+            .mul_raw(&Hrfna::from_signed_int(1 << 25, 0, &c), &c);
+        let small = Hrfna::encode(2.0, &c);
+        let before = big.decode(&c);
+        let mut arr =
+            HrfnaArray::from_items(vec![big.clone(), small, big.clone()], &c);
+        assert_eq!(arr.normalize_flagged(&c), 2);
+        assert_eq!(arr.normalize_flagged(&c), 0);
+        // Values preserved up to the Lemma 1 rounding.
+        let after = arr.get(0).decode(&c);
+        assert!(((after - before) / before).abs() < 1e-6);
     }
 
     #[test]

@@ -1,0 +1,851 @@
+//! Batched HRFNA execution engine over the planar residue layout.
+//!
+//! A [`HrfnaBatch`] stores a batch of hybrid values structure-of-arrays:
+//! one contiguous `u64` residue lane per modulus ([`ResiduePlane`],
+//! `residues[channel][elem]`) plus packed exponent (`f`) and interval
+//! (`iv_lo`/`iv_hi`) arrays. Elementwise kernels run tight per-channel
+//! loops with no per-element allocation; threshold-driven normalization
+//! scans the packed intervals in bulk and reconstructs only flagged
+//! elements (the Fig. 1a discipline, batched).
+//!
+//! ## Scalar/batched API split
+//!
+//! The scalar [`Hrfna`] type remains the *reference implementation*: every
+//! batched elementwise op (`mul`, `add`, `neg`, `sub`, `mul_scalar`,
+//! `mac_assign`, `normalize_flagged`) is **bit-identical** to applying the
+//! corresponding scalar op element-by-element — the fast lane path is only
+//! taken when it provably coincides with the scalar fast path (same guard
+//! and threshold conditions), and anything else falls back to the scalar
+//! code. Property tests in this module assert the bit-identity.
+//!
+//! The batched reduction [`HrfnaBatch::dot`] is the one *semantic*
+//! improvement: it accumulates every product exactly (carry-free residue
+//! adds at a common exponent, Algorithm 1 with zero mid-loop rounding)
+//! where the scalar MAC loop may take Lemma-1-bounded normalization
+//! events mid-accumulation. Its result is therefore at least as accurate
+//! as the scalar reference, never less.
+
+use std::sync::atomic::Ordering;
+
+use super::context::HrfnaContext;
+use super::interval::Interval;
+use super::number::{pow2, Hrfna};
+use crate::rns::plane::{self, ResiduePlane};
+use crate::rns::residue::ResidueVec;
+
+/// A batch of HRFNA values in planar (structure-of-arrays) layout.
+#[derive(Clone, Debug)]
+pub struct HrfnaBatch {
+    res: ResiduePlane,
+    f: Vec<i32>,
+    iv_lo: Vec<f64>,
+    iv_hi: Vec<f64>,
+}
+
+impl HrfnaBatch {
+    // ------------------------------------------------------------------
+    // Construction / element access
+    // ------------------------------------------------------------------
+
+    /// A batch of `n` zeros (exponent 0, like `Hrfna::zero`).
+    pub fn zeros(n: usize, ctx: &HrfnaContext) -> HrfnaBatch {
+        HrfnaBatch {
+            res: ResiduePlane::zero(ctx.k(), n),
+            f: vec![0; n],
+            iv_lo: vec![0.0; n],
+            iv_hi: vec![0.0; n],
+        }
+    }
+
+    /// Encode a slice of reals (per-element exponent, identical to
+    /// `Hrfna::encode` element by element).
+    pub fn encode(xs: &[f64], ctx: &HrfnaContext) -> HrfnaBatch {
+        let mut out = HrfnaBatch::zeros(xs.len(), ctx);
+        for (j, &x) in xs.iter().enumerate() {
+            out.set(j, &Hrfna::encode(x, ctx));
+        }
+        out
+    }
+
+    /// Pack existing scalar values into a batch (all must share `k`).
+    pub fn from_items(items: &[Hrfna], k: usize) -> HrfnaBatch {
+        let n = items.len();
+        let mut res = ResiduePlane::zero(k, n);
+        let mut f = Vec::with_capacity(n);
+        let mut iv_lo = Vec::with_capacity(n);
+        let mut iv_hi = Vec::with_capacity(n);
+        for (j, h) in items.iter().enumerate() {
+            debug_assert_eq!(h.r.k(), k);
+            res.set(j, &h.r);
+            f.push(h.f);
+            iv_lo.push(h.iv.lo);
+            iv_hi.push(h.iv.hi);
+        }
+        HrfnaBatch { res, f, iv_lo, iv_hi }
+    }
+
+    /// Broadcast one scalar value across a batch of length `n`.
+    pub fn broadcast(h: &Hrfna, n: usize) -> HrfnaBatch {
+        let k = h.r.k();
+        let mut res = ResiduePlane::zero(k, n);
+        for c in 0..k {
+            res.lane_mut(c).fill(h.r.r[c]);
+        }
+        HrfnaBatch {
+            res,
+            f: vec![h.f; n],
+            iv_lo: vec![h.iv.lo; n],
+            iv_hi: vec![h.iv.hi; n],
+        }
+    }
+
+    /// Number of elements.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.f.len()
+    }
+
+    /// True if the batch holds no elements.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.f.is_empty()
+    }
+
+    /// Number of residue channels.
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.res.k()
+    }
+
+    /// The underlying residue plane.
+    #[inline]
+    pub fn plane(&self) -> &ResiduePlane {
+        &self.res
+    }
+
+    /// Packed exponent of element `j`.
+    #[inline]
+    pub fn exponent(&self, j: usize) -> i32 {
+        self.f[j]
+    }
+
+    /// Packed interval of element `j` (control-plane view; no residue
+    /// data is touched).
+    #[inline]
+    pub fn interval(&self, j: usize) -> Interval {
+        Interval {
+            lo: self.iv_lo[j],
+            hi: self.iv_hi[j],
+        }
+    }
+
+    /// Gather element `j` into a scalar [`Hrfna`] (reference-path view).
+    pub fn get(&self, j: usize) -> Hrfna {
+        Hrfna {
+            r: self.res.get(j),
+            f: self.f[j],
+            iv: self.interval(j),
+        }
+    }
+
+    /// Scatter a scalar value into element `j`.
+    pub fn set(&mut self, j: usize, h: &Hrfna) {
+        self.res.set(j, &h.r);
+        self.f[j] = h.f;
+        self.iv_lo[j] = h.iv.lo;
+        self.iv_hi[j] = h.iv.hi;
+    }
+
+    /// Unpack into scalar values.
+    pub fn to_items(&self) -> Vec<Hrfna> {
+        (0..self.len()).map(|j| self.get(j)).collect()
+    }
+
+    /// Decode every element (one CRT reconstruction per element).
+    pub fn decode(&self, ctx: &HrfnaContext) -> Vec<f64> {
+        (0..self.len()).map(|j| self.get(j).decode(ctx)).collect()
+    }
+
+    // ------------------------------------------------------------------
+    // Elementwise kernels (bit-identical to the scalar reference)
+    // ------------------------------------------------------------------
+
+    /// Elementwise hybrid multiplication; bit-identical to
+    /// `self[j].mul(&other[j], ctx)` for every `j`.
+    pub fn mul(&self, other: &HrfnaBatch, ctx: &HrfnaContext) -> HrfnaBatch {
+        assert_eq!(self.len(), other.len());
+        let n = self.len();
+        let bud = ctx.signed_budget_bits();
+        let tau = ctx.tau_f64();
+        let mut iv_lo = vec![0.0; n];
+        let mut iv_hi = vec![0.0; n];
+        let mut all_fast = true;
+        for j in 0..n {
+            let ia = self.interval(j);
+            let ib = other.interval(j);
+            if ia.bits_hi() + ib.bits_hi() >= bud {
+                all_fast = false;
+                break;
+            }
+            let z = ia.mul(&ib);
+            if z.abs_hi() >= tau {
+                all_fast = false;
+                break;
+            }
+            iv_lo[j] = z.lo;
+            iv_hi[j] = z.hi;
+        }
+        if !all_fast {
+            // Rare path: element-at-a-time through the scalar reference
+            // (guard normalization and threshold events included).
+            let items: Vec<Hrfna> = (0..n)
+                .map(|j| self.get(j).mul(&other.get(j), ctx))
+                .collect();
+            return HrfnaBatch::from_items(&items, self.k());
+        }
+        ctx.counters.muls.fetch_add(n as u64, Ordering::Relaxed);
+        HrfnaBatch {
+            res: self.res.mul(&other.res, ctx.barrett()),
+            f: self.f.iter().zip(&other.f).map(|(a, b)| a + b).collect(),
+            iv_lo,
+            iv_hi,
+        }
+    }
+
+    /// Elementwise multiplication by one broadcast scalar value;
+    /// bit-identical to `self[j].mul(c, ctx)` for every `j`.
+    pub fn mul_scalar(&self, c: &Hrfna, ctx: &HrfnaContext) -> HrfnaBatch {
+        let n = self.len();
+        let bud = ctx.signed_budget_bits();
+        let tau = ctx.tau_f64();
+        let cbits = c.iv.bits_hi();
+        let mut iv_lo = vec![0.0; n];
+        let mut iv_hi = vec![0.0; n];
+        let mut all_fast = true;
+        for j in 0..n {
+            let ia = self.interval(j);
+            if ia.bits_hi() + cbits >= bud {
+                all_fast = false;
+                break;
+            }
+            let z = ia.mul(&c.iv);
+            if z.abs_hi() >= tau {
+                all_fast = false;
+                break;
+            }
+            iv_lo[j] = z.lo;
+            iv_hi[j] = z.hi;
+        }
+        if !all_fast {
+            let items: Vec<Hrfna> = (0..n).map(|j| self.get(j).mul(c, ctx)).collect();
+            return HrfnaBatch::from_items(&items, self.k());
+        }
+        ctx.counters.muls.fetch_add(n as u64, Ordering::Relaxed);
+        let mut res = ResiduePlane::zero(self.k(), n);
+        for ch in 0..self.k() {
+            plane::lane_scale(ctx.barrett()[ch], self.res.lane(ch), c.r.r[ch], res.lane_mut(ch));
+        }
+        HrfnaBatch {
+            res,
+            f: self.f.iter().map(|&a| a + c.f).collect(),
+            iv_lo,
+            iv_hi,
+        }
+    }
+
+    /// Multiply every element by the real constant `k` (batched analogue
+    /// of `Numeric::scale`, which encodes `k` and multiplies).
+    pub fn scale(&self, k: f64, ctx: &HrfnaContext) -> HrfnaBatch {
+        self.mul_scalar(&Hrfna::encode(k, ctx), ctx)
+    }
+
+    /// Elementwise addition; bit-identical to `self[j].add(&other[j], ctx)`.
+    pub fn add(&self, other: &HrfnaBatch, ctx: &HrfnaContext) -> HrfnaBatch {
+        assert_eq!(self.len(), other.len());
+        let n = self.len();
+        let tau = ctx.tau_f64();
+        let mut iv_lo = vec![0.0; n];
+        let mut iv_hi = vec![0.0; n];
+        let mut all_fast = true;
+        for j in 0..n {
+            if self.f[j] != other.f[j] {
+                // Exponent synchronization required: scalar path.
+                all_fast = false;
+                break;
+            }
+            let z = self.interval(j).add(&other.interval(j));
+            if z.abs_hi() >= tau {
+                all_fast = false;
+                break;
+            }
+            iv_lo[j] = z.lo;
+            iv_hi[j] = z.hi;
+        }
+        if !all_fast {
+            let items: Vec<Hrfna> = (0..n)
+                .map(|j| self.get(j).add(&other.get(j), ctx))
+                .collect();
+            return HrfnaBatch::from_items(&items, self.k());
+        }
+        ctx.counters.adds.fetch_add(n as u64, Ordering::Relaxed);
+        HrfnaBatch {
+            res: self.res.add(&other.res, ctx.barrett()),
+            f: self.f.clone(),
+            iv_lo,
+            iv_hi,
+        }
+    }
+
+    /// Elementwise negation (always carry-free; bit-identical to
+    /// `self[j].neg(ctx)`).
+    pub fn neg(&self, ctx: &HrfnaContext) -> HrfnaBatch {
+        let n = self.len();
+        let mut iv_lo = vec![0.0; n];
+        let mut iv_hi = vec![0.0; n];
+        for j in 0..n {
+            let z = self.interval(j).neg();
+            iv_lo[j] = z.lo;
+            iv_hi[j] = z.hi;
+        }
+        HrfnaBatch {
+            res: self.res.neg(&ctx.cfg.moduli),
+            f: self.f.clone(),
+            iv_lo,
+            iv_hi,
+        }
+    }
+
+    /// Elementwise subtraction: `self + (-other)` (as the scalar op).
+    pub fn sub(&self, other: &HrfnaBatch, ctx: &HrfnaContext) -> HrfnaBatch {
+        self.add(&other.neg(ctx), ctx)
+    }
+
+    /// Elementwise fused multiply-accumulate `self[j] += x[j] * y[j]`;
+    /// bit-identical to `self[j].mac_assign(&x[j], &y[j], ctx)`.
+    pub fn mac_assign(&mut self, x: &HrfnaBatch, y: &HrfnaBatch, ctx: &HrfnaContext) {
+        assert_eq!(self.len(), x.len());
+        assert_eq!(self.len(), y.len());
+        let n = self.len();
+        let bud = ctx.signed_budget_bits();
+        let tau = ctx.tau_f64();
+        let x_nz = x.res.nonzero_mask();
+        let y_nz = y.res.nonzero_mask();
+        let acc_nz = self.res.nonzero_mask();
+        if acc_nz.iter().all(|&nz| !nz) {
+            // Whole accumulator is zero — mirror of the scalar acc-zero
+            // branch (`*self = p`, threshold no-op), with zero products
+            // leaving their element untouched (scalar early return).
+            let mut iv_lo = self.iv_lo.clone();
+            let mut iv_hi = self.iv_hi.clone();
+            let mut f = self.f.clone();
+            let mut fast = true;
+            for j in 0..n {
+                if !(x_nz[j] && y_nz[j]) {
+                    continue; // product provably zero: element untouched
+                }
+                let ia = x.interval(j);
+                let ib = y.interval(j);
+                if ia.bits_hi() + ib.bits_hi() >= bud {
+                    fast = false;
+                    break;
+                }
+                let p = ia.mul(&ib);
+                if p.abs_hi() >= tau {
+                    fast = false;
+                    break;
+                }
+                iv_lo[j] = p.lo;
+                iv_hi[j] = p.hi;
+                f[j] = x.f[j] + y.f[j];
+            }
+            if fast {
+                // Zero-product lanes multiply to zero, so one lane pass
+                // writes exactly the scalar result for every element.
+                ctx.counters.muls.fetch_add(n as u64, Ordering::Relaxed);
+                self.res = x.res.mul(&y.res, ctx.barrett());
+                self.f = f;
+                self.iv_lo = iv_lo;
+                self.iv_hi = iv_hi;
+                return;
+            }
+        } else {
+            let mut iv_lo = vec![0.0; n];
+            let mut iv_hi = vec![0.0; n];
+            let mut all_fast = true;
+            for j in 0..n {
+                // The lane path coincides with the scalar op only when the
+                // scalar op would take its exponent-coherent in-place
+                // branch: nonzero product, nonzero accumulator, matching
+                // exponents, product headroom, no trailing threshold event.
+                if !(x_nz[j] && y_nz[j] && acc_nz[j]) {
+                    all_fast = false;
+                    break;
+                }
+                let ia = x.interval(j);
+                let ib = y.interval(j);
+                if ia.bits_hi() + ib.bits_hi() >= bud {
+                    all_fast = false;
+                    break;
+                }
+                if x.f[j] + y.f[j] != self.f[j] {
+                    all_fast = false;
+                    break;
+                }
+                let z = self.interval(j).add(&ia.mul(&ib));
+                if z.abs_hi() >= tau {
+                    all_fast = false;
+                    break;
+                }
+                iv_lo[j] = z.lo;
+                iv_hi[j] = z.hi;
+            }
+            if all_fast {
+                ctx.counters.muls.fetch_add(n as u64, Ordering::Relaxed);
+                ctx.counters.adds.fetch_add(n as u64, Ordering::Relaxed);
+                self.res.fma_assign(&x.res, &y.res, ctx.barrett());
+                self.iv_lo = iv_lo;
+                self.iv_hi = iv_hi;
+                return;
+            }
+        }
+        // Mixed/rare batch: element-at-a-time scalar reference.
+        for j in 0..n {
+            let mut acc = self.get(j);
+            acc.mac_assign(&x.get(j), &y.get(j), ctx);
+            self.set(j, &acc);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Batched normalization
+    // ------------------------------------------------------------------
+
+    /// Batched threshold-driven normalization: scan the packed intervals
+    /// in bulk and reconstruct/normalize *only* the flagged elements
+    /// (bit-identical to `maybe_normalize` per element). Returns the
+    /// number of elements normalized.
+    pub fn normalize_flagged(&mut self, ctx: &HrfnaContext) -> usize {
+        let tau = ctx.tau_f64();
+        let mut count = 0;
+        for j in 0..self.len() {
+            if self.interval(j).abs_hi() >= tau {
+                let mut h = self.get(j);
+                h.normalize_to_sig(ctx, false);
+                self.set(j, &h);
+                count += 1;
+            }
+        }
+        count
+    }
+
+    // ------------------------------------------------------------------
+    // Batched reductions (the Algorithm 1 hot loop, planar)
+    // ------------------------------------------------------------------
+
+    /// Batched dot product `Σ_j self[j]·other[j]` (Algorithm 1 on the
+    /// planar engine): every product is aligned to the lowest product
+    /// exponent by an exact residue-domain `2^Δ` scale and accumulated
+    /// carry-free — zero mid-loop rounding. Falls back to the scalar MAC
+    /// loop when interval headroom cannot guarantee exactness.
+    pub fn dot(&self, other: &HrfnaBatch, ctx: &HrfnaContext) -> Hrfna {
+        assert_eq!(self.len(), other.len());
+        self.dot_range(0, other, 0, self.len(), ctx)
+    }
+
+    /// [`HrfnaBatch::dot`] over the sub-ranges `self[xo..xo+len]` and
+    /// `other[yo..yo+len]` (matmul uses row/column windows of one plane).
+    pub fn dot_range(
+        &self,
+        xo: usize,
+        other: &HrfnaBatch,
+        yo: usize,
+        len: usize,
+        ctx: &HrfnaContext,
+    ) -> Hrfna {
+        assert!(xo + len <= self.len() && yo + len <= other.len());
+        if len == 0 {
+            return Hrfna::zero(ctx, 0);
+        }
+        let bud = ctx.signed_budget_bits();
+        // Control-plane prepass: product exponents, conservative product
+        // intervals, and the common (lowest) exponent f0.
+        let mut fp = vec![0i32; len];
+        let mut plo = vec![0.0f64; len];
+        let mut phi = vec![0.0f64; len];
+        let mut f0 = i32::MAX;
+        let mut fast = true;
+        for t in 0..len {
+            let ia = self.interval(xo + t);
+            let ib = other.interval(yo + t);
+            if ia.bits_hi() + ib.bits_hi() >= bud {
+                fast = false;
+                break;
+            }
+            let p = ia.mul(&ib);
+            plo[t] = p.lo;
+            phi[t] = p.hi;
+            fp[t] = self.f[xo + t] + other.f[yo + t];
+            // A [0,0] product interval proves the product is exactly zero
+            // (its residues are all zero); it neither constrains f0 nor
+            // contributes to the sum.
+            if !(p.lo == 0.0 && p.hi == 0.0) {
+                f0 = f0.min(fp[t]);
+            }
+        }
+        if fast && f0 == i32::MAX {
+            // Full scan, every product provably zero.
+            return Hrfna::zero(ctx, 0);
+        }
+        // Headroom: Σ |product|·2^Δ must stay below 2^budget so the exact
+        // residue accumulation cannot wrap past M/2.
+        let mut deltas = vec![0u32; len];
+        if fast {
+            let mut bound = 0.0f64;
+            for t in 0..len {
+                if plo[t] == 0.0 && phi[t] == 0.0 {
+                    continue;
+                }
+                let d = (fp[t] - f0) as u32;
+                deltas[t] = d;
+                bound += plo[t].abs().max(phi[t].abs()) * pow2(d as i32);
+                if !bound.is_finite() {
+                    fast = false;
+                    break;
+                }
+            }
+            if fast && bound >= pow2(bud as i32) {
+                fast = false;
+            }
+        }
+        if !fast {
+            // Reference path: scalar exponent-coherent MAC loop.
+            let mut acc = Hrfna::zero(ctx, 0);
+            for t in 0..len {
+                acc.mac_assign(&self.get(xo + t), &other.get(yo + t), ctx);
+            }
+            return acc;
+        }
+        // Planar hot loop: per channel, one contiguous multiply-align-
+        // accumulate pass; no allocation, no per-element bookkeeping.
+        let k = self.k();
+        let bars = ctx.barrett();
+        let uniform = deltas.iter().all(|&d| d == 0);
+        let mut out = vec![0u64; k];
+        let mut mults = vec![0u64; len];
+        for (c, acc) in out.iter_mut().enumerate() {
+            let bar = bars[c];
+            let xs = &self.res.lane(c)[xo..xo + len];
+            let ys = &other.res.lane(c)[yo..yo + len];
+            *acc = if uniform {
+                plane::lane_dot(bar, xs, ys)
+            } else {
+                for (mult, &d) in mults.iter_mut().zip(&deltas) {
+                    *mult = ctx.pow2_mod(c, d);
+                }
+                plane::lane_dot_scaled(bar, xs, ys, &mults)
+            };
+        }
+        // Algorithm 1 accounting: one mul + one add per element.
+        ctx.counters.muls.fetch_add(len as u64, Ordering::Relaxed);
+        ctx.counters.adds.fetch_add(len as u64, Ordering::Relaxed);
+        // Conservative interval for the exact signed sum.
+        let mut iv = Interval::zero();
+        for t in 0..len {
+            if plo[t] == 0.0 && phi[t] == 0.0 {
+                continue;
+            }
+            iv = iv.add(&Interval { lo: plo[t], hi: phi[t] }.shl(deltas[t]));
+        }
+        let mut acc = Hrfna {
+            r: ResidueVec { r: out },
+            f: f0,
+            iv,
+        };
+        acc.maybe_normalize(ctx);
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HrfnaConfig;
+    use crate::util::proptest::check_with;
+    use crate::util::prng::Rng;
+    use crate::workloads::generators::Dist;
+
+    fn ctx() -> HrfnaContext {
+        HrfnaContext::paper_default()
+    }
+
+    /// Exact structural equality (residues, exponent, interval bounds).
+    fn same(a: &Hrfna, b: &Hrfna) -> bool {
+        a.r == b.r && a.f == b.f && a.iv.lo == b.iv.lo && a.iv.hi == b.iv.hi
+    }
+
+    fn random_values(rng: &mut Rng, n: usize, c: &HrfnaContext) -> Vec<Hrfna> {
+        (0..n)
+            .map(|_| {
+                // Mix of moderate, wide-range and exact-zero values so both
+                // the lane path and the scalar fallback are exercised.
+                let x = match rng.below(4) {
+                    0 => 0.0,
+                    1 => rng.sign() * rng.lognormal(0.0, 12.0),
+                    _ => rng.uniform(-1.0, 1.0),
+                };
+                Hrfna::encode(x, c)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let c = ctx();
+        let mut rng = Rng::new(1);
+        let items = random_values(&mut rng, 9, &c);
+        let b = HrfnaBatch::from_items(&items, c.k());
+        assert_eq!(b.len(), 9);
+        for (j, it) in items.iter().enumerate() {
+            assert!(same(&b.get(j), it), "j={j}");
+        }
+        let back = b.to_items();
+        for (a, x) in back.iter().zip(&items) {
+            assert!(same(a, x));
+        }
+    }
+
+    #[test]
+    fn encode_matches_scalar_encode() {
+        let c = ctx();
+        let xs = [0.0, 1.5, -2.25e10, 3.33e-7, -1.0];
+        let b = HrfnaBatch::encode(&xs, &c);
+        for (j, &x) in xs.iter().enumerate() {
+            assert!(same(&b.get(j), &Hrfna::encode(x, &c)), "x={x}");
+        }
+    }
+
+    #[test]
+    fn broadcast_replicates() {
+        let c = ctx();
+        let h = Hrfna::encode(2.5, &c);
+        let b = HrfnaBatch::broadcast(&h, 5);
+        for j in 0..5 {
+            assert!(same(&b.get(j), &h));
+        }
+    }
+
+    #[test]
+    fn prop_batched_mul_add_bit_identical_to_scalar() {
+        let c = ctx();
+        check_with("batch-mul-add-bitident", 48, |rng| {
+            let n = 1 + rng.below(24) as usize;
+            let xs = random_values(rng, n, &c);
+            let ys = random_values(rng, n, &c);
+            let bx = HrfnaBatch::from_items(&xs, c.k());
+            let by = HrfnaBatch::from_items(&ys, c.k());
+            let bm = bx.mul(&by, &c);
+            let ba = bx.add(&by, &c);
+            let bn = bx.neg(&c);
+            let bs = bx.sub(&by, &c);
+            for j in 0..n {
+                crate::prop_assert!(
+                    same(&bm.get(j), &xs[j].mul(&ys[j], &c)),
+                    "mul j={j}"
+                );
+                crate::prop_assert!(
+                    same(&ba.get(j), &xs[j].add(&ys[j], &c)),
+                    "add j={j}"
+                );
+                crate::prop_assert!(same(&bn.get(j), &xs[j].neg(&c)), "neg j={j}");
+                crate::prop_assert!(
+                    same(&bs.get(j), &xs[j].sub(&ys[j], &c)),
+                    "sub j={j}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_batched_mac_bit_identical_to_scalar() {
+        let c = ctx();
+        check_with("batch-mac-bitident", 48, |rng| {
+            let n = 1 + rng.below(16) as usize;
+            let mut accs = random_values(rng, n, &c);
+            let xs = random_values(rng, n, &c);
+            let ys = random_values(rng, n, &c);
+            let mut bacc = HrfnaBatch::from_items(&accs, c.k());
+            let bx = HrfnaBatch::from_items(&xs, c.k());
+            let by = HrfnaBatch::from_items(&ys, c.k());
+            // Several chained MAC rounds (exercises the exponent-coherent
+            // in-place branch once accumulators settle).
+            for _ in 0..3 {
+                bacc.mac_assign(&bx, &by, &c);
+                for j in 0..n {
+                    accs[j].mac_assign(&xs[j], &ys[j], &c);
+                }
+                for j in 0..n {
+                    crate::prop_assert!(same(&bacc.get(j), &accs[j]), "mac j={j}");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mac_into_zeros_accumulator_bit_identical() {
+        // The canonical first MAC: acc = zeros; acc += x*y takes the
+        // acc-zero lane class and must still mirror the scalar op exactly,
+        // including elements whose product is zero (left untouched).
+        let c = ctx();
+        let mut rng = Rng::new(41);
+        for round in 0..8 {
+            let n = 1 + rng.below(20) as usize;
+            let xs = random_values(&mut rng, n, &c);
+            let ys = random_values(&mut rng, n, &c);
+            let bx = HrfnaBatch::from_items(&xs, c.k());
+            let by = HrfnaBatch::from_items(&ys, c.k());
+            let mut bacc = HrfnaBatch::zeros(n, &c);
+            bacc.mac_assign(&bx, &by, &c);
+            for j in 0..n {
+                let mut acc = Hrfna::zero(&c, 0);
+                acc.mac_assign(&xs[j], &ys[j], &c);
+                assert!(same(&bacc.get(j), &acc), "round={round} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_batched_normalize_bit_identical_to_scalar() {
+        // Tight threshold so normalization actually fires.
+        let c = HrfnaContext::new(HrfnaConfig {
+            tau_bits: 40,
+            ..HrfnaConfig::paper_default()
+        });
+        check_with("batch-normalize-bitident", 32, |rng| {
+            let n = 1 + rng.below(12) as usize;
+            let mut items: Vec<Hrfna> = (0..n)
+                .map(|_| {
+                    let bits = 20 + rng.below(40) as u32;
+                    let v = (rng.next_u64() >> (64 - bits)).max(1) as i64;
+                    Hrfna::from_signed_int(if rng.bool() { v } else { -v }, -10, &c)
+                })
+                .collect();
+            let mut b = HrfnaBatch::from_items(&items, c.k());
+            let flagged = b.normalize_flagged(&c);
+            let mut want_flagged = 0;
+            for it in items.iter_mut() {
+                let before = it.f;
+                it.maybe_normalize(&c);
+                if it.f != before {
+                    want_flagged += 1;
+                }
+            }
+            crate::prop_assert!(
+                flagged == want_flagged,
+                "flag count {flagged} != {want_flagged}"
+            );
+            for (j, it) in items.iter().enumerate() {
+                crate::prop_assert!(same(&b.get(j), it), "norm j={j}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dot_matches_f64_reference_moderate() {
+        let c = ctx();
+        let mut rng = Rng::new(7);
+        let n = 1024;
+        let xs = Dist::moderate().sample_vec(&mut rng, n);
+        let ys = Dist::moderate().sample_vec(&mut rng, n);
+        let bx = HrfnaBatch::encode(&xs, &c);
+        let by = HrfnaBatch::encode(&ys, &c);
+        let acc = bx.dot(&by, &c);
+        assert!(acc.interval_is_sound(&c));
+        let got = acc.decode(&c);
+        let want: f64 = xs.iter().zip(&ys).map(|(a, b)| a * b).sum();
+        // Encode quantization is relative to the non-cancelling magnitude.
+        let scale: f64 = xs.iter().zip(&ys).map(|(a, b)| (a * b).abs()).sum();
+        assert!(
+            (got - want).abs() < 1e-7 * scale + 1e-300,
+            "got={got} want={want}"
+        );
+    }
+
+    #[test]
+    fn dot_matches_scalar_reference_closely() {
+        let c = ctx();
+        let mut rng = Rng::new(13);
+        for n in [1usize, 2, 33, 512] {
+            let xs = Dist::moderate().sample_vec(&mut rng, n);
+            let ys = Dist::moderate().sample_vec(&mut rng, n);
+            let ex: Vec<Hrfna> = xs.iter().map(|&x| Hrfna::encode(x, &c)).collect();
+            let ey: Vec<Hrfna> = ys.iter().map(|&y| Hrfna::encode(y, &c)).collect();
+            let bx = HrfnaBatch::from_items(&ex, c.k());
+            let by = HrfnaBatch::from_items(&ey, c.k());
+            let planar = bx.dot(&by, &c).decode(&c);
+            let mut acc = Hrfna::zero(&c, 0);
+            for (x, y) in ex.iter().zip(&ey) {
+                acc.mac_assign(x, y, &c);
+            }
+            let scalar = acc.decode(&c);
+            let tol = 1e-9 * scalar.abs().max(1e-12);
+            assert!(
+                (planar - scalar).abs() <= tol,
+                "n={n} planar={planar} scalar={scalar}"
+            );
+        }
+    }
+
+    #[test]
+    fn dot_handles_zeros_and_wide_range() {
+        let c = ctx();
+        let mut rng = Rng::new(21);
+        let n = 256;
+        let mut xs = Dist::high_dynamic_range().sample_vec(&mut rng, n);
+        let ys = Dist::high_dynamic_range().sample_vec(&mut rng, n);
+        for j in (0..n).step_by(5) {
+            xs[j] = 0.0;
+        }
+        let bx = HrfnaBatch::encode(&xs, &c);
+        let by = HrfnaBatch::encode(&ys, &c);
+        let acc = bx.dot(&by, &c);
+        assert!(acc.interval_is_sound(&c));
+        let got = acc.decode(&c);
+        let want: f64 = xs.iter().zip(&ys).map(|(a, b)| a * b).sum();
+        let scale: f64 = xs.iter().zip(&ys).map(|(a, b)| (a * b).abs()).sum();
+        assert!(
+            (got - want).abs() < 1e-6 * scale + 1e-300,
+            "got={got} want={want}"
+        );
+    }
+
+    #[test]
+    fn dot_of_all_zeros_is_zero() {
+        let c = ctx();
+        let bx = HrfnaBatch::encode(&[0.0; 16], &c);
+        let by = HrfnaBatch::encode(&[1.0; 16], &c);
+        let acc = bx.dot(&by, &c);
+        assert!(acc.is_zero());
+        assert_eq!(acc.decode(&c), 0.0);
+        let empty = HrfnaBatch::zeros(0, &c);
+        assert!(empty.dot(&empty, &c).is_zero());
+    }
+
+    #[test]
+    fn dot_range_windows_match_full_dot() {
+        let c = ctx();
+        let mut rng = Rng::new(31);
+        let xs = Dist::moderate().sample_vec(&mut rng, 64);
+        let ys = Dist::moderate().sample_vec(&mut rng, 64);
+        let bx = HrfnaBatch::encode(&xs, &c);
+        let by = HrfnaBatch::encode(&ys, &c);
+        let window = bx.dot_range(16, &by, 32, 16, &c).decode(&c);
+        let want: f64 = (0..16).map(|t| xs[16 + t] * ys[32 + t]).sum();
+        assert!(
+            (window - want).abs() < 1e-7 * want.abs().max(1.0),
+            "window={window} want={want}"
+        );
+    }
+}

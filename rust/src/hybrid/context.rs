@@ -145,6 +145,22 @@ impl HrfnaContext {
         &self.crt.barrett
     }
 
+    /// Signed headroom budget in bits for the overflow guards: operands
+    /// are kept below `2^budget < M/2`. The scalar ops and the batched
+    /// planar engine share this single definition — the batch fast paths'
+    /// bit-identity with the scalar reference depends on it.
+    #[inline]
+    pub fn signed_budget_bits(&self) -> u32 {
+        (self.m_bits - 2.0) as u32
+    }
+
+    /// Normalization threshold τ as f64 (the Definition 3 comparison
+    /// value used by `maybe_normalize` and the batched threshold scans).
+    #[inline]
+    pub fn tau_f64(&self) -> f64 {
+        super::number::pow2(self.cfg.tau_bits as i32)
+    }
+
     /// Number of residue channels.
     #[inline]
     pub fn k(&self) -> usize {

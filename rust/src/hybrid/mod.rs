@@ -10,16 +10,21 @@
 //!   the reduction tree used for magnitude selection.
 //! * [`number`]   — the `Hrfna` value type: Definitions 1–4, Theorem 1
 //!   multiplication, exponent-synchronized addition, MAC, normalization.
+//! * [`batch`]    — planar (structure-of-arrays) batched execution engine:
+//!   contiguous per-channel residue lanes + packed exponent/interval
+//!   arrays, with the scalar `Hrfna` ops as the bit-identical reference.
 //! * [`error`]    — Lemma 1/2 bound calculators and bound-checking probes.
 
 pub mod context;
 pub mod interval;
 pub mod number;
+pub mod batch;
 pub mod error;
 pub mod funcs;
 pub mod array;
 
 pub use array::HrfnaArray;
+pub use batch::HrfnaBatch;
 pub use context::{HrfnaContext, OpCounters, OpSnapshot};
 pub use interval::Interval;
 pub use number::Hrfna;

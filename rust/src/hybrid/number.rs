@@ -121,7 +121,7 @@ impl Hrfna {
     /// borrowed operands — no clones, one output allocation.
     pub fn mul_raw(&self, other: &Hrfna, ctx: &HrfnaContext) -> Hrfna {
         HrfnaContext::count(&ctx.counters.muls);
-        let budget = (ctx.m_bits - 2.0) as u32; // signed headroom below M/2
+        let budget = ctx.signed_budget_bits(); // signed headroom below M/2
         if self.iv.bits_hi() + other.iv.bits_hi() < budget {
             return Hrfna {
                 r: self.r.mul(&other.r, ctx.barrett()),
@@ -201,7 +201,7 @@ impl Hrfna {
             return;
         }
         HrfnaContext::count(&ctx.counters.adds);
-        let budget = (ctx.m_bits - 2.0) as u32;
+        let budget = ctx.signed_budget_bits();
         let bars = ctx.barrett();
         if p.f == self.f {
             // §Perf fast path: exponent-coherent product — accumulate in
@@ -247,7 +247,7 @@ impl Hrfna {
     /// Accumulator-mode threshold check: fixed-step normalization
     /// (Definition 4 with s = scale_step), repeated if necessary.
     fn maybe_normalize_acc(&mut self, ctx: &HrfnaContext) {
-        let tau = pow2(ctx.cfg.tau_bits as i32);
+        let tau = ctx.tau_f64();
         while self.iv.abs_hi() >= tau {
             self.normalize(ctx.cfg.scale_step, ctx, false);
         }
@@ -264,7 +264,7 @@ impl Hrfna {
         HrfnaContext::count(&ctx.counters.syncs);
         if self.f > target {
             let mut v = self.clone();
-            let budget = (ctx.m_bits - 2.0) as u32;
+            let budget = ctx.signed_budget_bits();
             if v.iv.bits_hi() + (v.f - target) as u32 + 1 >= budget {
                 // Cannot expand exactly: reduce significance first (the
                 // guard raises v.f, shrinking the required expansion).
@@ -295,7 +295,7 @@ impl Hrfna {
     /// Threshold check (Definition 3): normalize when the conservative
     /// magnitude bound reaches τ = 2^tau_bits.
     pub fn maybe_normalize(&mut self, ctx: &HrfnaContext) {
-        if self.iv.abs_hi() >= pow2(ctx.cfg.tau_bits as i32) {
+        if self.iv.abs_hi() >= ctx.tau_f64() {
             self.normalize_to_sig(ctx, false);
         }
     }
@@ -427,7 +427,7 @@ fn sync_exponents(x: &Hrfna, y: &Hrfna, ctx: &HrfnaContext) -> (Hrfna, Hrfna) {
     // Identify hi = operand with larger exponent.
     let (hi, lo) = if x.f > y.f { (x, y) } else { (y, x) };
     let delta = (hi.f - lo.f) as u32;
-    let budget = (ctx.m_bits - 2.0) as u32;
+    let budget = ctx.signed_budget_bits();
 
     // Exact path: N_hi · 2^Δ at exponent f_lo.
     if hi.iv.bits_hi() + delta + 1 < budget {

@@ -19,14 +19,19 @@
 //!   testing, thread pool): the offline build has no external crates beyond
 //!   `xla`/`anyhow`/`thiserror`.
 //! * [`bigint`] — unsigned big integers (CRT reconstruction substrate).
-//! * [`rns`] — residue number system: moduli, Barrett reduction, CRT.
-//! * [`hybrid`] — the HRFNA number system itself (paper §III–IV).
+//! * [`rns`] — residue number system: moduli, Barrett reduction, CRT, and
+//!   the planar (structure-of-arrays) residue lanes ([`rns::plane`]).
+//! * [`hybrid`] — the HRFNA number system itself (paper §III–IV): the
+//!   scalar [`hybrid::Hrfna`] reference plus the batched planar engine
+//!   ([`hybrid::batch`]) that the hot paths run on.
 //! * [`baselines`] — FP32, block floating-point, fixed-point, pure RNS and
 //!   LNS comparators (paper Tables I/IV).
 //! * [`fpga`] — ZCU104-class microarchitecture model: pipeline timing,
 //!   LUT/FF/DSP resources, power (paper §V–VI substitution; see DESIGN.md).
 //! * [`workloads`] — dot product / matmul / RK4 generic over [`workloads::Numeric`].
-//! * [`runtime`] — PJRT loader/executor for the AOT HLO artifacts.
+//! * [`runtime`] — execution engine: PJRT loader/executor for the AOT HLO
+//!   artifacts (`--features xla`) or the pure-Rust software backend
+//!   (default, offline).
 //! * [`coordinator`] — request router, fixed-shape batcher, scheduler,
 //!   metrics, server loop (Layer 3).
 //! * [`config`] — typed configuration + TOML-subset parser + presets.

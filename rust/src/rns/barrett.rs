@@ -127,6 +127,49 @@ mod tests {
     }
 
     #[test]
+    fn operands_at_the_extremes() {
+        // Near m-1 (largest residues), zero, and the m/2 sign boundary
+        // (values ≥ m/2 encode negatives in the M-complement convention —
+        // the reduction itself must be agnostic to it).
+        for &m in &[3u64, 97, 65521, (1 << 31) - 1, (1 << 32) - 5] {
+            let b = Barrett::new(m);
+            let half = m / 2;
+            for x in [0u64, 1, half.saturating_sub(1), half, half + 1, m - 2, m - 1] {
+                let x = x % m;
+                for y in [0u64, 1, half % m, (m - 1) % m] {
+                    assert_eq!(
+                        b.mul(x, y),
+                        ((x as u128 * y as u128) % m as u128) as u64,
+                        "mul m={m} x={x} y={y}"
+                    );
+                    assert_eq!(b.add(x, y), (x + y) % m, "add m={m} x={x} y={y}");
+                    assert_eq!(
+                        b.sub(x, y),
+                        ((x as i128 - y as i128).rem_euclid(m as i128)) as u64,
+                        "sub m={m} x={x} y={y}"
+                    );
+                }
+            }
+            // The largest pre-reduction product: (m-1)² must reduce to 1.
+            assert_eq!(b.mul(m - 1, m - 1), 1 % m, "(m-1)^2 mod m, m={m}");
+        }
+    }
+
+    #[test]
+    fn reduce_products_straddling_the_sign_boundary() {
+        // M-complement negation is r -> m - r; products of "negative"
+        // residues must land exactly like their integer counterparts.
+        let m = 65521u64;
+        let b = Barrett::new(m);
+        for v in [1u64, 2, 1000, m / 2, m / 2 + 1] {
+            let neg = (m - v) % m; // encodes -v
+            // (-v)·(-v) ≡ v² and (-v)+v ≡ 0.
+            assert_eq!(b.mul(neg, neg), b.mul(v % m, v % m), "v={v}");
+            assert_eq!(b.add(neg, v % m), 0, "v={v}");
+        }
+    }
+
+    #[test]
     fn prop_reduce_equals_rem() {
         check("barrett-reduce", |rng| {
             let m = rng.below((1 << 32) - 2) + 2;

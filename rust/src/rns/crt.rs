@@ -414,6 +414,48 @@ mod tests {
     }
 
     #[test]
+    fn signed_boundary_at_half_m() {
+        // The M-complement sign convention splits [0, M) at M/2: values
+        // below M/2 are non-negative, values at/above it are negative.
+        let c = ctx();
+        let half = c.big_m.shr(1);
+        // M/2 - 1: the largest positive value.
+        let below = half.sub(&BigUint::one());
+        let (neg, mag) = c.reconstruct_signed(&c.encode(&below));
+        assert!(!neg, "M/2 - 1 must be non-negative");
+        assert_eq!(mag, below);
+        // M/2 exactly: first negative value, magnitude M - M/2.
+        let (neg, mag) = c.reconstruct_signed(&c.encode(&half));
+        assert!(neg, "M/2 must be negative");
+        assert_eq!(mag, c.big_m.sub(&half));
+        // M/2 + 1.
+        let above = half.add(&BigUint::one());
+        let (neg, mag) = c.reconstruct_signed(&c.encode(&above));
+        assert!(neg);
+        assert_eq!(mag, c.big_m.sub(&above));
+    }
+
+    #[test]
+    fn prop_signed_roundtrip_both_signs() {
+        // Random magnitudes below M/2 must round-trip exactly through the
+        // M-complement encoding in both signs.
+        let c = ctx();
+        check_with("crt-signed-roundtrip", 128, |rng| {
+            // Force nonzero: 0 has no negative encoding (M - 0 wraps to 0).
+            let n = (((rng.next_u64() as u128) << 58) | rng.next_u64() as u128) | 1;
+            let mag = BigUint::from_u128(n);
+            // Positive.
+            let (neg, back) = c.reconstruct_signed(&c.encode(&mag));
+            crate::prop_assert!(!neg && back == mag, "positive roundtrip n={n}");
+            // Negative: encode as M - n.
+            let enc = c.big_m.sub(&mag);
+            let (neg, back) = c.reconstruct_signed(&c.encode(&enc));
+            crate::prop_assert!(neg && back == mag, "negative roundtrip n={n}");
+            Ok(())
+        });
+    }
+
+    #[test]
     fn homomorphism_through_reconstruction() {
         // CRT(rX ⊙ rY) == CRT(rX)*CRT(rY) for products < M (Theorem 1 core).
         let c = ctx();

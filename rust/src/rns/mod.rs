@@ -10,8 +10,10 @@ pub mod moduli;
 pub mod barrett;
 pub mod residue;
 pub mod crt;
+pub mod plane;
 
 pub use barrett::Barrett;
 pub use crt::CrtContext;
 pub use moduli::{default_moduli, generate_prime_moduli, is_pairwise_coprime};
+pub use plane::ResiduePlane;
 pub use residue::ResidueVec;

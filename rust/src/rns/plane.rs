@@ -1,0 +1,404 @@
+//! Planar (structure-of-arrays) residue storage and the batched per-channel
+//! kernels that run on it.
+//!
+//! A [`ResiduePlane`] holds a batch of `n` residue vectors as `k` contiguous
+//! `u64` lanes, one per modulus: `lanes[c * n + j]` is channel `c` of element
+//! `j`. This is the software mirror of the paper's hardware layout (one
+//! modular pipeline per channel, §VI-B): each lane is walked by a tight,
+//! allocation-free, auto-vectorizable loop instead of the pointer-chasing
+//! per-element [`ResidueVec`] path, and it is the layout the AOT kernels
+//! already use (`int64[k, n]` channel-major tensors).
+//!
+//! The plane is pure residue data. Exponent and interval bookkeeping for a
+//! batch of HRFNA values lives in [`crate::hybrid::batch::HrfnaBatch`],
+//! which drives these kernels.
+
+use super::barrett::Barrett;
+use super::residue::ResidueVec;
+use thiserror::Error;
+
+/// Errors for fallible plane constructors.
+#[derive(Clone, Debug, Error, PartialEq, Eq)]
+pub enum PlaneError {
+    /// Lane buffer length does not match `k * n`.
+    #[error("lane data length {got} != k*n = {want}")]
+    LaneLen { got: usize, want: usize },
+    /// Two planes with different shapes were combined.
+    #[error("plane shape mismatch: {0}x{1} vs {2}x{3}")]
+    Shape(usize, usize, usize, usize),
+}
+
+/// A batch of residue vectors in channel-major planar layout.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ResiduePlane {
+    k: usize,
+    n: usize,
+    lanes: Vec<u64>,
+}
+
+impl ResiduePlane {
+    /// All-zero plane (a batch of `n` zero values over `k` channels).
+    pub fn zero(k: usize, n: usize) -> ResiduePlane {
+        ResiduePlane {
+            k,
+            n,
+            lanes: vec![0; k * n],
+        }
+    }
+
+    /// Wrap an existing channel-major lane buffer.
+    pub fn from_lanes(k: usize, n: usize, lanes: Vec<u64>) -> Result<ResiduePlane, PlaneError> {
+        if lanes.len() != k * n {
+            return Err(PlaneError::LaneLen {
+                got: lanes.len(),
+                want: k * n,
+            });
+        }
+        Ok(ResiduePlane { k, n, lanes })
+    }
+
+    /// Encode a batch of signed integers (M-complement per channel), with
+    /// contiguous per-channel writes — the planar form of the block-encode
+    /// inner loop (`coordinator::hybrid_exec::encode_block`).
+    pub fn encode_signed(staged: &[i64], moduli: &[u64], bars: &[Barrett]) -> ResiduePlane {
+        debug_assert_eq!(moduli.len(), bars.len());
+        let k = moduli.len();
+        let n = staged.len();
+        let mut lanes = vec![0u64; k * n];
+        for c in 0..k {
+            let bar = bars[c];
+            let m = moduli[c];
+            let row = &mut lanes[c * n..(c + 1) * n];
+            for (out, &s) in row.iter_mut().zip(staged) {
+                let r = bar.reduce(s.unsigned_abs());
+                *out = if s < 0 && r != 0 { m - r } else { r };
+            }
+        }
+        ResiduePlane { k, n, lanes }
+    }
+
+    /// The [`ResiduePlane::encode_signed`] lane loop writing straight into
+    /// an `i64` channel-major buffer — the PJRT tensor form. One pass, no
+    /// intermediate plane (the serving hot path's block encode).
+    pub fn encode_signed_i64(staged: &[i64], moduli: &[u64], bars: &[Barrett]) -> Vec<i64> {
+        debug_assert_eq!(moduli.len(), bars.len());
+        let k = moduli.len();
+        let n = staged.len();
+        let mut lanes = vec![0i64; k * n];
+        for c in 0..k {
+            let bar = bars[c];
+            let m = moduli[c];
+            let row = &mut lanes[c * n..(c + 1) * n];
+            for (out, &s) in row.iter_mut().zip(staged) {
+                let r = bar.reduce(s.unsigned_abs());
+                *out = if s < 0 && r != 0 { (m - r) as i64 } else { r as i64 };
+            }
+        }
+        lanes
+    }
+
+    /// Number of channels.
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Number of elements.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// One channel's contiguous lane.
+    #[inline]
+    pub fn lane(&self, c: usize) -> &[u64] {
+        &self.lanes[c * self.n..(c + 1) * self.n]
+    }
+
+    /// Mutable lane access.
+    #[inline]
+    pub fn lane_mut(&mut self, c: usize) -> &mut [u64] {
+        &mut self.lanes[c * self.n..(c + 1) * self.n]
+    }
+
+    /// The raw channel-major buffer.
+    #[inline]
+    pub fn lanes(&self) -> &[u64] {
+        &self.lanes
+    }
+
+    /// Gather element `j` across channels into a [`ResidueVec`].
+    pub fn get(&self, j: usize) -> ResidueVec {
+        ResidueVec {
+            r: (0..self.k).map(|c| self.lanes[c * self.n + j]).collect(),
+        }
+    }
+
+    /// Scatter a [`ResidueVec`] into element `j`.
+    pub fn set(&mut self, j: usize, r: &ResidueVec) {
+        debug_assert_eq!(r.k(), self.k);
+        for (c, &v) in r.r.iter().enumerate() {
+            self.lanes[c * self.n + j] = v;
+        }
+    }
+
+    /// Elementwise modular multiplication (lane-parallel Definition 2).
+    pub fn mul(&self, other: &ResiduePlane, bars: &[Barrett]) -> ResiduePlane {
+        debug_assert_eq!((self.k, self.n), (other.k, other.n));
+        let mut out = ResiduePlane::zero(self.k, self.n);
+        for c in 0..self.k {
+            lane_mul(bars[c], self.lane(c), other.lane(c), out.lane_mut(c));
+        }
+        out
+    }
+
+    /// Elementwise modular addition.
+    pub fn add(&self, other: &ResiduePlane, bars: &[Barrett]) -> ResiduePlane {
+        debug_assert_eq!((self.k, self.n), (other.k, other.n));
+        let mut out = ResiduePlane::zero(self.k, self.n);
+        for c in 0..self.k {
+            lane_add(bars[c], self.lane(c), other.lane(c), out.lane_mut(c));
+        }
+        out
+    }
+
+    /// Elementwise M-complement negation.
+    pub fn neg(&self, moduli: &[u64]) -> ResiduePlane {
+        let mut out = ResiduePlane::zero(self.k, self.n);
+        for c in 0..self.k {
+            lane_neg(moduli[c], self.lane(c), out.lane_mut(c));
+        }
+        out
+    }
+
+    /// In-place fused multiply-accumulate: `self[c][j] += x[c][j] * y[c][j]`
+    /// per channel — the planar hot loop of Algorithm 1.
+    pub fn fma_assign(&mut self, x: &ResiduePlane, y: &ResiduePlane, bars: &[Barrett]) {
+        debug_assert_eq!((self.k, self.n), (x.k, x.n));
+        debug_assert_eq!((self.k, self.n), (y.k, y.n));
+        let n = self.n;
+        for c in 0..self.k {
+            let bar = bars[c];
+            let acc = &mut self.lanes[c * n..(c + 1) * n];
+            let xs = &x.lanes[c * n..(c + 1) * n];
+            let ys = &y.lanes[c * n..(c + 1) * n];
+            for j in 0..n {
+                acc[j] = bar.add(acc[j], bar.mul(xs[j], ys[j]));
+            }
+        }
+    }
+
+    /// True per element iff any channel residue is nonzero (i.e. the
+    /// represented integer is nonzero). One contiguous pass per lane.
+    pub fn nonzero_mask(&self) -> Vec<bool> {
+        let mut nz = vec![false; self.n];
+        for c in 0..self.k {
+            for (flag, &v) in nz.iter_mut().zip(self.lane(c)) {
+                *flag |= v != 0;
+            }
+        }
+        nz
+    }
+}
+
+/// `out[j] = (x[j] * y[j]) mod m` over one lane.
+#[inline]
+pub fn lane_mul(bar: Barrett, x: &[u64], y: &[u64], out: &mut [u64]) {
+    for ((o, &a), &b) in out.iter_mut().zip(x).zip(y) {
+        *o = bar.mul(a, b);
+    }
+}
+
+/// `out[j] = (x[j] + y[j]) mod m` over one lane.
+#[inline]
+pub fn lane_add(bar: Barrett, x: &[u64], y: &[u64], out: &mut [u64]) {
+    for ((o, &a), &b) in out.iter_mut().zip(x).zip(y) {
+        *o = bar.add(a, b);
+    }
+}
+
+/// `out[j] = (m - x[j]) mod m` over one lane (M-complement negation).
+#[inline]
+pub fn lane_neg(m: u64, x: &[u64], out: &mut [u64]) {
+    for (o, &a) in out.iter_mut().zip(x) {
+        *o = if a == 0 { 0 } else { m - a };
+    }
+}
+
+/// `out[j] = (x[j] * mult) mod m` over one lane (residue-domain scaling,
+/// e.g. by a precomputed `2^Δ mod m`).
+#[inline]
+pub fn lane_scale(bar: Barrett, x: &[u64], mult: u64, out: &mut [u64]) {
+    for (o, &a) in out.iter_mut().zip(x) {
+        *o = bar.mul(a, mult);
+    }
+}
+
+/// Modular dot product over one lane: `Σ_j x[j]·y[j] mod m`.
+#[inline]
+pub fn lane_dot(bar: Barrett, x: &[u64], y: &[u64]) -> u64 {
+    let mut acc = 0u64;
+    for (&a, &b) in x.iter().zip(y) {
+        acc = bar.add(acc, bar.mul(a, b));
+    }
+    acc
+}
+
+/// Modular dot product with a per-element scale factor:
+/// `Σ_j x[j]·y[j]·mults[j] mod m` — the exponent-aligned accumulation of
+/// Algorithm 1 with `mults[j] = 2^{Δ_j} mod m`.
+#[inline]
+pub fn lane_dot_scaled(bar: Barrett, x: &[u64], y: &[u64], mults: &[u64]) -> u64 {
+    let mut acc = 0u64;
+    for ((&a, &b), &s) in x.iter().zip(y).zip(mults) {
+        acc = bar.add(acc, bar.mul(bar.mul(a, b), s));
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rns::barrett::barrett_set;
+    use crate::rns::moduli::DEFAULT_MODULI;
+    use crate::util::proptest::check_with;
+    use crate::util::prng::Rng;
+
+    fn bars() -> Vec<Barrett> {
+        barrett_set(&DEFAULT_MODULI)
+    }
+
+    fn random_plane(rng: &mut Rng, n: usize) -> ResiduePlane {
+        let k = DEFAULT_MODULI.len();
+        let mut p = ResiduePlane::zero(k, n);
+        for c in 0..k {
+            let m = DEFAULT_MODULI[c];
+            for v in p.lane_mut(c) {
+                *v = rng.below(m);
+            }
+        }
+        p
+    }
+
+    #[test]
+    fn from_lanes_validates_shape() {
+        assert!(ResiduePlane::from_lanes(2, 3, vec![0; 6]).is_ok());
+        assert_eq!(
+            ResiduePlane::from_lanes(2, 3, vec![0; 5]),
+            Err(PlaneError::LaneLen { got: 5, want: 6 })
+        );
+    }
+
+    #[test]
+    fn get_set_roundtrip() {
+        let mut p = ResiduePlane::zero(8, 4);
+        let r = ResidueVec::encode_u64(123_456_789, &DEFAULT_MODULI);
+        p.set(2, &r);
+        assert_eq!(p.get(2), r);
+        assert!(p.get(0).is_zero());
+        let nz = p.nonzero_mask();
+        assert_eq!(nz, vec![false, false, true, false]);
+    }
+
+    #[test]
+    fn encode_signed_matches_scalar_encode() {
+        let b = bars();
+        let staged: Vec<i64> = vec![0, 1, -1, 42, -65521, 65524, i64::MAX, i64::MIN + 1];
+        let p = ResiduePlane::encode_signed(&staged, &DEFAULT_MODULI, &b);
+        for (j, &s) in staged.iter().enumerate() {
+            let want: Vec<u64> = DEFAULT_MODULI
+                .iter()
+                .map(|&m| {
+                    let r = s.unsigned_abs() % m;
+                    if s < 0 && r != 0 {
+                        m - r
+                    } else {
+                        r
+                    }
+                })
+                .collect();
+            assert_eq!(p.get(j).r, want, "j={j} s={s}");
+        }
+    }
+
+    #[test]
+    fn encode_signed_i64_matches_plane_encode() {
+        let b = bars();
+        let staged: Vec<i64> = vec![0, 7, -7, 65520, -65522, 1 << 40, -(1 << 40)];
+        let plane = ResiduePlane::encode_signed(&staged, &DEFAULT_MODULI, &b);
+        let lanes = ResiduePlane::encode_signed_i64(&staged, &DEFAULT_MODULI, &b);
+        assert_eq!(lanes.len(), plane.lanes().len());
+        for (a, &u) in lanes.iter().zip(plane.lanes()) {
+            assert_eq!(*a, u as i64);
+        }
+    }
+
+    #[test]
+    fn prop_plane_ops_match_residuevec_ops() {
+        let b = bars();
+        check_with("plane-vs-residuevec", 64, |rng| {
+            let n = 1 + rng.below(33) as usize;
+            let x = random_plane(rng, n);
+            let y = random_plane(rng, n);
+            let mul = x.mul(&y, &b);
+            let add = x.add(&y, &b);
+            let neg = x.neg(&DEFAULT_MODULI);
+            let mut fma = x.clone();
+            fma.fma_assign(&x, &y, &b);
+            for j in 0..n {
+                let xv = x.get(j);
+                let yv = y.get(j);
+                crate::prop_assert!(mul.get(j) == xv.mul(&yv, &b), "mul j={j}");
+                crate::prop_assert!(add.get(j) == xv.add(&yv, &b), "add j={j}");
+                let mut mac = xv.clone();
+                mac.mac_assign(&xv, &yv, &b);
+                crate::prop_assert!(fma.get(j) == mac, "fma j={j}");
+                let nv = neg.get(j);
+                crate::prop_assert!(
+                    xv.add(&nv, &b).is_zero(),
+                    "neg is not the additive inverse j={j}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn lane_dot_matches_sequential_mac() {
+        let b = bars();
+        let mut rng = Rng::new(9);
+        let n = 257;
+        let x = random_plane(&mut rng, n);
+        let y = random_plane(&mut rng, n);
+        for c in 0..x.k() {
+            let bar = b[c];
+            let mut want = 0u64;
+            for j in 0..n {
+                want = bar.add(want, bar.mul(x.lane(c)[j], y.lane(c)[j]));
+            }
+            assert_eq!(lane_dot(bar, x.lane(c), y.lane(c)), want, "c={c}");
+            // Scaled variant with all-ones multipliers degenerates to dot.
+            let ones = vec![1u64; n];
+            assert_eq!(
+                lane_dot_scaled(bar, x.lane(c), y.lane(c), &ones),
+                want,
+                "scaled c={c}"
+            );
+        }
+    }
+
+    #[test]
+    fn lane_scale_matches_pointwise() {
+        let b = bars();
+        let mut rng = Rng::new(11);
+        let x = random_plane(&mut rng, 17);
+        for c in 0..x.k() {
+            let mult = rng.below(DEFAULT_MODULI[c]);
+            let mut out = vec![0u64; 17];
+            lane_scale(b[c], x.lane(c), mult, &mut out);
+            for j in 0..17 {
+                assert_eq!(out[j], b[c].mul(x.lane(c)[j], mult));
+            }
+        }
+    }
+}

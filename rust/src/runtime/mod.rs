@@ -1,12 +1,22 @@
-//! PJRT runtime: loads the AOT-compiled HLO artifacts (`artifacts/*.hlo.txt`,
-//! produced once by `make artifacts` → `python -m compile.aot`) and executes
-//! them from the Rust request path. Python never runs at request time.
+//! Execution runtime behind the coordinator. Two interchangeable
+//! backends expose the same `pjrt::{Engine, Tensor, Output}` surface:
 //!
-//! Interchange is HLO *text*: jax ≥ 0.5 emits HloModuleProto with 64-bit
-//! instruction ids which xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids (see DESIGN.md and /opt/xla-example/README.md).
+//! * **`xla` feature on** — the real PJRT backend: loads the
+//!   AOT-compiled HLO artifacts (`artifacts/*.hlo.txt`, produced once by
+//!   `make artifacts` → `python -m compile.aot`) and executes them with
+//!   the PJRT CPU client. Python never runs at request time. Interchange
+//!   is HLO *text*: jax ≥ 0.5 emits HloModuleProto with 64-bit
+//!   instruction ids which xla_extension 0.5.1 rejects; the text parser
+//!   reassigns ids (see DESIGN.md). Requires the vendored `xla` crate.
+//! * **default (offline)** — the pure-Rust software executor
+//!   (`swexec.rs`): the same graphs computed with host loops, bit-exact
+//!   on the residue kernels, with no artifacts or XLA needed.
 
 pub mod artifacts;
+#[cfg(feature = "xla")]
+pub mod pjrt;
+#[cfg(not(feature = "xla"))]
+#[path = "swexec.rs"]
 pub mod pjrt;
 pub mod service;
 

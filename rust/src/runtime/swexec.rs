@@ -1,0 +1,430 @@
+//! Pure-Rust software executor — the offline stand-in for the PJRT
+//! backend, compiled when the `xla` feature is off (the default).
+//!
+//! It exposes the exact `Engine`/`Tensor`/`Output` surface of
+//! `runtime/pjrt.rs`, validates inputs against the same `ArgSpec` shapes,
+//! and executes the known AOT graphs (see `python/compile/model.py`) with
+//! straightforward host loops: channelwise `i128` modular arithmetic for
+//! the `hybrid_*` residue kernels (bit-exact against the Rust residue
+//! model) and `f32` loops for the FP32/RK4 baselines. When the artifact
+//! manifest is absent (no `make artifacts`), the canonical shapes are
+//! synthesized, so the full L3 serving stack runs offline with no Python
+//! and no XLA.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::artifacts::{ArgSpec, DType, Manifest};
+
+/// Canonical AOT shapes — keep in sync with `python/compile/model.py`.
+const K_CHANNELS: usize = 8;
+const DOT_N: usize = 4096;
+const MM_DIM: usize = 64;
+const RK4_BATCH: usize = 256;
+
+/// Typed input tensor for an execution call.
+#[derive(Clone, Debug)]
+pub enum Tensor {
+    I64(Vec<i64>, Vec<usize>),
+    F32(Vec<f32>, Vec<usize>),
+    /// Scalar f32 (rank-0).
+    ScalarF32(f32),
+}
+
+impl Tensor {
+    fn matches(&self, spec: &ArgSpec) -> bool {
+        match self {
+            Tensor::I64(data, shape) => {
+                spec.dtype == DType::I64 && *shape == spec.shape && data.len() == spec.numel()
+            }
+            Tensor::F32(data, shape) => {
+                spec.dtype == DType::F32 && *shape == spec.shape && data.len() == spec.numel()
+            }
+            Tensor::ScalarF32(_) => spec.dtype == DType::F32 && spec.shape.is_empty(),
+        }
+    }
+
+    fn i64_data(&self) -> Result<(&[i64], &[usize])> {
+        match self {
+            Tensor::I64(d, s) => Ok((d, s)),
+            _ => bail!("expected an i64 tensor"),
+        }
+    }
+
+    fn f32_data(&self) -> Result<(&[f32], &[usize])> {
+        match self {
+            Tensor::F32(d, s) => Ok((d, s)),
+            _ => bail!("expected an f32 tensor"),
+        }
+    }
+
+    fn scalar_f32(&self) -> Result<f32> {
+        match self {
+            Tensor::ScalarF32(x) => Ok(*x),
+            Tensor::F32(d, s) if s.is_empty() && d.len() == 1 => Ok(d[0]),
+            _ => bail!("expected a scalar f32"),
+        }
+    }
+}
+
+/// Typed output tensor.
+#[derive(Clone, Debug)]
+pub enum Output {
+    I64(Vec<i64>),
+    F32(Vec<f32>),
+}
+
+impl Output {
+    /// Unwrap i64 data.
+    pub fn into_i64(self) -> Result<Vec<i64>> {
+        match self {
+            Output::I64(v) => Ok(v),
+            _ => bail!("output is not i64"),
+        }
+    }
+
+    /// Unwrap f32 data.
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            Output::F32(v) => Ok(v),
+            _ => bail!("output is not f32"),
+        }
+    }
+}
+
+/// The software engine: one validated argument list per known graph.
+pub struct Engine {
+    compiled: BTreeMap<String, Vec<ArgSpec>>,
+    pub manifest: Manifest,
+}
+
+/// Argument shapes for one synthesized graph (manifest-free load).
+fn default_args(name: &str) -> Option<Vec<ArgSpec>> {
+    let spec = |dtype, shape: &[usize]| ArgSpec {
+        dtype,
+        shape: shape.to_vec(),
+    };
+    let k = K_CHANNELS;
+    Some(match name {
+        "hybrid_dot" | "hybrid_modmul" | "hybrid_modadd" => vec![
+            spec(DType::I64, &[k, DOT_N]),
+            spec(DType::I64, &[k, DOT_N]),
+            spec(DType::I64, &[k]),
+        ],
+        "hybrid_matmul" => vec![
+            spec(DType::I64, &[k, MM_DIM, MM_DIM]),
+            spec(DType::I64, &[k, MM_DIM, MM_DIM]),
+            spec(DType::I64, &[k]),
+        ],
+        "fp32_dot" => vec![spec(DType::F32, &[DOT_N]), spec(DType::F32, &[DOT_N])],
+        "fp32_matmul" => vec![
+            spec(DType::F32, &[MM_DIM, MM_DIM]),
+            spec(DType::F32, &[MM_DIM, MM_DIM]),
+        ],
+        "rk4_vdp_step" => vec![
+            spec(DType::F32, &[RK4_BATCH, 2]),
+            spec(DType::F32, &[]),
+            spec(DType::F32, &[]),
+        ],
+        _ => return None,
+    })
+}
+
+/// The graph names every deployment serves (model.py's GRAPHS table).
+const GRAPH_NAMES: [&str; 7] = [
+    "hybrid_dot",
+    "hybrid_matmul",
+    "hybrid_modmul",
+    "hybrid_modadd",
+    "fp32_dot",
+    "fp32_matmul",
+    "rk4_vdp_step",
+];
+
+impl Engine {
+    /// Load argument specs from the artifact manifest when present, or
+    /// synthesize the canonical set so the software path needs no
+    /// artifacts at all.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir).unwrap_or_default();
+        let mut compiled = BTreeMap::new();
+        for (name, entry) in &manifest.entries {
+            let args = if entry.args.is_empty() {
+                default_args(name)
+                    .with_context(|| format!("no arg specs for artifact {name}"))?
+            } else {
+                entry.args.clone()
+            };
+            compiled.insert(name.clone(), args);
+        }
+        for name in GRAPH_NAMES {
+            if !compiled.contains_key(name) {
+                compiled.insert(
+                    name.to_string(),
+                    default_args(name).expect("known graph"),
+                );
+            }
+        }
+        Ok(Engine { compiled, manifest })
+    }
+
+    /// Load from the default artifact location (or synthesized shapes).
+    pub fn load_default() -> Result<Engine> {
+        Engine::load(&Manifest::default_dir())
+    }
+
+    /// Names of the loaded executables.
+    pub fn names(&self) -> Vec<String> {
+        self.compiled.keys().cloned().collect()
+    }
+
+    /// Device/platform description.
+    pub fn platform(&self) -> String {
+        "software (pure-Rust reference backend, 1 device)".to_string()
+    }
+
+    /// Execute graph `name` with `inputs`; returns the output flattened.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Output> {
+        let args = self
+            .compiled
+            .get(name)
+            .with_context(|| format!("unknown executable {name}"))?;
+        if inputs.len() != args.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                args.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, spec)) in inputs.iter().zip(args).enumerate() {
+            if !t.matches(spec) {
+                bail!("{name}: input {i} does not match {spec:?}");
+            }
+        }
+        match name {
+            "hybrid_dot" => exec_hybrid_dot(inputs),
+            "hybrid_matmul" => exec_hybrid_matmul(inputs),
+            "hybrid_modmul" => exec_elementwise(inputs, |a, b, m| a * b % m),
+            "hybrid_modadd" => exec_elementwise(inputs, |a, b, m| (a + b) % m),
+            "fp32_dot" => exec_fp32_dot(inputs),
+            "fp32_matmul" => exec_fp32_matmul(inputs),
+            "rk4_vdp_step" => exec_rk4_vdp_step(inputs),
+            other => bail!("no software kernel for {other}"),
+        }
+    }
+}
+
+/// `int64[k,n] × int64[k,n] × int64[k] -> int64[k]`: channelwise modular
+/// MAC (the residue half of Algorithm 1; bit-exact vs the Rust model).
+fn exec_hybrid_dot(inputs: &[Tensor]) -> Result<Output> {
+    let (x, shape) = inputs[0].i64_data()?;
+    let (y, _) = inputs[1].i64_data()?;
+    let (m, _) = inputs[2].i64_data()?;
+    let (k, n) = (shape[0], shape[1]);
+    let mut out = Vec::with_capacity(k);
+    for c in 0..k {
+        let modulus = m[c] as i128;
+        let mut acc = 0i128;
+        for j in 0..n {
+            acc = (acc + x[c * n + j] as i128 * y[c * n + j] as i128) % modulus;
+        }
+        out.push(acc as i64);
+    }
+    Ok(Output::I64(out))
+}
+
+/// `int64[k,d,d] × int64[k,d,d] × int64[k] -> int64[k·d·d]`: per-channel
+/// modular matmul.
+fn exec_hybrid_matmul(inputs: &[Tensor]) -> Result<Output> {
+    let (a, shape) = inputs[0].i64_data()?;
+    let (b, _) = inputs[1].i64_data()?;
+    let (m, _) = inputs[2].i64_data()?;
+    let (k, d) = (shape[0], shape[1]);
+    let mut out = vec![0i64; k * d * d];
+    for c in 0..k {
+        let modulus = m[c] as i128;
+        let ac = &a[c * d * d..(c + 1) * d * d];
+        let bc = &b[c * d * d..(c + 1) * d * d];
+        let oc = &mut out[c * d * d..(c + 1) * d * d];
+        for i in 0..d {
+            for j in 0..d {
+                let mut acc = 0i128;
+                for p in 0..d {
+                    acc = (acc + ac[i * d + p] as i128 * bc[p * d + j] as i128) % modulus;
+                }
+                oc[i * d + j] = acc as i64;
+            }
+        }
+    }
+    Ok(Output::I64(out))
+}
+
+/// Elementwise channelwise modular op over `int64[k,n]` operands.
+fn exec_elementwise(inputs: &[Tensor], op: fn(i128, i128, i128) -> i128) -> Result<Output> {
+    let (x, shape) = inputs[0].i64_data()?;
+    let (y, _) = inputs[1].i64_data()?;
+    let (m, _) = inputs[2].i64_data()?;
+    let (k, n) = (shape[0], shape[1]);
+    let mut out = vec![0i64; k * n];
+    for c in 0..k {
+        let modulus = m[c] as i128;
+        for j in 0..n {
+            let idx = c * n + j;
+            out[idx] = op(x[idx] as i128, y[idx] as i128, modulus) as i64;
+        }
+    }
+    Ok(Output::I64(out))
+}
+
+/// `f32[n] × f32[n] -> f32[]`.
+fn exec_fp32_dot(inputs: &[Tensor]) -> Result<Output> {
+    let (x, _) = inputs[0].f32_data()?;
+    let (y, _) = inputs[1].f32_data()?;
+    let mut acc = 0.0f32;
+    for (a, b) in x.iter().zip(y) {
+        acc += a * b;
+    }
+    Ok(Output::F32(vec![acc]))
+}
+
+/// `f32[d,d] × f32[d,d] -> f32[d·d]`.
+fn exec_fp32_matmul(inputs: &[Tensor]) -> Result<Output> {
+    let (a, shape) = inputs[0].f32_data()?;
+    let (b, _) = inputs[1].f32_data()?;
+    let d = shape[0];
+    let mut out = vec![0.0f32; d * d];
+    for i in 0..d {
+        for j in 0..d {
+            let mut acc = 0.0f32;
+            for p in 0..d {
+                acc += a[i * d + p] * b[p * d + j];
+            }
+            out[i * d + j] = acc;
+        }
+    }
+    Ok(Output::F32(out))
+}
+
+/// One classical RK4 step for a batch of Van der Pol states (`f32[b,2]`),
+/// mirroring `python/compile/model.py::rk4_vdp_step`.
+fn exec_rk4_vdp_step(inputs: &[Tensor]) -> Result<Output> {
+    let (state, shape) = inputs[0].f32_data()?;
+    let dt = inputs[1].scalar_f32()?;
+    let mu = inputs[2].scalar_f32()?;
+    let b = shape[0];
+    let f = |s: &[f32; 2]| -> [f32; 2] { [s[1], mu * (1.0 - s[0] * s[0]) * s[1] - s[0]] };
+    let mut out = vec![0.0f32; b * 2];
+    for i in 0..b {
+        let s = [state[i * 2], state[i * 2 + 1]];
+        let k1 = f(&s);
+        let s2 = [s[0] + 0.5 * dt * k1[0], s[1] + 0.5 * dt * k1[1]];
+        let k2 = f(&s2);
+        let s3 = [s[0] + 0.5 * dt * k2[0], s[1] + 0.5 * dt * k2[1]];
+        let k3 = f(&s3);
+        let s4 = [s[0] + dt * k3[0], s[1] + dt * k3[1]];
+        let k4 = f(&s4);
+        for d in 0..2 {
+            out[i * 2 + d] = s[d] + dt / 6.0 * (k1[d] + 2.0 * k2[d] + 2.0 * k3[d] + k4[d]);
+        }
+    }
+    Ok(Output::F32(out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::hybrid_exec::{decode_scalar, encode_block};
+    use crate::hybrid::HrfnaContext;
+    use crate::util::prng::Rng;
+    use crate::workloads::generators::Dist;
+
+    fn engine() -> Engine {
+        Engine::load_default().expect("software engine always loads")
+    }
+
+    #[test]
+    fn loads_all_graphs_without_artifacts() {
+        let e = engine();
+        let names = e.names();
+        for want in GRAPH_NAMES {
+            assert!(names.iter().any(|n| n == want), "missing {want}");
+        }
+        assert!(e.platform().contains("software"));
+    }
+
+    #[test]
+    fn tensor_shape_matching() {
+        let spec = ArgSpec {
+            dtype: DType::I64,
+            shape: vec![2, 3],
+        };
+        let good = Tensor::I64(vec![0; 6], vec![2, 3]);
+        let bad_len = Tensor::I64(vec![0; 5], vec![2, 3]);
+        let bad_ty = Tensor::F32(vec![0.0; 6], vec![2, 3]);
+        assert!(good.matches(&spec));
+        assert!(!bad_len.matches(&spec));
+        assert!(!bad_ty.matches(&spec));
+    }
+
+    #[test]
+    fn scalar_matches_rank0_only() {
+        let s = Tensor::ScalarF32(1.0);
+        assert!(s.matches(&ArgSpec { dtype: DType::F32, shape: vec![] }));
+        assert!(!s.matches(&ArgSpec { dtype: DType::F32, shape: vec![1] }));
+    }
+
+    #[test]
+    fn output_unwrap() {
+        assert_eq!(Output::I64(vec![1]).into_i64().unwrap(), vec![1]);
+        assert!(Output::I64(vec![1]).into_f32().is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_shapes_and_arity() {
+        let e = engine();
+        let bad = e.execute(
+            "fp32_dot",
+            &[
+                Tensor::F32(vec![0.0; 8], vec![8]),
+                Tensor::F32(vec![0.0; 8], vec![8]),
+            ],
+        );
+        assert!(bad.is_err());
+        let bad = e.execute("fp32_dot", &[Tensor::F32(vec![0.0; DOT_N], vec![DOT_N])]);
+        assert!(bad.is_err());
+        assert!(e.execute("nonexistent", &[]).is_err());
+    }
+
+    #[test]
+    fn hybrid_dot_matches_decoded_f64() {
+        let e = engine();
+        let ctx = HrfnaContext::paper_default();
+        let mut rng = Rng::new(3);
+        let xs = Dist::moderate().sample_vec(&mut rng, DOT_N);
+        let ys = Dist::moderate().sample_vec(&mut rng, DOT_N);
+        let ex = encode_block(&xs, &ctx);
+        let ey = encode_block(&ys, &ctx);
+        let m: Vec<i64> = ctx.cfg.moduli.iter().map(|&v| v as i64).collect();
+        let k = ctx.k();
+        let got = e
+            .execute(
+                "hybrid_dot",
+                &[
+                    Tensor::I64(ex.residues, vec![k, DOT_N]),
+                    Tensor::I64(ey.residues, vec![k, DOT_N]),
+                    Tensor::I64(m, vec![k]),
+                ],
+            )
+            .unwrap()
+            .into_i64()
+            .unwrap();
+        let value = decode_scalar(&got, ex.f + ey.f, &ctx);
+        let truth: f64 = xs.iter().zip(&ys).map(|(a, b)| a * b).sum();
+        let scale: f64 = xs.iter().zip(&ys).map(|(a, b)| (a * b).abs()).sum();
+        assert!(
+            (value - truth).abs() < 1e-7 * scale,
+            "value={value} truth={truth}"
+        );
+    }
+}

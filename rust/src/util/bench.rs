@@ -75,6 +75,56 @@ pub fn suite(title: &str) {
     println!("\n##### {title} #####");
 }
 
+/// Machine-readable benchmark record for the perf-trajectory tracking
+/// (`BENCH_*.json` files): one timed case, normalized to per-op cost.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchRecord {
+    /// Stable case name (e.g. `dot_planar_n4096`).
+    pub name: String,
+    /// Problem size (elements per iteration; 1 for single-op cases).
+    pub n: u64,
+    /// Nanoseconds per op (ns/iter divided by `n`).
+    pub ns_per_op: f64,
+    /// Ops per second (1e9 / ns_per_op).
+    pub throughput_per_s: f64,
+}
+
+impl BenchRecord {
+    /// Build a record from a timed result, renamed to `name` and
+    /// normalized by `n` ops per iteration.
+    pub fn from_result(name: &str, n: u64, r: &BenchResult) -> BenchRecord {
+        let ns_per_op = r.ns_per_iter / n.max(1) as f64;
+        BenchRecord {
+            name: name.to_string(),
+            n,
+            ns_per_op,
+            throughput_per_s: if ns_per_op > 0.0 { 1e9 / ns_per_op } else { 0.0 },
+        }
+    }
+
+    fn json(&self) -> String {
+        // Names are code-controlled; escape the two JSON-breaking chars.
+        let name = self.name.replace('\\', "\\\\").replace('"', "\\\"");
+        format!(
+            "{{\"name\":\"{name}\",\"n\":{},\"ns_per_op\":{:.3},\"throughput_per_s\":{:.1}}}",
+            self.n, self.ns_per_op, self.throughput_per_s
+        )
+    }
+}
+
+/// Write records as a JSON array (one record per line) — the
+/// `BENCH_hotpath.json` / `BENCH_dot.json` trajectory files.
+pub fn write_json(path: &str, records: &[BenchRecord]) -> std::io::Result<()> {
+    let mut out = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        out.push_str("  ");
+        out.push_str(&r.json());
+        out.push_str(if i + 1 < records.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("]\n");
+    std::fs::write(path, out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -96,5 +146,48 @@ mod tests {
     fn line_contains_name() {
         let r = bench_with("xyz", Duration::from_millis(5), 2, &mut || 0u8);
         assert!(r.line().contains("xyz"));
+    }
+
+    #[test]
+    fn record_normalizes_per_op() {
+        let r = BenchResult {
+            name: "raw".into(),
+            iters: 10,
+            ns_per_iter: 4096.0,
+            stddev_ns: 0.0,
+            throughput_per_s: 1e9 / 4096.0,
+        };
+        let rec = BenchRecord::from_result("dot_planar_n4096", 4096, &r);
+        assert_eq!(rec.n, 4096);
+        assert!((rec.ns_per_op - 1.0).abs() < 1e-12);
+        assert!((rec.throughput_per_s - 1e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn write_json_roundtrippable_shape() {
+        let recs = vec![
+            BenchRecord {
+                name: "a\"b".into(),
+                n: 1,
+                ns_per_op: 2.5,
+                throughput_per_s: 4e8,
+            },
+            BenchRecord {
+                name: "c".into(),
+                n: 7,
+                ns_per_op: 1.0,
+                throughput_per_s: 1e9,
+            },
+        ];
+        let path = std::env::temp_dir().join("hrfna_bench_test.json");
+        let path = path.to_str().unwrap();
+        write_json(path, &recs).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(text.starts_with("[\n"));
+        assert!(text.trim_end().ends_with(']'));
+        assert!(text.contains("\"name\":\"a\\\"b\""));
+        assert!(text.contains("\"n\":7"));
+        assert_eq!(text.matches('{').count(), 2);
+        let _ = std::fs::remove_file(path);
     }
 }

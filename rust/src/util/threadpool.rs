@@ -1,8 +1,8 @@
 //! Fixed-size worker thread pool (no tokio in the offline registry; the
 //! coordinator's workers and the benchmark sweeps run on this).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -111,6 +111,64 @@ impl Drop for ThreadPool {
     }
 }
 
+/// The process-wide shared pool (host-sized, lazily spawned). Callers
+/// lock it for the duration of a parallel section; concurrent sections
+/// serialize on the mutex instead of oversubscribing the machine.
+pub fn global() -> &'static Mutex<ThreadPool> {
+    static GLOBAL: OnceLock<Mutex<ThreadPool>> = OnceLock::new();
+    GLOBAL.get_or_init(|| Mutex::new(ThreadPool::for_host()))
+}
+
+/// Map `f` over `items` in parallel, preserving order, *without* the
+/// `'static` closure bound of [`par_map`]: `f` may borrow locals (the
+/// planar matmul borrows encoded planes and the HRFNA context).
+///
+/// Panics in a job are caught per job and re-raised here after all jobs
+/// drain, so the pool's pending count stays consistent.
+pub fn par_map_scoped<T, R, F>(pool: &ThreadPool, items: Vec<T>, f: &F) -> Vec<R>
+where
+    T: Send + 'static,
+    R: Send + 'static,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let out: Mutex<Vec<Option<R>>> = Mutex::new((0..n).map(|_| None).collect());
+    let panicked = AtomicBool::new(false);
+    {
+        let f_dyn: &(dyn Fn(T) -> R + Sync) = f;
+        // SAFETY: `pool.wait()` below blocks until every job submitted
+        // here has completed, so the erased borrows of `f`, `out` and
+        // `panicked` never outlive this stack frame.
+        let f_st: &'static (dyn Fn(T) -> R + Sync) =
+            unsafe { std::mem::transmute::<&(dyn Fn(T) -> R + Sync), _>(f_dyn) };
+        let out_st: &'static Mutex<Vec<Option<R>>> =
+            unsafe { std::mem::transmute::<&Mutex<Vec<Option<R>>>, _>(&out) };
+        let pk_st: &'static AtomicBool =
+            unsafe { std::mem::transmute::<&AtomicBool, _>(&panicked) };
+        for (i, item) in items.into_iter().enumerate() {
+            pool.submit(move || {
+                match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f_st(item))) {
+                    Ok(r) => out_st.lock().unwrap()[i] = Some(r),
+                    Err(_) => pk_st.store(true, Ordering::Relaxed),
+                }
+            });
+        }
+        pool.wait();
+    }
+    assert!(
+        !panicked.load(Ordering::Relaxed),
+        "par_map_scoped: a parallel job panicked"
+    );
+    out.into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|o| o.expect("job dropped"))
+        .collect()
+}
+
 /// Map `f` over `items` in parallel, preserving order, using `pool`.
 pub fn par_map<T, R, F>(pool: &ThreadPool, items: Vec<T>, f: F) -> Vec<R>
 where
@@ -178,5 +236,35 @@ mod tests {
         let pool = ThreadPool::new(2);
         pool.submit(|| {});
         drop(pool);
+    }
+
+    #[test]
+    fn par_map_scoped_borrows_locals() {
+        let pool = ThreadPool::new(3);
+        let base = vec![10u64, 20, 30];
+        let f = |i: usize| base[i] + i as u64;
+        let out = par_map_scoped(&pool, vec![0usize, 1, 2], &f);
+        assert_eq!(out, vec![10, 21, 32]);
+    }
+
+    #[test]
+    #[should_panic(expected = "parallel job panicked")]
+    fn par_map_scoped_propagates_panics() {
+        let pool = ThreadPool::new(2);
+        let f = |i: usize| {
+            if i == 1 {
+                panic!("boom");
+            }
+            i
+        };
+        let _ = par_map_scoped(&pool, vec![0usize, 1], &f);
+    }
+
+    #[test]
+    fn global_pool_is_usable() {
+        let pool = global().lock().unwrap_or_else(|p| p.into_inner());
+        let f = |x: u64| x * 3;
+        let out = par_map_scoped(&pool, vec![1u64, 2, 3], &f);
+        assert_eq!(out, vec![3, 6, 9]);
     }
 }

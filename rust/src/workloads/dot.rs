@@ -19,8 +19,17 @@ pub fn dot_product<N: Numeric>(xs: &[f64], ys: &[f64], ctx: &N::Ctx) -> f64 {
 }
 
 /// Dot product over pre-encoded operands (separates encode cost from the
-/// accumulation loop — the timing-path variant).
+/// accumulation loop — the timing-path variant). Routes through the
+/// format's batched fast path when it has one (HRFNA: the planar engine);
+/// [`dot_product_encoded_scalar`] is the always-scalar reference.
 pub fn dot_product_encoded<N: Numeric>(xs: &[N], ys: &[N], ctx: &N::Ctx) -> N {
+    assert_eq!(xs.len(), ys.len());
+    N::dot_encoded(xs, ys, ctx)
+}
+
+/// The scalar reference MAC loop over pre-encoded operands — kept as the
+/// baseline the planar engine is benchmarked and property-tested against.
+pub fn dot_product_encoded_scalar<N: Numeric>(xs: &[N], ys: &[N], ctx: &N::Ctx) -> N {
     assert_eq!(xs.len(), ys.len());
     let mut acc = N::zero(ctx);
     for (x, y) in xs.iter().zip(ys) {
@@ -102,5 +111,19 @@ mod tests {
         let got = dot_product_encoded::<Hrfna>(&ex, &ey, &ctx).decode(&ctx);
         let want = dot_product::<f64>(&xs, &ys, &());
         assert!((got - want).abs() < 1e-6 * want.abs());
+    }
+
+    #[test]
+    fn planar_and_scalar_encoded_paths_agree() {
+        let ctx = HrfnaContext::paper_default();
+        let mut rng = crate::util::prng::Rng::new(71);
+        let xs = Dist::moderate().sample_vec(&mut rng, 777);
+        let ys = Dist::moderate().sample_vec(&mut rng, 777);
+        let ex: Vec<Hrfna> = xs.iter().map(|&x| Hrfna::encode(x, &ctx)).collect();
+        let ey: Vec<Hrfna> = ys.iter().map(|&y| Hrfna::encode(y, &ctx)).collect();
+        let planar = dot_product_encoded::<Hrfna>(&ex, &ey, &ctx).decode(&ctx);
+        let scalar = dot_product_encoded_scalar::<Hrfna>(&ex, &ey, &ctx).decode(&ctx);
+        let tol = 1e-9 * scalar.abs().max(1e-12);
+        assert!((planar - scalar).abs() <= tol, "planar={planar} scalar={scalar}");
     }
 }

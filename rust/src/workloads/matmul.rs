@@ -8,6 +8,7 @@ use crate::util::stats;
 /// `C = A·B` with `A: m×k`, `B: k×n` (row-major f64 in, f64 out), computed
 /// in format `N`: each output element is one exponent-coherent dot product
 /// (paper §IV-E: "each output element invokes one Hybrid Dot Product").
+/// Formats with a planar engine (HRFNA) dispatch to their batched kernel.
 pub fn matmul<N: Numeric>(
     a: &[f64],
     b: &[f64],
@@ -18,6 +19,9 @@ pub fn matmul<N: Numeric>(
 ) -> Vec<f64> {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
+    if let Some(out) = N::matmul_block(a, b, m, k, n, ctx) {
+        return out;
+    }
     // Encode operands once (data reuse, §VII-C.1).
     let ea: Vec<N> = a.iter().map(|&x| N::from_f64(x, ctx)).collect();
     let eb: Vec<N> = b.iter().map(|&x| N::from_f64(x, ctx)).collect();
@@ -32,6 +36,70 @@ pub fn matmul<N: Numeric>(
         }
     }
     out
+}
+
+/// The HRFNA planar matmul kernel: encode `A` and `Bᵀ` into channel-major
+/// planes once, then compute each output element with one batched
+/// [`crate::hybrid::HrfnaBatch::dot_range`] over contiguous row/column
+/// lane windows — no per-MAC allocation — parallelized across row blocks
+/// on the shared [`crate::util::threadpool`].
+pub fn matmul_hrfna_planar(
+    a: &[f64],
+    b: &[f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    ctx: &crate::hybrid::HrfnaContext,
+) -> Vec<f64> {
+    use crate::hybrid::HrfnaBatch;
+    use crate::util::threadpool;
+
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    if m == 0 || n == 0 {
+        return Vec::new();
+    }
+    let ea = HrfnaBatch::encode(a, ctx);
+    // Bᵀ so each output column is a contiguous lane window too.
+    let mut bt = vec![0.0f64; k * n];
+    for p in 0..k {
+        for j in 0..n {
+            bt[j * k + p] = b[p * n + j];
+        }
+    }
+    let eb = HrfnaBatch::encode(&bt, ctx);
+
+    let body = |(i0, i1): (usize, usize)| -> Vec<f64> {
+        let mut rows = Vec::with_capacity((i1 - i0) * n);
+        for i in i0..i1 {
+            for j in 0..n {
+                let acc = ea.dot_range(i * k, &eb, j * k, k, ctx);
+                rows.push(acc.decode(ctx));
+            }
+        }
+        rows
+    };
+    let blocks_for = |workers: usize| -> Vec<(usize, usize)> {
+        let block = m.div_ceil((2 * workers).max(1)).max(1);
+        (0..m)
+            .step_by(block)
+            .map(|i0| (i0, (i0 + block).min(m)))
+            .collect()
+    };
+    // `try_lock`, not `lock`: if the shared pool is already busy (another
+    // parallel section, possibly one we are nested inside), waiting could
+    // deadlock a worker on its own section — compute inline instead.
+    let rows: Vec<Vec<f64>> = match threadpool::global().try_lock() {
+        Ok(pool) => threadpool::par_map_scoped(&pool, blocks_for(pool.size()), &body),
+        Err(std::sync::TryLockError::Poisoned(p)) => {
+            let pool = p.into_inner();
+            threadpool::par_map_scoped(&pool, blocks_for(pool.size()), &body)
+        }
+        Err(std::sync::TryLockError::WouldBlock) => {
+            blocks_for(1).into_iter().map(&body).collect()
+        }
+    };
+    rows.into_iter().flatten().collect()
 }
 
 /// RMS of relative elementwise error vs the f64 reference for a random
@@ -97,5 +165,47 @@ mod tests {
     #[should_panic]
     fn shape_mismatch_panics() {
         matmul::<f64>(&[1.0], &[1.0, 2.0], 1, 2, 1, &());
+    }
+
+    #[test]
+    fn planar_matmul_matches_f64_rectangular() {
+        let ctx = HrfnaContext::paper_default();
+        let mut rng = crate::util::prng::Rng::new(17);
+        let (m, k, n) = (5, 7, 3);
+        let a = Dist::moderate().sample_vec(&mut rng, m * k);
+        let b = Dist::moderate().sample_vec(&mut rng, k * n);
+        let want = matmul::<f64>(&a, &b, m, k, n, &());
+        let got = matmul_hrfna_planar(&a, &b, m, k, n, &ctx);
+        assert_eq!(got.len(), m * n);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-7 * w.abs().max(1.0), "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn planar_matmul_handles_wide_range_and_zeros() {
+        let ctx = HrfnaContext::paper_default();
+        let mut rng = crate::util::prng::Rng::new(19);
+        let dim = 12;
+        let mut a = Dist::high_dynamic_range().sample_vec(&mut rng, dim * dim);
+        let b = Dist::moderate().sample_vec(&mut rng, dim * dim);
+        a[0] = 0.0;
+        a[dim + 1] = 0.0;
+        let want = matmul::<f64>(&a, &b, dim, dim, dim, &());
+        let got = matmul_hrfna_planar(&a, &b, dim, dim, dim, &ctx);
+        for i in 0..dim {
+            for j in 0..dim {
+                // Tolerance against the non-cancelling magnitude: encode
+                // quantization is relative to Σ|a·b|, not to the sum.
+                let scale: f64 = (0..dim)
+                    .map(|p| (a[i * dim + p] * b[p * dim + j]).abs())
+                    .sum();
+                let (g, w) = (got[i * dim + j], want[i * dim + j]);
+                assert!(
+                    (g - w).abs() <= 1e-6 * scale + 1e-12,
+                    "({i},{j}): {g} vs {w}"
+                );
+            }
+        }
     }
 }

@@ -97,6 +97,131 @@ pub fn rk4_step<N: Numeric>(ode: &Ode, y: &[N], dt: f64, ctx: &N::Ctx) -> Vec<N>
         .collect()
 }
 
+/// Batched vector-field evaluation on the planar engine: one
+/// [`HrfnaBatch`] per state dimension, each holding every instance —
+/// elementwise kernels advance all instances at once, mirroring the
+/// scalar [`Ode::field`] op-for-op (so results are bit-identical to
+/// integrating each instance with the scalar reference).
+fn field_batch(
+    ode: &Ode,
+    y: &[crate::hybrid::HrfnaBatch],
+    ctx: &crate::hybrid::HrfnaContext,
+) -> Vec<crate::hybrid::HrfnaBatch> {
+    use crate::hybrid::{Hrfna, HrfnaBatch};
+    let b = y[0].len();
+    match *ode {
+        Ode::VanDerPol { mu } => {
+            let x = &y[0];
+            let v = &y[1];
+            let one = HrfnaBatch::broadcast(&Hrfna::encode(1.0, ctx), b);
+            let x2 = x.mul(x, ctx);
+            let damp = one.sub(&x2, ctx).scale(mu, ctx);
+            let vprime = damp.mul(v, ctx).sub(x, ctx);
+            vec![v.clone(), vprime]
+        }
+        Ode::DampedOscillator { omega, zeta } => {
+            let x = &y[0];
+            let v = &y[1];
+            let vprime = x
+                .scale(-omega * omega, ctx)
+                .sub(&v.scale(2.0 * zeta * omega, ctx), ctx);
+            vec![v.clone(), vprime]
+        }
+        Ode::Relaxation { lambda, c } => {
+            let target = HrfnaBatch::broadcast(&Hrfna::encode(c, ctx), b);
+            vec![target.sub(&y[0], ctx).scale(lambda, ctx)]
+        }
+    }
+}
+
+/// One classical RK4 step for a batch of instances (planar HRFNA).
+pub fn rk4_step_batch(
+    ode: &Ode,
+    y: &[crate::hybrid::HrfnaBatch],
+    dt: f64,
+    ctx: &crate::hybrid::HrfnaContext,
+) -> Vec<crate::hybrid::HrfnaBatch> {
+    let k1 = field_batch(ode, y, ctx);
+    let y2: Vec<_> = y
+        .iter()
+        .zip(&k1)
+        .map(|(yi, ki)| yi.add(&ki.scale(dt / 2.0, ctx), ctx))
+        .collect();
+    let k2 = field_batch(ode, &y2, ctx);
+    let y3: Vec<_> = y
+        .iter()
+        .zip(&k2)
+        .map(|(yi, ki)| yi.add(&ki.scale(dt / 2.0, ctx), ctx))
+        .collect();
+    let k3 = field_batch(ode, &y3, ctx);
+    let y4: Vec<_> = y
+        .iter()
+        .zip(&k3)
+        .map(|(yi, ki)| yi.add(&ki.scale(dt, ctx), ctx))
+        .collect();
+    let k4 = field_batch(ode, &y4, ctx);
+    (0..y.len())
+        .map(|i| {
+            let sum = k1[i]
+                .add(&k2[i].scale(2.0, ctx), ctx)
+                .add(&k3[i].scale(2.0, ctx), ctx)
+                .add(&k4[i], ctx);
+            y[i].add(&sum.scale(dt / 6.0, ctx), ctx)
+        })
+        .collect()
+}
+
+/// Integrate a *batch* of instances of `ode` (one initial state per
+/// instance) in lock-step on the planar engine, sampling each instance's
+/// error against its own f64 reference. Serving many independent ODE
+/// instances is the batched form of the §VII-D workload; per-instance
+/// results are bit-identical to the scalar [`rk4_integrate`] run.
+pub fn rk4_integrate_batch(
+    ode: &Ode,
+    y0s: &[Vec<f64>],
+    dt: f64,
+    steps: u64,
+    sample_every: u64,
+    ctx: &crate::hybrid::HrfnaContext,
+) -> Vec<Rk4Trace> {
+    use crate::hybrid::HrfnaBatch;
+    let dim = ode.dim();
+    let b = y0s.len();
+    assert!(y0s.iter().all(|y0| y0.len() == dim));
+    // One batch per state dimension, instances as elements.
+    let mut y: Vec<HrfnaBatch> = (0..dim)
+        .map(|d| {
+            let xs: Vec<f64> = y0s.iter().map(|y0| y0[d]).collect();
+            HrfnaBatch::encode(&xs, ctx)
+        })
+        .collect();
+    let mut yref: Vec<Vec<f64>> = y0s.to_vec();
+    let mut samples: Vec<Vec<(u64, f64)>> = vec![Vec::new(); b];
+    for step in 1..=steps {
+        y = rk4_step_batch(ode, &y, dt, ctx);
+        for r in yref.iter_mut() {
+            *r = rk4_step::<f64>(ode, r, dt, &());
+        }
+        if step % sample_every == 0 || step == steps {
+            let decoded: Vec<Vec<f64>> = y.iter().map(|bd| bd.decode(ctx)).collect();
+            for (i, r) in yref.iter().enumerate() {
+                let err = (0..dim)
+                    .map(|d| (decoded[d][i] - r[d]).abs())
+                    .fold(0.0, f64::max);
+                samples[i].push((step, err));
+            }
+        }
+    }
+    let decoded: Vec<Vec<f64>> = y.iter().map(|bd| bd.decode(ctx)).collect();
+    (0..b)
+        .map(|i| Rk4Trace {
+            samples: samples[i].clone(),
+            final_state: (0..dim).map(|d| decoded[d][i]).collect(),
+            final_ref: yref[i].clone(),
+        })
+        .collect()
+}
+
 /// Integration trace: error vs the f64 reference sampled along the run.
 #[derive(Clone, Debug)]
 pub struct Rk4Trace {
@@ -219,6 +344,47 @@ mod tests {
         let ode = Ode::Relaxation { lambda: 1.0, c: 3.0 };
         let tr = rk4_integrate::<Hrfna>(&ode, &[0.0], 0.01, 20_000, 2000, &ctx);
         assert!(tr.max_error() < 1e-6, "max_error={}", tr.max_error());
+    }
+
+    #[test]
+    fn batched_integration_bit_identical_to_scalar() {
+        // The batched kernels mirror the scalar ops exactly, so every
+        // instance of a batched run must reproduce its scalar run bit for
+        // bit — across ODEs with different op mixes.
+        let ctx = HrfnaContext::paper_default();
+        let mut rng = crate::util::prng::Rng::new(23);
+        for (ode, steps) in [
+            (Ode::VanDerPol { mu: 1.0 }, 400u64),
+            (Ode::DampedOscillator { omega: 1.0, zeta: 0.1 }, 400),
+            (Ode::Relaxation { lambda: 1.5, c: 2.0 }, 400),
+        ] {
+            let dim = ode.dim();
+            let y0s: Vec<Vec<f64>> = (0..5)
+                .map(|_| (0..dim).map(|_| rng.uniform(-1.5, 1.5)).collect())
+                .collect();
+            let traces = rk4_integrate_batch(&ode, &y0s, 0.01, steps, 100, &ctx);
+            assert_eq!(traces.len(), y0s.len());
+            for (i, y0) in y0s.iter().enumerate() {
+                let scalar = rk4_integrate::<Hrfna>(&ode, y0, 0.01, steps, 100, &ctx);
+                assert_eq!(
+                    traces[i].final_state, scalar.final_state,
+                    "{ode:?} instance {i} diverged from the scalar reference"
+                );
+                assert_eq!(traces[i].final_ref, scalar.final_ref);
+            }
+        }
+    }
+
+    #[test]
+    fn batched_integration_tracks_f64() {
+        let ctx = HrfnaContext::paper_default();
+        let ode = Ode::Relaxation { lambda: 1.0, c: 3.0 };
+        let y0s = vec![vec![0.0], vec![1.0], vec![-2.0]];
+        let traces = rk4_integrate_batch(&ode, &y0s, 0.01, 2000, 500, &ctx);
+        for tr in &traces {
+            assert!(tr.max_error() < 1e-6, "max_error={}", tr.max_error());
+            assert!((tr.final_state[0] - tr.final_ref[0]).abs() < 1e-6);
+        }
     }
 
     #[test]

@@ -44,6 +44,31 @@ pub trait Numeric: Clone {
     fn scale(&self, k: f64, ctx: &Self::Ctx) -> Self {
         self.mul(&Self::from_f64(k, ctx), ctx)
     }
+
+    /// Batched dot product over pre-encoded operands. Formats with a
+    /// planar engine (HRFNA) override this with their lane kernels; the
+    /// default is the scalar reference MAC loop.
+    fn dot_encoded(xs: &[Self], ys: &[Self], ctx: &Self::Ctx) -> Self {
+        let mut acc = Self::zero(ctx);
+        for (x, y) in xs.iter().zip(ys) {
+            acc.mac_assign(x, y, ctx);
+        }
+        acc
+    }
+
+    /// Planar matmul fast path: `Some(C)` when the format provides a
+    /// batched kernel for `C = A·B` (`A: m×k`, `B: k×n`, row-major f64 in,
+    /// f64 out), `None` to use the generic scalar kernel.
+    fn matmul_block(
+        _a: &[f64],
+        _b: &[f64],
+        _m: usize,
+        _k: usize,
+        _n: usize,
+        _ctx: &Self::Ctx,
+    ) -> Option<Vec<f64>> {
+        None
+    }
 }
 
 /// FP64 — the double-precision software reference (§VII-A.2).
@@ -136,6 +161,29 @@ impl Numeric for crate::hybrid::Hrfna {
     }
     fn mac_assign(&mut self, a: &Self, b: &Self, ctx: &Self::Ctx) {
         crate::hybrid::Hrfna::mac_assign(self, a, b, ctx)
+    }
+
+    /// §Perf planar fast path: pack into channel-major lanes and run the
+    /// exact batched Algorithm 1 kernel (falls back to the scalar MAC
+    /// loop internally when interval headroom cannot prove exactness).
+    fn dot_encoded(xs: &[Self], ys: &[Self], ctx: &Self::Ctx) -> Self {
+        let bx = crate::hybrid::HrfnaBatch::from_items(xs, ctx.k());
+        let by = crate::hybrid::HrfnaBatch::from_items(ys, ctx.k());
+        bx.dot(&by, ctx)
+    }
+
+    /// §Perf planar matmul: one batched dot per output element over
+    /// row/column lane windows, parallelized across row blocks on the
+    /// shared thread pool.
+    fn matmul_block(
+        a: &[f64],
+        b: &[f64],
+        m: usize,
+        k: usize,
+        n: usize,
+        ctx: &Self::Ctx,
+    ) -> Option<Vec<f64>> {
+        Some(crate::workloads::matmul::matmul_hrfna_planar(a, b, m, k, n, ctx))
     }
 }
 

@@ -1,8 +1,11 @@
-//! Integration: the PJRT runtime executes the AOT kernels and their
+//! Integration: the runtime engine executes the AOT graphs and their
 //! numerics agree bit-for-bit with the pure-Rust residue model and within
 //! tolerance of f64 — the critical L1 ↔ L3 cross-check.
 //!
-//! Requires `make artifacts` (the Makefile `test` target guarantees it).
+//! Runs against whichever backend the build selected: the default
+//! pure-Rust software executor (no artifacts needed), or — with
+//! `--features xla` — the real PJRT client, which additionally requires
+//! `make artifacts` (the Makefile `test` target guarantees it).
 
 use hrfna::coordinator::hybrid_exec::{decode_matrix, decode_scalar, encode_block};
 use hrfna::hybrid::HrfnaContext;

@@ -1,6 +1,7 @@
 //! Integration: the full coordinator stack (admission → batching → lane
-//! workers → PJRT engine → decode) serves correct results under
-//! concurrency. Requires `make artifacts`.
+//! workers → runtime engine → decode) serves correct results under
+//! concurrency. Uses the backend the build selected (software executor by
+//! default; the PJRT client with `--features xla` + `make artifacts`).
 
 use hrfna::config::HrfnaConfig;
 use hrfna::coordinator::batcher::BatchPolicy;
