@@ -1,0 +1,194 @@
+//! Serving-path benchmark: scalar-reference vs planar datapath jobs/sec
+//! through the full coordinator (admission → sharded queues → batch
+//! execution → decode → reply), closed-loop at batch ≥ 8, plus an
+//! open-loop backpressure probe and a mixed-lane smoke. Writes
+//! `BENCH_serve.json`; the CI gate (`tools/bench_gate.rs`) holds the
+//! recorded planar speedup within tolerance.
+//!
+//! Quick mode for CI: `BENCH_QUICK=1 cargo bench --bench bench_serve`
+//! (or `--quick`).
+
+mod common;
+
+use hrfna::config::HrfnaConfig;
+use hrfna::coordinator::batcher::BatchPolicy;
+use hrfna::coordinator::{
+    closed_loop, open_loop, Coordinator, CoordinatorConfig, ExecMode, JobKind, Payload,
+};
+use hrfna::hybrid::HrfnaContext;
+use hrfna::runtime::EngineHandle;
+use hrfna::util::bench::{write_json, BenchRecord};
+use hrfna::util::cli::Args;
+use hrfna::util::prng::Rng;
+use hrfna::workloads::generators::{Dist, ServeMix};
+use std::sync::Arc;
+use std::time::Duration;
+
+const DOT_N: usize = 4096;
+const CLIENTS: usize = 4;
+const BURST: usize = 16;
+
+fn coordinator(mode: ExecMode, capacity: usize) -> Coordinator {
+    let engine = EngineHandle::spawn(None).expect("engine");
+    let ctx = Arc::new(HrfnaContext::new(HrfnaConfig::paper_default()));
+    Coordinator::start(
+        engine,
+        ctx,
+        CoordinatorConfig {
+            workers_per_lane: 2,
+            batch: BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_micros(500),
+                capacity,
+            },
+            exec: mode,
+            ..CoordinatorConfig::default()
+        },
+    )
+}
+
+fn main() {
+    common::banner("§Serve", "coordinator scalar-path vs planar-path jobs/sec");
+    let args = Args::from_env();
+    let quick = args.flag("quick") || std::env::var("BENCH_QUICK").is_ok();
+    let jobs_per_client = if quick { 64 } else { 256 };
+
+    // Shared operand pool so generation stays out of the measured loop.
+    let mut rng = Rng::new(2026);
+    let pool: Vec<(Vec<f64>, Vec<f64>)> = (0..16)
+        .map(|_| {
+            (
+                Dist::moderate().sample_vec(&mut rng, DOT_N),
+                Dist::moderate().sample_vec(&mut rng, DOT_N),
+            )
+        })
+        .collect();
+    let make_dot = |c: u64, i: usize| -> (JobKind, Payload) {
+        let (x, y) = &pool[(c as usize * 7 + i) % pool.len()];
+        (JobKind::DotHybrid, Payload::Dot { x: x.clone(), y: y.clone() })
+    };
+
+    let mut records: Vec<BenchRecord> = Vec::new();
+    let mut by_mode = [0.0f64; 2];
+    for (m, mode) in [ExecMode::Scalar, ExecMode::Planar].into_iter().enumerate() {
+        let coord = coordinator(mode, 4096);
+        // Warmup (threadpool spin-up, first allocations).
+        for _ in 0..4 {
+            let (x, y) = &pool[0];
+            coord
+                .call(JobKind::DotHybrid, Payload::Dot { x: x.clone(), y: y.clone() })
+                .expect("warmup job");
+        }
+        let report = closed_loop(&coord, CLIENTS, jobs_per_client, BURST, &make_dot);
+        assert_eq!(report.accepted, report.offered, "{mode:?}: capacity too small");
+        assert_eq!(report.completed, report.accepted, "{mode:?}: lost jobs");
+        let mean_batch = coord.metrics.mean_batch_size(JobKind::DotHybrid);
+        let lat = report.latency_us.as_ref().expect("latencies");
+        println!(
+            "dot n={DOT_N} {}: {:.0} jobs/s  (mean batch {:.1}, p50 {:.0} us, p99 {:.0} us)",
+            mode.label(),
+            report.jobs_per_s,
+            mean_batch,
+            lat.p50,
+            lat.p99
+        );
+        let drain = coord.shutdown();
+        assert!(drain.is_clean(), "unclean drain: {drain}");
+        by_mode[m] = report.jobs_per_s;
+        records.push(BenchRecord {
+            name: format!("serve_dot_{}_n{DOT_N}_b8_jobs", mode.label()),
+            n: report.completed as u64,
+            ns_per_op: report.wall.as_nanos() as f64 / report.completed.max(1) as f64,
+            throughput_per_s: report.jobs_per_s,
+        });
+    }
+    let speedup = by_mode[1] / by_mode[0].max(1e-9);
+    println!("-> planar serving speedup over scalar path: {speedup:.2}x");
+    // Machine-independent gate record: planar cost relative to the scalar
+    // path *measured in the same run* (ns_per_op = planar/scalar per-job
+    // cost, lower is better; throughput_per_s holds the speedup). Shared
+    // CI runners drift on absolute ns/op but not on this ratio.
+    records.push(BenchRecord {
+        name: "serve_dot_planar_cost_ratio".to_string(),
+        n: 1,
+        ns_per_op: 1.0 / speedup.max(1e-9),
+        throughput_per_s: speedup,
+    });
+    if !quick {
+        assert!(
+            speedup >= 2.0,
+            "planar serving path must be >= 2x scalar jobs/sec (got {speedup:.2}x)"
+        );
+    }
+
+    // Open-loop backpressure probe: offer ~2x the measured planar
+    // capacity into small queues; the bounded lanes must shed load with
+    // `Overloaded` instead of queueing without bound.
+    let coord = coordinator(ExecMode::Planar, 16);
+    let probe_jobs = if quick { 200 } else { 800 };
+    let report = open_loop(&coord, probe_jobs, (by_mode[1] * 2.0).max(100.0), &make_dot);
+    println!(
+        "open-loop at 2x capacity: offered {} accepted {} shed {} ({:.0} jobs/s served)",
+        report.offered, report.accepted, report.rejected, report.jobs_per_s
+    );
+    let drain = coord.shutdown();
+    assert!(drain.is_clean(), "unclean drain after open loop: {drain}");
+
+    // Mixed-lane smoke: every lane (both dot buckets, matmuls, RK4)
+    // under one coordinator, planar path.
+    let mix = ServeMix::default_mix();
+    let make_mixed = |c: u64, i: usize| -> (JobKind, Payload) {
+        let (slot, mut rng) = mix.request_rng(c + 100, i);
+        match slot {
+            0..=3 => {
+                let x = mix.dist.sample_vec(&mut rng, mix.dot_n);
+                let y = mix.dist.sample_vec(&mut rng, mix.dot_n);
+                (JobKind::DotHybrid, Payload::Dot { x, y })
+            }
+            4..=6 => {
+                let x = mix.dist.sample_vec(&mut rng, mix.dot_n);
+                let y = mix.dist.sample_vec(&mut rng, mix.dot_n);
+                (JobKind::DotF32, Payload::Dot { x, y })
+            }
+            7 => {
+                let a = mix.dist.sample_vec(&mut rng, mix.matmul_dim * mix.matmul_dim);
+                let b = mix.dist.sample_vec(&mut rng, mix.matmul_dim * mix.matmul_dim);
+                (JobKind::MatmulHybrid, Payload::Matmul { a, b, dim: mix.matmul_dim })
+            }
+            8 => {
+                let a = mix.dist.sample_vec(&mut rng, mix.matmul_dim * mix.matmul_dim);
+                let b = mix.dist.sample_vec(&mut rng, mix.matmul_dim * mix.matmul_dim);
+                (JobKind::MatmulF32, Payload::Matmul { a, b, dim: mix.matmul_dim })
+            }
+            _ => (
+                JobKind::Rk4Hybrid,
+                Payload::Rk4 {
+                    y0: vec![rng.uniform(-2.0, 2.0), rng.uniform(-2.0, 2.0)],
+                    mu: 1.0,
+                    dt: 0.005,
+                    steps: mix.rk4_steps,
+                },
+            ),
+        }
+    };
+    let coord = coordinator(ExecMode::Planar, 4096);
+    let mixed = closed_loop(&coord, 2, if quick { 20 } else { 60 }, 10, &make_mixed);
+    println!(
+        "mixed lanes: {} jobs in {:.2?} ({:.0} jobs/s)",
+        mixed.completed, mixed.wall, mixed.jobs_per_s
+    );
+    coord.metrics_table().print();
+    let drain = coord.shutdown();
+    assert!(drain.is_clean(), "unclean drain after mixed load: {drain}");
+    records.push(BenchRecord {
+        name: "serve_mixed_planar_jobs".to_string(),
+        n: mixed.completed as u64,
+        ns_per_op: mixed.wall.as_nanos() as f64 / mixed.completed.max(1) as f64,
+        throughput_per_s: mixed.jobs_per_s,
+    });
+
+    match write_json("BENCH_serve.json", &records) {
+        Ok(()) => println!("\nwrote BENCH_serve.json ({} records)", records.len()),
+        Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),
+    }
+}

@@ -18,7 +18,16 @@ use hrfna::workloads::{dot, generators::Dist};
 fn main() {
     common::banner("Table III / §VII-B", "vector dot product");
     let cfg = hrfna::config::HrfnaConfig::paper_default();
-    let trials = 3;
+    // Quick mode (CI): fewer accuracy trials and no 65536-length row; the
+    // measured-host section below is untouched so every BENCH_dot.json
+    // record name still exists for the regression gate.
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let trials = if quick { 1 } else { 3 };
+    let accuracy_lengths: &[usize] = if quick {
+        &[1024, 4096, 16384]
+    } else {
+        &[1024, 4096, 16384, 65536]
+    };
 
     let mut t = Table::new(
         "Dot product: accuracy + modeled throughput (moderate operands)",
@@ -26,7 +35,7 @@ fn main() {
             "n", "HRFNA rms", "FP32 rms", "BFP rms", "norm/op", "HRFNA vs FP32 thr",
         ],
     );
-    for n in [1024usize, 4096, 16384, 65536] {
+    for &n in accuracy_lengths {
         let ctx = HrfnaContext::new(cfg.clone());
         let h = dot::dot_rms_error::<Hrfna>(trials, n, Dist::moderate(), 42, &ctx);
         let snap = ctx.snapshot();

@@ -1,9 +1,23 @@
-//! Fixed-shape batcher: AOT executables have frozen shapes, so incoming
-//! jobs are bucketed per kind and dispatched in batches — a batch amortizes
-//! worker wakeups and engine dispatch overhead over several jobs (the
-//! vLLM-router-style dynamic batching policy, adapted to fixed shapes).
+//! Sharded fixed-shape batcher: AOT executables have frozen shapes, so
+//! incoming jobs are bucketed per (kind, shape) lane and dispatched in
+//! batches — a batch amortizes worker wakeups and one planar encode over
+//! several jobs (the vLLM-router-style dynamic batching policy, adapted to
+//! fixed shapes).
+//!
+//! The queue is **sharded**: one deque (and one lock) per worker, with
+//! round-robin placement on push and work stealing on pop — a worker that
+//! drains its own shard takes a *ready* batch from a sibling rather than
+//! idling. Shards are **bounded**: when every shard is at capacity the
+//! push fails and the coordinator surfaces a typed `Overloaded` error
+//! instead of growing without bound (the backpressure contract).
+//!
+//! Sleeping workers park on one queue-wide condvar guarded by a generation
+//! counter (per-shard locks stay uncontended on the hot path; the counter
+//! is bumped under the signal lock on every push/close, so a wakeup can
+//! never be missed between a worker's scan and its wait).
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -16,6 +30,9 @@ pub struct BatchPolicy {
     pub max_batch: usize,
     /// …or when the oldest job has waited this long.
     pub max_wait: Duration,
+    /// Bounded per-shard queue depth; pushes beyond it are rejected
+    /// (`usize::MAX` disables the bound).
+    pub capacity: usize,
 }
 
 impl Default for BatchPolicy {
@@ -23,90 +40,206 @@ impl Default for BatchPolicy {
         BatchPolicy {
             max_batch: 8,
             max_wait: Duration::from_millis(2),
+            capacity: 1024,
         }
     }
 }
 
+/// A rejected push, returning the job to the caller.
+#[derive(Debug)]
+pub enum PushError {
+    /// Every shard is at capacity (backpressure: shed load upstream).
+    Full(Job),
+    /// The queue is closed (coordinator shutting down).
+    Closed(Job),
+}
+
 #[derive(Default)]
-struct QueueState {
+struct Shard {
     jobs: VecDeque<Job>,
     closed: bool,
 }
 
-/// A blocking batch queue for one job kind.
+/// Outcome of one non-blocking shard poll.
+enum Pop {
+    /// A batch ready per the policy (full, window expired, or draining).
+    Ready(Vec<Job>),
+    /// Jobs queued but the batching window is still open for this long.
+    Wait(Duration),
+    /// No jobs queued.
+    Empty,
+    /// Closed and fully drained.
+    Done,
+}
+
+/// Sleep cap while no shard reports a pending batching window: the
+/// generation counter makes wakeups exact, so this only bounds staleness
+/// if a waiter raced a bump it has already observed.
+const IDLE_SLICE: Duration = Duration::from_millis(50);
+
+/// A sharded, bounded, work-stealing batch queue for one (kind, shape)
+/// lane.
 pub struct BatchQueue {
-    state: Mutex<QueueState>,
+    shards: Vec<Mutex<Shard>>,
+    /// Push/close generation, paired with `cv` (see module docs).
+    signal: Mutex<u64>,
     cv: Condvar,
+    rr: AtomicUsize,
     pub policy: BatchPolicy,
 }
 
 impl BatchQueue {
-    /// New queue with the given policy.
+    /// Single-shard queue with the given policy.
     pub fn new(policy: BatchPolicy) -> BatchQueue {
+        BatchQueue::sharded(policy, 1)
+    }
+
+    /// Queue with `shards` independent shards (typically one per worker).
+    pub fn sharded(policy: BatchPolicy, shards: usize) -> BatchQueue {
+        let shards = shards.max(1);
         BatchQueue {
-            state: Mutex::new(QueueState::default()),
+            shards: (0..shards).map(|_| Mutex::new(Shard::default())).collect(),
+            signal: Mutex::new(0),
             cv: Condvar::new(),
+            rr: AtomicUsize::new(0),
             policy,
         }
     }
 
-    /// Enqueue a job.
+    /// Number of shards.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn bump(&self) {
+        let mut g = self.signal.lock().unwrap();
+        *g = g.wrapping_add(1);
+        self.cv.notify_all();
+    }
+
+    /// Enqueue with backpressure: round-robin home shard first, then any
+    /// shard with room. Fails with `Full` only when every shard is at
+    /// capacity, `Closed` once the queue is shut down.
+    pub fn try_push(&self, job: Job) -> Result<(), PushError> {
+        let s = self.shards.len();
+        let home = self.rr.fetch_add(1, Ordering::Relaxed) % s;
+        for i in 0..s {
+            let mut shard = self.shards[(home + i) % s].lock().unwrap();
+            if shard.closed {
+                drop(shard);
+                return Err(PushError::Closed(job));
+            }
+            if shard.jobs.len() >= self.policy.capacity {
+                drop(shard);
+                continue;
+            }
+            shard.jobs.push_back(job);
+            drop(shard);
+            self.bump();
+            return Ok(());
+        }
+        // All shards full: hand the job back so the caller can reject the
+        // request with a typed error (it still owns the reply channel).
+        Err(PushError::Full(job))
+    }
+
+    /// Infallible enqueue for tests and unbounded policies; panics if the
+    /// queue is closed or every shard is full.
     pub fn push(&self, job: Job) {
-        let mut st = self.state.lock().unwrap();
-        assert!(!st.closed, "queue closed");
-        st.jobs.push_back(job);
-        self.cv.notify_one();
+        match self.try_push(job) {
+            Ok(()) => {}
+            Err(PushError::Full(_)) => panic!("queue full"),
+            Err(PushError::Closed(_)) => panic!("queue closed"),
+        }
     }
 
-    /// Number of queued jobs.
+    /// Total queued jobs across shards.
     pub fn len(&self) -> usize {
-        self.state.lock().unwrap().jobs.len()
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().jobs.len())
+            .sum()
     }
 
-    /// True if no jobs are waiting.
+    /// True if no jobs are waiting in any shard.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Close the queue: wakes all waiters; `next_batch` drains and then
-    /// returns `None`.
+    /// Close the queue: wakes all waiters; `next_batch` drains remaining
+    /// jobs and then returns `None`.
     pub fn close(&self) {
-        let mut st = self.state.lock().unwrap();
-        st.closed = true;
-        self.cv.notify_all();
-    }
-
-    /// Block until a batch is ready per the policy (or the queue closes).
-    /// Returns `None` only when closed *and* drained.
-    pub fn next_batch(&self) -> Option<Vec<Job>> {
-        let mut st = self.state.lock().unwrap();
-        loop {
-            if !st.jobs.is_empty() {
-                let oldest = st.jobs.front().unwrap().submitted;
-                let waited = oldest.elapsed();
-                if st.jobs.len() >= self.policy.max_batch
-                    || waited >= self.policy.max_wait
-                    || st.closed
-                {
-                    let take = st.jobs.len().min(self.policy.max_batch);
-                    return Some(st.jobs.drain(..take).collect());
-                }
-                // Wait out the remaining batching window.
-                let remaining = self.policy.max_wait - waited;
-                let (guard, _) = self.cv.wait_timeout(st, remaining).unwrap();
-                st = guard;
-            } else if st.closed {
-                return None;
-            } else {
-                st = self.cv.wait(st).unwrap();
-            }
+        for s in &self.shards {
+            s.lock().unwrap().closed = true;
         }
+        self.bump();
     }
 
     /// Age of the oldest queued job (None if empty) — scheduling metric.
     pub fn oldest_wait(&self) -> Option<Duration> {
-        let st = self.state.lock().unwrap();
-        st.jobs.front().map(|j| j.submitted.elapsed())
+        self.shards
+            .iter()
+            .filter_map(|s| {
+                let sh = s.lock().unwrap();
+                sh.jobs.front().map(|j| j.submitted.elapsed())
+            })
+            .max()
+    }
+
+    /// Non-blocking poll of one shard against the batching policy.
+    fn pop_shard(&self, idx: usize) -> Pop {
+        let mut shard = self.shards[idx].lock().unwrap();
+        if shard.jobs.is_empty() {
+            return if shard.closed { Pop::Done } else { Pop::Empty };
+        }
+        let waited = shard.jobs.front().unwrap().submitted.elapsed();
+        if shard.jobs.len() >= self.policy.max_batch
+            || waited >= self.policy.max_wait
+            || shard.closed
+        {
+            let take = shard.jobs.len().min(self.policy.max_batch);
+            return Pop::Ready(shard.jobs.drain(..take).collect());
+        }
+        Pop::Wait(self.policy.max_wait - waited)
+    }
+
+    /// Block until a batch is ready per the policy (or the queue closes).
+    /// Single-consumer convenience over [`BatchQueue::next_batch_for`].
+    pub fn next_batch(&self) -> Option<Vec<Job>> {
+        self.next_batch_for(0).map(|(batch, _)| batch)
+    }
+
+    /// Worker `w`'s next batch: polls its own shard first, then *steals a
+    /// ready batch* from sibling shards (idle workers never wait out a
+    /// sibling's full batch). Returns the batch and whether it was stolen;
+    /// `None` only when the queue is closed *and* every shard is drained.
+    pub fn next_batch_for(&self, w: usize) -> Option<(Vec<Job>, bool)> {
+        let s = self.shards.len();
+        loop {
+            let gen_before = *self.signal.lock().unwrap();
+            let mut wait = IDLE_SLICE;
+            let mut live = false;
+            for i in 0..s {
+                match self.pop_shard((w + i) % s) {
+                    Pop::Ready(batch) => return Some((batch, i != 0)),
+                    Pop::Wait(d) => {
+                        live = true;
+                        wait = wait.min(d);
+                    }
+                    Pop::Empty => live = true,
+                    Pop::Done => {}
+                }
+            }
+            if !live {
+                return None;
+            }
+            // Park until a push/close bumps the generation or the nearest
+            // batching window elapses.
+            let g = self.signal.lock().unwrap();
+            if *g == gen_before {
+                let _ = self.cv.wait_timeout(g, wait).unwrap();
+            }
+        }
     }
 }
 
@@ -132,6 +265,7 @@ mod tests {
                     x: vec![1.0],
                     y: vec![1.0],
                 },
+                bucket: 1,
                 submitted: Instant::now(),
                 reply: tx,
             },
@@ -144,6 +278,7 @@ mod tests {
         let q = BatchQueue::new(BatchPolicy {
             max_batch: 3,
             max_wait: Duration::from_secs(60),
+            ..BatchPolicy::default()
         });
         let mut rxs = Vec::new();
         for i in 0..3 {
@@ -161,6 +296,7 @@ mod tests {
         let q = BatchQueue::new(BatchPolicy {
             max_batch: 100,
             max_wait: Duration::from_millis(5),
+            ..BatchPolicy::default()
         });
         let (j, _rx) = mkjob(7);
         q.push(j);
@@ -181,11 +317,74 @@ mod tests {
     }
 
     #[test]
+    fn bounded_push_rejects_when_all_shards_full() {
+        let q = BatchQueue::sharded(
+            BatchPolicy {
+                max_batch: 64,
+                max_wait: Duration::from_secs(60),
+                capacity: 2,
+            },
+            2,
+        );
+        let mut rxs = Vec::new();
+        for i in 0..4 {
+            let (j, rx) = mkjob(i);
+            assert!(q.try_push(j).is_ok(), "push {i} within capacity");
+            rxs.push(rx);
+        }
+        let (j, _rx) = mkjob(99);
+        match q.try_push(j) {
+            Err(PushError::Full(job)) => assert_eq!(job.id, 99),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        assert_eq!(q.len(), 4);
+    }
+
+    #[test]
+    fn push_after_close_is_rejected() {
+        let q = BatchQueue::new(BatchPolicy::default());
+        q.close();
+        let (j, _rx) = mkjob(1);
+        assert!(matches!(q.try_push(j), Err(PushError::Closed(_))));
+    }
+
+    #[test]
+    fn worker_steals_ready_batch_from_sibling_shard() {
+        // Two shards; both jobs round-robin to different shards. With a
+        // 1-job batch everything is immediately ready, so worker 1 can
+        // take work placed on shard 0.
+        let q = BatchQueue::sharded(
+            BatchPolicy {
+                max_batch: 1,
+                max_wait: Duration::from_secs(60),
+                ..BatchPolicy::default()
+            },
+            2,
+        );
+        let (j, _rx0) = mkjob(0);
+        q.push(j);
+        let (j, _rx1) = mkjob(1);
+        q.push(j);
+        let (b0, _) = q.next_batch_for(1).unwrap();
+        let (b1, _) = q.next_batch_for(1).unwrap();
+        // Worker 1 drained both shards; one of the two pops crossed shards.
+        let mut ids = vec![b0[0].id, b1[0].id];
+        ids.sort();
+        assert_eq!(ids, vec![0, 1]);
+        q.close();
+        assert!(q.next_batch_for(1).is_none());
+    }
+
+    #[test]
     fn concurrent_producers_no_loss_no_dup() {
-        let q = Arc::new(BatchQueue::new(BatchPolicy {
-            max_batch: 16,
-            max_wait: Duration::from_millis(1),
-        }));
+        let q = Arc::new(BatchQueue::sharded(
+            BatchPolicy {
+                max_batch: 16,
+                max_wait: Duration::from_millis(1),
+                ..BatchPolicy::default()
+            },
+            3,
+        ));
         let producers: Vec<_> = (0..4)
             .map(|p| {
                 let q = Arc::clone(&q);
@@ -198,23 +397,28 @@ mod tests {
                 })
             })
             .collect();
-        let consumer = {
-            let q = Arc::clone(&q);
-            std::thread::spawn(move || {
-                let mut seen = Vec::new();
-                while let Some(batch) = q.next_batch() {
-                    for j in batch {
-                        seen.push(j.id);
+        let consumers: Vec<_> = (0..2)
+            .map(|w| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    let mut seen = Vec::new();
+                    while let Some((batch, _)) = q.next_batch_for(w) {
+                        for j in batch {
+                            seen.push(j.id);
+                        }
                     }
-                }
-                seen
+                    seen
+                })
             })
-        };
+            .collect();
         for p in producers {
             p.join().unwrap();
         }
         q.close();
-        let mut seen = consumer.join().unwrap();
+        let mut seen: Vec<u64> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
         seen.sort();
         seen.dedup();
         assert_eq!(seen.len(), 200, "lost or duplicated jobs");

@@ -1,20 +1,70 @@
-//! Block-exponent encode/decode bridging reals ↔ residue tensors for the
-//! AOT kernels (Algorithm 1's "f_0 chosen to match initial operands").
+//! The coordinator's execution bridge: block-exponent encode/decode
+//! between reals and residue lanes (Algorithm 1's "f_0 chosen to match
+//! initial operands") plus the batched executors the lane workers call.
 //!
-//! The PJRT kernels operate on residues only; for Σ x_i·y_i to be a valid
-//! residue-domain sum, every product must share one exponent. So a vector
-//! is encoded with a *block-common* exponent `f = ⌈log2 max|x|⌉ − sig + 1`:
-//! each element becomes `N_i = round(x_i / 2^f)` with `|N_i| ≤ 2^sig`,
-//! stored M-complement per channel. The kernel's per-channel modular MAC
-//! then computes the residues of the signed integer Σ N_i·M_i exactly
-//! (|Σ| ≤ n·2^{2·sig} ≪ M/2 for the AOT bucket sizes), and one CRT
-//! reconstruction recovers the value at exponent `f_x + f_y` — zero
-//! normalizations inside the kernel, matching §VII-E's measured rarity.
+//! ## The planar serving path (default)
+//!
+//! An admitted batch of B dot jobs is encoded in **one pass** into a
+//! shared channel-major [`ResiduePlane`] of `B·n` elements — no per-job
+//! scalar `Hrfna` allocation, no per-job tensors — then each job's result
+//! is one contiguous `lane_dot` window per channel and **one** CRT
+//! reconstruction (only requested outputs are reconstructed). Matmul jobs
+//! dispatch through the `workloads` planar fast-path hook
+//! ([`crate::workloads::matmul::matmul_hrfna_planar`]) and RK4 jobs are
+//! integrated lock-step as one [`crate::hybrid::HrfnaBatch`] per state
+//! dimension. FP32 lanes still run the AOT engine graphs.
+//!
+//! ## The scalar reference path
+//!
+//! [`ExecMode::Scalar`] executes every hybrid job through per-element
+//! scalar [`Hrfna`] values (the reference datapath the planar engine is
+//! property-tested against). `bench_serve` measures both modes and the CI
+//! gate protects the planar speedup.
+//!
+//! ## Why block exponents are sound
+//!
+//! For Σ x_i·y_i to be a valid residue-domain sum, every product must
+//! share one exponent. A vector is encoded with a *block-common* exponent
+//! `f = ⌈log2 max|x|⌉ − sig + 1`: each element becomes
+//! `N_i = round(x_i / 2^f)` with `|N_i| ≤ 2^sig`, stored M-complement per
+//! channel. The per-channel modular MAC then computes the residues of the
+//! signed integer Σ N_i·M_i exactly (|Σ| ≤ n·2^{2·sig} ≪ M/2 for the
+//! bucket sizes), and one CRT reconstruction recovers the value at
+//! exponent `f_x + f_y` — zero normalizations inside the kernel, matching
+//! §VII-E's measured rarity.
 
+use anyhow::Result;
+
+use super::request::{Job, JobKind, Payload};
 use crate::hybrid::number::{ldexp_staged, pow2};
-use crate::hybrid::HrfnaContext;
-use crate::rns::plane::ResiduePlane;
+use crate::hybrid::{Hrfna, HrfnaContext};
+use crate::rns::plane::{self, ResiduePlane};
 use crate::rns::ResidueVec;
+use crate::runtime::pjrt::Tensor;
+use crate::runtime::EngineHandle;
+use crate::workloads::dot::dot_product_encoded_scalar;
+use crate::workloads::rk4::{rk4_final_state, rk4_final_states_batch, Ode};
+
+/// Which datapath the lane workers execute hybrid jobs on.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Per-job scalar `Hrfna` reference (encode each element, MAC loop).
+    Scalar,
+    /// Batched planar lanes (one-pass block encode, lane kernels, bulk
+    /// CRT of requested outputs only).
+    #[default]
+    Planar,
+}
+
+impl ExecMode {
+    /// Short label for bench records and tables.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ExecMode::Scalar => "scalar",
+            ExecMode::Planar => "planar",
+        }
+    }
+}
 
 /// Block-encoded vector: row-major `k × n` residues plus the shared
 /// exponent.
@@ -26,37 +76,93 @@ pub struct BlockEncoded {
     pub f: i32,
 }
 
-/// Encode a real vector with one shared exponent (paper Alg. 1 step 1).
-pub fn encode_block(xs: &[f64], ctx: &HrfnaContext) -> BlockEncoded {
-    let k = ctx.k();
-    let n = xs.len();
+/// Stage one block: write `N_i = round(x_i / 2^f)` into `staged` and
+/// return the shared exponent `f` (0 for an all-zero block).
+fn stage_block(xs: &[f64], sig: i32, staged: &mut [i64]) -> i32 {
+    debug_assert_eq!(xs.len(), staged.len());
     let max = xs.iter().fold(0.0f64, |a, &x| a.max(x.abs()));
     if max == 0.0 {
-        return BlockEncoded {
-            residues: vec![0; k * n],
-            n,
-            f: 0,
-        };
+        staged.fill(0);
+        return 0;
     }
-    let sig = ctx.cfg.sig_bits as i32;
     let e = max.log2().floor() as i32;
     let f = e - sig + 1;
+    let scale = pow2(-f); // |f| < 1100 only via extreme operands; staged below
+    if scale.is_finite() && scale != 0.0 {
+        for (out, &x) in staged.iter_mut().zip(xs) {
+            *out = (x * scale).round() as i64;
+        }
+    } else {
+        for (out, &x) in staged.iter_mut().zip(xs) {
+            *out = ldexp_staged(x, -f).round() as i64;
+        }
+    }
+    f
+}
+
+/// Encode a real vector with one shared exponent (paper Alg. 1 step 1).
+pub fn encode_block(xs: &[f64], ctx: &HrfnaContext) -> BlockEncoded {
+    let n = xs.len();
+    let mut staged = vec![0i64; n];
+    let f = stage_block(xs, ctx.cfg.sig_bits as i32, &mut staged);
     // §Perf (three iterations): (1) Barrett reduction instead of hardware
     // division; (2) channel-major *contiguous* writes — scale once into a
     // staging row, then stream each channel's lane sequentially instead of
     // scattering 8 strided writes per element; (3) the lane loop itself is
     // the planar engine's `ResiduePlane::encode_signed` kernel, shared
     // with the batched execution path.
-    let scale = pow2(-f); // |f| < 1100 only via extreme operands; staged below
-    let staged: Vec<i64> = if scale.is_finite() && scale != 0.0 {
-        xs.iter().map(|&x| (x * scale).round() as i64).collect()
-    } else {
-        xs.iter()
-            .map(|&x| ldexp_staged(x, -f).round() as i64)
-            .collect()
-    };
     let residues = ResiduePlane::encode_signed_i64(&staged, &ctx.cfg.moduli, ctx.barrett());
     BlockEncoded { residues, n, f }
+}
+
+/// A whole admitted dot batch block-encoded into one shared plane:
+/// `plane` holds `B·n` elements channel-major (job `b` occupies the
+/// window `[b·n, (b+1)·n)` of every lane), `f[b]` is job `b`'s block
+/// exponent.
+pub struct DotBatchEncoded {
+    pub plane: ResiduePlane,
+    pub f: Vec<i32>,
+    pub n: usize,
+}
+
+/// One-pass planar encode of `B` same-bucket operand vectors.
+pub fn encode_dot_batch(ops: &[&[f64]], n: usize, ctx: &HrfnaContext) -> DotBatchEncoded {
+    let b = ops.len();
+    let sig = ctx.cfg.sig_bits as i32;
+    let mut staged = vec![0i64; b * n];
+    let mut f = Vec::with_capacity(b);
+    for (j, xs) in ops.iter().enumerate() {
+        debug_assert_eq!(xs.len(), n);
+        f.push(stage_block(xs, sig, &mut staged[j * n..(j + 1) * n]));
+    }
+    let plane = ResiduePlane::encode_signed(&staged, &ctx.cfg.moduli, ctx.barrett());
+    DotBatchEncoded { plane, f, n }
+}
+
+/// Per-job planar dot products over two batch-encoded planes: one
+/// contiguous `lane_dot` window per channel per job, then exactly one CRT
+/// reconstruction per requested output.
+pub fn planar_dot_results(
+    x: &DotBatchEncoded,
+    y: &DotBatchEncoded,
+    ctx: &HrfnaContext,
+) -> Vec<f64> {
+    debug_assert_eq!(x.n, y.n);
+    debug_assert_eq!(x.f.len(), y.f.len());
+    let k = ctx.k();
+    let n = x.n;
+    let bars = ctx.barrett();
+    let mut out = Vec::with_capacity(x.f.len());
+    let mut res = vec![0i64; k];
+    for j in 0..x.f.len() {
+        for (c, r) in res.iter_mut().enumerate() {
+            let xs = &x.plane.lane(c)[j * n..(j + 1) * n];
+            let ys = &y.plane.lane(c)[j * n..(j + 1) * n];
+            *r = plane::lane_dot(bars[c], xs, ys) as i64;
+        }
+        out.push(decode_scalar(&res, x.f[j] + y.f[j], ctx));
+    }
+    out
 }
 
 /// Decode per-channel dot-product residues (k values) at exponent `f`.
@@ -93,9 +199,253 @@ pub fn block_quantum(f: i32) -> f64 {
     pow2(f - 1)
 }
 
+// ----------------------------------------------------------------------
+// Batched lane executors (called by the server's workers)
+// ----------------------------------------------------------------------
+
+/// Execute one admitted batch (all jobs share `kind` and shape bucket).
+/// Returns per-job results aligned with `jobs`.
+pub fn execute_batch(
+    engine: &EngineHandle,
+    ctx: &HrfnaContext,
+    mode: ExecMode,
+    kind: JobKind,
+    jobs: &[Job],
+) -> Vec<Result<Vec<f64>>> {
+    if jobs.is_empty() {
+        return Vec::new();
+    }
+    match kind {
+        JobKind::DotHybrid => match mode {
+            ExecMode::Planar => exec_dot_hybrid_planar(ctx, jobs),
+            ExecMode::Scalar => jobs
+                .iter()
+                .map(|j| exec_dot_hybrid_scalar(ctx, j))
+                .collect(),
+        },
+        JobKind::DotF32 => exec_dot_f32(engine, jobs),
+        JobKind::MatmulHybrid => jobs
+            .iter()
+            .map(|j| exec_matmul_hybrid(ctx, mode, j))
+            .collect(),
+        JobKind::MatmulF32 => jobs.iter().map(|j| exec_matmul_f32(engine, j)).collect(),
+        JobKind::Rk4Hybrid => match mode {
+            ExecMode::Planar => exec_rk4_hybrid_planar(ctx, jobs),
+            ExecMode::Scalar => jobs
+                .iter()
+                .map(|j| exec_rk4_hybrid_scalar(ctx, j))
+                .collect(),
+        },
+    }
+}
+
+fn payload_error<T>() -> Result<T> {
+    Err(anyhow::anyhow!("payload/kind mismatch escaped admission"))
+}
+
+/// The planar hot path: every dot job in the batch encoded into one pair
+/// of shared planes, one lane-dot window set per job, one CRT per output.
+fn exec_dot_hybrid_planar(ctx: &HrfnaContext, jobs: &[Job]) -> Vec<Result<Vec<f64>>> {
+    let mut xs: Vec<&[f64]> = Vec::with_capacity(jobs.len());
+    let mut ys: Vec<&[f64]> = Vec::with_capacity(jobs.len());
+    for job in jobs {
+        match &job.payload {
+            Payload::Dot { x, y } => {
+                xs.push(x);
+                ys.push(y);
+            }
+            _ => return jobs.iter().map(|_| payload_error()).collect(),
+        }
+    }
+    let n = jobs[0].bucket;
+    let ex = encode_dot_batch(&xs, n, ctx);
+    let ey = encode_dot_batch(&ys, n, ctx);
+    planar_dot_results(&ex, &ey, ctx)
+        .into_iter()
+        .map(|v| Ok(vec![v]))
+        .collect()
+}
+
+/// The scalar reference path: per-element `Hrfna` encode + the scalar MAC
+/// loop (what the planar engine is property-tested against).
+fn exec_dot_hybrid_scalar(ctx: &HrfnaContext, job: &Job) -> Result<Vec<f64>> {
+    let (x, y) = match &job.payload {
+        Payload::Dot { x, y } => (x, y),
+        _ => return payload_error(),
+    };
+    let ex: Vec<Hrfna> = x.iter().map(|&v| Hrfna::encode(v, ctx)).collect();
+    let ey: Vec<Hrfna> = y.iter().map(|&v| Hrfna::encode(v, ctx)).collect();
+    let acc = dot_product_encoded_scalar::<Hrfna>(&ex, &ey, ctx);
+    Ok(vec![acc.decode(ctx)])
+}
+
+/// FP32 dots run the AOT engine; the whole batch goes through one
+/// `fp32_dot_batch` call when the backend has it (the software executor
+/// does), falling back to per-job `fp32_dot` calls otherwise.
+fn exec_dot_f32(engine: &EngineHandle, jobs: &[Job]) -> Vec<Result<Vec<f64>>> {
+    let n = jobs[0].bucket;
+    let b = jobs.len();
+    if b > 1 {
+        let mut flat_x = Vec::with_capacity(b * n);
+        let mut flat_y = Vec::with_capacity(b * n);
+        for job in jobs {
+            match &job.payload {
+                Payload::Dot { x, y } => {
+                    flat_x.extend(x.iter().map(|&v| v as f32));
+                    flat_y.extend(y.iter().map(|&v| v as f32));
+                }
+                _ => return jobs.iter().map(|_| payload_error()).collect(),
+            }
+        }
+        // The flats move into the one batched call (no copies on the hot
+        // path); the per-job fallback below rebuilds from the payloads.
+        let batched = engine.execute(
+            "fp32_dot_batch",
+            vec![
+                Tensor::F32(flat_x, vec![b, n]),
+                Tensor::F32(flat_y, vec![b, n]),
+            ],
+        );
+        match batched.and_then(|out| out.into_f32()) {
+            Ok(v) if v.len() == b => {
+                return v.into_iter().map(|s| Ok(vec![s as f64])).collect()
+            }
+            // Fall through to per-job graphs (real PJRT manifests only
+            // carry the frozen per-job shapes).
+            _ => {}
+        }
+    }
+    jobs.iter()
+        .map(|job| {
+            let (x, y) = match &job.payload {
+                Payload::Dot { x, y } => (x, y),
+                _ => return payload_error(),
+            };
+            let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+            let yf: Vec<f32> = y.iter().map(|&v| v as f32).collect();
+            let out = engine
+                .execute(
+                    "fp32_dot",
+                    vec![Tensor::F32(xf, vec![n]), Tensor::F32(yf, vec![n])],
+                )?
+                .into_f32()?;
+            Ok(vec![out[0] as f64])
+        })
+        .collect()
+}
+
+/// Hybrid matmul: the `workloads` planar fast-path hook per job (each job
+/// already parallelizes across row blocks), or the scalar reference.
+fn exec_matmul_hybrid(ctx: &HrfnaContext, mode: ExecMode, job: &Job) -> Result<Vec<f64>> {
+    let (a, b, dim) = match &job.payload {
+        Payload::Matmul { a, b, dim } => (a, b, *dim),
+        _ => return payload_error(),
+    };
+    match mode {
+        ExecMode::Planar => Ok(crate::workloads::matmul::matmul::<Hrfna>(
+            a, b, dim, dim, dim, ctx,
+        )),
+        ExecMode::Scalar => {
+            let ea: Vec<Hrfna> = a.iter().map(|&v| Hrfna::encode(v, ctx)).collect();
+            let eb: Vec<Hrfna> = b.iter().map(|&v| Hrfna::encode(v, ctx)).collect();
+            let mut out = Vec::with_capacity(dim * dim);
+            for i in 0..dim {
+                for j in 0..dim {
+                    let mut acc = Hrfna::zero(ctx, 0);
+                    for p in 0..dim {
+                        acc.mac_assign(&ea[i * dim + p], &eb[p * dim + j], ctx);
+                    }
+                    out.push(acc.decode(ctx));
+                }
+            }
+            Ok(out)
+        }
+    }
+}
+
+fn exec_matmul_f32(engine: &EngineHandle, job: &Job) -> Result<Vec<f64>> {
+    let (a, b, dim) = match &job.payload {
+        Payload::Matmul { a, b, dim } => (a, b, *dim),
+        _ => return payload_error(),
+    };
+    let af: Vec<f32> = a.iter().map(|&v| v as f32).collect();
+    let bf: Vec<f32> = b.iter().map(|&v| v as f32).collect();
+    let out = engine
+        .execute(
+            "fp32_matmul",
+            vec![
+                Tensor::F32(af, vec![dim, dim]),
+                Tensor::F32(bf, vec![dim, dim]),
+            ],
+        )?
+        .into_f32()?;
+    Ok(out.into_iter().map(|v| v as f64).collect())
+}
+
+/// Planar RK4: jobs sharing (mu, dt, steps) integrate lock-step as one
+/// planar batch; only final states are decoded (bulk CRT of requested
+/// outputs). Heterogeneous batches degrade gracefully into sub-groups.
+fn exec_rk4_hybrid_planar(ctx: &HrfnaContext, jobs: &[Job]) -> Vec<Result<Vec<f64>>> {
+    let mut params: Vec<(u64, u64, u64)> = Vec::with_capacity(jobs.len());
+    for job in jobs {
+        match &job.payload {
+            Payload::Rk4 { mu, dt, steps, .. } => {
+                params.push((mu.to_bits(), dt.to_bits(), *steps));
+            }
+            _ => return jobs.iter().map(|_| payload_error()).collect(),
+        }
+    }
+    let mut out: Vec<Option<Result<Vec<f64>>>> = (0..jobs.len()).map(|_| None).collect();
+    let mut done = vec![false; jobs.len()];
+    for g in 0..jobs.len() {
+        if done[g] {
+            continue;
+        }
+        // Gather the group sharing job g's parameters.
+        let group: Vec<usize> = (g..jobs.len())
+            .filter(|&j| !done[j] && params[j] == params[g])
+            .collect();
+        let (mu, dt, steps) = match &jobs[g].payload {
+            Payload::Rk4 { mu, dt, steps, .. } => (*mu, *dt, *steps),
+            _ => unreachable!("checked above"),
+        };
+        let mut y0s = Vec::with_capacity(group.len());
+        for &j in &group {
+            if let Payload::Rk4 { y0, .. } = &jobs[j].payload {
+                y0s.push(y0.clone());
+            }
+            done[j] = true;
+        }
+        let finals =
+            rk4_final_states_batch(&Ode::VanDerPol { mu }, &y0s, dt, steps, ctx);
+        for (&j, state) in group.iter().zip(finals) {
+            out[j] = Some(Ok(state));
+        }
+    }
+    out.into_iter()
+        .map(|r| r.unwrap_or_else(payload_error))
+        .collect()
+}
+
+fn exec_rk4_hybrid_scalar(ctx: &HrfnaContext, job: &Job) -> Result<Vec<f64>> {
+    let (y0, mu, dt, steps) = match &job.payload {
+        Payload::Rk4 { y0, mu, dt, steps } => (y0, *mu, *dt, *steps),
+        _ => return payload_error(),
+    };
+    Ok(rk4_final_state::<Hrfna>(
+        &Ode::VanDerPol { mu },
+        y0,
+        dt,
+        steps,
+        ctx,
+    ))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prng::Rng;
+    use crate::workloads::generators::Dist;
 
     fn ctx() -> HrfnaContext {
         HrfnaContext::paper_default()
@@ -128,7 +478,7 @@ mod tests {
 
     #[test]
     fn software_dot_through_residue_math_matches() {
-        // Emulate exactly what the PJRT kernel does (channelwise modular
+        // Emulate exactly what the engine kernel does (channelwise modular
         // MAC) and check the decoded dot product against f64.
         let c = ctx();
         let xs = [1.5, -2.0, 3.0, 0.25];
@@ -162,5 +512,67 @@ mod tests {
         assert!((vals[0] - 7.0).abs() < 1e-6);
         assert!((vals[1] + 3.0).abs() < 1e-6);
         assert_eq!(enc.residues.len(), k * 2);
+    }
+
+    #[test]
+    fn batch_encode_matches_per_job_encode_block() {
+        // The one-pass batch encode must stage exactly what per-job
+        // encode_block stages: same exponents, same residues per window.
+        let c = ctx();
+        let mut rng = Rng::new(5);
+        let n = 64;
+        let jobs: Vec<Vec<f64>> = (0..5)
+            .map(|i| {
+                if i == 3 {
+                    vec![0.0; n] // all-zero job in the middle of the batch
+                } else {
+                    Dist::high_dynamic_range().sample_vec(&mut rng, n)
+                }
+            })
+            .collect();
+        let slices: Vec<&[f64]> = jobs.iter().map(|v| v.as_slice()).collect();
+        let batch = encode_dot_batch(&slices, n, &c);
+        let k = c.k();
+        for (b, job) in jobs.iter().enumerate() {
+            let single = encode_block(job, &c);
+            assert_eq!(batch.f[b], single.f, "job {b} exponent");
+            for ch in 0..k {
+                let lane = &batch.plane.lane(ch)[b * n..(b + 1) * n];
+                for j in 0..n {
+                    assert_eq!(
+                        lane[j] as i64,
+                        single.residues[ch * n + j],
+                        "job {b} ch {ch} elem {j}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn planar_dot_results_match_f64() {
+        let c = ctx();
+        let mut rng = Rng::new(11);
+        let n = 512;
+        let xs: Vec<Vec<f64>> = (0..4)
+            .map(|_| Dist::moderate().sample_vec(&mut rng, n))
+            .collect();
+        let ys: Vec<Vec<f64>> = (0..4)
+            .map(|_| Dist::moderate().sample_vec(&mut rng, n))
+            .collect();
+        let sx: Vec<&[f64]> = xs.iter().map(|v| v.as_slice()).collect();
+        let sy: Vec<&[f64]> = ys.iter().map(|v| v.as_slice()).collect();
+        let ex = encode_dot_batch(&sx, n, &c);
+        let ey = encode_dot_batch(&sy, n, &c);
+        let got = planar_dot_results(&ex, &ey, &c);
+        for b in 0..4 {
+            let want: f64 = xs[b].iter().zip(&ys[b]).map(|(a, v)| a * v).sum();
+            let scale: f64 = xs[b].iter().zip(&ys[b]).map(|(a, v)| (a * v).abs()).sum();
+            assert!(
+                (got[b] - want).abs() < 1e-7 * scale + 1e-300,
+                "job {b}: got={} want={want}",
+                got[b]
+            );
+        }
     }
 }

@@ -1,26 +1,75 @@
-//! Serving metrics: per-kind latency histograms, counters and throughput.
+//! Serving metrics: per-lane latency histograms (p50/p95/p99), queue
+//! depth, worker occupancy, steal/reject counters and throughput — all
+//! lock-free (relaxed atomics; these are metrics, not synchronization).
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::time::Instant;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::time::{Duration, Instant};
 
 use super::request::JobKind;
 use crate::util::table::Table;
 
-/// Log2-µs latency histogram: bucket i covers [2^i, 2^{i+1}) µs.
-const BUCKETS: usize = 24;
+/// Log-linear latency histogram: `SUB` sub-buckets per power-of-two octave
+/// of microseconds — octave `o`, sub `s` covers
+/// `[2^o·(1 + s/SUB), 2^o·(1 + (s+1)/SUB))` µs. Four sub-buckets keep the
+/// worst-case percentile quantization error below ~12%, against ~50% for
+/// the plain log2 histogram this replaces.
+const SUB: usize = 4;
+const OCTAVES: usize = 26; // up to 2^26 µs ≈ 67 s
+const BUCKETS: usize = SUB * OCTAVES;
 
-#[derive(Default)]
+fn bucket_of(latency_us: f64) -> usize {
+    let v = latency_us.max(1.0);
+    let oct = v.log2().floor() as usize;
+    if oct >= OCTAVES {
+        return BUCKETS - 1;
+    }
+    let frac = v / 2f64.powi(oct as i32) - 1.0; // in [0, 1)
+    let sub = ((frac * SUB as f64) as usize).min(SUB - 1);
+    oct * SUB + sub
+}
+
+/// Midpoint (µs) of histogram bucket `i`.
+fn bucket_mid_us(i: usize) -> f64 {
+    let oct = i / SUB;
+    let sub = i % SUB;
+    2f64.powi(oct as i32) * (1.0 + (sub as f64 + 0.5) / SUB as f64)
+}
+
 struct KindMetrics {
     jobs: AtomicU64,
     macs: AtomicU64,
     batches: AtomicU64,
+    accepted: AtomicU64,
+    rejected: AtomicU64,
+    steals: AtomicU64,
+    /// Wall time workers of this lane spent executing batches (ns).
+    busy_ns: AtomicU64,
+    /// Currently queued jobs (gauge; +1 on accept, −batch on dequeue).
+    depth: AtomicI64,
     latency_sum_us: AtomicU64,
     histogram: [AtomicU64; BUCKETS],
 }
 
-/// Aggregated per-kind serving metrics (lock-free).
+impl Default for KindMetrics {
+    fn default() -> KindMetrics {
+        KindMetrics {
+            jobs: AtomicU64::new(0),
+            macs: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            accepted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+            busy_ns: AtomicU64::new(0),
+            depth: AtomicI64::new(0),
+            latency_sum_us: AtomicU64::new(0),
+            histogram: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+/// Aggregated per-kind serving metrics.
 pub struct Metrics {
-    kinds: [KindMetrics; 4],
+    kinds: [KindMetrics; JobKind::ALL.len()],
     start: Instant,
 }
 
@@ -30,13 +79,14 @@ fn kind_index(kind: JobKind) -> usize {
         JobKind::DotF32 => 1,
         JobKind::MatmulHybrid => 2,
         JobKind::MatmulF32 => 3,
+        JobKind::Rk4Hybrid => 4,
     }
 }
 
 impl Default for Metrics {
     fn default() -> Metrics {
         Metrics {
-            kinds: Default::default(),
+            kinds: std::array::from_fn(|_| KindMetrics::default()),
             start: Instant::now(),
         }
     }
@@ -50,14 +100,36 @@ impl Metrics {
         k.macs.fetch_add(macs, Ordering::Relaxed);
         k.latency_sum_us
             .fetch_add(latency_us.max(0.0) as u64, Ordering::Relaxed);
-        let bucket = (latency_us.max(1.0).log2() as usize).min(BUCKETS - 1);
-        k.histogram[bucket].fetch_add(1, Ordering::Relaxed);
+        k.histogram[bucket_of(latency_us)].fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Record a dispatched batch.
-    pub fn record_batch(&self, kind: JobKind) {
+    /// Record a dispatched batch and the wall time its execution took.
+    pub fn record_batch(&self, kind: JobKind, size: usize, busy: Duration) {
+        let k = &self.kinds[kind_index(kind)];
+        k.batches.fetch_add(1, Ordering::Relaxed);
+        k.busy_ns
+            .fetch_add(busy.as_nanos() as u64, Ordering::Relaxed);
+        k.depth.fetch_sub(size as i64, Ordering::Relaxed);
+    }
+
+    /// Record a job accepted into a lane queue.
+    pub fn record_accepted(&self, kind: JobKind) {
+        let k = &self.kinds[kind_index(kind)];
+        k.accepted.fetch_add(1, Ordering::Relaxed);
+        k.depth.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a rejected submission (admission failure or overload).
+    pub fn record_rejected(&self, kind: JobKind) {
         self.kinds[kind_index(kind)]
-            .batches
+            .rejected
+            .fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a batch stolen from a sibling shard.
+    pub fn record_steal(&self, kind: JobKind) {
+        self.kinds[kind_index(kind)]
+            .steals
             .fetch_add(1, Ordering::Relaxed);
     }
 
@@ -71,6 +143,36 @@ impl Metrics {
         JobKind::ALL.iter().map(|&k| self.jobs(k)).sum()
     }
 
+    /// Jobs accepted into a lane queue.
+    pub fn accepted(&self, kind: JobKind) -> u64 {
+        self.kinds[kind_index(kind)].accepted.load(Ordering::Relaxed)
+    }
+
+    /// Total accepted across kinds.
+    pub fn total_accepted(&self) -> u64 {
+        JobKind::ALL.iter().map(|&k| self.accepted(k)).sum()
+    }
+
+    /// Rejected submissions for a kind.
+    pub fn rejected(&self, kind: JobKind) -> u64 {
+        self.kinds[kind_index(kind)].rejected.load(Ordering::Relaxed)
+    }
+
+    /// Total rejected across kinds.
+    pub fn total_rejected(&self) -> u64 {
+        JobKind::ALL.iter().map(|&k| self.rejected(k)).sum()
+    }
+
+    /// Batches stolen across shards for a kind.
+    pub fn steals(&self, kind: JobKind) -> u64 {
+        self.kinds[kind_index(kind)].steals.load(Ordering::Relaxed)
+    }
+
+    /// Currently queued jobs in a lane (gauge; may transiently read ±1).
+    pub fn queue_depth(&self, kind: JobKind) -> i64 {
+        self.kinds[kind_index(kind)].depth.load(Ordering::Relaxed)
+    }
+
     /// Mean latency (µs) for a kind.
     pub fn mean_latency_us(&self, kind: JobKind) -> f64 {
         let k = &self.kinds[kind_index(kind)];
@@ -82,7 +184,7 @@ impl Metrics {
         }
     }
 
-    /// Approximate latency percentile (µs) from the log2 histogram.
+    /// Approximate latency percentile (µs) from the log-linear histogram.
     pub fn latency_percentile_us(&self, kind: JobKind, p: f64) -> f64 {
         let k = &self.kinds[kind_index(kind)];
         let total: u64 = k
@@ -93,16 +195,15 @@ impl Metrics {
         if total == 0 {
             return 0.0;
         }
-        let target = (p / 100.0 * total as f64).ceil() as u64;
+        let target = (p / 100.0 * total as f64).ceil().max(1.0) as u64;
         let mut seen = 0;
         for (i, b) in k.histogram.iter().enumerate() {
             seen += b.load(Ordering::Relaxed);
             if seen >= target {
-                // Bucket midpoint in µs.
-                return 2f64.powi(i as i32) * 1.5;
+                return bucket_mid_us(i);
             }
         }
-        2f64.powi(BUCKETS as i32)
+        bucket_mid_us(BUCKETS - 1)
     }
 
     /// Mean jobs per dispatched batch.
@@ -116,6 +217,17 @@ impl Metrics {
         }
     }
 
+    /// Occupancy in [0, 1]: fraction of aggregate worker wall time spent
+    /// executing batches since startup. `workers` must be the *total*
+    /// worker threads serving this kind (all its bucket lanes share one
+    /// `busy_ns` accumulator — `Coordinator::metrics_table` passes the
+    /// correct count from its lane map).
+    pub fn occupancy(&self, kind: JobKind, workers: usize) -> f64 {
+        let busy = self.kinds[kind_index(kind)].busy_ns.load(Ordering::Relaxed) as f64;
+        let wall = self.start.elapsed().as_nanos().max(1) as f64 * workers.max(1) as f64;
+        (busy / wall).min(1.0)
+    }
+
     /// MAC-equivalents per second since startup, per kind.
     pub fn throughput_mops(&self, kind: JobKind) -> f64 {
         let k = &self.kinds[kind_index(kind)];
@@ -123,29 +235,44 @@ impl Metrics {
         macs / self.start.elapsed().as_micros().max(1) as f64
     }
 
-    /// Render the serving report table.
-    pub fn table(&self) -> Table {
+    /// Render the serving report table; `workers_of(kind)` gives the
+    /// total worker threads serving each kind (occupancy denominator).
+    pub fn table_with(&self, workers_of: &dyn Fn(JobKind) -> usize) -> Table {
         let mut t = Table::new(
             "Serving metrics",
             &[
-                "lane", "jobs", "mean batch", "mean us", "p50 us", "p99 us", "Mops",
+                "lane", "jobs", "rej", "steal", "mean batch", "p50 us", "p95 us", "p99 us",
+                "occ %", "Mops",
             ],
         );
         for &kind in &JobKind::ALL {
-            if self.jobs(kind) == 0 {
+            if self.jobs(kind) == 0 && self.rejected(kind) == 0 {
                 continue;
             }
             t.rowv(&[
                 kind.label().to_string(),
                 self.jobs(kind).to_string(),
+                self.rejected(kind).to_string(),
+                self.steals(kind).to_string(),
                 format!("{:.1}", self.mean_batch_size(kind)),
-                format!("{:.1}", self.mean_latency_us(kind)),
                 format!("{:.1}", self.latency_percentile_us(kind, 50.0)),
+                format!("{:.1}", self.latency_percentile_us(kind, 95.0)),
                 format!("{:.1}", self.latency_percentile_us(kind, 99.0)),
+                format!("{:.1}", self.occupancy(kind, workers_of(kind)) * 100.0),
                 format!("{:.2}", self.throughput_mops(kind)),
             ]);
         }
         t
+    }
+
+    /// Render the serving report table with a flat per-kind worker count.
+    pub fn table_with_workers(&self, workers: usize) -> Table {
+        self.table_with(&move |_| workers)
+    }
+
+    /// Render the serving report table with the default worker count.
+    pub fn table(&self) -> Table {
+        self.table_with_workers(2)
     }
 }
 
@@ -156,26 +283,64 @@ mod tests {
     #[test]
     fn records_and_reports() {
         let m = Metrics::default();
+        m.record_accepted(JobKind::DotHybrid);
+        m.record_accepted(JobKind::DotHybrid);
+        assert_eq!(m.queue_depth(JobKind::DotHybrid), 2);
         m.record(JobKind::DotHybrid, 10.0, 4096);
         m.record(JobKind::DotHybrid, 1000.0, 4096);
-        m.record_batch(JobKind::DotHybrid);
+        m.record_batch(JobKind::DotHybrid, 2, Duration::from_micros(500));
+        assert_eq!(m.queue_depth(JobKind::DotHybrid), 0);
         assert_eq!(m.jobs(JobKind::DotHybrid), 2);
         assert_eq!(m.total_jobs(), 2);
+        assert_eq!(m.total_accepted(), 2);
         assert!((m.mean_latency_us(JobKind::DotHybrid) - 505.0).abs() < 1.0);
         assert_eq!(m.mean_batch_size(JobKind::DotHybrid), 2.0);
         assert!(m.throughput_mops(JobKind::DotHybrid) > 0.0);
+        assert!(m.occupancy(JobKind::DotHybrid, 2) > 0.0);
     }
 
     #[test]
-    fn percentiles_monotonic() {
+    fn rejects_and_steals_counted() {
+        let m = Metrics::default();
+        m.record_rejected(JobKind::DotF32);
+        m.record_rejected(JobKind::DotF32);
+        m.record_steal(JobKind::DotF32);
+        assert_eq!(m.rejected(JobKind::DotF32), 2);
+        assert_eq!(m.total_rejected(), 2);
+        assert_eq!(m.steals(JobKind::DotF32), 1);
+    }
+
+    #[test]
+    fn percentiles_monotonic_and_tight() {
         let m = Metrics::default();
         for i in 0..1000 {
             m.record(JobKind::DotF32, (i % 100) as f64 + 1.0, 1);
         }
         let p50 = m.latency_percentile_us(JobKind::DotF32, 50.0);
+        let p95 = m.latency_percentile_us(JobKind::DotF32, 95.0);
         let p99 = m.latency_percentile_us(JobKind::DotF32, 99.0);
-        assert!(p50 <= p99);
+        assert!(p50 <= p95 && p95 <= p99);
         assert!(p50 > 0.0);
+        // Log-linear buckets: the true p50 of this stream is ~50 µs; the
+        // estimate must land within one sub-bucket (~±12%).
+        assert!((25.0..=75.0).contains(&p50), "p50={p50}");
+        assert!(p99 >= 80.0, "p99={p99}");
+    }
+
+    #[test]
+    fn bucket_layout_is_monotonic() {
+        let mut last = 0;
+        for v in [1.0, 1.3, 1.8, 2.0, 3.0, 10.0, 1e3, 1e6, 1e9, 1e12] {
+            let b = bucket_of(v);
+            assert!(b >= last, "bucket_of({v}) went backwards");
+            assert!(b < BUCKETS);
+            last = b;
+        }
+        // Midpoint of a value's own bucket brackets the value.
+        for v in [1.5, 7.0, 333.0, 80_000.0] {
+            let mid = bucket_mid_us(bucket_of(v));
+            assert!(mid / v < 1.3 && v / mid < 1.3, "v={v} mid={mid}");
+        }
     }
 
     #[test]

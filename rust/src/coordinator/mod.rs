@@ -1,18 +1,23 @@
 //! Layer-3 coordinator: the serving system around the HRFNA runtime.
 //!
 //! The paper's contribution is the numeric format (L1/L2), so L3 is the
-//! system a deployment needs around it: typed requests, a router that
-//! assigns jobs to format lanes, a fixed-shape batcher (AOT executables
-//! have frozen shapes — requests are bucketed and padded into them),
-//! worker threads driving the PJRT engine, block-exponent encode/decode
-//! bridging reals ↔ residue tensors, and metrics.
+//! system a deployment needs around it: typed requests, admission control
+//! that routes jobs onto (kind, shape-bucket) lanes, sharded bounded
+//! batch queues with work stealing and explicit backpressure, worker
+//! threads that execute whole batches on the planar residue lanes
+//! (one-pass block encode → lane kernels → bulk CRT of requested
+//! outputs), histogram metrics, load generators and a drain-reporting
+//! shutdown.
 
 pub mod request;
 pub mod hybrid_exec;
 pub mod batcher;
 pub mod router;
 pub mod metrics;
+pub mod serve_load;
 pub mod server;
 
-pub use request::{Job, JobKind, JobResult, Payload};
-pub use server::{Coordinator, CoordinatorConfig};
+pub use hybrid_exec::ExecMode;
+pub use request::{Job, JobKind, JobResult, Payload, SubmitError};
+pub use serve_load::{closed_loop, open_loop, LoadReport};
+pub use server::{Coordinator, CoordinatorConfig, DrainReport};

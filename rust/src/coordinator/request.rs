@@ -1,27 +1,32 @@
-//! Request/response types for the coordinator.
+//! Request/response types for the coordinator, plus the typed submission
+//! errors that carry the serving layer's backpressure contract.
 
 use std::time::Instant;
+use thiserror::Error;
 
 /// Which backend lane a job runs on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum JobKind {
-    /// Dot product in HRFNA through the residue-domain PJRT kernel.
+    /// Dot product on the planar HRFNA residue lanes.
     DotHybrid,
-    /// Dot product in FP32 through the baseline PJRT graph.
+    /// Dot product in FP32 through the baseline engine graph.
     DotF32,
     /// Dense matmul in HRFNA.
     MatmulHybrid,
     /// Dense matmul in FP32.
     MatmulF32,
+    /// Batched RK4 integration (Van der Pol) in HRFNA.
+    Rk4Hybrid,
 }
 
 impl JobKind {
     /// All kinds (for metrics tables).
-    pub const ALL: [JobKind; 4] = [
+    pub const ALL: [JobKind; 5] = [
         JobKind::DotHybrid,
         JobKind::DotF32,
         JobKind::MatmulHybrid,
         JobKind::MatmulF32,
+        JobKind::Rk4Hybrid,
     ];
 
     /// Table label.
@@ -31,6 +36,7 @@ impl JobKind {
             JobKind::DotF32 => "dot/fp32",
             JobKind::MatmulHybrid => "matmul/hrfna",
             JobKind::MatmulF32 => "matmul/fp32",
+            JobKind::Rk4Hybrid => "rk4/hrfna",
         }
     }
 }
@@ -38,20 +44,46 @@ impl JobKind {
 /// Job payload (shapes are validated against the AOT bucket at submit).
 #[derive(Clone, Debug)]
 pub enum Payload {
-    /// Dot product of two equal-length vectors (≤ the AOT bucket size).
+    /// Dot product of two equal-length vectors (≤ the largest bucket).
     Dot { x: Vec<f64>, y: Vec<f64> },
     /// Square matmul at the AOT dimension.
     Matmul { a: Vec<f64>, b: Vec<f64>, dim: usize },
+    /// RK4-integrate one Van der Pol instance for `steps` steps of `dt`;
+    /// the result is the final state. Jobs sharing (mu, dt, steps) are
+    /// integrated lock-step as one planar batch.
+    Rk4 { y0: Vec<f64>, mu: f64, dt: f64, steps: u64 },
 }
 
 impl Payload {
-    /// Element count (for throughput metrics).
+    /// MAC-equivalent count (for throughput metrics). RK4 charges the
+    /// ~30 format ops one Van der Pol step costs per instance.
     pub fn macs(&self) -> u64 {
         match self {
             Payload::Dot { x, .. } => x.len() as u64,
             Payload::Matmul { dim, .. } => (dim * dim * dim) as u64,
+            Payload::Rk4 { steps, .. } => steps * 30,
         }
     }
+}
+
+/// Typed submission failure: the coordinator's admission and backpressure
+/// contract. `Overloaded` is the load-shedding signal — callers retry with
+/// backoff or divert; the queue never grows without bound.
+#[derive(Debug, Error)]
+pub enum SubmitError {
+    /// The payload failed shape/value admission for its lane.
+    #[error("admission rejected: {0}")]
+    Rejected(String),
+    /// Every shard of the lane's bounded queue is at capacity.
+    #[error("lane {kind:?} overloaded: {queued} jobs queued at capacity {capacity}")]
+    Overloaded {
+        kind: JobKind,
+        queued: usize,
+        capacity: usize,
+    },
+    /// The coordinator is draining; no new work is accepted.
+    #[error("coordinator is shutting down")]
+    ShuttingDown,
 }
 
 /// A queued job.
@@ -60,6 +92,8 @@ pub struct Job {
     pub id: u64,
     pub kind: JobKind,
     pub payload: Payload,
+    /// Shape bucket the payload was admitted into (queue routing key).
+    pub bucket: usize,
     pub submitted: Instant,
     /// Completion channel.
     pub reply: std::sync::mpsc::Sender<JobResult>,
@@ -70,7 +104,7 @@ pub struct Job {
 pub struct JobResult {
     pub id: u64,
     pub kind: JobKind,
-    /// Scalar for dot, row-major matrix for matmul.
+    /// Scalar for dot, row-major matrix for matmul, final state for RK4.
     pub values: Vec<f64>,
     /// End-to-end latency in microseconds.
     pub latency_us: f64,
@@ -88,6 +122,8 @@ mod tests {
         assert_eq!(d.macs(), 7);
         let m = Payload::Matmul { a: vec![], b: vec![], dim: 4 };
         assert_eq!(m.macs(), 64);
+        let r = Payload::Rk4 { y0: vec![2.0, 0.0], mu: 1.0, dt: 0.01, steps: 10 };
+        assert_eq!(r.macs(), 300);
     }
 
     #[test]
@@ -95,6 +131,14 @@ mod tests {
         let mut labels: Vec<_> = JobKind::ALL.iter().map(|k| k.label()).collect();
         labels.sort();
         labels.dedup();
-        assert_eq!(labels.len(), 4);
+        assert_eq!(labels.len(), JobKind::ALL.len());
+    }
+
+    #[test]
+    fn submit_error_messages_are_typed() {
+        let e = SubmitError::Overloaded { kind: JobKind::DotHybrid, queued: 9, capacity: 8 };
+        assert!(e.to_string().contains("overloaded"));
+        assert!(matches!(e, SubmitError::Overloaded { queued: 9, .. }));
+        assert!(SubmitError::ShuttingDown.to_string().contains("shutting down"));
     }
 }

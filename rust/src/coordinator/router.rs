@@ -1,62 +1,137 @@
 //! Admission control + lane routing: validates each payload against the
-//! AOT shape buckets, pads dot vectors up to the bucket length, and maps
-//! job kinds onto batch queues (one queue per kind; workers pull
-//! concurrently, giving work-conserving scheduling).
+//! shape buckets, pads dot vectors up to the smallest fitting bucket, and
+//! maps jobs onto (kind, bucket) queues — one sharded queue per lane,
+//! workers pull and steal concurrently, giving work-conserving scheduling.
 
-use anyhow::{bail, Result};
+use super::request::{JobKind, Payload, SubmitError};
 
-use super::request::{JobKind, Payload};
-
-/// AOT shape buckets (keep in sync with python/compile/model.py).
-#[derive(Clone, Copy, Debug)]
+/// Shape buckets. Hybrid dot jobs route to the smallest fitting bucket
+/// (each bucket is its own planar lane); the FP32 dot lane is pinned to
+/// the last (largest) bucket, which is the AOT graph shape (keep in sync
+/// with python/compile/model.py).
+#[derive(Clone, Debug)]
 pub struct ShapeBuckets {
-    pub dot_n: usize,
+    /// Sorted ascending dot-length buckets.
+    pub dot: Vec<usize>,
     pub matmul_dim: usize,
+    /// Admission cap on RK4 steps per job.
+    pub rk4_max_steps: u64,
 }
 
 impl Default for ShapeBuckets {
     fn default() -> ShapeBuckets {
         ShapeBuckets {
-            dot_n: 4096,
+            dot: vec![512, 4096],
             matmul_dim: 64,
+            rk4_max_steps: 4096,
         }
     }
 }
 
+/// RK4 jobs all share one lane; the bucket key is the state dimension.
+pub const RK4_BUCKET: usize = 2;
+
+impl ShapeBuckets {
+    /// The AOT engine's frozen dot length (largest bucket).
+    pub fn engine_dot_n(&self) -> usize {
+        *self.dot.last().expect("ShapeBuckets.dot must be non-empty")
+    }
+
+    /// Smallest bucket that fits a dot operand of length `len`.
+    pub fn dot_bucket(&self, len: usize) -> Option<usize> {
+        self.dot.iter().copied().find(|&b| b >= len)
+    }
+
+    /// Every (kind, bucket) lane this bucket set serves.
+    pub fn lanes(&self) -> Vec<(JobKind, usize)> {
+        let mut lanes: Vec<(JobKind, usize)> =
+            self.dot.iter().map(|&n| (JobKind::DotHybrid, n)).collect();
+        lanes.push((JobKind::DotF32, self.engine_dot_n()));
+        lanes.push((JobKind::MatmulHybrid, self.matmul_dim));
+        lanes.push((JobKind::MatmulF32, self.matmul_dim));
+        lanes.push((JobKind::Rk4Hybrid, RK4_BUCKET));
+        lanes
+    }
+}
+
 /// Validate and normalize a payload for its lane; pads dot vectors with
-/// zeros to the bucket size (zero products do not affect the sum).
-pub fn admit(payload: &mut Payload, kind: JobKind, buckets: &ShapeBuckets) -> Result<()> {
+/// zeros to the selected bucket (zero products do not affect the sum).
+/// Returns the bucket key the job routes to.
+pub fn admit(
+    payload: &mut Payload,
+    kind: JobKind,
+    buckets: &ShapeBuckets,
+) -> Result<usize, SubmitError> {
+    let reject = |msg: String| Err(SubmitError::Rejected(msg));
     match (payload, kind) {
         (Payload::Dot { x, y }, JobKind::DotHybrid | JobKind::DotF32) => {
             if x.len() != y.len() {
-                bail!("dot operands must have equal length");
+                return reject("dot operands must have equal length".into());
             }
             if x.is_empty() {
-                bail!("empty dot product");
-            }
-            if x.len() > buckets.dot_n {
-                bail!("dot length {} exceeds bucket {}", x.len(), buckets.dot_n);
+                return reject("empty dot product".into());
             }
             if !x.iter().chain(y.iter()).all(|v| v.is_finite()) {
-                bail!("non-finite operand");
+                return reject("non-finite operand".into());
             }
-            x.resize(buckets.dot_n, 0.0);
-            y.resize(buckets.dot_n, 0.0);
-            Ok(())
+            // The FP32 lane runs the frozen AOT graph; hybrid lanes pick
+            // the smallest planar bucket that fits.
+            let bucket = if kind == JobKind::DotF32 {
+                if x.len() > buckets.engine_dot_n() {
+                    return reject(format!(
+                        "dot length {} exceeds bucket {}",
+                        x.len(),
+                        buckets.engine_dot_n()
+                    ));
+                }
+                buckets.engine_dot_n()
+            } else {
+                match buckets.dot_bucket(x.len()) {
+                    Some(b) => b,
+                    None => {
+                        return reject(format!(
+                            "dot length {} exceeds bucket {}",
+                            x.len(),
+                            buckets.engine_dot_n()
+                        ))
+                    }
+                }
+            };
+            x.resize(bucket, 0.0);
+            y.resize(bucket, 0.0);
+            Ok(bucket)
         }
         (Payload::Matmul { a, b, dim }, JobKind::MatmulHybrid | JobKind::MatmulF32) => {
             if *dim != buckets.matmul_dim {
-                bail!("matmul dim {dim} != bucket {}", buckets.matmul_dim);
+                return reject(format!("matmul dim {dim} != bucket {}", buckets.matmul_dim));
             }
             if a.len() != dim.pow(2) || b.len() != dim.pow(2) {
-                bail!("matmul operand size mismatch");
+                return reject("matmul operand size mismatch".into());
             }
             if !a.iter().chain(b.iter()).all(|v| v.is_finite()) {
-                bail!("non-finite operand");
+                return reject("non-finite operand".into());
             }
-            Ok(())
+            Ok(buckets.matmul_dim)
         }
-        _ => bail!("payload does not match lane {kind:?}"),
+        (Payload::Rk4 { y0, mu, dt, steps }, JobKind::Rk4Hybrid) => {
+            if y0.len() != RK4_BUCKET {
+                return reject(format!("rk4 state must have dim {RK4_BUCKET}"));
+            }
+            if !y0.iter().all(|v| v.is_finite()) || !mu.is_finite() || !dt.is_finite() {
+                return reject("non-finite rk4 parameter".into());
+            }
+            if *dt <= 0.0 {
+                return reject("rk4 dt must be positive".into());
+            }
+            if *steps == 0 || *steps > buckets.rk4_max_steps {
+                return reject(format!(
+                    "rk4 steps {steps} outside (0, {}]",
+                    buckets.rk4_max_steps
+                ));
+            }
+            Ok(RK4_BUCKET)
+        }
+        _ => reject(format!("payload does not match lane {kind:?}")),
     }
 }
 
@@ -65,19 +140,36 @@ mod tests {
     use super::*;
 
     #[test]
-    fn dot_padding() {
+    fn dot_padding_to_smallest_bucket() {
         let b = ShapeBuckets::default();
         let mut p = Payload::Dot {
             x: vec![1.0; 100],
             y: vec![2.0; 100],
         };
-        admit(&mut p, JobKind::DotHybrid, &b).unwrap();
+        let bucket = admit(&mut p, JobKind::DotHybrid, &b).unwrap();
+        assert_eq!(bucket, 512);
         if let Payload::Dot { x, y } = &p {
-            assert_eq!(x.len(), 4096);
-            assert_eq!(y.len(), 4096);
+            assert_eq!(x.len(), 512);
+            assert_eq!(y.len(), 512);
             assert_eq!(x[99], 1.0);
             assert_eq!(x[100], 0.0);
-            assert_eq!(y[4095], 0.0);
+            assert_eq!(y[511], 0.0);
+        } else {
+            panic!()
+        }
+    }
+
+    #[test]
+    fn fp32_dot_pins_to_engine_bucket() {
+        let b = ShapeBuckets::default();
+        let mut p = Payload::Dot {
+            x: vec![1.0; 100],
+            y: vec![2.0; 100],
+        };
+        let bucket = admit(&mut p, JobKind::DotF32, &b).unwrap();
+        assert_eq!(bucket, 4096);
+        if let Payload::Dot { x, .. } = &p {
+            assert_eq!(x.len(), 4096);
         } else {
             panic!()
         }
@@ -91,6 +183,7 @@ mod tests {
             y: vec![0.0; 5000],
         };
         assert!(admit(&mut p, JobKind::DotF32, &b).is_err());
+        assert!(admit(&mut p, JobKind::DotHybrid, &b).is_err());
         let mut p = Payload::Dot {
             x: vec![0.0; 10],
             y: vec![0.0; 11],
@@ -100,7 +193,10 @@ mod tests {
             x: vec![f64::NAN; 4],
             y: vec![0.0; 4],
         };
-        assert!(admit(&mut p, JobKind::DotF32, &b).is_err());
+        assert!(matches!(
+            admit(&mut p, JobKind::DotF32, &b),
+            Err(SubmitError::Rejected(_))
+        ));
     }
 
     #[test]
@@ -111,13 +207,33 @@ mod tests {
             b: vec![0.0; 64 * 64],
             dim: 64,
         };
-        admit(&mut p, JobKind::MatmulHybrid, &b).unwrap();
+        assert_eq!(admit(&mut p, JobKind::MatmulHybrid, &b).unwrap(), 64);
         let mut p = Payload::Matmul {
             a: vec![0.0; 9],
             b: vec![0.0; 9],
             dim: 3,
         };
         assert!(admit(&mut p, JobKind::MatmulHybrid, &b).is_err());
+    }
+
+    #[test]
+    fn rk4_admission_bounds() {
+        let b = ShapeBuckets::default();
+        let mut p = Payload::Rk4 { y0: vec![2.0, 0.0], mu: 1.0, dt: 0.01, steps: 100 };
+        assert_eq!(admit(&mut p, JobKind::Rk4Hybrid, &b).unwrap(), RK4_BUCKET);
+        let mut p = Payload::Rk4 { y0: vec![2.0, 0.0], mu: 1.0, dt: 0.01, steps: 0 };
+        assert!(admit(&mut p, JobKind::Rk4Hybrid, &b).is_err());
+        let mut p = Payload::Rk4 { y0: vec![2.0, 0.0], mu: 1.0, dt: -1.0, steps: 10 };
+        assert!(admit(&mut p, JobKind::Rk4Hybrid, &b).is_err());
+        let mut p = Payload::Rk4 { y0: vec![2.0], mu: 1.0, dt: 0.01, steps: 10 };
+        assert!(admit(&mut p, JobKind::Rk4Hybrid, &b).is_err());
+        let mut p = Payload::Rk4 {
+            y0: vec![2.0, 0.0],
+            mu: 1.0,
+            dt: 0.01,
+            steps: b.rk4_max_steps + 1,
+        };
+        assert!(admit(&mut p, JobKind::Rk4Hybrid, &b).is_err());
     }
 
     #[test]
@@ -128,5 +244,16 @@ mod tests {
             y: vec![1.0],
         };
         assert!(admit(&mut p, JobKind::MatmulF32, &b).is_err());
+        assert!(admit(&mut p, JobKind::Rk4Hybrid, &b).is_err());
+    }
+
+    #[test]
+    fn lane_enumeration_covers_all_kinds() {
+        let b = ShapeBuckets::default();
+        let lanes = b.lanes();
+        assert_eq!(lanes.len(), b.dot.len() + 4);
+        for kind in JobKind::ALL {
+            assert!(lanes.iter().any(|&(k, _)| k == kind), "{kind:?} missing");
+        }
     }
 }

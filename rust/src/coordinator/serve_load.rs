@@ -1,0 +1,197 @@
+//! Serving load generators: closed-loop (a fixed fleet of clients, each
+//! submitting a burst and waiting for it) and open-loop (submissions
+//! paced at a fixed offered rate regardless of completions — the
+//! arrival-process model that actually exposes backpressure). Both return
+//! a [`LoadReport`]; `bench_serve` and the saturation tests drive the
+//! coordinator exclusively through these.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use super::request::{JobKind, JobResult, Payload};
+use super::server::Coordinator;
+use crate::util::stats::Summary;
+
+/// Outcome of one generated load run.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    /// Jobs the generator attempted to submit.
+    pub offered: usize,
+    /// Jobs accepted into queues.
+    pub accepted: usize,
+    /// Submissions shed with `Overloaded` (the backpressure signal).
+    pub rejected: usize,
+    /// Results received.
+    pub completed: usize,
+    /// Wall time of the whole run.
+    pub wall: Duration,
+    /// Completed jobs per second of wall time.
+    pub jobs_per_s: f64,
+    /// End-to-end latency summary (µs) over completed jobs.
+    pub latency_us: Option<Summary>,
+}
+
+impl LoadReport {
+    fn from_parts(
+        offered: usize,
+        accepted: usize,
+        rejected: usize,
+        latencies: Vec<f64>,
+        wall: Duration,
+    ) -> LoadReport {
+        let completed = latencies.len();
+        LoadReport {
+            offered,
+            accepted,
+            rejected,
+            completed,
+            wall,
+            jobs_per_s: completed as f64 / wall.as_secs_f64().max(1e-9),
+            latency_us: if latencies.is_empty() {
+                None
+            } else {
+                Some(Summary::of(&latencies))
+            },
+        }
+    }
+}
+
+/// How long a generator waits for an accepted job's result before giving
+/// the run up as wedged (deadlocks surface as missing completions, not as
+/// a hung bench).
+const RESULT_TIMEOUT: Duration = Duration::from_secs(120);
+
+fn drain(
+    pending: Vec<mpsc::Receiver<JobResult>>,
+    latencies: &mut Vec<f64>,
+) {
+    for rx in pending {
+        if let Ok(r) = rx.recv_timeout(RESULT_TIMEOUT) {
+            latencies.push(r.latency_us);
+        }
+    }
+}
+
+/// Closed-loop load: `clients` threads each submit `jobs_per_client`
+/// jobs in bursts of `burst` (submit the burst, then wait for all of it —
+/// bursts keep the batcher fed so batches of ≥ `burst` actually form).
+/// `make(client, i)` builds the i-th job of a client.
+pub fn closed_loop(
+    coord: &Coordinator,
+    clients: usize,
+    jobs_per_client: usize,
+    burst: usize,
+    make: &(dyn Fn(u64, usize) -> (JobKind, Payload) + Sync),
+) -> LoadReport {
+    let burst = burst.max(1);
+    let t0 = Instant::now();
+    let results: Vec<(usize, usize, Vec<f64>)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                scope.spawn(move || {
+                    let mut accepted = 0;
+                    let mut rejected = 0;
+                    let mut latencies = Vec::with_capacity(jobs_per_client);
+                    let mut i = 0;
+                    while i < jobs_per_client {
+                        let mut pending = Vec::with_capacity(burst);
+                        for _ in 0..burst.min(jobs_per_client - i) {
+                            let (kind, payload) = make(c as u64, i);
+                            i += 1;
+                            match coord.submit(kind, payload) {
+                                Ok(rx) => {
+                                    accepted += 1;
+                                    pending.push(rx);
+                                }
+                                // Overloaded (and any admission failure)
+                                // counts as shed load.
+                                Err(_) => rejected += 1,
+                            }
+                        }
+                        drain(pending, &mut latencies);
+                    }
+                    (accepted, rejected, latencies)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let wall = t0.elapsed();
+    let mut accepted = 0;
+    let mut rejected = 0;
+    let mut latencies = Vec::new();
+    for (a, r, l) in results {
+        accepted += a;
+        rejected += r;
+        latencies.extend(l);
+    }
+    LoadReport::from_parts(clients * jobs_per_client, accepted, rejected, latencies, wall)
+}
+
+/// Open-loop load: submit `total` jobs paced at `rate_per_s` regardless
+/// of completions (results are collected afterwards). When the offered
+/// rate exceeds lane capacity the bounded queues fill and submissions
+/// come back `Overloaded` — the report's `rejected` count is the
+/// load-shedding measurement.
+pub fn open_loop(
+    coord: &Coordinator,
+    total: usize,
+    rate_per_s: f64,
+    make: &(dyn Fn(u64, usize) -> (JobKind, Payload) + Sync),
+) -> LoadReport {
+    assert!(rate_per_s > 0.0, "open_loop needs a positive rate");
+    let interval = Duration::from_secs_f64(1.0 / rate_per_s);
+    let t0 = Instant::now();
+    let mut accepted = 0;
+    let mut rejected = 0;
+    let mut pending = Vec::with_capacity(total);
+    for i in 0..total {
+        let due = t0 + interval.mul_f64(i as f64);
+        if let Some(sleep) = due.checked_duration_since(Instant::now()) {
+            std::thread::sleep(sleep);
+        }
+        let (kind, payload) = make(0, i);
+        match coord.submit(kind, payload) {
+            Ok(rx) => {
+                accepted += 1;
+                pending.push(rx);
+            }
+            Err(_) => rejected += 1,
+        }
+    }
+    let mut latencies = Vec::with_capacity(accepted);
+    drain(pending, &mut latencies);
+    let wall = t0.elapsed();
+    LoadReport::from_parts(total, accepted, rejected, latencies, wall)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_rates_are_consistent() {
+        let r = LoadReport::from_parts(
+            10,
+            8,
+            2,
+            vec![100.0, 200.0, 300.0, 400.0],
+            Duration::from_secs(2),
+        );
+        assert_eq!(r.offered, 10);
+        assert_eq!(r.accepted, 8);
+        assert_eq!(r.rejected, 2);
+        assert_eq!(r.completed, 4);
+        assert!((r.jobs_per_s - 2.0).abs() < 1e-9);
+        let lat = r.latency_us.unwrap();
+        assert_eq!(lat.n, 4);
+        assert!((lat.mean - 250.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_run_has_no_latency_summary() {
+        let r = LoadReport::from_parts(0, 0, 0, Vec::new(), Duration::from_millis(1));
+        assert!(r.latency_us.is_none());
+        assert_eq!(r.completed, 0);
+    }
+}

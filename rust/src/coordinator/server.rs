@@ -1,5 +1,7 @@
-//! The coordinator server: worker threads pulling batches from per-lane
-//! queues and driving the PJRT engine; Python never runs here.
+//! The coordinator server: per-(kind, bucket) lanes of sharded, bounded
+//! batch queues, worker threads executing whole batches on the planar
+//! engine (or the scalar reference datapath), and a drain-before-join
+//! shutdown that reports exactly what happened to every accepted job.
 
 use anyhow::Result;
 use std::collections::BTreeMap;
@@ -8,22 +10,25 @@ use std::sync::{mpsc, Arc};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use super::batcher::{BatchPolicy, BatchQueue};
-use super::hybrid_exec::{decode_matrix, decode_scalar, encode_block};
+use super::batcher::{BatchPolicy, BatchQueue, PushError};
+use super::hybrid_exec::{execute_batch, ExecMode};
 use super::metrics::Metrics;
-use super::request::{Job, JobKind, JobResult, Payload};
+use super::request::{Job, JobKind, JobResult, Payload, SubmitError};
 use super::router::{admit, ShapeBuckets};
 use crate::hybrid::HrfnaContext;
-use crate::runtime::pjrt::Tensor;
 use crate::runtime::EngineHandle;
 
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
-    /// Worker threads per lane.
+    /// Worker threads per (kind, bucket) lane; also the shard count of
+    /// each lane's queue.
     pub workers_per_lane: usize,
     pub batch: BatchPolicy,
     pub buckets: ShapeBuckets,
+    /// Hybrid datapath: planar batched lanes (default) or the scalar
+    /// `Hrfna` reference (benchmark baseline).
+    pub exec: ExecMode,
 }
 
 impl Default for CoordinatorConfig {
@@ -32,13 +37,49 @@ impl Default for CoordinatorConfig {
             workers_per_lane: 2,
             batch: BatchPolicy::default(),
             buckets: ShapeBuckets::default(),
+            exec: ExecMode::Planar,
         }
     }
 }
 
-/// The running coordinator. Dropping it shuts the workers down cleanly.
+/// What `shutdown` observed while draining: every accepted job must be
+/// accounted for (`dropped == 0` is the invariant the integration tests
+/// assert).
+#[derive(Clone, Copy, Debug)]
+pub struct DrainReport {
+    /// Jobs accepted into queues over the coordinator's lifetime.
+    pub accepted: u64,
+    /// Jobs whose result was delivered (including error results).
+    pub completed: u64,
+    /// Submissions rejected (admission failures + overload shedding).
+    pub rejected: u64,
+    /// Jobs still queued when shutdown began — executed during the drain.
+    pub drained: u64,
+    /// Accepted jobs that never completed (must be 0 on a clean drain).
+    pub dropped: u64,
+}
+
+impl DrainReport {
+    /// True iff every accepted job was executed and replied to.
+    pub fn is_clean(&self) -> bool {
+        self.dropped == 0 && self.accepted == self.completed
+    }
+}
+
+impl std::fmt::Display for DrainReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "drain: accepted {} completed {} rejected {} drained-in-queue {} dropped {}",
+            self.accepted, self.completed, self.rejected, self.drained, self.dropped
+        )
+    }
+}
+
+/// The running coordinator. Dropping it shuts the workers down cleanly;
+/// prefer [`Coordinator::shutdown`] to also get the drain report.
 pub struct Coordinator {
-    queues: Arc<BTreeMap<JobKind, BatchQueue>>,
+    queues: Arc<BTreeMap<(JobKind, usize), BatchQueue>>,
     pub metrics: Arc<Metrics>,
     next_id: AtomicU64,
     cfg: CoordinatorConfig,
@@ -52,30 +93,41 @@ impl Coordinator {
         hrfna: Arc<HrfnaContext>,
         cfg: CoordinatorConfig,
     ) -> Coordinator {
+        let shards = cfg.workers_per_lane.max(1);
         let mut queues = BTreeMap::new();
-        for &kind in &JobKind::ALL {
-            queues.insert(kind, BatchQueue::new(cfg.batch));
+        for key in cfg.buckets.lanes() {
+            queues.insert(key, BatchQueue::sharded(cfg.batch, shards));
         }
         let queues = Arc::new(queues);
         let metrics = Arc::new(Metrics::default());
         let mut workers = Vec::new();
-        for &kind in &JobKind::ALL {
-            for widx in 0..cfg.workers_per_lane {
+        let keys: Vec<(JobKind, usize)> = queues.keys().copied().collect();
+        for key in keys {
+            let (kind, bucket) = key;
+            for widx in 0..shards {
                 let queues = Arc::clone(&queues);
                 let engine = engine.clone();
                 let hrfna = Arc::clone(&hrfna);
                 let metrics = Arc::clone(&metrics);
-                let buckets = cfg.buckets;
+                let mode = cfg.exec;
                 workers.push(
                     thread::Builder::new()
-                        .name(format!("lane-{}-{widx}", kind.label().replace('/', "-")))
+                        .name(format!(
+                            "lane-{}-{bucket}-{widx}",
+                            kind.label().replace('/', "-")
+                        ))
                         .spawn(move || {
-                            let q = queues.get(&kind).unwrap();
-                            while let Some(batch) = q.next_batch() {
-                                metrics.record_batch(kind);
+                            let q = queues.get(&key).unwrap();
+                            while let Some((batch, stolen)) = q.next_batch_for(widx) {
+                                if stolen {
+                                    metrics.record_steal(kind);
+                                }
                                 let size = batch.len();
-                                for job in batch {
-                                    let r = execute_job(&engine, &hrfna, &buckets, &job);
+                                let t0 = Instant::now();
+                                let results =
+                                    execute_batch(&engine, &hrfna, mode, kind, &batch);
+                                metrics.record_batch(kind, size, t0.elapsed());
+                                for (job, r) in batch.into_iter().zip(results) {
                                     let latency_us =
                                         job.submitted.elapsed().as_secs_f64() * 1e6;
                                     let values = match r {
@@ -112,23 +164,65 @@ impl Coordinator {
         }
     }
 
-    /// Submit a job; returns the receiver for its result.
+    /// The active configuration.
+    pub fn config(&self) -> &CoordinatorConfig {
+        &self.cfg
+    }
+
+    /// Serving metrics table with correct per-kind worker counts (a kind
+    /// with several bucket lanes has `lanes × workers_per_lane` threads
+    /// feeding its shared occupancy accumulator).
+    pub fn metrics_table(&self) -> crate::util::table::Table {
+        let lanes = self.cfg.buckets.lanes();
+        let wpl = self.cfg.workers_per_lane.max(1);
+        self.metrics.table_with(&|kind: JobKind| {
+            wpl * lanes.iter().filter(|&&(k, _)| k == kind).count().max(1)
+        })
+    }
+
+    /// Submit a job; returns the receiver for its result, or a typed
+    /// error (`Rejected` for admission failures, `Overloaded` when the
+    /// lane's bounded queue is full — the backpressure contract).
     pub fn submit(
         &self,
         kind: JobKind,
         mut payload: Payload,
-    ) -> Result<mpsc::Receiver<JobResult>> {
-        admit(&mut payload, kind, &self.cfg.buckets)?;
+    ) -> Result<mpsc::Receiver<JobResult>, SubmitError> {
+        let bucket = match admit(&mut payload, kind, &self.cfg.buckets) {
+            Ok(b) => b,
+            Err(e) => {
+                self.metrics.record_rejected(kind);
+                return Err(e);
+            }
+        };
         let (tx, rx) = mpsc::channel();
         let job = Job {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             kind,
             payload,
+            bucket,
             submitted: Instant::now(),
             reply: tx,
         };
-        self.queues.get(&kind).unwrap().push(job);
-        Ok(rx)
+        let q = self
+            .queues
+            .get(&(kind, bucket))
+            .expect("admitted bucket has a lane");
+        match q.try_push(job) {
+            Ok(()) => {
+                self.metrics.record_accepted(kind);
+                Ok(rx)
+            }
+            Err(PushError::Full(_)) => {
+                self.metrics.record_rejected(kind);
+                Err(SubmitError::Overloaded {
+                    kind,
+                    queued: q.len(),
+                    capacity: q.policy.capacity.saturating_mul(q.shard_count()),
+                })
+            }
+            Err(PushError::Closed(_)) => Err(SubmitError::ShuttingDown),
+        }
     }
 
     /// Submit and block for the result.
@@ -139,13 +233,24 @@ impl Coordinator {
             .map_err(|e| anyhow::anyhow!("job timed out: {e}"))?)
     }
 
-    /// Close all queues and join workers.
-    pub fn shutdown(mut self) {
+    /// Close all queues, drain every in-flight and queued batch, join the
+    /// workers, and report what happened to every accepted job.
+    pub fn shutdown(mut self) -> DrainReport {
+        let drained: u64 = self.queues.values().map(|q| q.len() as u64).sum();
         for q in self.queues.values() {
             q.close();
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
+        }
+        let accepted = self.metrics.total_accepted();
+        let completed = self.metrics.total_jobs();
+        DrainReport {
+            accepted,
+            completed,
+            rejected: self.metrics.total_rejected(),
+            drained,
+            dropped: accepted.saturating_sub(completed),
         }
     }
 }
@@ -161,81 +266,5 @@ impl Drop for Coordinator {
     }
 }
 
-/// Execute one admitted job against the engine.
-fn execute_job(
-    engine: &EngineHandle,
-    hrfna: &HrfnaContext,
-    buckets: &ShapeBuckets,
-    job: &Job,
-) -> Result<Vec<f64>> {
-    match (&job.payload, job.kind) {
-        (Payload::Dot { x, y }, JobKind::DotF32) => {
-            let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
-            let yf: Vec<f32> = y.iter().map(|&v| v as f32).collect();
-            let out = engine
-                .execute(
-                    "fp32_dot",
-                    vec![
-                        Tensor::F32(xf, vec![buckets.dot_n]),
-                        Tensor::F32(yf, vec![buckets.dot_n]),
-                    ],
-                )?
-                .into_f32()?;
-            Ok(vec![out[0] as f64])
-        }
-        (Payload::Dot { x, y }, JobKind::DotHybrid) => {
-            let k = hrfna.k();
-            let n = buckets.dot_n;
-            let ex = encode_block(x, hrfna);
-            let ey = encode_block(y, hrfna);
-            let m: Vec<i64> = hrfna.cfg.moduli.iter().map(|&v| v as i64).collect();
-            let out = engine
-                .execute(
-                    "hybrid_dot",
-                    vec![
-                        Tensor::I64(ex.residues, vec![k, n]),
-                        Tensor::I64(ey.residues, vec![k, n]),
-                        Tensor::I64(m, vec![k]),
-                    ],
-                )?
-                .into_i64()?;
-            Ok(vec![decode_scalar(&out, ex.f + ey.f, hrfna)])
-        }
-        (Payload::Matmul { a, b, dim }, JobKind::MatmulF32) => {
-            let af: Vec<f32> = a.iter().map(|&v| v as f32).collect();
-            let bf: Vec<f32> = b.iter().map(|&v| v as f32).collect();
-            let out = engine
-                .execute(
-                    "fp32_matmul",
-                    vec![
-                        Tensor::F32(af, vec![*dim, *dim]),
-                        Tensor::F32(bf, vec![*dim, *dim]),
-                    ],
-                )?
-                .into_f32()?;
-            Ok(out.into_iter().map(|v| v as f64).collect())
-        }
-        (Payload::Matmul { a, b, dim }, JobKind::MatmulHybrid) => {
-            let k = hrfna.k();
-            let d = *dim;
-            let ea = encode_block(a, hrfna);
-            let eb = encode_block(b, hrfna);
-            let m: Vec<i64> = hrfna.cfg.moduli.iter().map(|&v| v as i64).collect();
-            let out = engine
-                .execute(
-                    "hybrid_matmul",
-                    vec![
-                        Tensor::I64(ea.residues, vec![k, d, d]),
-                        Tensor::I64(eb.residues, vec![k, d, d]),
-                        Tensor::I64(m, vec![k]),
-                    ],
-                )?
-                .into_i64()?;
-            Ok(decode_matrix(&out, d * d, ea.f + eb.f, hrfna))
-        }
-        _ => anyhow::bail!("payload/kind mismatch escaped admission"),
-    }
-}
-
-// Engine-dependent tests live in rust/tests/integration_serve.rs (they
-// need compiled artifacts).
+// Engine-dependent tests live in rust/tests/integration_serve.rs and
+// rust/tests/integration_saturation.rs.

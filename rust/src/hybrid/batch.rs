@@ -57,14 +57,44 @@ impl HrfnaBatch {
         }
     }
 
-    /// Encode a slice of reals (per-element exponent, identical to
-    /// `Hrfna::encode` element by element).
+    /// Encode a slice of reals (per-element exponent, bit-identical to
+    /// `Hrfna::encode` element by element — the property test below is
+    /// the proof). One planar pass: stage every mantissa first, then run
+    /// the contiguous per-channel residue encode — no per-element
+    /// `ResidueVec` allocation or strided scatter (the serving encode
+    /// path for matmul and RK4 batches).
     pub fn encode(xs: &[f64], ctx: &HrfnaContext) -> HrfnaBatch {
-        let mut out = HrfnaBatch::zeros(xs.len(), ctx);
+        let n = xs.len();
+        let sig = ctx.cfg.sig_bits as i32;
+        let mut staged = vec![0i64; n];
+        let mut f = vec![0i32; n];
+        let mut iv_lo = vec![0.0; n];
+        let mut iv_hi = vec![0.0; n];
         for (j, &x) in xs.iter().enumerate() {
-            out.set(j, &Hrfna::encode(x, ctx));
+            assert!(x.is_finite(), "cannot encode {x}");
+            if x == 0.0 {
+                continue; // zero stays (r=0, f=0, iv=[0,0]) like Hrfna::zero
+            }
+            let e = x.abs().log2().floor() as i32;
+            let fe = e - sig + 1;
+            // Staged power-of-two scaling, exactly as Hrfna::encode: one
+            // pow2(-f) can overflow for subnormal inputs.
+            let mut scaled = x;
+            let mut rem = -fe;
+            while rem != 0 {
+                let step = rem.clamp(-1000, 1000);
+                scaled *= pow2(step);
+                rem -= step;
+            }
+            let m = scaled.round() as i64;
+            staged[j] = m;
+            f[j] = fe;
+            let point = m as f64;
+            iv_lo[j] = point;
+            iv_hi[j] = point;
         }
-        out
+        let res = ResiduePlane::encode_signed(&staged, &ctx.cfg.moduli, ctx.barrett());
+        HrfnaBatch { res, f, iv_lo, iv_hi }
     }
 
     /// Pack existing scalar values into a batch (all must share `k`).

@@ -158,6 +158,7 @@ fn cmd_serve(args: &Args, cfg: &HrfnaConfig) {
     for rx in pending {
         rx.recv().expect("result");
     }
-    coord.metrics.table().print();
-    coord.shutdown();
+    coord.metrics_table().print();
+    let drain = coord.shutdown();
+    println!("{drain}");
 }

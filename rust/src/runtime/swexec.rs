@@ -174,9 +174,12 @@ impl Engine {
         Engine::load(&Manifest::default_dir())
     }
 
-    /// Names of the loaded executables.
+    /// Names of the loaded executables (including the dynamic-batch
+    /// serving graphs only the software backend provides).
     pub fn names(&self) -> Vec<String> {
-        self.compiled.keys().cloned().collect()
+        let mut names: Vec<String> = self.compiled.keys().cloned().collect();
+        names.push("fp32_dot_batch".to_string());
+        names
     }
 
     /// Device/platform description.
@@ -186,6 +189,12 @@ impl Engine {
 
     /// Execute graph `name` with `inputs`; returns the output flattened.
     pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Output> {
+        if name == "fp32_dot_batch" {
+            // The one graph with a dynamic leading dimension: the serving
+            // batcher amortizes a single engine round trip over the whole
+            // admitted batch. Validated inside (no frozen ArgSpec).
+            return exec_fp32_dot_batch(inputs);
+        }
         let args = self
             .compiled
             .get(name)
@@ -286,6 +295,31 @@ fn exec_fp32_dot(inputs: &[Tensor]) -> Result<Output> {
         acc += a * b;
     }
     Ok(Output::F32(vec![acc]))
+}
+
+/// `f32[b,n] × f32[b,n] -> f32[b]`: one dot product per batch row. The
+/// leading dimension is dynamic — the software stand-in for a batched AOT
+/// graph family.
+fn exec_fp32_dot_batch(inputs: &[Tensor]) -> Result<Output> {
+    if inputs.len() != 2 {
+        bail!("fp32_dot_batch: expected 2 inputs, got {}", inputs.len());
+    }
+    let (x, xs) = inputs[0].f32_data()?;
+    let (y, ys) = inputs[1].f32_data()?;
+    if xs.len() != 2 || xs != ys || xs[0] == 0 || x.len() != xs[0] * xs[1] || y.len() != x.len()
+    {
+        bail!("fp32_dot_batch: bad shapes {xs:?} vs {ys:?}");
+    }
+    let (b, n) = (xs[0], xs[1]);
+    let mut out = Vec::with_capacity(b);
+    for row in 0..b {
+        let mut acc = 0.0f32;
+        for j in 0..n {
+            acc += x[row * n + j] * y[row * n + j];
+        }
+        out.push(acc);
+    }
+    Ok(Output::F32(out))
 }
 
 /// `f32[d,d] × f32[d,d] -> f32[d·d]`.
@@ -394,6 +428,43 @@ mod tests {
         let bad = e.execute("fp32_dot", &[Tensor::F32(vec![0.0; DOT_N], vec![DOT_N])]);
         assert!(bad.is_err());
         assert!(e.execute("nonexistent", &[]).is_err());
+    }
+
+    #[test]
+    fn fp32_dot_batch_dynamic_leading_dim() {
+        let e = engine();
+        for b in [1usize, 3, 8] {
+            let n = 16;
+            let x: Vec<f32> = (0..b * n).map(|i| (i % 7) as f32 - 3.0).collect();
+            let y: Vec<f32> = (0..b * n).map(|i| (i % 5) as f32 - 2.0).collect();
+            let out = e
+                .execute(
+                    "fp32_dot_batch",
+                    &[
+                        Tensor::F32(x.clone(), vec![b, n]),
+                        Tensor::F32(y.clone(), vec![b, n]),
+                    ],
+                )
+                .unwrap()
+                .into_f32()
+                .unwrap();
+            assert_eq!(out.len(), b);
+            for row in 0..b {
+                let want: f32 = (0..n).map(|j| x[row * n + j] * y[row * n + j]).sum();
+                assert!((out[row] - want).abs() < 1e-4, "b={b} row={row}");
+            }
+        }
+        // Mismatched shapes are rejected.
+        assert!(e
+            .execute(
+                "fp32_dot_batch",
+                &[
+                    Tensor::F32(vec![0.0; 4], vec![2, 2]),
+                    Tensor::F32(vec![0.0; 6], vec![2, 3]),
+                ],
+            )
+            .is_err());
+        assert!(e.names().iter().any(|n| n == "fp32_dot_batch"));
     }
 
     #[test]

@@ -112,6 +112,121 @@ impl BenchRecord {
     }
 }
 
+/// Parse the `BENCH_*.json` record format back out of its text (the
+/// registry has no serde; this reads exactly what [`write_json`] emits:
+/// an array of flat objects with one string field and numeric fields).
+pub fn parse_records(text: &str) -> Vec<BenchRecord> {
+    let mut out = Vec::new();
+    let mut rest = text;
+    while let Some(start) = rest.find('{') {
+        let Some(end) = rest[start..].find('}') else { break };
+        let obj = &rest[start + 1..start + end];
+        rest = &rest[start + end + 1..];
+        let Some(name) = parse_string_field(obj, "name") else { continue };
+        let n = parse_number_field(obj, "n").unwrap_or(0.0) as u64;
+        let ns_per_op = parse_number_field(obj, "ns_per_op").unwrap_or(0.0);
+        let throughput_per_s = parse_number_field(obj, "throughput_per_s")
+            .unwrap_or(if ns_per_op > 0.0 { 1e9 / ns_per_op } else { 0.0 });
+        out.push(BenchRecord { name, n, ns_per_op, throughput_per_s });
+    }
+    out
+}
+
+/// Extract `"key":"value"` from a flat JSON object body, unescaping the
+/// two characters [`write_json`] escapes (char-aware, so non-ASCII names
+/// round-trip intact).
+fn parse_string_field(obj: &str, key: &str) -> Option<String> {
+    let tag = format!("\"{key}\":\"");
+    let start = obj.find(&tag)? + tag.len();
+    let mut value = String::new();
+    let mut chars = obj[start..].chars();
+    while let Some(c) = chars.next() {
+        match c {
+            '\\' => value.push(chars.next()?),
+            '"' => return Some(value),
+            other => value.push(other),
+        }
+    }
+    None
+}
+
+/// Extract `"key":number` from a flat JSON object body.
+fn parse_number_field(obj: &str, key: &str) -> Option<f64> {
+    let tag = format!("\"{key}\":");
+    let start = obj.find(&tag)? + tag.len();
+    let rest = &obj[start..];
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || "+-.eE".contains(c)))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// Read a `BENCH_*.json` trajectory file.
+pub fn read_json(path: &str) -> std::io::Result<Vec<BenchRecord>> {
+    Ok(parse_records(&std::fs::read_to_string(path)?))
+}
+
+/// One bench-gate regression: a record whose per-op cost exceeded the
+/// committed baseline by more than the tolerance.
+#[derive(Clone, Debug)]
+pub struct GateViolation {
+    pub name: String,
+    pub baseline_ns: f64,
+    /// `f64::INFINITY` when the record vanished from the current run.
+    pub current_ns: f64,
+    /// current/baseline per-op cost.
+    pub ratio: f64,
+}
+
+impl GateViolation {
+    /// Gate report line.
+    pub fn line(&self) -> String {
+        if self.current_ns.is_finite() {
+            format!(
+                "REGRESSION {:<40} baseline {:>12.2} ns/op -> current {:>12.2} ns/op ({:.2}x)",
+                self.name, self.baseline_ns, self.current_ns, self.ratio
+            )
+        } else {
+            format!("MISSING    {:<40} (in baseline, absent from current run)", self.name)
+        }
+    }
+}
+
+/// Compare a current bench run against a committed baseline: a record
+/// regresses when its ns/op exceeds the baseline by more than
+/// `tolerance` (0.20 = 20%, the CI gate's default). Records present in
+/// the baseline but missing from the current run fail too — a silently
+/// deleted bench case must not pass the gate. New records (current-only)
+/// are allowed; they become protected once the baseline is refreshed.
+pub fn gate_records(
+    baseline: &[BenchRecord],
+    current: &[BenchRecord],
+    tolerance: f64,
+) -> Vec<GateViolation> {
+    let mut violations = Vec::new();
+    for base in baseline {
+        match current.iter().find(|r| r.name == base.name) {
+            None => violations.push(GateViolation {
+                name: base.name.clone(),
+                baseline_ns: base.ns_per_op,
+                current_ns: f64::INFINITY,
+                ratio: f64::INFINITY,
+            }),
+            Some(cur) => {
+                if base.ns_per_op > 0.0 && cur.ns_per_op > base.ns_per_op * (1.0 + tolerance) {
+                    violations.push(GateViolation {
+                        name: base.name.clone(),
+                        baseline_ns: base.ns_per_op,
+                        current_ns: cur.ns_per_op,
+                        ratio: cur.ns_per_op / base.ns_per_op,
+                    });
+                }
+            }
+        }
+    }
+    violations
+}
+
 /// Write records as a JSON array (one record per line) — the
 /// `BENCH_hotpath.json` / `BENCH_dot.json` trajectory files.
 pub fn write_json(path: &str, records: &[BenchRecord]) -> std::io::Result<()> {
@@ -161,6 +276,64 @@ mod tests {
         assert_eq!(rec.n, 4096);
         assert!((rec.ns_per_op - 1.0).abs() < 1e-12);
         assert!((rec.throughput_per_s - 1e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn parse_roundtrips_written_records() {
+        let recs = vec![
+            BenchRecord {
+                name: "dot_planar_n4096".into(),
+                n: 4096,
+                ns_per_op: 7.25,
+                throughput_per_s: 1e9 / 7.25,
+            },
+            BenchRecord {
+                name: "serve \"q\"".into(),
+                n: 1,
+                ns_per_op: 120000.0,
+                throughput_per_s: 8333.3,
+            },
+            BenchRecord {
+                name: "lat_p50_µs".into(),
+                n: 1,
+                ns_per_op: 3.5,
+                throughput_per_s: 1e9 / 3.5,
+            },
+        ];
+        let path = std::env::temp_dir().join("hrfna_bench_parse_test.json");
+        let path = path.to_str().unwrap();
+        write_json(path, &recs).unwrap();
+        let back = read_json(path).unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back[0].name, "dot_planar_n4096");
+        assert_eq!(back[0].n, 4096);
+        assert!((back[0].ns_per_op - 7.25).abs() < 1e-9);
+        assert_eq!(back[1].name, "serve \"q\"");
+        assert!((back[1].throughput_per_s - 8333.3).abs() < 0.1);
+        assert_eq!(back[2].name, "lat_p50_µs", "non-ASCII names round-trip");
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn gate_flags_regressions_missing_and_passes_improvements() {
+        let rec = |name: &str, ns: f64| BenchRecord {
+            name: name.into(),
+            n: 1,
+            ns_per_op: ns,
+            throughput_per_s: if ns > 0.0 { 1e9 / ns } else { 0.0 },
+        };
+        let baseline = vec![rec("a", 100.0), rec("b", 100.0), rec("gone", 50.0)];
+        let current = vec![rec("a", 115.0), rec("b", 125.0), rec("new", 1.0)];
+        let v = gate_records(&baseline, &current, 0.20);
+        // "a" is within 20%, "b" regressed 25%, "gone" is missing; "new"
+        // (current-only) is allowed.
+        assert_eq!(v.len(), 2);
+        assert!(v.iter().any(|x| x.name == "b" && (x.ratio - 1.25).abs() < 1e-9));
+        assert!(v.iter().any(|x| x.name == "gone" && !x.current_ns.is_finite()));
+        assert!(v.iter().all(|x| !x.line().is_empty()));
+        // Improvements never trip the gate.
+        assert!(gate_records(&baseline, &[rec("a", 1.0), rec("b", 1.0), rec("gone", 1.0)], 0.2)
+            .is_empty());
     }
 
     #[test]

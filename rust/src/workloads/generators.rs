@@ -62,9 +62,58 @@ impl Dist {
     }
 }
 
+/// Serving request mix: deterministic per (seed, index) so every client
+/// thread of a load generator can build its own stream without sharing a
+/// PRNG. Weights follow the serve example: 40% hybrid dot, 30% FP32 dot,
+/// 10% each matmul lane, 10% RK4.
+pub struct ServeMix {
+    pub dist: Dist,
+    /// Dot operand length before padding.
+    pub dot_n: usize,
+    pub matmul_dim: usize,
+    pub rk4_steps: u64,
+}
+
+impl ServeMix {
+    /// Default mix sized for the default shape buckets.
+    pub fn default_mix() -> ServeMix {
+        ServeMix {
+            dist: Dist::moderate(),
+            dot_n: 512,
+            matmul_dim: 64,
+            rk4_steps: 200,
+        }
+    }
+
+    /// Draw request `i` of stream `seed` as a (slot, operands) pair where
+    /// `slot` in 0..10 selects the lane per the mix weights. Returns the
+    /// slot and a fresh RNG positioned for this request's operands.
+    pub fn request_rng(&self, seed: u64, i: usize) -> (usize, Rng) {
+        let rng = Rng::new(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ i as u64);
+        (i % 10, rng)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn serve_mix_streams_are_deterministic_and_distinct() {
+        let mix = ServeMix::default_mix();
+        let (slot_a, mut rng_a) = mix.request_rng(1, 3);
+        let (slot_b, mut rng_b) = mix.request_rng(1, 3);
+        assert_eq!(slot_a, slot_b);
+        assert_eq!(
+            mix.dist.sample_vec(&mut rng_a, 8),
+            mix.dist.sample_vec(&mut rng_b, 8)
+        );
+        let (_, mut rng_c) = mix.request_rng(2, 3);
+        assert_ne!(
+            mix.dist.sample_vec(&mut rng_a, 8),
+            mix.dist.sample_vec(&mut rng_c, 8)
+        );
+    }
 
     #[test]
     fn uniform_in_range() {

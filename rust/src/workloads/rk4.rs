@@ -171,6 +171,53 @@ pub fn rk4_step_batch(
         .collect()
 }
 
+/// Serving entry, scalar reference: integrate one instance `steps` steps
+/// and return only the decoded final state (no reference trace).
+pub fn rk4_final_state<N: Numeric>(
+    ode: &Ode,
+    y0: &[f64],
+    dt: f64,
+    steps: u64,
+    ctx: &N::Ctx,
+) -> Vec<f64> {
+    let mut y: Vec<N> = y0.iter().map(|&v| N::from_f64(v, ctx)).collect();
+    for _ in 0..steps {
+        y = rk4_step(ode, &y, dt, ctx);
+    }
+    y.iter().map(|v| v.to_f64(ctx)).collect()
+}
+
+/// Serving entry, planar: integrate a batch of instances lock-step on the
+/// planar engine and decode *only* the final states (one bulk decode at
+/// the end — the coordinator's "reconstruct requested outputs" contract).
+/// Per-instance results are bit-identical to [`rk4_final_state`] over
+/// [`crate::hybrid::Hrfna`].
+pub fn rk4_final_states_batch(
+    ode: &Ode,
+    y0s: &[Vec<f64>],
+    dt: f64,
+    steps: u64,
+    ctx: &crate::hybrid::HrfnaContext,
+) -> Vec<Vec<f64>> {
+    use crate::hybrid::HrfnaBatch;
+    let dim = ode.dim();
+    let b = y0s.len();
+    assert!(y0s.iter().all(|y0| y0.len() == dim));
+    let mut y: Vec<HrfnaBatch> = (0..dim)
+        .map(|d| {
+            let xs: Vec<f64> = y0s.iter().map(|y0| y0[d]).collect();
+            HrfnaBatch::encode(&xs, ctx)
+        })
+        .collect();
+    for _ in 0..steps {
+        y = rk4_step_batch(ode, &y, dt, ctx);
+    }
+    let decoded: Vec<Vec<f64>> = y.iter().map(|bd| bd.decode(ctx)).collect();
+    (0..b)
+        .map(|i| (0..dim).map(|d| decoded[d][i]).collect())
+        .collect()
+}
+
 /// Integrate a *batch* of instances of `ode` (one initial state per
 /// instance) in lock-step on the planar engine, sampling each instance's
 /// error against its own f64 reference. Serving many independent ODE
@@ -384,6 +431,21 @@ mod tests {
         for tr in &traces {
             assert!(tr.max_error() < 1e-6, "max_error={}", tr.max_error());
             assert!((tr.final_state[0] - tr.final_ref[0]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn final_state_serving_entries_bit_identical() {
+        // The serving entries must agree exactly: the planar batch mirrors
+        // the scalar ops op-for-op, and both decode the same residues.
+        let ctx = HrfnaContext::paper_default();
+        let ode = Ode::VanDerPol { mu: 1.0 };
+        let y0s = vec![vec![2.0, 0.0], vec![-1.0, 0.5], vec![0.25, -0.75]];
+        let batch = rk4_final_states_batch(&ode, &y0s, 0.01, 150, &ctx);
+        for (i, y0) in y0s.iter().enumerate() {
+            let scalar = rk4_final_state::<Hrfna>(&ode, y0, 0.01, 150, &ctx);
+            assert_eq!(batch[i], scalar, "instance {i}");
+            assert!(scalar.iter().all(|v| v.is_finite()));
         }
     }
 

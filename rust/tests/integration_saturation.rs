@@ -1,0 +1,188 @@
+//! Saturation and shutdown-drain integration: flooding the coordinator
+//! past its bounded queues from many client threads must produce typed
+//! `Overloaded` rejections (not OOM, not deadlock), every accepted job
+//! must complete, and shutdown must drain queued work before joining the
+//! workers — with the drain report accounting for every job.
+
+use hrfna::config::HrfnaConfig;
+use hrfna::coordinator::batcher::BatchPolicy;
+use hrfna::coordinator::{
+    Coordinator, CoordinatorConfig, ExecMode, JobKind, Payload, SubmitError,
+};
+use hrfna::hybrid::HrfnaContext;
+use hrfna::runtime::EngineHandle;
+use hrfna::util::prng::Rng;
+use hrfna::workloads::generators::Dist;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn coordinator(batch: BatchPolicy, workers_per_lane: usize) -> Coordinator {
+    let engine = EngineHandle::spawn(None).expect("engine load");
+    let ctx = Arc::new(HrfnaContext::new(HrfnaConfig::paper_default()));
+    Coordinator::start(
+        engine,
+        ctx,
+        CoordinatorConfig {
+            workers_per_lane,
+            batch,
+            exec: ExecMode::Planar,
+            ..CoordinatorConfig::default()
+        },
+    )
+}
+
+#[test]
+fn flood_past_capacity_sheds_load_and_drains_clean() {
+    // A long batching window holds jobs in the queue while the flood
+    // arrives, so the capacity bound is hit deterministically: one lane,
+    // one shard of capacity 16, 8 clients × 25 jobs = 200 offered.
+    let coord = Arc::new(coordinator(
+        BatchPolicy {
+            max_batch: 64,
+            max_wait: Duration::from_millis(150),
+            capacity: 16,
+        },
+        1,
+    ));
+    let mut rng = Rng::new(1);
+    let x = Dist::moderate().sample_vec(&mut rng, 512);
+    let y = Dist::moderate().sample_vec(&mut rng, 512);
+    let truth: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+
+    let mut handles = Vec::new();
+    for _ in 0..8 {
+        let coord = Arc::clone(&coord);
+        let (x, y) = (x.clone(), y.clone());
+        handles.push(std::thread::spawn(move || {
+            let mut accepted = Vec::new();
+            let mut overloaded = 0usize;
+            for _ in 0..25 {
+                match coord
+                    .submit(JobKind::DotHybrid, Payload::Dot { x: x.clone(), y: y.clone() })
+                {
+                    Ok(rx) => accepted.push(rx),
+                    Err(SubmitError::Overloaded { capacity, .. }) => {
+                        assert!(capacity > 0, "typed overload carries queue state");
+                        overloaded += 1;
+                    }
+                    Err(e) => panic!("unexpected submit error: {e}"),
+                }
+            }
+            (accepted, overloaded)
+        }));
+    }
+    let mut receivers = Vec::new();
+    let mut overloaded = 0;
+    for h in handles {
+        let (rxs, o) = h.join().unwrap();
+        receivers.extend(rxs);
+        overloaded += o;
+    }
+    assert!(
+        overloaded > 0,
+        "flood past a 16-deep queue must shed load with Overloaded"
+    );
+    assert_eq!(receivers.len() + overloaded, 200);
+
+    // Every accepted job completes with a correct result — no deadlock,
+    // no silent drop.
+    for rx in receivers {
+        let r = rx.recv_timeout(Duration::from_secs(60)).expect("accepted job completes");
+        assert!((r.values[0] - truth).abs() <= 1e-6 * truth.abs().max(1.0));
+    }
+    let metrics = Arc::clone(&coord.metrics);
+    let accepted = metrics.total_accepted();
+    let rejected = metrics.total_rejected();
+    assert_eq!(rejected as usize, overloaded);
+    let coord = Arc::try_unwrap(coord).unwrap_or_else(|_| panic!("sole owner"));
+    let drain = coord.shutdown();
+    assert!(drain.is_clean(), "{drain}");
+    assert_eq!(drain.accepted, accepted);
+    assert_eq!(drain.completed, accepted);
+    assert_eq!(drain.rejected, rejected);
+    assert_eq!(drain.dropped, 0);
+}
+
+#[test]
+fn shutdown_drains_queued_jobs_before_joining() {
+    // A 10 s batching window parks submitted jobs in the queues; calling
+    // shutdown immediately must flush and execute them (drain before
+    // join), not drop them.
+    let coord = coordinator(
+        BatchPolicy {
+            max_batch: 64,
+            max_wait: Duration::from_secs(10),
+            capacity: 64,
+        },
+        2,
+    );
+    let mut rng = Rng::new(5);
+    let mut pending = Vec::new();
+    let mut truths = Vec::new();
+    for _ in 0..12 {
+        let x = Dist::moderate().sample_vec(&mut rng, 300);
+        let y = Dist::moderate().sample_vec(&mut rng, 300);
+        truths.push(x.iter().zip(&y).map(|(a, b)| a * b).sum::<f64>());
+        pending.push(
+            coord
+                .submit(JobKind::DotHybrid, Payload::Dot { x, y })
+                .unwrap(),
+        );
+    }
+    let t0 = std::time::Instant::now();
+    let drain = coord.shutdown();
+    assert!(
+        t0.elapsed() < Duration::from_secs(8),
+        "shutdown must flush the batching window, not wait it out"
+    );
+    assert!(drain.is_clean(), "{drain}");
+    assert_eq!(drain.accepted, 12);
+    assert_eq!(drain.completed, 12);
+    assert!(
+        drain.drained > 0,
+        "jobs were parked in the queue at shutdown: {drain}"
+    );
+    for (rx, truth) in pending.into_iter().zip(truths) {
+        let r = rx
+            .recv_timeout(Duration::from_secs(5))
+            .expect("drained job still delivers its result");
+        assert!((r.values[0] - truth).abs() <= 1e-6 * truth.abs().max(1.0));
+    }
+}
+
+#[test]
+fn idle_shutdown_is_clean() {
+    let coord = coordinator(BatchPolicy::default(), 1);
+    let drain = coord.shutdown();
+    assert!(drain.is_clean(), "{drain}");
+    assert_eq!(drain.drained, 0);
+}
+
+#[test]
+fn open_loop_overload_is_bounded_and_recovers() {
+    use hrfna::coordinator::open_loop;
+    let coord = coordinator(
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_micros(500),
+            capacity: 8,
+        },
+        1,
+    );
+    let mut rng = Rng::new(9);
+    let x = Dist::moderate().sample_vec(&mut rng, 4096);
+    let y = Dist::moderate().sample_vec(&mut rng, 4096);
+    // Offer far beyond single-worker capacity; the bounded lane must shed
+    // rather than queue without bound, and shed jobs must not break the
+    // accepted ones.
+    let report = open_loop(&coord, 300, 50_000.0, &|_, _| {
+        (JobKind::DotHybrid, Payload::Dot { x: x.clone(), y: y.clone() })
+    });
+    assert_eq!(report.offered, 300);
+    assert_eq!(report.accepted + report.rejected, 300);
+    assert_eq!(report.completed, report.accepted);
+    let depth = coord.metrics.queue_depth(JobKind::DotHybrid);
+    assert!(depth <= 16, "queue depth bounded by capacity, got {depth}");
+    let drain = coord.shutdown();
+    assert!(drain.is_clean(), "{drain}");
+}

@@ -1,21 +1,24 @@
-//! Integration: the full coordinator stack (admission → batching → lane
-//! workers → runtime engine → decode) serves correct results under
-//! concurrency. Uses the backend the build selected (software executor by
-//! default; the PJRT client with `--features xla` + `make artifacts`).
+//! Integration: the full coordinator stack (admission → sharded bounded
+//! queues → planar batch execution → bulk decode) serves correct results
+//! under concurrency, on both the planar and scalar-reference datapaths.
+//! Uses the backend the build selected (software executor by default; the
+//! PJRT client with `--features xla` + `make artifacts`).
 
 use hrfna::config::HrfnaConfig;
 use hrfna::coordinator::batcher::BatchPolicy;
-use hrfna::coordinator::router::ShapeBuckets;
-use hrfna::coordinator::{Coordinator, CoordinatorConfig, JobKind, Payload};
+use hrfna::coordinator::{
+    Coordinator, CoordinatorConfig, ExecMode, JobKind, Payload,
+};
 use hrfna::hybrid::HrfnaContext;
 use hrfna::runtime::EngineHandle;
 use hrfna::util::prng::Rng;
 use hrfna::workloads::generators::Dist;
+use hrfna::workloads::rk4::{rk4_final_state, Ode};
 use std::sync::Arc;
 use std::time::Duration;
 
-fn coordinator() -> Coordinator {
-    let engine = EngineHandle::spawn(None).expect("run `make artifacts` first");
+fn coordinator_with(exec: ExecMode) -> Coordinator {
+    let engine = EngineHandle::spawn(None).expect("engine load");
     let ctx = Arc::new(HrfnaContext::new(HrfnaConfig::paper_default()));
     Coordinator::start(
         engine,
@@ -25,10 +28,16 @@ fn coordinator() -> Coordinator {
             batch: BatchPolicy {
                 max_batch: 4,
                 max_wait: Duration::from_millis(1),
+                ..BatchPolicy::default()
             },
-            buckets: ShapeBuckets::default(),
+            exec,
+            ..CoordinatorConfig::default()
         },
     )
+}
+
+fn coordinator() -> Coordinator {
+    coordinator_with(ExecMode::Planar)
 }
 
 #[test]
@@ -54,7 +63,33 @@ fn serves_correct_dot_products_both_lanes() {
             assert!(r.latency_us > 0.0);
         }
     }
-    coord.shutdown();
+    let drain = coord.shutdown();
+    assert!(drain.is_clean(), "{drain}");
+}
+
+#[test]
+fn scalar_and_planar_paths_agree() {
+    // The scalar reference datapath and the planar serving path must
+    // produce results within the shared accuracy budget on identical
+    // inputs (they round differently — per-element vs block exponents —
+    // so agreement is to tolerance, not bit-exact).
+    let mut rng = Rng::new(41);
+    let x = Dist::moderate().sample_vec(&mut rng, 700);
+    let y = Dist::moderate().sample_vec(&mut rng, 700);
+    let truth: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+    let mut got = Vec::new();
+    for exec in [ExecMode::Scalar, ExecMode::Planar] {
+        let coord = coordinator_with(exec);
+        let r = coord
+            .call(JobKind::DotHybrid, Payload::Dot { x: x.clone(), y: y.clone() })
+            .unwrap();
+        got.push(r.values[0]);
+        assert!(coord.shutdown().is_clean());
+    }
+    for v in &got {
+        assert!((v - truth).abs() <= 1e-6 * truth.abs().max(1.0), "{v} vs {truth}");
+    }
+    assert!((got[0] - got[1]).abs() <= 2e-6 * truth.abs().max(1.0));
 }
 
 #[test]
@@ -89,7 +124,45 @@ fn serves_correct_matmul_hybrid() {
             "({i},{j})"
         );
     }
-    coord.shutdown();
+    let drain = coord.shutdown();
+    assert!(drain.is_clean(), "{drain}");
+}
+
+#[test]
+fn serves_rk4_matching_scalar_reference() {
+    let coord = coordinator();
+    let ctx = HrfnaContext::new(HrfnaConfig::paper_default());
+    let mut rng = Rng::new(77);
+    let mut pending = Vec::new();
+    let mut y0s = Vec::new();
+    let (mu, dt, steps) = (1.0, 0.01, 120u64);
+    for _ in 0..6 {
+        let y0 = vec![rng.uniform(-1.5, 1.5), rng.uniform(-1.5, 1.5)];
+        pending.push(
+            coord
+                .submit(
+                    JobKind::Rk4Hybrid,
+                    Payload::Rk4 { y0: y0.clone(), mu, dt, steps },
+                )
+                .unwrap(),
+        );
+        y0s.push(y0);
+    }
+    for (rx, y0) in pending.into_iter().zip(&y0s) {
+        let r = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        // The planar batch mirrors the scalar ops exactly, so the served
+        // result equals the scalar reference bit for bit.
+        let want = rk4_final_state::<hrfna::hybrid::Hrfna>(
+            &Ode::VanDerPol { mu },
+            y0,
+            dt,
+            steps,
+            &ctx,
+        );
+        assert_eq!(r.values, want);
+    }
+    let drain = coord.shutdown();
+    assert!(drain.is_clean(), "{drain}");
 }
 
 #[test]
@@ -160,7 +233,16 @@ fn admission_rejects_invalid_jobs() {
             },
         )
         .is_err());
-    coord.shutdown();
+    // RK4 over the step cap.
+    assert!(coord
+        .submit(
+            JobKind::Rk4Hybrid,
+            Payload::Rk4 { y0: vec![1.0, 0.0], mu: 1.0, dt: 0.01, steps: u64::MAX },
+        )
+        .is_err());
+    assert!(coord.metrics.total_rejected() >= 4);
+    let drain = coord.shutdown();
+    assert!(drain.is_clean(), "{drain}");
 }
 
 #[test]
@@ -179,5 +261,6 @@ fn batching_coalesces_bursts() {
         max_batch = max_batch.max(r.batch_size);
     }
     assert!(max_batch >= 2, "burst should produce batches, got {max_batch}");
-    coord.shutdown();
+    let drain = coord.shutdown();
+    assert!(drain.is_clean(), "{drain}");
 }

@@ -1,0 +1,102 @@
+//! CI bench-regression gate: compares a current bench run's
+//! `BENCH_*.json` records against committed baselines and exits nonzero
+//! when jobs/sec or ns/op regressed beyond the tolerance — the measured
+//! planar-serving speedup is a protected invariant, not a one-off number.
+//!
+//! Usage:
+//!   bench_gate --baseline <file-or-dir> --current <file-or-dir> [--tolerance 0.20]
+//!
+//! With directories, every `BENCH_*.json` in the baseline dir must exist
+//! in the current dir and pass record-by-record. Refresh a baseline by
+//! re-running the bench and committing the new JSON.
+
+use hrfna::util::bench::{gate_records, read_json, GateViolation};
+use hrfna::util::cli::Args;
+use std::path::{Path, PathBuf};
+
+/// Baseline/current file pairs to compare.
+fn collect_pairs(baseline: &Path, current: &Path) -> Result<Vec<(PathBuf, PathBuf)>, String> {
+    if baseline.is_file() {
+        return Ok(vec![(baseline.to_path_buf(), current.to_path_buf())]);
+    }
+    if !baseline.is_dir() {
+        return Err(format!("baseline path {} not found", baseline.display()));
+    }
+    let mut pairs = Vec::new();
+    let mut names: Vec<PathBuf> = std::fs::read_dir(baseline)
+        .map_err(|e| format!("read {}: {e}", baseline.display()))?
+        .filter_map(|entry| entry.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.extension().map(|x| x == "json").unwrap_or(false)
+                && p.file_name()
+                    .and_then(|n| n.to_str())
+                    .map(|n| n.starts_with("BENCH_"))
+                    .unwrap_or(false)
+        })
+        .collect();
+    names.sort();
+    for base in names {
+        let file = base.file_name().expect("bench file name").to_owned();
+        pairs.push((base, current.join(file)));
+    }
+    if pairs.is_empty() {
+        return Err(format!("no BENCH_*.json baselines in {}", baseline.display()));
+    }
+    Ok(pairs)
+}
+
+fn main() {
+    let args = Args::from_env();
+    let baseline = args.str_or("baseline", "ci/baselines");
+    let current = args.str_or("current", ".");
+    let tolerance: f64 = args.parse_or("tolerance", 0.20);
+
+    let pairs = match collect_pairs(Path::new(&baseline), Path::new(&current)) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("bench_gate: {e}");
+            std::process::exit(2);
+        }
+    };
+
+    let mut failed = false;
+    for (base_path, cur_path) in pairs {
+        let base = match read_json(base_path.to_str().unwrap_or_default()) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("bench_gate: cannot read baseline {}: {e}", base_path.display());
+                failed = true;
+                continue;
+            }
+        };
+        let cur = match read_json(cur_path.to_str().unwrap_or_default()) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!(
+                    "bench_gate: current run missing {} ({e}) — did the bench run?",
+                    cur_path.display()
+                );
+                failed = true;
+                continue;
+            }
+        };
+        let violations: Vec<GateViolation> = gate_records(&base, &cur, tolerance);
+        println!(
+            "bench_gate: {} vs {} — {} baseline records, {} violations (tolerance {:.0}%)",
+            cur_path.display(),
+            base_path.display(),
+            base.len(),
+            violations.len(),
+            tolerance * 100.0
+        );
+        for v in &violations {
+            println!("  {}", v.line());
+        }
+        failed |= !violations.is_empty();
+    }
+    if failed {
+        eprintln!("bench_gate: FAILED — perf regressed beyond tolerance (or records vanished)");
+        std::process::exit(1);
+    }
+    println!("bench_gate: OK");
+}
