@@ -1,0 +1,238 @@
+//! Kernel microbench: the deferred-reduction planar kernels against their
+//! per-element reference implementations (`rns::plane::reference`), plus
+//! the batched CRT path against per-output reconstruction.
+//!
+//! Emits `BENCH_kernels.json` with two kinds of records:
+//!
+//! * absolute ns/op per kernel and size (machine-dependent), and
+//! * same-run **cost ratios** `deferred / per-element` (machine-
+//!   independent, the CI-gated invariant: the deferred lane dot must stay
+//!   at ≤ 0.5× the per-element cost at n ≥ 4096).
+//!
+//! Quick mode for CI: `BENCH_QUICK=1 cargo bench --bench bench_kernels`
+//! (or `--quick`).
+
+mod common;
+
+use std::time::Duration;
+
+use hrfna::rns::barrett::barrett_set;
+use hrfna::rns::moduli::DEFAULT_MODULI;
+use hrfna::rns::plane::{self, reference};
+use hrfna::rns::CrtContext;
+use hrfna::util::bench::{bench_with, write_json, BenchRecord, BenchResult};
+use hrfna::util::cli::Args;
+use hrfna::util::prng::Rng;
+
+fn ratio_record(name: &str, deferred: &BenchResult, per_element: &BenchResult) -> BenchRecord {
+    let ratio = deferred.ns_per_iter / per_element.ns_per_iter.max(1e-9);
+    BenchRecord {
+        name: name.to_string(),
+        n: 1,
+        ns_per_op: ratio,
+        // Speedup of the deferred path (higher is better) rides along in
+        // the throughput column, mirroring serve_dot_planar_cost_ratio.
+        throughput_per_s: 1.0 / ratio.max(1e-12),
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    let quick = args.flag("quick") || std::env::var("BENCH_QUICK").is_ok();
+    common::banner(
+        "§Perf kernels",
+        if quick {
+            "deferred vs per-element lane kernels (quick)"
+        } else {
+            "deferred vs per-element lane kernels"
+        },
+    );
+    let budget = Duration::from_millis(if quick { 60 } else { 300 });
+    let mut rng = Rng::new(7);
+    let bars = barrett_set(&DEFAULT_MODULI);
+    let bar = bars[0];
+    let m = bar.m;
+    let mut records: Vec<BenchRecord> = Vec::new();
+    let sizes: &[usize] = if quick { &[4096] } else { &[1024, 4096, 65536] };
+
+    let mut gated_dot_ratio_n4096 = f64::NAN;
+    for &n in sizes {
+        let x: Vec<u64> = (0..n).map(|_| rng.below(m)).collect();
+        let y: Vec<u64> = (0..n).map(|_| rng.below(m)).collect();
+        let mults: Vec<u64> = (0..n).map(|_| rng.below(m)).collect();
+
+        // --- lane_mul (branch-free Barrett; one path, absolute only) ----
+        let mut out = vec![0u64; n];
+        let r = bench_with(&format!("lane_mul n={n}"), budget, 8, &mut || {
+            plane::lane_mul(bar, &x, &y, &mut out);
+            out[n - 1]
+        });
+        println!("{}", r.line());
+        records.push(BenchRecord::from_result(
+            &format!("kernel_lane_mul_n{n}"),
+            n as u64,
+            &r,
+        ));
+
+        // --- lane_scale: per-element Barrett vs Shoup ------------------
+        let mult = mults[0];
+        let r_ref = bench_with(&format!("lane_scale n={n} (reference)"), budget, 8, &mut || {
+            reference::lane_scale(bar, &x, mult, &mut out);
+            out[n - 1]
+        });
+        let r_shoup = bench_with(&format!("lane_scale n={n} (shoup)"), budget, 8, &mut || {
+            plane::lane_scale(bar, &x, mult, &mut out);
+            out[n - 1]
+        });
+        println!("{}", r_ref.line());
+        println!("{}", r_shoup.line());
+        records.push(BenchRecord::from_result(
+            &format!("kernel_lane_scale_reference_n{n}"),
+            n as u64,
+            &r_ref,
+        ));
+        records.push(BenchRecord::from_result(
+            &format!("kernel_lane_scale_shoup_n{n}"),
+            n as u64,
+            &r_shoup,
+        ));
+
+        // --- lane_dot: per-element vs deferred single-fold -------------
+        let r_ref = bench_with(&format!("lane_dot n={n} (reference)"), budget, 8, &mut || {
+            reference::lane_dot(bar, &x, &y)
+        });
+        let r_def = bench_with(&format!("lane_dot n={n} (deferred)"), budget, 8, &mut || {
+            plane::lane_dot(bar, &x, &y)
+        });
+        println!("{}", r_ref.line());
+        println!("{}", r_def.line());
+        let ratio = r_def.ns_per_iter / r_ref.ns_per_iter;
+        println!("  -> deferred/per-element lane_dot cost ratio at n={n}: {ratio:.3}");
+        records.push(BenchRecord::from_result(
+            &format!("kernel_lane_dot_reference_n{n}"),
+            n as u64,
+            &r_ref,
+        ));
+        records.push(BenchRecord::from_result(
+            &format!("kernel_lane_dot_deferred_n{n}"),
+            n as u64,
+            &r_def,
+        ));
+        if n >= 4096 {
+            records.push(ratio_record(
+                &format!("kernel_lane_dot_cost_ratio_n{n}"),
+                &r_def,
+                &r_ref,
+            ));
+        }
+        if n == 4096 {
+            gated_dot_ratio_n4096 = ratio;
+        }
+
+        // --- lane_dot_scaled: per-element vs deferred ------------------
+        let r_ref = bench_with(
+            &format!("lane_dot_scaled n={n} (reference)"),
+            budget,
+            8,
+            &mut || reference::lane_dot_scaled(bar, &x, &y, &mults),
+        );
+        let r_def = bench_with(
+            &format!("lane_dot_scaled n={n} (deferred)"),
+            budget,
+            8,
+            &mut || plane::lane_dot_scaled(bar, &x, &y, &mults),
+        );
+        println!("{}", r_ref.line());
+        println!("{}", r_def.line());
+        records.push(BenchRecord::from_result(
+            &format!("kernel_lane_dot_scaled_deferred_n{n}"),
+            n as u64,
+            &r_def,
+        ));
+
+        // --- lane_fma: per-element vs deferred -------------------------
+        let mut acc = vec![0u64; n];
+        let r_ref = bench_with(&format!("lane_fma n={n} (reference)"), budget, 8, &mut || {
+            reference::lane_fma(bar, &mut acc, &x, &y);
+            acc[n - 1]
+        });
+        let mut acc2 = vec![0u64; n];
+        let r_def = bench_with(&format!("lane_fma n={n} (deferred)"), budget, 8, &mut || {
+            plane::lane_fma(bar, &mut acc2, &x, &y);
+            acc2[n - 1]
+        });
+        println!("{}", r_ref.line());
+        println!("{}", r_def.line());
+        records.push(BenchRecord::from_result(
+            &format!("kernel_lane_fma_reference_n{n}"),
+            n as u64,
+            &r_ref,
+        ));
+        records.push(BenchRecord::from_result(
+            &format!("kernel_lane_fma_deferred_n{n}"),
+            n as u64,
+            &r_def,
+        ));
+        if n == 4096 {
+            records.push(ratio_record("kernel_lane_fma_cost_ratio_n4096", &r_def, &r_ref));
+        }
+    }
+
+    // --- batched CRT vs per-output reconstruction ----------------------
+    // Fixed batch size in both modes so the record names (and thus the
+    // committed baseline) stay stable; quick mode only shortens the
+    // per-case time budget.
+    let crt = CrtContext::new(&DEFAULT_MODULI);
+    let b = 1024;
+    let k = crt.k();
+    let mut lanes = vec![0u64; k * b];
+    for j in 0..b {
+        let v = rng.next_u64();
+        for (c, &mc) in DEFAULT_MODULI.iter().enumerate() {
+            lanes[c * b + j] = v % mc;
+        }
+    }
+    let r_per = bench_with(&format!("crt signed b={b} (per-output)"), budget, 8, &mut || {
+        let mut negs = 0usize;
+        for j in 0..b {
+            let rv = hrfna::rns::ResidueVec {
+                r: (0..k).map(|c| lanes[c * b + j]).collect(),
+            };
+            let (neg, _) = crt.reconstruct_signed(&rv);
+            negs += neg as usize;
+        }
+        negs
+    });
+    let r_batch = bench_with(&format!("crt signed b={b} (batched)"), budget, 8, &mut || {
+        crt.reconstruct_signed_batch(&lanes, b).len()
+    });
+    println!("{}", r_per.line());
+    println!("{}", r_batch.line());
+    records.push(BenchRecord::from_result(
+        &format!("kernel_crt_signed_per_output_b{b}"),
+        b as u64,
+        &r_per,
+    ));
+    records.push(BenchRecord::from_result(
+        &format!("kernel_crt_signed_batch_b{b}"),
+        b as u64,
+        &r_batch,
+    ));
+    records.push(ratio_record("kernel_crt_batch_cost_ratio", &r_batch, &r_per));
+
+    match write_json("BENCH_kernels.json", &records) {
+        Ok(()) => println!("\nwrote BENCH_kernels.json ({} records)", records.len()),
+        Err(e) => eprintln!("could not write BENCH_kernels.json: {e}"),
+    }
+
+    // The protected invariant (also enforced by the CI gate against
+    // ci/baselines/BENCH_kernels.json): deferred lane_dot at ≤ 0.5× the
+    // per-element cost at n = 4096. Asserted outright in full mode only —
+    // quick-mode timings on shared runners are too noisy to hard-fail.
+    if !quick {
+        assert!(
+            gated_dot_ratio_n4096 <= 0.5,
+            "deferred lane_dot cost ratio {gated_dot_ratio_n4096:.3} exceeds 0.5 at n=4096"
+        );
+    }
+}

@@ -6,7 +6,8 @@ mod toml;
 pub use toml::TomlDoc;
 
 use crate::rns::moduli::{
-    default_moduli, dynamic_range_bits, generate_prime_moduli, is_pairwise_coprime,
+    default_moduli, dynamic_range_bits, fits_lane_width, generate_prime_moduli,
+    is_pairwise_coprime,
 };
 
 /// HRFNA numeric + microarchitecture configuration (paper Table II).
@@ -91,8 +92,12 @@ impl HrfnaConfig {
         if !is_pairwise_coprime(&self.moduli) {
             return Err("moduli not pairwise coprime".into());
         }
-        if self.moduli.iter().any(|&m| m < 2 || m >= 1 << 32) {
-            return Err("moduli must be in [2, 2^32)".into());
+        if self.moduli.iter().any(|&m| !fits_lane_width(m)) {
+            return Err(
+                "moduli must be in [2, 2^31): the deferred lane kernels form raw 62-bit \
+                 residue products (rns::moduli::MAX_LANE_MODULUS_BITS)"
+                    .into(),
+            );
         }
         let m_bits = self.m_bits();
         if (self.tau_bits as f64) >= m_bits {
@@ -185,6 +190,12 @@ mod tests {
 
         let mut c = HrfnaConfig::paper_default();
         c.sig_bits = c.tau_bits;
+        assert!(c.validate().is_err());
+
+        // 32-bit moduli break the deferred lane kernels' 62-bit product
+        // invariant and must be rejected at config time.
+        let mut c = HrfnaConfig::paper_default();
+        c.moduli = vec![65521, 4_294_967_291];
         assert!(c.validate().is_err());
     }
 

@@ -34,9 +34,10 @@
 //! §VII-E's measured rarity.
 
 use anyhow::Result;
+use std::sync::atomic::Ordering;
 
 use super::request::{Job, JobKind, Payload};
-use crate::hybrid::number::{ldexp_staged, pow2};
+use crate::hybrid::number::{ldexp_staged, pow2, signed_mag_to_f64};
 use crate::hybrid::{Hrfna, HrfnaContext};
 use crate::rns::plane::{self, ResiduePlane};
 use crate::rns::ResidueVec;
@@ -140,8 +141,10 @@ pub fn encode_dot_batch(ops: &[&[f64]], n: usize, ctx: &HrfnaContext) -> DotBatc
 }
 
 /// Per-job planar dot products over two batch-encoded planes: one
-/// contiguous `lane_dot` window per channel per job, then exactly one CRT
-/// reconstruction per requested output.
+/// contiguous single-fold `lane_dot` window per channel per job, all B·k
+/// dot residues collected channel-major, then **one batched** signed CRT
+/// pass over them (scratch and per-modulus tables hoisted out of the
+/// per-output loop) instead of B independent reconstructions.
 pub fn planar_dot_results(
     x: &DotBatchEncoded,
     y: &DotBatchEncoded,
@@ -149,20 +152,31 @@ pub fn planar_dot_results(
 ) -> Vec<f64> {
     debug_assert_eq!(x.n, y.n);
     debug_assert_eq!(x.f.len(), y.f.len());
-    let k = ctx.k();
     let n = x.n;
-    let bars = ctx.barrett();
-    let mut out = Vec::with_capacity(x.f.len());
-    let mut res = vec![0i64; k];
-    for j in 0..x.f.len() {
-        for (c, r) in res.iter_mut().enumerate() {
-            let xs = &x.plane.lane(c)[j * n..(j + 1) * n];
-            let ys = &y.plane.lane(c)[j * n..(j + 1) * n];
-            *r = plane::lane_dot(bars[c], xs, ys) as i64;
-        }
-        out.push(decode_scalar(&res, x.f[j] + y.f[j], ctx));
+    let b = x.f.len();
+    if b == 0 {
+        return Vec::new();
     }
-    out
+    let bars = ctx.barrett();
+    // Channel-major k×B block of dot residues, walked lane-by-lane so the
+    // operand planes stream contiguously.
+    let mut res = vec![0u64; ctx.k() * b];
+    for (c, row) in res.chunks_mut(b).enumerate() {
+        let xl = x.plane.lane(c);
+        let yl = y.plane.lane(c);
+        for (j, out) in row.iter_mut().enumerate() {
+            *out = plane::lane_dot(bars[c], &xl[j * n..(j + 1) * n], &yl[j * n..(j + 1) * n]);
+        }
+    }
+    ctx.counters
+        .reconstructions
+        .fetch_add(b as u64, Ordering::Relaxed);
+    ctx.crt
+        .reconstruct_signed_batch(&res, b)
+        .into_iter()
+        .enumerate()
+        .map(|(j, (neg, mag))| signed_mag_to_f64(neg, &mag, x.f[j] + y.f[j]))
+        .collect()
 }
 
 /// Decode per-channel dot-product residues (k values) at exponent `f`.
@@ -172,24 +186,22 @@ pub fn decode_scalar(residues: &[i64], f: i32, ctx: &HrfnaContext) -> f64 {
         r: residues.iter().map(|&r| r as u64).collect(),
     };
     let (neg, mag) = ctx.crt.reconstruct_signed(&rv);
-    let v = ldexp_staged(mag.to_f64(), f);
-    if neg {
-        -v
-    } else {
-        v
-    }
+    signed_mag_to_f64(neg, &mag, f)
 }
 
 /// Decode a `k × m × n` residue tensor (channel-major) into `m·n` reals at
-/// exponent `f`.
+/// exponent `f` — one batched signed CRT pass reading the `i64` tensor in
+/// place (no per-output gather vector).
 pub fn decode_matrix(residues: &[i64], mn: usize, f: i32, ctx: &HrfnaContext) -> Vec<f64> {
     let k = ctx.k();
     assert_eq!(residues.len(), k * mn);
-    (0..mn)
-        .map(|j| {
-            let per_channel: Vec<i64> = (0..k).map(|c| residues[c * mn + j]).collect();
-            decode_scalar(&per_channel, f, ctx)
-        })
+    ctx.counters
+        .reconstructions
+        .fetch_add(mn as u64, Ordering::Relaxed);
+    ctx.crt
+        .reconstruct_signed_batch_with(mn, |c, j| residues[c * mn + j] as u64)
+        .into_iter()
+        .map(|(neg, mag)| signed_mag_to_f64(neg, &mag, f))
         .collect()
 }
 
@@ -546,6 +558,44 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn planar_dot_results_bit_identical_to_per_output_decode() {
+        // The batched-CRT path must reproduce the former per-output
+        // decode_scalar results bit for bit (including all-zero jobs).
+        let c = ctx();
+        let mut rng = Rng::new(23);
+        let n = 64;
+        let jobs: Vec<Vec<f64>> = (0..5)
+            .map(|i| {
+                if i == 2 {
+                    vec![0.0; n]
+                } else {
+                    Dist::high_dynamic_range().sample_vec(&mut rng, n)
+                }
+            })
+            .collect();
+        let ys: Vec<Vec<f64>> = (0..5)
+            .map(|_| Dist::moderate().sample_vec(&mut rng, n))
+            .collect();
+        let sx: Vec<&[f64]> = jobs.iter().map(|v| v.as_slice()).collect();
+        let sy: Vec<&[f64]> = ys.iter().map(|v| v.as_slice()).collect();
+        let ex = encode_dot_batch(&sx, n, &c);
+        let ey = encode_dot_batch(&sy, n, &c);
+        let got = planar_dot_results(&ex, &ey, &c);
+        let bars = c.barrett();
+        for (j, &g) in got.iter().enumerate() {
+            let res: Vec<i64> = (0..c.k())
+                .map(|ch| {
+                    let xs = &ex.plane.lane(ch)[j * n..(j + 1) * n];
+                    let yl = &ey.plane.lane(ch)[j * n..(j + 1) * n];
+                    plane::lane_dot(bars[ch], xs, yl) as i64
+                })
+                .collect();
+            let want = decode_scalar(&res, ex.f[j] + ey.f[j], &c);
+            assert_eq!(g.to_bits(), want.to_bits(), "job {j}: {g} vs {want}");
         }
     }
 

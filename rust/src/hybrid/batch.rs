@@ -29,7 +29,7 @@ use std::sync::atomic::Ordering;
 
 use super::context::HrfnaContext;
 use super::interval::Interval;
-use super::number::{pow2, Hrfna};
+use super::number::{pow2, signed_mag_to_f64, Hrfna};
 use crate::rns::plane::{self, ResiduePlane};
 use crate::rns::residue::ResidueVec;
 
@@ -191,9 +191,21 @@ impl HrfnaBatch {
         (0..self.len()).map(|j| self.get(j)).collect()
     }
 
-    /// Decode every element (one CRT reconstruction per element).
+    /// Decode every element: one **batched** signed CRT pass straight over
+    /// the channel-major lanes (scratch and per-modulus tables hoisted,
+    /// no per-element `ResidueVec` gather), then the per-element exponent
+    /// apply. Bit-identical to `self.get(j).decode(ctx)` for every `j`.
     pub fn decode(&self, ctx: &HrfnaContext) -> Vec<f64> {
-        (0..self.len()).map(|j| self.get(j).decode(ctx)).collect()
+        let n = self.len();
+        ctx.counters
+            .reconstructions
+            .fetch_add(n as u64, Ordering::Relaxed);
+        ctx.crt
+            .reconstruct_signed_batch(self.res.lanes(), n)
+            .into_iter()
+            .zip(&self.f)
+            .map(|((neg, mag), &f)| signed_mag_to_f64(neg, &mag, f))
+            .collect()
     }
 
     // ------------------------------------------------------------------
@@ -780,6 +792,26 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn batch_decode_bit_identical_to_scalar_decode() {
+        // decode now runs one batched CRT pass; it must agree bit for bit
+        // with the per-element scalar decode (and count the same number
+        // of reconstructions).
+        let c = ctx();
+        let mut rng = Rng::new(77);
+        let items = random_values(&mut rng, 17, &c);
+        let b = HrfnaBatch::from_items(&items, c.k());
+        let before = c.snapshot().reconstructions;
+        let got = b.decode(&c);
+        assert_eq!(c.snapshot().reconstructions, before + 17);
+        for (j, it) in items.iter().enumerate() {
+            let want = it.decode(&c);
+            assert_eq!(got[j].to_bits(), want.to_bits(), "j={j} {} vs {want}", got[j]);
+        }
+        // Empty batch decodes to an empty vector.
+        assert!(HrfnaBatch::zeros(0, &c).decode(&c).is_empty());
     }
 
     #[test]

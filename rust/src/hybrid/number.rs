@@ -87,12 +87,7 @@ impl Hrfna {
     pub fn decode(&self, ctx: &HrfnaContext) -> f64 {
         HrfnaContext::count(&ctx.counters.reconstructions);
         let (neg, mag) = ctx.crt.reconstruct_signed(&self.r);
-        let v = ldexp_staged(mag.to_f64(), self.f);
-        if neg {
-            -v
-        } else {
-            v
-        }
+        signed_mag_to_f64(neg, &mag, self.f)
     }
 
     /// True iff the value is exactly zero (all residues zero).
@@ -365,6 +360,20 @@ impl Hrfna {
         // Allow the to_f64 truncation slack on the exact value itself.
         let slack = n.abs() * 1e-12 + 1e-9;
         self.iv.lo - slack <= n && n <= self.iv.hi + slack
+    }
+}
+
+/// The shared decode tail: apply the M-complement sign and the exponent
+/// to a reconstructed magnitude, `±mag · 2^f`. Every decode path — the
+/// scalar [`Hrfna::decode`] and the batched-CRT consumers — goes through
+/// this one function so the conventions can never desynchronize.
+#[inline]
+pub fn signed_mag_to_f64(neg: bool, mag: &BigUint, f: i32) -> f64 {
+    let v = ldexp_staged(mag.to_f64(), f);
+    if neg {
+        -v
+    } else {
+        v
     }
 }
 

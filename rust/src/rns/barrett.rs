@@ -1,12 +1,39 @@
-//! Barrett reduction with precomputed per-modulus constants.
+//! Barrett reduction with precomputed per-modulus constants, plus the
+//! Shoup multiply and deferred-accumulator folds the planar lane kernels
+//! are built on.
 //!
 //! This is the software mirror of the paper's RTL reduction logic (§VI-B:
 //! "Reduction is implemented with precomputed constants and structured
 //! reduction logic"). For a modulus `m < 2^32` we precompute
-//! `mu = ⌊2^64 / m⌋`; for `x < m^2 ≤ 2^64` the estimate `q = ⌊x·mu / 2^64⌋`
-//! satisfies `q ≤ ⌊x/m⌋ ≤ q + 2`, so at most two conditional subtractions
-//! complete the reduction — branch-predictable and constant-ish time, which
-//! is also why it maps to short FPGA carry chains.
+//! `mu = ⌊2^64 / m⌋`; writing `2^64 = mu·m + ρ` with `ρ ∈ [0, m)`, the
+//! estimate `q = ⌊x·mu / 2^64⌋` for any `x < 2^64` satisfies
+//! `x − q·m < x·ρ/2^64 + m < 2m`, so a **single** conditional subtraction
+//! completes the reduction — branch-free, constant-time-ish, and exactly
+//! the short carry chain the FPGA reduction unit evaluates. A second
+//! (provably dead) conditional subtract is kept as a safety net.
+//!
+//! Lane kernels additionally rely on the 31-bit modulus invariant
+//! ([`crate::rns::moduli::MAX_LANE_MODULUS_BITS`]): residue products then
+//! fit in 62 bits, so they can be formed with one plain `u64` multiply and
+//! summed raw into `u128` accumulators, deferring all reduction work to a
+//! single [`Barrett::reduce_u128`] fold. [`barrett_set`] — the constructor
+//! every modulus *set* goes through — enforces that invariant; the scalar
+//! [`Barrett::new`] keeps the historical `m < 2^32` contract.
+
+use crate::rns::moduli::MAX_LANE_MODULUS_BITS;
+use thiserror::Error;
+
+/// Why a modulus was rejected by the checked constructor.
+#[derive(Clone, Copy, Debug, Error, PartialEq, Eq)]
+pub enum BarrettError {
+    /// Moduli below 2 have no residue arithmetic.
+    #[error("modulus {0} is below 2")]
+    TooSmall(u64),
+    /// The deferred lane kernels need `m < 2^31` so raw products fit 62
+    /// bits (see `rns::moduli::MAX_LANE_MODULUS_BITS`).
+    #[error("modulus {0} exceeds 31 bits; lane kernels accumulate raw 62-bit products")]
+    TooWide(u64),
+}
 
 /// Precomputed Barrett constants for one modulus.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -18,7 +45,7 @@ pub struct Barrett {
 }
 
 impl Barrett {
-    /// Precompute constants for modulus `m`.
+    /// Precompute constants for modulus `m` (scalar contract: `m < 2^32`).
     pub fn new(m: u64) -> Barrett {
         assert!(m >= 2, "modulus must be >= 2");
         assert!(m < 1 << 32, "Barrett path requires m < 2^32");
@@ -27,18 +54,85 @@ impl Barrett {
         Barrett { m, mu }
     }
 
+    /// Checked lane constructor: enforces the 31-bit modulus invariant the
+    /// deferred-reduction kernels depend on (`2 ≤ m < 2^31`). Every
+    /// modulus set goes through this via [`barrett_set`].
+    pub fn try_new(m: u64) -> Result<Barrett, BarrettError> {
+        if m < 2 {
+            return Err(BarrettError::TooSmall(m));
+        }
+        if m >= 1 << MAX_LANE_MODULUS_BITS {
+            return Err(BarrettError::TooWide(m));
+        }
+        Ok(Barrett::new(m))
+    }
+
+    /// True iff this modulus satisfies the 31-bit lane invariant, i.e. the
+    /// deferred kernels may form raw `u64` products of its residues.
+    #[inline]
+    pub fn deferred_ok(&self) -> bool {
+        self.m < 1 << MAX_LANE_MODULUS_BITS
+    }
+
+    /// `2^64 mod m`, derived from the stored constants:
+    /// `2^64 = mu·m + ρ` so `ρ = 0 − mu·m` in wrapping u64 arithmetic.
+    #[inline]
+    fn pow2_64_mod(&self) -> u64 {
+        self.mu.wrapping_mul(self.m).wrapping_neg()
+    }
+
     /// Reduce `x` (any u64, in particular a product of two values < m)
     /// modulo `m`.
     #[inline]
     pub fn reduce(&self, x: u64) -> u64 {
-        // q ≈ floor(x / m) via the high half of x * mu.
+        // q ≈ floor(x / m) via the high half of x * mu; the estimate is
+        // off by less than 2 for every x < 2^64 (module doc), so the
+        // remainder lands in [0, 2m) and one conditional subtract — kept
+        // branch-free so the lane loops stay vectorizable — finishes.
         let q = ((x as u128 * self.mu as u128) >> 64) as u64;
         let mut r = x.wrapping_sub(q.wrapping_mul(self.m));
-        // At most two correction steps.
-        while r >= self.m {
-            r -= self.m;
-        }
+        r = if r >= self.m { r - self.m } else { r };
+        // Dead by the error bound; retained as a safety net (still a cmov).
+        r = if r >= self.m { r - self.m } else { r };
         r
+    }
+
+    /// Reduce a 128-bit value (a deferred lane accumulator) modulo `m`:
+    /// split into `hi·2^64 + lo` and recombine through `2^64 mod m`. One
+    /// call folds an entire accumulation chunk, which is the whole point
+    /// of deferring.
+    #[inline]
+    pub fn reduce_u128(&self, x: u128) -> u64 {
+        let lo = self.reduce(x as u64);
+        let hi = self.reduce((x >> 64) as u64);
+        // hi·2^64 + lo ≡ hi·ρ + lo (mod m); hi, ρ < m < 2^32 so the
+        // product fits u64.
+        self.add(self.reduce(hi * self.pow2_64_mod()), lo)
+    }
+
+    /// Shoup precomputation for a fixed multiplier: `⌊mult·2^64 / m⌋`.
+    /// Pair with [`Barrett::mul_shoup`] when one multiplier streams
+    /// against a whole lane (residue-domain scaling by `2^Δ mod m`).
+    #[inline]
+    pub fn shoup(&self, mult: u64) -> u64 {
+        debug_assert!(mult < self.m);
+        (((mult as u128) << 64) / self.m as u128) as u64
+    }
+
+    /// `(a * mult) mod m` with the precomputed Shoup constant: one mul-hi
+    /// (`a·shoup`), one mul-lo pair (`a·mult − q·m`), and a single
+    /// conditional subtract — the same error bound as [`Barrett::reduce`]
+    /// gives `r < 2m` for any `a < 2^64`.
+    #[inline]
+    pub fn mul_shoup(&self, a: u64, mult: u64, shoup: u64) -> u64 {
+        debug_assert!(a < self.m && mult < self.m);
+        let q = ((a as u128 * shoup as u128) >> 64) as u64;
+        let r = a.wrapping_mul(mult).wrapping_sub(q.wrapping_mul(self.m));
+        if r >= self.m {
+            r - self.m
+        } else {
+            r
+        }
     }
 
     /// `(a * b) mod m` for `a, b < m`.
@@ -73,9 +167,15 @@ impl Barrett {
     }
 }
 
-/// Precompute Barrett contexts for a modulus set.
+/// Precompute Barrett contexts for a modulus set, validating the 31-bit
+/// lane invariant (every set built here may take the deferred kernels).
+/// Panics with the offending modulus on violation — modulus sets are
+/// setup-time configuration, not request-path data.
 pub fn barrett_set(moduli: &[u64]) -> Vec<Barrett> {
-    moduli.iter().map(|&m| Barrett::new(m)).collect()
+    moduli
+        .iter()
+        .map(|&m| Barrett::try_new(m).unwrap_or_else(|e| panic!("barrett_set: {e}")))
+        .collect()
 }
 
 #[cfg(test)]
@@ -124,6 +224,69 @@ mod tests {
     #[should_panic]
     fn modulus_too_large_panics() {
         Barrett::new(1 << 32);
+    }
+
+    #[test]
+    fn try_new_enforces_lane_width() {
+        assert_eq!(Barrett::try_new(0), Err(BarrettError::TooSmall(0)));
+        assert_eq!(Barrett::try_new(1), Err(BarrettError::TooSmall(1)));
+        assert_eq!(
+            Barrett::try_new(1 << 31),
+            Err(BarrettError::TooWide(1 << 31))
+        );
+        assert_eq!(
+            Barrett::try_new((1 << 32) - 5),
+            Err(BarrettError::TooWide((1 << 32) - 5))
+        );
+        let ok = Barrett::try_new((1 << 31) - 1).unwrap();
+        assert!(ok.deferred_ok());
+        // The scalar constructor still admits 32-bit moduli, but they are
+        // flagged as unusable by the deferred kernels.
+        assert!(!Barrett::new((1 << 32) - 5).deferred_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "barrett_set")]
+    fn barrett_set_rejects_wide_modulus() {
+        barrett_set(&[65521, (1 << 32) - 5]);
+    }
+
+    #[test]
+    fn reduce_u128_matches_rem() {
+        for &m in &[3u64, 97, 65521, (1 << 31) - 1, (1 << 32) - 5] {
+            let b = Barrett::new(m);
+            for x in [
+                0u128,
+                1,
+                (m as u128) * (m as u128),
+                u64::MAX as u128,
+                u64::MAX as u128 + 1,
+                u128::MAX,
+                u128::MAX - 7,
+                1u128 << 64,
+                (1u128 << 64) - 1,
+            ] {
+                assert_eq!(b.reduce_u128(x), (x % m as u128) as u64, "m={m} x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn mul_shoup_matches_mul() {
+        for &m in &[3u64, 97, 65521, (1 << 31) - 1] {
+            let b = Barrett::new(m);
+            for mult in [0u64, 1, 2, m / 2, m - 1] {
+                let sh = b.shoup(mult);
+                for a in [0u64, 1, m / 3, m / 2, m - 2, m - 1] {
+                    let a = a % m;
+                    assert_eq!(
+                        b.mul_shoup(a, mult, sh),
+                        b.mul(a, mult),
+                        "m={m} a={a} mult={mult}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]
@@ -176,6 +339,27 @@ mod tests {
             let b = Barrett::new(m);
             let x = rng.next_u64();
             crate::prop_assert!(b.reduce(x) == x % m, "m={m} x={x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_reduce_u128_and_shoup_equal_rem() {
+        check("barrett-reduce-u128-shoup", |rng| {
+            let m = rng.below((1u64 << 31) - 2) + 2;
+            let b = Barrett::try_new(m).expect("lane-width modulus");
+            let x = ((rng.next_u64() as u128) << 64) | rng.next_u64() as u128;
+            crate::prop_assert!(
+                b.reduce_u128(x) == (x % m as u128) as u64,
+                "reduce_u128 m={m} x={x}"
+            );
+            let a = rng.below(m);
+            let mult = rng.below(m);
+            let sh = b.shoup(mult);
+            crate::prop_assert!(
+                b.mul_shoup(a, mult, sh) == b.mul(a, mult),
+                "mul_shoup m={m} a={a} mult={mult}"
+            );
             Ok(())
         });
     }

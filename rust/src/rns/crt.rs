@@ -47,6 +47,11 @@ pub struct CrtContext {
     term_limbs: Vec<[u64; FIXED_LIMBS]>,
     /// M as fixed limbs.
     m_limbs: [u64; FIXED_LIMBS],
+    /// ⌊M/2⌋ — the M-complement sign boundary, hoisted out of every
+    /// signed reconstruction (it used to be recomputed per call).
+    half: BigUint,
+    /// ⌊M/2⌋ as fixed limbs for the stack-array sign test.
+    half_limbs: [u64; FIXED_LIMBS],
     /// True when k and bit sizes fit the fixed-width fast path.
     fixed_ok: bool,
 }
@@ -69,9 +74,9 @@ fn to_fixed(b: &BigUint) -> Option<[u64; FIXED_LIMBS]> {
 #[inline]
 fn fixed_mul_acc(acc: &mut [u64; FIXED_LIMBS], t: &[u64; FIXED_LIMBS], r: u64) -> bool {
     let mut carry: u128 = 0;
-    for i in 0..FIXED_LIMBS {
-        let v = acc[i] as u128 + (t[i] as u128) * (r as u128) + carry;
-        acc[i] = v as u64;
+    for (a, &tl) in acc.iter_mut().zip(t) {
+        let v = *a as u128 + (tl as u128) * (r as u128) + carry;
+        *a = v as u64;
         carry = v >> 64;
     }
     carry != 0
@@ -80,8 +85,8 @@ fn fixed_mul_acc(acc: &mut [u64; FIXED_LIMBS], t: &[u64; FIXED_LIMBS], r: u64) -
 /// Compare fixed-width values.
 #[inline]
 fn fixed_cmp(a: &[u64; FIXED_LIMBS], b: &[u64; FIXED_LIMBS]) -> std::cmp::Ordering {
-    for i in (0..FIXED_LIMBS).rev() {
-        match a[i].cmp(&b[i]) {
+    for (al, bl) in a.iter().zip(b).rev() {
+        match al.cmp(bl) {
             std::cmp::Ordering::Equal => continue,
             o => return o,
         }
@@ -93,10 +98,10 @@ fn fixed_cmp(a: &[u64; FIXED_LIMBS], b: &[u64; FIXED_LIMBS]) -> std::cmp::Orderi
 #[inline]
 fn fixed_sub(a: &mut [u64; FIXED_LIMBS], b: &[u64; FIXED_LIMBS]) {
     let mut borrow = 0u64;
-    for i in 0..FIXED_LIMBS {
-        let (d1, b1) = a[i].overflowing_sub(b[i]);
+    for (al, &bl) in a.iter_mut().zip(b) {
+        let (d1, b1) = al.overflowing_sub(bl);
         let (d2, b2) = d1.overflowing_sub(borrow);
-        a[i] = d2;
+        *al = d2;
         borrow = (b1 as u64) + (b2 as u64);
     }
     debug_assert_eq!(borrow, 0);
@@ -142,6 +147,8 @@ impl CrtContext {
             .map(|t| to_fixed(t).unwrap_or([0; FIXED_LIMBS]))
             .collect();
         let m_limbs = to_fixed(&big_m).unwrap_or([0; FIXED_LIMBS]);
+        let half = big_m.shr(1);
+        let half_limbs = to_fixed(&half).unwrap_or([0; FIXED_LIMBS]);
         CrtContext {
             barrett: barrett_set(moduli),
             moduli: moduli.to_vec(),
@@ -150,6 +157,8 @@ impl CrtContext {
             mrc_inv,
             term_limbs,
             m_limbs,
+            half,
+            half_limbs,
             fixed_ok,
         }
     }
@@ -159,32 +168,35 @@ impl CrtContext {
         self.moduli.len()
     }
 
-    /// CRT reconstruction: the unique `N ∈ [0, M)` with `N ≡ r_i (mod m_i)`.
-    ///
-    /// §Perf: the default path accumulates `Σ rᵢ·Tᵢ` in a fixed-width
-    /// stack array and reduces mod M by (at most k) conditional
-    /// subtractions of shifted M — no heap allocation, no general
-    /// division. Falls back to BigUint for exotic modulus sets.
-    pub fn reconstruct(&self, r: &ResidueVec) -> BigUint {
-        assert_eq!(r.k(), self.k());
-        if !self.fixed_ok {
-            return self.reconstruct_slow(r);
-        }
+    /// The fixed-width accumulation core: `acc = Σ read(i)·Tᵢ mod M` over
+    /// a stack array. `read(i)` supplies channel `i`'s residue, so batch
+    /// callers can stream residues straight out of channel-major lanes
+    /// with no per-output `ResidueVec` gather.
+    #[inline]
+    fn fixed_accumulate(&self, mut read: impl FnMut(usize) -> u64) -> [u64; FIXED_LIMBS] {
         let mut acc = [0u64; FIXED_LIMBS];
-        for (i, &ri) in r.r.iter().enumerate() {
+        for (i, term) in self.term_limbs.iter().enumerate() {
+            let ri = read(i);
             if ri != 0 {
-                let overflow = fixed_mul_acc(&mut acc, &self.term_limbs[i], ri);
+                let overflow = fixed_mul_acc(&mut acc, term, ri);
                 debug_assert!(!overflow, "fixed-width CRT overflow");
             }
         }
-        // acc < k·max(m)·M ≤ M << ~20 bits: reduce by shifted subtraction.
+        self.fixed_reduce_mod_m(&mut acc);
+        acc
+    }
+
+    /// Reduce a fixed-width `acc < k·max(m)·M` (≤ M << ~20 bits) mod M by
+    /// conditional subtractions of shifted M — no heap allocation, no
+    /// general division.
+    fn fixed_reduce_mod_m(&self, acc: &mut [u64; FIXED_LIMBS]) {
         // Find the highest shift where (M << s) could still be ≤ acc.
         let m_bits = self.big_m.bit_length();
         let acc_bits = {
             let mut bits = 0;
-            for i in (0..FIXED_LIMBS).rev() {
-                if acc[i] != 0 {
-                    bits = i as u32 * 64 + (64 - acc[i].leading_zeros());
+            for (i, &limb) in acc.iter().enumerate().rev() {
+                if limb != 0 {
+                    bits = i as u32 * 64 + (64 - limb.leading_zeros());
                     break;
                 }
             }
@@ -206,8 +218,8 @@ impl CrtContext {
                     };
                     shifted[i + limb_s] = lo | hi;
                 }
-                while fixed_cmp(&acc, &shifted) != std::cmp::Ordering::Less {
-                    fixed_sub(&mut acc, &shifted);
+                while fixed_cmp(acc, &shifted) != std::cmp::Ordering::Less {
+                    fixed_sub(acc, &shifted);
                 }
                 if s == 0 {
                     break;
@@ -215,6 +227,45 @@ impl CrtContext {
                 s -= 1;
             }
         }
+    }
+
+    /// Apply the M-complement sign convention to a fixed-width `N ∈ [0, M)`
+    /// using the precomputed ⌊M/2⌋ limbs (no BigUint compare, no per-call
+    /// shift).
+    #[inline]
+    fn signed_from_fixed(&self, acc: [u64; FIXED_LIMBS]) -> (bool, BigUint) {
+        if fixed_cmp(&acc, &self.half_limbs) != std::cmp::Ordering::Less {
+            let mut mag = self.m_limbs;
+            fixed_sub(&mut mag, &acc);
+            (true, BigUint::from_limbs(mag.to_vec()))
+        } else {
+            (false, BigUint::from_limbs(acc.to_vec()))
+        }
+    }
+
+    /// Sign convention on a BigUint `N ∈ [0, M)` (slow-path mirror of
+    /// [`CrtContext::signed_from_fixed`]).
+    #[inline]
+    fn signed_from_big(&self, n: BigUint) -> (bool, BigUint) {
+        if n >= self.half {
+            (true, self.big_m.sub(&n))
+        } else {
+            (false, n)
+        }
+    }
+
+    /// CRT reconstruction: the unique `N ∈ [0, M)` with `N ≡ r_i (mod m_i)`.
+    ///
+    /// §Perf: the default path accumulates `Σ rᵢ·Tᵢ` in a fixed-width
+    /// stack array and reduces mod M by (at most k) conditional
+    /// subtractions of shifted M — no heap allocation, no general
+    /// division. Falls back to BigUint for exotic modulus sets.
+    pub fn reconstruct(&self, r: &ResidueVec) -> BigUint {
+        assert_eq!(r.k(), self.k());
+        if !self.fixed_ok {
+            return self.reconstruct_slow(r);
+        }
+        let acc = self.fixed_accumulate(|i| r.r[i]);
         BigUint::from_limbs(acc.to_vec())
     }
 
@@ -233,12 +284,68 @@ impl CrtContext {
     /// `[0, M/2)` are non-negative, `[M/2, M)` map to `N - M` (standard RNS
     /// sign handling; HRFNA encodes negatives this way).
     pub fn reconstruct_signed(&self, r: &ResidueVec) -> (bool, BigUint) {
-        let n = self.reconstruct(r);
-        let half = self.big_m.shr(1);
-        if n >= half {
-            (true, self.big_m.sub(&n))
+        assert_eq!(r.k(), self.k());
+        if !self.fixed_ok {
+            let n = self.reconstruct_slow(r);
+            return self.signed_from_big(n);
+        }
+        self.signed_from_fixed(self.fixed_accumulate(|i| r.r[i]))
+    }
+
+    /// Batched CRT over channel-major lanes (`lanes[c*n + j]` is channel
+    /// `c` of output `j` — a [`super::plane::ResiduePlane`] buffer or any
+    /// `k × n` residue block). The per-modulus `(invᵢ·Mᵢ) mod M` term
+    /// table, the fixed-limb scratch discipline and the reduction state
+    /// are hoisted out of the per-output loop — no per-output
+    /// `ResidueVec`, no per-output sign-boundary recompute.
+    pub fn reconstruct_batch(&self, lanes: &[u64], n: usize) -> Vec<BigUint> {
+        assert_eq!(lanes.len(), self.k() * n, "lanes must be k×n channel-major");
+        if self.fixed_ok {
+            (0..n)
+                .map(|j| BigUint::from_limbs(self.fixed_accumulate(|c| lanes[c * n + j]).to_vec()))
+                .collect()
         } else {
-            (false, n)
+            (0..n)
+                .map(|j| self.reconstruct_slow(&self.gather(lanes, n, j)))
+                .collect()
+        }
+    }
+
+    /// Batched signed reconstruction over channel-major lanes (see
+    /// [`CrtContext::reconstruct_batch`]); one `(negative, magnitude)`
+    /// pair per output.
+    pub fn reconstruct_signed_batch(&self, lanes: &[u64], n: usize) -> Vec<(bool, BigUint)> {
+        assert_eq!(lanes.len(), self.k() * n, "lanes must be k×n channel-major");
+        self.reconstruct_signed_batch_with(n, |c, j| lanes[c * n + j])
+    }
+
+    /// Batched signed reconstruction with a caller-supplied residue read
+    /// `read(channel, elem)` — the zero-copy form for residue blocks that
+    /// are not `u64` lanes (e.g. the coordinator's `i64` PJRT tensors).
+    pub fn reconstruct_signed_batch_with<F>(&self, n: usize, mut read: F) -> Vec<(bool, BigUint)>
+    where
+        F: FnMut(usize, usize) -> u64,
+    {
+        if self.fixed_ok {
+            (0..n)
+                .map(|j| self.signed_from_fixed(self.fixed_accumulate(|c| read(c, j))))
+                .collect()
+        } else {
+            (0..n)
+                .map(|j| {
+                    let rv = ResidueVec {
+                        r: (0..self.k()).map(|c| read(c, j)).collect(),
+                    };
+                    self.signed_from_big(self.reconstruct_slow(&rv))
+                })
+                .collect()
+        }
+    }
+
+    /// Gather output `j` of a channel-major lane block (slow path only).
+    fn gather(&self, lanes: &[u64], n: usize, j: usize) -> ResidueVec {
+        ResidueVec {
+            r: (0..self.k()).map(|c| lanes[c * n + j]).collect(),
         }
     }
 
@@ -267,8 +374,8 @@ impl CrtContext {
     pub fn compare(&self, a: &ResidueVec, b: &ResidueVec) -> std::cmp::Ordering {
         let da = self.mixed_radix(a);
         let db = self.mixed_radix(b);
-        for i in (0..da.len()).rev() {
-            match da[i].cmp(&db[i]) {
+        for (x, y) in da.iter().zip(&db).rev() {
+            match x.cmp(y) {
                 std::cmp::Ordering::Equal => continue,
                 o => return o,
             }
@@ -453,6 +560,80 @@ mod tests {
             crate::prop_assert!(neg && back == mag, "negative roundtrip n={n}");
             Ok(())
         });
+    }
+
+    #[test]
+    fn prop_batch_reconstruction_matches_per_element() {
+        // reconstruct_batch / reconstruct_signed_batch over a channel-major
+        // block must be bit-identical to per-element reconstruct /
+        // reconstruct_signed — including all-zero outputs, sign-boundary
+        // values and worst-case residues.
+        let c = ctx();
+        let k = c.k();
+        check_with("crt-batch-vs-scalar", 64, |rng| {
+            let n = rng.below(17) as usize; // includes n = 0
+            let mut lanes = vec![0u64; k * n];
+            for j in 0..n {
+                // Mix: zero, small, random-signed-range, worst-case m-1.
+                match rng.below(4) {
+                    0 => {}
+                    1 => {
+                        for (ch, &m) in c.moduli.iter().enumerate() {
+                            lanes[ch * n + j] = rng.below(m);
+                        }
+                    }
+                    2 => {
+                        for (ch, &m) in c.moduli.iter().enumerate() {
+                            lanes[ch * n + j] = m - 1;
+                        }
+                    }
+                    _ => {
+                        let v = rng.next_u64();
+                        for (ch, &m) in c.moduli.iter().enumerate() {
+                            lanes[ch * n + j] = v % m;
+                        }
+                    }
+                }
+            }
+            let batch = c.reconstruct_batch(&lanes, n);
+            let signed = c.reconstruct_signed_batch(&lanes, n);
+            crate::prop_assert!(batch.len() == n && signed.len() == n, "lengths");
+            for j in 0..n {
+                let rv = ResidueVec {
+                    r: (0..k).map(|ch| lanes[ch * n + j]).collect(),
+                };
+                crate::prop_assert!(batch[j] == c.reconstruct(&rv), "batch j={j}");
+                crate::prop_assert!(
+                    signed[j] == c.reconstruct_signed(&rv),
+                    "signed batch j={j}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn batch_with_reader_matches_lane_batch() {
+        let c = ctx();
+        let k = c.k();
+        let n = 9;
+        let mut lanes = vec![0u64; k * n];
+        for (i, v) in lanes.iter_mut().enumerate() {
+            *v = (i as u64 * 2654435761) % c.moduli[i / n];
+        }
+        let via_lanes = c.reconstruct_signed_batch(&lanes, n);
+        let via_reader = c.reconstruct_signed_batch_with(n, |ch, j| lanes[ch * n + j]);
+        assert_eq!(via_lanes.len(), via_reader.len());
+        for (a, b) in via_lanes.iter().zip(&via_reader) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "channel-major")]
+    fn batch_rejects_misshaped_lanes() {
+        let c = ctx();
+        c.reconstruct_batch(&[0u64; 7], 2);
     }
 
     #[test]

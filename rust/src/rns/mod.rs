@@ -6,14 +6,22 @@
 //! uses (§VI-B) — and reconstruction goes through a precomputed CRT context
 //! (or mixed-radix conversion for comparison-only paths).
 
+// Lint tightening for the kernel layer: the lane loops are the crate's
+// hottest code and must stay in iterator/zip form (vectorizable, no
+// bounds checks) rather than index-loop form.
+#![deny(clippy::needless_range_loop, clippy::manual_memcpy)]
+
 pub mod moduli;
 pub mod barrett;
 pub mod residue;
 pub mod crt;
 pub mod plane;
 
-pub use barrett::Barrett;
+pub use barrett::{barrett_set, Barrett, BarrettError};
 pub use crt::CrtContext;
-pub use moduli::{default_moduli, generate_prime_moduli, is_pairwise_coprime};
+pub use moduli::{
+    default_moduli, fits_lane_width, generate_prime_moduli, is_pairwise_coprime,
+    MAX_LANE_MODULUS_BITS,
+};
 pub use plane::ResiduePlane;
 pub use residue::ResidueVec;

@@ -10,6 +10,20 @@ pub const DEFAULT_MODULI: [u64; 8] = [
     65521, 65519, 65497, 65479, 65449, 65447, 65437, 65423,
 ];
 
+/// Lane-kernel modulus ceiling in bits. The deferred-reduction planar
+/// kernels (`rns::plane`) multiply two residues with a plain `u64`
+/// multiply (no widening) and accumulate the raw ≤ 62-bit products into
+/// `u128` sums, folding to one Barrett reduction per
+/// [`crate::rns::plane::DOT_FOLD_TERMS`] terms. Both steps require every
+/// modulus to be at most 31 bits: products stay below `2^62` and a `u128`
+/// accumulator holds `2^128 / 2^62 = 2^66` of them before it could wrap.
+pub const MAX_LANE_MODULUS_BITS: u32 = 31;
+
+/// True iff `m` is usable by the deferred lane kernels: `2 ≤ m < 2^31`.
+pub fn fits_lane_width(m: u64) -> bool {
+    (2..1u64 << MAX_LANE_MODULUS_BITS).contains(&m)
+}
+
 /// The default modulus set as a Vec.
 pub fn default_moduli() -> Vec<u64> {
     DEFAULT_MODULI.to_vec()
@@ -92,9 +106,13 @@ pub fn pow_mod(mut base: u64, mut exp: u64, m: u64) -> u64 {
 
 /// Generate `k` prime moduli descending from `2^width - 1` (primes are
 /// automatically pairwise coprime). Panics if the width can't supply k
-/// primes or if `width` exceeds 32 (Barrett path uses 64x64->128 products).
+/// primes or if `width` exceeds [`MAX_LANE_MODULUS_BITS`] (the deferred
+/// lane kernels accumulate raw 62-bit products; see that constant).
 pub fn generate_prime_moduli(k: usize, width: u32) -> Vec<u64> {
-    assert!((4..=32).contains(&width), "width must be in 4..=32");
+    assert!(
+        (4..=MAX_LANE_MODULUS_BITS).contains(&width),
+        "width must be in 4..={MAX_LANE_MODULUS_BITS}"
+    );
     let mut out = Vec::with_capacity(k);
     let mut candidate = (1u64 << width) - 1;
     let floor = 1u64 << (width - 1);
@@ -177,6 +195,26 @@ mod tests {
                 assert!(m < 1 << width && m >= 1 << (width - 1));
             }
         }
+    }
+
+    #[test]
+    fn lane_width_bounds() {
+        assert!(!fits_lane_width(0));
+        assert!(!fits_lane_width(1));
+        assert!(fits_lane_width(2));
+        assert!(fits_lane_width(65521));
+        assert!(fits_lane_width((1 << 31) - 1));
+        assert!(!fits_lane_width(1 << 31));
+        assert!(!fits_lane_width((1 << 32) - 5));
+        for &m in &DEFAULT_MODULI {
+            assert!(fits_lane_width(m));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "width must be in")]
+    fn generate_width_32_rejected() {
+        generate_prime_moduli(2, 32);
     }
 
     #[test]

@@ -9,6 +9,21 @@
 //! per-element [`ResidueVec`] path, and it is the layout the AOT kernels
 //! already use (`int64[k, n]` channel-major tensors).
 //!
+//! ## Deferred reduction
+//!
+//! The lane kernels run the paper's lazy-reduction discipline in software:
+//! every modulus set is validated to ≤ 31 bits
+//! ([`crate::rns::moduli::MAX_LANE_MODULUS_BITS`]), so a residue product is
+//! one plain `u64` multiply (≤ 62 bits, no widening) and [`lane_dot`] /
+//! [`lane_dot_scaled`] sum those raw products into `u128` accumulators,
+//! folding to a **single** `Barrett` reduction per [`DOT_FOLD_TERMS`]
+//! terms — one reduction per dot product for every realistic lane length,
+//! instead of one per element. [`lane_fma`] reduces the raw 63-bit
+//! `acc + x·y` once per element, and [`lane_scale`] streams a Shoup
+//! multiply (mul-hi + mul-lo + one conditional subtract). The former
+//! per-element kernels live on in [`reference`] and back the bit-identity
+//! property tests.
+//!
 //! The plane is pure residue data. Exponent and interval bookkeeping for a
 //! batch of HRFNA values lives in [`crate::hybrid::batch::HrfnaBatch`],
 //! which drives these kernels.
@@ -16,6 +31,25 @@
 use super::barrett::Barrett;
 use super::residue::ResidueVec;
 use thiserror::Error;
+
+/// Fold threshold for the deferred dot kernels: raw ≤ 62-bit products are
+/// summed into `u128` accumulators and reduced once per this many terms.
+/// A `u128` holds `2^128 / 2^62 = 2^66` such terms before it could wrap;
+/// `2^32` keeps a deep safety margin (the striped partial sums stay below
+/// `2^94`) while still meaning "one reduction per dot" for any lane that
+/// fits in memory.
+pub const DOT_FOLD_TERMS: usize = {
+    const F: u64 = 1 << 32;
+    if (usize::MAX as u64) < F {
+        usize::MAX
+    } else {
+        F as usize
+    }
+};
+
+/// Independent accumulator stripes per lane (ILP: the compiler can keep
+/// four dependency chains in flight and vectorize the product loop).
+const DOT_STRIPES: usize = 4;
 
 /// Errors for fallible plane constructors.
 #[derive(Clone, Debug, Error, PartialEq, Eq)]
@@ -172,19 +206,17 @@ impl ResiduePlane {
     }
 
     /// In-place fused multiply-accumulate: `self[c][j] += x[c][j] * y[c][j]`
-    /// per channel — the planar hot loop of Algorithm 1.
+    /// per channel — the planar hot loop of Algorithm 1, on the deferred
+    /// [`lane_fma`] kernel (one reduction per element, no modular add).
     pub fn fma_assign(&mut self, x: &ResiduePlane, y: &ResiduePlane, bars: &[Barrett]) {
         debug_assert_eq!((self.k, self.n), (x.k, x.n));
         debug_assert_eq!((self.k, self.n), (y.k, y.n));
         let n = self.n;
         for c in 0..self.k {
-            let bar = bars[c];
             let acc = &mut self.lanes[c * n..(c + 1) * n];
             let xs = &x.lanes[c * n..(c + 1) * n];
             let ys = &y.lanes[c * n..(c + 1) * n];
-            for j in 0..n {
-                acc[j] = bar.add(acc[j], bar.mul(xs[j], ys[j]));
-            }
+            lane_fma(bars[c], acc, xs, ys);
         }
     }
 
@@ -201,7 +233,8 @@ impl ResiduePlane {
     }
 }
 
-/// `out[j] = (x[j] * y[j]) mod m` over one lane.
+/// `out[j] = (x[j] * y[j]) mod m` over one lane (branch-free Barrett:
+/// mul-hi quotient estimate, mul-lo remainder, conditional subtract).
 #[inline]
 pub fn lane_mul(bar: Barrett, x: &[u64], y: &[u64], out: &mut [u64]) {
     for ((o, &a), &b) in out.iter_mut().zip(x).zip(y) {
@@ -226,34 +259,161 @@ pub fn lane_neg(m: u64, x: &[u64], out: &mut [u64]) {
 }
 
 /// `out[j] = (x[j] * mult) mod m` over one lane (residue-domain scaling,
-/// e.g. by a precomputed `2^Δ mod m`).
+/// e.g. by a precomputed `2^Δ mod m`). The Shoup constant for `mult` is
+/// precomputed once, making the loop body a mul-hi + mul-lo pair + one
+/// conditional subtract. Requires `mult < m`.
 #[inline]
 pub fn lane_scale(bar: Barrett, x: &[u64], mult: u64, out: &mut [u64]) {
+    let shoup = bar.shoup(mult);
     for (o, &a) in out.iter_mut().zip(x) {
-        *o = bar.mul(a, mult);
+        *o = bar.mul_shoup(a, mult, shoup);
     }
 }
 
-/// Modular dot product over one lane: `Σ_j x[j]·y[j] mod m`.
+/// `acc[j] = (acc[j] + x[j]*y[j]) mod m` over one lane. Deferred path:
+/// the raw ≤ 62-bit product plus the ≤ 31-bit accumulator fits 63 bits,
+/// so one Barrett reduction per element replaces the former
+/// reduce-then-modular-add pair. Falls back to [`reference::lane_fma`]
+/// for moduli outside the lane-width invariant.
+#[inline]
+pub fn lane_fma(bar: Barrett, acc: &mut [u64], x: &[u64], y: &[u64]) {
+    if !bar.deferred_ok() {
+        return reference::lane_fma(bar, acc, x, y);
+    }
+    for ((a, &xv), &yv) in acc.iter_mut().zip(x).zip(y) {
+        *a = bar.reduce(*a + xv * yv);
+    }
+}
+
+/// Modular dot product over one lane: `Σ_j x[j]·y[j] mod m`, via deferred
+/// reduction with the default fold threshold ([`DOT_FOLD_TERMS`]) — a
+/// single reduction for any realistic `n`.
 #[inline]
 pub fn lane_dot(bar: Barrett, x: &[u64], y: &[u64]) -> u64 {
+    lane_dot_folded(bar, x, y, DOT_FOLD_TERMS)
+}
+
+/// [`lane_dot`] with an explicit fold threshold: raw products accumulate
+/// into [`DOT_STRIPES`] independent `u128` sums and fold to one
+/// `Barrett::reduce_u128` every `fold` terms. Exposed so property tests
+/// and benches can straddle the fold boundary with small thresholds; the
+/// result is bit-identical to [`reference::lane_dot`] for every `fold`.
+pub fn lane_dot_folded(bar: Barrett, x: &[u64], y: &[u64], fold: usize) -> u64 {
+    if !bar.deferred_ok() {
+        return reference::lane_dot(bar, x, y);
+    }
+    let n = x.len().min(y.len());
+    let (x, y) = (&x[..n], &y[..n]);
+    let fold = fold.clamp(1, DOT_FOLD_TERMS);
     let mut acc = 0u64;
-    for (&a, &b) in x.iter().zip(y) {
-        acc = bar.add(acc, bar.mul(a, b));
+    for (xc, yc) in x.chunks(fold).zip(y.chunks(fold)) {
+        let mut s = [0u128; DOT_STRIPES];
+        let mut xs = xc.chunks_exact(DOT_STRIPES);
+        let mut ys = yc.chunks_exact(DOT_STRIPES);
+        for (qx, qy) in (&mut xs).zip(&mut ys) {
+            s[0] += (qx[0] * qy[0]) as u128;
+            s[1] += (qx[1] * qy[1]) as u128;
+            s[2] += (qx[2] * qy[2]) as u128;
+            s[3] += (qx[3] * qy[3]) as u128;
+        }
+        let mut tail = 0u128;
+        for (&a, &b) in xs.remainder().iter().zip(ys.remainder()) {
+            tail += (a * b) as u128;
+        }
+        // Each stripe holds ≤ fold/4 ≤ 2^30 terms below 2^62: the combined
+        // sum stays below 2^94, far from the u128 edge.
+        let total = s[0] + s[1] + s[2] + s[3] + tail;
+        acc = bar.add(acc, bar.reduce_u128(total));
     }
     acc
 }
 
 /// Modular dot product with a per-element scale factor:
 /// `Σ_j x[j]·y[j]·mults[j] mod m` — the exponent-aligned accumulation of
-/// Algorithm 1 with `mults[j] = 2^{Δ_j} mod m`.
-#[inline]
+/// Algorithm 1 with `mults[j] = 2^{Δ_j} mod m`. Deferred: one reduction
+/// brings the 62-bit product back under `m`, the third factor stays raw
+/// in the `u128` accumulator, and the fold pays the second reduction once
+/// per [`DOT_FOLD_TERMS`] terms.
 pub fn lane_dot_scaled(bar: Barrett, x: &[u64], y: &[u64], mults: &[u64]) -> u64 {
+    if !bar.deferred_ok() {
+        return reference::lane_dot_scaled(bar, x, y, mults);
+    }
+    let n = x.len().min(y.len()).min(mults.len());
+    let (x, y, mults) = (&x[..n], &y[..n], &mults[..n]);
     let mut acc = 0u64;
-    for ((&a, &b), &s) in x.iter().zip(y).zip(mults) {
-        acc = bar.add(acc, bar.mul(bar.mul(a, b), s));
+    for ((xc, yc), sc) in x
+        .chunks(DOT_FOLD_TERMS)
+        .zip(y.chunks(DOT_FOLD_TERMS))
+        .zip(mults.chunks(DOT_FOLD_TERMS))
+    {
+        let mut sum = 0u128;
+        for ((&a, &b), &s) in xc.iter().zip(yc).zip(sc) {
+            sum += (bar.reduce(a * b) * s) as u128;
+        }
+        acc = bar.add(acc, bar.reduce_u128(sum));
     }
     acc
+}
+
+/// The per-element reference kernels: one reduction (and one modular
+/// add) per element — naive widening `%` where that makes the check
+/// independent. Kept as the executable specification — the deferred
+/// kernels above are property-tested bit-identical to these — and as the
+/// fallback for moduli outside the 31-bit lane invariant.
+pub mod reference {
+    use super::Barrett;
+
+    /// Per-element `out[j] = (x[j] * y[j]) mod m` via naive widening
+    /// arithmetic (`u128` multiply + `%`) — an *independent*
+    /// specification of the elementwise product, so the bit-identity test
+    /// genuinely checks the Barrett path rather than comparing it to
+    /// itself.
+    #[inline]
+    pub fn lane_mul(bar: Barrett, x: &[u64], y: &[u64], out: &mut [u64]) {
+        let m = bar.m as u128;
+        for ((o, &a), &b) in out.iter_mut().zip(x).zip(y) {
+            *o = ((a as u128 * b as u128) % m) as u64;
+        }
+    }
+
+    /// Per-element `out[j] = (x[j] * mult) mod m` (full Barrett per step).
+    #[inline]
+    pub fn lane_scale(bar: Barrett, x: &[u64], mult: u64, out: &mut [u64]) {
+        for (o, &a) in out.iter_mut().zip(x) {
+            *o = bar.mul(a, mult);
+        }
+    }
+
+    /// Per-element-reducing dot: `acc = (acc + reduce(x·y)) mod m` each
+    /// step.
+    #[inline]
+    pub fn lane_dot(bar: Barrett, x: &[u64], y: &[u64]) -> u64 {
+        let mut acc = 0u64;
+        for (&a, &b) in x.iter().zip(y) {
+            acc = bar.add(acc, bar.mul(a, b));
+        }
+        acc
+    }
+
+    /// Per-element-reducing scaled dot (two reductions + one add per
+    /// element).
+    #[inline]
+    pub fn lane_dot_scaled(bar: Barrett, x: &[u64], y: &[u64], mults: &[u64]) -> u64 {
+        let mut acc = 0u64;
+        for ((&a, &b), &s) in x.iter().zip(y).zip(mults) {
+            acc = bar.add(acc, bar.mul(bar.mul(a, b), s));
+        }
+        acc
+    }
+
+    /// Per-element `acc[j] = (acc[j] + x[j]·y[j]) mod m` (reduce + modular
+    /// add per element).
+    #[inline]
+    pub fn lane_fma(bar: Barrett, acc: &mut [u64], x: &[u64], y: &[u64]) {
+        for ((a, &xv), &yv) in acc.iter_mut().zip(x).zip(y) {
+            *a = bar.add(*a, bar.mul(xv, yv));
+        }
+    }
 }
 
 #[cfg(test)]
@@ -278,6 +438,10 @@ mod tests {
             }
         }
         p
+    }
+
+    fn random_lane(rng: &mut Rng, m: u64, n: usize) -> Vec<u64> {
+        (0..n).map(|_| rng.below(m)).collect()
     }
 
     #[test]
@@ -396,9 +560,132 @@ mod tests {
             let mult = rng.below(DEFAULT_MODULI[c]);
             let mut out = vec![0u64; 17];
             lane_scale(b[c], x.lane(c), mult, &mut out);
-            for j in 0..17 {
-                assert_eq!(out[j], b[c].mul(x.lane(c)[j], mult));
+            for (o, &xv) in out.iter().zip(x.lane(c)) {
+                assert_eq!(*o, b[c].mul(xv, mult));
             }
         }
+    }
+
+    #[test]
+    fn prop_deferred_kernels_bit_identical_to_reference() {
+        // Random lane-width moduli (full 2..2^31 range), lengths covering
+        // 0 / 1 / odd / stripe-remainder shapes, random residues: every
+        // deferred kernel must agree with its per-element reference bit
+        // for bit.
+        check_with("deferred-vs-reference", 96, |rng| {
+            let m = rng.below((1u64 << 31) - 2) + 2;
+            let bar = Barrett::try_new(m).expect("lane-width modulus");
+            let n = match rng.below(6) {
+                0 => 0,
+                1 => 1,
+                2 => 2,
+                3 => 1 + 2 * rng.below(16) as usize, // odd
+                4 => 4 * (1 + rng.below(8) as usize), // stripe-aligned
+                _ => 1 + rng.below(257) as usize,
+            };
+            let x = random_lane(rng, m, n);
+            let y = random_lane(rng, m, n);
+            let mults = random_lane(rng, m, n);
+            crate::prop_assert!(
+                lane_dot(bar, &x, &y) == reference::lane_dot(bar, &x, &y),
+                "lane_dot m={m} n={n}"
+            );
+            crate::prop_assert!(
+                lane_dot_scaled(bar, &x, &y, &mults)
+                    == reference::lane_dot_scaled(bar, &x, &y, &mults),
+                "lane_dot_scaled m={m} n={n}"
+            );
+            let mut acc_def = random_lane(rng, m, n);
+            let mut acc_ref = acc_def.clone();
+            lane_fma(bar, &mut acc_def, &x, &y);
+            reference::lane_fma(bar, &mut acc_ref, &x, &y);
+            crate::prop_assert!(acc_def == acc_ref, "lane_fma m={m} n={n}");
+            let mult = rng.below(m);
+            let mut out_def = vec![0u64; n];
+            let mut out_ref = vec![0u64; n];
+            lane_scale(bar, &x, mult, &mut out_def);
+            reference::lane_scale(bar, &x, mult, &mut out_ref);
+            crate::prop_assert!(out_def == out_ref, "lane_scale m={m} n={n}");
+            let mut mul_def = vec![0u64; n];
+            let mut mul_ref = vec![0u64; n];
+            lane_mul(bar, &x, &y, &mut mul_def);
+            reference::lane_mul(bar, &x, &y, &mut mul_ref);
+            crate::prop_assert!(mul_def == mul_ref, "lane_mul m={m} n={n}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_fold_boundaries_bit_identical() {
+        // Lengths straddling the fold threshold (n = fold-1, fold, fold+1,
+        // multiples ± 1) must agree with the unfolded reference — the
+        // partial-fold and cross-chunk carry logic is exactly what a big
+        // threshold never exercises in-tests.
+        check_with("deferred-fold-boundaries", 64, |rng| {
+            let m = rng.below((1u64 << 31) - 2) + 2;
+            let bar = Barrett::try_new(m).expect("lane-width modulus");
+            let fold = 1 + rng.below(9) as usize; // 1..=9, straddles stripes
+            for n in [
+                fold.saturating_sub(1),
+                fold,
+                fold + 1,
+                2 * fold - 1,
+                2 * fold,
+                2 * fold + 1,
+                5 * fold + 3,
+            ] {
+                let x = random_lane(rng, m, n);
+                let y = random_lane(rng, m, n);
+                crate::prop_assert!(
+                    lane_dot_folded(bar, &x, &y, fold) == reference::lane_dot(bar, &x, &y),
+                    "fold={fold} n={n} m={m}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deferred_dot_huge_lane_and_worst_case_residues() {
+        // A long lane of worst-case residues (all m-1): the largest
+        // possible raw products, exercising the accumulator headroom
+        // argument at the scale the serving path actually runs.
+        let m = (1u64 << 31) - 1;
+        let bar = Barrett::try_new(m).unwrap();
+        let n = 65_536;
+        let x = vec![m - 1; n];
+        let y = vec![m - 1; n];
+        // Σ (m-1)² mod m == Σ 1 mod m == n mod m.
+        assert_eq!(lane_dot(bar, &x, &y), n as u64 % m);
+        assert_eq!(lane_dot(bar, &x, &y), reference::lane_dot(bar, &x, &y));
+        // And with a mid-lane fold.
+        assert_eq!(
+            lane_dot_folded(bar, &x, &y, 1000),
+            reference::lane_dot(bar, &x, &y)
+        );
+    }
+
+    #[test]
+    fn wide_modulus_falls_back_to_reference() {
+        // A 32-bit modulus (legal for scalar Barrett, outside the lane
+        // invariant) must still compute correctly via the reference
+        // fallback paths.
+        let m = (1u64 << 32) - 5;
+        let bar = Barrett::new(m);
+        assert!(!bar.deferred_ok());
+        let mut rng = Rng::new(23);
+        let x = random_lane(&mut rng, m, 33);
+        let y = random_lane(&mut rng, m, 33);
+        let mults = random_lane(&mut rng, m, 33);
+        assert_eq!(lane_dot(bar, &x, &y), reference::lane_dot(bar, &x, &y));
+        assert_eq!(
+            lane_dot_scaled(bar, &x, &y, &mults),
+            reference::lane_dot_scaled(bar, &x, &y, &mults)
+        );
+        let mut acc = random_lane(&mut rng, m, 33);
+        let mut acc_ref = acc.clone();
+        lane_fma(bar, &mut acc, &x, &y);
+        reference::lane_fma(bar, &mut acc_ref, &x, &y);
+        assert_eq!(acc, acc_ref);
     }
 }

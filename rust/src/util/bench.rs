@@ -227,6 +227,18 @@ pub fn gate_records(
     violations
 }
 
+/// Names present in `current` but absent from `baseline`: new bench
+/// records. The gate accepts them with a warning (they become protected
+/// once the baseline is refreshed); this is the complement of the
+/// missing-record failure in [`gate_records`].
+pub fn new_record_names(baseline: &[BenchRecord], current: &[BenchRecord]) -> Vec<String> {
+    current
+        .iter()
+        .filter(|c| !baseline.iter().any(|b| b.name == c.name))
+        .map(|c| c.name.clone())
+        .collect()
+}
+
 /// Write records as a JSON array (one record per line) — the
 /// `BENCH_hotpath.json` / `BENCH_dot.json` trajectory files.
 pub fn write_json(path: &str, records: &[BenchRecord]) -> std::io::Result<()> {
@@ -334,6 +346,24 @@ mod tests {
         // Improvements never trip the gate.
         assert!(gate_records(&baseline, &[rec("a", 1.0), rec("b", 1.0), rec("gone", 1.0)], 0.2)
             .is_empty());
+    }
+
+    #[test]
+    fn new_records_are_listed_not_gated() {
+        let rec = |name: &str, ns: f64| BenchRecord {
+            name: name.into(),
+            n: 1,
+            ns_per_op: ns,
+            throughput_per_s: 1e9 / ns,
+        };
+        let baseline = vec![rec("a", 100.0)];
+        let current = vec![rec("a", 90.0), rec("fresh", 5.0), rec("also_new", 7.0)];
+        let new = new_record_names(&baseline, &current);
+        assert_eq!(new, vec!["fresh".to_string(), "also_new".to_string()]);
+        // New records never appear as gate violations.
+        assert!(gate_records(&baseline, &current, 0.2).is_empty());
+        // And an empty baseline marks everything as new.
+        assert_eq!(new_record_names(&[], &current).len(), 3);
     }
 
     #[test]

@@ -38,11 +38,23 @@ pub fn matmul<N: Numeric>(
     out
 }
 
+/// Column-tile width of the cache-blocked planar matmul: the `Bᵀ` lane
+/// windows of one tile (`TILE_COLS · k` elements × 8 channels) stay
+/// resident while a whole row block streams over them.
+const TILE_COLS: usize = 64;
+
+/// Row cap per tile, so a tile's accumulator batch (and its `A` row
+/// windows) stays cache-sized even on machines with few workers.
+const TILE_ROWS_MAX: usize = 64;
+
 /// The HRFNA planar matmul kernel: encode `A` and `Bᵀ` into channel-major
 /// planes once, then compute each output element with one batched
-/// [`crate::hybrid::HrfnaBatch::dot_range`] over contiguous row/column
-/// lane windows — no per-MAC allocation — parallelized across row blocks
-/// on the shared [`crate::util::threadpool`].
+/// single-fold [`crate::hybrid::HrfnaBatch::dot_range`] over contiguous
+/// row/column lane windows — no per-MAC allocation. The output is
+/// **cache-blocked** into row×column tiles scheduled on the shared
+/// [`crate::util::threadpool`]; each tile accumulates its dots into a
+/// per-thread [`crate::hybrid::HrfnaBatch`] accumulator plane and decodes
+/// them with one batched CRT pass.
 pub fn matmul_hrfna_planar(
     a: &[f64],
     b: &[f64],
@@ -51,8 +63,24 @@ pub fn matmul_hrfna_planar(
     n: usize,
     ctx: &crate::hybrid::HrfnaContext,
 ) -> Vec<f64> {
+    matmul_hrfna_planar_tiled(a, b, m, k, n, TILE_COLS, ctx)
+}
+
+/// [`matmul_hrfna_planar`] with an explicit column-tile width (tests
+/// shrink it to force the multi-tile scatter paths on small matrices).
+pub fn matmul_hrfna_planar_tiled(
+    a: &[f64],
+    b: &[f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    tile_cols: usize,
+    ctx: &crate::hybrid::HrfnaContext,
+) -> Vec<f64> {
+    use crate::hybrid::number::signed_mag_to_f64;
     use crate::hybrid::HrfnaBatch;
     use crate::util::threadpool;
+    use std::sync::atomic::Ordering;
 
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
@@ -68,38 +96,68 @@ pub fn matmul_hrfna_planar(
         }
     }
     let eb = HrfnaBatch::encode(&bt, ctx);
+    let tile_cols = tile_cols.max(1);
 
-    let body = |(i0, i1): (usize, usize)| -> Vec<f64> {
-        let mut rows = Vec::with_capacity((i1 - i0) * n);
+    type Tile = (usize, usize, usize, usize);
+    let body = |(i0, i1, j0, j1): Tile| -> (Tile, Vec<f64>) {
+        // Per-thread accumulators: the tile's output dots are decoded by
+        // one batched CRT pass reading them in place (no intermediate
+        // plane copy).
+        let mut accs = Vec::with_capacity((i1 - i0) * (j1 - j0));
         for i in i0..i1 {
-            for j in 0..n {
-                let acc = ea.dot_range(i * k, &eb, j * k, k, ctx);
-                rows.push(acc.decode(ctx));
+            for j in j0..j1 {
+                accs.push(ea.dot_range(i * k, &eb, j * k, k, ctx));
             }
         }
-        rows
+        ctx.counters
+            .reconstructions
+            .fetch_add(accs.len() as u64, Ordering::Relaxed);
+        let vals = ctx
+            .crt
+            .reconstruct_signed_batch_with(accs.len(), |c, j| accs[j].r.r[c])
+            .into_iter()
+            .zip(&accs)
+            .map(|((neg, mag), h)| signed_mag_to_f64(neg, &mag, h.f))
+            .collect();
+        ((i0, i1, j0, j1), vals)
     };
-    let blocks_for = |workers: usize| -> Vec<(usize, usize)> {
-        let block = m.div_ceil((2 * workers).max(1)).max(1);
-        (0..m)
-            .step_by(block)
-            .map(|i0| (i0, (i0 + block).min(m)))
-            .collect()
+    let tiles_for = |workers: usize| -> Vec<Tile> {
+        let row_block = m.div_ceil((2 * workers).max(1)).clamp(1, TILE_ROWS_MAX);
+        let mut tiles = Vec::new();
+        let mut i0 = 0;
+        while i0 < m {
+            let i1 = (i0 + row_block).min(m);
+            let mut j0 = 0;
+            while j0 < n {
+                let j1 = (j0 + tile_cols).min(n);
+                tiles.push((i0, i1, j0, j1));
+                j0 = j1;
+            }
+            i0 = i1;
+        }
+        tiles
     };
     // `try_lock`, not `lock`: if the shared pool is already busy (another
     // parallel section, possibly one we are nested inside), waiting could
     // deadlock a worker on its own section — compute inline instead.
-    let rows: Vec<Vec<f64>> = match threadpool::global().try_lock() {
-        Ok(pool) => threadpool::par_map_scoped(&pool, blocks_for(pool.size()), &body),
+    let parts: Vec<(Tile, Vec<f64>)> = match threadpool::global().try_lock() {
+        Ok(pool) => threadpool::par_map_scoped(&pool, tiles_for(pool.size()), &body),
         Err(std::sync::TryLockError::Poisoned(p)) => {
             let pool = p.into_inner();
-            threadpool::par_map_scoped(&pool, blocks_for(pool.size()), &body)
+            threadpool::par_map_scoped(&pool, tiles_for(pool.size()), &body)
         }
         Err(std::sync::TryLockError::WouldBlock) => {
-            blocks_for(1).into_iter().map(&body).collect()
+            tiles_for(1).into_iter().map(&body).collect()
         }
     };
-    rows.into_iter().flatten().collect()
+    let mut out = vec![0.0f64; m * n];
+    for ((i0, _i1, j0, j1), vals) in parts {
+        let w = j1 - j0;
+        for (t, v) in vals.into_iter().enumerate() {
+            out[(i0 + t / w) * n + (j0 + t % w)] = v;
+        }
+    }
+    out
 }
 
 /// RMS of relative elementwise error vs the f64 reference for a random
@@ -179,6 +237,27 @@ mod tests {
         assert_eq!(got.len(), m * n);
         for (g, w) in got.iter().zip(&want) {
             assert!((g - w).abs() < 1e-7 * w.abs().max(1.0), "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn tiled_matmul_bit_identical_across_tile_widths() {
+        // Tiling only reorders which outputs a task computes; every output
+        // is still one full-inner-dim dot_range, so results must be bit
+        // identical for every tile width (including widths that leave
+        // ragged last tiles).
+        let ctx = HrfnaContext::paper_default();
+        let mut rng = crate::util::prng::Rng::new(29);
+        let (m, k, n) = (9, 5, 11);
+        let a = Dist::moderate().sample_vec(&mut rng, m * k);
+        let b = Dist::moderate().sample_vec(&mut rng, k * n);
+        let want = matmul_hrfna_planar(&a, &b, m, k, n, &ctx);
+        for tile in [1usize, 2, 3, 4, 7, 11, 64] {
+            let got = matmul_hrfna_planar_tiled(&a, &b, m, k, n, tile, &ctx);
+            assert_eq!(got.len(), want.len(), "tile={tile}");
+            for (idx, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(g.to_bits(), w.to_bits(), "tile={tile} idx={idx}");
+            }
         }
     }
 

@@ -10,7 +10,7 @@
 //! in the current dir and pass record-by-record. Refresh a baseline by
 //! re-running the bench and committing the new JSON.
 
-use hrfna::util::bench::{gate_records, read_json, GateViolation};
+use hrfna::util::bench::{gate_records, new_record_names, read_json, GateViolation};
 use hrfna::util::cli::Args;
 use std::path::{Path, PathBuf};
 
@@ -80,6 +80,16 @@ fn main() {
                 continue;
             }
         };
+        if base.is_empty() {
+            // A baseline that parses to zero records would make the gate
+            // vacuously green — name the file and fail instead.
+            eprintln!(
+                "bench_gate: baseline {} contains no records — refusing a vacuous pass",
+                base_path.display()
+            );
+            failed = true;
+            continue;
+        }
         let violations: Vec<GateViolation> = gate_records(&base, &cur, tolerance);
         println!(
             "bench_gate: {} vs {} — {} baseline records, {} violations (tolerance {:.0}%)",
@@ -89,8 +99,18 @@ fn main() {
             violations.len(),
             tolerance * 100.0
         );
+        // Every baseline record missing from the measured run is a named
+        // MISSING violation via gate_records (never a silent skip); the
+        // converse — records the bench emits that the baseline does not
+        // know — passes with an explicit warning.
         for v in &violations {
             println!("  {}", v.line());
+        }
+        for name in new_record_names(&base, &cur) {
+            println!(
+                "  WARN new    {name:<40} (absent from baseline; accepted — refresh {} to protect it)",
+                base_path.display()
+            );
         }
         failed |= !violations.is_empty();
     }
