@@ -1,0 +1,165 @@
+//! Normalization-engine bench: the planar bulk path (flagged-scan →
+//! gather → batched residue-domain rescale → scatter,
+//! `HrfnaBatch::normalize_flagged`) against the per-element reference
+//! (`hybrid::norm::reference`, scalar reconstruct/encode per flagged
+//! element) at flagged densities 1% / 10% / 50% over a 4096-element
+//! batch.
+//!
+//! Emits `BENCH_norm.json` with absolute ns-per-event records
+//! (machine-dependent) and same-run **cost ratios** `bulk / reference`
+//! (machine-independent; the CI-gated invariant: the bulk path stays at
+//! ≤ 0.6× the per-element cost at 10% density). Quick mode for CI:
+//! `BENCH_QUICK=1 cargo bench --bench bench_norm` (or `--quick`).
+
+mod common;
+
+use std::time::Duration;
+
+use hrfna::config::HrfnaConfig;
+use hrfna::hybrid::{norm, Hrfna, HrfnaBatch, HrfnaContext};
+use hrfna::util::bench::{bench_with, write_json, BenchRecord, BenchResult};
+use hrfna::util::cli::Args;
+use hrfna::util::prng::Rng;
+
+/// A record from an already-net ns/iter value (clone overhead removed),
+/// normalized to per-event cost.
+fn net_record(name: &str, events: usize, net_ns_per_iter: f64) -> BenchRecord {
+    let ns_per_op = net_ns_per_iter / events.max(1) as f64;
+    BenchRecord {
+        name: name.to_string(),
+        n: events as u64,
+        ns_per_op,
+        throughput_per_s: if ns_per_op > 0.0 { 1e9 / ns_per_op } else { 0.0 },
+    }
+}
+
+fn ratio_record(name: &str, ratio: f64) -> BenchRecord {
+    BenchRecord {
+        name: name.to_string(),
+        n: 1,
+        ns_per_op: ratio,
+        // Speedup of the bulk path rides along in the throughput column,
+        // mirroring the other cost-ratio records.
+        throughput_per_s: 1.0 / ratio.max(1e-12),
+    }
+}
+
+/// A batch with `percent`% of its elements above τ (spread evenly, so
+/// the gather walks realistic strides), the rest far below it.
+fn batch_with_density(
+    percent: u64,
+    n: usize,
+    ctx: &HrfnaContext,
+    rng: &mut Rng,
+) -> (HrfnaBatch, usize) {
+    let mut flagged = 0usize;
+    let items: Vec<Hrfna> = (0..n)
+        .map(|j| {
+            let over = (j as u64) % 100 < percent;
+            flagged += over as usize;
+            let bits = if over {
+                45 + rng.below(15) as u32
+            } else {
+                8 + rng.below(20) as u32
+            };
+            let mut v = (rng.next_u64() >> (64 - bits)).max(1);
+            if over {
+                // Pin the top bit so the magnitude is genuinely ≥
+                // 2^{bits-1} > τ = 2^40 — `flagged` must equal the event
+                // count exactly (it is the ns-per-event denominator).
+                v |= 1 << (bits - 1);
+            }
+            let v = v as i64;
+            Hrfna::from_signed_int(if rng.bool() { v } else { -v }, -10, ctx)
+        })
+        .collect();
+    (HrfnaBatch::from_items(&items, ctx.k()), flagged)
+}
+
+fn main() {
+    let args = Args::from_env();
+    let quick = args.flag("quick") || std::env::var("BENCH_QUICK").is_ok();
+    common::banner(
+        "§VI-E normalization engine",
+        if quick {
+            "bulk vs per-element normalize (quick)"
+        } else {
+            "bulk vs per-element normalize"
+        },
+    );
+    let budget = Duration::from_millis(if quick { 60 } else { 300 });
+    // Tight threshold so the chosen densities are exactly the flagged
+    // densities the sweep sees.
+    let ctx = HrfnaContext::new(HrfnaConfig {
+        tau_bits: 40,
+        ..HrfnaConfig::paper_default()
+    });
+    let mut rng = Rng::new(11);
+    let n = 4096;
+    let mut records: Vec<BenchRecord> = Vec::new();
+    let mut gated_d10_ratio = f64::NAN;
+
+    for (label, percent) in [("d1", 1u64), ("d10", 10), ("d50", 50)] {
+        let (base, flagged) = batch_with_density(percent, n, &ctx, &mut rng);
+        assert!(flagged > 0);
+        // The denominator contract: the intended flag count must be the
+        // measured event count (one untimed sweep on a throwaway clone).
+        assert_eq!(base.clone().normalize_flagged(&ctx).total(), flagged);
+        // Each timed closure must start from a fresh batch, so both paths
+        // pay one clone per iteration; measure the clone alone and net it
+        // out — otherwise the constant memcpy compresses the cost ratio
+        // toward 1 (most severely at 1% density, where it rivals the
+        // actual normalization work).
+        let r_clone = bench_with(&format!("normalize {label} n={n} (clone only)"), budget, 8, &mut || {
+            base.clone().len()
+        });
+        let r_ref = bench_with(
+            &format!("normalize {label} n={n} (reference)"),
+            budget,
+            8,
+            &mut || {
+                let mut b = base.clone();
+                norm::reference::bulk_normalize(&mut b, &ctx, None).total()
+            },
+        );
+        let r_bulk = bench_with(
+            &format!("normalize {label} n={n} (bulk)"),
+            budget,
+            8,
+            &mut || {
+                let mut b = base.clone();
+                b.normalize_flagged(&ctx).total()
+            },
+        );
+        println!("{}", r_clone.line());
+        println!("{}", r_ref.line());
+        println!("{}", r_bulk.line());
+        let net = |r: &BenchResult| (r.ns_per_iter - r_clone.ns_per_iter).max(1.0);
+        let (net_ref, net_bulk) = (net(&r_ref), net(&r_bulk));
+        let ratio = net_bulk / net_ref;
+        println!("  -> bulk/reference normalize cost ratio at {label} (clone netted out): {ratio:.3}");
+        records.push(net_record(&format!("norm_reference_{label}_n{n}"), flagged, net_ref));
+        records.push(net_record(&format!("norm_bulk_{label}_n{n}"), flagged, net_bulk));
+        records.push(ratio_record(&format!("norm_bulk_cost_ratio_{label}"), ratio));
+        if label == "d10" {
+            gated_d10_ratio = ratio;
+        }
+    }
+
+    match write_json("BENCH_norm.json", &records) {
+        Ok(()) => println!("\nwrote BENCH_norm.json ({} records)", records.len()),
+        Err(e) => eprintln!("could not write BENCH_norm.json: {e}"),
+    }
+
+    // The protected invariant (also enforced by the CI gate against
+    // ci/baselines/BENCH_norm.json): bulk normalization at ≤ 0.6× the
+    // per-element reference cost at 10% flagged density. Asserted
+    // outright in full mode only — quick-mode timings on shared runners
+    // are too noisy to hard-fail.
+    if !quick {
+        assert!(
+            gated_d10_ratio <= 0.6,
+            "bulk normalize cost ratio {gated_d10_ratio:.3} exceeds 0.6 at 10% density"
+        );
+    }
+}

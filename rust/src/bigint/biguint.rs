@@ -79,17 +79,7 @@ impl BigUint {
 
     /// Lossy conversion to f64 (rounds the 53-bit prefix, tracks scale).
     pub fn to_f64(&self) -> f64 {
-        match self.limbs.len() {
-            0 => 0.0,
-            1 => self.limbs[0] as f64,
-            2 => self.limbs[0] as f64 + self.limbs[1] as f64 * 2f64.powi(64),
-            n => {
-                // Take the top two limbs and scale.
-                let hi = self.limbs[n - 1] as f64;
-                let lo = self.limbs[n - 2] as f64;
-                (hi * 2f64.powi(64) + lo) * 2f64.powi(64 * (n as i32 - 2))
-            }
-        }
+        limbs_to_f64(&self.limbs)
     }
 
     /// Exact conversion to u64 if it fits.
@@ -123,6 +113,25 @@ impl BigUint {
             }
         }
         Ordering::Equal
+    }
+}
+
+/// Lossy limbs→f64 conversion (top two significant limbs, scaled): the
+/// single definition shared by [`BigUint::to_f64`] and the fixed-width
+/// CRT scratch (`rns::crt`), so interval reseeds from the batched
+/// normalization engine can never diverge bit-wise from the BigUint
+/// decode paths. `limbs` must be normalized (no trailing zero limbs).
+pub fn limbs_to_f64(limbs: &[u64]) -> f64 {
+    match limbs.len() {
+        0 => 0.0,
+        1 => limbs[0] as f64,
+        2 => limbs[0] as f64 + limbs[1] as f64 * 2f64.powi(64),
+        n => {
+            // Take the top two limbs and scale.
+            let hi = limbs[n - 1] as f64;
+            let lo = limbs[n - 2] as f64;
+            (hi * 2f64.powi(64) + lo) * 2f64.powi(64 * (n as i32 - 2))
+        }
     }
 }
 

@@ -8,4 +8,4 @@
 mod biguint;
 mod ops;
 
-pub use biguint::BigUint;
+pub use biguint::{limbs_to_f64, BigUint};

@@ -42,6 +42,11 @@ struct KindMetrics {
     accepted: AtomicU64,
     rejected: AtomicU64,
     steals: AtomicU64,
+    /// Threshold-triggered normalization events taken while executing
+    /// this lane's batches (§VII-E frequency accounting, per lane).
+    norm_events: AtomicU64,
+    /// Overflow-guard normalization events for this lane.
+    guard_events: AtomicU64,
     /// Wall time workers of this lane spent executing batches (ns).
     busy_ns: AtomicU64,
     /// Currently queued jobs (gauge; +1 on accept, −batch on dequeue).
@@ -59,6 +64,8 @@ impl Default for KindMetrics {
             accepted: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             steals: AtomicU64::new(0),
+            norm_events: AtomicU64::new(0),
+            guard_events: AtomicU64::new(0),
             busy_ns: AtomicU64::new(0),
             depth: AtomicI64::new(0),
             latency_sum_us: AtomicU64::new(0),
@@ -70,6 +77,12 @@ impl Default for KindMetrics {
 /// Aggregated per-kind serving metrics.
 pub struct Metrics {
     kinds: [KindMetrics; JobKind::ALL.len()],
+    /// Claim cursors over the shared `OpCounters` totals: workers report
+    /// the *running totals* they observe after a batch, and the cursor
+    /// hands each event to exactly one reporter (`fetch_max` partition)
+    /// — overlapping execution windows cannot double-count.
+    claimed_norms: AtomicU64,
+    claimed_guards: AtomicU64,
     start: Instant,
 }
 
@@ -87,6 +100,8 @@ impl Default for Metrics {
     fn default() -> Metrics {
         Metrics {
             kinds: std::array::from_fn(|_| KindMetrics::default()),
+            claimed_norms: AtomicU64::new(0),
+            claimed_guards: AtomicU64::new(0),
             start: Instant::now(),
         }
     }
@@ -131,6 +146,53 @@ impl Metrics {
         self.kinds[kind_index(kind)]
             .steals
             .fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Seed the normalization claim cursors from the shared context's
+    /// current totals: events taken before serving started (client-side
+    /// warmup on the same `HrfnaContext`) must not be attributed to the
+    /// first lane that completes a batch. `Coordinator::start` calls
+    /// this once before spawning workers.
+    pub fn seed_norm_cursor(&self, total_norms: u64, total_guards: u64) {
+        self.claimed_norms.fetch_max(total_norms, Ordering::Relaxed);
+        self.claimed_guards.fetch_max(total_guards, Ordering::Relaxed);
+    }
+
+    /// Record normalization events from the shared context's *running
+    /// totals* (threshold and guard separately — the per-lane §VII-E
+    /// counters). Workers call this with the `OpSnapshot` observed after
+    /// `execute_batch`; the claim cursor (`fetch_max`) hands every event
+    /// to exactly one caller, so concurrent workers with overlapping
+    /// execution windows never double-count. Aggregate totals are exact;
+    /// *per-kind attribution* of an event taken while two different
+    /// kinds were executing is approximate (whichever window closed
+    /// later claims it) — metrics, not synchronization.
+    pub fn record_norm_totals(&self, kind: JobKind, total_norms: u64, total_guards: u64) {
+        let k = &self.kinds[kind_index(kind)];
+        let prev = self.claimed_norms.fetch_max(total_norms, Ordering::Relaxed);
+        let dn = total_norms.saturating_sub(prev);
+        if dn > 0 {
+            k.norm_events.fetch_add(dn, Ordering::Relaxed);
+        }
+        let prev = self.claimed_guards.fetch_max(total_guards, Ordering::Relaxed);
+        let dg = total_guards.saturating_sub(prev);
+        if dg > 0 {
+            k.guard_events.fetch_add(dg, Ordering::Relaxed);
+        }
+    }
+
+    /// Threshold-normalization events recorded for a kind.
+    pub fn norm_events(&self, kind: JobKind) -> u64 {
+        self.kinds[kind_index(kind)]
+            .norm_events
+            .load(Ordering::Relaxed)
+    }
+
+    /// Guard-normalization events recorded for a kind.
+    pub fn guard_events(&self, kind: JobKind) -> u64 {
+        self.kinds[kind_index(kind)]
+            .guard_events
+            .load(Ordering::Relaxed)
     }
 
     /// Jobs completed for a kind.
@@ -242,7 +304,7 @@ impl Metrics {
             "Serving metrics",
             &[
                 "lane", "jobs", "rej", "steal", "mean batch", "p50 us", "p95 us", "p99 us",
-                "occ %", "Mops",
+                "occ %", "Mops", "norms", "guards",
             ],
         );
         for &kind in &JobKind::ALL {
@@ -260,6 +322,8 @@ impl Metrics {
                 format!("{:.1}", self.latency_percentile_us(kind, 99.0)),
                 format!("{:.1}", self.occupancy(kind, workers_of(kind)) * 100.0),
                 format!("{:.2}", self.throughput_mops(kind)),
+                self.norm_events(kind).to_string(),
+                self.guard_events(kind).to_string(),
             ]);
         }
         t
@@ -308,6 +372,44 @@ mod tests {
         assert_eq!(m.rejected(JobKind::DotF32), 2);
         assert_eq!(m.total_rejected(), 2);
         assert_eq!(m.steals(JobKind::DotF32), 1);
+    }
+
+    #[test]
+    fn norm_events_claimed_exactly_once() {
+        let m = Metrics::default();
+        // Running totals: 0 → 5 events (2 guards) claimed by rk4...
+        m.record_norm_totals(JobKind::Rk4Hybrid, 5, 2);
+        // ...then 5 → 8: only the 3 new events are claimed.
+        m.record_norm_totals(JobKind::Rk4Hybrid, 8, 2);
+        // A stale/overlapping window (total 6 < cursor 8) claims nothing
+        // — this is exactly the concurrent-worker double-count case.
+        m.record_norm_totals(JobKind::DotHybrid, 6, 2);
+        assert_eq!(m.norm_events(JobKind::Rk4Hybrid), 8);
+        assert_eq!(m.guard_events(JobKind::Rk4Hybrid), 2);
+        assert_eq!(m.norm_events(JobKind::DotHybrid), 0);
+        assert_eq!(m.guard_events(JobKind::DotHybrid), 0);
+        // Later events are attributed to the window that closed later.
+        m.record_norm_totals(JobKind::DotHybrid, 10, 3);
+        assert_eq!(m.norm_events(JobKind::DotHybrid), 2);
+        assert_eq!(m.guard_events(JobKind::DotHybrid), 1);
+        // A seeded cursor swallows pre-serving events: a fresh Metrics
+        // seeded at totals (10, 3) attributes nothing until new events.
+        let seeded = Metrics::default();
+        seeded.seed_norm_cursor(10, 3);
+        seeded.record_norm_totals(JobKind::DotHybrid, 10, 3);
+        assert_eq!(seeded.norm_events(JobKind::DotHybrid), 0);
+        seeded.record_norm_totals(JobKind::DotHybrid, 12, 3);
+        assert_eq!(seeded.norm_events(JobKind::DotHybrid), 2);
+        // Aggregate equals the true total — nothing double-counted.
+        assert_eq!(
+            m.norm_events(JobKind::Rk4Hybrid) + m.norm_events(JobKind::DotHybrid),
+            10
+        );
+        // The events surface in the report table.
+        m.record(JobKind::Rk4Hybrid, 10.0, 64);
+        let s = m.table().render();
+        assert!(s.contains("norms"));
+        assert!(s.contains("guards"));
     }
 
     #[test]

@@ -100,6 +100,10 @@ impl Coordinator {
         }
         let queues = Arc::new(queues);
         let metrics = Arc::new(Metrics::default());
+        // Claim cursors start at the context's current totals so
+        // pre-serving events are not credited to the first lane.
+        let pre = hrfna.snapshot();
+        metrics.seed_norm_cursor(pre.norms, pre.guard_norms);
         let mut workers = Vec::new();
         let keys: Vec<(JobKind, usize)> = queues.keys().copied().collect();
         for key in keys {
@@ -127,6 +131,18 @@ impl Coordinator {
                                 let results =
                                     execute_batch(&engine, &hrfna, mode, kind, &batch);
                                 metrics.record_batch(kind, size, t0.elapsed());
+                                // Per-lane normalization accounting: hand
+                                // the shared context's running totals to
+                                // the claim cursor — every event is
+                                // counted exactly once across concurrent
+                                // workers (per-kind attribution of
+                                // simultaneous windows is approximate).
+                                let ops = hrfna.snapshot();
+                                metrics.record_norm_totals(
+                                    kind,
+                                    ops.norms,
+                                    ops.guard_norms,
+                                );
                                 for (job, r) in batch.into_iter().zip(results) {
                                     let latency_us =
                                         job.submitted.elapsed().as_secs_f64() * 1e6;

@@ -93,8 +93,9 @@ impl HrfnaArray {
     }
 
     /// Batched threshold sweep (the bulk form of the Fig. 1a policy):
-    /// normalize every element over τ, touching only flagged residues.
-    pub fn normalize_flagged(&mut self, ctx: &HrfnaContext) -> usize {
+    /// normalize every element over τ through the planar engine — one
+    /// batched rescale pass over the flagged columns only.
+    pub fn normalize_flagged(&mut self, ctx: &HrfnaContext) -> super::norm::NormReport {
         self.batch.normalize_flagged(ctx)
     }
 
@@ -195,8 +196,8 @@ mod tests {
         let before = big.decode(&c);
         let mut arr =
             HrfnaArray::from_items(vec![big.clone(), small, big.clone()], &c);
-        assert_eq!(arr.normalize_flagged(&c), 2);
-        assert_eq!(arr.normalize_flagged(&c), 0);
+        assert_eq!(arr.normalize_flagged(&c).threshold, 2);
+        assert!(arr.normalize_flagged(&c).is_empty());
         // Values preserved up to the Lemma 1 rounding.
         let after = arr.get(0).decode(&c);
         assert!(((after - before) / before).abs() < 1e-6);

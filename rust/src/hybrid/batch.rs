@@ -29,17 +29,21 @@ use std::sync::atomic::Ordering;
 
 use super::context::HrfnaContext;
 use super::interval::Interval;
+use super::norm::{self, NormReport};
 use super::number::{pow2, signed_mag_to_f64, Hrfna};
 use crate::rns::plane::{self, ResiduePlane};
 use crate::rns::residue::ResidueVec;
 
 /// A batch of HRFNA values in planar (structure-of-arrays) layout.
+/// Fields are crate-visible so the normalization engine
+/// ([`crate::hybrid::norm`]) can scan/update the packed control arrays
+/// and gather/scatter residue columns without per-element accessors.
 #[derive(Clone, Debug)]
 pub struct HrfnaBatch {
-    res: ResiduePlane,
-    f: Vec<i32>,
-    iv_lo: Vec<f64>,
-    iv_hi: Vec<f64>,
+    pub(crate) res: ResiduePlane,
+    pub(crate) f: Vec<i32>,
+    pub(crate) iv_lo: Vec<f64>,
+    pub(crate) iv_hi: Vec<f64>,
 }
 
 impl HrfnaBatch {
@@ -462,22 +466,28 @@ impl HrfnaBatch {
     // Batched normalization
     // ------------------------------------------------------------------
 
-    /// Batched threshold-driven normalization: scan the packed intervals
-    /// in bulk and reconstruct/normalize *only* the flagged elements
-    /// (bit-identical to `maybe_normalize` per element). Returns the
-    /// number of elements normalized.
-    pub fn normalize_flagged(&mut self, ctx: &HrfnaContext) -> usize {
-        let tau = ctx.tau_f64();
-        let mut count = 0;
-        for j in 0..self.len() {
-            if self.interval(j).abs_hi() >= tau {
-                let mut h = self.get(j);
-                h.normalize_to_sig(ctx, false);
-                self.set(j, &h);
-                count += 1;
-            }
-        }
-        count
+    /// Batched threshold-driven normalization on the planar engine
+    /// ([`crate::hybrid::norm::bulk_normalize`]): one scan of the packed
+    /// intervals builds the flagged-column set, the flagged columns are
+    /// gathered into a dense scratch plane and rescaled by **one**
+    /// batched residue-domain CRT pass (zero per-element
+    /// `reconstruct_signed` calls, zero per-element allocation), then
+    /// scattered back with bulk exponent/interval updates. Bit-identical
+    /// to `maybe_normalize` per element; the old per-element path lives
+    /// on as `norm::reference` and backs the property tests.
+    pub fn normalize_flagged(&mut self, ctx: &HrfnaContext) -> NormReport {
+        norm::bulk_normalize(self, ctx, None)
+    }
+
+    /// Bulk overflow-guard sweep (§III-C, batched): additionally rescale
+    /// every element whose conservative magnitude bound has reached
+    /// `max_bits`, even below τ — what a caller runs before an operation
+    /// that needs `max_bits` of headroom. Guard events are reported (and
+    /// counted) separately from threshold events. `max_bits` must exceed
+    /// `sig_bits` (rescaling stops at the significand target, so a
+    /// smaller budget is unsatisfiable — asserted).
+    pub fn normalize_guarded(&mut self, ctx: &HrfnaContext, max_bits: u32) -> NormReport {
+        norm::bulk_normalize(self, ctx, Some(max_bits))
     }
 
     // ------------------------------------------------------------------
@@ -784,8 +794,8 @@ mod tests {
                 }
             }
             crate::prop_assert!(
-                flagged == want_flagged,
-                "flag count {flagged} != {want_flagged}"
+                flagged.threshold == want_flagged && flagged.guard == 0,
+                "flag report {flagged:?} != {want_flagged} threshold events"
             );
             for (j, it) in items.iter().enumerate() {
                 crate::prop_assert!(same(&b.get(j), it), "norm j={j}");

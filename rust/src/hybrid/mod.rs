@@ -13,12 +13,17 @@
 //! * [`batch`]    — planar (structure-of-arrays) batched execution engine:
 //!   contiguous per-channel residue lanes + packed exponent/interval
 //!   arrays, with the scalar `Hrfna` ops as the bit-identical reference.
+//! * [`norm`]     — the normalization engine (Definitions 3–4, §VI-E):
+//!   the single scalar rescale primitive plus the planar bulk path
+//!   (flagged-scan → gather → batched residue-domain rescale → scatter),
+//!   with the per-element path kept as `norm::reference`.
 //! * [`error`]    — Lemma 1/2 bound calculators and bound-checking probes.
 
 pub mod context;
 pub mod interval;
 pub mod number;
 pub mod batch;
+pub mod norm;
 pub mod error;
 pub mod funcs;
 pub mod array;
@@ -27,4 +32,5 @@ pub use array::HrfnaArray;
 pub use batch::HrfnaBatch;
 pub use context::{HrfnaContext, OpCounters, OpSnapshot};
 pub use interval::Interval;
+pub use norm::NormReport;
 pub use number::Hrfna;

@@ -1,0 +1,502 @@
+//! The normalization engine (paper Definitions 3–4, §VI-E): the single
+//! owner of "reconstruct → round-half-away shift-by-`s` → re-encode →
+//! interval update", shared by the scalar and batched paths.
+//!
+//! * [`rescale`] is the scalar primitive. [`Hrfna::normalize`] (and
+//!   through it `normalize_to_sig`, `align_to`'s lossy branch, the MAC
+//!   accumulator guard and the batched `dot` tail) all delegate here —
+//!   no call site hand-rolls the reconstruct/shift/re-encode sequence
+//!   anymore.
+//! * [`bulk_normalize`] is the planar bulk path: scan the packed
+//!   exponent/interval arrays to build the flagged-column set, gather
+//!   those columns into a dense scratch plane
+//!   ([`crate::rns::plane::ResiduePlane::gather_columns`]), rescale them
+//!   with one batched residue-domain pass
+//!   ([`crate::rns::crt::CrtContext::rescale_batch`]: fixed-width
+//!   reconstruction + `2^{-s} mod m_i` Shoup re-encode), scatter back,
+//!   and update exponents + intervals in bulk. Zero per-element
+//!   `reconstruct_signed` calls, zero per-element allocation, and the
+//!   reconstruction counter advances **once per event set** — the
+//!   steady-state planar loop never serializes on bigint.
+//! * [`reference`] keeps the old per-element path as the executable
+//!   specification; property tests pin the bulk engine bit-identical to
+//!   it (residues, exponents, and interval bounds as raw u64 bits).
+//!
+//! In debug/test builds every event — scalar or bulk — is verified
+//! against its Lemma 1/2 budget through
+//! [`super::error::assert_events_within_bounds`].
+
+use std::sync::atomic::Ordering;
+
+use super::batch::HrfnaBatch;
+use super::context::HrfnaContext;
+use super::error;
+use super::interval::Interval;
+use super::number::Hrfna;
+
+/// Relative widening applied when an interval is re-seeded from a
+/// reconstruction (the f64 conversion truncates below the top 128 bits).
+pub(crate) const RESEED_REL: f64 = 1e-9;
+
+/// Interval re-seeded from a reconstructed value (with truncation slack).
+pub(crate) fn reseeded_interval(v: f64) -> Interval {
+    if v == 0.0 {
+        return Interval::zero();
+    }
+    let slack = v.abs() * RESEED_REL;
+    Interval::new(v - slack, v + slack)
+}
+
+/// What a bulk normalization sweep did: how many elements took a
+/// threshold (Definition 3) event and how many took an overflow-guard
+/// (§III-C) event. Callers feed these straight into `OpCounters`-style
+/// accounting, so the §VII-E normalization-frequency measurement stays
+/// exact even when events are batched.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct NormReport {
+    /// Threshold-triggered events (|N| reached τ).
+    pub threshold: usize,
+    /// Guard-triggered events (headroom, not τ, forced the rescale).
+    pub guard: usize,
+}
+
+impl NormReport {
+    /// Total events in the sweep.
+    pub fn total(&self) -> usize {
+        self.threshold + self.guard
+    }
+
+    /// True when the sweep touched nothing.
+    pub fn is_empty(&self) -> bool {
+        self.total() == 0
+    }
+
+    /// Accumulate another sweep's counts.
+    pub fn merge(&mut self, other: &NormReport) {
+        self.threshold += other.threshold;
+        self.guard += other.guard;
+    }
+}
+
+/// The scalar rescale primitive (Definition 4): `N → round(N / 2^s)`
+/// (round-half-away-from-zero, so the Lemma 1 half-unit bound holds),
+/// `f → f + s`, residues re-encoded, interval re-seeded. Every scalar
+/// normalization in the system funnels through here — and this in turn
+/// is the batched kernel at `n = 1`: a `ResidueVec` *is* a `k × 1`
+/// channel-major lane block, so the scalar path shares
+/// [`crate::rns::crt::CrtContext::rescale_batch`]'s allocation-free
+/// fixed-width arithmetic instead of keeping a BigUint copy of the
+/// reconstruct → round → re-encode sequence alive.
+pub fn rescale(h: &mut Hrfna, s: u32, ctx: &HrfnaContext, guard: bool) {
+    assert!(s > 0);
+    HrfnaContext::count(if guard {
+        &ctx.counters.guard_norms
+    } else {
+        &ctx.counters.norms
+    });
+    HrfnaContext::count(&ctx.counters.reconstructions);
+    let f_before = h.f;
+    let mut lanes = std::mem::take(&mut h.r.r);
+    let outcome = ctx.crt.rescale_batch(&mut lanes, 1, &[s])[0];
+    h.r.r = lanes;
+    h.f += s as i32;
+    let signed = if outcome.neg {
+        -outcome.mag_after
+    } else {
+        outcome.mag_after
+    };
+    h.iv = reseeded_interval(signed);
+    if cfg!(debug_assertions) || cfg!(test) {
+        error::assert_events_within_bounds(std::iter::once(error::event_sample(
+            outcome.mag_before,
+            outcome.mag_after,
+            f_before,
+            s,
+        )));
+    }
+}
+
+/// Guard budgets at or below the significand target are unsatisfiable:
+/// rescaling stops at `sig` bits (`s = bits − sig`), so an element could
+/// sit over such a budget forever. Reject the misconfiguration loudly
+/// instead of silently leaving elements above the stated headroom.
+fn assert_guard_budget(guard_bits: Option<u32>, sig: u32) {
+    if let Some(g) = guard_bits {
+        assert!(
+            g > sig,
+            "guard budget ({g} bits) must exceed the significand target ({sig} bits): \
+             normalization cannot shrink an element below sig"
+        );
+    }
+}
+
+/// Event class of one flagged element.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Flag {
+    Threshold,
+    Guard,
+}
+
+/// Flag classification for one element — shared verbatim by the bulk
+/// engine and the per-element [`reference`], so the two paths can only
+/// ever disagree in the rescale arithmetic (which the property suite
+/// pins bit-identical). Returns the class and the shift `s = bits − sig`
+/// that returns the magnitude to the significand target, or `None` when
+/// the element stays untouched (below every trigger, or already at/below
+/// the significand target so `normalize_to_sig` would no-op).
+fn classify(iv: &Interval, tau: f64, sig: u32, guard_bits: Option<u32>) -> Option<(Flag, u32)> {
+    let bits = iv.bits_hi();
+    let guard = matches!(guard_bits, Some(g) if bits >= g);
+    if !(guard || iv.abs_hi() >= tau) {
+        return None;
+    }
+    if bits <= sig {
+        return None;
+    }
+    let class = if guard { Flag::Guard } else { Flag::Threshold };
+    Some((class, bits - sig))
+}
+
+/// The planar bulk path: one flagged-column sweep over a whole batch.
+///
+/// `guard_bits = None` mirrors the per-element `maybe_normalize`
+/// discipline (threshold events only); `Some(b)` additionally takes a
+/// guard event on every element whose conservative magnitude bound has
+/// reached `b` bits, even below τ — the batched form of the §III-C
+/// pre-multiplication overflow guard.
+pub fn bulk_normalize(
+    b: &mut HrfnaBatch,
+    ctx: &HrfnaContext,
+    guard_bits: Option<u32>,
+) -> NormReport {
+    let tau = ctx.tau_f64();
+    let sig = ctx.cfg.sig_bits;
+    assert_guard_budget(guard_bits, sig);
+    let mut idx: Vec<usize> = Vec::new();
+    let mut shifts: Vec<u32> = Vec::new();
+    let mut report = NormReport::default();
+    for j in 0..b.len() {
+        let Some((class, s)) = classify(&b.interval(j), tau, sig, guard_bits) else {
+            continue;
+        };
+        idx.push(j);
+        shifts.push(s);
+        match class {
+            Flag::Threshold => report.threshold += 1,
+            Flag::Guard => report.guard += 1,
+        }
+    }
+    if idx.is_empty() {
+        return report;
+    }
+    // §VII-E accounting: per-element event counts (so frequency
+    // measurement stays exact), ONE reconstruction pass per event set
+    // (the planar engine's counter contract — no per-element CRT).
+    ctx.counters
+        .norms
+        .fetch_add(report.threshold as u64, Ordering::Relaxed);
+    ctx.counters
+        .guard_norms
+        .fetch_add(report.guard as u64, Ordering::Relaxed);
+    ctx.counters.reconstructions.fetch_add(1, Ordering::Relaxed);
+    let check_bounds = cfg!(debug_assertions) || cfg!(test);
+    let f_before: Vec<i32> = if check_bounds {
+        idx.iter().map(|&j| b.f[j]).collect()
+    } else {
+        Vec::new()
+    };
+    // Gather flagged columns densely, rescale them in one batched
+    // residue-domain pass, scatter back.
+    let mut scratch = b.res.gather_columns(&idx);
+    let outcomes = ctx.crt.rescale_batch(scratch.lanes_mut(), idx.len(), &shifts);
+    b.res.scatter_columns(&idx, &scratch);
+    // Bulk exponent + interval update from the recorded outcomes.
+    for ((&j, o), &s) in idx.iter().zip(&outcomes).zip(&shifts) {
+        b.f[j] += s as i32;
+        let signed = if o.neg { -o.mag_after } else { o.mag_after };
+        let iv = reseeded_interval(signed);
+        b.iv_lo[j] = iv.lo;
+        b.iv_hi[j] = iv.hi;
+    }
+    if check_bounds {
+        error::assert_events_within_bounds(
+            outcomes
+                .iter()
+                .zip(&shifts)
+                .zip(&f_before)
+                .map(|((o, &s), &f)| error::event_sample(o.mag_before, o.mag_after, f, s)),
+        );
+    }
+    report
+}
+
+/// The former per-element bulk path, kept as the executable
+/// specification: identical flag classification, then the scalar
+/// normalize per flagged element. Backs the bit-identity property tests
+/// and the `bench_norm` cost comparison.
+pub mod reference {
+    use super::{classify, Flag, HrfnaBatch, HrfnaContext, NormReport};
+
+    /// Per-element mirror of [`super::bulk_normalize`].
+    pub fn bulk_normalize(
+        b: &mut HrfnaBatch,
+        ctx: &HrfnaContext,
+        guard_bits: Option<u32>,
+    ) -> NormReport {
+        let tau = ctx.tau_f64();
+        let sig = ctx.cfg.sig_bits;
+        super::assert_guard_budget(guard_bits, sig);
+        let mut report = NormReport::default();
+        for j in 0..b.len() {
+            let Some((class, _)) = classify(&b.interval(j), tau, sig, guard_bits) else {
+                continue;
+            };
+            let guard = class == Flag::Guard;
+            let mut h = b.get(j);
+            h.normalize_to_sig(ctx, guard);
+            b.set(j, &h);
+            match class {
+                Flag::Threshold => report.threshold += 1,
+                Flag::Guard => report.guard += 1,
+            }
+        }
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HrfnaConfig;
+    use crate::rns::moduli::generate_prime_moduli;
+    use crate::util::proptest::check_with;
+    use crate::util::prng::Rng;
+
+    /// Tight-threshold context so events actually fire.
+    fn tight_ctx() -> HrfnaContext {
+        HrfnaContext::new(HrfnaConfig {
+            tau_bits: 40,
+            ..HrfnaConfig::paper_default()
+        })
+    }
+
+    /// A value with exactly `bits` magnitude bits (top bit pinned, so
+    /// flag classification is deterministic per `bits`) at exponent `f`.
+    fn value_with_bits(rng: &mut Rng, bits: u32, f: i32, c: &HrfnaContext) -> Hrfna {
+        let v = ((rng.next_u64() >> (64 - bits)) | (1 << (bits - 1))) as i64;
+        Hrfna::from_signed_int(if rng.bool() { v } else { -v }, f, c)
+    }
+
+    fn assert_batches_bit_identical(a: &HrfnaBatch, b: &HrfnaBatch) {
+        assert_eq!(a.len(), b.len());
+        for j in 0..a.len() {
+            let (x, y) = (a.get(j), b.get(j));
+            assert_eq!(x.r, y.r, "residues j={j}");
+            assert_eq!(x.f, y.f, "exponent j={j}");
+            // Interval bounds as raw bits: the bulk reseed must match the
+            // scalar path exactly, not merely bracket the same value.
+            assert_eq!(x.iv.lo.to_bits(), y.iv.lo.to_bits(), "iv.lo j={j}");
+            assert_eq!(x.iv.hi.to_bits(), y.iv.hi.to_bits(), "iv.hi j={j}");
+        }
+    }
+
+    #[test]
+    fn prop_bulk_bit_identical_to_reference_thresholds() {
+        // Densities: none / one / mixed / all flagged, random magnitudes
+        // straddling τ, random exponents.
+        let c = tight_ctx();
+        check_with("norm-bulk-vs-reference", 48, |rng| {
+            let n = 1 + rng.below(24) as usize;
+            let density = rng.below(4);
+            let items: Vec<Hrfna> = (0..n)
+                .map(|j| {
+                    let over = match density {
+                        0 => false,
+                        1 => j == 0,
+                        2 => rng.bool(),
+                        _ => true,
+                    };
+                    let bits = if over {
+                        41 + rng.below(22) as u32
+                    } else {
+                        5 + rng.below(30) as u32
+                    };
+                    let f = rng.range_i64(-40, 40) as i32;
+                    value_with_bits(rng, bits, f, &c)
+                })
+                .collect();
+            let mut bulk = HrfnaBatch::from_items(&items, c.k());
+            let mut refr = bulk.clone();
+            let got = bulk_normalize(&mut bulk, &c, None);
+            let want = reference::bulk_normalize(&mut refr, &c, None);
+            crate::prop_assert!(got == want, "report {got:?} != {want:?}");
+            assert_batches_bit_identical(&bulk, &refr);
+            // Second sweep finds nothing new on either path.
+            let again = bulk_normalize(&mut bulk, &c, None);
+            crate::prop_assert!(again.is_empty(), "resweep {again:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_bulk_bit_identical_with_guard_triggers() {
+        // Guard class: elements over the bit budget are guard events even
+        // below τ; elements over τ stay threshold events.
+        let c = tight_ctx();
+        check_with("norm-bulk-guard", 32, |rng| {
+            let n = 1 + rng.below(16) as usize;
+            let items: Vec<Hrfna> = (0..n)
+                .map(|_| {
+                    let bits = 5 + rng.below(58) as u32;
+                    let f = rng.range_i64(-20, 20) as i32;
+                    value_with_bits(rng, bits, f, &c)
+                })
+                .collect();
+            let guard_bits = Some(36);
+            let mut bulk = HrfnaBatch::from_items(&items, c.k());
+            let mut refr = bulk.clone();
+            let got = bulk_normalize(&mut bulk, &c, guard_bits);
+            let want = reference::bulk_normalize(&mut refr, &c, guard_bits);
+            crate::prop_assert!(got == want, "report {got:?} != {want:?}");
+            assert_batches_bit_identical(&bulk, &refr);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_bulk_bit_identical_on_random_moduli() {
+        check_with("norm-bulk-random-moduli", 16, |rng| {
+            let k = 4 + rng.below(4) as usize;
+            let width = 16 + rng.below(12) as u32;
+            let cfg = HrfnaConfig {
+                moduli: generate_prime_moduli(k, width),
+                tau_bits: 40,
+                scale_step: 16,
+                sig_bits: 20,
+                exponent_width: 16,
+                clock_mhz: 300.0,
+            };
+            let c = HrfnaContext::new(cfg);
+            let n = 1 + rng.below(12) as usize;
+            let items: Vec<Hrfna> = (0..n)
+                .map(|_| {
+                    let bits = 10 + rng.below(45) as u32;
+                    let f = rng.range_i64(-20, 20) as i32;
+                    value_with_bits(rng, bits, f, &c)
+                })
+                .collect();
+            let mut bulk = HrfnaBatch::from_items(&items, c.k());
+            let mut refr = bulk.clone();
+            let got = bulk_normalize(&mut bulk, &c, None);
+            let want = reference::bulk_normalize(&mut refr, &c, None);
+            crate::prop_assert!(got == want, "report {got:?} != {want:?}");
+            assert_batches_bit_identical(&bulk, &refr);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bulk_counts_one_reconstruction_per_event_set() {
+        // The acceptance contract: zero per-element reconstructions in
+        // the bulk path — the reconstruction counter advances once per
+        // non-empty event set, while the event counters stay per-element.
+        let c = tight_ctx();
+        let mut rng = Rng::new(17);
+        let mut items: Vec<Hrfna> = (0..6)
+            .map(|_| value_with_bits(&mut rng, 50, -5, &c))
+            .collect();
+        items.extend((0..3).map(|_| value_with_bits(&mut rng, 10, 0, &c)));
+        let mut b = HrfnaBatch::from_items(&items, c.k());
+        let before = c.snapshot();
+        let report = b.normalize_flagged(&c);
+        let d = c.snapshot().since(&before);
+        assert_eq!(report, NormReport { threshold: 6, guard: 0 });
+        assert_eq!(d.reconstructions, 1, "one bulk CRT pass per event set");
+        assert_eq!(d.norms, 6, "per-element event accounting");
+        assert_eq!(d.guard_norms, 0);
+        // Nothing flagged → no reconstruction at all.
+        let before = c.snapshot();
+        assert!(b.normalize_flagged(&c).is_empty());
+        assert_eq!(c.snapshot().since(&before).reconstructions, 0);
+    }
+
+    #[test]
+    fn bulk_guard_events_counted_separately() {
+        let c = tight_ctx();
+        let mut rng = Rng::new(29);
+        let items: Vec<Hrfna> = (0..4)
+            .map(|_| value_with_bits(&mut rng, 38, 0, &c)) // below τ=2^40
+            .collect();
+        let mut b = HrfnaBatch::from_items(&items, c.k());
+        let before = c.snapshot();
+        let report = b.normalize_guarded(&c, 36);
+        let d = c.snapshot().since(&before);
+        assert_eq!(report, NormReport { threshold: 0, guard: 4 });
+        assert_eq!(d.guard_norms, 4);
+        assert_eq!(d.norms, 0);
+        assert_eq!(d.reconstructions, 1);
+        for j in 0..b.len() {
+            assert!(b.get(j).magnitude_bits() <= c.cfg.sig_bits + 1, "j={j}");
+        }
+    }
+
+    #[test]
+    fn interval_shr_widening_pinned_to_scalar_path() {
+        // Regression pin (ISSUE 4 satellite): after a bulk sweep the
+        // packed intervals equal the scalar `maybe_normalize` intervals
+        // *bit for bit* — an interval that merely contains the decoded
+        // value would let the batch path drift wide (`Interval::shr`
+        // style widening) and desynchronize later flag decisions.
+        let c = tight_ctx();
+        let mut rng = Rng::new(41);
+        let mut items: Vec<Hrfna> = (0..12)
+            .map(|_| {
+                let bits = 30 + rng.below(30) as u32;
+                value_with_bits(&mut rng, bits, -8, &c)
+            })
+            .collect();
+        let mut b = HrfnaBatch::from_items(&items, c.k());
+        b.normalize_flagged(&c);
+        for (j, it) in items.iter_mut().enumerate() {
+            it.maybe_normalize(&c);
+            let got = b.get(j);
+            assert_eq!(got.iv.lo.to_bits(), it.iv.lo.to_bits(), "iv.lo j={j}");
+            assert_eq!(got.iv.hi.to_bits(), it.iv.hi.to_bits(), "iv.hi j={j}");
+            assert_eq!(got.f, it.f, "f j={j}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "guard budget")]
+    fn guard_budget_at_or_below_sig_rejected() {
+        let c = tight_ctx(); // sig_bits = 30
+        let mut b = HrfnaBatch::zeros(2, &c);
+        b.normalize_guarded(&c, 30);
+    }
+
+    #[test]
+    fn report_merge_and_total() {
+        let mut a = NormReport { threshold: 2, guard: 1 };
+        let b = NormReport { threshold: 3, guard: 4 };
+        a.merge(&b);
+        assert_eq!(a, NormReport { threshold: 5, guard: 5 });
+        assert_eq!(a.total(), 10);
+        assert!(!a.is_empty());
+        assert!(NormReport::default().is_empty());
+    }
+
+    #[test]
+    fn scalar_rescale_matches_legacy_normalize_semantics() {
+        // The delegated Hrfna::normalize must behave exactly as before:
+        // Lemma 1 bound, exponent advance, interval soundness.
+        let c = HrfnaContext::paper_default();
+        let mut v = Hrfna::from_signed_int(0x7FFF_FFFF_FFFF, -20, &c);
+        let before = v.decode(&c);
+        let f0 = v.f;
+        v.normalize(16, &c, false);
+        assert_eq!(v.f, f0 + 16);
+        let after = v.decode(&c);
+        assert!((after - before).abs() <= super::super::number::pow2(-20 + 15));
+        assert!(v.interval_is_sound(&c));
+    }
+}

@@ -16,10 +16,6 @@ use super::interval::Interval;
 use crate::bigint::BigUint;
 use crate::rns::residue::ResidueVec;
 
-/// Relative widening applied when an interval is re-seeded from a BigUint
-/// reconstruction (BigUint::to_f64 truncates below the top 128 bits).
-const RESEED_REL: f64 = 1e-9;
-
 /// A hybrid residue–floating number `(r, f)` with its magnitude interval.
 #[derive(Clone, Debug)]
 pub struct Hrfna {
@@ -297,28 +293,12 @@ impl Hrfna {
 
     /// Normalize with an explicit scale step `s` (Definition 4):
     /// `N → round(N / 2^s)` (round-half-away-from-zero, so the Lemma 1
-    /// half-unit bound holds), `f → f + s`, re-encode residues.
+    /// half-unit bound holds), `f → f + s`, re-encode residues. Delegates
+    /// to the engine's single rescale primitive ([`super::norm::rescale`])
+    /// — the one place in the system that performs
+    /// reconstruct → shift → re-encode → interval update.
     pub fn normalize(&mut self, s: u32, ctx: &HrfnaContext, guard: bool) {
-        assert!(s > 0);
-        HrfnaContext::count(if guard {
-            &ctx.counters.guard_norms
-        } else {
-            &ctx.counters.norms
-        });
-        HrfnaContext::count(&ctx.counters.reconstructions);
-        let (neg, mag) = ctx.crt.reconstruct_signed(&self.r);
-        // round-half-away: (|N| + 2^{s-1}) >> s on the magnitude.
-        let half = BigUint::one().shl(s - 1);
-        let rounded = mag.add(&half).shr(s);
-        let mut r = ctx.crt.encode(&rounded);
-        if neg && !rounded.is_zero() {
-            r = negate_residues(&r, ctx);
-        }
-        let v = rounded.to_f64();
-        let signed = if neg { -v } else { v };
-        self.r = r;
-        self.f += s as i32;
-        self.iv = reseeded_interval(signed);
+        super::norm::rescale(self, s, ctx, guard);
     }
 
     /// Normalize so the magnitude returns to the significand target:
@@ -412,15 +392,6 @@ fn negate_residues(r: &ResidueVec, ctx: &HrfnaContext) -> ResidueVec {
             .map(|(&ri, &mi)| if ri == 0 { 0 } else { mi - ri })
             .collect(),
     }
-}
-
-/// Interval re-seeded from a reconstructed value (with truncation slack).
-fn reseeded_interval(v: f64) -> Interval {
-    if v == 0.0 {
-        return Interval::zero();
-    }
-    let slack = v.abs() * RESEED_REL;
-    Interval::new(v - slack, v + slack)
 }
 
 /// Exponent synchronization (§IV-B). Returns value-equal operands with a

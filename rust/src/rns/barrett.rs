@@ -167,6 +167,82 @@ impl Barrett {
     }
 }
 
+/// A fixed multiplier paired with its precomputed Shoup constant
+/// `⌊mult·2^64/m⌋` — the "one mul-hi + one mul-lo + one conditional
+/// subtract" form a constant takes when it streams against many
+/// residues (lane scaling, the normalization engine's re-encode basis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShoupMul {
+    mult: u64,
+    shoup: u64,
+}
+
+impl ShoupMul {
+    /// Precompute the Shoup constant for `mult < m`.
+    pub fn new(bar: &Barrett, mult: u64) -> ShoupMul {
+        debug_assert!(mult < bar.m);
+        ShoupMul {
+            mult,
+            shoup: bar.shoup(mult),
+        }
+    }
+
+    /// The wrapped multiplier.
+    #[inline]
+    pub fn mult(&self) -> u64 {
+        self.mult
+    }
+
+    /// `(a · mult) mod m` for `a < m`.
+    #[inline]
+    pub fn mul(&self, bar: &Barrett, a: u64) -> u64 {
+        bar.mul_shoup(a, self.mult, self.shoup)
+    }
+}
+
+/// Per-modulus table of `2^{-d} mod m` Shoup multipliers (odd `m` only —
+/// 2 has no inverse modulo an even modulus). This is the normalization
+/// engine's residue-domain re-encode constant set: Definition 4's
+/// division by `2^s` becomes one channelwise Shoup multiply by
+/// `2^{-s} mod m_i` instead of a BigUint re-encode
+/// (`rns::crt::CrtContext::rescale_batch`).
+#[derive(Clone, Debug)]
+pub struct InvPow2 {
+    /// `2^{-1} mod m` = `(m+1)/2` for odd `m`.
+    inv2: u64,
+    table: Vec<ShoupMul>,
+}
+
+impl Barrett {
+    /// Build the inverse-power-of-two Shoup table `2^{-d} mod m` for
+    /// `d < depth`. Returns `None` for even moduli (no inverse of 2).
+    pub fn inv_pow2(&self, depth: usize) -> Option<InvPow2> {
+        if self.m % 2 == 0 {
+            return None;
+        }
+        let inv2 = (self.m + 1) / 2;
+        let mut table = Vec::with_capacity(depth);
+        let mut v = 1 % self.m;
+        for _ in 0..depth {
+            table.push(ShoupMul::new(self, v));
+            v = self.mul(v, inv2);
+        }
+        Some(InvPow2 { inv2, table })
+    }
+}
+
+impl InvPow2 {
+    /// `(a · 2^{-s}) mod m` for `a < m`: one Shoup multiply on a table
+    /// hit, a pow-ladder fallback beyond the table depth.
+    #[inline]
+    pub fn mul_inv_pow2(&self, bar: &Barrett, a: u64, s: u32) -> u64 {
+        match self.table.get(s as usize) {
+            Some(sm) => sm.mul(bar, a),
+            None => bar.mul(a, crate::rns::moduli::pow_mod(self.inv2, s as u64, bar.m)),
+        }
+    }
+}
+
 /// Precompute Barrett contexts for a modulus set, validating the 31-bit
 /// lane invariant (every set built here may take the deferred kernels).
 /// Panics with the offending modulus on violation — modulus sets are
@@ -362,6 +438,46 @@ mod tests {
             );
             Ok(())
         });
+    }
+
+    #[test]
+    fn shoup_mul_wrapper_matches_mul() {
+        for &m in &[3u64, 97, 65521, (1 << 31) - 1] {
+            let b = Barrett::new(m);
+            for mult in [0u64, 1, m / 2, m - 1] {
+                let sm = ShoupMul::new(&b, mult);
+                assert_eq!(sm.mult(), mult);
+                for a in [0u64, 1, m / 3, m - 1] {
+                    assert_eq!(sm.mul(&b, a % m), b.mul(a % m, mult), "m={m}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn inv_pow2_inverts_doubling() {
+        for &m in &[3u64, 97, 65521, (1 << 31) - 1] {
+            let b = Barrett::new(m);
+            let inv = b.inv_pow2(16).expect("odd modulus");
+            for s in [0u32, 1, 5, 15, 16, 40, 200] {
+                // (a·2^s)·2^{-s} ≡ a for any a < m.
+                for a in [0u64, 1, m / 2, m - 1] {
+                    let scaled = b.mul(a, crate::rns::moduli::pow_mod(2, s as u64, m));
+                    assert_eq!(
+                        inv.mul_inv_pow2(&b, scaled, s),
+                        a,
+                        "m={m} a={a} s={s}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn inv_pow2_rejects_even_moduli() {
+        assert!(Barrett::new(65536).inv_pow2(4).is_none());
+        assert!(Barrett::new(2).inv_pow2(4).is_none());
+        assert!(Barrett::new(65521).inv_pow2(4).is_some());
     }
 
     #[test]

@@ -7,8 +7,8 @@
 //! `N = Σ r_i · inv_i · M_i  mod M` — exactly the structure a pipelined
 //! CRT engine evaluates.
 
-use super::barrett::{barrett_set, Barrett};
-use super::moduli::{composite_modulus, is_pairwise_coprime};
+use super::barrett::{barrett_set, Barrett, InvPow2, ShoupMul};
+use super::moduli::{composite_modulus, is_pairwise_coprime, pow_mod};
 use super::residue::ResidueVec;
 use crate::bigint::BigUint;
 
@@ -54,6 +54,35 @@ pub struct CrtContext {
     half_limbs: [u64; FIXED_LIMBS],
     /// True when k and bit sizes fit the fixed-width fast path.
     fixed_ok: bool,
+    /// Per-channel Shoup constants for `2^{64·t} mod m_i`, `t <
+    /// FIXED_LIMBS` — the limb-fold basis that reduces a fixed-width
+    /// integer mod `m_i` with multiplies only (no division), used by the
+    /// normalization engine's batched rescale.
+    limb_base: Vec<[ShoupMul; FIXED_LIMBS]>,
+    /// Per-channel `2^{-s} mod m_i` Shoup tables (odd modulus sets only):
+    /// the residue-domain re-encode constants of [`CrtContext::rescale_batch`].
+    inv_pow2: Option<Vec<InvPow2>>,
+}
+
+/// Depth of the per-channel `2^{-s} mod m_i` tables: shifts from the
+/// normalization engine are bounded by the fixed-width magnitude
+/// (`FIXED_LIMBS·64` bits); anything deeper takes the pow-ladder
+/// fallback inside [`InvPow2::mul_inv_pow2`].
+const INV_POW2_DEPTH: usize = FIXED_LIMBS * 64 + 64;
+
+/// Outcome of one element of a batched rescale
+/// ([`CrtContext::rescale_batch`]): the post-event sign and the lossy-f64
+/// magnitudes before/after (same truncation as [`BigUint::to_f64`]) —
+/// what the normalization engine needs to reseed intervals and verify
+/// Lemma 1/2 budgets without any further reconstruction.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Rescaled {
+    /// Sign of the rescaled value (false once it rounds to zero).
+    pub neg: bool,
+    /// `|N|` before the event.
+    pub mag_before: f64,
+    /// `|round(N / 2^s)|` after the event.
+    pub mag_after: f64,
 }
 
 /// Fixed reconstruction width: 5×64 = 320 bits covers M up to ~2^288 plus
@@ -92,6 +121,82 @@ fn fixed_cmp(a: &[u64; FIXED_LIMBS], b: &[u64; FIXED_LIMBS]) -> std::cmp::Orderi
         }
     }
     std::cmp::Ordering::Equal
+}
+
+/// True iff the fixed-width value is zero.
+#[inline]
+fn fixed_is_zero(a: &[u64; FIXED_LIMBS]) -> bool {
+    a.iter().all(|&l| l == 0)
+}
+
+/// Bit `i` of a fixed-width value (false beyond the top).
+#[inline]
+fn fixed_bit(a: &[u64; FIXED_LIMBS], i: u32) -> bool {
+    let limb = (i / 64) as usize;
+    limb < FIXED_LIMBS && (a[limb] >> (i % 64)) & 1 == 1
+}
+
+/// `a >> s` (fixed width; zero once the shift clears every limb).
+fn fixed_shr(a: &[u64; FIXED_LIMBS], s: u32) -> [u64; FIXED_LIMBS] {
+    let mut out = [0u64; FIXED_LIMBS];
+    let limb_s = (s / 64) as usize;
+    if limb_s >= FIXED_LIMBS {
+        return out;
+    }
+    let bit_s = s % 64;
+    for i in 0..FIXED_LIMBS - limb_s {
+        let lo = a[i + limb_s] >> bit_s;
+        let hi = if bit_s > 0 && i + limb_s + 1 < FIXED_LIMBS {
+            a[i + limb_s + 1] << (64 - bit_s)
+        } else {
+            0
+        };
+        out[i] = lo | hi;
+    }
+    out
+}
+
+/// `a += 1` (fixed width; the caller guarantees headroom).
+#[inline]
+fn fixed_add_one(a: &mut [u64; FIXED_LIMBS]) {
+    for l in a.iter_mut() {
+        let (v, carry) = l.overflowing_add(1);
+        *l = v;
+        if !carry {
+            return;
+        }
+    }
+}
+
+/// `a mod 2^s` (the low `s` bits of a fixed-width value).
+fn fixed_low_bits(a: &[u64; FIXED_LIMBS], s: u32) -> [u64; FIXED_LIMBS] {
+    let mut out = [0u64; FIXED_LIMBS];
+    let full = ((s / 64) as usize).min(FIXED_LIMBS);
+    out[..full].copy_from_slice(&a[..full]);
+    let rem = s % 64;
+    if full < FIXED_LIMBS && rem > 0 {
+        out[full] = a[full] & ((1u64 << rem) - 1);
+    }
+    out
+}
+
+/// `2^s` as a fixed-width value (`s < FIXED_LIMBS·64`).
+#[inline]
+fn fixed_pow2(s: u32) -> [u64; FIXED_LIMBS] {
+    debug_assert!((s as usize) < FIXED_LIMBS * 64);
+    let mut out = [0u64; FIXED_LIMBS];
+    out[(s / 64) as usize] = 1u64 << (s % 64);
+    out
+}
+
+/// Lossy conversion of a fixed-width value to f64: strip the zero
+/// padding, then the **shared** [`crate::bigint::limbs_to_f64`] — one
+/// definition for BigUint and fixed-width paths, so the normalization
+/// engine's interval reseeds are bit-identical to the scalar decode by
+/// construction, not by parallel maintenance.
+fn fixed_to_f64(a: &[u64; FIXED_LIMBS]) -> f64 {
+    let n = FIXED_LIMBS - a.iter().rev().take_while(|&&l| l == 0).count();
+    crate::bigint::limbs_to_f64(&a[..n])
 }
 
 /// a -= b (fixed width; caller guarantees a >= b).
@@ -149,8 +254,40 @@ impl CrtContext {
         let m_limbs = to_fixed(&big_m).unwrap_or([0; FIXED_LIMBS]);
         let half = big_m.shr(1);
         let half_limbs = to_fixed(&half).unwrap_or([0; FIXED_LIMBS]);
+        let barrett = barrett_set(moduli);
+        // The rescale tables serve only the fixed-width fast path of
+        // `rescale_batch`; exotic sets (outside the fixed window, or with
+        // an even modulus where 2 has no inverse) take the BigUint
+        // mirror, so don't pay k×(FIXED_LIMBS + INV_POW2_DEPTH) Shoup
+        // precomputations for tables no code path can reach. Construction
+        // is eager for the reachable case: contexts are setup-time
+        // configuration and the whole table build is ~0.1 ms at k = 8.
+        let rescale_fast_ok = fixed_ok && moduli.iter().all(|&m| m % 2 == 1);
+        let (limb_base, inv_pow2) = if rescale_fast_ok {
+            let limb_base = moduli
+                .iter()
+                .zip(&barrett)
+                .map(|(&m, bar)| {
+                    let base64 = pow_mod(2, 64, m);
+                    let mut v = 1 % m;
+                    let mut row = [ShoupMul::new(bar, 0); FIXED_LIMBS];
+                    for slot in row.iter_mut() {
+                        *slot = ShoupMul::new(bar, v);
+                        v = bar.mul(v, base64);
+                    }
+                    row
+                })
+                .collect();
+            let inv_pow2 = barrett
+                .iter()
+                .map(|bar| bar.inv_pow2(INV_POW2_DEPTH))
+                .collect::<Option<Vec<_>>>();
+            (limb_base, inv_pow2)
+        } else {
+            (Vec::new(), None)
+        };
         CrtContext {
-            barrett: barrett_set(moduli),
+            barrett,
             moduli: moduli.to_vec(),
             big_m,
             term,
@@ -160,6 +297,8 @@ impl CrtContext {
             half,
             half_limbs,
             fixed_ok,
+            limb_base,
+            inv_pow2,
         }
     }
 
@@ -347,6 +486,134 @@ impl CrtContext {
         ResidueVec {
             r: (0..self.k()).map(|c| lanes[c * n + j]).collect(),
         }
+    }
+
+    /// Batched Definition-4 rescale over channel-major lanes: element `j`
+    /// — the signed M-complement value `N_j` — becomes
+    /// `round(N_j / 2^{shifts[j]})` (round-half-away-from-zero, so the
+    /// Lemma 1 half-unit bound holds), re-encoded **without leaving the
+    /// residue domain**: one fixed-width reconstruction yields the
+    /// rounding offset `d = |N'_j·2^s − N_j| < 2^s` (the distance to the
+    /// shifted grid), `d` folds to `d mod m_i` through the precomputed
+    /// `2^{64t} mod m_i` limb basis, and the new residues are
+    /// `(r_i ± d_i) · 2^{-s} mod m_i` via the precomputed inverse-power
+    /// Shoup constants — no BigUint re-encode, no per-element allocation.
+    ///
+    /// `shifts[j] == 0` leaves element `j` untouched. Falls back to the
+    /// scalar BigUint mirror for modulus sets outside the fixed-width
+    /// window or containing an even modulus (2 is not invertible there).
+    pub fn rescale_batch(&self, lanes: &mut [u64], n: usize, shifts: &[u32]) -> Vec<Rescaled> {
+        let k = self.k();
+        assert_eq!(lanes.len(), k * n, "lanes must be k×n channel-major");
+        assert_eq!(shifts.len(), n, "one shift per element");
+        let Some(inv) = self.inv_pow2.as_ref().filter(|_| self.fixed_ok) else {
+            return self.rescale_batch_slow(lanes, n, shifts);
+        };
+        let mut out = Vec::with_capacity(n);
+        for (j, &s) in shifts.iter().enumerate() {
+            let acc = self.fixed_accumulate(|c| lanes[c * n + j]);
+            let neg = fixed_cmp(&acc, &self.half_limbs) != std::cmp::Ordering::Less;
+            let mag = if neg {
+                let mut m = self.m_limbs;
+                fixed_sub(&mut m, &acc);
+                m
+            } else {
+                acc
+            };
+            let mag_before = fixed_to_f64(&mag);
+            if s == 0 {
+                out.push(Rescaled {
+                    neg: neg && !fixed_is_zero(&mag),
+                    mag_before,
+                    mag_after: mag_before,
+                });
+                continue;
+            }
+            // Round half-away on the magnitude: (mag + 2^{s-1}) >> s,
+            // computed as (mag >> s) + carry with carry = bit s-1 of mag.
+            let round_up = fixed_bit(&mag, s - 1);
+            let mut rounded = fixed_shr(&mag, s);
+            if round_up {
+                fixed_add_one(&mut rounded);
+            }
+            let mag_after = fixed_to_f64(&rounded);
+            if fixed_is_zero(&rounded) {
+                for c in 0..k {
+                    lanes[c * n + j] = 0;
+                }
+                out.push(Rescaled {
+                    neg: false,
+                    mag_before,
+                    mag_after,
+                });
+                continue;
+            }
+            // d = |rounded·2^s − mag|: with low = mag mod 2^s this is
+            // 2^s − low when rounding up (low ≥ 2^{s-1} > 0, and a set
+            // bit s-1 of mag bounds s below the fixed width), low
+            // otherwise.
+            let low = fixed_low_bits(&mag, s);
+            let d = if round_up {
+                let mut p = fixed_pow2(s);
+                fixed_sub(&mut p, &low);
+                p
+            } else {
+                low
+            };
+            // Signed update: N'·2^s = N + σ·d with σ = sign(N) when
+            // rounding up (away from zero) and −sign(N) otherwise, so
+            // r' = (r ± d_i)·2^{-s} per channel.
+            let add_d = neg != round_up;
+            for c in 0..k {
+                let bar = &self.barrett[c];
+                let mut dm = 0u64;
+                for (base, &limb) in self.limb_base[c].iter().zip(&d) {
+                    if limb != 0 {
+                        dm = bar.add(dm, base.mul(bar, bar.reduce(limb)));
+                    }
+                }
+                let r = lanes[c * n + j];
+                let t = if add_d { bar.add(r, dm) } else { bar.sub(r, dm) };
+                lanes[c * n + j] = inv[c].mul_inv_pow2(bar, t, s);
+            }
+            out.push(Rescaled {
+                neg,
+                mag_before,
+                mag_after,
+            });
+        }
+        out
+    }
+
+    /// BigUint mirror of [`CrtContext::rescale_batch`] (exotic modulus
+    /// sets): reconstruct, round, re-encode, negate — exactly the scalar
+    /// normalization tail, element by element.
+    fn rescale_batch_slow(&self, lanes: &mut [u64], n: usize, shifts: &[u32]) -> Vec<Rescaled> {
+        let mut out = Vec::with_capacity(n);
+        for (j, &s) in shifts.iter().enumerate() {
+            let rv = self.gather(lanes, n, j);
+            let (neg, mag) = self.reconstruct_signed(&rv);
+            let mag_before = mag.to_f64();
+            let rounded = if s == 0 {
+                mag
+            } else {
+                mag.add(&BigUint::one().shl(s - 1)).shr(s)
+            };
+            let mag_after = rounded.to_f64();
+            let keep_sign = neg && !rounded.is_zero();
+            if s != 0 {
+                let r = self.encode(&rounded);
+                for (c, (&ri, &m)) in r.r.iter().zip(&self.moduli).enumerate() {
+                    lanes[c * n + j] = if keep_sign && ri != 0 { m - ri } else { ri };
+                }
+            }
+            out.push(Rescaled {
+                neg: keep_sign,
+                mag_before,
+                mag_after,
+            });
+        }
+        out
     }
 
     /// Mixed-radix digits (d_0..d_{k-1}) with
@@ -634,6 +901,181 @@ mod tests {
     fn batch_rejects_misshaped_lanes() {
         let c = ctx();
         c.reconstruct_batch(&[0u64; 7], 2);
+    }
+
+    /// Independent scalar specification of one rescale: reconstruct,
+    /// round half-away on the magnitude, re-encode, negate.
+    fn scalar_rescale(c: &CrtContext, rv: &ResidueVec, s: u32) -> (ResidueVec, bool, BigUint) {
+        let (neg, mag) = c.reconstruct_signed(rv);
+        let rounded = if s == 0 {
+            mag
+        } else {
+            mag.add(&BigUint::one().shl(s - 1)).shr(s)
+        };
+        let mut r = c.encode(&rounded);
+        let keep = neg && !rounded.is_zero();
+        if keep {
+            r = ResidueVec {
+                r: r.r
+                    .iter()
+                    .zip(&c.moduli)
+                    .map(|(&ri, &m)| if ri == 0 { 0 } else { m - ri })
+                    .collect(),
+            };
+        }
+        (r, keep, rounded)
+    }
+
+    fn random_signed_lanes(c: &CrtContext, rng: &mut crate::util::prng::Rng, n: usize) -> Vec<u64> {
+        let k = c.k();
+        let mut lanes = vec![0u64; k * n];
+        for j in 0..n {
+            match rng.below(5) {
+                0 => {} // exact zero
+                1 => {
+                    // Small magnitude, either sign (M-complement).
+                    let v = rng.next_u64() >> (32 + rng.below(30));
+                    let enc = if rng.bool() && v != 0 {
+                        c.big_m.sub(&BigUint::from_u64(v))
+                    } else {
+                        BigUint::from_u64(v)
+                    };
+                    let r = c.encode(&enc);
+                    for (ch, &ri) in r.r.iter().enumerate() {
+                        lanes[ch * n + j] = ri;
+                    }
+                }
+                2 => {
+                    // Sign boundary neighbourhood: M/2 ± small.
+                    let half = c.big_m.shr(1);
+                    let enc = if rng.bool() {
+                        half.add_u64(rng.below(3))
+                    } else {
+                        half.sub(&BigUint::from_u64(rng.below(3) + 1))
+                    };
+                    let r = c.encode(&enc);
+                    for (ch, &ri) in r.r.iter().enumerate() {
+                        lanes[ch * n + j] = ri;
+                    }
+                }
+                _ => {
+                    // Arbitrary residues (a uniform value mod M).
+                    for (ch, &m) in c.moduli.iter().enumerate() {
+                        lanes[ch * n + j] = rng.below(m);
+                    }
+                }
+            }
+        }
+        lanes
+    }
+
+    fn check_rescale_matches_scalar(c: &CrtContext, rng: &mut crate::util::prng::Rng) {
+        let k = c.k();
+        let n = rng.below(13) as usize; // includes n = 0
+        let lanes = random_signed_lanes(c, rng, n);
+        let shifts: Vec<u32> = (0..n)
+            .map(|_| match rng.below(5) {
+                0 => 0,
+                1 => 1 + rng.below(8) as u32,
+                2 => 1 + rng.below(64) as u32,
+                3 => 1 + rng.below(c.big_m.bit_length() as u64) as u32,
+                // Past the top: everything rounds to zero.
+                _ => c.big_m.bit_length() + 1 + rng.below(64) as u32,
+            })
+            .collect();
+        let mut got = lanes.clone();
+        let outcomes = c.rescale_batch(&mut got, n, &shifts);
+        assert_eq!(outcomes.len(), n);
+        for j in 0..n {
+            let rv = ResidueVec {
+                r: (0..k).map(|ch| lanes[ch * n + j]).collect(),
+            };
+            let (want, want_neg, rounded) = scalar_rescale(c, &rv, shifts[j]);
+            let got_rv = ResidueVec {
+                r: (0..k).map(|ch| got[ch * n + j]).collect(),
+            };
+            assert_eq!(got_rv, want, "residues j={j} s={}", shifts[j]);
+            assert_eq!(outcomes[j].neg, want_neg, "sign j={j}");
+            assert_eq!(
+                outcomes[j].mag_after.to_bits(),
+                rounded.to_f64().to_bits(),
+                "mag_after j={j}"
+            );
+            let (_, mag_before) = c.reconstruct_signed(&rv);
+            assert_eq!(
+                outcomes[j].mag_before.to_bits(),
+                mag_before.to_f64().to_bits(),
+                "mag_before j={j}"
+            );
+        }
+    }
+
+    #[test]
+    fn prop_rescale_batch_matches_scalar_default_moduli() {
+        let c = ctx();
+        assert!(c.inv_pow2.is_some(), "default set is odd");
+        check_with("crt-rescale-default", 64, |rng| {
+            check_rescale_matches_scalar(&c, rng);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_rescale_batch_matches_scalar_random_prime_moduli() {
+        use crate::rns::moduli::generate_prime_moduli;
+        check_with("crt-rescale-random-moduli", 24, |rng| {
+            let k = 3 + rng.below(5) as usize;
+            let width = 8 + rng.below(23) as u32; // 8..=30-bit lanes
+            let c = CrtContext::new(&generate_prime_moduli(k, width));
+            check_rescale_matches_scalar(&c, rng);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rescale_batch_even_modulus_falls_back() {
+        // 2^16 is coprime to the odd primes but has no inverse of 2, so
+        // the residue-domain fast path must yield to the BigUint mirror —
+        // results stay bit-identical to the scalar specification.
+        let c = CrtContext::new(&[65536, 65521, 65519]);
+        assert!(c.inv_pow2.is_none());
+        let mut rng = crate::util::prng::Rng::new(77);
+        for _ in 0..16 {
+            check_rescale_matches_scalar(&c, &mut rng);
+        }
+    }
+
+    #[test]
+    fn rescale_batch_half_rounds_away_from_zero_both_signs() {
+        let c = ctx();
+        let n = 2;
+        // +3 and -3, shifted by 1: round(1.5) = 2 away from zero.
+        let pos = c.encode(&BigUint::from_u64(3));
+        let neg = c.encode(&c.big_m.sub(&BigUint::from_u64(3)));
+        let k = c.k();
+        let mut lanes = vec![0u64; k * n];
+        for ch in 0..k {
+            lanes[ch * n] = pos.r[ch];
+            lanes[ch * n + 1] = neg.r[ch];
+        }
+        let outcomes = c.rescale_batch(&mut lanes, n, &[1, 1]);
+        let (sgn0, m0) = c.reconstruct_signed(&ResidueVec {
+            r: (0..k).map(|ch| lanes[ch * n]).collect(),
+        });
+        let (sgn1, m1) = c.reconstruct_signed(&ResidueVec {
+            r: (0..k).map(|ch| lanes[ch * n + 1]).collect(),
+        });
+        assert!(!sgn0 && m0.to_u64() == Some(2), "round(3/2) = 2");
+        assert!(sgn1 && m1.to_u64() == Some(2), "round(-3/2) = -2");
+        assert!(!outcomes[0].neg && outcomes[1].neg);
+        assert_eq!(outcomes[0].mag_after, 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "channel-major")]
+    fn rescale_batch_rejects_misshaped_lanes() {
+        let c = ctx();
+        c.rescale_batch(&mut [0u64; 7], 2, &[1, 1]);
     }
 
     #[test]

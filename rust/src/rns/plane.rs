@@ -161,6 +161,45 @@ impl ResiduePlane {
         &self.lanes
     }
 
+    /// Mutable access to the raw channel-major buffer (the normalization
+    /// engine rescales a gathered scratch plane in place).
+    #[inline]
+    pub fn lanes_mut(&mut self) -> &mut [u64] {
+        &mut self.lanes
+    }
+
+    /// Gather the columns `idx` into a dense `k × idx.len()` scratch
+    /// plane (channel-major, so the batched-CRT/rescale kernels stream
+    /// it contiguously). The flagged-column gather of the bulk
+    /// normalization engine: at low flagged densities the expensive
+    /// per-element reconstruction work runs over a compact plane instead
+    /// of strided hops across the full batch.
+    pub fn gather_columns(&self, idx: &[usize]) -> ResiduePlane {
+        let w = idx.len();
+        let mut lanes = vec![0u64; self.k * w];
+        for c in 0..self.k {
+            let src = self.lane(c);
+            for (out, &j) in lanes[c * w..(c + 1) * w].iter_mut().zip(idx) {
+                *out = src[j];
+            }
+        }
+        ResiduePlane { k: self.k, n: w, lanes }
+    }
+
+    /// Scatter a dense scratch plane (as produced by
+    /// [`ResiduePlane::gather_columns`]) back into the columns `idx`.
+    pub fn scatter_columns(&mut self, idx: &[usize], scratch: &ResiduePlane) {
+        debug_assert_eq!(scratch.k, self.k);
+        debug_assert_eq!(scratch.n, idx.len());
+        for c in 0..self.k {
+            let src = scratch.lane(c);
+            let dst = &mut self.lanes[c * self.n..(c + 1) * self.n];
+            for (&j, &v) in idx.iter().zip(src) {
+                dst[j] = v;
+            }
+        }
+    }
+
     /// Gather element `j` across channels into a [`ResidueVec`].
     pub fn get(&self, j: usize) -> ResidueVec {
         ResidueVec {
@@ -495,6 +534,43 @@ mod tests {
         for (a, &u) in lanes.iter().zip(plane.lanes()) {
             assert_eq!(*a, u as i64);
         }
+    }
+
+    #[test]
+    fn gather_scatter_columns_roundtrip() {
+        let mut rng = Rng::new(3);
+        let mut p = random_plane(&mut rng, 11);
+        let idx = [1usize, 4, 9, 10];
+        let scratch = p.gather_columns(&idx);
+        assert_eq!(scratch.k(), p.k());
+        assert_eq!(scratch.n(), idx.len());
+        for (t, &j) in idx.iter().enumerate() {
+            assert_eq!(scratch.get(t), p.get(j), "gathered column {j}");
+        }
+        // Mutate the scratch and scatter back: exactly the chosen
+        // columns change, everything else is untouched.
+        let before = p.clone();
+        let mut edited = scratch.clone();
+        for c in 0..edited.k() {
+            let m = DEFAULT_MODULI[c];
+            for v in edited.lane_mut(c) {
+                *v = (*v + 1) % m;
+            }
+        }
+        p.scatter_columns(&idx, &edited);
+        for j in 0..p.n() {
+            if let Some(t) = idx.iter().position(|&x| x == j) {
+                assert_eq!(p.get(j), edited.get(t), "scattered column {j}");
+            } else {
+                assert_eq!(p.get(j), before.get(j), "untouched column {j}");
+            }
+        }
+        // Empty gather is a 0-column plane; scattering it is a no-op.
+        let empty = p.gather_columns(&[]);
+        assert_eq!(empty.n(), 0);
+        let snapshot = p.clone();
+        p.scatter_columns(&[], &empty);
+        assert_eq!(p, snapshot);
     }
 
     #[test]

@@ -450,6 +450,76 @@ mod tests {
     }
 
     #[test]
+    fn long_run_drift_within_composed_norm_budget() {
+        // §III-D composition over a long horizon (ISSUE 4 satellite): a
+        // ≥10k-step integration with a tight τ (so normalization events
+        // actually fire) must keep the decoded drift vs the f64
+        // reference within `composed_rel_bound(events, s, tau_bits)`
+        // computed from the engine's *measured* event count — on both
+        // the scalar and the planar path. The contracting Relaxation ODE
+        // is the pure bounded-error setting (no phase amplification);
+        // scale_step = 24 keeps the per-event budget 2^{s-1-τ} above the
+        // worst per-event rounding 2^{-sig} the engine actually takes.
+        use crate::config::HrfnaConfig;
+        use crate::hybrid::error::composed_rel_bound;
+
+        let cfg = HrfnaConfig {
+            tau_bits: 40,
+            scale_step: 24,
+            ..HrfnaConfig::paper_default()
+        };
+        let ode = Ode::Relaxation { lambda: 1.0, c: 3.0 };
+        let (dt, steps) = (0.01, 12_000u64);
+        // f64 reference trajectory (shared by both paths).
+        let mut yref = vec![0.5f64];
+        for _ in 0..steps {
+            yref = rk4_step::<f64>(&ode, &yref, dt, &());
+        }
+        // Encode-quantization noise floor: the composed bound covers
+        // normalization rounding only, not the per-op 2^{-sig} encode
+        // quantization (tiny next to any nonzero event budget).
+        let noise_floor = 1e-7;
+
+        // Scalar path, with its own counter window.
+        let ctx = HrfnaContext::new(cfg.clone());
+        let before = ctx.snapshot();
+        let scalar = rk4_final_state::<Hrfna>(&ode, &[0.5], dt, steps, &ctx);
+        let d = ctx.snapshot().since(&before);
+        let events = d.norms + d.guard_norms;
+        assert!(events > 0, "tight τ must trigger events ({events})");
+        let budget =
+            composed_rel_bound(events, ctx.cfg.scale_step, ctx.cfg.tau_bits) + noise_floor;
+        let rel = (scalar[0] - yref[0]).abs() / yref[0].abs();
+        assert!(
+            rel <= budget,
+            "scalar drift {rel:.3e} exceeds composed budget {budget:.3e} ({events} events)"
+        );
+
+        // Planar path (a 3-instance lock-step batch), fresh window.
+        let ctx = HrfnaContext::new(cfg);
+        let before = ctx.snapshot();
+        let finals = rk4_final_states_batch(
+            &ode,
+            &[vec![0.5], vec![0.5], vec![0.5]],
+            dt,
+            steps,
+            &ctx,
+        );
+        let d = ctx.snapshot().since(&before);
+        let events = d.norms + d.guard_norms;
+        assert!(events > 0, "planar path must also take events");
+        let budget =
+            composed_rel_bound(events, ctx.cfg.scale_step, ctx.cfg.tau_bits) + noise_floor;
+        for (i, state) in finals.iter().enumerate() {
+            let rel = (state[0] - yref[0]).abs() / yref[0].abs();
+            assert!(
+                rel <= budget,
+                "planar instance {i} drift {rel:.3e} exceeds {budget:.3e} ({events} events)"
+            );
+        }
+    }
+
+    #[test]
     fn drift_ratio_flat_for_equal_errors() {
         let tr = Rk4Trace {
             samples: (1..=10u64).map(|i| (i, 1.0)).collect(),
