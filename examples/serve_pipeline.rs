@@ -13,10 +13,11 @@
 //! `make artifacts` + `--features xla` for the PJRT engine).
 //! Results recorded in EXPERIMENTS.md §E2E.
 
-use hrfna::config::HrfnaConfig;
 use hrfna::coordinator::batcher::BatchPolicy;
-use hrfna::coordinator::{Coordinator, CoordinatorConfig, ExecMode, JobKind, Payload};
-use hrfna::hybrid::HrfnaContext;
+use hrfna::coordinator::{
+    ContextRegistry, Coordinator, CoordinatorConfig, ExecMode, JobKind, JobSpec, Payload, Tier,
+};
+use hrfna::hybrid::registry::{tier_rel_bound, MagnitudeEnvelope};
 use hrfna::runtime::EngineHandle;
 use hrfna::util::cli::Args;
 use hrfna::util::prng::Rng;
@@ -38,10 +39,10 @@ fn main() {
     let (platform, names) = engine.info().expect("engine info");
     println!("engine up in {:?} on {platform}; artifacts: {names:?}", t0.elapsed());
 
-    let ctx = Arc::new(HrfnaContext::new(HrfnaConfig::paper_default()));
+    let registry = Arc::new(ContextRegistry::new());
     let coord = Coordinator::start(
         engine,
-        Arc::clone(&ctx),
+        Arc::clone(&registry),
         CoordinatorConfig {
             workers_per_lane: workers,
             batch: BatchPolicy {
@@ -166,11 +167,57 @@ fn main() {
         };
         assert!(max < tol, "{lane}: max rel error {max} over tolerance {tol}");
     }
-    let snap = ctx.snapshot();
+    let snap = registry.get(Tier::Paper).snapshot();
     println!(
-        "\nHRFNA decode reconstructions: {} (1 per requested output, as designed)",
+        "\nHRFNA decode reconstructions (paper tier): {} (1 per requested output, as designed)",
         snap.reconstructions
     );
+
+    // === Tiered segment: the same workload under every precision tier ===
+    // One dot payload served under lo/paper/wide; each result must land
+    // inside that tier's a-priori relative budget against f64 — and a
+    // tolerance below the requested tier's budget must escalate.
+    // Exactly the 512 bucket: admission pads nothing, so the resolution
+    // envelope (and hence the escalation arithmetic below) uses n terms.
+    let n = 512;
+    let x = Dist::moderate().sample_vec(&mut rng, n);
+    let y = Dist::moderate().sample_vec(&mut rng, n);
+    let want: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+    let scale: f64 = x.iter().zip(&y).map(|(a, b)| (a * b).abs()).sum();
+    let envelope = MagnitudeEnvelope::of_slices(&[&x, &y], n as u64, 0);
+    for tier in Tier::ALL {
+        let r = coord
+            .call_spec(
+                JobSpec::new(JobKind::DotHybrid, Payload::Dot { x: x.clone(), y: y.clone() })
+                    .with_tier(tier),
+            )
+            .expect("tiered dot");
+        assert_eq!(r.tier, tier, "moderate dot must not escalate past {tier:?}");
+        let budget = tier_rel_bound(coord.registry().cfg(tier), &envelope);
+        let rel = (r.values[0] - want).abs() / scale.max(1e-300);
+        println!("tier {:<5} rel err {rel:.2e} (budget {budget:.2e})", tier.label());
+        assert!(rel <= budget, "{tier:?}: rel {rel:e} over budget {budget:e}");
+    }
+    let r = coord
+        .call_spec(
+            JobSpec::new(JobKind::DotHybrid, Payload::Dot { x: x.clone(), y: y.clone() })
+                .with_tier(Tier::Lo)
+                .with_tolerance(1e-7),
+        )
+        .expect("escalated dot");
+    assert_eq!(
+        r.tier,
+        Tier::Paper,
+        "a 1e-7 tolerance is below lo's budget and within paper's"
+    );
+    println!(
+        "tier escalations recorded: {} (1e-7-tolerance job ran on {})",
+        coord.metrics.total_escalations(),
+        r.tier.label()
+    );
+    assert!(coord.metrics.total_escalations() >= 1);
+    coord.metrics_table().print();
+
     let drain = coord.shutdown();
     println!("{drain}");
     assert!(drain.is_clean(), "shutdown dropped jobs: {drain}");

@@ -1,22 +1,23 @@
 //! Serving-path benchmark: scalar-reference vs planar datapath jobs/sec
 //! through the full coordinator (admission → sharded queues → batch
 //! execution → decode → reply), closed-loop at batch ≥ 8, plus an
-//! open-loop backpressure probe and a mixed-lane smoke. Writes
-//! `BENCH_serve.json`; the CI gate (`tools/bench_gate.rs`) holds the
-//! recorded planar speedup within tolerance.
+//! open-loop backpressure probe, a mixed-lane smoke and a **mixed-tier**
+//! closed-loop scenario (lo/paper/wide requests interleaved over one
+//! coordinator, per-tier jobs/sec recorded). Writes `BENCH_serve.json`;
+//! the CI gate (`tools/bench_gate.rs`) holds the recorded planar speedup
+//! and the tiered records within tolerance.
 //!
 //! Quick mode for CI: `BENCH_QUICK=1 cargo bench --bench bench_serve`
 //! (or `--quick`).
 
 mod common;
 
-use hrfna::config::HrfnaConfig;
 use hrfna::coordinator::batcher::BatchPolicy;
+use hrfna::coordinator::router::ShapeBuckets;
 use hrfna::coordinator::{
-    closed_loop, open_loop, Coordinator, CoordinatorConfig, ExecMode, JobKind, Payload,
+    closed_loop, open_loop, ContextRegistry, Coordinator, CoordinatorConfig, ExecMode,
+    JobKind, JobSpec, Payload, Tier,
 };
-use hrfna::hybrid::HrfnaContext;
-use hrfna::runtime::EngineHandle;
 use hrfna::util::bench::{write_json, BenchRecord};
 use hrfna::util::cli::Args;
 use hrfna::util::prng::Rng;
@@ -28,12 +29,11 @@ const DOT_N: usize = 4096;
 const CLIENTS: usize = 4;
 const BURST: usize = 16;
 
-fn coordinator(mode: ExecMode, capacity: usize) -> Coordinator {
-    let engine = EngineHandle::spawn(None).expect("engine");
-    let ctx = Arc::new(HrfnaContext::new(HrfnaConfig::paper_default()));
+fn coordinator_tiered(mode: ExecMode, capacity: usize, tiers: Vec<Tier>) -> Coordinator {
+    let engine = hrfna::runtime::EngineHandle::spawn(None).expect("engine");
     Coordinator::start(
         engine,
-        ctx,
+        Arc::new(ContextRegistry::new()),
         CoordinatorConfig {
             workers_per_lane: 2,
             batch: BatchPolicy {
@@ -41,10 +41,16 @@ fn coordinator(mode: ExecMode, capacity: usize) -> Coordinator {
                 max_wait: Duration::from_micros(500),
                 capacity,
             },
+            buckets: ShapeBuckets { tiers, ..ShapeBuckets::default() },
             exec: mode,
-            ..CoordinatorConfig::default()
         },
     )
+}
+
+/// Paper-tier-only coordinator: the historical scalar-vs-planar A/B
+/// (one lane per kind/bucket, exactly the pre-registry shape).
+fn coordinator(mode: ExecMode, capacity: usize) -> Coordinator {
+    coordinator_tiered(mode, capacity, vec![Tier::Paper])
 }
 
 fn main() {
@@ -63,9 +69,9 @@ fn main() {
             )
         })
         .collect();
-    let make_dot = |c: u64, i: usize| -> (JobKind, Payload) {
+    let make_dot = |c: u64, i: usize| -> JobSpec {
         let (x, y) = &pool[(c as usize * 7 + i) % pool.len()];
-        (JobKind::DotHybrid, Payload::Dot { x: x.clone(), y: y.clone() })
+        JobSpec::new(JobKind::DotHybrid, Payload::Dot { x: x.clone(), y: y.clone() })
     };
 
     let mut records: Vec<BenchRecord> = Vec::new();
@@ -134,33 +140,117 @@ fn main() {
     let drain = coord.shutdown();
     assert!(drain.is_clean(), "unclean drain after open loop: {drain}");
 
-    // Mixed-lane smoke: every lane (both dot buckets, matmuls, RK4)
-    // under one coordinator, planar path.
+    // Mixed-tier closed loop: lo/paper/wide dot requests interleaved
+    // 3:5:2 over one coordinator with every tier lane enabled — the
+    // multi-scenario shape the registry serves. The mixed record tracks
+    // total wall clock for the fixed mix; per-tier *cost* is measured
+    // separately below by isolated single-tier runs (inside a mixed run
+    // the per-tier jobs/sec is fixed by the mix ratio, so it cannot
+    // expose a per-tier kernel regression on its own).
     let mix = ServeMix::default_mix();
-    let make_mixed = |c: u64, i: usize| -> (JobKind, Payload) {
+    let make_tiered = |c: u64, i: usize| -> JobSpec {
+        let (x, y) = &pool[(c as usize * 5 + i) % pool.len()];
+        JobSpec::new(JobKind::DotHybrid, Payload::Dot { x: x.clone(), y: y.clone() })
+            .with_tier(mix.tier_for(i))
+    };
+    let coord = coordinator_tiered(ExecMode::Planar, 4096, Tier::ALL.to_vec());
+    let tiered = closed_loop(
+        &coord,
+        CLIENTS,
+        if quick { 40 } else { 160 },
+        10,
+        &make_tiered,
+    );
+    assert_eq!(tiered.completed, tiered.offered, "tiered run lost jobs");
+    assert_eq!(
+        coord.metrics.total_escalations(),
+        0,
+        "moderate-range traffic must not escalate"
+    );
+    println!(
+        "mixed tiers: {} jobs in {:.2?} ({:.0} jobs/s)",
+        tiered.completed, tiered.wall, tiered.jobs_per_s
+    );
+    for tier in Tier::ALL {
+        let jobs = coord.metrics.jobs_tier(JobKind::DotHybrid, tier);
+        assert!(jobs > 0, "{tier:?} lane saw no traffic in the mix");
+        println!(
+            "  tier {:<5} {jobs} jobs (p50 {:.0} us)",
+            tier.label(),
+            coord
+                .metrics
+                .latency_percentile_us_tier(JobKind::DotHybrid, tier, 50.0)
+        );
+    }
+    records.push(BenchRecord {
+        name: "serve_mixed_tier_dot_jobs".to_string(),
+        n: tiered.completed as u64,
+        ns_per_op: tiered.wall.as_nanos() as f64 / tiered.completed.max(1) as f64,
+        throughput_per_s: tiered.jobs_per_s,
+    });
+
+    // Per-tier cost: one isolated closed loop per tier on the same
+    // coordinator — each record's jobs/sec reflects that tier's lane
+    // cost alone (fewer/narrower residue lanes are cheaper, so expect
+    // lo ≥ paper ≥ wide throughput).
+    for tier in Tier::ALL {
+        let make_tier = |c: u64, i: usize| -> JobSpec {
+            let (x, y) = &pool[(c as usize * 3 + i) % pool.len()];
+            JobSpec::new(JobKind::DotHybrid, Payload::Dot { x: x.clone(), y: y.clone() })
+                .with_tier(tier)
+        };
+        let rep = closed_loop(&coord, CLIENTS, if quick { 32 } else { 96 }, 8, &make_tier);
+        assert_eq!(rep.completed, rep.offered, "{tier:?} run lost jobs");
+        println!(
+            "  tier {:<5} isolated: {:.0} jobs/s ({} jobs in {:.2?})",
+            tier.label(),
+            rep.jobs_per_s,
+            rep.completed,
+            rep.wall
+        );
+        records.push(BenchRecord {
+            name: format!("serve_tier_{}_dot_jobs", tier.label()),
+            n: rep.completed as u64,
+            ns_per_op: rep.wall.as_nanos() as f64 / rep.completed.max(1) as f64,
+            throughput_per_s: rep.jobs_per_s,
+        });
+    }
+    coord.metrics_table().print();
+    let drain = coord.shutdown();
+    assert!(drain.is_clean(), "unclean drain after tiered load: {drain}");
+
+    // Mixed-lane smoke: every lane (both dot buckets, matmuls, RK4)
+    // under one coordinator, planar path, paper tier.
+    let make_mixed = |c: u64, i: usize| -> JobSpec {
         let (slot, mut rng) = mix.request_rng(c + 100, i);
         match slot {
             0..=3 => {
                 let x = mix.dist.sample_vec(&mut rng, mix.dot_n);
                 let y = mix.dist.sample_vec(&mut rng, mix.dot_n);
-                (JobKind::DotHybrid, Payload::Dot { x, y })
+                JobSpec::new(JobKind::DotHybrid, Payload::Dot { x, y })
             }
             4..=6 => {
                 let x = mix.dist.sample_vec(&mut rng, mix.dot_n);
                 let y = mix.dist.sample_vec(&mut rng, mix.dot_n);
-                (JobKind::DotF32, Payload::Dot { x, y })
+                JobSpec::new(JobKind::DotF32, Payload::Dot { x, y })
             }
             7 => {
                 let a = mix.dist.sample_vec(&mut rng, mix.matmul_dim * mix.matmul_dim);
                 let b = mix.dist.sample_vec(&mut rng, mix.matmul_dim * mix.matmul_dim);
-                (JobKind::MatmulHybrid, Payload::Matmul { a, b, dim: mix.matmul_dim })
+                JobSpec::new(
+                    JobKind::MatmulHybrid,
+                    Payload::Matmul { a, b, dim: mix.matmul_dim },
+                )
             }
             8 => {
                 let a = mix.dist.sample_vec(&mut rng, mix.matmul_dim * mix.matmul_dim);
                 let b = mix.dist.sample_vec(&mut rng, mix.matmul_dim * mix.matmul_dim);
-                (JobKind::MatmulF32, Payload::Matmul { a, b, dim: mix.matmul_dim })
+                JobSpec::new(
+                    JobKind::MatmulF32,
+                    Payload::Matmul { a, b, dim: mix.matmul_dim },
+                )
             }
-            _ => (
+            _ => JobSpec::new(
                 JobKind::Rk4Hybrid,
                 Payload::Rk4 {
                     y0: vec![rng.uniform(-2.0, 2.0), rng.uniform(-2.0, 2.0)],

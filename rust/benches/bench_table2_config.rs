@@ -11,7 +11,7 @@ use hrfna::util::table::Table;
 
 fn main() {
     common::banner("Table II", "RTL configuration and FPGA implementation setup");
-    for preset in ["paper", "low-precision", "stress-norm"] {
+    for preset in ["paper", "low-precision", "stress-norm", "wide"] {
         let cfg = HrfnaConfig::preset(preset).unwrap();
         println!("--- preset: {preset} ---");
         table2(&cfg).print();

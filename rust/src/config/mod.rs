@@ -64,12 +64,30 @@ impl HrfnaConfig {
         }
     }
 
+    /// An extended-precision preset: twelve 24-bit prime moduli give
+    /// M ≈ 2^287 — roughly 2.25× the paper's dynamic range — with a
+    /// 48-bit significand target. The `wide` tier of the serving
+    /// registry: jobs whose tolerance or magnitude envelope the paper
+    /// set cannot cover escalate here (cf. Sentieys & Menard, per-
+    /// workload precision customization).
+    pub fn wide() -> HrfnaConfig {
+        HrfnaConfig {
+            moduli: generate_prime_moduli(12, 24),
+            exponent_width: 20,
+            tau_bits: 240,
+            scale_step: 64,
+            sig_bits: 48,
+            clock_mhz: 300.0,
+        }
+    }
+
     /// Look up a preset by name.
     pub fn preset(name: &str) -> Option<HrfnaConfig> {
         match name {
             "paper" | "default" => Some(HrfnaConfig::paper_default()),
             "low-precision" => Some(HrfnaConfig::low_precision()),
             "stress-norm" => Some(HrfnaConfig::stress_normalization()),
+            "wide" => Some(HrfnaConfig::wide()),
             _ => None,
         }
     }
@@ -168,10 +186,20 @@ mod tests {
 
     #[test]
     fn all_presets_valid() {
-        for name in ["paper", "default", "low-precision", "stress-norm"] {
+        for name in ["paper", "default", "low-precision", "stress-norm", "wide"] {
             HrfnaConfig::preset(name).unwrap().validate().unwrap();
         }
         assert!(HrfnaConfig::preset("nope").is_none());
+    }
+
+    #[test]
+    fn wide_preset_extends_dynamic_range_and_significand() {
+        let w = HrfnaConfig::wide();
+        let p = HrfnaConfig::paper_default();
+        assert!(w.m_bits() > 2.0 * p.m_bits(), "wide M must dwarf paper M");
+        assert!(w.sig_bits > p.sig_bits);
+        assert!(w.tau_bits > p.tau_bits);
+        assert_eq!(w.k(), 12);
     }
 
     #[test]

@@ -1,8 +1,9 @@
 //! Sharded fixed-shape batcher: AOT executables have frozen shapes, so
-//! incoming jobs are bucketed per (kind, shape) lane and dispatched in
-//! batches — a batch amortizes worker wakeups and one planar encode over
-//! several jobs (the vLLM-router-style dynamic batching policy, adapted to
-//! fixed shapes).
+//! incoming jobs are bucketed per (kind, tier, shape) lane and dispatched
+//! in batches — a batch amortizes worker wakeups and one planar encode
+//! over several jobs (the vLLM-router-style dynamic batching policy,
+//! adapted to fixed shapes). A lane's queue only ever holds jobs of one
+//! precision tier, so every popped batch resolves a single context.
 //!
 //! The queue is **sharded**: one deque (and one lock) per worker, with
 //! round-robin placement on push and work stealing on pop — a worker that
@@ -265,6 +266,7 @@ mod tests {
                     x: vec![1.0],
                     y: vec![1.0],
                 },
+                tier: crate::hybrid::registry::Tier::Paper,
                 bucket: 1,
                 submitted: Instant::now(),
                 reply: tx,

@@ -8,7 +8,9 @@
 //! shared channel-major [`ResiduePlane`] of `B·n` elements — no per-job
 //! scalar `Hrfna` allocation, no per-job tensors — then each job's result
 //! is one contiguous `lane_dot` window per channel and **one** CRT
-//! reconstruction (only requested outputs are reconstructed). Matmul jobs
+//! reconstruction (only requested outputs are reconstructed). The batch's
+//! precision context comes from the tier registry — lanes are keyed
+//! (kind, tier, bucket), so a batch never mixes tiers. Matmul jobs
 //! dispatch through the `workloads` planar fast-path hook
 //! ([`crate::workloads::matmul::matmul_hrfna_planar`]) and RK4 jobs are
 //! integrated lock-step as one [`crate::hybrid::HrfnaBatch`] per state
@@ -38,6 +40,7 @@ use std::sync::atomic::Ordering;
 
 use super::request::{Job, JobKind, Payload};
 use crate::hybrid::number::{ldexp_staged, pow2, signed_mag_to_f64};
+use crate::hybrid::registry::{ContextRegistry, Tier};
 use crate::hybrid::{Hrfna, HrfnaContext};
 use crate::rns::plane::{self, ResiduePlane};
 use crate::rns::ResidueVec;
@@ -215,39 +218,56 @@ pub fn block_quantum(f: i32) -> f64 {
 // Batched lane executors (called by the server's workers)
 // ----------------------------------------------------------------------
 
-/// Execute one admitted batch (all jobs share `kind` and shape bucket).
-/// Returns per-job results aligned with `jobs`.
+/// Execute one admitted batch (all jobs share `kind`, `tier` and shape
+/// bucket — the lane key guarantees it). Hybrid kinds resolve their
+/// precision context from the registry here, exactly once per batch;
+/// a tier's context is therefore built lazily by the first batch that
+/// needs it, never by FP32 traffic. Returns per-job results aligned
+/// with `jobs`.
 pub fn execute_batch(
     engine: &EngineHandle,
-    ctx: &HrfnaContext,
+    registry: &ContextRegistry,
     mode: ExecMode,
     kind: JobKind,
+    tier: Tier,
     jobs: &[Job],
 ) -> Vec<Result<Vec<f64>>> {
     if jobs.is_empty() {
         return Vec::new();
     }
+    debug_assert!(
+        jobs.iter().all(|j| j.kind == kind && j.tier == tier),
+        "lane batches are single-kind, single-tier by construction"
+    );
     match kind {
-        JobKind::DotHybrid => match mode {
-            ExecMode::Planar => exec_dot_hybrid_planar(ctx, jobs),
-            ExecMode::Scalar => jobs
-                .iter()
-                .map(|j| exec_dot_hybrid_scalar(ctx, j))
-                .collect(),
-        },
+        JobKind::DotHybrid => {
+            let ctx = registry.get(tier);
+            match mode {
+                ExecMode::Planar => exec_dot_hybrid_planar(&ctx, jobs),
+                ExecMode::Scalar => jobs
+                    .iter()
+                    .map(|j| exec_dot_hybrid_scalar(&ctx, j))
+                    .collect(),
+            }
+        }
         JobKind::DotF32 => exec_dot_f32(engine, jobs),
-        JobKind::MatmulHybrid => jobs
-            .iter()
-            .map(|j| exec_matmul_hybrid(ctx, mode, j))
-            .collect(),
+        JobKind::MatmulHybrid => {
+            let ctx = registry.get(tier);
+            jobs.iter()
+                .map(|j| exec_matmul_hybrid(&ctx, mode, j))
+                .collect()
+        }
         JobKind::MatmulF32 => jobs.iter().map(|j| exec_matmul_f32(engine, j)).collect(),
-        JobKind::Rk4Hybrid => match mode {
-            ExecMode::Planar => exec_rk4_hybrid_planar(ctx, jobs),
-            ExecMode::Scalar => jobs
-                .iter()
-                .map(|j| exec_rk4_hybrid_scalar(ctx, j))
-                .collect(),
-        },
+        JobKind::Rk4Hybrid => {
+            let ctx = registry.get(tier);
+            match mode {
+                ExecMode::Planar => exec_rk4_hybrid_planar(&ctx, jobs),
+                ExecMode::Scalar => jobs
+                    .iter()
+                    .map(|j| exec_rk4_hybrid_scalar(&ctx, j))
+                    .collect(),
+            }
+        }
     }
 }
 

@@ -1,11 +1,20 @@
-//! Serving metrics: per-lane latency histograms (p50/p95/p99), queue
-//! depth, worker occupancy, steal/reject counters and throughput — all
-//! lock-free (relaxed atomics; these are metrics, not synchronization).
+//! Serving metrics: per-(kind, tier) latency histograms (p50/p95/p99),
+//! queue depth, worker occupancy, steal/reject/escalation counters and
+//! throughput — all lock-free (relaxed atomics; these are metrics, not
+//! synchronization).
+//!
+//! Every row of the report is one **(kind, tier)** slot: hybrid lanes
+//! produce one row per active precision tier (with its own §VII-E
+//! norm/guard/reconstruction accounting against that tier's context
+//! counters), FP32 lanes live in the tier-agnostic [`Tier::Paper`] slot.
+//! Per-kind aggregate getters (summing across tiers) keep the historical
+//! API for drain accounting and the saturation tests.
 
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 use super::request::JobKind;
+use crate::hybrid::registry::Tier;
 use crate::util::table::Table;
 
 /// Log-linear latency histogram: `SUB` sub-buckets per power-of-two octave
@@ -16,6 +25,9 @@ use crate::util::table::Table;
 const SUB: usize = 4;
 const OCTAVES: usize = 26; // up to 2^26 µs ≈ 67 s
 const BUCKETS: usize = SUB * OCTAVES;
+
+const KINDS: usize = JobKind::ALL.len();
+const TIERS: usize = Tier::ALL.len();
 
 fn bucket_of(latency_us: f64) -> usize {
     let v = latency_us.max(1.0);
@@ -35,19 +47,25 @@ fn bucket_mid_us(i: usize) -> f64 {
     2f64.powi(oct as i32) * (1.0 + (sub as f64 + 0.5) / SUB as f64)
 }
 
-struct KindMetrics {
+/// One (kind, tier) slot of counters + histogram.
+struct SlotMetrics {
     jobs: AtomicU64,
     macs: AtomicU64,
     batches: AtomicU64,
     accepted: AtomicU64,
     rejected: AtomicU64,
     steals: AtomicU64,
+    /// Jobs escalated *into* this tier (admission bumped them past their
+    /// requested tier because its bound could not cover the request).
+    escalations: AtomicU64,
     /// Threshold-triggered normalization events taken while executing
-    /// this lane's batches (§VII-E frequency accounting, per lane).
+    /// this slot's batches (§VII-E frequency accounting, per lane).
     norm_events: AtomicU64,
-    /// Overflow-guard normalization events for this lane.
+    /// Overflow-guard normalization events for this slot.
     guard_events: AtomicU64,
-    /// Wall time workers of this lane spent executing batches (ns).
+    /// Full CRT reconstructions claimed by this slot's batches.
+    recon_events: AtomicU64,
+    /// Wall time workers of this slot spent executing batches (ns).
     busy_ns: AtomicU64,
     /// Currently queued jobs (gauge; +1 on accept, −batch on dequeue).
     depth: AtomicI64,
@@ -55,17 +73,19 @@ struct KindMetrics {
     histogram: [AtomicU64; BUCKETS],
 }
 
-impl Default for KindMetrics {
-    fn default() -> KindMetrics {
-        KindMetrics {
+impl Default for SlotMetrics {
+    fn default() -> SlotMetrics {
+        SlotMetrics {
             jobs: AtomicU64::new(0),
             macs: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             accepted: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             steals: AtomicU64::new(0),
+            escalations: AtomicU64::new(0),
             norm_events: AtomicU64::new(0),
             guard_events: AtomicU64::new(0),
+            recon_events: AtomicU64::new(0),
             busy_ns: AtomicU64::new(0),
             depth: AtomicI64::new(0),
             latency_sum_us: AtomicU64::new(0),
@@ -74,15 +94,25 @@ impl Default for KindMetrics {
     }
 }
 
-/// Aggregated per-kind serving metrics.
+/// Per-tier claim cursors over one shared `OpCounters` total (see
+/// [`Metrics::record_norm_totals`]).
+#[derive(Default)]
+struct TierCursor {
+    norms: AtomicU64,
+    guards: AtomicU64,
+    recons: AtomicU64,
+}
+
+/// Aggregated per-(kind, tier) serving metrics.
 pub struct Metrics {
-    kinds: [KindMetrics; JobKind::ALL.len()],
-    /// Claim cursors over the shared `OpCounters` totals: workers report
-    /// the *running totals* they observe after a batch, and the cursor
-    /// hands each event to exactly one reporter (`fetch_max` partition)
-    /// — overlapping execution windows cannot double-count.
-    claimed_norms: AtomicU64,
-    claimed_guards: AtomicU64,
+    slots: [[SlotMetrics; TIERS]; KINDS],
+    /// Claim cursors over each tier context's `OpCounters` totals:
+    /// workers report the *running totals* they observe after a batch,
+    /// and the cursor hands each event to exactly one reporter
+    /// (`fetch_max` partition) — overlapping execution windows cannot
+    /// double-count. One cursor per tier because each tier's context
+    /// carries independent counters.
+    cursors: [TierCursor; TIERS],
     start: Instant,
 }
 
@@ -99,105 +129,184 @@ fn kind_index(kind: JobKind) -> usize {
 impl Default for Metrics {
     fn default() -> Metrics {
         Metrics {
-            kinds: std::array::from_fn(|_| KindMetrics::default()),
-            claimed_norms: AtomicU64::new(0),
-            claimed_guards: AtomicU64::new(0),
+            slots: std::array::from_fn(|_| std::array::from_fn(|_| SlotMetrics::default())),
+            cursors: std::array::from_fn(|_| TierCursor::default()),
             start: Instant::now(),
         }
     }
 }
 
 impl Metrics {
+    #[inline]
+    fn slot(&self, kind: JobKind, tier: Tier) -> &SlotMetrics {
+        &self.slots[kind_index(kind)][tier.index()]
+    }
+
     /// Record one completed job.
-    pub fn record(&self, kind: JobKind, latency_us: f64, macs: u64) {
-        let k = &self.kinds[kind_index(kind)];
-        k.jobs.fetch_add(1, Ordering::Relaxed);
-        k.macs.fetch_add(macs, Ordering::Relaxed);
-        k.latency_sum_us
+    pub fn record(&self, kind: JobKind, tier: Tier, latency_us: f64, macs: u64) {
+        let s = self.slot(kind, tier);
+        s.jobs.fetch_add(1, Ordering::Relaxed);
+        s.macs.fetch_add(macs, Ordering::Relaxed);
+        s.latency_sum_us
             .fetch_add(latency_us.max(0.0) as u64, Ordering::Relaxed);
-        k.histogram[bucket_of(latency_us)].fetch_add(1, Ordering::Relaxed);
+        s.histogram[bucket_of(latency_us)].fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record a dispatched batch and the wall time its execution took.
-    pub fn record_batch(&self, kind: JobKind, size: usize, busy: Duration) {
-        let k = &self.kinds[kind_index(kind)];
-        k.batches.fetch_add(1, Ordering::Relaxed);
-        k.busy_ns
+    pub fn record_batch(&self, kind: JobKind, tier: Tier, size: usize, busy: Duration) {
+        let s = self.slot(kind, tier);
+        s.batches.fetch_add(1, Ordering::Relaxed);
+        s.busy_ns
             .fetch_add(busy.as_nanos() as u64, Ordering::Relaxed);
-        k.depth.fetch_sub(size as i64, Ordering::Relaxed);
+        s.depth.fetch_sub(size as i64, Ordering::Relaxed);
     }
 
     /// Record a job accepted into a lane queue.
-    pub fn record_accepted(&self, kind: JobKind) {
-        let k = &self.kinds[kind_index(kind)];
-        k.accepted.fetch_add(1, Ordering::Relaxed);
-        k.depth.fetch_add(1, Ordering::Relaxed);
+    pub fn record_accepted(&self, kind: JobKind, tier: Tier) {
+        let s = self.slot(kind, tier);
+        s.accepted.fetch_add(1, Ordering::Relaxed);
+        s.depth.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record a rejected submission (admission failure or overload).
-    pub fn record_rejected(&self, kind: JobKind) {
-        self.kinds[kind_index(kind)]
-            .rejected
-            .fetch_add(1, Ordering::Relaxed);
+    pub fn record_rejected(&self, kind: JobKind, tier: Tier) {
+        self.slot(kind, tier).rejected.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record a batch stolen from a sibling shard.
-    pub fn record_steal(&self, kind: JobKind) {
-        self.kinds[kind_index(kind)]
-            .steals
+    pub fn record_steal(&self, kind: JobKind, tier: Tier) {
+        self.slot(kind, tier).steals.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a tier escalation: admission bumped a job *into* `tier`
+    /// because the tiers below could not cover its envelope/tolerance.
+    pub fn record_escalation(&self, kind: JobKind, tier: Tier) {
+        self.slot(kind, tier)
+            .escalations
             .fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Seed the normalization claim cursors from the shared context's
-    /// current totals: events taken before serving started (client-side
-    /// warmup on the same `HrfnaContext`) must not be attributed to the
-    /// first lane that completes a batch. `Coordinator::start` calls
-    /// this once before spawning workers.
-    pub fn seed_norm_cursor(&self, total_norms: u64, total_guards: u64) {
-        self.claimed_norms.fetch_max(total_norms, Ordering::Relaxed);
-        self.claimed_guards.fetch_max(total_guards, Ordering::Relaxed);
+    /// Seed a tier's claim cursors from its context's current totals:
+    /// events taken before serving started (client-side warmup on the
+    /// same context) must not be attributed to the first lane that
+    /// completes a batch. `Coordinator::start` calls this once per
+    /// already-constructed tier before spawning workers.
+    pub fn seed_norm_cursor(&self, tier: Tier, norms: u64, guards: u64, recons: u64) {
+        let c = &self.cursors[tier.index()];
+        c.norms.fetch_max(norms, Ordering::Relaxed);
+        c.guards.fetch_max(guards, Ordering::Relaxed);
+        c.recons.fetch_max(recons, Ordering::Relaxed);
     }
 
-    /// Record normalization events from the shared context's *running
-    /// totals* (threshold and guard separately — the per-lane §VII-E
-    /// counters). Workers call this with the `OpSnapshot` observed after
-    /// `execute_batch`; the claim cursor (`fetch_max`) hands every event
-    /// to exactly one caller, so concurrent workers with overlapping
-    /// execution windows never double-count. Aggregate totals are exact;
-    /// *per-kind attribution* of an event taken while two different
-    /// kinds were executing is approximate (whichever window closed
-    /// later claims it) — metrics, not synchronization.
-    pub fn record_norm_totals(&self, kind: JobKind, total_norms: u64, total_guards: u64) {
-        let k = &self.kinds[kind_index(kind)];
-        let prev = self.claimed_norms.fetch_max(total_norms, Ordering::Relaxed);
+    /// Record normalization/reconstruction events from a tier context's
+    /// *running totals* (threshold, guard and CRT reconstructions — the
+    /// per-lane §VII-E counters). Workers call this with the
+    /// `OpSnapshot` observed after `execute_batch`; the tier's claim
+    /// cursor (`fetch_max`) hands every event to exactly one caller, so
+    /// concurrent workers with overlapping execution windows never
+    /// double-count. Aggregate totals are exact; *per-kind attribution*
+    /// of an event taken while two kinds were executing on the same
+    /// tier is approximate (whichever window closed later claims it) —
+    /// metrics, not synchronization.
+    pub fn record_norm_totals(
+        &self,
+        kind: JobKind,
+        tier: Tier,
+        total_norms: u64,
+        total_guards: u64,
+        total_recons: u64,
+    ) {
+        let s = self.slot(kind, tier);
+        let c = &self.cursors[tier.index()];
+        let prev = c.norms.fetch_max(total_norms, Ordering::Relaxed);
         let dn = total_norms.saturating_sub(prev);
         if dn > 0 {
-            k.norm_events.fetch_add(dn, Ordering::Relaxed);
+            s.norm_events.fetch_add(dn, Ordering::Relaxed);
         }
-        let prev = self.claimed_guards.fetch_max(total_guards, Ordering::Relaxed);
+        let prev = c.guards.fetch_max(total_guards, Ordering::Relaxed);
         let dg = total_guards.saturating_sub(prev);
         if dg > 0 {
-            k.guard_events.fetch_add(dg, Ordering::Relaxed);
+            s.guard_events.fetch_add(dg, Ordering::Relaxed);
+        }
+        let prev = c.recons.fetch_max(total_recons, Ordering::Relaxed);
+        let dr = total_recons.saturating_sub(prev);
+        if dr > 0 {
+            s.recon_events.fetch_add(dr, Ordering::Relaxed);
         }
     }
 
-    /// Threshold-normalization events recorded for a kind.
-    pub fn norm_events(&self, kind: JobKind) -> u64 {
-        self.kinds[kind_index(kind)]
-            .norm_events
-            .load(Ordering::Relaxed)
+    // ------------------------------------------------------------------
+    // Tier-scoped getters
+    // ------------------------------------------------------------------
+
+    /// Jobs completed for a (kind, tier) slot.
+    pub fn jobs_tier(&self, kind: JobKind, tier: Tier) -> u64 {
+        self.slot(kind, tier).jobs.load(Ordering::Relaxed)
     }
 
-    /// Guard-normalization events recorded for a kind.
-    pub fn guard_events(&self, kind: JobKind) -> u64 {
-        self.kinds[kind_index(kind)]
-            .guard_events
-            .load(Ordering::Relaxed)
+    /// Jobs escalated into a (kind, tier) slot.
+    pub fn escalations_tier(&self, kind: JobKind, tier: Tier) -> u64 {
+        self.slot(kind, tier).escalations.load(Ordering::Relaxed)
+    }
+
+    /// Threshold-normalization events recorded for a (kind, tier) slot.
+    pub fn norm_events_tier(&self, kind: JobKind, tier: Tier) -> u64 {
+        self.slot(kind, tier).norm_events.load(Ordering::Relaxed)
+    }
+
+    /// Guard-normalization events recorded for a (kind, tier) slot.
+    pub fn guard_events_tier(&self, kind: JobKind, tier: Tier) -> u64 {
+        self.slot(kind, tier).guard_events.load(Ordering::Relaxed)
+    }
+
+    /// CRT reconstructions recorded for a (kind, tier) slot.
+    pub fn recon_events_tier(&self, kind: JobKind, tier: Tier) -> u64 {
+        self.slot(kind, tier).recon_events.load(Ordering::Relaxed)
+    }
+
+    /// Occupancy of one (kind, tier) slot in [0, 1]: that slot's batch
+    /// execution wall time against the kind's worker pool (`workers` =
+    /// total threads serving the kind, as for [`Metrics::occupancy`] —
+    /// tier rows therefore sum to the kind aggregate, never over it).
+    pub fn occupancy_tier(&self, kind: JobKind, tier: Tier, workers: usize) -> f64 {
+        let busy = self.slot(kind, tier).busy_ns.load(Ordering::Relaxed) as f64;
+        let wall = self.start.elapsed().as_nanos().max(1) as f64 * workers.max(1) as f64;
+        (busy / wall).min(1.0)
+    }
+
+    /// MAC-equivalents per second for one (kind, tier) slot.
+    pub fn throughput_mops_tier(&self, kind: JobKind, tier: Tier) -> f64 {
+        let macs = self.slot(kind, tier).macs.load(Ordering::Relaxed) as f64;
+        macs / self.start.elapsed().as_micros().max(1) as f64
+    }
+
+    /// Mean latency (µs) for a (kind, tier) slot.
+    pub fn mean_latency_us_tier(&self, kind: JobKind, tier: Tier) -> f64 {
+        let s = self.slot(kind, tier);
+        let n = s.jobs.load(Ordering::Relaxed);
+        if n == 0 {
+            0.0
+        } else {
+            s.latency_sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// Approximate latency percentile (µs) for one (kind, tier) slot.
+    pub fn latency_percentile_us_tier(&self, kind: JobKind, tier: Tier, p: f64) -> f64 {
+        self.percentile_over(&[self.slot(kind, tier)], p)
+    }
+
+    // ------------------------------------------------------------------
+    // Per-kind aggregates (sum over tiers — the historical API)
+    // ------------------------------------------------------------------
+
+    fn sum_over_tiers(&self, kind: JobKind, read: impl Fn(&SlotMetrics) -> u64) -> u64 {
+        Tier::ALL.iter().map(|&t| read(self.slot(kind, t))).sum()
     }
 
     /// Jobs completed for a kind.
     pub fn jobs(&self, kind: JobKind) -> u64 {
-        self.kinds[kind_index(kind)].jobs.load(Ordering::Relaxed)
+        self.sum_over_tiers(kind, |s| s.jobs.load(Ordering::Relaxed))
     }
 
     /// Total jobs across kinds.
@@ -207,7 +316,7 @@ impl Metrics {
 
     /// Jobs accepted into a lane queue.
     pub fn accepted(&self, kind: JobKind) -> u64 {
-        self.kinds[kind_index(kind)].accepted.load(Ordering::Relaxed)
+        self.sum_over_tiers(kind, |s| s.accepted.load(Ordering::Relaxed))
     }
 
     /// Total accepted across kinds.
@@ -217,7 +326,7 @@ impl Metrics {
 
     /// Rejected submissions for a kind.
     pub fn rejected(&self, kind: JobKind) -> u64 {
-        self.kinds[kind_index(kind)].rejected.load(Ordering::Relaxed)
+        self.sum_over_tiers(kind, |s| s.rejected.load(Ordering::Relaxed))
     }
 
     /// Total rejected across kinds.
@@ -227,40 +336,65 @@ impl Metrics {
 
     /// Batches stolen across shards for a kind.
     pub fn steals(&self, kind: JobKind) -> u64 {
-        self.kinds[kind_index(kind)].steals.load(Ordering::Relaxed)
+        self.sum_over_tiers(kind, |s| s.steals.load(Ordering::Relaxed))
     }
 
-    /// Currently queued jobs in a lane (gauge; may transiently read ±1).
+    /// Tier escalations that landed on a kind.
+    pub fn escalations(&self, kind: JobKind) -> u64 {
+        self.sum_over_tiers(kind, |s| s.escalations.load(Ordering::Relaxed))
+    }
+
+    /// Total escalations across kinds and tiers.
+    pub fn total_escalations(&self) -> u64 {
+        JobKind::ALL.iter().map(|&k| self.escalations(k)).sum()
+    }
+
+    /// Threshold-normalization events recorded for a kind.
+    pub fn norm_events(&self, kind: JobKind) -> u64 {
+        self.sum_over_tiers(kind, |s| s.norm_events.load(Ordering::Relaxed))
+    }
+
+    /// Guard-normalization events recorded for a kind.
+    pub fn guard_events(&self, kind: JobKind) -> u64 {
+        self.sum_over_tiers(kind, |s| s.guard_events.load(Ordering::Relaxed))
+    }
+
+    /// Currently queued jobs in a kind's lanes (gauge; transiently ±1).
     pub fn queue_depth(&self, kind: JobKind) -> i64 {
-        self.kinds[kind_index(kind)].depth.load(Ordering::Relaxed)
+        Tier::ALL
+            .iter()
+            .map(|&t| self.slot(kind, t).depth.load(Ordering::Relaxed))
+            .sum()
     }
 
     /// Mean latency (µs) for a kind.
     pub fn mean_latency_us(&self, kind: JobKind) -> f64 {
-        let k = &self.kinds[kind_index(kind)];
-        let n = k.jobs.load(Ordering::Relaxed);
+        let n = self.jobs(kind);
         if n == 0 {
-            0.0
-        } else {
-            k.latency_sum_us.load(Ordering::Relaxed) as f64 / n as f64
+            return 0.0;
         }
+        let sum = self.sum_over_tiers(kind, |s| s.latency_sum_us.load(Ordering::Relaxed));
+        sum as f64 / n as f64
     }
 
-    /// Approximate latency percentile (µs) from the log-linear histogram.
-    pub fn latency_percentile_us(&self, kind: JobKind, p: f64) -> f64 {
-        let k = &self.kinds[kind_index(kind)];
-        let total: u64 = k
-            .histogram
-            .iter()
-            .map(|b| b.load(Ordering::Relaxed))
-            .sum();
+    /// Histogram percentile over a set of slots (merged bucketwise).
+    fn percentile_over(&self, slots: &[&SlotMetrics], p: f64) -> f64 {
+        let counts: Vec<u64> = (0..BUCKETS)
+            .map(|i| {
+                slots
+                    .iter()
+                    .map(|s| s.histogram[i].load(Ordering::Relaxed))
+                    .sum()
+            })
+            .collect();
+        let total: u64 = counts.iter().sum();
         if total == 0 {
             return 0.0;
         }
         let target = (p / 100.0 * total as f64).ceil().max(1.0) as u64;
         let mut seen = 0;
-        for (i, b) in k.histogram.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
+        for (i, &c) in counts.iter().enumerate() {
+            seen += c;
             if seen >= target {
                 return bucket_mid_us(i);
             }
@@ -268,63 +402,91 @@ impl Metrics {
         bucket_mid_us(BUCKETS - 1)
     }
 
+    /// Approximate latency percentile (µs) across a kind's tiers.
+    pub fn latency_percentile_us(&self, kind: JobKind, p: f64) -> f64 {
+        let slots: Vec<&SlotMetrics> =
+            Tier::ALL.iter().map(|&t| self.slot(kind, t)).collect();
+        self.percentile_over(&slots, p)
+    }
+
     /// Mean jobs per dispatched batch.
     pub fn mean_batch_size(&self, kind: JobKind) -> f64 {
-        let k = &self.kinds[kind_index(kind)];
-        let b = k.batches.load(Ordering::Relaxed);
+        let b = self.sum_over_tiers(kind, |s| s.batches.load(Ordering::Relaxed));
         if b == 0 {
             0.0
         } else {
-            k.jobs.load(Ordering::Relaxed) as f64 / b as f64
+            self.jobs(kind) as f64 / b as f64
         }
     }
 
     /// Occupancy in [0, 1]: fraction of aggregate worker wall time spent
     /// executing batches since startup. `workers` must be the *total*
-    /// worker threads serving this kind (all its bucket lanes share one
-    /// `busy_ns` accumulator — `Coordinator::metrics_table` passes the
-    /// correct count from its lane map).
+    /// worker threads serving this kind across all its tier/bucket lanes
+    /// (`Coordinator::metrics_table` passes the correct count from its
+    /// lane map).
     pub fn occupancy(&self, kind: JobKind, workers: usize) -> f64 {
-        let busy = self.kinds[kind_index(kind)].busy_ns.load(Ordering::Relaxed) as f64;
+        let busy = self.sum_over_tiers(kind, |s| s.busy_ns.load(Ordering::Relaxed)) as f64;
         let wall = self.start.elapsed().as_nanos().max(1) as f64 * workers.max(1) as f64;
         (busy / wall).min(1.0)
     }
 
     /// MAC-equivalents per second since startup, per kind.
     pub fn throughput_mops(&self, kind: JobKind) -> f64 {
-        let k = &self.kinds[kind_index(kind)];
-        let macs = k.macs.load(Ordering::Relaxed) as f64;
+        let macs = self.sum_over_tiers(kind, |s| s.macs.load(Ordering::Relaxed)) as f64;
         macs / self.start.elapsed().as_micros().max(1) as f64
     }
 
-    /// Render the serving report table; `workers_of(kind)` gives the
-    /// total worker threads serving each kind (occupancy denominator).
+    /// Render the serving report table — one row per active (kind, tier)
+    /// slot, every column slot-scoped (occ %/Mops use the per-slot
+    /// accumulators, so tier rows sum to the kind aggregate instead of
+    /// each repeating it); `workers_of(kind)` gives the total worker
+    /// threads serving each kind (occupancy denominator, shared across
+    /// its tiers).
     pub fn table_with(&self, workers_of: &dyn Fn(JobKind) -> usize) -> Table {
         let mut t = Table::new(
             "Serving metrics",
             &[
-                "lane", "jobs", "rej", "steal", "mean batch", "p50 us", "p95 us", "p99 us",
-                "occ %", "Mops", "norms", "guards",
+                "lane", "jobs", "rej", "steal", "esc", "mean batch", "p50 us", "p95 us",
+                "p99 us", "occ %", "Mops", "norms", "guards", "recon",
             ],
         );
         for &kind in &JobKind::ALL {
-            if self.jobs(kind) == 0 && self.rejected(kind) == 0 {
-                continue;
+            for &tier in &Tier::ALL {
+                let s = self.slot(kind, tier);
+                let jobs = s.jobs.load(Ordering::Relaxed);
+                let rej = s.rejected.load(Ordering::Relaxed);
+                if jobs == 0 && rej == 0 {
+                    continue;
+                }
+                // FP32 lanes are tier-agnostic: plain label, no suffix.
+                let label = if kind.is_hybrid() {
+                    format!("{}@{}", kind.label(), tier.label())
+                } else {
+                    kind.label().to_string()
+                };
+                let batches = s.batches.load(Ordering::Relaxed);
+                let mean_batch = if batches == 0 {
+                    0.0
+                } else {
+                    jobs as f64 / batches as f64
+                };
+                t.rowv(&[
+                    label,
+                    jobs.to_string(),
+                    rej.to_string(),
+                    s.steals.load(Ordering::Relaxed).to_string(),
+                    s.escalations.load(Ordering::Relaxed).to_string(),
+                    format!("{mean_batch:.1}"),
+                    format!("{:.1}", self.latency_percentile_us_tier(kind, tier, 50.0)),
+                    format!("{:.1}", self.latency_percentile_us_tier(kind, tier, 95.0)),
+                    format!("{:.1}", self.latency_percentile_us_tier(kind, tier, 99.0)),
+                    format!("{:.1}", self.occupancy_tier(kind, tier, workers_of(kind)) * 100.0),
+                    format!("{:.2}", self.throughput_mops_tier(kind, tier)),
+                    s.norm_events.load(Ordering::Relaxed).to_string(),
+                    s.guard_events.load(Ordering::Relaxed).to_string(),
+                    s.recon_events.load(Ordering::Relaxed).to_string(),
+                ]);
             }
-            t.rowv(&[
-                kind.label().to_string(),
-                self.jobs(kind).to_string(),
-                self.rejected(kind).to_string(),
-                self.steals(kind).to_string(),
-                format!("{:.1}", self.mean_batch_size(kind)),
-                format!("{:.1}", self.latency_percentile_us(kind, 50.0)),
-                format!("{:.1}", self.latency_percentile_us(kind, 95.0)),
-                format!("{:.1}", self.latency_percentile_us(kind, 99.0)),
-                format!("{:.1}", self.occupancy(kind, workers_of(kind)) * 100.0),
-                format!("{:.2}", self.throughput_mops(kind)),
-                self.norm_events(kind).to_string(),
-                self.guard_events(kind).to_string(),
-            ]);
         }
         t
     }
@@ -344,17 +506,21 @@ impl Metrics {
 mod tests {
     use super::*;
 
+    const P: Tier = Tier::Paper;
+
     #[test]
     fn records_and_reports() {
         let m = Metrics::default();
-        m.record_accepted(JobKind::DotHybrid);
-        m.record_accepted(JobKind::DotHybrid);
+        m.record_accepted(JobKind::DotHybrid, P);
+        m.record_accepted(JobKind::DotHybrid, P);
         assert_eq!(m.queue_depth(JobKind::DotHybrid), 2);
-        m.record(JobKind::DotHybrid, 10.0, 4096);
-        m.record(JobKind::DotHybrid, 1000.0, 4096);
-        m.record_batch(JobKind::DotHybrid, 2, Duration::from_micros(500));
+        m.record(JobKind::DotHybrid, P, 10.0, 4096);
+        m.record(JobKind::DotHybrid, P, 1000.0, 4096);
+        m.record_batch(JobKind::DotHybrid, P, 2, Duration::from_micros(500));
         assert_eq!(m.queue_depth(JobKind::DotHybrid), 0);
         assert_eq!(m.jobs(JobKind::DotHybrid), 2);
+        assert_eq!(m.jobs_tier(JobKind::DotHybrid, P), 2);
+        assert_eq!(m.jobs_tier(JobKind::DotHybrid, Tier::Lo), 0);
         assert_eq!(m.total_jobs(), 2);
         assert_eq!(m.total_accepted(), 2);
         assert!((m.mean_latency_us(JobKind::DotHybrid) - 505.0).abs() < 1.0);
@@ -364,59 +530,109 @@ mod tests {
     }
 
     #[test]
+    fn tiers_are_separate_rows() {
+        let m = Metrics::default();
+        m.record(JobKind::DotHybrid, Tier::Lo, 10.0, 512);
+        m.record(JobKind::DotHybrid, Tier::Wide, 50.0, 512);
+        m.record_batch(JobKind::DotHybrid, Tier::Lo, 1, Duration::from_micros(400));
+        assert_eq!(m.jobs_tier(JobKind::DotHybrid, Tier::Lo), 1);
+        assert_eq!(m.jobs_tier(JobKind::DotHybrid, Tier::Wide), 1);
+        assert_eq!(m.jobs_tier(JobKind::DotHybrid, P), 0);
+        assert_eq!(m.jobs(JobKind::DotHybrid), 2, "aggregate sums tiers");
+        // Slot-scoped occupancy/throughput: only the tier that did the
+        // work shows it, and the rows sum to the kind aggregate. (The
+        // sleep makes elapsed() large against the drift between the
+        // per-call elapsed reads below.)
+        assert!(m.occupancy_tier(JobKind::DotHybrid, Tier::Lo, 2) > 0.0);
+        assert_eq!(m.occupancy_tier(JobKind::DotHybrid, Tier::Wide, 2), 0.0);
+        std::thread::sleep(Duration::from_millis(10));
+        let tier_sum: f64 = Tier::ALL
+            .iter()
+            .map(|&t| m.throughput_mops_tier(JobKind::DotHybrid, t))
+            .sum();
+        let agg = m.throughput_mops(JobKind::DotHybrid);
+        assert!((tier_sum - agg).abs() <= agg * 0.05, "{tier_sum} vs {agg}");
+        let s = m.table().render();
+        assert!(s.contains("dot/hrfna@lo"));
+        assert!(s.contains("dot/hrfna@wide"));
+        assert!(!s.contains("dot/hrfna@paper"));
+    }
+
+    #[test]
+    fn escalations_counted_per_slot() {
+        let m = Metrics::default();
+        m.record_escalation(JobKind::DotHybrid, P);
+        m.record_escalation(JobKind::DotHybrid, Tier::Wide);
+        m.record_escalation(JobKind::Rk4Hybrid, Tier::Wide);
+        assert_eq!(m.escalations_tier(JobKind::DotHybrid, P), 1);
+        assert_eq!(m.escalations_tier(JobKind::DotHybrid, Tier::Wide), 1);
+        assert_eq!(m.escalations(JobKind::DotHybrid), 2);
+        assert_eq!(m.total_escalations(), 3);
+    }
+
+    #[test]
     fn rejects_and_steals_counted() {
         let m = Metrics::default();
-        m.record_rejected(JobKind::DotF32);
-        m.record_rejected(JobKind::DotF32);
-        m.record_steal(JobKind::DotF32);
+        m.record_rejected(JobKind::DotF32, P);
+        m.record_rejected(JobKind::DotF32, P);
+        m.record_steal(JobKind::DotF32, P);
         assert_eq!(m.rejected(JobKind::DotF32), 2);
         assert_eq!(m.total_rejected(), 2);
         assert_eq!(m.steals(JobKind::DotF32), 1);
     }
 
     #[test]
-    fn norm_events_claimed_exactly_once() {
+    fn norm_events_claimed_exactly_once_per_tier() {
         let m = Metrics::default();
-        // Running totals: 0 → 5 events (2 guards) claimed by rk4...
-        m.record_norm_totals(JobKind::Rk4Hybrid, 5, 2);
+        // Running totals on the paper tier: 0 → 5 events (2 guards,
+        // 3 recons) claimed by rk4...
+        m.record_norm_totals(JobKind::Rk4Hybrid, P, 5, 2, 3);
         // ...then 5 → 8: only the 3 new events are claimed.
-        m.record_norm_totals(JobKind::Rk4Hybrid, 8, 2);
+        m.record_norm_totals(JobKind::Rk4Hybrid, P, 8, 2, 3);
         // A stale/overlapping window (total 6 < cursor 8) claims nothing
         // — this is exactly the concurrent-worker double-count case.
-        m.record_norm_totals(JobKind::DotHybrid, 6, 2);
-        assert_eq!(m.norm_events(JobKind::Rk4Hybrid), 8);
-        assert_eq!(m.guard_events(JobKind::Rk4Hybrid), 2);
-        assert_eq!(m.norm_events(JobKind::DotHybrid), 0);
-        assert_eq!(m.guard_events(JobKind::DotHybrid), 0);
+        m.record_norm_totals(JobKind::DotHybrid, P, 6, 2, 3);
+        assert_eq!(m.norm_events_tier(JobKind::Rk4Hybrid, P), 8);
+        assert_eq!(m.guard_events_tier(JobKind::Rk4Hybrid, P), 2);
+        assert_eq!(m.recon_events_tier(JobKind::Rk4Hybrid, P), 3);
+        assert_eq!(m.norm_events_tier(JobKind::DotHybrid, P), 0);
         // Later events are attributed to the window that closed later.
-        m.record_norm_totals(JobKind::DotHybrid, 10, 3);
-        assert_eq!(m.norm_events(JobKind::DotHybrid), 2);
-        assert_eq!(m.guard_events(JobKind::DotHybrid), 1);
-        // A seeded cursor swallows pre-serving events: a fresh Metrics
-        // seeded at totals (10, 3) attributes nothing until new events.
+        m.record_norm_totals(JobKind::DotHybrid, P, 10, 3, 4);
+        assert_eq!(m.norm_events_tier(JobKind::DotHybrid, P), 2);
+        assert_eq!(m.guard_events_tier(JobKind::DotHybrid, P), 1);
+        assert_eq!(m.recon_events_tier(JobKind::DotHybrid, P), 1);
+        // Cursors are per tier: identical totals on a *different* tier
+        // claim independently (its own context, its own counters).
+        m.record_norm_totals(JobKind::DotHybrid, Tier::Lo, 4, 0, 1);
+        assert_eq!(m.norm_events_tier(JobKind::DotHybrid, Tier::Lo), 4);
+        assert_eq!(m.norm_events_tier(JobKind::DotHybrid, P), 2, "paper unchanged");
+        // A seeded cursor swallows pre-serving events: seeding at
+        // (10, 3, 4) attributes nothing until new events arrive.
         let seeded = Metrics::default();
-        seeded.seed_norm_cursor(10, 3);
-        seeded.record_norm_totals(JobKind::DotHybrid, 10, 3);
-        assert_eq!(seeded.norm_events(JobKind::DotHybrid), 0);
-        seeded.record_norm_totals(JobKind::DotHybrid, 12, 3);
-        assert_eq!(seeded.norm_events(JobKind::DotHybrid), 2);
-        // Aggregate equals the true total — nothing double-counted.
+        seeded.seed_norm_cursor(P, 10, 3, 4);
+        seeded.record_norm_totals(JobKind::DotHybrid, P, 10, 3, 4);
+        assert_eq!(seeded.norm_events_tier(JobKind::DotHybrid, P), 0);
+        seeded.record_norm_totals(JobKind::DotHybrid, P, 12, 3, 4);
+        assert_eq!(seeded.norm_events_tier(JobKind::DotHybrid, P), 2);
+        // Aggregate on paper equals the true total — nothing double-counted.
         assert_eq!(
-            m.norm_events(JobKind::Rk4Hybrid) + m.norm_events(JobKind::DotHybrid),
+            m.norm_events(JobKind::Rk4Hybrid) + m.norm_events_tier(JobKind::DotHybrid, P),
             10
         );
         // The events surface in the report table.
-        m.record(JobKind::Rk4Hybrid, 10.0, 64);
+        m.record(JobKind::Rk4Hybrid, P, 10.0, 64);
         let s = m.table().render();
         assert!(s.contains("norms"));
         assert!(s.contains("guards"));
+        assert!(s.contains("recon"));
+        assert!(s.contains("esc"));
     }
 
     #[test]
     fn percentiles_monotonic_and_tight() {
         let m = Metrics::default();
         for i in 0..1000 {
-            m.record(JobKind::DotF32, (i % 100) as f64 + 1.0, 1);
+            m.record(JobKind::DotF32, P, (i % 100) as f64 + 1.0, 1);
         }
         let p50 = m.latency_percentile_us(JobKind::DotF32, 50.0);
         let p95 = m.latency_percentile_us(JobKind::DotF32, 95.0);
@@ -427,6 +643,8 @@ mod tests {
         // estimate must land within one sub-bucket (~±12%).
         assert!((25.0..=75.0).contains(&p50), "p50={p50}");
         assert!(p99 >= 80.0, "p99={p99}");
+        // Tier-scoped percentile agrees when only one tier is active.
+        assert_eq!(m.latency_percentile_us_tier(JobKind::DotF32, P, 50.0), p50);
     }
 
     #[test]
@@ -448,9 +666,11 @@ mod tests {
     #[test]
     fn table_renders_active_lanes_only() {
         let m = Metrics::default();
-        m.record(JobKind::MatmulF32, 5.0, 64);
+        m.record(JobKind::MatmulF32, P, 5.0, 64);
         let s = m.table().render();
         assert!(s.contains("matmul/fp32"));
         assert!(!s.contains("dot/hrfna"));
+        // FP32 rows carry no tier suffix.
+        assert!(!s.contains("matmul/fp32@"));
     }
 }

@@ -2,12 +2,13 @@
 //!
 //! The paper's contribution is the numeric format (L1/L2), so L3 is the
 //! system a deployment needs around it: typed requests, admission control
-//! that routes jobs onto (kind, shape-bucket) lanes, sharded bounded
-//! batch queues with work stealing and explicit backpressure, worker
-//! threads that execute whole batches on the planar residue lanes
-//! (one-pass block encode → lane kernels → bulk CRT of requested
-//! outputs), histogram metrics, load generators and a drain-reporting
-//! shutdown.
+//! that routes jobs onto (kind, precision-tier, shape-bucket) lanes with
+//! bound-driven tier escalation, sharded bounded batch queues with work
+//! stealing and explicit backpressure, worker threads that execute whole
+//! batches on the planar residue lanes (one-pass block encode → lane
+//! kernels → bulk CRT of requested outputs) under the lane tier's
+//! context from the [`crate::hybrid::ContextRegistry`], per-tier
+//! histogram metrics, load generators and a drain-reporting shutdown.
 
 pub mod request;
 pub mod hybrid_exec;
@@ -18,6 +19,10 @@ pub mod serve_load;
 pub mod server;
 
 pub use hybrid_exec::ExecMode;
-pub use request::{Job, JobKind, JobResult, Payload, SubmitError};
+pub use request::{Job, JobKind, JobResult, JobSpec, Payload, SubmitError};
+pub use router::LaneKey;
 pub use serve_load::{closed_loop, open_loop, LoadReport};
 pub use server::{Coordinator, CoordinatorConfig, DrainReport};
+
+// Re-exported so serving callers need only the coordinator module.
+pub use crate::hybrid::registry::{ContextRegistry, Tier};

@@ -1,8 +1,17 @@
 //! Request/response types for the coordinator, plus the typed submission
 //! errors that carry the serving layer's backpressure contract.
+//!
+//! Every job routes to a **(kind, tier, shape-bucket)** lane: `kind`
+//! selects the datapath, [`Tier`] the precision context the hybrid lanes
+//! execute under (resolved — possibly escalated — at admission from the
+//! payload's magnitude envelope and the request's tolerance), and the
+//! bucket the frozen shape. Batches are single-tier by construction.
 
 use std::time::Instant;
 use thiserror::Error;
+
+use crate::hybrid::registry::{MagnitudeEnvelope, Tier};
+use crate::workloads::rk4::RK4_MACS_PER_STEP;
 
 /// Which backend lane a job runs on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -39,6 +48,16 @@ impl JobKind {
             JobKind::Rk4Hybrid => "rk4/hrfna",
         }
     }
+
+    /// True iff the kind executes on the HRFNA datapath (and therefore
+    /// resolves a precision tier; FP32 lanes are tier-agnostic and pin
+    /// to the [`Tier::Paper`] lane slot).
+    pub fn is_hybrid(&self) -> bool {
+        matches!(
+            self,
+            JobKind::DotHybrid | JobKind::MatmulHybrid | JobKind::Rk4Hybrid
+        )
+    }
 }
 
 /// Job payload (shapes are validated against the AOT bucket at submit).
@@ -55,14 +74,75 @@ pub enum Payload {
 }
 
 impl Payload {
-    /// MAC-equivalent count (for throughput metrics). RK4 charges the
-    /// ~30 format ops one Van der Pol step costs per instance.
+    /// MAC-equivalent count (for throughput metrics). RK4 charges
+    /// [`RK4_MACS_PER_STEP`] per step — the same constant the §V
+    /// hardware timing model uses.
     pub fn macs(&self) -> u64 {
         match self {
             Payload::Dot { x, .. } => x.len() as u64,
             Payload::Matmul { dim, .. } => (dim * dim * dim) as u64,
-            Payload::Rk4 { steps, .. } => steps * 30,
+            Payload::Rk4 { steps, .. } => steps * RK4_MACS_PER_STEP,
         }
+    }
+
+    /// The payload's magnitude envelope — what tier resolution inspects
+    /// *before* any encoding happens: extreme operand magnitude, the
+    /// longest exact accumulation, and a coarse a-priori normalization-
+    /// event estimate (0 for the zero-mid-loop-rounding planar kernels;
+    /// one per step for the iterative ODE workload).
+    pub fn envelope(&self) -> MagnitudeEnvelope {
+        match self {
+            Payload::Dot { x, y } => {
+                MagnitudeEnvelope::of_slices(&[x, y], x.len() as u64, 0)
+            }
+            Payload::Matmul { a, b, dim } => {
+                MagnitudeEnvelope::of_slices(&[a, b], *dim as u64, 0)
+            }
+            Payload::Rk4 { y0, mu, steps, .. } => {
+                let max_abs = y0
+                    .iter()
+                    .fold(mu.abs(), |acc, &v| acc.max(v.abs()));
+                MagnitudeEnvelope {
+                    max_abs,
+                    terms: 4, // k1 + 2k2 + 2k3 + k4 state update
+                    norm_events: *steps,
+                }
+            }
+        }
+    }
+}
+
+/// A full submission: payload + lane kind + the *requested* precision
+/// tier and an optional relative-error tolerance. Admission resolves the
+/// actual tier (escalating past `tier` when its formal bound cannot
+/// cover the envelope/tolerance — counted in the coordinator metrics).
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub kind: JobKind,
+    pub payload: Payload,
+    /// Cheapest tier the client is willing to run on.
+    pub tier: Tier,
+    /// Target relative error; `None` accepts the tier's native budget.
+    pub tolerance: Option<f64>,
+}
+
+impl JobSpec {
+    /// A paper-tier spec with no tolerance — the historical single-
+    /// context submission, bit-identical through the registry.
+    pub fn new(kind: JobKind, payload: Payload) -> JobSpec {
+        JobSpec { kind, payload, tier: Tier::Paper, tolerance: None }
+    }
+
+    /// Set the requested tier.
+    pub fn with_tier(mut self, tier: Tier) -> JobSpec {
+        self.tier = tier;
+        self
+    }
+
+    /// Set the relative-error tolerance.
+    pub fn with_tolerance(mut self, tol: f64) -> JobSpec {
+        self.tolerance = Some(tol);
+        self
     }
 }
 
@@ -75,9 +155,10 @@ pub enum SubmitError {
     #[error("admission rejected: {0}")]
     Rejected(String),
     /// Every shard of the lane's bounded queue is at capacity.
-    #[error("lane {kind:?} overloaded: {queued} jobs queued at capacity {capacity}")]
+    #[error("lane {kind:?}@{tier:?} overloaded: {queued} jobs queued at capacity {capacity}")]
     Overloaded {
         kind: JobKind,
+        tier: Tier,
         queued: usize,
         capacity: usize,
     },
@@ -92,6 +173,8 @@ pub struct Job {
     pub id: u64,
     pub kind: JobKind,
     pub payload: Payload,
+    /// Resolved precision tier (lane routing key; `Paper` on FP32 lanes).
+    pub tier: Tier,
     /// Shape bucket the payload was admitted into (queue routing key).
     pub bucket: usize,
     pub submitted: Instant,
@@ -104,6 +187,8 @@ pub struct Job {
 pub struct JobResult {
     pub id: u64,
     pub kind: JobKind,
+    /// The tier the job actually executed under.
+    pub tier: Tier,
     /// Scalar for dot, row-major matrix for matmul, final state for RK4.
     pub values: Vec<f64>,
     /// End-to-end latency in microseconds.
@@ -123,7 +208,13 @@ mod tests {
         let m = Payload::Matmul { a: vec![], b: vec![], dim: 4 };
         assert_eq!(m.macs(), 64);
         let r = Payload::Rk4 { y0: vec![2.0, 0.0], mu: 1.0, dt: 0.01, steps: 10 };
-        assert_eq!(r.macs(), 300);
+        assert_eq!(r.macs(), 10 * RK4_MACS_PER_STEP);
+        // The serving metric and the §V hardware model share the per-step
+        // constant — they cannot drift apart.
+        assert_eq!(
+            r.macs(),
+            crate::fpga::pipeline::WorkloadKind::Rk4 { steps: 10 }.macs()
+        );
     }
 
     #[test]
@@ -135,8 +226,51 @@ mod tests {
     }
 
     #[test]
+    fn hybrid_kind_partition() {
+        let hybrid: Vec<_> = JobKind::ALL.iter().filter(|k| k.is_hybrid()).collect();
+        assert_eq!(hybrid.len(), 3);
+        assert!(!JobKind::DotF32.is_hybrid());
+        assert!(!JobKind::MatmulF32.is_hybrid());
+    }
+
+    #[test]
+    fn payload_envelopes() {
+        let d = Payload::Dot { x: vec![1.0, -8.0], y: vec![0.5, 2.0] };
+        let e = d.envelope();
+        assert_eq!(e.max_abs, 8.0);
+        assert_eq!(e.terms, 2);
+        assert_eq!(e.norm_events, 0);
+        let m = Payload::Matmul { a: vec![3.0; 4], b: vec![-4.0; 4], dim: 2 };
+        let e = m.envelope();
+        assert_eq!(e.max_abs, 4.0);
+        assert_eq!(e.terms, 2);
+        let r = Payload::Rk4 { y0: vec![2.0, 0.0], mu: 5.0, dt: 0.01, steps: 100 };
+        let e = r.envelope();
+        assert_eq!(e.max_abs, 5.0);
+        assert_eq!(e.norm_events, 100);
+    }
+
+    #[test]
+    fn spec_builder_defaults_to_paper() {
+        let s = JobSpec::new(
+            JobKind::DotHybrid,
+            Payload::Dot { x: vec![1.0], y: vec![1.0] },
+        );
+        assert_eq!(s.tier, Tier::Paper);
+        assert!(s.tolerance.is_none());
+        let s = s.with_tier(Tier::Lo).with_tolerance(1e-9);
+        assert_eq!(s.tier, Tier::Lo);
+        assert_eq!(s.tolerance, Some(1e-9));
+    }
+
+    #[test]
     fn submit_error_messages_are_typed() {
-        let e = SubmitError::Overloaded { kind: JobKind::DotHybrid, queued: 9, capacity: 8 };
+        let e = SubmitError::Overloaded {
+            kind: JobKind::DotHybrid,
+            tier: Tier::Paper,
+            queued: 9,
+            capacity: 8,
+        };
         assert!(e.to_string().contains("overloaded"));
         assert!(matches!(e, SubmitError::Overloaded { queued: 9, .. }));
         assert!(SubmitError::ShuttingDown.to_string().contains("shutting down"));

@@ -1,9 +1,17 @@
 //! Admission control + lane routing: validates each payload against the
 //! shape buckets, pads dot vectors up to the smallest fitting bucket, and
-//! maps jobs onto (kind, bucket) queues — one sharded queue per lane,
-//! workers pull and steal concurrently, giving work-conserving scheduling.
+//! maps jobs onto (kind, tier, bucket) queues — one sharded queue per
+//! lane, workers pull and steal concurrently, giving work-conserving
+//! scheduling. Hybrid kinds get one lane per enabled precision tier;
+//! FP32 kinds are tier-agnostic and occupy the [`Tier::Paper`] slot.
 
 use super::request::{JobKind, Payload, SubmitError};
+use crate::hybrid::registry::Tier;
+
+/// Queue routing key of one lane: (datapath kind, precision tier, shape
+/// bucket). Batches popped from a lane are single-kind, single-tier and
+/// single-shape by construction.
+pub type LaneKey = (JobKind, Tier, usize);
 
 /// Shape buckets. Hybrid dot jobs route to the smallest fitting bucket
 /// (each bucket is its own planar lane); the FP32 dot lane is pinned to
@@ -16,6 +24,9 @@ pub struct ShapeBuckets {
     pub matmul_dim: usize,
     /// Admission cap on RK4 steps per job.
     pub rk4_max_steps: u64,
+    /// Precision tiers the hybrid lanes serve (ascending; must be
+    /// non-empty). Escalation can only land on an enabled tier.
+    pub tiers: Vec<Tier>,
 }
 
 impl Default for ShapeBuckets {
@@ -24,6 +35,7 @@ impl Default for ShapeBuckets {
             dot: vec![512, 4096],
             matmul_dim: 64,
             rk4_max_steps: 4096,
+            tiers: Tier::ALL.to_vec(),
         }
     }
 }
@@ -42,14 +54,24 @@ impl ShapeBuckets {
         self.dot.iter().copied().find(|&b| b >= len)
     }
 
-    /// Every (kind, bucket) lane this bucket set serves.
-    pub fn lanes(&self) -> Vec<(JobKind, usize)> {
-        let mut lanes: Vec<(JobKind, usize)> =
-            self.dot.iter().map(|&n| (JobKind::DotHybrid, n)).collect();
-        lanes.push((JobKind::DotF32, self.engine_dot_n()));
-        lanes.push((JobKind::MatmulHybrid, self.matmul_dim));
-        lanes.push((JobKind::MatmulF32, self.matmul_dim));
-        lanes.push((JobKind::Rk4Hybrid, RK4_BUCKET));
+    /// The cheapest *enabled* tier at or above `tier`, if any.
+    pub fn enabled_tier_at_or_above(&self, tier: Tier) -> Option<Tier> {
+        self.tiers.iter().copied().filter(|&t| t >= tier).min()
+    }
+
+    /// Every (kind, tier, bucket) lane this bucket set serves.
+    pub fn lanes(&self) -> Vec<LaneKey> {
+        assert!(!self.tiers.is_empty(), "ShapeBuckets.tiers must be non-empty");
+        let mut lanes: Vec<LaneKey> = Vec::new();
+        for &tier in &self.tiers {
+            for &n in &self.dot {
+                lanes.push((JobKind::DotHybrid, tier, n));
+            }
+            lanes.push((JobKind::MatmulHybrid, tier, self.matmul_dim));
+            lanes.push((JobKind::Rk4Hybrid, tier, RK4_BUCKET));
+        }
+        lanes.push((JobKind::DotF32, Tier::Paper, self.engine_dot_n()));
+        lanes.push((JobKind::MatmulF32, Tier::Paper, self.matmul_dim));
         lanes
     }
 }
@@ -248,12 +270,51 @@ mod tests {
     }
 
     #[test]
-    fn lane_enumeration_covers_all_kinds() {
+    fn lane_enumeration_covers_all_kinds_and_tiers() {
         let b = ShapeBuckets::default();
         let lanes = b.lanes();
-        assert_eq!(lanes.len(), b.dot.len() + 4);
+        // Hybrid kinds fan out per tier; FP32 kinds pin to one lane each.
+        assert_eq!(lanes.len(), b.tiers.len() * (b.dot.len() + 2) + 2);
         for kind in JobKind::ALL {
-            assert!(lanes.iter().any(|&(k, _)| k == kind), "{kind:?} missing");
+            assert!(lanes.iter().any(|&(k, _, _)| k == kind), "{kind:?} missing");
         }
+        for &tier in &b.tiers {
+            assert!(
+                lanes.iter().any(|&(k, t, _)| k == JobKind::DotHybrid && t == tier),
+                "{tier:?} missing a hybrid dot lane"
+            );
+        }
+        // FP32 lanes exist only in the Paper slot.
+        assert!(lanes
+            .iter()
+            .all(|&(k, t, _)| k.is_hybrid() || t == Tier::Paper));
+    }
+
+    #[test]
+    fn single_tier_config_shrinks_the_lane_set() {
+        let b = ShapeBuckets {
+            tiers: vec![Tier::Paper],
+            ..ShapeBuckets::default()
+        };
+        let lanes = b.lanes();
+        assert_eq!(lanes.len(), b.dot.len() + 4);
+        assert!(lanes.iter().all(|&(_, t, _)| t == Tier::Paper));
+    }
+
+    #[test]
+    fn enabled_tier_lookup_respects_the_configured_set() {
+        let b = ShapeBuckets::default();
+        assert_eq!(b.enabled_tier_at_or_above(Tier::Lo), Some(Tier::Lo));
+        let b = ShapeBuckets {
+            tiers: vec![Tier::Paper, Tier::Wide],
+            ..ShapeBuckets::default()
+        };
+        assert_eq!(b.enabled_tier_at_or_above(Tier::Lo), Some(Tier::Paper));
+        assert_eq!(b.enabled_tier_at_or_above(Tier::Wide), Some(Tier::Wide));
+        let b = ShapeBuckets {
+            tiers: vec![Tier::Lo],
+            ..ShapeBuckets::default()
+        };
+        assert_eq!(b.enabled_tier_at_or_above(Tier::Paper), None);
     }
 }

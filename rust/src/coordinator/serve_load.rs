@@ -4,11 +4,16 @@
 //! arrival-process model that actually exposes backpressure). Both return
 //! a [`LoadReport`]; `bench_serve` and the saturation tests drive the
 //! coordinator exclusively through these.
+//!
+//! Generators build full [`JobSpec`]s, so a `make` closure can emit
+//! mixed-**tier** traffic (different requested tiers and tolerances per
+//! request) as naturally as mixed-kind traffic — the multi-scenario load
+//! shape the tier registry exists to serve.
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use super::request::{JobKind, JobResult, Payload};
+use super::request::{JobResult, JobSpec};
 use super::server::Coordinator;
 use crate::util::stats::Summary;
 
@@ -75,13 +80,13 @@ fn drain(
 /// Closed-loop load: `clients` threads each submit `jobs_per_client`
 /// jobs in bursts of `burst` (submit the burst, then wait for all of it —
 /// bursts keep the batcher fed so batches of ≥ `burst` actually form).
-/// `make(client, i)` builds the i-th job of a client.
+/// `make(client, i)` builds the i-th spec of a client.
 pub fn closed_loop(
     coord: &Coordinator,
     clients: usize,
     jobs_per_client: usize,
     burst: usize,
-    make: &(dyn Fn(u64, usize) -> (JobKind, Payload) + Sync),
+    make: &(dyn Fn(u64, usize) -> JobSpec + Sync),
 ) -> LoadReport {
     let burst = burst.max(1);
     let t0 = Instant::now();
@@ -96,9 +101,9 @@ pub fn closed_loop(
                     while i < jobs_per_client {
                         let mut pending = Vec::with_capacity(burst);
                         for _ in 0..burst.min(jobs_per_client - i) {
-                            let (kind, payload) = make(c as u64, i);
+                            let spec = make(c as u64, i);
                             i += 1;
-                            match coord.submit(kind, payload) {
+                            match coord.submit_spec(spec) {
                                 Ok(rx) => {
                                     accepted += 1;
                                     pending.push(rx);
@@ -137,7 +142,7 @@ pub fn open_loop(
     coord: &Coordinator,
     total: usize,
     rate_per_s: f64,
-    make: &(dyn Fn(u64, usize) -> (JobKind, Payload) + Sync),
+    make: &(dyn Fn(u64, usize) -> JobSpec + Sync),
 ) -> LoadReport {
     assert!(rate_per_s > 0.0, "open_loop needs a positive rate");
     let interval = Duration::from_secs_f64(1.0 / rate_per_s);
@@ -150,8 +155,8 @@ pub fn open_loop(
         if let Some(sleep) = due.checked_duration_since(Instant::now()) {
             std::thread::sleep(sleep);
         }
-        let (kind, payload) = make(0, i);
-        match coord.submit(kind, payload) {
+        let spec = make(0, i);
+        match coord.submit_spec(spec) {
             Ok(rx) => {
                 accepted += 1;
                 pending.push(rx);

@@ -1,7 +1,15 @@
-//! The coordinator server: per-(kind, bucket) lanes of sharded, bounded
-//! batch queues, worker threads executing whole batches on the planar
-//! engine (or the scalar reference datapath), and a drain-before-join
-//! shutdown that reports exactly what happened to every accepted job.
+//! The coordinator server: per-(kind, tier, bucket) lanes of sharded,
+//! bounded batch queues, worker threads executing whole batches on the
+//! planar engine (or the scalar reference datapath) under the lane's
+//! precision-tier context, and a drain-before-join shutdown that reports
+//! exactly what happened to every accepted job.
+//!
+//! The coordinator owns a [`ContextRegistry`] instead of a single
+//! context: hybrid jobs are admitted with a *requested* tier plus an
+//! optional tolerance, and admission escalates them to the cheapest
+//! enabled tier whose formal bound covers the request (counted in the
+//! per-tier metrics). Paper-tier traffic is bit-identical to the
+//! historical single-context path.
 
 use anyhow::Result;
 use std::collections::BTreeMap;
@@ -13,16 +21,16 @@ use std::time::{Duration, Instant};
 use super::batcher::{BatchPolicy, BatchQueue, PushError};
 use super::hybrid_exec::{execute_batch, ExecMode};
 use super::metrics::Metrics;
-use super::request::{Job, JobKind, JobResult, Payload, SubmitError};
-use super::router::{admit, ShapeBuckets};
-use crate::hybrid::HrfnaContext;
+use super::request::{Job, JobKind, JobResult, JobSpec, Payload, SubmitError};
+use super::router::{admit, LaneKey, ShapeBuckets};
+use crate::hybrid::registry::{ContextRegistry, Tier};
 use crate::runtime::EngineHandle;
 
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
-    /// Worker threads per (kind, bucket) lane; also the shard count of
-    /// each lane's queue.
+    /// Worker threads per (kind, tier, bucket) lane; also the shard
+    /// count of each lane's queue.
     pub workers_per_lane: usize,
     pub batch: BatchPolicy,
     pub buckets: ShapeBuckets,
@@ -79,7 +87,8 @@ impl std::fmt::Display for DrainReport {
 /// The running coordinator. Dropping it shuts the workers down cleanly;
 /// prefer [`Coordinator::shutdown`] to also get the drain report.
 pub struct Coordinator {
-    queues: Arc<BTreeMap<(JobKind, usize), BatchQueue>>,
+    queues: Arc<BTreeMap<LaneKey, BatchQueue>>,
+    registry: Arc<ContextRegistry>,
     pub metrics: Arc<Metrics>,
     next_id: AtomicU64,
     cfg: CoordinatorConfig,
@@ -87,10 +96,10 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start workers over a loaded engine and an HRFNA context.
+    /// Start workers over a loaded engine and the tier registry.
     pub fn start(
         engine: EngineHandle,
-        hrfna: Arc<HrfnaContext>,
+        registry: Arc<ContextRegistry>,
         cfg: CoordinatorConfig,
     ) -> Coordinator {
         let shards = cfg.workers_per_lane.max(1);
@@ -100,49 +109,65 @@ impl Coordinator {
         }
         let queues = Arc::new(queues);
         let metrics = Arc::new(Metrics::default());
-        // Claim cursors start at the context's current totals so
-        // pre-serving events are not credited to the first lane.
-        let pre = hrfna.snapshot();
-        metrics.seed_norm_cursor(pre.norms, pre.guard_norms);
+        // Claim cursors start at each already-constructed tier's current
+        // totals so pre-serving events (client warmup on a registry
+        // context) are not credited to the first lane. Tiers built
+        // lazily later start their cursors at zero, which matches their
+        // zeroed counters.
+        for tier in Tier::ALL {
+            if let Some(ctx) = registry.peek(tier) {
+                let pre = ctx.snapshot();
+                metrics.seed_norm_cursor(tier, pre.norms, pre.guard_norms, pre.reconstructions);
+            }
+        }
         let mut workers = Vec::new();
-        let keys: Vec<(JobKind, usize)> = queues.keys().copied().collect();
+        let keys: Vec<LaneKey> = queues.keys().copied().collect();
         for key in keys {
-            let (kind, bucket) = key;
+            let (kind, tier, bucket) = key;
             for widx in 0..shards {
                 let queues = Arc::clone(&queues);
                 let engine = engine.clone();
-                let hrfna = Arc::clone(&hrfna);
+                let registry = Arc::clone(&registry);
                 let metrics = Arc::clone(&metrics);
                 let mode = cfg.exec;
                 workers.push(
                     thread::Builder::new()
                         .name(format!(
-                            "lane-{}-{bucket}-{widx}",
-                            kind.label().replace('/', "-")
+                            "lane-{}-{}-{bucket}-{widx}",
+                            kind.label().replace('/', "-"),
+                            tier.label()
                         ))
                         .spawn(move || {
                             let q = queues.get(&key).unwrap();
                             while let Some((batch, stolen)) = q.next_batch_for(widx) {
                                 if stolen {
-                                    metrics.record_steal(kind);
+                                    metrics.record_steal(kind, tier);
                                 }
                                 let size = batch.len();
                                 let t0 = Instant::now();
-                                let results =
-                                    execute_batch(&engine, &hrfna, mode, kind, &batch);
-                                metrics.record_batch(kind, size, t0.elapsed());
+                                let results = execute_batch(
+                                    &engine, &registry, mode, kind, tier, &batch,
+                                );
+                                metrics.record_batch(kind, tier, size, t0.elapsed());
                                 // Per-lane normalization accounting: hand
-                                // the shared context's running totals to
-                                // the claim cursor — every event is
+                                // the tier context's running totals to
+                                // its claim cursor — every event is
                                 // counted exactly once across concurrent
                                 // workers (per-kind attribution of
                                 // simultaneous windows is approximate).
-                                let ops = hrfna.snapshot();
-                                metrics.record_norm_totals(
-                                    kind,
-                                    ops.norms,
-                                    ops.guard_norms,
-                                );
+                                // FP32 lanes never touch a tier context.
+                                if kind.is_hybrid() {
+                                    if let Some(ctx) = registry.peek(tier) {
+                                        let ops = ctx.snapshot();
+                                        metrics.record_norm_totals(
+                                            kind,
+                                            tier,
+                                            ops.norms,
+                                            ops.guard_norms,
+                                            ops.reconstructions,
+                                        );
+                                    }
+                                }
                                 for (job, r) in batch.into_iter().zip(results) {
                                     let latency_us =
                                         job.submitted.elapsed().as_secs_f64() * 1e6;
@@ -156,10 +181,11 @@ impl Coordinator {
                                             vec![f64::NAN]
                                         }
                                     };
-                                    metrics.record(kind, latency_us, job.payload.macs());
+                                    metrics.record(kind, tier, latency_us, job.payload.macs());
                                     let _ = job.reply.send(JobResult {
                                         id: job.id,
                                         kind,
+                                        tier,
                                         values,
                                         latency_us,
                                         batch_size: size,
@@ -173,6 +199,7 @@ impl Coordinator {
         }
         Coordinator {
             queues,
+            registry,
             metrics,
             next_id: AtomicU64::new(1),
             cfg,
@@ -185,54 +212,133 @@ impl Coordinator {
         &self.cfg
     }
 
+    /// The tier registry this coordinator serves from.
+    pub fn registry(&self) -> &Arc<ContextRegistry> {
+        &self.registry
+    }
+
     /// Serving metrics table with correct per-kind worker counts (a kind
-    /// with several bucket lanes has `lanes × workers_per_lane` threads
-    /// feeding its shared occupancy accumulator).
+    /// with several tier/bucket lanes has `lanes × workers_per_lane`
+    /// threads feeding its shared occupancy accumulator).
     pub fn metrics_table(&self) -> crate::util::table::Table {
         let lanes = self.cfg.buckets.lanes();
         let wpl = self.cfg.workers_per_lane.max(1);
         self.metrics.table_with(&|kind: JobKind| {
-            wpl * lanes.iter().filter(|&&(k, _)| k == kind).count().max(1)
+            wpl * lanes.iter().filter(|&&(k, _, _)| k == kind).count().max(1)
         })
     }
 
-    /// Submit a job; returns the receiver for its result, or a typed
-    /// error (`Rejected` for admission failures, `Overloaded` when the
-    /// lane's bounded queue is full — the backpressure contract).
-    pub fn submit(
+    /// Resolve the tier a hybrid spec will execute on: clamp the
+    /// requested tier to the enabled set, then bound-escalate over the
+    /// payload's magnitude envelope and tolerance, then clamp again
+    /// (escalation may land between enabled tiers). Returns the tier
+    /// plus whether a *bound check* actually forced an escalation (a
+    /// plain clamp onto the enabled set is not one). `Err` when no tier
+    /// covers the request — an uncovered resolution means the admission
+    /// contract ("run on a tier whose formal bound covers you") cannot
+    /// be met, and the coordinator rejects rather than silently serving
+    /// a result outside the client's stated tolerance — or when no
+    /// enabled lane sits at or above the resolution.
+    fn resolve_tier(
         &self,
-        kind: JobKind,
-        mut payload: Payload,
+        requested: Tier,
+        payload: &Payload,
+        tolerance: Option<f64>,
+    ) -> Result<(Tier, bool), SubmitError> {
+        let base = self
+            .cfg
+            .buckets
+            .enabled_tier_at_or_above(requested)
+            .ok_or_else(|| {
+                SubmitError::Rejected(format!(
+                    "no enabled tier at or above requested {requested:?}"
+                ))
+            })?;
+        let res = self.registry.resolve(base, &payload.envelope(), tolerance);
+        if !res.covered {
+            return Err(SubmitError::Rejected(format!(
+                "no tier's formal bound covers the request \
+                 (requested {requested:?}, failed check {:?}, tolerance {tolerance:?})",
+                res.reason
+            )));
+        }
+        let tier = self
+            .cfg
+            .buckets
+            .enabled_tier_at_or_above(res.tier)
+            .ok_or_else(|| {
+                SubmitError::Rejected(format!(
+                    "escalation to {:?} ({:?}) has no enabled lane",
+                    res.tier, res.reason
+                ))
+            })?;
+        Ok((tier, res.escalations > 0))
+    }
+
+    /// Submit a full spec (kind, payload, requested tier, tolerance);
+    /// returns the receiver for its result, or a typed error (`Rejected`
+    /// for admission failures — including a tolerance that not even the
+    /// top tier's formal bound covers — `Overloaded` when the lane's
+    /// bounded queue is full: the backpressure contract). Hybrid jobs
+    /// may be escalated past their requested tier; the bump is counted
+    /// in the metrics and the result's `tier` reports where they
+    /// actually ran.
+    pub fn submit_spec(
+        &self,
+        spec: JobSpec,
     ) -> Result<mpsc::Receiver<JobResult>, SubmitError> {
+        let JobSpec { kind, mut payload, tier: requested, tolerance } = spec;
+        let metric_tier = if kind.is_hybrid() { requested } else { Tier::Paper };
         let bucket = match admit(&mut payload, kind, &self.cfg.buckets) {
             Ok(b) => b,
             Err(e) => {
-                self.metrics.record_rejected(kind);
+                self.metrics.record_rejected(kind, metric_tier);
                 return Err(e);
             }
+        };
+        // Tier resolution happens strictly before any encoding: the
+        // envelope is read off the admitted payload, the bound checks
+        // run on static tier configs.
+        let tier = if kind.is_hybrid() {
+            match self.resolve_tier(requested, &payload, tolerance) {
+                Ok((t, bound_escalated)) => {
+                    if bound_escalated {
+                        self.metrics.record_escalation(kind, t);
+                    }
+                    t
+                }
+                Err(e) => {
+                    self.metrics.record_rejected(kind, metric_tier);
+                    return Err(e);
+                }
+            }
+        } else {
+            Tier::Paper
         };
         let (tx, rx) = mpsc::channel();
         let job = Job {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             kind,
             payload,
+            tier,
             bucket,
             submitted: Instant::now(),
             reply: tx,
         };
         let q = self
             .queues
-            .get(&(kind, bucket))
-            .expect("admitted bucket has a lane");
+            .get(&(kind, tier, bucket))
+            .expect("admitted (kind, tier, bucket) has a lane");
         match q.try_push(job) {
             Ok(()) => {
-                self.metrics.record_accepted(kind);
+                self.metrics.record_accepted(kind, tier);
                 Ok(rx)
             }
             Err(PushError::Full(_)) => {
-                self.metrics.record_rejected(kind);
+                self.metrics.record_rejected(kind, tier);
                 Err(SubmitError::Overloaded {
                     kind,
+                    tier,
                     queued: q.len(),
                     capacity: q.policy.capacity.saturating_mul(q.shard_count()),
                 })
@@ -241,12 +347,27 @@ impl Coordinator {
         }
     }
 
-    /// Submit and block for the result.
-    pub fn call(&self, kind: JobKind, payload: Payload) -> Result<JobResult> {
-        let rx = self.submit(kind, payload)?;
+    /// Submit a paper-tier job with no tolerance — the historical
+    /// single-context submission, bit-identical through the registry.
+    pub fn submit(
+        &self,
+        kind: JobKind,
+        payload: Payload,
+    ) -> Result<mpsc::Receiver<JobResult>, SubmitError> {
+        self.submit_spec(JobSpec::new(kind, payload))
+    }
+
+    /// Submit a spec and block for the result.
+    pub fn call_spec(&self, spec: JobSpec) -> Result<JobResult> {
+        let rx = self.submit_spec(spec)?;
         Ok(rx
             .recv_timeout(Duration::from_secs(120))
             .map_err(|e| anyhow::anyhow!("job timed out: {e}"))?)
+    }
+
+    /// Submit a paper-tier job and block for the result.
+    pub fn call(&self, kind: JobKind, payload: Payload) -> Result<JobResult> {
+        self.call_spec(JobSpec::new(kind, payload))
     }
 
     /// Close all queues, drain every in-flight and queued batch, join the
@@ -282,5 +403,5 @@ impl Drop for Coordinator {
     }
 }
 
-// Engine-dependent tests live in rust/tests/integration_serve.rs and
-// rust/tests/integration_saturation.rs.
+// Engine-dependent tests live in rust/tests/integration_serve.rs,
+// rust/tests/integration_saturation.rs and rust/tests/integration_tiers.rs.

@@ -12,6 +12,7 @@
 use super::resources::FormatArch;
 use super::timing;
 use crate::config::HrfnaConfig;
+use crate::workloads::rk4::RK4_MACS_PER_STEP;
 
 /// Workload classes of the paper's evaluation (§VII).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -20,8 +21,7 @@ pub enum WorkloadKind {
     Dot { n: u64 },
     /// Dense matmul m×k×n.
     Matmul { m: u64, k: u64, n: u64 },
-    /// RK4: steps × ops-per-step (≈ 40 scalar MAC-equivalents for a 2-D
-    /// nonlinear field).
+    /// RK4: steps × [`RK4_MACS_PER_STEP`] (a 2-D nonlinear field).
     Rk4 { steps: u64 },
 }
 
@@ -31,7 +31,7 @@ impl WorkloadKind {
         match *self {
             WorkloadKind::Dot { n } => n,
             WorkloadKind::Matmul { m, k, n } => m * k * n,
-            WorkloadKind::Rk4 { steps } => steps * 40,
+            WorkloadKind::Rk4 { steps } => steps * RK4_MACS_PER_STEP,
         }
     }
 

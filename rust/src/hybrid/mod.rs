@@ -18,6 +18,9 @@
 //!   (flagged-scan → gather → batched residue-domain rescale → scatter),
 //!   with the per-element path kept as `norm::reference`.
 //! * [`error`]    — Lemma 1/2 bound calculators and bound-checking probes.
+//! * [`registry`] — named precision tiers (`lo`/`paper`/`wide`), each a
+//!   lazily-built shared context, plus the bound-driven escalation policy
+//!   the serving stack resolves requests through.
 
 pub mod context;
 pub mod interval;
@@ -27,6 +30,7 @@ pub mod norm;
 pub mod error;
 pub mod funcs;
 pub mod array;
+pub mod registry;
 
 pub use array::HrfnaArray;
 pub use batch::HrfnaBatch;
@@ -34,3 +38,4 @@ pub use context::{HrfnaContext, OpCounters, OpSnapshot};
 pub use interval::Interval;
 pub use norm::NormReport;
 pub use number::Hrfna;
+pub use registry::{ContextRegistry, MagnitudeEnvelope, Resolution, Tier};

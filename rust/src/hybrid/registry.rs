@@ -1,0 +1,534 @@
+//! Precision-tier context registry: the serving stack's named, lazily
+//! constructed `HrfnaContext` instances plus the bound-driven escalation
+//! policy that picks the cheapest tier whose formal error budget covers a
+//! request.
+//!
+//! The paper defines HRFNA over a *parameterized* hybrid space (Table II:
+//! modulus set, exponent width ω_f, threshold τ, scaling step s) and
+//! proves its error bounds per parameter set — nothing in the format
+//! forces one global configuration. Related work makes precision a
+//! per-workload knob (Sentieys & Menard; de Fine Licht et al.), and a
+//! multi-tenant deployment needs the same: this module exposes a fixed
+//! set of **tiers** ([`Tier::Lo`] = `low_precision`, [`Tier::Paper`] =
+//! `paper_default`, [`Tier::Wide`] = the extended `wide` preset), each
+//! backed by one immutable [`HrfnaContext`] built exactly once on first
+//! use (`OnceLock` per slot) with its own [`super::context::OpCounters`].
+//!
+//! ## Escalation (§III-D bounds, applied at admission)
+//!
+//! Before any encoding happens, [`ContextRegistry::resolve`] checks a
+//! job's [`MagnitudeEnvelope`] and optional relative-error tolerance
+//! against each tier's *static* configuration (no context construction
+//! on this path):
+//!
+//! 1. **Legal-interval overflow** — the block-encoded exponent of the
+//!    job's extreme magnitude (and its products) must fit ±(2^{ω_f−1}−1),
+//!    and the exact residue accumulation `terms · 2^{2·sig}` must stay
+//!    inside the tier's signed budget `2^{m_bits−2} < M/2`.
+//! 2. **Bound above tolerance** — the tier's a-priori relative budget
+//!    (encode quantization plus [`composed_rel_bound`] over the
+//!    envelope's normalization-event estimate) must not exceed the job's
+//!    tolerance.
+//!
+//! A tier that fails either check is skipped and the next tier is tried
+//! (`lo → paper → wide`); the coordinator counts every bump in its
+//! per-tier metrics. The `paper` tier is bit-identical to the historical
+//! single-context serving path (pinned by test below).
+
+use std::sync::{Arc, OnceLock};
+
+use super::context::HrfnaContext;
+use super::error::composed_rel_bound;
+use super::number::pow2;
+use crate::config::HrfnaConfig;
+
+/// A named precision tier of the serving registry, cheapest first.
+/// The derived order (`Lo < Paper < Wide`) is the escalation order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Tier {
+    /// `HrfnaConfig::low_precision`: k=4 16-bit lanes, 18-bit significand.
+    Lo,
+    /// `HrfnaConfig::paper_default`: the Table II parameter set.
+    Paper,
+    /// `HrfnaConfig::wide`: k=12 24-bit lanes, 48-bit significand.
+    Wide,
+}
+
+impl Tier {
+    /// Every tier, escalation order.
+    pub const ALL: [Tier; 3] = [Tier::Lo, Tier::Paper, Tier::Wide];
+
+    /// Stable slot index.
+    #[inline]
+    pub fn index(self) -> usize {
+        match self {
+            Tier::Lo => 0,
+            Tier::Paper => 1,
+            Tier::Wide => 2,
+        }
+    }
+
+    /// Table/record label.
+    pub fn label(self) -> &'static str {
+        match self {
+            Tier::Lo => "lo",
+            Tier::Paper => "paper",
+            Tier::Wide => "wide",
+        }
+    }
+
+    /// Parse a label produced by [`Tier::label`].
+    pub fn from_label(s: &str) -> Option<Tier> {
+        Tier::ALL.iter().copied().find(|t| t.label() == s)
+    }
+
+    /// The next tier up, `None` at the top.
+    pub fn next(self) -> Option<Tier> {
+        match self {
+            Tier::Lo => Some(Tier::Paper),
+            Tier::Paper => Some(Tier::Wide),
+            Tier::Wide => None,
+        }
+    }
+
+    /// The tier's preset configuration.
+    pub fn config(self) -> HrfnaConfig {
+        match self {
+            Tier::Lo => HrfnaConfig::low_precision(),
+            Tier::Paper => HrfnaConfig::paper_default(),
+            Tier::Wide => HrfnaConfig::wide(),
+        }
+    }
+}
+
+/// Magnitude envelope of one request — everything the escalation policy
+/// needs to know about the payload *before* encoding it.
+#[derive(Clone, Copy, Debug)]
+pub struct MagnitudeEnvelope {
+    /// Largest operand magnitude (0.0 for an all-zero payload).
+    pub max_abs: f64,
+    /// Longest exact residue accumulation the job performs (dot length,
+    /// matmul inner dimension, field-evaluation chain for ODE steps).
+    pub terms: u64,
+    /// A-priori estimate of threshold/guard normalization events the job
+    /// may take (0 for the zero-mid-loop-rounding planar kernels; one
+    /// per step for iterative workloads — coarse by design, it prices
+    /// the Lemma 2 budget, it does not predict the measured count).
+    pub norm_events: u64,
+}
+
+impl MagnitudeEnvelope {
+    /// Envelope over a set of operand slices.
+    pub fn of_slices(slices: &[&[f64]], terms: u64, norm_events: u64) -> MagnitudeEnvelope {
+        let max_abs = slices
+            .iter()
+            .flat_map(|s| s.iter())
+            .fold(0.0f64, |a, &x| a.max(x.abs()));
+        MagnitudeEnvelope { max_abs, terms, norm_events }
+    }
+}
+
+/// Why a tier was skipped during resolution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EscalateReason {
+    /// Block/product exponents fall outside ±(2^{ω_f−1}−1).
+    ExponentRange,
+    /// `terms · 2^{2·sig}` exceeds the signed budget `2^{m_bits−2}`.
+    AccumulatorOverflow,
+    /// The tier's composed relative budget exceeds the job's tolerance.
+    BoundAboveTolerance,
+}
+
+/// Outcome of tier resolution for one request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Resolution {
+    /// The tier the job will run on.
+    pub tier: Tier,
+    /// How many tiers the request was bumped past its requested tier.
+    pub escalations: u32,
+    /// False iff even the top tier failed a coverage check (the job
+    /// still runs there, best effort — the caller decides whether a
+    /// saturated resolution is acceptable).
+    pub covered: bool,
+    /// The check the *requested* tier failed (None when it covered).
+    pub reason: Option<EscalateReason>,
+}
+
+/// `ceil(log2(n))` for `n ≥ 1` (0 for 0 and 1).
+fn ceil_log2(n: u64) -> u32 {
+    n.max(1).next_power_of_two().trailing_zeros()
+}
+
+/// A tier's a-priori relative-error budget for an envelope: RMS-model
+/// encode quantization (`√terms · 2^{1−sig}`) plus the composed Lemma 2
+/// budget over the envelope's normalization-event estimate.
+pub fn tier_rel_bound(cfg: &HrfnaConfig, env: &MagnitudeEnvelope) -> f64 {
+    let quant = (env.terms.max(1) as f64).sqrt() * pow2(1 - cfg.sig_bits as i32);
+    quant + composed_rel_bound(env.norm_events, cfg.scale_step, cfg.tau_bits)
+}
+
+/// Check one tier configuration against an envelope and tolerance.
+pub fn tier_covers(
+    cfg: &HrfnaConfig,
+    env: &MagnitudeEnvelope,
+    tolerance: Option<f64>,
+) -> Result<(), EscalateReason> {
+    // Exponent legality: f = ⌊log2 max|x|⌋ − sig + 1; operands and their
+    // pairwise products (exponent 2f) must stay inside ±(2^{ω_f−1}−1).
+    if env.max_abs > 0.0 {
+        let e = env.max_abs.log2().floor() as i64;
+        let f = e - cfg.sig_bits as i64 + 1;
+        let limit = (1i64 << (cfg.exponent_width - 1)) - 1;
+        if f.abs() > limit || (2 * f).abs() > limit {
+            return Err(EscalateReason::ExponentRange);
+        }
+    }
+    // Accumulator legality: the planar kernels add `terms` products of
+    // two sig-bit mantissas carry-free; the exact signed sum must stay
+    // below 2^{m_bits−2} < M/2 (the shared signed budget).
+    let acc_bits = 2 * cfg.sig_bits + ceil_log2(env.terms) + 1;
+    if f64::from(acc_bits) >= cfg.m_bits() - 2.0 {
+        return Err(EscalateReason::AccumulatorOverflow);
+    }
+    if let Some(tol) = tolerance {
+        if tier_rel_bound(cfg, env) > tol {
+            return Err(EscalateReason::BoundAboveTolerance);
+        }
+    }
+    Ok(())
+}
+
+/// The registry: one lazily-built immutable context per tier. Shared
+/// `Arc` so every lane worker of a tier sees the same counters.
+#[derive(Debug)]
+pub struct ContextRegistry {
+    cfgs: [HrfnaConfig; 3],
+    slots: [OnceLock<Arc<HrfnaContext>>; 3],
+}
+
+impl Default for ContextRegistry {
+    fn default() -> ContextRegistry {
+        ContextRegistry::new()
+    }
+}
+
+impl ContextRegistry {
+    /// Registry over the three preset tiers.
+    pub fn new() -> ContextRegistry {
+        ContextRegistry {
+            cfgs: [Tier::Lo.config(), Tier::Paper.config(), Tier::Wide.config()],
+            slots: [OnceLock::new(), OnceLock::new(), OnceLock::new()],
+        }
+    }
+
+    /// Registry whose *base* ([`Tier::Paper`]) slot serves a caller
+    /// configuration (the `hrfna serve --config` path); `lo`/`wide`
+    /// keep their presets. The config must validate.
+    pub fn with_base(cfg: HrfnaConfig) -> ContextRegistry {
+        assert!(cfg.validate().is_ok(), "invalid base config for registry");
+        ContextRegistry {
+            cfgs: [Tier::Lo.config(), cfg, Tier::Wide.config()],
+            slots: [OnceLock::new(), OnceLock::new(), OnceLock::new()],
+        }
+    }
+
+    /// The tier's static configuration (never constructs the context).
+    #[inline]
+    pub fn cfg(&self, tier: Tier) -> &HrfnaConfig {
+        &self.cfgs[tier.index()]
+    }
+
+    /// The tier's context, built exactly once on first use.
+    pub fn get(&self, tier: Tier) -> Arc<HrfnaContext> {
+        Arc::clone(self.slots[tier.index()].get_or_init(|| {
+            Arc::new(HrfnaContext::new(self.cfgs[tier.index()].clone()))
+        }))
+    }
+
+    /// The tier's context if it has been constructed (metrics seeding
+    /// and accounting must not force a tier into existence).
+    pub fn peek(&self, tier: Tier) -> Option<Arc<HrfnaContext>> {
+        self.slots[tier.index()].get().map(Arc::clone)
+    }
+
+    /// Resolve the cheapest tier at or above `requested` whose bounds
+    /// cover the envelope/tolerance. Saturates at [`Tier::Wide`] (best
+    /// effort) with `covered = false` when even it fails a check.
+    pub fn resolve(
+        &self,
+        requested: Tier,
+        env: &MagnitudeEnvelope,
+        tolerance: Option<f64>,
+    ) -> Resolution {
+        let mut tier = requested;
+        let mut escalations = 0u32;
+        let mut first_reason = None;
+        loop {
+            match tier_covers(self.cfg(tier), env, tolerance) {
+                Ok(()) => {
+                    return Resolution { tier, escalations, covered: true, reason: first_reason }
+                }
+                Err(reason) => {
+                    if first_reason.is_none() {
+                        first_reason = Some(reason);
+                    }
+                    match tier.next() {
+                        Some(up) => {
+                            tier = up;
+                            escalations += 1;
+                        }
+                        None => {
+                            return Resolution {
+                                tier,
+                                escalations,
+                                covered: false,
+                                reason: first_reason,
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hybrid::Hrfna;
+    use crate::util::prng::Rng;
+    use crate::workloads::generators::Dist;
+
+    fn env(max_abs: f64, terms: u64, events: u64) -> MagnitudeEnvelope {
+        MagnitudeEnvelope { max_abs, terms, norm_events: events }
+    }
+
+    #[test]
+    fn tiers_enumerate_in_escalation_order() {
+        assert!(Tier::Lo < Tier::Paper && Tier::Paper < Tier::Wide);
+        assert_eq!(Tier::Lo.next(), Some(Tier::Paper));
+        assert_eq!(Tier::Wide.next(), None);
+        for (i, t) in Tier::ALL.iter().enumerate() {
+            assert_eq!(t.index(), i);
+            assert_eq!(Tier::from_label(t.label()), Some(*t));
+        }
+        assert_eq!(Tier::from_label("nope"), None);
+    }
+
+    #[test]
+    fn contexts_are_lazy_and_shared() {
+        let reg = ContextRegistry::new();
+        assert!(reg.peek(Tier::Wide).is_none(), "no context before first get");
+        let a = reg.get(Tier::Paper);
+        let b = reg.get(Tier::Paper);
+        assert!(Arc::ptr_eq(&a, &b), "one context per tier");
+        assert!(reg.peek(Tier::Paper).is_some());
+        assert!(reg.peek(Tier::Lo).is_none(), "get(paper) must not build lo");
+        assert_eq!(a.cfg, Tier::Paper.config());
+    }
+
+    #[test]
+    fn concurrent_get_initializes_each_tier_exactly_once() {
+        // Thread-race the first construction of every tier: all racers
+        // must observe the *same* Arc (OnceLock admits one winner; the
+        // losers' closures are discarded, never stored).
+        let reg = std::sync::Arc::new(ContextRegistry::new());
+        let handles: Vec<_> = (0..12)
+            .map(|i| {
+                let reg = std::sync::Arc::clone(&reg);
+                std::thread::spawn(move || {
+                    let tier = Tier::ALL[i % 3];
+                    (tier, reg.get(tier))
+                })
+            })
+            .collect();
+        let got: Vec<(Tier, Arc<HrfnaContext>)> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for tier in Tier::ALL {
+            let canonical = reg.get(tier);
+            for (t, ctx) in got.iter().filter(|(t, _)| *t == tier) {
+                assert!(Arc::ptr_eq(ctx, &canonical), "{t:?} racer saw a second context");
+            }
+            assert_eq!(canonical.cfg, *reg.cfg(tier));
+        }
+    }
+
+    #[test]
+    fn per_tier_counters_are_independent() {
+        let reg = ContextRegistry::new();
+        let lo = reg.get(Tier::Lo);
+        let paper = reg.get(Tier::Paper);
+        HrfnaContext::count(&lo.counters.muls);
+        assert_eq!(lo.snapshot().muls, 1);
+        assert_eq!(paper.snapshot().muls, 0, "tiers share no counters");
+    }
+
+    #[test]
+    fn paper_tier_bit_identical_to_standalone_context() {
+        // Regression pin (pre-refactor single-context path): encoding
+        // through the registry's paper tier must reproduce the residues,
+        // exponent and interval of a standalone paper context bit for
+        // bit — including through a multiply and a dot.
+        let reg = ContextRegistry::new();
+        let via_reg = reg.get(Tier::Paper);
+        let standalone = HrfnaContext::new(HrfnaConfig::paper_default());
+        assert_eq!(via_reg.cfg, standalone.cfg);
+        let mut rng = Rng::new(314);
+        let xs = Dist::high_dynamic_range().sample_vec(&mut rng, 64);
+        let ys = Dist::moderate().sample_vec(&mut rng, 64);
+        for (&x, &y) in xs.iter().zip(&ys) {
+            let a = Hrfna::encode(x, &via_reg);
+            let b = Hrfna::encode(x, &standalone);
+            assert_eq!(a.r.r, b.r.r, "residues diverged for {x}");
+            assert_eq!(a.f, b.f);
+            assert_eq!(a.iv.lo.to_bits(), b.iv.lo.to_bits());
+            assert_eq!(a.iv.hi.to_bits(), b.iv.hi.to_bits());
+            let pa = a.mul(&Hrfna::encode(y, &via_reg), &via_reg);
+            let pb = b.mul(&Hrfna::encode(y, &standalone), &standalone);
+            assert_eq!(pa.r.r, pb.r.r);
+            assert_eq!(pa.f, pb.f);
+            assert_eq!(pa.decode(&via_reg).to_bits(), pb.decode(&standalone).to_bits());
+        }
+        let ea: Vec<Hrfna> = xs.iter().map(|&v| Hrfna::encode(v, &via_reg)).collect();
+        let eb: Vec<Hrfna> = ys.iter().map(|&v| Hrfna::encode(v, &via_reg)).collect();
+        let sa: Vec<Hrfna> = xs.iter().map(|&v| Hrfna::encode(v, &standalone)).collect();
+        let sb: Vec<Hrfna> = ys.iter().map(|&v| Hrfna::encode(v, &standalone)).collect();
+        let d_reg = crate::workloads::dot::dot_product_encoded::<Hrfna>(&ea, &eb, &via_reg);
+        let d_std = crate::workloads::dot::dot_product_encoded::<Hrfna>(&sa, &sb, &standalone);
+        assert_eq!(d_reg.r.r, d_std.r.r);
+        assert_eq!(d_reg.f, d_std.f);
+        assert_eq!(
+            d_reg.decode(&via_reg).to_bits(),
+            d_std.decode(&standalone).to_bits()
+        );
+    }
+
+    #[test]
+    fn cross_tier_decodes_stay_within_each_tiers_bound() {
+        // Identical inputs run under every tier must each stay within
+        // that tier's composed relative budget (quantization + measured
+        // Lemma 2 events) against the f64 reference.
+        let reg = ContextRegistry::new();
+        let mut rng = Rng::new(99);
+        for trial in 0..8 {
+            let n = 32 + rng.below(200) as usize;
+            let xs = Dist::moderate().sample_vec(&mut rng, n);
+            let ys = Dist::moderate().sample_vec(&mut rng, n);
+            let want: f64 = xs.iter().zip(&ys).map(|(a, b)| a * b).sum();
+            // Scale vs Σ|x·y| so cancellation does not inflate the metric
+            // past what a relative bound can promise.
+            let scale: f64 = xs.iter().zip(&ys).map(|(a, b)| (a * b).abs()).sum();
+            for tier in Tier::ALL {
+                let ctx = reg.get(tier);
+                let before = ctx.snapshot();
+                let ex: Vec<Hrfna> = xs.iter().map(|&v| Hrfna::encode(v, &ctx)).collect();
+                let ey: Vec<Hrfna> = ys.iter().map(|&v| Hrfna::encode(v, &ctx)).collect();
+                let got =
+                    crate::workloads::dot::dot_product_encoded::<Hrfna>(&ex, &ey, &ctx)
+                        .decode(&ctx);
+                let d = ctx.snapshot().since(&before);
+                let budget = tier_rel_bound(
+                    reg.cfg(tier),
+                    &env(1.0, n as u64, d.norms + d.guard_norms),
+                );
+                assert!(
+                    (got - want).abs() <= budget * scale.max(1e-300),
+                    "trial {trial} tier {tier:?}: |{got}-{want}| over {budget:e}·{scale}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn resolve_prefers_the_requested_tier_when_it_covers() {
+        let reg = ContextRegistry::new();
+        let r = reg.resolve(Tier::Lo, &env(1.0, 512, 0), None);
+        assert_eq!(
+            r,
+            Resolution { tier: Tier::Lo, escalations: 0, covered: true, reason: None }
+        );
+        let r = reg.resolve(Tier::Paper, &env(1.0, 4096, 0), Some(1e-6));
+        assert_eq!(r.tier, Tier::Paper);
+        assert_eq!(r.escalations, 0);
+    }
+
+    #[test]
+    fn tolerance_below_lo_budget_escalates_to_paper() {
+        let reg = ContextRegistry::new();
+        // lo budget at 512 terms ≈ √512·2^-17 ≈ 1.7e-4; 1e-7 needs paper.
+        let r = reg.resolve(Tier::Lo, &env(1.0, 512, 0), Some(1e-7));
+        assert_eq!(r.tier, Tier::Paper);
+        assert_eq!(r.escalations, 1);
+        assert!(r.covered);
+        assert_eq!(r.reason, Some(EscalateReason::BoundAboveTolerance));
+        // 1e-12 is below paper's ≈ √512·2^-29 ≈ 4e-8 budget too → wide
+        // (whose √512·2^-47 ≈ 1.6e-13 budget covers it).
+        let r = reg.resolve(Tier::Lo, &env(1.0, 512, 0), Some(1e-12));
+        assert_eq!(r.tier, Tier::Wide);
+        assert_eq!(r.escalations, 2);
+        assert!(r.covered);
+    }
+
+    #[test]
+    fn accumulator_overflow_escalates() {
+        let reg = ContextRegistry::new();
+        // lo: 2·18 + ceil_log2(terms) + 1 must stay under m_bits−2 ≈ 62;
+        // 2^40 terms pushes it to 77 → overflow; paper (budget ~126) fits.
+        let r = reg.resolve(Tier::Lo, &env(1.0, 1 << 40, 0), None);
+        assert_eq!(r.tier, Tier::Paper);
+        assert_eq!(r.reason, Some(EscalateReason::AccumulatorOverflow));
+        assert!(r.covered);
+    }
+
+    #[test]
+    fn exponent_range_escalates_subnormal_magnitudes() {
+        let reg = ContextRegistry::new();
+        // lo: ω=12 → limit 2047; |2f| for a 2^-1022 operand is ≈ 2078.
+        let r = reg.resolve(Tier::Lo, &env(f64::MIN_POSITIVE, 8, 0), None);
+        assert!(r.tier > Tier::Lo, "subnormal-scale input must leave lo");
+        assert_eq!(r.reason, Some(EscalateReason::ExponentRange));
+    }
+
+    #[test]
+    fn impossible_tolerance_saturates_at_wide() {
+        let reg = ContextRegistry::new();
+        let r = reg.resolve(Tier::Lo, &env(1.0, 4096, 0), Some(1e-30));
+        assert_eq!(r.tier, Tier::Wide);
+        assert_eq!(r.escalations, 2);
+        assert!(!r.covered, "no tier promises 1e-30");
+    }
+
+    #[test]
+    fn with_base_replaces_only_the_paper_slot() {
+        let cfg = HrfnaConfig {
+            tau_bits: 100,
+            ..HrfnaConfig::paper_default()
+        };
+        let reg = ContextRegistry::with_base(cfg.clone());
+        assert_eq!(reg.cfg(Tier::Paper), &cfg);
+        assert_eq!(reg.cfg(Tier::Lo), &Tier::Lo.config());
+        assert_eq!(reg.cfg(Tier::Wide), &Tier::Wide.config());
+        assert_eq!(reg.get(Tier::Paper).cfg.tau_bits, 100);
+    }
+
+    #[test]
+    fn envelope_of_slices_takes_the_max_abs() {
+        let a = [1.0, -3.5, 0.25];
+        let b = [2.0, 0.5];
+        let e = MagnitudeEnvelope::of_slices(&[&a, &b], 3, 0);
+        assert_eq!(e.max_abs, 3.5);
+        assert_eq!(e.terms, 3);
+        // Zero payloads cover everywhere (no exponent to overflow).
+        assert!(tier_covers(&Tier::Lo.config(), &env(0.0, 4, 0), None).is_ok());
+    }
+
+    #[test]
+    fn ceil_log2_values() {
+        assert_eq!(ceil_log2(0), 0);
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(4096), 12);
+        assert_eq!(ceil_log2(4097), 13);
+    }
+}

@@ -32,8 +32,9 @@
 //! * [`runtime`] — execution engine: PJRT loader/executor for the AOT HLO
 //!   artifacts (`--features xla`) or the pure-Rust software backend
 //!   (default, offline).
-//! * [`coordinator`] — request router, fixed-shape batcher, scheduler,
-//!   metrics, server loop (Layer 3).
+//! * [`coordinator`] — request router with precision-tier resolution
+//!   over the [`hybrid::ContextRegistry`], fixed-shape batcher,
+//!   scheduler, per-tier metrics, server loop (Layer 3).
 //! * [`config`] — typed configuration + TOML-subset parser + presets.
 
 pub mod util;

@@ -11,7 +11,7 @@
 
 use hrfna::baselines::{Bfp, BfpConfig};
 use hrfna::config::HrfnaConfig;
-use hrfna::coordinator::{Coordinator, CoordinatorConfig, JobKind, Payload};
+use hrfna::coordinator::{ContextRegistry, Coordinator, CoordinatorConfig, JobKind, Payload};
 use hrfna::fpga::pipeline::{model_workload, speedup, WorkloadKind};
 use hrfna::fpga::report;
 use hrfna::fpga::resources::FormatArch;
@@ -43,7 +43,7 @@ fn main() {
             }
             eprintln!(
                 "usage: hrfna <info|dot|matmul|rk4|resources|tables|serve> \
-                 [--preset paper|low-precision|stress-norm] [--config file.toml] ..."
+                 [--preset paper|low-precision|stress-norm|wide] [--config file.toml] ..."
             );
             std::process::exit(2);
         }
@@ -144,8 +144,10 @@ fn cmd_tables() {
 fn cmd_serve(args: &Args, cfg: &HrfnaConfig) {
     let jobs = args.parse_or("jobs", 200usize);
     let engine = EngineHandle::spawn(None).expect("engine (run `make artifacts`)");
-    let ctx = Arc::new(HrfnaContext::new(cfg.clone()));
-    let coord = Coordinator::start(engine, ctx, CoordinatorConfig::default());
+    // The CLI-selected config becomes the registry's base (paper-slot)
+    // tier; `lo`/`wide` keep their presets for escalation headroom.
+    let registry = Arc::new(ContextRegistry::with_base(cfg.clone()));
+    let coord = Coordinator::start(engine, registry, CoordinatorConfig::default());
     let mut rng = Rng::new(7);
     let mut pending = Vec::new();
     for i in 0..jobs {

@@ -7,8 +7,38 @@ use super::traits::Numeric;
 use crate::util::stats;
 
 /// Direct-form FIR: `y[n] = Σ_i h[i] · x[n-i]` in format `N`.
-/// Taps and signal are encoded once; each output is a MAC chain.
+///
+/// Taps and signal are encoded **once**, outside the output loop; the
+/// signal is additionally staged in reverse so every output is one
+/// *contiguous* sliding window, routed through the format's batched
+/// [`Numeric::dot_encoded`] fast path (HRFNA: the planar lane kernels —
+/// one exact residue accumulation and one CRT per output instead of a
+/// per-output scalar MAC chain). [`fir_filter_scalar`] keeps the
+/// per-output MAC loop as the bit-identity reference.
 pub fn fir_filter<N: Numeric>(taps: &[f64], signal: &[f64], ctx: &N::Ctx) -> Vec<f64> {
+    assert!(!taps.is_empty());
+    let len = signal.len();
+    let eh: Vec<N> = taps.iter().map(|&t| N::from_f64(t, ctx)).collect();
+    // exr[j] = encode(x[len-1-j]): the window for output n is then the
+    // contiguous slice exr[len-1-n ..][..w] paired with eh[..w].
+    let exr: Vec<N> = signal
+        .iter()
+        .rev()
+        .map(|&s| N::from_f64(s, ctx))
+        .collect();
+    (0..len)
+        .map(|n| {
+            let w = taps.len().min(n + 1);
+            let start = len - 1 - n;
+            N::dot_encoded(&eh[..w], &exr[start..start + w], ctx).to_f64(ctx)
+        })
+        .collect()
+}
+
+/// The pre-planar reference: encode once, then one scalar MAC chain per
+/// output. Kept as the datapath [`fir_filter`] is bit-identity-tested
+/// against (same term set, same order).
+pub fn fir_filter_scalar<N: Numeric>(taps: &[f64], signal: &[f64], ctx: &N::Ctx) -> Vec<f64> {
     assert!(!taps.is_empty());
     let eh: Vec<N> = taps.iter().map(|&t| N::from_f64(t, ctx)).collect();
     let ex: Vec<N> = signal.iter().map(|&s| N::from_f64(s, ctx)).collect();
@@ -99,6 +129,36 @@ mod tests {
         let ctx = HrfnaContext::paper_default();
         let rel = fir_rms_error::<Hrfna>(32, 256, 9, &ctx);
         assert!(rel < 1e-6, "rel={rel}");
+    }
+
+    #[test]
+    fn planar_fir_bit_identical_to_scalar_mac_loop() {
+        // The windowed `dot_encoded` path must reproduce the per-output
+        // scalar MAC chain bit for bit: same term set in the same order,
+        // exact residue accumulation on both paths (no normalization at
+        // these magnitudes), one decode each. Covers the partial windows
+        // at the signal head, f64 and HRFNA.
+        let ctx = HrfnaContext::paper_default();
+        let taps = lowpass_taps(16, 0.2);
+        let mut rng = crate::util::prng::Rng::new(77);
+        for len in [1usize, 5, 16, 17, 64] {
+            let signal: Vec<f64> = (0..len)
+                .map(|_| rng.uniform(-2.0, 2.0))
+                .collect();
+            let fast = fir_filter::<Hrfna>(&taps, &signal, &ctx);
+            let slow = fir_filter_scalar::<Hrfna>(&taps, &signal, &ctx);
+            assert_eq!(fast.len(), slow.len());
+            for (n, (a, b)) in fast.iter().zip(&slow).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "len={len} output {n}: {a} vs {b}"
+                );
+            }
+            let fast64 = fir_filter::<f64>(&taps, &signal, &());
+            let slow64 = fir_filter_scalar::<f64>(&taps, &signal, &());
+            assert_eq!(fast64, slow64);
+        }
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! from distributions designed to exercise both moderate and high dynamic
 //! range, ensuring that normalization is triggered but not excessively").
 
+use crate::hybrid::registry::Tier;
 use crate::util::prng::Rng;
 
 /// Operand distribution.
@@ -92,6 +93,19 @@ impl ServeMix {
         let rng = Rng::new(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ i as u64);
         (i % 10, rng)
     }
+
+    /// Requested precision tier for request `i` of a mixed-tier stream:
+    /// 30% `lo`, 50% `paper`, 20% `wide` — deterministic, and phased
+    /// against the 10-slot kind cycle (the `i / 10` term advances the
+    /// tier residue between same-slot requests) so every lane kind sees
+    /// every tier over a stream.
+    pub fn tier_for(&self, i: usize) -> Tier {
+        match (i % 10 + i / 10) % 10 {
+            0..=2 => Tier::Lo,
+            3..=7 => Tier::Paper,
+            _ => Tier::Wide,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -113,6 +127,22 @@ mod tests {
             mix.dist.sample_vec(&mut rng_a, 8),
             mix.dist.sample_vec(&mut rng_c, 8)
         );
+    }
+
+    #[test]
+    fn tier_mix_hits_every_tier_and_is_deterministic() {
+        let mix = ServeMix::default_mix();
+        let mut counts = [0usize; 3];
+        for i in 0..100 {
+            assert_eq!(mix.tier_for(i), mix.tier_for(i));
+            counts[mix.tier_for(i).index()] += 1;
+        }
+        assert_eq!(counts, [30, 50, 20], "3:5:2 lo/paper/wide mix");
+        // Phased against the 10-slot kind cycle: one kind slot must see
+        // more than one tier across a stream.
+        let tiers: std::collections::BTreeSet<_> =
+            (0..100).step_by(10).map(|i| mix.tier_for(i)).collect();
+        assert!(tiers.len() > 1);
     }
 
     #[test]

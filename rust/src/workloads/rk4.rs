@@ -5,6 +5,15 @@
 
 use super::traits::Numeric;
 
+/// MAC-equivalent cost of one RK4 step of a 2-D nonlinear field (§V
+/// timing model and the serving throughput metric): four vector-field
+/// evaluations of ~7 format ops each plus the 4-term weighted state
+/// update, ≈ 40 scalar MAC-equivalents. Shared by
+/// [`crate::fpga::pipeline::WorkloadKind::Rk4`] and
+/// [`crate::coordinator::Payload::macs`] so the hardware model and the
+/// served workload price a step identically and cannot drift.
+pub const RK4_MACS_PER_STEP: u64 = 40;
+
 /// Test ODEs (paper: "a nonlinear ordinary differential equation").
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Ode {

@@ -4,12 +4,11 @@
 //! must complete, and shutdown must drain queued work before joining the
 //! workers — with the drain report accounting for every job.
 
-use hrfna::config::HrfnaConfig;
 use hrfna::coordinator::batcher::BatchPolicy;
 use hrfna::coordinator::{
-    Coordinator, CoordinatorConfig, ExecMode, JobKind, Payload, SubmitError,
+    ContextRegistry, Coordinator, CoordinatorConfig, ExecMode, JobKind, JobSpec, Payload,
+    SubmitError,
 };
-use hrfna::hybrid::HrfnaContext;
 use hrfna::runtime::EngineHandle;
 use hrfna::util::prng::Rng;
 use hrfna::workloads::generators::Dist;
@@ -18,10 +17,9 @@ use std::time::Duration;
 
 fn coordinator(batch: BatchPolicy, workers_per_lane: usize) -> Coordinator {
     let engine = EngineHandle::spawn(None).expect("engine load");
-    let ctx = Arc::new(HrfnaContext::new(HrfnaConfig::paper_default()));
     Coordinator::start(
         engine,
-        ctx,
+        Arc::new(ContextRegistry::new()),
         CoordinatorConfig {
             workers_per_lane,
             batch,
@@ -176,7 +174,7 @@ fn open_loop_overload_is_bounded_and_recovers() {
     // rather than queue without bound, and shed jobs must not break the
     // accepted ones.
     let report = open_loop(&coord, 300, 50_000.0, &|_, _| {
-        (JobKind::DotHybrid, Payload::Dot { x: x.clone(), y: y.clone() })
+        JobSpec::new(JobKind::DotHybrid, Payload::Dot { x: x.clone(), y: y.clone() })
     });
     assert_eq!(report.offered, 300);
     assert_eq!(report.accepted + report.rejected, 300);

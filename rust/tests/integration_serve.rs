@@ -7,7 +7,7 @@
 use hrfna::config::HrfnaConfig;
 use hrfna::coordinator::batcher::BatchPolicy;
 use hrfna::coordinator::{
-    Coordinator, CoordinatorConfig, ExecMode, JobKind, Payload,
+    ContextRegistry, Coordinator, CoordinatorConfig, ExecMode, JobKind, Payload, Tier,
 };
 use hrfna::hybrid::HrfnaContext;
 use hrfna::runtime::EngineHandle;
@@ -19,10 +19,9 @@ use std::time::Duration;
 
 fn coordinator_with(exec: ExecMode) -> Coordinator {
     let engine = EngineHandle::spawn(None).expect("engine load");
-    let ctx = Arc::new(HrfnaContext::new(HrfnaConfig::paper_default()));
     Coordinator::start(
         engine,
-        ctx,
+        Arc::new(ContextRegistry::new()),
         CoordinatorConfig {
             workers_per_lane: 2,
             batch: BatchPolicy {
@@ -61,6 +60,8 @@ fn serves_correct_dot_products_both_lanes() {
                 r.values[0]
             );
             assert!(r.latency_us > 0.0);
+            // The plain submit path is paper-tier by construction.
+            assert_eq!(r.tier, Tier::Paper);
         }
     }
     let drain = coord.shutdown();

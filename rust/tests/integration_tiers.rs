@@ -1,0 +1,319 @@
+//! Integration: the precision-tier registry end to end — mixed-tier
+//! traffic over one coordinator, per-tier metrics rows, bound-driven
+//! escalation, the paper-tier bit-identity pin against the pre-refactor
+//! single-context serving path, and two-tier concurrent saturation.
+
+use hrfna::config::HrfnaConfig;
+use hrfna::coordinator::batcher::BatchPolicy;
+use hrfna::coordinator::hybrid_exec::{encode_dot_batch, planar_dot_results};
+use hrfna::coordinator::{
+    ContextRegistry, Coordinator, CoordinatorConfig, ExecMode, JobKind, JobSpec, Payload,
+    SubmitError, Tier,
+};
+use hrfna::hybrid::registry::{tier_rel_bound, MagnitudeEnvelope};
+use hrfna::hybrid::{Hrfna, HrfnaContext};
+use hrfna::runtime::EngineHandle;
+use hrfna::util::prng::Rng;
+use hrfna::workloads::dot::dot_product_encoded_scalar;
+use hrfna::workloads::generators::Dist;
+use hrfna::workloads::rk4::{rk4_final_state, Ode};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn coordinator_with(exec: ExecMode, batch: BatchPolicy, workers_per_lane: usize) -> Coordinator {
+    let engine = EngineHandle::spawn(None).expect("engine load");
+    Coordinator::start(
+        engine,
+        Arc::new(ContextRegistry::new()),
+        CoordinatorConfig {
+            workers_per_lane,
+            batch,
+            exec,
+            ..CoordinatorConfig::default()
+        },
+    )
+}
+
+fn coordinator() -> Coordinator {
+    coordinator_with(
+        ExecMode::Planar,
+        BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            ..BatchPolicy::default()
+        },
+        2,
+    )
+}
+
+#[test]
+fn mixed_tier_traffic_serves_correctly_with_per_tier_rows() {
+    let coord = Arc::new(coordinator());
+    let mut handles = Vec::new();
+    for t in 0..3u64 {
+        let coord = Arc::clone(&coord);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(500 + t);
+            for i in 0..12 {
+                let tier = Tier::ALL[(t as usize + i) % 3];
+                let n = 64 + rng.below(400) as usize;
+                let x = Dist::moderate().sample_vec(&mut rng, n);
+                let y = Dist::moderate().sample_vec(&mut rng, n);
+                let want: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+                let scale: f64 = x.iter().zip(&y).map(|(a, b)| (a * b).abs()).sum();
+                let env = MagnitudeEnvelope::of_slices(&[&x, &y], n as u64, 0);
+                let r = coord
+                    .call_spec(JobSpec::new(JobKind::DotHybrid, Payload::Dot { x, y }).with_tier(tier))
+                    .expect("tiered dot");
+                assert_eq!(r.tier, tier, "moderate dot must run on its requested tier");
+                let budget = tier_rel_bound(coord.registry().cfg(tier), &env);
+                assert!(
+                    (r.values[0] - want).abs() <= budget * scale.max(1e-300),
+                    "thread {t} job {i} tier {tier:?}: {} vs {want}",
+                    r.values[0]
+                );
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    // Every tier served jobs, on its own metrics row.
+    for tier in Tier::ALL {
+        assert_eq!(
+            coord.metrics.jobs_tier(JobKind::DotHybrid, tier),
+            12,
+            "{tier:?} row"
+        );
+    }
+    assert_eq!(coord.metrics.jobs(JobKind::DotHybrid), 36);
+    assert_eq!(coord.metrics.total_escalations(), 0);
+    let table = coord.metrics_table().render();
+    for tier in Tier::ALL {
+        assert!(table.contains(&format!("dot/hrfna@{}", tier.label())), "{table}");
+    }
+    let coord = Arc::try_unwrap(coord).unwrap_or_else(|_| panic!("sole owner"));
+    let drain = coord.shutdown();
+    assert!(drain.is_clean(), "{drain}");
+}
+
+#[test]
+fn tolerance_and_envelope_escalation_fire_and_are_counted() {
+    let coord = coordinator();
+    let mut rng = Rng::new(9);
+    let x = Dist::moderate().sample_vec(&mut rng, 512);
+    let y = Dist::moderate().sample_vec(&mut rng, 512);
+    // A 1e-7 tolerance is below lo's √n·2^-17 budget and inside paper's.
+    let r = coord
+        .call_spec(
+            JobSpec::new(JobKind::DotHybrid, Payload::Dot { x: x.clone(), y: y.clone() })
+                .with_tier(Tier::Lo)
+                .with_tolerance(1e-7),
+        )
+        .expect("escalated dot");
+    assert_eq!(r.tier, Tier::Paper);
+    let want: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+    assert!((r.values[0] - want).abs() <= 1e-6 * want.abs().max(1.0));
+    assert_eq!(coord.metrics.escalations_tier(JobKind::DotHybrid, Tier::Paper), 1);
+    // Subnormal-scale magnitudes overflow lo's ω=12 exponent range.
+    let tiny = vec![f64::MIN_POSITIVE; 64];
+    let r = coord
+        .call_spec(
+            JobSpec::new(
+                JobKind::DotHybrid,
+                Payload::Dot { x: tiny.clone(), y: tiny },
+            )
+            .with_tier(Tier::Lo),
+        )
+        .expect("envelope-escalated dot");
+    assert!(r.tier > Tier::Lo, "exponent-range overflow must leave lo");
+    assert!(coord.metrics.total_escalations() >= 2);
+    // A tolerance not even wide's bound covers is REJECTED with a typed
+    // error, never silently served outside its stated tolerance.
+    let err = coord
+        .submit_spec(
+            JobSpec::new(JobKind::DotHybrid, Payload::Dot { x: x.clone(), y: y.clone() })
+                .with_tolerance(1e-30),
+        )
+        .expect_err("uncoverable tolerance must be rejected");
+    assert!(matches!(err, SubmitError::Rejected(_)), "{err}");
+    assert!(err.to_string().contains("formal bound"), "{err}");
+    // Escalations land in the table's `esc` column.
+    let table = coord.metrics_table().render();
+    assert!(table.contains("esc"));
+    let drain = coord.shutdown();
+    assert!(drain.is_clean(), "{drain}");
+}
+
+#[test]
+fn paper_tier_bit_identical_to_pre_refactor_single_context_path() {
+    // The registry refactor must not perturb the default serving path by
+    // one bit: paper-tier results served through the registry equal what
+    // the pre-refactor coordinator computed from its single
+    // `HrfnaContext::paper_default()` — reproduced here by running the
+    // same planar pipeline (block encode → lane dot → batched CRT) and
+    // the scalar reference pipeline directly on a standalone context.
+    let standalone = HrfnaContext::new(HrfnaConfig::paper_default());
+    let mut rng = Rng::new(2027);
+    let n = 512; // exact bucket size: admission pads nothing
+    let jobs: Vec<(Vec<f64>, Vec<f64>)> = (0..6)
+        .map(|_| {
+            (
+                Dist::high_dynamic_range().sample_vec(&mut rng, n),
+                Dist::moderate().sample_vec(&mut rng, n),
+            )
+        })
+        .collect();
+    for exec in [ExecMode::Planar, ExecMode::Scalar] {
+        let coord = coordinator_with(
+            exec,
+            BatchPolicy {
+                max_batch: 3,
+                max_wait: Duration::from_millis(1),
+                ..BatchPolicy::default()
+            },
+            2,
+        );
+        for (x, y) in &jobs {
+            let r = coord
+                .call(JobKind::DotHybrid, Payload::Dot { x: x.clone(), y: y.clone() })
+                .expect("paper dot");
+            assert_eq!(r.tier, Tier::Paper);
+            let want = match exec {
+                ExecMode::Planar => {
+                    let ex = encode_dot_batch(&[x.as_slice()], n, &standalone);
+                    let ey = encode_dot_batch(&[y.as_slice()], n, &standalone);
+                    planar_dot_results(&ex, &ey, &standalone)[0]
+                }
+                ExecMode::Scalar => {
+                    let ex: Vec<Hrfna> =
+                        x.iter().map(|&v| Hrfna::encode(v, &standalone)).collect();
+                    let ey: Vec<Hrfna> =
+                        y.iter().map(|&v| Hrfna::encode(v, &standalone)).collect();
+                    dot_product_encoded_scalar::<Hrfna>(&ex, &ey, &standalone)
+                        .decode(&standalone)
+                }
+            };
+            assert_eq!(
+                r.values[0].to_bits(),
+                want.to_bits(),
+                "{exec:?}: served {} != pre-refactor {want}",
+                r.values[0]
+            );
+        }
+        assert!(coord.shutdown().is_clean());
+    }
+}
+
+#[test]
+fn rk4_tier_results_match_the_tier_context_scalar_reference() {
+    let coord = coordinator();
+    let (mu, dt, steps) = (1.0, 0.01, 150u64);
+    for tier in [Tier::Lo, Tier::Wide] {
+        let y0 = vec![1.5, -0.5];
+        let r = coord
+            .call_spec(
+                JobSpec::new(
+                    JobKind::Rk4Hybrid,
+                    Payload::Rk4 { y0: y0.clone(), mu, dt, steps },
+                )
+                .with_tier(tier),
+            )
+            .expect("tiered rk4");
+        assert_eq!(r.tier, tier);
+        // The planar batch mirrors the scalar ops exactly under the same
+        // context, so the served result equals the tier's scalar
+        // reference bit for bit.
+        let ctx = coord.registry().get(tier);
+        let want = rk4_final_state::<Hrfna>(&Ode::VanDerPol { mu }, &y0, dt, steps, &ctx);
+        assert_eq!(r.values, want, "{tier:?}");
+    }
+    // Both tier contexts were actually constructed (and only on demand).
+    assert!(coord.registry().peek(Tier::Lo).is_some());
+    assert!(coord.registry().peek(Tier::Wide).is_some());
+    let drain = coord.shutdown();
+    assert!(drain.is_clean(), "{drain}");
+}
+
+#[test]
+fn two_tier_concurrent_flood_sheds_per_lane_and_drains_clean() {
+    // Saturation across tiers: flood the lo and wide dot lanes at once
+    // past a 16-deep queue. Each lane sheds with a typed Overloaded that
+    // names its tier, accepted jobs all complete, and the drain report
+    // accounts for every job — the backpressure contract is per lane,
+    // so one tier's flood cannot starve the other of its typed signal.
+    let coord = Arc::new(coordinator_with(
+        ExecMode::Planar,
+        BatchPolicy {
+            max_batch: 64,
+            max_wait: Duration::from_millis(150),
+            capacity: 16,
+        },
+        1,
+    ));
+    let mut rng = Rng::new(31);
+    let x = Dist::moderate().sample_vec(&mut rng, 512);
+    let y = Dist::moderate().sample_vec(&mut rng, 512);
+    let truth: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+    let scale: f64 = x.iter().zip(&y).map(|(a, b)| (a * b).abs()).sum();
+    let env = MagnitudeEnvelope::of_slices(&[&x, &y], 512, 0);
+    let mut handles = Vec::new();
+    for (tid, tier) in [Tier::Lo, Tier::Wide].into_iter().enumerate() {
+        for _ in 0..4 {
+            let coord = Arc::clone(&coord);
+            let (x, y) = (x.clone(), y.clone());
+            handles.push(std::thread::spawn(move || {
+                let mut accepted = Vec::new();
+                let mut overloaded = 0usize;
+                for _ in 0..25 {
+                    let spec = JobSpec::new(
+                        JobKind::DotHybrid,
+                        Payload::Dot { x: x.clone(), y: y.clone() },
+                    )
+                    .with_tier(tier);
+                    match coord.submit_spec(spec) {
+                        Ok(rx) => accepted.push(rx),
+                        Err(SubmitError::Overloaded { tier: t, capacity, .. }) => {
+                            assert_eq!(t, tier, "overload names the flooded tier");
+                            assert!(capacity > 0);
+                            overloaded += 1;
+                        }
+                        Err(e) => panic!("unexpected submit error: {e}"),
+                    }
+                }
+                (tid, accepted, overloaded)
+            }));
+        }
+    }
+    let mut receivers = Vec::new();
+    let mut shed = [0usize; 2];
+    for h in handles {
+        let (tid, rxs, o) = h.join().unwrap();
+        receivers.extend(rxs);
+        shed[tid] += o;
+    }
+    assert!(shed[0] > 0, "lo flood must shed");
+    assert!(shed[1] > 0, "wide flood must shed");
+    assert_eq!(receivers.len() + shed[0] + shed[1], 200);
+    for rx in receivers {
+        let r = rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("accepted job completes");
+        // Each result stays within its own tier's a-priori budget
+        // (lo's quantization is orders of magnitude coarser than wide's).
+        let budget = tier_rel_bound(coord.registry().cfg(r.tier), &env);
+        assert!(
+            (r.values[0] - truth).abs() <= budget * scale,
+            "{:?}: {} vs {truth}",
+            r.tier,
+            r.values[0]
+        );
+    }
+    // Both tiers produced jobs on their own metric rows.
+    assert!(coord.metrics.jobs_tier(JobKind::DotHybrid, Tier::Lo) > 0);
+    assert!(coord.metrics.jobs_tier(JobKind::DotHybrid, Tier::Wide) > 0);
+    assert_eq!(coord.metrics.jobs_tier(JobKind::DotHybrid, Tier::Paper), 0);
+    let coord = Arc::try_unwrap(coord).unwrap_or_else(|_| panic!("sole owner"));
+    let drain = coord.shutdown();
+    assert!(drain.is_clean(), "{drain}");
+}
