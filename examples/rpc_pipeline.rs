@@ -1,0 +1,142 @@
+//! END-TO-END DRIVER over the wire: the full three-layer system behind
+//! the network serving edge. Starts the coordinator, binds the JSON-RPC
+//! server on a loopback port, and drives it purely through the client
+//! library and the socket load generator — pipelined submits, a
+//! streaming batch, mixed-tier traffic, quota sheds, the shutdown RPC —
+//! then verifies wire accounting (every frame, submit and result
+//! counted) and the clean-drain invariant.
+//!
+//! Run: `cargo run --release --features rpc --example rpc_pipeline`
+//! Results recorded in EXPERIMENTS.md §RPC.
+
+use hrfna::coordinator::rpc::{
+    socket_closed_loop, ConnMode, ErrorCode, Json, QuotaConfig, RpcClient, RpcServer,
+    RpcServerConfig,
+};
+use hrfna::coordinator::{
+    ContextRegistry, Coordinator, CoordinatorConfig, JobKind, JobSpec, Payload, Tier,
+};
+use hrfna::runtime::EngineHandle;
+use hrfna::util::cli::Args;
+use hrfna::util::prng::Rng;
+use hrfna::workloads::generators::{Dist, ServeMix};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let clients = args.parse_or("clients", 4usize);
+    let jobs = args.parse_or("jobs", 64usize);
+
+    let t0 = Instant::now();
+    let engine = EngineHandle::spawn(None).expect("engine load");
+    let coord = Arc::new(Coordinator::start(
+        engine,
+        Arc::new(ContextRegistry::new()),
+        CoordinatorConfig::default(),
+    ));
+    let server = RpcServer::bind(
+        Arc::clone(&coord),
+        "127.0.0.1:0",
+        RpcServerConfig { quota: QuotaConfig::default(), ..RpcServerConfig::default() },
+    )
+    .expect("bind rpc server");
+    let addr = server.local_addr().to_string();
+    println!("rpc server up in {:?} on {addr}", t0.elapsed());
+
+    // --- 1. Correctness through the wire: pipelined dot submits ------
+    let mut client = RpcClient::connect(&addr).expect("connect");
+    client.ping().expect("ping");
+    let mut rng = Rng::new(2026);
+    let dist = Dist::moderate();
+    let mut fired = Vec::new();
+    for i in 0..16usize {
+        let n = 512;
+        let x = dist.sample_vec(&mut rng, n);
+        let y = dist.sample_vec(&mut rng, n);
+        let want: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        let tier = ServeMix::default_mix().tier_for(i);
+        let id = client
+            .submit_spec(&JobSpec::new(JobKind::DotHybrid, Payload::Dot { x, y }).with_tier(tier))
+            .expect("fire");
+        fired.push((id, tier, want));
+    }
+    let mut worst: f64 = 0.0;
+    for (id, tier, want) in fired {
+        let r = client.wait_submit(id).expect("transport").expect("accepted");
+        assert_eq!(r.tier, tier);
+        worst = worst.max(((r.values[0] - want) / want.abs().max(1e-300)).abs());
+    }
+    println!("pipelined mixed-tier dots: worst rel err {worst:.2e}");
+    assert!(worst < 1e-6, "wire transport must not cost accuracy");
+
+    // --- 2. Streaming batch submission, including a typed rejection --
+    let good = |rng: &mut Rng| {
+        JobSpec::new(
+            JobKind::DotHybrid,
+            Payload::Dot { x: dist.sample_vec(rng, 512), y: dist.sample_vec(rng, 512) },
+        )
+    };
+    let bad = JobSpec::new(
+        JobKind::DotHybrid,
+        Payload::Dot { x: dist.sample_vec(&mut rng, 512), y: dist.sample_vec(&mut rng, 7) },
+    );
+    let outcomes = client
+        .submit_batch(&[good(&mut rng), bad, good(&mut rng)])
+        .expect("batch transport");
+    let served = outcomes.iter().filter(|o| o.is_ok()).count();
+    let shed = outcomes.iter().filter(|o| o.is_err()).count();
+    println!("batch of 3: {served} served, {shed} rejected (typed)");
+    assert_eq!((served, shed), (2, 1));
+    assert_eq!(
+        outcomes[1].as_ref().err().expect("mismatched operands rejected").code,
+        ErrorCode::Rejected
+    );
+
+    // --- 3. Socket load: persistent vs reconnect-per-job -------------
+    let mix = ServeMix::default_mix();
+    let make = |c: u64, i: usize| -> JobSpec {
+        let (_, mut r) = mix.request_rng(c + 1, i);
+        JobSpec::new(
+            JobKind::DotHybrid,
+            Payload::Dot {
+                x: mix.dist.sample_vec(&mut r, mix.dot_n),
+                y: mix.dist.sample_vec(&mut r, mix.dot_n),
+            },
+        )
+        .with_tier(mix.tier_for(i))
+    };
+    for mode in [ConnMode::Persistent, ConnMode::PerJob] {
+        let report = socket_closed_loop(&addr, clients, jobs, 8, mode, &make);
+        assert_eq!(report.completed, report.offered, "{mode:?} lost jobs");
+        println!(
+            "{mode:?}: {} jobs at {:.0} jobs/s (p99 {:.0} us)",
+            report.completed,
+            report.jobs_per_s,
+            report.latency_us.as_ref().map(|l| l.p99).unwrap_or(0.0)
+        );
+    }
+
+    // --- 4. Server-side report + shutdown over the wire --------------
+    let (coord_table, wire_table) = client.server_metrics().expect("metrics rpc");
+    println!("{coord_table}");
+    println!("{wire_table}");
+    client.shutdown_server().expect("shutdown rpc");
+    let resp = client.request("ping", Json::Null).expect("still answering during drain");
+    drop(resp); // ping stays up while the coordinator drains
+    server.wait_shutdown();
+    let wire = server.stop();
+    assert_eq!(wire.protocol_errors(), 0);
+    assert_eq!(wire.conns_opened(), wire.conns_closed(), "leaked connections");
+
+    let coord = Arc::try_unwrap(coord).unwrap_or_else(|_| panic!("coordinator still shared"));
+    for tier in Tier::ALL {
+        let served = coord.metrics.jobs_tier(JobKind::DotHybrid, tier);
+        println!("tier {:<5} served {served} hybrid dots", tier.label());
+        assert!(served > 0, "mixed-tier stream must exercise every tier");
+    }
+    let drain = coord.shutdown();
+    println!("{drain}");
+    assert!(drain.is_clean(), "shutdown dropped jobs: {drain}");
+    println!("rpc_pipeline OK");
+}

@@ -1,0 +1,234 @@
+//! Wire-serving benchmark (`--features rpc`): jobs/sec through the full
+//! network edge — JSON encode → length-prefix frame → TCP → server
+//! decode → coordinator → result encode → client decode — against the
+//! in-process serving path measured on the *same* coordinator in the
+//! same run. Records `BENCH_rpc.json`; CI gates it `--strict` against
+//! `ci/baselines/BENCH_rpc.json`.
+//!
+//! Absolute jobs/sec drifts with runner hardware, so the protected
+//! invariants are ratio records measured within one run:
+//!
+//! * `rpc_wire_overhead_ratio` — socket per-job cost over in-process
+//!   per-job cost (how much the wire costs),
+//! * `rpc_conn_reuse_cost_ratio` — persistent-connection per-job cost
+//!   over reconnect-per-job cost (what connection reuse saves; the
+//!   persistent closed loop is the fix this records).
+//!
+//! Quick mode for CI: `BENCH_QUICK=1 cargo bench --features rpc --bench
+//! bench_rpc` (or `--quick`).
+
+mod common;
+
+use hrfna::coordinator::batcher::BatchPolicy;
+use hrfna::coordinator::router::ShapeBuckets;
+use hrfna::coordinator::rpc::{socket_closed_loop, ConnMode, RpcServer, RpcServerConfig};
+use hrfna::coordinator::{
+    closed_loop, ContextRegistry, Coordinator, CoordinatorConfig, ExecMode, JobKind, JobSpec,
+    Payload, Tier,
+};
+use hrfna::util::bench::{write_json, BenchRecord};
+use hrfna::util::cli::Args;
+use hrfna::util::prng::Rng;
+use hrfna::workloads::generators::{Dist, ServeMix};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Dot length for the wire runs: the small shape bucket, so the records
+/// measure protocol overhead rather than kernel time.
+const DOT_N: usize = 512;
+const CLIENTS: usize = 4;
+const BURST: usize = 8;
+
+fn coordinator() -> Coordinator {
+    let engine = hrfna::runtime::EngineHandle::spawn(None).expect("engine");
+    Coordinator::start(
+        engine,
+        Arc::new(ContextRegistry::new()),
+        CoordinatorConfig {
+            workers_per_lane: 2,
+            batch: BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_micros(500),
+                capacity: 4096,
+            },
+            buckets: ShapeBuckets { tiers: Tier::ALL.to_vec(), ..ShapeBuckets::default() },
+            exec: ExecMode::Planar,
+        },
+    )
+}
+
+fn job_record(name: &str, completed: usize, wall: Duration, jobs_per_s: f64) -> BenchRecord {
+    BenchRecord {
+        name: name.to_string(),
+        n: completed as u64,
+        ns_per_op: wall.as_nanos() as f64 / completed.max(1) as f64,
+        throughput_per_s: jobs_per_s,
+    }
+}
+
+fn main() {
+    common::banner("§RPC", "jobs/sec over the wire vs in-process serving");
+    let args = Args::from_env();
+    let quick = args.flag("quick") || std::env::var("BENCH_QUICK").is_ok();
+    let jobs_per_client = if quick { 48 } else { 192 };
+    let reconnect_jobs = if quick { 16 } else { 64 };
+
+    // Shared operand pool so generation stays out of every measured loop.
+    let mut rng = Rng::new(2026);
+    let pool: Vec<(Vec<f64>, Vec<f64>)> = (0..16)
+        .map(|_| {
+            (
+                Dist::moderate().sample_vec(&mut rng, DOT_N),
+                Dist::moderate().sample_vec(&mut rng, DOT_N),
+            )
+        })
+        .collect();
+    let make_dot = |c: u64, i: usize| -> JobSpec {
+        let (x, y) = &pool[(c as usize * 7 + i) % pool.len()];
+        JobSpec::new(JobKind::DotHybrid, Payload::Dot { x: x.clone(), y: y.clone() })
+    };
+    let mix = ServeMix::default_mix();
+    let make_tiered = |c: u64, i: usize| -> JobSpec {
+        make_dot(c, i).with_tier(mix.tier_for(i))
+    };
+
+    let coord = Arc::new(coordinator());
+    let server = RpcServer::bind(
+        Arc::clone(&coord),
+        "127.0.0.1:0",
+        RpcServerConfig::default(),
+    )
+    .expect("bind rpc server");
+    let addr = server.local_addr().to_string();
+    println!("rpc server on {addr}");
+
+    // Warmup both paths (threadpool spin-up, first allocations, one
+    // full wire round trip per client slot).
+    for _ in 0..4 {
+        coord.call_spec(make_dot(0, 0)).expect("warmup job");
+    }
+    let warm = socket_closed_loop(&addr, CLIENTS, 2, BURST, ConnMode::Persistent, &make_dot);
+    assert_eq!(warm.completed, warm.offered, "warmup lost jobs");
+
+    let mut records: Vec<BenchRecord> = Vec::new();
+
+    // 1. In-process baseline on the same coordinator — the comparator
+    //    every wire number is measured against.
+    let inproc = closed_loop(&coord, CLIENTS, jobs_per_client, BURST, &make_dot);
+    assert_eq!(inproc.completed, inproc.offered, "in-process run lost jobs");
+    println!(
+        "in-process dot n={DOT_N}: {:.0} jobs/s ({} jobs in {:.2?})",
+        inproc.jobs_per_s, inproc.completed, inproc.wall
+    );
+
+    // 2. Persistent-connection socket run (the steady-state mode).
+    let persist = socket_closed_loop(
+        &addr,
+        CLIENTS,
+        jobs_per_client,
+        BURST,
+        ConnMode::Persistent,
+        &make_dot,
+    );
+    assert_eq!(persist.completed, persist.offered, "persistent run lost jobs");
+    let lat = persist.latency_us.as_ref().expect("latencies");
+    println!(
+        "socket persistent: {:.0} jobs/s (p50 {:.0} us, p99 {:.0} us)",
+        persist.jobs_per_s, lat.p50, lat.p99
+    );
+    records.push(job_record(
+        "rpc_dot_persistent_jobs",
+        persist.completed,
+        persist.wall,
+        persist.jobs_per_s,
+    ));
+
+    // Machine-independent: wire cost relative to in-process cost in the
+    // same run (ns_per_op = socket/in-proc per-job cost, lower is
+    // better; throughput_per_s = fraction of in-process throughput the
+    // wire retains, higher is better).
+    let overhead = inproc.jobs_per_s / persist.jobs_per_s.max(1e-9);
+    println!("-> wire overhead: {overhead:.2}x in-process per-job cost");
+    records.push(BenchRecord {
+        name: "rpc_wire_overhead_ratio".to_string(),
+        n: 1,
+        ns_per_op: overhead,
+        throughput_per_s: 1.0 / overhead.max(1e-9),
+    });
+
+    // 3. Reconnect-per-job (the anti-pattern, kept measurable).
+    let recon = socket_closed_loop(
+        &addr,
+        CLIENTS,
+        reconnect_jobs,
+        1,
+        ConnMode::PerJob,
+        &make_dot,
+    );
+    assert_eq!(recon.completed, recon.offered, "reconnect run lost jobs");
+    println!("socket reconnect-per-job: {:.0} jobs/s", recon.jobs_per_s);
+    records.push(job_record(
+        "rpc_dot_reconnect_jobs",
+        recon.completed,
+        recon.wall,
+        recon.jobs_per_s,
+    ));
+    let reuse_speedup = persist.jobs_per_s / recon.jobs_per_s.max(1e-9);
+    println!("-> connection reuse: {reuse_speedup:.2}x reconnect-per-job throughput");
+    records.push(BenchRecord {
+        name: "rpc_conn_reuse_cost_ratio".to_string(),
+        n: 1,
+        ns_per_op: 1.0 / reuse_speedup.max(1e-9),
+        throughput_per_s: reuse_speedup,
+    });
+    if !quick {
+        assert!(
+            reuse_speedup >= 1.0,
+            "persistent connections must not be slower than reconnect-per-job \
+             (got {reuse_speedup:.2}x)"
+        );
+    }
+
+    // 4. Mixed-tier traffic over the wire: lo/paper/wide interleaved
+    //    3:5:2, the remote counterpart of serve_mixed_tier_dot_jobs.
+    let tiered = socket_closed_loop(
+        &addr,
+        CLIENTS,
+        jobs_per_client,
+        BURST,
+        ConnMode::Persistent,
+        &make_tiered,
+    );
+    assert_eq!(tiered.completed, tiered.offered, "tiered run lost jobs");
+    assert_eq!(
+        coord.metrics.total_escalations(),
+        0,
+        "moderate-range traffic must not escalate"
+    );
+    println!(
+        "socket mixed tiers: {} jobs in {:.2?} ({:.0} jobs/s)",
+        tiered.completed, tiered.wall, tiered.jobs_per_s
+    );
+    records.push(job_record(
+        "rpc_mixed_tier_socket_jobs",
+        tiered.completed,
+        tiered.wall,
+        tiered.jobs_per_s,
+    ));
+
+    // Tear the edge down and account for every job.
+    let wire = server.stop();
+    wire.table().print();
+    assert!(wire.conns_opened() >= CLIENTS as u64, "persistent conns registered");
+    assert_eq!(wire.conns_opened(), wire.conns_closed(), "leaked connections");
+    assert_eq!(wire.protocol_errors(), 0, "bench traffic must be well-formed");
+    let coord = Arc::try_unwrap(coord).unwrap_or_else(|_| panic!("coordinator still shared"));
+    coord.metrics_table().print();
+    let drain = coord.shutdown();
+    assert!(drain.is_clean(), "unclean drain after rpc load: {drain}");
+
+    match write_json("BENCH_rpc.json", &records) {
+        Ok(()) => println!("\nwrote BENCH_rpc.json ({} records)", records.len()),
+        Err(e) => eprintln!("could not write BENCH_rpc.json: {e}"),
+    }
+}

@@ -11,6 +11,7 @@
 //! API for drain accounting and the saturation tests.
 
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use super::request::JobKind;
@@ -502,6 +503,183 @@ impl Metrics {
     }
 }
 
+// ----------------------------------------------------------------------
+// Wire-level metrics (the RPC serving edge)
+// ----------------------------------------------------------------------
+
+/// Per-client wire counters: one set per accepted connection (the RPC
+/// edge's client identity is the connection). All relaxed atomics —
+/// metrics, not synchronization.
+#[derive(Default)]
+pub struct ClientCounters {
+    pub frames_in: AtomicU64,
+    pub frames_out: AtomicU64,
+    pub bytes_in: AtomicU64,
+    pub bytes_out: AtomicU64,
+    /// Jobs this client submitted that the coordinator accepted.
+    pub submits: AtomicU64,
+    /// Job results delivered back over this connection.
+    pub results: AtomicU64,
+    /// Error responses sent (admission, overload, bad request, …).
+    pub wire_errors: AtomicU64,
+    /// Submissions shed by the client's token-bucket rate quota.
+    pub rate_limited: AtomicU64,
+    /// Submissions shed by the client's in-flight cap.
+    pub inflight_limited: AtomicU64,
+}
+
+macro_rules! wire_counter {
+    ($($(#[$doc:meta])* $name:ident),+ $(,)?) => {
+        $($(#[$doc])*
+        pub fn $name(&self) -> u64 {
+            self.$name.load(Ordering::Relaxed)
+        })+
+    };
+}
+
+impl ClientCounters {
+    wire_counter!(frames_in, frames_out, bytes_in, bytes_out, submits, results,
+        wire_errors, rate_limited, inflight_limited);
+}
+
+/// Wire-level serving metrics for the RPC edge: connection/frame/byte
+/// totals plus a registry of per-client counters (rendered as one table
+/// row per connection). Lives here rather than in the feature-gated
+/// `rpc` module so the counters — and their exactly-once accounting —
+/// stay compiled and unit-tested in the default (tier-1) build.
+#[derive(Default)]
+pub struct WireMetrics {
+    conns_opened: AtomicU64,
+    conns_closed: AtomicU64,
+    totals: ClientCounters,
+    /// Frames that failed to parse / violated the protocol (counted
+    /// globally: a malformed frame may have no attributable client
+    /// request).
+    protocol_errors: AtomicU64,
+    clients: Mutex<Vec<(String, Arc<ClientCounters>)>>,
+}
+
+impl WireMetrics {
+    /// Register a new connection; returns its counter set. `label`
+    /// identifies the client in the report table (peer address + a
+    /// connection sequence number, by convention).
+    pub fn register_client(&self, label: &str) -> Arc<ClientCounters> {
+        self.conns_opened.fetch_add(1, Ordering::Relaxed);
+        let c = Arc::new(ClientCounters::default());
+        self.clients
+            .lock()
+            .expect("wire client registry")
+            .push((label.to_string(), Arc::clone(&c)));
+        c
+    }
+
+    /// Record a connection teardown.
+    pub fn record_conn_closed(&self) {
+        self.conns_closed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one decoded inbound frame of `bytes` payload bytes.
+    pub fn record_frame_in(&self, c: &ClientCounters, bytes: usize) {
+        c.frames_in.fetch_add(1, Ordering::Relaxed);
+        c.bytes_in.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.totals.frames_in.fetch_add(1, Ordering::Relaxed);
+        self.totals.bytes_in.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Record one written outbound frame of `bytes` payload bytes.
+    pub fn record_frame_out(&self, c: &ClientCounters, bytes: usize) {
+        c.frames_out.fetch_add(1, Ordering::Relaxed);
+        c.bytes_out.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.totals.frames_out.fetch_add(1, Ordering::Relaxed);
+        self.totals.bytes_out.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Record an accepted submission.
+    pub fn record_submit(&self, c: &ClientCounters) {
+        c.submits.fetch_add(1, Ordering::Relaxed);
+        self.totals.submits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a job result delivered to its client.
+    pub fn record_result(&self, c: &ClientCounters) {
+        c.results.fetch_add(1, Ordering::Relaxed);
+        self.totals.results.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record an error response sent to a client.
+    pub fn record_wire_error(&self, c: &ClientCounters) {
+        c.wire_errors.fetch_add(1, Ordering::Relaxed);
+        self.totals.wire_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a submission shed by the rate quota.
+    pub fn record_rate_limited(&self, c: &ClientCounters) {
+        c.rate_limited.fetch_add(1, Ordering::Relaxed);
+        self.totals.rate_limited.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a submission shed by the in-flight cap.
+    pub fn record_inflight_limited(&self, c: &ClientCounters) {
+        c.inflight_limited.fetch_add(1, Ordering::Relaxed);
+        self.totals.inflight_limited.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record an unparseable/protocol-violating frame.
+    pub fn record_protocol_error(&self) {
+        self.protocol_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Connections accepted over the server's lifetime.
+    pub fn conns_opened(&self) -> u64 {
+        self.conns_opened.load(Ordering::Relaxed)
+    }
+
+    /// Connections torn down.
+    pub fn conns_closed(&self) -> u64 {
+        self.conns_closed.load(Ordering::Relaxed)
+    }
+
+    /// Protocol errors (malformed frames).
+    pub fn protocol_errors(&self) -> u64 {
+        self.protocol_errors.load(Ordering::Relaxed)
+    }
+
+    /// Aggregate counters across all clients.
+    pub fn totals(&self) -> &ClientCounters {
+        &self.totals
+    }
+
+    /// Render the wire report: one row per connection plus a totals row.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            "Wire metrics",
+            &[
+                "client", "fr in", "fr out", "KiB in", "KiB out", "submit", "result",
+                "err", "rate-shed", "infl-shed",
+            ],
+        );
+        let row = |t: &mut Table, label: &str, c: &ClientCounters| {
+            t.rowv(&[
+                label.to_string(),
+                c.frames_in().to_string(),
+                c.frames_out().to_string(),
+                format!("{:.1}", c.bytes_in() as f64 / 1024.0),
+                format!("{:.1}", c.bytes_out() as f64 / 1024.0),
+                c.submits().to_string(),
+                c.results().to_string(),
+                c.wire_errors().to_string(),
+                c.rate_limited().to_string(),
+                c.inflight_limited().to_string(),
+            ]);
+        };
+        for (label, c) in self.clients.lock().expect("wire client registry").iter() {
+            row(&mut t, label, c);
+        }
+        row(&mut t, "TOTAL", &self.totals);
+        t
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -661,6 +839,43 @@ mod tests {
             let mid = bucket_mid_us(bucket_of(v));
             assert!(mid / v < 1.3 && v / mid < 1.3, "v={v} mid={mid}");
         }
+    }
+
+    #[test]
+    fn wire_metrics_count_per_client_and_in_total() {
+        let w = WireMetrics::default();
+        let a = w.register_client("127.0.0.1:5000#0");
+        let b = w.register_client("127.0.0.1:5001#1");
+        assert_eq!(w.conns_opened(), 2);
+        w.record_frame_in(&a, 100);
+        w.record_frame_in(&a, 50);
+        w.record_frame_in(&b, 7);
+        w.record_frame_out(&a, 2048);
+        w.record_submit(&a);
+        w.record_result(&a);
+        w.record_wire_error(&b);
+        w.record_rate_limited(&b);
+        w.record_inflight_limited(&b);
+        w.record_protocol_error();
+        w.record_conn_closed();
+        assert_eq!(a.frames_in(), 2);
+        assert_eq!(a.bytes_in(), 150);
+        assert_eq!(b.frames_in(), 1);
+        assert_eq!(w.totals().frames_in(), 3);
+        assert_eq!(w.totals().bytes_in(), 157);
+        assert_eq!(w.totals().frames_out(), 1);
+        assert_eq!(w.totals().bytes_out(), 2048);
+        assert_eq!(w.totals().submits(), 1);
+        assert_eq!(w.totals().results(), 1);
+        assert_eq!(w.totals().wire_errors(), 1);
+        assert_eq!(w.totals().rate_limited(), 1);
+        assert_eq!(w.totals().inflight_limited(), 1);
+        assert_eq!(w.protocol_errors(), 1);
+        assert_eq!(w.conns_closed(), 1);
+        let s = w.table().render();
+        assert!(s.contains("127.0.0.1:5000#0"));
+        assert!(s.contains("127.0.0.1:5001#1"));
+        assert!(s.contains("TOTAL"));
     }
 
     #[test]

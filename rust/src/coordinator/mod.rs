@@ -9,12 +9,19 @@
 //! kernels → bulk CRT of requested outputs) under the lane tier's
 //! context from the [`crate::hybrid::ContextRegistry`], per-tier
 //! histogram metrics, load generators and a drain-reporting shutdown.
+//!
+//! With `--features rpc` the [`rpc`] module adds the network edge: a
+//! length-prefix-framed JSON-RPC server/client pair that carries the
+//! same typed backpressure (and the tier/tolerance admission fields)
+//! over TCP, plus a socket-level load generator.
 
 pub mod request;
 pub mod hybrid_exec;
 pub mod batcher;
 pub mod router;
 pub mod metrics;
+#[cfg(feature = "rpc")]
+pub mod rpc;
 pub mod serve_load;
 pub mod server;
 

@@ -38,7 +38,10 @@ impl JobKind {
         JobKind::Rk4Hybrid,
     ];
 
-    /// Table label.
+    /// Table label — also the **wire identifier** of the kind: the RPC
+    /// protocol (`coordinator::rpc`) serializes `JobKind` as this string,
+    /// so the labels are a stable contract (golden-fixture tested), not
+    /// just display strings.
     pub fn label(&self) -> &'static str {
         match self {
             JobKind::DotHybrid => "dot/hrfna",
@@ -47,6 +50,11 @@ impl JobKind {
             JobKind::MatmulF32 => "matmul/fp32",
             JobKind::Rk4Hybrid => "rk4/hrfna",
         }
+    }
+
+    /// Parse a label produced by [`JobKind::label`] (wire decode).
+    pub fn from_label(s: &str) -> Option<JobKind> {
+        JobKind::ALL.iter().copied().find(|k| k.label() == s)
     }
 
     /// True iff the kind executes on the HRFNA datapath (and therefore
@@ -223,6 +231,14 @@ mod tests {
         labels.sort();
         labels.dedup();
         assert_eq!(labels.len(), JobKind::ALL.len());
+    }
+
+    #[test]
+    fn labels_round_trip() {
+        for k in JobKind::ALL {
+            assert_eq!(JobKind::from_label(k.label()), Some(k));
+        }
+        assert_eq!(JobKind::from_label("dot"), None);
     }
 
     #[test]

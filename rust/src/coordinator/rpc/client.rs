@@ -1,0 +1,218 @@
+//! A blocking RPC client over one persistent connection, with pipelined
+//! submission: `submit_spec` fires a frame and returns the request id
+//! immediately, responses are collected (possibly out of order) by
+//! `wait`/`next_response`. The socket load generator drives the server
+//! exclusively through this type, and the `rpc_pipeline` example shows
+//! the intended call shape.
+
+use std::collections::HashMap;
+use std::io;
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::request::{JobResult, JobSpec};
+
+use super::codec::{write_frame, FrameReader};
+use super::json::Json;
+use super::protocol::{
+    result_from_json, spec_to_json, Request, Response, ResponseBody, WireError,
+};
+
+/// One persistent client connection.
+pub struct RpcClient {
+    stream: TcpStream,
+    frames: FrameReader,
+    next_id: u64,
+    /// Responses that arrived while waiting for a different id.
+    stash: HashMap<u64, Response>,
+}
+
+/// Outcome of one submitted job: the result, or the server's typed
+/// error for it.
+pub type SubmitOutcome = std::result::Result<JobResult, WireError>;
+
+impl RpcClient {
+    /// Connect once.
+    pub fn connect(addr: &str) -> Result<RpcClient> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        stream.set_nodelay(true).ok();
+        Ok(RpcClient {
+            stream,
+            frames: FrameReader::default(),
+            next_id: 1,
+            stash: HashMap::new(),
+        })
+    }
+
+    /// Connect with retries over `total_wait` (the CI smoke test races
+    /// the server's bind; a refused connection just means "not yet").
+    pub fn connect_retry(addr: &str, total_wait: Duration) -> Result<RpcClient> {
+        let deadline = Instant::now() + total_wait;
+        loop {
+            match RpcClient::connect(addr) {
+                Ok(c) => return Ok(c),
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(e.context(format!("server at {addr} never came up")));
+                    }
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+    }
+
+    fn send(&mut self, method: &str, params: Json) -> Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let frame = Request::new(id, method, params).to_json().encode();
+        write_frame(&mut self.stream, frame.as_bytes()).context("write request frame")?;
+        Ok(id)
+    }
+
+    /// Read one response frame (blocking until the server answers).
+    fn read_response(&mut self) -> Result<Response> {
+        let never = || false;
+        match self.frames.read_frame(&mut self.stream, &never) {
+            Ok(Some(payload)) => {
+                let text = std::str::from_utf8(&payload).context("response is not UTF-8")?;
+                let v = Json::parse(text).map_err(|e| anyhow!("bad response JSON: {e}"))?;
+                Response::from_json(&v).map_err(|e| anyhow!("bad response frame: {e}"))
+            }
+            Ok(None) => bail!("server closed the connection"),
+            Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => {
+                bail!("server closed mid-frame")
+            }
+            Err(e) => Err(e).context("read response frame"),
+        }
+    }
+
+    /// The next response from the wire, in arrival order (stashed
+    /// responses are not consulted — use [`RpcClient::wait`] for
+    /// correlation).
+    pub fn next_response(&mut self) -> Result<Response> {
+        self.read_response()
+    }
+
+    /// Block until the response for `id` arrives, stashing any other
+    /// ids that land first.
+    pub fn wait(&mut self, id: u64) -> Result<Response> {
+        if let Some(r) = self.stash.remove(&id) {
+            return Ok(r);
+        }
+        loop {
+            let r = self.read_response()?;
+            if r.id == id {
+                return Ok(r);
+            }
+            self.stash.insert(r.id, r);
+        }
+    }
+
+    /// One blocking round trip.
+    pub fn request(&mut self, method: &str, params: Json) -> Result<Response> {
+        let id = self.send(method, params)?;
+        self.wait(id)
+    }
+
+    /// Fire one submission without waiting; returns the request id to
+    /// pass to [`RpcClient::wait_submit`]. This is the pipelining
+    /// primitive: many fires, then collect.
+    pub fn submit_spec(&mut self, spec: &JobSpec) -> Result<u64> {
+        self.send("submit", spec_to_json(spec))
+    }
+
+    /// Collect one submission's outcome: the job result, or the typed
+    /// wire error the server shed it with.
+    pub fn wait_submit(&mut self, id: u64) -> Result<SubmitOutcome> {
+        let resp = self.wait(id)?;
+        match resp.body {
+            ResponseBody::Result(v) => {
+                let r = result_from_json(&v).map_err(|e| anyhow!("bad job result: {e}"))?;
+                Ok(Ok(r))
+            }
+            ResponseBody::Error(e) => Ok(Err(e)),
+        }
+    }
+
+    /// Blocking submit: fire and wait.
+    pub fn call(&mut self, spec: &JobSpec) -> Result<SubmitOutcome> {
+        let id = self.submit_spec(spec)?;
+        self.wait_submit(id)
+    }
+
+    /// Submit a whole batch in one frame; returns per-spec outcomes in
+    /// order.
+    pub fn submit_batch(&mut self, specs: &[JobSpec]) -> Result<Vec<SubmitOutcome>> {
+        let params = Json::obj(vec![(
+            "specs",
+            Json::Arr(specs.iter().map(spec_to_json).collect()),
+        )]);
+        let resp = self.request("submit_batch", params)?;
+        let entries = match resp.body {
+            ResponseBody::Result(Json::Arr(entries)) => entries,
+            ResponseBody::Error(e) => bail!("submit_batch failed wholesale: {}", e.message),
+            other => bail!("submit_batch returned a non-array: {other:?}"),
+        };
+        entries
+            .iter()
+            .map(|entry| {
+                if let Some(v) = entry.get("result") {
+                    let r = result_from_json(v).map_err(|e| anyhow!("bad job result: {e}"))?;
+                    Ok(Ok(r))
+                } else if let Some(err) = entry.get("error") {
+                    let code = err
+                        .get("code")
+                        .and_then(Json::as_i64)
+                        .and_then(super::protocol::ErrorCode::from_code)
+                        .ok_or_else(|| anyhow!("batch error entry without known code"))?;
+                    let message =
+                        err.get("message").and_then(Json::as_str).unwrap_or_default().to_string();
+                    Ok(Err(WireError { code, message, data: err.get("data").cloned() }))
+                } else {
+                    bail!("batch entry is neither result nor error")
+                }
+            })
+            .collect()
+    }
+
+    /// Liveness check.
+    pub fn ping(&mut self) -> Result<()> {
+        let resp = self.request("ping", Json::Null)?;
+        match resp.body {
+            ResponseBody::Result(v) if v.as_str() == Some("pong") => Ok(()),
+            other => bail!("unexpected ping response: {other:?}"),
+        }
+    }
+
+    /// Fetch the server's rendered metrics tables (coordinator + wire).
+    pub fn server_metrics(&mut self) -> Result<(String, String)> {
+        let resp = self.request("metrics", Json::Null)?;
+        match resp.body {
+            ResponseBody::Result(v) => {
+                let coord = v
+                    .get("coordinator")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("metrics without coordinator table"))?
+                    .to_string();
+                let wire = v
+                    .get("wire")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("metrics without wire table"))?
+                    .to_string();
+                Ok((coord, wire))
+            }
+            ResponseBody::Error(e) => bail!("metrics failed: {}", e.message),
+        }
+    }
+
+    /// Ask the server to drain and exit.
+    pub fn shutdown_server(&mut self) -> Result<()> {
+        let resp = self.request("shutdown", Json::Null)?;
+        match resp.body {
+            ResponseBody::Result(v) if v.as_str() == Some("draining") => Ok(()),
+            other => bail!("unexpected shutdown response: {other:?}"),
+        }
+    }
+}

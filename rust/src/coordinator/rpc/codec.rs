@@ -1,0 +1,227 @@
+//! Length-prefix framing: every wire message is a 4-byte big-endian
+//! payload length followed by that many bytes of UTF-8 JSON. Framing is
+//! independent of the JSON layer — the reader yields raw payload bytes,
+//! so malformed JSON inside a well-formed frame is a *protocol* error
+//! (answered with `ParseError`), not a connection error.
+//!
+//! [`FrameReader`] is built for sockets with a read timeout: the server's
+//! per-connection reader polls a stop flag between reads, so `read` may
+//! return `WouldBlock`/`TimedOut` mid-frame. The reader keeps all
+//! partial progress in its buffer across calls and also retains any
+//! pipelined bytes beyond the first complete frame, so clients may batch
+//! many frames into one TCP segment.
+
+use std::io::{self, Read, Write};
+
+/// Hard cap on a single frame's payload (32 MiB — a 4096-dim matmul pair
+/// of f64 lanes encodes to ~12 MiB of JSON, so the cap clears the largest
+/// admissible job with headroom while bounding a hostile length prefix).
+pub const MAX_FRAME_BYTES: usize = 32 << 20;
+
+/// Byte size of the length prefix.
+pub const HEADER_BYTES: usize = 4;
+
+/// Write one frame (length prefix + payload) and flush.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
+    if payload.len() > MAX_FRAME_BYTES {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!("frame of {} bytes exceeds cap {}", payload.len(), MAX_FRAME_BYTES),
+        ));
+    }
+    let header = (payload.len() as u32).to_be_bytes();
+    // One vectored-ish write keeps small frames in a single segment.
+    let mut buf = Vec::with_capacity(HEADER_BYTES + payload.len());
+    buf.extend_from_slice(&header);
+    buf.extend_from_slice(payload);
+    w.write_all(&buf)?;
+    w.flush()
+}
+
+/// Incremental frame reader with partial-progress buffering.
+pub struct FrameReader {
+    buf: Vec<u8>,
+    max: usize,
+}
+
+impl Default for FrameReader {
+    fn default() -> Self {
+        FrameReader::new(MAX_FRAME_BYTES)
+    }
+}
+
+impl FrameReader {
+    /// Reader enforcing `max` payload bytes per frame.
+    pub fn new(max: usize) -> FrameReader {
+        FrameReader { buf: Vec::new(), max }
+    }
+
+    /// Try to pop one complete frame out of the internal buffer.
+    fn take_buffered(&mut self) -> io::Result<Option<Vec<u8>>> {
+        if self.buf.len() < HEADER_BYTES {
+            return Ok(None);
+        }
+        let len = u32::from_be_bytes([self.buf[0], self.buf[1], self.buf[2], self.buf[3]]) as usize;
+        if len > self.max {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("frame length {len} exceeds cap {}", self.max),
+            ));
+        }
+        if self.buf.len() < HEADER_BYTES + len {
+            return Ok(None);
+        }
+        let payload = self.buf[HEADER_BYTES..HEADER_BYTES + len].to_vec();
+        self.buf.drain(..HEADER_BYTES + len);
+        Ok(Some(payload))
+    }
+
+    /// Read until one complete frame is available, `stop()` turns true,
+    /// or the peer closes.
+    ///
+    /// Returns `Ok(Some(payload))` for a frame, `Ok(None)` for a clean
+    /// end (EOF at a frame boundary, or stop requested). EOF in the
+    /// middle of a frame is `UnexpectedEof`. Timeout-style errors
+    /// (`WouldBlock`/`TimedOut`/`Interrupted`) just re-poll `stop` —
+    /// partial frames survive them.
+    pub fn read_frame(
+        &mut self,
+        r: &mut impl Read,
+        stop: &dyn Fn() -> bool,
+    ) -> io::Result<Option<Vec<u8>>> {
+        let mut chunk = [0u8; 16 * 1024];
+        loop {
+            if let Some(payload) = self.take_buffered()? {
+                return Ok(Some(payload));
+            }
+            if stop() {
+                return Ok(None);
+            }
+            match r.read(&mut chunk) {
+                Ok(0) => {
+                    return if self.buf.is_empty() {
+                        Ok(None)
+                    } else {
+                        Err(io::Error::new(
+                            io::ErrorKind::UnexpectedEof,
+                            format!("peer closed mid-frame with {} bytes pending", self.buf.len()),
+                        ))
+                    };
+                }
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        io::ErrorKind::WouldBlock
+                            | io::ErrorKind::TimedOut
+                            | io::ErrorKind::Interrupted
+                    ) => {}
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const NEVER: &dyn Fn() -> bool = &|| false;
+
+    fn framed(payloads: &[&[u8]]) -> Vec<u8> {
+        let mut out = Vec::new();
+        for p in payloads {
+            write_frame(&mut out, p).unwrap();
+        }
+        out
+    }
+
+    #[test]
+    fn round_trip_single_frame() {
+        let wire = framed(&[b"{\"x\":1}"]);
+        assert_eq!(&wire[..HEADER_BYTES], &[0, 0, 0, 7]);
+        let mut r = FrameReader::default();
+        let mut cur = io::Cursor::new(wire);
+        assert_eq!(r.read_frame(&mut cur, NEVER).unwrap().unwrap(), b"{\"x\":1}");
+        assert!(r.read_frame(&mut cur, NEVER).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn pipelined_frames_in_one_read() {
+        let wire = framed(&[b"one", b"", b"three"]);
+        let mut r = FrameReader::default();
+        let mut cur = io::Cursor::new(wire);
+        assert_eq!(r.read_frame(&mut cur, NEVER).unwrap().unwrap(), b"one");
+        assert_eq!(r.read_frame(&mut cur, NEVER).unwrap().unwrap(), b"");
+        assert_eq!(r.read_frame(&mut cur, NEVER).unwrap().unwrap(), b"three");
+        assert!(r.read_frame(&mut cur, NEVER).unwrap().is_none());
+    }
+
+    #[test]
+    fn mid_frame_eof_is_an_error() {
+        let mut wire = framed(&[b"abcdef"]);
+        wire.truncate(wire.len() - 2);
+        let mut r = FrameReader::default();
+        let err = r.read_frame(&mut io::Cursor::new(wire), NEVER).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn oversized_frames_rejected_both_ways() {
+        let big = vec![0u8; 9];
+        let mut out = Vec::new();
+        // Writer-side cap.
+        let mut small = FrameReader::new(8);
+        write_frame(&mut out, &big).unwrap();
+        // Reader-side cap fires from the header alone.
+        let err = small.read_frame(&mut io::Cursor::new(out), NEVER).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        let mut w = io::Cursor::new(Vec::new());
+        assert!(write_frame(&mut w, &vec![0u8; MAX_FRAME_BYTES + 1]).is_err());
+    }
+
+    /// A reader that yields timeouts between single-byte reads — the
+    /// worst-case socket. Partial frames must survive.
+    struct Trickle {
+        data: Vec<u8>,
+        i: usize,
+        flip: bool,
+    }
+
+    impl Read for Trickle {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            self.flip = !self.flip;
+            if self.flip {
+                return Err(io::Error::new(io::ErrorKind::WouldBlock, "trickle"));
+            }
+            if self.i >= self.data.len() {
+                return Ok(0);
+            }
+            buf[0] = self.data[self.i];
+            self.i += 1;
+            Ok(1)
+        }
+    }
+
+    #[test]
+    fn partial_frames_survive_timeouts() {
+        let wire = framed(&[b"slow", b"wire"]);
+        let mut t = Trickle { data: wire, i: 0, flip: false };
+        let mut r = FrameReader::default();
+        assert_eq!(r.read_frame(&mut t, NEVER).unwrap().unwrap(), b"slow");
+        assert_eq!(r.read_frame(&mut t, NEVER).unwrap().unwrap(), b"wire");
+        assert!(r.read_frame(&mut t, NEVER).unwrap().is_none());
+    }
+
+    #[test]
+    fn stop_flag_ends_read_cleanly() {
+        struct Forever;
+        impl Read for Forever {
+            fn read(&mut self, _buf: &mut [u8]) -> io::Result<usize> {
+                Err(io::Error::new(io::ErrorKind::WouldBlock, "never data"))
+            }
+        }
+        let mut r = FrameReader::default();
+        assert!(r.read_frame(&mut Forever, &|| true).unwrap().is_none());
+    }
+}

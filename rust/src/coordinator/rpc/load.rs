@@ -1,0 +1,159 @@
+//! Socket-level load generation: the wire counterpart of
+//! `coordinator::serve_load`, reusing [`LoadReport`] so in-process and
+//! over-the-wire runs are directly comparable (their ratio *is* the
+//! wire overhead, and `bench_rpc` records it).
+//!
+//! The closed loop holds **one persistent connection per client** for
+//! the whole run — the steady-state measurement. [`ConnMode::PerJob`]
+//! reconnects for every job purely to quantify the connect overhead the
+//! persistent mode avoids; it is not a serving configuration.
+
+use std::time::{Duration, Instant};
+
+use crate::coordinator::request::JobSpec;
+use crate::coordinator::serve_load::LoadReport;
+
+use super::client::RpcClient;
+
+/// Connection discipline of the socket closed loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConnMode {
+    /// One connection per client, reused for every job (the default and
+    /// the steady-state benchmark mode).
+    Persistent,
+    /// A fresh connect/close per job — the anti-pattern the persistent
+    /// mode exists to avoid, kept measurable on purpose.
+    PerJob,
+}
+
+/// How long a client keeps retrying the initial connect (the server may
+/// still be binding when the generator starts).
+const CONNECT_WAIT: Duration = Duration::from_secs(10);
+
+/// Closed-loop load over the wire: `clients` threads each submit
+/// `jobs_per_client` jobs in pipelined bursts of `burst` over TCP to
+/// `addr`. `make(client, i)` builds the i-th spec of a client, exactly
+/// as in `serve_load::closed_loop` — swap the coordinator handle for an
+/// address and a report from one generator is comparable to the other.
+///
+/// Accounting: a job that comes back with a result counts as
+/// accepted+completed; a typed wire error (backpressure, admission,
+/// quota) counts as rejected; a transport failure ends that client's
+/// run with its remaining jobs uncounted (they were never offered).
+pub fn socket_closed_loop(
+    addr: &str,
+    clients: usize,
+    jobs_per_client: usize,
+    burst: usize,
+    mode: ConnMode,
+    make: &(dyn Fn(u64, usize) -> JobSpec + Sync),
+) -> LoadReport {
+    let burst = burst.max(1);
+    let t0 = Instant::now();
+    let results: Vec<(usize, usize, usize, Vec<f64>)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                scope.spawn(move || match mode {
+                    ConnMode::Persistent => run_persistent(addr, c as u64, jobs_per_client, burst, make),
+                    ConnMode::PerJob => run_per_job(addr, c as u64, jobs_per_client, make),
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let wall = t0.elapsed();
+    let mut offered = 0;
+    let mut accepted = 0;
+    let mut rejected = 0;
+    let mut latencies = Vec::new();
+    for (o, a, r, l) in results {
+        offered += o;
+        accepted += a;
+        rejected += r;
+        latencies.extend(l);
+    }
+    LoadReport::from_parts(offered, accepted, rejected, latencies, wall)
+}
+
+/// One client over one persistent connection: fire a burst of pipelined
+/// submits, then collect the burst's outcomes.
+fn run_persistent(
+    addr: &str,
+    client: u64,
+    jobs: usize,
+    burst: usize,
+    make: &(dyn Fn(u64, usize) -> JobSpec + Sync),
+) -> (usize, usize, usize, Vec<f64>) {
+    let mut conn = match RpcClient::connect_retry(addr, CONNECT_WAIT) {
+        Ok(c) => c,
+        Err(_) => return (0, 0, 0, Vec::new()),
+    };
+    let mut offered = 0;
+    let mut accepted = 0;
+    let mut rejected = 0;
+    let mut latencies = Vec::with_capacity(jobs);
+    let mut i = 0;
+    while i < jobs {
+        let mut fired: Vec<(u64, Instant)> = Vec::with_capacity(burst);
+        for _ in 0..burst.min(jobs - i) {
+            let spec = make(client, i);
+            i += 1;
+            offered += 1;
+            match conn.submit_spec(&spec) {
+                Ok(id) => fired.push((id, Instant::now())),
+                Err(_) => {
+                    rejected += 1;
+                    return (offered, accepted, rejected, latencies);
+                }
+            }
+        }
+        for (id, fired_at) in fired {
+            match conn.wait_submit(id) {
+                Ok(Ok(_result)) => {
+                    accepted += 1;
+                    latencies.push(fired_at.elapsed().as_secs_f64() * 1e6);
+                }
+                Ok(Err(_wire_err)) => rejected += 1,
+                Err(_) => {
+                    rejected += 1;
+                    return (offered, accepted, rejected, latencies);
+                }
+            }
+        }
+    }
+    (offered, accepted, rejected, latencies)
+}
+
+/// One client reconnecting per job (overhead-measurement mode).
+fn run_per_job(
+    addr: &str,
+    client: u64,
+    jobs: usize,
+    make: &(dyn Fn(u64, usize) -> JobSpec + Sync),
+) -> (usize, usize, usize, Vec<f64>) {
+    let mut offered = 0;
+    let mut accepted = 0;
+    let mut rejected = 0;
+    let mut latencies = Vec::with_capacity(jobs);
+    for i in 0..jobs {
+        let spec = make(client, i);
+        offered += 1;
+        let t = Instant::now();
+        let mut conn = match RpcClient::connect_retry(addr, CONNECT_WAIT) {
+            Ok(c) => c,
+            Err(_) => {
+                rejected += 1;
+                return (offered, accepted, rejected, latencies);
+            }
+        };
+        match conn.call(&spec) {
+            Ok(Ok(_result)) => {
+                accepted += 1;
+                latencies.push(t.elapsed().as_secs_f64() * 1e6);
+            }
+            Ok(Err(_wire_err)) => rejected += 1,
+            Err(_) => rejected += 1,
+        }
+    }
+    (offered, accepted, rejected, latencies)
+}

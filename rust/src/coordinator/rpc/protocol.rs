@@ -1,0 +1,578 @@
+//! Protocol types: JSON-RPC 2.0-shaped requests/responses plus the
+//! serialization of the coordinator's domain types ([`JobSpec`],
+//! [`JobResult`], `Tier`, `JobKind`) and the **stable error-code table**
+//! that maps every typed [`SubmitError`] and quota/parse failure to a
+//! wire code clients can branch on.
+//!
+//! Compatibility contract (pinned by the golden fixtures in
+//! `tests/fixtures/rpc/` and the property tests in `integration_rpc`):
+//!
+//! * request/response field names and order,
+//! * `JobKind::label` / `Tier::label` strings as the kind/tier encodings,
+//! * the numeric values in [`ErrorCode`].
+//!
+//! Changing any of those is a wire break and must version the protocol.
+
+use crate::coordinator::request::{JobKind, JobResult, JobSpec, Payload, SubmitError};
+use crate::hybrid::registry::Tier;
+
+use super::json::Json;
+
+/// Protocol version tag carried in every message.
+pub const JSONRPC_VERSION: &str = "2.0";
+
+/// Stable wire error codes. Standard JSON-RPC codes for transport/shape
+/// errors; `-32000..` implementation range for the coordinator's typed
+/// backpressure contract.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ErrorCode {
+    /// Frame payload was not valid JSON.
+    ParseError,
+    /// JSON was valid but not a well-formed request object.
+    InvalidRequest,
+    /// Unknown `method`.
+    MethodNotFound,
+    /// Params failed to decode into the method's types.
+    InvalidParams,
+    /// Server-side invariant failure (result channel died, ...).
+    Internal,
+    /// Admission rejected the spec (shape/value/tier-escalation refusal)
+    /// — maps `SubmitError::Rejected`.
+    Rejected,
+    /// Bounded lane queue full — maps `SubmitError::Overloaded`; the
+    /// error `data` carries `{kind, tier, queued, capacity}`.
+    Overloaded,
+    /// Coordinator draining — maps `SubmitError::ShuttingDown`.
+    ShuttingDown,
+    /// Client exceeded its token-bucket submission rate.
+    RateLimited,
+    /// Client exceeded its in-flight job quota.
+    TooManyInFlight,
+}
+
+impl ErrorCode {
+    /// Every code (property tests iterate this).
+    pub const ALL: [ErrorCode; 10] = [
+        ErrorCode::ParseError,
+        ErrorCode::InvalidRequest,
+        ErrorCode::MethodNotFound,
+        ErrorCode::InvalidParams,
+        ErrorCode::Internal,
+        ErrorCode::Rejected,
+        ErrorCode::Overloaded,
+        ErrorCode::ShuttingDown,
+        ErrorCode::RateLimited,
+        ErrorCode::TooManyInFlight,
+    ];
+
+    /// The wire value. **Stable**: committed fixtures assert these.
+    pub fn code(self) -> i64 {
+        match self {
+            ErrorCode::ParseError => -32700,
+            ErrorCode::InvalidRequest => -32600,
+            ErrorCode::MethodNotFound => -32601,
+            ErrorCode::InvalidParams => -32602,
+            ErrorCode::Internal => -32603,
+            ErrorCode::Rejected => -32001,
+            ErrorCode::Overloaded => -32002,
+            ErrorCode::ShuttingDown => -32003,
+            ErrorCode::RateLimited => -32004,
+            ErrorCode::TooManyInFlight => -32005,
+        }
+    }
+
+    /// Inverse of [`ErrorCode::code`].
+    pub fn from_code(code: i64) -> Option<ErrorCode> {
+        ErrorCode::ALL.iter().copied().find(|c| c.code() == code)
+    }
+
+    /// Human label (metrics/log lines).
+    pub fn label(self) -> &'static str {
+        match self {
+            ErrorCode::ParseError => "parse_error",
+            ErrorCode::InvalidRequest => "invalid_request",
+            ErrorCode::MethodNotFound => "method_not_found",
+            ErrorCode::InvalidParams => "invalid_params",
+            ErrorCode::Internal => "internal",
+            ErrorCode::Rejected => "rejected",
+            ErrorCode::Overloaded => "overloaded",
+            ErrorCode::ShuttingDown => "shutting_down",
+            ErrorCode::RateLimited => "rate_limited",
+            ErrorCode::TooManyInFlight => "too_many_in_flight",
+        }
+    }
+
+    /// True for the backpressure codes a well-behaved client answers
+    /// with backoff-and-retry (as opposed to fixing its request).
+    pub fn is_backpressure(self) -> bool {
+        matches!(
+            self,
+            ErrorCode::Overloaded
+                | ErrorCode::ShuttingDown
+                | ErrorCode::RateLimited
+                | ErrorCode::TooManyInFlight
+        )
+    }
+}
+
+/// The typed-submit-error → wire-code mapping. Total by construction:
+/// adding a `SubmitError` variant fails compilation here until it gets a
+/// code.
+pub fn code_for_submit_error(e: &SubmitError) -> ErrorCode {
+    match e {
+        SubmitError::Rejected(_) => ErrorCode::Rejected,
+        SubmitError::Overloaded { .. } => ErrorCode::Overloaded,
+        SubmitError::ShuttingDown => ErrorCode::ShuttingDown,
+    }
+}
+
+/// A structured wire error.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireError {
+    pub code: ErrorCode,
+    pub message: String,
+    /// Machine-readable detail (e.g. `Overloaded` carries queue state).
+    pub data: Option<Json>,
+}
+
+impl WireError {
+    /// Error with no structured data.
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> WireError {
+        WireError { code, message: message.into(), data: None }
+    }
+
+    /// Map a typed submission failure, attaching `Overloaded` queue
+    /// state as structured data.
+    pub fn from_submit_error(e: &SubmitError) -> WireError {
+        let code = code_for_submit_error(e);
+        let data = match e {
+            SubmitError::Overloaded { kind, tier, queued, capacity } => Some(Json::obj(vec![
+                ("kind", Json::str(kind.label())),
+                ("tier", Json::str(tier.label())),
+                ("queued", Json::Num(*queued as f64)),
+                ("capacity", Json::Num(*capacity as f64)),
+            ])),
+            _ => None,
+        };
+        WireError { code, message: e.to_string(), data }
+    }
+}
+
+/// A request frame: `{"jsonrpc":"2.0","id":N,"method":"...","params":...}`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    pub method: String,
+    pub params: Json,
+}
+
+impl Request {
+    pub fn new(id: u64, method: &str, params: Json) -> Request {
+        Request { id, method: method.to_string(), params }
+    }
+
+    /// Deterministic encoding (field order fixed).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("jsonrpc", Json::str(JSONRPC_VERSION)),
+            ("id", Json::Num(self.id as f64)),
+            ("method", Json::str(&self.method)),
+            ("params", self.params.clone()),
+        ])
+    }
+
+    /// Parse a request object. `Err` carries the code the server should
+    /// answer with (`InvalidRequest` for shape problems).
+    pub fn from_json(v: &Json) -> Result<Request, WireError> {
+        let bad = |m: &str| WireError::new(ErrorCode::InvalidRequest, m);
+        if v.get("jsonrpc").and_then(Json::as_str) != Some(JSONRPC_VERSION) {
+            return Err(bad("missing or unsupported jsonrpc version"));
+        }
+        let id = v
+            .get("id")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| bad("missing or non-integer id"))?;
+        let method = v
+            .get("method")
+            .and_then(Json::as_str)
+            .ok_or_else(|| bad("missing method"))?
+            .to_string();
+        let params = v.get("params").cloned().unwrap_or(Json::Null);
+        Ok(Request { id, method, params })
+    }
+}
+
+/// Response payload: a result or a structured error.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ResponseBody {
+    Result(Json),
+    Error(WireError),
+}
+
+/// A response frame, correlated to its request by `id`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Response {
+    pub id: u64,
+    pub body: ResponseBody,
+}
+
+impl Response {
+    pub fn result(id: u64, value: Json) -> Response {
+        Response { id, body: ResponseBody::Result(value) }
+    }
+
+    pub fn error(id: u64, err: WireError) -> Response {
+        Response { id, body: ResponseBody::Error(err) }
+    }
+
+    /// Deterministic encoding:
+    /// `{"jsonrpc":"2.0","id":N,"result":...}` or
+    /// `{"jsonrpc":"2.0","id":N,"error":{"code":C,"message":"...","data":...}}`
+    /// (`data` omitted when absent).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("jsonrpc".to_string(), Json::str(JSONRPC_VERSION)),
+            ("id".to_string(), Json::Num(self.id as f64)),
+        ];
+        match &self.body {
+            ResponseBody::Result(v) => fields.push(("result".to_string(), v.clone())),
+            ResponseBody::Error(e) => {
+                let mut err = vec![
+                    ("code".to_string(), Json::Num(e.code.code() as f64)),
+                    ("message".to_string(), Json::Str(e.message.clone())),
+                ];
+                if let Some(d) = &e.data {
+                    err.push(("data".to_string(), d.clone()));
+                }
+                fields.push(("error".to_string(), Json::Obj(err)));
+            }
+        }
+        Json::Obj(fields)
+    }
+
+    /// Parse a response object (client side).
+    pub fn from_json(v: &Json) -> Result<Response, String> {
+        if v.get("jsonrpc").and_then(Json::as_str) != Some(JSONRPC_VERSION) {
+            return Err("missing or unsupported jsonrpc version".into());
+        }
+        let id = v.get("id").and_then(Json::as_u64).ok_or("missing response id")?;
+        if let Some(result) = v.get("result") {
+            return Ok(Response::result(id, result.clone()));
+        }
+        let err = v.get("error").ok_or("response has neither result nor error")?;
+        let raw_code = err.get("code").and_then(Json::as_i64).ok_or("error without code")?;
+        let code = ErrorCode::from_code(raw_code)
+            .ok_or_else(|| format!("unknown error code {raw_code}"))?;
+        let message = err
+            .get("message")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string();
+        Ok(Response::error(id, WireError { code, message, data: err.get("data").cloned() }))
+    }
+}
+
+fn payload_to_json(p: &Payload) -> Json {
+    match p {
+        Payload::Dot { x, y } => Json::obj(vec![
+            ("type", Json::str("dot")),
+            ("x", Json::arr_f64(x)),
+            ("y", Json::arr_f64(y)),
+        ]),
+        Payload::Matmul { a, b, dim } => Json::obj(vec![
+            ("type", Json::str("matmul")),
+            ("dim", Json::Num(*dim as f64)),
+            ("a", Json::arr_f64(a)),
+            ("b", Json::arr_f64(b)),
+        ]),
+        Payload::Rk4 { y0, mu, dt, steps } => Json::obj(vec![
+            ("type", Json::str("rk4")),
+            ("y0", Json::arr_f64(y0)),
+            ("mu", Json::Num(*mu)),
+            ("dt", Json::Num(*dt)),
+            ("steps", Json::Num(*steps as f64)),
+        ]),
+    }
+}
+
+fn payload_from_json(v: &Json) -> Result<Payload, String> {
+    let ty = v.get("type").and_then(Json::as_str).ok_or("payload without type")?;
+    let vec_field = |k: &str| -> Result<Vec<f64>, String> {
+        v.get(k)
+            .and_then(Json::f64_vec)
+            .ok_or_else(|| format!("payload field {k:?} is not a number array"))
+    };
+    let num_field = |k: &str| -> Result<f64, String> {
+        v.get(k)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("payload field {k:?} is not a number"))
+    };
+    match ty {
+        "dot" => Ok(Payload::Dot { x: vec_field("x")?, y: vec_field("y")? }),
+        "matmul" => Ok(Payload::Matmul {
+            a: vec_field("a")?,
+            b: vec_field("b")?,
+            dim: v
+                .get("dim")
+                .and_then(Json::as_u64)
+                .ok_or("matmul payload without integral dim")? as usize,
+        }),
+        "rk4" => Ok(Payload::Rk4 {
+            y0: vec_field("y0")?,
+            mu: num_field("mu")?,
+            dt: num_field("dt")?,
+            steps: v
+                .get("steps")
+                .and_then(Json::as_u64)
+                .ok_or("rk4 payload without integral steps")?,
+        }),
+        other => Err(format!("unknown payload type {other:?}")),
+    }
+}
+
+/// Serialize a spec:
+/// `{"kind":"dot/hrfna","tier":"paper","tolerance":T,"payload":{...}}`
+/// (`tolerance` omitted when `None`).
+pub fn spec_to_json(spec: &JobSpec) -> Json {
+    let mut fields = vec![
+        ("kind".to_string(), Json::str(spec.kind.label())),
+        ("tier".to_string(), Json::str(spec.tier.label())),
+    ];
+    if let Some(tol) = spec.tolerance {
+        fields.push(("tolerance".to_string(), Json::Num(tol)));
+    }
+    fields.push(("payload".to_string(), payload_to_json(&spec.payload)));
+    Json::Obj(fields)
+}
+
+/// Inverse of [`spec_to_json`].
+pub fn spec_from_json(v: &Json) -> Result<JobSpec, String> {
+    let kind_label = v.get("kind").and_then(Json::as_str).ok_or("spec without kind")?;
+    let kind =
+        JobKind::from_label(kind_label).ok_or_else(|| format!("unknown kind {kind_label:?}"))?;
+    let tier = match v.get("tier") {
+        None => Tier::Paper,
+        Some(t) => {
+            let label = t.as_str().ok_or("tier is not a string")?;
+            Tier::from_label(label).ok_or_else(|| format!("unknown tier {label:?}"))?
+        }
+    };
+    let tolerance = match v.get("tolerance") {
+        None | Some(Json::Null) => None,
+        Some(t) => Some(t.as_f64().ok_or("tolerance is not a number")?),
+    };
+    let payload = payload_from_json(v.get("payload").ok_or("spec without payload")?)?;
+    Ok(JobSpec { kind, payload, tier, tolerance })
+}
+
+/// Serialize a result:
+/// `{"id":N,"kind":K,"tier":T,"values":[...],"latency_us":L,"batch_size":B}`.
+pub fn result_to_json(r: &JobResult) -> Json {
+    Json::obj(vec![
+        ("id", Json::Num(r.id as f64)),
+        ("kind", Json::str(r.kind.label())),
+        ("tier", Json::str(r.tier.label())),
+        ("values", Json::arr_f64(&r.values)),
+        ("latency_us", Json::Num(r.latency_us)),
+        ("batch_size", Json::Num(r.batch_size as f64)),
+    ])
+}
+
+/// Inverse of [`result_to_json`]. Failed-job NaN sentinels survive the
+/// trip as `null` → NaN.
+pub fn result_from_json(v: &Json) -> Result<JobResult, String> {
+    let kind_label = v.get("kind").and_then(Json::as_str).ok_or("result without kind")?;
+    let tier_label = v.get("tier").and_then(Json::as_str).ok_or("result without tier")?;
+    Ok(JobResult {
+        id: v.get("id").and_then(Json::as_u64).ok_or("result without id")?,
+        kind: JobKind::from_label(kind_label)
+            .ok_or_else(|| format!("unknown kind {kind_label:?}"))?,
+        tier: Tier::from_label(tier_label)
+            .ok_or_else(|| format!("unknown tier {tier_label:?}"))?,
+        values: v
+            .get("values")
+            .and_then(Json::f64_vec)
+            .ok_or("result without values array")?,
+        latency_us: v
+            .get("latency_us")
+            .and_then(Json::as_f64)
+            .ok_or("result without latency_us")?,
+        batch_size: v
+            .get("batch_size")
+            .and_then(Json::as_u64)
+            .ok_or("result without batch_size")? as usize,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_codes_are_stable_and_unique() {
+        let expect: &[(ErrorCode, i64)] = &[
+            (ErrorCode::ParseError, -32700),
+            (ErrorCode::InvalidRequest, -32600),
+            (ErrorCode::MethodNotFound, -32601),
+            (ErrorCode::InvalidParams, -32602),
+            (ErrorCode::Internal, -32603),
+            (ErrorCode::Rejected, -32001),
+            (ErrorCode::Overloaded, -32002),
+            (ErrorCode::ShuttingDown, -32003),
+            (ErrorCode::RateLimited, -32004),
+            (ErrorCode::TooManyInFlight, -32005),
+        ];
+        assert_eq!(expect.len(), ErrorCode::ALL.len());
+        for &(c, n) in expect {
+            assert_eq!(c.code(), n, "{}", c.label());
+            assert_eq!(ErrorCode::from_code(n), Some(c));
+        }
+        assert_eq!(ErrorCode::from_code(-1), None);
+    }
+
+    #[test]
+    fn submit_errors_map_to_backpressure_codes() {
+        let overloaded = SubmitError::Overloaded {
+            kind: JobKind::DotHybrid,
+            tier: Tier::Wide,
+            queued: 32,
+            capacity: 32,
+        };
+        let w = WireError::from_submit_error(&overloaded);
+        assert_eq!(w.code, ErrorCode::Overloaded);
+        assert!(w.code.is_backpressure());
+        let data = w.data.unwrap();
+        assert_eq!(data.get("kind").unwrap().as_str(), Some("dot/hrfna"));
+        assert_eq!(data.get("tier").unwrap().as_str(), Some("wide"));
+        assert_eq!(data.get("queued").unwrap().as_u64(), Some(32));
+        assert_eq!(data.get("capacity").unwrap().as_u64(), Some(32));
+
+        let rejected = WireError::from_submit_error(&SubmitError::Rejected("bad shape".into()));
+        assert_eq!(rejected.code, ErrorCode::Rejected);
+        assert!(!rejected.code.is_backpressure());
+        assert!(rejected.data.is_none());
+
+        assert_eq!(
+            WireError::from_submit_error(&SubmitError::ShuttingDown).code,
+            ErrorCode::ShuttingDown,
+        );
+    }
+
+    #[test]
+    fn request_round_trip() {
+        let req = Request::new(7, "submit", Json::obj(vec![("kind", Json::str("dot/hrfna"))]));
+        let encoded = req.to_json().encode();
+        assert!(encoded.starts_with("{\"jsonrpc\":\"2.0\",\"id\":7,\"method\":\"submit\""));
+        let back = Request::from_json(&Json::parse(&encoded).unwrap()).unwrap();
+        assert_eq!(back, req);
+    }
+
+    #[test]
+    fn malformed_requests_yield_invalid_request() {
+        for bad in [
+            "{}",
+            "{\"jsonrpc\":\"1.0\",\"id\":1,\"method\":\"ping\"}",
+            "{\"jsonrpc\":\"2.0\",\"method\":\"ping\"}",
+            "{\"jsonrpc\":\"2.0\",\"id\":-1,\"method\":\"ping\"}",
+            "{\"jsonrpc\":\"2.0\",\"id\":1}",
+        ] {
+            let err = Request::from_json(&Json::parse(bad).unwrap()).unwrap_err();
+            assert_eq!(err.code, ErrorCode::InvalidRequest, "{bad}");
+        }
+    }
+
+    #[test]
+    fn response_round_trip_both_arms() {
+        let ok = Response::result(3, Json::str("pong"));
+        let back = Response::from_json(&Json::parse(&ok.to_json().encode()).unwrap()).unwrap();
+        assert_eq!(back, ok);
+
+        let err = Response::error(
+            4,
+            WireError {
+                code: ErrorCode::RateLimited,
+                message: "slow down".into(),
+                data: Some(Json::Num(12.0)),
+            },
+        );
+        let text = err.to_json().encode();
+        assert!(text.contains("\"code\":-32004"));
+        let back = Response::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, err);
+    }
+
+    #[test]
+    fn spec_round_trips_all_payload_kinds() {
+        let specs = [
+            JobSpec::new(
+                JobKind::DotHybrid,
+                Payload::Dot { x: vec![1.0, -2.5], y: vec![0.5, 4.0] },
+            )
+            .with_tier(Tier::Lo)
+            .with_tolerance(1e-3),
+            JobSpec::new(
+                JobKind::MatmulF32,
+                Payload::Matmul { a: vec![1.0; 4], b: vec![2.0; 4], dim: 2 },
+            ),
+            JobSpec::new(
+                JobKind::Rk4Hybrid,
+                Payload::Rk4 { y0: vec![2.0, 0.0], mu: 1.5, dt: 0.01, steps: 32 },
+            )
+            .with_tier(Tier::Wide),
+        ];
+        for spec in &specs {
+            let text = spec_to_json(spec).encode();
+            let back = spec_from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back.kind, spec.kind);
+            assert_eq!(back.tier, spec.tier);
+            assert_eq!(back.tolerance, spec.tolerance);
+            assert_eq!(spec_to_json(&back).encode(), text, "canonical re-encode");
+        }
+        // Tier defaults to paper when absent (old clients).
+        let spec = spec_from_json(
+            &Json::parse(
+                "{\"kind\":\"dot/fp32\",\"payload\":{\"type\":\"dot\",\"x\":[1],\"y\":[2]}}",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(spec.tier, Tier::Paper);
+        assert!(spec.tolerance.is_none());
+    }
+
+    #[test]
+    fn bad_specs_are_decode_errors() {
+        for bad in [
+            "{\"payload\":{\"type\":\"dot\",\"x\":[],\"y\":[]}}",
+            "{\"kind\":\"nope\",\"payload\":{\"type\":\"dot\",\"x\":[],\"y\":[]}}",
+            "{\"kind\":\"dot/hrfna\",\"tier\":\"huge\",\"payload\":{\"type\":\"dot\",\"x\":[],\"y\":[]}}",
+            "{\"kind\":\"dot/hrfna\"}",
+            "{\"kind\":\"dot/hrfna\",\"payload\":{\"type\":\"warp\"}}",
+            "{\"kind\":\"matmul/hrfna\",\"payload\":{\"type\":\"matmul\",\"a\":[],\"b\":[]}}",
+        ] {
+            assert!(spec_from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn result_round_trips_including_nan_values() {
+        let r = JobResult {
+            id: 11,
+            kind: JobKind::Rk4Hybrid,
+            tier: Tier::Wide,
+            values: vec![1.25, f64::NAN],
+            latency_us: 123.5,
+            batch_size: 16,
+        };
+        let text = result_to_json(&r).encode();
+        assert!(text.contains("null"), "NaN encodes as null: {text}");
+        let back = result_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.id, r.id);
+        assert_eq!(back.kind, r.kind);
+        assert_eq!(back.tier, r.tier);
+        assert_eq!(back.values[0], 1.25);
+        assert!(back.values[1].is_nan());
+        assert_eq!(back.latency_us, 123.5);
+        assert_eq!(back.batch_size, 16);
+    }
+}

@@ -1,0 +1,757 @@
+//! The RPC server: a std-only async shim over the coordinator. One
+//! nonblocking accept loop plus **two threads per connection** — a
+//! *reader* that decodes frames, enforces the client's quotas and
+//! submits to the coordinator, and a *completer* that owns the socket's
+//! write half, waits on the per-job result channels, and writes
+//! responses as they complete. Submission therefore never blocks on
+//! earlier jobs: a client may pipeline hundreds of `submit` frames and
+//! receive the responses out of order (correlated by request id), which
+//! is what keeps the coordinator's batcher fed from a single connection.
+//!
+//! The thread budget is bounded by connections (2/conn), not by jobs —
+//! job execution stays on the coordinator's worker pool. This is the
+//! same blocking-core/async-edge split darkfi's JSON-RPC server makes,
+//! minus the executor dependency.
+//!
+//! ## Methods
+//!
+//! | method         | params                    | result                        |
+//! |----------------|---------------------------|-------------------------------|
+//! | `ping`         | —                         | `"pong"`                      |
+//! | `submit`       | spec object               | job-result object             |
+//! | `submit_batch` | `{"specs":[spec, ...]}`   | array of per-spec entries     |
+//! | `metrics`      | —                         | rendered coordinator + wire tables |
+//! | `shutdown`     | —                         | `"draining"` (server drains and exits) |
+//!
+//! Quotas are per connection (the wire client identity): a token-bucket
+//! submission rate (`RateLimited` when dry) and an in-flight cap
+//! (`TooManyInFlight`). Both shed load with typed errors instead of
+//! stalling the socket, mirroring how the coordinator's bounded queues
+//! shed with `Overloaded`.
+
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::metrics::{ClientCounters, WireMetrics};
+use crate::coordinator::request::JobResult;
+use crate::coordinator::server::Coordinator;
+
+use super::codec::{write_frame, FrameReader, MAX_FRAME_BYTES};
+use super::json::Json;
+use super::protocol::{
+    result_to_json, spec_from_json, ErrorCode, Request, Response, ResponseBody, WireError,
+};
+
+/// Per-connection quota limits.
+#[derive(Clone, Copy, Debug)]
+pub struct QuotaConfig {
+    /// Max jobs a connection may have in flight (accepted, result not
+    /// yet delivered). 0 disables submission entirely.
+    pub max_inflight: usize,
+    /// Sustained submissions/second through the token bucket; `<= 0`
+    /// means unlimited.
+    pub rate_per_s: f64,
+    /// Token-bucket depth: the burst a client may submit at line rate.
+    pub burst: f64,
+}
+
+impl Default for QuotaConfig {
+    fn default() -> QuotaConfig {
+        QuotaConfig { max_inflight: 256, rate_per_s: 0.0, burst: 64.0 }
+    }
+}
+
+/// A token bucket: `burst` capacity refilled at `rate_per_s`.
+pub struct TokenBucket {
+    rate: f64,
+    burst: f64,
+    tokens: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    /// Bucket that starts full. `rate_per_s <= 0` disables limiting.
+    pub fn new(rate_per_s: f64, burst: f64) -> TokenBucket {
+        TokenBucket { rate: rate_per_s, burst: burst.max(1.0), tokens: burst.max(1.0), last: Instant::now() }
+    }
+
+    /// Take one token at time `now` (injectable for tests).
+    pub fn try_take_at(&mut self, now: Instant) -> bool {
+        if self.rate <= 0.0 {
+            return true;
+        }
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.tokens = (self.tokens + dt * self.rate).min(self.burst);
+        self.last = now;
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Take one token now.
+    pub fn try_take(&mut self) -> bool {
+        self.try_take_at(Instant::now())
+    }
+}
+
+/// Server tuning.
+#[derive(Clone, Copy, Debug)]
+pub struct RpcServerConfig {
+    /// Per-frame payload cap.
+    pub max_frame_bytes: usize,
+    /// Per-connection quotas.
+    pub quota: QuotaConfig,
+    /// Socket read timeout — the interval at which a blocked reader
+    /// rechecks the stop flag. Small enough for prompt shutdown, large
+    /// enough to stay off the scheduler.
+    pub read_timeout: Duration,
+}
+
+impl Default for RpcServerConfig {
+    fn default() -> RpcServerConfig {
+        RpcServerConfig {
+            max_frame_bytes: MAX_FRAME_BYTES,
+            quota: QuotaConfig::default(),
+            read_timeout: Duration::from_millis(50),
+        }
+    }
+}
+
+/// How long the completer waits on an accepted job's result channel
+/// before answering `Internal` — matches `serve_load::RESULT_TIMEOUT`'s
+/// wedge-detection role.
+const PENDING_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Poll interval of the accept loop's stop check.
+const ACCEPT_POLL: Duration = Duration::from_millis(10);
+
+/// Work the reader hands its connection's completer.
+enum Work {
+    /// A fully-formed response (errors, ping, metrics, ...).
+    Respond(Response),
+    /// One accepted submission: respond when the result arrives.
+    Wait { id: u64, rx: mpsc::Receiver<JobResult> },
+    /// A batch: respond when every part resolves. Parts rejected at
+    /// submission are already `Ready` error entries.
+    WaitBatch { id: u64, parts: Vec<Slot> },
+}
+
+/// One entry of a pending response.
+enum Slot {
+    Wait(mpsc::Receiver<JobResult>),
+    Ready(Json),
+}
+
+/// A batch entry: `{"result": ...}` or `{"error": {...}}` in the
+/// response array.
+fn batch_entry_ok(r: &JobResult) -> Json {
+    Json::obj(vec![("result", result_to_json(r))])
+}
+
+fn batch_entry_err(e: &WireError) -> Json {
+    let mut err = vec![
+        ("code".to_string(), Json::Num(e.code.code() as f64)),
+        ("message".to_string(), Json::Str(e.message.clone())),
+    ];
+    if let Some(d) = &e.data {
+        err.push(("data".to_string(), d.clone()));
+    }
+    Json::obj(vec![("error", Json::Obj(err))])
+}
+
+/// The running RPC server. [`RpcServer::stop`] tears the whole edge down
+/// (accept loop, then every connection's thread pair) and returns the
+/// wire metrics for reporting.
+pub struct RpcServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    drain_requested: Arc<AtomicBool>,
+    wire: Arc<WireMetrics>,
+    accept_thread: Option<thread::JoinHandle<()>>,
+}
+
+impl RpcServer {
+    /// Bind `addr` and start serving `coord` in background threads.
+    pub fn bind(coord: Arc<Coordinator>, addr: &str, cfg: RpcServerConfig) -> Result<RpcServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        let local = listener.local_addr().context("local_addr")?;
+        listener.set_nonblocking(true).context("nonblocking listener")?;
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let drain_requested = Arc::new(AtomicBool::new(false));
+        let wire = Arc::new(WireMetrics::default());
+
+        let accept_thread = {
+            let stop = Arc::clone(&stop);
+            let drain = Arc::clone(&drain_requested);
+            let wire = Arc::clone(&wire);
+            thread::Builder::new()
+                .name("rpc-accept".into())
+                .spawn(move || accept_loop(listener, coord, cfg, stop, drain, wire))
+                .context("spawn accept loop")?
+        };
+
+        Ok(RpcServer {
+            addr: local,
+            stop,
+            drain_requested,
+            wire,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    /// The bound address (port resolved when binding `:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Wire metrics (live).
+    pub fn wire_metrics(&self) -> &Arc<WireMetrics> {
+        &self.wire
+    }
+
+    /// True once a client has called `shutdown` (or `stop` began).
+    pub fn shutdown_requested(&self) -> bool {
+        self.drain_requested.load(Ordering::SeqCst) || self.stop.load(Ordering::SeqCst)
+    }
+
+    /// Block until a `shutdown` request arrives.
+    pub fn wait_shutdown(&self) {
+        while !self.shutdown_requested() {
+            thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    /// Stop accepting, drain every connection's in-flight responses, and
+    /// join all threads. Returns the wire metrics for reporting.
+    pub fn stop(mut self) -> Arc<WireMetrics> {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+        Arc::clone(&self.wire)
+    }
+}
+
+impl Drop for RpcServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    coord: Arc<Coordinator>,
+    cfg: RpcServerConfig,
+    stop: Arc<AtomicBool>,
+    drain: Arc<AtomicBool>,
+    wire: Arc<WireMetrics>,
+) {
+    let mut conns: Vec<thread::JoinHandle<()>> = Vec::new();
+    let mut seq = 0u64;
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                seq += 1;
+                let label = format!("{peer}#{seq}");
+                let coord = Arc::clone(&coord);
+                let stop = Arc::clone(&stop);
+                let drain = Arc::clone(&drain);
+                let wire = Arc::clone(&wire);
+                let h = thread::Builder::new()
+                    .name(format!("rpc-conn-{seq}"))
+                    .spawn(move || serve_conn(stream, label, coord, cfg, stop, drain, wire))
+                    .expect("spawn rpc connection thread");
+                conns.push(h);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                thread::sleep(ACCEPT_POLL);
+            }
+            // Transient accept errors (e.g. aborted handshake) — keep
+            // serving; the listener itself is fine.
+            Err(_) => thread::sleep(ACCEPT_POLL),
+        }
+        // Reap finished connections so the handle list stays bounded.
+        conns.retain(|h| !h.is_finished());
+    }
+    for h in conns {
+        let _ = h.join();
+    }
+}
+
+/// One connection: runs the reader loop inline, with a completer thread
+/// owning the write half.
+fn serve_conn(
+    stream: TcpStream,
+    label: String,
+    coord: Arc<Coordinator>,
+    cfg: RpcServerConfig,
+    stop: Arc<AtomicBool>,
+    drain: Arc<AtomicBool>,
+    wire: Arc<WireMetrics>,
+) {
+    let counters = wire.register_client(&label);
+    let inflight = Arc::new(AtomicUsize::new(0));
+
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => {
+            wire.record_conn_closed();
+            return;
+        }
+    };
+    let _ = stream.set_read_timeout(Some(cfg.read_timeout));
+    let _ = stream.set_nodelay(true);
+    let _ = write_half.set_nodelay(true);
+
+    let (work_tx, work_rx) = mpsc::channel::<Work>();
+    let completer = {
+        let wire = Arc::clone(&wire);
+        let counters = Arc::clone(&counters);
+        let inflight = Arc::clone(&inflight);
+        thread::Builder::new()
+            .name("rpc-completer".into())
+            .spawn(move || completer_loop(write_half, work_rx, wire, counters, inflight))
+            .expect("spawn rpc completer thread")
+    };
+
+    reader_loop(stream, &coord, &cfg, &stop, &drain, &wire, &counters, &inflight, &work_tx);
+
+    // Dropping the sender lets the completer flush pending responses and
+    // exit; join it before declaring the connection closed.
+    drop(work_tx);
+    let _ = completer.join();
+    wire.record_conn_closed();
+}
+
+#[allow(clippy::too_many_arguments)]
+fn reader_loop(
+    mut stream: TcpStream,
+    coord: &Coordinator,
+    cfg: &RpcServerConfig,
+    stop: &AtomicBool,
+    drain: &AtomicBool,
+    wire: &WireMetrics,
+    counters: &ClientCounters,
+    inflight: &AtomicUsize,
+    work_tx: &mpsc::Sender<Work>,
+) {
+    let mut frames = FrameReader::new(cfg.max_frame_bytes);
+    let mut bucket = TokenBucket::new(cfg.quota.rate_per_s, cfg.quota.burst);
+    let stop_fn = || stop.load(Ordering::SeqCst);
+    loop {
+        let payload = match frames.read_frame(&mut stream, &stop_fn) {
+            Ok(Some(p)) => p,
+            // Clean close or stop — either way the reader is done.
+            Ok(None) => return,
+            Err(_) => {
+                wire.record_protocol_error();
+                return;
+            }
+        };
+        wire.record_frame_in(counters, payload.len());
+
+        let text = match std::str::from_utf8(&payload) {
+            Ok(t) => t,
+            Err(_) => {
+                wire.record_protocol_error();
+                respond_err(work_tx, 0, WireError::new(ErrorCode::ParseError, "frame is not UTF-8"));
+                continue;
+            }
+        };
+        let value = match Json::parse(text) {
+            Ok(v) => v,
+            Err(e) => {
+                wire.record_protocol_error();
+                respond_err(work_tx, 0, WireError::new(ErrorCode::ParseError, e));
+                continue;
+            }
+        };
+        let req = match Request::from_json(&value) {
+            Ok(r) => r,
+            Err(e) => {
+                wire.record_protocol_error();
+                // Echo the id when the shape at least carried one.
+                let id = value.get("id").and_then(Json::as_u64).unwrap_or(0);
+                respond_err(work_tx, id, e);
+                continue;
+            }
+        };
+
+        match req.method.as_str() {
+            "ping" => {
+                let _ = work_tx.send(Work::Respond(Response::result(req.id, Json::str("pong"))));
+            }
+            "metrics" => {
+                let body = Json::obj(vec![
+                    ("coordinator", Json::Str(coord.metrics_table().render())),
+                    ("wire", Json::Str(wire.table().render())),
+                ]);
+                let _ = work_tx.send(Work::Respond(Response::result(req.id, body)));
+            }
+            "shutdown" => {
+                drain.store(true, Ordering::SeqCst);
+                let _ =
+                    work_tx.send(Work::Respond(Response::result(req.id, Json::str("draining"))));
+            }
+            "submit" => {
+                match admit_one(&req.params, coord, cfg, drain, wire, counters, inflight, &mut bucket)
+                {
+                    Ok(rx) => {
+                        let _ = work_tx.send(Work::Wait { id: req.id, rx });
+                    }
+                    Err(e) => respond_err(work_tx, req.id, e),
+                }
+            }
+            "submit_batch" => {
+                let specs = match req.params.get("specs").and_then(Json::as_arr) {
+                    Some(s) => s,
+                    None => {
+                        respond_err(
+                            work_tx,
+                            req.id,
+                            WireError::new(ErrorCode::InvalidParams, "params.specs must be an array"),
+                        );
+                        continue;
+                    }
+                };
+                let parts: Vec<Slot> = specs
+                    .iter()
+                    .map(|spec| {
+                        match admit_one(spec, coord, cfg, drain, wire, counters, inflight, &mut bucket)
+                        {
+                            Ok(rx) => Slot::Wait(rx),
+                            Err(e) => Slot::Ready(batch_entry_err(&e)),
+                        }
+                    })
+                    .collect();
+                let _ = work_tx.send(Work::WaitBatch { id: req.id, parts });
+            }
+            other => {
+                respond_err(
+                    work_tx,
+                    req.id,
+                    WireError::new(ErrorCode::MethodNotFound, format!("unknown method {other:?}")),
+                );
+            }
+        }
+    }
+}
+
+/// Decode + quota-check + submit one spec. The error is exactly what
+/// goes on the wire.
+#[allow(clippy::too_many_arguments)]
+fn admit_one(
+    params: &Json,
+    coord: &Coordinator,
+    cfg: &RpcServerConfig,
+    drain: &AtomicBool,
+    wire: &WireMetrics,
+    counters: &ClientCounters,
+    inflight: &AtomicUsize,
+    bucket: &mut TokenBucket,
+) -> Result<mpsc::Receiver<JobResult>, WireError> {
+    let spec = spec_from_json(params)
+        .map_err(|e| WireError::new(ErrorCode::InvalidParams, e))?;
+    if drain.load(Ordering::SeqCst) {
+        return Err(WireError::new(ErrorCode::ShuttingDown, "server is draining"));
+    }
+    if !bucket.try_take() {
+        wire.record_rate_limited(counters);
+        return Err(WireError::new(
+            ErrorCode::RateLimited,
+            format!("submission rate above {}/s", cfg.quota.rate_per_s),
+        ));
+    }
+    if inflight.load(Ordering::SeqCst) >= cfg.quota.max_inflight {
+        wire.record_inflight_limited(counters);
+        return Err(WireError::new(
+            ErrorCode::TooManyInFlight,
+            format!("more than {} jobs in flight", cfg.quota.max_inflight),
+        ));
+    }
+    match coord.submit_spec(spec) {
+        Ok(rx) => {
+            inflight.fetch_add(1, Ordering::SeqCst);
+            wire.record_submit(counters);
+            Ok(rx)
+        }
+        Err(e) => Err(WireError::from_submit_error(&e)),
+    }
+}
+
+fn respond_err(work_tx: &mpsc::Sender<Work>, id: u64, err: WireError) {
+    let _ = work_tx.send(Work::Respond(Response::error(id, err)));
+}
+
+/// A response being assembled by the completer.
+struct Pending {
+    id: u64,
+    slots: Vec<Slot>,
+    /// Batch responses render as an entry array even for one spec;
+    /// single submits render the bare result object.
+    batch: bool,
+    since: Instant,
+}
+
+fn completer_loop(
+    mut w: TcpStream,
+    work_rx: mpsc::Receiver<Work>,
+    wire: Arc<WireMetrics>,
+    counters: Arc<ClientCounters>,
+    inflight: Arc<AtomicUsize>,
+) {
+    let mut pending: Vec<Pending> = Vec::new();
+    let mut open = true;
+    let mut dead = false; // write half failed — stop responding, just drain
+
+    while open || !pending.is_empty() {
+        // Take new work; block briefly only when nothing is pending.
+        let first = if pending.is_empty() {
+            match work_rx.recv_timeout(Duration::from_millis(25)) {
+                Ok(wk) => Some(wk),
+                Err(mpsc::RecvTimeoutError::Timeout) => None,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    open = false;
+                    None
+                }
+            }
+        } else {
+            None
+        };
+        let mut batch_in: Vec<Work> = first.into_iter().collect();
+        loop {
+            match work_rx.try_recv() {
+                Ok(wk) => batch_in.push(wk),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    open = false;
+                    break;
+                }
+            }
+        }
+        for wk in batch_in {
+            match wk {
+                Work::Respond(resp) => {
+                    write_response(&mut w, &resp, &wire, &counters, &mut dead);
+                }
+                Work::Wait { id, rx } => pending.push(Pending {
+                    id,
+                    slots: vec![Slot::Wait(rx)],
+                    batch: false,
+                    since: Instant::now(),
+                }),
+                Work::WaitBatch { id, parts } => pending.push(Pending {
+                    id,
+                    slots: parts,
+                    batch: true,
+                    since: Instant::now(),
+                }),
+            }
+        }
+
+        // Poll pending result channels.
+        let mut i = 0;
+        while i < pending.len() {
+            let timed_out = pending[i].since.elapsed() > PENDING_TIMEOUT;
+            let mut all_ready = true;
+            for slot in pending[i].slots.iter_mut() {
+                if let Slot::Wait(rx) = slot {
+                    match rx.try_recv() {
+                        Ok(result) => {
+                            inflight.fetch_sub(1, Ordering::SeqCst);
+                            wire.record_result(&counters);
+                            *slot = Slot::Ready(batch_entry_ok(&result));
+                        }
+                        Err(mpsc::TryRecvError::Empty) if !timed_out => all_ready = false,
+                        // Coordinator dropped the reply channel, or the
+                        // wait timed out: an internal failure, not a
+                        // typed rejection.
+                        Err(e) => {
+                            inflight.fetch_sub(1, Ordering::SeqCst);
+                            let msg = match e {
+                                mpsc::TryRecvError::Disconnected => "result channel closed",
+                                mpsc::TryRecvError::Empty => "result wait timed out",
+                            };
+                            *slot = Slot::Ready(batch_entry_err(&WireError::new(
+                                ErrorCode::Internal,
+                                msg,
+                            )));
+                        }
+                    }
+                }
+            }
+            if all_ready {
+                let p = pending.swap_remove(i);
+                let resp = assemble(p);
+                write_response(&mut w, &resp, &wire, &counters, &mut dead);
+            } else {
+                i += 1;
+            }
+        }
+
+        if !pending.is_empty() {
+            thread::sleep(Duration::from_micros(200));
+        }
+    }
+    let _ = w.shutdown(std::net::Shutdown::Write);
+}
+
+/// Build the final response from resolved slots.
+fn assemble(p: Pending) -> Response {
+    let ready: Vec<Json> = p
+        .slots
+        .into_iter()
+        .map(|s| match s {
+            Slot::Ready(v) => v,
+            Slot::Wait(_) => unreachable!("assemble called with unresolved slot"),
+        })
+        .collect();
+    if p.batch {
+        return Response::result(p.id, Json::Arr(ready));
+    }
+    // Single submit: unwrap the {"result": ...} / {"error": ...} entry.
+    let entry = ready.into_iter().next().expect("single submit has one slot");
+    if let Some(result) = entry.get("result") {
+        Response::result(p.id, result.clone())
+    } else {
+        let err = entry.get("error").expect("entry is result or error");
+        let code = err
+            .get("code")
+            .and_then(Json::as_i64)
+            .and_then(ErrorCode::from_code)
+            .unwrap_or(ErrorCode::Internal);
+        let message = err.get("message").and_then(Json::as_str).unwrap_or_default().to_string();
+        Response::error(p.id, WireError { code, message, data: err.get("data").cloned() })
+    }
+}
+
+fn write_response(
+    w: &mut TcpStream,
+    resp: &Response,
+    wire: &WireMetrics,
+    counters: &ClientCounters,
+    dead: &mut bool,
+) {
+    if *dead {
+        return;
+    }
+    if matches!(resp.body, ResponseBody::Error(_)) {
+        wire.record_wire_error(counters);
+    }
+    let payload = resp.to_json().encode();
+    if write_frame(w, payload.as_bytes()).is_err() || w.flush().is_err() {
+        // Peer is gone; keep draining result channels so inflight
+        // accounting stays truthful, but stop writing.
+        *dead = true;
+    } else {
+        wire.record_frame_out(counters, payload.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_bucket_enforces_rate_and_burst() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(10.0, 2.0);
+        // Burst of 2, then dry.
+        assert!(b.try_take_at(t0));
+        assert!(b.try_take_at(t0));
+        assert!(!b.try_take_at(t0));
+        // 100 ms refills exactly one token at 10/s.
+        let t1 = t0 + Duration::from_millis(100);
+        assert!(b.try_take_at(t1));
+        assert!(!b.try_take_at(t1));
+        // Refill clamps at burst: a long idle spell yields 2, not 20.
+        let t2 = t1 + Duration::from_secs(60);
+        assert!(b.try_take_at(t2));
+        assert!(b.try_take_at(t2));
+        assert!(!b.try_take_at(t2));
+    }
+
+    #[test]
+    fn token_bucket_zero_rate_is_unlimited() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(0.0, 1.0);
+        for _ in 0..1000 {
+            assert!(b.try_take_at(t0));
+        }
+    }
+
+    #[test]
+    fn batch_entries_have_the_documented_shape() {
+        let r = JobResult {
+            id: 1,
+            kind: crate::coordinator::request::JobKind::DotHybrid,
+            tier: crate::hybrid::registry::Tier::Paper,
+            values: vec![2.0],
+            latency_us: 10.0,
+            batch_size: 1,
+        };
+        let ok = batch_entry_ok(&r);
+        assert!(ok.get("result").is_some());
+        let err = batch_entry_err(&WireError::new(ErrorCode::RateLimited, "slow down"));
+        assert_eq!(
+            err.get("error").unwrap().get("code").unwrap().as_i64(),
+            Some(ErrorCode::RateLimited.code())
+        );
+    }
+
+    #[test]
+    fn assemble_unwraps_single_and_keeps_batch_array() {
+        let entry = Json::obj(vec![("result", Json::str("x"))]);
+        let single = assemble(Pending {
+            id: 5,
+            slots: vec![Slot::Ready(entry.clone())],
+            batch: false,
+            since: Instant::now(),
+        });
+        assert_eq!(single, Response::result(5, Json::str("x")));
+
+        let batch = assemble(Pending {
+            id: 6,
+            slots: vec![
+                Slot::Ready(entry),
+                Slot::Ready(batch_entry_err(&WireError::new(ErrorCode::Overloaded, "full"))),
+            ],
+            batch: true,
+            since: Instant::now(),
+        });
+        match batch.body {
+            ResponseBody::Result(Json::Arr(entries)) => assert_eq!(entries.len(), 2),
+            other => panic!("expected array result, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn assemble_maps_error_entries_to_wire_errors() {
+        let resp = assemble(Pending {
+            id: 9,
+            slots: vec![Slot::Ready(batch_entry_err(&WireError::new(
+                ErrorCode::ShuttingDown,
+                "draining",
+            )))],
+            batch: false,
+            since: Instant::now(),
+        });
+        match resp.body {
+            ResponseBody::Error(e) => assert_eq!(e.code, ErrorCode::ShuttingDown),
+            other => panic!("expected error, got {other:?}"),
+        }
+    }
+}

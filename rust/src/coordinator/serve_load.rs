@@ -9,6 +9,14 @@
 //! mixed-**tier** traffic (different requested tiers and tolerances per
 //! request) as naturally as mixed-kind traffic — the multi-scenario load
 //! shape the tier registry exists to serve.
+//!
+//! The generators here drive the coordinator **in-process** (a Rust call
+//! per submission). Their socket-level counterparts live in
+//! `coordinator::rpc::load` (`--features rpc`) and share [`LoadReport`];
+//! the socket closed loop holds **one persistent connection per client**
+//! for the whole run, so it measures steady-state wire throughput, not
+//! per-job connect overhead (a reconnect-per-job mode exists purely to
+//! quantify that overhead in `bench_rpc`).
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
@@ -37,7 +45,9 @@ pub struct LoadReport {
 }
 
 impl LoadReport {
-    fn from_parts(
+    /// Assemble a report from raw counts (shared with the socket-level
+    /// generators in `coordinator::rpc::load`).
+    pub(crate) fn from_parts(
         offered: usize,
         accepted: usize,
         rejected: usize,

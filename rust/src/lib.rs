@@ -34,7 +34,10 @@
 //!   (default, offline).
 //! * [`coordinator`] — request router with precision-tier resolution
 //!   over the [`hybrid::ContextRegistry`], fixed-shape batcher,
-//!   scheduler, per-tier metrics, server loop (Layer 3).
+//!   scheduler, per-tier metrics, server loop (Layer 3). With
+//!   `--features rpc`, `coordinator::rpc` adds the network serving
+//!   edge: length-prefix-framed JSON-RPC over TCP with per-client
+//!   quotas and typed backpressure error codes.
 //! * [`config`] — typed configuration + TOML-subset parser + presets.
 
 pub mod util;

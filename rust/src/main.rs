@@ -8,6 +8,8 @@
 //!   resources   iso-throughput resource + energy comparison (§VII/VIII)
 //!   tables      qualitative Tables I & IV
 //!   serve       start the coordinator and run a mixed request workload
+//!   serve-rpc   serve the coordinator over TCP JSON-RPC (--features rpc)
+//!   rpc-load    drive a serve-rpc server with socket-level load (--features rpc)
 
 use hrfna::baselines::{Bfp, BfpConfig};
 use hrfna::config::HrfnaConfig;
@@ -37,12 +39,14 @@ fn main() {
         Some("resources") => cmd_resources(&cfg),
         Some("tables") => cmd_tables(),
         Some("serve") => cmd_serve(&args, &cfg),
+        Some("serve-rpc") => cmd_serve_rpc(&args, &cfg),
+        Some("rpc-load") => cmd_rpc_load(&args),
         other => {
             if let Some(o) = other {
                 eprintln!("unknown subcommand {o}");
             }
             eprintln!(
-                "usage: hrfna <info|dot|matmul|rk4|resources|tables|serve> \
+                "usage: hrfna <info|dot|matmul|rk4|resources|tables|serve|serve-rpc|rpc-load> \
                  [--preset paper|low-precision|stress-norm|wide] [--config file.toml] ..."
             );
             std::process::exit(2);
@@ -163,4 +167,137 @@ fn cmd_serve(args: &Args, cfg: &HrfnaConfig) {
     coord.metrics_table().print();
     let drain = coord.shutdown();
     println!("{drain}");
+}
+
+/// Serve the coordinator over TCP JSON-RPC until a client calls
+/// `shutdown`; exits 0 iff the drain was clean (every accepted job
+/// replied to) — the invariant the CI `rpc-smoke` job asserts.
+#[cfg(feature = "rpc")]
+fn cmd_serve_rpc(args: &Args, cfg: &HrfnaConfig) {
+    use hrfna::coordinator::rpc::{QuotaConfig, RpcServer, RpcServerConfig};
+
+    let addr = args.str_or("addr", "127.0.0.1:9377");
+    let quota = QuotaConfig {
+        max_inflight: args.parse_or("max-inflight", 256usize),
+        rate_per_s: args.parse_or("rate", 0.0f64),
+        burst: args.parse_or("rate-burst", 64.0f64),
+    };
+    let engine = EngineHandle::spawn(None).expect("engine (run `make artifacts`)");
+    let registry = Arc::new(ContextRegistry::with_base(cfg.clone()));
+    let coord = Arc::new(Coordinator::start(engine, registry, CoordinatorConfig::default()));
+    let server = RpcServer::bind(
+        Arc::clone(&coord),
+        &addr,
+        RpcServerConfig { quota, ..RpcServerConfig::default() },
+    )
+    .expect("bind rpc server");
+    // The smoke test greps for this line before starting its load.
+    println!("serve-rpc listening on {}", server.local_addr());
+    server.wait_shutdown();
+    let wire = server.stop();
+    wire.table().print();
+    let coord = Arc::try_unwrap(coord)
+        .unwrap_or_else(|_| panic!("server threads still hold the coordinator"));
+    coord.metrics_table().print();
+    let drain = coord.shutdown();
+    println!("{drain}");
+    if !drain.is_clean() {
+        eprintln!("serve-rpc: unclean drain");
+        std::process::exit(1);
+    }
+}
+
+/// Socket-level closed-loop load against a running serve-rpc server.
+/// Exits nonzero when nothing was served — a wedged accept loop or lost
+/// wakeup turns into a CI failure, not a hang.
+#[cfg(feature = "rpc")]
+fn cmd_rpc_load(args: &Args) {
+    use hrfna::coordinator::rpc::{socket_closed_loop, ConnMode, RpcClient};
+    use hrfna::coordinator::JobSpec;
+    use hrfna::workloads::generators::ServeMix;
+    use std::time::Duration;
+
+    let addr = args.str_or("addr", "127.0.0.1:9377");
+    let clients = args.parse_or("clients", 4usize);
+    let jobs = args.parse_or("jobs", 48usize);
+    let burst = args.parse_or("burst", 8usize);
+    let mixed_tiers = args.flag("mixed-tiers");
+    let mode = if args.flag("reconnect-per-job") { ConnMode::PerJob } else { ConnMode::Persistent };
+
+    // Fail fast (with retries) if the server never comes up.
+    RpcClient::connect_retry(&addr, Duration::from_secs(10))
+        .expect("rpc server reachable")
+        .ping()
+        .expect("rpc server answers ping");
+
+    let mix = ServeMix::default_mix();
+    let make = |c: u64, i: usize| -> JobSpec {
+        let (slot, mut rng) = mix.request_rng(c + 1, i);
+        let spec = match slot {
+            0..=3 => {
+                let x = mix.dist.sample_vec(&mut rng, mix.dot_n);
+                let y = mix.dist.sample_vec(&mut rng, mix.dot_n);
+                JobSpec::new(JobKind::DotHybrid, Payload::Dot { x, y })
+            }
+            4..=6 => {
+                let x = mix.dist.sample_vec(&mut rng, mix.dot_n);
+                let y = mix.dist.sample_vec(&mut rng, mix.dot_n);
+                JobSpec::new(JobKind::DotF32, Payload::Dot { x, y })
+            }
+            7 => {
+                let a = mix.dist.sample_vec(&mut rng, mix.matmul_dim * mix.matmul_dim);
+                let b = mix.dist.sample_vec(&mut rng, mix.matmul_dim * mix.matmul_dim);
+                JobSpec::new(JobKind::MatmulHybrid, Payload::Matmul { a, b, dim: mix.matmul_dim })
+            }
+            8 => {
+                let a = mix.dist.sample_vec(&mut rng, mix.matmul_dim * mix.matmul_dim);
+                let b = mix.dist.sample_vec(&mut rng, mix.matmul_dim * mix.matmul_dim);
+                JobSpec::new(JobKind::MatmulF32, Payload::Matmul { a, b, dim: mix.matmul_dim })
+            }
+            _ => JobSpec::new(
+                JobKind::Rk4Hybrid,
+                Payload::Rk4 { y0: vec![2.0, 0.0], mu: 1.0, dt: 0.01, steps: mix.rk4_steps },
+            ),
+        };
+        if mixed_tiers && spec.kind.is_hybrid() {
+            spec.with_tier(mix.tier_for(i))
+        } else {
+            spec
+        }
+    };
+
+    let report = socket_closed_loop(&addr, clients, jobs, burst, mode, &make);
+    println!(
+        "rpc-load: offered {} served {} rejected {} in {:.2?} ({:.0} jobs/s over the wire)",
+        report.offered, report.completed, report.rejected, report.wall, report.jobs_per_s
+    );
+    if let Some(lat) = &report.latency_us {
+        println!("  latency p50 {:.0} us  p99 {:.0} us", lat.p50, lat.p99);
+    }
+
+    if args.flag("shutdown") {
+        let mut c = RpcClient::connect(&addr).expect("connect for shutdown");
+        c.shutdown_server().expect("server acknowledges shutdown");
+        println!("rpc-load: server draining");
+    }
+    if report.completed == 0 {
+        eprintln!("rpc-load: nothing served");
+        std::process::exit(1);
+    }
+    if report.completed + report.rejected != report.offered {
+        eprintln!("rpc-load: lost jobs (offered != served + rejected)");
+        std::process::exit(1);
+    }
+}
+
+#[cfg(not(feature = "rpc"))]
+fn cmd_serve_rpc(_args: &Args, _cfg: &HrfnaConfig) {
+    eprintln!("serve-rpc requires the `rpc` feature: cargo run --features rpc -- serve-rpc");
+    std::process::exit(2);
+}
+
+#[cfg(not(feature = "rpc"))]
+fn cmd_rpc_load(_args: &Args) {
+    eprintln!("rpc-load requires the `rpc` feature: cargo run --features rpc -- rpc-load");
+    std::process::exit(2);
 }

@@ -1,0 +1,480 @@
+//! Integration: the RPC serving edge (`--features rpc`) end to end —
+//! golden wire-format fixtures pinning the frame encodings, property
+//! tests over the error-code and serialization contracts, and a real
+//! loopback server driven through the client library: submits, batches,
+//! quotas, draining, and the clean-shutdown invariant.
+#![cfg(feature = "rpc")]
+
+use hrfna::coordinator::batcher::BatchPolicy;
+use hrfna::coordinator::router::ShapeBuckets;
+use hrfna::coordinator::rpc::{
+    code_for_submit_error, result_from_json, result_to_json, socket_closed_loop, spec_from_json,
+    spec_to_json, ConnMode, ErrorCode, FrameReader, Json, QuotaConfig, Request, Response,
+    ResponseBody, RpcClient, RpcServer, RpcServerConfig, WireError,
+};
+use hrfna::coordinator::{
+    ContextRegistry, Coordinator, CoordinatorConfig, ExecMode, JobKind, JobResult, JobSpec,
+    Payload, SubmitError, Tier,
+};
+use hrfna::runtime::EngineHandle;
+use hrfna::util::proptest::check;
+use hrfna::util::prng::Rng;
+use hrfna::workloads::generators::{Dist, ServeMix};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn coordinator() -> Coordinator {
+    let engine = EngineHandle::spawn(None).expect("engine load");
+    Coordinator::start(
+        engine,
+        Arc::new(ContextRegistry::new()),
+        CoordinatorConfig {
+            workers_per_lane: 2,
+            batch: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                capacity: 1024,
+            },
+            buckets: ShapeBuckets { tiers: Tier::ALL.to_vec(), ..ShapeBuckets::default() },
+            exec: ExecMode::Planar,
+        },
+    )
+}
+
+/// Server + coordinator for one test, bound to an ephemeral port.
+fn serve(quota: QuotaConfig) -> (Arc<Coordinator>, RpcServer, String) {
+    let coord = Arc::new(coordinator());
+    let server = RpcServer::bind(
+        Arc::clone(&coord),
+        "127.0.0.1:0",
+        RpcServerConfig { quota, ..RpcServerConfig::default() },
+    )
+    .expect("bind rpc server");
+    let addr = server.local_addr().to_string();
+    (coord, server, addr)
+}
+
+/// Tear down server then coordinator, asserting the drain invariant.
+fn teardown(coord: Arc<Coordinator>, server: RpcServer) {
+    server.stop();
+    let coord = Arc::try_unwrap(coord).unwrap_or_else(|_| panic!("coordinator still shared"));
+    let drain = coord.shutdown();
+    assert!(drain.is_clean(), "unclean drain: {drain}");
+}
+
+fn fixture(name: &str) -> String {
+    let path = format!("{}/tests/fixtures/rpc/{name}", env!("CARGO_MANIFEST_DIR"));
+    std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("read fixture {path}: {e}"))
+        .trim_end()
+        .to_string()
+}
+
+// ---------------------------------------------------------------------
+// Golden wire-format fixtures: committed frames are byte-for-byte what
+// the encoders produce today. A diff here is a wire break.
+// ---------------------------------------------------------------------
+
+#[test]
+fn golden_request_submit_dot() {
+    let text = fixture("request_submit_dot.json");
+    let spec = JobSpec::new(
+        JobKind::DotHybrid,
+        Payload::Dot { x: vec![1.0, -2.5], y: vec![0.5, 4.0] },
+    )
+    .with_tier(Tier::Lo)
+    .with_tolerance(0.001);
+    let req = Request::new(1, "submit", spec_to_json(&spec));
+    assert_eq!(req.to_json().encode(), text, "request encoding drifted from fixture");
+
+    // Decode side: fixture → typed request → identical spec.
+    let parsed = Request::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(parsed.method, "submit");
+    let back = spec_from_json(&parsed.params).unwrap();
+    assert_eq!(back.kind, JobKind::DotHybrid);
+    assert_eq!(back.tier, Tier::Lo);
+    assert_eq!(back.tolerance, Some(0.001));
+    match back.payload {
+        Payload::Dot { x, y } => {
+            assert_eq!(x, vec![1.0, -2.5]);
+            assert_eq!(y, vec![0.5, 4.0]);
+        }
+        other => panic!("wrong payload {other:?}"),
+    }
+}
+
+#[test]
+fn golden_response_result() {
+    let text = fixture("response_result.json");
+    let result = JobResult {
+        id: 7,
+        kind: JobKind::DotHybrid,
+        tier: Tier::Lo,
+        values: vec![2.25],
+        latency_us: 123.5,
+        batch_size: 8,
+    };
+    let resp = Response::result(1, result_to_json(&result));
+    assert_eq!(resp.to_json().encode(), text, "response encoding drifted from fixture");
+
+    let parsed = Response::from_json(&Json::parse(&text).unwrap()).unwrap();
+    match parsed.body {
+        ResponseBody::Result(v) => {
+            let r = result_from_json(&v).unwrap();
+            assert_eq!(r.id, 7);
+            assert_eq!(r.values, vec![2.25]);
+            assert_eq!(r.batch_size, 8);
+        }
+        other => panic!("expected result, got {other:?}"),
+    }
+}
+
+#[test]
+fn golden_error_overloaded() {
+    let text = fixture("error_overloaded.json");
+    let err = SubmitError::Overloaded {
+        kind: JobKind::DotHybrid,
+        tier: Tier::Paper,
+        queued: 32,
+        capacity: 32,
+    };
+    let resp = Response::error(2, WireError::from_submit_error(&err));
+    assert_eq!(resp.to_json().encode(), text, "error encoding drifted from fixture");
+
+    let parsed = Response::from_json(&Json::parse(&text).unwrap()).unwrap();
+    match parsed.body {
+        ResponseBody::Error(e) => {
+            assert_eq!(e.code, ErrorCode::Overloaded);
+            assert!(e.code.is_backpressure());
+            let data = e.data.unwrap();
+            assert_eq!(data.get("queued").unwrap().as_u64(), Some(32));
+        }
+        other => panic!("expected error, got {other:?}"),
+    }
+}
+
+#[test]
+fn golden_frames_survive_the_codec() {
+    // Every fixture, framed and unframed, bytes preserved.
+    for name in ["request_submit_dot.json", "response_result.json", "error_overloaded.json"] {
+        let text = fixture(name);
+        let mut wire = Vec::new();
+        hrfna::coordinator::rpc::write_frame(&mut wire, text.as_bytes()).unwrap();
+        let mut reader = FrameReader::default();
+        let payload = reader
+            .read_frame(&mut std::io::Cursor::new(wire), &|| false)
+            .unwrap()
+            .expect("one frame");
+        assert_eq!(payload, text.as_bytes(), "{name} mangled by codec");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Property tests: stable code mapping and serialization round trips.
+// ---------------------------------------------------------------------
+
+#[test]
+fn every_submit_error_maps_to_a_stable_backpressure_code() {
+    check("submit error -> wire code", |rng| {
+        let kind = JobKind::ALL[rng.below(JobKind::ALL.len() as u64) as usize];
+        let tier = Tier::ALL[rng.below(Tier::ALL.len() as u64) as usize];
+        let (err, want) = match rng.below(3) {
+            0 => (SubmitError::Rejected(format!("reason {}", rng.below(100))), ErrorCode::Rejected),
+            1 => (
+                SubmitError::Overloaded {
+                    kind,
+                    tier,
+                    queued: rng.below(1 << 20) as usize,
+                    capacity: rng.below(1 << 20) as usize,
+                },
+                ErrorCode::Overloaded,
+            ),
+            _ => (SubmitError::ShuttingDown, ErrorCode::ShuttingDown),
+        };
+        let code = code_for_submit_error(&err);
+        hrfna::prop_assert!(code == want, "{err:?} mapped to {code:?}");
+        // The code survives the wire: encode the error response, parse
+        // it back, same code.
+        let resp = Response::error(9, WireError::from_submit_error(&err));
+        let back = Response::from_json(&Json::parse(&resp.to_json().encode()).unwrap())
+            .map_err(|e| e.to_string())?;
+        match back.body {
+            ResponseBody::Error(e) => {
+                hrfna::prop_assert!(e.code == want, "round trip changed code to {:?}", e.code)
+            }
+            _ => return Err("error response parsed as result".into()),
+        }
+        // And the numeric value is pinned forever.
+        hrfna::prop_assert!(
+            ErrorCode::from_code(want.code()) == Some(want),
+            "code table not involutive for {want:?}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn specs_and_results_round_trip_fuzzed() {
+    check("spec/result wire round trip", |rng| {
+        let kind = JobKind::ALL[rng.below(JobKind::ALL.len() as u64) as usize];
+        let tier = Tier::ALL[rng.below(Tier::ALL.len() as u64) as usize];
+        let n = 1 + rng.below(16) as usize;
+        let dist = Dist::moderate();
+        let payload = match kind {
+            JobKind::DotHybrid | JobKind::DotF32 => Payload::Dot {
+                x: dist.sample_vec(rng, n),
+                y: dist.sample_vec(rng, n),
+            },
+            JobKind::MatmulHybrid | JobKind::MatmulF32 => Payload::Matmul {
+                a: dist.sample_vec(rng, n * n),
+                b: dist.sample_vec(rng, n * n),
+                dim: n,
+            },
+            JobKind::Rk4Hybrid => Payload::Rk4 {
+                y0: dist.sample_vec(rng, 2),
+                mu: rng.uniform(0.1, 4.0),
+                dt: rng.uniform(1e-4, 1e-2),
+                steps: 1 + rng.below(256),
+            },
+        };
+        let mut spec = JobSpec { kind, payload, tier, tolerance: None };
+        if rng.below(2) == 1 {
+            spec = spec.with_tolerance(rng.lognormal(-10.0, 2.0));
+        }
+        let text = spec_to_json(&spec).encode();
+        let back = spec_from_json(&Json::parse(&text).map_err(|e| e.to_string())?)
+            .map_err(|e| e.to_string())?;
+        hrfna::prop_assert!(back.kind == spec.kind, "kind changed");
+        hrfna::prop_assert!(back.tier == spec.tier, "tier changed");
+        hrfna::prop_assert!(back.tolerance == spec.tolerance, "tolerance changed");
+        hrfna::prop_assert!(
+            spec_to_json(&back).encode() == text,
+            "spec re-encode not canonical"
+        );
+
+        let result = JobResult {
+            id: rng.next_u64() >> 12,
+            kind,
+            tier,
+            values: dist.sample_vec(rng, n),
+            latency_us: rng.uniform(1.0, 1e6),
+            batch_size: 1 + rng.below(64) as usize,
+        };
+        let rtext = result_to_json(&result).encode();
+        let rback = result_from_json(&Json::parse(&rtext).map_err(|e| e.to_string())?)
+            .map_err(|e| e.to_string())?;
+        hrfna::prop_assert!(rback.id == result.id, "result id changed");
+        hrfna::prop_assert!(rback.values == result.values, "result values changed");
+        hrfna::prop_assert!(
+            result_to_json(&rback).encode() == rtext,
+            "result re-encode not canonical"
+        );
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Loopback server: the real edge end to end.
+// ---------------------------------------------------------------------
+
+#[test]
+fn loopback_submit_returns_correct_dot_product() {
+    let (coord, server, addr) = serve(QuotaConfig::default());
+    let mut client = RpcClient::connect(&addr).expect("connect");
+    client.ping().expect("ping");
+
+    let mut rng = Rng::new(11);
+    let n = 512;
+    let x = Dist::moderate().sample_vec(&mut rng, n);
+    let y = Dist::moderate().sample_vec(&mut rng, n);
+    let expect: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+    let spec = JobSpec::new(JobKind::DotHybrid, Payload::Dot { x, y });
+    let outcome = client.call(&spec).expect("transport ok");
+    let result = outcome.expect("job accepted");
+    assert_eq!(result.kind, JobKind::DotHybrid);
+    assert_eq!(result.tier, Tier::Paper);
+    assert_eq!(result.values.len(), 1);
+    let rel = ((result.values[0] - expect) / expect.abs().max(1e-300)).abs();
+    assert!(rel < 1e-9, "dot over the wire off by {rel:.3e}");
+
+    teardown(coord, server);
+}
+
+#[test]
+fn loopback_pipelined_submits_come_back_out_of_order_safe() {
+    let (coord, server, addr) = serve(QuotaConfig::default());
+    let mut client = RpcClient::connect(&addr).expect("connect");
+    let mut rng = Rng::new(7);
+    let dist = Dist::moderate();
+    // Fire a pipeline of mixed-tier submits, collect in reverse order —
+    // correlation by id must hold regardless of arrival order.
+    let mix = ServeMix::default_mix();
+    let mut fired = Vec::new();
+    for i in 0..24usize {
+        let spec = JobSpec::new(
+            JobKind::DotHybrid,
+            Payload::Dot { x: dist.sample_vec(&mut rng, 512), y: dist.sample_vec(&mut rng, 512) },
+        )
+        .with_tier(mix.tier_for(i));
+        fired.push((client.submit_spec(&spec).expect("fire"), spec.tier));
+    }
+    for (id, want_tier) in fired.into_iter().rev() {
+        let outcome = client.wait_submit(id).expect("transport ok");
+        let result = outcome.expect("job accepted");
+        assert_eq!(result.tier, want_tier, "tier context followed the job");
+    }
+    teardown(coord, server);
+}
+
+#[test]
+fn loopback_batch_mixes_results_and_typed_errors() {
+    let (coord, server, addr) = serve(QuotaConfig::default());
+    let mut client = RpcClient::connect(&addr).expect("connect");
+    let mut rng = Rng::new(3);
+    let dist = Dist::moderate();
+    let good = JobSpec::new(
+        JobKind::DotHybrid,
+        Payload::Dot { x: dist.sample_vec(&mut rng, 512), y: dist.sample_vec(&mut rng, 512) },
+    );
+    // Mismatched operand lengths fail admission → a typed Rejected entry
+    // in the same batch response as the good results.
+    let bad = JobSpec::new(
+        JobKind::DotHybrid,
+        Payload::Dot { x: dist.sample_vec(&mut rng, 512), y: dist.sample_vec(&mut rng, 100) },
+    );
+    let outcomes = client
+        .submit_batch(&[good.clone(), bad, good])
+        .expect("transport ok");
+    assert_eq!(outcomes.len(), 3);
+    assert!(outcomes[0].is_ok(), "first spec accepted");
+    let err = outcomes[1].as_ref().err().expect("second spec rejected");
+    assert_eq!(err.code, ErrorCode::Rejected);
+    assert!(outcomes[2].is_ok(), "third spec accepted");
+    teardown(coord, server);
+}
+
+#[test]
+fn loopback_quotas_shed_with_typed_codes() {
+    // In-flight cap of zero: every submit sheds with TooManyInFlight.
+    let (coord, server, addr) = serve(QuotaConfig {
+        max_inflight: 0,
+        rate_per_s: 0.0,
+        burst: 64.0,
+    });
+    let mut client = RpcClient::connect(&addr).expect("connect");
+    let mut rng = Rng::new(5);
+    let dist = Dist::moderate();
+    let spec = JobSpec::new(
+        JobKind::DotHybrid,
+        Payload::Dot { x: dist.sample_vec(&mut rng, 512), y: dist.sample_vec(&mut rng, 512) },
+    );
+    let outcome = client.call(&spec).expect("transport ok");
+    assert_eq!(outcome.err().expect("shed").code, ErrorCode::TooManyInFlight);
+    assert_eq!(server.wire_metrics().totals().inflight_limited(), 1);
+    teardown(coord, server);
+
+    // Token bucket with one token and a negligible refill: the first
+    // submit passes, the second is RateLimited.
+    let (coord, server, addr) = serve(QuotaConfig {
+        max_inflight: 256,
+        rate_per_s: 1e-6,
+        burst: 1.0,
+    });
+    let mut client = RpcClient::connect(&addr).expect("connect");
+    let first = client.call(&spec).expect("transport ok");
+    assert!(first.is_ok(), "first submit inside the burst");
+    let second = client.call(&spec).expect("transport ok");
+    assert_eq!(second.err().expect("shed").code, ErrorCode::RateLimited);
+    assert_eq!(server.wire_metrics().totals().rate_limited(), 1);
+    teardown(coord, server);
+}
+
+#[test]
+fn loopback_protocol_errors_answer_with_stable_codes() {
+    let (coord, server, addr) = serve(QuotaConfig::default());
+    let mut client = RpcClient::connect(&addr).expect("connect");
+
+    // Unknown method.
+    let resp = client.request("warp", Json::Null).expect("transport ok");
+    match resp.body {
+        ResponseBody::Error(e) => assert_eq!(e.code, ErrorCode::MethodNotFound),
+        other => panic!("expected MethodNotFound, got {other:?}"),
+    }
+    // Undecodable params.
+    let resp = client.request("submit", Json::str("not a spec")).expect("transport ok");
+    match resp.body {
+        ResponseBody::Error(e) => assert_eq!(e.code, ErrorCode::InvalidParams),
+        other => panic!("expected InvalidParams, got {other:?}"),
+    }
+    // Malformed JSON in a well-formed frame: answered (id 0) with
+    // ParseError, and the connection stays usable.
+    use std::io::Write as _;
+    let mut raw = std::net::TcpStream::connect(&addr).expect("raw connect");
+    let payload = b"{this is not json";
+    let mut frame = Vec::new();
+    frame.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+    frame.extend_from_slice(payload);
+    raw.write_all(&frame).expect("send garbage");
+    let mut reader = FrameReader::default();
+    let answer = reader
+        .read_frame(&mut raw, &|| false)
+        .expect("read error response")
+        .expect("server answered");
+    let parsed = Response::from_json(&Json::parse(std::str::from_utf8(&answer).unwrap()).unwrap())
+        .unwrap();
+    assert_eq!(parsed.id, 0);
+    match parsed.body {
+        ResponseBody::Error(e) => assert_eq!(e.code, ErrorCode::ParseError),
+        other => panic!("expected ParseError, got {other:?}"),
+    }
+    assert!(server.wire_metrics().protocol_errors() >= 1);
+    client.ping().expect("first connection still healthy");
+    teardown(coord, server);
+}
+
+#[test]
+fn loopback_drain_rejects_new_work_with_shutting_down() {
+    let (coord, server, addr) = serve(QuotaConfig::default());
+    let mut client = RpcClient::connect(&addr).expect("connect");
+    let mut rng = Rng::new(9);
+    let dist = Dist::moderate();
+    let spec = JobSpec::new(
+        JobKind::DotHybrid,
+        Payload::Dot { x: dist.sample_vec(&mut rng, 512), y: dist.sample_vec(&mut rng, 512) },
+    );
+    assert!(client.call(&spec).expect("transport ok").is_ok());
+    client.shutdown_server().expect("shutdown acknowledged");
+    assert!(server.shutdown_requested());
+    let outcome = client.call(&spec).expect("transport ok");
+    assert_eq!(outcome.err().expect("shed").code, ErrorCode::ShuttingDown);
+    teardown(coord, server);
+}
+
+#[test]
+fn socket_load_generator_round_trips_mixed_tier_traffic() {
+    let (coord, server, addr) = serve(QuotaConfig::default());
+    let mix = ServeMix::default_mix();
+    let make = |c: u64, i: usize| -> JobSpec {
+        let (_, mut rng) = mix.request_rng(c + 1, i);
+        JobSpec::new(
+            JobKind::DotHybrid,
+            Payload::Dot {
+                x: mix.dist.sample_vec(&mut rng, mix.dot_n),
+                y: mix.dist.sample_vec(&mut rng, mix.dot_n),
+            },
+        )
+        .with_tier(mix.tier_for(i))
+    };
+    for mode in [ConnMode::Persistent, ConnMode::PerJob] {
+        let report = socket_closed_loop(&addr, 3, 10, 4, mode, &make);
+        assert_eq!(report.offered, 30, "{mode:?}");
+        assert_eq!(report.completed, 30, "{mode:?} lost jobs");
+        assert_eq!(report.rejected, 0, "{mode:?} shed jobs");
+        assert!(report.latency_us.is_some());
+    }
+    let wire = Arc::clone(server.wire_metrics());
+    // 3 persistent connections plus 30 per-job connections.
+    assert!(wire.conns_opened() >= 33);
+    assert_eq!(wire.totals().results(), 60);
+    teardown(coord, server);
+}

@@ -4,11 +4,17 @@
 //! planar-serving speedup is a protected invariant, not a one-off number.
 //!
 //! Usage:
-//!   bench_gate --baseline <file-or-dir> --current <file-or-dir> [--tolerance 0.20]
+//!   bench_gate --baseline <file-or-dir> --current <file-or-dir> [--tolerance 0.20] [--strict]
 //!
 //! With directories, every `BENCH_*.json` in the baseline dir must exist
 //! in the current dir and pass record-by-record. Refresh a baseline by
 //! re-running the bench and committing the new JSON.
+//!
+//! By default, records the current run emits that the baseline does not
+//! know are accepted with a warning (so a bench can grow records before
+//! its baseline lands). `--strict` turns those into failures: every
+//! measured record must have a committed baseline, which is what CI
+//! runs — an unprotected record can't silently ride for months.
 
 use hrfna::util::bench::{gate_records, new_record_names, read_json, GateViolation};
 use hrfna::util::cli::Args;
@@ -50,6 +56,7 @@ fn main() {
     let baseline = args.str_or("baseline", "ci/baselines");
     let current = args.str_or("current", ".");
     let tolerance: f64 = args.parse_or("tolerance", 0.20);
+    let strict = args.flag("strict");
 
     let pairs = match collect_pairs(Path::new(&baseline), Path::new(&current)) {
         Ok(p) => p,
@@ -102,15 +109,23 @@ fn main() {
         // Every baseline record missing from the measured run is a named
         // MISSING violation via gate_records (never a silent skip); the
         // converse — records the bench emits that the baseline does not
-        // know — passes with an explicit warning.
+        // know — warns by default and fails under --strict.
         for v in &violations {
             println!("  {}", v.line());
         }
         for name in new_record_names(&base, &cur) {
-            println!(
-                "  WARN new    {name:<40} (absent from baseline; accepted — refresh {} to protect it)",
-                base_path.display()
-            );
+            if strict {
+                println!(
+                    "  FAIL new    {name:<40} (no committed baseline — commit it to {} )",
+                    base_path.display()
+                );
+                failed = true;
+            } else {
+                println!(
+                    "  WARN new    {name:<40} (absent from baseline; accepted — refresh {} to protect it)",
+                    base_path.display()
+                );
+            }
         }
         failed |= !violations.is_empty();
     }
