@@ -10,11 +10,11 @@
 //! Results recorded in EXPERIMENTS.md §RPC.
 
 use hrfna::coordinator::rpc::{
-    socket_closed_loop, ConnMode, ErrorCode, Json, QuotaConfig, RpcClient, RpcServer,
-    RpcServerConfig,
+    socket_closed_loop, ConnMode, Json, QuotaConfig, RpcClient, RpcServer, RpcServerConfig,
 };
 use hrfna::coordinator::{
-    ContextRegistry, Coordinator, CoordinatorConfig, JobKind, JobSpec, Payload, Tier,
+    Backend, ContextRegistry, Coordinator, CoordinatorConfig, Error, InProcess, JobKind, JobSpec,
+    Tier,
 };
 use hrfna::runtime::EngineHandle;
 use hrfna::util::cli::Args;
@@ -30,13 +30,16 @@ fn main() {
 
     let t0 = Instant::now();
     let engine = EngineHandle::spawn(None).expect("engine load");
-    let coord = Arc::new(Coordinator::start(
+    // The `Backend` seam: the server binds an `Arc<dyn Backend>`, so the
+    // same edge serves an in-process coordinator here and a `ShardRouter`
+    // in `hrfna route`.
+    let backend = Arc::new(InProcess::new(Coordinator::start(
         engine,
         Arc::new(ContextRegistry::new()),
         CoordinatorConfig::default(),
-    ));
+    )));
     let server = RpcServer::bind(
-        Arc::clone(&coord),
+        Arc::clone(&backend) as Arc<dyn Backend>,
         "127.0.0.1:0",
         RpcServerConfig { quota: QuotaConfig::default(), ..RpcServerConfig::default() },
     )
@@ -57,7 +60,7 @@ fn main() {
         let want: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
         let tier = ServeMix::default_mix().tier_for(i);
         let id = client
-            .submit_spec(&JobSpec::new(JobKind::DotHybrid, Payload::Dot { x, y }).with_tier(tier))
+            .submit_spec(&JobSpec::dot(x, y).tier(tier))
             .expect("fire");
         fired.push((id, tier, want));
     }
@@ -71,16 +74,9 @@ fn main() {
     assert!(worst < 1e-6, "wire transport must not cost accuracy");
 
     // --- 2. Streaming batch submission, including a typed rejection --
-    let good = |rng: &mut Rng| {
-        JobSpec::new(
-            JobKind::DotHybrid,
-            Payload::Dot { x: dist.sample_vec(rng, 512), y: dist.sample_vec(rng, 512) },
-        )
-    };
-    let bad = JobSpec::new(
-        JobKind::DotHybrid,
-        Payload::Dot { x: dist.sample_vec(&mut rng, 512), y: dist.sample_vec(&mut rng, 7) },
-    );
+    let good =
+        |rng: &mut Rng| JobSpec::dot(dist.sample_vec(rng, 512), dist.sample_vec(rng, 512));
+    let bad = JobSpec::dot(dist.sample_vec(&mut rng, 512), dist.sample_vec(&mut rng, 7));
     let outcomes = client
         .submit_batch(&[good(&mut rng), bad, good(&mut rng)])
         .expect("batch transport");
@@ -88,23 +84,18 @@ fn main() {
     let shed = outcomes.iter().filter(|o| o.is_err()).count();
     println!("batch of 3: {served} served, {shed} rejected (typed)");
     assert_eq!((served, shed), (2, 1));
-    assert_eq!(
-        outcomes[1].as_ref().err().expect("mismatched operands rejected").code,
-        ErrorCode::Rejected
-    );
+    let err = outcomes[1].as_ref().err().expect("mismatched operands rejected");
+    assert!(matches!(err, Error::Rejected(_)), "{err:?}");
 
     // --- 3. Socket load: persistent vs reconnect-per-job -------------
     let mix = ServeMix::default_mix();
     let make = |c: u64, i: usize| -> JobSpec {
         let (_, mut r) = mix.request_rng(c + 1, i);
-        JobSpec::new(
-            JobKind::DotHybrid,
-            Payload::Dot {
-                x: mix.dist.sample_vec(&mut r, mix.dot_n),
-                y: mix.dist.sample_vec(&mut r, mix.dot_n),
-            },
+        JobSpec::dot(
+            mix.dist.sample_vec(&mut r, mix.dot_n),
+            mix.dist.sample_vec(&mut r, mix.dot_n),
         )
-        .with_tier(mix.tier_for(i))
+        .tier(mix.tier_for(i))
     };
     for mode in [ConnMode::Persistent, ConnMode::PerJob] {
         let report = socket_closed_loop(&addr, clients, jobs, 8, mode, &make);
@@ -129,13 +120,14 @@ fn main() {
     assert_eq!(wire.protocol_errors(), 0);
     assert_eq!(wire.conns_opened(), wire.conns_closed(), "leaked connections");
 
-    let coord = Arc::try_unwrap(coord).unwrap_or_else(|_| panic!("coordinator still shared"));
     for tier in Tier::ALL {
-        let served = coord.metrics.jobs_tier(JobKind::DotHybrid, tier);
+        let served = backend
+            .with_coordinator(|c| c.metrics.jobs_tier(JobKind::DotHybrid, tier))
+            .expect("backend live");
         println!("tier {:<5} served {served} hybrid dots", tier.label());
         assert!(served > 0, "mixed-tier stream must exercise every tier");
     }
-    let drain = coord.shutdown();
+    let drain = backend.shutdown().expect("first shutdown");
     println!("{drain}");
     assert!(drain.is_clean(), "shutdown dropped jobs: {drain}");
     println!("rpc_pipeline OK");

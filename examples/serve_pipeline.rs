@@ -15,7 +15,8 @@
 
 use hrfna::coordinator::batcher::BatchPolicy;
 use hrfna::coordinator::{
-    ContextRegistry, Coordinator, CoordinatorConfig, ExecMode, JobKind, JobSpec, Payload, Tier,
+    Backend, ContextRegistry, Coordinator, CoordinatorConfig, ExecMode, InProcess, JobKind,
+    JobSpec, Payload, Tier, DEFAULT_WAIT,
 };
 use hrfna::hybrid::registry::{tier_rel_bound, MagnitudeEnvelope};
 use hrfna::runtime::EngineHandle;
@@ -39,8 +40,11 @@ fn main() {
     let (platform, names) = engine.info().expect("engine info");
     println!("engine up in {:?} on {platform}; artifacts: {names:?}", t0.elapsed());
 
+    // The coordinator behind the unified `Backend` seam — the same API
+    // the RPC edge and the cluster router serve (swap `InProcess` for
+    // `rpc::Remote` or `ShardRouter` and nothing below changes).
     let registry = Arc::new(ContextRegistry::new());
-    let coord = Coordinator::start(
+    let backend = InProcess::new(Coordinator::start(
         engine,
         Arc::clone(&registry),
         CoordinatorConfig {
@@ -53,7 +57,7 @@ fn main() {
             exec: ExecMode::Planar,
             ..CoordinatorConfig::default()
         },
-    );
+    ));
 
     let mut rng = Rng::new(2026);
 
@@ -61,8 +65,8 @@ fn main() {
     for _ in 0..warmup {
         let x = Dist::moderate().sample_vec(&mut rng, 512);
         let y = Dist::moderate().sample_vec(&mut rng, 512);
-        coord.call(JobKind::DotHybrid, Payload::Dot { x: x.clone(), y: y.clone() }).unwrap();
-        coord.call(JobKind::DotF32, Payload::Dot { x, y }).unwrap();
+        backend.call(JobSpec::dot(x.clone(), y.clone())).unwrap();
+        backend.call(JobSpec::dot_f32(x, y)).unwrap();
     }
 
     // Mixed request stream: 40% hybrid dot, 30% fp32 dot, 10% each
@@ -113,14 +117,14 @@ fn main() {
             }
         };
         truths.push(Truth { kind, expected });
-        pending.push(coord.submit(kind, payload).expect("submit"));
+        pending.push(backend.submit(JobSpec::new(kind, payload)).expect("submit"));
     }
 
     // Collect + accuracy audit.
     let mut lane_err: std::collections::BTreeMap<&str, Vec<f64>> = Default::default();
     let mut latencies: Vec<f64> = Vec::new();
-    for (rx, truth) in pending.into_iter().zip(&truths) {
-        let r = rx.recv().expect("job result");
+    for (ticket, truth) in pending.into_iter().zip(&truths) {
+        let r = backend.wait(&ticket, DEFAULT_WAIT).expect("job result");
         latencies.push(r.latency_us);
         // Error scale: |w| for well-separated values, the output's RMS for
         // near-zero elements (a 64-term ±uniform dot can land at ~0, where
@@ -151,7 +155,7 @@ fn main() {
         t.rowv(&[lane.to_string(), format!("{:.2e}", s.max), format!("{:.2e}", s.mean)]);
     }
     t.print();
-    coord.metrics_table().print();
+    println!("{}", backend.metrics_text());
 
     // Hard assertions: this is the composition proof, not just a demo.
     for (lane, errs) in &lane_err {
@@ -186,39 +190,34 @@ fn main() {
     let scale: f64 = x.iter().zip(&y).map(|(a, b)| (a * b).abs()).sum();
     let envelope = MagnitudeEnvelope::of_slices(&[&x, &y], n as u64, 0);
     for tier in Tier::ALL {
-        let r = coord
-            .call_spec(
-                JobSpec::new(JobKind::DotHybrid, Payload::Dot { x: x.clone(), y: y.clone() })
-                    .with_tier(tier),
-            )
+        let r = backend
+            .call(JobSpec::dot(x.clone(), y.clone()).tier(tier))
             .expect("tiered dot");
         assert_eq!(r.tier, tier, "moderate dot must not escalate past {tier:?}");
-        let budget = tier_rel_bound(coord.registry().cfg(tier), &envelope);
+        let budget = tier_rel_bound(registry.cfg(tier), &envelope);
         let rel = (r.values[0] - want).abs() / scale.max(1e-300);
         println!("tier {:<5} rel err {rel:.2e} (budget {budget:.2e})", tier.label());
         assert!(rel <= budget, "{tier:?}: rel {rel:e} over budget {budget:e}");
     }
-    let r = coord
-        .call_spec(
-            JobSpec::new(JobKind::DotHybrid, Payload::Dot { x: x.clone(), y: y.clone() })
-                .with_tier(Tier::Lo)
-                .with_tolerance(1e-7),
-        )
+    let r = backend
+        .call(JobSpec::dot(x.clone(), y.clone()).tier(Tier::Lo).tolerance(1e-7))
         .expect("escalated dot");
     assert_eq!(
         r.tier,
         Tier::Paper,
         "a 1e-7 tolerance is below lo's budget and within paper's"
     );
+    let escalations = backend
+        .with_coordinator(|c| c.metrics.total_escalations())
+        .expect("backend live");
     println!(
-        "tier escalations recorded: {} (1e-7-tolerance job ran on {})",
-        coord.metrics.total_escalations(),
+        "tier escalations recorded: {escalations} (1e-7-tolerance job ran on {})",
         r.tier.label()
     );
-    assert!(coord.metrics.total_escalations() >= 1);
-    coord.metrics_table().print();
+    assert!(escalations >= 1);
+    println!("{}", backend.metrics_text());
 
-    let drain = coord.shutdown();
+    let drain = backend.shutdown().expect("first shutdown");
     println!("{drain}");
     assert!(drain.is_clean(), "shutdown dropped jobs: {drain}");
     println!("serve_pipeline OK");

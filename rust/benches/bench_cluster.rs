@@ -1,0 +1,247 @@
+//! Cluster-serving benchmark (`--features rpc`): jobs/sec through the
+//! full sharded topology — client socket → router `RpcServer` →
+//! `ShardRouter` consistent-hash placement → worker `RpcServer` →
+//! `InProcess` coordinator — at fleet sizes 1, 2 and 4, all in one
+//! process on ephemeral ports. Traffic interleaves tiers (lo/paper/wide)
+//! and both dot buckets so six `(kind, tier, bucket)` lanes spread over
+//! the ring; placement is lane-coherent, so each worker's batcher still
+//! sees shape-coherent streams. Records `BENCH_cluster.json`; CI gates
+//! it `--strict` against `ci/baselines/BENCH_cluster.json`.
+//!
+//! Machine-independent gate records, measured within one run:
+//!
+//! * `cluster_scale_2w_ratio` / `cluster_scale_4w_ratio` — routed
+//!   jobs/sec at 2 (4) workers over 1 worker (the scaling claim; the
+//!   full run asserts ≥ 1.7x at 2 workers),
+//! * `cluster_router_overhead_ratio` — per-job cost through the router
+//!   hop over direct-to-worker socket cost at fleet size 1 (what the
+//!   extra hop costs).
+//!
+//! Quick mode for CI: `BENCH_QUICK=1 cargo bench --features rpc --bench
+//! bench_cluster` (or `--quick`).
+
+mod common;
+
+use hrfna::coordinator::batcher::BatchPolicy;
+use hrfna::coordinator::cluster::{RouterConfig, ShardRouter, WorkerSpec};
+use hrfna::coordinator::router::ShapeBuckets;
+use hrfna::coordinator::rpc::{socket_closed_loop, ConnMode, RpcServer, RpcServerConfig};
+use hrfna::coordinator::{
+    Backend, ContextRegistry, Coordinator, CoordinatorConfig, ExecMode, InProcess, JobSpec, Tier,
+};
+use hrfna::util::bench::{write_json, BenchRecord};
+use hrfna::util::cli::Args;
+use hrfna::util::prng::Rng;
+use hrfna::workloads::generators::Dist;
+use std::sync::Arc;
+use std::time::Duration;
+
+const CLIENTS: usize = 4;
+const BURST: usize = 8;
+/// Both admission buckets, so traffic spans two shapes per tier.
+const DOT_SMALL: usize = 512;
+const DOT_BIG: usize = 4096;
+
+/// One in-process "worker process": an `InProcess` coordinator behind
+/// its own `RpcServer` on an ephemeral port.
+struct Worker {
+    backend: Arc<InProcess>,
+    server: RpcServer,
+    spec: WorkerSpec,
+}
+
+fn spawn_worker(id: usize) -> Worker {
+    let engine = hrfna::runtime::EngineHandle::spawn(None).expect("engine");
+    let backend = Arc::new(InProcess::new(Coordinator::start(
+        engine,
+        Arc::new(ContextRegistry::new()),
+        CoordinatorConfig {
+            workers_per_lane: 1,
+            batch: BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_micros(500),
+                capacity: 4096,
+            },
+            buckets: ShapeBuckets::default(),
+            exec: ExecMode::Planar,
+        },
+    )));
+    let server = RpcServer::bind(
+        Arc::clone(&backend) as Arc<dyn Backend>,
+        "127.0.0.1:0",
+        RpcServerConfig::default(),
+    )
+    .expect("bind worker rpc server");
+    let spec = WorkerSpec {
+        id: format!("w{id}"),
+        addr: server.local_addr().to_string(),
+    };
+    Worker { backend, server, spec }
+}
+
+/// Routed jobs/sec at fleet size `n`, plus (at n = 1) the direct-to-
+/// worker comparator for the router-overhead record.
+fn run_fleet(
+    n: usize,
+    jobs_per_client: usize,
+    make: &(dyn Fn(u64, usize) -> JobSpec + Sync),
+) -> (hrfna::coordinator::LoadReport, Option<hrfna::coordinator::LoadReport>) {
+    let workers: Vec<Worker> = (0..n).map(spawn_worker).collect();
+    let specs: Vec<WorkerSpec> = workers.iter().map(|w| w.spec.clone()).collect();
+
+    // Direct comparator first: same worker, no router hop.
+    let direct = (n == 1).then(|| {
+        let warm = socket_closed_loop(
+            &workers[0].spec.addr,
+            CLIENTS,
+            2,
+            BURST,
+            ConnMode::Persistent,
+            make,
+        );
+        assert_eq!(warm.completed, warm.offered, "direct warmup lost jobs");
+        let rep = socket_closed_loop(
+            &workers[0].spec.addr,
+            CLIENTS,
+            jobs_per_client,
+            BURST,
+            ConnMode::Persistent,
+            make,
+        );
+        assert_eq!(rep.completed, rep.offered, "direct run lost jobs");
+        rep
+    });
+
+    let router = Arc::new(
+        ShardRouter::start(
+            specs,
+            RouterConfig {
+                health_interval: Duration::from_millis(200),
+                connect_wait: Duration::from_secs(2),
+                ..RouterConfig::default()
+            },
+        )
+        .expect("start shard router"),
+    );
+    assert_eq!(router.up_count(), n, "all workers must come up");
+    let front = RpcServer::bind(
+        Arc::clone(&router) as Arc<dyn Backend>,
+        "127.0.0.1:0",
+        RpcServerConfig::default(),
+    )
+    .expect("bind router rpc server");
+    let addr = front.local_addr().to_string();
+
+    let warm = socket_closed_loop(&addr, CLIENTS, 2, BURST, ConnMode::Persistent, make);
+    assert_eq!(warm.completed, warm.offered, "routed warmup lost jobs");
+    let routed = socket_closed_loop(&addr, CLIENTS, jobs_per_client, BURST, ConnMode::Persistent, make);
+    assert_eq!(routed.completed, routed.offered, "routed run lost jobs ({n} workers)");
+
+    // Teardown front to back; the router's shutdown asks every shard to
+    // drain, so the workers' own shutdown may already be done.
+    front.stop();
+    let drain = router.shutdown().expect("router shutdown");
+    assert!(drain.is_clean(), "unclean router drain at {n} workers: {drain}");
+    for w in workers {
+        w.server.stop();
+        // Err means the router's shutdown RPC already drained it.
+        if let Ok(d) = w.backend.shutdown() {
+            assert_eq!(d.dropped, 0, "worker {} dropped jobs: {d}", w.spec.id);
+        }
+    }
+    (routed, direct)
+}
+
+fn main() {
+    common::banner("§Cluster", "routed jobs/sec scaling over worker fleet size");
+    let args = Args::from_env();
+    let quick = args.flag("quick") || std::env::var("BENCH_QUICK").is_ok();
+    let jobs_per_client = if quick { 48 } else { 192 };
+
+    // Operand pools for both dot buckets; traffic cycles tier and shape
+    // so six hybrid lanes spread over the ring.
+    let mut rng = Rng::new(2026);
+    let small: Vec<(Vec<f64>, Vec<f64>)> = (0..8)
+        .map(|_| {
+            (
+                Dist::moderate().sample_vec(&mut rng, DOT_SMALL),
+                Dist::moderate().sample_vec(&mut rng, DOT_SMALL),
+            )
+        })
+        .collect();
+    let big: Vec<(Vec<f64>, Vec<f64>)> = (0..8)
+        .map(|_| {
+            (
+                Dist::moderate().sample_vec(&mut rng, DOT_BIG),
+                Dist::moderate().sample_vec(&mut rng, DOT_BIG),
+            )
+        })
+        .collect();
+    let make = |c: u64, i: usize| -> JobSpec {
+        let slot = c as usize * 7 + i;
+        let (x, y) = if slot % 2 == 0 {
+            &small[slot % small.len()]
+        } else {
+            &big[slot % big.len()]
+        };
+        JobSpec::dot(x.clone(), y.clone()).tier(Tier::ALL[slot % Tier::ALL.len()])
+    };
+
+    let mut records: Vec<BenchRecord> = Vec::new();
+    let mut by_fleet: Vec<(usize, f64)> = Vec::new();
+    let mut direct_jps = 0.0f64;
+    for n in [1usize, 2, 4] {
+        let (routed, direct) = run_fleet(n, jobs_per_client, &make);
+        if let Some(d) = direct {
+            direct_jps = d.jobs_per_s;
+            println!("direct to 1 worker: {:.0} jobs/s", d.jobs_per_s);
+        }
+        let lat = routed.latency_us.as_ref().expect("latencies");
+        println!(
+            "routed {n}w: {:.0} jobs/s ({} jobs in {:.2?}, p50 {:.0} us, p99 {:.0} us)",
+            routed.jobs_per_s, routed.completed, routed.wall, lat.p50, lat.p99
+        );
+        records.push(BenchRecord {
+            name: format!("cluster_route_{n}w_jobs"),
+            n: routed.completed as u64,
+            ns_per_op: routed.wall.as_nanos() as f64 / routed.completed.max(1) as f64,
+            throughput_per_s: routed.jobs_per_s,
+        });
+        by_fleet.push((n, routed.jobs_per_s));
+    }
+
+    let one = by_fleet[0].1.max(1e-9);
+    for &(n, jps) in &by_fleet[1..] {
+        let ratio = jps / one;
+        println!("-> {n}-worker scaling: {ratio:.2}x single-worker routed throughput");
+        records.push(BenchRecord {
+            name: format!("cluster_scale_{n}w_ratio"),
+            n: 1,
+            ns_per_op: 1.0 / ratio.max(1e-9),
+            throughput_per_s: ratio,
+        });
+        if !quick && n == 2 {
+            assert!(
+                ratio >= 1.7,
+                "2 workers must yield >= 1.7x single-worker routed jobs/sec (got {ratio:.2}x)"
+            );
+        }
+    }
+
+    // Router hop cost at fleet size 1: routed per-job cost over direct
+    // per-job cost (lower is better; throughput_per_s = fraction of
+    // direct throughput the router retains).
+    let overhead = direct_jps / one;
+    println!("-> router hop overhead: {overhead:.2}x direct per-job cost");
+    records.push(BenchRecord {
+        name: "cluster_router_overhead_ratio".to_string(),
+        n: 1,
+        ns_per_op: overhead,
+        throughput_per_s: 1.0 / overhead.max(1e-9),
+    });
+
+    match write_json("BENCH_cluster.json", &records) {
+        Ok(()) => println!("\nwrote BENCH_cluster.json ({} records)", records.len()),
+        Err(e) => eprintln!("could not write BENCH_cluster.json: {e}"),
+    }
+}

@@ -1,7 +1,7 @@
 //! Wire-serving benchmark (`--features rpc`): jobs/sec through the full
 //! network edge — JSON encode → length-prefix frame → TCP → server
-//! decode → coordinator → result encode → client decode — against the
-//! in-process serving path measured on the *same* coordinator in the
+//! decode → backend → result encode → client decode — against the
+//! in-process serving path measured on the *same* backend in the
 //! same run. Records `BENCH_rpc.json`; CI gates it `--strict` against
 //! `ci/baselines/BENCH_rpc.json`.
 //!
@@ -23,8 +23,8 @@ use hrfna::coordinator::batcher::BatchPolicy;
 use hrfna::coordinator::router::ShapeBuckets;
 use hrfna::coordinator::rpc::{socket_closed_loop, ConnMode, RpcServer, RpcServerConfig};
 use hrfna::coordinator::{
-    closed_loop, ContextRegistry, Coordinator, CoordinatorConfig, ExecMode, JobKind, JobSpec,
-    Payload, Tier,
+    closed_loop, Backend, ContextRegistry, Coordinator, CoordinatorConfig, ExecMode, InProcess,
+    JobSpec, Tier,
 };
 use hrfna::util::bench::{write_json, BenchRecord};
 use hrfna::util::cli::Args;
@@ -39,9 +39,9 @@ const DOT_N: usize = 512;
 const CLIENTS: usize = 4;
 const BURST: usize = 8;
 
-fn coordinator() -> Coordinator {
+fn backend() -> InProcess {
     let engine = hrfna::runtime::EngineHandle::spawn(None).expect("engine");
-    Coordinator::start(
+    InProcess::new(Coordinator::start(
         engine,
         Arc::new(ContextRegistry::new()),
         CoordinatorConfig {
@@ -54,7 +54,7 @@ fn coordinator() -> Coordinator {
             buckets: ShapeBuckets { tiers: Tier::ALL.to_vec(), ..ShapeBuckets::default() },
             exec: ExecMode::Planar,
         },
-    )
+    ))
 }
 
 fn job_record(name: &str, completed: usize, wall: Duration, jobs_per_s: f64) -> BenchRecord {
@@ -85,16 +85,16 @@ fn main() {
         .collect();
     let make_dot = |c: u64, i: usize| -> JobSpec {
         let (x, y) = &pool[(c as usize * 7 + i) % pool.len()];
-        JobSpec::new(JobKind::DotHybrid, Payload::Dot { x: x.clone(), y: y.clone() })
+        JobSpec::dot(x.clone(), y.clone())
     };
     let mix = ServeMix::default_mix();
     let make_tiered = |c: u64, i: usize| -> JobSpec {
-        make_dot(c, i).with_tier(mix.tier_for(i))
+        make_dot(c, i).tier(mix.tier_for(i))
     };
 
-    let coord = Arc::new(coordinator());
+    let be: Arc<InProcess> = Arc::new(backend());
     let server = RpcServer::bind(
-        Arc::clone(&coord),
+        Arc::clone(&be) as Arc<dyn Backend>,
         "127.0.0.1:0",
         RpcServerConfig::default(),
     )
@@ -105,16 +105,16 @@ fn main() {
     // Warmup both paths (threadpool spin-up, first allocations, one
     // full wire round trip per client slot).
     for _ in 0..4 {
-        coord.call_spec(make_dot(0, 0)).expect("warmup job");
+        be.call(make_dot(0, 0)).expect("warmup job");
     }
     let warm = socket_closed_loop(&addr, CLIENTS, 2, BURST, ConnMode::Persistent, &make_dot);
     assert_eq!(warm.completed, warm.offered, "warmup lost jobs");
 
     let mut records: Vec<BenchRecord> = Vec::new();
 
-    // 1. In-process baseline on the same coordinator — the comparator
+    // 1. In-process baseline on the same backend — the comparator
     //    every wire number is measured against.
-    let inproc = closed_loop(&coord, CLIENTS, jobs_per_client, BURST, &make_dot);
+    let inproc = closed_loop(be.as_ref(), CLIENTS, jobs_per_client, BURST, &make_dot);
     assert_eq!(inproc.completed, inproc.offered, "in-process run lost jobs");
     println!(
         "in-process dot n={DOT_N}: {:.0} jobs/s ({} jobs in {:.2?})",
@@ -201,7 +201,7 @@ fn main() {
     );
     assert_eq!(tiered.completed, tiered.offered, "tiered run lost jobs");
     assert_eq!(
-        coord.metrics.total_escalations(),
+        be.with_coordinator(|c| c.metrics.total_escalations()).expect("live coordinator"),
         0,
         "moderate-range traffic must not escalate"
     );
@@ -216,15 +216,16 @@ fn main() {
         tiered.jobs_per_s,
     ));
 
-    // Tear the edge down and account for every job.
+    // Tear the edge down and account for every job. `InProcess::shutdown`
+    // takes the coordinator out from under the shared Arc — no
+    // `Arc::try_unwrap` teardown dance against the server's clone.
     let wire = server.stop();
     wire.table().print();
     assert!(wire.conns_opened() >= CLIENTS as u64, "persistent conns registered");
     assert_eq!(wire.conns_opened(), wire.conns_closed(), "leaked connections");
     assert_eq!(wire.protocol_errors(), 0, "bench traffic must be well-formed");
-    let coord = Arc::try_unwrap(coord).unwrap_or_else(|_| panic!("coordinator still shared"));
-    coord.metrics_table().print();
-    let drain = coord.shutdown();
+    println!("{}", be.metrics_text());
+    let drain = be.shutdown().expect("shutdown");
     assert!(drain.is_clean(), "unclean drain after rpc load: {drain}");
 
     match write_json("BENCH_rpc.json", &records) {

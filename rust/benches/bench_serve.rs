@@ -3,9 +3,11 @@
 //! execution → decode → reply), closed-loop at batch ≥ 8, plus an
 //! open-loop backpressure probe, a mixed-lane smoke and a **mixed-tier**
 //! closed-loop scenario (lo/paper/wide requests interleaved over one
-//! coordinator, per-tier jobs/sec recorded). Writes `BENCH_serve.json`;
-//! the CI gate (`tools/bench_gate.rs`) holds the recorded planar speedup
-//! and the tiered records within tolerance.
+//! coordinator, per-tier jobs/sec recorded). Drives the coordinator
+//! through the [`Backend`] seam ([`InProcess`]) — the same API the RPC
+//! edge and the cluster router serve. Writes `BENCH_serve.json`; the CI
+//! gate (`tools/bench_gate.rs`) holds the recorded planar speedup and
+//! the tiered records within tolerance.
 //!
 //! Quick mode for CI: `BENCH_QUICK=1 cargo bench --bench bench_serve`
 //! (or `--quick`).
@@ -15,8 +17,8 @@ mod common;
 use hrfna::coordinator::batcher::BatchPolicy;
 use hrfna::coordinator::router::ShapeBuckets;
 use hrfna::coordinator::{
-    closed_loop, open_loop, ContextRegistry, Coordinator, CoordinatorConfig, ExecMode,
-    JobKind, JobSpec, Payload, Tier,
+    closed_loop, open_loop, Backend, ContextRegistry, Coordinator, CoordinatorConfig, ExecMode,
+    InProcess, JobKind, JobSpec, Tier,
 };
 use hrfna::util::bench::{write_json, BenchRecord};
 use hrfna::util::cli::Args;
@@ -29,9 +31,9 @@ const DOT_N: usize = 4096;
 const CLIENTS: usize = 4;
 const BURST: usize = 16;
 
-fn coordinator_tiered(mode: ExecMode, capacity: usize, tiers: Vec<Tier>) -> Coordinator {
+fn backend_tiered(mode: ExecMode, capacity: usize, tiers: Vec<Tier>) -> InProcess {
     let engine = hrfna::runtime::EngineHandle::spawn(None).expect("engine");
-    Coordinator::start(
+    InProcess::new(Coordinator::start(
         engine,
         Arc::new(ContextRegistry::new()),
         CoordinatorConfig {
@@ -44,13 +46,13 @@ fn coordinator_tiered(mode: ExecMode, capacity: usize, tiers: Vec<Tier>) -> Coor
             buckets: ShapeBuckets { tiers, ..ShapeBuckets::default() },
             exec: mode,
         },
-    )
+    ))
 }
 
-/// Paper-tier-only coordinator: the historical scalar-vs-planar A/B
+/// Paper-tier-only backend: the historical scalar-vs-planar A/B
 /// (one lane per kind/bucket, exactly the pre-registry shape).
-fn coordinator(mode: ExecMode, capacity: usize) -> Coordinator {
-    coordinator_tiered(mode, capacity, vec![Tier::Paper])
+fn backend(mode: ExecMode, capacity: usize) -> InProcess {
+    backend_tiered(mode, capacity, vec![Tier::Paper])
 }
 
 fn main() {
@@ -71,24 +73,23 @@ fn main() {
         .collect();
     let make_dot = |c: u64, i: usize| -> JobSpec {
         let (x, y) = &pool[(c as usize * 7 + i) % pool.len()];
-        JobSpec::new(JobKind::DotHybrid, Payload::Dot { x: x.clone(), y: y.clone() })
+        JobSpec::dot(x.clone(), y.clone())
     };
 
     let mut records: Vec<BenchRecord> = Vec::new();
     let mut by_mode = [0.0f64; 2];
     for (m, mode) in [ExecMode::Scalar, ExecMode::Planar].into_iter().enumerate() {
-        let coord = coordinator(mode, 4096);
+        let be = backend(mode, 4096);
         // Warmup (threadpool spin-up, first allocations).
         for _ in 0..4 {
-            let (x, y) = &pool[0];
-            coord
-                .call(JobKind::DotHybrid, Payload::Dot { x: x.clone(), y: y.clone() })
-                .expect("warmup job");
+            be.call(make_dot(0, 0)).expect("warmup job");
         }
-        let report = closed_loop(&coord, CLIENTS, jobs_per_client, BURST, &make_dot);
+        let report = closed_loop(&be, CLIENTS, jobs_per_client, BURST, &make_dot);
         assert_eq!(report.accepted, report.offered, "{mode:?}: capacity too small");
         assert_eq!(report.completed, report.accepted, "{mode:?}: lost jobs");
-        let mean_batch = coord.metrics.mean_batch_size(JobKind::DotHybrid);
+        let mean_batch = be
+            .with_coordinator(|c| c.metrics.mean_batch_size(JobKind::DotHybrid))
+            .expect("live coordinator");
         let lat = report.latency_us.as_ref().expect("latencies");
         println!(
             "dot n={DOT_N} {}: {:.0} jobs/s  (mean batch {:.1}, p50 {:.0} us, p99 {:.0} us)",
@@ -98,7 +99,7 @@ fn main() {
             lat.p50,
             lat.p99
         );
-        let drain = coord.shutdown();
+        let drain = be.shutdown().expect("first shutdown");
         assert!(drain.is_clean(), "unclean drain: {drain}");
         by_mode[m] = report.jobs_per_s;
         records.push(BenchRecord {
@@ -130,14 +131,14 @@ fn main() {
     // Open-loop backpressure probe: offer ~2x the measured planar
     // capacity into small queues; the bounded lanes must shed load with
     // `Overloaded` instead of queueing without bound.
-    let coord = coordinator(ExecMode::Planar, 16);
+    let be = backend(ExecMode::Planar, 16);
     let probe_jobs = if quick { 200 } else { 800 };
-    let report = open_loop(&coord, probe_jobs, (by_mode[1] * 2.0).max(100.0), &make_dot);
+    let report = open_loop(&be, probe_jobs, (by_mode[1] * 2.0).max(100.0), &make_dot);
     println!(
         "open-loop at 2x capacity: offered {} accepted {} shed {} ({:.0} jobs/s served)",
         report.offered, report.accepted, report.rejected, report.jobs_per_s
     );
-    let drain = coord.shutdown();
+    let drain = be.shutdown().expect("shutdown after open loop");
     assert!(drain.is_clean(), "unclean drain after open loop: {drain}");
 
     // Mixed-tier closed loop: lo/paper/wide dot requests interleaved
@@ -150,12 +151,11 @@ fn main() {
     let mix = ServeMix::default_mix();
     let make_tiered = |c: u64, i: usize| -> JobSpec {
         let (x, y) = &pool[(c as usize * 5 + i) % pool.len()];
-        JobSpec::new(JobKind::DotHybrid, Payload::Dot { x: x.clone(), y: y.clone() })
-            .with_tier(mix.tier_for(i))
+        JobSpec::dot(x.clone(), y.clone()).tier(mix.tier_for(i))
     };
-    let coord = coordinator_tiered(ExecMode::Planar, 4096, Tier::ALL.to_vec());
+    let be = backend_tiered(ExecMode::Planar, 4096, Tier::ALL.to_vec());
     let tiered = closed_loop(
-        &coord,
+        &be,
         CLIENTS,
         if quick { 40 } else { 160 },
         10,
@@ -163,7 +163,7 @@ fn main() {
     );
     assert_eq!(tiered.completed, tiered.offered, "tiered run lost jobs");
     assert_eq!(
-        coord.metrics.total_escalations(),
+        be.with_coordinator(|c| c.metrics.total_escalations()).expect("live coordinator"),
         0,
         "moderate-range traffic must not escalate"
     );
@@ -172,15 +172,16 @@ fn main() {
         tiered.completed, tiered.wall, tiered.jobs_per_s
     );
     for tier in Tier::ALL {
-        let jobs = coord.metrics.jobs_tier(JobKind::DotHybrid, tier);
+        let (jobs, p50) = be
+            .with_coordinator(|c| {
+                (
+                    c.metrics.jobs_tier(JobKind::DotHybrid, tier),
+                    c.metrics.latency_percentile_us_tier(JobKind::DotHybrid, tier, 50.0),
+                )
+            })
+            .expect("live coordinator");
         assert!(jobs > 0, "{tier:?} lane saw no traffic in the mix");
-        println!(
-            "  tier {:<5} {jobs} jobs (p50 {:.0} us)",
-            tier.label(),
-            coord
-                .metrics
-                .latency_percentile_us_tier(JobKind::DotHybrid, tier, 50.0)
-        );
+        println!("  tier {:<5} {jobs} jobs (p50 {p50:.0} us)", tier.label());
     }
     records.push(BenchRecord {
         name: "serve_mixed_tier_dot_jobs".to_string(),
@@ -196,10 +197,9 @@ fn main() {
     for tier in Tier::ALL {
         let make_tier = |c: u64, i: usize| -> JobSpec {
             let (x, y) = &pool[(c as usize * 3 + i) % pool.len()];
-            JobSpec::new(JobKind::DotHybrid, Payload::Dot { x: x.clone(), y: y.clone() })
-                .with_tier(tier)
+            JobSpec::dot(x.clone(), y.clone()).tier(tier)
         };
-        let rep = closed_loop(&coord, CLIENTS, if quick { 32 } else { 96 }, 8, &make_tier);
+        let rep = closed_loop(&be, CLIENTS, if quick { 32 } else { 96 }, 8, &make_tier);
         assert_eq!(rep.completed, rep.offered, "{tier:?} run lost jobs");
         println!(
             "  tier {:<5} isolated: {:.0} jobs/s ({} jobs in {:.2?})",
@@ -215,8 +215,8 @@ fn main() {
             throughput_per_s: rep.jobs_per_s,
         });
     }
-    coord.metrics_table().print();
-    let drain = coord.shutdown();
+    println!("{}", be.metrics_text());
+    let drain = be.shutdown().expect("shutdown after tiered load");
     assert!(drain.is_clean(), "unclean drain after tiered load: {drain}");
 
     // Mixed-lane smoke: every lane (both dot buckets, matmuls, RK4)
@@ -227,48 +227,39 @@ fn main() {
             0..=3 => {
                 let x = mix.dist.sample_vec(&mut rng, mix.dot_n);
                 let y = mix.dist.sample_vec(&mut rng, mix.dot_n);
-                JobSpec::new(JobKind::DotHybrid, Payload::Dot { x, y })
+                JobSpec::dot(x, y)
             }
             4..=6 => {
                 let x = mix.dist.sample_vec(&mut rng, mix.dot_n);
                 let y = mix.dist.sample_vec(&mut rng, mix.dot_n);
-                JobSpec::new(JobKind::DotF32, Payload::Dot { x, y })
+                JobSpec::dot_f32(x, y)
             }
             7 => {
                 let a = mix.dist.sample_vec(&mut rng, mix.matmul_dim * mix.matmul_dim);
                 let b = mix.dist.sample_vec(&mut rng, mix.matmul_dim * mix.matmul_dim);
-                JobSpec::new(
-                    JobKind::MatmulHybrid,
-                    Payload::Matmul { a, b, dim: mix.matmul_dim },
-                )
+                JobSpec::matmul(a, b, mix.matmul_dim)
             }
             8 => {
                 let a = mix.dist.sample_vec(&mut rng, mix.matmul_dim * mix.matmul_dim);
                 let b = mix.dist.sample_vec(&mut rng, mix.matmul_dim * mix.matmul_dim);
-                JobSpec::new(
-                    JobKind::MatmulF32,
-                    Payload::Matmul { a, b, dim: mix.matmul_dim },
-                )
+                JobSpec::matmul_f32(a, b, mix.matmul_dim)
             }
-            _ => JobSpec::new(
-                JobKind::Rk4Hybrid,
-                Payload::Rk4 {
-                    y0: vec![rng.uniform(-2.0, 2.0), rng.uniform(-2.0, 2.0)],
-                    mu: 1.0,
-                    dt: 0.005,
-                    steps: mix.rk4_steps,
-                },
+            _ => JobSpec::rk4(
+                vec![rng.uniform(-2.0, 2.0), rng.uniform(-2.0, 2.0)],
+                1.0,
+                0.005,
+                mix.rk4_steps,
             ),
         }
     };
-    let coord = coordinator(ExecMode::Planar, 4096);
-    let mixed = closed_loop(&coord, 2, if quick { 20 } else { 60 }, 10, &make_mixed);
+    let be = backend(ExecMode::Planar, 4096);
+    let mixed = closed_loop(&be, 2, if quick { 20 } else { 60 }, 10, &make_mixed);
     println!(
         "mixed lanes: {} jobs in {:.2?} ({:.0} jobs/s)",
         mixed.completed, mixed.wall, mixed.jobs_per_s
     );
-    coord.metrics_table().print();
-    let drain = coord.shutdown();
+    println!("{}", be.metrics_text());
+    let drain = be.shutdown().expect("shutdown after mixed load");
     assert!(drain.is_clean(), "unclean drain after mixed load: {drain}");
     records.push(BenchRecord {
         name: "serve_mixed_planar_jobs".to_string(),

@@ -1,0 +1,292 @@
+//! The `Backend` trait: one submission surface for every execution
+//! topology. `serve_load`, the benches, the RPC edge and the CLI all
+//! drive a `&dyn Backend`; whether jobs run on in-process lane threads
+//! ([`InProcess`]), across a socket (`rpc::Remote`), or sharded over a
+//! worker fleet (`cluster::ShardRouter`) is the caller's one-line
+//! choice at construction.
+//!
+//! The contract is ticket-based: `submit` returns a [`JobTicket`]
+//! immediately (or a typed [`Error`]), `poll` is non-blocking, and
+//! `wait` blocks with a timeout. Tickets are single-result: once `poll`
+//! returns [`JobPoll::Ready`] (or `wait` returns), the ticket is spent
+//! and later calls report an unknown-ticket internal error. `forget`
+//! abandons a ticket whose result nobody will collect, so long-poll
+//! loops (the RPC completer's pending timeout) don't leak result
+//! channels.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use super::error::Error;
+use super::request::{JobResult, JobSpec};
+use super::server::{Coordinator, DrainReport};
+
+/// Default ceiling for [`Backend::call`] and the blocking waits built on
+/// it — generous enough for a saturated wide-tier lane, small enough to
+/// turn a lost result into a test failure instead of a hang.
+pub const DEFAULT_WAIT: Duration = Duration::from_secs(120);
+
+/// Polling granularity of the default `wait` implementation.
+const POLL_INTERVAL: Duration = Duration::from_micros(200);
+
+/// Handle to one submitted job. Cheap, `Copy`, and meaningful only to
+/// the backend that issued it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct JobTicket {
+    pub id: u64,
+}
+
+/// Non-blocking result probe.
+#[derive(Debug)]
+pub enum JobPoll {
+    /// Still executing (or still queued); poll again.
+    Pending,
+    /// Terminal: the job's result or its typed failure. Consumes the
+    /// ticket.
+    Ready(Result<JobResult, Error>),
+}
+
+/// A place jobs can be submitted to and results collected from.
+///
+/// Implementations must be `Send + Sync`: the serving edge polls
+/// tickets from a completer thread while reader threads submit.
+pub trait Backend: Send + Sync {
+    /// Short name for logs and metrics headers ("in-process",
+    /// "rpc-client", "shard-router").
+    fn label(&self) -> &'static str;
+
+    /// Admit and enqueue one job. Fails fast with the typed error
+    /// (admission, backpressure, or routing) without blocking on
+    /// execution.
+    fn submit(&self, spec: JobSpec) -> Result<JobTicket, Error>;
+
+    /// Non-blocking result probe. `Ready` consumes the ticket.
+    fn poll(&self, ticket: &JobTicket) -> JobPoll;
+
+    /// Abandon a ticket: release any result channel held for it. After
+    /// this, `poll` on the ticket reports unknown-ticket. Default no-op
+    /// for backends without per-ticket state.
+    fn forget(&self, ticket: &JobTicket) {
+        let _ = ticket;
+    }
+
+    /// Block until the ticket resolves or `timeout` elapses (timeout
+    /// forgets the ticket and yields `Internal`). Backends with a real
+    /// blocking primitive should override the default poll loop.
+    fn wait(&self, ticket: &JobTicket, timeout: Duration) -> Result<JobResult, Error> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match self.poll(ticket) {
+                JobPoll::Ready(out) => return out,
+                JobPoll::Pending => {
+                    if Instant::now() >= deadline {
+                        self.forget(ticket);
+                        return Err(Error::Internal("result wait timed out".into()));
+                    }
+                    std::thread::sleep(POLL_INTERVAL);
+                }
+            }
+        }
+    }
+
+    /// Submit-and-wait convenience with the default ceiling.
+    fn call(&self, spec: JobSpec) -> Result<JobResult, Error> {
+        let ticket = self.submit(spec)?;
+        self.wait(&ticket, DEFAULT_WAIT)
+    }
+
+    /// Rendered metrics table(s) for operator output.
+    fn metrics_text(&self) -> String;
+
+    /// Total queued jobs across lanes — the occupancy signal cluster
+    /// routing uses for overload diversion. Backends without a queue
+    /// view report 0.
+    fn queue_depth(&self) -> i64 {
+        0
+    }
+
+    /// Drain and stop. Idempotence is not required: a second call may
+    /// fail with `ShuttingDown`.
+    fn shutdown(&self) -> Result<DrainReport, Error>;
+}
+
+/// [`Backend`] over an owned in-process [`Coordinator`].
+///
+/// This replaces the old `Arc::try_unwrap(coord)` teardown dance:
+/// `shutdown` takes the coordinator out of an `RwLock<Option<_>>`, so
+/// any number of `Arc` clones can exist at drain time.
+pub struct InProcess {
+    coord: RwLock<Option<Coordinator>>,
+    pending: Mutex<HashMap<u64, mpsc::Receiver<JobResult>>>,
+    next_ticket: AtomicU64,
+}
+
+impl InProcess {
+    pub fn new(coord: Coordinator) -> InProcess {
+        InProcess {
+            coord: RwLock::new(Some(coord)),
+            pending: Mutex::new(HashMap::new()),
+            next_ticket: AtomicU64::new(1),
+        }
+    }
+
+    /// Run `f` against the live coordinator (metrics inspection,
+    /// registry access). `None` after shutdown.
+    pub fn with_coordinator<T>(&self, f: impl FnOnce(&Coordinator) -> T) -> Option<T> {
+        self.coord.read().expect("coordinator lock").as_ref().map(f)
+    }
+
+    /// Pull a pending receiver out of the ticket map (consuming the
+    /// ticket) so blocking waits don't hold the map lock.
+    fn take_rx(&self, ticket: &JobTicket) -> Option<mpsc::Receiver<JobResult>> {
+        self.pending.lock().expect("pending lock").remove(&ticket.id)
+    }
+}
+
+impl Backend for InProcess {
+    fn label(&self) -> &'static str {
+        "in-process"
+    }
+
+    fn submit(&self, spec: JobSpec) -> Result<JobTicket, Error> {
+        let guard = self.coord.read().expect("coordinator lock");
+        let coord = guard.as_ref().ok_or(Error::ShuttingDown)?;
+        let rx = coord.submit(spec)?;
+        let id = self.next_ticket.fetch_add(1, Ordering::Relaxed);
+        self.pending.lock().expect("pending lock").insert(id, rx);
+        Ok(JobTicket { id })
+    }
+
+    fn poll(&self, ticket: &JobTicket) -> JobPoll {
+        let mut pending = self.pending.lock().expect("pending lock");
+        let Some(rx) = pending.get(&ticket.id) else {
+            return JobPoll::Ready(Err(Error::Internal("unknown ticket".into())));
+        };
+        match rx.try_recv() {
+            Ok(result) => {
+                pending.remove(&ticket.id);
+                JobPoll::Ready(Ok(result))
+            }
+            Err(mpsc::TryRecvError::Empty) => JobPoll::Pending,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                pending.remove(&ticket.id);
+                JobPoll::Ready(Err(Error::Internal("result channel closed".into())))
+            }
+        }
+    }
+
+    fn forget(&self, ticket: &JobTicket) {
+        self.take_rx(ticket);
+    }
+
+    /// Blocking wait on the job's own result channel — no poll
+    /// granularity in the latency numbers.
+    fn wait(&self, ticket: &JobTicket, timeout: Duration) -> Result<JobResult, Error> {
+        let Some(rx) = self.take_rx(ticket) else {
+            return Err(Error::Internal("unknown ticket".into()));
+        };
+        match rx.recv_timeout(timeout) {
+            Ok(result) => Ok(result),
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                Err(Error::Internal("result wait timed out".into()))
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Err(Error::Internal("result channel closed".into()))
+            }
+        }
+    }
+
+    fn metrics_text(&self) -> String {
+        self.with_coordinator(|c| c.metrics_table().render())
+            .unwrap_or_else(|| "coordinator: shut down".into())
+    }
+
+    fn queue_depth(&self) -> i64 {
+        self.with_coordinator(|c| c.metrics.queue_depth_total())
+            .unwrap_or(0)
+    }
+
+    fn shutdown(&self) -> Result<DrainReport, Error> {
+        let coord = self
+            .coord
+            .write()
+            .expect("coordinator lock")
+            .take()
+            .ok_or(Error::ShuttingDown)?;
+        Ok(coord.shutdown())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::JobKind;
+    use crate::coordinator::server::CoordinatorConfig;
+    use crate::coordinator::ContextRegistry;
+    use crate::runtime::EngineHandle;
+    use std::sync::Arc;
+
+    fn backend() -> InProcess {
+        let engine = EngineHandle::spawn(None).expect("engine load");
+        InProcess::new(Coordinator::start(
+            engine,
+            Arc::new(ContextRegistry::new()),
+            CoordinatorConfig::default(),
+        ))
+    }
+
+    #[test]
+    fn submit_poll_wait_round_trip() {
+        let b = backend();
+        let x = vec![1.0; 512];
+        let y = vec![2.0; 512];
+        let ticket = b.submit(JobSpec::dot(x, y)).unwrap();
+        let r = b.wait(&ticket, DEFAULT_WAIT).unwrap();
+        assert_eq!(r.kind, JobKind::DotHybrid);
+        assert!((r.values[0] - 1024.0).abs() < 1e-9);
+        // Ticket is spent.
+        match b.poll(&ticket) {
+            JobPoll::Ready(Err(Error::Internal(msg))) => assert!(msg.contains("unknown")),
+            other => panic!("expected unknown-ticket, got {other:?}"),
+        }
+        assert!(b.shutdown().unwrap().is_clean());
+    }
+
+    #[test]
+    fn call_runs_submit_and_wait() {
+        let b = backend();
+        let r = b.call(JobSpec::dot(vec![3.0; 512], vec![1.0; 512])).unwrap();
+        assert!((r.values[0] - 1536.0).abs() < 1e-9);
+        assert!(b.shutdown().unwrap().is_clean());
+    }
+
+    #[test]
+    fn shutdown_is_terminal() {
+        let b = backend();
+        assert!(b.shutdown().unwrap().is_clean());
+        assert_eq!(
+            b.submit(JobSpec::dot(vec![1.0; 512], vec![1.0; 512])),
+            Err(Error::ShuttingDown)
+        );
+        assert_eq!(b.shutdown(), Err(Error::ShuttingDown));
+        assert_eq!(b.queue_depth(), 0);
+    }
+
+    #[test]
+    fn forget_releases_the_ticket() {
+        let b = backend();
+        let ticket = b.submit(JobSpec::dot(vec![1.0; 512], vec![1.0; 512])).unwrap();
+        b.forget(&ticket);
+        match b.poll(&ticket) {
+            JobPoll::Ready(Err(Error::Internal(msg))) => assert!(msg.contains("unknown")),
+            other => panic!("expected unknown-ticket, got {other:?}"),
+        }
+        // The worker still completes the job; drain accounting stays
+        // consistent because the coordinator counts completion, not
+        // collection.
+        let report = b.shutdown().unwrap();
+        assert_eq!(report.dropped, 0);
+    }
+}

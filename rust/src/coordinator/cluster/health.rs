@@ -1,0 +1,183 @@
+//! Per-shard health and occupancy tracking.
+//!
+//! Each worker link owns one [`HealthGauge`]; the router's monitor
+//! thread feeds it `health` RPC outcomes (success carries the worker's
+//! total queue depth — the PR 2 occupancy gauge, summed over lanes) and
+//! submission paths feed it transport failures and `Overloaded`
+//! rejections. Routing reads one question off it: *is this shard
+//! routable right now?* — which is false while the shard is `Down`
+//! (consecutive failures), inside an overload-diversion window, or
+//! reporting a queue depth above the diversion threshold.
+//!
+//! All state is atomics: gauges are read on every submission, written
+//! from monitor + reader threads, and never need to be consistent with
+//! each other — stale by one probe interval is fine for diversion.
+
+use std::sync::atomic::{AtomicI64, AtomicU32, AtomicU64, AtomicU8, Ordering};
+use std::time::{Duration, Instant};
+
+/// Consecutive probe/transport failures before a shard is `Down`.
+pub const DOWN_AFTER_FAILURES: u32 = 3;
+
+/// Shard availability as the router sees it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HealthState {
+    /// Responding; routable.
+    Up,
+    /// Recent failure(s), not yet past the Down threshold: still
+    /// routable (the next submission doubles as a probe), but a
+    /// failover candidate is preferred when one is Up.
+    Suspect,
+    /// Past the failure threshold: skipped by routing until a probe or
+    /// reconnect succeeds.
+    Down,
+}
+
+/// Lock-free health/occupancy record for one shard.
+pub struct HealthGauge {
+    /// Epoch for relative time stamps (gauge creation).
+    start: Instant,
+    state: AtomicU8,
+    consecutive_failures: AtomicU32,
+    /// Last queue depth reported by the worker's `health` RPC.
+    queue_depth: AtomicI64,
+    /// Millis-since-`start` until which the shard is overload-diverted.
+    overloaded_until_ms: AtomicU64,
+}
+
+impl Default for HealthGauge {
+    fn default() -> HealthGauge {
+        HealthGauge {
+            start: Instant::now(),
+            state: AtomicU8::new(HealthState::Up as u8),
+            consecutive_failures: AtomicU32::new(0),
+            queue_depth: AtomicI64::new(0),
+            overloaded_until_ms: AtomicU64::new(0),
+        }
+    }
+}
+
+impl HealthGauge {
+    fn now_ms(&self) -> u64 {
+        self.start.elapsed().as_millis() as u64
+    }
+
+    pub fn state(&self) -> HealthState {
+        match self.state.load(Ordering::Relaxed) {
+            0 => HealthState::Up,
+            1 => HealthState::Suspect,
+            _ => HealthState::Down,
+        }
+    }
+
+    fn set_state(&self, s: HealthState) {
+        let v = match s {
+            HealthState::Up => 0,
+            HealthState::Suspect => 1,
+            HealthState::Down => 2,
+        };
+        self.state.store(v, Ordering::Relaxed);
+    }
+
+    /// A probe (or any round trip) succeeded; `depth` is the worker's
+    /// reported total queue depth.
+    pub fn record_success(&self, depth: i64) {
+        self.consecutive_failures.store(0, Ordering::Relaxed);
+        self.queue_depth.store(depth, Ordering::Relaxed);
+        self.set_state(HealthState::Up);
+    }
+
+    /// A probe or transport operation failed.
+    pub fn record_failure(&self) {
+        let n = self.consecutive_failures.fetch_add(1, Ordering::Relaxed) + 1;
+        self.set_state(if n >= DOWN_AFTER_FAILURES {
+            HealthState::Down
+        } else {
+            HealthState::Suspect
+        });
+    }
+
+    /// The link dropped (EOF / connect refused): immediately Down.
+    pub fn record_disconnect(&self) {
+        self.consecutive_failures
+            .store(DOWN_AFTER_FAILURES, Ordering::Relaxed);
+        self.set_state(HealthState::Down);
+    }
+
+    /// The shard answered `Overloaded`: divert traffic away from it for
+    /// `window` (its queue needs to drain; hammering it just burns RPCs).
+    pub fn record_overloaded(&self, window: Duration) {
+        let until = self.now_ms().saturating_add(window.as_millis() as u64);
+        self.overloaded_until_ms.fetch_max(until, Ordering::Relaxed);
+    }
+
+    pub fn queue_depth(&self) -> i64 {
+        self.queue_depth.load(Ordering::Relaxed)
+    }
+
+    /// True while an overload-diversion window is open.
+    pub fn overload_diverted(&self) -> bool {
+        self.now_ms() < self.overloaded_until_ms.load(Ordering::Relaxed)
+    }
+
+    /// The routing predicate: not Down, not inside a diversion window,
+    /// and (when `divert_depth > 0`) not reporting a deeper queue than
+    /// the threshold.
+    pub fn routable(&self, divert_depth: i64) -> bool {
+        if self.state() == HealthState::Down || self.overload_diverted() {
+            return false;
+        }
+        divert_depth <= 0 || self.queue_depth() <= divert_depth
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn failures_escalate_to_down_and_success_recovers() {
+        let g = HealthGauge::default();
+        assert_eq!(g.state(), HealthState::Up);
+        g.record_failure();
+        assert_eq!(g.state(), HealthState::Suspect);
+        assert!(g.routable(0), "suspect shards still take traffic");
+        g.record_failure();
+        g.record_failure();
+        assert_eq!(g.state(), HealthState::Down);
+        assert!(!g.routable(0));
+        g.record_success(5);
+        assert_eq!(g.state(), HealthState::Up);
+        assert!(g.routable(0));
+        assert_eq!(g.queue_depth(), 5);
+    }
+
+    #[test]
+    fn disconnect_is_immediately_down() {
+        let g = HealthGauge::default();
+        g.record_disconnect();
+        assert_eq!(g.state(), HealthState::Down);
+        assert!(!g.routable(0));
+    }
+
+    #[test]
+    fn overload_window_diverts_then_expires() {
+        let g = HealthGauge::default();
+        g.record_overloaded(Duration::from_millis(40));
+        assert!(g.overload_diverted());
+        assert!(!g.routable(0));
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(!g.overload_diverted());
+        assert!(g.routable(0));
+    }
+
+    #[test]
+    fn deep_queue_diverts_when_thresholded() {
+        let g = HealthGauge::default();
+        g.record_success(1000);
+        assert!(g.routable(0), "zero threshold disables depth diversion");
+        assert!(!g.routable(512));
+        g.record_success(100);
+        assert!(g.routable(512));
+    }
+}

@@ -1,0 +1,131 @@
+//! Cluster membership: the worker list, its epoch, and the CLI flag
+//! syntax that names it.
+//!
+//! Membership is configuration here, not consensus: the router is told
+//! its workers (`--workers host:port,host:port` or `--workers
+//! a=host:port,b=host:port`) and bumps an epoch on every change. The
+//! epoch is the rebalance fence — a ring built at epoch E serves until a
+//! membership change produces E+1, at which point the router rebuilds
+//! placement and drains the removed workers (see `cluster::router`).
+
+/// One worker shard: a stable identity (the ring hashes the id, so a
+/// worker keeps its lane share across address changes) and its RPC
+/// address.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WorkerSpec {
+    pub id: String,
+    pub addr: String,
+}
+
+/// Parse the `--workers` flag: comma-separated `addr` or `id=addr`
+/// entries. Bare addresses get positional ids `w0, w1, ...` (stable as
+/// long as the flag order is stable).
+pub fn parse_workers(s: &str) -> Result<Vec<WorkerSpec>, String> {
+    let mut out = Vec::new();
+    for (i, part) in s.split(',').map(str::trim).enumerate() {
+        if part.is_empty() {
+            return Err(format!("empty worker entry at position {i}"));
+        }
+        let spec = match part.split_once('=') {
+            Some((id, addr)) => {
+                if id.is_empty() || addr.is_empty() {
+                    return Err(format!("malformed worker entry {part:?}"));
+                }
+                WorkerSpec { id: id.to_string(), addr: addr.to_string() }
+            }
+            None => WorkerSpec { id: format!("w{i}"), addr: part.to_string() },
+        };
+        out.push(spec);
+    }
+    if out.is_empty() {
+        return Err("no workers given".into());
+    }
+    let mut ids: Vec<&str> = out.iter().map(|w| w.id.as_str()).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    if ids.len() != out.len() {
+        return Err("duplicate worker ids".into());
+    }
+    Ok(out)
+}
+
+/// The router's membership view: worker list + change epoch.
+pub struct Membership {
+    workers: Vec<WorkerSpec>,
+    epoch: u64,
+}
+
+impl Membership {
+    pub fn new(workers: Vec<WorkerSpec>) -> Membership {
+        Membership { workers, epoch: 0 }
+    }
+
+    pub fn workers(&self) -> &[WorkerSpec] {
+        &self.workers
+    }
+
+    pub fn ids(&self) -> Vec<String> {
+        self.workers.iter().map(|w| w.id.clone()).collect()
+    }
+
+    /// Epoch counter; bumps on every add/remove.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Add a worker; `false` (no epoch bump) if the id already exists.
+    pub fn add(&mut self, spec: WorkerSpec) -> bool {
+        if self.workers.iter().any(|w| w.id == spec.id) {
+            return false;
+        }
+        self.workers.push(spec);
+        self.epoch += 1;
+        true
+    }
+
+    /// Remove a worker by id; returns its spec if present.
+    pub fn remove(&mut self, id: &str) -> Option<WorkerSpec> {
+        let i = self.workers.iter().position(|w| w.id == id)?;
+        self.epoch += 1;
+        Some(self.workers.remove(i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_bare_addresses_with_positional_ids() {
+        let w = parse_workers("127.0.0.1:9401,127.0.0.1:9402").unwrap();
+        assert_eq!(w.len(), 2);
+        assert_eq!(w[0], WorkerSpec { id: "w0".into(), addr: "127.0.0.1:9401".into() });
+        assert_eq!(w[1].id, "w1");
+    }
+
+    #[test]
+    fn parses_named_entries_and_rejects_malformed() {
+        let w = parse_workers("a=h1:1, b=h2:2").unwrap();
+        assert_eq!(w[0].id, "a");
+        assert_eq!(w[1].addr, "h2:2");
+        assert!(parse_workers("").is_err());
+        assert!(parse_workers("a=,b=x:1").is_err());
+        assert!(parse_workers("a=h:1,a=h:2").is_err());
+        assert!(parse_workers("h:1,,h:2").is_err());
+    }
+
+    #[test]
+    fn epoch_bumps_only_on_real_changes() {
+        let mut m = Membership::new(parse_workers("h1:1,h2:2").unwrap());
+        assert_eq!(m.epoch(), 0);
+        assert!(m.add(WorkerSpec { id: "w9".into(), addr: "h9:9".into() }));
+        assert_eq!(m.epoch(), 1);
+        assert!(!m.add(WorkerSpec { id: "w9".into(), addr: "h9:9".into() }));
+        assert_eq!(m.epoch(), 1);
+        assert!(m.remove("w0").is_some());
+        assert_eq!(m.epoch(), 2);
+        assert!(m.remove("w0").is_none());
+        assert_eq!(m.epoch(), 2);
+        assert_eq!(m.workers().len(), 2);
+    }
+}

@@ -1,0 +1,36 @@
+//! Sharded multi-process cluster serving: consistent-hash placement of
+//! `(kind, tier, bucket)` lanes onto worker processes, with health-
+//! driven overload diversion, replica failover, and drain/rebalance on
+//! membership change.
+//!
+//! Topology (two `RpcServer` layers around one [`Backend`] seam):
+//!
+//! ```text
+//! clients ── RpcServer ── ShardRouter ──┬── RpcClient ── RpcServer ── InProcess (worker 0)
+//!            (hrfna route)              ├── RpcClient ── RpcServer ── InProcess (worker 1)
+//!                                       └── ...                       (hrfna worker)
+//! ```
+//!
+//! * [`ring`] — the consistent-hash ring and `lane_hash` (placement is
+//!   over wire labels, so any tooling can compute it),
+//! * [`membership`] — the worker list, `--workers` flag syntax, and the
+//!   rebalance epoch,
+//! * [`health`] — per-shard availability + occupancy gauges (fed by the
+//!   `health` RPC carrying the PR 2 queue-depth gauges),
+//! * [`router`] (`rpc` feature) — [`ShardRouter`], the routing
+//!   [`Backend`](crate::coordinator::Backend) itself.
+//!
+//! Ring, membership, and health are std-only and tier-1-tested; only
+//! the router, which speaks the wire, is feature-gated.
+
+pub mod health;
+pub mod membership;
+pub mod ring;
+#[cfg(feature = "rpc")]
+pub mod router;
+
+pub use health::{HealthGauge, HealthState, DOWN_AFTER_FAILURES};
+pub use membership::{parse_workers, Membership, WorkerSpec};
+pub use ring::{lane_hash, HashRing};
+#[cfg(feature = "rpc")]
+pub use router::{RouterConfig, ShardRouter};

@@ -1,0 +1,236 @@
+//! Consistent-hash ring for lane placement.
+//!
+//! Each worker contributes `vnodes` virtual points (hashes of
+//! `"{id}#{v}"`) on a u64 ring; a lane key hashes to a point and routes
+//! to the first worker clockwise from it. Virtual nodes smooth the load
+//! split; the consistent-hash property is what cluster mode leans on at
+//! membership change: adding a worker to an N-worker ring remaps only
+//! ≈1/(N+1) of lane keys — every moved key moves *to* the new worker,
+//! never between survivors — so a scale-out event invalidates the
+//! minimum amount of placement state (property-tested below).
+//!
+//! `candidates` returns all distinct workers in ring order from the
+//! key's point: position 0 is the primary, the rest are the failover /
+//! overload-diversion sequence, which every router replica computes
+//! identically without coordination.
+
+/// SplitMix64 finalizer — the bit mixer behind both the point hashes and
+/// the key hashes. (The PRNG in `util::prng` keeps its own private copy;
+/// ring hashing must stay independent of PRNG stream evolution.)
+fn mix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// FNV-1a over bytes, finalized through [`mix64`].
+fn hash_str(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    mix64(h)
+}
+
+/// Placement hash of a lane key. The inputs are the **wire labels**
+/// (`"dot/hrfna"`, `"paper"`), not enum discriminants, so router and
+/// tooling in any language agree on placement.
+pub fn lane_hash(kind_label: &str, tier_label: &str, bucket: usize) -> u64 {
+    mix64(hash_str(kind_label) ^ hash_str(tier_label).rotate_left(17) ^ (bucket as u64))
+}
+
+/// Consistent-hash ring over worker indices.
+pub struct HashRing {
+    /// Sorted (point, worker-index) pairs.
+    points: Vec<(u64, usize)>,
+    workers: usize,
+}
+
+impl HashRing {
+    /// Default virtual nodes per worker — enough that a 4-worker ring's
+    /// per-worker share stays within a few percent of 1/N.
+    pub const DEFAULT_VNODES: usize = 64;
+
+    /// Build a ring over `ids` (one entry per worker, index = position)
+    /// with `vnodes` virtual points each.
+    pub fn new(ids: &[String], vnodes: usize) -> HashRing {
+        let vnodes = vnodes.max(1);
+        let mut points = Vec::with_capacity(ids.len() * vnodes);
+        for (w, id) in ids.iter().enumerate() {
+            for v in 0..vnodes {
+                points.push((hash_str(&format!("{id}#{v}")), w));
+            }
+        }
+        points.sort_unstable();
+        HashRing { points, workers: ids.len() }
+    }
+
+    /// Number of workers on the ring.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Index of the first ring point clockwise from `key`.
+    fn successor(&self, key: u64) -> usize {
+        // partition_point: first point with hash > key, wrapping to 0.
+        let i = self.points.partition_point(|&(h, _)| h <= key);
+        if i == self.points.len() {
+            0
+        } else {
+            i
+        }
+    }
+
+    /// The worker owning `key` (its primary placement).
+    pub fn primary(&self, key: u64) -> Option<usize> {
+        if self.points.is_empty() {
+            return None;
+        }
+        Some(self.points[self.successor(key)].1)
+    }
+
+    /// All distinct workers in ring order from `key`: `[0]` is the
+    /// primary, the rest the failover sequence. Deterministic for a
+    /// given membership, so independent routers agree.
+    pub fn candidates(&self, key: u64) -> Vec<usize> {
+        let mut order = Vec::with_capacity(self.workers);
+        if self.points.is_empty() {
+            return order;
+        }
+        let start = self.successor(key);
+        for i in 0..self.points.len() {
+            let w = self.points[(start + i) % self.points.len()].1;
+            if !order.contains(&w) {
+                order.push(w);
+                if order.len() == self.workers {
+                    break;
+                }
+            }
+        }
+        order
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::router::ShapeBuckets;
+    use crate::hybrid::registry::Tier;
+    use crate::prop_assert;
+    use crate::util::proptest::check_with;
+
+    fn ids(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("w{i}")).collect()
+    }
+
+    /// Lane-key hashes for every lane the default bucket set serves,
+    /// plus synthetic buckets for volume.
+    fn lane_keys() -> Vec<u64> {
+        let mut keys: Vec<u64> = ShapeBuckets::default()
+            .lanes()
+            .iter()
+            .map(|&(k, t, b)| lane_hash(k.label(), t.label(), b))
+            .collect();
+        // Real deployments have O(10) lanes; the 1/N property needs
+        // volume to measure, so extend with synthetic shape buckets.
+        for bucket in 0..2048usize {
+            keys.push(lane_hash("dot/hrfna", Tier::Paper.label(), 8 << (bucket % 16) | bucket));
+        }
+        keys
+    }
+
+    #[test]
+    fn primary_is_deterministic_and_total() {
+        let ring = HashRing::new(&ids(3), HashRing::DEFAULT_VNODES);
+        for key in lane_keys() {
+            let w = ring.primary(key).unwrap();
+            assert!(w < 3);
+            assert_eq!(ring.primary(key).unwrap(), w);
+        }
+        assert_eq!(HashRing::new(&[], 64).primary(1), None);
+    }
+
+    #[test]
+    fn candidates_enumerate_all_workers_primary_first() {
+        let ring = HashRing::new(&ids(4), HashRing::DEFAULT_VNODES);
+        for key in lane_keys() {
+            let c = ring.candidates(key);
+            assert_eq!(c.len(), 4);
+            assert_eq!(c[0], ring.primary(key).unwrap());
+            let mut sorted = c.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, vec![0, 1, 2, 3], "candidates must be a permutation");
+        }
+    }
+
+    /// The consistent-hash stability property (satellite test): growing
+    /// the ring from N to N+1 workers moves ≈1/(N+1) of lane keys, and
+    /// every moved key moves TO the new worker.
+    #[test]
+    fn adding_a_shard_moves_about_one_nth_of_keys() {
+        check_with("ring_scale_out_stability", 64, |rng| {
+            let n = 1 + rng.below(7) as usize; // 1..=7 existing workers
+            let before = HashRing::new(&ids(n), HashRing::DEFAULT_VNODES);
+            let after = HashRing::new(&ids(n + 1), HashRing::DEFAULT_VNODES);
+            let keys: Vec<u64> = (0..4096).map(|_| rng.next_u64()).collect();
+            let mut moved = 0usize;
+            for &key in &keys {
+                let a = before.primary(key).unwrap();
+                let b = after.primary(key).unwrap();
+                if a != b {
+                    moved += 1;
+                    prop_assert!(
+                        b == n,
+                        "key moved between surviving workers {a}->{b} (new worker is {n})"
+                    );
+                }
+            }
+            let expected = keys.len() as f64 / (n + 1) as f64;
+            // Virtual-node placement is statistical; allow a wide band
+            // around 1/(N+1) but reject both "nothing moved" and "mass
+            // reshuffle".
+            prop_assert!(
+                (moved as f64) > 0.4 * expected && (moved as f64) < 2.0 * expected,
+                "moved {moved} of {} keys, expected ≈{expected:.0} (n={n})",
+                keys.len()
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn vnodes_spread_load_roughly_evenly() {
+        let n = 4;
+        let ring = HashRing::new(&ids(n), HashRing::DEFAULT_VNODES);
+        let mut counts = vec![0usize; n];
+        let keys = 16384u64;
+        for i in 0..keys {
+            counts[ring.primary(mix64(i)).unwrap()] += 1;
+        }
+        let ideal = keys as usize / n;
+        for (w, &c) in counts.iter().enumerate() {
+            assert!(
+                c > ideal / 2 && c < ideal * 2,
+                "worker {w} owns {c} of {keys} keys (ideal {ideal})"
+            );
+        }
+    }
+
+    #[test]
+    fn lane_hash_separates_lanes() {
+        let lanes = ShapeBuckets::default().lanes();
+        let mut hashes: Vec<u64> = lanes
+            .iter()
+            .map(|&(k, t, b)| lane_hash(k.label(), t.label(), b))
+            .collect();
+        hashes.sort_unstable();
+        hashes.dedup();
+        assert_eq!(hashes.len(), lanes.len(), "lane hash collision");
+    }
+}

@@ -1,0 +1,672 @@
+//! The shard router: a [`Backend`] that places jobs on a fleet of
+//! worker `RpcServer`s by consistent-hashing their lane key.
+//!
+//! Placement is **tier-aware**: the route key is
+//! `lane_hash(kind, resolved-tier, bucket)` — the same `(kind, tier,
+//! bucket)` triple the in-process coordinator shards its queues by —
+//! computed with the non-mutating admission probe
+//! ([`probe_bucket`]) and the bucket set's tier clamp. All jobs of one
+//! lane land on one worker, so each worker's batcher sees the same
+//! shape-coherent stream it would see in-process and planar batching
+//! efficiency survives the sharding.
+//!
+//! Failure handling, in routing order ([`HashRing::candidates`]):
+//!
+//! * **Overload diversion** — a worker answering `Overloaded` (or whose
+//!   `health` probe reports a queue deeper than `divert_depth`) is
+//!   skipped for `overload_divert` while its queue drains; the job goes
+//!   to the next candidate. If *every* candidate is diverted the job is
+//!   still offered to one (honest backpressure beats a false
+//!   `Unavailable`).
+//! * **Failover** — a dead link (connect refused, EOF, mid-frame close)
+//!   marks the shard `Down` and in-flight jobs on it are **resubmitted**
+//!   to the next candidate. Jobs here are pure computations, so
+//!   at-least-once redelivery is safe (a kill may execute a job twice;
+//!   it can never corrupt state). The monitor thread keeps probing and
+//!   reconnects the shard when it returns.
+//! * **Drain on membership change** — [`ShardRouter::remove_worker`]
+//!   fences the shard out of the ring, asks it to drain (its in-flight
+//!   results are still delivered over the open connection), and reports
+//!   the handoff as a [`DrainReport`] — the same clean-drain contract
+//!   the in-process coordinator shuts down with.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::backend::{Backend, JobPoll, JobTicket};
+use crate::coordinator::error::Error;
+use crate::coordinator::request::JobSpec;
+use crate::coordinator::router::{probe_bucket, ShapeBuckets};
+use crate::coordinator::rpc::client::RpcClient;
+use crate::coordinator::rpc::protocol::{result_from_json, ResponseBody};
+use crate::coordinator::server::DrainReport;
+use crate::hybrid::registry::Tier;
+
+use super::health::{HealthGauge, HealthState};
+use super::membership::{Membership, WorkerSpec};
+use super::ring::{lane_hash, HashRing};
+
+/// Router tuning.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Shape buckets used to compute route keys. Must match the
+    /// workers' admission buckets, or jobs the router routes get
+    /// rejected at the worker.
+    pub buckets: ShapeBuckets,
+    /// Virtual nodes per worker on the hash ring.
+    pub vnodes: usize,
+    /// Health-probe cadence of the monitor thread.
+    pub health_interval: Duration,
+    /// How long an `Overloaded` answer diverts traffic off a shard.
+    pub overload_divert: Duration,
+    /// Queue-depth threshold for occupancy diversion (0 disables).
+    pub divert_depth: i64,
+    /// Per-attempt connect budget (startup and monitor reconnects).
+    pub connect_wait: Duration,
+    /// How long `shutdown` keeps polling uncollected tickets before
+    /// declaring them dropped.
+    pub drain_wait: Duration,
+}
+
+impl Default for RouterConfig {
+    fn default() -> RouterConfig {
+        RouterConfig {
+            buckets: ShapeBuckets::default(),
+            vnodes: HashRing::DEFAULT_VNODES,
+            health_interval: Duration::from_millis(500),
+            overload_divert: Duration::from_millis(250),
+            divert_depth: 0,
+            connect_wait: Duration::from_secs(5),
+            drain_wait: Duration::from_secs(10),
+        }
+    }
+}
+
+/// One worker shard as the router sees it: the connection (rebuilt by
+/// the monitor on loss), its health gauge, and forwarding counters.
+struct WorkerLink {
+    spec: WorkerSpec,
+    conn: Mutex<Option<RpcClient>>,
+    health: HealthGauge,
+    /// Fenced out by `remove_worker`: the monitor stops reconnecting it
+    /// and placement never offers it jobs.
+    retired: AtomicBool,
+    forwarded: AtomicU64,
+    completed: AtomicU64,
+    errored: AtomicU64,
+}
+
+impl WorkerLink {
+    fn new(spec: WorkerSpec) -> WorkerLink {
+        WorkerLink {
+            spec,
+            conn: Mutex::new(None),
+            health: HealthGauge::default(),
+            retired: AtomicBool::new(false),
+            forwarded: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            errored: AtomicU64::new(0),
+        }
+    }
+
+    fn retired(&self) -> bool {
+        self.retired.load(Ordering::SeqCst)
+    }
+
+    /// Ensure a live connection; true when one exists after the call.
+    fn connect(&self, wait: Duration) -> bool {
+        let mut conn = self.conn.lock().expect("link conn lock");
+        if conn.is_some() {
+            return true;
+        }
+        match RpcClient::connect_retry(&self.spec.addr, wait) {
+            Ok(c) => {
+                *conn = Some(c);
+                true
+            }
+            Err(_) => {
+                self.health.record_failure();
+                false
+            }
+        }
+    }
+
+    /// Drop the connection and mark the shard Down.
+    fn disconnect(&self) {
+        *self.conn.lock().expect("link conn lock") = None;
+        self.health.record_disconnect();
+    }
+
+    /// Fire one submission; the wire id correlates the response.
+    fn submit(&self, spec: &JobSpec) -> Result<u64, ()> {
+        let mut conn = self.conn.lock().expect("link conn lock");
+        let Some(client) = conn.as_mut() else { return Err(()) };
+        match client.submit_spec(spec) {
+            Ok(id) => {
+                self.forwarded.fetch_add(1, Ordering::Relaxed);
+                Ok(id)
+            }
+            Err(_) => {
+                *conn = None;
+                self.health.record_disconnect();
+                Err(())
+            }
+        }
+    }
+
+    /// Non-blocking response probe for one wire id.
+    fn try_take(&self, wire_id: u64) -> Result<Option<crate::coordinator::rpc::Response>, ()> {
+        let mut conn = self.conn.lock().expect("link conn lock");
+        let Some(client) = conn.as_mut() else { return Err(()) };
+        match client.try_take(wire_id) {
+            Ok(r) => Ok(r),
+            Err(_) => {
+                *conn = None;
+                self.health.record_disconnect();
+                Err(())
+            }
+        }
+    }
+
+    /// One `health` RPC round trip; feeds the gauge.
+    fn probe(&self) {
+        let mut conn = self.conn.lock().expect("link conn lock");
+        let Some(client) = conn.as_mut() else { return };
+        match client.health() {
+            Ok((_, queued)) => self.health.record_success(queued),
+            Err(_) => {
+                *conn = None;
+                self.health.record_disconnect();
+            }
+        }
+    }
+
+    /// Best-effort drain request.
+    fn send_shutdown(&self) {
+        let mut conn = self.conn.lock().expect("link conn lock");
+        if let Some(client) = conn.as_mut() {
+            let _ = client.shutdown_server();
+        }
+    }
+}
+
+/// Ring + the mapping from ring worker index to link index, rebuilt
+/// together on every membership change.
+struct Placement {
+    ring: HashRing,
+    link_of: Vec<usize>,
+}
+
+/// Where one accepted job currently lives.
+struct RouteState {
+    spec: JobSpec,
+    key: u64,
+    link: usize,
+    wire_id: u64,
+    /// Links already offered this job (failover never re-offers).
+    tried: Vec<usize>,
+}
+
+/// Failover/diversion ordering: routable candidates first (in ring
+/// order), then — as the honest-backpressure fallback — the remaining
+/// untried, unretired candidates.
+fn failover_order(
+    candidates: &[usize],
+    tried: &[usize],
+    routable: impl Fn(usize) -> bool,
+    retired: impl Fn(usize) -> bool,
+) -> Vec<usize> {
+    let mut order = Vec::with_capacity(candidates.len());
+    for &i in candidates {
+        if !tried.contains(&i) && !retired(i) && routable(i) {
+            order.push(i);
+        }
+    }
+    for &i in candidates {
+        if !tried.contains(&i) && !retired(i) && !order.contains(&i) {
+            order.push(i);
+        }
+    }
+    order
+}
+
+/// The sharded cluster front: a [`Backend`] whose `submit` places jobs
+/// on worker `RpcServer`s. Serve it with `RpcServer::bind` to get the
+/// `hrfna route` process.
+pub struct ShardRouter {
+    cfg: RouterConfig,
+    links: Vec<Arc<WorkerLink>>,
+    placement: RwLock<Placement>,
+    membership: Mutex<Membership>,
+    routes: Mutex<HashMap<u64, RouteState>>,
+    next_ticket: AtomicU64,
+    accepted: AtomicU64,
+    completed: AtomicU64,
+    rejected: AtomicU64,
+    dropped: AtomicU64,
+    shutting_down: AtomicBool,
+    stop_monitor: Arc<AtomicBool>,
+    monitor: Mutex<Option<thread::JoinHandle<()>>>,
+}
+
+impl ShardRouter {
+    /// Connect the fleet and start the health monitor. Fails with
+    /// `Unavailable` only when *no* worker is reachable — a partial
+    /// fleet serves degraded rather than not at all.
+    pub fn start(workers: Vec<WorkerSpec>, cfg: RouterConfig) -> Result<ShardRouter, Error> {
+        if workers.is_empty() {
+            return Err(Error::Rejected("cluster needs at least one worker".into()));
+        }
+        let links: Vec<Arc<WorkerLink>> =
+            workers.iter().cloned().map(|w| Arc::new(WorkerLink::new(w))).collect();
+        let mut up = 0;
+        for link in &links {
+            if link.connect(cfg.connect_wait) {
+                link.probe();
+                if link.health.state() == HealthState::Up {
+                    up += 1;
+                }
+            }
+        }
+        if up == 0 {
+            return Err(Error::Unavailable(format!(
+                "none of the {} workers answered a health probe",
+                links.len()
+            )));
+        }
+        let membership = Membership::new(workers);
+        let placement = Placement {
+            ring: HashRing::new(&membership.ids(), cfg.vnodes),
+            link_of: (0..links.len()).collect(),
+        };
+
+        let stop_monitor = Arc::new(AtomicBool::new(false));
+        let monitor = {
+            let links: Vec<Arc<WorkerLink>> = links.clone();
+            let stop = Arc::clone(&stop_monitor);
+            let interval = cfg.health_interval;
+            let connect_wait = cfg.connect_wait.min(interval);
+            thread::Builder::new()
+                .name("cluster-monitor".into())
+                .spawn(move || {
+                    while !stop.load(Ordering::SeqCst) {
+                        for link in &links {
+                            if link.retired() {
+                                continue;
+                            }
+                            if link.connect(connect_wait) {
+                                link.probe();
+                            }
+                        }
+                        let tick = Instant::now();
+                        while tick.elapsed() < interval && !stop.load(Ordering::SeqCst) {
+                            thread::sleep(Duration::from_millis(20));
+                        }
+                    }
+                })
+                .map_err(|e| Error::Internal(format!("spawn cluster monitor: {e}")))?
+        };
+
+        Ok(ShardRouter {
+            cfg,
+            links,
+            placement: RwLock::new(placement),
+            membership: Mutex::new(membership),
+            routes: Mutex::new(HashMap::new()),
+            next_ticket: AtomicU64::new(1),
+            accepted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            shutting_down: AtomicBool::new(false),
+            stop_monitor,
+            monitor: Mutex::new(Some(monitor)),
+        })
+    }
+
+    /// The route key of a spec: its lane, hashed over wire labels.
+    fn route_key(&self, spec: &JobSpec) -> Result<u64, Error> {
+        let bucket = probe_bucket(&spec.payload, spec.kind, &self.cfg.buckets).ok_or_else(|| {
+            Error::Rejected(format!("no lane bucket admits this {:?} payload", spec.kind))
+        })?;
+        let tier = if spec.kind.is_hybrid() {
+            self.cfg.buckets.enabled_tier_at_or_above(spec.tier).ok_or_else(|| {
+                Error::Rejected(format!("no enabled tier at or above {:?}", spec.tier))
+            })?
+        } else {
+            Tier::Paper
+        };
+        Ok(lane_hash(spec.kind.label(), tier.label(), bucket))
+    }
+
+    /// Offer `spec` to candidates in failover order, recording each
+    /// attempt in `tried`. Returns the accepting (link index, wire id).
+    fn place(&self, key: u64, spec: &JobSpec, tried: &mut Vec<usize>) -> Result<(usize, u64), Error> {
+        let candidates: Vec<usize> = {
+            let placement = self.placement.read().expect("placement lock");
+            placement.ring.candidates(key).iter().map(|&w| placement.link_of[w]).collect()
+        };
+        let order = failover_order(
+            &candidates,
+            tried,
+            |i| self.links[i].health.routable(self.cfg.divert_depth),
+            |i| self.links[i].retired(),
+        );
+        for i in order {
+            tried.push(i);
+            // A Down-but-back shard may be reconnectable right now; give
+            // it one quick chance before skipping (the monitor will do
+            // the patient retrying).
+            if !self.links[i].connect(Duration::from_millis(50)) {
+                continue;
+            }
+            if let Ok(wire_id) = self.links[i].submit(spec) {
+                return Ok((i, wire_id));
+            }
+        }
+        Err(Error::Unavailable("no routable worker for this lane".into()))
+    }
+
+    /// Move a ticket's job to the next candidate after its current
+    /// shard failed it; `on_exhausted` is what the caller reports when
+    /// no candidate is left.
+    fn failover(&self, ticket_id: u64, on_exhausted: Error) -> JobPoll {
+        let Some(mut state) = self.routes.lock().expect("routes lock").remove(&ticket_id) else {
+            return JobPoll::Ready(Err(Error::Internal("unknown ticket".into())));
+        };
+        match self.place(state.key, &state.spec, &mut state.tried) {
+            Ok((link, wire_id)) => {
+                state.link = link;
+                state.wire_id = wire_id;
+                self.routes.lock().expect("routes lock").insert(ticket_id, state);
+                JobPoll::Pending
+            }
+            Err(_) => {
+                self.completed.fetch_add(1, Ordering::Relaxed);
+                JobPoll::Ready(Err(on_exhausted))
+            }
+        }
+    }
+
+    /// Fence `id` out of the ring, ask it to drain, and report the
+    /// handoff. In-flight jobs on the shard finish over the still-open
+    /// connection (the worker's drain semantics); new jobs go to the
+    /// survivors the rebuilt ring picks.
+    pub fn remove_worker(&self, id: &str) -> Result<DrainReport, Error> {
+        let mut membership = self.membership.lock().expect("membership lock");
+        let removed = membership
+            .remove(id)
+            .ok_or_else(|| Error::Rejected(format!("unknown worker {id:?}")))?;
+        if membership.workers().is_empty() {
+            // Put it back: a router with zero shards serves nothing.
+            membership.add(removed);
+            return Err(Error::Rejected("cannot remove the last worker".into()));
+        }
+        let link_of: Vec<usize> = membership
+            .ids()
+            .iter()
+            .map(|mid| {
+                self.links
+                    .iter()
+                    .position(|l| &l.spec.id == mid)
+                    .expect("membership id has a link")
+            })
+            .collect();
+        let ring = HashRing::new(&membership.ids(), self.cfg.vnodes);
+        drop(membership);
+        *self.placement.write().expect("placement lock") = Placement { ring, link_of };
+
+        let link = self
+            .links
+            .iter()
+            .find(|l| l.spec.id == id)
+            .expect("removed id has a link");
+        link.retired.store(true, Ordering::SeqCst);
+        link.send_shutdown();
+        let in_flight = self
+            .routes
+            .lock()
+            .expect("routes lock")
+            .values()
+            .filter(|s| self.links[s.link].spec.id == id)
+            .count() as u64;
+        Ok(DrainReport {
+            accepted: link.forwarded.load(Ordering::Relaxed),
+            completed: link.completed.load(Ordering::Relaxed),
+            rejected: link.errored.load(Ordering::Relaxed),
+            drained: in_flight,
+            dropped: 0,
+        })
+    }
+
+    /// Shards currently reported Up.
+    pub fn up_count(&self) -> usize {
+        self.links
+            .iter()
+            .filter(|l| !l.retired() && l.health.state() == HealthState::Up)
+            .count()
+    }
+}
+
+impl Drop for ShardRouter {
+    fn drop(&mut self) {
+        self.stop_monitor.store(true, Ordering::SeqCst);
+        if let Some(h) = self.monitor.lock().expect("monitor lock").take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Backend for ShardRouter {
+    fn label(&self) -> &'static str {
+        "shard-router"
+    }
+
+    fn submit(&self, spec: JobSpec) -> Result<JobTicket, Error> {
+        if self.shutting_down.load(Ordering::SeqCst) {
+            return Err(Error::ShuttingDown);
+        }
+        let key = self.route_key(&spec).map_err(|e| {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            e
+        })?;
+        let mut tried = Vec::new();
+        let (link, wire_id) = self.place(key, &spec, &mut tried).map_err(|e| {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            e
+        })?;
+        let id = self.next_ticket.fetch_add(1, Ordering::Relaxed);
+        self.routes
+            .lock()
+            .expect("routes lock")
+            .insert(id, RouteState { spec, key, link, wire_id, tried });
+        self.accepted.fetch_add(1, Ordering::Relaxed);
+        Ok(JobTicket { id })
+    }
+
+    fn poll(&self, ticket: &JobTicket) -> JobPoll {
+        let located = {
+            let routes = self.routes.lock().expect("routes lock");
+            routes.get(&ticket.id).map(|s| (s.link, s.wire_id))
+        };
+        let Some((link_idx, wire_id)) = located else {
+            return JobPoll::Ready(Err(Error::Internal("unknown ticket".into())));
+        };
+        let link = &self.links[link_idx];
+        match link.try_take(wire_id) {
+            Ok(None) => JobPoll::Pending,
+            Ok(Some(resp)) => match resp.body {
+                ResponseBody::Result(v) => {
+                    self.routes.lock().expect("routes lock").remove(&ticket.id);
+                    self.completed.fetch_add(1, Ordering::Relaxed);
+                    link.completed.fetch_add(1, Ordering::Relaxed);
+                    match result_from_json(&v) {
+                        Ok(r) => JobPoll::Ready(Ok(r)),
+                        Err(e) => JobPoll::Ready(Err(Error::Internal(format!(
+                            "undecodable worker result: {e}"
+                        )))),
+                    }
+                }
+                ResponseBody::Error(e) => {
+                    link.errored.fetch_add(1, Ordering::Relaxed);
+                    match &e {
+                        // The shard sheds load or is leaving: divert and
+                        // re-place. The error passes through only when
+                        // every candidate is exhausted.
+                        Error::Overloaded { .. } => {
+                            link.health.record_overloaded(self.cfg.overload_divert);
+                            self.failover(ticket.id, e)
+                        }
+                        Error::ShuttingDown | Error::Unavailable(_) => self.failover(ticket.id, e),
+                        _ => {
+                            self.routes.lock().expect("routes lock").remove(&ticket.id);
+                            self.completed.fetch_add(1, Ordering::Relaxed);
+                            JobPoll::Ready(Err(e))
+                        }
+                    }
+                }
+            },
+            // Transport loss: the job's fate on that shard is unknown;
+            // resubmit to the next candidate (pure computation ⇒
+            // at-least-once is safe).
+            Err(()) => self.failover(
+                ticket.id,
+                Error::Unavailable(format!("worker {} lost mid-job", link.spec.id)),
+            ),
+        }
+    }
+
+    fn forget(&self, ticket: &JobTicket) {
+        if self.routes.lock().expect("routes lock").remove(&ticket.id).is_some() {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn metrics_text(&self) -> String {
+        let mut out = format!(
+            "shard-router: {} workers, {} up | accepted {} completed {} rejected {} dropped {}\n",
+            self.links.len(),
+            self.up_count(),
+            self.accepted.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.dropped.load(Ordering::Relaxed),
+        );
+        for link in &self.links {
+            out.push_str(&format!(
+                "  {:<12} {:<20} {:?}{} queued {} forwarded {} completed {} errored {}\n",
+                link.spec.id,
+                link.spec.addr,
+                link.health.state(),
+                if link.retired() { " (retired)" } else { "" },
+                link.health.queue_depth(),
+                link.forwarded.load(Ordering::Relaxed),
+                link.completed.load(Ordering::Relaxed),
+                link.errored.load(Ordering::Relaxed),
+            ));
+        }
+        out
+    }
+
+    fn queue_depth(&self) -> i64 {
+        self.links
+            .iter()
+            .filter(|l| !l.retired())
+            .map(|l| l.health.queue_depth())
+            .sum()
+    }
+
+    fn shutdown(&self) -> Result<DrainReport, Error> {
+        if self.shutting_down.swap(true, Ordering::SeqCst) {
+            return Err(Error::ShuttingDown);
+        }
+        // Drain: keep polling uncollected tickets so late results land
+        // in the accounting instead of as drops.
+        let deadline = Instant::now() + self.cfg.drain_wait;
+        loop {
+            let ids: Vec<u64> = {
+                let routes = self.routes.lock().expect("routes lock");
+                routes.keys().copied().collect()
+            };
+            if ids.is_empty() || Instant::now() >= deadline {
+                break;
+            }
+            for id in ids {
+                let _ = self.poll(&JobTicket { id });
+            }
+            thread::sleep(Duration::from_millis(5));
+        }
+        let undrained = self.routes.lock().expect("routes lock").len() as u64;
+        self.dropped.fetch_add(undrained, Ordering::Relaxed);
+
+        self.stop_monitor.store(true, Ordering::SeqCst);
+        if let Some(h) = self.monitor.lock().expect("monitor lock").take() {
+            let _ = h.join();
+        }
+        for link in &self.links {
+            if !link.retired() {
+                link.send_shutdown();
+            }
+        }
+        Ok(DrainReport {
+            accepted: self.accepted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            drained: 0,
+            dropped: self.dropped.load(Ordering::Relaxed),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn failover_order_prefers_routable_then_falls_back() {
+        let candidates = [2usize, 0, 1, 3];
+        // 0 and 2 unroutable, 3 retired.
+        let order = failover_order(&candidates, &[], |i| i == 1, |i| i == 3);
+        assert_eq!(order, vec![1, 2, 0]);
+        // Tried links never reappear.
+        let order = failover_order(&candidates, &[1, 2], |i| i == 1, |i| i == 3);
+        assert_eq!(order, vec![0]);
+        // Everything tried: empty.
+        let order = failover_order(&candidates, &[0, 1, 2, 3], |_| true, |_| false);
+        assert!(order.is_empty());
+    }
+
+    #[test]
+    fn router_config_default_is_sane() {
+        let cfg = RouterConfig::default();
+        assert!(cfg.vnodes >= 16);
+        assert!(cfg.health_interval > Duration::ZERO);
+        assert!(cfg.overload_divert > Duration::ZERO);
+        assert_eq!(cfg.divert_depth, 0, "depth diversion is opt-in");
+    }
+
+    #[test]
+    fn starting_with_no_reachable_worker_is_unavailable() {
+        // Port 1 on localhost refuses immediately.
+        let workers = vec![WorkerSpec { id: "w0".into(), addr: "127.0.0.1:1".into() }];
+        let cfg = RouterConfig {
+            connect_wait: Duration::from_millis(50),
+            ..RouterConfig::default()
+        };
+        match ShardRouter::start(workers, cfg) {
+            Err(Error::Unavailable(_)) => {}
+            other => panic!("expected Unavailable, got {:?}", other.map(|_| "router")),
+        }
+    }
+
+    #[test]
+    fn starting_with_no_workers_is_rejected() {
+        match ShardRouter::start(Vec::new(), RouterConfig::default()) {
+            Err(Error::Rejected(_)) => {}
+            other => panic!("expected Rejected, got {:?}", other.map(|_| "router")),
+        }
+    }
+}

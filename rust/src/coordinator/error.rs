@@ -1,0 +1,267 @@
+//! The unified coordinator error: one enum for every way a submission
+//! can fail, from local admission (`Rejected`, `Overloaded`) through the
+//! wire edge's quota/protocol failures (`RateLimited`, `Parse`, ...) to
+//! cluster routing (`Unavailable`). Every variant owns a **stable wire
+//! code** ([`Error::wire_code`]), so the same value travels losslessly
+//! router → worker → client: a worker's typed rejection re-encodes on
+//! the router byte-identically to what the worker sent.
+//!
+//! Before PR 7 this surface was split: `SubmitError` (three variants,
+//! in-process) and a separate `ErrorCode`/`WireError` pair in the RPC
+//! protocol, glued by a free function `code_for_submit_error`. The split
+//! meant the router would have had to translate between two error
+//! vocabularies at every hop. Now there is one vocabulary; the protocol
+//! layer only (de)serializes it.
+//!
+//! Compatibility: the numeric codes and the `Rejected`/`Overloaded`/
+//! `ShuttingDown` Display strings are pinned by the golden fixtures in
+//! `tests/fixtures/rpc/` — changing either is a wire break.
+
+use thiserror::Error as ThisError;
+
+use super::request::JobKind;
+use crate::hybrid::registry::Tier;
+
+/// Every way a submission can fail, with a stable wire code per variant.
+///
+/// Standard JSON-RPC codes cover transport/shape errors; the
+/// `-32000..` implementation range carries the coordinator's typed
+/// backpressure contract. `Unavailable` (−32006, new with cluster mode)
+/// reports that routing exhausted every reachable replica.
+#[derive(Clone, Debug, PartialEq, ThisError)]
+pub enum Error {
+    /// Frame payload was not valid JSON (wire code −32700).
+    #[error("parse error: {0}")]
+    Parse(String),
+    /// JSON was valid but not a well-formed request object (−32600).
+    #[error("invalid request: {0}")]
+    InvalidRequest(String),
+    /// Unknown `method` (−32601).
+    #[error("method not found: {0}")]
+    MethodNotFound(String),
+    /// Params failed to decode into the method's types (−32602).
+    #[error("invalid params: {0}")]
+    InvalidParams(String),
+    /// Server-side invariant failure (result channel died, ...) (−32603).
+    #[error("internal error: {0}")]
+    Internal(String),
+    /// The payload failed shape/value admission for its lane (−32001).
+    #[error("admission rejected: {0}")]
+    Rejected(String),
+    /// Every shard of the lane's bounded queue is at capacity (−32002).
+    /// The typed fields are the backpressure signal's structured data on
+    /// the wire; the message is derived from them, so decode rebuilds
+    /// the variant losslessly from `data` alone.
+    #[error("lane {kind:?}@{tier:?} overloaded: {queued} jobs queued at capacity {capacity}")]
+    Overloaded {
+        kind: JobKind,
+        tier: Tier,
+        queued: usize,
+        capacity: usize,
+    },
+    /// The coordinator is draining; no new work is accepted (−32003).
+    #[error("coordinator is shutting down")]
+    ShuttingDown,
+    /// Client exceeded its token-bucket submission rate (−32004).
+    #[error("rate limited: {0}")]
+    RateLimited(String),
+    /// Client exceeded its in-flight job quota (−32005).
+    #[error("too many jobs in flight: {0}")]
+    TooManyInFlight(String),
+    /// No backend/shard could take the job: the target worker (and every
+    /// failover replica) was unreachable or the transport died mid-job
+    /// (−32006).
+    #[error("backend unavailable: {0}")]
+    Unavailable(String),
+}
+
+/// `(wire code, label)` of every variant, in table order. Property tests
+/// iterate this; it is the single source of the code table.
+pub const WIRE_CODES: [(i64, &str); 11] = [
+    (-32700, "parse_error"),
+    (-32600, "invalid_request"),
+    (-32601, "method_not_found"),
+    (-32602, "invalid_params"),
+    (-32603, "internal"),
+    (-32001, "rejected"),
+    (-32002, "overloaded"),
+    (-32003, "shutting_down"),
+    (-32004, "rate_limited"),
+    (-32005, "too_many_in_flight"),
+    (-32006, "unavailable"),
+];
+
+impl Error {
+    /// The stable wire code. Committed fixtures assert these values;
+    /// changing one is a wire break.
+    pub fn wire_code(&self) -> i64 {
+        match self {
+            Error::Parse(_) => -32700,
+            Error::InvalidRequest(_) => -32600,
+            Error::MethodNotFound(_) => -32601,
+            Error::InvalidParams(_) => -32602,
+            Error::Internal(_) => -32603,
+            Error::Rejected(_) => -32001,
+            Error::Overloaded { .. } => -32002,
+            Error::ShuttingDown => -32003,
+            Error::RateLimited(_) => -32004,
+            Error::TooManyInFlight(_) => -32005,
+            Error::Unavailable(_) => -32006,
+        }
+    }
+
+    /// Human label of the variant's code (metrics/log lines).
+    pub fn code_label(&self) -> &'static str {
+        WIRE_CODES
+            .iter()
+            .find(|(c, _)| *c == self.wire_code())
+            .map(|(_, l)| *l)
+            .expect("every variant has a table entry")
+    }
+
+    /// True for the backpressure codes a well-behaved client answers
+    /// with backoff-and-retry (as opposed to fixing its request).
+    /// `Unavailable` counts: the job was never executed and a replica
+    /// may come back.
+    pub fn is_backpressure(&self) -> bool {
+        matches!(
+            self,
+            Error::Overloaded { .. }
+                | Error::ShuttingDown
+                | Error::RateLimited(_)
+                | Error::TooManyInFlight(_)
+                | Error::Unavailable(_)
+        )
+    }
+
+    /// Rebuild a variant from its wire code and message — the inverse of
+    /// encoding `self.to_string()` as the wire message. Each variant's
+    /// Display prefix is stripped back off, so
+    /// `Error::from_wire(e.wire_code(), &e.to_string())` round-trips the
+    /// payload exactly. `Overloaded` is the exception: its fields travel
+    /// as structured `data` (the message is derived), so this returns a
+    /// zeroed placeholder the protocol layer overwrites from `data`.
+    /// `None` for unknown codes.
+    pub fn from_wire(code: i64, message: &str) -> Option<Error> {
+        let strip = |prefix: &str| message.strip_prefix(prefix).unwrap_or(message).to_string();
+        Some(match code {
+            -32700 => Error::Parse(strip("parse error: ")),
+            -32600 => Error::InvalidRequest(strip("invalid request: ")),
+            -32601 => Error::MethodNotFound(strip("method not found: ")),
+            -32602 => Error::InvalidParams(strip("invalid params: ")),
+            -32603 => Error::Internal(strip("internal error: ")),
+            -32001 => Error::Rejected(strip("admission rejected: ")),
+            -32002 => Error::Overloaded {
+                kind: JobKind::DotHybrid,
+                tier: Tier::Paper,
+                queued: 0,
+                capacity: 0,
+            },
+            -32003 => Error::ShuttingDown,
+            -32004 => Error::RateLimited(strip("rate limited: ")),
+            -32005 => Error::TooManyInFlight(strip("too many jobs in flight: ")),
+            -32006 => Error::Unavailable(strip("backend unavailable: ")),
+            _ => return None,
+        })
+    }
+}
+
+/// Pre-PR7 name of the submission-error surface, now the unified enum.
+#[deprecated(note = "use coordinator::Error — submission and wire errors are one enum now")]
+pub type SubmitError = Error;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one_of_each() -> Vec<Error> {
+        vec![
+            Error::Parse("frame is not UTF-8".into()),
+            Error::InvalidRequest("missing method".into()),
+            Error::MethodNotFound("unknown method \"warp\"".into()),
+            Error::InvalidParams("spec without kind".into()),
+            Error::Internal("result channel closed".into()),
+            Error::Rejected("bad shape".into()),
+            Error::Overloaded {
+                kind: JobKind::DotHybrid,
+                tier: Tier::Wide,
+                queued: 32,
+                capacity: 32,
+            },
+            Error::ShuttingDown,
+            Error::RateLimited("submission rate above 100/s".into()),
+            Error::TooManyInFlight("cap 256".into()),
+            Error::Unavailable("no reachable worker for dot/hrfna@paper".into()),
+        ]
+    }
+
+    #[test]
+    fn codes_are_stable_unique_and_total() {
+        let errors = one_of_each();
+        assert_eq!(errors.len(), WIRE_CODES.len());
+        let mut codes: Vec<i64> = errors.iter().map(|e| e.wire_code()).collect();
+        assert_eq!(codes, WIRE_CODES.iter().map(|(c, _)| *c).collect::<Vec<_>>());
+        codes.sort();
+        codes.dedup();
+        assert_eq!(codes.len(), WIRE_CODES.len(), "codes must be unique");
+        for e in &errors {
+            assert_eq!(
+                WIRE_CODES.iter().find(|(c, _)| *c == e.wire_code()).unwrap().1,
+                e.code_label()
+            );
+        }
+    }
+
+    #[test]
+    fn display_message_round_trips_through_from_wire() {
+        for e in one_of_each() {
+            let back = Error::from_wire(e.wire_code(), &e.to_string()).unwrap();
+            match &e {
+                // Overloaded rebuilds from structured data, not the
+                // message; from_wire alone yields the placeholder.
+                Error::Overloaded { .. } => {
+                    assert_eq!(back.wire_code(), e.wire_code());
+                }
+                _ => assert_eq!(back, e, "lossless round trip for {e}"),
+            }
+        }
+        assert_eq!(Error::from_wire(-1, "nope"), None);
+    }
+
+    #[test]
+    fn backpressure_partition() {
+        assert!(!Error::Rejected("x".into()).is_backpressure());
+        assert!(!Error::Parse("x".into()).is_backpressure());
+        assert!(!Error::Internal("x".into()).is_backpressure());
+        assert!(Error::ShuttingDown.is_backpressure());
+        assert!(Error::Unavailable("x".into()).is_backpressure());
+        assert!(Error::RateLimited("x".into()).is_backpressure());
+    }
+
+    #[test]
+    fn legacy_display_strings_are_preserved() {
+        // These exact strings are pinned by the golden wire fixtures.
+        let e = Error::Overloaded {
+            kind: JobKind::DotHybrid,
+            tier: Tier::Paper,
+            queued: 9,
+            capacity: 8,
+        };
+        assert_eq!(
+            e.to_string(),
+            "lane DotHybrid@Paper overloaded: 9 jobs queued at capacity 8"
+        );
+        assert_eq!(
+            Error::Rejected("bad".into()).to_string(),
+            "admission rejected: bad"
+        );
+        assert_eq!(Error::ShuttingDown.to_string(), "coordinator is shutting down");
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_alias_still_names_the_enum() {
+        let e: SubmitError = Error::ShuttingDown;
+        assert_eq!(e.wire_code(), -32003);
+    }
+}

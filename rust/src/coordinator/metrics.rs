@@ -368,6 +368,13 @@ impl Metrics {
             .sum()
     }
 
+    /// Currently queued jobs across every lane (gauge; transiently ±1).
+    /// This is the occupancy signal the cluster router reads per shard
+    /// through the `health` RPC for overload diversion.
+    pub fn queue_depth_total(&self) -> i64 {
+        JobKind::ALL.iter().map(|&k| self.queue_depth(k)).sum()
+    }
+
     /// Mean latency (µs) for a kind.
     pub fn mean_latency_us(&self, kind: JobKind) -> f64 {
         let n = self.jobs(kind);

@@ -10,23 +10,39 @@
 //! context from the [`crate::hybrid::ContextRegistry`], per-tier
 //! histogram metrics, load generators and a drain-reporting shutdown.
 //!
-//! With `--features rpc` the [`rpc`] module adds the network edge: a
-//! length-prefix-framed JSON-RPC server/client pair that carries the
-//! same typed backpressure (and the tier/tolerance admission fields)
-//! over TCP, plus a socket-level load generator.
+//! Every execution topology sits behind one seam: the [`Backend`]
+//! trait (submit → ticket → poll/wait). [`InProcess`] runs jobs on the
+//! owned [`Coordinator`]; with `--features rpc`, `rpc::Remote` drives a
+//! server over a socket and [`cluster`]'s `ShardRouter` consistent-hash
+//! places lanes across a worker fleet with health-driven diversion and
+//! failover. `serve_load`, the benches, and the CLI drive a
+//! `&dyn Backend` and don't know which one they got.
+//!
+//! Errors are one enum end to end: [`Error`] carries admission,
+//! backpressure, transport, and protocol failures, and its
+//! `wire_code()` is the stable JSON-RPC code table — worker → router →
+//! client hops re-encode it losslessly.
 
-pub mod request;
-pub mod hybrid_exec;
+pub mod backend;
 pub mod batcher;
-pub mod router;
+pub mod cluster;
+pub mod error;
+pub mod hybrid_exec;
 pub mod metrics;
+pub mod request;
+pub mod router;
 #[cfg(feature = "rpc")]
 pub mod rpc;
 pub mod serve_load;
 pub mod server;
 
+pub use backend::{Backend, InProcess, JobPoll, JobTicket, DEFAULT_WAIT};
+pub use cluster::{parse_workers, HashRing, HealthState, Membership, WorkerSpec};
+pub use error::Error;
+#[allow(deprecated)]
+pub use error::SubmitError;
 pub use hybrid_exec::ExecMode;
-pub use request::{Job, JobKind, JobResult, JobSpec, Payload, SubmitError};
+pub use request::{Job, JobKind, JobResult, JobSpec, Payload};
 pub use router::LaneKey;
 pub use serve_load::{closed_loop, open_loop, LoadReport};
 pub use server::{Coordinator, CoordinatorConfig, DrainReport};

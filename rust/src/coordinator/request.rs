@@ -1,5 +1,6 @@
-//! Request/response types for the coordinator, plus the typed submission
-//! errors that carry the serving layer's backpressure contract.
+//! Request/response types for the coordinator: job kinds, payloads, and
+//! the [`JobSpec`] builder every submission path starts from. (The typed
+//! submission/backpressure errors live in [`super::error`].)
 //!
 //! Every job routes to a **(kind, tier, shape-bucket)** lane: `kind`
 //! selects the datapath, [`Tier`] the precision context the hybrid lanes
@@ -8,7 +9,6 @@
 //! bucket the frozen shape. Batches are single-tier by construction.
 
 use std::time::Instant;
-use thiserror::Error;
 
 use crate::hybrid::registry::{MagnitudeEnvelope, Tier};
 use crate::workloads::rk4::RK4_MACS_PER_STEP;
@@ -136,43 +136,63 @@ pub struct JobSpec {
 
 impl JobSpec {
     /// A paper-tier spec with no tolerance — the historical single-
-    /// context submission, bit-identical through the registry.
+    /// context submission, bit-identical through the registry. The
+    /// kind-specific builders below cover the common payloads; use this
+    /// constructor when the kind is data-driven.
     pub fn new(kind: JobKind, payload: Payload) -> JobSpec {
         JobSpec { kind, payload, tier: Tier::Paper, tolerance: None }
     }
 
-    /// Set the requested tier.
-    pub fn with_tier(mut self, tier: Tier) -> JobSpec {
+    /// Dot product on the planar HRFNA lanes:
+    /// `JobSpec::dot(x, y).tier(Tier::Wide).tolerance(1e-9)`.
+    pub fn dot(x: Vec<f64>, y: Vec<f64>) -> JobSpec {
+        JobSpec::new(JobKind::DotHybrid, Payload::Dot { x, y })
+    }
+
+    /// Dot product on the FP32 baseline lane (tier-agnostic).
+    pub fn dot_f32(x: Vec<f64>, y: Vec<f64>) -> JobSpec {
+        JobSpec::new(JobKind::DotF32, Payload::Dot { x, y })
+    }
+
+    /// Square matmul in HRFNA at the AOT dimension.
+    pub fn matmul(a: Vec<f64>, b: Vec<f64>, dim: usize) -> JobSpec {
+        JobSpec::new(JobKind::MatmulHybrid, Payload::Matmul { a, b, dim })
+    }
+
+    /// Square matmul on the FP32 baseline lane.
+    pub fn matmul_f32(a: Vec<f64>, b: Vec<f64>, dim: usize) -> JobSpec {
+        JobSpec::new(JobKind::MatmulF32, Payload::Matmul { a, b, dim })
+    }
+
+    /// Batched RK4 Van der Pol integration in HRFNA.
+    pub fn rk4(y0: Vec<f64>, mu: f64, dt: f64, steps: u64) -> JobSpec {
+        JobSpec::new(JobKind::Rk4Hybrid, Payload::Rk4 { y0, mu, dt, steps })
+    }
+
+    /// Set the cheapest tier the client is willing to run on (admission
+    /// may still escalate past it).
+    pub fn tier(mut self, tier: Tier) -> JobSpec {
         self.tier = tier;
         self
     }
 
-    /// Set the relative-error tolerance.
-    pub fn with_tolerance(mut self, tol: f64) -> JobSpec {
+    /// Set the target relative-error tolerance.
+    pub fn tolerance(mut self, tol: f64) -> JobSpec {
         self.tolerance = Some(tol);
         self
     }
-}
 
-/// Typed submission failure: the coordinator's admission and backpressure
-/// contract. `Overloaded` is the load-shedding signal — callers retry with
-/// backoff or divert; the queue never grows without bound.
-#[derive(Debug, Error)]
-pub enum SubmitError {
-    /// The payload failed shape/value admission for its lane.
-    #[error("admission rejected: {0}")]
-    Rejected(String),
-    /// Every shard of the lane's bounded queue is at capacity.
-    #[error("lane {kind:?}@{tier:?} overloaded: {queued} jobs queued at capacity {capacity}")]
-    Overloaded {
-        kind: JobKind,
-        tier: Tier,
-        queued: usize,
-        capacity: usize,
-    },
-    /// The coordinator is draining; no new work is accepted.
-    #[error("coordinator is shutting down")]
-    ShuttingDown,
+    /// Pre-PR7 name of [`JobSpec::tier`].
+    #[deprecated(note = "renamed to JobSpec::tier")]
+    pub fn with_tier(self, tier: Tier) -> JobSpec {
+        self.tier(tier)
+    }
+
+    /// Pre-PR7 name of [`JobSpec::tolerance`].
+    #[deprecated(note = "renamed to JobSpec::tolerance")]
+    pub fn with_tolerance(self, tol: f64) -> JobSpec {
+        self.tolerance(tol)
+    }
 }
 
 /// A queued job.
@@ -268,27 +288,35 @@ mod tests {
 
     #[test]
     fn spec_builder_defaults_to_paper() {
-        let s = JobSpec::new(
-            JobKind::DotHybrid,
-            Payload::Dot { x: vec![1.0], y: vec![1.0] },
-        );
+        let s = JobSpec::dot(vec![1.0], vec![1.0]);
+        assert_eq!(s.kind, JobKind::DotHybrid);
         assert_eq!(s.tier, Tier::Paper);
         assert!(s.tolerance.is_none());
-        let s = s.with_tier(Tier::Lo).with_tolerance(1e-9);
+        let s = s.tier(Tier::Lo).tolerance(1e-9);
         assert_eq!(s.tier, Tier::Lo);
         assert_eq!(s.tolerance, Some(1e-9));
     }
 
     #[test]
-    fn submit_error_messages_are_typed() {
-        let e = SubmitError::Overloaded {
-            kind: JobKind::DotHybrid,
-            tier: Tier::Paper,
-            queued: 9,
-            capacity: 8,
-        };
-        assert!(e.to_string().contains("overloaded"));
-        assert!(matches!(e, SubmitError::Overloaded { queued: 9, .. }));
-        assert!(SubmitError::ShuttingDown.to_string().contains("shutting down"));
+    fn kind_builders_pick_the_right_lane() {
+        assert_eq!(JobSpec::dot_f32(vec![1.0], vec![1.0]).kind, JobKind::DotF32);
+        assert_eq!(JobSpec::matmul(vec![1.0; 4], vec![1.0; 4], 2).kind, JobKind::MatmulHybrid);
+        assert_eq!(JobSpec::matmul_f32(vec![1.0; 4], vec![1.0; 4], 2).kind, JobKind::MatmulF32);
+        let r = JobSpec::rk4(vec![2.0, 0.0], 1.0, 0.01, 100);
+        assert_eq!(r.kind, JobKind::Rk4Hybrid);
+        match r.payload {
+            Payload::Rk4 { steps, .. } => assert_eq!(steps, 100),
+            other => panic!("wrong payload {other:?}"),
+        }
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_with_setters_still_work() {
+        let s = JobSpec::dot(vec![1.0], vec![1.0])
+            .with_tier(Tier::Wide)
+            .with_tolerance(1e-7);
+        assert_eq!(s.tier, Tier::Wide);
+        assert_eq!(s.tolerance, Some(1e-7));
     }
 }

@@ -5,7 +5,8 @@
 //! scheduling. Hybrid kinds get one lane per enabled precision tier;
 //! FP32 kinds are tier-agnostic and occupy the [`Tier::Paper`] slot.
 
-use super::request::{JobKind, Payload, SubmitError};
+use super::error::Error;
+use super::request::{JobKind, Payload};
 use crate::hybrid::registry::Tier;
 
 /// Queue routing key of one lane: (datapath kind, precision tier, shape
@@ -76,6 +77,25 @@ impl ShapeBuckets {
     }
 }
 
+/// The shape bucket a payload *would* route to, without validating or
+/// padding it. This is the cluster router's placement probe: the shard
+/// ring hashes `(kind, tier, bucket)`, and the worker's own `admit`
+/// still runs full validation on arrival. `None` when no bucket fits
+/// (admit would reject too).
+pub fn probe_bucket(payload: &Payload, kind: JobKind, buckets: &ShapeBuckets) -> Option<usize> {
+    match (payload, kind) {
+        (Payload::Dot { x, .. }, JobKind::DotF32) => {
+            (x.len() <= buckets.engine_dot_n()).then_some(buckets.engine_dot_n())
+        }
+        (Payload::Dot { x, .. }, JobKind::DotHybrid) => buckets.dot_bucket(x.len()),
+        (Payload::Matmul { .. }, JobKind::MatmulHybrid | JobKind::MatmulF32) => {
+            Some(buckets.matmul_dim)
+        }
+        (Payload::Rk4 { .. }, JobKind::Rk4Hybrid) => Some(RK4_BUCKET),
+        _ => None,
+    }
+}
+
 /// Validate and normalize a payload for its lane; pads dot vectors with
 /// zeros to the selected bucket (zero products do not affect the sum).
 /// Returns the bucket key the job routes to.
@@ -83,8 +103,8 @@ pub fn admit(
     payload: &mut Payload,
     kind: JobKind,
     buckets: &ShapeBuckets,
-) -> Result<usize, SubmitError> {
-    let reject = |msg: String| Err(SubmitError::Rejected(msg));
+) -> Result<usize, Error> {
+    let reject = |msg: String| Err(Error::Rejected(msg));
     match (payload, kind) {
         (Payload::Dot { x, y }, JobKind::DotHybrid | JobKind::DotF32) => {
             if x.len() != y.len() {
@@ -217,8 +237,33 @@ mod tests {
         };
         assert!(matches!(
             admit(&mut p, JobKind::DotF32, &b),
-            Err(SubmitError::Rejected(_))
+            Err(Error::Rejected(_))
         ));
+    }
+
+    #[test]
+    fn probe_bucket_matches_admit() {
+        let b = ShapeBuckets::default();
+        let cases = vec![
+            (Payload::Dot { x: vec![1.0; 100], y: vec![1.0; 100] }, JobKind::DotHybrid),
+            (Payload::Dot { x: vec![1.0; 100], y: vec![1.0; 100] }, JobKind::DotF32),
+            (Payload::Dot { x: vec![1.0; 600], y: vec![1.0; 600] }, JobKind::DotHybrid),
+            (
+                Payload::Matmul { a: vec![0.0; 64 * 64], b: vec![0.0; 64 * 64], dim: 64 },
+                JobKind::MatmulHybrid,
+            ),
+            (Payload::Rk4 { y0: vec![2.0, 0.0], mu: 1.0, dt: 0.01, steps: 100 }, JobKind::Rk4Hybrid),
+        ];
+        for (p, kind) in cases {
+            let probed = probe_bucket(&p, kind, &b);
+            let mut admitted = p.clone();
+            let bucket = admit(&mut admitted, kind, &b).unwrap();
+            assert_eq!(probed, Some(bucket), "probe disagrees with admit for {kind:?}");
+        }
+        // Oversize and mismatched payloads probe to None, mirroring reject.
+        let p = Payload::Dot { x: vec![0.0; 5000], y: vec![0.0; 5000] };
+        assert_eq!(probe_bucket(&p, JobKind::DotHybrid, &b), None);
+        assert_eq!(probe_bucket(&p, JobKind::Rk4Hybrid, &b), None);
     }
 
     #[test]

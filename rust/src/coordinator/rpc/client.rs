@@ -1,24 +1,40 @@
 //! A blocking RPC client over one persistent connection, with pipelined
 //! submission: `submit_spec` fires a frame and returns the request id
 //! immediately, responses are collected (possibly out of order) by
-//! `wait`/`next_response`. The socket load generator drives the server
-//! exclusively through this type, and the `rpc_pipeline` example shows
-//! the intended call shape.
+//! `wait`/`next_response`/`try_response`. The socket load generator
+//! drives the server exclusively through this type, and the
+//! `rpc_pipeline` example shows the intended call shape.
+//!
+//! [`Remote`] wraps the client in the
+//! [`Backend`](crate::coordinator::Backend) trait, so `serve_load` and
+//! the benches can drive a network server through the same API as the
+//! in-process coordinator.
 
 use std::collections::HashMap;
 use std::io;
 use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::coordinator::backend::{Backend, JobPoll, JobTicket};
+use crate::coordinator::error::Error;
 use crate::coordinator::request::{JobResult, JobSpec};
+use crate::coordinator::server::DrainReport;
+use crate::util::backoff::Backoff;
 
-use super::codec::{write_frame, FrameReader};
+use super::codec::{write_frame, FramePoll, FrameReader};
 use super::json::Json;
 use super::protocol::{
-    result_from_json, spec_to_json, Request, Response, ResponseBody, WireError,
+    error_from_json, result_from_json, spec_to_json, Request, Response, ResponseBody,
 };
+
+/// Read timeout used by [`RpcClient::try_response`] — one scheduling
+/// quantum of patience, so a poll costs at most ~1 ms when the wire is
+/// silent.
+const TRY_READ_TIMEOUT: Duration = Duration::from_millis(1);
 
 /// One persistent client connection.
 pub struct RpcClient {
@@ -31,7 +47,7 @@ pub struct RpcClient {
 
 /// Outcome of one submitted job: the result, or the server's typed
 /// error for it.
-pub type SubmitOutcome = std::result::Result<JobResult, WireError>;
+pub type SubmitOutcome = std::result::Result<JobResult, Error>;
 
 impl RpcClient {
     /// Connect once.
@@ -48,16 +64,21 @@ impl RpcClient {
 
     /// Connect with retries over `total_wait` (the CI smoke test races
     /// the server's bind; a refused connection just means "not yet").
+    /// Retries back off exponentially with jitter — N clients racing the
+    /// same bind don't re-knock in lockstep — and the last sleep is
+    /// clamped to the deadline.
     pub fn connect_retry(addr: &str, total_wait: Duration) -> Result<RpcClient> {
         let deadline = Instant::now() + total_wait;
+        let mut backoff = Backoff::for_reconnect(Backoff::seed_for(addr));
         loop {
             match RpcClient::connect(addr) {
                 Ok(c) => return Ok(c),
                 Err(e) => {
-                    if Instant::now() >= deadline {
+                    let now = Instant::now();
+                    if now >= deadline {
                         return Err(e.context(format!("server at {addr} never came up")));
                     }
-                    std::thread::sleep(Duration::from_millis(50));
+                    std::thread::sleep(backoff.next_delay().min(deadline - now));
                 }
             }
         }
@@ -75,11 +96,7 @@ impl RpcClient {
     fn read_response(&mut self) -> Result<Response> {
         let never = || false;
         match self.frames.read_frame(&mut self.stream, &never) {
-            Ok(Some(payload)) => {
-                let text = std::str::from_utf8(&payload).context("response is not UTF-8")?;
-                let v = Json::parse(text).map_err(|e| anyhow!("bad response JSON: {e}"))?;
-                Response::from_json(&v).map_err(|e| anyhow!("bad response frame: {e}"))
-            }
+            Ok(Some(payload)) => decode_response(&payload),
             Ok(None) => bail!("server closed the connection"),
             Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => {
                 bail!("server closed mid-frame")
@@ -93,6 +110,41 @@ impl RpcClient {
     /// correlation).
     pub fn next_response(&mut self) -> Result<Response> {
         self.read_response()
+    }
+
+    /// Non-blocking probe: one stashed or arrived response, or `None`
+    /// when the wire is silent (after at most [`TRY_READ_TIMEOUT`]).
+    /// A closed connection is an error, not `None`.
+    pub fn try_response(&mut self) -> Result<Option<Response>> {
+        self.stream
+            .set_read_timeout(Some(TRY_READ_TIMEOUT))
+            .context("set poll read timeout")?;
+        let polled = self.frames.poll_frame(&mut self.stream);
+        self.stream.set_read_timeout(None).context("clear poll read timeout")?;
+        match polled {
+            Ok(FramePoll::Frame(payload)) => Ok(Some(decode_response(&payload)?)),
+            Ok(FramePoll::Empty) => Ok(None),
+            Ok(FramePoll::Closed) => bail!("server closed the connection"),
+            Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => {
+                bail!("server closed mid-frame")
+            }
+            Err(e) => Err(e).context("poll response frame"),
+        }
+    }
+
+    /// Non-blocking correlation probe: the response for `id` if it has
+    /// arrived (stashing others that land first).
+    pub fn try_take(&mut self, id: u64) -> Result<Option<Response>> {
+        if let Some(r) = self.stash.remove(&id) {
+            return Ok(Some(r));
+        }
+        while let Some(r) = self.try_response()? {
+            if r.id == id {
+                return Ok(Some(r));
+            }
+            self.stash.insert(r.id, r);
+        }
+        Ok(None)
     }
 
     /// Block until the response for `id` arrives, stashing any other
@@ -124,16 +176,10 @@ impl RpcClient {
     }
 
     /// Collect one submission's outcome: the job result, or the typed
-    /// wire error the server shed it with.
+    /// error the server shed it with.
     pub fn wait_submit(&mut self, id: u64) -> Result<SubmitOutcome> {
         let resp = self.wait(id)?;
-        match resp.body {
-            ResponseBody::Result(v) => {
-                let r = result_from_json(&v).map_err(|e| anyhow!("bad job result: {e}"))?;
-                Ok(Ok(r))
-            }
-            ResponseBody::Error(e) => Ok(Err(e)),
-        }
+        submit_outcome(resp)
     }
 
     /// Blocking submit: fire and wait.
@@ -152,7 +198,7 @@ impl RpcClient {
         let resp = self.request("submit_batch", params)?;
         let entries = match resp.body {
             ResponseBody::Result(Json::Arr(entries)) => entries,
-            ResponseBody::Error(e) => bail!("submit_batch failed wholesale: {}", e.message),
+            ResponseBody::Error(e) => bail!("submit_batch failed wholesale: {e}"),
             other => bail!("submit_batch returned a non-array: {other:?}"),
         };
         entries
@@ -162,14 +208,8 @@ impl RpcClient {
                     let r = result_from_json(v).map_err(|e| anyhow!("bad job result: {e}"))?;
                     Ok(Ok(r))
                 } else if let Some(err) = entry.get("error") {
-                    let code = err
-                        .get("code")
-                        .and_then(Json::as_i64)
-                        .and_then(super::protocol::ErrorCode::from_code)
-                        .ok_or_else(|| anyhow!("batch error entry without known code"))?;
-                    let message =
-                        err.get("message").and_then(Json::as_str).unwrap_or_default().to_string();
-                    Ok(Err(WireError { code, message, data: err.get("data").cloned() }))
+                    let e = error_from_json(err).map_err(|e| anyhow!("bad batch error: {e}"))?;
+                    Ok(Err(e))
                 } else {
                     bail!("batch entry is neither result nor error")
                 }
@@ -183,6 +223,27 @@ impl RpcClient {
         match resp.body {
             ResponseBody::Result(v) if v.as_str() == Some("pong") => Ok(()),
             other => bail!("unexpected ping response: {other:?}"),
+        }
+    }
+
+    /// The server's health snapshot: (backend label, total queued jobs).
+    /// This is the cluster heartbeat the router's monitor loop calls.
+    pub fn health(&mut self) -> Result<(String, i64)> {
+        let resp = self.request("health", Json::Null)?;
+        match resp.body {
+            ResponseBody::Result(v) => {
+                let label = v
+                    .get("label")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("health without label"))?
+                    .to_string();
+                let queued = v
+                    .get("queued")
+                    .and_then(Json::as_i64)
+                    .ok_or_else(|| anyhow!("health without queued"))?;
+                Ok((label, queued))
+            }
+            ResponseBody::Error(e) => bail!("health failed: {e}"),
         }
     }
 
@@ -203,7 +264,7 @@ impl RpcClient {
                     .to_string();
                 Ok((coord, wire))
             }
-            ResponseBody::Error(e) => bail!("metrics failed: {}", e.message),
+            ResponseBody::Error(e) => bail!("metrics failed: {e}"),
         }
     }
 
@@ -214,5 +275,143 @@ impl RpcClient {
             ResponseBody::Result(v) if v.as_str() == Some("draining") => Ok(()),
             other => bail!("unexpected shutdown response: {other:?}"),
         }
+    }
+}
+
+fn decode_response(payload: &[u8]) -> Result<Response> {
+    let text = std::str::from_utf8(payload).context("response is not UTF-8")?;
+    let v = Json::parse(text).map_err(|e| anyhow!("bad response JSON: {e}"))?;
+    Response::from_json(&v).map_err(|e| anyhow!("bad response frame: {e}"))
+}
+
+fn submit_outcome(resp: Response) -> Result<SubmitOutcome> {
+    match resp.body {
+        ResponseBody::Result(v) => {
+            let r = result_from_json(&v).map_err(|e| anyhow!("bad job result: {e}"))?;
+            Ok(Ok(r))
+        }
+        ResponseBody::Error(e) => Ok(Err(e)),
+    }
+}
+
+/// [`Backend`] over one RPC connection: the remote twin of
+/// [`InProcess`](crate::coordinator::InProcess). Tickets are the wire
+/// request ids; transport failures surface as [`Error::Unavailable`]
+/// (the job may never have executed — backpressure, not a result).
+///
+/// `shutdown` asks the server to drain, then synthesizes a
+/// [`DrainReport`] from this client's own counters: `accepted` is what
+/// it fired, `completed` what it collected, `dropped` what it abandoned
+/// — so the clean-drain invariant (`dropped == 0`) means *this client*
+/// lost nothing, independent of other clients on the same server.
+pub struct Remote {
+    client: Mutex<RpcClient>,
+    addr: String,
+    /// Wire ids fired and not yet collected (the live ticket set).
+    pending: Mutex<std::collections::HashSet<u64>>,
+    submitted: AtomicU64,
+    collected: AtomicU64,
+    errored: AtomicU64,
+    abandoned: AtomicU64,
+}
+
+impl Remote {
+    /// Connect (with retry) and wrap.
+    pub fn connect(addr: &str, total_wait: Duration) -> std::result::Result<Remote, Error> {
+        let client = RpcClient::connect_retry(addr, total_wait)
+            .map_err(|e| Error::Unavailable(format!("{addr}: {e:#}")))?;
+        Ok(Remote {
+            client: Mutex::new(client),
+            addr: addr.to_string(),
+            pending: Mutex::new(std::collections::HashSet::new()),
+            submitted: AtomicU64::new(0),
+            collected: AtomicU64::new(0),
+            errored: AtomicU64::new(0),
+            abandoned: AtomicU64::new(0),
+        })
+    }
+
+    fn unavailable(&self, e: anyhow::Error) -> Error {
+        Error::Unavailable(format!("{}: {e:#}", self.addr))
+    }
+}
+
+impl Backend for Remote {
+    fn label(&self) -> &'static str {
+        "rpc-client"
+    }
+
+    fn submit(&self, spec: JobSpec) -> std::result::Result<JobTicket, Error> {
+        let mut client = self.client.lock().expect("client lock");
+        let id = client.submit_spec(&spec).map_err(|e| self.unavailable(e))?;
+        self.pending.lock().expect("pending lock").insert(id);
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        Ok(JobTicket { id })
+    }
+
+    fn poll(&self, ticket: &JobTicket) -> JobPoll {
+        if !self.pending.lock().expect("pending lock").contains(&ticket.id) {
+            return JobPoll::Ready(Err(Error::Internal("unknown ticket".into())));
+        }
+        let polled = self.client.lock().expect("client lock").try_take(ticket.id);
+        match polled {
+            Ok(None) => JobPoll::Pending,
+            Ok(Some(resp)) => {
+                self.pending.lock().expect("pending lock").remove(&ticket.id);
+                self.collected.fetch_add(1, Ordering::Relaxed);
+                match submit_outcome(resp) {
+                    Ok(Ok(r)) => JobPoll::Ready(Ok(r)),
+                    Ok(Err(e)) => {
+                        self.errored.fetch_add(1, Ordering::Relaxed);
+                        JobPoll::Ready(Err(e))
+                    }
+                    Err(e) => JobPoll::Ready(Err(Error::Internal(format!("{e:#}")))),
+                }
+            }
+            Err(e) => {
+                self.pending.lock().expect("pending lock").remove(&ticket.id);
+                self.abandoned.fetch_add(1, Ordering::Relaxed);
+                JobPoll::Ready(Err(self.unavailable(e)))
+            }
+        }
+    }
+
+    fn forget(&self, ticket: &JobTicket) {
+        if self.pending.lock().expect("pending lock").remove(&ticket.id) {
+            self.abandoned.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn metrics_text(&self) -> String {
+        match self.client.lock().expect("client lock").server_metrics() {
+            Ok((coord, wire)) => format!("{coord}\n{wire}"),
+            Err(e) => format!("metrics unavailable: {e:#}"),
+        }
+    }
+
+    fn queue_depth(&self) -> i64 {
+        self.client
+            .lock()
+            .expect("client lock")
+            .health()
+            .map(|(_, queued)| queued)
+            .unwrap_or(0)
+    }
+
+    fn shutdown(&self) -> std::result::Result<DrainReport, Error> {
+        {
+            let mut client = self.client.lock().expect("client lock");
+            client.shutdown_server().map_err(|e| self.unavailable(e))?;
+        }
+        let uncollected = self.pending.lock().expect("pending lock").len() as u64;
+        let submitted = self.submitted.load(Ordering::Relaxed);
+        let collected = self.collected.load(Ordering::Relaxed);
+        Ok(DrainReport {
+            accepted: submitted,
+            completed: collected,
+            rejected: self.errored.load(Ordering::Relaxed),
+            drained: 0,
+            dropped: self.abandoned.load(Ordering::Relaxed) + uncollected,
+        })
     }
 }

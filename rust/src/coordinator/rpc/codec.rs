@@ -38,6 +38,17 @@ pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
     w.flush()
 }
 
+/// Outcome of one [`FrameReader::poll_frame`].
+#[derive(Debug)]
+pub enum FramePoll {
+    /// A complete frame's payload.
+    Frame(Vec<u8>),
+    /// No complete frame available yet (partial progress is retained).
+    Empty,
+    /// Peer closed cleanly at a frame boundary.
+    Closed,
+}
+
 /// Incremental frame reader with partial-progress buffering.
 pub struct FrameReader {
     buf: Vec<u8>,
@@ -74,6 +85,47 @@ impl FrameReader {
         let payload = self.buf[HEADER_BYTES..HEADER_BYTES + len].to_vec();
         self.buf.drain(..HEADER_BYTES + len);
         Ok(Some(payload))
+    }
+
+    /// One non-blocking-ish poll: pop a buffered frame if one is
+    /// complete, otherwise attempt a single read (honoring the stream's
+    /// read timeout) and try again. Timeouts are `Empty`, not errors —
+    /// the caller distinguishes "no frame yet" from `Closed` (EOF at a
+    /// frame boundary), which blocking [`FrameReader::read_frame`]
+    /// cannot report separately from a stop request.
+    pub fn poll_frame(&mut self, r: &mut impl Read) -> io::Result<FramePoll> {
+        if let Some(payload) = self.take_buffered()? {
+            return Ok(FramePoll::Frame(payload));
+        }
+        let mut chunk = [0u8; 16 * 1024];
+        match r.read(&mut chunk) {
+            Ok(0) => {
+                if self.buf.is_empty() {
+                    Ok(FramePoll::Closed)
+                } else {
+                    Err(io::Error::new(
+                        io::ErrorKind::UnexpectedEof,
+                        format!("peer closed mid-frame with {} bytes pending", self.buf.len()),
+                    ))
+                }
+            }
+            Ok(n) => {
+                self.buf.extend_from_slice(&chunk[..n]);
+                Ok(match self.take_buffered()? {
+                    Some(payload) => FramePoll::Frame(payload),
+                    None => FramePoll::Empty,
+                })
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut | io::ErrorKind::Interrupted
+                ) =>
+            {
+                Ok(FramePoll::Empty)
+            }
+            Err(e) => Err(e),
+        }
     }
 
     /// Read until one complete frame is available, `stop()` turns true,
@@ -211,6 +263,46 @@ mod tests {
         assert_eq!(r.read_frame(&mut t, NEVER).unwrap().unwrap(), b"slow");
         assert_eq!(r.read_frame(&mut t, NEVER).unwrap().unwrap(), b"wire");
         assert!(r.read_frame(&mut t, NEVER).unwrap().is_none());
+    }
+
+    #[test]
+    fn poll_frame_distinguishes_empty_from_closed() {
+        // Timeout-only stream: Empty forever, partial progress retained.
+        struct Timeouts;
+        impl Read for Timeouts {
+            fn read(&mut self, _buf: &mut [u8]) -> io::Result<usize> {
+                Err(io::Error::new(io::ErrorKind::WouldBlock, "no data"))
+            }
+        }
+        let mut r = FrameReader::default();
+        assert!(matches!(r.poll_frame(&mut Timeouts).unwrap(), FramePoll::Empty));
+
+        // Pipelined frames pop one per poll, then EOF is Closed.
+        let wire = framed(&[b"a", b"bb"]);
+        let mut cur = io::Cursor::new(wire);
+        let mut r = FrameReader::default();
+        match r.poll_frame(&mut cur).unwrap() {
+            FramePoll::Frame(p) => assert_eq!(p, b"a"),
+            other => panic!("expected frame, got {other:?}"),
+        }
+        match r.poll_frame(&mut cur).unwrap() {
+            FramePoll::Frame(p) => assert_eq!(p, b"bb"),
+            other => panic!("expected frame, got {other:?}"),
+        }
+        assert!(matches!(r.poll_frame(&mut cur).unwrap(), FramePoll::Closed));
+
+        // Mid-frame EOF is still a hard error.
+        let mut wire = framed(&[b"abcdef"]);
+        wire.truncate(wire.len() - 2);
+        let mut r = FrameReader::default();
+        let mut cur = io::Cursor::new(wire);
+        let err = loop {
+            match r.poll_frame(&mut cur) {
+                Ok(_) => continue,
+                Err(e) => break e,
+            }
+        };
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
     }
 
     #[test]

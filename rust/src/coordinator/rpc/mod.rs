@@ -1,7 +1,7 @@
 //! The network serving edge (`--features rpc`): a length-prefix-framed
-//! JSON-RPC protocol over TCP, a std-only async-shim server on top of
-//! the [`Coordinator`](crate::coordinator::Coordinator), a pipelining
-//! client, and a socket-level load generator.
+//! JSON-RPC protocol over TCP, a std-only async-shim server over any
+//! [`Backend`](crate::coordinator::Backend), a pipelining client, and a
+//! socket-level load generator.
 //!
 //! Layering, bottom up:
 //!
@@ -9,18 +9,25 @@
 //!   deterministic encoding is the fixture contract),
 //! * [`codec`] — 4-byte big-endian length-prefix framing with
 //!   partial-frame buffering for timeout-polled sockets,
-//! * [`protocol`] — request/response/error types, the stable error-code
-//!   table, and `JobSpec`/`JobResult` (de)serialization,
+//! * [`protocol`] — request/response types, the (de)serialization of
+//!   the unified [`Error`](crate::coordinator::Error) (whose
+//!   `wire_code()` is the stable code table), and
+//!   `JobSpec`/`JobResult` (de)serialization,
 //! * [`server`] — accept loop + reader/completer thread pair per
-//!   connection, per-client token-bucket and in-flight quotas,
+//!   connection, per-client token-bucket and in-flight quotas; serves
+//!   any `Backend`, which is how one binary is both cluster **worker**
+//!   (over `InProcess`) and cluster **router** (over
+//!   `cluster::ShardRouter`),
 //! * [`client`] — persistent-connection client with pipelined submits,
+//!   plus [`Remote`], the client wrapped as a `Backend`,
 //! * [`load`] — the socket closed loop sharing
 //!   [`LoadReport`](crate::coordinator::LoadReport) with the in-process
 //!   generators.
 //!
 //! Everything here is feature-gated; the default (tier-1) build carries
-//! only the wire *metrics* (`coordinator::metrics::WireMetrics`) and the
-//! label contracts (`JobKind::label`, `Tier::label`) the protocol pins.
+//! only the wire *metrics* (`coordinator::metrics::WireMetrics`), the
+//! unified error enum, and the label contracts (`JobKind::label`,
+//! `Tier::label`) the protocol pins.
 
 pub mod client;
 pub mod codec;
@@ -29,12 +36,14 @@ pub mod load;
 pub mod protocol;
 pub mod server;
 
-pub use client::{RpcClient, SubmitOutcome};
-pub use codec::{write_frame, FrameReader, MAX_FRAME_BYTES};
+pub use client::{Remote, RpcClient, SubmitOutcome};
+pub use codec::{write_frame, FramePoll, FrameReader, MAX_FRAME_BYTES};
 pub use json::Json;
 pub use load::{socket_closed_loop, ConnMode};
+#[allow(deprecated)]
+pub use protocol::code_for_submit_error;
 pub use protocol::{
-    code_for_submit_error, result_from_json, result_to_json, spec_from_json, spec_to_json,
-    ErrorCode, Request, Response, ResponseBody, WireError,
+    error_from_json, error_to_json, result_from_json, result_to_json, spec_from_json,
+    spec_to_json, Request, Response, ResponseBody,
 };
 pub use server::{QuotaConfig, RpcServer, RpcServerConfig, TokenBucket};

@@ -1,19 +1,28 @@
 //! Protocol types: JSON-RPC 2.0-shaped requests/responses plus the
 //! serialization of the coordinator's domain types ([`JobSpec`],
-//! [`JobResult`], `Tier`, `JobKind`) and the **stable error-code table**
-//! that maps every typed [`SubmitError`] and quota/parse failure to a
-//! wire code clients can branch on.
+//! [`JobResult`], `Tier`, `JobKind`) and of the unified
+//! [`coordinator::Error`](crate::coordinator::Error) — whose
+//! `wire_code()` IS the stable error-code table clients branch on.
 //!
 //! Compatibility contract (pinned by the golden fixtures in
 //! `tests/fixtures/rpc/` and the property tests in `integration_rpc`):
 //!
 //! * request/response field names and order,
 //! * `JobKind::label` / `Tier::label` strings as the kind/tier encodings,
-//! * the numeric values in [`ErrorCode`].
+//! * the numeric codes in [`coordinator::error::WIRE_CODES`]
+//!   (`crate::coordinator::error::WIRE_CODES`).
 //!
 //! Changing any of those is a wire break and must version the protocol.
+//!
+//! Error mapping is **lossless across hops**: `error_to_json` writes the
+//! variant's code, its Display string as the message, and (for
+//! `Overloaded`) the typed queue state as structured `data`;
+//! `error_from_json` rebuilds the identical enum value. A cluster router
+//! that decodes a worker's error and re-encodes it for the client emits
+//! the same bytes the worker sent.
 
-use crate::coordinator::request::{JobKind, JobResult, JobSpec, Payload, SubmitError};
+use crate::coordinator::error::Error;
+use crate::coordinator::request::{JobKind, JobResult, JobSpec, Payload};
 use crate::hybrid::registry::Tier;
 
 use super::json::Json;
@@ -21,141 +30,68 @@ use super::json::Json;
 /// Protocol version tag carried in every message.
 pub const JSONRPC_VERSION: &str = "2.0";
 
-/// Stable wire error codes. Standard JSON-RPC codes for transport/shape
-/// errors; `-32000..` implementation range for the coordinator's typed
-/// backpressure contract.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub enum ErrorCode {
-    /// Frame payload was not valid JSON.
-    ParseError,
-    /// JSON was valid but not a well-formed request object.
-    InvalidRequest,
-    /// Unknown `method`.
-    MethodNotFound,
-    /// Params failed to decode into the method's types.
-    InvalidParams,
-    /// Server-side invariant failure (result channel died, ...).
-    Internal,
-    /// Admission rejected the spec (shape/value/tier-escalation refusal)
-    /// — maps `SubmitError::Rejected`.
-    Rejected,
-    /// Bounded lane queue full — maps `SubmitError::Overloaded`; the
-    /// error `data` carries `{kind, tier, queued, capacity}`.
-    Overloaded,
-    /// Coordinator draining — maps `SubmitError::ShuttingDown`.
-    ShuttingDown,
-    /// Client exceeded its token-bucket submission rate.
-    RateLimited,
-    /// Client exceeded its in-flight job quota.
-    TooManyInFlight,
+/// Pre-PR7 shim: the typed-error → wire-code mapping is now a method on
+/// the unified enum.
+#[deprecated(note = "use Error::wire_code")]
+pub fn code_for_submit_error(e: &Error) -> i64 {
+    e.wire_code()
 }
 
-impl ErrorCode {
-    /// Every code (property tests iterate this).
-    pub const ALL: [ErrorCode; 10] = [
-        ErrorCode::ParseError,
-        ErrorCode::InvalidRequest,
-        ErrorCode::MethodNotFound,
-        ErrorCode::InvalidParams,
-        ErrorCode::Internal,
-        ErrorCode::Rejected,
-        ErrorCode::Overloaded,
-        ErrorCode::ShuttingDown,
-        ErrorCode::RateLimited,
-        ErrorCode::TooManyInFlight,
+/// Encode an error as the wire error **object**:
+/// `{"code":C,"message":"...","data":...}` (`data` only for
+/// `Overloaded`, carrying `{kind, tier, queued, capacity}`).
+pub fn error_to_json(e: &Error) -> Json {
+    let mut fields = vec![
+        ("code".to_string(), Json::Num(e.wire_code() as f64)),
+        ("message".to_string(), Json::Str(e.to_string())),
     ];
-
-    /// The wire value. **Stable**: committed fixtures assert these.
-    pub fn code(self) -> i64 {
-        match self {
-            ErrorCode::ParseError => -32700,
-            ErrorCode::InvalidRequest => -32600,
-            ErrorCode::MethodNotFound => -32601,
-            ErrorCode::InvalidParams => -32602,
-            ErrorCode::Internal => -32603,
-            ErrorCode::Rejected => -32001,
-            ErrorCode::Overloaded => -32002,
-            ErrorCode::ShuttingDown => -32003,
-            ErrorCode::RateLimited => -32004,
-            ErrorCode::TooManyInFlight => -32005,
-        }
-    }
-
-    /// Inverse of [`ErrorCode::code`].
-    pub fn from_code(code: i64) -> Option<ErrorCode> {
-        ErrorCode::ALL.iter().copied().find(|c| c.code() == code)
-    }
-
-    /// Human label (metrics/log lines).
-    pub fn label(self) -> &'static str {
-        match self {
-            ErrorCode::ParseError => "parse_error",
-            ErrorCode::InvalidRequest => "invalid_request",
-            ErrorCode::MethodNotFound => "method_not_found",
-            ErrorCode::InvalidParams => "invalid_params",
-            ErrorCode::Internal => "internal",
-            ErrorCode::Rejected => "rejected",
-            ErrorCode::Overloaded => "overloaded",
-            ErrorCode::ShuttingDown => "shutting_down",
-            ErrorCode::RateLimited => "rate_limited",
-            ErrorCode::TooManyInFlight => "too_many_in_flight",
-        }
-    }
-
-    /// True for the backpressure codes a well-behaved client answers
-    /// with backoff-and-retry (as opposed to fixing its request).
-    pub fn is_backpressure(self) -> bool {
-        matches!(
-            self,
-            ErrorCode::Overloaded
-                | ErrorCode::ShuttingDown
-                | ErrorCode::RateLimited
-                | ErrorCode::TooManyInFlight
-        )
-    }
-}
-
-/// The typed-submit-error → wire-code mapping. Total by construction:
-/// adding a `SubmitError` variant fails compilation here until it gets a
-/// code.
-pub fn code_for_submit_error(e: &SubmitError) -> ErrorCode {
-    match e {
-        SubmitError::Rejected(_) => ErrorCode::Rejected,
-        SubmitError::Overloaded { .. } => ErrorCode::Overloaded,
-        SubmitError::ShuttingDown => ErrorCode::ShuttingDown,
-    }
-}
-
-/// A structured wire error.
-#[derive(Clone, Debug, PartialEq)]
-pub struct WireError {
-    pub code: ErrorCode,
-    pub message: String,
-    /// Machine-readable detail (e.g. `Overloaded` carries queue state).
-    pub data: Option<Json>,
-}
-
-impl WireError {
-    /// Error with no structured data.
-    pub fn new(code: ErrorCode, message: impl Into<String>) -> WireError {
-        WireError { code, message: message.into(), data: None }
-    }
-
-    /// Map a typed submission failure, attaching `Overloaded` queue
-    /// state as structured data.
-    pub fn from_submit_error(e: &SubmitError) -> WireError {
-        let code = code_for_submit_error(e);
-        let data = match e {
-            SubmitError::Overloaded { kind, tier, queued, capacity } => Some(Json::obj(vec![
+    if let Error::Overloaded { kind, tier, queued, capacity } = e {
+        fields.push((
+            "data".to_string(),
+            Json::obj(vec![
                 ("kind", Json::str(kind.label())),
                 ("tier", Json::str(tier.label())),
                 ("queued", Json::Num(*queued as f64)),
                 ("capacity", Json::Num(*capacity as f64)),
-            ])),
-            _ => None,
-        };
-        WireError { code, message: e.to_string(), data }
+            ]),
+        ));
     }
+    Json::Obj(fields)
+}
+
+/// Inverse of [`error_to_json`]. Unknown codes are decode errors (a
+/// client must not misfile an error contract it does not know).
+/// `Overloaded` rebuilds its typed fields from `data`; the other
+/// variants recover their payload by stripping the Display prefix off
+/// the message ([`Error::from_wire`]).
+pub fn error_from_json(v: &Json) -> Result<Error, String> {
+    let code = v.get("code").and_then(Json::as_i64).ok_or("error without code")?;
+    let message = v.get("message").and_then(Json::as_str).unwrap_or_default();
+    let base = Error::from_wire(code, message).ok_or_else(|| format!("unknown error code {code}"))?;
+    if let Error::Overloaded { .. } = base {
+        if let Some(data) = v.get("data") {
+            let kind = data
+                .get("kind")
+                .and_then(Json::as_str)
+                .and_then(JobKind::from_label)
+                .ok_or("overloaded data without kind")?;
+            let tier = data
+                .get("tier")
+                .and_then(Json::as_str)
+                .and_then(Tier::from_label)
+                .ok_or("overloaded data without tier")?;
+            let queued = data
+                .get("queued")
+                .and_then(Json::as_u64)
+                .ok_or("overloaded data without queued")? as usize;
+            let capacity = data
+                .get("capacity")
+                .and_then(Json::as_u64)
+                .ok_or("overloaded data without capacity")? as usize;
+            return Ok(Error::Overloaded { kind, tier, queued, capacity });
+        }
+    }
+    Ok(base)
 }
 
 /// A request frame: `{"jsonrpc":"2.0","id":N,"method":"...","params":...}`.
@@ -181,10 +117,10 @@ impl Request {
         ])
     }
 
-    /// Parse a request object. `Err` carries the code the server should
-    /// answer with (`InvalidRequest` for shape problems).
-    pub fn from_json(v: &Json) -> Result<Request, WireError> {
-        let bad = |m: &str| WireError::new(ErrorCode::InvalidRequest, m);
+    /// Parse a request object. `Err` carries the typed error the server
+    /// should answer with (`InvalidRequest` for shape problems).
+    pub fn from_json(v: &Json) -> Result<Request, Error> {
+        let bad = |m: &str| Error::InvalidRequest(m.to_string());
         if v.get("jsonrpc").and_then(Json::as_str) != Some(JSONRPC_VERSION) {
             return Err(bad("missing or unsupported jsonrpc version"));
         }
@@ -202,11 +138,11 @@ impl Request {
     }
 }
 
-/// Response payload: a result or a structured error.
+/// Response payload: a result or a typed error.
 #[derive(Clone, Debug, PartialEq)]
 pub enum ResponseBody {
     Result(Json),
-    Error(WireError),
+    Error(Error),
 }
 
 /// A response frame, correlated to its request by `id`.
@@ -221,14 +157,14 @@ impl Response {
         Response { id, body: ResponseBody::Result(value) }
     }
 
-    pub fn error(id: u64, err: WireError) -> Response {
+    pub fn error(id: u64, err: Error) -> Response {
         Response { id, body: ResponseBody::Error(err) }
     }
 
     /// Deterministic encoding:
     /// `{"jsonrpc":"2.0","id":N,"result":...}` or
     /// `{"jsonrpc":"2.0","id":N,"error":{"code":C,"message":"...","data":...}}`
-    /// (`data` omitted when absent).
+    /// (`data` only when the variant carries structured data).
     pub fn to_json(&self) -> Json {
         let mut fields = vec![
             ("jsonrpc".to_string(), Json::str(JSONRPC_VERSION)),
@@ -236,16 +172,7 @@ impl Response {
         ];
         match &self.body {
             ResponseBody::Result(v) => fields.push(("result".to_string(), v.clone())),
-            ResponseBody::Error(e) => {
-                let mut err = vec![
-                    ("code".to_string(), Json::Num(e.code.code() as f64)),
-                    ("message".to_string(), Json::Str(e.message.clone())),
-                ];
-                if let Some(d) = &e.data {
-                    err.push(("data".to_string(), d.clone()));
-                }
-                fields.push(("error".to_string(), Json::Obj(err)));
-            }
+            ResponseBody::Error(e) => fields.push(("error".to_string(), error_to_json(e))),
         }
         Json::Obj(fields)
     }
@@ -260,15 +187,7 @@ impl Response {
             return Ok(Response::result(id, result.clone()));
         }
         let err = v.get("error").ok_or("response has neither result nor error")?;
-        let raw_code = err.get("code").and_then(Json::as_i64).ok_or("error without code")?;
-        let code = ErrorCode::from_code(raw_code)
-            .ok_or_else(|| format!("unknown error code {raw_code}"))?;
-        let message = err
-            .get("message")
-            .and_then(Json::as_str)
-            .unwrap_or_default()
-            .to_string();
-        Ok(Response::error(id, WireError { code, message, data: err.get("data").cloned() }))
+        Ok(Response::error(id, error_from_json(err)?))
     }
 }
 
@@ -407,55 +326,77 @@ pub fn result_from_json(v: &Json) -> Result<JobResult, String> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::error::WIRE_CODES;
 
     #[test]
     fn error_codes_are_stable_and_unique() {
-        let expect: &[(ErrorCode, i64)] = &[
-            (ErrorCode::ParseError, -32700),
-            (ErrorCode::InvalidRequest, -32600),
-            (ErrorCode::MethodNotFound, -32601),
-            (ErrorCode::InvalidParams, -32602),
-            (ErrorCode::Internal, -32603),
-            (ErrorCode::Rejected, -32001),
-            (ErrorCode::Overloaded, -32002),
-            (ErrorCode::ShuttingDown, -32003),
-            (ErrorCode::RateLimited, -32004),
-            (ErrorCode::TooManyInFlight, -32005),
+        let expect: &[(i64, &str)] = &[
+            (-32700, "parse_error"),
+            (-32600, "invalid_request"),
+            (-32601, "method_not_found"),
+            (-32602, "invalid_params"),
+            (-32603, "internal"),
+            (-32001, "rejected"),
+            (-32002, "overloaded"),
+            (-32003, "shutting_down"),
+            (-32004, "rate_limited"),
+            (-32005, "too_many_in_flight"),
+            (-32006, "unavailable"),
         ];
-        assert_eq!(expect.len(), ErrorCode::ALL.len());
-        for &(c, n) in expect {
-            assert_eq!(c.code(), n, "{}", c.label());
-            assert_eq!(ErrorCode::from_code(n), Some(c));
-        }
-        assert_eq!(ErrorCode::from_code(-1), None);
+        assert_eq!(expect, &WIRE_CODES[..], "wire code table drifted");
+        assert!(Error::from_wire(-1, "x").is_none());
     }
 
     #[test]
     fn submit_errors_map_to_backpressure_codes() {
-        let overloaded = SubmitError::Overloaded {
+        let overloaded = Error::Overloaded {
             kind: JobKind::DotHybrid,
             tier: Tier::Wide,
             queued: 32,
             capacity: 32,
         };
-        let w = WireError::from_submit_error(&overloaded);
-        assert_eq!(w.code, ErrorCode::Overloaded);
-        assert!(w.code.is_backpressure());
-        let data = w.data.unwrap();
+        assert_eq!(overloaded.wire_code(), -32002);
+        assert!(overloaded.is_backpressure());
+        let obj = error_to_json(&overloaded);
+        let data = obj.get("data").unwrap();
         assert_eq!(data.get("kind").unwrap().as_str(), Some("dot/hrfna"));
         assert_eq!(data.get("tier").unwrap().as_str(), Some("wide"));
         assert_eq!(data.get("queued").unwrap().as_u64(), Some(32));
         assert_eq!(data.get("capacity").unwrap().as_u64(), Some(32));
 
-        let rejected = WireError::from_submit_error(&SubmitError::Rejected("bad shape".into()));
-        assert_eq!(rejected.code, ErrorCode::Rejected);
-        assert!(!rejected.code.is_backpressure());
-        assert!(rejected.data.is_none());
+        let rejected = Error::Rejected("bad shape".into());
+        assert_eq!(rejected.wire_code(), -32001);
+        assert!(!rejected.is_backpressure());
+        assert!(error_to_json(&rejected).get("data").is_none());
 
-        assert_eq!(
-            WireError::from_submit_error(&SubmitError::ShuttingDown).code,
-            ErrorCode::ShuttingDown,
-        );
+        assert_eq!(Error::ShuttingDown.wire_code(), -32003);
+        assert_eq!(Error::Unavailable("no worker".into()).wire_code(), -32006);
+    }
+
+    #[test]
+    fn errors_round_trip_losslessly_including_overloaded_data() {
+        let errors = vec![
+            Error::Parse("bad frame".into()),
+            Error::InvalidParams("spec without kind".into()),
+            Error::Rejected("bad shape".into()),
+            Error::Overloaded {
+                kind: JobKind::MatmulHybrid,
+                tier: Tier::Lo,
+                queued: 17,
+                capacity: 16,
+            },
+            Error::ShuttingDown,
+            Error::RateLimited("rate above 10/s".into()),
+            Error::TooManyInFlight("cap 256".into()),
+            Error::Unavailable("worker w1 unreachable".into()),
+        ];
+        for e in errors {
+            let text = error_to_json(&e).encode();
+            let back = error_from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, e, "decode must rebuild the identical value");
+            // Router hop: re-encoding the decoded error is byte-identical.
+            assert_eq!(error_to_json(&back).encode(), text, "re-encode drifted");
+        }
     }
 
     #[test]
@@ -477,7 +418,7 @@ mod tests {
             "{\"jsonrpc\":\"2.0\",\"id\":1}",
         ] {
             let err = Request::from_json(&Json::parse(bad).unwrap()).unwrap_err();
-            assert_eq!(err.code, ErrorCode::InvalidRequest, "{bad}");
+            assert!(matches!(err, Error::InvalidRequest(_)), "{bad}");
         }
     }
 
@@ -487,38 +428,24 @@ mod tests {
         let back = Response::from_json(&Json::parse(&ok.to_json().encode()).unwrap()).unwrap();
         assert_eq!(back, ok);
 
-        let err = Response::error(
-            4,
-            WireError {
-                code: ErrorCode::RateLimited,
-                message: "slow down".into(),
-                data: Some(Json::Num(12.0)),
-            },
-        );
+        let err = Response::error(4, Error::RateLimited("slow down".into()));
         let text = err.to_json().encode();
         assert!(text.contains("\"code\":-32004"));
         let back = Response::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(back, err);
+
+        // Unknown codes are decode failures, not silent passthrough.
+        let unknown =
+            "{\"jsonrpc\":\"2.0\",\"id\":4,\"error\":{\"code\":-1,\"message\":\"?\"}}";
+        assert!(Response::from_json(&Json::parse(unknown).unwrap()).is_err());
     }
 
     #[test]
     fn spec_round_trips_all_payload_kinds() {
         let specs = [
-            JobSpec::new(
-                JobKind::DotHybrid,
-                Payload::Dot { x: vec![1.0, -2.5], y: vec![0.5, 4.0] },
-            )
-            .with_tier(Tier::Lo)
-            .with_tolerance(1e-3),
-            JobSpec::new(
-                JobKind::MatmulF32,
-                Payload::Matmul { a: vec![1.0; 4], b: vec![2.0; 4], dim: 2 },
-            ),
-            JobSpec::new(
-                JobKind::Rk4Hybrid,
-                Payload::Rk4 { y0: vec![2.0, 0.0], mu: 1.5, dt: 0.01, steps: 32 },
-            )
-            .with_tier(Tier::Wide),
+            JobSpec::dot(vec![1.0, -2.5], vec![0.5, 4.0]).tier(Tier::Lo).tolerance(1e-3),
+            JobSpec::matmul_f32(vec![1.0; 4], vec![2.0; 4], 2),
+            JobSpec::rk4(vec![2.0, 0.0], 1.5, 0.01, 32).tier(Tier::Wide),
         ];
         for spec in &specs {
             let text = spec_to_json(spec).encode();

@@ -1,17 +1,22 @@
-//! The RPC server: a std-only async shim over the coordinator. One
+//! The RPC server: a std-only async shim over any [`Backend`]. One
 //! nonblocking accept loop plus **two threads per connection** — a
 //! *reader* that decodes frames, enforces the client's quotas and
-//! submits to the coordinator, and a *completer* that owns the socket's
-//! write half, waits on the per-job result channels, and writes
-//! responses as they complete. Submission therefore never blocks on
-//! earlier jobs: a client may pipeline hundreds of `submit` frames and
-//! receive the responses out of order (correlated by request id), which
-//! is what keeps the coordinator's batcher fed from a single connection.
+//! submits to the backend, and a *completer* that owns the socket's
+//! write half, polls the per-job tickets, and writes responses as they
+//! complete. Submission therefore never blocks on earlier jobs: a
+//! client may pipeline hundreds of `submit` frames and receive the
+//! responses out of order (correlated by request id), which is what
+//! keeps the backend's batcher fed from a single connection.
+//!
+//! The backend is a `dyn Backend`, so the same server binary is the
+//! **worker** edge (over [`InProcess`](crate::coordinator::InProcess))
+//! and the **router** edge (over
+//! `cluster::ShardRouter`) — cluster mode is RpcServer composed twice.
 //!
 //! The thread budget is bounded by connections (2/conn), not by jobs —
-//! job execution stays on the coordinator's worker pool. This is the
-//! same blocking-core/async-edge split darkfi's JSON-RPC server makes,
-//! minus the executor dependency.
+//! job execution stays behind the backend. This is the same
+//! blocking-core/async-edge split darkfi's JSON-RPC server makes, minus
+//! the executor dependency.
 //!
 //! ## Methods
 //!
@@ -20,8 +25,12 @@
 //! | `ping`         | —                         | `"pong"`                      |
 //! | `submit`       | spec object               | job-result object             |
 //! | `submit_batch` | `{"specs":[spec, ...]}`   | array of per-spec entries     |
-//! | `metrics`      | —                         | rendered coordinator + wire tables |
+//! | `metrics`      | —                         | rendered backend + wire tables |
+//! | `health`       | —                         | `{"label":L,"queued":N}`      |
 //! | `shutdown`     | —                         | `"draining"` (server drains and exits) |
+//!
+//! `health` is the cluster heartbeat: the router probes it per interval
+//! and feeds the queue depth into its occupancy-based diversion.
 //!
 //! Quotas are per connection (the wire client identity): a token-bucket
 //! submission rate (`RateLimited` when dry) and an in-flight cap
@@ -38,14 +47,16 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::backend::{Backend, JobPoll, JobTicket};
+use crate::coordinator::error::Error;
 use crate::coordinator::metrics::{ClientCounters, WireMetrics};
 use crate::coordinator::request::JobResult;
-use crate::coordinator::server::Coordinator;
 
 use super::codec::{write_frame, FrameReader, MAX_FRAME_BYTES};
 use super::json::Json;
 use super::protocol::{
-    result_to_json, spec_from_json, ErrorCode, Request, Response, ResponseBody, WireError,
+    error_from_json, error_to_json, result_to_json, spec_from_json, Request, Response,
+    ResponseBody,
 };
 
 /// Per-connection quota limits.
@@ -126,9 +137,9 @@ impl Default for RpcServerConfig {
     }
 }
 
-/// How long the completer waits on an accepted job's result channel
-/// before answering `Internal` — matches `serve_load::RESULT_TIMEOUT`'s
-/// wedge-detection role.
+/// How long the completer waits on an accepted job's ticket before
+/// forgetting it and answering `Internal` — matches
+/// `serve_load::RESULT_TIMEOUT`'s wedge-detection role.
 const PENDING_TIMEOUT: Duration = Duration::from_secs(120);
 
 /// Poll interval of the accept loop's stop check.
@@ -138,8 +149,8 @@ const ACCEPT_POLL: Duration = Duration::from_millis(10);
 enum Work {
     /// A fully-formed response (errors, ping, metrics, ...).
     Respond(Response),
-    /// One accepted submission: respond when the result arrives.
-    Wait { id: u64, rx: mpsc::Receiver<JobResult> },
+    /// One accepted submission: respond when the ticket resolves.
+    Wait { id: u64, ticket: JobTicket },
     /// A batch: respond when every part resolves. Parts rejected at
     /// submission are already `Ready` error entries.
     WaitBatch { id: u64, parts: Vec<Slot> },
@@ -147,7 +158,7 @@ enum Work {
 
 /// One entry of a pending response.
 enum Slot {
-    Wait(mpsc::Receiver<JobResult>),
+    Wait(JobTicket),
     Ready(Json),
 }
 
@@ -157,15 +168,8 @@ fn batch_entry_ok(r: &JobResult) -> Json {
     Json::obj(vec![("result", result_to_json(r))])
 }
 
-fn batch_entry_err(e: &WireError) -> Json {
-    let mut err = vec![
-        ("code".to_string(), Json::Num(e.code.code() as f64)),
-        ("message".to_string(), Json::Str(e.message.clone())),
-    ];
-    if let Some(d) = &e.data {
-        err.push(("data".to_string(), d.clone()));
-    }
-    Json::obj(vec![("error", Json::Obj(err))])
+fn batch_entry_err(e: &Error) -> Json {
+    Json::obj(vec![("error", error_to_json(e))])
 }
 
 /// The running RPC server. [`RpcServer::stop`] tears the whole edge down
@@ -180,8 +184,12 @@ pub struct RpcServer {
 }
 
 impl RpcServer {
-    /// Bind `addr` and start serving `coord` in background threads.
-    pub fn bind(coord: Arc<Coordinator>, addr: &str, cfg: RpcServerConfig) -> Result<RpcServer> {
+    /// Bind `addr` and start serving `backend` in background threads.
+    pub fn bind(
+        backend: Arc<dyn Backend>,
+        addr: &str,
+        cfg: RpcServerConfig,
+    ) -> Result<RpcServer> {
         let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
         let local = listener.local_addr().context("local_addr")?;
         listener.set_nonblocking(true).context("nonblocking listener")?;
@@ -196,7 +204,7 @@ impl RpcServer {
             let wire = Arc::clone(&wire);
             thread::Builder::new()
                 .name("rpc-accept".into())
-                .spawn(move || accept_loop(listener, coord, cfg, stop, drain, wire))
+                .spawn(move || accept_loop(listener, backend, cfg, stop, drain, wire))
                 .context("spawn accept loop")?
         };
 
@@ -253,7 +261,7 @@ impl Drop for RpcServer {
 
 fn accept_loop(
     listener: TcpListener,
-    coord: Arc<Coordinator>,
+    backend: Arc<dyn Backend>,
     cfg: RpcServerConfig,
     stop: Arc<AtomicBool>,
     drain: Arc<AtomicBool>,
@@ -266,13 +274,13 @@ fn accept_loop(
             Ok((stream, peer)) => {
                 seq += 1;
                 let label = format!("{peer}#{seq}");
-                let coord = Arc::clone(&coord);
+                let backend = Arc::clone(&backend);
                 let stop = Arc::clone(&stop);
                 let drain = Arc::clone(&drain);
                 let wire = Arc::clone(&wire);
                 let h = thread::Builder::new()
                     .name(format!("rpc-conn-{seq}"))
-                    .spawn(move || serve_conn(stream, label, coord, cfg, stop, drain, wire))
+                    .spawn(move || serve_conn(stream, label, backend, cfg, stop, drain, wire))
                     .expect("spawn rpc connection thread");
                 conns.push(h);
             }
@@ -296,7 +304,7 @@ fn accept_loop(
 fn serve_conn(
     stream: TcpStream,
     label: String,
-    coord: Arc<Coordinator>,
+    backend: Arc<dyn Backend>,
     cfg: RpcServerConfig,
     stop: Arc<AtomicBool>,
     drain: Arc<AtomicBool>,
@@ -318,16 +326,17 @@ fn serve_conn(
 
     let (work_tx, work_rx) = mpsc::channel::<Work>();
     let completer = {
+        let backend = Arc::clone(&backend);
         let wire = Arc::clone(&wire);
         let counters = Arc::clone(&counters);
         let inflight = Arc::clone(&inflight);
         thread::Builder::new()
             .name("rpc-completer".into())
-            .spawn(move || completer_loop(write_half, work_rx, wire, counters, inflight))
+            .spawn(move || completer_loop(write_half, work_rx, backend, wire, counters, inflight))
             .expect("spawn rpc completer thread")
     };
 
-    reader_loop(stream, &coord, &cfg, &stop, &drain, &wire, &counters, &inflight, &work_tx);
+    reader_loop(stream, &*backend, &cfg, &stop, &drain, &wire, &counters, &inflight, &work_tx);
 
     // Dropping the sender lets the completer flush pending responses and
     // exit; join it before declaring the connection closed.
@@ -339,7 +348,7 @@ fn serve_conn(
 #[allow(clippy::too_many_arguments)]
 fn reader_loop(
     mut stream: TcpStream,
-    coord: &Coordinator,
+    backend: &dyn Backend,
     cfg: &RpcServerConfig,
     stop: &AtomicBool,
     drain: &AtomicBool,
@@ -367,7 +376,7 @@ fn reader_loop(
             Ok(t) => t,
             Err(_) => {
                 wire.record_protocol_error();
-                respond_err(work_tx, 0, WireError::new(ErrorCode::ParseError, "frame is not UTF-8"));
+                respond_err(work_tx, 0, Error::Parse("frame is not UTF-8".into()));
                 continue;
             }
         };
@@ -375,7 +384,7 @@ fn reader_loop(
             Ok(v) => v,
             Err(e) => {
                 wire.record_protocol_error();
-                respond_err(work_tx, 0, WireError::new(ErrorCode::ParseError, e));
+                respond_err(work_tx, 0, Error::Parse(e));
                 continue;
             }
         };
@@ -396,8 +405,15 @@ fn reader_loop(
             }
             "metrics" => {
                 let body = Json::obj(vec![
-                    ("coordinator", Json::Str(coord.metrics_table().render())),
+                    ("coordinator", Json::Str(backend.metrics_text())),
                     ("wire", Json::Str(wire.table().render())),
+                ]);
+                let _ = work_tx.send(Work::Respond(Response::result(req.id, body)));
+            }
+            "health" => {
+                let body = Json::obj(vec![
+                    ("label", Json::str(backend.label())),
+                    ("queued", Json::Num(backend.queue_depth() as f64)),
                 ]);
                 let _ = work_tx.send(Work::Respond(Response::result(req.id, body)));
             }
@@ -407,10 +423,10 @@ fn reader_loop(
                     work_tx.send(Work::Respond(Response::result(req.id, Json::str("draining"))));
             }
             "submit" => {
-                match admit_one(&req.params, coord, cfg, drain, wire, counters, inflight, &mut bucket)
+                match admit_one(&req.params, backend, cfg, drain, wire, counters, inflight, &mut bucket)
                 {
-                    Ok(rx) => {
-                        let _ = work_tx.send(Work::Wait { id: req.id, rx });
+                    Ok(ticket) => {
+                        let _ = work_tx.send(Work::Wait { id: req.id, ticket });
                     }
                     Err(e) => respond_err(work_tx, req.id, e),
                 }
@@ -422,7 +438,7 @@ fn reader_loop(
                         respond_err(
                             work_tx,
                             req.id,
-                            WireError::new(ErrorCode::InvalidParams, "params.specs must be an array"),
+                            Error::InvalidParams("params.specs must be an array".into()),
                         );
                         continue;
                     }
@@ -430,9 +446,9 @@ fn reader_loop(
                 let parts: Vec<Slot> = specs
                     .iter()
                     .map(|spec| {
-                        match admit_one(spec, coord, cfg, drain, wire, counters, inflight, &mut bucket)
+                        match admit_one(spec, backend, cfg, drain, wire, counters, inflight, &mut bucket)
                         {
-                            Ok(rx) => Slot::Wait(rx),
+                            Ok(ticket) => Slot::Wait(ticket),
                             Err(e) => Slot::Ready(batch_entry_err(&e)),
                         }
                     })
@@ -443,7 +459,7 @@ fn reader_loop(
                 respond_err(
                     work_tx,
                     req.id,
-                    WireError::new(ErrorCode::MethodNotFound, format!("unknown method {other:?}")),
+                    Error::MethodNotFound(format!("unknown method {other:?}")),
                 );
             }
         }
@@ -455,44 +471,39 @@ fn reader_loop(
 #[allow(clippy::too_many_arguments)]
 fn admit_one(
     params: &Json,
-    coord: &Coordinator,
+    backend: &dyn Backend,
     cfg: &RpcServerConfig,
     drain: &AtomicBool,
     wire: &WireMetrics,
     counters: &ClientCounters,
     inflight: &AtomicUsize,
     bucket: &mut TokenBucket,
-) -> Result<mpsc::Receiver<JobResult>, WireError> {
-    let spec = spec_from_json(params)
-        .map_err(|e| WireError::new(ErrorCode::InvalidParams, e))?;
+) -> Result<JobTicket, Error> {
+    let spec = spec_from_json(params).map_err(Error::InvalidParams)?;
     if drain.load(Ordering::SeqCst) {
-        return Err(WireError::new(ErrorCode::ShuttingDown, "server is draining"));
+        return Err(Error::ShuttingDown);
     }
     if !bucket.try_take() {
         wire.record_rate_limited(counters);
-        return Err(WireError::new(
-            ErrorCode::RateLimited,
-            format!("submission rate above {}/s", cfg.quota.rate_per_s),
-        ));
+        return Err(Error::RateLimited(format!(
+            "submission rate above {}/s",
+            cfg.quota.rate_per_s
+        )));
     }
     if inflight.load(Ordering::SeqCst) >= cfg.quota.max_inflight {
         wire.record_inflight_limited(counters);
-        return Err(WireError::new(
-            ErrorCode::TooManyInFlight,
-            format!("more than {} jobs in flight", cfg.quota.max_inflight),
-        ));
+        return Err(Error::TooManyInFlight(format!(
+            "more than {} jobs in flight",
+            cfg.quota.max_inflight
+        )));
     }
-    match coord.submit_spec(spec) {
-        Ok(rx) => {
-            inflight.fetch_add(1, Ordering::SeqCst);
-            wire.record_submit(counters);
-            Ok(rx)
-        }
-        Err(e) => Err(WireError::from_submit_error(&e)),
-    }
+    let ticket = backend.submit(spec)?;
+    inflight.fetch_add(1, Ordering::SeqCst);
+    wire.record_submit(counters);
+    Ok(ticket)
 }
 
-fn respond_err(work_tx: &mpsc::Sender<Work>, id: u64, err: WireError) {
+fn respond_err(work_tx: &mpsc::Sender<Work>, id: u64, err: Error) {
     let _ = work_tx.send(Work::Respond(Response::error(id, err)));
 }
 
@@ -509,6 +520,7 @@ struct Pending {
 fn completer_loop(
     mut w: TcpStream,
     work_rx: mpsc::Receiver<Work>,
+    backend: Arc<dyn Backend>,
     wire: Arc<WireMetrics>,
     counters: Arc<ClientCounters>,
     inflight: Arc<AtomicUsize>,
@@ -547,9 +559,9 @@ fn completer_loop(
                 Work::Respond(resp) => {
                     write_response(&mut w, &resp, &wire, &counters, &mut dead);
                 }
-                Work::Wait { id, rx } => pending.push(Pending {
+                Work::Wait { id, ticket } => pending.push(Pending {
                     id,
-                    slots: vec![Slot::Wait(rx)],
+                    slots: vec![Slot::Wait(ticket)],
                     batch: false,
                     since: Instant::now(),
                 }),
@@ -562,32 +574,33 @@ fn completer_loop(
             }
         }
 
-        // Poll pending result channels.
+        // Poll pending tickets.
         let mut i = 0;
         while i < pending.len() {
             let timed_out = pending[i].since.elapsed() > PENDING_TIMEOUT;
             let mut all_ready = true;
             for slot in pending[i].slots.iter_mut() {
-                if let Slot::Wait(rx) = slot {
-                    match rx.try_recv() {
-                        Ok(result) => {
+                if let Slot::Wait(ticket) = slot {
+                    match backend.poll(ticket) {
+                        JobPoll::Ready(Ok(result)) => {
                             inflight.fetch_sub(1, Ordering::SeqCst);
                             wire.record_result(&counters);
                             *slot = Slot::Ready(batch_entry_ok(&result));
                         }
-                        Err(mpsc::TryRecvError::Empty) if !timed_out => all_ready = false,
-                        // Coordinator dropped the reply channel, or the
-                        // wait timed out: an internal failure, not a
-                        // typed rejection.
-                        Err(e) => {
+                        // The backend lost the job (channel closed,
+                        // worker link died): a typed completion error.
+                        JobPoll::Ready(Err(e)) => {
                             inflight.fetch_sub(1, Ordering::SeqCst);
-                            let msg = match e {
-                                mpsc::TryRecvError::Disconnected => "result channel closed",
-                                mpsc::TryRecvError::Empty => "result wait timed out",
-                            };
-                            *slot = Slot::Ready(batch_entry_err(&WireError::new(
-                                ErrorCode::Internal,
-                                msg,
+                            *slot = Slot::Ready(batch_entry_err(&e));
+                        }
+                        JobPoll::Pending if !timed_out => all_ready = false,
+                        // Wait timed out: abandon the ticket so the
+                        // backend releases its result channel.
+                        JobPoll::Pending => {
+                            backend.forget(ticket);
+                            inflight.fetch_sub(1, Ordering::SeqCst);
+                            *slot = Slot::Ready(batch_entry_err(&Error::Internal(
+                                "result wait timed out".into(),
                             )));
                         }
                     }
@@ -628,13 +641,9 @@ fn assemble(p: Pending) -> Response {
         Response::result(p.id, result.clone())
     } else {
         let err = entry.get("error").expect("entry is result or error");
-        let code = err
-            .get("code")
-            .and_then(Json::as_i64)
-            .and_then(ErrorCode::from_code)
-            .unwrap_or(ErrorCode::Internal);
-        let message = err.get("message").and_then(Json::as_str).unwrap_or_default().to_string();
-        Response::error(p.id, WireError { code, message, data: err.get("data").cloned() })
+        let err = error_from_json(err)
+            .unwrap_or_else(|e| Error::Internal(format!("undecodable error entry: {e}")));
+        Response::error(p.id, err)
     }
 }
 
@@ -653,8 +662,8 @@ fn write_response(
     }
     let payload = resp.to_json().encode();
     if write_frame(w, payload.as_bytes()).is_err() || w.flush().is_err() {
-        // Peer is gone; keep draining result channels so inflight
-        // accounting stays truthful, but stop writing.
+        // Peer is gone; keep draining tickets so inflight accounting
+        // stays truthful, but stop writing.
         *dead = true;
     } else {
         wire.record_frame_out(counters, payload.len());
@@ -664,6 +673,8 @@ fn write_response(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::request::JobKind;
+    use crate::hybrid::registry::Tier;
 
     #[test]
     fn token_bucket_enforces_rate_and_burst() {
@@ -697,18 +708,18 @@ mod tests {
     fn batch_entries_have_the_documented_shape() {
         let r = JobResult {
             id: 1,
-            kind: crate::coordinator::request::JobKind::DotHybrid,
-            tier: crate::hybrid::registry::Tier::Paper,
+            kind: JobKind::DotHybrid,
+            tier: Tier::Paper,
             values: vec![2.0],
             latency_us: 10.0,
             batch_size: 1,
         };
         let ok = batch_entry_ok(&r);
         assert!(ok.get("result").is_some());
-        let err = batch_entry_err(&WireError::new(ErrorCode::RateLimited, "slow down"));
+        let err = batch_entry_err(&Error::RateLimited("slow down".into()));
         assert_eq!(
             err.get("error").unwrap().get("code").unwrap().as_i64(),
-            Some(ErrorCode::RateLimited.code())
+            Some(-32004)
         );
     }
 
@@ -723,12 +734,15 @@ mod tests {
         });
         assert_eq!(single, Response::result(5, Json::str("x")));
 
+        let overloaded = Error::Overloaded {
+            kind: JobKind::DotHybrid,
+            tier: Tier::Paper,
+            queued: 8,
+            capacity: 8,
+        };
         let batch = assemble(Pending {
             id: 6,
-            slots: vec![
-                Slot::Ready(entry),
-                Slot::Ready(batch_entry_err(&WireError::new(ErrorCode::Overloaded, "full"))),
-            ],
+            slots: vec![Slot::Ready(entry), Slot::Ready(batch_entry_err(&overloaded))],
             batch: true,
             since: Instant::now(),
         });
@@ -739,18 +753,15 @@ mod tests {
     }
 
     #[test]
-    fn assemble_maps_error_entries_to_wire_errors() {
+    fn assemble_rebuilds_typed_error_entries() {
         let resp = assemble(Pending {
             id: 9,
-            slots: vec![Slot::Ready(batch_entry_err(&WireError::new(
-                ErrorCode::ShuttingDown,
-                "draining",
-            )))],
+            slots: vec![Slot::Ready(batch_entry_err(&Error::ShuttingDown))],
             batch: false,
             since: Instant::now(),
         });
         match resp.body {
-            ResponseBody::Error(e) => assert_eq!(e.code, ErrorCode::ShuttingDown),
+            ResponseBody::Error(e) => assert_eq!(e, Error::ShuttingDown),
             other => panic!("expected error, got {other:?}"),
         }
     }

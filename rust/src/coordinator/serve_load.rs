@@ -10,19 +10,21 @@
 //! request) as naturally as mixed-kind traffic — the multi-scenario load
 //! shape the tier registry exists to serve.
 //!
-//! The generators here drive the coordinator **in-process** (a Rust call
-//! per submission). Their socket-level counterparts live in
-//! `coordinator::rpc::load` (`--features rpc`) and share [`LoadReport`];
-//! the socket closed loop holds **one persistent connection per client**
-//! for the whole run, so it measures steady-state wire throughput, not
-//! per-job connect overhead (a reconnect-per-job mode exists purely to
-//! quantify that overhead in `bench_rpc`).
+//! The generators drive **any [`Backend`]** — the in-process coordinator
+//! ([`super::backend::InProcess`]), an RPC client, or the cluster's
+//! shard router — through the one ticket-based submission API, so the
+//! same load shape measures every topology. Their socket-level
+//! counterparts live in `coordinator::rpc::load` (`--features rpc`) and
+//! share [`LoadReport`]; the socket closed loop holds **one persistent
+//! connection per client** for the whole run, so it measures
+//! steady-state wire throughput, not per-job connect overhead (a
+//! reconnect-per-job mode exists purely to quantify that overhead in
+//! `bench_rpc`).
 
-use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use super::request::{JobResult, JobSpec};
-use super::server::Coordinator;
+use super::backend::{Backend, JobTicket};
+use super::request::JobSpec;
 use crate::util::stats::Summary;
 
 /// Outcome of one generated load run.
@@ -76,12 +78,9 @@ impl LoadReport {
 /// a hung bench).
 const RESULT_TIMEOUT: Duration = Duration::from_secs(120);
 
-fn drain(
-    pending: Vec<mpsc::Receiver<JobResult>>,
-    latencies: &mut Vec<f64>,
-) {
-    for rx in pending {
-        if let Ok(r) = rx.recv_timeout(RESULT_TIMEOUT) {
+fn drain(backend: &dyn Backend, pending: Vec<JobTicket>, latencies: &mut Vec<f64>) {
+    for ticket in pending {
+        if let Ok(r) = backend.wait(&ticket, RESULT_TIMEOUT) {
             latencies.push(r.latency_us);
         }
     }
@@ -92,7 +91,7 @@ fn drain(
 /// bursts keep the batcher fed so batches of ≥ `burst` actually form).
 /// `make(client, i)` builds the i-th spec of a client.
 pub fn closed_loop(
-    coord: &Coordinator,
+    backend: &dyn Backend,
     clients: usize,
     jobs_per_client: usize,
     burst: usize,
@@ -113,17 +112,17 @@ pub fn closed_loop(
                         for _ in 0..burst.min(jobs_per_client - i) {
                             let spec = make(c as u64, i);
                             i += 1;
-                            match coord.submit_spec(spec) {
-                                Ok(rx) => {
+                            match backend.submit(spec) {
+                                Ok(ticket) => {
                                     accepted += 1;
-                                    pending.push(rx);
+                                    pending.push(ticket);
                                 }
                                 // Overloaded (and any admission failure)
                                 // counts as shed load.
                                 Err(_) => rejected += 1,
                             }
                         }
-                        drain(pending, &mut latencies);
+                        drain(backend, pending, &mut latencies);
                     }
                     (accepted, rejected, latencies)
                 })
@@ -149,7 +148,7 @@ pub fn closed_loop(
 /// come back `Overloaded` — the report's `rejected` count is the
 /// load-shedding measurement.
 pub fn open_loop(
-    coord: &Coordinator,
+    backend: &dyn Backend,
     total: usize,
     rate_per_s: f64,
     make: &(dyn Fn(u64, usize) -> JobSpec + Sync),
@@ -166,16 +165,16 @@ pub fn open_loop(
             std::thread::sleep(sleep);
         }
         let spec = make(0, i);
-        match coord.submit_spec(spec) {
-            Ok(rx) => {
+        match backend.submit(spec) {
+            Ok(ticket) => {
                 accepted += 1;
-                pending.push(rx);
+                pending.push(ticket);
             }
             Err(_) => rejected += 1,
         }
     }
     let mut latencies = Vec::with_capacity(accepted);
-    drain(pending, &mut latencies);
+    drain(backend, pending, &mut latencies);
     let wall = t0.elapsed();
     LoadReport::from_parts(total, accepted, rejected, latencies, wall)
 }

@@ -11,7 +11,6 @@
 //! per-tier metrics). Paper-tier traffic is bit-identical to the
 //! historical single-context path.
 
-use anyhow::Result;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -19,9 +18,10 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use super::batcher::{BatchPolicy, BatchQueue, PushError};
+use super::error::Error;
 use super::hybrid_exec::{execute_batch, ExecMode};
 use super::metrics::Metrics;
-use super::request::{Job, JobKind, JobResult, JobSpec, Payload, SubmitError};
+use super::request::{Job, JobKind, JobResult, JobSpec, Payload};
 use super::router::{admit, LaneKey, ShapeBuckets};
 use crate::hybrid::registry::{ContextRegistry, Tier};
 use crate::runtime::EngineHandle;
@@ -244,19 +244,19 @@ impl Coordinator {
         requested: Tier,
         payload: &Payload,
         tolerance: Option<f64>,
-    ) -> Result<(Tier, bool), SubmitError> {
+    ) -> Result<(Tier, bool), Error> {
         let base = self
             .cfg
             .buckets
             .enabled_tier_at_or_above(requested)
             .ok_or_else(|| {
-                SubmitError::Rejected(format!(
+                Error::Rejected(format!(
                     "no enabled tier at or above requested {requested:?}"
                 ))
             })?;
         let res = self.registry.resolve(base, &payload.envelope(), tolerance);
         if !res.covered {
-            return Err(SubmitError::Rejected(format!(
+            return Err(Error::Rejected(format!(
                 "no tier's formal bound covers the request \
                  (requested {requested:?}, failed check {:?}, tolerance {tolerance:?})",
                 res.reason
@@ -267,7 +267,7 @@ impl Coordinator {
             .buckets
             .enabled_tier_at_or_above(res.tier)
             .ok_or_else(|| {
-                SubmitError::Rejected(format!(
+                Error::Rejected(format!(
                     "escalation to {:?} ({:?}) has no enabled lane",
                     res.tier, res.reason
                 ))
@@ -275,18 +275,16 @@ impl Coordinator {
         Ok((tier, res.escalations > 0))
     }
 
-    /// Submit a full spec (kind, payload, requested tier, tolerance);
+    /// Submit a [`JobSpec`] (kind, payload, requested tier, tolerance);
     /// returns the receiver for its result, or a typed error (`Rejected`
     /// for admission failures — including a tolerance that not even the
     /// top tier's formal bound covers — `Overloaded` when the lane's
     /// bounded queue is full: the backpressure contract). Hybrid jobs
     /// may be escalated past their requested tier; the bump is counted
     /// in the metrics and the result's `tier` reports where they
-    /// actually ran.
-    pub fn submit_spec(
-        &self,
-        spec: JobSpec,
-    ) -> Result<mpsc::Receiver<JobResult>, SubmitError> {
+    /// actually ran. Build specs with the builders:
+    /// `coord.submit(JobSpec::dot(x, y).tier(Tier::Wide))`.
+    pub fn submit(&self, spec: JobSpec) -> Result<mpsc::Receiver<JobResult>, Error> {
         let JobSpec { kind, mut payload, tier: requested, tolerance } = spec;
         let metric_tier = if kind.is_hybrid() { requested } else { Tier::Paper };
         let bucket = match admit(&mut payload, kind, &self.cfg.buckets) {
@@ -336,38 +334,34 @@ impl Coordinator {
             }
             Err(PushError::Full(_)) => {
                 self.metrics.record_rejected(kind, tier);
-                Err(SubmitError::Overloaded {
+                Err(Error::Overloaded {
                     kind,
                     tier,
                     queued: q.len(),
                     capacity: q.policy.capacity.saturating_mul(q.shard_count()),
                 })
             }
-            Err(PushError::Closed(_)) => Err(SubmitError::ShuttingDown),
+            Err(PushError::Closed(_)) => Err(Error::ShuttingDown),
         }
     }
 
-    /// Submit a paper-tier job with no tolerance — the historical
-    /// single-context submission, bit-identical through the registry.
-    pub fn submit(
-        &self,
-        kind: JobKind,
-        payload: Payload,
-    ) -> Result<mpsc::Receiver<JobResult>, SubmitError> {
-        self.submit_spec(JobSpec::new(kind, payload))
-    }
-
     /// Submit a spec and block for the result.
-    pub fn call_spec(&self, spec: JobSpec) -> Result<JobResult> {
-        let rx = self.submit_spec(spec)?;
-        Ok(rx
-            .recv_timeout(Duration::from_secs(120))
-            .map_err(|e| anyhow::anyhow!("job timed out: {e}"))?)
+    pub fn call(&self, spec: JobSpec) -> Result<JobResult, Error> {
+        let rx = self.submit(spec)?;
+        rx.recv_timeout(Duration::from_secs(120))
+            .map_err(|e| Error::Internal(format!("job timed out: {e}")))
     }
 
-    /// Submit a paper-tier job and block for the result.
-    pub fn call(&self, kind: JobKind, payload: Payload) -> Result<JobResult> {
-        self.call_spec(JobSpec::new(kind, payload))
+    /// Pre-PR7 name of [`Coordinator::submit`].
+    #[deprecated(note = "renamed to Coordinator::submit (one JobSpec entry point)")]
+    pub fn submit_spec(&self, spec: JobSpec) -> Result<mpsc::Receiver<JobResult>, Error> {
+        self.submit(spec)
+    }
+
+    /// Pre-PR7 name of [`Coordinator::call`].
+    #[deprecated(note = "renamed to Coordinator::call (one JobSpec entry point)")]
+    pub fn call_spec(&self, spec: JobSpec) -> Result<JobResult, Error> {
+        self.call(spec)
     }
 
     /// Close all queues, drain every in-flight and queued batch, join the

@@ -9,11 +9,16 @@
 //!   tables      qualitative Tables I & IV
 //!   serve       start the coordinator and run a mixed request workload
 //!   serve-rpc   serve the coordinator over TCP JSON-RPC (--features rpc)
-//!   rpc-load    drive a serve-rpc server with socket-level load (--features rpc)
+//!   worker      cluster worker: serve-rpc under its cluster name (--features rpc)
+//!   route       cluster router: shard jobs across --workers (--features rpc)
+//!   rpc-load    drive a serve-rpc/worker/route server with socket load (--features rpc)
 
 use hrfna::baselines::{Bfp, BfpConfig};
 use hrfna::config::HrfnaConfig;
-use hrfna::coordinator::{ContextRegistry, Coordinator, CoordinatorConfig, JobKind, Payload};
+use hrfna::coordinator::{
+    Backend, ContextRegistry, Coordinator, CoordinatorConfig, InProcess, JobKind, JobSpec,
+    Payload, DEFAULT_WAIT,
+};
 use hrfna::fpga::pipeline::{model_workload, speedup, WorkloadKind};
 use hrfna::fpga::report;
 use hrfna::fpga::resources::FormatArch;
@@ -39,14 +44,18 @@ fn main() {
         Some("resources") => cmd_resources(&cfg),
         Some("tables") => cmd_tables(),
         Some("serve") => cmd_serve(&args, &cfg),
-        Some("serve-rpc") => cmd_serve_rpc(&args, &cfg),
+        // `worker` is the cluster name for the same edge serve-rpc runs:
+        // an RpcServer over an in-process coordinator.
+        Some("serve-rpc") => cmd_serve_rpc(&args, &cfg, "serve-rpc"),
+        Some("worker") => cmd_serve_rpc(&args, &cfg, "worker"),
+        Some("route") => cmd_route(&args),
         Some("rpc-load") => cmd_rpc_load(&args),
         other => {
             if let Some(o) = other {
                 eprintln!("unknown subcommand {o}");
             }
             eprintln!(
-                "usage: hrfna <info|dot|matmul|rk4|resources|tables|serve|serve-rpc|rpc-load> \
+                "usage: hrfna <info|dot|matmul|rk4|resources|tables|serve|serve-rpc|worker|route|rpc-load> \
                  [--preset paper|low-precision|stress-norm|wide] [--config file.toml] ..."
             );
             std::process::exit(2);
@@ -151,7 +160,8 @@ fn cmd_serve(args: &Args, cfg: &HrfnaConfig) {
     // The CLI-selected config becomes the registry's base (paper-slot)
     // tier; `lo`/`wide` keep their presets for escalation headroom.
     let registry = Arc::new(ContextRegistry::with_base(cfg.clone()));
-    let coord = Coordinator::start(engine, registry, CoordinatorConfig::default());
+    let backend =
+        InProcess::new(Coordinator::start(engine, registry, CoordinatorConfig::default()));
     let mut rng = Rng::new(7);
     let mut pending = Vec::new();
     for i in 0..jobs {
@@ -159,21 +169,23 @@ fn cmd_serve(args: &Args, cfg: &HrfnaConfig) {
         let x = Dist::moderate().sample_vec(&mut rng, n);
         let y = Dist::moderate().sample_vec(&mut rng, n);
         let kind = if i % 2 == 0 { JobKind::DotHybrid } else { JobKind::DotF32 };
-        pending.push(coord.submit(kind, Payload::Dot { x, y }).expect("submit"));
+        pending.push(backend.submit(JobSpec::new(kind, Payload::Dot { x, y })).expect("submit"));
     }
-    for rx in pending {
-        rx.recv().expect("result");
+    for ticket in pending {
+        backend.wait(&ticket, DEFAULT_WAIT).expect("result");
     }
-    coord.metrics_table().print();
-    let drain = coord.shutdown();
+    println!("{}", backend.metrics_text());
+    let drain = backend.shutdown().expect("shutdown once");
     println!("{drain}");
 }
 
-/// Serve the coordinator over TCP JSON-RPC until a client calls
-/// `shutdown`; exits 0 iff the drain was clean (every accepted job
-/// replied to) — the invariant the CI `rpc-smoke` job asserts.
+/// Serve an in-process coordinator over TCP JSON-RPC until a client
+/// calls `shutdown`; exits 0 iff the drain was clean (every accepted
+/// job replied to) — the invariant the CI smoke jobs assert. Run as
+/// `serve-rpc` standalone or as `worker` under a cluster router (same
+/// edge, cluster name).
 #[cfg(feature = "rpc")]
-fn cmd_serve_rpc(args: &Args, cfg: &HrfnaConfig) {
+fn cmd_serve_rpc(args: &Args, cfg: &HrfnaConfig, name: &str) {
     use hrfna::coordinator::rpc::{QuotaConfig, RpcServer, RpcServerConfig};
 
     let addr = args.str_or("addr", "127.0.0.1:9377");
@@ -184,25 +196,84 @@ fn cmd_serve_rpc(args: &Args, cfg: &HrfnaConfig) {
     };
     let engine = EngineHandle::spawn(None).expect("engine (run `make artifacts`)");
     let registry = Arc::new(ContextRegistry::with_base(cfg.clone()));
-    let coord = Arc::new(Coordinator::start(engine, registry, CoordinatorConfig::default()));
+    let backend = Arc::new(InProcess::new(Coordinator::start(
+        engine,
+        registry,
+        CoordinatorConfig::default(),
+    )));
     let server = RpcServer::bind(
-        Arc::clone(&coord),
+        Arc::clone(&backend) as Arc<dyn Backend>,
         &addr,
         RpcServerConfig { quota, ..RpcServerConfig::default() },
     )
     .expect("bind rpc server");
-    // The smoke test greps for this line before starting its load.
-    println!("serve-rpc listening on {}", server.local_addr());
+    // The smoke test waits for this line before starting its load.
+    println!("{name} listening on {}", server.local_addr());
     server.wait_shutdown();
     let wire = server.stop();
     wire.table().print();
-    let coord = Arc::try_unwrap(coord)
-        .unwrap_or_else(|_| panic!("server threads still hold the coordinator"));
-    coord.metrics_table().print();
-    let drain = coord.shutdown();
+    println!("{}", backend.metrics_text());
+    let drain = backend.shutdown().expect("shutdown once");
     println!("{drain}");
     if !drain.is_clean() {
-        eprintln!("serve-rpc: unclean drain");
+        eprintln!("{name}: unclean drain");
+        std::process::exit(1);
+    }
+}
+
+///// Cluster router: consistent-hash shard jobs across `--workers` (comma
+/// separated `addr` or `id=addr`), serving clients over the same RPC
+/// edge the workers speak. Exits 0 iff the router's own drain was clean
+/// (no job accepted from a client was lost — the worker-kill smoke
+/// test's invariant).
+#[cfg(feature = "rpc")]
+fn cmd_route(args: &Args) {
+    use hrfna::coordinator::cluster::{parse_workers, RouterConfig, ShardRouter};
+    use hrfna::coordinator::rpc::{QuotaConfig, RpcServer, RpcServerConfig};
+    use std::time::Duration;
+
+    let addr = args.str_or("addr", "127.0.0.1:9378");
+    let workers = match args.get("workers").map(parse_workers) {
+        Some(Ok(w)) => w,
+        Some(Err(e)) => {
+            eprintln!("route: bad --workers: {e}");
+            std::process::exit(2);
+        }
+        None => {
+            eprintln!("route: --workers addr[,addr...] (or id=addr) is required");
+            std::process::exit(2);
+        }
+    };
+    let router_cfg = RouterConfig {
+        divert_depth: args.parse_or("divert-depth", 0i64),
+        health_interval: Duration::from_millis(args.parse_or("health-interval-ms", 500u64)),
+        ..RouterConfig::default()
+    };
+    let quota = QuotaConfig {
+        max_inflight: args.parse_or("max-inflight", 256usize),
+        rate_per_s: args.parse_or("rate", 0.0f64),
+        burst: args.parse_or("rate-burst", 64.0f64),
+    };
+    let router = Arc::new(ShardRouter::start(workers, router_cfg).expect("cluster start"));
+    let server = RpcServer::bind(
+        Arc::clone(&router) as Arc<dyn Backend>,
+        &addr,
+        RpcServerConfig { quota, ..RpcServerConfig::default() },
+    )
+    .expect("bind route server");
+    println!(
+        "route listening on {} ({} workers up)",
+        server.local_addr(),
+        router.up_count()
+    );
+    server.wait_shutdown();
+    let wire = server.stop();
+    wire.table().print();
+    println!("{}", router.metrics_text());
+    let drain = router.shutdown().expect("shutdown once");
+    println!("{drain}");
+    if !drain.is_clean() {
+        eprintln!("route: unclean drain");
         std::process::exit(1);
     }
 }
@@ -260,7 +331,7 @@ fn cmd_rpc_load(args: &Args) {
             ),
         };
         if mixed_tiers && spec.kind.is_hybrid() {
-            spec.with_tier(mix.tier_for(i))
+            spec.tier(mix.tier_for(i))
         } else {
             spec
         }
@@ -291,8 +362,14 @@ fn cmd_rpc_load(args: &Args) {
 }
 
 #[cfg(not(feature = "rpc"))]
-fn cmd_serve_rpc(_args: &Args, _cfg: &HrfnaConfig) {
-    eprintln!("serve-rpc requires the `rpc` feature: cargo run --features rpc -- serve-rpc");
+fn cmd_serve_rpc(_args: &Args, _cfg: &HrfnaConfig, name: &str) {
+    eprintln!("{name} requires the `rpc` feature: cargo run --features rpc -- {name}");
+    std::process::exit(2);
+}
+
+#[cfg(not(feature = "rpc"))]
+fn cmd_route(_args: &Args) {
+    eprintln!("route requires the `rpc` feature: cargo run --features rpc -- route");
     std::process::exit(2);
 }
 

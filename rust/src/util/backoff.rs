@@ -1,0 +1,108 @@
+//! Jittered exponential backoff for reconnect loops.
+//!
+//! The schedule doubles from `base` up to `cap`, and every delay is
+//! scaled by a uniform factor in [0.5, 1.0) drawn from the crate's own
+//! PRNG. The jitter is the point: N router replicas that all watched the
+//! same worker die would otherwise wake on identical fixed ticks and
+//! stampede the restarted listener — desynchronized delays spread the
+//! reconnects across the whole window.
+
+use std::time::Duration;
+
+use super::prng::Rng;
+
+/// Exponential backoff state for one retry loop.
+pub struct Backoff {
+    base: Duration,
+    cap: Duration,
+    attempt: u32,
+    rng: Rng,
+}
+
+impl Backoff {
+    /// Schedule doubling from `base` to at most `cap`; `seed` decorrelates
+    /// concurrent loops (hash the peer address, mix in the process time —
+    /// see [`Backoff::seed_for`]).
+    pub fn new(base: Duration, cap: Duration, seed: u64) -> Backoff {
+        Backoff { base: base.max(Duration::from_micros(1)), cap, attempt: 0, rng: Rng::new(seed) }
+    }
+
+    /// The reconnect default: 10 ms doubling to a 1 s cap.
+    pub fn for_reconnect(seed: u64) -> Backoff {
+        Backoff::new(Duration::from_millis(10), Duration::from_secs(1), seed)
+    }
+
+    /// A per-loop seed: FNV over `label`, mixed with wall-clock nanos so
+    /// two processes retrying the same address still diverge.
+    pub fn seed_for(label: &str) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in label.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.subsec_nanos() as u64)
+            .unwrap_or(0);
+        h ^ nanos.wrapping_mul(0x9e37_79b9_7f4a_7c15)
+    }
+
+    /// Next delay: `min(cap, base · 2^attempt)` jittered by a uniform
+    /// factor in [0.5, 1.0).
+    pub fn next_delay(&mut self) -> Duration {
+        let exp = self.attempt.min(20);
+        self.attempt = self.attempt.saturating_add(1);
+        let full = self
+            .base
+            .checked_mul(1u32 << exp)
+            .map(|d| d.min(self.cap))
+            .unwrap_or(self.cap);
+        full.mul_f64(self.rng.uniform(0.5, 1.0))
+    }
+
+    /// Reset the exponent after a successful attempt.
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delays_grow_and_cap() {
+        let base = Duration::from_millis(10);
+        let cap = Duration::from_secs(1);
+        let mut b = Backoff::new(base, cap, 7);
+        let delays: Vec<Duration> = (0..12).map(|_| b.next_delay()).collect();
+        for (i, d) in delays.iter().enumerate() {
+            // Jitter floor is half the unjittered delay; ceiling is cap.
+            let unjittered = base.checked_mul(1 << i.min(20)).unwrap_or(cap).min(cap);
+            assert!(*d >= unjittered.mul_f64(0.5), "delay {i} below jitter floor");
+            assert!(*d <= cap, "delay {i} above cap");
+        }
+        // By attempt 7 (10ms * 128 > 1s) the schedule is cap-bound.
+        assert!(delays[8] >= cap.mul_f64(0.5));
+    }
+
+    #[test]
+    fn jitter_desynchronizes_two_loops() {
+        let mut a = Backoff::new(Duration::from_millis(50), Duration::from_secs(1), 1);
+        let mut b = Backoff::new(Duration::from_millis(50), Duration::from_secs(1), 2);
+        // Two loops on the same schedule but different seeds must not
+        // tick in lockstep — at least one of the first 8 delays differs.
+        let differ = (0..8).any(|_| a.next_delay() != b.next_delay());
+        assert!(differ, "seeded jitter produced identical schedules");
+    }
+
+    #[test]
+    fn reset_restarts_the_exponent() {
+        let mut b = Backoff::new(Duration::from_millis(100), Duration::from_secs(10), 3);
+        for _ in 0..6 {
+            b.next_delay();
+        }
+        b.reset();
+        assert!(b.next_delay() <= Duration::from_millis(100));
+    }
+}

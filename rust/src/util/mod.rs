@@ -4,6 +4,7 @@
 //! usual ecosystem crates (rand, clap, criterion, proptest, serde) are
 //! re-implemented here at the scale this project needs.
 
+pub mod backoff;
 pub mod prng;
 pub mod stats;
 pub mod table;

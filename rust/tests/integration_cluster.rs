@@ -1,0 +1,280 @@
+//! Integration: the sharded cluster topology (`--features rpc`) end to
+//! end, all in one process on ephemeral ports — a `ShardRouter` over
+//! real worker `RpcServer`s. Pins the three cluster contracts:
+//!
+//! * **numerical transparency** — paper-tier results routed through the
+//!   cluster are bit-identical to the in-process planar path,
+//! * **failover** — killing a worker mid-stream loses zero accepted
+//!   jobs (in-flight work is resubmitted to the survivors),
+//! * **drain on membership change** — `remove_worker` fences the shard,
+//!   hands its lanes to the survivors, and reports the handoff.
+#![cfg(feature = "rpc")]
+
+use hrfna::coordinator::batcher::BatchPolicy;
+use hrfna::coordinator::cluster::{RouterConfig, ShardRouter, WorkerSpec};
+use hrfna::coordinator::router::ShapeBuckets;
+use hrfna::coordinator::rpc::{RpcServer, RpcServerConfig};
+use hrfna::coordinator::{
+    Backend, ContextRegistry, Coordinator, CoordinatorConfig, Error, ExecMode, InProcess, JobSpec,
+    Tier,
+};
+use hrfna::runtime::EngineHandle;
+use hrfna::util::prng::Rng;
+use hrfna::workloads::generators::Dist;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One in-process "worker process": an `InProcess` coordinator behind
+/// its own `RpcServer` on an ephemeral port.
+struct Worker {
+    backend: Arc<InProcess>,
+    server: RpcServer,
+    spec: WorkerSpec,
+}
+
+fn coordinator() -> Coordinator {
+    let engine = EngineHandle::spawn(None).expect("engine load");
+    Coordinator::start(
+        engine,
+        Arc::new(ContextRegistry::new()),
+        CoordinatorConfig {
+            workers_per_lane: 1,
+            batch: BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_micros(500),
+                capacity: 1024,
+            },
+            buckets: ShapeBuckets::default(),
+            exec: ExecMode::Planar,
+        },
+    )
+}
+
+fn spawn_worker(id: usize) -> Worker {
+    let backend = Arc::new(InProcess::new(coordinator()));
+    let server = RpcServer::bind(
+        Arc::clone(&backend) as Arc<dyn Backend>,
+        "127.0.0.1:0",
+        RpcServerConfig::default(),
+    )
+    .expect("bind worker rpc server");
+    let spec = WorkerSpec {
+        id: format!("w{id}"),
+        addr: server.local_addr().to_string(),
+    };
+    Worker { backend, server, spec }
+}
+
+fn start_router(workers: &[Worker]) -> ShardRouter {
+    let specs: Vec<WorkerSpec> = workers.iter().map(|w| w.spec.clone()).collect();
+    let router = ShardRouter::start(
+        specs,
+        RouterConfig {
+            health_interval: Duration::from_millis(100),
+            connect_wait: Duration::from_secs(2),
+            ..RouterConfig::default()
+        },
+    )
+    .expect("start shard router");
+    assert_eq!(router.up_count(), workers.len(), "all workers must come up");
+    router
+}
+
+/// Tolerant worker teardown: `Err(ShuttingDown)` means the router's
+/// shutdown RPC already drained this backend.
+fn stop_worker(w: Worker) {
+    w.server.stop();
+    if let Ok(d) = w.backend.shutdown() {
+        assert_eq!(d.dropped, 0, "worker {} dropped jobs: {d}", w.spec.id);
+    }
+}
+
+/// Mixed-lane traffic: both dot buckets × all three tiers, so six
+/// hybrid lanes spread over the ring and every worker owns some.
+fn lane_spread_spec(rng: &mut Rng, slot: usize) -> (JobSpec, f64, f64) {
+    let n = if slot % 2 == 0 { 512 } else { 4096 };
+    let x = Dist::moderate().sample_vec(rng, n);
+    let y = Dist::moderate().sample_vec(rng, n);
+    let truth: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+    let scale: f64 = x.iter().zip(&y).map(|(a, b)| (a * b).abs()).sum();
+    let spec = JobSpec::dot(x, y).tier(Tier::ALL[slot % Tier::ALL.len()]);
+    (spec, truth, scale)
+}
+
+#[test]
+fn paper_tier_results_through_router_bit_identical_to_in_process() {
+    // The cluster must be numerically transparent: a job routed over two
+    // socket hops onto a sharded fleet returns the *same bits* as the
+    // same job served by one in-process planar coordinator.
+    let local = InProcess::new(coordinator());
+    let workers: Vec<Worker> = (0..2).map(spawn_worker).collect();
+    let router = start_router(&workers);
+
+    let mut rng = Rng::new(2028);
+    for slot in 0..12usize {
+        // Exact bucket sizes so admission pads nothing.
+        let n = if slot % 2 == 0 { 512 } else { 4096 };
+        let x = Dist::high_dynamic_range().sample_vec(&mut rng, n);
+        let y = Dist::moderate().sample_vec(&mut rng, n);
+        let routed = router
+            .call(JobSpec::dot(x.clone(), y.clone()))
+            .expect("routed paper dot");
+        let direct = local.call(JobSpec::dot(x, y)).expect("local paper dot");
+        assert_eq!(routed.tier, Tier::Paper);
+        assert_eq!(
+            routed.values[0].to_bits(),
+            direct.values[0].to_bits(),
+            "job {slot}: routed {} != in-process {}",
+            routed.values[0],
+            direct.values[0]
+        );
+    }
+
+    let drain = router.shutdown().expect("router shutdown");
+    assert!(drain.is_clean(), "unclean router drain: {drain}");
+    for w in workers {
+        stop_worker(w);
+    }
+    assert!(local.shutdown().expect("local shutdown").is_clean());
+}
+
+#[test]
+fn worker_loss_mid_stream_fails_over_with_zero_lost_jobs() {
+    let mut workers: Vec<Worker> = (0..2).map(spawn_worker).collect();
+    let router = start_router(&workers);
+
+    // Fire a stream of accepted jobs across all six lanes, then kill one
+    // worker while they are in flight.
+    let mut rng = Rng::new(404);
+    let mut pending = Vec::new();
+    for slot in 0..36usize {
+        let (spec, truth, scale) = lane_spread_spec(&mut rng, slot);
+        let ticket = router.submit(spec).expect("cluster accepts the stream");
+        pending.push((ticket, truth, scale));
+    }
+    let victim = workers.remove(1);
+    let victim_backend = Arc::clone(&victim.backend);
+    victim.server.stop(); // connections die mid-frame; jobs on w1 are orphaned
+
+    // Every accepted job must still complete — the router resubmits the
+    // orphans to the survivor (at-least-once; pure computation).
+    for (ticket, truth, scale) in pending {
+        let r = router
+            .wait(&ticket, Duration::from_secs(60))
+            .expect("accepted job survives the worker loss");
+        assert!(
+            (r.values[0] - truth).abs() <= 1e-2 * scale.max(1e-300),
+            "failover result off: {} vs {truth}",
+            r.values[0]
+        );
+    }
+
+    // The monitor notices the dead shard.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while router.up_count() != 1 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert_eq!(router.up_count(), 1, "dead worker must leave the Up set");
+
+    // New work keeps flowing to the survivor.
+    let (spec, truth, scale) = lane_spread_spec(&mut rng, 1);
+    let r = router.call(spec).expect("degraded fleet still serves");
+    assert!((r.values[0] - truth).abs() <= 1e-2 * scale.max(1e-300));
+
+    let drain = router.shutdown().expect("router shutdown");
+    assert_eq!(drain.dropped, 0, "failover must not drop jobs: {drain}");
+    for w in workers {
+        stop_worker(w);
+    }
+    // The victim's backend outlived its socket; it drains clean locally.
+    if let Ok(d) = victim_backend.shutdown() {
+        assert_eq!(d.dropped, 0, "victim backend dropped jobs: {d}");
+    }
+}
+
+#[test]
+fn remove_worker_drains_and_survivors_take_over() {
+    let workers: Vec<Worker> = (0..2).map(spawn_worker).collect();
+    let router = start_router(&workers);
+
+    let mut rng = Rng::new(77);
+    for slot in 0..12usize {
+        let (spec, truth, scale) = lane_spread_spec(&mut rng, slot);
+        let r = router.call(spec).expect("pre-removal traffic");
+        assert!((r.values[0] - truth).abs() <= 1e-2 * scale.max(1e-300));
+    }
+
+    // Fence w1 out: its lanes move to w0, the handoff is reported.
+    let report = router.remove_worker("w1").expect("remove a live worker");
+    assert_eq!(report.dropped, 0, "{report}");
+    assert_eq!(router.up_count(), 1, "retired shard leaves the Up set");
+    assert!(
+        router.metrics_text().contains("(retired)"),
+        "{}",
+        router.metrics_text()
+    );
+
+    // The last worker is load-bearing: removing it is refused and the
+    // fleet keeps serving.
+    let err = router.remove_worker("w0").expect_err("last worker is protected");
+    assert!(matches!(err, Error::Rejected(_)), "{err:?}");
+    let err = router.remove_worker("w1").expect_err("already removed");
+    assert!(matches!(err, Error::Rejected(_)), "{err:?}");
+
+    for slot in 0..12usize {
+        let (spec, truth, scale) = lane_spread_spec(&mut rng, slot);
+        let r = router.call(spec).expect("post-removal traffic on the survivor");
+        assert!((r.values[0] - truth).abs() <= 1e-2 * scale.max(1e-300));
+    }
+
+    let drain = router.shutdown().expect("router shutdown");
+    assert!(drain.is_clean(), "unclean drain after removal: {drain}");
+    for w in workers {
+        stop_worker(w);
+    }
+}
+
+#[test]
+fn router_rejections_and_shutdown_are_typed() {
+    let workers: Vec<Worker> = (0..1).map(spawn_worker).collect();
+    let router = start_router(&workers);
+    assert_eq!(router.label(), "shard-router");
+
+    // A payload no lane bucket admits is rejected at the routing layer —
+    // it never crosses the wire.
+    let err = router
+        .submit(JobSpec::dot(vec![0.0; 100_000], vec![0.0; 100_000]))
+        .expect_err("oversize dot has no lane");
+    assert!(matches!(err, Error::Rejected(_)), "{err:?}");
+
+    let drain = router.shutdown().expect("router shutdown");
+    assert!(drain.is_clean(), "{drain}");
+    let err = router
+        .submit(JobSpec::dot(vec![1.0; 512], vec![1.0; 512]))
+        .expect_err("submits after shutdown are refused");
+    assert_eq!(err, Error::ShuttingDown);
+    for w in workers {
+        stop_worker(w);
+    }
+}
+
+#[test]
+fn empty_and_unreachable_fleets_fail_with_typed_errors() {
+    let err = ShardRouter::start(Vec::new(), RouterConfig::default())
+        .err()
+        .expect("empty fleet refused");
+    assert!(matches!(err, Error::Rejected(_)), "{err:?}");
+
+    // A fleet where nobody answers: Unavailable, not a hang (the
+    // connect budget bounds the wait).
+    let err = ShardRouter::start(
+        vec![WorkerSpec { id: "w0".into(), addr: "127.0.0.1:1".into() }],
+        RouterConfig {
+            connect_wait: Duration::from_millis(200),
+            ..RouterConfig::default()
+        },
+    )
+    .err()
+    .expect("unreachable fleet refused");
+    assert!(matches!(err, Error::Unavailable(_)), "{err:?}");
+}

@@ -1,20 +1,22 @@
 //! Integration: the RPC serving edge (`--features rpc`) end to end —
 //! golden wire-format fixtures pinning the frame encodings, property
-//! tests over the error-code and serialization contracts, and a real
-//! loopback server driven through the client library: submits, batches,
-//! quotas, draining, and the clean-shutdown invariant.
+//! tests over the unified error-code and serialization contracts, and a
+//! real loopback server (an `RpcServer` over the [`Backend`] seam)
+//! driven through the client library: submits, batches, quotas,
+//! draining, and the clean-shutdown invariant.
 #![cfg(feature = "rpc")]
 
 use hrfna::coordinator::batcher::BatchPolicy;
+use hrfna::coordinator::error::WIRE_CODES;
 use hrfna::coordinator::router::ShapeBuckets;
 use hrfna::coordinator::rpc::{
-    code_for_submit_error, result_from_json, result_to_json, socket_closed_loop, spec_from_json,
-    spec_to_json, ConnMode, ErrorCode, FrameReader, Json, QuotaConfig, Request, Response,
-    ResponseBody, RpcClient, RpcServer, RpcServerConfig, WireError,
+    result_from_json, result_to_json, socket_closed_loop, spec_from_json, spec_to_json, ConnMode,
+    FrameReader, Json, QuotaConfig, Request, Response, ResponseBody, RpcClient, RpcServer,
+    RpcServerConfig,
 };
 use hrfna::coordinator::{
-    ContextRegistry, Coordinator, CoordinatorConfig, ExecMode, JobKind, JobResult, JobSpec,
-    Payload, SubmitError, Tier,
+    Backend, ContextRegistry, Coordinator, CoordinatorConfig, Error, ExecMode, InProcess, JobKind,
+    JobResult, JobSpec, Payload, Tier,
 };
 use hrfna::runtime::EngineHandle;
 use hrfna::util::proptest::check;
@@ -41,24 +43,23 @@ fn coordinator() -> Coordinator {
     )
 }
 
-/// Server + coordinator for one test, bound to an ephemeral port.
-fn serve(quota: QuotaConfig) -> (Arc<Coordinator>, RpcServer, String) {
-    let coord = Arc::new(coordinator());
+/// Server + backend for one test, bound to an ephemeral port.
+fn serve(quota: QuotaConfig) -> (Arc<InProcess>, RpcServer, String) {
+    let backend = Arc::new(InProcess::new(coordinator()));
     let server = RpcServer::bind(
-        Arc::clone(&coord),
+        Arc::clone(&backend) as Arc<dyn Backend>,
         "127.0.0.1:0",
         RpcServerConfig { quota, ..RpcServerConfig::default() },
     )
     .expect("bind rpc server");
     let addr = server.local_addr().to_string();
-    (coord, server, addr)
+    (backend, server, addr)
 }
 
-/// Tear down server then coordinator, asserting the drain invariant.
-fn teardown(coord: Arc<Coordinator>, server: RpcServer) {
+/// Tear down server then backend, asserting the drain invariant.
+fn teardown(backend: Arc<InProcess>, server: RpcServer) {
     server.stop();
-    let coord = Arc::try_unwrap(coord).unwrap_or_else(|_| panic!("coordinator still shared"));
-    let drain = coord.shutdown();
+    let drain = backend.shutdown().expect("first shutdown");
     assert!(drain.is_clean(), "unclean drain: {drain}");
 }
 
@@ -78,12 +79,9 @@ fn fixture(name: &str) -> String {
 #[test]
 fn golden_request_submit_dot() {
     let text = fixture("request_submit_dot.json");
-    let spec = JobSpec::new(
-        JobKind::DotHybrid,
-        Payload::Dot { x: vec![1.0, -2.5], y: vec![0.5, 4.0] },
-    )
-    .with_tier(Tier::Lo)
-    .with_tolerance(0.001);
+    let spec = JobSpec::dot(vec![1.0, -2.5], vec![0.5, 4.0])
+        .tier(Tier::Lo)
+        .tolerance(0.001);
     let req = Request::new(1, "submit", spec_to_json(&spec));
     assert_eq!(req.to_json().encode(), text, "request encoding drifted from fixture");
 
@@ -132,22 +130,21 @@ fn golden_response_result() {
 #[test]
 fn golden_error_overloaded() {
     let text = fixture("error_overloaded.json");
-    let err = SubmitError::Overloaded {
+    let err = Error::Overloaded {
         kind: JobKind::DotHybrid,
         tier: Tier::Paper,
         queued: 32,
         capacity: 32,
     };
-    let resp = Response::error(2, WireError::from_submit_error(&err));
+    let resp = Response::error(2, err.clone());
     assert_eq!(resp.to_json().encode(), text, "error encoding drifted from fixture");
 
     let parsed = Response::from_json(&Json::parse(&text).unwrap()).unwrap();
     match parsed.body {
         ResponseBody::Error(e) => {
-            assert_eq!(e.code, ErrorCode::Overloaded);
-            assert!(e.code.is_backpressure());
-            let data = e.data.unwrap();
-            assert_eq!(data.get("queued").unwrap().as_u64(), Some(32));
+            assert_eq!(e, err, "decode rebuilds the identical typed error");
+            assert_eq!(e.wire_code(), -32002);
+            assert!(e.is_backpressure());
         }
         other => panic!("expected error, got {other:?}"),
     }
@@ -173,42 +170,62 @@ fn golden_frames_survive_the_codec() {
 // Property tests: stable code mapping and serialization round trips.
 // ---------------------------------------------------------------------
 
+/// One randomized value of every error variant, paired with its pinned
+/// wire code (table order = `WIRE_CODES` order).
+fn arbitrary_error(rng: &mut Rng) -> (Error, i64, &'static str) {
+    let kind = JobKind::ALL[rng.below(JobKind::ALL.len() as u64) as usize];
+    let tier = Tier::ALL[rng.below(Tier::ALL.len() as u64) as usize];
+    let msg = format!("reason {}", rng.below(1000));
+    let i = rng.below(WIRE_CODES.len() as u64) as usize;
+    let err = match WIRE_CODES[i].1 {
+        "parse_error" => Error::Parse(msg),
+        "invalid_request" => Error::InvalidRequest(msg),
+        "method_not_found" => Error::MethodNotFound(msg),
+        "invalid_params" => Error::InvalidParams(msg),
+        "internal" => Error::Internal(msg),
+        "rejected" => Error::Rejected(msg),
+        "overloaded" => Error::Overloaded {
+            kind,
+            tier,
+            queued: rng.below(1 << 20) as usize,
+            capacity: rng.below(1 << 20) as usize,
+        },
+        "shutting_down" => Error::ShuttingDown,
+        "rate_limited" => Error::RateLimited(msg),
+        "too_many_in_flight" => Error::TooManyInFlight(msg),
+        "unavailable" => Error::Unavailable(msg),
+        other => panic!("unknown table label {other}"),
+    };
+    (err, WIRE_CODES[i].0, WIRE_CODES[i].1)
+}
+
 #[test]
-fn every_submit_error_maps_to_a_stable_backpressure_code() {
-    check("submit error -> wire code", |rng| {
-        let kind = JobKind::ALL[rng.below(JobKind::ALL.len() as u64) as usize];
-        let tier = Tier::ALL[rng.below(Tier::ALL.len() as u64) as usize];
-        let (err, want) = match rng.below(3) {
-            0 => (SubmitError::Rejected(format!("reason {}", rng.below(100))), ErrorCode::Rejected),
-            1 => (
-                SubmitError::Overloaded {
-                    kind,
-                    tier,
-                    queued: rng.below(1 << 20) as usize,
-                    capacity: rng.below(1 << 20) as usize,
-                },
-                ErrorCode::Overloaded,
-            ),
-            _ => (SubmitError::ShuttingDown, ErrorCode::ShuttingDown),
-        };
-        let code = code_for_submit_error(&err);
-        hrfna::prop_assert!(code == want, "{err:?} mapped to {code:?}");
-        // The code survives the wire: encode the error response, parse
-        // it back, same code.
-        let resp = Response::error(9, WireError::from_submit_error(&err));
-        let back = Response::from_json(&Json::parse(&resp.to_json().encode()).unwrap())
+fn every_error_variant_keeps_its_stable_code_across_the_wire() {
+    check("error -> wire code -> error", |rng| {
+        let (err, want_code, want_label) = arbitrary_error(rng);
+        hrfna::prop_assert!(
+            err.wire_code() == want_code,
+            "{err:?} mapped to {} not {want_code}",
+            err.wire_code()
+        );
+        hrfna::prop_assert!(err.code_label() == want_label, "label drifted for {err:?}");
+        // The typed value survives the wire losslessly: encode the error
+        // response, parse it back, identical enum value — the router-hop
+        // contract (worker error → router → client, same bytes).
+        let resp = Response::error(9, err.clone());
+        let text = resp.to_json().encode();
+        let back = Response::from_json(&Json::parse(&text).map_err(|e| e.to_string())?)
             .map_err(|e| e.to_string())?;
         match back.body {
             ResponseBody::Error(e) => {
-                hrfna::prop_assert!(e.code == want, "round trip changed code to {:?}", e.code)
+                hrfna::prop_assert!(e == err, "round trip changed {err:?} into {e:?}");
+                hrfna::prop_assert!(
+                    Response::error(9, e).to_json().encode() == text,
+                    "re-encode after a hop drifted"
+                );
             }
             _ => return Err("error response parsed as result".into()),
         }
-        // And the numeric value is pinned forever.
-        hrfna::prop_assert!(
-            ErrorCode::from_code(want.code()) == Some(want),
-            "code table not involutive for {want:?}"
-        );
         Ok(())
     });
 }
@@ -239,7 +256,7 @@ fn specs_and_results_round_trip_fuzzed() {
         };
         let mut spec = JobSpec { kind, payload, tier, tolerance: None };
         if rng.below(2) == 1 {
-            spec = spec.with_tolerance(rng.lognormal(-10.0, 2.0));
+            spec = spec.tolerance(rng.lognormal(-10.0, 2.0));
         }
         let text = spec_to_json(&spec).encode();
         let back = spec_from_json(&Json::parse(&text).map_err(|e| e.to_string())?)
@@ -279,7 +296,7 @@ fn specs_and_results_round_trip_fuzzed() {
 
 #[test]
 fn loopback_submit_returns_correct_dot_product() {
-    let (coord, server, addr) = serve(QuotaConfig::default());
+    let (backend, server, addr) = serve(QuotaConfig::default());
     let mut client = RpcClient::connect(&addr).expect("connect");
     client.ping().expect("ping");
 
@@ -288,7 +305,7 @@ fn loopback_submit_returns_correct_dot_product() {
     let x = Dist::moderate().sample_vec(&mut rng, n);
     let y = Dist::moderate().sample_vec(&mut rng, n);
     let expect: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
-    let spec = JobSpec::new(JobKind::DotHybrid, Payload::Dot { x, y });
+    let spec = JobSpec::dot(x, y);
     let outcome = client.call(&spec).expect("transport ok");
     let result = outcome.expect("job accepted");
     assert_eq!(result.kind, JobKind::DotHybrid);
@@ -297,12 +314,22 @@ fn loopback_submit_returns_correct_dot_product() {
     let rel = ((result.values[0] - expect) / expect.abs().max(1e-300)).abs();
     assert!(rel < 1e-9, "dot over the wire off by {rel:.3e}");
 
-    teardown(coord, server);
+    teardown(backend, server);
+}
+
+#[test]
+fn loopback_health_reports_label_and_depth() {
+    let (backend, server, addr) = serve(QuotaConfig::default());
+    let mut client = RpcClient::connect(&addr).expect("connect");
+    let (label, queued) = client.health().expect("health answered");
+    assert_eq!(label, "in-process");
+    assert!(queued >= 0, "depth gauge is a count");
+    teardown(backend, server);
 }
 
 #[test]
 fn loopback_pipelined_submits_come_back_out_of_order_safe() {
-    let (coord, server, addr) = serve(QuotaConfig::default());
+    let (backend, server, addr) = serve(QuotaConfig::default());
     let mut client = RpcClient::connect(&addr).expect("connect");
     let mut rng = Rng::new(7);
     let dist = Dist::moderate();
@@ -311,11 +338,8 @@ fn loopback_pipelined_submits_come_back_out_of_order_safe() {
     let mix = ServeMix::default_mix();
     let mut fired = Vec::new();
     for i in 0..24usize {
-        let spec = JobSpec::new(
-            JobKind::DotHybrid,
-            Payload::Dot { x: dist.sample_vec(&mut rng, 512), y: dist.sample_vec(&mut rng, 512) },
-        )
-        .with_tier(mix.tier_for(i));
+        let spec = JobSpec::dot(dist.sample_vec(&mut rng, 512), dist.sample_vec(&mut rng, 512))
+            .tier(mix.tier_for(i));
         fired.push((client.submit_spec(&spec).expect("fire"), spec.tier));
     }
     for (id, want_tier) in fired.into_iter().rev() {
@@ -323,40 +347,34 @@ fn loopback_pipelined_submits_come_back_out_of_order_safe() {
         let result = outcome.expect("job accepted");
         assert_eq!(result.tier, want_tier, "tier context followed the job");
     }
-    teardown(coord, server);
+    teardown(backend, server);
 }
 
 #[test]
 fn loopback_batch_mixes_results_and_typed_errors() {
-    let (coord, server, addr) = serve(QuotaConfig::default());
+    let (backend, server, addr) = serve(QuotaConfig::default());
     let mut client = RpcClient::connect(&addr).expect("connect");
     let mut rng = Rng::new(3);
     let dist = Dist::moderate();
-    let good = JobSpec::new(
-        JobKind::DotHybrid,
-        Payload::Dot { x: dist.sample_vec(&mut rng, 512), y: dist.sample_vec(&mut rng, 512) },
-    );
+    let good = JobSpec::dot(dist.sample_vec(&mut rng, 512), dist.sample_vec(&mut rng, 512));
     // Mismatched operand lengths fail admission → a typed Rejected entry
     // in the same batch response as the good results.
-    let bad = JobSpec::new(
-        JobKind::DotHybrid,
-        Payload::Dot { x: dist.sample_vec(&mut rng, 512), y: dist.sample_vec(&mut rng, 100) },
-    );
+    let bad = JobSpec::dot(dist.sample_vec(&mut rng, 512), dist.sample_vec(&mut rng, 100));
     let outcomes = client
         .submit_batch(&[good.clone(), bad, good])
         .expect("transport ok");
     assert_eq!(outcomes.len(), 3);
     assert!(outcomes[0].is_ok(), "first spec accepted");
     let err = outcomes[1].as_ref().err().expect("second spec rejected");
-    assert_eq!(err.code, ErrorCode::Rejected);
+    assert!(matches!(err, Error::Rejected(_)), "got {err:?}");
     assert!(outcomes[2].is_ok(), "third spec accepted");
-    teardown(coord, server);
+    teardown(backend, server);
 }
 
 #[test]
 fn loopback_quotas_shed_with_typed_codes() {
     // In-flight cap of zero: every submit sheds with TooManyInFlight.
-    let (coord, server, addr) = serve(QuotaConfig {
+    let (backend, server, addr) = serve(QuotaConfig {
         max_inflight: 0,
         rate_per_s: 0.0,
         burst: 64.0,
@@ -364,18 +382,17 @@ fn loopback_quotas_shed_with_typed_codes() {
     let mut client = RpcClient::connect(&addr).expect("connect");
     let mut rng = Rng::new(5);
     let dist = Dist::moderate();
-    let spec = JobSpec::new(
-        JobKind::DotHybrid,
-        Payload::Dot { x: dist.sample_vec(&mut rng, 512), y: dist.sample_vec(&mut rng, 512) },
-    );
+    let spec = JobSpec::dot(dist.sample_vec(&mut rng, 512), dist.sample_vec(&mut rng, 512));
     let outcome = client.call(&spec).expect("transport ok");
-    assert_eq!(outcome.err().expect("shed").code, ErrorCode::TooManyInFlight);
+    let err = outcome.err().expect("shed");
+    assert!(matches!(err, Error::TooManyInFlight(_)), "got {err:?}");
+    assert_eq!(err.wire_code(), -32005);
     assert_eq!(server.wire_metrics().totals().inflight_limited(), 1);
-    teardown(coord, server);
+    teardown(backend, server);
 
     // Token bucket with one token and a negligible refill: the first
     // submit passes, the second is RateLimited.
-    let (coord, server, addr) = serve(QuotaConfig {
+    let (backend, server, addr) = serve(QuotaConfig {
         max_inflight: 256,
         rate_per_s: 1e-6,
         burst: 1.0,
@@ -384,30 +401,31 @@ fn loopback_quotas_shed_with_typed_codes() {
     let first = client.call(&spec).expect("transport ok");
     assert!(first.is_ok(), "first submit inside the burst");
     let second = client.call(&spec).expect("transport ok");
-    assert_eq!(second.err().expect("shed").code, ErrorCode::RateLimited);
+    let err = second.err().expect("shed");
+    assert!(matches!(err, Error::RateLimited(_)), "got {err:?}");
     assert_eq!(server.wire_metrics().totals().rate_limited(), 1);
-    teardown(coord, server);
+    teardown(backend, server);
 }
 
 #[test]
 fn loopback_protocol_errors_answer_with_stable_codes() {
-    let (coord, server, addr) = serve(QuotaConfig::default());
+    let (backend, server, addr) = serve(QuotaConfig::default());
     let mut client = RpcClient::connect(&addr).expect("connect");
 
     // Unknown method.
     let resp = client.request("warp", Json::Null).expect("transport ok");
     match resp.body {
-        ResponseBody::Error(e) => assert_eq!(e.code, ErrorCode::MethodNotFound),
+        ResponseBody::Error(e) => assert!(matches!(e, Error::MethodNotFound(_)), "got {e:?}"),
         other => panic!("expected MethodNotFound, got {other:?}"),
     }
     // Undecodable params.
     let resp = client.request("submit", Json::str("not a spec")).expect("transport ok");
     match resp.body {
-        ResponseBody::Error(e) => assert_eq!(e.code, ErrorCode::InvalidParams),
+        ResponseBody::Error(e) => assert!(matches!(e, Error::InvalidParams(_)), "got {e:?}"),
         other => panic!("expected InvalidParams, got {other:?}"),
     }
     // Malformed JSON in a well-formed frame: answered (id 0) with
-    // ParseError, and the connection stays usable.
+    // Parse, and the connection stays usable.
     use std::io::Write as _;
     let mut raw = std::net::TcpStream::connect(&addr).expect("raw connect");
     let payload = b"{this is not json";
@@ -424,46 +442,43 @@ fn loopback_protocol_errors_answer_with_stable_codes() {
         .unwrap();
     assert_eq!(parsed.id, 0);
     match parsed.body {
-        ResponseBody::Error(e) => assert_eq!(e.code, ErrorCode::ParseError),
-        other => panic!("expected ParseError, got {other:?}"),
+        ResponseBody::Error(e) => {
+            assert!(matches!(e, Error::Parse(_)), "got {e:?}");
+            assert_eq!(e.wire_code(), -32700);
+        }
+        other => panic!("expected Parse, got {other:?}"),
     }
     assert!(server.wire_metrics().protocol_errors() >= 1);
     client.ping().expect("first connection still healthy");
-    teardown(coord, server);
+    teardown(backend, server);
 }
 
 #[test]
 fn loopback_drain_rejects_new_work_with_shutting_down() {
-    let (coord, server, addr) = serve(QuotaConfig::default());
+    let (backend, server, addr) = serve(QuotaConfig::default());
     let mut client = RpcClient::connect(&addr).expect("connect");
     let mut rng = Rng::new(9);
     let dist = Dist::moderate();
-    let spec = JobSpec::new(
-        JobKind::DotHybrid,
-        Payload::Dot { x: dist.sample_vec(&mut rng, 512), y: dist.sample_vec(&mut rng, 512) },
-    );
+    let spec = JobSpec::dot(dist.sample_vec(&mut rng, 512), dist.sample_vec(&mut rng, 512));
     assert!(client.call(&spec).expect("transport ok").is_ok());
     client.shutdown_server().expect("shutdown acknowledged");
     assert!(server.shutdown_requested());
     let outcome = client.call(&spec).expect("transport ok");
-    assert_eq!(outcome.err().expect("shed").code, ErrorCode::ShuttingDown);
-    teardown(coord, server);
+    assert_eq!(outcome.err().expect("shed"), Error::ShuttingDown);
+    teardown(backend, server);
 }
 
 #[test]
 fn socket_load_generator_round_trips_mixed_tier_traffic() {
-    let (coord, server, addr) = serve(QuotaConfig::default());
+    let (backend, server, addr) = serve(QuotaConfig::default());
     let mix = ServeMix::default_mix();
     let make = |c: u64, i: usize| -> JobSpec {
         let (_, mut rng) = mix.request_rng(c + 1, i);
-        JobSpec::new(
-            JobKind::DotHybrid,
-            Payload::Dot {
-                x: mix.dist.sample_vec(&mut rng, mix.dot_n),
-                y: mix.dist.sample_vec(&mut rng, mix.dot_n),
-            },
+        JobSpec::dot(
+            mix.dist.sample_vec(&mut rng, mix.dot_n),
+            mix.dist.sample_vec(&mut rng, mix.dot_n),
         )
-        .with_tier(mix.tier_for(i))
+        .tier(mix.tier_for(i))
     };
     for mode in [ConnMode::Persistent, ConnMode::PerJob] {
         let report = socket_closed_loop(&addr, 3, 10, 4, mode, &make);
@@ -476,5 +491,23 @@ fn socket_load_generator_round_trips_mixed_tier_traffic() {
     // 3 persistent connections plus 30 per-job connections.
     assert!(wire.conns_opened() >= 33);
     assert_eq!(wire.totals().results(), 60);
-    teardown(coord, server);
+    teardown(backend, server);
+}
+
+// ---------------------------------------------------------------------
+// The deprecated shims still compile and agree with the new surface.
+// ---------------------------------------------------------------------
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_shims_agree_with_the_unified_surface() {
+    use hrfna::coordinator::rpc::code_for_submit_error;
+    use hrfna::coordinator::SubmitError;
+    let e: SubmitError = Error::ShuttingDown;
+    assert_eq!(code_for_submit_error(&e), e.wire_code());
+    let spec = JobSpec::dot(vec![1.0], vec![1.0])
+        .with_tier(Tier::Wide)
+        .with_tolerance(1e-7);
+    assert_eq!(spec.tier, Tier::Wide);
+    assert_eq!(spec.tolerance, Some(1e-7));
 }

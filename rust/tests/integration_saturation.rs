@@ -6,8 +6,8 @@
 
 use hrfna::coordinator::batcher::BatchPolicy;
 use hrfna::coordinator::{
-    ContextRegistry, Coordinator, CoordinatorConfig, ExecMode, JobKind, JobSpec, Payload,
-    SubmitError,
+    Backend, ContextRegistry, Coordinator, CoordinatorConfig, Error, ExecMode, InProcess, JobKind,
+    JobSpec,
 };
 use hrfna::runtime::EngineHandle;
 use hrfna::util::prng::Rng;
@@ -56,10 +56,10 @@ fn flood_past_capacity_sheds_load_and_drains_clean() {
             let mut overloaded = 0usize;
             for _ in 0..25 {
                 match coord
-                    .submit(JobKind::DotHybrid, Payload::Dot { x: x.clone(), y: y.clone() })
+                    .submit(JobSpec::dot(x.clone(), y.clone()))
                 {
                     Ok(rx) => accepted.push(rx),
-                    Err(SubmitError::Overloaded { capacity, .. }) => {
+                    Err(Error::Overloaded { capacity, .. }) => {
                         assert!(capacity > 0, "typed overload carries queue state");
                         overloaded += 1;
                     }
@@ -123,7 +123,7 @@ fn shutdown_drains_queued_jobs_before_joining() {
         truths.push(x.iter().zip(&y).map(|(a, b)| a * b).sum::<f64>());
         pending.push(
             coord
-                .submit(JobKind::DotHybrid, Payload::Dot { x, y })
+                .submit(JobSpec::dot(x, y))
                 .unwrap(),
         );
     }
@@ -159,28 +159,32 @@ fn idle_shutdown_is_clean() {
 #[test]
 fn open_loop_overload_is_bounded_and_recovers() {
     use hrfna::coordinator::open_loop;
-    let coord = coordinator(
+    // The load generator drives the `Backend` seam, same as the RPC and
+    // cluster edges; wrap the coordinator in the in-process adapter.
+    let backend = InProcess::new(coordinator(
         BatchPolicy {
             max_batch: 8,
             max_wait: Duration::from_micros(500),
             capacity: 8,
         },
         1,
-    );
+    ));
     let mut rng = Rng::new(9);
     let x = Dist::moderate().sample_vec(&mut rng, 4096);
     let y = Dist::moderate().sample_vec(&mut rng, 4096);
     // Offer far beyond single-worker capacity; the bounded lane must shed
     // rather than queue without bound, and shed jobs must not break the
     // accepted ones.
-    let report = open_loop(&coord, 300, 50_000.0, &|_, _| {
-        JobSpec::new(JobKind::DotHybrid, Payload::Dot { x: x.clone(), y: y.clone() })
+    let report = open_loop(&backend, 300, 50_000.0, &|_, _| {
+        JobSpec::dot(x.clone(), y.clone())
     });
     assert_eq!(report.offered, 300);
     assert_eq!(report.accepted + report.rejected, 300);
     assert_eq!(report.completed, report.accepted);
-    let depth = coord.metrics.queue_depth(JobKind::DotHybrid);
+    let depth = backend
+        .with_coordinator(|c| c.metrics.queue_depth(JobKind::DotHybrid))
+        .expect("backend still live");
     assert!(depth <= 16, "queue depth bounded by capacity, got {depth}");
-    let drain = coord.shutdown();
+    let drain = backend.shutdown().expect("first shutdown");
     assert!(drain.is_clean(), "{drain}");
 }

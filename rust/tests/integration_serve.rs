@@ -7,7 +7,7 @@
 use hrfna::config::HrfnaConfig;
 use hrfna::coordinator::batcher::BatchPolicy;
 use hrfna::coordinator::{
-    ContextRegistry, Coordinator, CoordinatorConfig, ExecMode, JobKind, Payload, Tier,
+    ContextRegistry, Coordinator, CoordinatorConfig, ExecMode, JobKind, JobSpec, Payload, Tier,
 };
 use hrfna::hybrid::HrfnaContext;
 use hrfna::runtime::EngineHandle;
@@ -49,7 +49,7 @@ fn serves_correct_dot_products_both_lanes() {
             let x = Dist::moderate().sample_vec(&mut rng, n);
             let y = Dist::moderate().sample_vec(&mut rng, n);
             let truth: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
-            let r = coord.call(kind, Payload::Dot { x, y }).unwrap();
+            let r = coord.call(JobSpec::new(kind, Payload::Dot { x, y })).unwrap();
             let tol = match kind {
                 JobKind::DotHybrid => 1e-6 * truth.abs().max(1.0),
                 _ => 1e-3 * truth.abs().max(1.0),
@@ -81,9 +81,7 @@ fn scalar_and_planar_paths_agree() {
     let mut got = Vec::new();
     for exec in [ExecMode::Scalar, ExecMode::Planar] {
         let coord = coordinator_with(exec);
-        let r = coord
-            .call(JobKind::DotHybrid, Payload::Dot { x: x.clone(), y: y.clone() })
-            .unwrap();
+        let r = coord.call(JobSpec::dot(x.clone(), y.clone())).unwrap();
         got.push(r.values[0]);
         assert!(coord.shutdown().is_clean());
     }
@@ -101,14 +99,7 @@ fn serves_correct_matmul_hybrid() {
     let a = Dist::moderate().sample_vec(&mut rng, dim * dim);
     let b = Dist::moderate().sample_vec(&mut rng, dim * dim);
     let r = coord
-        .call(
-            JobKind::MatmulHybrid,
-            Payload::Matmul {
-                a: a.clone(),
-                b: b.clone(),
-                dim,
-            },
-        )
+        .call(JobSpec::matmul(a.clone(), b.clone(), dim))
         .unwrap();
     assert_eq!(r.values.len(), dim * dim);
     // Spot-check a few elements against f64.
@@ -139,14 +130,7 @@ fn serves_rk4_matching_scalar_reference() {
     let (mu, dt, steps) = (1.0, 0.01, 120u64);
     for _ in 0..6 {
         let y0 = vec![rng.uniform(-1.5, 1.5), rng.uniform(-1.5, 1.5)];
-        pending.push(
-            coord
-                .submit(
-                    JobKind::Rk4Hybrid,
-                    Payload::Rk4 { y0: y0.clone(), mu, dt, steps },
-                )
-                .unwrap(),
-        );
+        pending.push(coord.submit(JobSpec::rk4(y0.clone(), mu, dt, steps)).unwrap());
         y0s.push(y0);
     }
     for (rx, y0) in pending.into_iter().zip(&y0s) {
@@ -185,7 +169,7 @@ fn concurrent_mixed_load_all_complete() {
                 } else {
                     JobKind::DotF32
                 };
-                let r = coord.call(kind, Payload::Dot { x, y }).unwrap();
+                let r = coord.call(JobSpec::new(kind, Payload::Dot { x, y })).unwrap();
                 assert!(
                     (r.values[0] - truth).abs() < 1e-3 * truth.abs().max(1.0),
                     "thread {t} job {i}"
@@ -205,41 +189,19 @@ fn admission_rejects_invalid_jobs() {
     let coord = coordinator();
     // Oversize dot.
     assert!(coord
-        .submit(
-            JobKind::DotHybrid,
-            Payload::Dot {
-                x: vec![0.0; 100_000],
-                y: vec![0.0; 100_000],
-            },
-        )
+        .submit(JobSpec::dot(vec![0.0; 100_000], vec![0.0; 100_000]))
         .is_err());
     // NaN operand.
     assert!(coord
-        .submit(
-            JobKind::DotF32,
-            Payload::Dot {
-                x: vec![f64::NAN; 4],
-                y: vec![1.0; 4],
-            },
-        )
+        .submit(JobSpec::dot_f32(vec![f64::NAN; 4], vec![1.0; 4]))
         .is_err());
     // Wrong matmul dim.
     assert!(coord
-        .submit(
-            JobKind::MatmulHybrid,
-            Payload::Matmul {
-                a: vec![0.0; 9],
-                b: vec![0.0; 9],
-                dim: 3,
-            },
-        )
+        .submit(JobSpec::matmul(vec![0.0; 9], vec![0.0; 9], 3))
         .is_err());
     // RK4 over the step cap.
     assert!(coord
-        .submit(
-            JobKind::Rk4Hybrid,
-            Payload::Rk4 { y0: vec![1.0, 0.0], mu: 1.0, dt: 0.01, steps: u64::MAX },
-        )
+        .submit(JobSpec::rk4(vec![1.0, 0.0], 1.0, 0.01, u64::MAX))
         .is_err());
     assert!(coord.metrics.total_rejected() >= 4);
     let drain = coord.shutdown();
@@ -254,7 +216,7 @@ fn batching_coalesces_bursts() {
     for _ in 0..16 {
         let x = Dist::moderate().sample_vec(&mut rng, 256);
         let y = Dist::moderate().sample_vec(&mut rng, 256);
-        rxs.push(coord.submit(JobKind::DotF32, Payload::Dot { x, y }).unwrap());
+        rxs.push(coord.submit(JobSpec::dot_f32(x, y)).unwrap());
     }
     let mut max_batch = 0;
     for rx in rxs {

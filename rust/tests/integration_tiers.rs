@@ -7,8 +7,7 @@ use hrfna::config::HrfnaConfig;
 use hrfna::coordinator::batcher::BatchPolicy;
 use hrfna::coordinator::hybrid_exec::{encode_dot_batch, planar_dot_results};
 use hrfna::coordinator::{
-    ContextRegistry, Coordinator, CoordinatorConfig, ExecMode, JobKind, JobSpec, Payload,
-    SubmitError, Tier,
+    ContextRegistry, Coordinator, CoordinatorConfig, Error, ExecMode, JobKind, JobSpec, Tier,
 };
 use hrfna::hybrid::registry::{tier_rel_bound, MagnitudeEnvelope};
 use hrfna::hybrid::{Hrfna, HrfnaContext};
@@ -63,7 +62,7 @@ fn mixed_tier_traffic_serves_correctly_with_per_tier_rows() {
                 let scale: f64 = x.iter().zip(&y).map(|(a, b)| (a * b).abs()).sum();
                 let env = MagnitudeEnvelope::of_slices(&[&x, &y], n as u64, 0);
                 let r = coord
-                    .call_spec(JobSpec::new(JobKind::DotHybrid, Payload::Dot { x, y }).with_tier(tier))
+                    .call(JobSpec::dot(x, y).tier(tier))
                     .expect("tiered dot");
                 assert_eq!(r.tier, tier, "moderate dot must run on its requested tier");
                 let budget = tier_rel_bound(coord.registry().cfg(tier), &env);
@@ -105,11 +104,7 @@ fn tolerance_and_envelope_escalation_fire_and_are_counted() {
     let y = Dist::moderate().sample_vec(&mut rng, 512);
     // A 1e-7 tolerance is below lo's √n·2^-17 budget and inside paper's.
     let r = coord
-        .call_spec(
-            JobSpec::new(JobKind::DotHybrid, Payload::Dot { x: x.clone(), y: y.clone() })
-                .with_tier(Tier::Lo)
-                .with_tolerance(1e-7),
-        )
+        .call(JobSpec::dot(x.clone(), y.clone()).tier(Tier::Lo).tolerance(1e-7))
         .expect("escalated dot");
     assert_eq!(r.tier, Tier::Paper);
     let want: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
@@ -118,25 +113,16 @@ fn tolerance_and_envelope_escalation_fire_and_are_counted() {
     // Subnormal-scale magnitudes overflow lo's ω=12 exponent range.
     let tiny = vec![f64::MIN_POSITIVE; 64];
     let r = coord
-        .call_spec(
-            JobSpec::new(
-                JobKind::DotHybrid,
-                Payload::Dot { x: tiny.clone(), y: tiny },
-            )
-            .with_tier(Tier::Lo),
-        )
+        .call(JobSpec::dot(tiny.clone(), tiny).tier(Tier::Lo))
         .expect("envelope-escalated dot");
     assert!(r.tier > Tier::Lo, "exponent-range overflow must leave lo");
     assert!(coord.metrics.total_escalations() >= 2);
     // A tolerance not even wide's bound covers is REJECTED with a typed
     // error, never silently served outside its stated tolerance.
     let err = coord
-        .submit_spec(
-            JobSpec::new(JobKind::DotHybrid, Payload::Dot { x: x.clone(), y: y.clone() })
-                .with_tolerance(1e-30),
-        )
+        .submit(JobSpec::dot(x.clone(), y.clone()).tolerance(1e-30))
         .expect_err("uncoverable tolerance must be rejected");
-    assert!(matches!(err, SubmitError::Rejected(_)), "{err}");
+    assert!(matches!(err, Error::Rejected(_)), "{err}");
     assert!(err.to_string().contains("formal bound"), "{err}");
     // Escalations land in the table's `esc` column.
     let table = coord.metrics_table().render();
@@ -176,7 +162,7 @@ fn paper_tier_bit_identical_to_pre_refactor_single_context_path() {
         );
         for (x, y) in &jobs {
             let r = coord
-                .call(JobKind::DotHybrid, Payload::Dot { x: x.clone(), y: y.clone() })
+                .call(JobSpec::dot(x.clone(), y.clone()))
                 .expect("paper dot");
             assert_eq!(r.tier, Tier::Paper);
             let want = match exec {
@@ -212,13 +198,7 @@ fn rk4_tier_results_match_the_tier_context_scalar_reference() {
     for tier in [Tier::Lo, Tier::Wide] {
         let y0 = vec![1.5, -0.5];
         let r = coord
-            .call_spec(
-                JobSpec::new(
-                    JobKind::Rk4Hybrid,
-                    Payload::Rk4 { y0: y0.clone(), mu, dt, steps },
-                )
-                .with_tier(tier),
-            )
+            .call(JobSpec::rk4(y0.clone(), mu, dt, steps).tier(tier))
             .expect("tiered rk4");
         assert_eq!(r.tier, tier);
         // The planar batch mirrors the scalar ops exactly under the same
@@ -266,14 +246,10 @@ fn two_tier_concurrent_flood_sheds_per_lane_and_drains_clean() {
                 let mut accepted = Vec::new();
                 let mut overloaded = 0usize;
                 for _ in 0..25 {
-                    let spec = JobSpec::new(
-                        JobKind::DotHybrid,
-                        Payload::Dot { x: x.clone(), y: y.clone() },
-                    )
-                    .with_tier(tier);
-                    match coord.submit_spec(spec) {
+                    let spec = JobSpec::dot(x.clone(), y.clone()).tier(tier);
+                    match coord.submit(spec) {
                         Ok(rx) => accepted.push(rx),
-                        Err(SubmitError::Overloaded { tier: t, capacity, .. }) => {
+                        Err(Error::Overloaded { tier: t, capacity, .. }) => {
                             assert_eq!(t, tier, "overload names the flooded tier");
                             assert!(capacity > 0);
                             overloaded += 1;
