@@ -23,12 +23,16 @@
 //!   to the next candidate. Jobs here are pure computations, so
 //!   at-least-once redelivery is safe (a kill may execute a job twice;
 //!   it can never corrupt state). The monitor thread keeps probing and
-//!   reconnects the shard when it returns.
+//!   reconnects the shard when it returns; reconnection bumps a
+//!   per-link connection **generation**, and routes submitted on an
+//!   older generation fail over too — wire ids are per-connection, so
+//!   polling a stale id on the new connection could hang forever or
+//!   steal another job's response.
 //! * **Drain on membership change** — [`ShardRouter::remove_worker`]
 //!   fences the shard out of the ring, asks it to drain (its in-flight
 //!   results are still delivered over the open connection), and reports
-//!   the handoff as a [`DrainReport`] — the same clean-drain contract
-//!   the in-process coordinator shuts down with.
+//!   the handoff as a [`DrainReport`] snapshot taken at fencing time
+//!   (see its doc for the exact field semantics).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -90,6 +94,14 @@ impl Default for RouterConfig {
 struct WorkerLink {
     spec: WorkerSpec,
     conn: Mutex<Option<RpcClient>>,
+    /// Bumped (under the `conn` lock) every time a new connection is
+    /// installed. Wire ids are per-connection — `RpcClient` restarts
+    /// its id counter at 1 — so a route records the generation it
+    /// submitted on, and a mismatch at poll time means the id is
+    /// meaningless on the current connection: polling with it would
+    /// either hang forever or collide with a fresh submission's id and
+    /// steal its response.
+    generation: AtomicU64,
     health: HealthGauge,
     /// Fenced out by `remove_worker`: the monitor stops reconnecting it
     /// and placement never offers it jobs.
@@ -99,11 +111,21 @@ struct WorkerLink {
     errored: AtomicU64,
 }
 
+/// Why a response probe could not be answered from the link.
+enum RouteLoss {
+    /// The link reconnected since the job was submitted; the old wire
+    /// id must not be polled on the new connection.
+    Stale,
+    /// No connection (down, or it died on this very probe).
+    Lost,
+}
+
 impl WorkerLink {
     fn new(spec: WorkerSpec) -> WorkerLink {
         WorkerLink {
             spec,
             conn: Mutex::new(None),
+            generation: AtomicU64::new(0),
             health: HealthGauge::default(),
             retired: AtomicBool::new(false),
             forwarded: AtomicU64::new(0),
@@ -117,14 +139,24 @@ impl WorkerLink {
     }
 
     /// Ensure a live connection; true when one exists after the call.
+    ///
+    /// Dials with the lock **released**: the `conn` mutex is only ever
+    /// held for short I/O (a frame write, a 1 ms poll, a health round
+    /// trip), never across `connect_retry`'s sleep-and-redial loop —
+    /// so submission and polling never stall behind a reconnect to a
+    /// dead worker. Only `start` and the monitor thread dial, so there
+    /// is no concurrent-dial race to arbitrate.
     fn connect(&self, wait: Duration) -> bool {
-        let mut conn = self.conn.lock().expect("link conn lock");
-        if conn.is_some() {
+        if self.conn.lock().expect("link conn lock").is_some() {
             return true;
         }
         match RpcClient::connect_retry(&self.spec.addr, wait) {
             Ok(c) => {
-                *conn = Some(c);
+                let mut conn = self.conn.lock().expect("link conn lock");
+                if conn.is_none() {
+                    *conn = Some(c);
+                    self.generation.fetch_add(1, Ordering::SeqCst);
+                }
                 true
             }
             Err(_) => {
@@ -134,20 +166,24 @@ impl WorkerLink {
         }
     }
 
-    /// Drop the connection and mark the shard Down.
+    /// Drop the connection and mark the shard Down (what a transport
+    /// error does inline; split out so tests can force the state).
+    #[cfg(test)]
     fn disconnect(&self) {
         *self.conn.lock().expect("link conn lock") = None;
         self.health.record_disconnect();
     }
 
-    /// Fire one submission; the wire id correlates the response.
-    fn submit(&self, spec: &JobSpec) -> Result<u64, ()> {
+    /// Fire one submission; returns the wire id **and** the connection
+    /// generation it was sent on — the pair a later poll needs to
+    /// correlate the response safely across reconnects.
+    fn submit(&self, spec: &JobSpec) -> Result<(u64, u64), ()> {
         let mut conn = self.conn.lock().expect("link conn lock");
         let Some(client) = conn.as_mut() else { return Err(()) };
         match client.submit_spec(spec) {
             Ok(id) => {
                 self.forwarded.fetch_add(1, Ordering::Relaxed);
-                Ok(id)
+                Ok((id, self.generation.load(Ordering::SeqCst)))
             }
             Err(_) => {
                 *conn = None;
@@ -157,16 +193,26 @@ impl WorkerLink {
         }
     }
 
-    /// Non-blocking response probe for one wire id.
-    fn try_take(&self, wire_id: u64) -> Result<Option<crate::coordinator::rpc::Response>, ()> {
+    /// Non-blocking response probe for one wire id, valid only on the
+    /// connection generation it was submitted on.
+    fn try_take(
+        &self,
+        wire_id: u64,
+        gen: u64,
+    ) -> Result<Option<crate::coordinator::rpc::Response>, RouteLoss> {
         let mut conn = self.conn.lock().expect("link conn lock");
-        let Some(client) = conn.as_mut() else { return Err(()) };
+        // Checked under the lock (the generation only changes under it):
+        // a bump means the connection the job went out on is gone.
+        if self.generation.load(Ordering::SeqCst) != gen {
+            return Err(RouteLoss::Stale);
+        }
+        let Some(client) = conn.as_mut() else { return Err(RouteLoss::Lost) };
         match client.try_take(wire_id) {
             Ok(r) => Ok(r),
             Err(_) => {
                 *conn = None;
                 self.health.record_disconnect();
-                Err(())
+                Err(RouteLoss::Lost)
             }
         }
     }
@@ -206,6 +252,9 @@ struct RouteState {
     key: u64,
     link: usize,
     wire_id: u64,
+    /// The link's connection generation at submit time; a mismatch at
+    /// poll time means `wire_id` is stale and the job must fail over.
+    gen: u64,
     /// Links already offered this job (failover never re-offers).
     tried: Vec<usize>,
 }
@@ -244,7 +293,11 @@ pub struct ShardRouter {
     routes: Mutex<HashMap<u64, RouteState>>,
     next_ticket: AtomicU64,
     accepted: AtomicU64,
+    /// Jobs delivered with a successful result.
     completed: AtomicU64,
+    /// Jobs delivered with a terminal error (worker error passed
+    /// through, or failover exhausted every candidate).
+    failed: AtomicU64,
     rejected: AtomicU64,
     dropped: AtomicU64,
     shutting_down: AtomicBool,
@@ -319,6 +372,7 @@ impl ShardRouter {
             next_ticket: AtomicU64::new(1),
             accepted: AtomicU64::new(0),
             completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             dropped: AtomicU64::new(0),
             shutting_down: AtomicBool::new(false),
@@ -343,8 +397,19 @@ impl ShardRouter {
     }
 
     /// Offer `spec` to candidates in failover order, recording each
-    /// attempt in `tried`. Returns the accepting (link index, wire id).
-    fn place(&self, key: u64, spec: &JobSpec, tried: &mut Vec<usize>) -> Result<(usize, u64), Error> {
+    /// attempt in `tried`. Returns the accepting (link index, wire id,
+    /// connection generation).
+    ///
+    /// Placement never dials: a candidate with no live connection fails
+    /// the `submit` fast and is skipped — the monitor owns reconnection
+    /// — so `place` (and therefore `poll`, whose failover path lands
+    /// here) stays non-blocking even with a dead shard in the ring.
+    fn place(
+        &self,
+        key: u64,
+        spec: &JobSpec,
+        tried: &mut Vec<usize>,
+    ) -> Result<(usize, u64, u64), Error> {
         let candidates: Vec<usize> = {
             let placement = self.placement.read().expect("placement lock");
             placement.ring.candidates(key).iter().map(|&w| placement.link_of[w]).collect()
@@ -357,14 +422,8 @@ impl ShardRouter {
         );
         for i in order {
             tried.push(i);
-            // A Down-but-back shard may be reconnectable right now; give
-            // it one quick chance before skipping (the monitor will do
-            // the patient retrying).
-            if !self.links[i].connect(Duration::from_millis(50)) {
-                continue;
-            }
-            if let Ok(wire_id) = self.links[i].submit(spec) {
-                return Ok((i, wire_id));
+            if let Ok((wire_id, gen)) = self.links[i].submit(spec) {
+                return Ok((i, wire_id, gen));
             }
         }
         Err(Error::Unavailable("no routable worker for this lane".into()))
@@ -378,14 +437,15 @@ impl ShardRouter {
             return JobPoll::Ready(Err(Error::Internal("unknown ticket".into())));
         };
         match self.place(state.key, &state.spec, &mut state.tried) {
-            Ok((link, wire_id)) => {
+            Ok((link, wire_id, gen)) => {
                 state.link = link;
                 state.wire_id = wire_id;
+                state.gen = gen;
                 self.routes.lock().expect("routes lock").insert(ticket_id, state);
                 JobPoll::Pending
             }
             Err(_) => {
-                self.completed.fetch_add(1, Ordering::Relaxed);
+                self.failed.fetch_add(1, Ordering::Relaxed);
                 JobPoll::Ready(Err(on_exhausted))
             }
         }
@@ -395,6 +455,17 @@ impl ShardRouter {
     /// handoff. In-flight jobs on the shard finish over the still-open
     /// connection (the worker's drain semantics); new jobs go to the
     /// survivors the rebuilt ring picks.
+    ///
+    /// The returned report is a **fencing-time snapshot of the
+    /// handoff**, not a completed drain (routes only resolve when their
+    /// owners poll, so waiting here could deadlock a single-threaded
+    /// caller): `drained` counts the jobs still in flight on the shard
+    /// at that moment — each either delivers over the still-open
+    /// connection or is resubmitted to a survivor on its owner's next
+    /// poll, which is why `dropped` is 0 by construction. `rejected` is
+    /// the shard's lifetime count of error answers (overload shedding
+    /// plus terminal errors). Final delivered/dropped accounting lands
+    /// in the router-wide [`shutdown`](Backend::shutdown) report.
     pub fn remove_worker(&self, id: &str) -> Result<DrainReport, Error> {
         let mut membership = self.membership.lock().expect("membership lock");
         let removed = membership
@@ -474,7 +545,7 @@ impl Backend for ShardRouter {
             e
         })?;
         let mut tried = Vec::new();
-        let (link, wire_id) = self.place(key, &spec, &mut tried).map_err(|e| {
+        let (link, wire_id, gen) = self.place(key, &spec, &mut tried).map_err(|e| {
             self.rejected.fetch_add(1, Ordering::Relaxed);
             e
         })?;
@@ -482,7 +553,7 @@ impl Backend for ShardRouter {
         self.routes
             .lock()
             .expect("routes lock")
-            .insert(id, RouteState { spec, key, link, wire_id, tried });
+            .insert(id, RouteState { spec, key, link, wire_id, gen, tried });
         self.accepted.fetch_add(1, Ordering::Relaxed);
         Ok(JobTicket { id })
     }
@@ -490,24 +561,29 @@ impl Backend for ShardRouter {
     fn poll(&self, ticket: &JobTicket) -> JobPoll {
         let located = {
             let routes = self.routes.lock().expect("routes lock");
-            routes.get(&ticket.id).map(|s| (s.link, s.wire_id))
+            routes.get(&ticket.id).map(|s| (s.link, s.wire_id, s.gen))
         };
-        let Some((link_idx, wire_id)) = located else {
+        let Some((link_idx, wire_id, gen)) = located else {
             return JobPoll::Ready(Err(Error::Internal("unknown ticket".into())));
         };
         let link = &self.links[link_idx];
-        match link.try_take(wire_id) {
+        match link.try_take(wire_id, gen) {
             Ok(None) => JobPoll::Pending,
             Ok(Some(resp)) => match resp.body {
                 ResponseBody::Result(v) => {
                     self.routes.lock().expect("routes lock").remove(&ticket.id);
-                    self.completed.fetch_add(1, Ordering::Relaxed);
                     link.completed.fetch_add(1, Ordering::Relaxed);
                     match result_from_json(&v) {
-                        Ok(r) => JobPoll::Ready(Ok(r)),
-                        Err(e) => JobPoll::Ready(Err(Error::Internal(format!(
-                            "undecodable worker result: {e}"
-                        )))),
+                        Ok(r) => {
+                            self.completed.fetch_add(1, Ordering::Relaxed);
+                            JobPoll::Ready(Ok(r))
+                        }
+                        Err(e) => {
+                            self.failed.fetch_add(1, Ordering::Relaxed);
+                            JobPoll::Ready(Err(Error::Internal(format!(
+                                "undecodable worker result: {e}"
+                            ))))
+                        }
                     }
                 }
                 ResponseBody::Error(e) => {
@@ -523,16 +599,28 @@ impl Backend for ShardRouter {
                         Error::ShuttingDown | Error::Unavailable(_) => self.failover(ticket.id, e),
                         _ => {
                             self.routes.lock().expect("routes lock").remove(&ticket.id);
-                            self.completed.fetch_add(1, Ordering::Relaxed);
+                            self.failed.fetch_add(1, Ordering::Relaxed);
                             JobPoll::Ready(Err(e))
                         }
                     }
                 }
             },
+            // The link reconnected since this job was submitted: the
+            // wire id is meaningless on the new connection (ids restart
+            // per connection), so the job's fate is unknown — exactly
+            // like transport loss. Resubmit rather than poll a stale id
+            // that could steal a fresh submission's response.
+            Err(RouteLoss::Stale) => self.failover(
+                ticket.id,
+                Error::Unavailable(format!(
+                    "connection to worker {} was replaced mid-job",
+                    link.spec.id
+                )),
+            ),
             // Transport loss: the job's fate on that shard is unknown;
             // resubmit to the next candidate (pure computation ⇒
             // at-least-once is safe).
-            Err(()) => self.failover(
+            Err(RouteLoss::Lost) => self.failover(
                 ticket.id,
                 Error::Unavailable(format!("worker {} lost mid-job", link.spec.id)),
             ),
@@ -547,11 +635,12 @@ impl Backend for ShardRouter {
 
     fn metrics_text(&self) -> String {
         let mut out = format!(
-            "shard-router: {} workers, {} up | accepted {} completed {} rejected {} dropped {}\n",
+            "shard-router: {} workers, {} up | accepted {} completed {} failed {} rejected {} dropped {}\n",
             self.links.len(),
             self.up_count(),
             self.accepted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
+            self.failed.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
             self.dropped.load(Ordering::Relaxed),
         );
@@ -613,7 +702,12 @@ impl Backend for ShardRouter {
         }
         Ok(DrainReport {
             accepted: self.accepted.load(Ordering::Relaxed),
-            completed: self.completed.load(Ordering::Relaxed),
+            // `DrainReport::completed` counts delivered outcomes
+            // *including error results*; the router splits successes
+            // (`completed`) from terminal errors (`failed`) internally
+            // — `metrics_text` shows both.
+            completed: self.completed.load(Ordering::Relaxed)
+                + self.failed.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
             drained: 0,
             dropped: self.dropped.load(Ordering::Relaxed),
@@ -637,6 +731,40 @@ mod tests {
         // Everything tried: empty.
         let order = failover_order(&candidates, &[0, 1, 2, 3], |_| true, |_| false);
         assert!(order.is_empty());
+    }
+
+    #[test]
+    fn reconnect_bumps_generation_and_stales_old_wire_ids() {
+        // A listener whose backlog accepts connections but never answers
+        // — enough to exercise submit/poll framing without a server.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind test listener");
+        let link = WorkerLink::new(WorkerSpec {
+            id: "w0".into(),
+            addr: listener.local_addr().expect("listener addr").to_string(),
+        });
+        assert!(link.connect(Duration::from_millis(500)), "first dial");
+        let spec = JobSpec::dot(vec![1.0; 4], vec![2.0; 4]);
+        let (id, gen) = link.submit(&spec).expect("submit on live conn");
+
+        // Silent wire: the probe is Pending, not an error.
+        assert!(matches!(link.try_take(id, gen), Ok(None)));
+
+        // Connection lost, then rebuilt (what the monitor does after a
+        // worker restart): the old (id, gen) pair must read as Stale —
+        // never as Pending on the new connection, where the restarted
+        // id counter would eventually collide with it.
+        link.disconnect();
+        assert!(matches!(link.try_take(id, gen), Err(RouteLoss::Lost)));
+        assert!(link.connect(Duration::from_millis(500)), "re-dial");
+        assert!(matches!(link.try_take(id, gen), Err(RouteLoss::Stale)));
+
+        // A fresh submit on the new connection reuses the same wire id
+        // (per-connection counter) under a new generation, and polls
+        // cleanly.
+        let (id2, gen2) = link.submit(&spec).expect("submit on new conn");
+        assert_eq!(id2, id, "wire ids restart per connection");
+        assert_ne!(gen2, gen, "generation must move on reconnect");
+        assert!(matches!(link.try_take(id2, gen2), Ok(None)));
     }
 
     #[test]

@@ -61,35 +61,39 @@ pub fn error_to_json(e: &Error) -> Json {
 
 /// Inverse of [`error_to_json`]. Unknown codes are decode errors (a
 /// client must not misfile an error contract it does not know).
-/// `Overloaded` rebuilds its typed fields from `data`; the other
-/// variants recover their payload by stripping the Display prefix off
-/// the message ([`Error::from_wire`]).
+/// `Overloaded` rebuilds its typed fields from `data`, which is
+/// **mandatory** for code -32002 (a missing object is a decode error,
+/// never a zeroed placeholder); the other variants recover their
+/// payload by stripping the Display prefix off the message
+/// ([`Error::from_wire`]).
 pub fn error_from_json(v: &Json) -> Result<Error, String> {
     let code = v.get("code").and_then(Json::as_i64).ok_or("error without code")?;
     let message = v.get("message").and_then(Json::as_str).unwrap_or_default();
     let base = Error::from_wire(code, message).ok_or_else(|| format!("unknown error code {code}"))?;
     if let Error::Overloaded { .. } = base {
-        if let Some(data) = v.get("data") {
-            let kind = data
-                .get("kind")
-                .and_then(Json::as_str)
-                .and_then(JobKind::from_label)
-                .ok_or("overloaded data without kind")?;
-            let tier = data
-                .get("tier")
-                .and_then(Json::as_str)
-                .and_then(Tier::from_label)
-                .ok_or("overloaded data without tier")?;
-            let queued = data
-                .get("queued")
-                .and_then(Json::as_u64)
-                .ok_or("overloaded data without queued")? as usize;
-            let capacity = data
-                .get("capacity")
-                .and_then(Json::as_u64)
-                .ok_or("overloaded data without capacity")? as usize;
-            return Ok(Error::Overloaded { kind, tier, queued, capacity });
-        }
+        // `data` is mandatory for -32002: without it the queue-state
+        // fields could only be invented, and a router hop would forward
+        // the fabrication as fact.
+        let data = v.get("data").ok_or("overloaded error without data")?;
+        let kind = data
+            .get("kind")
+            .and_then(Json::as_str)
+            .and_then(JobKind::from_label)
+            .ok_or("overloaded data without kind")?;
+        let tier = data
+            .get("tier")
+            .and_then(Json::as_str)
+            .and_then(Tier::from_label)
+            .ok_or("overloaded data without tier")?;
+        let queued = data
+            .get("queued")
+            .and_then(Json::as_u64)
+            .ok_or("overloaded data without queued")? as usize;
+        let capacity = data
+            .get("capacity")
+            .and_then(Json::as_u64)
+            .ok_or("overloaded data without capacity")? as usize;
+        return Ok(Error::Overloaded { kind, tier, queued, capacity });
     }
     Ok(base)
 }
@@ -397,6 +401,16 @@ mod tests {
             // Router hop: re-encoding the decoded error is byte-identical.
             assert_eq!(error_to_json(&back).encode(), text, "re-encode drifted");
         }
+    }
+
+    #[test]
+    fn overloaded_without_data_is_a_decode_error_not_a_placeholder() {
+        let bad = "{\"code\":-32002,\"message\":\"lane overloaded\"}";
+        let err = error_from_json(&Json::parse(bad).unwrap()).unwrap_err();
+        assert!(err.contains("without data"), "{err}");
+        // Codes whose variants carry no structured data still decode.
+        let ok = "{\"code\":-32003,\"message\":\"server is shutting down\"}";
+        assert_eq!(error_from_json(&Json::parse(ok).unwrap()), Ok(Error::ShuttingDown));
     }
 
     #[test]
