@@ -1,0 +1,242 @@
+//! Authenticated-serving overhead benchmark: MAC-verified dot, verified
+//! FIR and Freivalds-checked matmul jobs/sec through the full coordinator
+//! vs the same traffic unauthenticated, closed-loop at batch ≥ 8 over the
+//! [`Backend`] seam ([`InProcess`]). Writes `BENCH_auth.json`; the CI gate
+//! (`tools/bench_gate.rs`) holds the machine-independent overhead ratios
+//! within tolerance — the headline `serve_auth_overhead_ratio` baseline is
+//! set so the gate caps authenticated dot serving at ≤ 1.35× the
+//! unauthenticated per-job cost (asserted outright in full mode too).
+//!
+//! Quick mode for CI: `BENCH_QUICK=1 cargo bench --bench bench_auth`
+//! (or `--quick`).
+
+mod common;
+
+use hrfna::coordinator::batcher::BatchPolicy;
+use hrfna::coordinator::router::ShapeBuckets;
+use hrfna::coordinator::{
+    closed_loop, Backend, ContextRegistry, Coordinator, CoordinatorConfig, ExecMode, InProcess,
+    JobSpec, Tier,
+};
+use hrfna::hybrid::auth::values_checksum;
+use hrfna::util::bench::{write_json, BenchRecord};
+use hrfna::util::cli::Args;
+use hrfna::util::prng::Rng;
+use hrfna::workloads::fir::lowpass_taps;
+use hrfna::workloads::generators::Dist;
+use std::sync::Arc;
+use std::time::Duration;
+
+const DOT_N: usize = 4096;
+const MATMUL_DIM: usize = 64;
+const FIR_N: usize = 256;
+const FIR_TAPS: usize = 16;
+const CLIENTS: usize = 4;
+const BURST: usize = 16;
+
+/// The authenticated-serving overhead cap the CI gate enforces (the
+/// committed `serve_auth_overhead_ratio` baseline × the 20% tolerance
+/// lands exactly here; full mode asserts it outright as well).
+const AUTH_OVERHEAD_CAP: f64 = 1.35;
+
+fn backend() -> InProcess {
+    let engine = hrfna::runtime::EngineHandle::spawn(None).expect("engine");
+    InProcess::new(Coordinator::start(
+        engine,
+        Arc::new(ContextRegistry::new()),
+        CoordinatorConfig {
+            workers_per_lane: 2,
+            batch: BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_micros(500),
+                capacity: 4096,
+            },
+            buckets: ShapeBuckets { tiers: vec![Tier::Paper], ..ShapeBuckets::default() },
+            exec: ExecMode::Planar,
+        },
+    ))
+}
+
+/// One closed-loop A/B leg: fresh backend, warmup (with the check-field
+/// contract asserted), measured run, clean-drain. Returns jobs/sec and
+/// pushes the absolute record.
+fn run_leg(
+    records: &mut Vec<BenchRecord>,
+    name: &str,
+    label: &str,
+    jobs_per_client: usize,
+    burst: usize,
+    authed: bool,
+    make: &(dyn Fn(u64, usize) -> JobSpec + Sync),
+) -> f64 {
+    let be = backend();
+    for _ in 0..4 {
+        let r = be.call(make(0, 0)).expect("warmup job");
+        if authed {
+            assert_eq!(
+                r.check,
+                Some(values_checksum(&r.values)),
+                "{label}: authenticated results must carry the values checksum"
+            );
+        } else {
+            assert_eq!(r.check, None, "{label}: plain results carry no checksum");
+        }
+    }
+    let report = closed_loop(&be, CLIENTS, jobs_per_client, burst, make);
+    assert_eq!(report.accepted, report.offered, "{label}: capacity too small");
+    assert_eq!(report.completed, report.accepted, "{label}: lost jobs");
+    assert_eq!(
+        be.integrity_detections(),
+        0,
+        "{label}: a clean run must record zero integrity detections"
+    );
+    let lat = report.latency_us.as_ref().expect("latencies");
+    println!(
+        "{label}: {:.0} jobs/s  (p50 {:.0} us, p99 {:.0} us)",
+        report.jobs_per_s, lat.p50, lat.p99
+    );
+    let drain = be.shutdown().expect("shutdown");
+    assert!(drain.is_clean(), "{label}: unclean drain: {drain}");
+    records.push(BenchRecord {
+        name: name.to_string(),
+        n: report.completed as u64,
+        ns_per_op: report.wall.as_nanos() as f64 / report.completed.max(1) as f64,
+        throughput_per_s: report.jobs_per_s,
+    });
+    report.jobs_per_s
+}
+
+/// Machine-independent same-run ratio record: authenticated per-job cost
+/// over unauthenticated (`ns_per_op` = overhead, lower is better;
+/// `throughput_per_s` = fraction of plain throughput retained).
+fn ratio_record(name: &str, unauth_jps: f64, auth_jps: f64) -> (BenchRecord, f64) {
+    let overhead = unauth_jps / auth_jps.max(1e-9);
+    let rec = BenchRecord {
+        name: name.to_string(),
+        n: 1,
+        ns_per_op: overhead,
+        throughput_per_s: 1.0 / overhead.max(1e-9),
+    };
+    (rec, overhead)
+}
+
+fn main() {
+    common::banner("§Auth", "authenticated (MAC/Freivalds) vs plain serving cost");
+    let args = Args::from_env();
+    let quick = args.flag("quick") || std::env::var("BENCH_QUICK").is_ok();
+
+    let mut rng = Rng::new(2027);
+    let dot_pool: Vec<(Vec<f64>, Vec<f64>)> = (0..16)
+        .map(|_| {
+            (
+                Dist::moderate().sample_vec(&mut rng, DOT_N),
+                Dist::moderate().sample_vec(&mut rng, DOT_N),
+            )
+        })
+        .collect();
+    let mm_pool: Vec<(Vec<f64>, Vec<f64>)> = (0..8)
+        .map(|_| {
+            (
+                Dist::moderate().sample_vec(&mut rng, MATMUL_DIM * MATMUL_DIM),
+                Dist::moderate().sample_vec(&mut rng, MATMUL_DIM * MATMUL_DIM),
+            )
+        })
+        .collect();
+    let taps = lowpass_taps(FIR_TAPS, 0.2);
+    let fir_pool: Vec<Vec<f64>> = (0..8)
+        .map(|_| Dist::moderate().sample_vec(&mut rng, FIR_N))
+        .collect();
+
+    let mut records: Vec<BenchRecord> = Vec::new();
+
+    // Dot A/B — the headline overhead: MAC-lane batch authentication +
+    // dual-MAC verified window dot + wire checksum vs the plain planar
+    // path on identical operands.
+    let dot_jobs = if quick { 64 } else { 256 };
+    let make_dot = |c: u64, i: usize| -> JobSpec {
+        let (x, y) = &dot_pool[(c as usize * 7 + i) % dot_pool.len()];
+        JobSpec::dot(x.clone(), y.clone())
+    };
+    let make_dot_auth = |c: u64, i: usize| -> JobSpec { make_dot(c, i).authenticated() };
+    let plain_jps = run_leg(
+        &mut records,
+        "serve_dot_unauth_jobs",
+        &format!("dot n={DOT_N} plain"),
+        dot_jobs,
+        BURST,
+        false,
+        &make_dot,
+    );
+    let auth_jps = run_leg(
+        &mut records,
+        "serve_dot_auth_jobs",
+        &format!("dot n={DOT_N} auth "),
+        dot_jobs,
+        BURST,
+        true,
+        &make_dot_auth,
+    );
+    let (rec, overhead) = ratio_record("serve_auth_overhead_ratio", plain_jps, auth_jps);
+    records.push(rec);
+    println!("-> authenticated dot serving overhead: {overhead:.2}x plain cost");
+    if !quick {
+        assert!(
+            overhead <= AUTH_OVERHEAD_CAP,
+            "authenticated dot serving must stay <= {AUTH_OVERHEAD_CAP}x the \
+             unauthenticated per-job cost (got {overhead:.2}x)"
+        );
+    }
+
+    // Matmul A/B — Freivalds verification rides on the unchanged product
+    // datapath, so its overhead is the A·(B·r) probe alone.
+    let mm_jobs = if quick { 16 } else { 48 };
+    let make_mm = |c: u64, i: usize| -> JobSpec {
+        let (a, b) = &mm_pool[(c as usize * 5 + i) % mm_pool.len()];
+        JobSpec::matmul(a.clone(), b.clone(), MATMUL_DIM)
+    };
+    let make_mm_auth = |c: u64, i: usize| -> JobSpec { make_mm(c, i).authenticated() };
+    let mm_plain_jps = run_leg(
+        &mut records,
+        "serve_matmul_unauth_jobs",
+        &format!("matmul dim={MATMUL_DIM} plain"),
+        mm_jobs,
+        8,
+        false,
+        &make_mm,
+    );
+    let mm_auth_jps = run_leg(
+        &mut records,
+        "serve_matmul_auth_jobs",
+        &format!("matmul dim={MATMUL_DIM} auth "),
+        mm_jobs,
+        8,
+        true,
+        &make_mm_auth,
+    );
+    let (rec, mm_overhead) = ratio_record("serve_matmul_freivalds_ratio", mm_plain_jps, mm_auth_jps);
+    records.push(rec);
+    println!("-> Freivalds matmul verification overhead: {mm_overhead:.2}x plain cost");
+
+    // Authenticated FIR: per-output verified window dots — the most
+    // verification-heavy lane; tracked as an absolute record so a
+    // regression in the windowed verifier shows up in exactly this case.
+    let fir_jobs = if quick { 16 } else { 48 };
+    let make_fir = |c: u64, i: usize| -> JobSpec {
+        let x = &fir_pool[(c as usize * 3 + i) % fir_pool.len()];
+        JobSpec::fir(taps.clone(), x.clone()).authenticated()
+    };
+    run_leg(
+        &mut records,
+        "serve_fir_auth_jobs",
+        &format!("fir taps={FIR_TAPS} n={FIR_N} auth"),
+        fir_jobs,
+        8,
+        true,
+        &make_fir,
+    );
+
+    match write_json("BENCH_auth.json", &records) {
+        Ok(()) => println!("\nwrote BENCH_auth.json ({} records)", records.len()),
+        Err(e) => eprintln!("could not write BENCH_auth.json: {e}"),
+    }
+}

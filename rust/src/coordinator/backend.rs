@@ -107,6 +107,21 @@ pub trait Backend: Send + Sync {
         0
     }
 
+    /// Lifetime integrity detections (MAC, checksum, or Freivalds
+    /// verification failures) this backend has observed. Surfaced by
+    /// the `health` RPC so operators and the fault-smoke gate can read
+    /// it without parsing metrics tables. 0 for backends that don't
+    /// verify.
+    fn integrity_detections(&self) -> u64 {
+        0
+    }
+
+    /// Workers currently quarantined for integrity failures. Nonzero
+    /// only for cluster backends.
+    fn quarantined_workers(&self) -> u64 {
+        0
+    }
+
     /// Drain and stop. Idempotence is not required: a second call may
     /// fail with `ShuttingDown`.
     fn shutdown(&self) -> Result<DrainReport, Error>;
@@ -119,7 +134,7 @@ pub trait Backend: Send + Sync {
 /// any number of `Arc` clones can exist at drain time.
 pub struct InProcess {
     coord: RwLock<Option<Coordinator>>,
-    pending: Mutex<HashMap<u64, mpsc::Receiver<JobResult>>>,
+    pending: Mutex<HashMap<u64, mpsc::Receiver<Result<JobResult, Error>>>>,
     next_ticket: AtomicU64,
 }
 
@@ -140,7 +155,10 @@ impl InProcess {
 
     /// Pull a pending receiver out of the ticket map (consuming the
     /// ticket) so blocking waits don't hold the map lock.
-    fn take_rx(&self, ticket: &JobTicket) -> Option<mpsc::Receiver<JobResult>> {
+    fn take_rx(
+        &self,
+        ticket: &JobTicket,
+    ) -> Option<mpsc::Receiver<Result<JobResult, Error>>> {
         self.pending.lock().expect("pending lock").remove(&ticket.id)
     }
 }
@@ -167,7 +185,7 @@ impl Backend for InProcess {
         match rx.try_recv() {
             Ok(result) => {
                 pending.remove(&ticket.id);
-                JobPoll::Ready(Ok(result))
+                JobPoll::Ready(result)
             }
             Err(mpsc::TryRecvError::Empty) => JobPoll::Pending,
             Err(mpsc::TryRecvError::Disconnected) => {
@@ -188,7 +206,7 @@ impl Backend for InProcess {
             return Err(Error::Internal("unknown ticket".into()));
         };
         match rx.recv_timeout(timeout) {
-            Ok(result) => Ok(result),
+            Ok(result) => result,
             Err(mpsc::RecvTimeoutError::Timeout) => {
                 Err(Error::Internal("result wait timed out".into()))
             }
@@ -205,6 +223,11 @@ impl Backend for InProcess {
 
     fn queue_depth(&self) -> i64 {
         self.with_coordinator(|c| c.metrics.queue_depth_total())
+            .unwrap_or(0)
+    }
+
+    fn integrity_detections(&self) -> u64 {
+        self.with_coordinator(|c| c.metrics.total_integrity_detections())
             .unwrap_or(0)
     }
 

@@ -256,7 +256,11 @@ mod tests {
     use std::sync::mpsc;
     use std::sync::Arc;
 
-    fn mkjob(id: u64) -> (Job, mpsc::Receiver<crate::coordinator::request::JobResult>) {
+    type ReplyRx = mpsc::Receiver<
+        Result<crate::coordinator::request::JobResult, crate::coordinator::error::Error>,
+    >;
+
+    fn mkjob(id: u64) -> (Job, ReplyRx) {
         let (tx, rx) = mpsc::channel();
         (
             Job {
@@ -268,6 +272,7 @@ mod tests {
                 },
                 tier: crate::hybrid::registry::Tier::Paper,
                 bucket: 1,
+                auth: false,
                 submitted: Instant::now(),
                 reply: tx,
             },

@@ -19,6 +19,12 @@ use std::time::{Duration, Instant};
 /// Consecutive probe/transport failures before a shard is `Down`.
 pub const DOWN_AFTER_FAILURES: u32 = 3;
 
+/// Total integrity detections (MAC / checksum / Freivalds failures
+/// attributed to a shard) before it is quarantined. Unlike transport
+/// failures the count never resets: a worker that corrupts results is
+/// presumed faulty hardware, not a transient.
+pub const QUARANTINE_AFTER_DETECTIONS: u32 = 3;
+
 /// Shard availability as the router sees it.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum HealthState {
@@ -43,6 +49,12 @@ pub struct HealthGauge {
     queue_depth: AtomicI64,
     /// Millis-since-`start` until which the shard is overload-diverted.
     overloaded_until_ms: AtomicU64,
+    /// Lifetime integrity detections charged to this shard (never
+    /// reset — see [`QUARANTINE_AFTER_DETECTIONS`]).
+    integrity_detections: AtomicU32,
+    /// Sticky quarantine latch: once set, probe successes no longer
+    /// lift the shard back to `Up`.
+    quarantined: AtomicU8,
 }
 
 impl Default for HealthGauge {
@@ -53,6 +65,8 @@ impl Default for HealthGauge {
             consecutive_failures: AtomicU32::new(0),
             queue_depth: AtomicI64::new(0),
             overloaded_until_ms: AtomicU64::new(0),
+            integrity_detections: AtomicU32::new(0),
+            quarantined: AtomicU8::new(0),
         }
     }
 }
@@ -84,7 +98,37 @@ impl HealthGauge {
     pub fn record_success(&self, depth: i64) {
         self.consecutive_failures.store(0, Ordering::Relaxed);
         self.queue_depth.store(depth, Ordering::Relaxed);
-        self.set_state(HealthState::Up);
+        // A quarantined shard answers probes just fine — that's the
+        // point: health RPCs can't see silent result corruption, so
+        // success never lifts the quarantine latch.
+        if !self.quarantined() {
+            self.set_state(HealthState::Up);
+        }
+    }
+
+    /// A verification failure (MAC, checksum, or Freivalds) was charged
+    /// to this shard. Escalates `Up → Suspect` immediately and latches
+    /// `Down` for good once [`QUARANTINE_AFTER_DETECTIONS`] accumulate.
+    /// Returns the lifetime detection count.
+    pub fn record_integrity(&self) -> u32 {
+        let n = self.integrity_detections.fetch_add(1, Ordering::Relaxed) + 1;
+        if n >= QUARANTINE_AFTER_DETECTIONS {
+            self.quarantined.store(1, Ordering::Relaxed);
+            self.set_state(HealthState::Down);
+        } else if self.state() == HealthState::Up {
+            self.set_state(HealthState::Suspect);
+        }
+        n
+    }
+
+    /// Lifetime integrity detections charged to this shard.
+    pub fn integrity_detections(&self) -> u32 {
+        self.integrity_detections.load(Ordering::Relaxed)
+    }
+
+    /// True once the quarantine latch is set (terminal for the link).
+    pub fn quarantined(&self) -> bool {
+        self.quarantined.load(Ordering::Relaxed) != 0
     }
 
     /// A probe or transport operation failed.
@@ -169,6 +213,28 @@ mod tests {
         std::thread::sleep(Duration::from_millis(60));
         assert!(!g.overload_diverted());
         assert!(g.routable(0));
+    }
+
+    #[test]
+    fn integrity_detections_escalate_and_quarantine_is_sticky() {
+        let g = HealthGauge::default();
+        assert_eq!(g.record_integrity(), 1);
+        assert_eq!(g.state(), HealthState::Suspect);
+        assert!(g.routable(0), "below the threshold the shard still serves");
+        // A healthy probe lifts the sub-threshold Suspect...
+        g.record_success(0);
+        assert_eq!(g.state(), HealthState::Up);
+        // ...but the detection count never resets.
+        assert_eq!(g.record_integrity(), 2);
+        assert_eq!(g.record_integrity(), 3);
+        assert_eq!(g.state(), HealthState::Down);
+        assert!(g.quarantined());
+        assert!(!g.routable(0));
+        // Probe successes no longer resurrect a quarantined shard.
+        g.record_success(0);
+        assert_eq!(g.state(), HealthState::Down);
+        assert!(!g.routable(0));
+        assert_eq!(g.integrity_detections(), 3);
     }
 
     #[test]

@@ -42,11 +42,12 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::backend::{Backend, JobPoll, JobTicket};
 use crate::coordinator::error::Error;
-use crate::coordinator::request::JobSpec;
+use crate::coordinator::request::{JobResult, JobSpec, Payload};
 use crate::coordinator::router::{probe_bucket, ShapeBuckets};
 use crate::coordinator::rpc::client::RpcClient;
 use crate::coordinator::rpc::protocol::{result_from_json, ResponseBody};
 use crate::coordinator::server::DrainReport;
+use crate::hybrid::auth;
 use crate::hybrid::registry::Tier;
 
 use super::health::{HealthGauge, HealthState};
@@ -300,6 +301,13 @@ pub struct ShardRouter {
     failed: AtomicU64,
     rejected: AtomicU64,
     dropped: AtomicU64,
+    /// Verification failures the router observed: results quarantined
+    /// after a checksum/Freivalds mismatch here, plus workers' own
+    /// typed `IntegrityFailure` answers.
+    integrity_detections: AtomicU64,
+    /// Quarantined jobs resubmitted to another shard (each detection
+    /// that found a surviving candidate).
+    integrity_resubmits: AtomicU64,
     shutting_down: AtomicBool,
     stop_monitor: Arc<AtomicBool>,
     monitor: Mutex<Option<thread::JoinHandle<()>>>,
@@ -375,6 +383,8 @@ impl ShardRouter {
             failed: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             dropped: AtomicU64::new(0),
+            integrity_detections: AtomicU64::new(0),
+            integrity_resubmits: AtomicU64::new(0),
             shutting_down: AtomicBool::new(false),
             stop_monitor,
             monitor: Mutex::new(Some(monitor)),
@@ -513,6 +523,47 @@ impl ShardRouter {
         })
     }
 
+    /// Router-side verification of an authenticated result: recompute
+    /// the checksum the worker attached (covering the wire hop — the
+    /// worker's own MAC/Freivalds checks stop at serialization), and
+    /// for matmul re-run a coarse Freivalds screen against the
+    /// operands retained in the route. `None` means clean (or the job
+    /// was not authenticated).
+    fn verify_result(&self, ticket_id: u64, r: &JobResult) -> Option<String> {
+        let routes = self.routes.lock().expect("routes lock");
+        let state = routes.get(&ticket_id)?;
+        if !state.spec.auth {
+            return None;
+        }
+        match r.check {
+            None => return Some("authenticated result arrived without a checksum".into()),
+            Some(c) if auth::values_checksum(&r.values) != c => {
+                return Some("result checksum does not match the delivered values".into());
+            }
+            Some(_) => {}
+        }
+        if let Payload::Matmul { a, b, dim } = &state.spec.payload {
+            if r.values.len() != dim * dim {
+                return Some(format!(
+                    "matmul result has {} values, expected {}",
+                    r.values.len(),
+                    dim * dim
+                ));
+            }
+            // Coarse screen only — the worker already enforced the
+            // tier-aware bound. 2^-8 of the operand scale catches the
+            // gross corruption a faulty link produces without
+            // false-positiving on any supported tier's rounding.
+            let amax = a.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+            let bmax = b.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+            let tol = (*dim * *dim) as f64 * amax.max(1.0) * bmax.max(1.0) * 0.00390625;
+            if !auth::freivalds_matmul_check(a, b, &r.values, *dim, 2, ticket_id, tol) {
+                return Some("Freivalds screen rejected the matmul product".into());
+            }
+        }
+        None
+    }
+
     /// Shards currently reported Up.
     pub fn up_count(&self) -> usize {
         self.links
@@ -571,14 +622,42 @@ impl Backend for ShardRouter {
             Ok(None) => JobPoll::Pending,
             Ok(Some(resp)) => match resp.body {
                 ResponseBody::Result(v) => {
-                    self.routes.lock().expect("routes lock").remove(&ticket.id);
-                    link.completed.fetch_add(1, Ordering::Relaxed);
                     match result_from_json(&v) {
                         Ok(r) => {
+                            // Quarantine a result that fails router-side
+                            // verification: never deliver it, charge the
+                            // detection to the shard (sticky quarantine
+                            // after K), and resubmit via failover. The
+                            // route stays in the map — `failover` owns
+                            // its removal.
+                            if let Some(reason) = self.verify_result(ticket.id, &r) {
+                                self.integrity_detections.fetch_add(1, Ordering::Relaxed);
+                                link.errored.fetch_add(1, Ordering::Relaxed);
+                                let n = link.health.record_integrity();
+                                eprintln!(
+                                    "[router] integrity detection on worker {} ({n} lifetime): {reason}; result quarantined, resubmitting",
+                                    link.spec.id
+                                );
+                                let poll = self.failover(
+                                    ticket.id,
+                                    Error::IntegrityFailure(format!(
+                                        "{reason} (worker {}) and failover is exhausted",
+                                        link.spec.id
+                                    )),
+                                );
+                                if matches!(poll, JobPoll::Pending) {
+                                    self.integrity_resubmits.fetch_add(1, Ordering::Relaxed);
+                                }
+                                return poll;
+                            }
+                            self.routes.lock().expect("routes lock").remove(&ticket.id);
+                            link.completed.fetch_add(1, Ordering::Relaxed);
                             self.completed.fetch_add(1, Ordering::Relaxed);
                             JobPoll::Ready(Ok(r))
                         }
                         Err(e) => {
+                            self.routes.lock().expect("routes lock").remove(&ticket.id);
+                            link.completed.fetch_add(1, Ordering::Relaxed);
                             self.failed.fetch_add(1, Ordering::Relaxed);
                             JobPoll::Ready(Err(Error::Internal(format!(
                                 "undecodable worker result: {e}"
@@ -597,6 +676,23 @@ impl Backend for ShardRouter {
                             self.failover(ticket.id, e)
                         }
                         Error::ShuttingDown | Error::Unavailable(_) => self.failover(ticket.id, e),
+                        // The worker's own MAC/Freivalds verification
+                        // caught a fault before the result left it: the
+                        // corrupted result was never sent. Charge the
+                        // detection to the shard and resubmit elsewhere.
+                        Error::IntegrityFailure(_) => {
+                            self.integrity_detections.fetch_add(1, Ordering::Relaxed);
+                            let n = link.health.record_integrity();
+                            eprintln!(
+                                "[router] worker {} reported an integrity failure ({n} lifetime); resubmitting",
+                                link.spec.id
+                            );
+                            let poll = self.failover(ticket.id, e);
+                            if matches!(poll, JobPoll::Pending) {
+                                self.integrity_resubmits.fetch_add(1, Ordering::Relaxed);
+                            }
+                            poll
+                        }
                         _ => {
                             self.routes.lock().expect("routes lock").remove(&ticket.id);
                             self.failed.fetch_add(1, Ordering::Relaxed);
@@ -635,7 +731,7 @@ impl Backend for ShardRouter {
 
     fn metrics_text(&self) -> String {
         let mut out = format!(
-            "shard-router: {} workers, {} up | accepted {} completed {} failed {} rejected {} dropped {}\n",
+            "shard-router: {} workers, {} up | accepted {} completed {} failed {} rejected {} dropped {} | integrity detections {} resubmits {}\n",
             self.links.len(),
             self.up_count(),
             self.accepted.load(Ordering::Relaxed),
@@ -643,18 +739,28 @@ impl Backend for ShardRouter {
             self.failed.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
             self.dropped.load(Ordering::Relaxed),
+            self.integrity_detections.load(Ordering::Relaxed),
+            self.integrity_resubmits.load(Ordering::Relaxed),
         );
         for link in &self.links {
+            let mark = if link.health.quarantined() {
+                " (quarantined)"
+            } else if link.retired() {
+                " (retired)"
+            } else {
+                ""
+            };
             out.push_str(&format!(
-                "  {:<12} {:<20} {:?}{} queued {} forwarded {} completed {} errored {}\n",
+                "  {:<12} {:<20} {:?}{} queued {} forwarded {} completed {} errored {} detections {}\n",
                 link.spec.id,
                 link.spec.addr,
                 link.health.state(),
-                if link.retired() { " (retired)" } else { "" },
+                mark,
                 link.health.queue_depth(),
                 link.forwarded.load(Ordering::Relaxed),
                 link.completed.load(Ordering::Relaxed),
                 link.errored.load(Ordering::Relaxed),
+                link.health.integrity_detections(),
             ));
         }
         out
@@ -666,6 +772,14 @@ impl Backend for ShardRouter {
             .filter(|l| !l.retired())
             .map(|l| l.health.queue_depth())
             .sum()
+    }
+
+    fn integrity_detections(&self) -> u64 {
+        self.integrity_detections.load(Ordering::Relaxed)
+    }
+
+    fn quarantined_workers(&self) -> u64 {
+        self.links.iter().filter(|l| l.health.quarantined()).count() as u64
     }
 
     fn shutdown(&self) -> Result<DrainReport, Error> {

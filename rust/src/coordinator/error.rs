@@ -73,11 +73,17 @@ pub enum Error {
     /// (−32006).
     #[error("backend unavailable: {0}")]
     Unavailable(String),
+    /// An authenticated result failed verification — MAC lane mismatch,
+    /// exponent-duplicate mismatch, checksum/Freivalds rejection — and
+    /// every resubmission attempt also failed to produce a verified
+    /// result. The corrupted values are never delivered (−32007).
+    #[error("integrity failure: {0}")]
+    IntegrityFailure(String),
 }
 
 /// `(wire code, label)` of every variant, in table order. Property tests
 /// iterate this; it is the single source of the code table.
-pub const WIRE_CODES: [(i64, &str); 11] = [
+pub const WIRE_CODES: [(i64, &str); 12] = [
     (-32700, "parse_error"),
     (-32600, "invalid_request"),
     (-32601, "method_not_found"),
@@ -89,6 +95,7 @@ pub const WIRE_CODES: [(i64, &str); 11] = [
     (-32004, "rate_limited"),
     (-32005, "too_many_in_flight"),
     (-32006, "unavailable"),
+    (-32007, "integrity_failure"),
 ];
 
 impl Error {
@@ -107,6 +114,7 @@ impl Error {
             Error::RateLimited(_) => -32004,
             Error::TooManyInFlight(_) => -32005,
             Error::Unavailable(_) => -32006,
+            Error::IntegrityFailure(_) => -32007,
         }
     }
 
@@ -161,6 +169,7 @@ impl Error {
             -32004 => Error::RateLimited(strip("rate limited: ")),
             -32005 => Error::TooManyInFlight(strip("too many jobs in flight: ")),
             -32006 => Error::Unavailable(strip("backend unavailable: ")),
+            -32007 => Error::IntegrityFailure(strip("integrity failure: ")),
             _ => return None,
         })
     }
@@ -192,6 +201,7 @@ mod tests {
             Error::RateLimited("submission rate above 100/s".into()),
             Error::TooManyInFlight("cap 256".into()),
             Error::Unavailable("no reachable worker for dot/hrfna@paper".into()),
+            Error::IntegrityFailure("MAC mismatch in channel 3 after 2 resubmits".into()),
         ]
     }
 
@@ -236,6 +246,9 @@ mod tests {
         assert!(Error::ShuttingDown.is_backpressure());
         assert!(Error::Unavailable("x".into()).is_backpressure());
         assert!(Error::RateLimited("x".into()).is_backpressure());
+        // Integrity failures are NOT retry-with-backoff material: the
+        // router already exhausted resubmission before surfacing one.
+        assert!(!Error::IntegrityFailure("x".into()).is_backpressure());
     }
 
     #[test]

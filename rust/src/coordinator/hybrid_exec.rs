@@ -39,6 +39,7 @@ use anyhow::Result;
 use std::sync::atomic::Ordering;
 
 use super::request::{Job, JobKind, Payload};
+use crate::hybrid::auth::{self, AuthKey};
 use crate::hybrid::number::{ldexp_staged, pow2, signed_mag_to_f64};
 use crate::hybrid::registry::{ContextRegistry, Tier};
 use crate::hybrid::{Hrfna, HrfnaContext};
@@ -47,6 +48,7 @@ use crate::rns::ResidueVec;
 use crate::runtime::pjrt::Tensor;
 use crate::runtime::EngineHandle;
 use crate::workloads::dot::dot_product_encoded_scalar;
+use crate::workloads::fir::{fir_filter, fir_filter_scalar};
 use crate::workloads::rk4::{rk4_final_state, rk4_final_states_batch, Ode};
 
 /// Which datapath the lane workers execute hybrid jobs on.
@@ -258,6 +260,10 @@ pub fn execute_batch(
                 .collect()
         }
         JobKind::MatmulF32 => jobs.iter().map(|j| exec_matmul_f32(engine, j)).collect(),
+        JobKind::FirHybrid => {
+            let ctx = registry.get(tier);
+            jobs.iter().map(|j| exec_fir_hybrid(&ctx, mode, j)).collect()
+        }
         JobKind::Rk4Hybrid => {
             let ctx = registry.get(tier);
             match mode {
@@ -273,6 +279,392 @@ pub fn execute_batch(
 
 fn payload_error<T>() -> Result<T> {
     Err(anyhow::anyhow!("payload/kind mismatch escaped admission"))
+}
+
+// ----------------------------------------------------------------------
+// Checked (authentication-aware) execution
+// ----------------------------------------------------------------------
+
+/// Per-job output of [`execute_batch_checked`]: the delivered values plus
+/// the FNV-1a wire checksum ([`auth::values_checksum`]) when the job was
+/// authenticated.
+#[derive(Clone, Debug)]
+pub struct ExecOutput {
+    pub values: Vec<f64>,
+    pub check: Option<u64>,
+}
+
+/// How a checked job failed.
+#[derive(Debug)]
+pub enum ExecError {
+    /// Plain execution failure — logged and delivered as the historical
+    /// NaN-valued result, exactly as before authentication existed.
+    Job(anyhow::Error),
+    /// Authenticated verification failure (MAC/range/exponent-duplicate
+    /// mismatch, Freivalds rejection). The values are never delivered;
+    /// the server maps this onto the typed
+    /// [`super::error::Error::IntegrityFailure`].
+    Integrity(String),
+}
+
+/// [`execute_batch`] plus end-to-end integrity for authenticated jobs.
+///
+/// Batches with no authenticated job take the exact pre-existing path
+/// (same executors, same bits) with `check: None`. When the batch carries
+/// authenticated jobs, a fresh per-batch MAC key is sampled (worker-local
+/// — MAC lanes are derived right after encode and verified before decode
+/// within this one call, so the key never needs to outlive the batch),
+/// dot/FIR jobs run the dual-MAC verified window dots, and matmul jobs
+/// get a Freivalds randomized product check; verified values are covered
+/// by the wire checksum the router re-computes on receipt.
+///
+/// Under the `fault-inject` cargo feature (and an installed
+/// [`crate::util::faults`] plan) seeded bit flips are driven into the
+/// residue lanes, MAC lanes and exponent words of authenticated jobs
+/// between MAC derivation and verification — the single-event-upset model
+/// the verification layer exists to catch.
+pub fn execute_batch_checked(
+    engine: &EngineHandle,
+    registry: &ContextRegistry,
+    mode: ExecMode,
+    kind: JobKind,
+    tier: Tier,
+    jobs: &[Job],
+) -> Vec<Result<ExecOutput, ExecError>> {
+    if jobs.is_empty() {
+        return Vec::new();
+    }
+    if !jobs.iter().any(|j| j.auth) {
+        return execute_batch(engine, registry, mode, kind, tier, jobs)
+            .into_iter()
+            .map(|r| match r {
+                Ok(values) => Ok(ExecOutput { values, check: None }),
+                Err(e) => Err(ExecError::Job(e)),
+            })
+            .collect();
+    }
+    // Deterministic per-batch key seed: reproducible under a fixed
+    // submission order, distinct across batches.
+    let key_seed = jobs[0].id ^ 0xA07D_5EED_0BAD_C0DE;
+    match kind {
+        JobKind::DotHybrid => {
+            let ctx = registry.get(tier);
+            exec_dot_checked(&ctx, mode, jobs, key_seed)
+        }
+        JobKind::FirHybrid => {
+            let ctx = registry.get(tier);
+            jobs.iter()
+                .map(|j| exec_fir_checked(&ctx, mode, j, key_seed))
+                .collect()
+        }
+        JobKind::MatmulHybrid => {
+            let ctx = registry.get(tier);
+            jobs.iter()
+                .map(|j| exec_matmul_checked(&ctx, mode, j))
+                .collect()
+        }
+        // Admission rejects `auth` on kinds without MAC-carrying residue
+        // lanes; reaching here means a corrupted queue, which is itself
+        // an integrity failure.
+        JobKind::DotF32 | JobKind::MatmulF32 | JobKind::Rk4Hybrid => jobs
+            .iter()
+            .map(|_| {
+                Err(ExecError::Integrity(
+                    "authenticated job on a kind without MAC support escaped admission"
+                        .into(),
+                ))
+            })
+            .collect(),
+    }
+}
+
+/// Authenticated dot batch: one shared planar encode (value windows are
+/// bit-identical to the unauthenticated planar path), MAC planes derived
+/// per channel, then each authenticated job is one dual-MAC verified
+/// window dot plus an exponent-duplicate compare.
+fn exec_dot_checked(
+    ctx: &HrfnaContext,
+    mode: ExecMode,
+    jobs: &[Job],
+    key_seed: u64,
+) -> Vec<Result<ExecOutput, ExecError>> {
+    let mut xs: Vec<&[f64]> = Vec::with_capacity(jobs.len());
+    let mut ys: Vec<&[f64]> = Vec::with_capacity(jobs.len());
+    for job in jobs {
+        match &job.payload {
+            Payload::Dot { x, y } => {
+                xs.push(x);
+                ys.push(y);
+            }
+            _ => {
+                return jobs
+                    .iter()
+                    .map(|_| payload_error().map_err(ExecError::Job))
+                    .collect()
+            }
+        }
+    }
+    let n = jobs[0].bucket;
+    let mut ex = encode_dot_batch(&xs, n, ctx);
+    let mut ey = encode_dot_batch(&ys, n, ctx);
+    let key = AuthKey::sample(&ctx.cfg.moduli, key_seed);
+    let bars = ctx.barrett();
+    let mut mac_x = ex.plane.scale_channels(&key.alpha, bars);
+    let mut mac_y = ey.plane.scale_channels(&key.alpha, bars);
+    // Exponent duplicates, captured at the trust boundary.
+    let fx_dup = ex.f.clone();
+    let fy_dup = ey.f.clone();
+    #[cfg(feature = "fault-inject")]
+    inject_dot_faults(jobs, n, &mut ex, &mut ey, &mut mac_x, &mut mac_y);
+    let values = planar_dot_results(&ex, &ey, ctx);
+    jobs.iter()
+        .enumerate()
+        .map(|(j, job)| {
+            if !job.auth {
+                // Unauthenticated rider in a mixed batch: same value the
+                // pre-auth path would deliver (scalar mode keeps its
+                // scalar reference datapath).
+                return match mode {
+                    ExecMode::Planar => Ok(ExecOutput {
+                        values: vec![values[j]],
+                        check: None,
+                    }),
+                    ExecMode::Scalar => exec_dot_hybrid_scalar(ctx, job)
+                        .map(|v| ExecOutput { values: v, check: None })
+                        .map_err(ExecError::Job),
+                };
+            }
+            if ex.f[j] != fx_dup[j] || ey.f[j] != fy_dup[j] {
+                return Err(ExecError::Integrity(format!(
+                    "exponent duplicate mismatch (dot job {})",
+                    job.id
+                )));
+            }
+            match auth::verified_window_dot(
+                bars, &key, &ex.plane, &mac_x, &ey.plane, &mac_y, j * n, n,
+            ) {
+                Ok(_) => {
+                    let v = vec![values[j]];
+                    let check = auth::values_checksum(&v);
+                    Ok(ExecOutput { values: v, check: Some(check) })
+                }
+                Err(c) => Err(ExecError::Integrity(format!(
+                    "MAC check failed in channel {c} (dot job {})",
+                    job.id
+                ))),
+            }
+        })
+        .collect()
+}
+
+/// FIR window geometry for output `t` of a direct-form filter with `tt`
+/// taps: the reversed-taps suffix `[tt - len, tt)` dotted against the
+/// signal window `[t + 1 - len, t + 1)`, `len = min(t + 1, tt)`
+/// (zero-padded history ⇒ warmup outputs use partial windows).
+fn fir_window(tt: usize, t: usize) -> (usize, usize, usize) {
+    let len = (t + 1).min(tt);
+    (tt - len, t + 1 - len, len)
+}
+
+/// Authenticated FIR: taps (reversed) and signal each block-encoded into
+/// one plane with a shared exponent, MAC planes derived, then every
+/// output is a dual-MAC verified window dot; one batched CRT pass decodes
+/// the verified residues.
+fn exec_fir_checked(
+    ctx: &HrfnaContext,
+    mode: ExecMode,
+    job: &Job,
+    key_seed: u64,
+) -> Result<ExecOutput, ExecError> {
+    let (taps, x) = match &job.payload {
+        Payload::Fir { taps, x } => (taps, x),
+        _ => return payload_error().map_err(ExecError::Job),
+    };
+    if !job.auth {
+        return exec_fir_hybrid(ctx, mode, job)
+            .map(|values| ExecOutput { values, check: None })
+            .map_err(ExecError::Job);
+    }
+    let key = AuthKey::sample(&ctx.cfg.moduli, key_seed ^ job.id.rotate_left(17));
+    let rt: Vec<f64> = taps.iter().rev().copied().collect();
+    let n = x.len();
+    let tt = rt.len();
+    let mut et = encode_dot_batch(&[&rt], tt, ctx);
+    let mut ex = encode_dot_batch(&[x.as_slice()], n, ctx);
+    let bars = ctx.barrett();
+    let mut mac_t = et.plane.scale_channels(&key.alpha, bars);
+    let mut mac_x = ex.plane.scale_channels(&key.alpha, bars);
+    let (ft_dup, fx_dup) = (et.f[0], ex.f[0]);
+    #[cfg(feature = "fault-inject")]
+    {
+        inject_plane_faults(&mut et, &mut mac_t);
+        inject_plane_faults(&mut ex, &mut mac_x);
+    }
+    let k = ctx.k();
+    let mut res = vec![0u64; k * n];
+    for t in 0..n {
+        let (tlo, xlo, len) = fir_window(tt, t);
+        match auth::verified_window_dot_at(
+            bars, &key, &et.plane, &mac_t, &ex.plane, &mac_x, tlo, xlo, len,
+        ) {
+            Ok(r) => {
+                for (c, &rc) in r.iter().enumerate() {
+                    res[c * n + t] = rc;
+                }
+            }
+            Err(c) => {
+                return Err(ExecError::Integrity(format!(
+                    "MAC check failed in channel {c} (fir output {t}, job {})",
+                    job.id
+                )))
+            }
+        }
+    }
+    if et.f[0] != ft_dup || ex.f[0] != fx_dup {
+        return Err(ExecError::Integrity(format!(
+            "exponent duplicate mismatch (fir job {})",
+            job.id
+        )));
+    }
+    ctx.counters
+        .reconstructions
+        .fetch_add(n as u64, Ordering::Relaxed);
+    let f = et.f[0] + ex.f[0];
+    let values: Vec<f64> = ctx
+        .crt
+        .reconstruct_signed_batch(&res, n)
+        .into_iter()
+        .map(|(neg, mag)| signed_mag_to_f64(neg, &mag, f))
+        .collect();
+    let check = auth::values_checksum(&values);
+    Ok(ExecOutput { values, check: Some(check) })
+}
+
+/// Authenticated matmul: the product is computed on the normal datapath,
+/// then Freivalds-verified against the inputs (O(dim²) per round vs the
+/// O(dim³) product; 2 rounds ⇒ miss ≤ 1/4 for an adversarial wrong
+/// product, deterministic for the high-bit fault model whose error dwarfs
+/// the tolerance). The tolerance scales with the tier's significand width
+/// so legitimate residue-path rounding never trips it.
+fn exec_matmul_checked(
+    ctx: &HrfnaContext,
+    mode: ExecMode,
+    job: &Job,
+) -> Result<ExecOutput, ExecError> {
+    if !job.auth {
+        return exec_matmul_hybrid(ctx, mode, job)
+            .map(|values| ExecOutput { values, check: None })
+            .map_err(ExecError::Job);
+    }
+    let (a, b, dim) = match &job.payload {
+        Payload::Matmul { a, b, dim } => (a, b, *dim),
+        _ => return payload_error().map_err(ExecError::Job),
+    };
+    #[allow(unused_mut)]
+    let mut out = match exec_matmul_hybrid(ctx, mode, job) {
+        Ok(v) => v,
+        Err(e) => return Err(ExecError::Job(e)),
+    };
+    #[cfg(feature = "fault-inject")]
+    if let Some(pick) = crate::util::faults::global().and_then(|inj| inj.draw()) {
+        let i = (pick as usize) % out.len();
+        out[i] = crate::util::faults::flip_f64_high_bit(out[i], pick >> 8);
+    }
+    // Freivalds tolerance: encode quantization is ≤ max|·|·2^{-sig} per
+    // element, a product row sums dim such terms and the ±1 probe sums
+    // dim outputs — dim²·max|a|·max|b|·2^{-sig}, with 3 bits of margin.
+    let amax = a.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+    let bmax = b.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+    let tol = (dim * dim) as f64
+        * amax.max(1.0)
+        * bmax.max(1.0)
+        * pow2(-(ctx.cfg.sig_bits as i32) + 3);
+    if !auth::freivalds_matmul_check(a, b, &out, dim, 2, job.id, tol) {
+        return Err(ExecError::Integrity(format!(
+            "Freivalds check rejected matmul product (dim {dim}, job {})",
+            job.id
+        )));
+    }
+    let check = auth::values_checksum(&out);
+    Ok(ExecOutput { values: out, check: Some(check) })
+}
+
+/// Seeded corruption of an authenticated dot batch: per authenticated
+/// job, one opportunity each for a value-lane flip (either operand), a
+/// MAC-lane flip, and an exponent-word flip. Bits stay below 31 so a
+/// corrupted word still respects the lane kernels' `< 2^31` input domain
+/// (out-of-range words are the range check's job and are exercised by the
+/// property tests directly).
+#[cfg(feature = "fault-inject")]
+fn inject_dot_faults(
+    jobs: &[Job],
+    n: usize,
+    ex: &mut DotBatchEncoded,
+    ey: &mut DotBatchEncoded,
+    mac_x: &mut ResiduePlane,
+    mac_y: &mut ResiduePlane,
+) {
+    use crate::util::faults::{flip_bit, global};
+    let Some(inj) = global() else { return };
+    let k = mac_x.k();
+    for (j, job) in jobs.iter().enumerate() {
+        if !job.auth {
+            continue;
+        }
+        if let Some(p) = inj.draw() {
+            let chan = (p as usize >> 1) % k;
+            let elem = j * n + ((p >> 16) as usize) % n;
+            let bit = ((p >> 40) % 31) as u32;
+            let lane = if p & 1 == 0 { ex.plane.lane_mut(chan) } else { ey.plane.lane_mut(chan) };
+            lane[elem] = flip_bit(lane[elem], bit);
+        }
+        if let Some(p) = inj.draw() {
+            let chan = (p as usize >> 1) % k;
+            let elem = j * n + ((p >> 16) as usize) % n;
+            let bit = ((p >> 40) % 31) as u32;
+            let lane = if p & 1 == 0 { mac_x.lane_mut(chan) } else { mac_y.lane_mut(chan) };
+            lane[elem] = flip_bit(lane[elem], bit);
+        }
+        if let Some(p) = inj.draw() {
+            let f = if p & 1 == 0 { &mut ex.f[j] } else { &mut ey.f[j] };
+            *f ^= 1i32 << ((p >> 8) % 24);
+        }
+    }
+}
+
+/// Seeded corruption of one encoded operand plane (FIR path): one
+/// opportunity for a value/MAC lane flip and one for the shared exponent
+/// word.
+#[cfg(feature = "fault-inject")]
+fn inject_plane_faults(enc: &mut DotBatchEncoded, mac: &mut ResiduePlane) {
+    use crate::util::faults::{flip_bit, global};
+    let Some(inj) = global() else { return };
+    let k = mac.k();
+    let n = enc.n;
+    if let Some(p) = inj.draw() {
+        let chan = (p as usize >> 1) % k;
+        let elem = ((p >> 16) as usize) % n;
+        let bit = ((p >> 40) % 31) as u32;
+        let lane = if p & 1 == 0 { enc.plane.lane_mut(chan) } else { mac.lane_mut(chan) };
+        lane[elem] = flip_bit(lane[elem], bit);
+    }
+    if let Some(p) = inj.draw() {
+        enc.f[0] ^= 1i32 << ((p >> 8) % 24);
+    }
+}
+
+/// Hybrid FIR: the `workloads` direct-form filter in the lane's datapath
+/// (planar batched `dot_encoded` windows, or the scalar per-output MAC
+/// reference).
+fn exec_fir_hybrid(ctx: &HrfnaContext, mode: ExecMode, job: &Job) -> Result<Vec<f64>> {
+    let (taps, x) = match &job.payload {
+        Payload::Fir { taps, x } => (taps, x),
+        _ => return payload_error(),
+    };
+    Ok(match mode {
+        ExecMode::Planar => fir_filter::<Hrfna>(taps, x, ctx),
+        ExecMode::Scalar => fir_filter_scalar::<Hrfna>(taps, x, ctx),
+    })
 }
 
 /// The planar hot path: every dot job in the batch encoded into one pair

@@ -66,6 +66,9 @@ struct SlotMetrics {
     guard_events: AtomicU64,
     /// Full CRT reconstructions claimed by this slot's batches.
     recon_events: AtomicU64,
+    /// Integrity detections: authenticated results this slot caught as
+    /// corrupted (MAC/exponent/checksum/Freivalds) before delivery.
+    integrity_detections: AtomicU64,
     /// Wall time workers of this slot spent executing batches (ns).
     busy_ns: AtomicU64,
     /// Currently queued jobs (gauge; +1 on accept, −batch on dequeue).
@@ -87,6 +90,7 @@ impl Default for SlotMetrics {
             norm_events: AtomicU64::new(0),
             guard_events: AtomicU64::new(0),
             recon_events: AtomicU64::new(0),
+            integrity_detections: AtomicU64::new(0),
             busy_ns: AtomicU64::new(0),
             depth: AtomicI64::new(0),
             latency_sum_us: AtomicU64::new(0),
@@ -124,6 +128,7 @@ fn kind_index(kind: JobKind) -> usize {
         JobKind::MatmulHybrid => 2,
         JobKind::MatmulF32 => 3,
         JobKind::Rk4Hybrid => 4,
+        JobKind::FirHybrid => 5,
     }
 }
 
@@ -184,6 +189,14 @@ impl Metrics {
     pub fn record_escalation(&self, kind: JobKind, tier: Tier) {
         self.slot(kind, tier)
             .escalations
+            .fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record an integrity detection: an authenticated result of this
+    /// slot failed verification and was quarantined instead of delivered.
+    pub fn record_integrity(&self, kind: JobKind, tier: Tier) {
+        self.slot(kind, tier)
+            .integrity_detections
             .fetch_add(1, Ordering::Relaxed);
     }
 
@@ -263,6 +276,13 @@ impl Metrics {
     /// CRT reconstructions recorded for a (kind, tier) slot.
     pub fn recon_events_tier(&self, kind: JobKind, tier: Tier) -> u64 {
         self.slot(kind, tier).recon_events.load(Ordering::Relaxed)
+    }
+
+    /// Integrity detections recorded for a (kind, tier) slot.
+    pub fn integrity_tier(&self, kind: JobKind, tier: Tier) -> u64 {
+        self.slot(kind, tier)
+            .integrity_detections
+            .load(Ordering::Relaxed)
     }
 
     /// Occupancy of one (kind, tier) slot in [0, 1]: that slot's batch
@@ -360,6 +380,16 @@ impl Metrics {
         self.sum_over_tiers(kind, |s| s.guard_events.load(Ordering::Relaxed))
     }
 
+    /// Integrity detections recorded for a kind.
+    pub fn integrity_detections(&self, kind: JobKind) -> u64 {
+        self.sum_over_tiers(kind, |s| s.integrity_detections.load(Ordering::Relaxed))
+    }
+
+    /// Total integrity detections across kinds and tiers.
+    pub fn total_integrity_detections(&self) -> u64 {
+        JobKind::ALL.iter().map(|&k| self.integrity_detections(k)).sum()
+    }
+
     /// Currently queued jobs in a kind's lanes (gauge; transiently ±1).
     pub fn queue_depth(&self, kind: JobKind) -> i64 {
         Tier::ALL
@@ -454,8 +484,8 @@ impl Metrics {
         let mut t = Table::new(
             "Serving metrics",
             &[
-                "lane", "jobs", "rej", "steal", "esc", "mean batch", "p50 us", "p95 us",
-                "p99 us", "occ %", "Mops", "norms", "guards", "recon",
+                "lane", "jobs", "rej", "steal", "esc", "integ", "mean batch", "p50 us",
+                "p95 us", "p99 us", "occ %", "Mops", "norms", "guards", "recon",
             ],
         );
         for &kind in &JobKind::ALL {
@@ -484,6 +514,7 @@ impl Metrics {
                     rej.to_string(),
                     s.steals.load(Ordering::Relaxed).to_string(),
                     s.escalations.load(Ordering::Relaxed).to_string(),
+                    s.integrity_detections.load(Ordering::Relaxed).to_string(),
                     format!("{mean_batch:.1}"),
                     format!("{:.1}", self.latency_percentile_us_tier(kind, tier, 50.0)),
                     format!("{:.1}", self.latency_percentile_us_tier(kind, tier, 95.0)),
@@ -563,6 +594,9 @@ pub struct WireMetrics {
     /// globally: a malformed frame may have no attributable client
     /// request).
     protocol_errors: AtomicU64,
+    /// Per-connection handler panics caught at the connection boundary:
+    /// the connection died, the server survived.
+    conn_panics: AtomicU64,
     clients: Mutex<Vec<(String, Arc<ClientCounters>)>>,
 }
 
@@ -636,6 +670,12 @@ impl WireMetrics {
         self.protocol_errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record a panic caught at a connection boundary (the handler died;
+    /// the serve loop and every other connection kept running).
+    pub fn record_conn_panic(&self) {
+        self.conn_panics.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Connections accepted over the server's lifetime.
     pub fn conns_opened(&self) -> u64 {
         self.conns_opened.load(Ordering::Relaxed)
@@ -649,6 +689,11 @@ impl WireMetrics {
     /// Protocol errors (malformed frames).
     pub fn protocol_errors(&self) -> u64 {
         self.protocol_errors.load(Ordering::Relaxed)
+    }
+
+    /// Connection-handler panics contained at the connection boundary.
+    pub fn conn_panics(&self) -> u64 {
+        self.conn_panics.load(Ordering::Relaxed)
     }
 
     /// Aggregate counters across all clients.
@@ -767,6 +812,21 @@ mod tests {
     }
 
     #[test]
+    fn integrity_detections_counted_per_slot_and_reported() {
+        let m = Metrics::default();
+        m.record_integrity(JobKind::DotHybrid, P);
+        m.record_integrity(JobKind::DotHybrid, P);
+        m.record_integrity(JobKind::FirHybrid, Tier::Wide);
+        assert_eq!(m.integrity_tier(JobKind::DotHybrid, P), 2);
+        assert_eq!(m.integrity_tier(JobKind::DotHybrid, Tier::Wide), 0);
+        assert_eq!(m.integrity_detections(JobKind::DotHybrid), 2);
+        assert_eq!(m.total_integrity_detections(), 3);
+        m.record(JobKind::DotHybrid, P, 10.0, 512);
+        let s = m.table().render();
+        assert!(s.contains("integ"), "table must carry the detection column");
+    }
+
+    #[test]
     fn norm_events_claimed_exactly_once_per_tier() {
         let m = Metrics::default();
         // Running totals on the paper tier: 0 → 5 events (2 guards,
@@ -864,6 +924,7 @@ mod tests {
         w.record_rate_limited(&b);
         w.record_inflight_limited(&b);
         w.record_protocol_error();
+        w.record_conn_panic();
         w.record_conn_closed();
         assert_eq!(a.frames_in(), 2);
         assert_eq!(a.bytes_in(), 150);
@@ -878,6 +939,7 @@ mod tests {
         assert_eq!(w.totals().rate_limited(), 1);
         assert_eq!(w.totals().inflight_limited(), 1);
         assert_eq!(w.protocol_errors(), 1);
+        assert_eq!(w.conn_panics(), 1);
         assert_eq!(w.conns_closed(), 1);
         let s = w.table().render();
         assert!(s.contains("127.0.0.1:5000#0"));

@@ -26,16 +26,19 @@ pub enum JobKind {
     MatmulF32,
     /// Batched RK4 integration (Van der Pol) in HRFNA.
     Rk4Hybrid,
+    /// FIR filtering (direct-form inner products) in HRFNA.
+    FirHybrid,
 }
 
 impl JobKind {
     /// All kinds (for metrics tables).
-    pub const ALL: [JobKind; 5] = [
+    pub const ALL: [JobKind; 6] = [
         JobKind::DotHybrid,
         JobKind::DotF32,
         JobKind::MatmulHybrid,
         JobKind::MatmulF32,
         JobKind::Rk4Hybrid,
+        JobKind::FirHybrid,
     ];
 
     /// Table label — also the **wire identifier** of the kind: the RPC
@@ -49,6 +52,7 @@ impl JobKind {
             JobKind::MatmulHybrid => "matmul/hrfna",
             JobKind::MatmulF32 => "matmul/fp32",
             JobKind::Rk4Hybrid => "rk4/hrfna",
+            JobKind::FirHybrid => "fir/hrfna",
         }
     }
 
@@ -63,7 +67,10 @@ impl JobKind {
     pub fn is_hybrid(&self) -> bool {
         matches!(
             self,
-            JobKind::DotHybrid | JobKind::MatmulHybrid | JobKind::Rk4Hybrid
+            JobKind::DotHybrid
+                | JobKind::MatmulHybrid
+                | JobKind::Rk4Hybrid
+                | JobKind::FirHybrid
         )
     }
 }
@@ -79,6 +86,10 @@ pub enum Payload {
     /// the result is the final state. Jobs sharing (mu, dt, steps) are
     /// integrated lock-step as one planar batch.
     Rk4 { y0: Vec<f64>, mu: f64, dt: f64, steps: u64 },
+    /// Direct-form FIR filter: convolve signal `x` with `taps`, yielding
+    /// `x.len()` outputs (zero-padded history), each an exact taps-length
+    /// residue-domain inner product.
+    Fir { taps: Vec<f64>, x: Vec<f64> },
 }
 
 impl Payload {
@@ -90,6 +101,7 @@ impl Payload {
             Payload::Dot { x, .. } => x.len() as u64,
             Payload::Matmul { dim, .. } => (dim * dim * dim) as u64,
             Payload::Rk4 { steps, .. } => steps * RK4_MACS_PER_STEP,
+            Payload::Fir { taps, x } => (taps.len() * x.len()) as u64,
         }
     }
 
@@ -116,6 +128,10 @@ impl Payload {
                     norm_events: *steps,
                 }
             }
+            Payload::Fir { taps, x } => {
+                // Each output is one exact taps-length inner product.
+                MagnitudeEnvelope::of_slices(&[taps, x], taps.len() as u64, 0)
+            }
         }
     }
 }
@@ -132,6 +148,12 @@ pub struct JobSpec {
     pub tier: Tier,
     /// Target relative error; `None` accepts the tier's native budget.
     pub tolerance: Option<f64>,
+    /// Request end-to-end integrity: the worker carries MAC residue
+    /// lanes through the computation, verifies them before decode, and
+    /// checksums the result frame; the router re-verifies and resubmits
+    /// on failure. Admission charges the MAC modulus budget
+    /// ([`crate::hybrid::registry::EscalateReason::MacBudget`]).
+    pub auth: bool,
 }
 
 impl JobSpec {
@@ -140,7 +162,7 @@ impl JobSpec {
     /// kind-specific builders below cover the common payloads; use this
     /// constructor when the kind is data-driven.
     pub fn new(kind: JobKind, payload: Payload) -> JobSpec {
-        JobSpec { kind, payload, tier: Tier::Paper, tolerance: None }
+        JobSpec { kind, payload, tier: Tier::Paper, tolerance: None, auth: false }
     }
 
     /// Dot product on the planar HRFNA lanes:
@@ -169,6 +191,11 @@ impl JobSpec {
         JobSpec::new(JobKind::Rk4Hybrid, Payload::Rk4 { y0, mu, dt, steps })
     }
 
+    /// Direct-form FIR filtering in HRFNA.
+    pub fn fir(taps: Vec<f64>, x: Vec<f64>) -> JobSpec {
+        JobSpec::new(JobKind::FirHybrid, Payload::Fir { taps, x })
+    }
+
     /// Set the cheapest tier the client is willing to run on (admission
     /// may still escalate past it).
     pub fn tier(mut self, tier: Tier) -> JobSpec {
@@ -179,6 +206,12 @@ impl JobSpec {
     /// Set the target relative-error tolerance.
     pub fn tolerance(mut self, tol: f64) -> JobSpec {
         self.tolerance = Some(tol);
+        self
+    }
+
+    /// Request MAC-authenticated execution and result verification.
+    pub fn authenticated(mut self) -> JobSpec {
+        self.auth = true;
         self
     }
 
@@ -205,9 +238,12 @@ pub struct Job {
     pub tier: Tier,
     /// Shape bucket the payload was admitted into (queue routing key).
     pub bucket: usize,
+    /// MAC-authenticated execution requested at submit.
+    pub auth: bool,
     pub submitted: Instant,
-    /// Completion channel.
-    pub reply: std::sync::mpsc::Sender<JobResult>,
+    /// Completion channel. Integrity failures travel typed (`Err`);
+    /// plain execution errors keep the historical NaN-valued `Ok` form.
+    pub reply: std::sync::mpsc::Sender<Result<JobResult, super::error::Error>>,
 }
 
 /// Completed job.
@@ -223,6 +259,10 @@ pub struct JobResult {
     pub latency_us: f64,
     /// Size of the batch this job was executed in.
     pub batch_size: usize,
+    /// FNV-1a checksum over the canonical bits of `values`, present iff
+    /// the job was authenticated — the wire-integrity cover for the
+    /// result frame (`hybrid::auth::values_checksum`).
+    pub check: Option<u64>,
 }
 
 #[cfg(test)]
@@ -264,7 +304,8 @@ mod tests {
     #[test]
     fn hybrid_kind_partition() {
         let hybrid: Vec<_> = JobKind::ALL.iter().filter(|k| k.is_hybrid()).collect();
-        assert_eq!(hybrid.len(), 3);
+        assert_eq!(hybrid.len(), 4);
+        assert!(JobKind::FirHybrid.is_hybrid());
         assert!(!JobKind::DotF32.is_hybrid());
         assert!(!JobKind::MatmulF32.is_hybrid());
     }
@@ -284,6 +325,12 @@ mod tests {
         let e = r.envelope();
         assert_eq!(e.max_abs, 5.0);
         assert_eq!(e.norm_events, 100);
+        let f = Payload::Fir { taps: vec![0.25, 0.5, 0.25], x: vec![-6.0; 16] };
+        let e = f.envelope();
+        assert_eq!(e.max_abs, 6.0);
+        assert_eq!(e.terms, 3, "each FIR output is a taps-length dot");
+        assert_eq!(e.norm_events, 0);
+        assert_eq!(f.macs(), 48);
     }
 
     #[test]
@@ -308,6 +355,10 @@ mod tests {
             Payload::Rk4 { steps, .. } => assert_eq!(steps, 100),
             other => panic!("wrong payload {other:?}"),
         }
+        let f = JobSpec::fir(vec![0.5, 0.5], vec![1.0; 8]);
+        assert_eq!(f.kind, JobKind::FirHybrid);
+        assert!(!f.auth, "authentication is opt-in");
+        assert!(f.authenticated().auth);
     }
 
     #[test]

@@ -70,6 +70,9 @@ impl ShapeBuckets {
             }
             lanes.push((JobKind::MatmulHybrid, tier, self.matmul_dim));
             lanes.push((JobKind::Rk4Hybrid, tier, RK4_BUCKET));
+            // FIR jobs of any admitted signal length share one lane per
+            // tier; the bucket key is the signal-length cap.
+            lanes.push((JobKind::FirHybrid, tier, self.engine_dot_n()));
         }
         lanes.push((JobKind::DotF32, Tier::Paper, self.engine_dot_n()));
         lanes.push((JobKind::MatmulF32, Tier::Paper, self.matmul_dim));
@@ -92,6 +95,9 @@ pub fn probe_bucket(payload: &Payload, kind: JobKind, buckets: &ShapeBuckets) ->
             Some(buckets.matmul_dim)
         }
         (Payload::Rk4 { .. }, JobKind::Rk4Hybrid) => Some(RK4_BUCKET),
+        (Payload::Fir { x, .. }, JobKind::FirHybrid) => {
+            (x.len() <= buckets.engine_dot_n()).then_some(buckets.engine_dot_n())
+        }
         _ => None,
     }
 }
@@ -173,6 +179,29 @@ pub fn admit(
             }
             Ok(RK4_BUCKET)
         }
+        (Payload::Fir { taps, x }, JobKind::FirHybrid) => {
+            if taps.is_empty() || x.is_empty() {
+                return reject("empty FIR taps or signal".into());
+            }
+            if taps.len() > x.len() {
+                return reject(format!(
+                    "FIR needs taps ({}) <= signal length ({})",
+                    taps.len(),
+                    x.len()
+                ));
+            }
+            if x.len() > buckets.engine_dot_n() {
+                return reject(format!(
+                    "FIR signal length {} exceeds cap {}",
+                    x.len(),
+                    buckets.engine_dot_n()
+                ));
+            }
+            if !taps.iter().chain(x.iter()).all(|v| v.is_finite()) {
+                return reject("non-finite operand".into());
+            }
+            Ok(buckets.engine_dot_n())
+        }
         _ => reject(format!("payload does not match lane {kind:?}")),
     }
 }
@@ -253,6 +282,7 @@ mod tests {
                 JobKind::MatmulHybrid,
             ),
             (Payload::Rk4 { y0: vec![2.0, 0.0], mu: 1.0, dt: 0.01, steps: 100 }, JobKind::Rk4Hybrid),
+            (Payload::Fir { taps: vec![0.25, 0.5, 0.25], x: vec![1.0; 200] }, JobKind::FirHybrid),
         ];
         for (p, kind) in cases {
             let probed = probe_bucket(&p, kind, &b);
@@ -304,6 +334,34 @@ mod tests {
     }
 
     #[test]
+    fn fir_admission_bounds() {
+        let b = ShapeBuckets::default();
+        let mut p = Payload::Fir { taps: vec![0.5; 8], x: vec![1.0; 256] };
+        assert_eq!(admit(&mut p, JobKind::FirHybrid, &b).unwrap(), b.engine_dot_n());
+        if let Payload::Fir { x, .. } = &p {
+            assert_eq!(x.len(), 256, "FIR signals are not padded");
+        } else {
+            panic!()
+        }
+        let mut p = Payload::Fir { taps: vec![], x: vec![1.0; 8] };
+        assert!(admit(&mut p, JobKind::FirHybrid, &b).is_err());
+        let mut p = Payload::Fir { taps: vec![0.5; 9], x: vec![1.0; 8] };
+        assert!(admit(&mut p, JobKind::FirHybrid, &b).is_err());
+        let mut p = Payload::Fir { taps: vec![0.5; 8], x: vec![1.0; 5000] };
+        assert!(admit(&mut p, JobKind::FirHybrid, &b).is_err());
+        assert_eq!(
+            probe_bucket(
+                &Payload::Fir { taps: vec![0.5; 8], x: vec![1.0; 5000] },
+                JobKind::FirHybrid,
+                &b
+            ),
+            None
+        );
+        let mut p = Payload::Fir { taps: vec![f64::NAN], x: vec![1.0; 8] };
+        assert!(admit(&mut p, JobKind::FirHybrid, &b).is_err());
+    }
+
+    #[test]
     fn kind_payload_mismatch_rejected() {
         let b = ShapeBuckets::default();
         let mut p = Payload::Dot {
@@ -319,7 +377,7 @@ mod tests {
         let b = ShapeBuckets::default();
         let lanes = b.lanes();
         // Hybrid kinds fan out per tier; FP32 kinds pin to one lane each.
-        assert_eq!(lanes.len(), b.tiers.len() * (b.dot.len() + 2) + 2);
+        assert_eq!(lanes.len(), b.tiers.len() * (b.dot.len() + 3) + 2);
         for kind in JobKind::ALL {
             assert!(lanes.iter().any(|&(k, _, _)| k == kind), "{kind:?} missing");
         }
@@ -342,7 +400,7 @@ mod tests {
             ..ShapeBuckets::default()
         };
         let lanes = b.lanes();
-        assert_eq!(lanes.len(), b.dot.len() + 4);
+        assert_eq!(lanes.len(), b.dot.len() + 5);
         assert!(lanes.iter().all(|&(_, t, _)| t == Tier::Paper));
     }
 

@@ -247,6 +247,25 @@ impl RpcClient {
         }
     }
 
+    /// Extended health fields added with authenticated serving:
+    /// `(lifetime integrity detections, quarantined workers)`. Servers
+    /// predating these fields report `(0, 0)` — absence is not an
+    /// error, so the probe stays compatible across versions.
+    pub fn health_integrity(&mut self) -> Result<(u64, u64)> {
+        let resp = self.request("health", Json::Null)?;
+        match resp.body {
+            ResponseBody::Result(v) => {
+                let detections = v
+                    .get("integrity_detections")
+                    .and_then(Json::as_u64)
+                    .unwrap_or(0);
+                let quarantined = v.get("quarantined").and_then(Json::as_u64).unwrap_or(0);
+                Ok((detections, quarantined))
+            }
+            ResponseBody::Error(e) => bail!("health failed: {e}"),
+        }
+    }
+
     /// Fetch the server's rendered metrics tables (coordinator + wire).
     pub fn server_metrics(&mut self) -> Result<(String, String)> {
         let resp = self.request("metrics", Json::Null)?;
@@ -395,6 +414,24 @@ impl Backend for Remote {
             .expect("client lock")
             .health()
             .map(|(_, queued)| queued)
+            .unwrap_or(0)
+    }
+
+    fn integrity_detections(&self) -> u64 {
+        self.client
+            .lock()
+            .expect("client lock")
+            .health_integrity()
+            .map(|(d, _)| d)
+            .unwrap_or(0)
+    }
+
+    fn quarantined_workers(&self) -> u64 {
+        self.client
+            .lock()
+            .expect("client lock")
+            .health_integrity()
+            .map(|(_, q)| q)
             .unwrap_or(0)
     }
 

@@ -10,10 +10,19 @@
 
 use std::time::{Duration, Instant};
 
-use crate::coordinator::request::JobSpec;
+use crate::coordinator::request::{JobResult, JobSpec};
 use crate::coordinator::serve_load::LoadReport;
+use crate::hybrid::auth;
 
 use super::client::RpcClient;
+
+/// Client-side integrity recompute for a delivered result: true when
+/// the result carries a checksum and the values no longer hash to it
+/// (corruption on the delivery hop that every server-side check ran
+/// before).
+fn is_corrupted(r: &JobResult) -> bool {
+    matches!(r.check, Some(c) if auth::values_checksum(&r.values) != c)
+}
 
 /// Connection discipline of the socket closed loop.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -50,7 +59,7 @@ pub fn socket_closed_loop(
 ) -> LoadReport {
     let burst = burst.max(1);
     let t0 = Instant::now();
-    let results: Vec<(usize, usize, usize, Vec<f64>)> = std::thread::scope(|scope| {
+    let results: Vec<(usize, usize, usize, Vec<f64>, usize)> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..clients)
             .map(|c| {
                 scope.spawn(move || match mode {
@@ -66,13 +75,17 @@ pub fn socket_closed_loop(
     let mut accepted = 0;
     let mut rejected = 0;
     let mut latencies = Vec::new();
-    for (o, a, r, l) in results {
+    let mut corrupted = 0;
+    for (o, a, r, l, c) in results {
         offered += o;
         accepted += a;
         rejected += r;
         latencies.extend(l);
+        corrupted += c;
     }
-    LoadReport::from_parts(offered, accepted, rejected, latencies, wall)
+    let mut report = LoadReport::from_parts(offered, accepted, rejected, latencies, wall);
+    report.corrupted = corrupted;
+    report
 }
 
 /// One client over one persistent connection: fire a burst of pipelined
@@ -83,14 +96,15 @@ fn run_persistent(
     jobs: usize,
     burst: usize,
     make: &(dyn Fn(u64, usize) -> JobSpec + Sync),
-) -> (usize, usize, usize, Vec<f64>) {
+) -> (usize, usize, usize, Vec<f64>, usize) {
     let mut conn = match RpcClient::connect_retry(addr, CONNECT_WAIT) {
         Ok(c) => c,
-        Err(_) => return (0, 0, 0, Vec::new()),
+        Err(_) => return (0, 0, 0, Vec::new(), 0),
     };
     let mut offered = 0;
     let mut accepted = 0;
     let mut rejected = 0;
+    let mut corrupted = 0;
     let mut latencies = Vec::with_capacity(jobs);
     let mut i = 0;
     while i < jobs {
@@ -103,25 +117,28 @@ fn run_persistent(
                 Ok(id) => fired.push((id, Instant::now())),
                 Err(_) => {
                     rejected += 1;
-                    return (offered, accepted, rejected, latencies);
+                    return (offered, accepted, rejected, latencies, corrupted);
                 }
             }
         }
         for (id, fired_at) in fired {
             match conn.wait_submit(id) {
-                Ok(Ok(_result)) => {
+                Ok(Ok(result)) => {
                     accepted += 1;
+                    if is_corrupted(&result) {
+                        corrupted += 1;
+                    }
                     latencies.push(fired_at.elapsed().as_secs_f64() * 1e6);
                 }
                 Ok(Err(_wire_err)) => rejected += 1,
                 Err(_) => {
                     rejected += 1;
-                    return (offered, accepted, rejected, latencies);
+                    return (offered, accepted, rejected, latencies, corrupted);
                 }
             }
         }
     }
-    (offered, accepted, rejected, latencies)
+    (offered, accepted, rejected, latencies, corrupted)
 }
 
 /// One client reconnecting per job (overhead-measurement mode).
@@ -130,10 +147,11 @@ fn run_per_job(
     client: u64,
     jobs: usize,
     make: &(dyn Fn(u64, usize) -> JobSpec + Sync),
-) -> (usize, usize, usize, Vec<f64>) {
+) -> (usize, usize, usize, Vec<f64>, usize) {
     let mut offered = 0;
     let mut accepted = 0;
     let mut rejected = 0;
+    let mut corrupted = 0;
     let mut latencies = Vec::with_capacity(jobs);
     for i in 0..jobs {
         let spec = make(client, i);
@@ -143,17 +161,20 @@ fn run_per_job(
             Ok(c) => c,
             Err(_) => {
                 rejected += 1;
-                return (offered, accepted, rejected, latencies);
+                return (offered, accepted, rejected, latencies, corrupted);
             }
         };
         match conn.call(&spec) {
-            Ok(Ok(_result)) => {
+            Ok(Ok(result)) => {
                 accepted += 1;
+                if is_corrupted(&result) {
+                    corrupted += 1;
+                }
                 latencies.push(t.elapsed().as_secs_f64() * 1e6);
             }
             Ok(Err(_wire_err)) => rejected += 1,
             Err(_) => rejected += 1,
         }
     }
-    (offered, accepted, rejected, latencies)
+    (offered, accepted, rejected, latencies, corrupted)
 }

@@ -215,6 +215,11 @@ fn payload_to_json(p: &Payload) -> Json {
             ("dt", Json::Num(*dt)),
             ("steps", Json::Num(*steps as f64)),
         ]),
+        Payload::Fir { taps, x } => Json::obj(vec![
+            ("type", Json::str("fir")),
+            ("taps", Json::arr_f64(taps)),
+            ("x", Json::arr_f64(x)),
+        ]),
     }
 }
 
@@ -249,13 +254,15 @@ fn payload_from_json(v: &Json) -> Result<Payload, String> {
                 .and_then(Json::as_u64)
                 .ok_or("rk4 payload without integral steps")?,
         }),
+        "fir" => Ok(Payload::Fir { taps: vec_field("taps")?, x: vec_field("x")? }),
         other => Err(format!("unknown payload type {other:?}")),
     }
 }
 
 /// Serialize a spec:
-/// `{"kind":"dot/hrfna","tier":"paper","tolerance":T,"payload":{...}}`
-/// (`tolerance` omitted when `None`).
+/// `{"kind":"dot/hrfna","tier":"paper","tolerance":T,"auth":true,"payload":{...}}`
+/// (`tolerance` omitted when `None`; `auth` omitted when `false`, so
+/// unauthenticated frames are byte-identical to the pre-auth protocol).
 pub fn spec_to_json(spec: &JobSpec) -> Json {
     let mut fields = vec![
         ("kind".to_string(), Json::str(spec.kind.label())),
@@ -263,6 +270,9 @@ pub fn spec_to_json(spec: &JobSpec) -> Json {
     ];
     if let Some(tol) = spec.tolerance {
         fields.push(("tolerance".to_string(), Json::Num(tol)));
+    }
+    if spec.auth {
+        fields.push(("auth".to_string(), Json::Bool(true)));
     }
     fields.push(("payload".to_string(), payload_to_json(&spec.payload)));
     Json::Obj(fields)
@@ -284,21 +294,34 @@ pub fn spec_from_json(v: &Json) -> Result<JobSpec, String> {
         None | Some(Json::Null) => None,
         Some(t) => Some(t.as_f64().ok_or("tolerance is not a number")?),
     };
+    let auth = match v.get("auth") {
+        None | Some(Json::Null) => false,
+        Some(a) => a.as_bool().ok_or("auth is not a boolean")?,
+    };
     let payload = payload_from_json(v.get("payload").ok_or("spec without payload")?)?;
-    Ok(JobSpec { kind, payload, tier, tolerance })
+    Ok(JobSpec { kind, payload, tier, tolerance, auth })
 }
 
 /// Serialize a result:
-/// `{"id":N,"kind":K,"tier":T,"values":[...],"latency_us":L,"batch_size":B}`.
+/// `{"id":N,"kind":K,"tier":T,"values":[...],"latency_us":L,"batch_size":B,"check":"hex"}`
+/// (`check` — the FNV-1a checksum of an authenticated result — is a
+/// 16-digit hex **string**, because JSON numbers are f64 and would
+/// silently destroy u64 bits above 2^53; omitted for unauthenticated
+/// results, keeping those frames byte-identical to the pre-auth
+/// protocol).
 pub fn result_to_json(r: &JobResult) -> Json {
-    Json::obj(vec![
-        ("id", Json::Num(r.id as f64)),
-        ("kind", Json::str(r.kind.label())),
-        ("tier", Json::str(r.tier.label())),
-        ("values", Json::arr_f64(&r.values)),
-        ("latency_us", Json::Num(r.latency_us)),
-        ("batch_size", Json::Num(r.batch_size as f64)),
-    ])
+    let mut fields = vec![
+        ("id".to_string(), Json::Num(r.id as f64)),
+        ("kind".to_string(), Json::str(r.kind.label())),
+        ("tier".to_string(), Json::str(r.tier.label())),
+        ("values".to_string(), Json::arr_f64(&r.values)),
+        ("latency_us".to_string(), Json::Num(r.latency_us)),
+        ("batch_size".to_string(), Json::Num(r.batch_size as f64)),
+    ];
+    if let Some(check) = r.check {
+        fields.push(("check".to_string(), Json::Str(format!("{check:016x}"))));
+    }
+    Json::Obj(fields)
 }
 
 /// Inverse of [`result_to_json`]. Failed-job NaN sentinels survive the
@@ -306,6 +329,13 @@ pub fn result_to_json(r: &JobResult) -> Json {
 pub fn result_from_json(v: &Json) -> Result<JobResult, String> {
     let kind_label = v.get("kind").and_then(Json::as_str).ok_or("result without kind")?;
     let tier_label = v.get("tier").and_then(Json::as_str).ok_or("result without tier")?;
+    let check = match v.get("check") {
+        None | Some(Json::Null) => None,
+        Some(c) => {
+            let s = c.as_str().ok_or("check is not a string")?;
+            Some(u64::from_str_radix(s, 16).map_err(|e| format!("bad check {s:?}: {e}"))?)
+        }
+    };
     Ok(JobResult {
         id: v.get("id").and_then(Json::as_u64).ok_or("result without id")?,
         kind: JobKind::from_label(kind_label)
@@ -324,6 +354,7 @@ pub fn result_from_json(v: &Json) -> Result<JobResult, String> {
             .get("batch_size")
             .and_then(Json::as_u64)
             .ok_or("result without batch_size")? as usize,
+        check,
     })
 }
 
@@ -346,6 +377,7 @@ mod tests {
             (-32004, "rate_limited"),
             (-32005, "too_many_in_flight"),
             (-32006, "unavailable"),
+            (-32007, "integrity_failure"),
         ];
         assert_eq!(expect, &WIRE_CODES[..], "wire code table drifted");
         assert!(Error::from_wire(-1, "x").is_none());
@@ -393,6 +425,7 @@ mod tests {
             Error::RateLimited("rate above 10/s".into()),
             Error::TooManyInFlight("cap 256".into()),
             Error::Unavailable("worker w1 unreachable".into()),
+            Error::IntegrityFailure("MAC mismatch in channel 3".into()),
         ];
         for e in errors {
             let text = error_to_json(&e).encode();
@@ -460,6 +493,8 @@ mod tests {
             JobSpec::dot(vec![1.0, -2.5], vec![0.5, 4.0]).tier(Tier::Lo).tolerance(1e-3),
             JobSpec::matmul_f32(vec![1.0; 4], vec![2.0; 4], 2),
             JobSpec::rk4(vec![2.0, 0.0], 1.5, 0.01, 32).tier(Tier::Wide),
+            JobSpec::fir(vec![0.25, 0.5, 0.25], vec![1.0; 8]),
+            JobSpec::dot(vec![1.0; 4], vec![2.0; 4]).authenticated(),
         ];
         for spec in &specs {
             let text = spec_to_json(spec).encode();
@@ -467,8 +502,13 @@ mod tests {
             assert_eq!(back.kind, spec.kind);
             assert_eq!(back.tier, spec.tier);
             assert_eq!(back.tolerance, spec.tolerance);
+            assert_eq!(back.auth, spec.auth);
             assert_eq!(spec_to_json(&back).encode(), text, "canonical re-encode");
         }
+        // `auth` appears on the wire only when set: unauthenticated specs
+        // are byte-identical to the pre-auth protocol.
+        assert!(!spec_to_json(&specs[0]).encode().contains("auth"));
+        assert!(spec_to_json(&specs[4]).encode().contains("\"auth\":true"));
         // Tier defaults to paper when absent (old clients).
         let spec = spec_from_json(
             &Json::parse(
@@ -504,9 +544,11 @@ mod tests {
             values: vec![1.25, f64::NAN],
             latency_us: 123.5,
             batch_size: 16,
+            check: None,
         };
         let text = result_to_json(&r).encode();
         assert!(text.contains("null"), "NaN encodes as null: {text}");
+        assert!(!text.contains("check"), "unauthenticated frames carry no check");
         let back = result_from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(back.id, r.id);
         assert_eq!(back.kind, r.kind);
@@ -515,5 +557,30 @@ mod tests {
         assert!(back.values[1].is_nan());
         assert_eq!(back.latency_us, 123.5);
         assert_eq!(back.batch_size, 16);
+        assert_eq!(back.check, None);
+    }
+
+    #[test]
+    fn authenticated_result_checksum_survives_the_wire_as_hex() {
+        // The checksum is a full-width u64; a JSON number (f64) would
+        // destroy bits above 2^53, so it travels as a hex string.
+        let check = 0xdead_beef_cafe_f00du64;
+        let r = JobResult {
+            id: 3,
+            kind: JobKind::DotHybrid,
+            tier: Tier::Paper,
+            values: vec![42.0],
+            latency_us: 10.0,
+            batch_size: 1,
+            check: Some(check),
+        };
+        let text = result_to_json(&r).encode();
+        assert!(text.contains("\"check\":\"deadbeefcafef00d\""), "{text}");
+        let back = result_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.check, Some(check));
+        assert!(result_from_json(
+            &Json::parse(&text.replace("deadbeefcafef00d", "not-hex")).unwrap()
+        )
+        .is_err());
     }
 }

@@ -164,7 +164,22 @@ enum Slot {
 
 /// A batch entry: `{"result": ...}` or `{"error": {...}}` in the
 /// response array.
+///
+/// Under `fault-inject`, authenticated results (those carrying a
+/// `check` checksum) may have one value bit-flipped here — *after* the
+/// worker computed the checksum, *before* serialization — modelling
+/// corruption on the serving edge itself. The router's checksum
+/// recompute is the cover for exactly this window.
 fn batch_entry_ok(r: &JobResult) -> Json {
+    #[cfg(feature = "fault-inject")]
+    if r.check.is_some() && !r.values.is_empty() {
+        if let Some(pick) = crate::util::faults::global().and_then(|inj| inj.draw()) {
+            let mut r = r.clone();
+            let i = (pick as usize >> 24) % r.values.len();
+            r.values[i] = crate::util::faults::flip_f64_high_bit(r.values[i], pick);
+            return Json::obj(vec![("result", result_to_json(&r))]);
+        }
+    }
     Json::obj(vec![("result", result_to_json(r))])
 }
 
@@ -332,11 +347,31 @@ fn serve_conn(
         let inflight = Arc::clone(&inflight);
         thread::Builder::new()
             .name("rpc-completer".into())
-            .spawn(move || completer_loop(write_half, work_rx, backend, wire, counters, inflight))
+            .spawn(move || {
+                // A panic in the completer (codec bug, poisoned lock)
+                // must not take the process down — it costs this one
+                // connection, is counted, and the socket closes.
+                let wire2 = Arc::clone(&wire);
+                let body = std::panic::AssertUnwindSafe(move || {
+                    completer_loop(write_half, work_rx, backend, wire, counters, inflight)
+                });
+                if std::panic::catch_unwind(body).is_err() {
+                    wire2.record_conn_panic();
+                    eprintln!("[rpc] completer thread panicked; connection dropped");
+                }
+            })
             .expect("spawn rpc completer thread")
     };
 
-    reader_loop(stream, &*backend, &cfg, &stop, &drain, &wire, &counters, &inflight, &work_tx);
+    {
+        let body = std::panic::AssertUnwindSafe(|| {
+            reader_loop(stream, &*backend, &cfg, &stop, &drain, &wire, &counters, &inflight, &work_tx)
+        });
+        if std::panic::catch_unwind(body).is_err() {
+            wire.record_conn_panic();
+            eprintln!("[rpc] reader thread panicked; connection dropped");
+        }
+    }
 
     // Dropping the sender lets the completer flush pending responses and
     // exit; join it before declaring the connection closed.
@@ -414,6 +449,11 @@ fn reader_loop(
                 let body = Json::obj(vec![
                     ("label", Json::str(backend.label())),
                     ("queued", Json::Num(backend.queue_depth() as f64)),
+                    (
+                        "integrity_detections",
+                        Json::Num(backend.integrity_detections() as f64),
+                    ),
+                    ("quarantined", Json::Num(backend.quarantined_workers() as f64)),
                 ]);
                 let _ = work_tx.send(Work::Respond(Response::result(req.id, body)));
             }
@@ -713,6 +753,7 @@ mod tests {
             values: vec![2.0],
             latency_us: 10.0,
             batch_size: 1,
+            check: None,
         };
         let ok = batch_entry_ok(&r);
         assert!(ok.get("result").is_some());

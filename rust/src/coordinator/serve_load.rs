@@ -44,6 +44,11 @@ pub struct LoadReport {
     pub jobs_per_s: f64,
     /// End-to-end latency summary (µs) over completed jobs.
     pub latency_us: Option<Summary>,
+    /// Delivered results whose authenticated checksum failed the
+    /// client-side recompute — the "zero corrupted results delivered"
+    /// invariant the fault-smoke gate asserts. Always 0 for
+    /// unauthenticated runs (no checksum to verify).
+    pub corrupted: usize,
 }
 
 impl LoadReport {
@@ -69,6 +74,7 @@ impl LoadReport {
             } else {
                 Some(Summary::of(&latencies))
             },
+            corrupted: 0,
         }
     }
 }

@@ -19,7 +19,7 @@ use std::time::{Duration, Instant};
 
 use super::batcher::{BatchPolicy, BatchQueue, PushError};
 use super::error::Error;
-use super::hybrid_exec::{execute_batch, ExecMode};
+use super::hybrid_exec::{execute_batch_checked, ExecError, ExecMode};
 use super::metrics::Metrics;
 use super::request::{Job, JobKind, JobResult, JobSpec, Payload};
 use super::router::{admit, LaneKey, ShapeBuckets};
@@ -145,7 +145,7 @@ impl Coordinator {
                                 }
                                 let size = batch.len();
                                 let t0 = Instant::now();
-                                let results = execute_batch(
+                                let results = execute_batch_checked(
                                     &engine, &registry, mode, kind, tier, &batch,
                                 );
                                 metrics.record_batch(kind, tier, size, t0.elapsed());
@@ -171,25 +171,47 @@ impl Coordinator {
                                 for (job, r) in batch.into_iter().zip(results) {
                                     let latency_us =
                                         job.submitted.elapsed().as_secs_f64() * 1e6;
-                                    let values = match r {
-                                        Ok(v) => v,
-                                        Err(e) => {
+                                    metrics.record(kind, tier, latency_us, job.payload.macs());
+                                    // Plain execution failures keep the
+                                    // historical NaN-valued result shape;
+                                    // integrity failures travel typed so
+                                    // corrupted values are never delivered
+                                    // as values.
+                                    let reply = match r {
+                                        Ok(out) => Ok(JobResult {
+                                            id: job.id,
+                                            kind,
+                                            tier,
+                                            values: out.values,
+                                            latency_us,
+                                            batch_size: size,
+                                            check: out.check,
+                                        }),
+                                        Err(ExecError::Job(e)) => {
                                             crate::log_error!(
                                                 "job {} failed: {e:#}",
                                                 job.id
                                             );
-                                            vec![f64::NAN]
+                                            Ok(JobResult {
+                                                id: job.id,
+                                                kind,
+                                                tier,
+                                                values: vec![f64::NAN],
+                                                latency_us,
+                                                batch_size: size,
+                                                check: None,
+                                            })
+                                        }
+                                        Err(ExecError::Integrity(msg)) => {
+                                            metrics.record_integrity(kind, tier);
+                                            crate::log_error!(
+                                                "job {} integrity failure: {msg}",
+                                                job.id
+                                            );
+                                            Err(Error::IntegrityFailure(msg))
                                         }
                                     };
-                                    metrics.record(kind, tier, latency_us, job.payload.macs());
-                                    let _ = job.reply.send(JobResult {
-                                        id: job.id,
-                                        kind,
-                                        tier,
-                                        values,
-                                        latency_us,
-                                        batch_size: size,
-                                    });
+                                    let _ = job.reply.send(reply);
                                 }
                             }
                         })
@@ -244,6 +266,7 @@ impl Coordinator {
         requested: Tier,
         payload: &Payload,
         tolerance: Option<f64>,
+        authenticated: bool,
     ) -> Result<(Tier, bool), Error> {
         let base = self
             .cfg
@@ -254,7 +277,9 @@ impl Coordinator {
                     "no enabled tier at or above requested {requested:?}"
                 ))
             })?;
-        let res = self.registry.resolve(base, &payload.envelope(), tolerance);
+        let res = self
+            .registry
+            .resolve(base, &payload.envelope(), tolerance, authenticated);
         if !res.covered {
             return Err(Error::Rejected(format!(
                 "no tier's formal bound covers the request \
@@ -284,9 +309,30 @@ impl Coordinator {
     /// in the metrics and the result's `tier` reports where they
     /// actually ran. Build specs with the builders:
     /// `coord.submit(JobSpec::dot(x, y).tier(Tier::Wide))`.
-    pub fn submit(&self, spec: JobSpec) -> Result<mpsc::Receiver<JobResult>, Error> {
-        let JobSpec { kind, mut payload, tier: requested, tolerance } = spec;
+    pub fn submit(
+        &self,
+        spec: JobSpec,
+    ) -> Result<mpsc::Receiver<Result<JobResult, Error>>, Error> {
+        let JobSpec { kind, mut payload, tier: requested, tolerance, auth } = spec;
         let metric_tier = if kind.is_hybrid() { requested } else { Tier::Paper };
+        // Authentication needs MAC-carrying residue lanes: dot/fir dots
+        // verify through the dual-MAC windows, matmul through Freivalds.
+        // FP32 lanes have no residues and RK4's stateful integration has
+        // no per-job verification hook, so `auth` on those is rejected
+        // up front rather than silently served unverified.
+        if auth
+            && !matches!(
+                kind,
+                JobKind::DotHybrid | JobKind::FirHybrid | JobKind::MatmulHybrid
+            )
+        {
+            self.metrics.record_rejected(kind, metric_tier);
+            return Err(Error::Rejected(format!(
+                "authenticated serving is not supported for {} \
+                 (MAC lanes require a dot/fir/matmul hybrid lane)",
+                kind.label()
+            )));
+        }
         let bucket = match admit(&mut payload, kind, &self.cfg.buckets) {
             Ok(b) => b,
             Err(e) => {
@@ -298,7 +344,7 @@ impl Coordinator {
         // envelope is read off the admitted payload, the bound checks
         // run on static tier configs.
         let tier = if kind.is_hybrid() {
-            match self.resolve_tier(requested, &payload, tolerance) {
+            match self.resolve_tier(requested, &payload, tolerance, auth) {
                 Ok((t, bound_escalated)) => {
                     if bound_escalated {
                         self.metrics.record_escalation(kind, t);
@@ -320,6 +366,7 @@ impl Coordinator {
             payload,
             tier,
             bucket,
+            auth,
             submitted: Instant::now(),
             reply: tx,
         };
@@ -345,16 +392,20 @@ impl Coordinator {
         }
     }
 
-    /// Submit a spec and block for the result.
+    /// Submit a spec and block for the result (integrity failures of
+    /// authenticated jobs surface as their typed error).
     pub fn call(&self, spec: JobSpec) -> Result<JobResult, Error> {
         let rx = self.submit(spec)?;
         rx.recv_timeout(Duration::from_secs(120))
-            .map_err(|e| Error::Internal(format!("job timed out: {e}")))
+            .map_err(|e| Error::Internal(format!("job timed out: {e}")))?
     }
 
     /// Pre-PR7 name of [`Coordinator::submit`].
     #[deprecated(note = "renamed to Coordinator::submit (one JobSpec entry point)")]
-    pub fn submit_spec(&self, spec: JobSpec) -> Result<mpsc::Receiver<JobResult>, Error> {
+    pub fn submit_spec(
+        &self,
+        spec: JobSpec,
+    ) -> Result<mpsc::Receiver<Result<JobResult, Error>>, Error> {
         self.submit(spec)
     }
 

@@ -1,0 +1,645 @@
+//! SPDZ-style authenticated residue batches (ROADMAP item 2): per-channel
+//! MAC lanes `mac_i(x) = α_i·x mod m_i` carried alongside each value lane
+//! and checked at decode, plus the Freivalds randomized verifier for
+//! matmul results and the wire checksum for authenticated result frames.
+//!
+//! ## MAC lane layout and algebra
+//!
+//! An [`AuthBatch`] pairs an [`HrfnaBatch`] with a second `k × n`
+//! channel-major [`ResiduePlane`] holding the MAC lanes, and a duplicate
+//! of the packed exponent array (`f_dup`) covering the exponent words.
+//! Because every residue channel is an independent ring (the carry-free
+//! channel independence the paper builds on), the MAC composes through
+//! the existing kernels with *public* (unauthenticated) co-operands:
+//!
+//! * `lane_mul` / `lane_fma`: `mac(x)·y = α·x·y = mac(x·y)` per channel,
+//! * `lane_scale` by a constant `c`: `mac(x)·c = mac(c·x)`,
+//! * `lane_dot`: `Σ mac(x_t)·y_t = α·Σ x_t·y_t = mac(Σ x_t·y_t)`,
+//! * `norm::bulk_normalize`: the Definition-4 rescale applies the same
+//!   offset `d` scaled by `α` to the MAC lane
+//!   ([`crate::rns::crt::CrtContext::rescale_batch_with_mac`]), so
+//!   `mac' = (mac ± α·d)·2^{-s} = α·r'` **exactly** — the MAC is updated
+//!   homomorphically, never recomputed from the (possibly corrupted)
+//!   value.
+//!
+//! ## Detection probability
+//!
+//! A fault that changes value or MAC residues in channel `i` is accepted
+//! only if the corruption pair `(δ, δ')` happens to satisfy
+//! `δ' = α_i·δ mod m_i`. For the physical fault model — a single bit
+//! flip, `δ = ±2^b` with `δ' = 0` (or vice versa) — detection is
+//! **deterministic** on odd moduli: `α_i·δ ≠ 0` because `α_i ≠ 0` and
+//! `2^b` is invertible. Against an adversary who crafts both `δ ≠ 0` and
+//! `δ'` without knowing the key, exactly one `α_i` of the `m_i − 1`
+//! possible keys satisfies the relation, so the per-channel miss
+//! probability is at most `1/(m_i − 1)` — within one part in `m_i` of
+//! the information-theoretic `1/m_i` bound — which
+//! [`AuthKey::sample`] guarantees by drawing `α_i` uniformly from
+//! `[1, m_i)`. The one blind spot is arithmetic wraparound past `M/2`
+//! (both value and MAC wrap consistently); that is exactly the overflow
+//! `registry::tier_covers` excludes, with one extra guard bit demanded
+//! for authenticated traffic.
+
+use crate::hybrid::batch::HrfnaBatch;
+use crate::hybrid::context::HrfnaContext;
+use crate::hybrid::norm::{self, NormReport};
+use crate::rns::barrett::Barrett;
+use crate::rns::plane::{self, ResiduePlane};
+use crate::util::prng::Rng;
+use thiserror::Error;
+
+/// Why an authenticated batch failed verification.
+#[derive(Clone, Copy, Debug, Error, PartialEq, Eq)]
+pub enum AuthFailure {
+    /// A lane word is out of its modulus range (no in-range residue ever
+    /// leaves the kernels, so this is itself a corruption).
+    #[error("residue out of range: element {elem} channel {channel}")]
+    Range { elem: usize, channel: usize },
+    /// The per-channel check `mac_i ?= α_i·r_i` failed.
+    #[error("MAC check failed: element {elem} channel {channel}")]
+    Mac { elem: usize, channel: usize },
+    /// The duplicated exponent word disagrees with the primary.
+    #[error("exponent duplicate mismatch: element {elem} ({f} vs {dup})")]
+    Exponent { elem: usize, f: i32, dup: i32 },
+}
+
+/// The per-channel MAC key `α_i ∈ [1, m_i)`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AuthKey {
+    pub alpha: Vec<u64>,
+}
+
+impl AuthKey {
+    /// Sample a key uniformly from `[1, m_i)` per channel. Zero is
+    /// excluded (`α_i = 0` would accept any value in that channel), which
+    /// is what makes the documented `≤ 1/(m_i − 1)` per-channel miss
+    /// bound hold.
+    pub fn sample(moduli: &[u64], seed: u64) -> AuthKey {
+        let mut rng = Rng::new(seed ^ 0xA1FA_4E7_5EED_00D1);
+        AuthKey {
+            alpha: moduli.iter().map(|&m| 1 + rng.below(m - 1)).collect(),
+        }
+    }
+
+    /// Number of channels.
+    pub fn k(&self) -> usize {
+        self.alpha.len()
+    }
+
+    /// Worst-channel adversarial miss probability: `max_i 1/(m_i − 1)`.
+    /// (Random single bit flips are detected deterministically; see the
+    /// module docs.)
+    pub fn miss_probability(moduli: &[u64]) -> f64 {
+        moduli
+            .iter()
+            .map(|&m| 1.0 / (m as f64 - 1.0))
+            .fold(0.0, f64::max)
+    }
+}
+
+/// An authenticated batch: value batch + MAC lanes + duplicated exponents.
+#[derive(Clone, Debug)]
+pub struct AuthBatch {
+    pub(crate) b: HrfnaBatch,
+    pub(crate) mac: ResiduePlane,
+    pub(crate) f_dup: Vec<i32>,
+}
+
+impl AuthBatch {
+    /// Derive the MAC lanes for a freshly encoded batch (one
+    /// [`plane::lane_scale`] Shoup pass per channel) and duplicate the
+    /// exponent words. Authentication happens at the trust boundary —
+    /// right after encode, before data enters the untrusted compute.
+    pub fn authenticate(b: HrfnaBatch, key: &AuthKey, ctx: &HrfnaContext) -> AuthBatch {
+        debug_assert_eq!(key.k(), b.k());
+        let mac = b.res.scale_channels(&key.alpha, ctx.barrett());
+        let f_dup = b.f.clone();
+        AuthBatch { b, mac, f_dup }
+    }
+
+    /// The value batch (read-only).
+    pub fn batch(&self) -> &HrfnaBatch {
+        &self.b
+    }
+
+    /// The MAC plane (read-only).
+    pub fn mac_plane(&self) -> &ResiduePlane {
+        &self.mac
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.b.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.b.is_empty()
+    }
+
+    /// Check every element: residues in range, `mac_i = α_i·r_i` per
+    /// channel, duplicated exponent equal. First failure wins.
+    pub fn verify(&self, key: &AuthKey, ctx: &HrfnaContext) -> Result<(), AuthFailure> {
+        let n = self.b.len();
+        for (elem, (&f, &dup)) in self.b.f.iter().zip(&self.f_dup).enumerate() {
+            if f != dup {
+                return Err(AuthFailure::Exponent { elem, f, dup });
+            }
+        }
+        for channel in 0..self.b.k() {
+            let bar = ctx.barrett()[channel];
+            let m = ctx.cfg.moduli[channel];
+            let alpha = key.alpha[channel];
+            let vals = self.b.res.lane(channel);
+            let macs = self.mac.lane(channel);
+            for elem in 0..n {
+                let (r, mw) = (vals[elem], macs[elem]);
+                if r >= m || mw >= m {
+                    return Err(AuthFailure::Range { elem, channel });
+                }
+                if bar.mul(alpha, r) != mw {
+                    return Err(AuthFailure::Mac { elem, channel });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Verify, then decode (the only way values leave an authenticated
+    /// batch).
+    pub fn decode_verified(
+        &self,
+        key: &AuthKey,
+        ctx: &HrfnaContext,
+    ) -> Result<Vec<f64>, AuthFailure> {
+        self.verify(key, ctx)?;
+        Ok(self.b.decode(ctx))
+    }
+
+    /// Elementwise multiply by a *public* batch: value lanes through
+    /// `lane_mul`, MAC lanes through the same kernel (`mac(x)·y =
+    /// mac(x·y)`). Carry-free only — the caller runs the MAC-aware
+    /// normalization between ops (the scalar auto-normalize would
+    /// re-encode residues outside the MAC update path, which is exactly
+    /// the laundering authentication forbids). Panics if a product could
+    /// overflow the signed headroom.
+    pub fn mul_plain(&self, y: &HrfnaBatch, ctx: &HrfnaContext) -> AuthBatch {
+        assert_eq!(self.len(), y.len());
+        let bud = ctx.signed_budget_bits();
+        let n = self.len();
+        let mut iv_lo = vec![0.0; n];
+        let mut iv_hi = vec![0.0; n];
+        for j in 0..n {
+            let ia = self.b.interval(j);
+            let ib = y.interval(j);
+            assert!(
+                ia.bits_hi() + ib.bits_hi() < bud,
+                "authenticated mul would overflow: normalize first (element {j})"
+            );
+            let z = ia.mul(&ib);
+            iv_lo[j] = z.lo;
+            iv_hi[j] = z.hi;
+        }
+        let bars = ctx.barrett();
+        AuthBatch {
+            b: HrfnaBatch {
+                res: self.b.res.mul(&y.res, bars),
+                f: self.b.f.iter().zip(&y.f).map(|(a, b)| a + b).collect(),
+                iv_lo,
+                iv_hi,
+            },
+            mac: self.mac.mul(&y.res, bars),
+            f_dup: self.f_dup.iter().zip(&y.f).map(|(a, b)| a + b).collect(),
+        }
+    }
+
+    /// Multiply every element by the public real constant `c` (encode,
+    /// then one `lane_scale` per channel on both planes).
+    pub fn scale_plain(&self, c: f64, ctx: &HrfnaContext) -> AuthBatch {
+        let enc = crate::hybrid::number::Hrfna::encode(c, ctx);
+        let bud = ctx.signed_budget_bits();
+        let cbits = enc.iv.bits_hi();
+        let n = self.len();
+        let mut iv_lo = vec![0.0; n];
+        let mut iv_hi = vec![0.0; n];
+        for j in 0..n {
+            let ia = self.b.interval(j);
+            assert!(
+                ia.bits_hi() + cbits < bud,
+                "authenticated scale would overflow: normalize first (element {j})"
+            );
+            let z = ia.mul(&enc.iv);
+            iv_lo[j] = z.lo;
+            iv_hi[j] = z.hi;
+        }
+        let bars = ctx.barrett();
+        let k = self.b.k();
+        let mut res = ResiduePlane::zero(k, n);
+        let mut mac = ResiduePlane::zero(k, n);
+        for ch in 0..k {
+            plane::lane_scale(bars[ch], self.b.res.lane(ch), enc.r.r[ch], res.lane_mut(ch));
+            plane::lane_scale(bars[ch], self.mac.lane(ch), enc.r.r[ch], mac.lane_mut(ch));
+        }
+        AuthBatch {
+            b: HrfnaBatch {
+                res,
+                f: self.b.f.iter().map(|&a| a + enc.f).collect(),
+                iv_lo,
+                iv_hi,
+            },
+            mac,
+            f_dup: self.f_dup.iter().map(|&a| a + enc.f).collect(),
+        }
+    }
+
+    /// MAC-aware bulk normalization: the value lanes rescale exactly as
+    /// [`norm::bulk_normalize`] would, and the MAC lanes rescale with the
+    /// same Definition-4 offset scaled by `α`
+    /// ([`crate::rns::crt::CrtContext::rescale_batch_with_mac`]). The
+    /// exponent duplicate advances by the same applied shift — not
+    /// re-copied from `f`, so a pre-existing exponent corruption is
+    /// still caught afterwards.
+    pub fn normalize_flagged(&mut self, key: &AuthKey, ctx: &HrfnaContext) -> NormReport {
+        let f_before: Vec<i32> = self.b.f.clone();
+        let report = norm::bulk_normalize_authenticated(&mut self.b, &mut self.mac, &key.alpha, ctx, None);
+        for (j, &fb) in f_before.iter().enumerate() {
+            self.f_dup[j] += self.b.f[j] - fb;
+        }
+        report
+    }
+}
+
+/// One dual-MAC verified planar dot over the column window
+/// `[lo, lo + len)` of four channel-major planes: the value result
+/// `r_c = Σ x·y`, checked against **both** `Σ mac(x)·y ?= α·r` and
+/// `Σ x·mac(y) ?= α·r` per channel. The first check replays the dot with
+/// `x` entering through its MAC lanes (catching post-encode corruption
+/// of `x` or of its MACs), the second with `y` (symmetrically) — a
+/// corruption of any one of the four operand planes breaks at least one
+/// equation in the corrupted channel. Returns the per-channel dot
+/// residues, or the first failing channel.
+pub fn verified_window_dot(
+    bars: &[Barrett],
+    key: &AuthKey,
+    x: &ResiduePlane,
+    mac_x: &ResiduePlane,
+    y: &ResiduePlane,
+    mac_y: &ResiduePlane,
+    lo: usize,
+    len: usize,
+) -> Result<Vec<u64>, usize> {
+    verified_window_dot_at(bars, key, x, mac_x, y, mac_y, lo, lo, len)
+}
+
+/// [`verified_window_dot`] with independent column offsets per operand —
+/// the FIR executor dots a suffix of the reversed-taps plane against a
+/// sliding window of the signal plane. Every word of all four windows is
+/// range-checked against its modulus *before* the dots, so an
+/// out-of-range corruption is detected deterministically and the lane
+/// kernels never see a word outside their `< m < 2^31` invariant.
+pub fn verified_window_dot_at(
+    bars: &[Barrett],
+    key: &AuthKey,
+    x: &ResiduePlane,
+    mac_x: &ResiduePlane,
+    y: &ResiduePlane,
+    mac_y: &ResiduePlane,
+    x_lo: usize,
+    y_lo: usize,
+    len: usize,
+) -> Result<Vec<u64>, usize> {
+    let k = bars.len();
+    let mut out = vec![0u64; k];
+    for (c, slot) in out.iter_mut().enumerate() {
+        let bar = bars[c];
+        let m = bar.m;
+        let xs = &x.lane(c)[x_lo..x_lo + len];
+        let ys = &y.lane(c)[y_lo..y_lo + len];
+        let mxs = &mac_x.lane(c)[x_lo..x_lo + len];
+        let mys = &mac_y.lane(c)[y_lo..y_lo + len];
+        let in_range = |w: &[u64]| w.iter().all(|&v| v < m);
+        if !(in_range(xs) && in_range(ys) && in_range(mxs) && in_range(mys)) {
+            return Err(c);
+        }
+        let r = plane::lane_dot(bar, xs, ys);
+        let tx = plane::lane_dot(bar, mxs, ys);
+        let ty = plane::lane_dot(bar, xs, mys);
+        let want = bar.mul(key.alpha[c], r);
+        if tx != want || ty != want {
+            return Err(c);
+        }
+        *slot = r;
+    }
+    Ok(out)
+}
+
+/// Freivalds randomized verification of `A·B ?= C` (all `dim × dim`,
+/// row-major f64): per round, draw `r ∈ {−1, +1}^dim` and compare
+/// `A·(B·r)` against `C·r` — O(dim²) per round against the O(dim³)
+/// product. Comparison is tolerance-based: floating evaluation orders
+/// differ, so the check catches corruptions whose magnitude exceeds
+/// `tol` per output element (the serving path computes `tol` from the
+/// tier's relative bound and the result scale; an undetected residue
+/// flip decodes to an error many orders of magnitude above it, so the
+/// fault model is firmly inside the detected region). Miss probability
+/// for a genuinely wrong product is ≤ 2^-rounds.
+pub fn freivalds_matmul_check(
+    a: &[f64],
+    b: &[f64],
+    c: &[f64],
+    dim: usize,
+    rounds: u32,
+    seed: u64,
+    tol: f64,
+) -> bool {
+    debug_assert_eq!(a.len(), dim * dim);
+    debug_assert_eq!(b.len(), dim * dim);
+    debug_assert_eq!(c.len(), dim * dim);
+    let mut rng = Rng::new(seed ^ 0xF4EE_7A1D_5EED_0001);
+    let mut r = vec![0.0f64; dim];
+    let mut br = vec![0.0f64; dim];
+    for _ in 0..rounds.max(1) {
+        for v in r.iter_mut() {
+            *v = if rng.bool() { 1.0 } else { -1.0 };
+        }
+        for (i, slot) in br.iter_mut().enumerate() {
+            let row = &b[i * dim..(i + 1) * dim];
+            *slot = row.iter().zip(&r).map(|(&bv, &rv)| bv * rv).sum();
+        }
+        for i in 0..dim {
+            let arow = &a[i * dim..(i + 1) * dim];
+            let abr: f64 = arow.iter().zip(&br).map(|(&av, &bv)| av * bv).sum();
+            let crow = &c[i * dim..(i + 1) * dim];
+            let cr: f64 = crow.iter().zip(&r).map(|(&cv, &rv)| cv * rv).sum();
+            // The negated form keeps NaN on the reject side: a NaN
+            // difference fails `<= tol` and therefore fails the check.
+            if !((abr - cr).abs() <= tol) {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// FNV-1a checksum over canonical f64 bit patterns — the wire-integrity
+/// cover for authenticated result frames (a frame corrupted in flight or
+/// in worker serialization fails the router-side recompute). NaN payloads
+/// collapse to the canonical quiet NaN and `-0.0` to `+0.0`, so the
+/// checksum survives a JSON round trip.
+pub fn values_checksum(values: &[f64]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &v in values {
+        let canon = if v.is_nan() {
+            f64::NAN
+        } else if v == 0.0 {
+            0.0
+        } else {
+            v
+        };
+        for byte in canon.to_bits().to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::faults::flip_bit;
+    use crate::util::proptest::check_with;
+    use crate::workloads::generators::Dist;
+
+    fn ctx() -> HrfnaContext {
+        HrfnaContext::paper_default()
+    }
+
+    fn key(c: &HrfnaContext, seed: u64) -> AuthKey {
+        AuthKey::sample(&c.cfg.moduli, seed)
+    }
+
+    #[test]
+    fn alpha_sampling_respects_range_and_miss_bound() {
+        let c = ctx();
+        for seed in 0..64 {
+            let k = key(&c, seed);
+            for (a, &m) in k.alpha.iter().zip(&c.cfg.moduli) {
+                assert!((1..m).contains(a), "alpha {a} outside [1, {m})");
+            }
+        }
+        // The documented adversarial bound: max_i 1/(m_i − 1), i.e. one
+        // part in m_i above the information-theoretic 1/m_i.
+        let min_m = *c.cfg.moduli.iter().min().unwrap() as f64;
+        let p = AuthKey::miss_probability(&c.cfg.moduli);
+        assert_eq!(p, 1.0 / (min_m - 1.0));
+        assert!(p < 2.0 / min_m, "bound must stay within 2/m of 1/m");
+    }
+
+    #[test]
+    fn authenticate_verify_decode_roundtrip() {
+        let c = ctx();
+        let k = key(&c, 7);
+        let mut rng = Rng::new(3);
+        let xs = Dist::moderate().sample_vec(&mut rng, 33);
+        let b = HrfnaBatch::encode(&xs, &c);
+        let want = b.decode(&c);
+        let a = AuthBatch::authenticate(b, &k, &c);
+        assert_eq!(a.decode_verified(&k, &c).expect("clean batch"), want);
+    }
+
+    #[test]
+    fn prop_any_single_bit_flip_is_detected() {
+        // The ISSUE-8 single-event-upset property: one bit flip in any
+        // value lane word, MAC lane word, or exponent word of an
+        // authenticated batch fails verification. Lane flips below the
+        // modulus break the α-relation (odd m ⇒ 2^b invertible); flips
+        // landing at/above the modulus fail the range check.
+        let c = ctx();
+        check_with("auth-single-flip-detected", 64, |rng| {
+            let k = key(&c, rng.next_u64());
+            let n = 1 + rng.below(16) as usize;
+            let xs: Vec<f64> = (0..n).map(|_| rng.uniform(-1e6, 1e6)).collect();
+            let mut a = AuthBatch::authenticate(HrfnaBatch::encode(&xs, &c), &k, &c);
+            crate::prop_assert!(a.verify(&k, &c).is_ok(), "clean batch must verify");
+            let elem = rng.below(n as u64) as usize;
+            let chan = rng.below(a.b.k() as u64) as usize;
+            match rng.below(3) {
+                0 => {
+                    // Value lane: flip a bit of the residue word. Bits
+                    // within the modulus width change the residue; higher
+                    // bits push it out of range. Either way: detected.
+                    let bit = rng.below(33) as u32;
+                    let w = a.b.res.lane(chan)[elem];
+                    a.b.res.lane_mut(chan)[elem] = flip_bit(w, bit);
+                }
+                1 => {
+                    let bit = rng.below(33) as u32;
+                    let w = a.mac.lane(chan)[elem];
+                    a.mac.lane_mut(chan)[elem] = flip_bit(w, bit);
+                }
+                _ => {
+                    let bit = rng.below(32) as u32;
+                    a.b.f[elem] ^= 1i32 << (bit % 31);
+                }
+            }
+            crate::prop_assert!(
+                a.verify(&k, &c).is_err(),
+                "single flip must be detected (elem {elem} chan {chan})"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mac_survives_mul_and_scale() {
+        // Homomorphism through the multiplicative kernels: the value
+        // lanes of mul_plain are exactly the planar lane product, the MAC
+        // lanes are exactly α·(that product), and the batch verifies.
+        let c = ctx();
+        let k = key(&c, 11);
+        let mut rng = Rng::new(5);
+        let n = 17;
+        let xs: Vec<f64> = (0..n).map(|_| rng.uniform(-1e4, 1e4)).collect();
+        let ys: Vec<f64> = (0..n).map(|_| rng.uniform(-1e4, 1e4)).collect();
+        let bx = HrfnaBatch::encode(&xs, &c);
+        let by = HrfnaBatch::encode(&ys, &c);
+        let auth = AuthBatch::authenticate(bx.clone(), &k, &c).mul_plain(&by, &c);
+        let want_res = bx.plane().mul(by.plane(), c.barrett());
+        assert_eq!(auth.b.res, want_res, "value lanes are the plain lane product");
+        assert_eq!(
+            auth.mac,
+            want_res.scale_channels(&k.alpha, c.barrett()),
+            "MAC lanes are α·product"
+        );
+        assert!(auth.verify(&k, &c).is_ok());
+        let scaled = auth.scale_plain(0.5, &c);
+        assert!(scaled.verify(&k, &c).is_ok());
+        let got = scaled.decode_verified(&k, &c).unwrap();
+        for (j, g) in got.iter().enumerate() {
+            let w = 0.5 * xs[j] * ys[j];
+            assert!((g - w).abs() <= 1e-7 * w.abs().max(1.0), "j={j} got {g} want {w}");
+        }
+    }
+
+    #[test]
+    fn mac_survives_bulk_normalization_bit_identically() {
+        // The MAC-aware rescale: after a flagged sweep the value lanes are
+        // bit-identical to the plain bulk_normalize, the exponent
+        // duplicate tracked the applied shifts, and the MAC still checks.
+        let c = HrfnaContext::new(crate::config::HrfnaConfig {
+            tau_bits: 40,
+            ..crate::config::HrfnaConfig::paper_default()
+        });
+        let k = key(&c, 19);
+        let mut rng = Rng::new(23);
+        for round in 0..8 {
+            let n = 1 + rng.below(12) as usize;
+            let items: Vec<crate::hybrid::number::Hrfna> = (0..n)
+                .map(|_| {
+                    let bits = 20 + rng.below(40) as u32;
+                    let v = (rng.next_u64() >> (64 - bits)).max(1) as i64;
+                    crate::hybrid::number::Hrfna::from_signed_int(
+                        if rng.bool() { v } else { -v },
+                        -10,
+                        &c,
+                    )
+                })
+                .collect();
+            let b = HrfnaBatch::from_items(&items, c.k());
+            let mut plain = b.clone();
+            let mut auth = AuthBatch::authenticate(b, &k, &c);
+            let got = auth.normalize_flagged(&k, &c);
+            let want = plain.normalize_flagged(&c);
+            assert_eq!(got, want, "round {round}: event report diverged");
+            assert_eq!(auth.b.res, plain.res, "round {round}: value lanes diverged");
+            assert_eq!(auth.b.f, plain.f, "round {round}: exponents diverged");
+            assert_eq!(auth.f_dup, plain.f, "round {round}: duplicate exponents stale");
+            assert!(auth.verify(&k, &c).is_ok(), "round {round}: MAC broken by rescale");
+        }
+    }
+
+    #[test]
+    fn verified_window_dot_accepts_clean_and_catches_flips() {
+        let c = ctx();
+        let k = key(&c, 13);
+        let bars = c.barrett();
+        let mut rng = Rng::new(9);
+        let n = 96;
+        let xs: Vec<f64> = (0..n).map(|_| rng.uniform(-100.0, 100.0)).collect();
+        let ys: Vec<f64> = (0..n).map(|_| rng.uniform(-100.0, 100.0)).collect();
+        let bx = HrfnaBatch::encode(&xs, &c);
+        let by = HrfnaBatch::encode(&ys, &c);
+        let mx = bx.plane().scale_channels(&k.alpha, bars);
+        let my = by.plane().scale_channels(&k.alpha, bars);
+        let clean = verified_window_dot(bars, &k, bx.plane(), &mx, by.plane(), &my, 0, n);
+        let r = clean.expect("clean dot verifies");
+        // The verified residues are the plain lane dots.
+        for (ch, &rc) in r.iter().enumerate() {
+            assert_eq!(
+                rc,
+                plane::lane_dot(bars[ch], bx.plane().lane(ch), by.plane().lane(ch))
+            );
+        }
+        // Flip one x element in one channel: the mac_x·y replay diverges.
+        let mut bx2 = bx.clone();
+        let w = bx2.plane().lane(3)[17];
+        bx2.res.lane_mut(3)[17] = flip_bit(w, 5);
+        let err = verified_window_dot(bars, &k, bx2.plane(), &mx, by.plane(), &my, 0, n);
+        assert_eq!(err, Err(3), "x flip detected in its channel");
+        // Flip one y element: the x·mac_y replay diverges.
+        let mut by2 = by.clone();
+        let w = by2.plane().lane(6)[40];
+        by2.res.lane_mut(6)[40] = flip_bit(w, 2);
+        let err = verified_window_dot(bars, &k, bx.plane(), &mx, by2.plane(), &my, 0, n);
+        assert_eq!(err, Err(6), "y flip detected in its channel");
+        // Flip a MAC word: its own replay diverges.
+        let mut mx2 = mx.clone();
+        let w = mx2.lane(1)[8];
+        mx2.lane_mut(1)[8] = flip_bit(w, 9);
+        let err = verified_window_dot(bars, &k, bx.plane(), &mx2, by.plane(), &my, 0, n);
+        assert_eq!(err, Err(1), "mac_x flip detected in its channel");
+    }
+
+    #[test]
+    fn freivalds_accepts_true_products_and_rejects_corruption() {
+        let mut rng = Rng::new(21);
+        let dim = 24;
+        let a: Vec<f64> = (0..dim * dim).map(|_| rng.uniform(-2.0, 2.0)).collect();
+        let b: Vec<f64> = (0..dim * dim).map(|_| rng.uniform(-2.0, 2.0)).collect();
+        let mut cm = vec![0.0f64; dim * dim];
+        for i in 0..dim {
+            for j in 0..dim {
+                cm[i * dim + j] = (0..dim).map(|t| a[i * dim + t] * b[t * dim + j]).sum();
+            }
+        }
+        let tol = 1e-9 * (dim as f64);
+        for seed in 0..16 {
+            assert!(freivalds_matmul_check(&a, &b, &cm, dim, 2, seed, tol));
+        }
+        // A single high-bit flip (the decoded shape of a lane corruption)
+        // is far outside tolerance: rejected for every seed.
+        let mut bad = cm.clone();
+        bad[5 * dim + 7] = crate::util::faults::flip_f64_high_bit(bad[5 * dim + 7], 3);
+        for seed in 0..16 {
+            assert!(
+                !freivalds_matmul_check(&a, &b, &bad, dim, 2, seed, tol),
+                "seed {seed} missed the corruption"
+            );
+        }
+    }
+
+    #[test]
+    fn checksum_is_order_sensitive_and_canonicalizes() {
+        let a = values_checksum(&[1.0, 2.0, 3.0]);
+        let b = values_checksum(&[3.0, 2.0, 1.0]);
+        assert_ne!(a, b);
+        assert_eq!(values_checksum(&[]), values_checksum(&[]));
+        assert_eq!(
+            values_checksum(&[f64::NAN, -0.0]),
+            values_checksum(&[f64::from_bits(0x7ff8_dead_beef_0001), 0.0]),
+            "NaN payloads and signed zero must canonicalize"
+        );
+        assert_ne!(values_checksum(&[1.0]), values_checksum(&[1.0 + 1e-12]));
+    }
+}

@@ -22,6 +22,7 @@
 //!   lazily-built shared context, plus the bound-driven escalation policy
 //!   the serving stack resolves requests through.
 
+pub mod auth;
 pub mod context;
 pub mod interval;
 pub mod number;
@@ -33,6 +34,7 @@ pub mod array;
 pub mod registry;
 
 pub use array::HrfnaArray;
+pub use auth::{AuthBatch, AuthFailure, AuthKey};
 pub use batch::HrfnaBatch;
 pub use context::{HrfnaContext, OpCounters, OpSnapshot};
 pub use interval::Interval;

@@ -230,6 +230,88 @@ pub fn bulk_normalize(
     report
 }
 
+/// MAC-carrying bulk normalization (the authenticated-serving form of
+/// [`bulk_normalize`]): identical flag classification and value-lane
+/// arithmetic, but the flagged columns of the companion MAC plane are
+/// gathered alongside the value columns and rescaled through
+/// [`crate::rns::crt::CrtContext::rescale_batch_with_mac`], which applies
+/// the same Definition-4 offset scaled by the channel key — so
+/// `mac_i = α_i·r_i` holds exactly after the sweep without ever
+/// recomputing a MAC from a value. Requires the odd-moduli fast path
+/// (enforced at admission by `registry::tier_covers` for authenticated
+/// traffic; panics loudly otherwise).
+pub fn bulk_normalize_authenticated(
+    b: &mut HrfnaBatch,
+    mac: &mut crate::rns::plane::ResiduePlane,
+    alpha: &[u64],
+    ctx: &HrfnaContext,
+    guard_bits: Option<u32>,
+) -> NormReport {
+    let tau = ctx.tau_f64();
+    let sig = ctx.cfg.sig_bits;
+    assert_guard_budget(guard_bits, sig);
+    debug_assert_eq!(mac.k(), b.k());
+    debug_assert_eq!(mac.n(), b.len());
+    let mut idx: Vec<usize> = Vec::new();
+    let mut shifts: Vec<u32> = Vec::new();
+    let mut report = NormReport::default();
+    for j in 0..b.len() {
+        let Some((class, s)) = classify(&b.interval(j), tau, sig, guard_bits) else {
+            continue;
+        };
+        idx.push(j);
+        shifts.push(s);
+        match class {
+            Flag::Threshold => report.threshold += 1,
+            Flag::Guard => report.guard += 1,
+        }
+    }
+    if idx.is_empty() {
+        return report;
+    }
+    ctx.counters
+        .norms
+        .fetch_add(report.threshold as u64, Ordering::Relaxed);
+    ctx.counters
+        .guard_norms
+        .fetch_add(report.guard as u64, Ordering::Relaxed);
+    ctx.counters.reconstructions.fetch_add(1, Ordering::Relaxed);
+    let check_bounds = cfg!(debug_assertions) || cfg!(test);
+    let f_before: Vec<i32> = if check_bounds {
+        idx.iter().map(|&j| b.f[j]).collect()
+    } else {
+        Vec::new()
+    };
+    let mut scratch = b.res.gather_columns(&idx);
+    let mut mac_scratch = mac.gather_columns(&idx);
+    let outcomes = ctx.crt.rescale_batch_with_mac(
+        scratch.lanes_mut(),
+        mac_scratch.lanes_mut(),
+        alpha,
+        idx.len(),
+        &shifts,
+    );
+    b.res.scatter_columns(&idx, &scratch);
+    mac.scatter_columns(&idx, &mac_scratch);
+    for ((&j, o), &s) in idx.iter().zip(&outcomes).zip(&shifts) {
+        b.f[j] += s as i32;
+        let signed = if o.neg { -o.mag_after } else { o.mag_after };
+        let iv = reseeded_interval(signed);
+        b.iv_lo[j] = iv.lo;
+        b.iv_hi[j] = iv.hi;
+    }
+    if check_bounds {
+        error::assert_events_within_bounds(
+            outcomes
+                .iter()
+                .zip(&shifts)
+                .zip(&f_before)
+                .map(|((o, &s), &f)| error::event_sample(o.mag_before, o.mag_after, f, s)),
+        );
+    }
+    report
+}
+
 /// The former per-element bulk path, kept as the executable
 /// specification: identical flag classification, then the scalar
 /// normalize per flagged element. Backs the bit-identity property tests

@@ -137,6 +137,12 @@ pub enum EscalateReason {
     AccumulatorOverflow,
     /// The tier's composed relative budget exceeds the job's tolerance.
     BoundAboveTolerance,
+    /// Authenticated (MAC-carrying) jobs need the odd-moduli fast path
+    /// and one extra guard bit over the plain accumulator budget: a MAC
+    /// only misses a corruption that is an exact multiple of M, so the
+    /// admission bound must keep authenticated accumulations one bit
+    /// further from the mod-M wraparound blind spot.
+    MacBudget,
 }
 
 /// Outcome of tier resolution for one request.
@@ -168,11 +174,23 @@ pub fn tier_rel_bound(cfg: &HrfnaConfig, env: &MagnitudeEnvelope) -> f64 {
 }
 
 /// Check one tier configuration against an envelope and tolerance.
+///
+/// `authenticated` jobs additionally require the MAC budget: every
+/// modulus odd (the SPDZ-style MAC lanes rescale through the
+/// residue-domain fast path, which needs 2 invertible mod every m_i)
+/// and one guard bit of extra accumulator headroom, because a residue
+/// corruption the MAC cannot see must be an exact multiple of M — the
+/// extra bit keeps authenticated sums a factor of two away from that
+/// wraparound blind spot.
 pub fn tier_covers(
     cfg: &HrfnaConfig,
     env: &MagnitudeEnvelope,
     tolerance: Option<f64>,
+    authenticated: bool,
 ) -> Result<(), EscalateReason> {
+    if authenticated && cfg.moduli.iter().any(|&m| m % 2 == 0) {
+        return Err(EscalateReason::MacBudget);
+    }
     // Exponent legality: f = ⌊log2 max|x|⌋ − sig + 1; operands and their
     // pairwise products (exponent 2f) must stay inside ±(2^{ω_f−1}−1).
     if env.max_abs > 0.0 {
@@ -189,6 +207,9 @@ pub fn tier_covers(
     let acc_bits = 2 * cfg.sig_bits + ceil_log2(env.terms) + 1;
     if f64::from(acc_bits) >= cfg.m_bits() - 2.0 {
         return Err(EscalateReason::AccumulatorOverflow);
+    }
+    if authenticated && f64::from(acc_bits + 1) >= cfg.m_bits() - 2.0 {
+        return Err(EscalateReason::MacBudget);
     }
     if let Some(tol) = tolerance {
         if tier_rel_bound(cfg, env) > tol {
@@ -259,12 +280,13 @@ impl ContextRegistry {
         requested: Tier,
         env: &MagnitudeEnvelope,
         tolerance: Option<f64>,
+        authenticated: bool,
     ) -> Resolution {
         let mut tier = requested;
         let mut escalations = 0u32;
         let mut first_reason = None;
         loop {
-            match tier_covers(self.cfg(tier), env, tolerance) {
+            match tier_covers(self.cfg(tier), env, tolerance, authenticated) {
                 Ok(()) => {
                     return Resolution { tier, escalations, covered: true, reason: first_reason }
                 }
@@ -442,12 +464,12 @@ mod tests {
     #[test]
     fn resolve_prefers_the_requested_tier_when_it_covers() {
         let reg = ContextRegistry::new();
-        let r = reg.resolve(Tier::Lo, &env(1.0, 512, 0), None);
+        let r = reg.resolve(Tier::Lo, &env(1.0, 512, 0), None, false);
         assert_eq!(
             r,
             Resolution { tier: Tier::Lo, escalations: 0, covered: true, reason: None }
         );
-        let r = reg.resolve(Tier::Paper, &env(1.0, 4096, 0), Some(1e-6));
+        let r = reg.resolve(Tier::Paper, &env(1.0, 4096, 0), Some(1e-6), false);
         assert_eq!(r.tier, Tier::Paper);
         assert_eq!(r.escalations, 0);
     }
@@ -456,14 +478,14 @@ mod tests {
     fn tolerance_below_lo_budget_escalates_to_paper() {
         let reg = ContextRegistry::new();
         // lo budget at 512 terms ≈ √512·2^-17 ≈ 1.7e-4; 1e-7 needs paper.
-        let r = reg.resolve(Tier::Lo, &env(1.0, 512, 0), Some(1e-7));
+        let r = reg.resolve(Tier::Lo, &env(1.0, 512, 0), Some(1e-7), false);
         assert_eq!(r.tier, Tier::Paper);
         assert_eq!(r.escalations, 1);
         assert!(r.covered);
         assert_eq!(r.reason, Some(EscalateReason::BoundAboveTolerance));
         // 1e-12 is below paper's ≈ √512·2^-29 ≈ 4e-8 budget too → wide
         // (whose √512·2^-47 ≈ 1.6e-13 budget covers it).
-        let r = reg.resolve(Tier::Lo, &env(1.0, 512, 0), Some(1e-12));
+        let r = reg.resolve(Tier::Lo, &env(1.0, 512, 0), Some(1e-12), false);
         assert_eq!(r.tier, Tier::Wide);
         assert_eq!(r.escalations, 2);
         assert!(r.covered);
@@ -474,7 +496,7 @@ mod tests {
         let reg = ContextRegistry::new();
         // lo: 2·18 + ceil_log2(terms) + 1 must stay under m_bits−2 ≈ 62;
         // 2^40 terms pushes it to 77 → overflow; paper (budget ~126) fits.
-        let r = reg.resolve(Tier::Lo, &env(1.0, 1 << 40, 0), None);
+        let r = reg.resolve(Tier::Lo, &env(1.0, 1 << 40, 0), None, false);
         assert_eq!(r.tier, Tier::Paper);
         assert_eq!(r.reason, Some(EscalateReason::AccumulatorOverflow));
         assert!(r.covered);
@@ -484,15 +506,53 @@ mod tests {
     fn exponent_range_escalates_subnormal_magnitudes() {
         let reg = ContextRegistry::new();
         // lo: ω=12 → limit 2047; |2f| for a 2^-1022 operand is ≈ 2078.
-        let r = reg.resolve(Tier::Lo, &env(f64::MIN_POSITIVE, 8, 0), None);
+        let r = reg.resolve(Tier::Lo, &env(f64::MIN_POSITIVE, 8, 0), None, false);
         assert!(r.tier > Tier::Lo, "subnormal-scale input must leave lo");
         assert_eq!(r.reason, Some(EscalateReason::ExponentRange));
     }
 
     #[test]
+    fn authenticated_jobs_burn_one_extra_guard_bit() {
+        let reg = ContextRegistry::new();
+        // lo: acc_bits = 2·18 + 24 + 1 = 61 < m_bits−2 ≈ 62, so a plain
+        // 2^24-term job fits — but the authenticated budget needs 62 and
+        // escalates with the MAC reason.
+        let e = env(1.0, 1 << 24, 0);
+        let plain = reg.resolve(Tier::Lo, &e, None, false);
+        assert_eq!(plain.tier, Tier::Lo);
+        assert!(plain.covered);
+        let auth = reg.resolve(Tier::Lo, &e, None, true);
+        assert_eq!(auth.tier, Tier::Paper);
+        assert_eq!(auth.escalations, 1);
+        assert!(auth.covered);
+        assert_eq!(auth.reason, Some(EscalateReason::MacBudget));
+        // Modest authenticated jobs stay on the requested tier.
+        let small = reg.resolve(Tier::Lo, &env(1.0, 512, 0), None, true);
+        assert_eq!(small.tier, Tier::Lo);
+        assert!(small.covered);
+    }
+
+    #[test]
+    fn even_modulus_sets_cannot_carry_macs() {
+        // A power-of-two modulus kills the odd-moduli fast path the MAC
+        // rescale depends on: plain traffic is still admissible, but
+        // authenticated traffic must be refused with the MAC reason.
+        let cfg = HrfnaConfig {
+            moduli: vec![65536, 65521, 65519],
+            ..HrfnaConfig::low_precision()
+        };
+        let e = env(1.0, 16, 0);
+        assert!(tier_covers(&cfg, &e, None, false).is_ok());
+        assert_eq!(
+            tier_covers(&cfg, &e, None, true),
+            Err(EscalateReason::MacBudget)
+        );
+    }
+
+    #[test]
     fn impossible_tolerance_saturates_at_wide() {
         let reg = ContextRegistry::new();
-        let r = reg.resolve(Tier::Lo, &env(1.0, 4096, 0), Some(1e-30));
+        let r = reg.resolve(Tier::Lo, &env(1.0, 4096, 0), Some(1e-30), false);
         assert_eq!(r.tier, Tier::Wide);
         assert_eq!(r.escalations, 2);
         assert!(!r.covered, "no tier promises 1e-30");
@@ -519,7 +579,7 @@ mod tests {
         assert_eq!(e.max_abs, 3.5);
         assert_eq!(e.terms, 3);
         // Zero payloads cover everywhere (no exponent to overflow).
-        assert!(tier_covers(&Tier::Lo.config(), &env(0.0, 4, 0), None).is_ok());
+        assert!(tier_covers(&Tier::Lo.config(), &env(0.0, 4, 0), None, false).is_ok());
     }
 
     #[test]

@@ -32,6 +32,30 @@ use std::sync::Arc;
 
 fn main() {
     let args = Args::from_env();
+    // Fault injection is process-wide: installing here covers every
+    // serving subcommand (serve, serve-rpc, worker). The call sites are
+    // compiled only with `--features fault-inject`, so on a default
+    // build the flag installs a plan nothing reads.
+    if let Some(spec) = args.get("inject-faults") {
+        use hrfna::util::faults::FaultPlan;
+        match FaultPlan::parse(spec) {
+            Ok(plan) => {
+                hrfna::util::faults::install(plan);
+                if cfg!(feature = "fault-inject") {
+                    eprintln!("fault injection armed: {plan:?}");
+                } else {
+                    eprintln!(
+                        "warning: --inject-faults set but this build lacks the \
+                         fault-inject feature; no faults will fire"
+                    );
+                }
+            }
+            Err(e) => {
+                eprintln!("bad --inject-faults: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
     let cfg = match args.get("config") {
         Some(path) => HrfnaConfig::from_file(path).expect("config file"),
         None => HrfnaConfig::preset(&args.str_or("preset", "paper")).expect("preset"),
@@ -293,6 +317,7 @@ fn cmd_rpc_load(args: &Args) {
     let jobs = args.parse_or("jobs", 48usize);
     let burst = args.parse_or("burst", 8usize);
     let mixed_tiers = args.flag("mixed-tiers");
+    let authenticate = args.flag("authenticate");
     let mode = if args.flag("reconnect-per-job") { ConnMode::PerJob } else { ConnMode::Persistent };
 
     // Fail fast (with retries) if the server never comes up.
@@ -305,6 +330,14 @@ fn cmd_rpc_load(args: &Args) {
     let make = |c: u64, i: usize| -> JobSpec {
         let (slot, mut rng) = mix.request_rng(c + 1, i);
         let spec = match slot {
+            // With --authenticate, one of the four dot slots becomes a
+            // FIR job so MAC lanes run end to end over both window
+            // kinds; the unauthenticated mix is untouched.
+            3 if authenticate => {
+                let taps = hrfna::workloads::fir::lowpass_taps(16, 0.2);
+                let x = mix.dist.sample_vec(&mut rng, mix.dot_n);
+                JobSpec::fir(taps, x)
+            }
             0..=3 => {
                 let x = mix.dist.sample_vec(&mut rng, mix.dot_n);
                 let y = mix.dist.sample_vec(&mut rng, mix.dot_n);
@@ -330,8 +363,21 @@ fn cmd_rpc_load(args: &Args) {
                 Payload::Rk4 { y0: vec![2.0, 0.0], mu: 1.0, dt: 0.01, steps: mix.rk4_steps },
             ),
         };
-        if mixed_tiers && spec.kind.is_hybrid() {
+        let spec = if mixed_tiers && spec.kind.is_hybrid() {
             spec.tier(mix.tier_for(i))
+        } else {
+            spec
+        };
+        // MAC lanes exist only for the dot/fir/matmul hybrid kinds —
+        // the rest of the mix stays unauthenticated (and bit-identical
+        // to the pre-auth serving path).
+        if authenticate
+            && matches!(
+                spec.kind,
+                JobKind::DotHybrid | JobKind::FirHybrid | JobKind::MatmulHybrid
+            )
+        {
+            spec.authenticated()
         } else {
             spec
         }
@@ -339,11 +385,36 @@ fn cmd_rpc_load(args: &Args) {
 
     let report = socket_closed_loop(&addr, clients, jobs, burst, mode, &make);
     println!(
-        "rpc-load: offered {} served {} rejected {} in {:.2?} ({:.0} jobs/s over the wire)",
-        report.offered, report.completed, report.rejected, report.wall, report.jobs_per_s
+        "rpc-load: offered {} served {} rejected {} corrupted {} in {:.2?} ({:.0} jobs/s over the wire)",
+        report.offered,
+        report.completed,
+        report.rejected,
+        report.corrupted,
+        report.wall,
+        report.jobs_per_s
     );
     if let Some(lat) = &report.latency_us {
         println!("  latency p50 {:.0} us  p99 {:.0} us", lat.p50, lat.p99);
+    }
+
+    // The server's integrity view (detections + quarantined workers),
+    // read before shutdown while the backend is still up. This is what
+    // the fault-smoke tier gates on.
+    let mut failed = false;
+    if authenticate || args.flag("expect-detections") {
+        let mut c = RpcClient::connect(&addr).expect("connect for health");
+        let (detections, quarantined) = c.health_integrity().expect("health answers");
+        println!("rpc-load: server integrity: detections {detections} quarantined {quarantined}");
+        if args.flag("expect-detections") {
+            if detections == 0 {
+                eprintln!("rpc-load: expected integrity detections, server saw none");
+                failed = true;
+            }
+            if quarantined == 0 {
+                eprintln!("rpc-load: expected a quarantined worker, server has none");
+                failed = true;
+            }
+        }
     }
 
     if args.flag("shutdown") {
@@ -351,12 +422,19 @@ fn cmd_rpc_load(args: &Args) {
         c.shutdown_server().expect("server acknowledges shutdown");
         println!("rpc-load: server draining");
     }
+    if report.corrupted > 0 {
+        eprintln!("rpc-load: {} corrupted results delivered", report.corrupted);
+        failed = true;
+    }
     if report.completed == 0 {
         eprintln!("rpc-load: nothing served");
-        std::process::exit(1);
+        failed = true;
     }
     if report.completed + report.rejected != report.offered {
         eprintln!("rpc-load: lost jobs (offered != served + rejected)");
+        failed = true;
+    }
+    if failed {
         std::process::exit(1);
     }
 }

@@ -585,6 +585,114 @@ impl CrtContext {
         out
     }
 
+    /// MAC-carrying variant of [`CrtContext::rescale_batch`]: rescales the
+    /// value lanes exactly as `rescale_batch` does and updates the
+    /// companion MAC lanes `mac_i = α_i·r_i mod m_i` homomorphically
+    /// through the same Definition-4 offset —
+    /// `mac'_i = (mac_i ± α_i·d_i)·2^{-s} mod m_i` — so `mac'_i = α_i·r'_i`
+    /// holds exactly afterwards. The MAC is never recomputed from the value
+    /// (that would launder a corrupted value into a valid MAC); a value
+    /// corrupted before the sweep still fails its check after it.
+    /// Rounding to zero zeroes the MAC lanes too (`α·0 = 0`).
+    ///
+    /// Only the residue-domain fast path supports the homomorphic update
+    /// (`2^{-s}` needs every modulus odd and the set inside the fixed
+    /// window); the BigUint fallback re-encodes from the reconstructed
+    /// integer, which is exactly the laundering the MAC exists to prevent,
+    /// so exotic modulus sets are rejected loudly here and at admission
+    /// (`registry::tier_covers` enforces the same precondition).
+    pub fn rescale_batch_with_mac(
+        &self,
+        lanes: &mut [u64],
+        macs: &mut [u64],
+        alpha: &[u64],
+        n: usize,
+        shifts: &[u32],
+    ) -> Vec<Rescaled> {
+        let k = self.k();
+        assert_eq!(lanes.len(), k * n, "lanes must be k×n channel-major");
+        assert_eq!(macs.len(), k * n, "MAC lanes must be k×n channel-major");
+        assert_eq!(alpha.len(), k, "one MAC key residue per channel");
+        assert_eq!(shifts.len(), n, "one shift per element");
+        let inv = self
+            .inv_pow2
+            .as_ref()
+            .filter(|_| self.fixed_ok)
+            .expect("authenticated rescale requires the odd-moduli residue-domain fast path");
+        let mut out = Vec::with_capacity(n);
+        for (j, &s) in shifts.iter().enumerate() {
+            let acc = self.fixed_accumulate(|c| lanes[c * n + j]);
+            let neg = fixed_cmp(&acc, &self.half_limbs) != std::cmp::Ordering::Less;
+            let mag = if neg {
+                let mut m = self.m_limbs;
+                fixed_sub(&mut m, &acc);
+                m
+            } else {
+                acc
+            };
+            let mag_before = fixed_to_f64(&mag);
+            if s == 0 {
+                out.push(Rescaled {
+                    neg: neg && !fixed_is_zero(&mag),
+                    mag_before,
+                    mag_after: mag_before,
+                });
+                continue;
+            }
+            let round_up = fixed_bit(&mag, s - 1);
+            let mut rounded = fixed_shr(&mag, s);
+            if round_up {
+                fixed_add_one(&mut rounded);
+            }
+            let mag_after = fixed_to_f64(&rounded);
+            if fixed_is_zero(&rounded) {
+                for c in 0..k {
+                    lanes[c * n + j] = 0;
+                    macs[c * n + j] = 0;
+                }
+                out.push(Rescaled {
+                    neg: false,
+                    mag_before,
+                    mag_after,
+                });
+                continue;
+            }
+            let low = fixed_low_bits(&mag, s);
+            let d = if round_up {
+                let mut p = fixed_pow2(s);
+                fixed_sub(&mut p, &low);
+                p
+            } else {
+                low
+            };
+            let add_d = neg != round_up;
+            for c in 0..k {
+                let bar = &self.barrett[c];
+                let mut dm = 0u64;
+                for (base, &limb) in self.limb_base[c].iter().zip(&d) {
+                    if limb != 0 {
+                        dm = bar.add(dm, base.mul(bar, bar.reduce(limb)));
+                    }
+                }
+                let r = lanes[c * n + j];
+                let t = if add_d { bar.add(r, dm) } else { bar.sub(r, dm) };
+                lanes[c * n + j] = inv[c].mul_inv_pow2(bar, t, s);
+                // Same offset, scaled by the channel key: α·(N'·2^s − N)
+                // folds as α_c·d_c, so the MAC stays α_c·r'_c exactly.
+                let adm = bar.mul(alpha[c], dm);
+                let mr = macs[c * n + j];
+                let mt = if add_d { bar.add(mr, adm) } else { bar.sub(mr, adm) };
+                macs[c * n + j] = inv[c].mul_inv_pow2(bar, mt, s);
+            }
+            out.push(Rescaled {
+                neg,
+                mag_before,
+                mag_after,
+            });
+        }
+        out
+    }
+
     /// BigUint mirror of [`CrtContext::rescale_batch`] (exotic modulus
     /// sets): reconstruct, round, re-encode, negate — exactly the scalar
     /// normalization tail, element by element.
@@ -1076,6 +1184,61 @@ mod tests {
     fn rescale_batch_rejects_misshaped_lanes() {
         let c = ctx();
         c.rescale_batch(&mut [0u64; 7], 2, &[1, 1]);
+    }
+
+    #[test]
+    fn prop_rescale_with_mac_tracks_value_lanes_exactly() {
+        // The authenticated rescale must (a) leave the value lanes
+        // bit-identical to the plain `rescale_batch`, and (b) keep the MAC
+        // invariant mac_i = α_i·r_i mod m_i exact through the event — the
+        // homomorphic update, never a recompute.
+        let c = ctx();
+        let k = c.k();
+        check_with("crt-rescale-mac", 48, |rng| {
+            let n = rng.below(11) as usize;
+            let alpha: Vec<u64> = c.moduli.iter().map(|&m| 1 + rng.below(m - 1)).collect();
+            let lanes = random_signed_lanes(&c, rng, n);
+            let shifts: Vec<u32> = (0..n)
+                .map(|_| match rng.below(4) {
+                    0 => 0,
+                    1 => 1 + rng.below(16) as u32,
+                    2 => 1 + rng.below(c.big_m.bit_length() as u64) as u32,
+                    _ => c.big_m.bit_length() + 1 + rng.below(32) as u32,
+                })
+                .collect();
+            let mut macs = vec![0u64; k * n];
+            for ch in 0..k {
+                let bar = &c.barrett[ch];
+                for j in 0..n {
+                    macs[ch * n + j] = bar.mul(alpha[ch], lanes[ch * n + j]);
+                }
+            }
+            let mut plain = lanes.clone();
+            let want = c.rescale_batch(&mut plain, n, &shifts);
+            let mut got_lanes = lanes.clone();
+            let got = c.rescale_batch_with_mac(&mut got_lanes, &mut macs, &alpha, n, &shifts);
+            crate::prop_assert!(got == want, "outcomes diverge");
+            crate::prop_assert!(got_lanes == plain, "value lanes diverge");
+            for ch in 0..k {
+                let bar = &c.barrett[ch];
+                for j in 0..n {
+                    crate::prop_assert!(
+                        macs[ch * n + j] == bar.mul(alpha[ch], got_lanes[ch * n + j]),
+                        "MAC invariant broken ch={ch} j={j}"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "odd-moduli")]
+    fn rescale_with_mac_rejects_even_modulus_sets() {
+        let c = CrtContext::new(&[65536, 65521, 65519]);
+        let mut lanes = vec![0u64; 3];
+        let mut macs = vec![0u64; 3];
+        c.rescale_batch_with_mac(&mut lanes, &mut macs, &[1, 1, 1], 1, &[1]);
     }
 
     #[test]

@@ -259,6 +259,20 @@ impl ResiduePlane {
         }
     }
 
+    /// Per-channel scaling by a key residue: `out[c][j] = α_c·self[c][j]
+    /// mod m_c` — the MAC-lane derivation of the authenticated serving
+    /// path (`mac(x) = α·x` per channel, [`crate::hybrid::auth`]). One
+    /// [`lane_scale`] Shoup pass per channel; `alpha[c] < m_c` required.
+    pub fn scale_channels(&self, alpha: &[u64], bars: &[Barrett]) -> ResiduePlane {
+        debug_assert_eq!(alpha.len(), self.k);
+        debug_assert_eq!(bars.len(), self.k);
+        let mut out = ResiduePlane::zero(self.k, self.n);
+        for c in 0..self.k {
+            lane_scale(bars[c], self.lane(c), alpha[c], out.lane_mut(c));
+        }
+        out
+    }
+
     /// True per element iff any channel residue is nonzero (i.e. the
     /// represented integer is nonzero). One contiguous pass per lane.
     pub fn nonzero_mask(&self) -> Vec<bool> {
@@ -624,6 +638,20 @@ mod tests {
                 want,
                 "scaled c={c}"
             );
+        }
+    }
+
+    #[test]
+    fn scale_channels_matches_pointwise_key_multiply() {
+        let b = bars();
+        let mut rng = Rng::new(31);
+        let x = random_plane(&mut rng, 23);
+        let alpha: Vec<u64> = DEFAULT_MODULI.iter().map(|&m| 1 + rng.below(m - 1)).collect();
+        let mac = x.scale_channels(&alpha, &b);
+        for c in 0..x.k() {
+            for j in 0..x.n() {
+                assert_eq!(mac.lane(c)[j], b[c].mul(alpha[c], x.lane(c)[j]), "c={c} j={j}");
+            }
         }
     }
 

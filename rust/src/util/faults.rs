@@ -1,0 +1,221 @@
+//! Deterministic fault injection for the robustness stack.
+//!
+//! The flip helpers and the seeded [`FaultInjector`] are always compiled
+//! (property tests corrupt authenticated batches with them directly); the
+//! *serving-path call sites* — worker-side lane/exponent flips in
+//! `coordinator::hybrid_exec` and wire-frame flips in the RPC server —
+//! are gated behind the `fault-inject` cargo feature, so a default build
+//! cannot corrupt anything no matter what flags it is handed.
+//!
+//! Decisions are a pure function of `(seed, opportunity_counter)` via a
+//! splitmix64 hash: a given seed and rate reproduce the exact same fault
+//! pattern across runs, which is what lets the `fault-smoke` CI tier
+//! assert "detections > 0, zero corrupted results delivered" instead of
+//! hoping the dice cooperate.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+/// Finalizer of splitmix64 — the decision hash.
+#[inline]
+fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Flip one bit of a raw word.
+#[inline]
+pub fn flip_bit(v: u64, bit: u32) -> u64 {
+    v ^ (1u64 << (bit % 64))
+}
+
+/// Flip one high mantissa/exponent bit (52..=63) of an f64 — the model of
+/// a residue-lane corruption surviving decode: a huge, non-subtle error,
+/// which is exactly what an undetected RNS lane flip produces after CRT.
+#[inline]
+pub fn flip_f64_high_bit(v: f64, pick: u64) -> f64 {
+    f64::from_bits(flip_bit(v.to_bits(), 52 + (pick % 12) as u32))
+}
+
+/// Parsed `--inject-faults` configuration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Probability that any single fault opportunity fires.
+    pub rate: f64,
+    /// Seed for the deterministic decision stream.
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    /// Parse the CLI form `rate=1e-3[,seed=N]`.
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let mut rate: Option<f64> = None;
+        let mut seed: u64 = 0x5EED;
+        for part in s.split(',').filter(|p| !p.is_empty()) {
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| format!("fault spec `{part}`: expected key=value"))?;
+            match key.trim() {
+                "rate" => {
+                    let r: f64 = val
+                        .trim()
+                        .parse()
+                        .map_err(|e| format!("fault rate `{val}`: {e}"))?;
+                    if !(0.0..=1.0).contains(&r) {
+                        return Err(format!("fault rate {r} outside [0, 1]"));
+                    }
+                    rate = Some(r);
+                }
+                "seed" => {
+                    seed = val
+                        .trim()
+                        .parse()
+                        .map_err(|e| format!("fault seed `{val}`: {e}"))?;
+                }
+                other => return Err(format!("unknown fault key `{other}`")),
+            }
+        }
+        Ok(FaultPlan {
+            rate: rate.ok_or("fault spec needs rate=<p>")?,
+            seed,
+        })
+    }
+}
+
+/// Seeded, counted fault source. Each corruption opportunity calls
+/// [`FaultInjector::draw`]; `Some(payload)` means "fire", and the payload
+/// is a deterministic 64-bit value the call site uses to choose *what* to
+/// corrupt (which lane, which bit).
+#[derive(Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    threshold: u64,
+    opportunities: AtomicU64,
+    injected: AtomicU64,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> FaultInjector {
+        let threshold = if plan.rate >= 1.0 {
+            u64::MAX
+        } else {
+            (plan.rate * u64::MAX as f64) as u64
+        };
+        FaultInjector {
+            plan,
+            threshold,
+            opportunities: AtomicU64::new(0),
+            injected: AtomicU64::new(0),
+        }
+    }
+
+    /// One corruption opportunity: deterministically decide whether to
+    /// fire, and if so return the payload driving the corruption choice.
+    pub fn draw(&self) -> Option<u64> {
+        let t = self.opportunities.fetch_add(1, Ordering::Relaxed);
+        let h = mix(self.plan.seed ^ mix(t.wrapping_add(0x9e37_79b9_7f4a_7c15)));
+        if h <= self.threshold && self.plan.rate > 0.0 {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            Some(mix(h ^ 0xd1b5_4a32_d192_ed03))
+        } else {
+            None
+        }
+    }
+
+    /// Opportunities seen so far.
+    pub fn opportunities(&self) -> u64 {
+        self.opportunities.load(Ordering::Relaxed)
+    }
+
+    /// Faults actually injected so far.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// The configured plan.
+    pub fn plan(&self) -> FaultPlan {
+        self.plan
+    }
+}
+
+static GLOBAL: OnceLock<FaultInjector> = OnceLock::new();
+
+/// Install the process-wide injector (worker CLI; first call wins).
+/// Returns false if one was already installed.
+pub fn install(plan: FaultPlan) -> bool {
+    GLOBAL.set(FaultInjector::new(plan)).is_ok()
+}
+
+/// The process-wide injector, if `--inject-faults` installed one.
+pub fn global() -> Option<&'static FaultInjector> {
+    GLOBAL.get()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_rate_and_seed() {
+        assert_eq!(
+            FaultPlan::parse("rate=1e-3"),
+            Ok(FaultPlan { rate: 1e-3, seed: 0x5EED })
+        );
+        assert_eq!(
+            FaultPlan::parse("rate=0.5,seed=42"),
+            Ok(FaultPlan { rate: 0.5, seed: 42 })
+        );
+        assert!(FaultPlan::parse("seed=42").is_err(), "rate is required");
+        assert!(FaultPlan::parse("rate=2.0").is_err(), "rate outside [0,1]");
+        assert!(FaultPlan::parse("rate=0.1,bogus=1").is_err());
+        assert!(FaultPlan::parse("nonsense").is_err());
+    }
+
+    #[test]
+    fn same_seed_reproduces_the_exact_decision_stream() {
+        let plan = FaultPlan { rate: 0.05, seed: 99 };
+        let a = FaultInjector::new(plan);
+        let b = FaultInjector::new(plan);
+        let da: Vec<Option<u64>> = (0..4096).map(|_| a.draw()).collect();
+        let db: Vec<Option<u64>> = (0..4096).map(|_| b.draw()).collect();
+        assert_eq!(da, db);
+        assert_eq!(a.injected(), b.injected());
+        assert!(a.injected() > 0, "5% over 4096 draws must fire");
+    }
+
+    #[test]
+    fn rate_is_respected_statistically() {
+        let inj = FaultInjector::new(FaultPlan { rate: 0.01, seed: 7 });
+        let n = 200_000u64;
+        for _ in 0..n {
+            inj.draw();
+        }
+        assert_eq!(inj.opportunities(), n);
+        let got = inj.injected() as f64 / n as f64;
+        assert!(
+            (got - 0.01).abs() < 0.003,
+            "empirical rate {got} far from 0.01"
+        );
+    }
+
+    #[test]
+    fn zero_rate_never_fires_and_full_rate_always_fires() {
+        let never = FaultInjector::new(FaultPlan { rate: 0.0, seed: 1 });
+        assert!((0..1000).all(|_| never.draw().is_none()));
+        let always = FaultInjector::new(FaultPlan { rate: 1.0, seed: 1 });
+        assert!((0..1000).all(|_| always.draw().is_some()));
+    }
+
+    #[test]
+    fn flip_helpers_toggle_exactly_one_bit() {
+        assert_eq!(flip_bit(0, 3), 8);
+        assert_eq!(flip_bit(flip_bit(0xABCD, 17), 17), 0xABCD);
+        let x = 1234.5678f64;
+        let y = flip_f64_high_bit(x, 5);
+        assert_ne!(x, y);
+        assert_eq!((x.to_bits() ^ y.to_bits()).count_ones(), 1);
+        let bit = (x.to_bits() ^ y.to_bits()).trailing_zeros();
+        assert!((52..=63).contains(&bit), "flip must hit a high bit");
+    }
+}

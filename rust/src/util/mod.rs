@@ -5,6 +5,7 @@
 //! re-implemented here at the scale this project needs.
 
 pub mod backoff;
+pub mod faults;
 pub mod prng;
 pub mod stats;
 pub mod table;

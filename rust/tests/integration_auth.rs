@@ -1,0 +1,188 @@
+//! Integration: authenticated serving end to end through the coordinator
+//! — MAC-verified dot/FIR windows and Freivalds-checked matmul deliver
+//! the same values as the unauthenticated path plus a wire checksum,
+//! unsupported kinds are rejected at admission, a clean run records zero
+//! integrity detections, and unauthenticated traffic is untouched by the
+//! auth machinery (no `check`, same values).
+
+use hrfna::coordinator::batcher::BatchPolicy;
+use hrfna::coordinator::{
+    Backend, ContextRegistry, Coordinator, CoordinatorConfig, Error, ExecMode, InProcess, JobKind,
+    JobSpec, Tier,
+};
+use hrfna::hybrid::auth::values_checksum;
+use hrfna::runtime::EngineHandle;
+use hrfna::util::prng::Rng;
+use hrfna::workloads::fir::lowpass_taps;
+use hrfna::workloads::generators::Dist;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn coordinator() -> Coordinator {
+    let engine = EngineHandle::spawn(None).expect("engine load");
+    Coordinator::start(
+        engine,
+        Arc::new(ContextRegistry::new()),
+        CoordinatorConfig {
+            workers_per_lane: 2,
+            batch: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                ..BatchPolicy::default()
+            },
+            exec: ExecMode::Planar,
+            ..CoordinatorConfig::default()
+        },
+    )
+}
+
+#[test]
+fn authenticated_dot_matches_unauthenticated_and_carries_checksum() {
+    let coord = coordinator();
+    let mut rng = Rng::new(17);
+    for round in 0..4 {
+        let n = 64 + rng.below(448) as usize;
+        let x = Dist::moderate().sample_vec(&mut rng, n);
+        let y = Dist::moderate().sample_vec(&mut rng, n);
+        let truth: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        let plain = coord.call(JobSpec::dot(x.clone(), y.clone())).unwrap();
+        let auth = coord.call(JobSpec::dot(x, y).authenticated()).unwrap();
+        // The verified window dot reads the same planar lanes the
+        // unauthenticated path decodes, so the delivered value is
+        // bit-identical.
+        assert_eq!(auth.values, plain.values, "round {round}: auth changed the value");
+        assert!(
+            (auth.values[0] - truth).abs() <= 1e-6 * truth.abs().max(1.0),
+            "round {round}: got {} truth {truth}",
+            auth.values[0]
+        );
+        assert_eq!(plain.check, None, "unauthenticated results carry no checksum");
+        assert_eq!(
+            auth.check,
+            Some(values_checksum(&auth.values)),
+            "round {round}: checksum must cover the delivered values"
+        );
+    }
+    assert_eq!(coord.metrics.total_integrity_detections(), 0, "clean run");
+    let drain = coord.shutdown();
+    assert!(drain.is_clean(), "{drain}");
+}
+
+#[test]
+fn authenticated_fir_is_verified_and_accurate() {
+    let coord = coordinator();
+    let mut rng = Rng::new(29);
+    let taps = lowpass_taps(12, 0.2);
+    let n = 96;
+    let x = Dist::moderate().sample_vec(&mut rng, n);
+    // Direct-form f64 reference with zero-padded history.
+    let want: Vec<f64> = (0..n)
+        .map(|t| {
+            taps.iter()
+                .enumerate()
+                .filter(|(i, _)| *i <= t)
+                .map(|(i, &h)| h * x[t - i])
+                .sum()
+        })
+        .collect();
+    let scale = want.iter().fold(0.0f64, |m, &v| m.max(v.abs())).max(1.0);
+    let r = coord.call(JobSpec::fir(taps, x).authenticated()).unwrap();
+    assert_eq!(r.kind, JobKind::FirHybrid);
+    assert_eq!(r.values.len(), n);
+    for (t, (&got, &w)) in r.values.iter().zip(&want).enumerate() {
+        assert!(
+            (got - w).abs() <= 1e-7 * scale,
+            "output {t}: got {got} want {w}"
+        );
+    }
+    assert_eq!(r.check, Some(values_checksum(&r.values)));
+    assert_eq!(coord.metrics.total_integrity_detections(), 0);
+    let drain = coord.shutdown();
+    assert!(drain.is_clean(), "{drain}");
+}
+
+#[test]
+fn authenticated_matmul_passes_freivalds_and_matches_plain() {
+    let coord = coordinator();
+    let mut rng = Rng::new(31);
+    let dim = 64;
+    let a: Vec<f64> = (0..dim * dim).map(|_| rng.uniform(-2.0, 2.0)).collect();
+    let b: Vec<f64> = (0..dim * dim).map(|_| rng.uniform(-2.0, 2.0)).collect();
+    let plain = coord.call(JobSpec::matmul(a.clone(), b.clone(), dim)).unwrap();
+    let auth = coord.call(JobSpec::matmul(a, b, dim).authenticated()).unwrap();
+    // Freivalds verifies the product computed on the normal datapath; it
+    // never changes it.
+    assert_eq!(auth.values, plain.values, "verification must not alter the product");
+    assert_eq!(plain.check, None);
+    assert_eq!(auth.check, Some(values_checksum(&auth.values)));
+    assert_eq!(coord.metrics.total_integrity_detections(), 0);
+    let drain = coord.shutdown();
+    assert!(drain.is_clean(), "{drain}");
+}
+
+#[test]
+fn authentication_rejected_for_kinds_without_mac_lanes() {
+    let coord = coordinator();
+    let mut rng = Rng::new(37);
+    let x = Dist::moderate().sample_vec(&mut rng, 128);
+    let y = Dist::moderate().sample_vec(&mut rng, 128);
+    // FP32 lanes have no residues; RK4 has no per-job verification hook.
+    let fp32 = coord.call(JobSpec::dot_f32(x, y).authenticated());
+    assert!(matches!(fp32, Err(Error::Rejected(_))), "got {fp32:?}");
+    let rk4 = coord.call(JobSpec::rk4(vec![2.0, 0.0], 1.5, 0.01, 32).authenticated());
+    assert!(matches!(rk4, Err(Error::Rejected(_))), "got {rk4:?}");
+    assert_eq!(coord.metrics.total_rejected(), 2);
+    let drain = coord.shutdown();
+    assert!(drain.is_clean(), "{drain}");
+}
+
+#[test]
+fn backend_surfaces_integrity_counters_for_the_health_edge() {
+    // The Backend seam the health RPC reads: a clean in-process run
+    // reports zero detections and has no workers to quarantine.
+    let backend = InProcess::new(coordinator());
+    let mut rng = Rng::new(43);
+    let x = Dist::moderate().sample_vec(&mut rng, 256);
+    let y = Dist::moderate().sample_vec(&mut rng, 256);
+    let r = backend.call(JobSpec::dot(x, y).authenticated()).unwrap();
+    assert!(r.check.is_some());
+    assert_eq!(backend.integrity_detections(), 0);
+    assert_eq!(backend.quarantined_workers(), 0);
+    assert!(backend.shutdown().unwrap().is_clean());
+}
+
+#[test]
+fn mixed_batches_serve_authenticated_and_plain_riders_together() {
+    // Pipelined auth + plain submissions of the same bucket land in the
+    // same batches; each job keeps its own contract (checksummed vs not).
+    let coord = coordinator();
+    let mut rng = Rng::new(47);
+    let mut pending = Vec::new();
+    let mut truths = Vec::new();
+    for i in 0..16usize {
+        let x = Dist::moderate().sample_vec(&mut rng, 300);
+        let y = Dist::moderate().sample_vec(&mut rng, 300);
+        truths.push(x.iter().zip(&y).map(|(a, b)| a * b).sum::<f64>());
+        let spec = JobSpec::dot(x, y);
+        let spec = if i % 2 == 0 { spec.authenticated() } else { spec };
+        pending.push((i, coord.submit(spec).unwrap()));
+    }
+    for (i, rx) in pending {
+        let r = rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("job completes")
+            .expect("job succeeds");
+        assert!(
+            (r.values[0] - truths[i]).abs() <= 1e-6 * truths[i].abs().max(1.0),
+            "job {i}"
+        );
+        if i % 2 == 0 {
+            assert_eq!(r.check, Some(values_checksum(&r.values)), "job {i} authenticated");
+        } else {
+            assert_eq!(r.check, None, "job {i} is a plain rider");
+        }
+    }
+    assert_eq!(coord.metrics.total_integrity_detections(), 0);
+    let drain = coord.shutdown();
+    assert!(drain.is_clean(), "{drain}");
+}

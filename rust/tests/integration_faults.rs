@@ -1,0 +1,109 @@
+//! Integration: seeded fault injection against the authenticated serving
+//! path (`--features fault-inject`). With the process-wide injector armed
+//! at rate 1.0, every authenticated job is corrupted between MAC
+//! derivation and verification — and every one must come back as a typed
+//! `IntegrityFailure`, never as delivered values. Unauthenticated
+//! traffic shares the same lanes and batches and must be untouched.
+//!
+//! This lives in its own test binary because [`hrfna::util::faults::install`]
+//! is process-wide (first call wins): arming it here cannot leak faults
+//! into the clean-path auth tests.
+#![cfg(feature = "fault-inject")]
+
+use hrfna::coordinator::batcher::BatchPolicy;
+use hrfna::coordinator::{
+    ContextRegistry, Coordinator, CoordinatorConfig, Error, ExecMode, JobKind, JobSpec, Tier,
+};
+use hrfna::runtime::EngineHandle;
+use hrfna::util::faults::{install, FaultPlan};
+use hrfna::util::prng::Rng;
+use hrfna::workloads::fir::lowpass_taps;
+use hrfna::workloads::generators::Dist;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn arm() {
+    // First call wins; rate 1.0 makes every corruption opportunity fire,
+    // so detection assertions below are deterministic, not statistical.
+    let _ = install(FaultPlan { rate: 1.0, seed: 7 });
+}
+
+fn coordinator() -> Coordinator {
+    let engine = EngineHandle::spawn(None).expect("engine load");
+    Coordinator::start(
+        engine,
+        Arc::new(ContextRegistry::new()),
+        CoordinatorConfig {
+            workers_per_lane: 2,
+            batch: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                ..BatchPolicy::default()
+            },
+            exec: ExecMode::Planar,
+            ..CoordinatorConfig::default()
+        },
+    )
+}
+
+#[test]
+fn every_authenticated_job_is_corrupted_and_detected_never_delivered() {
+    arm();
+    let coord = coordinator();
+    let mut rng = Rng::new(53);
+    let mut auth_jobs = 0u64;
+    for round in 0..6 {
+        let x = Dist::moderate().sample_vec(&mut rng, 256);
+        let y = Dist::moderate().sample_vec(&mut rng, 256);
+        let spec = match round % 3 {
+            0 => JobSpec::dot(x, y),
+            1 => JobSpec::fir(lowpass_taps(8, 0.25), x),
+            _ => {
+                let dim = 64;
+                let a: Vec<f64> = (0..dim * dim).map(|_| rng.uniform(-2.0, 2.0)).collect();
+                let b: Vec<f64> = (0..dim * dim).map(|_| rng.uniform(-2.0, 2.0)).collect();
+                JobSpec::matmul(a, b, dim)
+            }
+        };
+        auth_jobs += 1;
+        let kind = spec.kind;
+        let out = coord.call(spec.authenticated());
+        match out {
+            Err(Error::IntegrityFailure(msg)) => {
+                assert!(!msg.is_empty(), "{kind:?}: failure must say what broke");
+            }
+            other => panic!(
+                "{kind:?}: corrupted job must fail with IntegrityFailure, got {other:?}"
+            ),
+        }
+    }
+    // The zero-corrupted-delivered invariant: every corruption was caught
+    // and counted; nothing reached a client as values.
+    assert_eq!(coord.metrics.total_integrity_detections(), auth_jobs);
+    assert!(coord.metrics.integrity_tier(JobKind::DotHybrid, Tier::Paper) > 0);
+    assert!(coord.metrics.integrity_tier(JobKind::FirHybrid, Tier::Paper) > 0);
+    assert!(coord.metrics.integrity_tier(JobKind::MatmulHybrid, Tier::Paper) > 0);
+
+    // Unauthenticated traffic rides the same lanes with the injector
+    // armed and is never corrupted (the injectors only target
+    // authenticated jobs' windows).
+    for _ in 0..4 {
+        let x = Dist::moderate().sample_vec(&mut rng, 256);
+        let y = Dist::moderate().sample_vec(&mut rng, 256);
+        let truth: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        let r = coord.call(JobSpec::dot(x, y)).expect("plain job unaffected");
+        assert!((r.values[0] - truth).abs() <= 1e-6 * truth.abs().max(1.0));
+        assert_eq!(r.check, None);
+    }
+
+    let drain = coord.shutdown();
+    assert!(drain.is_clean(), "{drain}");
+}
+
+#[test]
+fn injector_reports_the_armed_plan() {
+    arm();
+    let inj = hrfna::util::faults::global().expect("armed in this binary");
+    assert_eq!(inj.plan().rate, 1.0);
+    assert_eq!(inj.plan().seed, 7);
+}

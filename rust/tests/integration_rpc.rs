@@ -102,6 +102,27 @@ fn golden_request_submit_dot() {
 }
 
 #[test]
+fn golden_request_submit_fir_authenticated() {
+    let text = fixture("request_submit_fir.json");
+    let spec = JobSpec::fir(vec![0.25, 0.5, 0.25], vec![1.0, 2.0, 3.0, 4.0]).authenticated();
+    let req = Request::new(1, "submit", spec_to_json(&spec));
+    assert_eq!(req.to_json().encode(), text, "fir request encoding drifted from fixture");
+
+    let parsed = Request::from_json(&Json::parse(&text).unwrap()).unwrap();
+    let back = spec_from_json(&parsed.params).unwrap();
+    assert_eq!(back.kind, JobKind::FirHybrid);
+    assert_eq!(back.tier, Tier::Paper);
+    assert!(back.auth, "auth bit lost on decode");
+    match back.payload {
+        Payload::Fir { taps, x } => {
+            assert_eq!(taps, vec![0.25, 0.5, 0.25]);
+            assert_eq!(x, vec![1.0, 2.0, 3.0, 4.0]);
+        }
+        other => panic!("wrong payload {other:?}"),
+    }
+}
+
+#[test]
 fn golden_response_result() {
     let text = fixture("response_result.json");
     let result = JobResult {
@@ -111,6 +132,7 @@ fn golden_response_result() {
         values: vec![2.25],
         latency_us: 123.5,
         batch_size: 8,
+        check: None,
     };
     let resp = Response::result(1, result_to_json(&result));
     assert_eq!(resp.to_json().encode(), text, "response encoding drifted from fixture");
@@ -153,7 +175,12 @@ fn golden_error_overloaded() {
 #[test]
 fn golden_frames_survive_the_codec() {
     // Every fixture, framed and unframed, bytes preserved.
-    for name in ["request_submit_dot.json", "response_result.json", "error_overloaded.json"] {
+    for name in [
+        "request_submit_dot.json",
+        "request_submit_fir.json",
+        "response_result.json",
+        "error_overloaded.json",
+    ] {
         let text = fixture(name);
         let mut wire = Vec::new();
         hrfna::coordinator::rpc::write_frame(&mut wire, text.as_bytes()).unwrap();
@@ -194,6 +221,7 @@ fn arbitrary_error(rng: &mut Rng) -> (Error, i64, &'static str) {
         "rate_limited" => Error::RateLimited(msg),
         "too_many_in_flight" => Error::TooManyInFlight(msg),
         "unavailable" => Error::Unavailable(msg),
+        "integrity_failure" => Error::IntegrityFailure(msg),
         other => panic!("unknown table label {other}"),
     };
     (err, WIRE_CODES[i].0, WIRE_CODES[i].1)
@@ -253,10 +281,19 @@ fn specs_and_results_round_trip_fuzzed() {
                 dt: rng.uniform(1e-4, 1e-2),
                 steps: 1 + rng.below(256),
             },
+            JobKind::FirHybrid => Payload::Fir {
+                taps: dist.sample_vec(rng, 1 + rng.below(4) as usize),
+                x: dist.sample_vec(rng, n),
+            },
         };
-        let mut spec = JobSpec { kind, payload, tier, tolerance: None };
+        let mut spec = JobSpec { kind, payload, tier, tolerance: None, auth: false };
         if rng.below(2) == 1 {
             spec = spec.tolerance(rng.lognormal(-10.0, 2.0));
+        }
+        // Authentication is a spec bit and must survive the wire; it is
+        // only ever requested for MAC-capable hybrid kinds.
+        if kind.is_hybrid() && kind != JobKind::Rk4Hybrid && rng.below(2) == 1 {
+            spec = spec.authenticated();
         }
         let text = spec_to_json(&spec).encode();
         let back = spec_from_json(&Json::parse(&text).map_err(|e| e.to_string())?)
@@ -264,6 +301,7 @@ fn specs_and_results_round_trip_fuzzed() {
         hrfna::prop_assert!(back.kind == spec.kind, "kind changed");
         hrfna::prop_assert!(back.tier == spec.tier, "tier changed");
         hrfna::prop_assert!(back.tolerance == spec.tolerance, "tolerance changed");
+        hrfna::prop_assert!(back.auth == spec.auth, "auth bit changed");
         hrfna::prop_assert!(
             spec_to_json(&back).encode() == text,
             "spec re-encode not canonical"
@@ -276,12 +314,16 @@ fn specs_and_results_round_trip_fuzzed() {
             values: dist.sample_vec(rng, n),
             latency_us: rng.uniform(1.0, 1e6),
             batch_size: 1 + rng.below(64) as usize,
+            // Full-width u64 checksums must survive the wire (hex string,
+            // not a JSON number).
+            check: if rng.below(2) == 1 { Some(rng.next_u64()) } else { None },
         };
         let rtext = result_to_json(&result).encode();
         let rback = result_from_json(&Json::parse(&rtext).map_err(|e| e.to_string())?)
             .map_err(|e| e.to_string())?;
         hrfna::prop_assert!(rback.id == result.id, "result id changed");
         hrfna::prop_assert!(rback.values == result.values, "result values changed");
+        hrfna::prop_assert!(rback.check == result.check, "result checksum changed");
         hrfna::prop_assert!(
             result_to_json(&rback).encode() == rtext,
             "result re-encode not canonical"

@@ -85,7 +85,10 @@ fn flood_past_capacity_sheds_load_and_drains_clean() {
     // Every accepted job completes with a correct result — no deadlock,
     // no silent drop.
     for rx in receivers {
-        let r = rx.recv_timeout(Duration::from_secs(60)).expect("accepted job completes");
+        let r = rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("accepted job completes")
+            .expect("accepted job succeeds");
         assert!((r.values[0] - truth).abs() <= 1e-6 * truth.abs().max(1.0));
     }
     let metrics = Arc::clone(&coord.metrics);
@@ -143,7 +146,8 @@ fn shutdown_drains_queued_jobs_before_joining() {
     for (rx, truth) in pending.into_iter().zip(truths) {
         let r = rx
             .recv_timeout(Duration::from_secs(5))
-            .expect("drained job still delivers its result");
+            .expect("drained job still delivers its result")
+            .expect("drained job succeeds");
         assert!((r.values[0] - truth).abs() <= 1e-6 * truth.abs().max(1.0));
     }
 }

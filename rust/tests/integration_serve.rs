@@ -134,7 +134,7 @@ fn serves_rk4_matching_scalar_reference() {
         y0s.push(y0);
     }
     for (rx, y0) in pending.into_iter().zip(&y0s) {
-        let r = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        let r = rx.recv_timeout(Duration::from_secs(60)).unwrap().unwrap();
         // The planar batch mirrors the scalar ops exactly, so the served
         // result equals the scalar reference bit for bit.
         let want = rk4_final_state::<hrfna::hybrid::Hrfna>(
@@ -220,7 +220,7 @@ fn batching_coalesces_bursts() {
     }
     let mut max_batch = 0;
     for rx in rxs {
-        let r = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        let r = rx.recv_timeout(Duration::from_secs(60)).unwrap().unwrap();
         max_batch = max_batch.max(r.batch_size);
     }
     assert!(max_batch >= 2, "burst should produce batches, got {max_batch}");

@@ -274,7 +274,8 @@ fn two_tier_concurrent_flood_sheds_per_lane_and_drains_clean() {
     for rx in receivers {
         let r = rx
             .recv_timeout(Duration::from_secs(60))
-            .expect("accepted job completes");
+            .expect("accepted job completes")
+            .expect("accepted job succeeds");
         // Each result stays within its own tier's a-priori budget
         // (lo's quantization is orders of magnitude coarser than wide's).
         let budget = tier_rel_bound(coord.registry().cfg(r.tier), &env);
