@@ -53,6 +53,7 @@ fn backend() -> InProcess {
             },
             buckets: ShapeBuckets { tiers: vec![Tier::Paper], ..ShapeBuckets::default() },
             exec: ExecMode::Planar,
+            ..CoordinatorConfig::default()
         },
     ))
 }

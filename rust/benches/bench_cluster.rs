@@ -64,6 +64,7 @@ fn spawn_worker(id: usize) -> Worker {
             },
             buckets: ShapeBuckets::default(),
             exec: ExecMode::Planar,
+            ..CoordinatorConfig::default()
         },
     )));
     let server = RpcServer::bind(

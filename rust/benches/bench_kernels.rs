@@ -9,6 +9,10 @@
 //!   independent, the CI-gated invariant: the deferred lane dot must stay
 //!   at ≤ 0.5× the per-element cost at n ≥ 4096).
 //!
+//! With `--features simd` on an AVX2 host it additionally records the
+//! dispatched-vs-scalar lane_dot cost ratio (≤ 0.6× gated) and, in every
+//! build flavor, the dispatch-shim overhead (≤ 1.05× gated).
+//!
 //! Quick mode for CI: `BENCH_QUICK=1 cargo bench --bench bench_kernels`
 //! (or `--quick`).
 
@@ -175,6 +179,65 @@ fn main() {
         ));
         if n == 4096 {
             records.push(ratio_record("kernel_lane_fma_cost_ratio_n4096", &r_def, &r_ref));
+        }
+    }
+
+    // --- SIMD dispatch records at the gated size -----------------------
+    // Two machine-independent ratios pinned at n = 4096:
+    //
+    //  * `kernel_simd_lane_dot_cost_ratio_n4096` — the dispatched kernel
+    //    (AVX2 when active) over the scalar deferred kernel. Emitted only
+    //    when [`plane::simd_active`] reports the SIMD path is live, so
+    //    the committed baseline never gates a scalar-only host or a build
+    //    without `--features simd`.
+    //  * `kernel_lane_dot_dispatch_overhead_n4096` — the dispatch shim
+    //    forced down its scalar arm over the raw scalar kernel: the
+    //    runtime feature branch must be (near) free in every build flavor.
+    {
+        let n = 4096;
+        let x: Vec<u64> = (0..n).map(|_| rng.below(m)).collect();
+        let y: Vec<u64> = (0..n).map(|_| rng.below(m)).collect();
+        let r_scalar = bench_with(&format!("lane_dot n={n} (scalar)"), budget, 8, &mut || {
+            plane::lane_dot_scalar(bar, &x, &y)
+        });
+        println!("{}", r_scalar.line());
+        if plane::simd_active() {
+            let r_simd = bench_with(&format!("lane_dot n={n} (simd)"), budget, 8, &mut || {
+                plane::lane_dot(bar, &x, &y)
+            });
+            println!("{}", r_simd.line());
+            let simd_ratio = r_simd.ns_per_iter / r_scalar.ns_per_iter;
+            println!("  -> simd/scalar lane_dot cost ratio at n={n}: {simd_ratio:.3}");
+            records.push(ratio_record(
+                "kernel_simd_lane_dot_cost_ratio_n4096",
+                &r_simd,
+                &r_scalar,
+            ));
+            if !quick {
+                assert!(
+                    simd_ratio <= 0.6,
+                    "AVX2 lane_dot cost ratio {simd_ratio:.3} exceeds 0.6 at n=4096"
+                );
+            }
+        } else {
+            println!("  (simd path inactive: no AVX2 dispatch record this run)");
+        }
+        let r_shim = bench_with(&format!("lane_dot n={n} (dispatch/scalar)"), budget, 8, &mut || {
+            plane::lane_dot_dispatch_scalar(bar, &x, &y)
+        });
+        println!("{}", r_shim.line());
+        let shim_ratio = r_shim.ns_per_iter / r_scalar.ns_per_iter;
+        println!("  -> dispatch-shim overhead at n={n}: {shim_ratio:.3}x scalar");
+        records.push(ratio_record(
+            "kernel_lane_dot_dispatch_overhead_n4096",
+            &r_shim,
+            &r_scalar,
+        ));
+        if !quick {
+            assert!(
+                shim_ratio <= 1.05,
+                "lane_dot dispatch shim overhead {shim_ratio:.3} exceeds 1.05x at n=4096"
+            );
         }
     }
 

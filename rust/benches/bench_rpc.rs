@@ -53,6 +53,7 @@ fn backend() -> InProcess {
             },
             buckets: ShapeBuckets { tiers: Tier::ALL.to_vec(), ..ShapeBuckets::default() },
             exec: ExecMode::Planar,
+            ..CoordinatorConfig::default()
         },
     ))
 }

@@ -5,9 +5,12 @@
 //! closed-loop scenario (lo/paper/wide requests interleaved over one
 //! coordinator, per-tier jobs/sec recorded). Drives the coordinator
 //! through the [`Backend`] seam ([`InProcess`]) — the same API the RPC
-//! edge and the cluster router serve. Writes `BENCH_serve.json`; the CI
-//! gate (`tools/bench_gate.rs`) holds the recorded planar speedup and
-//! the tiered records within tolerance.
+//! edge and the cluster router serve. A weight-stationary matmul A/B
+//! additionally measures the encoded-operand cache (cached vs
+//! cold-encode jobs/sec and the cache hit ratio). Writes
+//! `BENCH_serve.json`; the CI gate (`tools/bench_gate.rs`) holds the
+//! recorded planar speedup, the tiered records and the cache records
+//! within tolerance.
 //!
 //! Quick mode for CI: `BENCH_QUICK=1 cargo bench --bench bench_serve`
 //! (or `--quick`).
@@ -32,6 +35,15 @@ const CLIENTS: usize = 4;
 const BURST: usize = 16;
 
 fn backend_tiered(mode: ExecMode, capacity: usize, tiers: Vec<Tier>) -> InProcess {
+    backend_with_cache(mode, capacity, tiers, CoordinatorConfig::default().op_cache_bytes)
+}
+
+fn backend_with_cache(
+    mode: ExecMode,
+    capacity: usize,
+    tiers: Vec<Tier>,
+    op_cache_bytes: usize,
+) -> InProcess {
     let engine = hrfna::runtime::EngineHandle::spawn(None).expect("engine");
     InProcess::new(Coordinator::start(
         engine,
@@ -45,6 +57,7 @@ fn backend_tiered(mode: ExecMode, capacity: usize, tiers: Vec<Tier>) -> InProces
             },
             buckets: ShapeBuckets { tiers, ..ShapeBuckets::default() },
             exec: mode,
+            op_cache_bytes,
         },
     ))
 }
@@ -267,6 +280,103 @@ fn main() {
         ns_per_op: mixed.wall.as_nanos() as f64 / mixed.completed.max(1) as f64,
         throughput_per_s: mixed.jobs_per_s,
     });
+
+    // Cached-weights matmul: a weight-stationary stream (one RHS reused
+    // by every job, activations varying) through a cache-enabled
+    // coordinator vs the same stream with the cache disabled, so the
+    // cold leg re-encodes the weight plane per job. Three records:
+    //
+    //  * `serve_cached_matmul_jobs` — absolute cached-leg jobs/sec,
+    //  * `serve_matmul_cache_cost_ratio` — cached-over-cold per-job cost
+    //    measured in the same run (machine-independent; gated so the
+    //    cache must keep ≥ 1.3x the cold-encode jobs/sec),
+    //  * `op_cache_hit_ratio` — hits/lookups on the cached leg (gated
+    //    ≥ 0.9: the stream must actually serve from cache).
+    const MATMUL_DIM: usize = 64;
+    let weights = Dist::moderate().sample_vec(&mut rng, MATMUL_DIM * MATMUL_DIM);
+    let act_pool: Vec<Vec<f64>> = (0..16)
+        .map(|_| Dist::moderate().sample_vec(&mut rng, MATMUL_DIM * MATMUL_DIM))
+        .collect();
+    let make_weighted = |c: u64, i: usize| -> JobSpec {
+        let a = &act_pool[(c as usize * 7 + i) % act_pool.len()];
+        JobSpec::matmul(a.clone(), weights.clone(), MATMUL_DIM)
+    };
+    let mm_jobs = if quick { 16 } else { 48 };
+
+    let be = backend_with_cache(ExecMode::Planar, 4096, vec![Tier::Paper], 0);
+    for _ in 0..4 {
+        be.call(make_weighted(0, 0)).expect("warmup job");
+    }
+    let cold = closed_loop(&be, CLIENTS, mm_jobs, 8, &make_weighted);
+    assert_eq!(cold.completed, cold.offered, "cold-encode leg lost jobs");
+    let cold_lookups = be
+        .with_coordinator(|c| {
+            c.metrics.cache_hits(JobKind::MatmulHybrid)
+                + c.metrics.cache_misses(JobKind::MatmulHybrid)
+        })
+        .expect("live coordinator");
+    assert_eq!(cold_lookups, 0, "op_cache_bytes: 0 must disable cache lookups");
+    println!("matmul dim={MATMUL_DIM} cold-encode: {:.0} jobs/s", cold.jobs_per_s);
+    let drain = be.shutdown().expect("shutdown after cold leg");
+    assert!(drain.is_clean(), "unclean drain after cold leg: {drain}");
+
+    let be = backend_with_cache(
+        ExecMode::Planar,
+        4096,
+        vec![Tier::Paper],
+        CoordinatorConfig::default().op_cache_bytes,
+    );
+    for _ in 0..4 {
+        be.call(make_weighted(0, 0)).expect("warmup job");
+    }
+    let hot = closed_loop(&be, CLIENTS, mm_jobs, 8, &make_weighted);
+    assert_eq!(hot.completed, hot.offered, "cached leg lost jobs");
+    let (hits, misses) = be
+        .with_coordinator(|c| {
+            (
+                c.metrics.cache_hits(JobKind::MatmulHybrid),
+                c.metrics.cache_misses(JobKind::MatmulHybrid),
+            )
+        })
+        .expect("live coordinator");
+    let hit_ratio = hits as f64 / (hits + misses).max(1) as f64;
+    println!(
+        "matmul dim={MATMUL_DIM} cached:      {:.0} jobs/s ({hits} hits / {misses} misses, ratio {hit_ratio:.3})",
+        hot.jobs_per_s
+    );
+    let drain = be.shutdown().expect("shutdown after cached leg");
+    assert!(drain.is_clean(), "unclean drain after cached leg: {drain}");
+
+    records.push(BenchRecord {
+        name: "serve_cached_matmul_jobs".to_string(),
+        n: hot.completed as u64,
+        ns_per_op: hot.wall.as_nanos() as f64 / hot.completed.max(1) as f64,
+        throughput_per_s: hot.jobs_per_s,
+    });
+    let cache_speedup = hot.jobs_per_s / cold.jobs_per_s.max(1e-9);
+    println!("-> operand cache serving speedup over cold encode: {cache_speedup:.2}x");
+    records.push(BenchRecord {
+        name: "serve_matmul_cache_cost_ratio".to_string(),
+        n: 1,
+        ns_per_op: 1.0 / cache_speedup.max(1e-9),
+        throughput_per_s: cache_speedup,
+    });
+    records.push(BenchRecord {
+        name: "op_cache_hit_ratio".to_string(),
+        n: (hits + misses).max(1),
+        ns_per_op: 1.0 / hit_ratio.max(1e-9),
+        throughput_per_s: hit_ratio,
+    });
+    if !quick {
+        assert!(
+            cache_speedup >= 1.3,
+            "cache-served matmul must keep >= 1.3x cold-encode jobs/sec (got {cache_speedup:.2}x)"
+        );
+        assert!(
+            hit_ratio >= 0.9,
+            "weight-stationary stream must hit the cache >= 90% (got {hit_ratio:.3})"
+        );
+    }
 
     match write_json("BENCH_serve.json", &records) {
         Ok(()) => println!("\nwrote BENCH_serve.json ({} records)", records.len()),

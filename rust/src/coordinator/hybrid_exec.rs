@@ -37,7 +37,10 @@
 
 use anyhow::Result;
 use std::sync::atomic::Ordering;
+use std::sync::Arc;
 
+use super::metrics::Metrics;
+use super::op_cache::{CachedOperand, OpCache};
 use super::request::{Job, JobKind, Payload};
 use crate::hybrid::auth::{self, AuthKey};
 use crate::hybrid::number::{ldexp_staged, pow2, signed_mag_to_f64};
@@ -48,7 +51,8 @@ use crate::rns::ResidueVec;
 use crate::runtime::pjrt::Tensor;
 use crate::runtime::EngineHandle;
 use crate::workloads::dot::dot_product_encoded_scalar;
-use crate::workloads::fir::{fir_filter, fir_filter_scalar};
+use crate::workloads::fir::{fir_filter, fir_filter_encoded_taps, fir_filter_scalar};
+use crate::workloads::matmul::{encode_matmul_rhs, matmul_hrfna_planar_encoded};
 use crate::workloads::rk4::{rk4_final_state, rk4_final_states_batch, Ode};
 
 /// Which datapath the lane workers execute hybrid jobs on.
@@ -125,6 +129,11 @@ pub fn encode_block(xs: &[f64], ctx: &HrfnaContext) -> BlockEncoded {
 /// `plane` holds `B·n` elements channel-major (job `b` occupies the
 /// window `[b·n, (b+1)·n)` of every lane), `f[b]` is job `b`'s block
 /// exponent.
+///
+/// `Clone` exists for the operand cache: executors that mutate the
+/// encoded plane in place (fault injection) clone the shared cached
+/// entry first.
+#[derive(Clone)]
 pub struct DotBatchEncoded {
     pub plane: ResiduePlane,
     pub f: Vec<i32>,
@@ -217,6 +226,46 @@ pub fn block_quantum(f: i32) -> f64 {
 }
 
 // ----------------------------------------------------------------------
+// Encoded-operand cache plumbing
+// ----------------------------------------------------------------------
+
+// Digest salts separating the cached operand roles: equal raw bytes in
+// different roles (e.g. a tap vector that happens to match a flattened
+// weight matrix) must never alias one cache entry.
+const MATMUL_RHS_SALT: u64 = 0x6D61_746D_756C_2D62; // "matmul-b"
+const FIR_TAPS_SALT: u64 = 0x6669_722D_7461_7073; // "fir-taps"
+const FIR_AUTH_SALT: u64 = 0x6669_722D_6175_7468; // "fir-auth"
+
+/// Worker-side view of the coordinator's operand cache: the cache plus
+/// the (kind, tier) slot its lookups attribute metrics to. Threaded
+/// through the per-kind executors as `Option<&CacheCtx>`; `None`
+/// (direct `execute_batch`/`execute_batch_checked` callers, or cache
+/// disabled) keeps the exact cold-encode path.
+pub(crate) struct CacheCtx<'a> {
+    cache: &'a OpCache,
+    metrics: Option<&'a Metrics>,
+    kind: JobKind,
+    tier: Tier,
+}
+
+impl CacheCtx<'_> {
+    fn lookup(
+        &self,
+        digest: u64,
+        authenticated: bool,
+        build: impl FnOnce() -> CachedOperand,
+    ) -> Arc<CachedOperand> {
+        let (value, outcome) = self
+            .cache
+            .get_or_insert_with(digest, self.tier, authenticated, build);
+        if let Some(m) = self.metrics {
+            m.record_cache_lookup(self.kind, self.tier, outcome.hit, outcome.evictions);
+        }
+        value
+    }
+}
+
+// ----------------------------------------------------------------------
 // Batched lane executors (called by the server's workers)
 // ----------------------------------------------------------------------
 
@@ -233,6 +282,18 @@ pub fn execute_batch(
     kind: JobKind,
     tier: Tier,
     jobs: &[Job],
+) -> Vec<Result<Vec<f64>>> {
+    execute_batch_with(engine, registry, mode, kind, tier, jobs, None)
+}
+
+fn execute_batch_with(
+    engine: &EngineHandle,
+    registry: &ContextRegistry,
+    mode: ExecMode,
+    kind: JobKind,
+    tier: Tier,
+    jobs: &[Job],
+    cc: Option<&CacheCtx>,
 ) -> Vec<Result<Vec<f64>>> {
     if jobs.is_empty() {
         return Vec::new();
@@ -256,13 +317,15 @@ pub fn execute_batch(
         JobKind::MatmulHybrid => {
             let ctx = registry.get(tier);
             jobs.iter()
-                .map(|j| exec_matmul_hybrid(&ctx, mode, j))
+                .map(|j| exec_matmul_hybrid(&ctx, mode, j, cc))
                 .collect()
         }
         JobKind::MatmulF32 => jobs.iter().map(|j| exec_matmul_f32(engine, j)).collect(),
         JobKind::FirHybrid => {
             let ctx = registry.get(tier);
-            jobs.iter().map(|j| exec_fir_hybrid(&ctx, mode, j)).collect()
+            jobs.iter()
+                .map(|j| exec_fir_hybrid(&ctx, mode, j, cc))
+                .collect()
         }
         JobKind::Rk4Hybrid => {
             let ctx = registry.get(tier);
@@ -331,11 +394,49 @@ pub fn execute_batch_checked(
     tier: Tier,
     jobs: &[Job],
 ) -> Vec<Result<ExecOutput, ExecError>> {
+    execute_batch_cached(engine, registry, mode, kind, tier, jobs, None, None)
+}
+
+/// [`execute_batch_checked`] consulting a shared encoded-operand
+/// [`OpCache`] for the reusable halves of matmul and FIR jobs (weight
+/// matrices, tap vectors). A `None` cache — or any cache miss — takes
+/// the exact cold-encode path, so results are bit-identical with and
+/// without the cache; `metrics` (when given) receives per-(kind, tier)
+/// hit/miss/eviction counts.
+#[allow(clippy::too_many_arguments)]
+pub fn execute_batch_cached(
+    engine: &EngineHandle,
+    registry: &ContextRegistry,
+    mode: ExecMode,
+    kind: JobKind,
+    tier: Tier,
+    jobs: &[Job],
+    cache: Option<&OpCache>,
+    metrics: Option<&Metrics>,
+) -> Vec<Result<ExecOutput, ExecError>> {
+    let cc = cache.map(|cache| CacheCtx {
+        cache,
+        metrics,
+        kind,
+        tier,
+    });
+    execute_batch_checked_with(engine, registry, mode, kind, tier, jobs, cc.as_ref())
+}
+
+fn execute_batch_checked_with(
+    engine: &EngineHandle,
+    registry: &ContextRegistry,
+    mode: ExecMode,
+    kind: JobKind,
+    tier: Tier,
+    jobs: &[Job],
+    cc: Option<&CacheCtx>,
+) -> Vec<Result<ExecOutput, ExecError>> {
     if jobs.is_empty() {
         return Vec::new();
     }
     if !jobs.iter().any(|j| j.auth) {
-        return execute_batch(engine, registry, mode, kind, tier, jobs)
+        return execute_batch_with(engine, registry, mode, kind, tier, jobs, cc)
             .into_iter()
             .map(|r| match r {
                 Ok(values) => Ok(ExecOutput { values, check: None }),
@@ -354,13 +455,13 @@ pub fn execute_batch_checked(
         JobKind::FirHybrid => {
             let ctx = registry.get(tier);
             jobs.iter()
-                .map(|j| exec_fir_checked(&ctx, mode, j, key_seed))
+                .map(|j| exec_fir_checked(&ctx, mode, j, key_seed, cc))
                 .collect()
         }
         JobKind::MatmulHybrid => {
             let ctx = registry.get(tier);
             jobs.iter()
-                .map(|j| exec_matmul_checked(&ctx, mode, j))
+                .map(|j| exec_matmul_checked(&ctx, mode, j, cc))
                 .collect()
         }
         // Admission rejects `auth` on kinds without MAC-carrying residue
@@ -475,21 +576,43 @@ fn exec_fir_checked(
     mode: ExecMode,
     job: &Job,
     key_seed: u64,
+    cc: Option<&CacheCtx>,
 ) -> Result<ExecOutput, ExecError> {
     let (taps, x) = match &job.payload {
         Payload::Fir { taps, x } => (taps, x),
         _ => return payload_error().map_err(ExecError::Job),
     };
     if !job.auth {
-        return exec_fir_hybrid(ctx, mode, job)
+        return exec_fir_hybrid(ctx, mode, job, cc)
             .map(|values| ExecOutput { values, check: None })
             .map_err(ExecError::Job);
     }
     let key = AuthKey::sample(&ctx.cfg.moduli, key_seed ^ job.id.rotate_left(17));
-    let rt: Vec<f64> = taps.iter().rev().copied().collect();
     let n = x.len();
-    let tt = rt.len();
-    let mut et = encode_dot_batch(&[&rt], tt, ctx);
+    let tt = taps.len();
+    // The reversed-tap plane is the job-independent half: consult the
+    // cache (authenticated partition, so an auth-epoch bump strands it)
+    // and **clone** the shared entry — MAC lanes are derived per job
+    // from the plane below, and fault injection mutates the per-job
+    // copy in place; the cached entry itself is never mutated, so an
+    // injected corruption can't poison later jobs.
+    let encode_rt = || {
+        let rt: Vec<f64> = taps.iter().rev().copied().collect();
+        encode_dot_batch(&[&rt], tt, ctx)
+    };
+    let mut et = match cc {
+        Some(cc) => {
+            let digest = auth::operand_digest_with(FIR_AUTH_SALT, taps);
+            let cached = cc.lookup(digest, true, || CachedOperand::DotBatch(encode_rt()));
+            match &*cached {
+                CachedOperand::DotBatch(d) => d.clone(),
+                // Role salts preclude cross-variant aliasing; if it ever
+                // happened, re-encode rather than misuse the entry.
+                _ => encode_rt(),
+            }
+        }
+        None => encode_rt(),
+    };
     let mut ex = encode_dot_batch(&[x.as_slice()], n, ctx);
     let bars = ctx.barrett();
     let mut mac_t = et.plane.scale_channels(&key.alpha, bars);
@@ -550,9 +673,10 @@ fn exec_matmul_checked(
     ctx: &HrfnaContext,
     mode: ExecMode,
     job: &Job,
+    cc: Option<&CacheCtx>,
 ) -> Result<ExecOutput, ExecError> {
     if !job.auth {
-        return exec_matmul_hybrid(ctx, mode, job)
+        return exec_matmul_hybrid(ctx, mode, job, cc)
             .map(|values| ExecOutput { values, check: None })
             .map_err(ExecError::Job);
     }
@@ -560,8 +684,12 @@ fn exec_matmul_checked(
         Payload::Matmul { a, b, dim } => (a, b, *dim),
         _ => return payload_error().map_err(ExecError::Job),
     };
+    // The product itself may come off a cached encoded RHS — Freivalds
+    // verifies the delivered values against the *raw* f64 inputs, so a
+    // stale or corrupted cached plane is caught exactly like a faulty
+    // datapath would be.
     #[allow(unused_mut)]
-    let mut out = match exec_matmul_hybrid(ctx, mode, job) {
+    let mut out = match exec_matmul_hybrid(ctx, mode, job, cc) {
         Ok(v) => v,
         Err(e) => return Err(ExecError::Job(e)),
     };
@@ -655,14 +783,33 @@ fn inject_plane_faults(enc: &mut DotBatchEncoded, mac: &mut ResiduePlane) {
 
 /// Hybrid FIR: the `workloads` direct-form filter in the lane's datapath
 /// (planar batched `dot_encoded` windows, or the scalar per-output MAC
-/// reference).
-fn exec_fir_hybrid(ctx: &HrfnaContext, mode: ExecMode, job: &Job) -> Result<Vec<f64>> {
+/// reference). With a cache, the planar path reuses the encoded tap
+/// vector across jobs sharing a filter — bit-identical because the
+/// cached taps are the very `N::from_f64` encodes `fir_filter` would
+/// produce inline (pinned by `pre_encoded_taps_bit_identical_to_raw_taps`).
+fn exec_fir_hybrid(
+    ctx: &HrfnaContext,
+    mode: ExecMode,
+    job: &Job,
+    cc: Option<&CacheCtx>,
+) -> Result<Vec<f64>> {
     let (taps, x) = match &job.payload {
         Payload::Fir { taps, x } => (taps, x),
         _ => return payload_error(),
     };
     Ok(match mode {
-        ExecMode::Planar => fir_filter::<Hrfna>(taps, x, ctx),
+        ExecMode::Planar => {
+            if let Some(cc) = cc {
+                let digest = auth::operand_digest_with(FIR_TAPS_SALT, taps);
+                let cached = cc.lookup(digest, false, || {
+                    CachedOperand::Taps(taps.iter().map(|&t| Hrfna::encode(t, ctx)).collect())
+                });
+                if let CachedOperand::Taps(eh) = &*cached {
+                    return Ok(fir_filter_encoded_taps::<Hrfna>(eh, x, ctx));
+                }
+            }
+            fir_filter::<Hrfna>(taps, x, ctx)
+        }
         ExecMode::Scalar => fir_filter_scalar::<Hrfna>(taps, x, ctx),
     })
 }
@@ -760,15 +907,38 @@ fn exec_dot_f32(engine: &EngineHandle, jobs: &[Job]) -> Vec<Result<Vec<f64>>> {
 
 /// Hybrid matmul: the `workloads` planar fast-path hook per job (each job
 /// already parallelizes across row blocks), or the scalar reference.
-fn exec_matmul_hybrid(ctx: &HrfnaContext, mode: ExecMode, job: &Job) -> Result<Vec<f64>> {
+/// With a cache, the planar path reuses the transposed block-encoded
+/// weight plane across jobs sharing a `B` — bit-identical because the
+/// cached plane is the very `encode_matmul_rhs` value the one-shot path
+/// constructs inline (pinned by
+/// `pre_encoded_rhs_bit_identical_to_one_shot_planar`).
+fn exec_matmul_hybrid(
+    ctx: &HrfnaContext,
+    mode: ExecMode,
+    job: &Job,
+    cc: Option<&CacheCtx>,
+) -> Result<Vec<f64>> {
     let (a, b, dim) = match &job.payload {
         Payload::Matmul { a, b, dim } => (a, b, *dim),
         _ => return payload_error(),
     };
     match mode {
-        ExecMode::Planar => Ok(crate::workloads::matmul::matmul::<Hrfna>(
-            a, b, dim, dim, dim, ctx,
-        )),
+        ExecMode::Planar => {
+            if let Some(cc) = cc {
+                // The inner dimension rides in the salt so a flattened
+                // square B of another dim can't alias the entry.
+                let digest = auth::operand_digest_with(MATMUL_RHS_SALT ^ dim as u64, b);
+                let cached = cc.lookup(digest, false, || {
+                    CachedOperand::Batch(encode_matmul_rhs(b, dim, dim, ctx))
+                });
+                if let CachedOperand::Batch(eb) = &*cached {
+                    return Ok(matmul_hrfna_planar_encoded(a, eb, dim, dim, dim, ctx));
+                }
+            }
+            Ok(crate::workloads::matmul::matmul::<Hrfna>(
+                a, b, dim, dim, dim, ctx,
+            ))
+        }
         ExecMode::Scalar => {
             let ea: Vec<Hrfna> = a.iter().map(|&v| Hrfna::encode(v, ctx)).collect();
             let eb: Vec<Hrfna> = b.iter().map(|&v| Hrfna::encode(v, ctx)).collect();

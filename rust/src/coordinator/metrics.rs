@@ -69,6 +69,12 @@ struct SlotMetrics {
     /// Integrity detections: authenticated results this slot caught as
     /// corrupted (MAC/exponent/checksum/Freivalds) before delivery.
     integrity_detections: AtomicU64,
+    /// Encoded-operand cache hits attributed to this slot's lookups.
+    cache_hits: AtomicU64,
+    /// Encoded-operand cache misses (cold or post-invalidation encodes).
+    cache_misses: AtomicU64,
+    /// Entries the cache evicted to admit this slot's inserts.
+    cache_evictions: AtomicU64,
     /// Wall time workers of this slot spent executing batches (ns).
     busy_ns: AtomicU64,
     /// Currently queued jobs (gauge; +1 on accept, −batch on dequeue).
@@ -91,6 +97,9 @@ impl Default for SlotMetrics {
             guard_events: AtomicU64::new(0),
             recon_events: AtomicU64::new(0),
             integrity_detections: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            cache_misses: AtomicU64::new(0),
+            cache_evictions: AtomicU64::new(0),
             busy_ns: AtomicU64::new(0),
             depth: AtomicI64::new(0),
             latency_sum_us: AtomicU64::new(0),
@@ -200,6 +209,21 @@ impl Metrics {
             .fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one encoded-operand cache lookup: a hit or a miss, plus
+    /// any evictions the miss's insert forced. Workers call this from
+    /// the cache-consulting executors (`execute_batch_cached`).
+    pub fn record_cache_lookup(&self, kind: JobKind, tier: Tier, hit: bool, evictions: u64) {
+        let s = self.slot(kind, tier);
+        if hit {
+            s.cache_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            s.cache_misses.fetch_add(1, Ordering::Relaxed);
+        }
+        if evictions > 0 {
+            s.cache_evictions.fetch_add(evictions, Ordering::Relaxed);
+        }
+    }
+
     /// Seed a tier's claim cursors from its context's current totals:
     /// events taken before serving started (client-side warmup on the
     /// same context) must not be attributed to the first lane that
@@ -283,6 +307,21 @@ impl Metrics {
         self.slot(kind, tier)
             .integrity_detections
             .load(Ordering::Relaxed)
+    }
+
+    /// Operand-cache hits recorded for a (kind, tier) slot.
+    pub fn cache_hits_tier(&self, kind: JobKind, tier: Tier) -> u64 {
+        self.slot(kind, tier).cache_hits.load(Ordering::Relaxed)
+    }
+
+    /// Operand-cache misses recorded for a (kind, tier) slot.
+    pub fn cache_misses_tier(&self, kind: JobKind, tier: Tier) -> u64 {
+        self.slot(kind, tier).cache_misses.load(Ordering::Relaxed)
+    }
+
+    /// Operand-cache evictions recorded for a (kind, tier) slot.
+    pub fn cache_evictions_tier(&self, kind: JobKind, tier: Tier) -> u64 {
+        self.slot(kind, tier).cache_evictions.load(Ordering::Relaxed)
     }
 
     /// Occupancy of one (kind, tier) slot in [0, 1]: that slot's batch
@@ -390,6 +429,33 @@ impl Metrics {
         JobKind::ALL.iter().map(|&k| self.integrity_detections(k)).sum()
     }
 
+    /// Operand-cache hits recorded for a kind.
+    pub fn cache_hits(&self, kind: JobKind) -> u64 {
+        self.sum_over_tiers(kind, |s| s.cache_hits.load(Ordering::Relaxed))
+    }
+
+    /// Operand-cache misses recorded for a kind.
+    pub fn cache_misses(&self, kind: JobKind) -> u64 {
+        self.sum_over_tiers(kind, |s| s.cache_misses.load(Ordering::Relaxed))
+    }
+
+    /// Operand-cache evictions recorded for a kind.
+    pub fn cache_evictions(&self, kind: JobKind) -> u64 {
+        self.sum_over_tiers(kind, |s| s.cache_evictions.load(Ordering::Relaxed))
+    }
+
+    /// Operand-cache hit ratio for a kind in [0, 1]; 0 when the kind
+    /// performed no lookups.
+    pub fn cache_hit_ratio(&self, kind: JobKind) -> f64 {
+        let hits = self.cache_hits(kind);
+        let total = hits + self.cache_misses(kind);
+        if total == 0 {
+            0.0
+        } else {
+            hits as f64 / total as f64
+        }
+    }
+
     /// Currently queued jobs in a kind's lanes (gauge; transiently ±1).
     pub fn queue_depth(&self, kind: JobKind) -> i64 {
         Tier::ALL
@@ -485,7 +551,8 @@ impl Metrics {
             "Serving metrics",
             &[
                 "lane", "jobs", "rej", "steal", "esc", "integ", "mean batch", "p50 us",
-                "p95 us", "p99 us", "occ %", "Mops", "norms", "guards", "recon",
+                "p95 us", "p99 us", "occ %", "Mops", "norms", "guards", "recon", "chit",
+                "cmiss", "cevict",
             ],
         );
         for &kind in &JobKind::ALL {
@@ -524,6 +591,9 @@ impl Metrics {
                     s.norm_events.load(Ordering::Relaxed).to_string(),
                     s.guard_events.load(Ordering::Relaxed).to_string(),
                     s.recon_events.load(Ordering::Relaxed).to_string(),
+                    s.cache_hits.load(Ordering::Relaxed).to_string(),
+                    s.cache_misses.load(Ordering::Relaxed).to_string(),
+                    s.cache_evictions.load(Ordering::Relaxed).to_string(),
                 ]);
             }
         }
@@ -757,6 +827,31 @@ mod tests {
         assert_eq!(m.mean_batch_size(JobKind::DotHybrid), 2.0);
         assert!(m.throughput_mops(JobKind::DotHybrid) > 0.0);
         assert!(m.occupancy(JobKind::DotHybrid, 2) > 0.0);
+    }
+
+    #[test]
+    fn cache_lookup_counters_per_slot_and_reported() {
+        let m = Metrics::default();
+        let k = JobKind::MatmulHybrid;
+        m.record_cache_lookup(k, P, false, 0);
+        m.record_cache_lookup(k, P, true, 0);
+        m.record_cache_lookup(k, P, true, 0);
+        m.record_cache_lookup(k, Tier::Lo, false, 2);
+        assert_eq!(m.cache_hits_tier(k, P), 2);
+        assert_eq!(m.cache_misses_tier(k, P), 1);
+        assert_eq!(m.cache_misses_tier(k, Tier::Lo), 1);
+        assert_eq!(m.cache_evictions_tier(k, Tier::Lo), 2);
+        assert_eq!(m.cache_hits(k), 2);
+        assert_eq!(m.cache_misses(k), 2);
+        assert_eq!(m.cache_evictions(k), 2);
+        assert!((m.cache_hit_ratio(k) - 0.5).abs() < 1e-12);
+        assert_eq!(m.cache_hit_ratio(JobKind::FirHybrid), 0.0);
+        // The rendered table carries the cache columns for active rows.
+        m.record(k, P, 10.0, 64);
+        let rendered = m.table().render();
+        for col in ["chit", "cmiss", "cevict"] {
+            assert!(rendered.contains(col), "missing column {col}");
+        }
     }
 
     #[test]

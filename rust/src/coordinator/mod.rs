@@ -7,7 +7,9 @@
 //! stealing and explicit backpressure, worker threads that execute whole
 //! batches on the planar residue lanes (one-pass block encode → lane
 //! kernels → bulk CRT of requested outputs) under the lane tier's
-//! context from the [`crate::hybrid::ContextRegistry`], per-tier
+//! context from the [`crate::hybrid::ContextRegistry`], a shared
+//! byte-bounded [`OpCache`] of block-encoded reusable operands (matmul
+//! weights, FIR taps) keyed by content digest + tier, per-tier
 //! histogram metrics, load generators and a drain-reporting shutdown.
 //!
 //! Every execution topology sits behind one seam: the [`Backend`]
@@ -29,6 +31,7 @@ pub mod cluster;
 pub mod error;
 pub mod hybrid_exec;
 pub mod metrics;
+pub mod op_cache;
 pub mod request;
 pub mod router;
 #[cfg(feature = "rpc")]
@@ -42,6 +45,7 @@ pub use error::Error;
 #[allow(deprecated)]
 pub use error::SubmitError;
 pub use hybrid_exec::ExecMode;
+pub use op_cache::{CachedOperand, OpCache};
 pub use request::{Job, JobKind, JobResult, JobSpec, Payload};
 pub use router::LaneKey;
 pub use serve_load::{closed_loop, open_loop, LoadReport};

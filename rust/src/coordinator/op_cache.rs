@@ -1,0 +1,411 @@
+//! Byte-bounded LRU cache of block-encoded operand planes.
+//!
+//! Serving workloads reuse operands heavily: a matmul lane typically
+//! multiplies many activation batches against a small pool of weight
+//! matrices, and a FIR lane convolves many signals against a fixed tap
+//! set. The planar executors re-encode those operands into RNS planes on
+//! every job, and at small-to-moderate shapes that block encode dominates
+//! the per-job cost. This cache keys the *encoded* form of the reusable
+//! operand by a content digest of its raw `f64` bits plus the precision
+//! tier it was encoded under, so repeat jobs skip straight to the lane
+//! kernels.
+//!
+//! Correctness invariants:
+//!
+//! * **Bit-identity.** An entry is only ever consulted by the executor
+//!   that would have produced the exact same encode: the digest covers
+//!   the operand's exact IEEE bits (no NaN/−0 canonicalization — see
+//!   [`crate::hybrid::auth::operand_digest`]) plus a per-call-site salt,
+//!   and the tier is part of the key, so a hit replays a bit-identical
+//!   plane. Integration tests pin cache-served results against
+//!   cold-encode results with `to_bits` equality.
+//! * **Authenticated entries are epoch-scoped.** MAC lanes are derived
+//!   per job *from* the cached plane (never stored in it), so a cached
+//!   operand is key-independent; still, authenticated entries carry the
+//!   cache's auth epoch in their key so [`OpCache::bump_auth_epoch`] can
+//!   strand them wholesale (e.g. on a suspected-compromise rotation)
+//!   without touching unauthenticated traffic.
+//! * **Mutation never leaks back.** Executors that mutate the encoded
+//!   operand in place (the fault-injection hooks corrupt the
+//!   authenticated FIR tap plane) clone the cached value first; the
+//!   shared entry is immutable behind its `Arc`.
+//!
+//! The cache is a plain `Mutex<HashMap>` with an O(entries) least-
+//! recently-used eviction scan — entry counts are small (weight pools,
+//! tap sets), the values are large, and the budget is enforced in bytes,
+//! so scan cost is noise next to one block encode.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::hybrid_exec::DotBatchEncoded;
+use crate::hybrid::registry::Tier;
+use crate::hybrid::{Hrfna, HrfnaBatch};
+
+/// One cached block-encoded operand. Three shapes, matching the three
+/// executor paths that re-encode a reusable operand per job:
+///
+/// * [`CachedOperand::Batch`] — a matmul RHS, transposed and
+///   block-encoded (`encode_matmul_rhs`).
+/// * [`CachedOperand::Taps`] — a FIR tap vector, per-element encoded
+///   exactly as `fir_filter`'s own `N::from_f64` loop would.
+/// * [`CachedOperand::DotBatch`] — the authenticated-FIR reversed tap
+///   plane (`encode_dot_batch`), cloned per job before MAC derivation
+///   and fault injection.
+pub enum CachedOperand {
+    /// Block-encoded matmul right-hand side (already transposed).
+    Batch(HrfnaBatch),
+    /// Per-element encoded FIR taps.
+    Taps(Vec<Hrfna>),
+    /// Encoded reversed-tap plane for the authenticated FIR path.
+    DotBatch(DotBatchEncoded),
+}
+
+impl CachedOperand {
+    /// Approximate heap footprint in bytes — lane buffers plus exponent
+    /// and interval sidecars. Container headers are ignored; the budget
+    /// is a working-set bound, not an allocator ledger.
+    pub fn approx_bytes(&self) -> usize {
+        match self {
+            CachedOperand::Batch(b) => b.len() * (b.k() * 8 + 20),
+            CachedOperand::Taps(ts) => {
+                let k = ts.first().map_or(0, |h| h.r.r.len());
+                ts.len() * (k * 8 + 20)
+            }
+            CachedOperand::DotBatch(d) => {
+                d.plane.k() * d.plane.n() * 8 + d.f.len() * 4
+            }
+        }
+    }
+}
+
+/// Outcome of one [`OpCache::get_or_insert_with`] call, for metrics
+/// attribution at the call site.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Lookup {
+    /// The value was served from the cache (no build ran).
+    pub hit: bool,
+    /// Entries evicted to fit the inserted value.
+    pub evictions: u64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct Key {
+    digest: u64,
+    tier: Tier,
+    authenticated: bool,
+    /// Auth-key epoch the entry was inserted under; always 0 for
+    /// unauthenticated entries. Bumping the epoch makes old
+    /// authenticated keys unreachable (then sweeps them).
+    epoch: u64,
+}
+
+struct Entry {
+    value: Arc<CachedOperand>,
+    bytes: usize,
+    last_used: u64,
+}
+
+struct Inner {
+    map: HashMap<Key, Entry>,
+    tick: u64,
+    total_bytes: usize,
+}
+
+/// Byte-bounded LRU cache of encoded operands, shared by all workers of
+/// a coordinator. See the module docs for the keying and invalidation
+/// contract.
+pub struct OpCache {
+    capacity_bytes: usize,
+    auth_epoch: AtomicU64,
+    inner: Mutex<Inner>,
+}
+
+impl OpCache {
+    /// New cache holding at most `capacity_bytes` of encoded operands
+    /// (approximate accounting, see [`CachedOperand::approx_bytes`]).
+    pub fn new(capacity_bytes: usize) -> OpCache {
+        OpCache {
+            capacity_bytes,
+            auth_epoch: AtomicU64::new(0),
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                tick: 0,
+                total_bytes: 0,
+            }),
+        }
+    }
+
+    /// Byte budget the cache was built with.
+    pub fn capacity_bytes(&self) -> usize {
+        self.capacity_bytes
+    }
+
+    /// Current number of cached entries.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    /// True when no entries are cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Current approximate resident bytes.
+    pub fn total_bytes(&self) -> usize {
+        self.inner.lock().unwrap().total_bytes
+    }
+
+    /// Current authenticated-entry epoch.
+    pub fn auth_epoch(&self) -> u64 {
+        self.auth_epoch.load(Ordering::Relaxed)
+    }
+
+    /// Look up the operand for `(digest, tier, authenticated)`, building
+    /// and inserting it on a miss. The build closure runs *outside* the
+    /// cache lock, so a slow block encode never stalls other workers'
+    /// lookups; if another worker inserted the same key meanwhile, its
+    /// copy wins (keeping one shared plane) and this call still reports
+    /// a miss, because it paid for the encode.
+    ///
+    /// Values larger than the whole cache budget are returned uncached.
+    pub fn get_or_insert_with(
+        &self,
+        digest: u64,
+        tier: Tier,
+        authenticated: bool,
+        build: impl FnOnce() -> CachedOperand,
+    ) -> (Arc<CachedOperand>, Lookup) {
+        let epoch = if authenticated { self.auth_epoch() } else { 0 };
+        let key = Key {
+            digest,
+            tier,
+            authenticated,
+            epoch,
+        };
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.tick += 1;
+            let tick = inner.tick;
+            if let Some(e) = inner.map.get_mut(&key) {
+                e.last_used = tick;
+                return (
+                    Arc::clone(&e.value),
+                    Lookup {
+                        hit: true,
+                        evictions: 0,
+                    },
+                );
+            }
+        }
+
+        let value = Arc::new(build());
+        let bytes = value.approx_bytes();
+        if bytes > self.capacity_bytes {
+            return (
+                value,
+                Lookup {
+                    hit: false,
+                    evictions: 0,
+                },
+            );
+        }
+
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(e) = inner.map.get_mut(&key) {
+            // Lost the build race: reuse the resident plane so all
+            // workers share one copy, but report the miss we paid for.
+            e.last_used = tick;
+            return (
+                Arc::clone(&e.value),
+                Lookup {
+                    hit: false,
+                    evictions: 0,
+                },
+            );
+        }
+        let mut evictions = 0u64;
+        while inner.total_bytes + bytes > self.capacity_bytes && !inner.map.is_empty() {
+            let victim = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k)
+                .expect("non-empty map has an LRU entry");
+            if let Some(e) = inner.map.remove(&victim) {
+                inner.total_bytes -= e.bytes;
+                evictions += 1;
+            }
+        }
+        inner.total_bytes += bytes;
+        inner.map.insert(
+            key,
+            Entry {
+                value: Arc::clone(&value),
+                bytes,
+                last_used: tick,
+            },
+        );
+        (
+            value,
+            Lookup {
+                hit: false,
+                evictions,
+            },
+        )
+    }
+
+    /// Drop every cached entry (and bump the auth epoch). The hook for
+    /// events that change what an encode would produce or whether old
+    /// planes should be trusted — e.g. rebuilding the tier registry with
+    /// different contexts, or recovering a quarantined worker pool.
+    pub fn invalidate_all(&self) {
+        self.auth_epoch.fetch_add(1, Ordering::Relaxed);
+        let mut inner = self.inner.lock().unwrap();
+        inner.map.clear();
+        inner.total_bytes = 0;
+    }
+
+    /// Advance the authenticated-entry epoch and sweep every
+    /// authenticated entry; unauthenticated entries are untouched. Call
+    /// on auth-key rotation.
+    pub fn bump_auth_epoch(&self) {
+        self.auth_epoch.fetch_add(1, Ordering::Relaxed);
+        let mut inner = self.inner.lock().unwrap();
+        let mut freed = 0usize;
+        inner.map.retain(|k, e| {
+            if k.authenticated {
+                freed += e.bytes;
+                false
+            } else {
+                true
+            }
+        });
+        inner.total_bytes -= freed;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hybrid::HrfnaContext;
+
+    fn ctx() -> HrfnaContext {
+        HrfnaContext::paper_default()
+    }
+
+    fn batch_operand(vals: &[f64], ctx: &HrfnaContext) -> CachedOperand {
+        CachedOperand::Batch(HrfnaBatch::encode(vals, ctx))
+    }
+
+    #[test]
+    fn miss_then_hit_shares_one_arc() {
+        let ctx = ctx();
+        let cache = OpCache::new(1 << 20);
+        let (v1, l1) = cache.get_or_insert_with(7, Tier::Paper, false, || {
+            batch_operand(&[1.0, 2.0, 3.0], &ctx)
+        });
+        assert!(!l1.hit);
+        let (v2, l2) = cache.get_or_insert_with(7, Tier::Paper, false, || {
+            panic!("hit must not rebuild")
+        });
+        assert!(l2.hit);
+        assert!(Arc::ptr_eq(&v1, &v2));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn tier_and_auth_flag_partition_the_key_space() {
+        let ctx = ctx();
+        let cache = OpCache::new(1 << 20);
+        let build = || batch_operand(&[4.0; 8], &ctx);
+        let (_, a) = cache.get_or_insert_with(9, Tier::Lo, false, build);
+        let (_, b) = cache.get_or_insert_with(9, Tier::Paper, false, build);
+        let (_, c) = cache.get_or_insert_with(9, Tier::Paper, true, build);
+        assert!(!a.hit && !b.hit && !c.hit);
+        assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn lru_eviction_respects_byte_budget() {
+        let ctx = ctx();
+        let one = batch_operand(&[1.0; 64], &ctx).approx_bytes();
+        // Room for exactly two entries.
+        let cache = OpCache::new(2 * one + one / 2);
+        for d in 0..2u64 {
+            cache.get_or_insert_with(d, Tier::Paper, false, || {
+                batch_operand(&[d as f64; 64], &ctx)
+            });
+        }
+        // Touch entry 0 so entry 1 is the LRU victim.
+        let (_, l) = cache.get_or_insert_with(0, Tier::Paper, false, || {
+            panic!("must hit")
+        });
+        assert!(l.hit);
+        let (_, l2) = cache.get_or_insert_with(2, Tier::Paper, false, || {
+            batch_operand(&[2.0; 64], &ctx)
+        });
+        assert_eq!(l2.evictions, 1);
+        assert_eq!(cache.len(), 2);
+        assert!(cache.total_bytes() <= cache.capacity_bytes());
+        // Entry 0 survived; entry 1 was evicted.
+        let (_, l0) = cache.get_or_insert_with(0, Tier::Paper, false, || {
+            batch_operand(&[0.0; 64], &ctx)
+        });
+        assert!(l0.hit);
+        let (_, l1) = cache.get_or_insert_with(1, Tier::Paper, false, || {
+            batch_operand(&[1.0; 64], &ctx)
+        });
+        assert!(!l1.hit);
+    }
+
+    #[test]
+    fn oversize_values_bypass_the_cache() {
+        let ctx = ctx();
+        let cache = OpCache::new(16);
+        let (_, l) = cache.get_or_insert_with(3, Tier::Paper, false, || {
+            batch_operand(&[1.0; 128], &ctx)
+        });
+        assert!(!l.hit);
+        assert_eq!(l.evictions, 0);
+        assert_eq!(cache.len(), 0);
+        assert_eq!(cache.total_bytes(), 0);
+    }
+
+    #[test]
+    fn epoch_bump_sweeps_only_authenticated_entries() {
+        let ctx = ctx();
+        let cache = OpCache::new(1 << 20);
+        cache.get_or_insert_with(1, Tier::Paper, false, || batch_operand(&[1.0; 8], &ctx));
+        cache.get_or_insert_with(2, Tier::Paper, true, || batch_operand(&[2.0; 8], &ctx));
+        assert_eq!(cache.len(), 2);
+        cache.bump_auth_epoch();
+        assert_eq!(cache.len(), 1);
+        // The unauthenticated entry still hits...
+        let (_, lu) = cache.get_or_insert_with(1, Tier::Paper, false, || {
+            panic!("must hit")
+        });
+        assert!(lu.hit);
+        // ...while the authenticated key re-misses under the new epoch.
+        let (_, la) =
+            cache.get_or_insert_with(2, Tier::Paper, true, || batch_operand(&[2.0; 8], &ctx));
+        assert!(!la.hit);
+    }
+
+    #[test]
+    fn invalidate_all_clears_everything() {
+        let ctx = ctx();
+        let cache = OpCache::new(1 << 20);
+        cache.get_or_insert_with(1, Tier::Paper, false, || batch_operand(&[1.0; 8], &ctx));
+        cache.get_or_insert_with(2, Tier::Wide, true, || batch_operand(&[2.0; 8], &ctx));
+        cache.invalidate_all();
+        assert!(cache.is_empty());
+        assert_eq!(cache.total_bytes(), 0);
+        let (_, l) =
+            cache.get_or_insert_with(1, Tier::Paper, false, || batch_operand(&[1.0; 8], &ctx));
+        assert!(!l.hit, "invalidated entry must not be served");
+    }
+}

@@ -19,8 +19,9 @@ use std::time::{Duration, Instant};
 
 use super::batcher::{BatchPolicy, BatchQueue, PushError};
 use super::error::Error;
-use super::hybrid_exec::{execute_batch_checked, ExecError, ExecMode};
+use super::hybrid_exec::{execute_batch_cached, ExecError, ExecMode};
 use super::metrics::Metrics;
+use super::op_cache::OpCache;
 use super::request::{Job, JobKind, JobResult, JobSpec, Payload};
 use super::router::{admit, LaneKey, ShapeBuckets};
 use crate::hybrid::registry::{ContextRegistry, Tier};
@@ -37,6 +38,11 @@ pub struct CoordinatorConfig {
     /// Hybrid datapath: planar batched lanes (default) or the scalar
     /// `Hrfna` reference (benchmark baseline).
     pub exec: ExecMode,
+    /// Byte budget of the shared encoded-operand cache (block-encoded
+    /// matmul weight planes and FIR tap vectors, keyed by content
+    /// digest + tier). `0` disables the cache entirely — every job
+    /// takes the cold-encode path, bit-identical either way.
+    pub op_cache_bytes: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -46,6 +52,7 @@ impl Default for CoordinatorConfig {
             batch: BatchPolicy::default(),
             buckets: ShapeBuckets::default(),
             exec: ExecMode::Planar,
+            op_cache_bytes: 32 << 20,
         }
     }
 }
@@ -92,6 +99,7 @@ pub struct Coordinator {
     pub metrics: Arc<Metrics>,
     next_id: AtomicU64,
     cfg: CoordinatorConfig,
+    op_cache: Option<Arc<OpCache>>,
     workers: Vec<thread::JoinHandle<()>>,
 }
 
@@ -120,6 +128,7 @@ impl Coordinator {
                 metrics.seed_norm_cursor(tier, pre.norms, pre.guard_norms, pre.reconstructions);
             }
         }
+        let op_cache = (cfg.op_cache_bytes > 0).then(|| Arc::new(OpCache::new(cfg.op_cache_bytes)));
         let mut workers = Vec::new();
         let keys: Vec<LaneKey> = queues.keys().copied().collect();
         for key in keys {
@@ -129,6 +138,7 @@ impl Coordinator {
                 let engine = engine.clone();
                 let registry = Arc::clone(&registry);
                 let metrics = Arc::clone(&metrics);
+                let op_cache = op_cache.clone();
                 let mode = cfg.exec;
                 workers.push(
                     thread::Builder::new()
@@ -145,8 +155,15 @@ impl Coordinator {
                                 }
                                 let size = batch.len();
                                 let t0 = Instant::now();
-                                let results = execute_batch_checked(
-                                    &engine, &registry, mode, kind, tier, &batch,
+                                let results = execute_batch_cached(
+                                    &engine,
+                                    &registry,
+                                    mode,
+                                    kind,
+                                    tier,
+                                    &batch,
+                                    op_cache.as_deref(),
+                                    Some(&metrics),
                                 );
                                 metrics.record_batch(kind, tier, size, t0.elapsed());
                                 // Per-lane normalization accounting: hand
@@ -225,6 +242,7 @@ impl Coordinator {
             metrics,
             next_id: AtomicU64::new(1),
             cfg,
+            op_cache,
             workers,
         }
     }
@@ -232,6 +250,24 @@ impl Coordinator {
     /// The active configuration.
     pub fn config(&self) -> &CoordinatorConfig {
         &self.cfg
+    }
+
+    /// The shared encoded-operand cache, when enabled
+    /// (`op_cache_bytes > 0`).
+    pub fn op_cache(&self) -> Option<&Arc<OpCache>> {
+        self.op_cache.as_ref()
+    }
+
+    /// Drop every cached encoded operand and advance the auth epoch.
+    /// Call whenever cached planes could go stale or lose trust — e.g.
+    /// after rebuilding the tier registry with different contexts
+    /// (today's [`ContextRegistry`] is immutable once built, so this is
+    /// the hook a rebuild path would use), on auth-key rotation, or
+    /// when recovering a quarantined worker pool.
+    pub fn invalidate_op_cache(&self) {
+        if let Some(c) = &self.op_cache {
+            c.invalidate_all();
+        }
     }
 
     /// The tier registry this coordinator serves from.

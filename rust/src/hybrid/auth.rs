@@ -404,6 +404,40 @@ pub fn values_checksum(values: &[f64]) -> u64 {
     h
 }
 
+/// Content digest over *exact* f64 bit patterns — the operand-cache key
+/// (see `coordinator::op_cache`). Unlike [`values_checksum`] this does
+/// **not** canonicalize NaN or `-0.0`: two operand vectors map to the
+/// same cached encode only when every input bit is identical, which is
+/// exactly the condition under which a block encode is replayable
+/// bit-for-bit. The element count is folded in so a prefix and its
+/// extension can't collide trivially.
+pub fn operand_digest(values: &[f64]) -> u64 {
+    operand_digest_with(0, values)
+}
+
+/// [`operand_digest`] with a caller salt folded in first. Call sites
+/// caching different operand roles (matmul RHS, FIR taps, reversed
+/// authenticated taps) salt differently so equal raw bytes in different
+/// roles never alias one cache entry.
+pub fn operand_digest_with(salt: u64, values: &[f64]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let head = salt
+        .to_le_bytes()
+        .into_iter()
+        .chain((values.len() as u64).to_le_bytes());
+    for byte in head {
+        h ^= byte as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    for &v in values {
+        for byte in v.to_bits().to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -417,6 +451,28 @@ mod tests {
 
     fn key(c: &HrfnaContext, seed: u64) -> AuthKey {
         AuthKey::sample(&c.cfg.moduli, seed)
+    }
+
+    #[test]
+    fn operand_digest_is_exact_bits_not_canonical() {
+        // values_checksum folds -0.0 into +0.0 and all NaNs together;
+        // the cache digest must NOT (a cached encode of -0.0 is a
+        // different bit pattern than one of +0.0).
+        assert_eq!(values_checksum(&[0.0]), values_checksum(&[-0.0]));
+        assert_ne!(operand_digest(&[0.0]), operand_digest(&[-0.0]));
+        assert_eq!(operand_digest(&[1.5, -2.0]), operand_digest(&[1.5, -2.0]));
+        assert_ne!(operand_digest(&[1.5, -2.0]), operand_digest(&[1.5, -2.5]));
+        // Length is folded in: a zero-padded extension can't collide
+        // with its prefix.
+        assert_ne!(operand_digest(&[1.0]), operand_digest(&[1.0, 0.0]));
+        assert_ne!(operand_digest(&[]), operand_digest(&[0.0]));
+    }
+
+    #[test]
+    fn operand_digest_salt_separates_roles() {
+        let xs = [3.0, 1.0, 4.0, 1.0, 5.0];
+        assert_ne!(operand_digest_with(1, &xs), operand_digest_with(2, &xs));
+        assert_eq!(operand_digest_with(0, &xs), operand_digest(&xs));
     }
 
     #[test]

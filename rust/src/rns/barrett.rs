@@ -74,6 +74,14 @@ impl Barrett {
         self.m < 1 << MAX_LANE_MODULUS_BITS
     }
 
+    /// The precomputed constant `⌊2^64 / m⌋`, for in-crate kernels (the
+    /// AVX2 lane kernels emulate the 64×64 mul-hi of [`Barrett::reduce`]
+    /// from 32-bit limb products and need the raw constant).
+    #[inline]
+    pub(crate) fn mu(&self) -> u64 {
+        self.mu
+    }
+
     /// `2^64 mod m`, derived from the stored constants:
     /// `2^64 = mu·m + ρ` so `ρ = 0 − mu·m` in wrapping u64 arithmetic.
     #[inline]

@@ -16,6 +16,11 @@ pub mod barrett;
 pub mod residue;
 pub mod crt;
 pub mod plane;
+// AVX2 implementations of the plane lane kernels; reached only through
+// the runtime-dispatch shims in `plane` (never called directly), so the
+// module stays crate-private. Compiled out entirely off x86_64.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub(crate) mod simd;
 
 pub use barrett::{barrett_set, Barrett, BarrettError};
 pub use crt::CrtContext;

@@ -24,6 +24,19 @@
 //! per-element kernels live on in [`reference`] and back the bit-identity
 //! property tests.
 //!
+//! ## Runtime SIMD dispatch (`simd` feature)
+//!
+//! With `--features simd` on x86_64, every hot kernel ([`lane_mul`],
+//! [`lane_scale`], [`lane_fma`], [`lane_dot`]/[`lane_dot_folded`],
+//! [`lane_dot_scaled`]) is a thin dispatch shim: the wide-modulus check is
+//! hoisted here (one branch per *call*, not per element), then the kernel
+//! takes the AVX2 path from [`crate::rns::simd`] when the host CPU
+//! reports AVX2 (`is_x86_feature_detected!`, probed once and cached) and
+//! the scalar `*_scalar` kernel otherwise — one binary serves any host.
+//! Scalar and SIMD variants are bit-identical (pinned by the property
+//! suite below, including fold straddles and the ≥ 32-bit-modulus
+//! fallback); [`simd_active`] reports which path calls are taking.
+//!
 //! The plane is pure residue data. Exponent and interval bookkeeping for a
 //! batch of HRFNA values lives in [`crate::hybrid::batch::HrfnaBatch`],
 //! which drives these kernels.
@@ -286,10 +299,42 @@ impl ResiduePlane {
     }
 }
 
-/// `out[j] = (x[j] * y[j]) mod m` over one lane (branch-free Barrett:
-/// mul-hi quotient estimate, mul-lo remainder, conditional subtract).
+/// True iff lane-kernel calls are currently taking the AVX2 SIMD path:
+/// the `simd` feature is compiled in, the target is x86_64 and the host
+/// CPU reports AVX2 at runtime. Scalar and SIMD paths are bit-identical —
+/// this is observability for benches and tests, not a correctness switch.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub fn simd_active() -> bool {
+    super::simd::avx2_available()
+}
+
+/// `simd` feature off (or non-x86_64 target): the dispatch shims always
+/// take the scalar kernels.
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+pub fn simd_active() -> bool {
+    false
+}
+
+/// `out[j] = (x[j] * y[j]) mod m` over one lane. Dispatch shim: AVX2 when
+/// compiled in and available (lane-width moduli only), else the scalar
+/// Barrett kernel [`lane_mul_scalar`].
 #[inline]
 pub fn lane_mul(bar: Barrett, x: &[u64], y: &[u64], out: &mut [u64]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if bar.deferred_ok() && super::simd::avx2_available() {
+            // SAFETY: AVX2 support was just verified at runtime.
+            unsafe { super::simd::lane_mul_avx2(bar, x, y, out) };
+            return;
+        }
+    }
+    lane_mul_scalar(bar, x, y, out)
+}
+
+/// Scalar `out[j] = (x[j] * y[j]) mod m` (branch-free Barrett: mul-hi
+/// quotient estimate, mul-lo remainder, conditional subtract).
+#[inline]
+pub fn lane_mul_scalar(bar: Barrett, x: &[u64], y: &[u64], out: &mut [u64]) {
     for ((o, &a), &b) in out.iter_mut().zip(x).zip(y) {
         *o = bar.mul(a, b);
     }
@@ -312,27 +357,60 @@ pub fn lane_neg(m: u64, x: &[u64], out: &mut [u64]) {
 }
 
 /// `out[j] = (x[j] * mult) mod m` over one lane (residue-domain scaling,
-/// e.g. by a precomputed `2^Δ mod m`). The Shoup constant for `mult` is
-/// precomputed once, making the loop body a mul-hi + mul-lo pair + one
-/// conditional subtract. Requires `mult < m`.
+/// e.g. by a precomputed `2^Δ mod m`). Dispatch shim over
+/// [`lane_scale_scalar`] and the AVX2 Shoup kernel. Requires `mult < m`.
 #[inline]
 pub fn lane_scale(bar: Barrett, x: &[u64], mult: u64, out: &mut [u64]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if bar.deferred_ok() && super::simd::avx2_available() {
+            // SAFETY: AVX2 support was just verified at runtime.
+            unsafe { super::simd::lane_scale_avx2(bar, x, mult, out) };
+            return;
+        }
+    }
+    lane_scale_scalar(bar, x, mult, out)
+}
+
+/// Scalar `out[j] = (x[j] * mult) mod m`: the Shoup constant for `mult`
+/// is precomputed once, making the loop body a mul-hi + mul-lo pair + one
+/// conditional subtract. Requires `mult < m`.
+#[inline]
+pub fn lane_scale_scalar(bar: Barrett, x: &[u64], mult: u64, out: &mut [u64]) {
     let shoup = bar.shoup(mult);
     for (o, &a) in out.iter_mut().zip(x) {
         *o = bar.mul_shoup(a, mult, shoup);
     }
 }
 
-/// `acc[j] = (acc[j] + x[j]*y[j]) mod m` over one lane. Deferred path:
-/// the raw ≤ 62-bit product plus the ≤ 31-bit accumulator fits 63 bits,
-/// so one Barrett reduction per element replaces the former
-/// reduce-then-modular-add pair. Falls back to [`reference::lane_fma`]
-/// for moduli outside the lane-width invariant.
+/// `acc[j] = (acc[j] + x[j]*y[j]) mod m` over one lane. Dispatch shim:
+/// the wide-modulus check is hoisted here — [`reference::lane_fma`] for
+/// moduli outside the lane-width invariant, decided once per call instead
+/// of branching in the loop prelude — then AVX2 or [`lane_fma_scalar`].
 #[inline]
 pub fn lane_fma(bar: Barrett, acc: &mut [u64], x: &[u64], y: &[u64]) {
     if !bar.deferred_ok() {
         return reference::lane_fma(bar, acc, x, y);
     }
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if super::simd::avx2_available() {
+            // SAFETY: AVX2 support was just verified at runtime.
+            unsafe { super::simd::lane_fma_avx2(bar, acc, x, y) };
+            return;
+        }
+    }
+    lane_fma_scalar(bar, acc, x, y)
+}
+
+/// Scalar deferred FMA: the raw ≤ 62-bit product plus the ≤ 31-bit
+/// accumulator fits 63 bits, so one Barrett reduction per element
+/// replaces the former reduce-then-modular-add pair. Lane-width moduli
+/// only (the dispatch shim [`lane_fma`] routes wide moduli to the
+/// reference kernel).
+#[inline]
+pub fn lane_fma_scalar(bar: Barrett, acc: &mut [u64], x: &[u64], y: &[u64]) {
+    debug_assert!(bar.deferred_ok());
     for ((a, &xv), &yv) in acc.iter_mut().zip(x).zip(y) {
         *a = bar.reduce(*a + xv * yv);
     }
@@ -346,15 +424,53 @@ pub fn lane_dot(bar: Barrett, x: &[u64], y: &[u64]) -> u64 {
     lane_dot_folded(bar, x, y, DOT_FOLD_TERMS)
 }
 
-/// [`lane_dot`] with an explicit fold threshold: raw products accumulate
-/// into [`DOT_STRIPES`] independent `u128` sums and fold to one
-/// `Barrett::reduce_u128` every `fold` terms. Exposed so property tests
-/// and benches can straddle the fold boundary with small thresholds; the
-/// result is bit-identical to [`reference::lane_dot`] for every `fold`.
+/// [`lane_dot`] with an explicit fold threshold, as a dispatch shim:
+/// wide moduli fall back to [`reference::lane_dot`], lane-width moduli
+/// take the AVX2 kernel when compiled in and available, else
+/// [`lane_dot_folded_scalar`]. Exposed so property tests and benches can
+/// straddle the fold boundary with small thresholds; the result is
+/// bit-identical to [`reference::lane_dot`] for every `fold` on every
+/// path.
 pub fn lane_dot_folded(bar: Barrett, x: &[u64], y: &[u64], fold: usize) -> u64 {
     if !bar.deferred_ok() {
         return reference::lane_dot(bar, x, y);
     }
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if super::simd::avx2_available() {
+            // SAFETY: AVX2 support was just verified at runtime.
+            return unsafe { super::simd::lane_dot_folded_avx2(bar, x, y, fold) };
+        }
+    }
+    lane_dot_folded_scalar(bar, x, y, fold)
+}
+
+/// The [`lane_dot`] dispatch shim with the SIMD arm compiled out: hoisted
+/// wide-modulus check + [`lane_dot_folded_scalar`] — exactly what
+/// [`lane_dot`] compiles to without the `simd` feature (or on a host
+/// without AVX2). A named entry point so `bench_kernels` can pin the
+/// dispatch-shim overhead (≤ 1.05× the raw scalar kernel) in every build
+/// flavor.
+pub fn lane_dot_dispatch_scalar(bar: Barrett, x: &[u64], y: &[u64]) -> u64 {
+    if !bar.deferred_ok() {
+        return reference::lane_dot(bar, x, y);
+    }
+    lane_dot_folded_scalar(bar, x, y, DOT_FOLD_TERMS)
+}
+
+/// Scalar deferred dot with the default fold threshold. Lane-width
+/// moduli only (dispatch shims route wide moduli to the reference
+/// kernel).
+#[inline]
+pub fn lane_dot_scalar(bar: Barrett, x: &[u64], y: &[u64]) -> u64 {
+    lane_dot_folded_scalar(bar, x, y, DOT_FOLD_TERMS)
+}
+
+/// Scalar [`lane_dot_folded`]: raw products accumulate into
+/// [`DOT_STRIPES`] independent `u128` sums and fold to one
+/// `Barrett::reduce_u128` every `fold` terms.
+pub fn lane_dot_folded_scalar(bar: Barrett, x: &[u64], y: &[u64], fold: usize) -> u64 {
+    debug_assert!(bar.deferred_ok());
     let n = x.len().min(y.len());
     let (x, y) = (&x[..n], &y[..n]);
     let fold = fold.clamp(1, DOT_FOLD_TERMS);
@@ -383,14 +499,30 @@ pub fn lane_dot_folded(bar: Barrett, x: &[u64], y: &[u64], fold: usize) -> u64 {
 
 /// Modular dot product with a per-element scale factor:
 /// `Σ_j x[j]·y[j]·mults[j] mod m` — the exponent-aligned accumulation of
-/// Algorithm 1 with `mults[j] = 2^{Δ_j} mod m`. Deferred: one reduction
-/// brings the 62-bit product back under `m`, the third factor stays raw
-/// in the `u128` accumulator, and the fold pays the second reduction once
-/// per [`DOT_FOLD_TERMS`] terms.
+/// Algorithm 1 with `mults[j] = 2^{Δ_j} mod m`. Dispatch shim: wide
+/// moduli fall back to [`reference::lane_dot_scaled`], lane-width moduli
+/// take AVX2 when compiled in and available, else
+/// [`lane_dot_scaled_scalar`].
 pub fn lane_dot_scaled(bar: Barrett, x: &[u64], y: &[u64], mults: &[u64]) -> u64 {
     if !bar.deferred_ok() {
         return reference::lane_dot_scaled(bar, x, y, mults);
     }
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if super::simd::avx2_available() {
+            // SAFETY: AVX2 support was just verified at runtime.
+            return unsafe { super::simd::lane_dot_scaled_avx2(bar, x, y, mults) };
+        }
+    }
+    lane_dot_scaled_scalar(bar, x, y, mults)
+}
+
+/// Scalar deferred scaled dot: one reduction brings the 62-bit product
+/// back under `m`, the third factor stays raw in the `u128` accumulator,
+/// and the fold pays the second reduction once per [`DOT_FOLD_TERMS`]
+/// terms.
+pub fn lane_dot_scaled_scalar(bar: Barrett, x: &[u64], y: &[u64], mults: &[u64]) -> u64 {
+    debug_assert!(bar.deferred_ok());
     let n = x.len().min(y.len()).min(mults.len());
     let (x, y, mults) = (&x[..n], &y[..n], &mults[..n]);
     let mut acc = 0u64;
@@ -715,6 +847,31 @@ mod tests {
             lane_mul(bar, &x, &y, &mut mul_def);
             reference::lane_mul(bar, &x, &y, &mut mul_ref);
             crate::prop_assert!(mul_def == mul_ref, "lane_mul m={m} n={n}");
+            // Every (dispatched, scalar) pair must also agree bit for
+            // bit: with the simd feature on an AVX2 host the dispatched
+            // kernel is the SIMD variant and this genuinely pins
+            // (SIMD, scalar); in every other build flavor it pins the
+            // shim against the kernel it wraps.
+            crate::prop_assert!(
+                lane_dot(bar, &x, &y) == lane_dot_scalar(bar, &x, &y),
+                "lane_dot dispatch-vs-scalar m={m} n={n}"
+            );
+            crate::prop_assert!(
+                lane_dot_scaled(bar, &x, &y, &mults)
+                    == lane_dot_scaled_scalar(bar, &x, &y, &mults),
+                "lane_dot_scaled dispatch-vs-scalar m={m} n={n}"
+            );
+            let mut acc_sc = acc_ref.clone();
+            let mut acc_disp = acc_ref.clone();
+            lane_fma_scalar(bar, &mut acc_sc, &x, &y);
+            lane_fma(bar, &mut acc_disp, &x, &y);
+            crate::prop_assert!(acc_disp == acc_sc, "lane_fma dispatch-vs-scalar m={m} n={n}");
+            let mut out_sc = vec![0u64; n];
+            lane_scale_scalar(bar, &x, mult, &mut out_sc);
+            crate::prop_assert!(out_def == out_sc, "lane_scale dispatch-vs-scalar m={m} n={n}");
+            let mut mul_sc = vec![0u64; n];
+            lane_mul_scalar(bar, &x, &y, &mut mul_sc);
+            crate::prop_assert!(mul_def == mul_sc, "lane_mul dispatch-vs-scalar m={m} n={n}");
             Ok(())
         });
     }
@@ -744,6 +901,15 @@ mod tests {
                     lane_dot_folded(bar, &x, &y, fold) == reference::lane_dot(bar, &x, &y),
                     "fold={fold} n={n} m={m}"
                 );
+                // The dispatched fold (SIMD on an AVX2 simd build) must
+                // agree with the scalar fold at every straddle shape —
+                // the SIMD kernel re-associates only within a chunk, so
+                // any chunk-boundary drift would show up exactly here.
+                crate::prop_assert!(
+                    lane_dot_folded(bar, &x, &y, fold)
+                        == lane_dot_folded_scalar(bar, &x, &y, fold),
+                    "dispatch-vs-scalar fold={fold} n={n} m={m}"
+                );
             }
             Ok(())
         });
@@ -767,6 +933,43 @@ mod tests {
             lane_dot_folded(bar, &x, &y, 1000),
             reference::lane_dot(bar, &x, &y)
         );
+    }
+
+    #[test]
+    fn dispatch_bit_identical_at_exactly_31_and_32_bit_moduli() {
+        // The wide-modulus fallback decision now lives in the dispatch
+        // shims (hoisted out of the loop preludes): pin bit-identity on
+        // both sides of that boundary — the widest lane-legal modulus
+        // (exactly 31 bits, deferred/SIMD path) and the narrowest wide
+        // modulus (exactly 32 bits, reference fallback path).
+        let m31 = (1u64 << 31) - 1; // 31 bits: deferred_ok
+        let m32 = (1u64 << 31) + 11; // 32 bits: reference fallback
+        assert!(Barrett::new(m31).deferred_ok());
+        assert!(!Barrett::new(m32).deferred_ok());
+        let mut rng = Rng::new(77);
+        for m in [m31, m32] {
+            let bar = Barrett::new(m);
+            for n in [0usize, 1, 3, 4, 7, 33, 257] {
+                let x = random_lane(&mut rng, m, n);
+                let y = random_lane(&mut rng, m, n);
+                let mults = random_lane(&mut rng, m, n);
+                let mut acc = random_lane(&mut rng, m, n);
+                let mut acc_ref = acc.clone();
+                lane_fma(bar, &mut acc, &x, &y);
+                reference::lane_fma(bar, &mut acc_ref, &x, &y);
+                assert_eq!(acc, acc_ref, "lane_fma m={m} n={n}");
+                assert_eq!(
+                    lane_dot(bar, &x, &y),
+                    reference::lane_dot(bar, &x, &y),
+                    "lane_dot m={m} n={n}"
+                );
+                assert_eq!(
+                    lane_dot_scaled(bar, &x, &y, &mults),
+                    reference::lane_dot_scaled(bar, &x, &y, &mults),
+                    "lane_dot_scaled m={m} n={n}"
+                );
+            }
+        }
     }
 
     #[test]

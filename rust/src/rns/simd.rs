@@ -1,0 +1,356 @@
+//! AVX2 lane kernels (`simd` feature, x86_64 only).
+//!
+//! Vector implementations of the hot [`super::plane`] lane kernels,
+//! reached exclusively through the runtime-dispatch shims in that module
+//! (`is_x86_feature_detected!("avx2")`, cached in an atomic) — one binary
+//! serves any host, falling back to the scalar kernels on CPUs without
+//! AVX2.
+//!
+//! ## Exactness argument (why SIMD is bit-identical to scalar)
+//!
+//! Every kernel here computes the *same mathematical value* the scalar
+//! kernel computes, so bit-identity is structural, not accidental:
+//!
+//! * Residues obey the 31-bit lane invariant
+//!   ([`crate::rns::moduli::MAX_LANE_MODULUS_BITS`]), so
+//!   `_mm256_mul_epu32` — a 32×32→64 multiply of the low halves of each
+//!   64-bit lane — forms the raw ≤ 62-bit product **exactly**.
+//! * AVX2 has no 64×64 mul-hi, so [`Barrett::reduce`]'s quotient estimate
+//!   `q = ⌊x·mu/2^64⌋` is reassembled from four 32×32 limb products with
+//!   explicit carry propagation; the result is the exact high word, hence
+//!   the exact same `q`, remainder and conditional subtract as scalar.
+//! * The deferred dot kernels accumulate raw products split into low/high
+//!   32-bit halves (`slo`, `shi` per SIMD lane: each sums < 2^32 values
+//!   at most `fold ≤ 2^32` times over 4 lanes, staying far below `u64`
+//!   wrap), and the chunk total is recombined in `u128`. A fold chunk's
+//!   sum of products is an exact integer below 2^94, so *any* association
+//!   order gives the same total — the SIMD kernels only re-associate
+//!   within a chunk and keep the scalar fold-chunk boundaries, then fold
+//!   through the same `Barrett::reduce_u128`.
+//!
+//! The `rns::plane` property suite pins every (scalar, SIMD) pair,
+//! including fold-boundary straddles and the ≥ 32-bit-modulus fallback.
+
+use super::barrett::Barrett;
+use super::plane::DOT_FOLD_TERMS;
+use core::arch::x86_64::*;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Cached CPUID probe: 0 = unknown, 1 = AVX2 present, 2 = absent.
+static AVX2_STATE: AtomicU8 = AtomicU8::new(0);
+
+/// True iff the host CPU supports AVX2 (probed once, then cached — the
+/// dispatch shims call this on every kernel invocation).
+#[inline]
+pub(crate) fn avx2_available() -> bool {
+    match AVX2_STATE.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => {
+            let ok = is_x86_feature_detected!("avx2");
+            AVX2_STATE.store(if ok { 1 } else { 2 }, Ordering::Relaxed);
+            ok
+        }
+    }
+}
+
+/// Low-32-bit lane mask as an `i64` broadcast seed.
+const LO32: i64 = 0xffff_ffff;
+
+/// Per-modulus constants broadcast across the four 64-bit SIMD lanes.
+struct BarrettVec {
+    /// Modulus in every lane.
+    m: __m256i,
+    /// Low 32 bits of `mu = ⌊2^64/m⌋` in every lane.
+    mu0: __m256i,
+    /// High 32 bits of `mu` in every lane.
+    mu1: __m256i,
+    /// `0xffff_ffff` in every lane.
+    lo: __m256i,
+}
+
+/// Broadcast one [`Barrett`]'s constants.
+///
+/// # Safety
+/// Requires AVX2 (guaranteed by the dispatch shims).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn barrett_vec(bar: Barrett) -> BarrettVec {
+    let mu = bar.mu();
+    BarrettVec {
+        m: _mm256_set1_epi64x(bar.m as i64),
+        mu0: _mm256_set1_epi64x((mu & 0xffff_ffff) as i64),
+        mu1: _mm256_set1_epi64x((mu >> 32) as i64),
+        lo: _mm256_set1_epi64x(LO32),
+    }
+}
+
+/// Unaligned 4-lane load from the head of `p` (caller guarantees
+/// `p.len() >= 4`).
+///
+/// # Safety
+/// Requires AVX2 and `p.len() >= 4`.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn loadu(p: &[u64]) -> __m256i {
+    debug_assert!(p.len() >= 4);
+    _mm256_loadu_si256(p.as_ptr() as *const __m256i)
+}
+
+/// Unaligned 4-lane store to the head of `p` (caller guarantees
+/// `p.len() >= 4`).
+///
+/// # Safety
+/// Requires AVX2 and `p.len() >= 4`.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn storeu(p: &mut [u64], v: __m256i) {
+    debug_assert!(p.len() >= 4);
+    _mm256_storeu_si256(p.as_mut_ptr() as *mut __m256i, v);
+}
+
+/// One conditional subtract: `r - m` where `r >= m`, else `r`. Both
+/// inputs are < 2^32, so the signed 64-bit compare is exact.
+///
+/// # Safety
+/// Requires AVX2.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn csub(r: __m256i, m: __m256i) -> __m256i {
+    // keep = all-ones where m > r (lane already reduced).
+    let keep = _mm256_cmpgt_epi64(m, r);
+    _mm256_sub_epi64(r, _mm256_andnot_si256(keep, m))
+}
+
+/// Exact `v mod m` for four lanes of `v < 2^63` — the vector form of
+/// [`Barrett::reduce`]. The 64×64 mul-hi `⌊v·mu/2^64⌋` is reassembled
+/// from 32×32 limb products: with `v = v1·2^32 + v0` and
+/// `mu = mu1·2^32 + mu0`,
+///
+/// ```text
+/// ⌊v·mu/2^64⌋ = v1·mu1 + (v0·mu1)»32 + (v1·mu0)»32
+///             + ((v0·mu0)»32 + (v0·mu1 & LO) + (v1·mu0 & LO)) » 32
+/// ```
+///
+/// (the last term is the carry out of the middle column; each partial sum
+/// stays below 3·2^32, and `v1·mu1 < 2^63`, so nothing wraps). The
+/// remainder `v − q·m` needs only the low 64 bits of `q·m`, which for
+/// `m < 2^31` is `(q & LO)·m + (((q»32)·m) « 32)` with the shift
+/// discarding high bits exactly as the scalar `wrapping_mul` does. One
+/// conditional subtract finishes, per the `r < 2m` bound in
+/// `rns::barrett`'s module docs.
+///
+/// # Safety
+/// Requires AVX2; every lane of `v` must be below 2^63 and `bv` must be
+/// the broadcast constants of a modulus satisfying the 31-bit invariant.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn reduce63_x4(v: __m256i, bv: &BarrettVec) -> __m256i {
+    let v0 = _mm256_and_si256(v, bv.lo);
+    let v1 = _mm256_srli_epi64::<32>(v);
+    let lolo = _mm256_mul_epu32(v0, bv.mu0);
+    let lohi = _mm256_mul_epu32(v0, bv.mu1);
+    let hilo = _mm256_mul_epu32(v1, bv.mu0);
+    let hihi = _mm256_mul_epu32(v1, bv.mu1);
+    let carry = _mm256_srli_epi64::<32>(_mm256_add_epi64(
+        _mm256_srli_epi64::<32>(lolo),
+        _mm256_add_epi64(
+            _mm256_and_si256(lohi, bv.lo),
+            _mm256_and_si256(hilo, bv.lo),
+        ),
+    ));
+    let q = _mm256_add_epi64(
+        _mm256_add_epi64(hihi, carry),
+        _mm256_add_epi64(
+            _mm256_srli_epi64::<32>(lohi),
+            _mm256_srli_epi64::<32>(hilo),
+        ),
+    );
+    let qm = _mm256_add_epi64(
+        _mm256_mul_epu32(q, bv.m),
+        _mm256_slli_epi64::<32>(_mm256_mul_epu32(_mm256_srli_epi64::<32>(q), bv.m)),
+    );
+    csub(_mm256_sub_epi64(v, qm), bv.m)
+}
+
+/// Sum a vector's four `u64` lanes into a `u128`.
+///
+/// # Safety
+/// Requires AVX2.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn horizontal_u128(v: __m256i) -> u128 {
+    let mut t = [0u64; 4];
+    _mm256_storeu_si256(t.as_mut_ptr() as *mut __m256i, v);
+    t.iter().map(|&w| w as u128).sum()
+}
+
+/// AVX2 [`super::plane::lane_mul`]: four residue products and four full
+/// Barrett reductions per iteration, scalar tail.
+///
+/// # Safety
+/// Requires AVX2 at runtime and `bar.deferred_ok()` (checked by the
+/// dispatch shim).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn lane_mul_avx2(bar: Barrett, x: &[u64], y: &[u64], out: &mut [u64]) {
+    debug_assert!(bar.deferred_ok());
+    let n = out.len().min(x.len()).min(y.len());
+    let bv = barrett_vec(bar);
+    let mut i = 0;
+    while i + 4 <= n {
+        let p = _mm256_mul_epu32(loadu(&x[i..]), loadu(&y[i..]));
+        let r = reduce63_x4(p, &bv);
+        storeu(&mut out[i..], r);
+        i += 4;
+    }
+    while i < n {
+        out[i] = bar.mul(x[i], y[i]);
+        i += 1;
+    }
+}
+
+/// AVX2 [`super::plane::lane_scale`]: the Shoup quotient
+/// `q = ⌊a·shoup/2^64⌋` collapses to two 32×32 products because `a < 2^31`
+/// fits one limb; remainder and conditional subtract as in scalar
+/// `mul_shoup`.
+///
+/// # Safety
+/// Requires AVX2 at runtime, `bar.deferred_ok()` and `mult < bar.m`
+/// (checked by the dispatch shim / debug asserts).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn lane_scale_avx2(bar: Barrett, x: &[u64], mult: u64, out: &mut [u64]) {
+    debug_assert!(bar.deferred_ok() && mult < bar.m);
+    let shoup = bar.shoup(mult);
+    let n = out.len().min(x.len());
+    let s0 = _mm256_set1_epi64x((shoup & 0xffff_ffff) as i64);
+    let s1 = _mm256_set1_epi64x((shoup >> 32) as i64);
+    let mv = _mm256_set1_epi64x(bar.m as i64);
+    let multv = _mm256_set1_epi64x(mult as i64);
+    let mut i = 0;
+    while i + 4 <= n {
+        let a = loadu(&x[i..]);
+        // q = (a·s1 + (a·s0)»32) » 32 — exact ⌊a·shoup/2^64⌋ for a < 2^32.
+        let q = _mm256_srli_epi64::<32>(_mm256_add_epi64(
+            _mm256_mul_epu32(a, s1),
+            _mm256_srli_epi64::<32>(_mm256_mul_epu32(a, s0)),
+        ));
+        // q ≤ a·mult/m < m < 2^31, so both products are exact 32×32.
+        let r = _mm256_sub_epi64(_mm256_mul_epu32(a, multv), _mm256_mul_epu32(q, mv));
+        storeu(&mut out[i..], csub(r, mv));
+        i += 4;
+    }
+    while i < n {
+        out[i] = bar.mul_shoup(x[i], mult, shoup);
+        i += 1;
+    }
+}
+
+/// AVX2 [`super::plane::lane_fma`]: `acc + x·y` stays below 2^63
+/// (≤ 62-bit product + ≤ 31-bit accumulator), one vector Barrett
+/// reduction per element.
+///
+/// # Safety
+/// Requires AVX2 at runtime and `bar.deferred_ok()` (checked by the
+/// dispatch shim).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn lane_fma_avx2(bar: Barrett, acc: &mut [u64], x: &[u64], y: &[u64]) {
+    debug_assert!(bar.deferred_ok());
+    let n = acc.len().min(x.len()).min(y.len());
+    let bv = barrett_vec(bar);
+    let mut i = 0;
+    while i + 4 <= n {
+        let p = _mm256_mul_epu32(loadu(&x[i..]), loadu(&y[i..]));
+        let v = _mm256_add_epi64(loadu(&acc[i..]), p);
+        let r = reduce63_x4(v, &bv);
+        storeu(&mut acc[i..], r);
+        i += 4;
+    }
+    while i < n {
+        acc[i] = bar.reduce(acc[i] + x[i] * y[i]);
+        i += 1;
+    }
+}
+
+/// AVX2 [`super::plane::lane_dot_folded`]: raw ≤ 62-bit products split
+/// into low/high 32-bit halves and summed per SIMD lane, recombined to
+/// the exact `u128` chunk total, folded through the same
+/// [`Barrett::reduce_u128`] at the same chunk boundaries as scalar.
+///
+/// # Safety
+/// Requires AVX2 at runtime and `bar.deferred_ok()` (checked by the
+/// dispatch shim).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn lane_dot_folded_avx2(bar: Barrett, x: &[u64], y: &[u64], fold: usize) -> u64 {
+    debug_assert!(bar.deferred_ok());
+    let n = x.len().min(y.len());
+    let (x, y) = (&x[..n], &y[..n]);
+    let fold = fold.clamp(1, DOT_FOLD_TERMS);
+    let lo = _mm256_set1_epi64x(LO32);
+    let mut acc = 0u64;
+    for (xc, yc) in x.chunks(fold).zip(y.chunks(fold)) {
+        let mut slo = _mm256_setzero_si256();
+        let mut shi = _mm256_setzero_si256();
+        let mut i = 0;
+        while i + 4 <= xc.len() {
+            let p = _mm256_mul_epu32(loadu(&xc[i..]), loadu(&yc[i..]));
+            // Per lane: ≤ fold/4 ≤ 2^30 additions of < 2^32 (slo) and
+            // < 2^30 (shi) values — both far below u64 wrap.
+            slo = _mm256_add_epi64(slo, _mm256_and_si256(p, lo));
+            shi = _mm256_add_epi64(shi, _mm256_srli_epi64::<32>(p));
+            i += 4;
+        }
+        let mut total = horizontal_u128(slo) + (horizontal_u128(shi) << 32);
+        while i < xc.len() {
+            total += (xc[i] * yc[i]) as u128;
+            i += 1;
+        }
+        acc = bar.add(acc, bar.reduce_u128(total));
+    }
+    acc
+}
+
+/// AVX2 [`super::plane::lane_dot_scaled`]: vector Barrett brings each
+/// product under `m`, the third factor multiplies in exactly
+/// (`r, s < 2^31`), and the ≤ 62-bit terms accumulate through the same
+/// split-halves scheme as [`lane_dot_folded_avx2`].
+///
+/// # Safety
+/// Requires AVX2 at runtime and `bar.deferred_ok()` (checked by the
+/// dispatch shim).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn lane_dot_scaled_avx2(
+    bar: Barrett,
+    x: &[u64],
+    y: &[u64],
+    mults: &[u64],
+) -> u64 {
+    debug_assert!(bar.deferred_ok());
+    let n = x.len().min(y.len()).min(mults.len());
+    let (x, y, mults) = (&x[..n], &y[..n], &mults[..n]);
+    let bv = barrett_vec(bar);
+    let mut acc = 0u64;
+    for ((xc, yc), sc) in x
+        .chunks(DOT_FOLD_TERMS)
+        .zip(y.chunks(DOT_FOLD_TERMS))
+        .zip(mults.chunks(DOT_FOLD_TERMS))
+    {
+        let mut slo = _mm256_setzero_si256();
+        let mut shi = _mm256_setzero_si256();
+        let mut i = 0;
+        while i + 4 <= xc.len() {
+            let p = _mm256_mul_epu32(loadu(&xc[i..]), loadu(&yc[i..]));
+            let r = reduce63_x4(p, &bv);
+            let t = _mm256_mul_epu32(r, loadu(&sc[i..]));
+            slo = _mm256_add_epi64(slo, _mm256_and_si256(t, bv.lo));
+            shi = _mm256_add_epi64(shi, _mm256_srli_epi64::<32>(t));
+            i += 4;
+        }
+        let mut sum = horizontal_u128(slo) + (horizontal_u128(shi) << 32);
+        while i < xc.len() {
+            sum += (bar.reduce(xc[i] * yc[i]) * sc[i]) as u128;
+            i += 1;
+        }
+        acc = bar.add(acc, bar.reduce_u128(sum));
+    }
+    acc
+}

@@ -17,8 +17,23 @@ use crate::util::stats;
 /// per-output MAC loop as the bit-identity reference.
 pub fn fir_filter<N: Numeric>(taps: &[f64], signal: &[f64], ctx: &N::Ctx) -> Vec<f64> {
     assert!(!taps.is_empty());
-    let len = signal.len();
     let eh: Vec<N> = taps.iter().map(|&t| N::from_f64(t, ctx)).collect();
+    fir_filter_encoded_taps(&eh, signal, ctx)
+}
+
+/// [`fir_filter`] against pre-encoded taps — the reusable half of the
+/// convolution, split out so the serving layer's operand cache
+/// (`coordinator::op_cache`) can keep the encoded tap vector across
+/// jobs that share a filter. The `eh` produced by encoding each tap
+/// with [`Numeric::from_f64`] makes this bit-identical to
+/// [`fir_filter`] on the raw taps.
+pub fn fir_filter_encoded_taps<N: Numeric>(
+    eh: &[N],
+    signal: &[f64],
+    ctx: &N::Ctx,
+) -> Vec<f64> {
+    assert!(!eh.is_empty());
+    let len = signal.len();
     // exr[j] = encode(x[len-1-j]): the window for output n is then the
     // contiguous slice exr[len-1-n ..][..w] paired with eh[..w].
     let exr: Vec<N> = signal
@@ -28,7 +43,7 @@ pub fn fir_filter<N: Numeric>(taps: &[f64], signal: &[f64], ctx: &N::Ctx) -> Vec
         .collect();
     (0..len)
         .map(|n| {
-            let w = taps.len().min(n + 1);
+            let w = eh.len().min(n + 1);
             let start = len - 1 - n;
             N::dot_encoded(&eh[..w], &exr[start..start + w], ctx).to_f64(ctx)
         })
@@ -158,6 +173,28 @@ mod tests {
             let fast64 = fir_filter::<f64>(&taps, &signal, &());
             let slow64 = fir_filter_scalar::<f64>(&taps, &signal, &());
             assert_eq!(fast64, slow64);
+        }
+    }
+
+    #[test]
+    fn pre_encoded_taps_bit_identical_to_raw_taps() {
+        // The cache-consulting executor path encodes taps once and
+        // replays them across signals; every replay must match the
+        // one-shot fir_filter bit for bit.
+        let ctx = HrfnaContext::paper_default();
+        let taps = lowpass_taps(12, 0.12);
+        let eh: Vec<Hrfna> = taps
+            .iter()
+            .map(|&t| Hrfna::encode(t, &ctx))
+            .collect();
+        let mut rng = crate::util::prng::Rng::new(41);
+        for len in [3usize, 13, 40] {
+            let signal: Vec<f64> = (0..len).map(|_| rng.uniform(-2.0, 2.0)).collect();
+            let want = fir_filter::<Hrfna>(&taps, &signal, &ctx);
+            let got = fir_filter_encoded_taps::<Hrfna>(&eh, &signal, &ctx);
+            for (n, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(g.to_bits(), w.to_bits(), "len={len} output {n}");
+            }
         }
     }
 

@@ -96,15 +96,47 @@ impl ServeMix {
 
     /// Requested precision tier for request `i` of a mixed-tier stream:
     /// 30% `lo`, 50% `paper`, 20% `wide` — deterministic, and phased
-    /// against the 10-slot kind cycle (the `i / 10` term advances the
-    /// tier residue between same-slot requests) so every lane kind sees
-    /// every tier over a stream.
+    /// against the 10-slot kind cycle (the decade term of the historical
+    /// `(i % 10 + i / 10) % 10` phase advances the tier residue between
+    /// same-slot requests) so every lane kind sees every tier over a
+    /// stream. The phase-with-drift pattern repeats every 100 requests,
+    /// so the whole thing collapses to one precomputed 100-slot
+    /// expansion of [`ServeMix::TIER_CYCLE`]: a single `% 100` + table
+    /// load per submit, no per-job div or match chain on the generator
+    /// hot path.
+    #[inline]
     pub fn tier_for(&self, i: usize) -> Tier {
-        match (i % 10 + i / 10) % 10 {
-            0..=2 => Tier::Lo,
-            3..=7 => Tier::Paper,
-            _ => Tier::Wide,
+        const TABLE: [Tier; 100] = ServeMix::tier_table();
+        TABLE[i % 100]
+    }
+
+    /// The 10-slot 3:5:2 tier cycle (`lo lo lo paper ×5 wide wide`) that
+    /// [`ServeMix::tier_for`] walks with a per-decade phase shift.
+    pub const TIER_CYCLE: [Tier; 10] = [
+        Tier::Lo,
+        Tier::Lo,
+        Tier::Lo,
+        Tier::Paper,
+        Tier::Paper,
+        Tier::Paper,
+        Tier::Paper,
+        Tier::Paper,
+        Tier::Wide,
+        Tier::Wide,
+    ];
+
+    /// Expand [`ServeMix::TIER_CYCLE`] through the per-decade phase shift
+    /// into the full 100-request period: entry `i` is
+    /// `TIER_CYCLE[(i % 10 + i / 10) % 10]`, the exact sequence the
+    /// per-request modulo used to emit (pinned by unit test).
+    const fn tier_table() -> [Tier; 100] {
+        let mut t = [Tier::Lo; 100];
+        let mut i = 0;
+        while i < 100 {
+            t[i] = ServeMix::TIER_CYCLE[(i % 10 + i / 10) % 10];
+            i += 1;
         }
+        t
     }
 }
 
@@ -143,6 +175,35 @@ mod tests {
         let tiers: std::collections::BTreeSet<_> =
             (0..100).step_by(10).map(|i| mix.tier_for(i)).collect();
         assert!(tiers.len() > 1);
+    }
+
+    #[test]
+    fn tier_table_pins_the_historical_per_request_sequence() {
+        // The precomputed 100-slot table must emit exactly the sequence
+        // the per-request `(i % 10 + i / 10) % 10` modulo chain used to
+        // produce — including past the first period, where the decade
+        // drift wraps.
+        let mix = ServeMix::default_mix();
+        let legacy = |i: usize| match (i % 10 + i / 10) % 10 {
+            0..=2 => Tier::Lo,
+            3..=7 => Tier::Paper,
+            _ => Tier::Wide,
+        };
+        for i in 0..1000 {
+            assert_eq!(mix.tier_for(i), legacy(i), "i={i}");
+        }
+        // And pin the literal head of the stream: slot 0 starts on the
+        // raw 3:5:2 cycle, decade 1 starts one phase in.
+        use Tier::{Lo, Paper, Wide};
+        let head: Vec<Tier> = (0..30).map(|i| mix.tier_for(i)).collect();
+        assert_eq!(
+            head,
+            vec![
+                Lo, Lo, Lo, Paper, Paper, Paper, Paper, Paper, Wide, Wide, // i/10 = 0
+                Lo, Lo, Paper, Paper, Paper, Paper, Paper, Wide, Wide, Lo, // i/10 = 1
+                Lo, Paper, Paper, Paper, Paper, Paper, Wide, Wide, Lo, Lo, // i/10 = 2
+            ]
+        );
     }
 
     #[test]

@@ -77,17 +77,29 @@ pub fn matmul_hrfna_planar_tiled(
     tile_cols: usize,
     ctx: &crate::hybrid::HrfnaContext,
 ) -> Vec<f64> {
-    use crate::hybrid::number::signed_mag_to_f64;
-    use crate::hybrid::HrfnaBatch;
-    use crate::util::threadpool;
-    use std::sync::atomic::Ordering;
-
-    assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     if m == 0 || n == 0 {
+        assert_eq!(a.len(), m * k);
         return Vec::new();
     }
-    let ea = HrfnaBatch::encode(a, ctx);
+    let eb = encode_matmul_rhs(b, k, n, ctx);
+    matmul_hrfna_planar_encoded_tiled(a, &eb, m, k, n, tile_cols, ctx)
+}
+
+/// Transpose and block-encode the matmul right-hand side: the reusable
+/// half of the planar matmul, split out so the serving layer's operand
+/// cache (`coordinator::op_cache`) can keep the encoded `Bᵀ` plane
+/// across jobs that share a weight matrix. Feeding the result to
+/// [`matmul_hrfna_planar_encoded`] is bit-identical to
+/// [`matmul_hrfna_planar`] on the raw `b` — the plane below is the very
+/// value the one-shot path constructs internally.
+pub fn encode_matmul_rhs(
+    b: &[f64],
+    k: usize,
+    n: usize,
+    ctx: &crate::hybrid::HrfnaContext,
+) -> crate::hybrid::HrfnaBatch {
+    assert_eq!(b.len(), k * n);
     // Bᵀ so each output column is a contiguous lane window too.
     let mut bt = vec![0.0f64; k * n];
     for p in 0..k {
@@ -95,7 +107,43 @@ pub fn matmul_hrfna_planar_tiled(
             bt[j * k + p] = b[p * n + j];
         }
     }
-    let eb = HrfnaBatch::encode(&bt, ctx);
+    crate::hybrid::HrfnaBatch::encode(&bt, ctx)
+}
+
+/// Planar matmul against a pre-encoded (transposed) right-hand side
+/// from [`encode_matmul_rhs`], at the default column-tile width.
+pub fn matmul_hrfna_planar_encoded(
+    a: &[f64],
+    eb: &crate::hybrid::HrfnaBatch,
+    m: usize,
+    k: usize,
+    n: usize,
+    ctx: &crate::hybrid::HrfnaContext,
+) -> Vec<f64> {
+    matmul_hrfna_planar_encoded_tiled(a, eb, m, k, n, TILE_COLS, ctx)
+}
+
+/// [`matmul_hrfna_planar_encoded`] with an explicit column-tile width.
+pub fn matmul_hrfna_planar_encoded_tiled(
+    a: &[f64],
+    eb: &crate::hybrid::HrfnaBatch,
+    m: usize,
+    k: usize,
+    n: usize,
+    tile_cols: usize,
+    ctx: &crate::hybrid::HrfnaContext,
+) -> Vec<f64> {
+    use crate::hybrid::number::signed_mag_to_f64;
+    use crate::hybrid::HrfnaBatch;
+    use crate::util::threadpool;
+    use std::sync::atomic::Ordering;
+
+    assert_eq!(a.len(), m * k);
+    assert_eq!(eb.len(), k * n);
+    if m == 0 || n == 0 {
+        return Vec::new();
+    }
+    let ea = HrfnaBatch::encode(a, ctx);
     let tile_cols = tile_cols.max(1);
 
     type Tile = (usize, usize, usize, usize);
@@ -106,7 +154,7 @@ pub fn matmul_hrfna_planar_tiled(
         let mut accs = Vec::with_capacity((i1 - i0) * (j1 - j0));
         for i in i0..i1 {
             for j in j0..j1 {
-                accs.push(ea.dot_range(i * k, &eb, j * k, k, ctx));
+                accs.push(ea.dot_range(i * k, eb, j * k, k, ctx));
             }
         }
         ctx.counters
@@ -257,6 +305,27 @@ mod tests {
             assert_eq!(got.len(), want.len(), "tile={tile}");
             for (idx, (g, w)) in got.iter().zip(&want).enumerate() {
                 assert_eq!(g.to_bits(), w.to_bits(), "tile={tile} idx={idx}");
+            }
+        }
+    }
+
+    #[test]
+    fn pre_encoded_rhs_bit_identical_to_one_shot_planar() {
+        // The cache-consulting executor path encodes the RHS once via
+        // encode_matmul_rhs and replays it across activations; every
+        // replay must be bit-identical to the one-shot path that
+        // encodes b inline.
+        let ctx = HrfnaContext::paper_default();
+        let mut rng = crate::util::prng::Rng::new(31);
+        let (m, k, n) = (6, 10, 7);
+        let b = Dist::moderate().sample_vec(&mut rng, k * n);
+        let eb = encode_matmul_rhs(&b, k, n, &ctx);
+        for trial in 0..3 {
+            let a = Dist::moderate().sample_vec(&mut rng, m * k);
+            let want = matmul_hrfna_planar(&a, &b, m, k, n, &ctx);
+            let got = matmul_hrfna_planar_encoded(&a, &eb, m, k, n, &ctx);
+            for (idx, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(g.to_bits(), w.to_bits(), "trial={trial} idx={idx}");
             }
         }
     }

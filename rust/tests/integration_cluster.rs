@@ -46,6 +46,7 @@ fn coordinator() -> Coordinator {
             },
             buckets: ShapeBuckets::default(),
             exec: ExecMode::Planar,
+            ..CoordinatorConfig::default()
         },
     )
 }

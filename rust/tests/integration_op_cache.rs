@@ -1,0 +1,218 @@
+//! Integration: the encoded-operand cache end to end through the
+//! coordinator — cache-served matmul weights and FIR taps deliver
+//! bit-identical results to a cold-encoding coordinator across all three
+//! tiers, authenticated jobs verify their MACs on cache hits, and
+//! invalidation forces a re-encode (never a stale serve). The cache is a
+//! pure memoization of the encode step, so every assertion here is exact
+//! (`to_bits`), not a tolerance.
+
+use hrfna::coordinator::batcher::BatchPolicy;
+use hrfna::coordinator::{
+    ContextRegistry, Coordinator, CoordinatorConfig, ExecMode, JobKind, JobSpec, Tier,
+};
+use hrfna::hybrid::auth::values_checksum;
+use hrfna::runtime::EngineHandle;
+use hrfna::util::prng::Rng;
+use hrfna::workloads::fir::lowpass_taps;
+use hrfna::workloads::generators::Dist;
+use std::sync::Arc;
+use std::time::Duration;
+
+const DIM: usize = 64;
+const FIR_N: usize = 96;
+
+fn coordinator_with(op_cache_bytes: usize) -> Coordinator {
+    let engine = EngineHandle::spawn(None).expect("engine load");
+    Coordinator::start(
+        engine,
+        Arc::new(ContextRegistry::new()),
+        CoordinatorConfig {
+            workers_per_lane: 2,
+            batch: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                ..BatchPolicy::default()
+            },
+            exec: ExecMode::Planar,
+            op_cache_bytes,
+            ..CoordinatorConfig::default()
+        },
+    )
+}
+
+fn assert_bits_eq(got: &[f64], want: &[f64], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            w.to_bits(),
+            "{what}: element {i} differs ({g} vs {w})"
+        );
+    }
+}
+
+#[test]
+fn cache_served_matmul_and_fir_bit_identical_to_cold_encode_across_tiers() {
+    // Same traffic through a cached coordinator (reused weights/taps hit
+    // after the first encode) and a cache-disabled one; the cache must be
+    // numerically invisible at every tier.
+    let cached = coordinator_with(32 << 20);
+    let cold = coordinator_with(0);
+    assert!(cached.op_cache().is_some());
+    assert!(cold.op_cache().is_none(), "op_cache_bytes: 0 disables the cache");
+
+    let mut rng = Rng::new(61);
+    let b: Vec<f64> = Dist::moderate().sample_vec(&mut rng, DIM * DIM);
+    let taps = lowpass_taps(12, 0.15);
+
+    for tier in Tier::ALL {
+        for round in 0..3 {
+            let a = Dist::moderate().sample_vec(&mut rng, DIM * DIM);
+            let hot = cached
+                .call(JobSpec::matmul(a.clone(), b.clone(), DIM).tier(tier))
+                .expect("cached matmul");
+            let reference = cold
+                .call(JobSpec::matmul(a, b.clone(), DIM).tier(tier))
+                .expect("cold matmul");
+            assert_bits_eq(
+                &hot.values,
+                &reference.values,
+                &format!("matmul tier {tier:?} round {round}"),
+            );
+
+            let x = Dist::moderate().sample_vec(&mut rng, FIR_N);
+            let hot = cached
+                .call(JobSpec::fir(taps.clone(), x.clone()).tier(tier))
+                .expect("cached fir");
+            let reference = cold
+                .call(JobSpec::fir(taps.clone(), x).tier(tier))
+                .expect("cold fir");
+            assert_bits_eq(
+                &hot.values,
+                &reference.values,
+                &format!("fir tier {tier:?} round {round}"),
+            );
+        }
+        // Sequential calls, one lookup per job: encode once, hit twice —
+        // and the key is tier-scoped, so each tier pays its own miss.
+        for kind in [JobKind::MatmulHybrid, JobKind::FirHybrid] {
+            assert_eq!(cached.metrics.cache_misses_tier(kind, tier), 1, "{kind:?} {tier:?}");
+            assert_eq!(cached.metrics.cache_hits_tier(kind, tier), 2, "{kind:?} {tier:?}");
+        }
+    }
+    // The disabled side never touched a cache.
+    assert_eq!(cold.metrics.cache_hits(JobKind::MatmulHybrid), 0);
+    assert_eq!(cold.metrics.cache_misses(JobKind::MatmulHybrid), 0);
+
+    assert!(cached.shutdown().is_clean());
+    assert!(cold.shutdown().is_clean());
+}
+
+#[test]
+fn authenticated_jobs_verify_macs_on_cache_hits() {
+    // Authenticated FIR derives per-job MAC lanes from the *cached*
+    // reversed-tap plane; authenticated matmul Freivalds-checks a product
+    // computed off the cached RHS. Both must keep verifying — and keep
+    // matching a cold coordinator bit for bit — once the operands are
+    // served from cache.
+    let cached = coordinator_with(32 << 20);
+    let cold = coordinator_with(0);
+    let mut rng = Rng::new(67);
+    let a = Dist::moderate().sample_vec(&mut rng, DIM * DIM);
+    let b = Dist::moderate().sample_vec(&mut rng, DIM * DIM);
+    let taps = lowpass_taps(10, 0.2);
+    let x = Dist::moderate().sample_vec(&mut rng, 80);
+
+    let plain = cached
+        .call(JobSpec::matmul(a.clone(), b.clone(), DIM))
+        .expect("plain matmul");
+    let cold_fir = cold
+        .call(JobSpec::fir(taps.clone(), x.clone()).authenticated())
+        .expect("cold auth fir");
+    for round in 0..3 {
+        let auth = cached
+            .call(JobSpec::matmul(a.clone(), b.clone(), DIM).authenticated())
+            .expect("auth matmul");
+        // Freivalds rides on the unchanged (cached) product datapath.
+        assert_bits_eq(&auth.values, &plain.values, &format!("auth matmul round {round}"));
+        assert_eq!(auth.check, Some(values_checksum(&auth.values)));
+
+        let auth = cached
+            .call(JobSpec::fir(taps.clone(), x.clone()).authenticated())
+            .expect("auth fir");
+        assert_bits_eq(&auth.values, &cold_fir.values, &format!("auth fir round {round}"));
+        assert_eq!(auth.check, Some(values_checksum(&auth.values)));
+    }
+    assert_eq!(
+        cached.metrics.total_integrity_detections(),
+        0,
+        "MAC/Freivalds checks must pass on cache hits"
+    );
+    // Plain matmul missed once; the three auth matmuls share its entry
+    // (Freivalds has no separate cached operand). The auth-FIR tap plane
+    // lives in the authenticated partition: one miss, two hits.
+    assert_eq!(cached.metrics.cache_hits(JobKind::MatmulHybrid), 3);
+    assert_eq!(cached.metrics.cache_hits(JobKind::FirHybrid), 2);
+
+    assert!(cached.shutdown().is_clean());
+    assert!(cold.shutdown().is_clean());
+}
+
+#[test]
+fn invalidation_forces_re_encode_and_never_serves_stale() {
+    let coord = coordinator_with(32 << 20);
+    let mut rng = Rng::new(71);
+    let a = Dist::moderate().sample_vec(&mut rng, DIM * DIM);
+    let b = Dist::moderate().sample_vec(&mut rng, DIM * DIM);
+    let spec = || JobSpec::matmul(a.clone(), b.clone(), DIM);
+
+    let first = coord.call(spec()).expect("first matmul");
+    let _ = coord.call(spec()).expect("second matmul");
+    assert_eq!(coord.metrics.cache_hits(JobKind::MatmulHybrid), 1);
+    assert_eq!(coord.op_cache().unwrap().len(), 1);
+
+    // Drop everything (registry rebuild / key rotation path): the next
+    // job must re-encode, not resurrect the old entry.
+    coord.invalidate_op_cache();
+    assert!(coord.op_cache().unwrap().is_empty(), "invalidation empties the cache");
+
+    let again = coord.call(spec()).expect("post-invalidation matmul");
+    assert_bits_eq(&again.values, &first.values, "post-invalidation re-encode");
+    assert_eq!(
+        coord.metrics.cache_misses(JobKind::MatmulHybrid),
+        2,
+        "invalidation must force a fresh miss"
+    );
+    let after = coord.call(spec()).expect("re-cached matmul");
+    assert_bits_eq(&after.values, &first.values, "re-cached serve");
+    assert_eq!(coord.metrics.cache_hits(JobKind::MatmulHybrid), 2);
+
+    assert!(coord.shutdown().is_clean());
+}
+
+#[test]
+fn undersized_cache_bypasses_large_operands_without_corruption() {
+    // A capacity smaller than one encoded plane: every lookup misses and
+    // the built value is returned uncached — results stay exact and the
+    // cache never grows.
+    let tiny = coordinator_with(256);
+    let cold = coordinator_with(0);
+    let mut rng = Rng::new(73);
+    let b = Dist::moderate().sample_vec(&mut rng, DIM * DIM);
+    for round in 0..2 {
+        let a = Dist::moderate().sample_vec(&mut rng, DIM * DIM);
+        let hot = tiny
+            .call(JobSpec::matmul(a.clone(), b.clone(), DIM))
+            .expect("tiny-cache matmul");
+        let reference = cold
+            .call(JobSpec::matmul(a, b.clone(), DIM))
+            .expect("cold matmul");
+        assert_bits_eq(&hot.values, &reference.values, &format!("oversize round {round}"));
+    }
+    assert_eq!(tiny.metrics.cache_hits(JobKind::MatmulHybrid), 0, "nothing fits, nothing hits");
+    assert_eq!(tiny.metrics.cache_misses(JobKind::MatmulHybrid), 2);
+    assert!(tiny.op_cache().unwrap().is_empty(), "oversize operands are never admitted");
+
+    assert!(tiny.shutdown().is_clean());
+    assert!(cold.shutdown().is_clean());
+}

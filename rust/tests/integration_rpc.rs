@@ -39,6 +39,7 @@ fn coordinator() -> Coordinator {
             },
             buckets: ShapeBuckets { tiers: Tier::ALL.to_vec(), ..ShapeBuckets::default() },
             exec: ExecMode::Planar,
+            ..CoordinatorConfig::default()
         },
     )
 }
