@@ -85,6 +85,7 @@ fn spawn_worker(id: usize) -> Worker {
 fn run_fleet(
     n: usize,
     jobs_per_client: usize,
+    cfg: RouterConfig,
     make: &(dyn Fn(u64, usize) -> JobSpec + Sync),
 ) -> (hrfna::coordinator::LoadReport, Option<hrfna::coordinator::LoadReport>) {
     let workers: Vec<Worker> = (0..n).map(spawn_worker).collect();
@@ -119,7 +120,7 @@ fn run_fleet(
             RouterConfig {
                 health_interval: Duration::from_millis(200),
                 connect_wait: Duration::from_secs(2),
-                ..RouterConfig::default()
+                ..cfg
             },
         )
         .expect("start shard router"),
@@ -192,7 +193,7 @@ fn main() {
     let mut by_fleet: Vec<(usize, f64)> = Vec::new();
     let mut direct_jps = 0.0f64;
     for n in [1usize, 2, 4] {
-        let (routed, direct) = run_fleet(n, jobs_per_client, &make);
+        let (routed, direct) = run_fleet(n, jobs_per_client, RouterConfig::default(), &make);
         if let Some(d) = direct {
             direct_jps = d.jobs_per_s;
             println!("direct to 1 worker: {:.0} jobs/s", d.jobs_per_s);
@@ -227,6 +228,45 @@ fn main() {
                 "2 workers must yield >= 1.7x single-worker routed jobs/sec (got {ratio:.2}x)"
             );
         }
+    }
+
+    // Coalesced router edge: the same 2-worker fleet with the Nagle
+    // window on — submissions from the 4 closed-loop clients share
+    // `submit_batch` frames per (worker, lane) instead of one frame
+    // each. Ratio over the plain 2-worker run above (higher is better).
+    let (coalesced, _) = run_fleet(
+        2,
+        jobs_per_client,
+        RouterConfig {
+            coalesce_window: Duration::from_micros(200),
+            coalesce_max: 8,
+            ..RouterConfig::default()
+        },
+        &make,
+    );
+    let plain_2w = by_fleet
+        .iter()
+        .find(|&&(n, _)| n == 2)
+        .map(|&(_, jps)| jps)
+        .expect("2-worker run recorded")
+        .max(1e-9);
+    let coalesce_ratio = coalesced.jobs_per_s / plain_2w;
+    println!(
+        "routed 2w coalesced: {:.0} jobs/s -> {coalesce_ratio:.2}x plain routed throughput",
+        coalesced.jobs_per_s
+    );
+    records.push(BenchRecord {
+        name: "cluster_coalesced_submit_ratio".to_string(),
+        n: 1,
+        ns_per_op: 1.0 / coalesce_ratio.max(1e-9),
+        throughput_per_s: coalesce_ratio,
+    });
+    if !quick {
+        assert!(
+            coalesce_ratio >= 1.3,
+            "coalescing must yield >= 1.3x routed jobs/sec at {CLIENTS} closed-loop clients \
+             (got {coalesce_ratio:.2}x)"
+        );
     }
 
     // Router hop cost at fleet size 1: routed per-job cost over direct

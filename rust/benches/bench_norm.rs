@@ -17,6 +17,7 @@ use std::time::Duration;
 
 use hrfna::config::HrfnaConfig;
 use hrfna::hybrid::{norm, Hrfna, HrfnaBatch, HrfnaContext};
+use hrfna::rns::plane;
 use hrfna::util::bench::{bench_with, write_json, BenchRecord, BenchResult};
 use hrfna::util::cli::Args;
 use hrfna::util::prng::Rng;
@@ -143,6 +144,43 @@ fn main() {
         records.push(ratio_record(&format!("norm_bulk_cost_ratio_{label}"), ratio));
         if label == "d10" {
             gated_d10_ratio = ratio;
+        }
+    }
+
+    // --- SIMD gather/scatter at the normalization stride ---------------
+    // The bulk path's lane movement (flagged-scan → gather → rescale →
+    // scatter) has an AVX2 arm behind the same dispatch-shim pattern as
+    // the compute kernels. One machine-independent ratio at n = 4096,
+    // 10% flagged density: the dispatched gather+scatter pair over the
+    // scalar pair. Emitted only when [`plane::simd_active`] reports the
+    // SIMD path is live, so the committed baseline never gates a
+    // scalar-only host or a build without `--features simd`.
+    {
+        let lane_n = 4096usize;
+        let src: Vec<u64> = (0..lane_n).map(|_| rng.next_u64()).collect();
+        let idx: Vec<usize> = (0..lane_n).filter(|j| j % 10 == 0).collect();
+        let mut out = vec![0u64; idx.len()];
+        let mut back = vec![0u64; lane_n];
+        let r_scalar =
+            bench_with(&format!("gather+scatter d10 n={lane_n} (scalar)"), budget, 8, &mut || {
+                plane::gather_lane_scalar(&src, &idx, &mut out);
+                plane::scatter_lane_scalar(&mut back, &idx, &out);
+                out[0]
+            });
+        println!("{}", r_scalar.line());
+        if plane::simd_active() {
+            let r_simd =
+                bench_with(&format!("gather+scatter d10 n={lane_n} (simd)"), budget, 8, &mut || {
+                    plane::gather_lane(&src, &idx, &mut out);
+                    plane::scatter_lane(&mut back, &idx, &out);
+                    out[0]
+                });
+            println!("{}", r_simd.line());
+            let ratio = r_simd.ns_per_iter / r_scalar.ns_per_iter;
+            println!("  -> simd/scalar gather+scatter cost ratio at d10: {ratio:.3}");
+            records.push(ratio_record("norm_gather_scatter_simd_cost_ratio_n4096", ratio));
+        } else {
+            println!("  (simd path inactive: no gather/scatter dispatch record this run)");
         }
     }
 

@@ -21,7 +21,10 @@ mod common;
 
 use hrfna::coordinator::batcher::BatchPolicy;
 use hrfna::coordinator::router::ShapeBuckets;
-use hrfna::coordinator::rpc::{socket_closed_loop, ConnMode, RpcServer, RpcServerConfig};
+use hrfna::coordinator::rpc::{
+    decode_payload, encode_payload, socket_closed_loop, socket_closed_loop_binary, spec_to_json,
+    ConnMode, Request, RpcServer, RpcServerConfig,
+};
 use hrfna::coordinator::{
     closed_loop, Backend, ContextRegistry, Coordinator, CoordinatorConfig, ExecMode, InProcess,
     JobSpec, Tier,
@@ -31,7 +34,7 @@ use hrfna::util::cli::Args;
 use hrfna::util::prng::Rng;
 use hrfna::workloads::generators::{Dist, ServeMix};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Dot length for the wire runs: the small shape bucket, so the records
 /// measure protocol overhead rather than kernel time.
@@ -216,6 +219,108 @@ fn main() {
         tiered.wall,
         tiered.jobs_per_s,
     ));
+
+    // 5. Binary wire payloads: the same matmul traffic (dim 64 — bulk
+    //    operands, where framing matters) over pure-JSON frames and over
+    //    negotiated binary envelopes. The wire metrics give exact bytes
+    //    moved per leg; the ratio is the compression the binary framing
+    //    buys on operand-heavy jobs.
+    let mm_jobs = if quick { 16 } else { 64 };
+    let mm_pool: Vec<(Vec<f64>, Vec<f64>)> = (0..4)
+        .map(|_| {
+            (
+                Dist::moderate().sample_vec(&mut rng, 64 * 64),
+                Dist::moderate().sample_vec(&mut rng, 64 * 64),
+            )
+        })
+        .collect();
+    let make_mm = |c: u64, i: usize| -> JobSpec {
+        let (a, b) = &mm_pool[(c as usize * 3 + i) % mm_pool.len()];
+        JobSpec::matmul(a.clone(), b.clone(), 64)
+    };
+    let wire_now = || {
+        let t = server.wire_metrics().totals();
+        t.bytes_in() + t.bytes_out()
+    };
+    let leg = |binary: bool| -> f64 {
+        let before = wire_now();
+        let rep = socket_closed_loop_binary(
+            &addr,
+            CLIENTS,
+            mm_jobs,
+            BURST,
+            ConnMode::Persistent,
+            binary,
+            &make_mm,
+        );
+        assert_eq!(rep.completed, rep.offered, "binary={binary} matmul leg lost jobs");
+        (wire_now() - before) as f64 / rep.completed.max(1) as f64
+    };
+    let json_bytes_per_job = leg(false);
+    let bin_bytes_per_job = leg(true);
+    assert!(
+        server.wire_metrics().totals().bin_frames_out() > 0,
+        "binary leg must negotiate and actually send binary responses"
+    );
+    let bytes_ratio = bin_bytes_per_job / json_bytes_per_job.max(1e-9);
+    println!(
+        "matmul d64 wire bytes/job: json {:.0}, binary {:.0} -> {bytes_ratio:.2}x",
+        json_bytes_per_job, bin_bytes_per_job
+    );
+    records.push(BenchRecord {
+        name: "rpc_wire_bytes_per_job".to_string(),
+        n: 1,
+        ns_per_op: bytes_ratio,
+        throughput_per_s: 1.0 / bytes_ratio.max(1e-9),
+    });
+    if !quick {
+        assert!(
+            bytes_ratio <= 0.4,
+            "binary framing must move <= 0.4x the JSON bytes per matmul job \
+             (got {bytes_ratio:.2}x)"
+        );
+    }
+
+    // 6. Encode/decode CPU cost for the same frame, measured off the
+    //    socket: one submit request round-tripped through each codec.
+    //    Binary must be cheaper — it copies bits instead of formatting
+    //    and parsing shortest-round-trip decimals.
+    let (a, b) = &mm_pool[0];
+    let req = Request::new(1, "submit", spec_to_json(&JobSpec::matmul(a.clone(), b.clone(), 64)))
+        .to_json();
+    let iters: u32 = if quick { 50 } else { 400 };
+    let time_codec = |binary: bool| -> Duration {
+        // One warmup round trip outside the clock.
+        let bytes = encode_payload(&req, binary);
+        decode_payload(&bytes).expect("codec warmup");
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            let bytes = encode_payload(&req, binary);
+            let tree = decode_payload(&bytes).expect("codec round trip");
+            std::hint::black_box(tree);
+        }
+        t0.elapsed()
+    };
+    let json_codec = time_codec(false);
+    let bin_codec = time_codec(true);
+    let codec_ratio = bin_codec.as_secs_f64() / json_codec.as_secs_f64().max(1e-12);
+    println!(
+        "matmul d64 codec cost: json {:.1?}, binary {:.1?} -> {codec_ratio:.2}x",
+        json_codec / iters,
+        bin_codec / iters
+    );
+    records.push(BenchRecord {
+        name: "rpc_binary_encode_cost_ratio".to_string(),
+        n: 1,
+        ns_per_op: codec_ratio,
+        throughput_per_s: 1.0 / codec_ratio.max(1e-9),
+    });
+    if !quick {
+        assert!(
+            codec_ratio <= 0.6,
+            "binary codec must cost <= 0.6x the JSON codec per frame (got {codec_ratio:.2}x)"
+        );
+    }
 
     // Tear the edge down and account for every job. `InProcess::shutdown`
     // takes the coordinator out from under the shared Arc — no

@@ -33,6 +33,17 @@
 //!   results are still delivered over the open connection), and reports
 //!   the handoff as a [`DrainReport`] snapshot taken at fencing time
 //!   (see its doc for the exact field semantics).
+//!
+//! **Coalescing** (`RouterConfig::coalesce_window > 0`): submissions
+//! stage per lane and flush as one `submit_batch` frame when the lane
+//! fills (`coalesce_max`) or its window expires — Nagle for job frames.
+//! A flushed group shares one wire id; whichever member's poll pulls
+//! the batch response resolves every member (outcomes park in a
+//! delivery buffer until their owners poll), and transport loss fails
+//! the *whole group* over through the same generation-fenced resubmit
+//! path as single jobs, so worker kill still loses nothing. With the
+//! window at zero every code path above is byte-for-byte the
+//! pre-coalescing behavior.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -44,7 +55,7 @@ use crate::coordinator::backend::{Backend, JobPoll, JobTicket};
 use crate::coordinator::error::Error;
 use crate::coordinator::request::{JobResult, JobSpec, Payload};
 use crate::coordinator::router::{probe_bucket, ShapeBuckets};
-use crate::coordinator::rpc::client::RpcClient;
+use crate::coordinator::rpc::client::{batch_outcomes, RpcClient};
 use crate::coordinator::rpc::protocol::{result_from_json, ResponseBody};
 use crate::coordinator::server::DrainReport;
 use crate::hybrid::auth;
@@ -74,6 +85,15 @@ pub struct RouterConfig {
     /// How long `shutdown` keeps polling uncollected tickets before
     /// declaring them dropped.
     pub drain_wait: Duration,
+    /// Nagle-style micro-batching window: submissions for one (worker,
+    /// lane) are staged up to this long and flushed as a single
+    /// `submit_batch` frame. `ZERO` disables coalescing entirely —
+    /// every submission places immediately, exactly the pre-coalescing
+    /// behavior.
+    pub coalesce_window: Duration,
+    /// Flush a staged lane early once it holds this many jobs (the
+    /// count trigger; the window is the time trigger).
+    pub coalesce_max: usize,
 }
 
 impl Default for RouterConfig {
@@ -86,6 +106,8 @@ impl Default for RouterConfig {
             divert_depth: 0,
             connect_wait: Duration::from_secs(5),
             drain_wait: Duration::from_secs(10),
+            coalesce_window: Duration::ZERO,
+            coalesce_max: 8,
         }
     }
 }
@@ -194,6 +216,25 @@ impl WorkerLink {
         }
     }
 
+    /// Fire one coalesced group as a single `submit_batch` frame;
+    /// returns the batch's wire id and the connection generation, the
+    /// correlation pair shared by every member of the group.
+    fn submit_batch(&self, specs: &[JobSpec]) -> Result<(u64, u64), ()> {
+        let mut conn = self.conn.lock().expect("link conn lock");
+        let Some(client) = conn.as_mut() else { return Err(()) };
+        match client.submit_batch_spec(specs) {
+            Ok(id) => {
+                self.forwarded.fetch_add(specs.len() as u64, Ordering::Relaxed);
+                Ok((id, self.generation.load(Ordering::SeqCst)))
+            }
+            Err(_) => {
+                *conn = None;
+                self.health.record_disconnect();
+                Err(())
+            }
+        }
+    }
+
     /// Non-blocking response probe for one wire id, valid only on the
     /// connection generation it was submitted on.
     fn try_take(
@@ -258,6 +299,51 @@ struct RouteState {
     gen: u64,
     /// Links already offered this job (failover never re-offers).
     tried: Vec<usize>,
+    /// Set when the job went out inside a coalesced `submit_batch`
+    /// frame: every member shares the batch's (link, wire_id, gen) and
+    /// this group record. `None` means a plain per-job submission.
+    group: Option<Arc<GroupShared>>,
+}
+
+/// The shared identity of one coalesced flush: which tickets rode the
+/// batch frame and which links the group has been offered (whole-group
+/// failover never re-offers one). Immutable once placed — a failover
+/// builds a fresh group for the re-placed batch.
+struct GroupShared {
+    members: Vec<u64>,
+    tried: Vec<usize>,
+}
+
+/// One lane's staged submissions, awaiting a count- or time-triggered
+/// flush.
+struct CoalesceBuf {
+    entries: Vec<(u64, JobSpec)>,
+    since: Instant,
+}
+
+/// Coalescing observability: flush count, jobs coalesced, and a depth
+/// histogram (how many jobs each flushed frame carried).
+#[derive(Default)]
+struct CoalesceStats {
+    flushes: AtomicU64,
+    jobs: AtomicU64,
+    /// Depth buckets: 1, 2, 3–4, 5–8, 9+.
+    depth: [AtomicU64; 5],
+}
+
+impl CoalesceStats {
+    fn record_flush(&self, depth: usize) {
+        self.flushes.fetch_add(1, Ordering::Relaxed);
+        self.jobs.fetch_add(depth as u64, Ordering::Relaxed);
+        let bucket = match depth {
+            0 | 1 => 0,
+            2 => 1,
+            3..=4 => 2,
+            5..=8 => 3,
+            _ => 4,
+        };
+        self.depth[bucket].fetch_add(1, Ordering::Relaxed);
+    }
 }
 
 /// Failover/diversion ordering: routable candidates first (in ring
@@ -292,6 +378,14 @@ pub struct ShardRouter {
     placement: RwLock<Placement>,
     membership: Mutex<Membership>,
     routes: Mutex<HashMap<u64, RouteState>>,
+    /// Staged (not yet placed) submissions, keyed by lane route key.
+    staging: Mutex<HashMap<u64, CoalesceBuf>>,
+    /// Ticket → staging lane key, for staged tickets only.
+    staged: Mutex<HashMap<u64, u64>>,
+    /// Delivery buffer for group members resolved by *another* member's
+    /// poll: outcomes parked here until their owner polls.
+    ready: Mutex<HashMap<u64, Result<JobResult, Error>>>,
+    coalesce: CoalesceStats,
     next_ticket: AtomicU64,
     accepted: AtomicU64,
     /// Jobs delivered with a successful result.
@@ -377,6 +471,10 @@ impl ShardRouter {
             placement: RwLock::new(placement),
             membership: Mutex::new(membership),
             routes: Mutex::new(HashMap::new()),
+            staging: Mutex::new(HashMap::new()),
+            staged: Mutex::new(HashMap::new()),
+            ready: Mutex::new(HashMap::new()),
+            coalesce: CoalesceStats::default(),
             next_ticket: AtomicU64::new(1),
             accepted: AtomicU64::new(0),
             completed: AtomicU64::new(0),
@@ -451,6 +549,7 @@ impl ShardRouter {
                 state.link = link;
                 state.wire_id = wire_id;
                 state.gen = gen;
+                state.group = None;
                 self.routes.lock().expect("routes lock").insert(ticket_id, state);
                 JobPoll::Pending
             }
@@ -459,6 +558,284 @@ impl ShardRouter {
                 JobPoll::Ready(Err(on_exhausted))
             }
         }
+    }
+
+    /// Flush one staged lane: pop its buffer and place the jobs — one
+    /// job goes out as a plain `submit`, several as one coalesced
+    /// `submit_batch` frame. Placement failures park typed errors in
+    /// the delivery buffer (the jobs were accepted at staging time, so
+    /// errors surface at poll, not as a submit rejection).
+    fn flush_key(&self, key: u64) {
+        let batch = {
+            let mut staging = self.staging.lock().expect("staging lock");
+            match staging.remove(&key) {
+                Some(buf) if !buf.entries.is_empty() => buf.entries,
+                _ => return,
+            }
+        };
+        {
+            let mut staged = self.staged.lock().expect("staged lock");
+            for (id, _) in &batch {
+                staged.remove(id);
+            }
+        }
+        self.coalesce.record_flush(batch.len());
+        if batch.len() == 1 {
+            let (id, spec) = batch.into_iter().next().expect("one entry");
+            let mut tried = Vec::new();
+            match self.place(key, &spec, &mut tried) {
+                Ok((link, wire_id, gen)) => {
+                    self.routes.lock().expect("routes lock").insert(
+                        id,
+                        RouteState { spec, key, link, wire_id, gen, tried, group: None },
+                    );
+                }
+                Err(e) => {
+                    self.failed.fetch_add(1, Ordering::Relaxed);
+                    self.ready.lock().expect("ready lock").insert(id, Err(e));
+                }
+            }
+            return;
+        }
+        self.place_group(key, batch, Vec::new());
+    }
+
+    /// Offer a coalesced group to candidates in failover order as one
+    /// `submit_batch` frame. On acceptance every member's route shares
+    /// the batch's (link, wire id, generation) and a fresh
+    /// [`GroupShared`]; on exhaustion every member fails typed.
+    fn place_group(&self, key: u64, entries: Vec<(u64, JobSpec)>, mut tried: Vec<usize>) {
+        let specs: Vec<JobSpec> = entries.iter().map(|(_, s)| s.clone()).collect();
+        let candidates: Vec<usize> = {
+            let placement = self.placement.read().expect("placement lock");
+            placement.ring.candidates(key).iter().map(|&w| placement.link_of[w]).collect()
+        };
+        let order = failover_order(
+            &candidates,
+            &tried,
+            |i| self.links[i].health.routable(self.cfg.divert_depth),
+            |i| self.links[i].retired(),
+        );
+        for i in order {
+            tried.push(i);
+            if let Ok((wire_id, gen)) = self.links[i].submit_batch(&specs) {
+                let group = Arc::new(GroupShared {
+                    members: entries.iter().map(|(id, _)| *id).collect(),
+                    tried: tried.clone(),
+                });
+                let mut routes = self.routes.lock().expect("routes lock");
+                for (id, spec) in entries {
+                    routes.insert(
+                        id,
+                        RouteState {
+                            spec,
+                            key,
+                            link: i,
+                            wire_id,
+                            gen,
+                            tried: tried.clone(),
+                            group: Some(Arc::clone(&group)),
+                        },
+                    );
+                }
+                return;
+            }
+        }
+        let e = Error::Unavailable("no routable worker for this lane".into());
+        let mut ready = self.ready.lock().expect("ready lock");
+        for (id, _) in entries {
+            self.failed.fetch_add(1, Ordering::Relaxed);
+            ready.insert(id, Err(e.clone()));
+        }
+    }
+
+    /// Claim every member of `group` that is still routed at the polled
+    /// (link, wire id, generation). An empty claim means another poller
+    /// already resolved or failed the group over — the caller's view is
+    /// stale and it must answer `Pending`.
+    fn claim_group(
+        &self,
+        group: &GroupShared,
+        link_idx: usize,
+        wire_id: u64,
+        gen: u64,
+    ) -> Vec<(u64, RouteState)> {
+        let mut routes = self.routes.lock().expect("routes lock");
+        let mut claimed = Vec::with_capacity(group.members.len());
+        for &m in &group.members {
+            let matches = routes
+                .get(&m)
+                .map(|s| s.link == link_idx && s.wire_id == wire_id && s.gen == gen)
+                .unwrap_or(false);
+            if matches {
+                let state = routes.remove(&m).expect("checked above");
+                claimed.push((m, state));
+            }
+        }
+        claimed
+    }
+
+    /// Deliver one group's `submit_batch` response: zip members against
+    /// entries, verify authenticated results, and park each member's
+    /// outcome in the delivery buffer — except members whose entry asks
+    /// for a retry (overload, integrity, shutdown), which re-place
+    /// individually through the normal failover machinery.
+    #[allow(clippy::too_many_arguments)]
+    fn resolve_group(
+        &self,
+        group: &GroupShared,
+        link_idx: usize,
+        wire_id: u64,
+        gen: u64,
+        resp: crate::coordinator::rpc::Response,
+    ) {
+        let link = &self.links[link_idx];
+        let claimed = self.claim_group(group, link_idx, wire_id, gen);
+        if claimed.is_empty() {
+            // Another poller moved the group first; this response is a
+            // duplicate of work already re-placed (at-least-once).
+            return;
+        }
+        let outcomes = match batch_outcomes(resp) {
+            Ok(o) => o,
+            Err(e) => {
+                // Undecodable wholesale: terminal for every claimed member.
+                let mut ready = self.ready.lock().expect("ready lock");
+                for (id, _) in claimed {
+                    link.completed.fetch_add(1, Ordering::Relaxed);
+                    self.failed.fetch_add(1, Ordering::Relaxed);
+                    ready.insert(
+                        id,
+                        Err(Error::Internal(format!("undecodable batch response: {e:#}"))),
+                    );
+                }
+                return;
+            }
+        };
+        for (slot, (id, state)) in claimed.into_iter().enumerate() {
+            match outcomes.get(slot) {
+                Some(Ok(r)) => {
+                    if let Some(reason) = self.verify_outcome(&state.spec, id, r) {
+                        self.integrity_detections.fetch_add(1, Ordering::Relaxed);
+                        link.errored.fetch_add(1, Ordering::Relaxed);
+                        let n = link.health.record_integrity();
+                        eprintln!(
+                            "[router] integrity detection on worker {} ({n} lifetime): {reason}; result quarantined, resubmitting",
+                            link.spec.id
+                        );
+                        let exhausted = Error::IntegrityFailure(format!(
+                            "{reason} (worker {}) and failover is exhausted",
+                            link.spec.id
+                        ));
+                        if self.replace_single(id, (state.key, state.spec), group.tried.clone(), exhausted)
+                        {
+                            self.integrity_resubmits.fetch_add(1, Ordering::Relaxed);
+                        }
+                    } else {
+                        link.completed.fetch_add(1, Ordering::Relaxed);
+                        self.completed.fetch_add(1, Ordering::Relaxed);
+                        self.ready.lock().expect("ready lock").insert(id, Ok(r.clone()));
+                    }
+                }
+                Some(Err(e)) => {
+                    link.errored.fetch_add(1, Ordering::Relaxed);
+                    match e {
+                        Error::Overloaded { .. } => {
+                            link.health.record_overloaded(self.cfg.overload_divert);
+                            self.replace_single(
+                                id,
+                                (state.key, state.spec),
+                                group.tried.clone(),
+                                e.clone(),
+                            );
+                        }
+                        Error::ShuttingDown | Error::Unavailable(_) => {
+                            self.replace_single(
+                                id,
+                                (state.key, state.spec),
+                                group.tried.clone(),
+                                e.clone(),
+                            );
+                        }
+                        Error::IntegrityFailure(_) => {
+                            self.integrity_detections.fetch_add(1, Ordering::Relaxed);
+                            let n = link.health.record_integrity();
+                            eprintln!(
+                                "[router] worker {} reported an integrity failure ({n} lifetime); resubmitting",
+                                link.spec.id
+                            );
+                            if self.replace_single(
+                                id,
+                                (state.key, state.spec),
+                                group.tried.clone(),
+                                e.clone(),
+                            ) {
+                                self.integrity_resubmits.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        _ => {
+                            self.failed.fetch_add(1, Ordering::Relaxed);
+                            self.ready.lock().expect("ready lock").insert(id, Err(e.clone()));
+                        }
+                    }
+                }
+                None => {
+                    // The worker answered fewer entries than the batch
+                    // carried — a protocol violation; terminal.
+                    self.failed.fetch_add(1, Ordering::Relaxed);
+                    self.ready.lock().expect("ready lock").insert(
+                        id,
+                        Err(Error::Internal("batch response is missing this entry".into())),
+                    );
+                }
+            }
+        }
+    }
+
+    /// Re-place one former group member as a plain single-job route,
+    /// never re-offering links its group already tried. Parks
+    /// `on_exhausted` in the delivery buffer when no candidate is left.
+    /// Returns whether the job found a new home.
+    fn replace_single(
+        &self,
+        id: u64,
+        state: (u64, JobSpec),
+        tried: Vec<usize>,
+        on_exhausted: Error,
+    ) -> bool {
+        let (key, spec) = state;
+        let mut tried = tried;
+        match self.place(key, &spec, &mut tried) {
+            Ok((link, wire_id, gen)) => {
+                self.routes.lock().expect("routes lock").insert(
+                    id,
+                    RouteState { spec, key, link, wire_id, gen, tried, group: None },
+                );
+                true
+            }
+            Err(_) => {
+                self.failed.fetch_add(1, Ordering::Relaxed);
+                self.ready.lock().expect("ready lock").insert(id, Err(on_exhausted));
+                false
+            }
+        }
+    }
+
+    /// Whole-group failover after transport loss or a stale generation:
+    /// re-place every still-claimed member as one batch on the next
+    /// candidate, carrying the group's tried list forward so the dead
+    /// link is never re-offered. Zero loss is inherited from the
+    /// single-job invariant: members either land on a survivor or fail
+    /// typed via `place_group`'s exhaustion path.
+    fn failover_group(&self, group: &GroupShared, link_idx: usize, wire_id: u64, gen: u64) {
+        let claimed = self.claim_group(group, link_idx, wire_id, gen);
+        if claimed.is_empty() {
+            return;
+        }
+        let key = claimed[0].1.key;
+        let entries: Vec<(u64, JobSpec)> =
+            claimed.into_iter().map(|(id, s)| (id, s.spec)).collect();
+        self.place_group(key, entries, group.tried.clone());
     }
 
     /// Fence `id` out of the ring, ask it to drain, and report the
@@ -530,9 +907,20 @@ impl ShardRouter {
     /// operands retained in the route. `None` means clean (or the job
     /// was not authenticated).
     fn verify_result(&self, ticket_id: u64, r: &JobResult) -> Option<String> {
-        let routes = self.routes.lock().expect("routes lock");
-        let state = routes.get(&ticket_id)?;
-        if !state.spec.auth {
+        let spec = {
+            let routes = self.routes.lock().expect("routes lock");
+            routes.get(&ticket_id)?.spec.clone()
+        };
+        self.verify_outcome(&spec, ticket_id, r)
+    }
+
+    /// The verification body, spec in hand — shared by the single-job
+    /// path (spec looked up from the route) and the coalesced path
+    /// (spec already claimed out of the routes map). `seed` feeds the
+    /// Freivalds probe's randomness; the ticket id keeps it
+    /// per-job-deterministic.
+    fn verify_outcome(&self, spec: &JobSpec, seed: u64, r: &JobResult) -> Option<String> {
+        if !spec.auth {
             return None;
         }
         match r.check {
@@ -542,7 +930,7 @@ impl ShardRouter {
             }
             Some(_) => {}
         }
-        if let Payload::Matmul { a, b, dim } = &state.spec.payload {
+        if let Payload::Matmul { a, b, dim } = &spec.payload {
             if r.values.len() != dim * dim {
                 return Some(format!(
                     "matmul result has {} values, expected {}",
@@ -557,7 +945,7 @@ impl ShardRouter {
             let amax = a.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
             let bmax = b.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
             let tol = (*dim * *dim) as f64 * amax.max(1.0) * bmax.max(1.0) * 0.00390625;
-            if !auth::freivalds_matmul_check(a, b, &r.values, *dim, 2, ticket_id, tol) {
+            if !auth::freivalds_matmul_check(a, b, &r.values, *dim, 2, seed, tol) {
                 return Some("Freivalds screen rejected the matmul product".into());
             }
         }
@@ -595,6 +983,33 @@ impl Backend for ShardRouter {
             self.rejected.fetch_add(1, Ordering::Relaxed);
             e
         })?;
+        if !self.cfg.coalesce_window.is_zero() {
+            // Coalescing: stage the job on its lane and flush when the
+            // count trigger fires (the time trigger fires from `poll`).
+            // Placement errors surface at poll time — the job is
+            // accepted here.
+            let id = self.next_ticket.fetch_add(1, Ordering::Relaxed);
+            // Register the ticket in `staged` *before* it appears in a
+            // buffer: a concurrent flush of this lane must never pop an
+            // entry whose `staged` record does not exist yet.
+            self.staged.lock().expect("staged lock").insert(id, key);
+            let full = {
+                let mut staging = self.staging.lock().expect("staging lock");
+                let buf = staging
+                    .entry(key)
+                    .or_insert_with(|| CoalesceBuf { entries: Vec::new(), since: Instant::now() });
+                if buf.entries.is_empty() {
+                    buf.since = Instant::now();
+                }
+                buf.entries.push((id, spec));
+                buf.entries.len() >= self.cfg.coalesce_max.max(1)
+            };
+            self.accepted.fetch_add(1, Ordering::Relaxed);
+            if full {
+                self.flush_key(key);
+            }
+            return Ok(JobTicket { id });
+        }
         let mut tried = Vec::new();
         let (link, wire_id, gen) = self.place(key, &spec, &mut tried).map_err(|e| {
             self.rejected.fetch_add(1, Ordering::Relaxed);
@@ -604,20 +1019,65 @@ impl Backend for ShardRouter {
         self.routes
             .lock()
             .expect("routes lock")
-            .insert(id, RouteState { spec, key, link, wire_id, gen, tried });
+            .insert(id, RouteState { spec, key, link, wire_id, gen, tried, group: None });
         self.accepted.fetch_add(1, Ordering::Relaxed);
         Ok(JobTicket { id })
     }
 
     fn poll(&self, ticket: &JobTicket) -> JobPoll {
+        // A group member resolved by another member's poll (or a staged
+        // job whose placement failed) has its outcome parked here.
+        if let Some(outcome) = self.ready.lock().expect("ready lock").remove(&ticket.id) {
+            return JobPoll::Ready(outcome);
+        }
+        // Still staged: fire the time trigger if the window expired,
+        // otherwise the job has not even been placed yet.
+        let staged_key = self.staged.lock().expect("staged lock").get(&ticket.id).copied();
+        if let Some(key) = staged_key {
+            let expired = {
+                let staging = self.staging.lock().expect("staging lock");
+                staging
+                    .get(&key)
+                    .map(|buf| buf.since.elapsed() >= self.cfg.coalesce_window)
+                    .unwrap_or(true)
+            };
+            if !expired {
+                return JobPoll::Pending;
+            }
+            self.flush_key(key);
+            if let Some(outcome) = self.ready.lock().expect("ready lock").remove(&ticket.id) {
+                return JobPoll::Ready(outcome);
+            }
+            // Fall through: the flush routed the job; probe it now.
+        }
         let located = {
             let routes = self.routes.lock().expect("routes lock");
-            routes.get(&ticket.id).map(|s| (s.link, s.wire_id, s.gen))
+            routes
+                .get(&ticket.id)
+                .map(|s| (s.link, s.wire_id, s.gen, s.group.as_ref().map(Arc::clone)))
         };
-        let Some((link_idx, wire_id, gen)) = located else {
+        let Some((link_idx, wire_id, gen, group)) = located else {
             return JobPoll::Ready(Err(Error::Internal("unknown ticket".into())));
         };
         let link = &self.links[link_idx];
+        if let Some(group) = group {
+            // Coalesced member: whichever member's poll pulls the batch
+            // response resolves (or fails over) the whole group, then
+            // every member collects from the delivery buffer.
+            match link.try_take(wire_id, gen) {
+                Ok(None) => return JobPoll::Pending,
+                Ok(Some(resp)) => self.resolve_group(&group, link_idx, wire_id, gen, resp),
+                Err(RouteLoss::Stale) | Err(RouteLoss::Lost) => {
+                    self.failover_group(&group, link_idx, wire_id, gen)
+                }
+            }
+            return match self.ready.lock().expect("ready lock").remove(&ticket.id) {
+                Some(outcome) => JobPoll::Ready(outcome),
+                // Re-placed (failover / per-entry retry) or claimed by a
+                // concurrent poller — either way, not resolved yet.
+                None => JobPoll::Pending,
+            };
+        }
         match link.try_take(wire_id, gen) {
             Ok(None) => JobPoll::Pending,
             Ok(Some(resp)) => match resp.body {
@@ -724,6 +1184,17 @@ impl Backend for ShardRouter {
     }
 
     fn forget(&self, ticket: &JobTicket) {
+        if self.ready.lock().expect("ready lock").remove(&ticket.id).is_some() {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        if let Some(key) = self.staged.lock().expect("staged lock").remove(&ticket.id) {
+            if let Some(buf) = self.staging.lock().expect("staging lock").get_mut(&key) {
+                buf.entries.retain(|(id, _)| *id != ticket.id);
+            }
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
         if self.routes.lock().expect("routes lock").remove(&ticket.id).is_some() {
             self.dropped.fetch_add(1, Ordering::Relaxed);
         }
@@ -742,6 +1213,21 @@ impl Backend for ShardRouter {
             self.integrity_detections.load(Ordering::Relaxed),
             self.integrity_resubmits.load(Ordering::Relaxed),
         );
+        if !self.cfg.coalesce_window.is_zero() {
+            let d = &self.coalesce.depth;
+            out.push_str(&format!(
+                "  coalesce: window {:?} max {} | flushes {} jobs {} depth 1:{} 2:{} 3-4:{} 5-8:{} 9+:{}\n",
+                self.cfg.coalesce_window,
+                self.cfg.coalesce_max,
+                self.coalesce.flushes.load(Ordering::Relaxed),
+                self.coalesce.jobs.load(Ordering::Relaxed),
+                d[0].load(Ordering::Relaxed),
+                d[1].load(Ordering::Relaxed),
+                d[2].load(Ordering::Relaxed),
+                d[3].load(Ordering::Relaxed),
+                d[4].load(Ordering::Relaxed),
+            ));
+        }
         for link in &self.links {
             let mark = if link.health.quarantined() {
                 " (quarantined)"
@@ -786,8 +1272,14 @@ impl Backend for ShardRouter {
         if self.shutting_down.swap(true, Ordering::SeqCst) {
             return Err(Error::ShuttingDown);
         }
-        // Drain: keep polling uncollected tickets so late results land
-        // in the accounting instead of as drops.
+        // Drain: flush anything still staged, then keep polling
+        // uncollected tickets so late results land in the accounting
+        // instead of as drops.
+        let staged_keys: Vec<u64> =
+            self.staging.lock().expect("staging lock").keys().copied().collect();
+        for key in staged_keys {
+            self.flush_key(key);
+        }
         let deadline = Instant::now() + self.cfg.drain_wait;
         loop {
             let ids: Vec<u64> = {
@@ -888,6 +1380,20 @@ mod tests {
         assert!(cfg.health_interval > Duration::ZERO);
         assert!(cfg.overload_divert > Duration::ZERO);
         assert_eq!(cfg.divert_depth, 0, "depth diversion is opt-in");
+        assert!(cfg.coalesce_window.is_zero(), "coalescing is opt-in");
+        assert!(cfg.coalesce_max >= 2);
+    }
+
+    #[test]
+    fn coalesce_stats_bucket_flush_depths() {
+        let s = CoalesceStats::default();
+        for depth in [1usize, 2, 3, 4, 5, 8, 9, 100] {
+            s.record_flush(depth);
+        }
+        assert_eq!(s.flushes.load(Ordering::Relaxed), 8);
+        assert_eq!(s.jobs.load(Ordering::Relaxed), 1 + 2 + 3 + 4 + 5 + 8 + 9 + 100);
+        let d: Vec<u64> = s.depth.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        assert_eq!(d, vec![1, 1, 2, 2, 2]);
     }
 
     #[test]

@@ -53,7 +53,9 @@ use crate::runtime::EngineHandle;
 use crate::workloads::dot::dot_product_encoded_scalar;
 use crate::workloads::fir::{fir_filter, fir_filter_encoded_taps, fir_filter_scalar};
 use crate::workloads::matmul::{encode_matmul_rhs, matmul_hrfna_planar_encoded};
-use crate::workloads::rk4::{rk4_final_state, rk4_final_states_batch, Ode};
+use crate::workloads::rk4::{
+    rk4_final_state, rk4_final_states_batch, rk4_final_states_batch_with, Ode, Rk4Coeffs,
+};
 
 /// Which datapath the lane workers execute hybrid jobs on.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -235,6 +237,7 @@ pub fn block_quantum(f: i32) -> f64 {
 const MATMUL_RHS_SALT: u64 = 0x6D61_746D_756C_2D62; // "matmul-b"
 const FIR_TAPS_SALT: u64 = 0x6669_722D_7461_7073; // "fir-taps"
 const FIR_AUTH_SALT: u64 = 0x6669_722D_6175_7468; // "fir-auth"
+const RK4_COEFF_SALT: u64 = 0x726B_342D_636F_6566; // "rk4-coef"
 
 /// Worker-side view of the coordinator's operand cache: the cache plus
 /// the (kind, tier) slot its lookups attribute metrics to. Threaded
@@ -330,7 +333,7 @@ fn execute_batch_with(
         JobKind::Rk4Hybrid => {
             let ctx = registry.get(tier);
             match mode {
-                ExecMode::Planar => exec_rk4_hybrid_planar(&ctx, jobs),
+                ExecMode::Planar => exec_rk4_hybrid_planar(&ctx, jobs, cc),
                 ExecMode::Scalar => jobs
                     .iter()
                     .map(|j| exec_rk4_hybrid_scalar(&ctx, j))
@@ -979,7 +982,17 @@ fn exec_matmul_f32(engine: &EngineHandle, job: &Job) -> Result<Vec<f64>> {
 /// Planar RK4: jobs sharing (mu, dt, steps) integrate lock-step as one
 /// planar batch; only final states are decoded (bulk CRT of requested
 /// outputs). Heterogeneous batches degrade gracefully into sub-groups.
-fn exec_rk4_hybrid_planar(ctx: &HrfnaContext, jobs: &[Job]) -> Vec<Result<Vec<f64>>> {
+/// With a cache, each group's vector-field constant table
+/// ([`Rk4Coeffs`]) is served from the operand cache keyed by the ODE's
+/// constants — bit-identical to the cold encode because
+/// `Rk4Coeffs::encode` is deterministic (pinned by
+/// `precomputed_coeffs_bit_identical_to_cold_encode` and the op-cache
+/// integration suite).
+fn exec_rk4_hybrid_planar(
+    ctx: &HrfnaContext,
+    jobs: &[Job],
+    cc: Option<&CacheCtx>,
+) -> Vec<Result<Vec<f64>>> {
     let mut params: Vec<(u64, u64, u64)> = Vec::with_capacity(jobs.len());
     for job in jobs {
         match &job.payload {
@@ -1010,8 +1023,25 @@ fn exec_rk4_hybrid_planar(ctx: &HrfnaContext, jobs: &[Job]) -> Vec<Result<Vec<f6
             }
             done[j] = true;
         }
-        let finals =
-            rk4_final_states_batch(&Ode::VanDerPol { mu }, &y0s, dt, steps, ctx);
+        let ode = Ode::VanDerPol { mu };
+        let finals = match cc {
+            Some(cc) => {
+                // Keyed by the ODE's constants only — y0/dt/steps don't
+                // change what the field encodes.
+                let digest = auth::operand_digest_with(RK4_COEFF_SALT, &[mu]);
+                let cached = cc.lookup(digest, false, || {
+                    CachedOperand::Rk4Coeffs(Rk4Coeffs::encode(&ode, ctx).consts)
+                });
+                match &*cached {
+                    CachedOperand::Rk4Coeffs(consts) => {
+                        let coeffs = Rk4Coeffs::from_consts(consts.clone());
+                        rk4_final_states_batch_with(&ode, &y0s, dt, steps, &coeffs, ctx)
+                    }
+                    _ => rk4_final_states_batch(&ode, &y0s, dt, steps, ctx),
+                }
+            }
+            None => rk4_final_states_batch(&ode, &y0s, dt, steps, ctx),
+        };
         for (&j, state) in group.iter().zip(finals) {
             out[j] = Some(Ok(state));
         }

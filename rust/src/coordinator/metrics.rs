@@ -624,6 +624,15 @@ pub struct ClientCounters {
     pub frames_out: AtomicU64,
     pub bytes_in: AtomicU64,
     pub bytes_out: AtomicU64,
+    /// Subset of `frames_in` that arrived as binary envelopes (the
+    /// negotiated bulk-`f64` encoding); the remainder were pure JSON.
+    pub bin_frames_in: AtomicU64,
+    /// Subset of `frames_out` written as binary envelopes.
+    pub bin_frames_out: AtomicU64,
+    /// Payload bytes of the inbound binary-envelope subset.
+    pub bin_bytes_in: AtomicU64,
+    /// Payload bytes of the outbound binary-envelope subset.
+    pub bin_bytes_out: AtomicU64,
     /// Jobs this client submitted that the coordinator accepted.
     pub submits: AtomicU64,
     /// Job results delivered back over this connection.
@@ -646,7 +655,8 @@ macro_rules! wire_counter {
 }
 
 impl ClientCounters {
-    wire_counter!(frames_in, frames_out, bytes_in, bytes_out, submits, results,
+    wire_counter!(frames_in, frames_out, bytes_in, bytes_out, bin_frames_in,
+        bin_frames_out, bin_bytes_in, bin_bytes_out, submits, results,
         wire_errors, rate_limited, inflight_limited);
 }
 
@@ -703,6 +713,29 @@ impl WireMetrics {
         c.bytes_out.fetch_add(bytes as u64, Ordering::Relaxed);
         self.totals.frames_out.fetch_add(1, Ordering::Relaxed);
         self.totals.bytes_out.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// [`WireMetrics::record_frame_in`] split by encoding: `binary`
+    /// additionally attributes the frame to the binary-envelope subset.
+    pub fn record_frame_in_encoded(&self, c: &ClientCounters, bytes: usize, binary: bool) {
+        self.record_frame_in(c, bytes);
+        if binary {
+            c.bin_frames_in.fetch_add(1, Ordering::Relaxed);
+            c.bin_bytes_in.fetch_add(bytes as u64, Ordering::Relaxed);
+            self.totals.bin_frames_in.fetch_add(1, Ordering::Relaxed);
+            self.totals.bin_bytes_in.fetch_add(bytes as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// [`WireMetrics::record_frame_out`] split by encoding.
+    pub fn record_frame_out_encoded(&self, c: &ClientCounters, bytes: usize, binary: bool) {
+        self.record_frame_out(c, bytes);
+        if binary {
+            c.bin_frames_out.fetch_add(1, Ordering::Relaxed);
+            c.bin_bytes_out.fetch_add(bytes as u64, Ordering::Relaxed);
+            self.totals.bin_frames_out.fetch_add(1, Ordering::Relaxed);
+            self.totals.bin_bytes_out.fetch_add(bytes as u64, Ordering::Relaxed);
+        }
     }
 
     /// Record an accepted submission.
@@ -776,8 +809,8 @@ impl WireMetrics {
         let mut t = Table::new(
             "Wire metrics",
             &[
-                "client", "fr in", "fr out", "KiB in", "KiB out", "submit", "result",
-                "err", "rate-shed", "infl-shed",
+                "client", "fr in", "fr out", "KiB in", "KiB out", "bin in", "bin out",
+                "bKiB in", "bKiB out", "submit", "result", "err", "rate-shed", "infl-shed",
             ],
         );
         let row = |t: &mut Table, label: &str, c: &ClientCounters| {
@@ -787,6 +820,10 @@ impl WireMetrics {
                 c.frames_out().to_string(),
                 format!("{:.1}", c.bytes_in() as f64 / 1024.0),
                 format!("{:.1}", c.bytes_out() as f64 / 1024.0),
+                c.bin_frames_in().to_string(),
+                c.bin_frames_out().to_string(),
+                format!("{:.1}", c.bin_bytes_in() as f64 / 1024.0),
+                format!("{:.1}", c.bin_bytes_out() as f64 / 1024.0),
                 c.submits().to_string(),
                 c.results().to_string(),
                 c.wire_errors().to_string(),

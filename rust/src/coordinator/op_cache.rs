@@ -53,6 +53,10 @@ use crate::hybrid::{Hrfna, HrfnaBatch};
 /// * [`CachedOperand::DotBatch`] — the authenticated-FIR reversed tap
 ///   plane (`encode_dot_batch`), cloned per job before MAC derivation
 ///   and fault injection.
+/// * [`CachedOperand::Rk4Coeffs`] — the pre-encoded scalar constants of
+///   an RK4 job's vector field (`workloads::rk4::Rk4Coeffs`), keyed by
+///   the ODE's constants so every step of every repeat integration
+///   shares one encode.
 pub enum CachedOperand {
     /// Block-encoded matmul right-hand side (already transposed).
     Batch(HrfnaBatch),
@@ -60,6 +64,8 @@ pub enum CachedOperand {
     Taps(Vec<Hrfna>),
     /// Encoded reversed-tap plane for the authenticated FIR path.
     DotBatch(DotBatchEncoded),
+    /// Pre-encoded RK4 vector-field constants.
+    Rk4Coeffs(Vec<Hrfna>),
 }
 
 impl CachedOperand {
@@ -75,6 +81,10 @@ impl CachedOperand {
             }
             CachedOperand::DotBatch(d) => {
                 d.plane.k() * d.plane.n() * 8 + d.f.len() * 4
+            }
+            CachedOperand::Rk4Coeffs(ts) => {
+                let k = ts.first().map_or(0, |h| h.r.r.len());
+                ts.len() * (k * 8 + 20)
             }
         }
     }

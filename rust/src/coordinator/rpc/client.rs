@@ -30,6 +30,7 @@ use super::json::Json;
 use super::protocol::{
     error_from_json, result_from_json, spec_to_json, Request, Response, ResponseBody,
 };
+use super::wire;
 
 /// Read timeout used by [`RpcClient::try_response`] — one scheduling
 /// quantum of patience, so a poll costs at most ~1 ms when the wire is
@@ -43,6 +44,10 @@ pub struct RpcClient {
     next_id: u64,
     /// Responses that arrived while waiting for a different id.
     stash: HashMap<u64, Response>,
+    /// Binary payload framing granted by the server's `hello` reply.
+    /// Off until [`RpcClient::negotiate_binary`] succeeds, so a client
+    /// that never negotiates speaks the pre-binary protocol verbatim.
+    binary: bool,
 }
 
 /// Outcome of one submitted job: the result, or the server's typed
@@ -59,6 +64,7 @@ impl RpcClient {
             frames: FrameReader::default(),
             next_id: 1,
             stash: HashMap::new(),
+            binary: false,
         })
     }
 
@@ -87,9 +93,36 @@ impl RpcClient {
     fn send(&mut self, method: &str, params: Json) -> Result<u64> {
         let id = self.next_id;
         self.next_id += 1;
-        let frame = Request::new(id, method, params).to_json().encode();
-        write_frame(&mut self.stream, frame.as_bytes()).context("write request frame")?;
+        let frame = wire::encode_payload(&Request::new(id, method, params).to_json(), self.binary);
+        write_frame(&mut self.stream, &frame).context("write request frame")?;
         Ok(id)
+    }
+
+    /// Whether the connection negotiated binary payload framing.
+    pub fn binary(&self) -> bool {
+        self.binary
+    }
+
+    /// Offer the server our capabilities (`hello`) and switch to binary
+    /// payload framing if it grants [`wire::CAP_BINARY`]. A server
+    /// predating `hello` answers method-not-found — that is a version
+    /// mismatch, not a protocol error, and the connection stays on pure
+    /// JSON. Returns whether binary framing is now active.
+    pub fn negotiate_binary(&mut self) -> Result<bool> {
+        let params =
+            Json::obj(vec![("caps", Json::Arr(vec![Json::str(wire::CAP_BINARY)]))]);
+        let resp = self.request("hello", params)?;
+        match resp.body {
+            ResponseBody::Result(v) => {
+                let granted = v.get("caps").and_then(Json::as_arr).map_or(false, |caps| {
+                    caps.iter().any(|c| c.as_str() == Some(wire::CAP_BINARY))
+                });
+                self.binary = granted;
+                Ok(granted)
+            }
+            ResponseBody::Error(Error::MethodNotFound(_)) => Ok(false),
+            ResponseBody::Error(e) => bail!("hello failed: {e}"),
+        }
     }
 
     /// Read one response frame (blocking until the server answers).
@@ -188,33 +221,28 @@ impl RpcClient {
         self.wait_submit(id)
     }
 
-    /// Submit a whole batch in one frame; returns per-spec outcomes in
-    /// order.
-    pub fn submit_batch(&mut self, specs: &[JobSpec]) -> Result<Vec<SubmitOutcome>> {
+    /// Fire a whole batch as one `submit_batch` frame without waiting;
+    /// returns the request id to pass to
+    /// [`RpcClient::wait_submit_batch`]. This is the coalescing
+    /// primitive the cluster router flushes through.
+    pub fn submit_batch_spec(&mut self, specs: &[JobSpec]) -> Result<u64> {
         let params = Json::obj(vec![(
             "specs",
             Json::Arr(specs.iter().map(spec_to_json).collect()),
         )]);
-        let resp = self.request("submit_batch", params)?;
-        let entries = match resp.body {
-            ResponseBody::Result(Json::Arr(entries)) => entries,
-            ResponseBody::Error(e) => bail!("submit_batch failed wholesale: {e}"),
-            other => bail!("submit_batch returned a non-array: {other:?}"),
-        };
-        entries
-            .iter()
-            .map(|entry| {
-                if let Some(v) = entry.get("result") {
-                    let r = result_from_json(v).map_err(|e| anyhow!("bad job result: {e}"))?;
-                    Ok(Ok(r))
-                } else if let Some(err) = entry.get("error") {
-                    let e = error_from_json(err).map_err(|e| anyhow!("bad batch error: {e}"))?;
-                    Ok(Err(e))
-                } else {
-                    bail!("batch entry is neither result nor error")
-                }
-            })
-            .collect()
+        self.send("submit_batch", params)
+    }
+
+    /// Collect a fired batch's per-spec outcomes, in submission order.
+    pub fn wait_submit_batch(&mut self, id: u64) -> Result<Vec<SubmitOutcome>> {
+        batch_outcomes(self.wait(id)?)
+    }
+
+    /// Submit a whole batch in one frame; returns per-spec outcomes in
+    /// order.
+    pub fn submit_batch(&mut self, specs: &[JobSpec]) -> Result<Vec<SubmitOutcome>> {
+        let id = self.submit_batch_spec(specs)?;
+        self.wait_submit_batch(id)
     }
 
     /// Liveness check.
@@ -298,9 +326,34 @@ impl RpcClient {
 }
 
 fn decode_response(payload: &[u8]) -> Result<Response> {
-    let text = std::str::from_utf8(payload).context("response is not UTF-8")?;
-    let v = Json::parse(text).map_err(|e| anyhow!("bad response JSON: {e}"))?;
+    let v = wire::decode_payload(payload).map_err(|e| anyhow!("bad response payload: {e}"))?;
     Response::from_json(&v).map_err(|e| anyhow!("bad response frame: {e}"))
+}
+
+/// Parse a `submit_batch` response into per-spec outcomes, in order.
+/// Shared by [`RpcClient::wait_submit_batch`] and the cluster router's
+/// coalesced-flush resolution (which correlates batch responses by wire
+/// id itself).
+pub fn batch_outcomes(resp: Response) -> Result<Vec<SubmitOutcome>> {
+    let entries = match resp.body {
+        ResponseBody::Result(Json::Arr(entries)) => entries,
+        ResponseBody::Error(e) => bail!("submit_batch failed wholesale: {e}"),
+        other => bail!("submit_batch returned a non-array: {other:?}"),
+    };
+    entries
+        .iter()
+        .map(|entry| {
+            if let Some(v) = entry.get("result") {
+                let r = result_from_json(v).map_err(|e| anyhow!("bad job result: {e}"))?;
+                Ok(Ok(r))
+            } else if let Some(err) = entry.get("error") {
+                let e = error_from_json(err).map_err(|e| anyhow!("bad batch error: {e}"))?;
+                Ok(Err(e))
+            } else {
+                bail!("batch entry is neither result nor error")
+            }
+        })
+        .collect()
 }
 
 fn submit_outcome(resp: Response) -> Result<SubmitOutcome> {
@@ -335,10 +388,26 @@ pub struct Remote {
 }
 
 impl Remote {
-    /// Connect (with retry) and wrap.
+    /// Connect (with retry) and wrap, speaking pure JSON.
     pub fn connect(addr: &str, total_wait: Duration) -> std::result::Result<Remote, Error> {
-        let client = RpcClient::connect_retry(addr, total_wait)
+        Remote::connect_with(addr, total_wait, false)
+    }
+
+    /// Connect (with retry) and wrap; when `binary` is set, offer the
+    /// server binary payload framing via `hello` (falling back to pure
+    /// JSON against servers that predate it).
+    pub fn connect_with(
+        addr: &str,
+        total_wait: Duration,
+        binary: bool,
+    ) -> std::result::Result<Remote, Error> {
+        let mut client = RpcClient::connect_retry(addr, total_wait)
             .map_err(|e| Error::Unavailable(format!("{addr}: {e:#}")))?;
+        if binary {
+            client
+                .negotiate_binary()
+                .map_err(|e| Error::Unavailable(format!("{addr}: {e:#}")))?;
+        }
         Ok(Remote {
             client: Mutex::new(client),
             addr: addr.to_string(),

@@ -21,12 +21,21 @@ pub const MAX_FRAME_BYTES: usize = 32 << 20;
 /// Byte size of the length prefix.
 pub const HEADER_BYTES: usize = 4;
 
-/// Write one frame (length prefix + payload) and flush.
+/// Write one frame (length prefix + payload) and flush, enforcing the
+/// default [`MAX_FRAME_BYTES`] cap.
 pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
-    if payload.len() > MAX_FRAME_BYTES {
+    write_frame_capped(w, payload, MAX_FRAME_BYTES)
+}
+
+/// Write one frame under an explicit payload cap (the `--max-frame`
+/// knob: binary matmul payloads change the size profile, so deployments
+/// can raise or shrink the bound without recompiling). The error names
+/// both the offending size and the cap in force.
+pub fn write_frame_capped(w: &mut impl Write, payload: &[u8], max: usize) -> io::Result<()> {
+    if payload.len() > max {
         return Err(io::Error::new(
             io::ErrorKind::InvalidInput,
-            format!("frame of {} bytes exceeds cap {}", payload.len(), MAX_FRAME_BYTES),
+            format!("frame of {} bytes exceeds cap {}", payload.len(), max),
         ));
     }
     let header = (payload.len() as u32).to_be_bytes();
@@ -230,6 +239,10 @@ mod tests {
         assert_eq!(err.kind(), io::ErrorKind::InvalidData);
         let mut w = io::Cursor::new(Vec::new());
         assert!(write_frame(&mut w, &vec![0u8; MAX_FRAME_BYTES + 1]).is_err());
+        // The configurable writer cap reports both size and bound.
+        let err = write_frame_capped(&mut io::Cursor::new(Vec::new()), &big, 8).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains('9') && msg.contains("cap 8"), "{msg}");
     }
 
     /// A reader that yields timeouts between single-byte reads — the

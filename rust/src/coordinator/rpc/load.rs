@@ -57,13 +57,33 @@ pub fn socket_closed_loop(
     mode: ConnMode,
     make: &(dyn Fn(u64, usize) -> JobSpec + Sync),
 ) -> LoadReport {
+    socket_closed_loop_binary(addr, clients, jobs_per_client, burst, mode, false, make)
+}
+
+/// [`socket_closed_loop`] with an encoding choice: when `binary` is
+/// set, each persistent client negotiates the binary payload envelope
+/// via `hello` before its first job (falling back to pure JSON against
+/// a server that predates it). Per-job connections skip negotiation —
+/// a hello round trip per connect would swamp the quantity that mode
+/// measures.
+pub fn socket_closed_loop_binary(
+    addr: &str,
+    clients: usize,
+    jobs_per_client: usize,
+    burst: usize,
+    mode: ConnMode,
+    binary: bool,
+    make: &(dyn Fn(u64, usize) -> JobSpec + Sync),
+) -> LoadReport {
     let burst = burst.max(1);
     let t0 = Instant::now();
     let results: Vec<(usize, usize, usize, Vec<f64>, usize)> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..clients)
             .map(|c| {
                 scope.spawn(move || match mode {
-                    ConnMode::Persistent => run_persistent(addr, c as u64, jobs_per_client, burst, make),
+                    ConnMode::Persistent => {
+                        run_persistent(addr, c as u64, jobs_per_client, burst, binary, make)
+                    }
                     ConnMode::PerJob => run_per_job(addr, c as u64, jobs_per_client, make),
                 })
             })
@@ -95,12 +115,16 @@ fn run_persistent(
     client: u64,
     jobs: usize,
     burst: usize,
+    binary: bool,
     make: &(dyn Fn(u64, usize) -> JobSpec + Sync),
 ) -> (usize, usize, usize, Vec<f64>, usize) {
     let mut conn = match RpcClient::connect_retry(addr, CONNECT_WAIT) {
         Ok(c) => c,
         Err(_) => return (0, 0, 0, Vec::new(), 0),
     };
+    if binary && conn.negotiate_binary().is_err() {
+        return (0, 0, 0, Vec::new(), 0);
+    }
     let mut offered = 0;
     let mut accepted = 0;
     let mut rejected = 0;

@@ -9,6 +9,10 @@
 //!   deterministic encoding is the fixture contract),
 //! * [`codec`] — 4-byte big-endian length-prefix framing with
 //!   partial-frame buffering for timeout-polled sockets,
+//! * [`wire`] — the frame-type discriminator: pure-JSON payloads vs the
+//!   binary envelope that ships bulk `f64` arrays as raw little-endian
+//!   bytes (negotiated per connection via `hello`; old peers fall back
+//!   to pure JSON transparently),
 //! * [`protocol`] — request/response types, the (de)serialization of
 //!   the unified [`Error`](crate::coordinator::Error) (whose
 //!   `wire_code()` is the stable code table), and
@@ -35,11 +39,13 @@ pub mod json;
 pub mod load;
 pub mod protocol;
 pub mod server;
+pub mod wire;
 
-pub use client::{Remote, RpcClient, SubmitOutcome};
-pub use codec::{write_frame, FramePoll, FrameReader, MAX_FRAME_BYTES};
+pub use client::{batch_outcomes, Remote, RpcClient, SubmitOutcome};
+pub use codec::{write_frame, write_frame_capped, FramePoll, FrameReader, MAX_FRAME_BYTES};
+pub use wire::{decode_payload, encode_payload, CAP_BINARY};
 pub use json::Json;
-pub use load::{socket_closed_loop, ConnMode};
+pub use load::{socket_closed_loop, socket_closed_loop_binary, ConnMode};
 #[allow(deprecated)]
 pub use protocol::code_for_submit_error;
 pub use protocol::{

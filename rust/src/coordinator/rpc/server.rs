@@ -23,6 +23,7 @@
 //! | method         | params                    | result                        |
 //! |----------------|---------------------------|-------------------------------|
 //! | `ping`         | —                         | `"pong"`                      |
+//! | `hello`        | `{"caps":["bin1", ...]}`  | `{"caps":[granted, ...]}`     |
 //! | `submit`       | spec object               | job-result object             |
 //! | `submit_batch` | `{"specs":[spec, ...]}`   | array of per-spec entries     |
 //! | `metrics`      | —                         | rendered backend + wire tables |
@@ -31,6 +32,13 @@
 //!
 //! `health` is the cluster heartbeat: the router probes it per interval
 //! and feeds the queue depth into its occupancy-based diversion.
+//!
+//! `hello` is the capability exchange: a client offering
+//! [`wire::CAP_BINARY`](super::wire::CAP_BINARY) switches the
+//! connection's *responses* to the binary payload envelope; requests are
+//! accepted in either encoding unconditionally (the frame's first byte
+//! discriminates), so negotiation only governs what the server sends.
+//! Old clients never say hello and get pure JSON forever.
 //!
 //! Quotas are per connection (the wire client identity): a token-bucket
 //! submission rate (`RateLimited` when dry) and an in-flight cap
@@ -52,7 +60,7 @@ use crate::coordinator::error::Error;
 use crate::coordinator::metrics::{ClientCounters, WireMetrics};
 use crate::coordinator::request::JobResult;
 
-use super::codec::{write_frame, FrameReader, MAX_FRAME_BYTES};
+use super::codec::{write_frame_capped, FrameReader, MAX_FRAME_BYTES};
 use super::json::Json;
 use super::protocol::{
     error_from_json, error_to_json, result_to_json, spec_from_json, Request, Response,
@@ -327,6 +335,9 @@ fn serve_conn(
 ) {
     let counters = wire.register_client(&label);
     let inflight = Arc::new(AtomicUsize::new(0));
+    // Set by the reader when `hello` grants binary framing; read by the
+    // completer for every response it encodes thereafter.
+    let binary = Arc::new(AtomicBool::new(false));
 
     let write_half = match stream.try_clone() {
         Ok(s) => s,
@@ -345,6 +356,8 @@ fn serve_conn(
         let wire = Arc::clone(&wire);
         let counters = Arc::clone(&counters);
         let inflight = Arc::clone(&inflight);
+        let binary = Arc::clone(&binary);
+        let max_frame = cfg.max_frame_bytes;
         thread::Builder::new()
             .name("rpc-completer".into())
             .spawn(move || {
@@ -353,7 +366,9 @@ fn serve_conn(
                 // connection, is counted, and the socket closes.
                 let wire2 = Arc::clone(&wire);
                 let body = std::panic::AssertUnwindSafe(move || {
-                    completer_loop(write_half, work_rx, backend, wire, counters, inflight)
+                    completer_loop(
+                        write_half, work_rx, backend, wire, counters, inflight, binary, max_frame,
+                    )
                 });
                 if std::panic::catch_unwind(body).is_err() {
                     wire2.record_conn_panic();
@@ -365,7 +380,10 @@ fn serve_conn(
 
     {
         let body = std::panic::AssertUnwindSafe(|| {
-            reader_loop(stream, &*backend, &cfg, &stop, &drain, &wire, &counters, &inflight, &work_tx)
+            reader_loop(
+                stream, &*backend, &cfg, &stop, &drain, &wire, &counters, &inflight, &binary,
+                &work_tx,
+            )
         });
         if std::panic::catch_unwind(body).is_err() {
             wire.record_conn_panic();
@@ -390,6 +408,7 @@ fn reader_loop(
     wire: &WireMetrics,
     counters: &ClientCounters,
     inflight: &AtomicUsize,
+    binary: &AtomicBool,
     work_tx: &mpsc::Sender<Work>,
 ) {
     let mut frames = FrameReader::new(cfg.max_frame_bytes);
@@ -405,17 +424,11 @@ fn reader_loop(
                 return;
             }
         };
-        wire.record_frame_in(counters, payload.len());
+        wire.record_frame_in_encoded(counters, payload.len(), super::wire::is_binary(&payload));
 
-        let text = match std::str::from_utf8(&payload) {
-            Ok(t) => t,
-            Err(_) => {
-                wire.record_protocol_error();
-                respond_err(work_tx, 0, Error::Parse("frame is not UTF-8".into()));
-                continue;
-            }
-        };
-        let value = match Json::parse(text) {
+        // Requests are accepted in either encoding regardless of what
+        // `hello` negotiated — the first payload byte discriminates.
+        let value = match super::wire::decode_payload(&payload) {
             Ok(v) => v,
             Err(e) => {
                 wire.record_protocol_error();
@@ -437,6 +450,22 @@ fn reader_loop(
         match req.method.as_str() {
             "ping" => {
                 let _ = work_tx.send(Work::Respond(Response::result(req.id, Json::str("pong"))));
+            }
+            "hello" => {
+                // Grant the intersection of the client's offered caps
+                // and ours; unknown caps are ignored, not errors, so
+                // future clients can offer more without breaking us.
+                let offered = req.params.get("caps").and_then(Json::as_arr);
+                let grant_binary = offered.map_or(false, |caps| {
+                    caps.iter().any(|c| c.as_str() == Some(super::wire::CAP_BINARY))
+                });
+                let mut granted = Vec::new();
+                if grant_binary {
+                    binary.store(true, Ordering::SeqCst);
+                    granted.push(Json::str(super::wire::CAP_BINARY));
+                }
+                let body = Json::obj(vec![("caps", Json::Arr(granted))]);
+                let _ = work_tx.send(Work::Respond(Response::result(req.id, body)));
             }
             "metrics" => {
                 let body = Json::obj(vec![
@@ -557,6 +586,7 @@ struct Pending {
     since: Instant,
 }
 
+#[allow(clippy::too_many_arguments)]
 fn completer_loop(
     mut w: TcpStream,
     work_rx: mpsc::Receiver<Work>,
@@ -564,6 +594,8 @@ fn completer_loop(
     wire: Arc<WireMetrics>,
     counters: Arc<ClientCounters>,
     inflight: Arc<AtomicUsize>,
+    binary: Arc<AtomicBool>,
+    max_frame: usize,
 ) {
     let mut pending: Vec<Pending> = Vec::new();
     let mut open = true;
@@ -597,7 +629,8 @@ fn completer_loop(
         for wk in batch_in {
             match wk {
                 Work::Respond(resp) => {
-                    write_response(&mut w, &resp, &wire, &counters, &mut dead);
+                    let bin = binary.load(Ordering::SeqCst);
+                    write_response(&mut w, &resp, &wire, &counters, bin, max_frame, &mut dead);
                 }
                 Work::Wait { id, ticket } => pending.push(Pending {
                     id,
@@ -649,7 +682,8 @@ fn completer_loop(
             if all_ready {
                 let p = pending.swap_remove(i);
                 let resp = assemble(p);
-                write_response(&mut w, &resp, &wire, &counters, &mut dead);
+                let bin = binary.load(Ordering::SeqCst);
+                write_response(&mut w, &resp, &wire, &counters, bin, max_frame, &mut dead);
             } else {
                 i += 1;
             }
@@ -692,6 +726,8 @@ fn write_response(
     resp: &Response,
     wire: &WireMetrics,
     counters: &ClientCounters,
+    binary: bool,
+    max_frame: usize,
     dead: &mut bool,
 ) {
     if *dead {
@@ -700,13 +736,15 @@ fn write_response(
     if matches!(resp.body, ResponseBody::Error(_)) {
         wire.record_wire_error(counters);
     }
-    let payload = resp.to_json().encode();
-    if write_frame(w, payload.as_bytes()).is_err() || w.flush().is_err() {
+    let payload = super::wire::encode_payload(&resp.to_json(), binary);
+    if write_frame_capped(w, &payload, max_frame).is_err() || w.flush().is_err() {
         // Peer is gone; keep draining tickets so inflight accounting
         // stays truthful, but stop writing.
         *dead = true;
     } else {
-        wire.record_frame_out(counters, payload.len());
+        // Small responses stay pure JSON even on a binary connection —
+        // classify by what actually went on the wire.
+        wire.record_frame_out_encoded(counters, payload.len(), super::wire::is_binary(&payload));
     }
 }
 

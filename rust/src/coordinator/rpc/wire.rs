@@ -1,0 +1,367 @@
+//! Binary payload envelope: the frame-type discriminator that lets one
+//! length-prefixed frame ([`super::codec`]) carry its bulk `f64` arrays
+//! as raw little-endian bytes instead of decimal text.
+//!
+//! A frame's payload is one of two encodings, told apart by the first
+//! byte:
+//!
+//! * **Pure JSON** — the PR 6 wire format, unchanged byte for byte. A
+//!   JSON document starts with `{`, `[`, a digit, `"`, `t`, `f`, `n` or
+//!   whitespace — never [`BIN_MAGIC`] (`0xBF`, an invalid UTF-8 start
+//!   byte), so the discriminator costs nothing and old peers keep
+//!   working.
+//! * **Binary envelope** — `[0xBF][version=1]` followed by a
+//!   `u32-LE`-length-prefixed JSON *control document* and a blob table:
+//!   `u32 LE blob_count`, then per blob `u32 LE n` and `n` little-endian
+//!   `f64`s. The control document is the ordinary JSON-RPC message with
+//!   every bulk numeric array (length ≥ [`MIN_BLOB`], numbers/nulls
+//!   only) replaced by the placeholder object `{"$bin":i,"n":len}`
+//!   naming blob `i`.
+//!
+//! ## Bit-identity across encodings
+//!
+//! [`decode_payload`] of a binary envelope yields the *same [`Json`]
+//! tree* that `Json::parse` yields for the pure-JSON encoding of the
+//! same message, so everything downstream (spec/result decode,
+//! execution, checksums) is structurally unable to differ:
+//!
+//! * non-finite values encode as `null` in JSON; a blob stores them as a
+//!   canonical quiet NaN and decode maps NaN back to [`Json::Null`],
+//! * `-0.0` collapses to `0` in JSON text; a blob stores the `+0.0` bits,
+//! * every other finite `f64` round-trips its exact bits through either
+//!   encoding (shortest-round-trip text on the JSON side, raw bits on
+//!   the binary side).
+//!
+//! Small control frames (`ping`, `health`, errors — nothing worth
+//! extracting) stay pure JSON even on a binary-negotiated connection;
+//! [`encode_payload`] only pays for the envelope when a blob exists.
+//!
+//! Negotiation lives in the client/server `hello` exchange (capability
+//! [`CAP_BINARY`]): a server that answers `hello` with the capability
+//! may send binary response frames, a client that sent it may send
+//! binary requests, and either side silently accepts binary frames
+//! regardless (decode branches on the magic byte alone) — old peers
+//! never see one.
+
+use super::json::Json;
+
+/// First payload byte of a binary envelope. `0xBF` is an invalid UTF-8
+/// start byte, so no JSON text frame can begin with it.
+pub const BIN_MAGIC: u8 = 0xBF;
+
+/// Envelope version this build writes and accepts.
+pub const BIN_VERSION: u8 = 1;
+
+/// Wire capability token exchanged in `hello`.
+pub const CAP_BINARY: &str = "bin1";
+
+/// Smallest numeric array worth extracting into a blob: below this the
+/// placeholder object costs about as much as the digits it saves.
+pub const MIN_BLOB: usize = 8;
+
+/// Placeholder key naming an extracted blob. No protocol message uses a
+/// `$`-prefixed field, so a placeholder can't collide with real traffic.
+const BIN_KEY: &str = "$bin";
+
+/// True when `payload` is a binary envelope (vs pure JSON text).
+pub fn is_binary(payload: &[u8]) -> bool {
+    payload.first() == Some(&BIN_MAGIC)
+}
+
+/// The exact bits a blob stores for `v` — chosen so binary decode equals
+/// JSON text round-trip: non-finite collapses to the canonical quiet NaN
+/// (JSON writes `null`, decoded as NaN), `-0.0` to `+0.0` (JSON writes
+/// `0`), everything else keeps its bits.
+fn canonical_bits(v: f64) -> u64 {
+    if !v.is_finite() {
+        f64::NAN.to_bits()
+    } else if v == 0.0 {
+        0
+    } else {
+        v.to_bits()
+    }
+}
+
+/// Replace every bulk numeric array in `v` with a placeholder, pushing
+/// the values onto `blobs` in placeholder order.
+fn extract_blobs(v: &Json, blobs: &mut Vec<Vec<f64>>) -> Json {
+    match v {
+        Json::Arr(items)
+            if items.len() >= MIN_BLOB
+                && items
+                    .iter()
+                    .all(|e| matches!(e, Json::Num(_) | Json::Null)) =>
+        {
+            let vals: Vec<f64> = items
+                .iter()
+                .map(|e| e.as_f64_or_nan().expect("matched Num | Null"))
+                .collect();
+            let idx = blobs.len();
+            blobs.push(vals);
+            Json::Obj(vec![
+                (BIN_KEY.to_string(), Json::Num(idx as f64)),
+                ("n".to_string(), Json::Num(items.len() as f64)),
+            ])
+        }
+        Json::Arr(items) => Json::Arr(items.iter().map(|e| extract_blobs(e, blobs)).collect()),
+        Json::Obj(fields) => Json::Obj(
+            fields
+                .iter()
+                .map(|(k, e)| (k.clone(), extract_blobs(e, blobs)))
+                .collect(),
+        ),
+        other => other.clone(),
+    }
+}
+
+/// Resolve placeholders back into arrays (the inverse of
+/// [`extract_blobs`], restoring the exact parse tree of the pure-JSON
+/// encoding).
+fn resolve_blobs(v: Json, blobs: &[Vec<f64>]) -> Result<Json, String> {
+    match v {
+        Json::Obj(fields) if fields.first().map(|(k, _)| k.as_str()) == Some(BIN_KEY) => {
+            let idx = fields[0]
+                .1
+                .as_u64()
+                .ok_or_else(|| "binary envelope: non-integer blob index".to_string())?
+                as usize;
+            let vals = blobs
+                .get(idx)
+                .ok_or_else(|| format!("binary envelope: blob {idx} out of range"))?;
+            Ok(Json::Arr(
+                vals.iter()
+                    .map(|&x| if x.is_nan() { Json::Null } else { Json::Num(x) })
+                    .collect(),
+            ))
+        }
+        Json::Arr(items) => Ok(Json::Arr(
+            items
+                .into_iter()
+                .map(|e| resolve_blobs(e, blobs))
+                .collect::<Result<_, _>>()?,
+        )),
+        Json::Obj(fields) => Ok(Json::Obj(
+            fields
+                .into_iter()
+                .map(|(k, e)| resolve_blobs(e, blobs).map(|e| (k, e)))
+                .collect::<Result<_, _>>()?,
+        )),
+        other => Ok(other),
+    }
+}
+
+/// Encode one JSON-RPC message for the wire. `binary: false` (or a
+/// message with no bulk array) produces the pure-JSON text bytes of the
+/// PR 6 wire format; otherwise the binary envelope.
+pub fn encode_payload(v: &Json, binary: bool) -> Vec<u8> {
+    if !binary {
+        return v.encode().into_bytes();
+    }
+    let mut blobs: Vec<Vec<f64>> = Vec::new();
+    let control = extract_blobs(v, &mut blobs);
+    if blobs.is_empty() {
+        return v.encode().into_bytes();
+    }
+    let json = control.encode().into_bytes();
+    let blob_bytes: usize = blobs.iter().map(|b| 4 + 8 * b.len()).sum();
+    let mut out = Vec::with_capacity(2 + 4 + json.len() + 4 + blob_bytes);
+    out.push(BIN_MAGIC);
+    out.push(BIN_VERSION);
+    out.extend_from_slice(&(json.len() as u32).to_le_bytes());
+    out.extend_from_slice(&json);
+    out.extend_from_slice(&(blobs.len() as u32).to_le_bytes());
+    for b in &blobs {
+        out.extend_from_slice(&(b.len() as u32).to_le_bytes());
+        for &x in b {
+            out.extend_from_slice(&canonical_bits(x).to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Little-endian `u32` at `payload[*at..]`, advancing the cursor.
+fn take_u32(payload: &[u8], at: &mut usize) -> Result<usize, String> {
+    let end = at
+        .checked_add(4)
+        .filter(|&e| e <= payload.len())
+        .ok_or_else(|| "binary envelope: truncated length field".to_string())?;
+    let mut w = [0u8; 4];
+    w.copy_from_slice(&payload[*at..end]);
+    *at = end;
+    Ok(u32::from_le_bytes(w) as usize)
+}
+
+/// Decode one frame payload of either encoding into its JSON-RPC message
+/// tree. Pure-JSON payloads take the exact PR 6 path (UTF-8 check +
+/// [`Json::parse`]); binary envelopes are validated structurally
+/// (version, bounds, exact length) and yield the identical tree.
+pub fn decode_payload(payload: &[u8]) -> Result<Json, String> {
+    if !is_binary(payload) {
+        let text = std::str::from_utf8(payload).map_err(|_| "frame is not UTF-8".to_string())?;
+        return Json::parse(text);
+    }
+    if payload.len() < 2 {
+        return Err("binary envelope: truncated header".to_string());
+    }
+    if payload[1] != BIN_VERSION {
+        return Err(format!(
+            "binary envelope: unsupported version {} (this build speaks {BIN_VERSION})",
+            payload[1]
+        ));
+    }
+    let mut at = 2usize;
+    let json_len = take_u32(payload, &mut at)?;
+    let json_end = at
+        .checked_add(json_len)
+        .filter(|&e| e <= payload.len())
+        .ok_or_else(|| "binary envelope: control document overruns the frame".to_string())?;
+    let text = std::str::from_utf8(&payload[at..json_end])
+        .map_err(|_| "binary envelope: control document is not UTF-8".to_string())?;
+    let control = Json::parse(text)?;
+    at = json_end;
+    let blob_count = take_u32(payload, &mut at)?;
+    let mut blobs: Vec<Vec<f64>> = Vec::with_capacity(blob_count.min(64));
+    for _ in 0..blob_count {
+        let n = take_u32(payload, &mut at)?;
+        let end = n
+            .checked_mul(8)
+            .and_then(|b| at.checked_add(b))
+            .filter(|&e| e <= payload.len())
+            .ok_or_else(|| "binary envelope: blob overruns the frame".to_string())?;
+        let vals: Vec<f64> = payload[at..end]
+            .chunks_exact(8)
+            .map(|c| {
+                let mut w = [0u8; 8];
+                w.copy_from_slice(c);
+                f64::from_bits(u64::from_le_bytes(w))
+            })
+            .collect();
+        blobs.push(vals);
+        at = end;
+    }
+    if at != payload.len() {
+        return Err(format!(
+            "binary envelope: {} trailing bytes after the blob table",
+            payload.len() - at
+        ));
+    }
+    resolve_blobs(control, &blobs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dot_request(n: usize) -> Json {
+        let xs: Vec<f64> = (0..n).map(|i| i as f64 * 0.5 - 1.0).collect();
+        Json::obj(vec![
+            ("jsonrpc", Json::str("2.0")),
+            ("id", Json::Num(1.0)),
+            ("method", Json::str("submit")),
+            (
+                "params",
+                Json::obj(vec![
+                    ("kind", Json::str("dot/hrfna")),
+                    ("tier", Json::str("paper")),
+                    (
+                        "payload",
+                        Json::obj(vec![
+                            ("type", Json::str("dot")),
+                            ("x", Json::arr_f64(&xs)),
+                            ("y", Json::arr_f64(&xs)),
+                        ]),
+                    ),
+                ]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn json_mode_is_byte_identical_to_plain_encode() {
+        let msg = dot_request(32);
+        assert_eq!(encode_payload(&msg, false), msg.encode().into_bytes());
+    }
+
+    #[test]
+    fn small_frames_stay_pure_json_even_in_binary_mode() {
+        let ping = Json::obj(vec![
+            ("jsonrpc", Json::str("2.0")),
+            ("id", Json::Num(3.0)),
+            ("method", Json::str("ping")),
+        ]);
+        let payload = encode_payload(&ping, true);
+        assert!(!is_binary(&payload));
+        assert_eq!(payload, ping.encode().into_bytes());
+    }
+
+    #[test]
+    fn binary_round_trip_restores_the_exact_parse_tree() {
+        let msg = dot_request(64);
+        let bin = encode_payload(&msg, true);
+        assert!(is_binary(&bin));
+        let from_bin = decode_payload(&bin).expect("binary decode");
+        let from_json = decode_payload(&encode_payload(&msg, false)).expect("json decode");
+        assert_eq!(from_bin, from_json);
+        assert_eq!(from_bin, msg);
+    }
+
+    #[test]
+    fn binary_is_much_smaller_than_text_for_bulk_operands() {
+        // 17-significant-digit doubles dominate text frames; the blob is
+        // a flat 8 bytes per element.
+        let xs: Vec<f64> = (0..512).map(|i| (i as f64 * 0.7301).sin() * 1e3).collect();
+        let msg = Json::obj(vec![
+            ("id", Json::Num(1.0)),
+            ("x", Json::arr_f64(&xs)),
+        ]);
+        let text = encode_payload(&msg, false);
+        let bin = encode_payload(&msg, true);
+        assert!(
+            (bin.len() as f64) < 0.6 * text.len() as f64,
+            "binary {} vs text {}",
+            bin.len(),
+            text.len()
+        );
+    }
+
+    #[test]
+    fn non_finite_and_negative_zero_match_the_json_path() {
+        let xs = [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -0.0, 1.5, -2.25, 0.1, 3.0];
+        let msg = Json::obj(vec![("x", Json::arr_f64(&xs))]);
+        let via_bin = decode_payload(&encode_payload(&msg, true)).expect("binary");
+        let via_text =
+            Json::parse(&msg.encode()).expect("text parse");
+        assert_eq!(via_bin, via_text);
+        let got = via_bin.get("x").unwrap().f64_vec().unwrap();
+        assert!(got[0].is_nan() && got[1].is_nan() && got[2].is_nan());
+        assert_eq!(got[3].to_bits(), 0.0f64.to_bits(), "-0.0 collapses to +0.0");
+        assert_eq!(got[4..], [1.5, -2.25, 0.1, 3.0]);
+    }
+
+    #[test]
+    fn short_arrays_are_not_extracted() {
+        let msg = Json::obj(vec![("x", Json::arr_f64(&[1.0, 2.0, 3.0]))]);
+        assert!(!is_binary(&encode_payload(&msg, true)));
+    }
+
+    #[test]
+    fn corrupt_envelopes_are_rejected_not_panicked() {
+        let msg = dot_request(16);
+        let good = encode_payload(&msg, true);
+        assert!(decode_payload(&[BIN_MAGIC]).is_err(), "truncated header");
+        assert!(
+            decode_payload(&[BIN_MAGIC, 9, 0, 0, 0, 0]).is_err(),
+            "unknown version"
+        );
+        let mut short = good.clone();
+        short.truncate(good.len() - 3);
+        assert!(decode_payload(&short).is_err(), "truncated blob");
+        let mut trailing = good.clone();
+        trailing.push(0);
+        assert!(decode_payload(&trailing).is_err(), "trailing bytes");
+        // A control-length field pointing past the end must not slice OOB.
+        let mut bad_len = good;
+        bad_len[2..6].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_payload(&bad_len).is_err(), "oversize control length");
+    }
+}

@@ -210,7 +210,7 @@ fn cmd_serve(args: &Args, cfg: &HrfnaConfig) {
 /// edge, cluster name).
 #[cfg(feature = "rpc")]
 fn cmd_serve_rpc(args: &Args, cfg: &HrfnaConfig, name: &str) {
-    use hrfna::coordinator::rpc::{QuotaConfig, RpcServer, RpcServerConfig};
+    use hrfna::coordinator::rpc::{QuotaConfig, RpcServer, RpcServerConfig, MAX_FRAME_BYTES};
 
     let addr = args.str_or("addr", "127.0.0.1:9377");
     let quota = QuotaConfig {
@@ -218,6 +218,7 @@ fn cmd_serve_rpc(args: &Args, cfg: &HrfnaConfig, name: &str) {
         rate_per_s: args.parse_or("rate", 0.0f64),
         burst: args.parse_or("rate-burst", 64.0f64),
     };
+    let max_frame_bytes = args.parse_or("max-frame", MAX_FRAME_BYTES);
     let engine = EngineHandle::spawn(None).expect("engine (run `make artifacts`)");
     let registry = Arc::new(ContextRegistry::with_base(cfg.clone()));
     let backend = Arc::new(InProcess::new(Coordinator::start(
@@ -228,7 +229,7 @@ fn cmd_serve_rpc(args: &Args, cfg: &HrfnaConfig, name: &str) {
     let server = RpcServer::bind(
         Arc::clone(&backend) as Arc<dyn Backend>,
         &addr,
-        RpcServerConfig { quota, ..RpcServerConfig::default() },
+        RpcServerConfig { quota, max_frame_bytes, ..RpcServerConfig::default() },
     )
     .expect("bind rpc server");
     // The smoke test waits for this line before starting its load.
@@ -271,6 +272,10 @@ fn cmd_route(args: &Args) {
     let router_cfg = RouterConfig {
         divert_depth: args.parse_or("divert-depth", 0i64),
         health_interval: Duration::from_millis(args.parse_or("health-interval-ms", 500u64)),
+        // Coalescing is off unless a window is given: 0 µs keeps the
+        // exact per-job submit path.
+        coalesce_window: Duration::from_micros(args.parse_or("coalesce-us", 0u64)),
+        coalesce_max: args.parse_or("coalesce-max", 8usize),
         ..RouterConfig::default()
     };
     let quota = QuotaConfig {
@@ -278,11 +283,12 @@ fn cmd_route(args: &Args) {
         rate_per_s: args.parse_or("rate", 0.0f64),
         burst: args.parse_or("rate-burst", 64.0f64),
     };
+    let max_frame_bytes = args.parse_or("max-frame", hrfna::coordinator::rpc::MAX_FRAME_BYTES);
     let router = Arc::new(ShardRouter::start(workers, router_cfg).expect("cluster start"));
     let server = RpcServer::bind(
         Arc::clone(&router) as Arc<dyn Backend>,
         &addr,
-        RpcServerConfig { quota, ..RpcServerConfig::default() },
+        RpcServerConfig { quota, max_frame_bytes, ..RpcServerConfig::default() },
     )
     .expect("bind route server");
     println!(
@@ -307,7 +313,7 @@ fn cmd_route(args: &Args) {
 /// wakeup turns into a CI failure, not a hang.
 #[cfg(feature = "rpc")]
 fn cmd_rpc_load(args: &Args) {
-    use hrfna::coordinator::rpc::{socket_closed_loop, ConnMode, RpcClient};
+    use hrfna::coordinator::rpc::{socket_closed_loop_binary, ConnMode, RpcClient};
     use hrfna::coordinator::JobSpec;
     use hrfna::workloads::generators::ServeMix;
     use std::time::Duration;
@@ -318,6 +324,7 @@ fn cmd_rpc_load(args: &Args) {
     let burst = args.parse_or("burst", 8usize);
     let mixed_tiers = args.flag("mixed-tiers");
     let authenticate = args.flag("authenticate");
+    let binary = args.flag("binary");
     let mode = if args.flag("reconnect-per-job") { ConnMode::PerJob } else { ConnMode::Persistent };
 
     // Fail fast (with retries) if the server never comes up.
@@ -383,7 +390,7 @@ fn cmd_rpc_load(args: &Args) {
         }
     };
 
-    let report = socket_closed_loop(&addr, clients, jobs, burst, mode, &make);
+    let report = socket_closed_loop_binary(&addr, clients, jobs, burst, mode, binary, &make);
     println!(
         "rpc-load: offered {} served {} rejected {} corrupted {} in {:.2?} ({:.0} jobs/s over the wire)",
         report.offered,

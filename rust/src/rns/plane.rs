@@ -191,10 +191,7 @@ impl ResiduePlane {
         let w = idx.len();
         let mut lanes = vec![0u64; self.k * w];
         for c in 0..self.k {
-            let src = self.lane(c);
-            for (out, &j) in lanes[c * w..(c + 1) * w].iter_mut().zip(idx) {
-                *out = src[j];
-            }
+            gather_lane(self.lane(c), idx, &mut lanes[c * w..(c + 1) * w]);
         }
         ResiduePlane { k: self.k, n: w, lanes }
     }
@@ -205,11 +202,11 @@ impl ResiduePlane {
         debug_assert_eq!(scratch.k, self.k);
         debug_assert_eq!(scratch.n, idx.len());
         for c in 0..self.k {
-            let src = scratch.lane(c);
-            let dst = &mut self.lanes[c * self.n..(c + 1) * self.n];
-            for (&j, &v) in idx.iter().zip(src) {
-                dst[j] = v;
-            }
+            scatter_lane(
+                &mut self.lanes[c * self.n..(c + 1) * self.n],
+                idx,
+                scratch.lane(c),
+            );
         }
     }
 
@@ -313,6 +310,60 @@ pub fn simd_active() -> bool {
 #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
 pub fn simd_active() -> bool {
     false
+}
+
+/// `out[t] = src[idx[t]]` over one lane — the flagged-column gather of
+/// the bulk normalization engine as a standalone kernel. Dispatch shim:
+/// the AVX2 hardware gather (`vpgatherqq`) when compiled in and
+/// available, else [`gather_lane_scalar`]. Pure `u64` movement, so
+/// there is no modulus gate; the SIMD arm additionally requires every
+/// index in bounds (an out-of-range index falls back to the scalar
+/// kernel, which panics on the bad access exactly as before).
+#[inline]
+pub fn gather_lane(src: &[u64], idx: &[usize], out: &mut [u64]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if super::simd::avx2_available() && idx.iter().all(|&j| j < src.len()) {
+            // SAFETY: AVX2 support and index bounds were just verified.
+            unsafe { super::simd::gather_lane_avx2(src, idx, out) };
+            return;
+        }
+    }
+    gather_lane_scalar(src, idx, out)
+}
+
+/// Scalar `out[t] = src[idx[t]]`.
+#[inline]
+pub fn gather_lane_scalar(src: &[u64], idx: &[usize], out: &mut [u64]) {
+    for (o, &j) in out.iter_mut().zip(idx) {
+        *o = src[j];
+    }
+}
+
+/// `dst[idx[t]] = src[t]` over one lane — the inverse of
+/// [`gather_lane`]. Dispatch shim over [`scatter_lane_scalar`] and the
+/// AVX2 kernel (vectorized source loads + in-order indexed stores, so
+/// duplicate indices resolve last-write-wins identically on both
+/// paths).
+#[inline]
+pub fn scatter_lane(dst: &mut [u64], idx: &[usize], src: &[u64]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if super::simd::avx2_available() && idx.iter().all(|&j| j < dst.len()) {
+            // SAFETY: AVX2 support and index bounds were just verified.
+            unsafe { super::simd::scatter_lane_avx2(dst, idx, src) };
+            return;
+        }
+    }
+    scatter_lane_scalar(dst, idx, src)
+}
+
+/// Scalar `dst[idx[t]] = src[t]`.
+#[inline]
+pub fn scatter_lane_scalar(dst: &mut [u64], idx: &[usize], src: &[u64]) {
+    for (&j, &v) in idx.iter().zip(src) {
+        dst[j] = v;
+    }
 }
 
 /// `out[j] = (x[j] * y[j]) mod m` over one lane. Dispatch shim: AVX2 when
@@ -717,6 +768,44 @@ mod tests {
         let snapshot = p.clone();
         p.scatter_columns(&[], &empty);
         assert_eq!(p, snapshot);
+    }
+
+    #[test]
+    fn prop_gather_scatter_dispatch_bit_identical_to_scalar() {
+        // The gather/scatter shims are pure u64 movement: random lane
+        // data (full u64 range — no modulus involved), widths covering
+        // 0 / 1 / odd / 4-multiple shapes, and indices with duplicates
+        // (scatter must resolve them last-write-wins on both paths).
+        check_with("gather-scatter-dispatch", 64, |rng| {
+            let n = 1 + rng.below(65) as usize;
+            let w = match rng.below(4) {
+                0 => 0,
+                1 => 1,
+                2 => 1 + 2 * rng.below(16) as usize,
+                _ => 4 * (1 + rng.below(8) as usize),
+            };
+            let src = random_lane(rng, u64::MAX, n);
+            let idx: Vec<usize> = (0..w).map(|_| rng.below(n as u64) as usize).collect();
+            let mut out_d = vec![0u64; w];
+            let mut out_s = vec![0u64; w];
+            gather_lane(&src, &idx, &mut out_d);
+            gather_lane_scalar(&src, &idx, &mut out_s);
+            crate::prop_assert!(out_d == out_s, "gather n={n} w={w}");
+            let mut dst_d = random_lane(rng, u64::MAX, n);
+            let mut dst_s = dst_d.clone();
+            let vals = random_lane(rng, u64::MAX, w);
+            scatter_lane(&mut dst_d, &idx, &vals);
+            scatter_lane_scalar(&mut dst_s, &idx, &vals);
+            crate::prop_assert!(dst_d == dst_s, "scatter n={n} w={w}");
+            // Round trip through the dispatched pair restores exactly
+            // the gathered columns.
+            let mut back = dst_s.clone();
+            let mut cols = vec![0u64; w];
+            gather_lane(&dst_d, &idx, &mut cols);
+            scatter_lane(&mut back, &idx, &cols);
+            crate::prop_assert!(back == dst_d, "roundtrip n={n} w={w}");
+            Ok(())
+        });
     }
 
     #[test]

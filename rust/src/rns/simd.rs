@@ -309,6 +309,67 @@ pub(crate) unsafe fn lane_dot_folded_avx2(bar: Barrett, x: &[u64], y: &[u64], fo
     acc
 }
 
+/// AVX2 column gather for
+/// [`super::plane::ResiduePlane::gather_columns`]: four `usize` column
+/// indices load as one vector of `i64` lanes (same 8-byte layout on
+/// x86_64) and drive one hardware `vpgatherqq` per iteration, scalar
+/// tail. Pure `u64` movement — no modulus involved, so there is no
+/// `deferred_ok` gate.
+///
+/// # Safety
+/// Requires AVX2 at runtime and every `idx[t] < src.len()` (the
+/// dispatch shim verifies both; an out-of-range index would make the
+/// hardware gather read out of bounds).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn gather_lane_avx2(src: &[u64], idx: &[usize], out: &mut [u64]) {
+    let n = idx.len().min(out.len());
+    debug_assert!(idx[..n].iter().all(|&j| j < src.len()));
+    let base = src.as_ptr() as *const i64;
+    let mut i = 0;
+    while i + 4 <= n {
+        let vindex = _mm256_loadu_si256(idx[i..].as_ptr() as *const __m256i);
+        let v = _mm256_i64gather_epi64::<8>(base, vindex);
+        storeu(&mut out[i..], v);
+        i += 4;
+    }
+    while i < n {
+        out[i] = src[idx[i]];
+        i += 1;
+    }
+}
+
+/// AVX2 column scatter for
+/// [`super::plane::ResiduePlane::scatter_columns`]: AVX2 has no scatter
+/// instruction, so this streams the dense source four lanes at a time
+/// through one vector load + register spill and finishes with scalar
+/// indexed stores — the unrolled form keeps the source traffic vectorized
+/// while the stores stay in index order (duplicate indices resolve
+/// last-write-wins exactly as the scalar kernel).
+///
+/// # Safety
+/// Requires AVX2 at runtime and every `idx[t] < dst.len()` (indexed
+/// stores are bounds-checked slices, so a bad index panics rather than
+/// corrupting memory — the shim still pre-verifies to keep the paths
+/// identical).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn scatter_lane_avx2(dst: &mut [u64], idx: &[usize], src: &[u64]) {
+    let n = idx.len().min(src.len());
+    let mut t = [0u64; 4];
+    let mut i = 0;
+    while i + 4 <= n {
+        _mm256_storeu_si256(t.as_mut_ptr() as *mut __m256i, loadu(&src[i..]));
+        dst[idx[i]] = t[0];
+        dst[idx[i + 1]] = t[1];
+        dst[idx[i + 2]] = t[2];
+        dst[idx[i + 3]] = t[3];
+        i += 4;
+    }
+    while i < n {
+        dst[idx[i]] = src[i];
+        i += 1;
+    }
+}
+
 /// AVX2 [`super::plane::lane_dot_scaled`]: vector Barrett brings each
 /// product under `m`, the third factor multiplies in exactly
 /// (`r, s < 2^31`), and the ≤ 62-bit terms accumulate through the same

@@ -106,6 +106,39 @@ pub fn rk4_step<N: Numeric>(ode: &Ode, y: &[N], dt: f64, ctx: &N::Ctx) -> Vec<N>
         .collect()
 }
 
+/// Pre-encoded scalar constants of an [`Ode`]'s batched vector field —
+/// the residue encodings the per-step broadcast would otherwise redo on
+/// every field evaluation (4 per RK4 step). [`Rk4Coeffs::encode`] is
+/// deterministic, so a cached table is bit-identical to a cold encode
+/// and integrating with either produces the same residues; the
+/// coordinator's operand cache stores these per `(ODE constants, tier)`
+/// digest (`coordinator::op_cache`).
+#[derive(Clone, Debug)]
+pub struct Rk4Coeffs {
+    /// Encoded constants, in the fixed order [`field_batch_with`]
+    /// consumes them: VanDerPol `[1.0]`, Relaxation `[c]`,
+    /// DampedOscillator `[]` (its field is pure scaling).
+    pub consts: Vec<crate::hybrid::Hrfna>,
+}
+
+impl Rk4Coeffs {
+    /// Encode the constants of `ode` under `ctx`'s format.
+    pub fn encode(ode: &Ode, ctx: &crate::hybrid::HrfnaContext) -> Rk4Coeffs {
+        use crate::hybrid::Hrfna;
+        let consts = match *ode {
+            Ode::VanDerPol { .. } => vec![Hrfna::encode(1.0, ctx)],
+            Ode::DampedOscillator { .. } => Vec::new(),
+            Ode::Relaxation { c, .. } => vec![Hrfna::encode(c, ctx)],
+        };
+        Rk4Coeffs { consts }
+    }
+
+    /// Rewrap a cached constant table (as stored by the operand cache).
+    pub fn from_consts(consts: Vec<crate::hybrid::Hrfna>) -> Rk4Coeffs {
+        Rk4Coeffs { consts }
+    }
+}
+
 /// Batched vector-field evaluation on the planar engine: one
 /// [`HrfnaBatch`] per state dimension, each holding every instance —
 /// elementwise kernels advance all instances at once, mirroring the
@@ -116,13 +149,25 @@ fn field_batch(
     y: &[crate::hybrid::HrfnaBatch],
     ctx: &crate::hybrid::HrfnaContext,
 ) -> Vec<crate::hybrid::HrfnaBatch> {
-    use crate::hybrid::{Hrfna, HrfnaBatch};
+    field_batch_with(ode, y, &Rk4Coeffs::encode(ode, ctx), ctx)
+}
+
+/// [`field_batch`] over pre-encoded constants: the per-call broadcast
+/// reads `coeffs` instead of re-encoding, everything else is identical
+/// (and so are the residues — encoding is deterministic).
+fn field_batch_with(
+    ode: &Ode,
+    y: &[crate::hybrid::HrfnaBatch],
+    coeffs: &Rk4Coeffs,
+    ctx: &crate::hybrid::HrfnaContext,
+) -> Vec<crate::hybrid::HrfnaBatch> {
+    use crate::hybrid::HrfnaBatch;
     let b = y[0].len();
     match *ode {
         Ode::VanDerPol { mu } => {
             let x = &y[0];
             let v = &y[1];
-            let one = HrfnaBatch::broadcast(&Hrfna::encode(1.0, ctx), b);
+            let one = HrfnaBatch::broadcast(&coeffs.consts[0], b);
             let x2 = x.mul(x, ctx);
             let damp = one.sub(&x2, ctx).scale(mu, ctx);
             let vprime = damp.mul(v, ctx).sub(x, ctx);
@@ -136,8 +181,8 @@ fn field_batch(
                 .sub(&v.scale(2.0 * zeta * omega, ctx), ctx);
             vec![v.clone(), vprime]
         }
-        Ode::Relaxation { lambda, c } => {
-            let target = HrfnaBatch::broadcast(&Hrfna::encode(c, ctx), b);
+        Ode::Relaxation { lambda, .. } => {
+            let target = HrfnaBatch::broadcast(&coeffs.consts[0], b);
             vec![target.sub(&y[0], ctx).scale(lambda, ctx)]
         }
     }
@@ -150,25 +195,38 @@ pub fn rk4_step_batch(
     dt: f64,
     ctx: &crate::hybrid::HrfnaContext,
 ) -> Vec<crate::hybrid::HrfnaBatch> {
-    let k1 = field_batch(ode, y, ctx);
+    rk4_step_batch_with(ode, y, dt, &Rk4Coeffs::encode(ode, ctx), ctx)
+}
+
+/// [`rk4_step_batch`] over pre-encoded constants — four field
+/// evaluations per step share one constant table instead of encoding
+/// four times.
+pub fn rk4_step_batch_with(
+    ode: &Ode,
+    y: &[crate::hybrid::HrfnaBatch],
+    dt: f64,
+    coeffs: &Rk4Coeffs,
+    ctx: &crate::hybrid::HrfnaContext,
+) -> Vec<crate::hybrid::HrfnaBatch> {
+    let k1 = field_batch_with(ode, y, coeffs, ctx);
     let y2: Vec<_> = y
         .iter()
         .zip(&k1)
         .map(|(yi, ki)| yi.add(&ki.scale(dt / 2.0, ctx), ctx))
         .collect();
-    let k2 = field_batch(ode, &y2, ctx);
+    let k2 = field_batch_with(ode, &y2, coeffs, ctx);
     let y3: Vec<_> = y
         .iter()
         .zip(&k2)
         .map(|(yi, ki)| yi.add(&ki.scale(dt / 2.0, ctx), ctx))
         .collect();
-    let k3 = field_batch(ode, &y3, ctx);
+    let k3 = field_batch_with(ode, &y3, coeffs, ctx);
     let y4: Vec<_> = y
         .iter()
         .zip(&k3)
         .map(|(yi, ki)| yi.add(&ki.scale(dt, ctx), ctx))
         .collect();
-    let k4 = field_batch(ode, &y4, ctx);
+    let k4 = field_batch_with(ode, &y4, coeffs, ctx);
     (0..y.len())
         .map(|i| {
             let sum = k1[i]
@@ -208,6 +266,20 @@ pub fn rk4_final_states_batch(
     steps: u64,
     ctx: &crate::hybrid::HrfnaContext,
 ) -> Vec<Vec<f64>> {
+    rk4_final_states_batch_with(ode, y0s, dt, steps, &Rk4Coeffs::encode(ode, ctx), ctx)
+}
+
+/// [`rk4_final_states_batch`] over pre-encoded constants: `steps × 4`
+/// field evaluations share one constant table. Bit-identical to the
+/// cold-encoding entry — the serving path's operand-cache contract.
+pub fn rk4_final_states_batch_with(
+    ode: &Ode,
+    y0s: &[Vec<f64>],
+    dt: f64,
+    steps: u64,
+    coeffs: &Rk4Coeffs,
+    ctx: &crate::hybrid::HrfnaContext,
+) -> Vec<Vec<f64>> {
     use crate::hybrid::HrfnaBatch;
     let dim = ode.dim();
     let b = y0s.len();
@@ -219,7 +291,7 @@ pub fn rk4_final_states_batch(
         })
         .collect();
     for _ in 0..steps {
-        y = rk4_step_batch(ode, &y, dt, ctx);
+        y = rk4_step_batch_with(ode, &y, dt, coeffs, ctx);
     }
     let decoded: Vec<Vec<f64>> = y.iter().map(|bd| bd.decode(ctx)).collect();
     (0..b)
@@ -455,6 +527,34 @@ mod tests {
             let scalar = rk4_final_state::<Hrfna>(&ode, y0, 0.01, 150, &ctx);
             assert_eq!(batch[i], scalar, "instance {i}");
             assert!(scalar.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn precomputed_coeffs_bit_identical_to_cold_encode() {
+        // The `_with` entries must reproduce the plain entries exactly:
+        // encoding is deterministic, so a constant table encoded once
+        // and reused across steps yields the same residues as
+        // re-encoding per field evaluation — across all three ODEs
+        // (including DampedOscillator's empty table).
+        let ctx = HrfnaContext::paper_default();
+        for ode in [
+            Ode::VanDerPol { mu: 1.0 },
+            Ode::DampedOscillator { omega: 1.0, zeta: 0.1 },
+            Ode::Relaxation { lambda: 1.5, c: 2.0 },
+        ] {
+            let dim = ode.dim();
+            let y0s: Vec<Vec<f64>> =
+                vec![vec![0.5; dim], vec![-0.25; dim], vec![1.5; dim]];
+            let cold = rk4_final_states_batch(&ode, &y0s, 0.01, 200, &ctx);
+            let coeffs = Rk4Coeffs::encode(&ode, &ctx);
+            let warm = rk4_final_states_batch_with(&ode, &y0s, 0.01, 200, &coeffs, &ctx);
+            assert_eq!(cold, warm, "{ode:?}");
+            // And a rewrapped table (the cache round trip) as well.
+            let rewrapped = Rk4Coeffs::from_consts(coeffs.consts.clone());
+            let cached =
+                rk4_final_states_batch_with(&ode, &y0s, 0.01, 200, &rewrapped, &ctx);
+            assert_eq!(cold, cached, "{ode:?} via rewrapped table");
         }
     }
 

@@ -67,13 +67,17 @@ fn spawn_worker(id: usize) -> Worker {
 }
 
 fn start_router(workers: &[Worker]) -> ShardRouter {
+    start_router_cfg(workers, RouterConfig::default())
+}
+
+fn start_router_cfg(workers: &[Worker], cfg: RouterConfig) -> ShardRouter {
     let specs: Vec<WorkerSpec> = workers.iter().map(|w| w.spec.clone()).collect();
     let router = ShardRouter::start(
         specs,
         RouterConfig {
             health_interval: Duration::from_millis(100),
             connect_wait: Duration::from_secs(2),
-            ..RouterConfig::default()
+            ..cfg
         },
     )
     .expect("start shard router");
@@ -137,6 +141,111 @@ fn paper_tier_results_through_router_bit_identical_to_in_process() {
         stop_worker(w);
     }
     assert!(local.shutdown().expect("local shutdown").is_clean());
+}
+
+#[test]
+fn coalesced_submits_stay_bit_identical_to_in_process() {
+    // Coalescing is a framing optimization at the router edge: jobs that
+    // ride one `submit_batch` frame must return the same bits as the
+    // in-process planar path, and the batcher must actually form groups
+    // (16 same-lane submits with max 4 → count-triggered flushes).
+    let local = InProcess::new(coordinator());
+    let workers: Vec<Worker> = (0..2).map(spawn_worker).collect();
+    let router = start_router_cfg(
+        &workers,
+        RouterConfig {
+            coalesce_window: Duration::from_millis(2),
+            coalesce_max: 4,
+            ..RouterConfig::default()
+        },
+    );
+
+    let mut rng = Rng::new(515);
+    let mut pending = Vec::new();
+    for _ in 0..16usize {
+        let x = Dist::moderate().sample_vec(&mut rng, 512);
+        let y = Dist::moderate().sample_vec(&mut rng, 512);
+        let ticket = router
+            .submit(JobSpec::dot(x.clone(), y.clone()))
+            .expect("coalesced submit accepted");
+        pending.push((ticket, x, y));
+    }
+    for (slot, (ticket, x, y)) in pending.into_iter().enumerate() {
+        let routed = router.wait(&ticket, Duration::from_secs(30)).expect("coalesced result");
+        let direct = local.call(JobSpec::dot(x, y)).expect("local dot");
+        assert_eq!(
+            routed.values[0].to_bits(),
+            direct.values[0].to_bits(),
+            "job {slot}: coalesced {} != in-process {}",
+            routed.values[0],
+            direct.values[0]
+        );
+    }
+    let text = router.metrics_text();
+    assert!(text.contains("coalesce: window"), "coalesce line missing:\n{text}");
+    assert!(!text.contains("flushes 0 "), "no groups ever flushed:\n{text}");
+
+    // A partial group (below `coalesce_max`) must still be delivered by
+    // the window-expiry flush, not stranded in staging.
+    let x = Dist::moderate().sample_vec(&mut rng, 512);
+    let y = Dist::moderate().sample_vec(&mut rng, 512);
+    let lone = router.call(JobSpec::dot(x.clone(), y.clone())).expect("timer-flushed job");
+    let direct = local.call(JobSpec::dot(x, y)).expect("local dot");
+    assert_eq!(lone.values[0].to_bits(), direct.values[0].to_bits());
+
+    let drain = router.shutdown().expect("router shutdown");
+    assert!(drain.is_clean(), "unclean coalesced drain: {drain}");
+    for w in workers {
+        stop_worker(w);
+    }
+    assert!(local.shutdown().expect("local shutdown").is_clean());
+}
+
+#[test]
+fn worker_loss_with_coalescing_loses_zero_jobs() {
+    // The failover contract survives group framing: jobs that went out
+    // inside one coalesced `submit_batch` are resubmitted as a group
+    // when their worker dies mid-stream.
+    let mut workers: Vec<Worker> = (0..2).map(spawn_worker).collect();
+    let router = start_router_cfg(
+        &workers,
+        RouterConfig {
+            coalesce_window: Duration::from_micros(500),
+            coalesce_max: 4,
+            ..RouterConfig::default()
+        },
+    );
+
+    let mut rng = Rng::new(606);
+    let mut pending = Vec::new();
+    for slot in 0..36usize {
+        let (spec, truth, scale) = lane_spread_spec(&mut rng, slot);
+        let ticket = router.submit(spec).expect("cluster accepts the stream");
+        pending.push((ticket, truth, scale));
+    }
+    let victim = workers.remove(1);
+    let victim_backend = Arc::clone(&victim.backend);
+    victim.server.stop(); // groups in flight on w1 are orphaned whole
+
+    for (ticket, truth, scale) in pending {
+        let r = router
+            .wait(&ticket, Duration::from_secs(60))
+            .expect("accepted job survives the worker loss");
+        assert!(
+            (r.values[0] - truth).abs() <= 1e-2 * scale.max(1e-300),
+            "failover result off: {} vs {truth}",
+            r.values[0]
+        );
+    }
+
+    let drain = router.shutdown().expect("router shutdown");
+    assert_eq!(drain.dropped, 0, "coalesced failover must not drop jobs: {drain}");
+    for w in workers {
+        stop_worker(w);
+    }
+    if let Ok(d) = victim_backend.shutdown() {
+        assert_eq!(d.dropped, 0, "victim backend dropped jobs: {d}");
+    }
 }
 
 #[test]

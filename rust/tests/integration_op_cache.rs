@@ -109,6 +109,42 @@ fn cache_served_matmul_and_fir_bit_identical_to_cold_encode_across_tiers() {
 }
 
 #[test]
+fn cache_served_rk4_coeffs_bit_identical_to_cold_encode_across_tiers() {
+    // RK4 jobs cache the vector field's pre-encoded constant table
+    // (keyed by the ODE's constants per tier); a cache-served
+    // integration must reproduce the cold-encoding coordinator bit for
+    // bit at every tier — the table is a pure memoization of a
+    // deterministic encode.
+    let cached = coordinator_with(32 << 20);
+    let cold = coordinator_with(0);
+    let mut rng = Rng::new(79);
+    for tier in Tier::ALL {
+        for round in 0..3 {
+            let y0 = vec![rng.uniform(-1.5, 1.5), rng.uniform(-1.5, 1.5)];
+            let hot = cached
+                .call(JobSpec::rk4(y0.clone(), 1.0, 0.01, 200).tier(tier))
+                .expect("cached rk4");
+            let reference = cold
+                .call(JobSpec::rk4(y0, 1.0, 0.01, 200).tier(tier))
+                .expect("cold rk4");
+            assert_bits_eq(
+                &hot.values,
+                &reference.values,
+                &format!("rk4 tier {tier:?} round {round}"),
+            );
+        }
+        // One constant table per (mu, tier): encode once, hit twice.
+        assert_eq!(cached.metrics.cache_misses_tier(JobKind::Rk4Hybrid, tier), 1, "{tier:?}");
+        assert_eq!(cached.metrics.cache_hits_tier(JobKind::Rk4Hybrid, tier), 2, "{tier:?}");
+    }
+    assert_eq!(cold.metrics.cache_hits(JobKind::Rk4Hybrid), 0);
+    assert_eq!(cold.metrics.cache_misses(JobKind::Rk4Hybrid), 0);
+
+    assert!(cached.shutdown().is_clean());
+    assert!(cold.shutdown().is_clean());
+}
+
+#[test]
 fn authenticated_jobs_verify_macs_on_cache_hits() {
     // Authenticated FIR derives per-job MAC lanes from the *cached*
     // reversed-tap plane; authenticated matmul Freivalds-checks a product

@@ -10,9 +10,9 @@ use hrfna::coordinator::batcher::BatchPolicy;
 use hrfna::coordinator::error::WIRE_CODES;
 use hrfna::coordinator::router::ShapeBuckets;
 use hrfna::coordinator::rpc::{
-    result_from_json, result_to_json, socket_closed_loop, spec_from_json, spec_to_json, ConnMode,
-    FrameReader, Json, QuotaConfig, Request, Response, ResponseBody, RpcClient, RpcServer,
-    RpcServerConfig,
+    decode_payload, encode_payload, result_from_json, result_to_json, socket_closed_loop,
+    spec_from_json, spec_to_json, wire, ConnMode, FrameReader, Json, QuotaConfig, Request,
+    Response, ResponseBody, RpcClient, RpcServer, RpcServerConfig,
 };
 use hrfna::coordinator::{
     Backend, ContextRegistry, Coordinator, CoordinatorConfig, Error, ExecMode, InProcess, JobKind,
@@ -535,6 +535,252 @@ fn socket_load_generator_round_trips_mixed_tier_traffic() {
     assert!(wire.conns_opened() >= 33);
     assert_eq!(wire.totals().results(), 60);
     teardown(backend, server);
+}
+
+// ---------------------------------------------------------------------
+// Binary wire payloads: golden envelopes, hello negotiation, and
+// mixed-encoding interop. The binary framing is a transport
+// optimization, never a numerical path — results must be bit-identical
+// across encodings and against in-process execution.
+// ---------------------------------------------------------------------
+
+fn fixture_bytes(name: &str) -> Vec<u8> {
+    let path = format!("{}/tests/fixtures/rpc/{name}", env!("CARGO_MANIFEST_DIR"));
+    std::fs::read(&path).unwrap_or_else(|e| panic!("read fixture {path}: {e}"))
+}
+
+#[test]
+fn golden_binary_request_submit_dot() {
+    let bytes = fixture_bytes("request_submit_dot_bin.bin");
+    let x = vec![1.0, -2.5, 0.5, 4.0, 123.5, -0.25, 2.25, 8.0];
+    let y = vec![0.5, 4.0, 1.0, -2.5, 0.25, 16.0, -0.125, 2.0];
+    let spec = JobSpec::dot(x.clone(), y.clone()).tier(Tier::Lo).tolerance(0.001);
+    let req = Request::new(1, "submit", spec_to_json(&spec)).to_json();
+    assert!(wire::is_binary(&bytes), "fixture carries the magic discriminator");
+    assert_eq!(
+        encode_payload(&req, true),
+        bytes,
+        "binary request encoding drifted from fixture"
+    );
+
+    // Decode side: fixture bytes → the identical parse tree the JSON
+    // rendering produces → the identical spec, operands bit for bit.
+    let tree = decode_payload(&bytes).expect("decode fixture");
+    assert_eq!(tree, req, "decoded tree differs from the JSON rendering");
+    let back = spec_from_json(&Request::from_json(&tree).unwrap().params).unwrap();
+    assert_eq!(back.tier, Tier::Lo);
+    assert_eq!(back.tolerance, Some(0.001));
+    match back.payload {
+        Payload::Dot { x: bx, y: by } => {
+            assert_eq!(bx, x);
+            assert_eq!(by, y);
+        }
+        other => panic!("wrong payload {other:?}"),
+    }
+}
+
+#[test]
+fn golden_binary_request_fir_authenticated() {
+    let bytes = fixture_bytes("request_submit_fir_bin.bin");
+    let taps = vec![0.25, 0.5, 0.25, 0.125, -0.125, 0.0625, -0.0625, 0.5];
+    let x: Vec<f64> = (1..=12).map(f64::from).collect();
+    let spec = JobSpec::fir(taps.clone(), x.clone()).authenticated();
+    let req = Request::new(1, "submit", spec_to_json(&spec)).to_json();
+    assert_eq!(
+        encode_payload(&req, true),
+        bytes,
+        "binary fir request encoding drifted from fixture"
+    );
+
+    let tree = decode_payload(&bytes).expect("decode fixture");
+    assert_eq!(tree, req, "decoded tree differs from the JSON rendering");
+    let back = spec_from_json(&Request::from_json(&tree).unwrap().params).unwrap();
+    assert!(back.auth, "auth bit lost in the binary envelope");
+    match back.payload {
+        Payload::Fir { taps: bt, x: bx } => {
+            assert_eq!(bt, taps);
+            assert_eq!(bx, x);
+        }
+        other => panic!("wrong payload {other:?}"),
+    }
+}
+
+#[test]
+fn golden_binary_response_result() {
+    let bytes = fixture_bytes("response_result_bin.bin");
+    let values = vec![2.25, -1.5, 0.5, 3.0, -0.125, 7.0, 0.75, -4.0];
+    let result = JobResult {
+        id: 7,
+        kind: JobKind::DotHybrid,
+        tier: Tier::Lo,
+        values: values.clone(),
+        latency_us: 123.5,
+        batch_size: 8,
+        check: None,
+    };
+    let resp = Response::result(1, result_to_json(&result)).to_json();
+    assert_eq!(
+        encode_payload(&resp, true),
+        bytes,
+        "binary response encoding drifted from fixture"
+    );
+
+    let tree = decode_payload(&bytes).expect("decode fixture");
+    assert_eq!(tree, resp, "decoded tree differs from the JSON rendering");
+    match Response::from_json(&tree).unwrap().body {
+        ResponseBody::Result(v) => {
+            let r = result_from_json(&v).unwrap();
+            assert_eq!(r.id, 7);
+            assert_eq!(r.values, values);
+            assert_eq!(r.batch_size, 8);
+        }
+        other => panic!("expected result, got {other:?}"),
+    }
+}
+
+#[test]
+fn golden_binary_envelopes_survive_the_codec() {
+    for name in [
+        "request_submit_dot_bin.bin",
+        "request_submit_fir_bin.bin",
+        "response_result_bin.bin",
+    ] {
+        let bytes = fixture_bytes(name);
+        let mut framed = Vec::new();
+        hrfna::coordinator::rpc::write_frame(&mut framed, &bytes).unwrap();
+        let mut reader = FrameReader::default();
+        let payload = reader
+            .read_frame(&mut std::io::Cursor::new(framed), &|| false)
+            .unwrap()
+            .expect("one frame");
+        assert_eq!(payload, bytes, "{name} mangled by codec");
+        assert!(wire::is_binary(&payload), "{name} lost its discriminator");
+    }
+}
+
+#[test]
+fn loopback_binary_results_bit_identical_to_json_and_in_process() {
+    let (backend, server, addr) = serve(QuotaConfig::default());
+    let mut bin = RpcClient::connect(&addr).expect("connect binary client");
+    assert!(bin.negotiate_binary().expect("hello answered"), "server grants bin1");
+    assert!(bin.binary());
+    let mut json = RpcClient::connect(&addr).expect("connect json client");
+    assert!(!json.binary(), "un-negotiated connections stay pure JSON");
+
+    let mut rng = Rng::new(23);
+    let dist = Dist::moderate();
+    for tier in Tier::ALL {
+        let spec =
+            JobSpec::dot(dist.sample_vec(&mut rng, 512), dist.sample_vec(&mut rng, 512)).tier(tier);
+        let via_bin = bin.call(&spec).expect("transport ok").expect("accepted");
+        let via_json = json.call(&spec).expect("transport ok").expect("accepted");
+        let ticket = backend.submit(spec.clone()).expect("in-process admit");
+        let direct = backend.wait(&ticket, Duration::from_secs(30)).expect("in-process result");
+        for (i, ((b, j), d)) in
+            via_bin.values.iter().zip(&via_json.values).zip(&direct.values).enumerate()
+        {
+            assert_eq!(b.to_bits(), j.to_bits(), "{tier:?} element {i}: binary vs json");
+            assert_eq!(b.to_bits(), d.to_bits(), "{tier:?} element {i}: binary vs in-process");
+        }
+    }
+
+    // An authenticated job rides the same binary envelope: values and the
+    // MAC-backed checksum must agree with the JSON path exactly.
+    let taps = vec![0.25, 0.5, 0.25, 0.125, -0.125, 0.0625, -0.0625, 0.5];
+    let x = dist.sample_vec(&mut rng, 96);
+    let spec = JobSpec::fir(taps, x).authenticated();
+    let via_bin = bin.call(&spec).expect("transport ok").expect("accepted");
+    let via_json = json.call(&spec).expect("transport ok").expect("accepted");
+    for (i, (b, j)) in via_bin.values.iter().zip(&via_json.values).enumerate() {
+        assert_eq!(b.to_bits(), j.to_bits(), "auth fir element {i}");
+    }
+    assert!(via_bin.check.is_some(), "authenticated result carries its checksum");
+    assert_eq!(via_bin.check, via_json.check, "checksum differs across encodings");
+
+    // The binary traffic actually happened, and only on the negotiated
+    // connection: binary counters are a strict subset of the totals.
+    let totals = server.wire_metrics().totals();
+    assert!(totals.bin_frames_in() > 0, "no binary requests seen");
+    assert!(totals.bin_frames_out() > 0, "no binary responses sent");
+    assert!(totals.bin_frames_in() < totals.frames_in());
+    assert!(totals.bin_bytes_out() < totals.bytes_out());
+    assert_eq!(server.wire_metrics().protocol_errors(), 0, "mixed encodings, zero errors");
+    teardown(backend, server);
+}
+
+#[test]
+fn server_accepts_binary_requests_without_negotiation_and_answers_json() {
+    // A new client talking to a server that never granted `bin1` on this
+    // connection: binary *requests* are self-describing (magic byte), so
+    // the server decodes them anyway — but keeps its responses JSON.
+    let (backend, server, addr) = serve(QuotaConfig::default());
+    let mut rng = Rng::new(29);
+    let dist = Dist::moderate();
+    let spec = JobSpec::dot(dist.sample_vec(&mut rng, 512), dist.sample_vec(&mut rng, 512));
+    let req = Request::new(41, "submit", spec_to_json(&spec)).to_json();
+    let payload = encode_payload(&req, true);
+    assert!(wire::is_binary(&payload), "bulk operands actually went binary");
+
+    let mut raw = std::net::TcpStream::connect(&addr).expect("raw connect");
+    hrfna::coordinator::rpc::write_frame(&mut raw, &payload).expect("send binary submit");
+    let mut reader = FrameReader::default();
+    let answer = reader
+        .read_frame(&mut raw, &|| false)
+        .expect("read response")
+        .expect("server answered");
+    assert!(!wire::is_binary(&answer), "responses stay JSON until hello grants bin1");
+    let resp =
+        Response::from_json(&Json::parse(std::str::from_utf8(&answer).unwrap()).unwrap()).unwrap();
+    assert_eq!(resp.id, 41);
+    let result = match resp.body {
+        ResponseBody::Result(v) => result_from_json(&v).unwrap(),
+        other => panic!("expected result, got {other:?}"),
+    };
+
+    // Bit-identical to the same spec over a plain JSON connection.
+    let mut client = RpcClient::connect(&addr).expect("connect");
+    let via_json = client.call(&spec).expect("transport ok").expect("accepted");
+    for (i, (b, j)) in result.values.iter().zip(&via_json.values).enumerate() {
+        assert_eq!(b.to_bits(), j.to_bits(), "element {i}: binary request vs json");
+    }
+    assert_eq!(server.wire_metrics().protocol_errors(), 0);
+    teardown(backend, server);
+}
+
+#[test]
+fn negotiation_falls_back_to_json_against_a_server_without_hello() {
+    use std::io::Write as _;
+    // Stub "old server": answers the capability handshake with
+    // MethodNotFound, the pre-binary protocol's reply to any unknown
+    // method. The client must treat that as "no capabilities" and stay
+    // in JSON mode — not as a transport error.
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind stub");
+    let addr = listener.local_addr().unwrap().to_string();
+    let stub = std::thread::spawn(move || {
+        let (mut conn, _) = listener.accept().expect("accept");
+        let mut reader = FrameReader::default();
+        let payload = reader
+            .read_frame(&mut conn, &|| false)
+            .expect("read hello")
+            .expect("one frame");
+        let req = Request::from_json(
+            &Json::parse(std::str::from_utf8(&payload).unwrap()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(req.method, "hello");
+        let resp = Response::error(req.id, Error::MethodNotFound("hello".into()));
+        let mut out = Vec::new();
+        hrfna::coordinator::rpc::write_frame(&mut out, resp.to_json().encode().as_bytes())
+            .unwrap();
+        conn.write_all(&out).expect("answer hello");
+    });
+    let mut client = RpcClient::connect(&addr).expect("connect stub");
+    assert!(
+        !client.negotiate_binary().expect("fallback is not an error"),
+        "old server grants nothing"
+    );
+    assert!(!client.binary(), "client stays in JSON mode against an old server");
+    stub.join().unwrap();
 }
 
 // ---------------------------------------------------------------------
